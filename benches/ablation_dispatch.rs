@@ -1,0 +1,100 @@
+//! Ablation: compile-time wrapper composition (paper Listing 1) vs
+//! dynamic dispatch vs the interpreted runner.
+//!
+//! The paper's §III-B design claim is that template (here: generic)
+//! composition "evaluates much of the program logic during compile-time"
+//! with "considerable run-time benefits".  This bench quantifies the
+//! claim on the stack the paper names — `Flatten<TimeLimit<CartPole>>`:
+//!
+//!   static   — monomorphised generics, zero vtable calls
+//!   dynamic  — the same stack behind Box<dyn Env> (registry-style)
+//!   script   — the same dynamics on the interpreted runner
+//!
+//! Expected shape: static <= dynamic << script; the static-vs-dynamic gap
+//! is small in absolute terms (a vtable call per step) while the
+//! interpreter pays orders of magnitude — i.e. the language choice, not
+//! the dispatch mechanism, carries Fig. 1.
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use cairl::core::env::{DynEnv, Env};
+use cairl::core::rng::Pcg32;
+use cairl::envs::CartPole;
+use cairl::tooling::csvlog::CsvLogger;
+use cairl::wrappers::{Flatten, TimeLimit};
+use harness::*;
+
+fn drive<E: Env + ?Sized>(env: &mut E, steps: u64, seed: u64) -> f64 {
+    env.seed(seed);
+    let mut rng = Pcg32::new(seed, 3);
+    let space = env.action_space();
+    let mut obs = vec![0.0f32; env.obs_dim()];
+    env.reset_into(&mut obs);
+    let t0 = std::time::Instant::now();
+    for _ in 0..steps {
+        let a = space.sample(&mut rng);
+        let t = env.step_into(&a, &mut obs);
+        if t.done || t.truncated {
+            env.reset_into(&mut obs);
+        }
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let steps = knob("CAIRL_STEPS", 2_000_000);
+    let trials = knob("CAIRL_TRIALS", 5);
+    banner(&format!(
+        "Ablation — dispatch & runner cost on Flatten<TimeLimit<CartPole, 200>>, {steps} steps x {trials}"
+    ));
+
+    let stat = time_trials(trials, |i| {
+        let mut env = Flatten::new(TimeLimit::new(CartPole::new(), 200));
+        drive(&mut env, steps, i);
+    });
+    let dynamic = time_trials(trials, |i| {
+        let mut env: DynEnv =
+            Box::new(Flatten::new(TimeLimit::new(CartPole::new(), 200)));
+        drive(env.as_mut(), steps, i);
+    });
+    let script_steps = steps / 20; // the interpreter is ~2 orders slower
+    let script = time_trials(trials, |i| {
+        let mut env = TimeLimit::new(cairl::script::envs::cartpole(), 200);
+        drive(&mut env, script_steps, i);
+    });
+
+    let ns = |mean_s: f64, n: u64| 1e9 * mean_s / n as f64;
+    let static_ns = ns(stat.mean, steps);
+    let dyn_ns = ns(dynamic.mean, steps);
+    let script_ns = ns(script.mean, script_steps);
+    println!("static  (monomorphised): {static_ns:>9.1} ns/step");
+    println!("dynamic (Box<dyn Env>):  {dyn_ns:>9.1} ns/step  ({:.2}x static)", dyn_ns / static_ns);
+    println!("script  (interpreted):   {script_ns:>9.1} ns/step  ({:.1}x static)", script_ns / static_ns);
+
+    let mut log = CsvLogger::create(
+        std::path::Path::new("results/ablation_dispatch.csv"),
+        &["variant", "ns_per_step", "steps", "trials"],
+    )
+    .unwrap();
+    for (name, v, n) in [
+        ("static", static_ns, steps),
+        ("dynamic", dyn_ns, steps),
+        ("script", script_ns, script_steps),
+    ] {
+        log.row(&[
+            name.into(),
+            format!("{v:.2}"),
+            n.to_string(),
+            trials.to_string(),
+        ])
+        .unwrap();
+    }
+    log.flush().unwrap();
+    println!("rows -> results/ablation_dispatch.csv");
+
+    assert!(
+        script_ns > 10.0 * static_ns,
+        "interpreter should dominate dispatch costs"
+    );
+}

@@ -1,0 +1,65 @@
+//! Fig. 1 (console rows): execution run-time, CaiRL vs AI Gym, on the
+//! four classic-control tasks without rendering.
+//!
+//! Paper protocol: 100 000 steps per trial, averaged over 100 trials;
+//! the CaiRL side is the native compiled env, the Gym side the
+//! interpreted-runner surrogate (DESIGN.md §Substitutions).  Expected
+//! shape: native wins by >=5x on every env (the paper reports ~5x for
+//! CPython Gym).
+//!
+//! Full protocol: `CAIRL_TRIALS=100 CAIRL_STEPS=100000 cargo bench --bench fig1_console`
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use cairl::coordinator::experiment::{stepping_trials, RenderMode};
+use cairl::make;
+use harness::*;
+
+fn main() {
+    let trials = knob("CAIRL_TRIALS", 10) as u32;
+    let steps = knob("CAIRL_STEPS", 100_000);
+    banner(&format!(
+        "Fig. 1 / console — {steps} steps x {trials} trials (paper: 100000 x 100)"
+    ));
+
+    let pairs = [
+        ("CartPole-v1", "Script/CartPole-v1"),
+        ("MountainCar-v0", "Script/MountainCar-v0"),
+        ("Acrobot-v1", "Script/Acrobot-v1"),
+        ("PendulumDiscrete-v1", "Script/Pendulum-v1"),
+    ];
+
+    let mut log = comparison_csv("fig1_console");
+    let mut speedups = Vec::new();
+    for (native_id, script_id) in pairs {
+        let native = stepping_trials(
+            &|| make(native_id).unwrap(),
+            trials,
+            steps,
+            0,
+            RenderMode::Console,
+        );
+        let script = stepping_trials(
+            &|| make(script_id).unwrap(),
+            trials,
+            steps,
+            0,
+            RenderMode::Console,
+        );
+        let c = cairl::tooling::stats::Summary::of(&native);
+        let b = cairl::tooling::stats::Summary::of(&script);
+        let s = report_pair(native_id, &c, &b);
+        log_pair(&mut log, native_id, &c, &b, trials as u64, steps);
+        speedups.push(s);
+    }
+    log.flush().unwrap();
+
+    let mean_speedup = speedups.iter().sum::<f64>() / speedups.len() as f64;
+    println!("\nmean speedup {mean_speedup:.1}x (paper Fig. 1 console: ~5x)");
+    println!("rows -> results/fig1_console.csv");
+    assert!(
+        speedups.iter().all(|&s| s > 3.0),
+        "console speedup collapsed below the paper band: {speedups:?}"
+    );
+}

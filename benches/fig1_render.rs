@@ -1,0 +1,70 @@
+//! Fig. 1 (render rows): execution run-time with per-step rendering.
+//!
+//! CaiRL side: native env + software rasteriser into a reused
+//! framebuffer (the paper's §II-B recommendation).  Gym side: the
+//! interpreted env + the calibrated hardware-render cost model (OpenGL
+//! draw + PBO-less readback stall; DESIGN.md §Substitutions — this image
+//! has no GPU).  Expected shape: software rendering wins by roughly an
+//! order of magnitude more than the console gap (paper: ~80x).
+//!
+//! Full protocol: `CAIRL_TRIALS=100 CAIRL_STEPS=100000 cargo bench --bench fig1_render`
+//! (defaults are lighter because the simulated readback stall is real
+//! wall-clock time).
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use cairl::coordinator::experiment::{stepping_trials, RenderMode};
+use cairl::make;
+use cairl::tooling::stats::Summary;
+use harness::*;
+
+fn main() {
+    let trials = knob("CAIRL_TRIALS", 5) as u32;
+    let steps = knob("CAIRL_STEPS", 3_000);
+    banner(&format!(
+        "Fig. 1 / render — {steps} steps x {trials} trials (paper: 100000 x 100)"
+    ));
+
+    let pairs = [
+        ("CartPole-v1", "Script/CartPole-v1"),
+        ("MountainCar-v0", "Script/MountainCar-v0"),
+        ("Acrobot-v1", "Script/Acrobot-v1"),
+        ("PendulumDiscrete-v1", "Script/Pendulum-v1"),
+    ];
+
+    let mut log = comparison_csv("fig1_render");
+    let mut speedups = Vec::new();
+    for (native_id, script_id) in pairs {
+        // CaiRL: native stepping + software rendering.
+        let cairl_times = stepping_trials(
+            &|| make(native_id).unwrap(),
+            trials,
+            steps,
+            0,
+            RenderMode::Software,
+        );
+        // Gym: interpreted stepping + hardware render/readback model.
+        let gym_times = stepping_trials(
+            &|| make(script_id).unwrap(),
+            trials,
+            steps,
+            0,
+            RenderMode::SimulatedHardware,
+        );
+        let c = Summary::of(&cairl_times);
+        let b = Summary::of(&gym_times);
+        let s = report_pair(native_id, &c, &b);
+        log_pair(&mut log, native_id, &c, &b, trials as u64, steps);
+        speedups.push(s);
+    }
+    log.flush().unwrap();
+
+    let mean_speedup = speedups.iter().sum::<f64>() / speedups.len() as f64;
+    println!("\nmean speedup {mean_speedup:.1}x (paper Fig. 1 render: ~80x)");
+    println!("rows -> results/fig1_render.csv");
+    assert!(
+        speedups.iter().all(|&s| s > 20.0),
+        "render speedup collapsed below the paper band: {speedups:?}"
+    );
+}

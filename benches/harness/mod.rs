@@ -1,0 +1,94 @@
+//! Shared benchmark harness (criterion is unavailable offline).
+//!
+//! Protocol mirrors the paper's §V: every measurement is repeated over
+//! `trials` seeded trials and reported as mean +- std; rows go to stdout
+//! *and* a CSV under `results/` so EXPERIMENTS.md has provenance.
+//!
+//! Environment variables scale the workload:
+//!   CAIRL_TRIALS  — trials per configuration (paper: 100; default lighter)
+//!   CAIRL_STEPS   — steps per trial          (paper: 100 000)
+//! so `CAIRL_TRIALS=100 CAIRL_STEPS=100000 cargo bench` reproduces the
+//! full paper protocol.
+
+#![allow(dead_code)]
+
+use std::path::Path;
+
+use cairl::tooling::csvlog::CsvLogger;
+use cairl::tooling::stats::Summary;
+
+/// Read a workload knob from the environment.
+pub fn knob(name: &str, default: u64) -> u64 {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Run `trials` timed trials of `f(trial_index)` and summarise seconds.
+pub fn time_trials(trials: u64, mut f: impl FnMut(u64)) -> Summary {
+    let times: Vec<f64> = (0..trials)
+        .map(|i| {
+            let t0 = std::time::Instant::now();
+            f(i);
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    Summary::of(&times)
+}
+
+/// Print a section banner.
+pub fn banner(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// One comparison line in the Fig.-1 style, plus the speedup ratio.
+pub fn report_pair(label: &str, cairl: &Summary, baseline: &Summary) -> f64 {
+    let speedup = baseline.mean / cairl.mean;
+    println!(
+        "{label:<34} cairl {:>9.4}s +-{:>7.4}  baseline {:>9.4}s +-{:>7.4}  speedup {speedup:>7.1}x",
+        cairl.mean, cairl.std, baseline.mean, baseline.std
+    );
+    speedup
+}
+
+/// CSV logger under results/ with standard comparison columns.
+pub fn comparison_csv(name: &str) -> CsvLogger {
+    CsvLogger::create(
+        Path::new(&format!("results/{name}.csv")),
+        &[
+            "label",
+            "cairl_mean_s",
+            "cairl_std_s",
+            "baseline_mean_s",
+            "baseline_std_s",
+            "speedup",
+            "trials",
+            "steps",
+        ],
+    )
+    .expect("create results csv")
+}
+
+/// Write one comparison row.
+pub fn log_pair(
+    log: &mut CsvLogger,
+    label: &str,
+    cairl: &Summary,
+    baseline: &Summary,
+    trials: u64,
+    steps: u64,
+) {
+    let speedup = baseline.mean / cairl.mean;
+    log.row(&[
+        label.to_string(),
+        format!("{:.6}", cairl.mean),
+        format!("{:.6}", cairl.std),
+        format!("{:.6}", baseline.mean),
+        format!("{:.6}", baseline.std),
+        format!("{speedup:.3}"),
+        trials.to_string(),
+        steps.to_string(),
+    ])
+    .expect("csv row");
+}

@@ -1,0 +1,109 @@
+//! End-to-end driver: train the Table-I DQN on CartPole-v1 through the
+//! complete three-layer stack until the solve criterion.
+//!
+//! This is the repository's headline validation run (EXPERIMENTS.md
+//! §End-to-end): every layer composes —
+//!   L3  rust env + replay + epsilon schedule + target sync,
+//!   L2  jax train-step artifact executed via PJRT,
+//!   L1  the fused Pallas Q-network kernels inside that artifact.
+//!
+//! Writes the return curve and loss curve to results/dqn_cartpole_*.csv.
+//!
+//! ```sh
+//! cargo run --release --example dqn_cartpole            # solve (<= 150k steps)
+//! CAIRL_DQN_MAX_STEPS=5000 cargo run --release --example dqn_cartpole
+//! ```
+
+use std::path::Path;
+
+use cairl::agents::dqn::{DqnAgent, DqnConfig};
+use cairl::make;
+use cairl::runtime::Runtime;
+use cairl::tooling::csvlog::CsvLogger;
+
+fn main() {
+    let max_steps: u32 = std::env::var("CAIRL_DQN_MAX_STEPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(150_000);
+    let seed: u64 = std::env::var("CAIRL_DQN_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
+
+    println!("loading PJRT runtime + artifacts...");
+    let mut rt = Runtime::from_default_artifacts().expect("make artifacts first");
+    let hp = rt.manifest().hyperparameters.clone();
+    println!(
+        "DQN (Table I): hidden {}x{}, batch {}, lr {}, gamma {}",
+        hp.hidden, hp.hidden, hp.batch, hp.lr, hp.gamma
+    );
+
+    let cfg = DqnConfig {
+        max_steps,
+        solve_return: 195.0,
+        solve_window: 20,
+        epsilon_decay_steps: 8_000,
+        seed,
+        ..DqnConfig::default()
+    };
+    let mut agent = DqnAgent::new(&rt, "cartpole", cfg).unwrap();
+    let mut env = make("CartPole-v1").unwrap();
+
+    println!("training on CartPole-v1 (solve: mean return >= 195 over 20 episodes)...");
+    let out = agent.train(&mut rt, &mut env).expect("training run");
+
+    println!(
+        "\nsolved={}  env_steps={}  train_steps={}  episodes={}  wall={:.1}s  mean_return={:.1}",
+        out.solved,
+        out.env_steps,
+        out.train_steps,
+        out.episodes,
+        out.wall_time.as_secs_f64(),
+        out.final_mean_return
+    );
+
+    // Return curve.
+    let mut curve = CsvLogger::create(
+        Path::new("results/dqn_cartpole_curve.csv"),
+        &["episode", "env_steps", "return", "length"],
+    )
+    .unwrap();
+    for (i, p) in out.curve.iter().enumerate() {
+        curve
+            .row(&[
+                i.to_string(),
+                p.env_steps.to_string(),
+                format!("{}", p.ret),
+                p.len.to_string(),
+            ])
+            .unwrap();
+    }
+    curve.flush().unwrap();
+
+    // Loss curve (every 100 train steps).
+    let mut losses = CsvLogger::create(
+        Path::new("results/dqn_cartpole_loss.csv"),
+        &["train_step_x100", "loss"],
+    )
+    .unwrap();
+    for (i, l) in out.losses.iter().enumerate() {
+        losses.row(&[i.to_string(), format!("{l}")]).unwrap();
+    }
+    losses.flush().unwrap();
+
+    // Compact curve preview on stdout.
+    println!("\nreturn curve (every ~10th episode):");
+    for (i, p) in out.curve.iter().enumerate() {
+        if i % 10 == 0 || i + 1 == out.curve.len() {
+            let bar = "#".repeat((p.ret / 10.0) as usize);
+            println!("  ep {i:>4} @ step {:>6}: {:>6.1} {bar}", p.env_steps, p.ret);
+        }
+    }
+    println!("\ncurves -> results/dqn_cartpole_curve.csv, results/dqn_cartpole_loss.csv");
+
+    if !out.solved && max_steps >= 150_000 {
+        eprintln!("warning: not solved within {max_steps} steps (seed {seed})");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,190 @@
+//! Perf probe: per-component timing of the DQN hot loop (§Perf in
+//! EXPERIMENTS.md).
+//!
+//! Breaks one training step into its cost centres so the optimisation
+//! pass can attack the top one:
+//!   env step | act (PJRT) | literal marshalling | train execute (PJRT)
+//!
+//! ```sh
+//! cargo run --release --example perf_probe
+//! ```
+
+use std::time::Instant;
+
+use cairl::core::env::Env;
+use cairl::core::rng::Pcg32;
+use cairl::core::spaces::Action;
+use cairl::envs::CartPole;
+use cairl::runtime::dqn_exec::{Batch, DqnExecutor};
+use cairl::runtime::pjrt::{literal_f32, Runtime};
+use cairl::wrappers::TimeLimit;
+
+fn main() {
+    let n: u64 = std::env::var("CAIRL_PROBE_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2_000);
+    let mut rt = Runtime::from_default_artifacts().unwrap();
+    let mut exec = DqnExecutor::new(&rt, "cartpole", 0).unwrap();
+
+    // --- env stepping -------------------------------------------------
+    let mut env = TimeLimit::new(CartPole::new(), 500);
+    env.seed(0);
+    let mut rng = Pcg32::new(0, 1);
+    let mut obs = vec![0.0f32; 4];
+    env.reset_into(&mut obs);
+    let t0 = Instant::now();
+    for _ in 0..n * 50 {
+        let a = Action::Discrete(rng.below(2) as usize);
+        let t = env.step_into(&a, &mut obs);
+        if t.done || t.truncated {
+            env.reset_into(&mut obs);
+        }
+    }
+    let env_ns = t0.elapsed().as_nanos() as f64 / (n * 50) as f64;
+
+    // --- act() through PJRT --------------------------------------------
+    let t0 = Instant::now();
+    for _ in 0..n {
+        exec.q_values(&mut rt, &obs).unwrap();
+    }
+    let act_us = t0.elapsed().as_micros() as f64 / n as f64;
+
+    // --- act() natively on the host (SSPerf fast path) ------------------
+    let t0 = Instant::now();
+    for _ in 0..n * 100 {
+        std::hint::black_box(exec.q_values_native(&obs));
+    }
+    let native_act_ns = t0.elapsed().as_nanos() as f64 / (n * 100) as f64;
+
+    // --- literal marshalling only (the train step's 30 operands) -------
+    let b = exec.batch_size;
+    let batch = Batch {
+        s: vec![0.01; b * 4],
+        a: vec![0; b],
+        r: vec![1.0; b],
+        s2: vec![0.02; b * 4],
+        done: vec![0.0; b],
+    };
+    let t0 = Instant::now();
+    for _ in 0..n {
+        // Representative marshalling load: 24 param tensors + batch.
+        let mut lits = Vec::with_capacity(30);
+        for tensor in exec.params() {
+            lits.push(literal_f32(tensor, &[tensor.len()]).unwrap());
+        }
+        for tensor in exec.params() {
+            lits.push(literal_f32(tensor, &[tensor.len()]).unwrap());
+        }
+        for tensor in exec.params() {
+            lits.push(literal_f32(tensor, &[tensor.len()]).unwrap());
+        }
+        for tensor in exec.params() {
+            lits.push(literal_f32(tensor, &[tensor.len()]).unwrap());
+        }
+        lits.push(literal_f32(&batch.s, &[b, 4]).unwrap());
+        lits.push(literal_f32(&batch.r, &[b]).unwrap());
+        std::hint::black_box(lits);
+    }
+    let marshal_us = t0.elapsed().as_micros() as f64 / n as f64;
+
+    // --- full train step ------------------------------------------------
+    let t0 = Instant::now();
+    for _ in 0..n {
+        exec.train_step(&mut rt, &batch).unwrap();
+    }
+    let train_us = t0.elapsed().as_micros() as f64 / n as f64;
+
+    println!("iters per section: {n}");
+    println!("env step (native TimeLimit<CartPole>): {env_ns:>9.1} ns");
+    println!("act (7-operand PJRT call):             {act_us:>9.1} us");
+    println!("act (native host forward):             {:>9.2} us", native_act_ns / 1e3);
+    println!("train-step literal marshalling (est):  {marshal_us:>9.1} us");
+    println!("train step (30-operand PJRT call):     {train_us:>9.1} us");
+    println!(
+        "\nDQN loop step (PJRT act)   = {:.1} us -> {:.0} steps/s",
+        act_us + train_us,
+        1e6 / (act_us + train_us)
+    );
+    println!(
+        "DQN loop step (native act) = {:.1} us -> {:.0} steps/s",
+        native_act_ns / 1e3 + train_us,
+        1e6 / (native_act_ns / 1e3 + train_us)
+    );
+
+    // --- device-resident buffer chaining experiment ---------------------
+    // Feed one call's output buffers straight into the next call.
+    let module = rt.load("dqn_train_cartpole").unwrap();
+    let mut state: Vec<xla::PjRtBuffer> = Vec::new();
+    // params, target, m, v (4 x 6 tensors)
+    let shapes: Vec<Vec<usize>> =
+        vec![vec![4, 32], vec![32], vec![32, 32], vec![32], vec![32, 2], vec![2]];
+    for _ in 0..2 {
+        for (t, sh) in exec.params().iter().zip(&shapes) {
+            state.push(rt2_to_device(&rt, t, sh));
+        }
+    }
+    for _ in 0..2 {
+        for sh in &shapes {
+            let zeros = vec![0.0f32; sh.iter().product()];
+            state.push(rt2_to_device(&rt, &zeros, sh));
+        }
+    }
+    let mut t_buf = rt2_to_device(&rt, &[0.0f32], &[]);
+    let out_len;
+    {
+        // One probing call to see whether outputs come back untupled.
+        let mut inputs: Vec<&xla::PjRtBuffer> = state.iter().collect();
+        inputs.push(&t_buf);
+        let s_b = rt2_to_device(&rt, &batch.s, &[b, 4]);
+        let a_b = rt.to_device_i32(&batch.a, &[b]).unwrap();
+        let r_b = rt2_to_device(&rt, &batch.r, &[b]);
+        let s2_b = rt2_to_device(&rt, &batch.s2, &[b, 4]);
+        let d_b = rt2_to_device(&rt, &batch.done, &[b]);
+        inputs.push(&s_b);
+        inputs.push(&a_b);
+        inputs.push(&r_b);
+        inputs.push(&s2_b);
+        inputs.push(&d_b);
+        let owned: Vec<xla::PjRtBuffer> = Vec::new();
+        let _ = owned;
+        let module = rt.load("dqn_train_cartpole").unwrap();
+        let outs = module
+            .execute_buffers_ref(&inputs)
+            .expect("execute_b works");
+        out_len = outs.len();
+        println!("\nexecute_b output buffer count: {out_len} (20 = untupled)");
+        if out_len == 20 {
+            // Timed chained loop: reuse output buffers as inputs.
+            let mut bufs = outs;
+            let t0 = Instant::now();
+            for _ in 0..n {
+                let mut inputs: Vec<&xla::PjRtBuffer> = bufs[0..6].iter().collect();
+                inputs.extend(bufs[0..6].iter()); // target := online (sync'd)
+                inputs.extend(bufs[6..12].iter());
+                inputs.extend(bufs[12..18].iter());
+                inputs.push(&bufs[18]);
+                inputs.push(&s_b);
+                inputs.push(&a_b);
+                inputs.push(&r_b);
+                inputs.push(&s2_b);
+                inputs.push(&d_b);
+                bufs = module.execute_buffers_ref(&inputs).unwrap();
+            }
+            // One loss readback at the end.
+            let loss = bufs[19].to_literal_sync().unwrap().to_vec::<f32>().unwrap();
+            let chained_us = t0.elapsed().as_micros() as f64 / n as f64;
+            println!("train step (buffer-chained):           {chained_us:>9.1} us (final loss {:.4})", loss[0]);
+            println!(
+                "DQN loop step (chained)    = {:.1} us -> {:.0} steps/s",
+                native_act_ns / 1e3 + chained_us,
+                1e6 / (native_act_ns / 1e3 + chained_us)
+            );
+        }
+    }
+    let _ = &mut t_buf;
+}
+
+fn rt2_to_device(rt: &Runtime, data: &[f32], shape: &[usize]) -> xla::PjRtBuffer {
+    rt.to_device(data, shape).unwrap()
+}

@@ -1,0 +1,90 @@
+//! Curriculum learning on the puzzle runtime (paper §IV-D): the
+//! heuristic solvers grade instance difficulty, and a tabular Q-learner
+//! climbs a LightsOut curriculum from 1-press scrambles upward.
+//!
+//! ```sh
+//! cargo run --release --example puzzle_curriculum
+//! ```
+
+use cairl::agents::QTableAgent;
+use cairl::core::env::Env;
+use cairl::core::spaces::Action;
+use cairl::puzzles::{Fifteen, LightsOut, Nonogram};
+use cairl::wrappers::TimeLimit;
+
+fn main() {
+    // --- solvers certify the generated instances ----------------------
+    println!("== solver certificates ==");
+    let mut lo = LightsOut::new(5);
+    lo.seed(0);
+    let mut obs = vec![0.0; 25];
+    lo.reset_into(&mut obs);
+    let presses = lo.solve().expect("solvable");
+    println!("LightsOut 5x5: exact GF(2) solution in {} presses", presses.len());
+
+    let mut ft = Fifteen::new(4).with_scramble(14);
+    ft.seed(0);
+    let mut obs = vec![0.0; 16];
+    ft.reset_into(&mut obs);
+    let path = ft.solve(40).expect("IDA* solves short scrambles");
+    println!("Fifteen 4x4 (14-move scramble): IDA* path of {} moves", path.len());
+
+    let mut ng = Nonogram::new();
+    ng.seed(0);
+    let mut obs = vec![0.0; ng.obs_dim()];
+    ng.reset_into(&mut obs);
+    assert!(ng.solve().is_some());
+    println!("Nonogram 5x5: line-propagation solver found a satisfying grid");
+
+    // --- curriculum: Q-learning over increasing scramble depth --------
+    println!("\n== LightsOut 3x3 curriculum (tabular Q-learning) ==");
+    let n = 3;
+    let mut agent = QTableAgent::new(
+        2,                       // binary cells -> 2 bins per dim
+        vec![0.0; n * n],
+        vec![1.0; n * n],
+        n * n,
+        7,
+    );
+    agent.alpha = 0.3;
+    agent.gamma = 0.95;
+    agent.epsilon = 0.2;
+
+    for difficulty in 1..=4u32 {
+        let mut env = TimeLimit::new(
+            LightsOut::new(n).with_scramble(difficulty),
+            (3 * difficulty) as u32,
+        );
+        env.seed(difficulty as u64);
+        // Train.
+        for _ in 0..4_000 {
+            agent.train_episode(&mut env, 3 * difficulty);
+        }
+        // Evaluate greedily.
+        let mut solved = 0;
+        let trials = 200;
+        let mut obs = vec![0.0f32; n * n];
+        for t in 0..trials {
+            env.seed(1_000 + t);
+            env.reset_into(&mut obs);
+            for _ in 0..3 * difficulty {
+                let s = agent.state_of(&obs);
+                let a = agent.greedy(s);
+                let tr = env.step_into(&Action::Discrete(a), &mut obs);
+                if tr.done && !tr.truncated {
+                    solved += 1;
+                    break;
+                }
+                if tr.truncated {
+                    break;
+                }
+            }
+        }
+        let rate = 100.0 * solved as f32 / trials as f32;
+        println!("  scramble depth {difficulty}: greedy solve rate {rate:.0}%");
+        if difficulty == 1 {
+            assert!(rate > 60.0, "depth-1 should be mastered, got {rate}%");
+        }
+    }
+    println!("\n(the solvers provide both difficulty grading and demonstration\n trajectories — the transfer/curriculum hook the paper motivates)");
+}

@@ -1,0 +1,79 @@
+//! Quickstart — the paper's Listings 1 & 2 in this toolkit.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use cairl::prelude::*;
+
+fn main() {
+    // ---- Listing 2: the Gym-compatible dynamic API -------------------
+    // #e = gym.make("CartPole-v1")
+    //  e = cairl.make("CartPole-v1")   # Use CaiRL
+    let mut e = cairl::make("CartPole-v1").expect("registered env");
+    let mut rng = Pcg32::new(0, 1);
+    let mut total_steps = 0u32;
+    for ep in 0..100 {
+        e.reset();
+        let mut term = false;
+        let mut steps = 0u32;
+        while !term {
+            steps += 1;
+            let a = e.action_space().sample(&mut rng);
+            let step = e.step(&a);
+            term = step.done;
+            // obs = e.render()
+            let mut fb = Framebuffer::standard();
+            e.render(&mut fb);
+        }
+        total_steps += steps;
+        if ep % 25 == 0 {
+            println!("episode {ep:>3}: {steps} steps");
+        }
+    }
+    println!("dynamic API: 100 random episodes, {total_steps} total steps");
+
+    // ---- Listing 1: zero-cost static composition ---------------------
+    // e = Flatten<TimeLimit<200, CartPoleEnv>>()
+    let mut e = Flatten::new(TimeLimit::new(CartPole::new(), 200));
+    e.seed(0);
+    let mut obs = vec![0.0f32; e.obs_dim()];
+    let mut episodes = 0;
+    let mut steps = 0u64;
+    e.reset_into(&mut obs);
+    for _ in 0..10_000 {
+        let a = e.action_space().sample(&mut rng);
+        let t = e.step_into(&a, &mut obs);
+        steps += 1;
+        if t.done || t.truncated {
+            episodes += 1;
+            e.reset_into(&mut obs);
+        }
+    }
+    println!(
+        "static API:  {steps} steps over {episodes} episodes through {}",
+        e.id()
+    );
+
+    // ---- The other runners behind the same interface -----------------
+    for id in ["Script/CartPole-v1", "Flash/Pong-v0", "Puzzle/LightsOut-v0"] {
+        let mut env = cairl::make(id).expect("registered env");
+        env.seed(0);
+        let (ret, len) = cairl::core::env::random_rollout(env.as_mut(), &mut rng, 200);
+        println!("{id:<24} random episode: return {ret:>8.1}, length {len}");
+    }
+
+    // ---- ASCII render, because everyone wants to see the pole --------
+    let mut cart = CartPole::new();
+    cart.seed(7);
+    let mut obs = vec![0.0f32; 4];
+    cart.reset_into(&mut obs);
+    // The painter's geometry is fixed to the 64x64 agent resolution
+    // (it must match the L1 render kernel pixel-for-pixel), so render
+    // there and downsample for the terminal.
+    let mut fb = Framebuffer::standard();
+    cart.render(&mut fb);
+    let mut small = Framebuffer::new(32, 32);
+    fb.downsample_into(&mut small);
+    println!("\nCartPole, software-rendered (downsampled 32x32):\n{}", small.to_ascii());
+}

@@ -1,0 +1,85 @@
+//! Tournament tooling (paper §III-A) on the GridRTS substrate: a Swiss
+//! tournament and a single-elimination bracket over the built-in bots.
+//!
+//! ```sh
+//! cargo run --release --example tournament
+//! ```
+
+use cairl::core::rng::Pcg32;
+use cairl::envs::gridrts::{play_match, Bot, HarvestBot, MatchResult, RandomBot, RushBot};
+use cairl::tooling::tournament::{single_elimination, swiss, GameOutcome};
+
+/// Bridge a bot-vs-bot GridRTS match into a tournament outcome.
+fn run_pairing(bots: &mut [Box<dyn Bot>], a: usize, b: usize) -> GameOutcome {
+    let (lo, hi) = (a.min(b), a.max(b));
+    let (left, right) = bots.split_at_mut(hi);
+    let (bot_lo, bot_hi) = (&mut left[lo], &mut right[0]);
+    let result = if a < b {
+        play_match(bot_lo.as_mut(), bot_hi.as_mut())
+    } else {
+        play_match(bot_hi.as_mut(), bot_lo.as_mut())
+    };
+    match result {
+        MatchResult::Win(0) => GameOutcome::WinA,
+        MatchResult::Win(_) => GameOutcome::WinB,
+        MatchResult::Draw => GameOutcome::Draw,
+    }
+}
+
+fn roster(seed: u64) -> (Vec<Box<dyn Bot>>, Vec<String>) {
+    let bots: Vec<Box<dyn Bot>> = vec![
+        Box::new(RushBot),
+        Box::new(HarvestBot),
+        Box::new(RandomBot(Pcg32::new(seed, 1))),
+        Box::new(RandomBot(Pcg32::new(seed, 2))),
+        Box::new(RandomBot(Pcg32::new(seed, 3))),
+        Box::new(HarvestBot),
+    ];
+    let names = vec![
+        "rush".to_string(),
+        "harvest".to_string(),
+        "random-1".to_string(),
+        "random-2".to_string(),
+        "random-3".to_string(),
+        "harvest-2".to_string(),
+    ];
+    (bots, names)
+}
+
+fn main() {
+    let seed = 0;
+
+    println!("== Swiss, 4 rounds, 6 GridRTS bots ==");
+    let (mut bots, names) = roster(seed);
+    let mut rng = Pcg32::new(seed, 99);
+    let standings = swiss(bots.len(), 4, &mut rng, |a, b| run_pairing(&mut bots, a, b));
+    for (rank, s) in standings.iter().enumerate() {
+        println!(
+            "  {}. {:<10} {:>2} pts  ({} matches)",
+            rank + 1,
+            names[s.player],
+            s.score,
+            s.played
+        );
+    }
+
+    println!("\n== Single elimination, same roster ==");
+    let (mut bots, names) = roster(seed + 1);
+    let mut rng = Pcg32::new(seed + 1, 99);
+    let bracket =
+        single_elimination(bots.len(), &mut rng, |a, b| run_pairing(&mut bots, a, b));
+    for (rank, s) in bracket.iter().enumerate() {
+        println!(
+            "  {}. {:<10} survived {} round(s)  ({} matches)",
+            rank + 1,
+            names[s.player],
+            s.score,
+            s.played
+        );
+    }
+    println!("\nchampion: {}", names[bracket[0].player]);
+
+    // Sanity: the rush strategy dominates this map (it razes an
+    // undefended base before economy pays off) — mirror of the unit test.
+    assert_eq!(names[bracket[0].player], "rush");
+}

@@ -1,0 +1,240 @@
+"""AOT entry point: lower every L2 function to HLO text + manifest.json.
+
+Run once by `make artifacts`; the rust coordinator is self-contained
+afterwards.  Interchange format is HLO *text*, never `.serialize()` — the
+image's xla_extension 0.5.1 rejects jax>=0.5's 64-bit-instruction-id protos,
+while the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Emits, per EnvSpec:  dqn_act_<env>.hlo.txt, dqn_train_<env>.hlo.txt
+plus the vectorised-simulation kernels: env_step_cartpole.hlo.txt,
+render_cartpole.hlo.txt, and manifest.json describing operand order/shapes
+and golden input/output vectors for the rust integration tests.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.env_step import env_step_cartpole
+from .kernels.render import render_cartpole
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sig(args):
+    return [
+        {"shape": list(a.shape), "dtype": str(a.dtype)}
+        for a in args
+    ]
+
+
+def _write(out_dir, name, text):
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    # Idempotence: leave mtime alone when content is unchanged so the
+    # Makefile stamp logic never rebuilds spuriously.
+    if os.path.exists(path) and open(path).read() == text:
+        return path
+    with open(path, "w") as f:
+        f.write(text)
+    return path
+
+
+def lower_env_artifacts(spec, out_dir, manifest):
+    """dqn_act + dqn_train for one EnvSpec."""
+    act_args = model.act_example_args(spec, batch=1)
+    lowered = jax.jit(model.dqn_act).lower(*act_args)
+    _write(out_dir, f"dqn_act_{spec.name}", to_hlo_text(lowered))
+    manifest["artifacts"][f"dqn_act_{spec.name}"] = {
+        "file": f"dqn_act_{spec.name}.hlo.txt",
+        "inputs": _sig(act_args),
+        "outputs": [
+            {"shape": [1, spec.n_actions], "dtype": "float32"},
+        ],
+        "input_names": list(model.PARAM_NAMES) + ["obs"],
+        "output_names": ["q"],
+    }
+
+    train_args = model.train_example_args(spec)
+    lowered = jax.jit(model.dqn_train).lower(*train_args)
+    _write(out_dir, f"dqn_train_{spec.name}", to_hlo_text(lowered))
+    pn = list(model.PARAM_NAMES)
+    manifest["artifacts"][f"dqn_train_{spec.name}"] = {
+        "file": f"dqn_train_{spec.name}.hlo.txt",
+        "inputs": _sig(train_args),
+        "outputs": (
+            [{"shape": list(sh), "dtype": "float32"}
+             for sh in model.param_shapes(spec)] * 3
+            + [{"shape": [], "dtype": "float32"},
+               {"shape": [], "dtype": "float32"}]
+        ),
+        "input_names": (
+            pn
+            + [f"t{n}" for n in pn]
+            + [f"m_{n}" for n in pn]
+            + [f"v_{n}" for n in pn]
+            + ["t", "s", "a", "r", "s2", "done"]
+        ),
+        "output_names": (
+            pn
+            + [f"m_{n}" for n in pn]
+            + [f"v_{n}" for n in pn]
+            + ["t", "loss"]
+        ),
+    }
+
+
+def lower_sim_artifacts(out_dir, manifest, batch=256):
+    """Vectorised CartPole stepping + rendering (L1 kernels, standalone)."""
+    state = jax.ShapeDtypeStruct((batch, 4), jnp.float32)
+    action = jax.ShapeDtypeStruct((batch,), jnp.float32)
+
+    def step_fn(s, a):
+        return env_step_cartpole(s, a)
+
+    lowered = jax.jit(step_fn).lower(state, action)
+    _write(out_dir, "env_step_cartpole", to_hlo_text(lowered))
+    manifest["artifacts"]["env_step_cartpole"] = {
+        "file": "env_step_cartpole.hlo.txt",
+        "inputs": _sig((state, action)),
+        "outputs": [
+            {"shape": [batch, 4], "dtype": "float32"},
+            {"shape": [batch], "dtype": "float32"},
+            {"shape": [batch], "dtype": "float32"},
+        ],
+        "input_names": ["state", "action"],
+        "output_names": ["next_state", "reward", "done"],
+    }
+
+    rb = 8  # render batch: 8 frames of 64x64 per call
+    rstate = jax.ShapeDtypeStruct((rb, 4), jnp.float32)
+
+    def render_fn(s):
+        return (render_cartpole(s),)
+
+    lowered = jax.jit(render_fn).lower(rstate)
+    _write(out_dir, "render_cartpole", to_hlo_text(lowered))
+    manifest["artifacts"]["render_cartpole"] = {
+        "file": "render_cartpole.hlo.txt",
+        "inputs": _sig((rstate,)),
+        "outputs": [{"shape": [rb, 64, 64], "dtype": "float32"}],
+        "input_names": ["state"],
+        "output_names": ["frames"],
+    }
+
+
+def goldens(manifest):
+    """Deterministic input/output vectors for rust-side smoke tests."""
+    spec = model.ENV_SPECS[0]  # cartpole
+    key = jax.random.PRNGKey(0)
+    params = model.init_params(key, spec)
+    obs = jnp.array([[0.01, -0.02, 0.03, -0.04]], jnp.float32)
+    (q,) = model.dqn_act(*params, obs)
+
+    # One train step on a fixed synthetic batch: record the resulting loss
+    # and the first row of w1 so rust can verify the full 30-in/20-out path.
+    zeros = tuple(jnp.zeros_like(p) for p in params)
+    b = model.BATCH
+    key_s, key_a, key_r = jax.random.split(jax.random.PRNGKey(1), 3)
+    s = jax.random.uniform(key_s, (b, spec.obs_dim), jnp.float32, -0.05, 0.05)
+    a = jax.random.randint(key_a, (b,), 0, spec.n_actions)
+    r = jnp.ones((b,), jnp.float32)
+    s2 = s + 0.01
+    done = jnp.zeros((b,), jnp.float32)
+    out = model.dqn_train(
+        *params, *params, *zeros, *zeros, jnp.float32(0.0),
+        s, a.astype(jnp.int32), r, s2, done,
+    )
+    loss = out[-1]
+
+    st = jnp.array(
+        [[0.0, 0.0, 0.05, 0.0], [1.0, -0.5, -0.1, 0.2]], jnp.float32
+    )
+    act = jnp.array([1.0, 0.0], jnp.float32)
+    ns, rew, dn = env_step_cartpole(st, act)
+
+    frames = render_cartpole(jnp.zeros((8, 4), jnp.float32))
+
+    manifest["goldens"] = {
+        "dqn_act_cartpole": {
+            "params_w1_row0": np.asarray(params[0][0]).tolist(),
+            "obs": np.asarray(obs).ravel().tolist(),
+            "q": np.asarray(q).ravel().tolist(),
+        },
+        "dqn_train_cartpole": {
+            "loss": float(loss),
+            "new_w1_00": float(out[0][0, 0]),
+            "t": float(out[-2]),
+        },
+        "env_step_cartpole": {
+            "state": np.asarray(st).ravel().tolist(),
+            "action": np.asarray(act).ravel().tolist(),
+            "next_state": np.asarray(ns).ravel().tolist(),
+            "reward": np.asarray(rew).ravel().tolist(),
+            "done": np.asarray(dn).ravel().tolist(),
+        },
+        "render_cartpole": {
+            "frame0_sum": float(jnp.sum(frames[0])),
+            "frame0_max": float(jnp.max(frames[0])),
+        },
+    }
+    # Seed params for reproducible rust-side training: flattened init
+    # parameters for cartpole (PRNGKey(0)), so rust does not need jax.
+    manifest["init_params"] = {
+        "cartpole": {
+            n: np.asarray(p).ravel().tolist()
+            for n, p in zip(model.PARAM_NAMES, params)
+        }
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {
+        "format": "hlo-text",
+        "hyperparameters": {
+            "gamma": model.GAMMA,
+            "lr": model.LR,
+            "adam_b1": model.ADAM_B1,
+            "adam_b2": model.ADAM_B2,
+            "adam_eps": model.ADAM_EPS,
+            "hidden": model.HIDDEN,
+            "batch": model.BATCH,
+            "huber_delta": model.HUBER_DELTA,
+        },
+        "env_specs": {
+            s.name: {"obs_dim": s.obs_dim, "n_actions": s.n_actions}
+            for s in model.ENV_SPECS
+        },
+        "artifacts": {},
+    }
+    for spec in model.ENV_SPECS:
+        lower_env_artifacts(spec, args.out_dir, manifest)
+        print(f"lowered dqn_{{act,train}}_{spec.name}")
+    lower_sim_artifacts(args.out_dir, manifest)
+    print("lowered env_step_cartpole, render_cartpole")
+    goldens(manifest)
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote manifest with {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""L1 Pallas kernel: batched CartPole-v1 dynamics step.
+
+The paper's §II-B/§III SIMD insight — vectorise the environment's arithmetic
+so one instruction advances many lanes — mapped onto the TPU VPU: one kernel
+invocation advances B independent CartPole environments.  All branches of
+the Gym dynamics (force sign, termination, auto-reset masking) are rewritten
+branchless with `jnp.where`, exactly the transformation the paper applies
+for CPU SIMD.
+
+State layout f32[B, 4]: (x, x_dot, theta, theta_dot) — identical to Gym's
+CartPole-v1 so trajectories can be cross-checked bit-for-bit (modulo f32
+rounding) against the L3 rust implementation and the MiniPy scripted
+baseline.
+
+interpret=True: CPU-PJRT execution path (see fused_mlp.py docstring).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+# Gym CartPole-v1 constants.
+GRAVITY = 9.8
+MASS_CART = 1.0
+MASS_POLE = 0.1
+TOTAL_MASS = MASS_CART + MASS_POLE
+LENGTH = 0.5  # half pole length
+POLEMASS_LENGTH = MASS_POLE * LENGTH
+FORCE_MAG = 10.0
+TAU = 0.02  # seconds between state updates (Euler integration)
+THETA_THRESHOLD = 12 * 2 * jnp.pi / 360  # ~0.2094 rad
+X_THRESHOLD = 2.4
+
+
+def _step_kernel(state_ref, action_ref, next_ref, reward_ref, done_ref):
+    """One Euler step of the CartPole dynamics for every lane."""
+    s = state_ref[...]
+    x, x_dot, theta, theta_dot = s[:, 0], s[:, 1], s[:, 2], s[:, 3]
+    # action is {0, 1} encoded f32; force = +-FORCE_MAG, branchless.
+    a = action_ref[...]
+    force = jnp.where(a > 0.5, FORCE_MAG, -FORCE_MAG)
+
+    costheta = jnp.cos(theta)
+    sintheta = jnp.sin(theta)
+    temp = (force + POLEMASS_LENGTH * theta_dot**2 * sintheta) / TOTAL_MASS
+    thetaacc = (GRAVITY * sintheta - costheta * temp) / (
+        LENGTH * (4.0 / 3.0 - MASS_POLE * costheta**2 / TOTAL_MASS)
+    )
+    xacc = temp - POLEMASS_LENGTH * thetaacc * costheta / TOTAL_MASS
+
+    # Semi-implicit is NOT what Gym uses; Gym CartPole is explicit Euler
+    # ("euler" kinematics_integrator): position first with old velocity.
+    x = x + TAU * x_dot
+    x_dot = x_dot + TAU * xacc
+    theta = theta + TAU * theta_dot
+    theta_dot = theta_dot + TAU * thetaacc
+
+    done = (
+        (x < -X_THRESHOLD)
+        | (x > X_THRESHOLD)
+        | (theta < -THETA_THRESHOLD)
+        | (theta > THETA_THRESHOLD)
+    )
+    next_ref[...] = jnp.stack([x, x_dot, theta, theta_dot], axis=1)
+    # Gym semantics: reward 1.0 on every step including the terminating one.
+    reward_ref[...] = jnp.ones_like(x)
+    done_ref[...] = done.astype(jnp.float32)
+
+
+def env_step_cartpole(state, action):
+    """Advance B CartPole environments one step.
+
+    Args:
+      state: f32[B, 4] current states.
+      action: f32[B] actions in {0.0, 1.0}.
+
+    Returns:
+      (next_state f32[B,4], reward f32[B], done f32[B]).
+    """
+    batch = state.shape[0]
+    return pl.pallas_call(
+        _step_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((batch, 4), jnp.float32),
+            jax.ShapeDtypeStruct((batch,), jnp.float32),
+            jax.ShapeDtypeStruct((batch,), jnp.float32),
+        ),
+        interpret=INTERPRET,
+    )(state, action)

@@ -1,0 +1,141 @@
+"""L1 Pallas kernel: fused 3-layer MLP Q-network forward and backward.
+
+The paper's DQN (Table I: units 32,32, elu) evaluated as a single fused
+kernel: all weights are VMEM-resident, the observation batch is read from
+HBM once, intermediates (h1, h2) never leave VMEM, and the Q-value batch is
+written once.  This is the TPU translation of the paper's "keep the hot data
+in fast memory" software-rendering/SIMD insight (DESIGN.md
+§Hardware-Adaptation).
+
+Backward is a second fused kernel that rematerialises h1/h2 in VMEM (cheap
+for 32-wide layers) instead of spilling activations to HBM, then produces
+all six parameter gradients in one pass.  Both are wired together with
+`jax.custom_vjp` so `dqn_train` can differentiate straight through the
+kernel.
+
+interpret=True everywhere: real-TPU lowering emits Mosaic custom-calls the
+CPU PJRT plugin cannot execute (see /opt/xla-example/README.md).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True  # CPU-PJRT execution path; see module docstring.
+
+
+def _elu(x):
+    # elu(x) = x if x > 0 else exp(x) - 1   (alpha = 1, Table I activation)
+    return jnp.where(x > 0, x, jnp.exp(jnp.minimum(x, 0.0)) - 1.0)
+
+
+def _elu_grad(x):
+    # d/dx elu(x) = 1 if x > 0 else exp(x)
+    return jnp.where(x > 0, 1.0, jnp.exp(jnp.minimum(x, 0.0)))
+
+
+def _fwd_kernel(obs_ref, w1_ref, b1_ref, w2_ref, b2_ref, w3_ref, b3_ref, q_ref):
+    """Fused forward: q = (elu(elu(obs@w1+b1)@w2+b2))@w3+b3.
+
+    Single grid point: the whole (B, S) obs block and all weights fit VMEM
+    (see DESIGN.md VMEM budget table), so no HBM traffic between layers.
+    """
+    obs = obs_ref[...]
+    h1 = _elu(obs @ w1_ref[...] + b1_ref[...])
+    h2 = _elu(h1 @ w2_ref[...] + b2_ref[...])
+    q_ref[...] = h2 @ w3_ref[...] + b3_ref[...]
+
+
+def _bwd_kernel(
+    obs_ref, w1_ref, b1_ref, w2_ref, b2_ref, w3_ref, b3_ref, dq_ref,
+    dw1_ref, db1_ref, dw2_ref, db2_ref, dw3_ref, db3_ref,
+):
+    """Fused backward: rematerialise activations in VMEM, emit all grads.
+
+    Rematerialisation (recompute h1/h2 from obs) is strictly cheaper than a
+    round-trip of the activations through HBM at these layer widths: two
+    extra 32-wide matmuls vs 2*B*32 floats of HBM traffic.
+    """
+    obs = obs_ref[...]
+    z1 = obs @ w1_ref[...] + b1_ref[...]
+    h1 = _elu(z1)
+    z2 = h1 @ w2_ref[...] + b2_ref[...]
+    h2 = _elu(z2)
+    dq = dq_ref[...]
+
+    # layer 3
+    dw3_ref[...] = h2.T @ dq
+    db3_ref[...] = jnp.sum(dq, axis=0)
+    dh2 = dq @ w3_ref[...].T
+    # layer 2
+    dz2 = dh2 * _elu_grad(z2)
+    dw2_ref[...] = h1.T @ dz2
+    db2_ref[...] = jnp.sum(dz2, axis=0)
+    dh1 = dz2 @ w2_ref[...].T
+    # layer 1
+    dz1 = dh1 * _elu_grad(z1)
+    dw1_ref[...] = obs.T @ dz1
+    db1_ref[...] = jnp.sum(dz1, axis=0)
+
+
+def _fwd_call(obs, w1, b1, w2, b2, w3, b3):
+    batch = obs.shape[0]
+    n_act = w3.shape[1]
+    return pl.pallas_call(
+        _fwd_kernel,
+        out_shape=jax.ShapeDtypeStruct((batch, n_act), jnp.float32),
+        interpret=INTERPRET,
+    )(obs, w1, b1, w2, b2, w3, b3)
+
+
+def _bwd_call(obs, w1, b1, w2, b2, w3, b3, dq):
+    shapes = tuple(
+        jax.ShapeDtypeStruct(p.shape, jnp.float32)
+        for p in (w1, b1, w2, b2, w3, b3)
+    )
+    return pl.pallas_call(
+        _bwd_kernel,
+        out_shape=shapes,
+        interpret=INTERPRET,
+    )(obs, w1, b1, w2, b2, w3, b3, dq)
+
+
+@jax.custom_vjp
+def fused_mlp(obs, w1, b1, w2, b2, w3, b3):
+    """Q-network forward through the fused Pallas kernel.
+
+    Args:
+      obs: f32[B, S] observation batch.
+      w1/b1, w2/b2, w3/b3: layer parameters (S->H, H->H, H->A).
+
+    Returns:
+      f32[B, A] Q-values.
+    """
+    return _fwd_call(obs, w1, b1, w2, b2, w3, b3)
+
+
+def _vjp_fwd(obs, w1, b1, w2, b2, w3, b3):
+    q = _fwd_call(obs, w1, b1, w2, b2, w3, b3)
+    return q, (obs, w1, b1, w2, b2, w3, b3)
+
+
+def _vjp_bwd(res, dq):
+    obs, w1, b1, w2, b2, w3, b3 = res
+    dw1, db1, dw2, db2, dw3, db3 = _bwd_call(obs, w1, b1, w2, b2, w3, b3, dq)
+    # No gradient w.r.t. observations: DQN never differentiates its inputs.
+    return (jnp.zeros_like(obs), dw1, db1, dw2, db2, dw3, db3)
+
+
+fused_mlp.defvjp(_vjp_fwd, _vjp_bwd)
+
+
+def mlp_apply(params, obs):
+    """Convenience wrapper: params dict -> fused kernel call."""
+    return fused_mlp(
+        obs,
+        params["w1"], params["b1"],
+        params["w2"], params["b2"],
+        params["w3"], params["b3"],
+    )

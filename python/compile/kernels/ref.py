@@ -1,0 +1,114 @@
+"""Pure-jnp oracles for every L1 Pallas kernel.
+
+These are the correctness ground truth: deliberately written in the most
+obvious jnp style, no pallas, no fusion tricks.  pytest asserts that each
+kernel matches its oracle to f32 tolerance across a hypothesis-driven sweep
+of shapes (python/tests/test_kernel.py).
+"""
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------- fused_mlp
+
+
+def elu(x):
+    return jnp.where(x > 0, x, jnp.exp(jnp.minimum(x, 0.0)) - 1.0)
+
+
+def mlp_forward_ref(obs, w1, b1, w2, b2, w3, b3):
+    """Plain 3-layer MLP with elu, the Table-I Q-network."""
+    h1 = elu(obs @ w1 + b1)
+    h2 = elu(h1 @ w2 + b2)
+    return h2 @ w3 + b3
+
+
+def mlp_grads_ref(obs, w1, b1, w2, b2, w3, b3, dq):
+    """Parameter cotangents via jax autodiff on the reference forward."""
+
+    def scalarised(w1, b1, w2, b2, w3, b3):
+        q = mlp_forward_ref(obs, w1, b1, w2, b2, w3, b3)
+        return jnp.sum(q * dq)
+
+    return jax.grad(scalarised, argnums=(0, 1, 2, 3, 4, 5))(
+        w1, b1, w2, b2, w3, b3
+    )
+
+
+# ----------------------------------------------------------- env_step (ref)
+
+GRAVITY = 9.8
+MASS_CART = 1.0
+MASS_POLE = 0.1
+TOTAL_MASS = MASS_CART + MASS_POLE
+LENGTH = 0.5
+POLEMASS_LENGTH = MASS_POLE * LENGTH
+FORCE_MAG = 10.0
+TAU = 0.02
+THETA_THRESHOLD = 12 * 2 * jnp.pi / 360
+X_THRESHOLD = 2.4
+
+
+def cartpole_step_ref(state, action):
+    """Single-env Gym CartPole-v1 Euler step, vmapped by the caller."""
+    x, x_dot, theta, theta_dot = state
+    force = jnp.where(action > 0.5, FORCE_MAG, -FORCE_MAG)
+    costheta = jnp.cos(theta)
+    sintheta = jnp.sin(theta)
+    temp = (force + POLEMASS_LENGTH * theta_dot**2 * sintheta) / TOTAL_MASS
+    thetaacc = (GRAVITY * sintheta - costheta * temp) / (
+        LENGTH * (4.0 / 3.0 - MASS_POLE * costheta**2 / TOTAL_MASS)
+    )
+    xacc = temp - POLEMASS_LENGTH * thetaacc * costheta / TOTAL_MASS
+    x = x + TAU * x_dot
+    x_dot = x_dot + TAU * xacc
+    theta = theta + TAU * theta_dot
+    theta_dot = theta_dot + TAU * thetaacc
+    next_state = jnp.stack([x, x_dot, theta, theta_dot])
+    done = (
+        (x < -X_THRESHOLD)
+        | (x > X_THRESHOLD)
+        | (theta < -THETA_THRESHOLD)
+        | (theta > THETA_THRESHOLD)
+    ).astype(jnp.float32)
+    return next_state, jnp.float32(1.0), done
+
+
+def env_step_cartpole_ref(state, action):
+    """Batched oracle: vmap of the single-env step."""
+    return jax.vmap(cartpole_step_ref)(state, action)
+
+
+# -------------------------------------------------------------- render ref
+
+
+def render_cartpole_ref(state):
+    """Batched oracle for the scene rasteriser: literal per-pixel
+    semantics expressed with meshgrid (no pallas)."""
+    from . import render as rk  # share the geometry constants
+
+    def one(st):
+        x_world, theta = st[0], st[2]
+        rows, cols = jnp.meshgrid(
+            jnp.arange(rk.H, dtype=jnp.float32),
+            jnp.arange(rk.W, dtype=jnp.float32),
+            indexing="ij",
+        )
+        cx = (x_world / rk.X_THRESHOLD) * (rk.W / 2 - rk.CART_W) + rk.W / 2
+        cy = jnp.float32(rk.CART_Y)
+        frame = jnp.zeros((rk.H, rk.W), jnp.float32)
+        frame = jnp.where(
+            rows == jnp.float32(rk.CART_Y + rk.CART_H // 2), rk.TRACK_I, frame
+        )
+        cart = (jnp.abs(cols - cx) <= rk.CART_W / 2) & (
+            jnp.abs(rows - cy) <= rk.CART_H / 2
+        )
+        frame = jnp.where(cart, rk.CART_I, frame)
+        dx, dy = jnp.sin(theta), -jnp.cos(theta)
+        px, py = cols - cx, rows - cy
+        t = jnp.clip(px * dx + py * dy, 0.0, rk.POLE_LEN)
+        dist2 = (px - t * dx) ** 2 + (py - t * dy) ** 2
+        frame = jnp.where(dist2 <= rk.POLE_HALF_THICK**2, rk.POLE_I, frame)
+        return frame
+
+    return jax.vmap(one)(state)

@@ -1,0 +1,99 @@
+"""L1 Pallas kernel: batched software rasteriser for the CartPole scene.
+
+The paper's central rendering claim (§II-B, Fig. 1): for simple 2D scenes a
+*software* renderer that keeps the framebuffer in fast memory beats hardware
+rendering because the GPU->CPU readback stall dominates.  TPU translation
+(DESIGN.md §Hardware-Adaptation): the framebuffer tile lives in VMEM for the
+whole compose loop — a 64x64 f32 buffer is 16 KB, far under the VMEM budget
+— and is written to HBM exactly once.  Geometry is expressed as coordinate
+grids + masks (`broadcasted_iota` + `where`), the vectorised equivalent of
+the paper's SIMD scanline fills.
+
+Scene (matches rust/src/render/software.rs::paint_cartpole so golden-pixel
+tests can cross-check the two implementations):
+  - background 0.0
+  - track:  horizontal line, 1 px, intensity 0.3, at y = CART_Y + CART_H/2
+  - cart:   CART_W x CART_H rectangle, intensity 0.6, centred at world x
+  - pole:   line of POLE_LEN px from the cart centre at angle theta,
+            thickness ~2 px, intensity 1.0
+
+interpret=True: CPU-PJRT execution path (see fused_mlp.py docstring).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+H = 64
+W = 64
+X_THRESHOLD = 2.4  # world |x| mapped to the framebuffer width
+CART_W = 8
+CART_H = 4
+CART_Y = 48  # cart centre row
+POLE_LEN = 20.0  # pixels
+POLE_HALF_THICK = 1.0
+
+TRACK_I = 0.3
+CART_I = 0.6
+POLE_I = 1.0
+
+
+def _scene(x_world, theta):
+    """Render one (x, theta) pair into an f32[H, W] intensity buffer."""
+    rows = jax.lax.broadcasted_iota(jnp.float32, (H, W), 0)
+    cols = jax.lax.broadcasted_iota(jnp.float32, (H, W), 1)
+
+    cx = (x_world / X_THRESHOLD) * (W / 2 - CART_W) + W / 2
+    cy = jnp.float32(CART_Y)
+
+    frame = jnp.zeros((H, W), jnp.float32)
+
+    # Track line (drawn first; cart and pole paint over it).
+    track = (rows == jnp.float32(CART_Y + CART_H // 2))
+    frame = jnp.where(track, TRACK_I, frame)
+
+    # Cart rectangle.
+    cart = (
+        (jnp.abs(cols - cx) <= CART_W / 2)
+        & (jnp.abs(rows - cy) <= CART_H / 2)
+    )
+    frame = jnp.where(cart, CART_I, frame)
+
+    # Pole: distance from each pixel to the segment
+    # P(t) = C + t * d, t in [0, POLE_LEN], d = (sin(theta), -cos(theta))
+    # (theta = 0 is straight up; screen y grows downward).
+    dx = jnp.sin(theta)
+    dy = -jnp.cos(theta)
+    px = cols - cx
+    py = rows - cy
+    t = jnp.clip(px * dx + py * dy, 0.0, POLE_LEN)
+    dist2 = (px - t * dx) ** 2 + (py - t * dy) ** 2
+    pole = dist2 <= POLE_HALF_THICK**2
+    frame = jnp.where(pole, POLE_I, frame)
+    return frame
+
+
+def _render_kernel(state_ref, frame_ref):
+    s = state_ref[...]
+    # vmap over the batch inside the kernel: one VMEM-resident buffer per
+    # lane group; all compositing happens before the single HBM write.
+    frame_ref[...] = jax.vmap(lambda st: _scene(st[0], st[2]))(s)
+
+
+def render_cartpole(state):
+    """Rasterise B CartPole states into B framebuffers.
+
+    Args:
+      state: f32[B, 4] (x, x_dot, theta, theta_dot).
+
+    Returns:
+      f32[B, H, W] intensity frames in [0, 1].
+    """
+    batch = state.shape[0]
+    return pl.pallas_call(
+        _render_kernel,
+        out_shape=jax.ShapeDtypeStruct((batch, H, W), jnp.float32),
+        interpret=INTERPRET,
+    )(state)

@@ -1,0 +1,176 @@
+"""L2: the paper's DQN compute graph in JAX, calling the L1 fused kernel.
+
+Table I hyperparameters: units (32, 32), elu, Adam(3e-4), Huber loss,
+gamma 0.99, batch 32.  Two jitted entry points are AOT-lowered per
+environment spec (aot.py):
+
+  dqn_act(w1..b3, obs)                          -> (q,)
+  dqn_train(w1..b3, tw1..tb3, m1..m6, v1..v6, t, s, a, r, s2, done)
+                                                -> (w1'..b3', m', v', t', loss)
+
+The flat positional signature is deliberate: the rust runtime
+(rust/src/runtime/) feeds PJRT literals by operand index, and the manifest
+(aot.py) records the exact ordering.  Python never runs after `make
+artifacts` — the rust coordinator owns the training loop, replay buffer,
+epsilon schedule and target-network sync (a literal copy, no artifact
+needed).
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.fused_mlp import fused_mlp
+
+GAMMA = 0.99
+LR = 3e-4
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+HIDDEN = 32
+BATCH = 32
+HUBER_DELTA = 1.0
+
+
+@dataclass(frozen=True)
+class EnvSpec:
+    """Static shape info for one environment's DQN artifacts."""
+
+    name: str
+    obs_dim: int
+    n_actions: int
+
+
+# Every environment the L3 toolkit trains DQN on.  Pendulum's continuous
+# torque is discretised into 5 levels by L3 (the paper benchmarks DQN on all
+# four classic-control tasks, which requires the same discretisation);
+# multitask observes the flash VM's memory vector (32 floats, 4 actions).
+ENV_SPECS = (
+    EnvSpec("cartpole", 4, 2),
+    EnvSpec("mountaincar", 2, 3),
+    EnvSpec("acrobot", 6, 3),
+    EnvSpec("pendulum", 3, 5),
+    EnvSpec("multitask", 32, 4),
+)
+
+PARAM_NAMES = ("w1", "b1", "w2", "b2", "w3", "b3")
+
+
+def param_shapes(spec):
+    """Parameter shapes in PARAM_NAMES order."""
+    s, a, h = spec.obs_dim, spec.n_actions, HIDDEN
+    return ((s, h), (h,), (h, h), (h,), (h, a), (a,))
+
+
+def init_params(key, spec):
+    """He-uniform init matching the rust-side initialiser (runtime/dqn)."""
+    params = []
+    for shape in param_shapes(spec):
+        if len(shape) == 2:
+            key, sub = jax.random.split(key)
+            bound = jnp.sqrt(6.0 / shape[0])
+            params.append(
+                jax.random.uniform(sub, shape, jnp.float32, -bound, bound)
+            )
+        else:
+            params.append(jnp.zeros(shape, jnp.float32))
+    return tuple(params)
+
+
+def q_values(params, obs):
+    """Q(s, .) through the fused Pallas kernel."""
+    w1, b1, w2, b2, w3, b3 = params
+    return fused_mlp(obs, w1, b1, w2, b2, w3, b3)
+
+
+def dqn_act(w1, b1, w2, b2, w3, b3, obs):
+    """Greedy-evaluation entry point: Q-values for an observation batch."""
+    return (q_values((w1, b1, w2, b2, w3, b3), obs),)
+
+
+def huber(x):
+    """Huber loss with delta=1 (Table I)."""
+    absx = jnp.abs(x)
+    quad = jnp.minimum(absx, HUBER_DELTA)
+    return 0.5 * quad**2 + HUBER_DELTA * (absx - quad)
+
+
+def td_loss(params, target_params, s, a, r, s2, done):
+    """Mean Huber TD error: r + gamma * (1-done) * max_a' Qt(s') - Q(s,a)."""
+    q = q_values(params, s)
+    q_sa = jnp.take_along_axis(q, a[:, None], axis=1)[:, 0]
+    q_next = q_values(target_params, s2)
+    target = r + GAMMA * (1.0 - done) * jax.lax.stop_gradient(
+        jnp.max(q_next, axis=1)
+    )
+    return jnp.mean(huber(q_sa - target))
+
+
+def adam_update(p, g, m, v, t):
+    """One Adam step (bias-corrected), t is the *new* step count."""
+    m = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+    v = ADAM_B2 * v + (1.0 - ADAM_B2) * g * g
+    mhat = m / (1.0 - ADAM_B1**t)
+    vhat = v / (1.0 - ADAM_B2**t)
+    return p - LR * mhat / (jnp.sqrt(vhat) + ADAM_EPS), m, v
+
+
+def dqn_train(
+    w1, b1, w2, b2, w3, b3,
+    tw1, tb1, tw2, tb2, tw3, tb3,
+    m1, m2, m3, m4, m5, m6,
+    v1, v2, v3, v4, v5, v6,
+    t,
+    s, a, r, s2, done,
+):
+    """One fused DQN train step.
+
+    Returns (w1'..b3', m1'..m6', v1'..v6', t', loss) — 20 outputs, the exact
+    order recorded in manifest.json.  A single value_and_grad gives one
+    forward for the online net (no recomputation, §Perf L2 target).
+    """
+    params = (w1, b1, w2, b2, w3, b3)
+    target_params = (tw1, tb1, tw2, tb2, tw3, tb3)
+    loss, grads = jax.value_and_grad(td_loss)(
+        params, target_params, s, a, r, s2, done
+    )
+    ms = (m1, m2, m3, m4, m5, m6)
+    vs = (v1, v2, v3, v4, v5, v6)
+    t_new = t + 1.0
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v in zip(params, grads, ms, vs):
+        p2, m2_, v2_ = adam_update(p, g, m, v, t_new)
+        new_p.append(p2)
+        new_m.append(m2_)
+        new_v.append(v2_)
+    return (*new_p, *new_m, *new_v, t_new, loss)
+
+
+def act_example_args(spec, batch=1):
+    """ShapeDtypeStructs for lowering dqn_act."""
+    shapes = param_shapes(spec)
+    return tuple(jax.ShapeDtypeStruct(sh, jnp.float32) for sh in shapes) + (
+        jax.ShapeDtypeStruct((batch, spec.obs_dim), jnp.float32),
+    )
+
+
+def train_example_args(spec, batch=BATCH):
+    """ShapeDtypeStructs for lowering dqn_train (30 operands)."""
+    shapes = param_shapes(spec)
+    f32 = lambda sh: jax.ShapeDtypeStruct(sh, jnp.float32)
+    params = tuple(f32(sh) for sh in shapes)
+    return (
+        params  # online
+        + params  # target
+        + params  # adam m
+        + params  # adam v
+        + (f32(()),)  # t
+        + (
+            f32((batch, spec.obs_dim)),  # s
+            jax.ShapeDtypeStruct((batch,), jnp.int32),  # a
+            f32((batch,)),  # r
+            f32((batch, spec.obs_dim)),  # s2
+            f32((batch,)),  # done
+        )
+    )

@@ -1,0 +1,100 @@
+"""AOT layer tests: manifest consistency and HLO-text loadability.
+
+The rust runtime trusts manifest.json for operand ordering; these tests pin
+that contract.  Loadability is checked by re-parsing the emitted HLO text
+with the local xla_client — the same parser family the rust xla crate uses.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        subprocess.run(
+            [sys.executable, "-m", "compile.aot", "--out-dir", ART],
+            cwd=os.path.join(os.path.dirname(__file__), ".."),
+            check=True,
+        )
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_manifest_lists_all_env_artifacts(manifest):
+    for env in ("cartpole", "mountaincar", "acrobot", "pendulum", "multitask"):
+        assert f"dqn_act_{env}" in manifest["artifacts"]
+        assert f"dqn_train_{env}" in manifest["artifacts"]
+    assert "env_step_cartpole" in manifest["artifacts"]
+    assert "render_cartpole" in manifest["artifacts"]
+
+
+def test_artifact_files_exist_and_are_hlo_text(manifest):
+    for name, art in manifest["artifacts"].items():
+        path = os.path.join(ART, art["file"])
+        assert os.path.exists(path), name
+        head = open(path).read(200)
+        assert "HloModule" in head, f"{name} is not HLO text"
+
+
+def test_train_artifact_operand_counts(manifest):
+    for env, spec in manifest["env_specs"].items():
+        art = manifest["artifacts"][f"dqn_train_{env}"]
+        assert len(art["inputs"]) == 30
+        assert len(art["input_names"]) == 30
+        assert len(art["outputs"]) == 20
+        assert len(art["output_names"]) == 20
+        # s operand shape must match the spec.
+        s_idx = art["input_names"].index("s")
+        assert art["inputs"][s_idx]["shape"] == [
+            manifest["hyperparameters"]["batch"], spec["obs_dim"]
+        ]
+
+
+def test_act_artifact_shapes(manifest):
+    for env, spec in manifest["env_specs"].items():
+        art = manifest["artifacts"][f"dqn_act_{env}"]
+        assert art["inputs"][0]["shape"] == [spec["obs_dim"], 32]  # w1
+        assert art["inputs"][-1]["shape"] == [1, spec["obs_dim"]]  # obs
+        assert art["outputs"][0]["shape"] == [1, spec["n_actions"]]
+
+
+def test_goldens_present_and_finite(manifest):
+    g = manifest["goldens"]
+    assert len(g["dqn_act_cartpole"]["q"]) == 2
+    assert all(abs(x) < 1e3 for x in g["dqn_act_cartpole"]["q"])
+    assert g["dqn_train_cartpole"]["loss"] > 0
+    assert g["dqn_train_cartpole"]["t"] == 1.0
+    assert g["render_cartpole"]["frame0_sum"] > 0
+    assert len(g["env_step_cartpole"]["next_state"]) == 8
+
+
+def test_hlo_text_reparses(manifest):
+    """Round-trip: emitted text parses back into an XlaComputation."""
+    from jax._src.lib import xla_client as xc
+
+    for name in ("dqn_act_cartpole", "env_step_cartpole"):
+        path = os.path.join(ART, manifest["artifacts"][name]["file"])
+        text = open(path).read()
+        comp = xc._xla.hlo_module_from_text(text)
+        assert comp is not None
+
+
+def test_aot_is_idempotent(manifest):
+    """Re-running aot must not change artifact mtimes (Makefile contract)."""
+    path = os.path.join(ART, "dqn_act_cartpole.hlo.txt")
+    before = os.path.getmtime(path)
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", ART],
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+        check=True,
+        capture_output=True,
+    )
+    assert os.path.getmtime(path) == before

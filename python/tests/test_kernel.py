@@ -1,0 +1,186 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes (batch size, obs dim, action count) and value
+ranges; assert_allclose at f32 tolerance.  This is the core correctness
+signal for the compute layer — the rust side only ever sees these kernels
+through the AOT artifacts, so if this file is green the numerics the
+coordinator executes are the numerics the paper's DQN computes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.env_step import env_step_cartpole
+from compile.kernels.fused_mlp import fused_mlp
+from compile.kernels.render import render_cartpole
+
+HIDDEN = 32
+
+
+def make_params(key, obs_dim, n_actions, hidden=HIDDEN):
+    ks = jax.random.split(key, 6)
+    u = lambda k, sh: jax.random.uniform(k, sh, jnp.float32, -0.5, 0.5)
+    return (
+        u(ks[0], (obs_dim, hidden)),
+        u(ks[1], (hidden,)),
+        u(ks[2], (hidden, hidden)),
+        u(ks[3], (hidden,)),
+        u(ks[4], (hidden, n_actions)),
+        u(ks[5], (n_actions,)),
+    )
+
+
+# ------------------------------------------------------------- fused_mlp
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    batch=st.integers(1, 64),
+    obs_dim=st.integers(1, 48),
+    n_actions=st.integers(2, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_mlp_forward_matches_ref(batch, obs_dim, n_actions, seed):
+    key = jax.random.PRNGKey(seed)
+    kp, ko = jax.random.split(key)
+    params = make_params(kp, obs_dim, n_actions)
+    obs = jax.random.uniform(ko, (batch, obs_dim), jnp.float32, -2.0, 2.0)
+    got = fused_mlp(obs, *params)
+    want = ref.mlp_forward_ref(obs, *params)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    batch=st.integers(1, 32),
+    obs_dim=st.integers(1, 16),
+    n_actions=st.integers(2, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_mlp_backward_matches_autodiff(batch, obs_dim, n_actions, seed):
+    key = jax.random.PRNGKey(seed)
+    kp, ko, kd = jax.random.split(key, 3)
+    params = make_params(kp, obs_dim, n_actions)
+    obs = jax.random.uniform(ko, (batch, obs_dim), jnp.float32, -2.0, 2.0)
+    dq = jax.random.uniform(kd, (batch, n_actions), jnp.float32, -1.0, 1.0)
+
+    def loss(*ps):
+        return jnp.sum(fused_mlp(obs, *ps) * dq)
+
+    got = jax.grad(loss, argnums=tuple(range(6)))(*params)
+    want = ref.mlp_grads_ref(obs, *params, dq)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=1e-4, atol=1e-5)
+
+
+def test_fused_mlp_zero_obs_gives_bias_path():
+    """With zero weights, output must equal the output-layer bias."""
+    obs = jnp.zeros((4, 4), jnp.float32)
+    z = jnp.zeros
+    b3 = jnp.array([1.0, -2.0], jnp.float32)
+    q = fused_mlp(
+        obs, z((4, HIDDEN)), z((HIDDEN,)), z((HIDDEN, HIDDEN)),
+        z((HIDDEN,)), z((HIDDEN, 2)), b3,
+    )
+    # elu(0) = 0, so q = 0 @ w3 + b3 = b3 broadcast over the batch.
+    np.testing.assert_allclose(q, jnp.broadcast_to(b3, (4, 2)), atol=1e-7)
+
+
+def test_fused_mlp_jittable():
+    params = make_params(jax.random.PRNGKey(0), 4, 2)
+    obs = jnp.ones((8, 4), jnp.float32)
+    got = jax.jit(fused_mlp)(obs, *params)
+    want = ref.mlp_forward_ref(obs, *params)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+# -------------------------------------------------------------- env_step
+
+
+@settings(max_examples=25, deadline=None)
+@given(batch=st.integers(1, 128), seed=st.integers(0, 2**31 - 1))
+def test_env_step_matches_ref(batch, seed):
+    key = jax.random.PRNGKey(seed)
+    ks, ka = jax.random.split(key)
+    state = jax.random.uniform(ks, (batch, 4), jnp.float32, -1.0, 1.0)
+    action = jax.random.bernoulli(ka, 0.5, (batch,)).astype(jnp.float32)
+    ns, r, d = env_step_cartpole(state, action)
+    ns_ref, r_ref, d_ref = ref.env_step_cartpole_ref(state, action)
+    np.testing.assert_allclose(ns, ns_ref, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(r, r_ref)
+    np.testing.assert_allclose(d, d_ref)
+
+
+def test_env_step_termination_bounds():
+    """States just inside/outside the Gym thresholds terminate correctly."""
+    eps = 1e-3
+    th = float(ref.THETA_THRESHOLD)
+    states = jnp.array(
+        [
+            [2.4 + eps, 0, 0, 0],    # |x| beyond threshold after step -> done
+            [0, 0, th + 0.05, 0],    # theta beyond threshold -> done
+            [0, 0, 0, 0],            # nominal -> alive
+        ],
+        jnp.float32,
+    )
+    actions = jnp.zeros((3,), jnp.float32)
+    _, r, d = env_step_cartpole(states, actions)
+    assert d[0] == 1.0
+    assert d[1] == 1.0
+    assert d[2] == 0.0
+    np.testing.assert_allclose(r, jnp.ones(3))
+
+
+def test_env_step_upright_equilibrium_is_unstable():
+    """theta=0 exactly: gravity term vanishes, only the push acts."""
+    state = jnp.zeros((1, 4), jnp.float32)
+    ns, _, _ = env_step_cartpole(state, jnp.ones((1,), jnp.float32))
+    # Push right: x_dot > 0 after one step, theta_dot < 0 (pole lags left).
+    assert float(ns[0, 1]) > 0.0
+    assert float(ns[0, 3]) < 0.0
+
+
+# ---------------------------------------------------------------- render
+
+
+@settings(max_examples=10, deadline=None)
+@given(batch=st.integers(1, 8), seed=st.integers(0, 2**31 - 1))
+def test_render_matches_ref(batch, seed):
+    key = jax.random.PRNGKey(seed)
+    state = jax.random.uniform(key, (batch, 4), jnp.float32, -1.5, 1.5)
+    got = render_cartpole(state)
+    want = ref.render_cartpole_ref(state)
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+def test_render_centre_scene_geometry():
+    """x=0, theta=0: cart centred, pole vertical, intensities correct."""
+    frame = np.asarray(render_cartpole(jnp.zeros((1, 4), jnp.float32)))[0]
+    from compile.kernels import render as rk
+
+    assert frame.shape == (rk.H, rk.W)
+    # Pole pixel straight above the cart centre.
+    assert frame[rk.CART_Y - 10, rk.W // 2] == rk.POLE_I
+    # Cart body pixel (outside the vertical pole's 1px half-thickness).
+    assert frame[rk.CART_Y, rk.W // 2 + 3] == rk.CART_I
+    # Track line at its row, far from the cart.
+    assert frame[rk.CART_Y + rk.CART_H // 2, 2] == rk.TRACK_I
+    # Background corner empty.
+    assert frame[0, 0] == 0.0
+    # All intensities in [0, 1].
+    assert frame.min() >= 0.0 and frame.max() <= 1.0
+
+
+def test_render_cart_moves_with_x():
+    """Cart pixels shift right as world x increases."""
+    s0 = jnp.array([[0.0, 0, 0, 0]], jnp.float32)
+    s1 = jnp.array([[1.2, 0, 0, 0]], jnp.float32)
+    f0 = np.asarray(render_cartpole(s0))[0]
+    f1 = np.asarray(render_cartpole(s1))[0]
+    c0 = np.argwhere(f0 == 0.6)[:, 1].mean()
+    c1 = np.argwhere(f1 == 0.6)[:, 1].mean()
+    assert c1 > c0 + 5

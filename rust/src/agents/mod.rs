@@ -1,0 +1,18 @@
+//! Learning agents — the algorithms the paper's evaluation trains
+//! (§II-A, §V-B): DQN (Table I) plus a tabular Q-learning and a random
+//! baseline.
+//!
+//! The DQN agent is pure coordination: the replay buffer, the epsilon
+//! schedule, the target-sync cadence and the environment loop live here
+//! in Rust; every gradient flows through the AOT artifact
+//! ([`crate::runtime::DqnExecutor`]).
+
+pub mod dqn;
+pub mod qtable;
+pub mod random;
+pub mod replay;
+
+pub use dqn::{DqnAgent, DqnConfig, TrainOutcome};
+pub use qtable::QTableAgent;
+pub use random::RandomAgent;
+pub use replay::ReplayBuffer;

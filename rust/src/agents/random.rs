@@ -1,0 +1,74 @@
+//! Uniform-random agent — the evaluation floor every learner must beat,
+//! and the workload driver for the Fig.-1 stepping benchmarks.
+
+use crate::core::env::Env;
+use crate::core::rng::Pcg32;
+use crate::core::spaces::Space;
+
+/// Samples uniformly from the action space every step.
+pub struct RandomAgent {
+    space: Space,
+    rng: Pcg32,
+}
+
+impl RandomAgent {
+    pub fn new(space: Space, seed: u64) -> RandomAgent {
+        RandomAgent {
+            space,
+            rng: Pcg32::new(seed, 0xbf58476d1ce4e5b9),
+        }
+    }
+
+    /// For an environment (reads its action space).
+    pub fn for_env<E: Env + ?Sized>(env: &E, seed: u64) -> RandomAgent {
+        RandomAgent::new(env.action_space(), seed)
+    }
+
+    /// Next random action.
+    pub fn act(&mut self) -> crate::core::spaces::Action {
+        self.space.sample(&mut self.rng)
+    }
+
+    /// Run `episodes` episodes, returning the mean return.
+    pub fn evaluate<E: Env + ?Sized>(
+        &mut self,
+        env: &mut E,
+        episodes: u32,
+        cap: u32,
+    ) -> f32 {
+        let mut total = 0.0;
+        for _ in 0..episodes {
+            let (ret, _) =
+                crate::core::env::random_rollout(env, &mut self.rng, cap);
+            total += ret;
+        }
+        total / episodes as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::CartPole;
+
+    #[test]
+    fn acts_within_space() {
+        let mut agent = RandomAgent::new(Space::Discrete { n: 3 }, 0);
+        for _ in 0..100 {
+            match agent.act() {
+                crate::core::spaces::Action::Discrete(i) => assert!(i < 3),
+                _ => panic!(),
+            }
+        }
+    }
+
+    #[test]
+    fn evaluate_returns_mean() {
+        let mut env = CartPole::new();
+        env.seed(0);
+        let mut agent = RandomAgent::for_env(&env, 1);
+        let mean = agent.evaluate(&mut env, 20, 500);
+        // Random CartPole lives ~10-70 steps at 1 reward per step.
+        assert!((5.0..100.0).contains(&mean), "{mean}");
+    }
+}

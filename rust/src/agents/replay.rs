@@ -1,0 +1,157 @@
+//! Experience replay buffer (Mnih et al. 2015, Table-I capacity 50 000).
+//!
+//! Flat ring storage in struct-of-arrays layout so sampling a batch is a
+//! gather straight into the artifact's operand layout — no per-transition
+//! allocation.
+
+use crate::core::rng::Pcg32;
+use crate::runtime::dqn_exec::Batch;
+
+/// Fixed-capacity transition store with uniform sampling.
+pub struct ReplayBuffer {
+    capacity: usize,
+    obs_dim: usize,
+    s: Vec<f32>,
+    a: Vec<i32>,
+    r: Vec<f32>,
+    s2: Vec<f32>,
+    done: Vec<f32>,
+    head: usize,
+    len: usize,
+}
+
+impl ReplayBuffer {
+    pub fn new(capacity: usize, obs_dim: usize) -> ReplayBuffer {
+        ReplayBuffer {
+            capacity,
+            obs_dim,
+            s: vec![0.0; capacity * obs_dim],
+            a: vec![0; capacity],
+            r: vec![0.0; capacity],
+            s2: vec![0.0; capacity * obs_dim],
+            done: vec![0.0; capacity],
+            head: 0,
+            len: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Store one transition (overwrites the oldest when full).
+    ///
+    /// `done` must reflect *termination*, not truncation: a truncated
+    /// episode's final transition bootstraps normally (the TimeLimit
+    /// wrapper keeps the two separate precisely for this).
+    pub fn push(&mut self, s: &[f32], a: usize, r: f32, s2: &[f32], done: bool) {
+        debug_assert_eq!(s.len(), self.obs_dim);
+        debug_assert_eq!(s2.len(), self.obs_dim);
+        let i = self.head;
+        self.s[i * self.obs_dim..(i + 1) * self.obs_dim].copy_from_slice(s);
+        self.a[i] = a as i32;
+        self.r[i] = r;
+        self.s2[i * self.obs_dim..(i + 1) * self.obs_dim].copy_from_slice(s2);
+        self.done[i] = done as u8 as f32;
+        self.head = (self.head + 1) % self.capacity;
+        self.len = (self.len + 1).min(self.capacity);
+    }
+
+    /// Sample `batch.a.len()`-sized batch uniformly into `batch`
+    /// (resizing it to `n`).  Requires `len() >= n`.
+    pub fn sample_into(&self, rng: &mut Pcg32, n: usize, batch: &mut Batch) {
+        assert!(self.len >= n, "buffer has {} < {n} transitions", self.len);
+        batch.s.resize(n * self.obs_dim, 0.0);
+        batch.a.resize(n, 0);
+        batch.r.resize(n, 0.0);
+        batch.s2.resize(n * self.obs_dim, 0.0);
+        batch.done.resize(n, 0.0);
+        for k in 0..n {
+            let i = rng.below(self.len as u32) as usize;
+            batch.s[k * self.obs_dim..(k + 1) * self.obs_dim]
+                .copy_from_slice(&self.s[i * self.obs_dim..(i + 1) * self.obs_dim]);
+            batch.a[k] = self.a[i];
+            batch.r[k] = self.r[i];
+            batch.s2[k * self.obs_dim..(k + 1) * self.obs_dim]
+                .copy_from_slice(&self.s2[i * self.obs_dim..(i + 1) * self.obs_dim]);
+            batch.done[k] = self.done[i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fills_then_wraps() {
+        let mut rb = ReplayBuffer::new(3, 2);
+        assert!(rb.is_empty());
+        for i in 0..5 {
+            let v = i as f32;
+            rb.push(&[v, v], i, v, &[v + 1.0, v + 1.0], false);
+        }
+        assert_eq!(rb.len(), 3);
+        assert_eq!(rb.capacity(), 3);
+        // Oldest two (0, 1) overwritten; remaining actions are {2, 3, 4}.
+        let mut rng = Pcg32::new(0, 1);
+        let mut batch = Batch::default();
+        rb.sample_into(&mut rng, 3, &mut batch);
+        assert!(batch.a.iter().all(|&a| (2..=4).contains(&a)));
+    }
+
+    #[test]
+    fn sample_layout_is_consistent() {
+        let mut rb = ReplayBuffer::new(10, 2);
+        for i in 0..10 {
+            let v = i as f32;
+            rb.push(&[v, -v], i, v * 10.0, &[v + 0.5, -v - 0.5], i % 2 == 0);
+        }
+        let mut rng = Pcg32::new(3, 3);
+        let mut batch = Batch::default();
+        rb.sample_into(&mut rng, 6, &mut batch);
+        for k in 0..6 {
+            let a = batch.a[k] as f32;
+            assert_eq!(batch.s[k * 2], a);
+            assert_eq!(batch.s[k * 2 + 1], -a);
+            assert_eq!(batch.r[k], a * 10.0);
+            assert_eq!(batch.s2[k * 2], a + 0.5);
+            assert_eq!(batch.done[k], (batch.a[k] % 2 == 0) as u8 as f32);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn sampling_more_than_stored_panics() {
+        let rb = ReplayBuffer::new(10, 1);
+        let mut rng = Pcg32::new(0, 1);
+        let mut batch = Batch::default();
+        rb.sample_into(&mut rng, 1, &mut batch);
+    }
+
+    #[test]
+    fn sampling_covers_the_buffer() {
+        let mut rb = ReplayBuffer::new(8, 1);
+        for i in 0..8 {
+            rb.push(&[i as f32], i, 0.0, &[0.0], false);
+        }
+        let mut rng = Pcg32::new(1, 1);
+        let mut batch = Batch::default();
+        let mut seen = [false; 8];
+        for _ in 0..50 {
+            rb.sample_into(&mut rng, 4, &mut batch);
+            for &a in &batch.a {
+                seen[a as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+}

@@ -1,0 +1,267 @@
+//! The experiment configuration surface — JSON files mapped onto the
+//! toolkit's knobs, with Table-I defaults.
+//!
+//! `cairl run --config exp.json` and the benchmark binaries consume
+//! this; `cairl config --show-dqn` prints the Table-I defaults.  (JSON
+//! rather than TOML: the offline build carries its own JSON reader,
+//! `core/json.rs`, and one interchange format is enough.)
+
+use std::path::Path;
+
+use crate::agents::dqn::DqnConfig;
+use crate::core::error::{CairlError, Result};
+use crate::core::json::{self, Value};
+
+/// DQN block — Table I plus the loop knobs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DqnSettings {
+    pub epsilon_start: f32,
+    pub epsilon_final: f32,
+    pub epsilon_decay_steps: u32,
+    pub target_update_freq: u32,
+    pub memory_size: usize,
+    pub learn_start: usize,
+    pub train_every: u32,
+    pub max_steps: u32,
+    pub solve_return: f32,
+    pub solve_window: usize,
+}
+
+impl Default for DqnSettings {
+    fn default() -> Self {
+        let d = DqnConfig::default();
+        DqnSettings {
+            epsilon_start: d.epsilon_start,
+            epsilon_final: d.epsilon_final,
+            epsilon_decay_steps: d.epsilon_decay_steps,
+            target_update_freq: d.target_update_freq,
+            memory_size: d.memory_size,
+            learn_start: d.learn_start,
+            train_every: d.train_every,
+            max_steps: d.max_steps,
+            solve_return: d.solve_return,
+            solve_window: d.solve_window,
+        }
+    }
+}
+
+impl DqnSettings {
+    /// Materialise a [`DqnConfig`] with a seed.
+    pub fn to_config(&self, seed: u64) -> DqnConfig {
+        DqnConfig {
+            epsilon_start: self.epsilon_start,
+            epsilon_final: self.epsilon_final,
+            epsilon_decay_steps: self.epsilon_decay_steps,
+            target_update_freq: self.target_update_freq,
+            memory_size: self.memory_size,
+            learn_start: self.learn_start,
+            train_every: self.train_every,
+            max_steps: self.max_steps,
+            solve_return: self.solve_return,
+            solve_window: self.solve_window,
+            seed,
+            native_act: true,
+        }
+    }
+
+    /// Overlay fields present in a JSON object.
+    fn apply(&mut self, v: &Value) {
+        let f = |key: &str| v.get(key).and_then(Value::as_f64);
+        if let Some(x) = f("epsilon_start") {
+            self.epsilon_start = x as f32;
+        }
+        if let Some(x) = f("epsilon_final") {
+            self.epsilon_final = x as f32;
+        }
+        if let Some(x) = f("epsilon_decay_steps") {
+            self.epsilon_decay_steps = x as u32;
+        }
+        if let Some(x) = f("target_update_freq") {
+            self.target_update_freq = x as u32;
+        }
+        if let Some(x) = f("memory_size") {
+            self.memory_size = x as usize;
+        }
+        if let Some(x) = f("learn_start") {
+            self.learn_start = x as usize;
+        }
+        if let Some(x) = f("train_every") {
+            self.train_every = x as u32;
+        }
+        if let Some(x) = f("max_steps") {
+            self.max_steps = x as u32;
+        }
+        if let Some(x) = f("solve_return") {
+            self.solve_return = x as f32;
+        }
+        if let Some(x) = f("solve_window") {
+            self.solve_window = x as usize;
+        }
+    }
+
+    /// Table-I rendering (hyperparameter, value).
+    pub fn table_one(&self) -> Vec<(&'static str, String)> {
+        vec![
+            ("Discount", "0.99".into()),
+            ("Units", "32, 32".into()),
+            ("Activation", "elu".into()),
+            ("Optimizer", "Adam".into()),
+            ("Loss Function", "Huber".into()),
+            ("Batch Size", "32".into()),
+            ("Learning Rate", "3e-4".into()),
+            ("Target Update Freq", self.target_update_freq.to_string()),
+            ("Memory Size", self.memory_size.to_string()),
+            ("Exploration Start", format!("{}", self.epsilon_start)),
+            ("Exploration Final", format!("{}", self.epsilon_final)),
+        ]
+    }
+}
+
+/// A full experiment description.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExperimentConfig {
+    /// Registry id, e.g. "CartPole-v1".
+    pub env: String,
+    /// "dqn", "qtable" or "random".
+    pub agent: String,
+    /// Independent trials (paper: 100 for Fig. 1/2, 10 for Fig. 3).
+    pub trials: u32,
+    /// Base seed; trial `i` uses `seed + i`.
+    pub seed: u64,
+    /// Render each step through the software renderer.
+    pub render: bool,
+    /// Output directory for CSV results.
+    pub out_dir: String,
+    pub dqn: DqnSettings,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            env: "CartPole-v1".into(),
+            agent: "random".into(),
+            trials: 1,
+            seed: 0,
+            render: false,
+            out_dir: "results".into(),
+            dqn: DqnSettings::default(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Parse a JSON file.
+    pub fn load(path: &Path) -> Result<ExperimentConfig> {
+        let text = std::fs::read_to_string(path)?;
+        Self::parse(&text)
+            .map_err(|e| CairlError::Config(format!("{}: {e}", path.display())))
+    }
+
+    /// Parse from a JSON string; missing fields keep defaults.
+    pub fn parse(text: &str) -> Result<ExperimentConfig> {
+        let v = json::parse(text)?;
+        if v.as_object().is_none() {
+            return Err(CairlError::Config("config must be a JSON object".into()));
+        }
+        let mut cfg = ExperimentConfig::default();
+        if let Some(s) = v.get("env").and_then(Value::as_str) {
+            cfg.env = s.to_string();
+        }
+        if let Some(s) = v.get("agent").and_then(Value::as_str) {
+            cfg.agent = s.to_string();
+        }
+        if let Some(x) = v.get("trials").and_then(Value::as_f64) {
+            cfg.trials = x as u32;
+        }
+        if let Some(x) = v.get("seed").and_then(Value::as_f64) {
+            cfg.seed = x as u64;
+        }
+        if let Some(b) = v.get("render").and_then(Value::as_bool) {
+            cfg.render = b;
+        }
+        if let Some(s) = v.get("out_dir").and_then(Value::as_str) {
+            cfg.out_dir = s.to_string();
+        }
+        if let Some(d) = v.get("dqn") {
+            cfg.dqn.apply(d);
+        }
+        Ok(cfg)
+    }
+
+    /// Serialise (pretty enough for `cairl config`).
+    pub fn render(&self) -> String {
+        format!(
+            "{{\n  \"env\": \"{}\",\n  \"agent\": \"{}\",\n  \"trials\": {},\n  \"seed\": {},\n  \"render\": {},\n  \"out_dir\": \"{}\",\n  \"dqn\": {{\n    \"epsilon_start\": {},\n    \"epsilon_final\": {},\n    \"epsilon_decay_steps\": {},\n    \"target_update_freq\": {},\n    \"memory_size\": {},\n    \"learn_start\": {},\n    \"train_every\": {},\n    \"max_steps\": {},\n    \"solve_return\": {},\n    \"solve_window\": {}\n  }}\n}}",
+            self.env,
+            self.agent,
+            self.trials,
+            self.seed,
+            self.render,
+            self.out_dir,
+            self.dqn.epsilon_start,
+            self.dqn.epsilon_final,
+            self.dqn.epsilon_decay_steps,
+            self.dqn.target_update_freq,
+            self.dqn.memory_size,
+            self.dqn.learn_start,
+            self.dqn.train_every,
+            self.dqn.max_steps,
+            self.dqn.solve_return,
+            self.dqn.solve_window,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_table_one() {
+        let s = DqnSettings::default();
+        assert_eq!(s.memory_size, 50_000);
+        assert_eq!(s.target_update_freq, 150);
+        let rows = s.table_one();
+        assert!(rows.iter().any(|(k, v)| *k == "Batch Size" && v == "32"));
+        assert!(rows.iter().any(|(k, v)| *k == "Learning Rate" && v == "3e-4"));
+        assert_eq!(rows.len(), 11); // Table I has 11 rows
+    }
+
+    #[test]
+    fn parses_partial_json() {
+        let cfg = ExperimentConfig::parse(
+            r#"{"env": "Acrobot-v1", "agent": "dqn", "trials": 5, "dqn": {"max_steps": 1000}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.env, "Acrobot-v1");
+        assert_eq!(cfg.trials, 5);
+        assert_eq!(cfg.dqn.max_steps, 1000);
+        // Unspecified fields keep defaults.
+        assert_eq!(cfg.dqn.memory_size, 50_000);
+        assert_eq!(cfg.seed, 0);
+    }
+
+    #[test]
+    fn bad_json_is_config_error() {
+        assert!(matches!(
+            ExperimentConfig::parse("env = ["),
+            Err(CairlError::Config(_))
+        ));
+        assert!(ExperimentConfig::parse("[1,2]").is_err());
+    }
+
+    #[test]
+    fn to_config_carries_seed() {
+        let s = DqnSettings::default();
+        let c = s.to_config(42);
+        assert_eq!(c.seed, 42);
+        assert_eq!(c.memory_size, s.memory_size);
+    }
+
+    #[test]
+    fn roundtrips_through_render() {
+        let cfg = ExperimentConfig::default();
+        let back = ExperimentConfig::parse(&cfg.render()).unwrap();
+        assert_eq!(back, cfg);
+    }
+}

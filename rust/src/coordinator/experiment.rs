@@ -1,0 +1,183 @@
+//! Multi-trial experiment orchestration — the paper's measurement
+//! protocol ("averaged over 100 consecutive trials", fixed seeds per
+//! trial) as a reusable harness.
+//!
+//! The benchmark binaries build on these runners so every figure uses
+//! identical timing methodology.
+
+use std::time::{Duration, Instant};
+
+use crate::core::env::{DynEnv, Env};
+use crate::core::rng::Pcg32;
+use crate::render::{Framebuffer, HardwareSim};
+use crate::tooling::stats::Summary;
+
+/// Which rendering path a stepping workload exercises (Fig. 1's rows).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RenderMode {
+    /// No rendering (the "console" rows).
+    Console,
+    /// Software rendering into a reusable framebuffer (CaiRL's path).
+    Software,
+    /// Software raster + simulated GPU readback cost (the Gym path).
+    SimulatedHardware,
+}
+
+/// Timing result of one stepping workload.
+#[derive(Clone, Debug)]
+pub struct SteppingResult {
+    pub steps: u64,
+    pub episodes: u64,
+    pub elapsed: Duration,
+    /// Steps per second.
+    pub throughput: f64,
+}
+
+/// Run `steps` random-action steps on `env` (auto-reset), optionally
+/// rendering every step — the Fig.-1 workload.
+pub fn run_stepping_workload(
+    env: &mut DynEnv,
+    steps: u64,
+    seed: u64,
+    mode: RenderMode,
+) -> SteppingResult {
+    let mut rng = Pcg32::new(seed, 17);
+    let space = env.action_space();
+    let mut obs = vec![0.0f32; env.obs_dim()];
+    let mut fb = Framebuffer::standard();
+    let mut hw = HardwareSim::default();
+    env.seed(seed);
+    env.reset_into(&mut obs);
+    let mut episodes = 0u64;
+    let start = Instant::now();
+    for _ in 0..steps {
+        let a = space.sample(&mut rng);
+        let t = env.step_into(&a, &mut obs);
+        match mode {
+            RenderMode::Console => {}
+            RenderMode::Software => env.render(&mut fb),
+            RenderMode::SimulatedHardware => {
+                env.render(&mut fb);
+                hw.readback(&fb);
+            }
+        }
+        if t.done || t.truncated {
+            episodes += 1;
+            env.reset_into(&mut obs);
+        }
+    }
+    let elapsed = start.elapsed();
+    SteppingResult {
+        steps,
+        episodes,
+        elapsed,
+        throughput: steps as f64 / elapsed.as_secs_f64(),
+    }
+}
+
+/// Repeat a stepping workload over `trials` trials (trial `i` seeded
+/// `base_seed + i`), returning per-trial elapsed seconds.
+pub fn stepping_trials(
+    make_env: &dyn Fn() -> DynEnv,
+    trials: u32,
+    steps_per_trial: u64,
+    base_seed: u64,
+    mode: RenderMode,
+) -> Vec<f64> {
+    (0..trials)
+        .map(|i| {
+            let mut env = make_env();
+            run_stepping_workload(&mut env, steps_per_trial, base_seed + i as u64, mode)
+                .elapsed
+                .as_secs_f64()
+        })
+        .collect()
+}
+
+/// A named comparison row (CaiRL vs baseline) with the paper's ratio.
+#[derive(Clone, Debug)]
+pub struct ComparisonRow {
+    pub label: String,
+    pub cairl: Summary,
+    pub baseline: Summary,
+    pub speedup: f64,
+}
+
+impl ComparisonRow {
+    pub fn new(label: &str, cairl: &[f64], baseline: &[f64]) -> ComparisonRow {
+        let c = Summary::of(cairl);
+        let b = Summary::of(baseline);
+        ComparisonRow {
+            label: label.to_string(),
+            speedup: b.mean / c.mean,
+            cairl: c,
+            baseline: b,
+        }
+    }
+
+    /// Fig.-1-style line.
+    pub fn render(&self) -> String {
+        format!(
+            "{:<28} cairl {:>10.4}s  baseline {:>10.4}s  speedup {:>8.1}x",
+            self.label, self.cairl.mean, self.baseline.mean, self.speedup
+        )
+    }
+}
+
+/// Generic timed trial runner: calls `trial(i)` for each trial and
+/// summarises wall-clock seconds.
+pub fn timed_trials(trials: u32, mut trial: impl FnMut(u32)) -> Summary {
+    let times: Vec<f64> = (0..trials)
+        .map(|i| {
+            let t0 = Instant::now();
+            trial(i);
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    Summary::of(&times)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::registry::make;
+
+    #[test]
+    fn stepping_workload_counts_steps_and_episodes() {
+        let mut env = make("CartPole-v1").unwrap();
+        let r = run_stepping_workload(&mut env, 2_000, 0, RenderMode::Console);
+        assert_eq!(r.steps, 2_000);
+        assert!(r.episodes > 10, "random cartpole ends every ~20-40 steps");
+        assert!(r.throughput > 1000.0);
+    }
+
+    #[test]
+    fn software_render_mode_runs() {
+        let mut env = make("CartPole-v1").unwrap();
+        let r = run_stepping_workload(&mut env, 200, 0, RenderMode::Software);
+        assert_eq!(r.steps, 200);
+    }
+
+    #[test]
+    fn trials_are_seed_varied_but_comparable() {
+        let make_env = || make("CartPole-v1").unwrap();
+        let times = stepping_trials(&make_env, 3, 1_000, 0, RenderMode::Console);
+        assert_eq!(times.len(), 3);
+        assert!(times.iter().all(|&t| t > 0.0));
+    }
+
+    #[test]
+    fn comparison_row_computes_speedup() {
+        let row = ComparisonRow::new("test", &[1.0, 1.0], &[5.0, 5.0]);
+        assert!((row.speedup - 5.0).abs() < 1e-12);
+        assert!(row.render().contains("5.0x"));
+    }
+
+    #[test]
+    fn timed_trials_runs_each_once() {
+        let mut count = 0;
+        let s = timed_trials(4, |_| count += 1);
+        assert_eq!(count, 4);
+        assert_eq!(s.n, 4);
+    }
+}

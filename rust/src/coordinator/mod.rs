@@ -1,0 +1,14 @@
+//! Experiment coordination — registry, config system, vectorised
+//! execution and trial orchestration.
+//!
+//! This is the toolkit's L3 "coordinator" in the three-layer architecture:
+//! it owns env construction ([`registry`]), the experiment configuration
+//! surface ([`config`], Table I defaults), batched environment execution
+//! ([`vec_env`]) and multi-trial experiment runs with stopping criteria
+//! ([`experiment`]) — the machinery behind every figure and table
+//! reproduction.
+
+pub mod config;
+pub mod experiment;
+pub mod registry;
+pub mod vec_env;

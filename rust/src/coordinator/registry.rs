@@ -1,0 +1,190 @@
+//! The environment registry behind [`make`] — the paper's
+//! `cairl.make("CartPole-v1")` Gym-compatible entry point (Listing 2).
+//!
+//! Native envs, the interpreted-script baseline envs (`Script/...`), the
+//! flash-runner games (`Flash/...`) and the puzzle runtime (`Puzzle/...`)
+//! all register here, giving one uniform id namespace across runners —
+//! the paper's "unified API for all environments" (§III-A Runners).
+
+use crate::core::env::DynEnv;
+use crate::core::error::{CairlError, Result};
+use crate::envs::{Acrobot, CartPole, GridRts, LineWars, MountainCar, Pendulum};
+use crate::flash;
+use crate::puzzles;
+use crate::script;
+use crate::wrappers::TimeLimit;
+
+/// One registry row: id, docstring, constructor.
+struct Entry {
+    id: &'static str,
+    summary: &'static str,
+    build: fn() -> DynEnv,
+}
+
+/// The static registry table.  Gym-standard time limits are part of the
+/// registered id (CartPole-v1 is *defined* as 500-step-capped), matching
+/// Gym's registration semantics.
+fn table() -> &'static [Entry] {
+    &[
+        Entry {
+            id: "CartPole-v1",
+            summary: "native cart-pole balancing (500-step limit)",
+            build: || Box::new(TimeLimit::new(CartPole::new(), 500)),
+        },
+        Entry {
+            id: "MountainCar-v0",
+            summary: "native mountain car (200-step limit)",
+            build: || Box::new(TimeLimit::new(MountainCar::new(), 200)),
+        },
+        Entry {
+            id: "Acrobot-v1",
+            summary: "native acrobot swing-up (500-step limit)",
+            build: || Box::new(TimeLimit::new(Acrobot::new(), 500)),
+        },
+        Entry {
+            id: "Pendulum-v1",
+            summary: "native pendulum swing-up, continuous torque (200-step limit)",
+            build: || Box::new(TimeLimit::new(Pendulum::new(), 200)),
+        },
+        Entry {
+            id: "PendulumDiscrete-v1",
+            summary: "pendulum with 5 discrete torque levels for DQN (200-step limit)",
+            build: || Box::new(TimeLimit::new(Pendulum::discrete(), 200)),
+        },
+        Entry {
+            id: "LineWars-v0",
+            summary: "Deep-Line-Wars-class lane strategy vs scripted opponent",
+            build: || Box::new(LineWars::new()),
+        },
+        Entry {
+            id: "GridRTS-v0",
+            summary: "MicroRTS-class grid strategy vs scripted opponent",
+            build: || Box::new(GridRts::new()),
+        },
+        Entry {
+            id: "Script/CartPole-v1",
+            summary: "cart-pole on the interpreted MiniPy runner (Gym baseline surrogate)",
+            build: || Box::new(TimeLimit::new(script::envs::cartpole(), 500)),
+        },
+        Entry {
+            id: "Script/MountainCar-v0",
+            summary: "mountain car on the interpreted MiniPy runner",
+            build: || Box::new(TimeLimit::new(script::envs::mountain_car(), 200)),
+        },
+        Entry {
+            id: "Script/Acrobot-v1",
+            summary: "acrobot on the interpreted MiniPy runner",
+            build: || Box::new(TimeLimit::new(script::envs::acrobot(), 500)),
+        },
+        Entry {
+            id: "Script/Pendulum-v1",
+            summary: "discrete-torque pendulum on the interpreted MiniPy runner",
+            build: || Box::new(TimeLimit::new(script::envs::pendulum(), 200)),
+        },
+        Entry {
+            id: "Flash/Multitask-v0",
+            summary: "concurrent mini-games on the ASVM flash runner (paper SS IV-C)",
+            build: || Box::new(flash::games::multitask()),
+        },
+        Entry {
+            id: "Flash/Pong-v0",
+            summary: "pong on the ASVM flash runner",
+            build: || Box::new(flash::games::pong()),
+        },
+        Entry {
+            id: "Flash/Dodge-v0",
+            summary: "projectile dodging on the ASVM flash runner",
+            build: || Box::new(flash::games::dodge()),
+        },
+        Entry {
+            id: "Flash/X1337Shooter-v0",
+            summary: "X1337 space shooter on the ASVM flash runner (paper SS III)",
+            build: || Box::new(flash::games::shooter()),
+        },
+        Entry {
+            id: "Pixel/CartPole-v1",
+            summary: "cart-pole with 16x16 raw-pixel observations (software render)",
+            build: || {
+                Box::new(crate::wrappers::PixelObs::new(
+                    TimeLimit::new(CartPole::new(), 500),
+                    16,
+                ))
+            },
+        },
+        Entry {
+            id: "Puzzle/LightsOut-v0",
+            summary: "5x5 lights-out puzzle with heuristic solver",
+            build: || Box::new(puzzles::LightsOut::env(5)),
+        },
+        Entry {
+            id: "Puzzle/Fifteen-v0",
+            summary: "4x4 sliding-tile puzzle with heuristic solver",
+            build: || Box::new(puzzles::Fifteen::env(4)),
+        },
+        Entry {
+            id: "Puzzle/Nonogram-v0",
+            summary: "5x5 nonogram with line-logic solver",
+            build: || Box::new(puzzles::Nonogram::env()),
+        },
+    ]
+}
+
+/// Construct an environment by id — the Gym-compatible dynamic API.
+///
+/// ```no_run
+/// let mut env = cairl::make("CartPole-v1").unwrap();
+/// let _obs = env.reset();
+/// ```
+pub fn make(id: &str) -> Result<DynEnv> {
+    table()
+        .iter()
+        .find(|e| e.id == id)
+        .map(|e| (e.build)())
+        .ok_or_else(|| CairlError::UnknownEnv(id.to_string()))
+}
+
+/// All registered ids with one-line summaries, registration order.
+pub fn list_envs() -> Vec<(&'static str, &'static str)> {
+    table().iter().map(|e| (e.id, e.summary)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::env::Env;
+
+    #[test]
+    fn make_unknown_is_an_error() {
+        match make("NoSuchEnv-v0") {
+            Err(err) => assert!(matches!(err, CairlError::UnknownEnv(_))),
+            Ok(_) => panic!("unknown env id must fail"),
+        }
+    }
+
+    #[test]
+    fn make_every_registered_env_and_reset() {
+        for (id, _) in list_envs() {
+            let mut env = make(id).unwrap_or_else(|e| panic!("{id}: {e}"));
+            let obs = env.reset();
+            assert_eq!(obs.len(), env.obs_dim(), "{id}");
+            assert!(env.obs_dim() > 0, "{id}");
+        }
+    }
+
+    #[test]
+    fn registered_ids_are_unique() {
+        let ids: Vec<_> = list_envs().iter().map(|(id, _)| *id).collect();
+        let mut dedup = ids.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(ids.len(), dedup.len());
+    }
+
+    #[test]
+    fn cartpole_v1_has_gym_semantics() {
+        let mut env = make("CartPole-v1").unwrap();
+        assert_eq!(env.obs_dim(), 4);
+        let obs = env.reset();
+        assert!(obs.iter().all(|v| v.abs() <= 0.05));
+    }
+}

@@ -1,0 +1,296 @@
+//! The [`Env`] trait — the paper's AI-Gym-compatible environment
+//! interface (§III-B, Listings 1/2), with a zero-allocation hot path.
+//!
+//! Two calling conventions:
+//!
+//! * **Hot path** — [`Env::reset_into`] / [`Env::step_into`] write the
+//!   observation into a caller-owned buffer and return a [`Transition`]
+//!   by value.  No allocation per step; this is what the benchmarks and
+//!   the DQN training loop use, and it is where the paper's "orders of
+//!   magnitude" stepping advantage is measured.
+//! * **Gym-compatible** — [`Env::reset`] / [`Env::step`] allocate a fresh
+//!   observation `Vec` and return a [`Step`], matching the
+//!   `s1, r, term, info = e.step(a)` shape of the paper's Listing 2.
+//!
+//! Static composition (paper Listing 1) works because wrappers are
+//! generic structs implementing `Env` over any `E: Env`:
+//! `Flatten<TimeLimit<CartPole>>` monomorphises to straight-line code.
+//! The dynamic registry ([`crate::make`]) erases to [`DynEnv`] instead.
+
+use crate::core::rng::Pcg32;
+use crate::core::spaces::{Action, Space};
+use crate::render::Framebuffer;
+
+/// Per-step result of the no-allocation hot path.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Transition {
+    /// Scalar reward for this step.
+    pub reward: f32,
+    /// Environment reached a terminal state.
+    pub done: bool,
+    /// Episode ended by a wrapper limit (e.g. [`TimeLimit`]
+    /// (crate::wrappers::TimeLimit)), not by the dynamics.  `truncated`
+    /// implies `done`.
+    pub truncated: bool,
+}
+
+impl Transition {
+    /// A live (non-terminal) transition with the given reward.
+    #[inline]
+    pub fn live(reward: f32) -> Self {
+        Transition { reward, done: false, truncated: false }
+    }
+
+    /// A terminal transition with the given reward.
+    #[inline]
+    pub fn terminal(reward: f32) -> Self {
+        Transition { reward, done: true, truncated: false }
+    }
+}
+
+/// Statistics attached to the final step of an episode by
+/// [`RecordEpisodeStatistics`](crate::wrappers::RecordEpisodeStatistics).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EpisodeStats {
+    /// Undiscounted return of the finished episode.
+    pub ret: f32,
+    /// Number of steps in the finished episode.
+    pub len: u32,
+}
+
+/// Allocating step result — the Gym-shaped `(s1, r, term, info)` tuple.
+#[derive(Clone, Debug)]
+pub struct Step {
+    /// Next observation (flattened f32s).
+    pub obs: Vec<f32>,
+    /// Scalar reward.
+    pub reward: f32,
+    /// Terminal flag (includes truncation).
+    pub done: bool,
+    /// True when the episode ended via a wrapper limit.
+    pub truncated: bool,
+    /// Episode statistics, present on the last step when a
+    /// stats-recording wrapper is in the stack.
+    pub episode: Option<EpisodeStats>,
+}
+
+/// A reinforcement-learning environment.
+///
+/// Implementations must be deterministic given [`Env::seed`]: the same
+/// seed and action sequence must reproduce the same trajectory (the
+/// paper's fixed-seed experiment protocol relies on this, and the
+/// cross-runner tests compare native vs scripted trajectories).
+pub trait Env {
+    /// Stable identifier, e.g. `"CartPole-v1"`.
+    fn id(&self) -> String;
+
+    /// Observation space description.
+    fn observation_space(&self) -> Space;
+
+    /// Action space description.
+    fn action_space(&self) -> Space;
+
+    /// Flattened observation length.  Hot-path callers size their buffer
+    /// with this once, outside the loop.
+    fn obs_dim(&self) -> usize {
+        self.observation_space().flat_dim()
+    }
+
+    /// Re-seed the environment's RNG (affects subsequent `reset`s).
+    fn seed(&mut self, seed: u64);
+
+    /// Start a new episode, writing the initial observation into `obs`
+    /// (`obs.len() == self.obs_dim()`).
+    fn reset_into(&mut self, obs: &mut [f32]);
+
+    /// Advance one step, writing the next observation into `obs`.
+    ///
+    /// Calling `step_into` on a finished episode is a logic error; native
+    /// envs debug-assert, matching Gym's warning semantics.
+    fn step_into(&mut self, action: &Action, obs: &mut [f32]) -> Transition;
+
+    /// Paint the current state into a framebuffer (software rendering,
+    /// paper §II-B).  Default: leave the buffer untouched (console-only
+    /// environments).
+    fn render(&self, fb: &mut Framebuffer) {
+        let _ = fb;
+    }
+
+    /// Gym-compatible allocating reset.
+    fn reset(&mut self) -> Vec<f32> {
+        let mut obs = vec![0.0; self.obs_dim()];
+        self.reset_into(&mut obs);
+        obs
+    }
+
+    /// Gym-compatible allocating step.
+    fn step(&mut self, action: &Action) -> Step {
+        let mut obs = vec![0.0; self.obs_dim()];
+        let t = self.step_into(action, &mut obs);
+        Step {
+            obs,
+            reward: t.reward,
+            done: t.done || t.truncated,
+            truncated: t.truncated,
+            episode: None,
+        }
+    }
+}
+
+/// Boxed, type-erased environment as returned by [`crate::make`].
+pub type DynEnv = Box<dyn Env + Send>;
+
+// Box<E: Env> forwards, so wrappers compose over DynEnv too
+// (`TimeLimit::new(make("...")?, 200)` works).
+impl<E: Env + ?Sized> Env for Box<E> {
+    fn id(&self) -> String {
+        (**self).id()
+    }
+    fn observation_space(&self) -> Space {
+        (**self).observation_space()
+    }
+    fn action_space(&self) -> Space {
+        (**self).action_space()
+    }
+    fn obs_dim(&self) -> usize {
+        (**self).obs_dim()
+    }
+    fn seed(&mut self, seed: u64) {
+        (**self).seed(seed)
+    }
+    fn reset_into(&mut self, obs: &mut [f32]) {
+        (**self).reset_into(obs)
+    }
+    fn step_into(&mut self, action: &Action, obs: &mut [f32]) -> Transition {
+        (**self).step_into(action, obs)
+    }
+    fn render(&self, fb: &mut Framebuffer) {
+        (**self).render(fb)
+    }
+    fn reset(&mut self) -> Vec<f32> {
+        (**self).reset()
+    }
+    fn step(&mut self, action: &Action) -> Step {
+        (**self).step(action)
+    }
+}
+
+/// Run one episode with uniform-random actions, returning (return, length).
+///
+/// Shared by benchmarks, smoke tests and the CLI `run` subcommand; uses
+/// the hot path (caller-invisible, zero alloc per step).
+pub fn random_rollout<E: Env + ?Sized>(
+    env: &mut E,
+    rng: &mut Pcg32,
+    max_steps: u32,
+) -> (f32, u32) {
+    let space = env.action_space();
+    let mut obs = vec![0.0; env.obs_dim()];
+    env.reset_into(&mut obs);
+    let mut ret = 0.0;
+    let mut len = 0;
+    while len < max_steps {
+        let a = space.sample(rng);
+        let t = env.step_into(&a, &mut obs);
+        ret += t.reward;
+        len += 1;
+        if t.done || t.truncated {
+            break;
+        }
+    }
+    (ret, len)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimal env: counts to 3 then terminates, obs = [count].
+    struct Counter {
+        count: u32,
+    }
+
+    impl Env for Counter {
+        fn id(&self) -> String {
+            "Counter-v0".into()
+        }
+        fn observation_space(&self) -> Space {
+            Space::box1(vec![0.0], vec![3.0])
+        }
+        fn action_space(&self) -> Space {
+            Space::Discrete { n: 2 }
+        }
+        fn seed(&mut self, _seed: u64) {}
+        fn reset_into(&mut self, obs: &mut [f32]) {
+            self.count = 0;
+            obs[0] = 0.0;
+        }
+        fn step_into(&mut self, _a: &Action, obs: &mut [f32]) -> Transition {
+            self.count += 1;
+            obs[0] = self.count as f32;
+            if self.count >= 3 {
+                Transition::terminal(1.0)
+            } else {
+                Transition::live(0.0)
+            }
+        }
+    }
+
+    #[test]
+    fn allocating_step_matches_hot_path() {
+        let mut env = Counter { count: 0 };
+        env.reset();
+        let s = env.step(&Action::Discrete(0));
+        assert_eq!(s.obs, vec![1.0]);
+        assert!(!s.done);
+        let _ = env.step(&Action::Discrete(0));
+        let s3 = env.step(&Action::Discrete(0));
+        assert!(s3.done);
+        assert_eq!(s3.reward, 1.0);
+    }
+
+    #[test]
+    fn boxed_env_forwards() {
+        let mut env: DynEnv = Box::new(Counter { count: 0 });
+        assert_eq!(env.id(), "Counter-v0");
+        assert_eq!(env.obs_dim(), 1);
+        let obs = env.reset();
+        assert_eq!(obs, vec![0.0]);
+    }
+
+    #[test]
+    fn random_rollout_terminates() {
+        let mut env = Counter { count: 0 };
+        let mut rng = Pcg32::new(0, 1);
+        let (ret, len) = random_rollout(&mut env, &mut rng, 100);
+        assert_eq!(len, 3);
+        assert_eq!(ret, 1.0);
+    }
+
+    #[test]
+    fn random_rollout_respects_cap() {
+        struct Forever;
+        impl Env for Forever {
+            fn id(&self) -> String {
+                "Forever-v0".into()
+            }
+            fn observation_space(&self) -> Space {
+                Space::box1(vec![0.0], vec![1.0])
+            }
+            fn action_space(&self) -> Space {
+                Space::Discrete { n: 1 }
+            }
+            fn seed(&mut self, _s: u64) {}
+            fn reset_into(&mut self, obs: &mut [f32]) {
+                obs[0] = 0.0;
+            }
+            fn step_into(&mut self, _a: &Action, _o: &mut [f32]) -> Transition {
+                Transition::live(1.0)
+            }
+        }
+        let mut rng = Pcg32::new(0, 1);
+        let (ret, len) = random_rollout(&mut Forever, &mut rng, 50);
+        assert_eq!(len, 50);
+        assert_eq!(ret, 50.0);
+    }
+}

@@ -1,0 +1,70 @@
+//! Toolkit-wide error type.
+//!
+//! One small enum instead of a boxed-trait soup: the hot path never
+//! constructs errors, so ergonomics beat extensibility here.
+
+use std::fmt;
+
+/// All the ways a CaiRL call can fail.
+#[derive(Debug)]
+pub enum CairlError {
+    /// `make()` was called with an id that no runner registered.
+    UnknownEnv(String),
+    /// An action outside the environment's action space.
+    InvalidAction(String),
+    /// Artifact loading / PJRT failures (runtime module).
+    Runtime(String),
+    /// Script runner: lexer/parser/interpreter errors with location.
+    Script(String),
+    /// Flash runner: assembler or VM trap.
+    Vm(String),
+    /// Configuration file problems.
+    Config(String),
+    /// Underlying I/O.
+    Io(std::io::Error),
+}
+
+impl fmt::Display for CairlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CairlError::UnknownEnv(id) => {
+                write!(f, "unknown environment id {id:?} (see `cairl list-envs`)")
+            }
+            CairlError::InvalidAction(m) => write!(f, "invalid action: {m}"),
+            CairlError::Runtime(m) => write!(f, "runtime error: {m}"),
+            CairlError::Script(m) => write!(f, "script error: {m}"),
+            CairlError::Vm(m) => write!(f, "vm trap: {m}"),
+            CairlError::Config(m) => write!(f, "config error: {m}"),
+            CairlError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for CairlError {}
+
+impl From<std::io::Error> for CairlError {
+    fn from(e: std::io::Error) -> Self {
+        CairlError::Io(e)
+    }
+}
+
+/// Toolkit-wide result alias.
+pub type Result<T> = std::result::Result<T, CairlError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_mentions_env_id() {
+        let e = CairlError::UnknownEnv("NoSuchEnv-v0".into());
+        assert!(e.to_string().contains("NoSuchEnv-v0"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: CairlError = io.into();
+        assert!(matches!(e, CairlError::Io(_)));
+    }
+}

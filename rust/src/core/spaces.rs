@@ -1,0 +1,197 @@
+//! Observation/action spaces — the paper's §III-A "Spaces" module.
+//!
+//! Mirrors AI Gym's two workhorse types: `Box` (n-dimensional bounded
+//! f32 tensor) and `Discrete` (integers `0..n`).  Sampling uses the
+//! toolkit [`Pcg32`](crate::core::rng::Pcg32) so trajectories are
+//! reproducible across runs and runners.
+
+use crate::core::rng::Pcg32;
+
+/// An action as passed to [`Env::step`](crate::core::env::Env::step).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Action {
+    /// Index into a [`Space::Discrete`].
+    Discrete(usize),
+    /// Vector for a [`Space::Box`] action space.
+    Continuous(Vec<f32>),
+}
+
+impl Action {
+    /// The discrete index, panicking on a continuous action.  Native envs
+    /// use this in the hot path; they validate once via
+    /// [`Space::contains`] in debug builds.
+    #[inline]
+    pub fn index(&self) -> usize {
+        match self {
+            Action::Discrete(i) => *i,
+            Action::Continuous(_) => {
+                panic!("expected a discrete action, got a continuous one")
+            }
+        }
+    }
+
+    /// The continuous vector, panicking on a discrete action.
+    #[inline]
+    pub fn vector(&self) -> &[f32] {
+        match self {
+            Action::Continuous(v) => v,
+            Action::Discrete(_) => {
+                panic!("expected a continuous action, got a discrete one")
+            }
+        }
+    }
+}
+
+/// Shape description of an observation or action space.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Space {
+    /// Bounded f32 tensor.  `low`/`high` are element-wise bounds with
+    /// `low.len() == high.len() == shape.iter().product()`.
+    Box {
+        low: Vec<f32>,
+        high: Vec<f32>,
+        shape: Vec<usize>,
+    },
+    /// Integers `0..n`.
+    Discrete { n: usize },
+}
+
+impl Space {
+    /// Convenience constructor for a symmetric 1-D box `[-bound, bound]^dim`.
+    pub fn symmetric_box(bound: f32, dim: usize) -> Space {
+        Space::Box {
+            low: vec![-bound; dim],
+            high: vec![bound; dim],
+            shape: vec![dim],
+        }
+    }
+
+    /// Box with per-element bounds and a 1-D shape.
+    pub fn box1(low: Vec<f32>, high: Vec<f32>) -> Space {
+        assert_eq!(low.len(), high.len());
+        let d = low.len();
+        Space::Box {
+            low,
+            high,
+            shape: vec![d],
+        }
+    }
+
+    /// Total number of scalar elements.
+    pub fn flat_dim(&self) -> usize {
+        match self {
+            Space::Box { shape, .. } => shape.iter().product(),
+            Space::Discrete { .. } => 1,
+        }
+    }
+
+    /// The shape vector (`[1]` for Discrete, matching Gym's convention of
+    /// scalar discrete observations).
+    pub fn shape(&self) -> Vec<usize> {
+        match self {
+            Space::Box { shape, .. } => shape.clone(),
+            Space::Discrete { .. } => vec![1],
+        }
+    }
+
+    /// Draw a uniform random element — `env.action_space().sample(rng)` is
+    /// the paper's Listing-1/2 exploration idiom.
+    ///
+    /// Unbounded box dimensions (|bound| >= f32::MAX) sample standard
+    /// normal, matching Gym's behaviour.
+    pub fn sample(&self, rng: &mut Pcg32) -> Action {
+        match self {
+            Space::Discrete { n } => Action::Discrete(rng.below(*n as u32) as usize),
+            Space::Box { low, high, .. } => {
+                let v = low
+                    .iter()
+                    .zip(high)
+                    .map(|(&lo, &hi)| {
+                        if lo <= f32::MIN || hi >= f32::MAX {
+                            rng.normal()
+                        } else {
+                            rng.uniform(lo, hi)
+                        }
+                    })
+                    .collect();
+                Action::Continuous(v)
+            }
+        }
+    }
+
+    /// Membership test (used by debug assertions and the validation
+    /// wrapper).
+    pub fn contains(&self, a: &Action) -> bool {
+        match (self, a) {
+            (Space::Discrete { n }, Action::Discrete(i)) => i < n,
+            (Space::Box { low, high, .. }, Action::Continuous(v)) => {
+                v.len() == low.len()
+                    && v.iter()
+                        .zip(low.iter().zip(high))
+                        .all(|(&x, (&lo, &hi))| x >= lo && x <= hi && x.is_finite())
+            }
+            _ => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn discrete_samples_in_range() {
+        let s = Space::Discrete { n: 4 };
+        let mut rng = Pcg32::new(0, 1);
+        let mut seen = [false; 4];
+        for _ in 0..1000 {
+            match s.sample(&mut rng) {
+                Action::Discrete(i) => {
+                    assert!(i < 4);
+                    seen[i] = true;
+                }
+                _ => panic!("wrong action kind"),
+            }
+        }
+        assert!(seen.iter().all(|&b| b), "all actions reachable");
+    }
+
+    #[test]
+    fn box_samples_respect_bounds() {
+        let s = Space::box1(vec![-2.0, 0.0], vec![2.0, 1.0]);
+        let mut rng = Pcg32::new(1, 1);
+        for _ in 0..1000 {
+            let a = s.sample(&mut rng);
+            assert!(s.contains(&a));
+        }
+    }
+
+    #[test]
+    fn contains_rejects_wrong_kind_and_out_of_range() {
+        let d = Space::Discrete { n: 2 };
+        assert!(!d.contains(&Action::Discrete(2)));
+        assert!(!d.contains(&Action::Continuous(vec![0.0])));
+        let b = Space::symmetric_box(1.0, 2);
+        assert!(!b.contains(&Action::Continuous(vec![0.0, 1.5])));
+        assert!(!b.contains(&Action::Continuous(vec![0.0])));
+        assert!(!b.contains(&Action::Continuous(vec![f32::NAN, 0.0])));
+    }
+
+    #[test]
+    fn flat_dim_and_shape() {
+        let b = Space::Box {
+            low: vec![0.0; 6],
+            high: vec![1.0; 6],
+            shape: vec![2, 3],
+        };
+        assert_eq!(b.flat_dim(), 6);
+        assert_eq!(b.shape(), vec![2, 3]);
+        assert_eq!(Space::Discrete { n: 5 }.flat_dim(), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn index_on_continuous_panics() {
+        Action::Continuous(vec![0.0]).index();
+    }
+}

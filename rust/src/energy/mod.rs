@@ -1,0 +1,19 @@
+//! Energy & carbon accounting — the experiment-impact-tracker surrogate
+//! behind Table II (§V-C).
+//!
+//! Henderson et al.'s tracker estimates `energy = power x time` from
+//! hardware counters and converts to CO2 via a grid carbon-intensity
+//! factor.  RAPL/nvidia-smi are not available in this image, so the
+//! [`tracker::EnergyTracker`] samples *process CPU time* from
+//! `/proc/self/stat` and applies a TDP-based power model
+//! ([`power_model`]): the methodology (and therefore every *ratio* the
+//! paper reports) is preserved; absolute joules scale with the assumed
+//! TDP constant, which is documented in the report itself.
+
+pub mod power_model;
+pub mod report;
+pub mod tracker;
+
+pub use power_model::PowerModel;
+pub use report::EnergyReport;
+pub use tracker::EnergyTracker;

@@ -1,0 +1,95 @@
+//! CPU power model: TDP-proportional power draw.
+//!
+//! `power = idle + (tdp - idle) * utilisation`, the standard first-order
+//! model the experiment-impact-tracker falls back to when RAPL is
+//! unavailable.  Defaults model the paper's testbed CPU (Intel 8700K,
+//! 95 W TDP) so Table-II magnitudes are comparable.
+
+/// Linear utilisation -> watts model.
+#[derive(Clone, Copy, Debug)]
+pub struct PowerModel {
+    /// Package idle draw in watts.
+    pub idle_watts: f64,
+    /// Package full-load draw in watts (TDP).
+    pub tdp_watts: f64,
+    /// Grid carbon intensity in kg CO2 per kWh (world average ~0.475,
+    /// the tracker's default).
+    pub carbon_intensity_kg_per_kwh: f64,
+    /// Power-usage-effectiveness multiplier (datacentre overhead; 1.0
+    /// for a workstation like the paper's).
+    pub pue: f64,
+}
+
+impl Default for PowerModel {
+    fn default() -> Self {
+        PowerModel {
+            idle_watts: 10.0,
+            tdp_watts: 95.0, // Intel 8700K, the paper's testbed
+            carbon_intensity_kg_per_kwh: 0.475,
+            pue: 1.0,
+        }
+    }
+}
+
+impl PowerModel {
+    /// Average watts at a given utilisation in `[0, 1]`.
+    pub fn watts(&self, utilisation: f64) -> f64 {
+        let u = utilisation.clamp(0.0, 1.0);
+        (self.idle_watts + (self.tdp_watts - self.idle_watts) * u) * self.pue
+    }
+
+    /// Energy in kWh for `cpu_seconds` of single-core busy time.
+    ///
+    /// Utilisation is attributed per-core-second (the tracker's
+    /// convention): one core fully busy for `s` seconds draws
+    /// `watts(1.0) / n_cores * s` beyond idle amortisation.  We use the
+    /// simpler whole-package attribution over busy time, matching how
+    /// the tracker reports single-process experiments.
+    pub fn energy_kwh(&self, cpu_seconds: f64, utilisation: f64) -> f64 {
+        self.watts(utilisation) * cpu_seconds / 3600.0 / 1000.0
+    }
+
+    /// Kilograms of CO2 for an energy amount.
+    pub fn co2_kg(&self, kwh: f64) -> f64 {
+        kwh * self.carbon_intensity_kg_per_kwh
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn watts_interpolates_idle_to_tdp() {
+        let m = PowerModel::default();
+        assert_eq!(m.watts(0.0), 10.0);
+        assert_eq!(m.watts(1.0), 95.0);
+        assert!((m.watts(0.5) - 52.5).abs() < 1e-9);
+        // Clamped outside [0, 1].
+        assert_eq!(m.watts(2.0), 95.0);
+        assert_eq!(m.watts(-1.0), 10.0);
+    }
+
+    #[test]
+    fn energy_scales_linearly_with_time() {
+        let m = PowerModel::default();
+        let one_hour = m.energy_kwh(3600.0, 1.0);
+        assert!((one_hour - 0.095).abs() < 1e-9);
+        assert!((m.energy_kwh(7200.0, 1.0) - 2.0 * one_hour).abs() < 1e-12);
+    }
+
+    #[test]
+    fn co2_uses_intensity() {
+        let m = PowerModel::default();
+        assert!((m.co2_kg(1.0) - 0.475).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pue_multiplies_power() {
+        let m = PowerModel {
+            pue: 1.5,
+            ..Default::default()
+        };
+        assert!((m.watts(1.0) - 142.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,103 @@
+//! Energy/carbon report — the Table-II row format.
+
+use std::fmt;
+
+/// One measured region's energy accounting.
+#[derive(Clone, Debug)]
+pub struct EnergyReport {
+    pub label: String,
+    /// Process CPU time charged (seconds).
+    pub cpu_seconds: f64,
+    /// Wall-clock duration of the region (seconds).
+    pub wall_seconds: f64,
+    /// Busy fraction in [0, 1].
+    pub utilisation: f64,
+    /// Estimated energy in kWh.
+    pub kwh: f64,
+    /// Estimated emissions in kg CO2.
+    pub co2_kg: f64,
+    /// Model constants, recorded for reproducibility.
+    pub tdp_watts: f64,
+    pub carbon_intensity: f64,
+}
+
+impl EnergyReport {
+    /// Energy in milliwatt-hours — the unit Table II reports.
+    pub fn mwh(&self) -> f64 {
+        self.kwh * 1e6
+    }
+
+    /// Ratio of another report's emissions to this one's (Table II's
+    /// "Ratio" column with `self` as CaiRL and `other` as Gym).
+    pub fn co2_ratio_vs(&self, other: &EnergyReport) -> f64 {
+        if self.co2_kg <= 0.0 {
+            return f64::INFINITY;
+        }
+        other.co2_kg / self.co2_kg
+    }
+
+    /// One Table-II-style CSV row: label, cpu_s, wall_s, kwh, mwh, co2.
+    pub fn csv_row(&self) -> String {
+        format!(
+            "{},{:.3},{:.3},{:.9},{:.6},{:.9}",
+            self.label, self.cpu_seconds, self.wall_seconds, self.kwh,
+            self.mwh(), self.co2_kg
+        )
+    }
+}
+
+impl fmt::Display for EnergyReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "[{}] cpu={:.2}s wall={:.2}s util={:.0}% energy={:.6} mWh co2={:.3e} kg (TDP {:.0} W, {:.3} kg/kWh)",
+            self.label,
+            self.cpu_seconds,
+            self.wall_seconds,
+            self.utilisation * 100.0,
+            self.mwh(),
+            self.co2_kg,
+            self.tdp_watts,
+            self.carbon_intensity,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(co2: f64) -> EnergyReport {
+        EnergyReport {
+            label: "test".into(),
+            cpu_seconds: 1.0,
+            wall_seconds: 1.0,
+            utilisation: 1.0,
+            kwh: co2 / 0.475,
+            co2_kg: co2,
+            tdp_watts: 95.0,
+            carbon_intensity: 0.475,
+        }
+    }
+
+    #[test]
+    fn mwh_conversion() {
+        let r = report(0.475); // 1 kWh
+        assert!((r.mwh() - 1e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn ratio_matches_table_semantics() {
+        let cairl = report(0.000014);
+        let gym = report(0.000067);
+        let ratio = cairl.co2_ratio_vs(&gym);
+        assert!((ratio - 4.785).abs() < 0.01, "{ratio}");
+    }
+
+    #[test]
+    fn display_and_csv_contain_label() {
+        let r = report(1.0);
+        assert!(r.to_string().contains("[test]"));
+        assert!(r.csv_row().starts_with("test,"));
+    }
+}

@@ -1,0 +1,267 @@
+//! Acrobot-v1 — exact port of the Gym dynamics (RK4, "book" parameters).
+//!
+//! A two-link underactuated pendulum: torque on the *second* joint must
+//! swing the tip above the bar.  Observation is the 6-vector
+//! `[cos t1, sin t1, cos t2, sin t2, dt1, dt2]`, actions `{0: -1, 1: 0,
+//! 2: +1}` torque, reward -1 per step until termination.
+
+use crate::core::env::{Env, Transition};
+use crate::core::rng::Pcg32;
+use crate::core::spaces::{Action, Space};
+use crate::render::{software, Framebuffer};
+
+pub const DT: f32 = 0.2;
+pub const LINK_LENGTH_1: f32 = 1.0;
+pub const LINK_MASS_1: f32 = 1.0;
+pub const LINK_MASS_2: f32 = 1.0;
+pub const LINK_COM_POS_1: f32 = 0.5;
+pub const LINK_COM_POS_2: f32 = 0.5;
+pub const LINK_MOI: f32 = 1.0;
+pub const MAX_VEL_1: f32 = 4.0 * std::f32::consts::PI;
+pub const MAX_VEL_2: f32 = 9.0 * std::f32::consts::PI;
+const G: f32 = 9.8;
+
+/// The acrobot swing-up task.  Internal state `[theta1, theta2, dtheta1,
+/// dtheta2]` (angles from the downward vertical).
+#[derive(Clone, Debug)]
+pub struct Acrobot {
+    state: [f32; 4],
+    rng: Pcg32,
+    done: bool,
+}
+
+fn wrap(x: f32, lo: f32, hi: f32) -> f32 {
+    let range = hi - lo;
+    let mut x = x;
+    while x > hi {
+        x -= range;
+    }
+    while x < lo {
+        x += range;
+    }
+    x
+}
+
+/// Equations of motion from Sutton & Barto (the Gym "book" variant):
+/// returns d/dt of `[theta1, theta2, dtheta1, dtheta2]` under `torque`.
+fn dsdt(s: [f32; 4], torque: f32) -> [f32; 4] {
+    let m1 = LINK_MASS_1;
+    let m2 = LINK_MASS_2;
+    let l1 = LINK_LENGTH_1;
+    let lc1 = LINK_COM_POS_1;
+    let lc2 = LINK_COM_POS_2;
+    let i1 = LINK_MOI;
+    let i2 = LINK_MOI;
+    let [theta1, theta2, dtheta1, dtheta2] = s;
+
+    let d1 = m1 * lc1 * lc1
+        + m2 * (l1 * l1 + lc2 * lc2 + 2.0 * l1 * lc2 * theta2.cos())
+        + i1
+        + i2;
+    let d2 = m2 * (lc2 * lc2 + l1 * lc2 * theta2.cos()) + i2;
+    let phi2 = m2 * lc2 * G * (theta1 + theta2 - std::f32::consts::FRAC_PI_2).cos();
+    let phi1 = -m2 * l1 * lc2 * dtheta2 * dtheta2 * theta2.sin()
+        - 2.0 * m2 * l1 * lc2 * dtheta2 * dtheta1 * theta2.sin()
+        + (m1 * lc1 + m2 * l1) * G * (theta1 - std::f32::consts::FRAC_PI_2).cos()
+        + phi2;
+    // "book" variant of ddtheta2.
+    let ddtheta2 = (torque + d2 / d1 * phi1
+        - m2 * l1 * lc2 * dtheta1 * dtheta1 * theta2.sin()
+        - phi2)
+        / (m2 * lc2 * lc2 + i2 - d2 * d2 / d1);
+    let ddtheta1 = -(d2 * ddtheta2 + phi1) / d1;
+    [dtheta1, dtheta2, ddtheta1, ddtheta2]
+}
+
+/// One RK4 step of size `DT` (Gym integrates over `[0, dt]` in one step).
+fn rk4(s: [f32; 4], torque: f32) -> [f32; 4] {
+    let add = |a: [f32; 4], b: [f32; 4], h: f32| {
+        [a[0] + h * b[0], a[1] + h * b[1], a[2] + h * b[2], a[3] + h * b[3]]
+    };
+    let k1 = dsdt(s, torque);
+    let k2 = dsdt(add(s, k1, DT / 2.0), torque);
+    let k3 = dsdt(add(s, k2, DT / 2.0), torque);
+    let k4 = dsdt(add(s, k3, DT), torque);
+    [
+        s[0] + DT / 6.0 * (k1[0] + 2.0 * k2[0] + 2.0 * k3[0] + k4[0]),
+        s[1] + DT / 6.0 * (k1[1] + 2.0 * k2[1] + 2.0 * k3[1] + k4[1]),
+        s[2] + DT / 6.0 * (k1[2] + 2.0 * k2[2] + 2.0 * k3[2] + k4[2]),
+        s[3] + DT / 6.0 * (k1[3] + 2.0 * k2[3] + 2.0 * k3[3] + k4[3]),
+    ]
+}
+
+impl Acrobot {
+    pub fn new() -> Self {
+        Acrobot {
+            state: [0.0; 4],
+            rng: Pcg32::new(0, 0x2545f4914f6cdd1d),
+            done: true,
+        }
+    }
+
+    pub fn state(&self) -> [f32; 4] {
+        self.state
+    }
+
+    pub fn set_state(&mut self, s: [f32; 4]) {
+        self.state = s;
+        self.done = false;
+    }
+
+    /// Pure dynamics: one environment step on an explicit state.
+    pub fn dynamics(s: [f32; 4], action: usize) -> ([f32; 4], bool) {
+        let torque = action as f32 - 1.0;
+        let mut ns = rk4(s, torque);
+        ns[0] = wrap(ns[0], -std::f32::consts::PI, std::f32::consts::PI);
+        ns[1] = wrap(ns[1], -std::f32::consts::PI, std::f32::consts::PI);
+        ns[2] = ns[2].clamp(-MAX_VEL_1, MAX_VEL_1);
+        ns[3] = ns[3].clamp(-MAX_VEL_2, MAX_VEL_2);
+        let done = -ns[0].cos() - (ns[1] + ns[0]).cos() > 1.0;
+        (ns, done)
+    }
+
+    fn write_obs(&self, obs: &mut [f32]) {
+        let [t1, t2, dt1, dt2] = self.state;
+        obs[0] = t1.cos();
+        obs[1] = t1.sin();
+        obs[2] = t2.cos();
+        obs[3] = t2.sin();
+        obs[4] = dt1;
+        obs[5] = dt2;
+    }
+}
+
+impl Default for Acrobot {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Env for Acrobot {
+    fn id(&self) -> String {
+        "Acrobot-v1".into()
+    }
+
+    fn observation_space(&self) -> Space {
+        Space::box1(
+            vec![-1.0, -1.0, -1.0, -1.0, -MAX_VEL_1, -MAX_VEL_2],
+            vec![1.0, 1.0, 1.0, 1.0, MAX_VEL_1, MAX_VEL_2],
+        )
+    }
+
+    fn action_space(&self) -> Space {
+        Space::Discrete { n: 3 }
+    }
+
+    fn obs_dim(&self) -> usize {
+        6
+    }
+
+    fn seed(&mut self, seed: u64) {
+        self.rng = Pcg32::new(seed, 0x2545f4914f6cdd1d);
+    }
+
+    fn reset_into(&mut self, obs: &mut [f32]) {
+        for s in self.state.iter_mut() {
+            *s = self.rng.uniform(-0.1, 0.1);
+        }
+        self.done = false;
+        self.write_obs(obs);
+    }
+
+    fn step_into(&mut self, action: &Action, obs: &mut [f32]) -> Transition {
+        debug_assert!(!self.done, "step() called on a finished episode");
+        let (ns, done) = Self::dynamics(self.state, action.index());
+        self.state = ns;
+        self.done = done;
+        self.write_obs(obs);
+        Transition {
+            reward: if done { 0.0 } else { -1.0 },
+            done,
+            truncated: false,
+        }
+    }
+
+    fn render(&self, fb: &mut Framebuffer) {
+        software::paint_acrobot(fb, self.state[0], self.state[1]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn obs_is_trig_encoded() {
+        let mut env = Acrobot::new();
+        env.set_state([0.5, -0.3, 1.0, -2.0]);
+        let mut obs = [0.0f32; 6];
+        env.write_obs(&mut obs);
+        assert!((obs[0] - 0.5f32.cos()).abs() < 1e-6);
+        assert!((obs[1] - 0.5f32.sin()).abs() < 1e-6);
+        assert!((obs[4] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn hanging_at_rest_is_stable_without_torque() {
+        // theta = 0 (both links straight down) is an equilibrium.
+        let (ns, done) = Acrobot::dynamics([0.0; 4], 1);
+        for v in ns {
+            assert!(v.abs() < 1e-5, "{ns:?}");
+        }
+        assert!(!done);
+    }
+
+    #[test]
+    fn torque_accelerates_second_joint() {
+        let (right, _) = Acrobot::dynamics([0.0; 4], 2);
+        let (left, _) = Acrobot::dynamics([0.0; 4], 0);
+        assert!(right[3] > 0.0);
+        assert!(left[3] < 0.0);
+        assert!((right[3] + left[3]).abs() < 1e-5, "symmetric response");
+    }
+
+    #[test]
+    fn angles_wrap_to_pi() {
+        let (ns, _) = Acrobot::dynamics([3.1, -3.1, 4.0, -4.0], 2);
+        assert!(ns[0].abs() <= std::f32::consts::PI + 1e-5);
+        assert!(ns[1].abs() <= std::f32::consts::PI + 1e-5);
+    }
+
+    #[test]
+    fn velocities_clamped() {
+        let (ns, _) = Acrobot::dynamics([0.0, 0.0, 100.0, 100.0], 2);
+        assert!(ns[2] <= MAX_VEL_1);
+        assert!(ns[3] <= MAX_VEL_2);
+    }
+
+    #[test]
+    fn termination_when_tip_above_bar() {
+        // theta1 = pi (first link straight up), theta2 = 0:
+        // -cos(pi) - cos(pi) = 2 > 1 -> the *previous* state already
+        // satisfies it, but termination is evaluated on the next state, so
+        // drive from a nearly-up state with zero velocity.
+        let (_, done) = Acrobot::dynamics([std::f32::consts::PI - 0.01, 0.0, 0.0, 0.0], 1);
+        assert!(done);
+    }
+
+    #[test]
+    fn episode_reward_is_negative_until_done() {
+        let mut env = Acrobot::new();
+        env.seed(1);
+        let mut obs = [0.0f32; 6];
+        env.reset_into(&mut obs);
+        let t = env.step_into(&Action::Discrete(1), &mut obs);
+        assert_eq!(t.reward, -1.0);
+    }
+
+    #[test]
+    fn reset_reproducible() {
+        let mut env = Acrobot::new();
+        env.seed(9);
+        let a = env.reset();
+        env.seed(9);
+        let b = env.reset();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,563 @@
+//! GridRTS — a MicroRTS-class real-time-strategy substrate.
+//!
+//! Stands in for the paper's JVM runner environments (MicroRTS via JNI,
+//! §IV-A): a small two-player RTS on a grid with bases, workers, resource
+//! harvesting and combat.  It serves three roles:
+//!
+//! 1. an [`Env`] (player 0 controls a champion worker against a scripted
+//!    opponent) so RL agents can train on an adversarial task,
+//! 2. a two-[`Bot`] match runner ([`play_match`]) feeding the tournament
+//!    tooling (§III-A "Tooling"),
+//! 3. a stress test for the toolkit API beyond 1-D physics tasks.
+//!
+//! Rules (a distilled MicroRTS): each player owns a base and one worker.
+//! Workers move orthogonally, harvest from adjacent resource nodes (one
+//! unit of ore per step, capacity 1), deliver to their adjacent base
+//! (+1 stored), and attack adjacent enemies (1 damage).  Destroying the
+//! enemy base wins.  The game is simultaneous-move with deterministic
+//! conflict resolution (player 0 resolves first on even ticks, player 1
+//! on odd ticks — removes first-mover bias over a match).
+
+use crate::core::env::{Env, Transition};
+use crate::core::rng::Pcg32;
+use crate::core::spaces::{Action, Space};
+use crate::render::{raster, Framebuffer};
+
+pub const MAP_W: i32 = 8;
+pub const MAP_H: i32 = 8;
+pub const BASE_HP: i32 = 10;
+pub const WORKER_HP: i32 = 4;
+pub const RESOURCE_AMOUNT: i32 = 20;
+pub const MAX_TICKS: u32 = 400;
+
+/// Unit actions, also the RL action space (6 discrete actions).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UnitAction {
+    /// Move north/south/east/west (0-3).
+    Move(i32, i32),
+    /// Harvest an adjacent resource or deliver to an adjacent base (4).
+    Work,
+    /// Attack an adjacent enemy unit or base (5).
+    Attack,
+}
+
+impl UnitAction {
+    /// Decode an RL discrete action index.
+    pub fn from_index(i: usize) -> UnitAction {
+        match i {
+            0 => UnitAction::Move(0, -1),
+            1 => UnitAction::Move(0, 1),
+            2 => UnitAction::Move(1, 0),
+            3 => UnitAction::Move(-1, 0),
+            4 => UnitAction::Work,
+            _ => UnitAction::Attack,
+        }
+    }
+}
+
+/// One player's pieces.
+#[derive(Clone, Debug)]
+pub struct PlayerState {
+    pub base: (i32, i32),
+    pub base_hp: i32,
+    pub worker: (i32, i32),
+    pub worker_hp: i32,
+    pub carrying: bool,
+    pub stored: i32,
+}
+
+/// Full game state (public to bots — perfect information, like MicroRTS).
+#[derive(Clone, Debug)]
+pub struct GameState {
+    pub players: [PlayerState; 2],
+    pub resources: Vec<((i32, i32), i32)>,
+    pub tick: u32,
+}
+
+impl GameState {
+    fn new() -> Self {
+        GameState {
+            players: [
+                PlayerState {
+                    base: (0, 0),
+                    base_hp: BASE_HP,
+                    worker: (1, 1),
+                    worker_hp: WORKER_HP,
+                    carrying: false,
+                    stored: 0,
+                },
+                PlayerState {
+                    base: (MAP_W - 1, MAP_H - 1),
+                    base_hp: BASE_HP,
+                    worker: (MAP_W - 2, MAP_H - 2),
+                    worker_hp: WORKER_HP,
+                    carrying: false,
+                    stored: 0,
+                },
+            ],
+            resources: vec![
+                ((MAP_W / 2, 1), RESOURCE_AMOUNT),
+                ((MAP_W / 2 - 1, MAP_H - 2), RESOURCE_AMOUNT),
+            ],
+            tick: 0,
+        }
+    }
+
+    fn occupied(&self, p: (i32, i32)) -> bool {
+        self.players.iter().any(|pl| {
+            (pl.base == p && pl.base_hp > 0) || (pl.worker == p && pl.worker_hp > 0)
+        }) || self.resources.iter().any(|&(rp, amt)| rp == p && amt > 0)
+    }
+
+    fn adjacent(a: (i32, i32), b: (i32, i32)) -> bool {
+        (a.0 - b.0).abs() + (a.1 - b.1).abs() == 1
+    }
+
+    /// Apply one unit action for `player`.  Returns the reward shaping
+    /// delta for that player (deliveries and damage).
+    fn apply(&mut self, player: usize, action: UnitAction) -> f32 {
+        let enemy = 1 - player;
+        if self.players[player].worker_hp <= 0 {
+            return 0.0;
+        }
+        let wpos = self.players[player].worker;
+        match action {
+            UnitAction::Move(dx, dy) => {
+                let np = (wpos.0 + dx, wpos.1 + dy);
+                let in_bounds =
+                    np.0 >= 0 && np.0 < MAP_W && np.1 >= 0 && np.1 < MAP_H;
+                if in_bounds && !self.occupied(np) {
+                    self.players[player].worker = np;
+                }
+                0.0
+            }
+            UnitAction::Work => {
+                if self.players[player].carrying {
+                    // Deliver to own base if adjacent.
+                    if Self::adjacent(wpos, self.players[player].base) {
+                        self.players[player].carrying = false;
+                        self.players[player].stored += 1;
+                        return 1.0;
+                    }
+                } else if let Some(r) = self
+                    .resources
+                    .iter_mut()
+                    .find(|(rp, amt)| Self::adjacent(wpos, *rp) && *amt > 0)
+                {
+                    r.1 -= 1;
+                    self.players[player].carrying = true;
+                    return 0.1;
+                }
+                0.0
+            }
+            UnitAction::Attack => {
+                if self.players[enemy].worker_hp > 0
+                    && Self::adjacent(wpos, self.players[enemy].worker)
+                {
+                    self.players[enemy].worker_hp -= 1;
+                    return if self.players[enemy].worker_hp == 0 { 1.0 } else { 0.2 };
+                }
+                if Self::adjacent(wpos, self.players[enemy].base) {
+                    self.players[enemy].base_hp -= 1;
+                    return if self.players[enemy].base_hp == 0 { 5.0 } else { 0.2 };
+                }
+                0.0
+            }
+        }
+    }
+
+    /// Advance one tick with both players' actions.  Returns per-player
+    /// shaping rewards.
+    pub fn step(&mut self, a0: UnitAction, a1: UnitAction) -> [f32; 2] {
+        let mut rewards = [0.0f32; 2];
+        // Alternate resolution order to remove first-mover bias.
+        if self.tick % 2 == 0 {
+            rewards[0] = self.apply(0, a0);
+            rewards[1] = self.apply(1, a1);
+        } else {
+            rewards[1] = self.apply(1, a1);
+            rewards[0] = self.apply(0, a0);
+        }
+        self.tick += 1;
+        rewards
+    }
+
+    /// Some(player) when that player has won.
+    pub fn winner(&self) -> Option<usize> {
+        if self.players[1].base_hp <= 0 {
+            Some(0)
+        } else if self.players[0].base_hp <= 0 {
+            Some(1)
+        } else {
+            None
+        }
+    }
+
+    /// Game over (win or tick limit).
+    pub fn over(&self) -> bool {
+        self.winner().is_some() || self.tick >= MAX_TICKS
+    }
+}
+
+/// A scripted or learned policy over full game states.
+pub trait Bot: Send {
+    fn name(&self) -> &str;
+    fn act(&mut self, state: &GameState, player: usize) -> UnitAction;
+}
+
+/// Moves toward the enemy base and attacks it — the classic rush.
+pub struct RushBot;
+
+fn step_toward(from: (i32, i32), to: (i32, i32)) -> UnitAction {
+    let dx = to.0 - from.0;
+    let dy = to.1 - from.1;
+    if dx.abs() >= dy.abs() && dx != 0 {
+        UnitAction::Move(dx.signum(), 0)
+    } else if dy != 0 {
+        UnitAction::Move(0, dy.signum())
+    } else {
+        UnitAction::Attack
+    }
+}
+
+impl Bot for RushBot {
+    fn name(&self) -> &str {
+        "rush"
+    }
+    fn act(&mut self, state: &GameState, player: usize) -> UnitAction {
+        let me = &state.players[player];
+        let enemy = &state.players[1 - player];
+        if GameState::adjacent(me.worker, enemy.base)
+            || (enemy.worker_hp > 0 && GameState::adjacent(me.worker, enemy.worker))
+        {
+            UnitAction::Attack
+        } else {
+            step_toward(me.worker, enemy.base)
+        }
+    }
+}
+
+/// Harvests the nearest resource and delivers — the economy strategy.
+pub struct HarvestBot;
+
+impl Bot for HarvestBot {
+    fn name(&self) -> &str {
+        "harvest"
+    }
+    fn act(&mut self, state: &GameState, player: usize) -> UnitAction {
+        let me = &state.players[player];
+        if me.carrying {
+            if GameState::adjacent(me.worker, me.base) {
+                UnitAction::Work
+            } else {
+                step_toward(me.worker, me.base)
+            }
+        } else {
+            let target = state
+                .resources
+                .iter()
+                .filter(|(_, amt)| *amt > 0)
+                .min_by_key(|((x, y), _)| {
+                    (x - me.worker.0).abs() + (y - me.worker.1).abs()
+                });
+            match target {
+                Some((rp, _)) if GameState::adjacent(me.worker, *rp) => UnitAction::Work,
+                Some((rp, _)) => step_toward(me.worker, *rp),
+                None => UnitAction::Attack,
+            }
+        }
+    }
+}
+
+/// Uniform random actions.
+pub struct RandomBot(pub Pcg32);
+
+impl Bot for RandomBot {
+    fn name(&self) -> &str {
+        "random"
+    }
+    fn act(&mut self, _state: &GameState, _player: usize) -> UnitAction {
+        UnitAction::from_index(self.0.below(6) as usize)
+    }
+}
+
+/// Match outcome for the tournament tooling.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MatchResult {
+    Win(usize),
+    Draw,
+}
+
+/// Play one full game between two bots.
+pub fn play_match(bot0: &mut dyn Bot, bot1: &mut dyn Bot) -> MatchResult {
+    let mut state = GameState::new();
+    while !state.over() {
+        let a0 = bot0.act(&state, 0);
+        let a1 = bot1.act(&state, 1);
+        state.step(a0, a1);
+    }
+    match state.winner() {
+        Some(p) => MatchResult::Win(p),
+        None => {
+            // Tick limit: most stored resources wins, else draw.
+            let (s0, s1) = (state.players[0].stored, state.players[1].stored);
+            if s0 > s1 {
+                MatchResult::Win(0)
+            } else if s1 > s0 {
+                MatchResult::Win(1)
+            } else {
+                MatchResult::Draw
+            }
+        }
+    }
+}
+
+/// GridRTS as a single-agent [`Env`]: player 0's worker is the agent,
+/// player 1 is a scripted [`HarvestBot`] (economy race with skirmishes).
+///
+/// Observation (10 floats, all normalised to `[0, 1]`-ish ranges): own
+/// worker xy, own base hp, carrying, stored; enemy worker xy, enemy
+/// base hp, enemy stored; tick fraction.
+pub struct GridRts {
+    state: GameState,
+    opponent: HarvestBot,
+    rng: Pcg32,
+}
+
+impl GridRts {
+    pub fn new() -> Self {
+        GridRts {
+            state: GameState::new(),
+            opponent: HarvestBot,
+            rng: Pcg32::new(0, 0xb5297a4d36f4d31b),
+        }
+    }
+
+    pub fn game_state(&self) -> &GameState {
+        &self.state
+    }
+
+    fn write_obs(&self, obs: &mut [f32]) {
+        let me = &self.state.players[0];
+        let foe = &self.state.players[1];
+        obs[0] = me.worker.0 as f32 / MAP_W as f32;
+        obs[1] = me.worker.1 as f32 / MAP_H as f32;
+        obs[2] = me.base_hp as f32 / BASE_HP as f32;
+        obs[3] = me.carrying as u8 as f32;
+        obs[4] = me.stored as f32 / RESOURCE_AMOUNT as f32;
+        obs[5] = foe.worker.0 as f32 / MAP_W as f32;
+        obs[6] = foe.worker.1 as f32 / MAP_H as f32;
+        obs[7] = foe.base_hp as f32 / BASE_HP as f32;
+        obs[8] = foe.stored as f32 / RESOURCE_AMOUNT as f32;
+        obs[9] = self.state.tick as f32 / MAX_TICKS as f32;
+    }
+}
+
+impl Default for GridRts {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Env for GridRts {
+    fn id(&self) -> String {
+        "GridRTS-v0".into()
+    }
+
+    fn observation_space(&self) -> Space {
+        Space::box1(vec![0.0; 10], vec![1.0; 10])
+    }
+
+    fn action_space(&self) -> Space {
+        Space::Discrete { n: 6 }
+    }
+
+    fn obs_dim(&self) -> usize {
+        10
+    }
+
+    fn seed(&mut self, seed: u64) {
+        self.rng = Pcg32::new(seed, 0xb5297a4d36f4d31b);
+    }
+
+    fn reset_into(&mut self, obs: &mut [f32]) {
+        self.state = GameState::new();
+        self.write_obs(obs);
+    }
+
+    fn step_into(&mut self, action: &Action, obs: &mut [f32]) -> Transition {
+        let a0 = UnitAction::from_index(action.index());
+        let a1 = self.opponent.act(&self.state, 1);
+        let rewards = self.state.step(a0, a1);
+        self.write_obs(obs);
+        let done = self.state.over();
+        let mut reward = rewards[0];
+        if let Some(w) = self.state.winner() {
+            reward += if w == 0 { 10.0 } else { -10.0 };
+        }
+        Transition {
+            reward,
+            done,
+            truncated: false,
+        }
+    }
+
+    fn render(&self, fb: &mut Framebuffer) {
+        fb.clear(0.0);
+        let cw = fb.width() as f32 / MAP_W as f32;
+        let ch = fb.height() as f32 / MAP_H as f32;
+        let cell = |p: (i32, i32)| (p.0 as f32 * cw, p.1 as f32 * ch);
+        for &(rp, amt) in &self.state.resources {
+            if amt > 0 {
+                let (x, y) = cell(rp);
+                raster::fill_rect(fb, x as i32, y as i32, (x + cw) as i32, (y + ch) as i32, 0.4);
+            }
+        }
+        for (i, pl) in self.state.players.iter().enumerate() {
+            let base_i = if i == 0 { 0.8 } else { 0.6 };
+            if pl.base_hp > 0 {
+                let (x, y) = cell(pl.base);
+                raster::fill_rect(fb, x as i32, y as i32, (x + cw) as i32, (y + ch) as i32, base_i);
+            }
+            if pl.worker_hp > 0 {
+                let (x, y) = cell(pl.worker);
+                raster::fill_disc(fb, x + cw / 2.0, y + ch / 2.0, cw / 3.0, base_i + 0.2);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn initial_state_is_symmetric() {
+        let s = GameState::new();
+        assert_eq!(s.players[0].base_hp, BASE_HP);
+        assert_eq!(s.players[1].base_hp, BASE_HP);
+        assert_eq!(s.winner(), None);
+        assert!(!s.over());
+    }
+
+    #[test]
+    fn worker_moves_and_respects_bounds() {
+        let mut s = GameState::new();
+        let start = s.players[0].worker;
+        s.apply(0, UnitAction::Move(1, 0));
+        assert_eq!(s.players[0].worker, (start.0 + 1, start.1));
+        // Walk into the west wall.
+        let mut s2 = GameState::new();
+        s2.players[0].worker = (0, 3);
+        s2.apply(0, UnitAction::Move(-1, 0));
+        assert_eq!(s2.players[0].worker, (0, 3));
+    }
+
+    #[test]
+    fn cannot_move_onto_base_or_resource() {
+        let mut s = GameState::new();
+        s.players[0].worker = (0, 1); // south of own base at (0,0)
+        s.apply(0, UnitAction::Move(0, -1));
+        assert_eq!(s.players[0].worker, (0, 1));
+    }
+
+    #[test]
+    fn harvest_then_deliver_increments_store() {
+        let mut s = GameState::new();
+        let rp = s.resources[0].0;
+        s.players[0].worker = (rp.0 - 1, rp.1);
+        let r1 = s.apply(0, UnitAction::Work);
+        assert!(s.players[0].carrying);
+        assert!(r1 > 0.0);
+        assert_eq!(s.resources[0].1, RESOURCE_AMOUNT - 1);
+        // Teleport next to the base and deliver.
+        s.players[0].worker = (0, 1);
+        let r2 = s.apply(0, UnitAction::Work);
+        assert!(!s.players[0].carrying);
+        assert_eq!(s.players[0].stored, 1);
+        assert_eq!(r2, 1.0);
+    }
+
+    #[test]
+    fn attacking_base_wins_eventually() {
+        let mut s = GameState::new();
+        s.players[0].worker = (MAP_W - 2, MAP_H - 1); // adjacent to enemy base
+        // Attack prioritises the adjacent enemy worker, then the base.
+        for _ in 0..(WORKER_HP + BASE_HP) {
+            s.apply(0, UnitAction::Attack);
+        }
+        assert_eq!(s.players[1].worker_hp, 0);
+        assert_eq!(s.winner(), Some(0));
+    }
+
+    #[test]
+    fn killing_worker_stops_it() {
+        let mut s = GameState::new();
+        s.players[0].worker = (4, 4);
+        s.players[1].worker = (5, 4);
+        for _ in 0..WORKER_HP {
+            s.apply(0, UnitAction::Attack);
+        }
+        assert_eq!(s.players[1].worker_hp, 0);
+        // Dead worker can't act.
+        let before = s.players[1].clone();
+        s.apply(1, UnitAction::Move(0, 1));
+        assert_eq!(s.players[1].worker, before.worker);
+    }
+
+    #[test]
+    fn rush_beats_random() {
+        let mut wins = 0;
+        for seed in 0..10 {
+            let mut rush = RushBot;
+            let mut rand = RandomBot(Pcg32::new(seed, 1));
+            if play_match(&mut rush, &mut rand) == MatchResult::Win(0) {
+                wins += 1;
+            }
+        }
+        assert!(wins >= 8, "rush won only {wins}/10 vs random");
+    }
+
+    #[test]
+    fn rush_beats_harvest_but_harvest_outscores_random() {
+        let mut rush = RushBot;
+        let mut harvest = HarvestBot;
+        // Rush destroys an undefended base before the economy matters.
+        assert_eq!(play_match(&mut rush, &mut harvest), MatchResult::Win(0));
+        // Harvest vs harvest is symmetric -> draw or very close.
+        let mut h1 = HarvestBot;
+        let mut h2 = HarvestBot;
+        let r = play_match(&mut h1, &mut h2);
+        assert!(matches!(r, MatchResult::Draw | MatchResult::Win(_)));
+    }
+
+    #[test]
+    fn env_roundtrip_and_termination() {
+        let mut env = GridRts::new();
+        env.seed(0);
+        let mut rng = Pcg32::new(2, 2);
+        let (ret, len) = crate::core::env::random_rollout(&mut env, &mut rng, 2000);
+        assert!(len <= MAX_TICKS);
+        assert!(ret.is_finite());
+    }
+
+    #[test]
+    fn env_obs_is_normalised() {
+        let mut env = GridRts::new();
+        env.seed(0);
+        let obs = env.reset();
+        assert_eq!(obs.len(), 10);
+        assert!(obs.iter().all(|v| (0.0..=1.2).contains(v)));
+    }
+
+    #[test]
+    fn render_distinguishes_players() {
+        let mut env = GridRts::new();
+        env.seed(0);
+        env.reset();
+        let mut fb = Framebuffer::standard();
+        env.render(&mut fb);
+        assert!(fb.sum() > 10.0);
+        assert!(fb.max() == 1.0); // player-0 worker intensity
+    }
+}

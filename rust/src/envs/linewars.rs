@@ -1,0 +1,425 @@
+//! LineWars — a Deep-Line-Wars-class lane strategy environment
+//! (the paper names Deep Line Wars among CaiRL's novel high-complexity
+//! games, §III).
+//!
+//! Two players on a 1-D lane of length [`LANE`].  Each tick both earn
+//! income; a player may spend gold to send a unit (three tiers).  Units
+//! march toward the enemy base, fight on contact (simultaneous damage),
+//! and damage the base on arrival.  First base to fall loses; income
+//! grows each time a unit is *sent* (economy scaling), so there is a
+//! real aggression/economy trade-off.
+//!
+//! Single-agent [`Env`]: player 0 versus a scripted balanced opponent.
+//! Actions: 0 save, 1 send grunt (cost 10), 2 send soldier (cost 25),
+//! 3 send tank (cost 60).
+
+use crate::core::env::{Env, Transition};
+use crate::core::rng::Pcg32;
+use crate::core::spaces::{Action, Space};
+use crate::render::{raster, Framebuffer};
+
+pub const LANE: f32 = 100.0;
+pub const BASE_HP: f32 = 50.0;
+pub const MAX_TICKS: u32 = 2_000;
+/// (cost, hp, damage, speed) per unit tier.
+pub const TIERS: [(f32, f32, f32, f32); 3] = [
+    (10.0, 10.0, 2.0, 1.2),
+    (25.0, 30.0, 4.0, 0.9),
+    (60.0, 90.0, 8.0, 0.6),
+];
+pub const BASE_INCOME: f32 = 1.0;
+/// Income added per unit sent (economy scaling).
+pub const INCOME_PER_SEND: f32 = 0.02;
+
+/// One marching unit.
+#[derive(Clone, Copy, Debug)]
+pub struct Unit {
+    /// Position from its owner's base (0 = home, LANE = enemy base).
+    pub pos: f32,
+    pub hp: f32,
+    pub dmg: f32,
+    pub speed: f32,
+}
+
+/// Per-player economy and army.
+#[derive(Clone, Debug)]
+pub struct Side {
+    pub base_hp: f32,
+    pub gold: f32,
+    pub income: f32,
+    pub units: Vec<Unit>,
+}
+
+impl Side {
+    fn new() -> Side {
+        Side {
+            base_hp: BASE_HP,
+            gold: 20.0,
+            income: BASE_INCOME,
+            units: Vec::new(),
+        }
+    }
+
+    fn send(&mut self, tier: usize) -> bool {
+        let (cost, hp, dmg, speed) = TIERS[tier];
+        if self.gold < cost {
+            return false;
+        }
+        self.gold -= cost;
+        self.income += INCOME_PER_SEND * cost;
+        self.units.push(Unit {
+            pos: 0.0,
+            hp,
+            dmg,
+            speed,
+        });
+        true
+    }
+}
+
+/// The two-sided game state.
+#[derive(Clone, Debug)]
+pub struct LineWarsState {
+    pub sides: [Side; 2],
+    pub tick: u32,
+}
+
+impl LineWarsState {
+    fn new() -> LineWarsState {
+        LineWarsState {
+            sides: [Side::new(), Side::new()],
+            tick: 0,
+        }
+    }
+
+    /// Advance one tick with both players' actions (0..=3).
+    /// Returns shaping rewards for player 0.
+    pub fn step(&mut self, a0: usize, a1: usize) -> f32 {
+        let mut reward = 0.0;
+        for (i, a) in [(0usize, a0), (1usize, a1)] {
+            self.sides[i].gold += self.sides[i].income * 0.1;
+            if (1..=3).contains(&a) && self.sides[i].send(a - 1) && i == 0 {
+                reward += 0.01; // tiny shaping for acting
+            }
+        }
+        // March.
+        for side in self.sides.iter_mut() {
+            for u in side.units.iter_mut() {
+                u.pos += u.speed;
+            }
+        }
+        // Combat: front unit of each side fights when they meet
+        // (positions measured from opposite ends: meet when
+        // pos0 + pos1 >= LANE).
+        loop {
+            let (front0, front1) = (self.front(0), self.front(1));
+            let (Some(f0), Some(f1)) = (front0, front1) else { break };
+            if self.sides[0].units[f0].pos + self.sides[1].units[f1].pos < LANE {
+                break;
+            }
+            let d0 = self.sides[0].units[f0].dmg;
+            let d1 = self.sides[1].units[f1].dmg;
+            self.sides[0].units[f0].hp -= d1;
+            self.sides[1].units[f1].hp -= d0;
+            let dead0 = self.sides[0].units[f0].hp <= 0.0;
+            let dead1 = self.sides[1].units[f1].hp <= 0.0;
+            if dead0 {
+                self.sides[0].units.remove(f0);
+                reward -= 0.05;
+            }
+            if dead1 {
+                self.sides[1].units.remove(f1);
+                reward += 0.05;
+            }
+            if !dead0 && !dead1 {
+                break; // both alive: combat continues next tick
+            }
+        }
+        // Arrivals damage bases.
+        for i in 0..2 {
+            let enemy = 1 - i;
+            let mut k = 0;
+            while k < self.sides[i].units.len() {
+                if self.sides[i].units[k].pos >= LANE {
+                    let dmg = self.sides[i].units[k].dmg;
+                    self.sides[enemy].base_hp -= dmg;
+                    self.sides[i].units.remove(k);
+                    reward += if i == 0 { 0.2 } else { -0.2 };
+                } else {
+                    k += 1;
+                }
+            }
+        }
+        self.tick += 1;
+        reward
+    }
+
+    /// Index of the foremost unit of `side`.
+    fn front(&self, side: usize) -> Option<usize> {
+        self.sides[side]
+            .units
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.pos.partial_cmp(&b.1.pos).unwrap())
+            .map(|(i, _)| i)
+    }
+
+    pub fn winner(&self) -> Option<usize> {
+        if self.sides[1].base_hp <= 0.0 {
+            Some(0)
+        } else if self.sides[0].base_hp <= 0.0 {
+            Some(1)
+        } else {
+            None
+        }
+    }
+
+    pub fn over(&self) -> bool {
+        self.winner().is_some() || self.tick >= MAX_TICKS
+    }
+
+    /// Lane occupancy histogram for one side: unit hp mass in `buckets`
+    /// bins along the lane (the observation encoding).
+    pub fn occupancy(&self, side: usize, buckets: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; buckets];
+        for u in &self.sides[side].units {
+            let b = ((u.pos / LANE) * buckets as f32) as usize;
+            out[b.min(buckets - 1)] += u.hp / 100.0;
+        }
+        out
+    }
+}
+
+/// The scripted opponent: saves to a tier threshold, then sends —
+/// a balanced economy/aggression baseline.
+fn scripted_opponent(state: &LineWarsState, rng: &mut Pcg32) -> usize {
+    let me = &state.sides[1];
+    if me.gold >= 60.0 && rng.chance(0.5) {
+        3
+    } else if me.gold >= 25.0 && rng.chance(0.4) {
+        2
+    } else if me.gold >= 10.0 && rng.chance(0.3) {
+        1
+    } else {
+        0
+    }
+}
+
+const BUCKETS: usize = 8;
+
+/// LineWars as a single-agent environment (player 0).
+///
+/// Observation (4 + 2*BUCKETS = 20 floats, normalised): own base hp,
+/// enemy base hp, own gold/100, own income/5, own lane occupancy
+/// (BUCKETS), enemy lane occupancy (BUCKETS).
+pub struct LineWars {
+    state: LineWarsState,
+    rng: Pcg32,
+}
+
+impl LineWars {
+    pub fn new() -> LineWars {
+        LineWars {
+            state: LineWarsState::new(),
+            rng: Pcg32::new(0, 0x94d049bb133111eb),
+        }
+    }
+
+    pub fn game_state(&self) -> &LineWarsState {
+        &self.state
+    }
+
+    fn write_obs(&self, obs: &mut [f32]) {
+        obs[0] = self.state.sides[0].base_hp / BASE_HP;
+        obs[1] = self.state.sides[1].base_hp / BASE_HP;
+        obs[2] = (self.state.sides[0].gold / 100.0).min(2.0);
+        obs[3] = (self.state.sides[0].income / 5.0).min(2.0);
+        let own = self.state.occupancy(0, BUCKETS);
+        let foe = self.state.occupancy(1, BUCKETS);
+        obs[4..4 + BUCKETS].copy_from_slice(&own);
+        obs[4 + BUCKETS..4 + 2 * BUCKETS].copy_from_slice(&foe);
+    }
+}
+
+impl Default for LineWars {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Env for LineWars {
+    fn id(&self) -> String {
+        "LineWars-v0".into()
+    }
+
+    fn observation_space(&self) -> Space {
+        let d = 4 + 2 * BUCKETS;
+        Space::box1(vec![0.0; d], vec![2.0; d])
+    }
+
+    fn action_space(&self) -> Space {
+        Space::Discrete { n: 4 }
+    }
+
+    fn obs_dim(&self) -> usize {
+        4 + 2 * BUCKETS
+    }
+
+    fn seed(&mut self, seed: u64) {
+        self.rng = Pcg32::new(seed, 0x94d049bb133111eb);
+    }
+
+    fn reset_into(&mut self, obs: &mut [f32]) {
+        self.state = LineWarsState::new();
+        self.write_obs(obs);
+    }
+
+    fn step_into(&mut self, action: &Action, obs: &mut [f32]) -> Transition {
+        let a1 = scripted_opponent(&self.state, &mut self.rng);
+        let mut reward = self.state.step(action.index(), a1);
+        let done = self.state.over();
+        if let Some(w) = self.state.winner() {
+            reward += if w == 0 { 10.0 } else { -10.0 };
+        }
+        self.write_obs(obs);
+        Transition {
+            reward,
+            done,
+            truncated: false,
+        }
+    }
+
+    fn render(&self, fb: &mut Framebuffer) {
+        fb.clear(0.0);
+        let w = fb.width() as f32;
+        let mid = fb.height() as f32 / 2.0;
+        raster::hline(fb, mid as i32, 0.2);
+        // Bases.
+        let hp0 = self.state.sides[0].base_hp / BASE_HP;
+        let hp1 = self.state.sides[1].base_hp / BASE_HP;
+        raster::fill_rect(fb, 0, (mid - 8.0) as i32, 4, (mid + 8.0) as i32, 0.3 + 0.5 * hp0);
+        raster::fill_rect(
+            fb,
+            fb.width() as i32 - 4,
+            (mid - 8.0) as i32,
+            fb.width() as i32,
+            (mid + 8.0) as i32,
+            0.3 + 0.5 * hp1,
+        );
+        // Units: player 0 above the line, player 1 below.
+        for u in &self.state.sides[0].units {
+            let x = 4.0 + (u.pos / LANE) * (w - 8.0);
+            raster::fill_disc(fb, x, mid - 4.0, 2.0, 1.0);
+        }
+        for u in &self.state.sides[1].units {
+            let x = w - 4.0 - (u.pos / LANE) * (w - 8.0);
+            raster::fill_disc(fb, x, mid + 4.0, 2.0, 0.6);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sending_units_costs_gold_and_grows_income() {
+        let mut s = LineWarsState::new();
+        let gold = s.sides[0].gold;
+        let income = s.sides[0].income;
+        assert!(s.sides[0].send(0));
+        assert!(s.sides[0].gold < gold);
+        assert!(s.sides[0].income > income);
+        assert_eq!(s.sides[0].units.len(), 1);
+    }
+
+    #[test]
+    fn cannot_send_without_gold() {
+        let mut s = LineWarsState::new();
+        s.sides[0].gold = 5.0;
+        assert!(!s.sides[0].send(2));
+        assert!(s.sides[0].units.is_empty());
+    }
+
+    #[test]
+    fn unopposed_unit_damages_base() {
+        let mut s = LineWarsState::new();
+        s.sides[0].send(0);
+        let hp = s.sides[1].base_hp;
+        for _ in 0..200 {
+            s.step(0, 0);
+            if s.sides[1].base_hp < hp {
+                return;
+            }
+        }
+        panic!("unit never arrived");
+    }
+
+    #[test]
+    fn opposing_units_fight_and_tank_beats_grunt() {
+        let mut s = LineWarsState::new();
+        s.sides[0].gold = 100.0;
+        s.sides[1].gold = 100.0;
+        s.sides[0].send(2); // tank
+        s.sides[1].send(0); // grunt
+        for _ in 0..300 {
+            s.step(0, 0);
+            if s.over() {
+                break;
+            }
+        }
+        // The grunt dies; the tank survives to damage the enemy base.
+        assert!(s.sides[1].base_hp < BASE_HP, "{:?}", s.sides[1]);
+        assert_eq!(s.winner(), None); // one tank doesn't raze a base
+    }
+
+    #[test]
+    fn aggressive_player_beats_idle() {
+        let mut s = LineWarsState::new();
+        let mut ticks = 0;
+        while !s.over() && ticks < MAX_TICKS {
+            // Player 0 sends grunts whenever affordable; player 1 idles.
+            let a0 = if s.sides[0].gold >= 10.0 { 1 } else { 0 };
+            s.step(a0, 0);
+            ticks += 1;
+        }
+        assert_eq!(s.winner(), Some(0));
+    }
+
+    #[test]
+    fn env_episode_terminates_and_obs_normalised() {
+        let mut env = LineWars::new();
+        env.seed(1);
+        let mut rng = Pcg32::new(2, 2);
+        let (ret, len) =
+            crate::core::env::random_rollout(&mut env, &mut rng, MAX_TICKS + 10);
+        assert!(len <= MAX_TICKS);
+        assert!(ret.is_finite());
+        let obs = env.reset();
+        assert_eq!(obs.len(), 20);
+        assert!(obs.iter().all(|v| (0.0..=2.0).contains(v)));
+    }
+
+    #[test]
+    fn occupancy_histogram_tracks_positions() {
+        let mut s = LineWarsState::new();
+        s.sides[0].send(0);
+        for _ in 0..10 {
+            s.step(0, 0);
+        }
+        let occ = s.occupancy(0, 8);
+        assert!(occ.iter().sum::<f32>() > 0.0);
+        // Unit at pos ~12 of 100 -> bucket 0 of 8 covers [0, 12.5).
+        assert!(occ[0] > 0.0 || occ[1] > 0.0);
+    }
+
+    #[test]
+    fn render_shows_lane_and_bases() {
+        let mut env = LineWars::new();
+        env.seed(0);
+        env.reset();
+        let mut fb = Framebuffer::standard();
+        env.render(&mut fb);
+        assert!(fb.sum() > 5.0);
+    }
+}

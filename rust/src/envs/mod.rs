@@ -1,0 +1,26 @@
+//! Native environments — the paper's §III "classical RL problems"
+//! implemented directly in the compiled language (the toolkit's headline
+//! feature).
+//!
+//! Dynamics are ports of the OpenAI-Gym reference implementations,
+//! constant for constant, so that the interpreted baseline
+//! ([`crate::script`]) and the L1 batched kernel
+//! (`python/compile/kernels/env_step.py`) produce the same trajectories —
+//! the cross-runner integration tests rely on this.
+//!
+//! [`gridrts`] is the MicroRTS-class adversarial substrate standing in for
+//! the paper's JVM runner environments (DESIGN.md §Substitutions).
+
+pub mod acrobot;
+pub mod cartpole;
+pub mod gridrts;
+pub mod linewars;
+pub mod mountain_car;
+pub mod pendulum;
+
+pub use acrobot::Acrobot;
+pub use cartpole::CartPole;
+pub use gridrts::GridRts;
+pub use linewars::LineWars;
+pub use mountain_car::MountainCar;
+pub use pendulum::{Pendulum, PENDULUM_TORQUES};

@@ -1,0 +1,206 @@
+//! MountainCar-v0 — exact port of the Gym dynamics.
+//!
+//! An under-powered car must rock between two hills to reach the right
+//! summit.  Observation `[position, velocity]`, actions `{0: push left,
+//! 1: coast, 2: push right}`, reward -1 per step, terminal at the goal.
+
+use crate::core::env::{Env, Transition};
+use crate::core::rng::Pcg32;
+use crate::core::spaces::{Action, Space};
+use crate::render::{software, Framebuffer};
+
+pub const MIN_POSITION: f32 = -1.2;
+pub const MAX_POSITION: f32 = 0.6;
+pub const MAX_SPEED: f32 = 0.07;
+pub const GOAL_POSITION: f32 = 0.5;
+pub const FORCE: f32 = 0.001;
+pub const GRAVITY: f32 = 0.0025;
+
+/// The mountain-car task.
+#[derive(Clone, Debug)]
+pub struct MountainCar {
+    position: f32,
+    velocity: f32,
+    rng: Pcg32,
+    done: bool,
+}
+
+impl MountainCar {
+    pub fn new() -> Self {
+        MountainCar {
+            position: 0.0,
+            velocity: 0.0,
+            rng: Pcg32::new(0, 0xd3c5b1a49e7f2263),
+            done: true,
+        }
+    }
+
+    pub fn state(&self) -> [f32; 2] {
+        [self.position, self.velocity]
+    }
+
+    pub fn set_state(&mut self, s: [f32; 2]) {
+        self.position = s[0];
+        self.velocity = s[1];
+        self.done = false;
+    }
+
+    /// Pure dynamics shared with the scripted baseline tests.
+    #[inline]
+    pub fn dynamics(pos: f32, vel: f32, action: usize) -> (f32, f32, bool) {
+        let mut velocity =
+            vel + (action as f32 - 1.0) * FORCE + (3.0 * pos).cos() * (-GRAVITY);
+        velocity = velocity.clamp(-MAX_SPEED, MAX_SPEED);
+        let mut position = pos + velocity;
+        position = position.clamp(MIN_POSITION, MAX_POSITION);
+        if position == MIN_POSITION && velocity < 0.0 {
+            velocity = 0.0;
+        }
+        // Gym v0: goal_velocity = 0.
+        let done = position >= GOAL_POSITION;
+        (position, velocity, done)
+    }
+}
+
+impl Default for MountainCar {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Env for MountainCar {
+    fn id(&self) -> String {
+        "MountainCar-v0".into()
+    }
+
+    fn observation_space(&self) -> Space {
+        Space::box1(
+            vec![MIN_POSITION, -MAX_SPEED],
+            vec![MAX_POSITION, MAX_SPEED],
+        )
+    }
+
+    fn action_space(&self) -> Space {
+        Space::Discrete { n: 3 }
+    }
+
+    fn obs_dim(&self) -> usize {
+        2
+    }
+
+    fn seed(&mut self, seed: u64) {
+        self.rng = Pcg32::new(seed, 0xd3c5b1a49e7f2263);
+    }
+
+    fn reset_into(&mut self, obs: &mut [f32]) {
+        self.position = self.rng.uniform(-0.6, -0.4);
+        self.velocity = 0.0;
+        self.done = false;
+        obs[0] = self.position;
+        obs[1] = self.velocity;
+    }
+
+    fn step_into(&mut self, action: &Action, obs: &mut [f32]) -> Transition {
+        debug_assert!(!self.done, "step() called on a finished episode");
+        let (p, v, done) = Self::dynamics(self.position, self.velocity, action.index());
+        self.position = p;
+        self.velocity = v;
+        self.done = done;
+        obs[0] = p;
+        obs[1] = v;
+        Transition {
+            reward: -1.0,
+            done,
+            truncated: false,
+        }
+    }
+
+    fn render(&self, fb: &mut Framebuffer) {
+        software::paint_mountaincar(fb, self.position, self.velocity);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reset_in_start_band() {
+        let mut env = MountainCar::new();
+        env.seed(7);
+        for _ in 0..20 {
+            let obs = env.reset();
+            assert!((-0.6..-0.4).contains(&obs[0]));
+            assert_eq!(obs[1], 0.0);
+        }
+    }
+
+    #[test]
+    fn coasting_in_valley_stays_put() {
+        // At the valley bottom cos(3p) term: p* where cos(3p)=0 -> p=-pi/6.
+        let p = -std::f32::consts::PI / 6.0;
+        let (p2, v2, done) = MountainCar::dynamics(p, 0.0, 1);
+        assert!((p2 - p).abs() < 1e-6);
+        assert!(v2.abs() < 1e-6);
+        assert!(!done);
+    }
+
+    #[test]
+    fn push_right_increases_velocity() {
+        let (_, v_push, _) = MountainCar::dynamics(-0.5, 0.0, 2);
+        let (_, v_coast, _) = MountainCar::dynamics(-0.5, 0.0, 1);
+        assert!(v_push > v_coast);
+    }
+
+    #[test]
+    fn velocity_is_clamped() {
+        let (_, v, _) = MountainCar::dynamics(-0.5, MAX_SPEED, 2);
+        assert!(v <= MAX_SPEED);
+    }
+
+    #[test]
+    fn left_wall_inelastic() {
+        let (p, v, _) = MountainCar::dynamics(MIN_POSITION, -MAX_SPEED, 0);
+        assert_eq!(p, MIN_POSITION);
+        assert_eq!(v, 0.0);
+    }
+
+    #[test]
+    fn reaches_goal_and_terminates() {
+        let (p, _, done) = MountainCar::dynamics(0.49, MAX_SPEED, 2);
+        assert!(p >= GOAL_POSITION);
+        assert!(done);
+    }
+
+    #[test]
+    fn random_policy_never_solves_in_200() {
+        let mut env = MountainCar::new();
+        env.seed(0);
+        let mut rng = Pcg32::new(5, 5);
+        for _ in 0..10 {
+            let (ret, len) = crate::core::env::random_rollout(&mut env, &mut rng, 200);
+            assert_eq!(len, 200);
+            assert_eq!(ret, -200.0);
+        }
+    }
+
+    #[test]
+    fn rocking_policy_beats_constant_push() {
+        // The classic energy-pumping policy: push in the direction of the
+        // velocity. This must reach the goal within 200 steps.
+        let mut env = MountainCar::new();
+        env.seed(3);
+        let mut obs = [0.0f32; 2];
+        env.reset_into(&mut obs);
+        let mut solved = false;
+        for _ in 0..200 {
+            let a = if obs[1] >= 0.0 { 2 } else { 0 };
+            let t = env.step_into(&Action::Discrete(a), &mut obs);
+            if t.done {
+                solved = true;
+                break;
+            }
+        }
+        assert!(solved, "energy pumping should solve mountain car");
+    }
+}

@@ -1,0 +1,247 @@
+//! Pendulum-v1 — exact port of the Gym dynamics, plus the discrete-torque
+//! variant the DQN experiments need.
+//!
+//! Observation `[cos theta, sin theta, theta_dot]`.  The native action
+//! space is a 1-D box `[-2, 2]` (torque); [`PENDULUM_TORQUES`] defines the
+//! 5-level discretisation used when DQN (a discrete-action algorithm, the
+//! paper's Table-I agent) trains on it.  There is no terminal state — the
+//! standard TimeLimit(200) wrapper ends episodes.
+
+use crate::core::env::{Env, Transition};
+use crate::core::rng::Pcg32;
+use crate::core::spaces::{Action, Space};
+use crate::render::{software, Framebuffer};
+
+pub const MAX_SPEED: f32 = 8.0;
+pub const MAX_TORQUE: f32 = 2.0;
+pub const DT: f32 = 0.05;
+pub const G: f32 = 10.0;
+pub const M: f32 = 1.0;
+pub const L: f32 = 1.0;
+
+/// Torque levels for the discrete (DQN-compatible) action mode.
+pub const PENDULUM_TORQUES: [f32; 5] = [-2.0, -1.0, 0.0, 1.0, 2.0];
+
+fn angle_normalize(x: f32) -> f32 {
+    let two_pi = 2.0 * std::f32::consts::PI;
+    ((x + std::f32::consts::PI).rem_euclid(two_pi)) - std::f32::consts::PI
+}
+
+/// The pendulum swing-up task.
+#[derive(Clone, Debug)]
+pub struct Pendulum {
+    theta: f32,
+    theta_dot: f32,
+    rng: Pcg32,
+    /// When true the action space is `Discrete(5)` over
+    /// [`PENDULUM_TORQUES`]; when false it is the Gym box `[-2, 2]`.
+    discrete: bool,
+}
+
+impl Pendulum {
+    /// Gym-faithful continuous-torque pendulum.
+    pub fn new() -> Self {
+        Pendulum {
+            theta: 0.0,
+            theta_dot: 0.0,
+            rng: Pcg32::new(0, 0x6a09e667f3bcc909),
+            discrete: false,
+        }
+    }
+
+    /// Discrete-torque variant for DQN (5 levels).
+    pub fn discrete() -> Self {
+        Pendulum {
+            discrete: true,
+            ..Self::new()
+        }
+    }
+
+    pub fn state(&self) -> [f32; 2] {
+        [self.theta, self.theta_dot]
+    }
+
+    pub fn set_state(&mut self, s: [f32; 2]) {
+        self.theta = s[0];
+        self.theta_dot = s[1];
+    }
+
+    /// Pure dynamics: returns (theta', theta_dot', reward).
+    #[inline]
+    pub fn dynamics(theta: f32, theta_dot: f32, torque: f32) -> (f32, f32, f32) {
+        let u = torque.clamp(-MAX_TORQUE, MAX_TORQUE);
+        let norm = angle_normalize(theta);
+        let cost = norm * norm + 0.1 * theta_dot * theta_dot + 0.001 * u * u;
+        let mut new_dot = theta_dot
+            + (3.0 * G / (2.0 * L) * theta.sin() + 3.0 / (M * L * L) * u) * DT;
+        new_dot = new_dot.clamp(-MAX_SPEED, MAX_SPEED);
+        let new_theta = theta + new_dot * DT;
+        (new_theta, new_dot, -cost)
+    }
+
+    fn torque_of(&self, action: &Action) -> f32 {
+        if self.discrete {
+            PENDULUM_TORQUES[action.index()]
+        } else {
+            action.vector()[0]
+        }
+    }
+
+    fn write_obs(&self, obs: &mut [f32]) {
+        obs[0] = self.theta.cos();
+        obs[1] = self.theta.sin();
+        obs[2] = self.theta_dot;
+    }
+}
+
+impl Default for Pendulum {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Env for Pendulum {
+    fn id(&self) -> String {
+        if self.discrete {
+            "PendulumDiscrete-v1".into()
+        } else {
+            "Pendulum-v1".into()
+        }
+    }
+
+    fn observation_space(&self) -> Space {
+        Space::box1(
+            vec![-1.0, -1.0, -MAX_SPEED],
+            vec![1.0, 1.0, MAX_SPEED],
+        )
+    }
+
+    fn action_space(&self) -> Space {
+        if self.discrete {
+            Space::Discrete {
+                n: PENDULUM_TORQUES.len(),
+            }
+        } else {
+            Space::box1(vec![-MAX_TORQUE], vec![MAX_TORQUE])
+        }
+    }
+
+    fn obs_dim(&self) -> usize {
+        3
+    }
+
+    fn seed(&mut self, seed: u64) {
+        self.rng = Pcg32::new(seed, 0x6a09e667f3bcc909);
+    }
+
+    fn reset_into(&mut self, obs: &mut [f32]) {
+        self.theta = self
+            .rng
+            .uniform(-std::f32::consts::PI, std::f32::consts::PI);
+        self.theta_dot = self.rng.uniform(-1.0, 1.0);
+        self.write_obs(obs);
+    }
+
+    fn step_into(&mut self, action: &Action, obs: &mut [f32]) -> Transition {
+        let torque = self.torque_of(action);
+        let (t, td, reward) = Self::dynamics(self.theta, self.theta_dot, torque);
+        self.theta = t;
+        self.theta_dot = td;
+        self.write_obs(obs);
+        // Never terminal: Pendulum relies on TimeLimit.
+        Transition::live(reward)
+    }
+
+    fn render(&self, fb: &mut Framebuffer) {
+        software::paint_pendulum(fb, self.theta);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn angle_normalize_wraps() {
+        assert!((angle_normalize(0.0)).abs() < 1e-6);
+        assert!((angle_normalize(2.0 * std::f32::consts::PI)).abs() < 1e-6);
+        // 3*pi normalises to +-pi (the two are equivalent angles; float
+        // rounding selects the sign).
+        assert!(
+            (angle_normalize(3.0 * std::f32::consts::PI).abs() - std::f32::consts::PI)
+                .abs()
+                < 1e-5
+        );
+    }
+
+    #[test]
+    fn upright_no_torque_costs_nothing() {
+        let (_, _, r) = Pendulum::dynamics(0.0, 0.0, 0.0);
+        assert_eq!(r, 0.0);
+    }
+
+    #[test]
+    fn hanging_costs_pi_squared() {
+        let (_, _, r) = Pendulum::dynamics(std::f32::consts::PI, 0.0, 0.0);
+        assert!((r + std::f32::consts::PI.powi(2)).abs() < 1e-4);
+    }
+
+    #[test]
+    fn gravity_pulls_from_side() {
+        // theta = pi/2 (horizontal): sin(pi/2)=1 accelerates theta_dot.
+        let (_, td, _) = Pendulum::dynamics(std::f32::consts::FRAC_PI_2, 0.0, 0.0);
+        assert!(td > 0.0);
+    }
+
+    #[test]
+    fn speed_clamped() {
+        let (_, td, _) = Pendulum::dynamics(std::f32::consts::FRAC_PI_2, 100.0, 2.0);
+        assert!(td <= MAX_SPEED);
+    }
+
+    #[test]
+    fn torque_clamped() {
+        let (_, a, _) = Pendulum::dynamics(0.0, 0.0, 100.0);
+        let (_, b, _) = Pendulum::dynamics(0.0, 0.0, MAX_TORQUE);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn discrete_variant_exposes_five_actions() {
+        let env = Pendulum::discrete();
+        assert_eq!(env.action_space(), Space::Discrete { n: 5 });
+        assert_eq!(env.id(), "PendulumDiscrete-v1");
+    }
+
+    #[test]
+    fn continuous_variant_accepts_box_action() {
+        let mut env = Pendulum::new();
+        env.seed(0);
+        let mut obs = [0.0f32; 3];
+        env.reset_into(&mut obs);
+        let t = env.step_into(&Action::Continuous(vec![1.0]), &mut obs);
+        assert!(!t.done);
+        assert!(t.reward <= 0.0);
+    }
+
+    #[test]
+    fn never_terminates() {
+        let mut env = Pendulum::discrete();
+        env.seed(1);
+        let mut obs = [0.0f32; 3];
+        env.reset_into(&mut obs);
+        for _ in 0..1000 {
+            let t = env.step_into(&Action::Discrete(4), &mut obs);
+            assert!(!t.done);
+        }
+    }
+
+    #[test]
+    fn obs_is_unit_circle() {
+        let mut env = Pendulum::new();
+        env.seed(2);
+        let obs = env.reset();
+        let norm = obs[0] * obs[0] + obs[1] * obs[1];
+        assert!((norm - 1.0).abs() < 1e-5);
+    }
+}

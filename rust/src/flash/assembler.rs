@@ -1,0 +1,225 @@
+//! ASVM assembler: text assembly -> [`Program`].
+//!
+//! Syntax, one instruction per line:
+//!
+//! ```text
+//! ; comment
+//! label:
+//!     push 1.5
+//!     load 4        ; slot index
+//!     jz  miss      ; label reference
+//!     halt
+//! frame:            ; required: per-frame entry point
+//!     ...
+//! ```
+//!
+//! Two-pass: collect label offsets, then encode with resolved jumps.  The
+//! special label `frame:` marks the per-frame entry; code before it is
+//! the episode-init section.
+
+use std::collections::HashMap;
+
+use crate::core::error::{CairlError, Result};
+use crate::flash::opcode::{Op, Program, MEMORY_SLOTS};
+
+fn parse_slot(arg: &str, line_no: usize) -> Result<u8> {
+    let slot: usize = arg.parse().map_err(|_| {
+        CairlError::Vm(format!("line {line_no}: bad slot {arg:?}"))
+    })?;
+    if slot >= MEMORY_SLOTS {
+        return Err(CairlError::Vm(format!(
+            "line {line_no}: slot {slot} out of range (max {})",
+            MEMORY_SLOTS - 1
+        )));
+    }
+    Ok(slot as u8)
+}
+
+/// Assemble a program.  Errors carry 1-based line numbers.
+pub fn assemble(src: &str) -> Result<Program> {
+    // Pass 1: label offsets.
+    let mut labels: HashMap<&str, u32> = HashMap::new();
+    let mut offset = 0u32;
+    for (idx, raw) in src.lines().enumerate() {
+        let line = raw.split(';').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(label) = line.strip_suffix(':') {
+            if labels.insert(label, offset).is_some() {
+                return Err(CairlError::Vm(format!(
+                    "line {}: duplicate label {label:?}",
+                    idx + 1
+                )));
+            }
+        } else {
+            offset += 1;
+        }
+    }
+    let frame_entry = *labels.get("frame").ok_or_else(|| {
+        CairlError::Vm("missing required `frame:` label".into())
+    })?;
+
+    // Pass 2: encode.
+    let mut code = Vec::with_capacity(offset as usize);
+    for (idx, raw) in src.lines().enumerate() {
+        let line_no = idx + 1;
+        let line = raw.split(';').next().unwrap_or("").trim();
+        if line.is_empty() || line.ends_with(':') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let mnemonic = parts.next().unwrap();
+        let arg = parts.next();
+        if parts.next().is_some() {
+            return Err(CairlError::Vm(format!(
+                "line {line_no}: trailing tokens in {line:?}"
+            )));
+        }
+        let need_arg = || {
+            arg.ok_or_else(|| {
+                CairlError::Vm(format!("line {line_no}: {mnemonic} needs an operand"))
+            })
+        };
+        let target = |labels: &HashMap<&str, u32>| -> Result<u32> {
+            let name = need_arg()?;
+            labels.get(name).copied().ok_or_else(|| {
+                CairlError::Vm(format!("line {line_no}: unknown label {name:?}"))
+            })
+        };
+        let op = match mnemonic {
+            "push" => {
+                let v: f64 = need_arg()?.parse().map_err(|_| {
+                    CairlError::Vm(format!("line {line_no}: bad number"))
+                })?;
+                Op::Push(v)
+            }
+            "load" => Op::Load(parse_slot(need_arg()?, line_no)?),
+            "store" => Op::Store(parse_slot(need_arg()?, line_no)?),
+            "dup" => Op::Dup,
+            "pop" => Op::Pop,
+            "add" => Op::Add,
+            "sub" => Op::Sub,
+            "mul" => Op::Mul,
+            "div" => Op::Div,
+            "mod" => Op::Mod,
+            "min" => Op::Min,
+            "max" => Op::Max,
+            "neg" => Op::Neg,
+            "abs" => Op::Abs,
+            "floor" => Op::Floor,
+            "sign" => Op::Sign,
+            "eq" => Op::Eq,
+            "ne" => Op::Ne,
+            "lt" => Op::Lt,
+            "le" => Op::Le,
+            "gt" => Op::Gt,
+            "ge" => Op::Ge,
+            "not" => Op::Not,
+            "jmp" => Op::Jmp(target(&labels)?),
+            "jz" => Op::Jz(target(&labels)?),
+            "jnz" => Op::Jnz(target(&labels)?),
+            "halt" => Op::Halt,
+            "rand" => Op::Rand,
+            "input" => Op::Input,
+            "clear" => Op::Clear,
+            "rect" => Op::Rect,
+            "disc" => Op::Disc,
+            "reward" => Op::Reward,
+            "die" => Op::Die,
+            other => {
+                return Err(CairlError::Vm(format!(
+                    "line {line_no}: unknown mnemonic {other:?}"
+                )))
+            }
+        };
+        code.push(op);
+        // Operand sanity: only the ops above consume `arg`.
+        if arg.is_some()
+            && !matches!(
+                mnemonic,
+                "push" | "load" | "store" | "jmp" | "jz" | "jnz"
+            )
+        {
+            return Err(CairlError::Vm(format!(
+                "line {line_no}: {mnemonic} takes no operand"
+            )));
+        }
+    }
+
+    Ok(Program {
+        code,
+        init_entry: 0,
+        frame_entry,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assembles_minimal_program() {
+        let p = assemble("halt\nframe:\n  push 1\n  reward\n  halt\n").unwrap();
+        assert_eq!(p.code.len(), 4);
+        assert_eq!(p.init_entry, 0);
+        assert_eq!(p.frame_entry, 1);
+        assert_eq!(p.code[1], Op::Push(1.0));
+        assert_eq!(p.code[2], Op::Reward);
+    }
+
+    #[test]
+    fn resolves_forward_and_backward_labels() {
+        let src = "
+top:
+    jmp skip
+    die
+skip:
+    halt
+frame:
+    jmp top
+";
+        let p = assemble(src).unwrap();
+        assert_eq!(p.code[0], Op::Jmp(2));
+        assert_eq!(p.code[3], Op::Jmp(0));
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let p = assemble("; header\n\nhalt ; inline\nframe:\nhalt\n").unwrap();
+        assert_eq!(p.code.len(), 2);
+    }
+
+    #[test]
+    fn missing_frame_label_is_error() {
+        assert!(assemble("halt\n").is_err());
+    }
+
+    #[test]
+    fn unknown_mnemonic_reports_line() {
+        let err = assemble("halt\nframe:\nfly\n").unwrap_err().to_string();
+        assert!(err.contains("line 3"), "{err}");
+    }
+
+    #[test]
+    fn unknown_label_is_error() {
+        assert!(assemble("frame:\njmp nowhere\n").is_err());
+    }
+
+    #[test]
+    fn duplicate_label_is_error() {
+        assert!(assemble("a:\nhalt\na:\nframe:\nhalt\n").is_err());
+    }
+
+    #[test]
+    fn slot_bounds_checked() {
+        assert!(assemble("frame:\nload 63\nhalt\n").is_ok());
+        assert!(assemble("frame:\nload 64\nhalt\n").is_err());
+    }
+
+    #[test]
+    fn stray_operand_is_error() {
+        assert!(assemble("frame:\nadd 3\n").is_err());
+        assert!(assemble("frame:\npush\n").is_err());
+    }
+}

@@ -1,0 +1,1044 @@
+//! The toolkit's ASVM game library: Multitask (the Fig.-3 environment),
+//! Pong and Dodge.
+//!
+//! Each game is authored in ASVM assembly (the paper's games are
+//! ActionScript bytecode — foreign code executed by the embedded runner,
+//! not Rust).  Conventions:
+//!
+//! * memory slots 0..8 hold the gameplay state the agent observes,
+//! * every frame ends by rebuilding the display list (game loop inside
+//!   the render loop, §V-B),
+//! * rewards follow the paper's Multitask scheme: positive while the game
+//!   runs, a negative burst when the engine terminates (§IV-C).
+
+use crate::flash::assembler::assemble;
+use crate::flash::runner::FlashEnv;
+use crate::flash::vm::Vm;
+
+/// Multitask — two concurrent mini-games (paper §IV-C).
+///
+/// Task A (pong-like): keep the bouncing ball on the paddle.  Task B
+/// (balance): a randomly drifting bar must stay within +-6; action 3
+/// re-centres it.  Failing either task ends the game.
+///
+/// Actions: 0 noop, 1 paddle left, 2 paddle right, 3 stabilise bar.
+/// Memory: 0 ball_x, 1 ball_y, 2 ball_vx, 3 ball_vy, 4 paddle_x,
+/// 5 bar, 6 bar_v, 7 frames.
+pub const MULTITASK_ASM: &str = "
+; ---- init ----
+    push 32
+    store 0      ; ball_x
+    push 20
+    store 1      ; ball_y
+    push 1.3
+    store 2      ; ball_vx
+    push 1.1
+    store 3      ; ball_vy
+    push 32
+    store 4      ; paddle_x
+    push 0
+    store 5      ; bar
+    push 0
+    store 6      ; bar_v
+    push 0
+    store 7      ; frames
+    halt
+frame:
+; ---- input: paddle / stabiliser ----
+    input
+    push 1
+    eq
+    jz not_left
+    load 4
+    push 2
+    sub
+    push 9
+    max
+    store 4
+not_left:
+    input
+    push 2
+    eq
+    jz not_right
+    load 4
+    push 2
+    add
+    push 55
+    min
+    store 4
+not_right:
+    input
+    push 3
+    eq
+    jz not_stab
+    load 5
+    push 0.7
+    mul
+    store 5
+    load 6
+    push 0.5
+    mul
+    store 6
+not_stab:
+; ---- task B: bar random walk ----
+    load 6
+    rand
+    push 0.5
+    sub
+    push 0.4
+    mul
+    add
+    store 6
+    load 5
+    load 6
+    add
+    store 5
+    load 5
+    abs
+    push 6
+    gt
+    jz bar_ok
+    push -10
+    reward
+    die
+    jmp draw
+bar_ok:
+; ---- task A: ball physics ----
+    load 0
+    load 2
+    add
+    store 0
+    load 0
+    push 2
+    lt
+    jz no_lwall
+    push 2
+    store 0
+    load 2
+    abs
+    store 2
+no_lwall:
+    load 0
+    push 62
+    gt
+    jz no_rwall
+    push 62
+    store 0
+    load 2
+    abs
+    neg
+    store 2
+no_rwall:
+    load 1
+    load 3
+    add
+    store 1
+    load 1
+    push 2
+    lt
+    jz no_top
+    push 2
+    store 1
+    load 3
+    abs
+    store 3
+no_top:
+    load 1
+    push 56
+    ge
+    jz no_bottom
+    load 0
+    load 4
+    sub
+    abs
+    push 9
+    le
+    jz miss
+    push 56
+    store 1
+    load 3
+    abs
+    neg
+    store 3
+    push 0.5
+    reward
+    jmp no_bottom
+miss:
+    push -10
+    reward
+    die
+    jmp draw
+no_bottom:
+; ---- survive: reward + frame count ----
+    load 7
+    push 1
+    add
+    store 7
+    push 1
+    reward
+draw:
+; ---- display list ----
+    push 0
+    clear
+    load 5
+    push 2
+    mul
+    push 30
+    add
+    push 2
+    push 4
+    push 3
+    push 0.5
+    rect
+    load 4
+    push 9
+    sub
+    push 58
+    push 18
+    push 3
+    push 0.8
+    rect
+    load 0
+    load 1
+    push 2
+    push 1
+    disc
+    halt
+";
+
+/// Pong — single-player wall pong.  Actions: 0 noop, 1 left, 2 right.
+/// Reward +0.1 per frame, +1 per paddle return, -5 and game over on a
+/// miss.  Memory: 0 ball_x, 1 ball_y, 2 vx, 3 vy, 4 paddle_x, 5 hits.
+pub const PONG_ASM: &str = "
+    push 20
+    store 0
+    push 10
+    store 1
+    push 1.6
+    store 2
+    push 1.2
+    store 3
+    push 32
+    store 4
+    push 0
+    store 5
+    halt
+frame:
+    input
+    push 1
+    eq
+    jz p_not_left
+    load 4
+    push 3
+    sub
+    push 8
+    max
+    store 4
+p_not_left:
+    input
+    push 2
+    eq
+    jz p_not_right
+    load 4
+    push 3
+    add
+    push 56
+    min
+    store 4
+p_not_right:
+    load 0
+    load 2
+    add
+    store 0
+    load 0
+    push 2
+    lt
+    jz p_no_lwall
+    push 2
+    store 0
+    load 2
+    abs
+    store 2
+p_no_lwall:
+    load 0
+    push 62
+    gt
+    jz p_no_rwall
+    push 62
+    store 0
+    load 2
+    abs
+    neg
+    store 2
+p_no_rwall:
+    load 1
+    load 3
+    add
+    store 1
+    load 1
+    push 2
+    lt
+    jz p_no_top
+    push 2
+    store 1
+    load 3
+    abs
+    store 3
+p_no_top:
+    load 1
+    push 57
+    ge
+    jz p_no_bottom
+    load 0
+    load 4
+    sub
+    abs
+    push 8
+    le
+    jz p_miss
+    push 57
+    store 1
+    load 3
+    abs
+    neg
+    store 3
+    push 1
+    reward
+    load 5
+    push 1
+    add
+    store 5
+    jmp p_no_bottom
+p_miss:
+    push -5
+    reward
+    die
+    jmp p_draw
+p_no_bottom:
+    push 0.1
+    reward
+p_draw:
+    push 0
+    clear
+    load 4
+    push 8
+    sub
+    push 59
+    push 16
+    push 3
+    push 0.8
+    rect
+    load 0
+    load 1
+    push 2
+    push 1
+    disc
+    halt
+";
+
+/// Dodge — avoid three falling blocks.  Actions: 0 noop, 1 left,
+/// 2 right.  Reward +1 per surviving frame, -10 and game over on a hit.
+/// Memory: 0 player_x, 1/2 block0 x/y, 3/4 block1 x/y, 5/6 block2 x/y,
+/// 7 frames.
+pub const DODGE_ASM: &str = "
+    push 32
+    store 0
+    rand
+    push 56
+    mul
+    push 4
+    add
+    store 1
+    push 0
+    store 2
+    rand
+    push 56
+    mul
+    push 4
+    add
+    store 3
+    push -20
+    store 4
+    rand
+    push 56
+    mul
+    push 4
+    add
+    store 5
+    push -40
+    store 6
+    push 0
+    store 7
+    halt
+frame:
+    input
+    push 1
+    eq
+    jz d_not_left
+    load 0
+    push 2.5
+    sub
+    push 5
+    max
+    store 0
+d_not_left:
+    input
+    push 2
+    eq
+    jz d_not_right
+    load 0
+    push 2.5
+    add
+    push 59
+    min
+    store 0
+d_not_right:
+; block 0 falls
+    load 2
+    push 1.4
+    add
+    store 2
+    load 2
+    push 62
+    le
+    jnz d_b0_alive
+    rand
+    push 56
+    mul
+    push 4
+    add
+    store 1
+    push 0
+    store 2
+d_b0_alive:
+; block 1 falls
+    load 4
+    push 1.4
+    add
+    store 4
+    load 4
+    push 62
+    le
+    jnz d_b1_alive
+    rand
+    push 56
+    mul
+    push 4
+    add
+    store 3
+    push 0
+    store 4
+d_b1_alive:
+; block 2 falls
+    load 6
+    push 1.4
+    add
+    store 6
+    load 6
+    push 62
+    le
+    jnz d_b2_alive
+    rand
+    push 56
+    mul
+    push 4
+    add
+    store 5
+    push 0
+    store 6
+d_b2_alive:
+; collisions: block in player band (y >= 54) and |x - player| < 6
+    load 2
+    push 54
+    ge
+    jz d_c0_ok
+    load 1
+    load 0
+    sub
+    abs
+    push 6
+    lt
+    jz d_c0_ok
+    push -10
+    reward
+    die
+    jmp d_draw
+d_c0_ok:
+    load 4
+    push 54
+    ge
+    jz d_c1_ok
+    load 3
+    load 0
+    sub
+    abs
+    push 6
+    lt
+    jz d_c1_ok
+    push -10
+    reward
+    die
+    jmp d_draw
+d_c1_ok:
+    load 6
+    push 54
+    ge
+    jz d_c2_ok
+    load 5
+    load 0
+    sub
+    abs
+    push 6
+    lt
+    jz d_c2_ok
+    push -10
+    reward
+    die
+    jmp d_draw
+d_c2_ok:
+    load 7
+    push 1
+    add
+    store 7
+    push 1
+    reward
+d_draw:
+    push 0
+    clear
+    load 0
+    push 5
+    sub
+    push 58
+    push 10
+    push 4
+    push 0.8
+    rect
+    load 1
+    push 3
+    sub
+    load 2
+    push 6
+    push 6
+    push 1
+    rect
+    load 3
+    push 3
+    sub
+    load 4
+    push 6
+    push 6
+    push 1
+    rect
+    load 5
+    push 3
+    sub
+    load 6
+    push 6
+    push 6
+    push 1
+    rect
+    halt
+";
+
+/// Build the Multitask environment (paper Fig. 3).  Observation: 32
+/// virtual-memory slots; 4 actions.
+pub fn multitask() -> FlashEnv {
+    FlashEnv::new(
+        "Flash/Multitask-v0",
+        Vm::new(assemble(MULTITASK_ASM).expect("multitask assembles")),
+        32,
+        4,
+    )
+    // Normalise the virtual memory for MLP consumption: pixel coords /64,
+    // velocities /2, bar /6, frame counter /1000.
+    .with_obs_scale(&[
+        1.0 / 64.0, // ball_x
+        1.0 / 64.0, // ball_y
+        0.5,        // ball_vx
+        0.5,        // ball_vy
+        1.0 / 64.0, // paddle_x
+        1.0 / 6.0,  // bar
+        1.0,        // bar_v
+        1e-3,       // frames
+    ])
+}
+
+/// Build the Pong environment.
+pub fn pong() -> FlashEnv {
+    FlashEnv::new(
+        "Flash/Pong-v0",
+        Vm::new(assemble(PONG_ASM).expect("pong assembles")),
+        8,
+        3,
+    )
+    .with_obs_scale(&[1.0 / 64.0, 1.0 / 64.0, 0.5, 0.5, 1.0 / 64.0, 0.05])
+}
+
+/// Build the Dodge environment.
+pub fn dodge() -> FlashEnv {
+    FlashEnv::new(
+        "Flash/Dodge-v0",
+        Vm::new(assemble(DODGE_ASM).expect("dodge assembles")),
+        8,
+        3,
+    )
+    .with_obs_scale(&[
+        1.0 / 64.0,
+        1.0 / 64.0,
+        1.0 / 64.0,
+        1.0 / 64.0,
+        1.0 / 64.0,
+        1.0 / 64.0,
+        1.0 / 64.0,
+        1e-3,
+    ])
+}
+
+/// X1337 Space Shooter — the paper's §III novel-game namesake.
+/// Actions: 0 noop, 1 left, 2 right, 3 fire.  Reward +0.05 per frame,
+/// +2 per enemy destroyed, -10 and game over when an enemy lands.
+/// Memory: 0 ship_x, 1 bullet_x, 2 bullet_y (0 = inactive),
+/// 3/4 enemy0 x/y, 5/6 enemy1 x/y, 7 score.
+pub const SHOOTER_ASM: &str = "
+    push 32
+    store 0
+    push 0
+    store 1
+    push 0
+    store 2
+    rand
+    push 52
+    mul
+    push 6
+    add
+    store 3
+    push 0
+    store 4
+    rand
+    push 52
+    mul
+    push 6
+    add
+    store 5
+    push -25
+    store 6
+    push 0
+    store 7
+    halt
+frame:
+    input
+    push 1
+    eq
+    jz s_not_left
+    load 0
+    push 2.5
+    sub
+    push 6
+    max
+    store 0
+s_not_left:
+    input
+    push 2
+    eq
+    jz s_not_right
+    load 0
+    push 2.5
+    add
+    push 58
+    min
+    store 0
+s_not_right:
+; fire: only when the bullet is inactive
+    input
+    push 3
+    eq
+    jz s_not_fire
+    load 2
+    push 0
+    gt
+    jnz s_not_fire
+    load 0
+    store 1
+    push 56
+    store 2
+s_not_fire:
+; bullet flight
+    load 2
+    push 0
+    gt
+    jz s_no_bullet
+    load 2
+    push 3
+    sub
+    push 0
+    max
+    store 2
+s_no_bullet:
+; enemy 0 descends
+    load 4
+    push 0.6
+    add
+    store 4
+; enemy 1 descends
+    load 6
+    push 0.6
+    add
+    store 6
+; bullet vs enemy 0
+    load 2
+    push 0
+    gt
+    jz s_b0_done
+    load 1
+    load 3
+    sub
+    abs
+    push 4
+    lt
+    jz s_b0_done
+    load 2
+    load 4
+    sub
+    abs
+    push 4
+    lt
+    jz s_b0_done
+    push 2
+    reward
+    load 7
+    push 1
+    add
+    store 7
+    rand
+    push 52
+    mul
+    push 6
+    add
+    store 3
+    push 0
+    store 4
+    push 0
+    store 2
+s_b0_done:
+; bullet vs enemy 1
+    load 2
+    push 0
+    gt
+    jz s_b1_done
+    load 1
+    load 5
+    sub
+    abs
+    push 4
+    lt
+    jz s_b1_done
+    load 2
+    load 6
+    sub
+    abs
+    push 4
+    lt
+    jz s_b1_done
+    push 2
+    reward
+    load 7
+    push 1
+    add
+    store 7
+    rand
+    push 52
+    mul
+    push 6
+    add
+    store 5
+    push 0
+    store 6
+    push 0
+    store 2
+s_b1_done:
+; landings end the game
+    load 4
+    push 58
+    ge
+    jz s_e0_ok
+    push -10
+    reward
+    die
+    jmp s_draw
+s_e0_ok:
+    load 6
+    push 58
+    ge
+    jz s_e1_ok
+    push -10
+    reward
+    die
+    jmp s_draw
+s_e1_ok:
+    push 0.05
+    reward
+s_draw:
+    push 0
+    clear
+    load 0
+    push 4
+    sub
+    push 58
+    push 8
+    push 4
+    push 0.8
+    rect
+    load 1
+    load 2
+    push 1
+    push 1
+    disc
+    load 3
+    push 3
+    sub
+    load 4
+    push 6
+    push 4
+    push 1
+    rect
+    load 5
+    push 3
+    sub
+    load 6
+    push 6
+    push 4
+    push 1
+    rect
+    halt
+";
+
+/// Build the X1337 Space Shooter environment.
+pub fn shooter() -> FlashEnv {
+    FlashEnv::new(
+        "Flash/X1337Shooter-v0",
+        Vm::new(assemble(SHOOTER_ASM).expect("shooter assembles")),
+        8,
+        4,
+    )
+    .with_obs_scale(&[
+        1.0 / 64.0,
+        1.0 / 64.0,
+        1.0 / 64.0,
+        1.0 / 64.0,
+        1.0 / 64.0,
+        1.0 / 64.0,
+        1.0 / 64.0,
+        0.05,
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::env::Env;
+    use crate::core::rng::Pcg32;
+    use crate::core::spaces::Action;
+    use crate::render::Framebuffer;
+
+    #[test]
+    fn all_games_assemble_and_run_random_frames() {
+        for mut env in [multitask(), pong(), dodge()] {
+            env.seed(1);
+            let mut rng = Pcg32::new(2, 2);
+            let mut obs = vec![0.0; env.obs_dim()];
+            env.reset_into(&mut obs);
+            for _ in 0..300 {
+                let a = env.action_space().sample(&mut rng);
+                let t = env.step_into(&a, &mut obs);
+                assert!(t.reward.is_finite());
+                if t.done {
+                    env.reset_into(&mut obs);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn multitask_heuristic_outlives_noop() {
+        // Track the ball with the paddle; stabilise when the bar drifts.
+        let run = |policy: &dyn Fn(&[f32]) -> usize, seed: u64| -> u32 {
+            let mut env = multitask();
+            env.seed(seed);
+            let mut obs = vec![0.0; 32];
+            env.reset_into(&mut obs);
+            let mut steps = 0;
+            while steps < 3000 {
+                let a = policy(&obs);
+                let t = env.step_into(&Action::Discrete(a), &mut obs);
+                steps += 1;
+                if t.done {
+                    break;
+                }
+            }
+            steps
+        };
+        // Observations are normalised (coords /64, bar /6).
+        let heuristic = |obs: &[f32]| -> usize {
+            let (ball_x, paddle_x, bar) = (obs[0], obs[4], obs[5]);
+            if bar.abs() > 0.5 {
+                3
+            } else if ball_x < paddle_x - 2.0 / 64.0 {
+                1
+            } else if ball_x > paddle_x + 2.0 / 64.0 {
+                2
+            } else {
+                0
+            }
+        };
+        let noop = |_: &[f32]| 0usize;
+        let mut h_total = 0;
+        let mut n_total = 0;
+        for seed in 0..5 {
+            h_total += run(&heuristic, seed);
+            n_total += run(&noop, seed);
+        }
+        assert!(
+            h_total > n_total * 3,
+            "heuristic {h_total} vs noop {n_total}"
+        );
+        // The heuristic should essentially master the game.
+        assert!(h_total >= 5 * 2000, "heuristic survived only {h_total}");
+    }
+
+    #[test]
+    fn multitask_bar_failure_terminates() {
+        let mut env = multitask();
+        env.seed(3);
+        let mut obs = vec![0.0; 32];
+        env.reset_into(&mut obs);
+        // Never stabilise: only track the ball; the bar must eventually
+        // kill the game (random walk exits +-6).
+        let mut died = false;
+        for _ in 0..20_000 {
+            let a = if obs[0] < obs[4] - 2.0 / 64.0 {
+                1
+            } else if obs[0] > obs[4] + 2.0 / 64.0 {
+                2
+            } else {
+                0
+            };
+            let t = env.step_into(&Action::Discrete(a), &mut obs);
+            if t.done {
+                died = true;
+                assert!(t.reward < 0.0, "death carries the negative burst");
+                break;
+            }
+        }
+        assert!(died, "bar task should eventually fail without action 3");
+    }
+
+    #[test]
+    fn pong_returns_score_in_memory() {
+        let mut env = pong();
+        env.seed(0);
+        let mut obs = vec![0.0; 8];
+        env.reset_into(&mut obs);
+        // Perfect tracking: paddle follows ball x (normalised coords).
+        for _ in 0..600 {
+            let a = if obs[0] < obs[4] - 2.0 / 64.0 {
+                1
+            } else if obs[0] > obs[4] + 2.0 / 64.0 {
+                2
+            } else {
+                0
+            };
+            let t = env.step_into(&Action::Discrete(a), &mut obs);
+            assert!(!t.done, "perfect tracking should never miss");
+        }
+        // hits counter (slot 5) is scaled by 0.05: 2 hits -> 0.1.
+        assert!(obs[5] >= 0.1, "hits counter should advance, got {}", obs[5]);
+    }
+
+    #[test]
+    fn dodge_noop_eventually_hit() {
+        let mut env = dodge();
+        env.seed(7);
+        let mut obs = vec![0.0; 8];
+        env.reset_into(&mut obs);
+        let mut died = false;
+        for _ in 0..5_000 {
+            let t = env.step_into(&Action::Discrete(0), &mut obs);
+            if t.done {
+                died = true;
+                break;
+            }
+        }
+        assert!(died, "standing still must eventually be hit");
+    }
+
+    #[test]
+    fn games_render_nonempty_frames() {
+        for mut env in [multitask(), pong(), dodge()] {
+            env.seed(0);
+            let mut obs = vec![0.0; env.obs_dim()];
+            env.reset_into(&mut obs);
+            env.step_into(&Action::Discrete(0), &mut obs);
+            let mut fb = Framebuffer::standard();
+            env.render(&mut fb);
+            assert!(fb.sum() > 5.0, "{} renders blank", env.id());
+        }
+    }
+
+    #[test]
+    fn multitask_observation_exposes_vm_memory() {
+        let mut env = multitask();
+        env.seed(0);
+        let mut obs = vec![0.0; 32];
+        env.reset_into(&mut obs);
+        assert_eq!(obs[0], 0.5); // ball_x init (32 px, scaled /64)
+        assert_eq!(obs[4], 0.5); // paddle_x init
+        env.step_into(&Action::Discrete(0), &mut obs);
+        assert!((obs[0] - 33.3 / 64.0).abs() < 1e-4); // ball moved by vx
+    }
+
+    #[test]
+    fn shooter_assembles_and_survival_needs_play() {
+        let mut env = shooter();
+        env.seed(2);
+        let mut obs = vec![0.0; 8];
+        env.reset_into(&mut obs);
+        // Noop: enemies land eventually.
+        let mut died = false;
+        for _ in 0..2_000 {
+            let t = env.step_into(&Action::Discrete(0), &mut obs);
+            if t.done {
+                died = true;
+                break;
+            }
+        }
+        assert!(died, "idle ship must lose");
+    }
+
+    #[test]
+    fn shooter_aim_and_fire_scores() {
+        // Heuristic: move under the lowest enemy and fire.
+        let mut env = shooter();
+        env.seed(4);
+        let mut obs = vec![0.0; 8];
+        env.reset_into(&mut obs);
+        let mut score_seen = 0.0f32;
+        for _ in 0..4_000 {
+            let (ship, e0x, e0y, e1x, e1y) = (obs[0], obs[3], obs[4], obs[5], obs[6]);
+            let (tx, _ty) = if e0y > e1y { (e0x, e0y) } else { (e1x, e1y) };
+            let a = if (ship - tx).abs() < 2.0 / 64.0 {
+                3
+            } else if tx < ship {
+                1
+            } else {
+                2
+            };
+            let t = env.step_into(&Action::Discrete(a), &mut obs);
+            score_seen = score_seen.max(obs[7]);
+            if t.done {
+                break;
+            }
+        }
+        // score slot is scaled by 0.05: 2 kills -> 0.1.
+        assert!(score_seen >= 0.1, "heuristic should down some enemies: {score_seen}");
+    }
+}

@@ -1,0 +1,34 @@
+//! The Flash runner — CaiRL's headline feature (§IV-C), as an embedded
+//! bytecode VM.
+//!
+//! The paper embeds LightSpark/Gnash to run ActionScript games inside the
+//! toolkit.  Shipping a real Flash emulator is out of scope for this
+//! image, so this module implements **ASVM**, an ActionScript-class stack
+//! bytecode VM that preserves every property the paper's experiments
+//! exercise (DESIGN.md §Substitutions):
+//!
+//! * games are *foreign bytecode* executed by an embedded interpreter
+//!   behind the standard [`Env`](crate::core::env::Env) trait — the
+//!   runner-bridge architecture of §III-A;
+//! * observations are either the **virtual flash memory** (the VM's
+//!   register file, §IV-C "the game observations are either raw pixels or
+//!   the virtual Flash memory") or raw pixels from the display list;
+//! * the game loop lives *inside the render loop* (§V-B: "Flash games
+//!   have the game loop inside the rendering loop"), so a frame clock
+//!   ([`runner::FrameClock`]) governs execution speed and unlocking it
+//!   reproduces the paper's 4.6x speed-up experiment;
+//! * rewards are positive per surviving frame and negative on
+//!   termination — the Multitask reward scheme of §IV-C.
+//!
+//! Games ship as assembly text ([`assembler`]) compiled to [`opcode`]
+//! programs: [`games`] contains Multitask (the Fig.-3 environment), Pong
+//! and Dodge.
+
+pub mod assembler;
+pub mod games;
+pub mod opcode;
+pub mod runner;
+pub mod vm;
+
+pub use runner::{FlashEnv, FrameClock};
+pub use vm::Vm;

@@ -1,0 +1,102 @@
+//! ASVM instruction set.
+//!
+//! A compact stack machine over f64 values with 64 memory slots (the
+//! "virtual flash memory" the paper exposes as observations) and a
+//! display-list output channel.  Control flow uses absolute code offsets
+//! resolved by the assembler.
+
+/// Number of virtual-flash-memory slots (the observable register file).
+pub const MEMORY_SLOTS: usize = 64;
+
+/// One ASVM instruction.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Op {
+    /// Push an immediate constant.
+    Push(f64),
+    /// Push `memory[slot]`.
+    Load(u8),
+    /// Pop into `memory[slot]`.
+    Store(u8),
+    /// Duplicate the top of stack.
+    Dup,
+    /// Discard the top of stack.
+    Pop,
+    // -- arithmetic (pop b, pop a, push a OP b) --
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Mod,
+    Min,
+    Max,
+    /// Pop a, push -a.
+    Neg,
+    /// Pop a, push |a|.
+    Abs,
+    /// Pop a, push floor(a).
+    Floor,
+    /// Pop a, push sign(a) in {-1, 0, 1}.
+    Sign,
+    // -- comparisons (pop b, pop a, push 1.0 / 0.0) --
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    /// Pop a, push 1.0 if a == 0.0 else 0.0.
+    Not,
+    // -- control flow --
+    /// Unconditional jump to code offset.
+    Jmp(u32),
+    /// Pop; jump if zero.
+    Jz(u32),
+    /// Pop; jump if non-zero.
+    Jnz(u32),
+    /// End the current entry point.
+    Halt,
+    // -- environment syscalls --
+    /// Push a uniform random f64 in [0, 1).
+    Rand,
+    /// Push the current frame's agent action.
+    Input,
+    /// Pop intensity; clear the frame to it.
+    Clear,
+    /// Pop i, h, w, y, x; queue a filled rect draw.
+    Rect,
+    /// Pop i, r, y, x; queue a filled disc draw.
+    Disc,
+    /// Pop delta; accumulate into the frame reward.
+    Reward,
+    /// Flag the game as over (episode terminal).
+    Die,
+}
+
+/// A deferred draw command (the display list the runner rasterises).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DrawCmd {
+    Clear(f32),
+    Rect {
+        x: f32,
+        y: f32,
+        w: f32,
+        h: f32,
+        i: f32,
+    },
+    Disc {
+        x: f32,
+        y: f32,
+        r: f32,
+        i: f32,
+    },
+}
+
+/// A fully assembled program: code plus its two entry points.
+#[derive(Clone, Debug)]
+pub struct Program {
+    pub code: Vec<Op>,
+    /// Entry run once per episode (reset).  Always offset 0.
+    pub init_entry: u32,
+    /// Entry run once per frame (the `frame:` label).
+    pub frame_entry: u32,
+}

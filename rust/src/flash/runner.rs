@@ -1,0 +1,321 @@
+//! The flash runner: [`FlashEnv`] adapts a [`Vm`] game to the [`Env`]
+//! trait, and [`FrameClock`] reproduces the browser's locked frame pacing
+//! (the game loop lives inside the render loop, paper §V-B).
+
+use std::time::{Duration, Instant};
+
+use crate::core::env::{Env, Transition};
+use crate::core::spaces::{Action, Space};
+use crate::flash::opcode::DrawCmd;
+use crate::flash::vm::Vm;
+use crate::render::{raster, Framebuffer};
+
+/// Frame pacing: browsers lock Flash to the SWF frame rate; CaiRL's
+/// runner can unlock it (the paper's 4.6x experiment, §V-B).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FrameClock {
+    /// Enforce a fixed frames-per-second budget (busy-wait like the
+    /// player's timer loop).
+    Locked { fps: f64 },
+    /// Run as fast as the VM executes.
+    Unlocked,
+}
+
+impl FrameClock {
+    fn frame_budget(&self) -> Option<Duration> {
+        match self {
+            FrameClock::Locked { fps } => Some(Duration::from_secs_f64(1.0 / fps)),
+            FrameClock::Unlocked => None,
+        }
+    }
+}
+
+/// An ASVM game behind the standard [`Env`] trait.
+pub struct FlashEnv {
+    id: String,
+    vm: Vm,
+    obs_dim: usize,
+    n_actions: usize,
+    clock: FrameClock,
+    next_deadline: Option<Instant>,
+    frames: u64,
+    started: Option<Instant>,
+    /// Per-slot observation scale (virtual memory is raw game units —
+    /// pixel coordinates, counters — which would blow up a unit-scale
+    /// MLP; games ship sensible normalisers).
+    obs_scale: Vec<f32>,
+}
+
+impl FlashEnv {
+    /// Wrap a VM.  `obs_dim` selects how many virtual-memory slots the
+    /// agent observes; `n_actions` the discrete action count.
+    pub fn new(id: &str, vm: Vm, obs_dim: usize, n_actions: usize) -> FlashEnv {
+        FlashEnv {
+            id: id.to_string(),
+            vm,
+            obs_dim,
+            n_actions,
+            clock: FrameClock::Unlocked,
+            next_deadline: None,
+            frames: 0,
+            started: None,
+            obs_scale: vec![1.0; obs_dim],
+        }
+    }
+
+    /// Set per-slot observation normalisers (builder style).  Slots
+    /// beyond the vector keep scale 1.
+    pub fn with_obs_scale(mut self, scale: &[f32]) -> FlashEnv {
+        for (dst, &s) in self.obs_scale.iter_mut().zip(scale) {
+            *dst = s;
+        }
+        self
+    }
+
+    /// Switch frame pacing (builder style).
+    pub fn with_clock(mut self, clock: FrameClock) -> FlashEnv {
+        self.clock = clock;
+        self
+    }
+
+    /// Change pacing in place.
+    pub fn set_clock(&mut self, clock: FrameClock) {
+        self.clock = clock;
+        self.next_deadline = None;
+    }
+
+    /// Frames executed since construction.
+    pub fn frames(&self) -> u64 {
+        self.frames
+    }
+
+    /// Measured frames per second since the first frame.
+    pub fn measured_fps(&self) -> Option<f64> {
+        let started = self.started?;
+        let secs = started.elapsed().as_secs_f64();
+        (secs > 0.0).then(|| self.frames as f64 / secs)
+    }
+
+    /// Direct VM access (tests, memory inspection).
+    pub fn vm(&self) -> &Vm {
+        &self.vm
+    }
+
+    fn pace(&mut self) {
+        if let Some(budget) = self.clock.frame_budget() {
+            let now = Instant::now();
+            let deadline = self.next_deadline.unwrap_or(now);
+            // Busy-wait to the frame deadline, like the player's timer.
+            while Instant::now() < deadline {
+                std::hint::spin_loop();
+            }
+            self.next_deadline = Some(deadline.max(now) + budget);
+        }
+    }
+
+    fn write_obs(&self, obs: &mut [f32]) {
+        for ((o, m), s) in obs
+            .iter_mut()
+            .zip(self.vm.memory.iter())
+            .zip(self.obs_scale.iter())
+        {
+            *o = *m as f32 * s;
+        }
+    }
+}
+
+impl Env for FlashEnv {
+    fn id(&self) -> String {
+        self.id.clone()
+    }
+
+    fn observation_space(&self) -> Space {
+        // Virtual flash memory is unbounded in general.
+        Space::box1(vec![f32::MIN; self.obs_dim], vec![f32::MAX; self.obs_dim])
+    }
+
+    fn action_space(&self) -> Space {
+        Space::Discrete { n: self.n_actions }
+    }
+
+    fn obs_dim(&self) -> usize {
+        self.obs_dim
+    }
+
+    fn seed(&mut self, seed: u64) {
+        self.vm.seed(seed);
+    }
+
+    fn reset_into(&mut self, obs: &mut [f32]) {
+        self.vm
+            .reset()
+            .unwrap_or_else(|e| panic!("{}: init trap: {e}", self.id));
+        self.next_deadline = None;
+        self.write_obs(obs);
+    }
+
+    fn step_into(&mut self, action: &Action, obs: &mut [f32]) -> Transition {
+        self.pace();
+        if self.started.is_none() {
+            self.started = Some(Instant::now());
+        }
+        let reward = self
+            .vm
+            .frame(action.index() as f64)
+            .unwrap_or_else(|e| panic!("{}: frame trap: {e}", self.id));
+        self.frames += 1;
+        self.write_obs(obs);
+        Transition {
+            reward: reward as f32,
+            done: self.vm.game_over,
+            truncated: false,
+        }
+    }
+
+    fn render(&self, fb: &mut Framebuffer) {
+        for cmd in &self.vm.display {
+            match *cmd {
+                DrawCmd::Clear(i) => fb.clear(i),
+                DrawCmd::Rect { x, y, w, h, i } => raster::fill_rect(
+                    fb,
+                    x as i32,
+                    y as i32,
+                    (x + w) as i32,
+                    (y + h) as i32,
+                    i,
+                ),
+                DrawCmd::Disc { x, y, r, i } => raster::fill_disc(fb, x, y, r, i),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flash::assembler::assemble;
+
+    fn tiny_game() -> Vm {
+        // Survives 10 frames then dies; draws one rect per frame.
+        Vm::new(
+            assemble(
+                "
+push 0
+store 0
+halt
+frame:
+    push 0
+    clear
+    load 0
+    push 1
+    add
+    store 0
+    push 10
+    push 10
+    push 5
+    push 5
+    push 1
+    rect
+    push 1
+    reward
+    load 0
+    push 10
+    ge
+    jz alive
+    push -5
+    reward
+    die
+alive:
+    halt
+",
+            )
+            .unwrap(),
+        )
+    }
+
+    #[test]
+    fn env_runs_episode_to_termination() {
+        let mut env = FlashEnv::new("Flash/Tiny-v0", tiny_game(), 4, 2);
+        env.seed(0);
+        let mut obs = vec![0.0; 4];
+        env.reset_into(&mut obs);
+        assert_eq!(obs[0], 0.0);
+        let mut total = 0.0;
+        let mut steps = 0;
+        loop {
+            let t = env.step_into(&Action::Discrete(0), &mut obs);
+            total += t.reward;
+            steps += 1;
+            if t.done {
+                break;
+            }
+        }
+        assert_eq!(steps, 10);
+        assert_eq!(total, 10.0 - 5.0); // +1 x10, -5 at death
+        assert_eq!(obs[0], 10.0); // frame counter visible in memory
+    }
+
+    #[test]
+    fn reset_restarts_the_game() {
+        let mut env = FlashEnv::new("Flash/Tiny-v0", tiny_game(), 1, 2);
+        let mut obs = vec![0.0; 1];
+        env.reset_into(&mut obs);
+        for _ in 0..10 {
+            env.step_into(&Action::Discrete(0), &mut obs);
+        }
+        env.reset_into(&mut obs);
+        assert_eq!(obs[0], 0.0);
+        let t = env.step_into(&Action::Discrete(0), &mut obs);
+        assert!(!t.done);
+    }
+
+    #[test]
+    fn render_replays_display_list() {
+        let mut env = FlashEnv::new("Flash/Tiny-v0", tiny_game(), 1, 2);
+        let mut obs = vec![0.0; 1];
+        env.reset_into(&mut obs);
+        env.step_into(&Action::Discrete(0), &mut obs);
+        let mut fb = Framebuffer::standard();
+        env.render(&mut fb);
+        assert_eq!(fb.sum(), 25.0); // 5x5 rect at intensity 1
+    }
+
+    #[test]
+    fn locked_clock_caps_fps() {
+        let mut env = FlashEnv::new("Flash/Tiny-v0", tiny_game(), 1, 2)
+            .with_clock(FrameClock::Locked { fps: 200.0 });
+        let mut obs = vec![0.0; 1];
+        env.reset_into(&mut obs);
+        let t0 = Instant::now();
+        for _ in 0..10 {
+            env.step_into(&Action::Discrete(0), &mut obs);
+        }
+        // 10 frames at 200 fps >= ~45 ms (first frame unpaced).
+        assert!(t0.elapsed() >= Duration::from_millis(40));
+    }
+
+    #[test]
+    fn unlocked_is_much_faster_than_locked() {
+        let run = |clock: FrameClock| {
+            let mut env =
+                FlashEnv::new("Flash/Tiny-v0", tiny_game(), 1, 2).with_clock(clock);
+            let mut obs = vec![0.0; 1];
+            let t0 = Instant::now();
+            for _ in 0..5 {
+                env.reset_into(&mut obs);
+                for _ in 0..10 {
+                    if env.step_into(&Action::Discrete(0), &mut obs).done {
+                        break;
+                    }
+                }
+            }
+            t0.elapsed()
+        };
+        let locked = run(FrameClock::Locked { fps: 100.0 });
+        let unlocked = run(FrameClock::Unlocked);
+        assert!(
+            locked.as_secs_f64() > unlocked.as_secs_f64() * 4.0,
+            "locked={locked:?} unlocked={unlocked:?}"
+        );
+    }
+}

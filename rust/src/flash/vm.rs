@@ -1,0 +1,373 @@
+//! The ASVM bytecode interpreter.
+//!
+//! Executes one entry point per call (init or frame), producing a display
+//! list, a reward accumulator and a game-over flag.  A gas limit bounds
+//! per-frame execution so malformed programs trap instead of hanging the
+//! toolkit (the paper's emulator gets the same property from the Flash
+//! frame budget).
+
+use crate::core::error::{CairlError, Result};
+use crate::core::rng::Pcg32;
+use crate::flash::opcode::{DrawCmd, Op, Program, MEMORY_SLOTS};
+
+/// Maximum instructions per entry-point run.
+pub const GAS_LIMIT: u64 = 200_000;
+
+/// One loaded ASVM game instance.
+pub struct Vm {
+    program: Program,
+    /// The virtual flash memory — observable by RL agents.
+    pub memory: [f64; MEMORY_SLOTS],
+    stack: Vec<f64>,
+    rng: Pcg32,
+    /// Agent action for the current frame (read by `Input`).
+    pub input: f64,
+    /// Reward accumulated during the current run.
+    pub reward: f64,
+    /// Set by `Die`.
+    pub game_over: bool,
+    /// Display list of the most recent frame.
+    pub display: Vec<DrawCmd>,
+    /// Total instructions retired (profiling).
+    pub instructions: u64,
+}
+
+impl Vm {
+    pub fn new(program: Program) -> Vm {
+        Vm {
+            program,
+            memory: [0.0; MEMORY_SLOTS],
+            stack: Vec::with_capacity(32),
+            rng: Pcg32::new(0, 0x14057b7ef767814f),
+            input: 0.0,
+            reward: 0.0,
+            game_over: false,
+            display: Vec::new(),
+            instructions: 0,
+        }
+    }
+
+    pub fn seed(&mut self, seed: u64) {
+        self.rng = Pcg32::new(seed, 0x14057b7ef767814f);
+    }
+
+    /// Reset episode state and run the init section.
+    pub fn reset(&mut self) -> Result<()> {
+        self.memory = [0.0; MEMORY_SLOTS];
+        self.game_over = false;
+        self.reward = 0.0;
+        self.input = 0.0;
+        self.run(self.program.init_entry)
+    }
+
+    /// Run one frame: set the agent action, execute the frame entry.
+    /// Returns the frame's accumulated reward.
+    pub fn frame(&mut self, action: f64) -> Result<f64> {
+        self.input = action;
+        self.reward = 0.0;
+        self.run(self.program.frame_entry)?;
+        Ok(self.reward)
+    }
+
+    fn trap(&self, pc: usize, msg: &str) -> CairlError {
+        CairlError::Vm(format!("pc={pc}: {msg}"))
+    }
+
+    fn run(&mut self, entry: u32) -> Result<()> {
+        let code = std::mem::take(&mut self.program.code);
+        let result = self.run_inner(&code, entry);
+        self.program.code = code;
+        result
+    }
+
+    fn run_inner(&mut self, code: &[Op], entry: u32) -> Result<()> {
+        let mut pc = entry as usize;
+        let mut gas = 0u64;
+        self.display.clear();
+        self.stack.clear();
+
+        macro_rules! pop {
+            () => {
+                match self.stack.pop() {
+                    Some(v) => v,
+                    None => return Err(self.trap(pc, "stack underflow")),
+                }
+            };
+        }
+        macro_rules! bin {
+            ($f:expr) => {{
+                let b = pop!();
+                let a = pop!();
+                self.stack.push($f(a, b));
+            }};
+        }
+
+        loop {
+            gas += 1;
+            if gas > GAS_LIMIT {
+                return Err(self.trap(pc, "gas limit exceeded"));
+            }
+            let op = *code
+                .get(pc)
+                .ok_or_else(|| self.trap(pc, "pc out of bounds"))?;
+            pc += 1;
+            match op {
+                Op::Push(v) => self.stack.push(v),
+                Op::Load(slot) => self.stack.push(self.memory[slot as usize]),
+                Op::Store(slot) => {
+                    let v = pop!();
+                    self.memory[slot as usize] = v;
+                }
+                Op::Dup => {
+                    let v = *self
+                        .stack
+                        .last()
+                        .ok_or_else(|| self.trap(pc, "dup on empty stack"))?;
+                    self.stack.push(v);
+                }
+                Op::Pop => {
+                    pop!();
+                }
+                Op::Add => bin!(|a, b| a + b),
+                Op::Sub => bin!(|a, b| a - b),
+                Op::Mul => bin!(|a, b| a * b),
+                Op::Div => bin!(|a, b| a / b),
+                Op::Mod => bin!(|a: f64, b: f64| a.rem_euclid(b)),
+                Op::Min => bin!(|a: f64, b: f64| a.min(b)),
+                Op::Max => bin!(|a: f64, b: f64| a.max(b)),
+                Op::Neg => {
+                    let v = pop!();
+                    self.stack.push(-v);
+                }
+                Op::Abs => {
+                    let v = pop!();
+                    self.stack.push(v.abs());
+                }
+                Op::Floor => {
+                    let v = pop!();
+                    self.stack.push(v.floor());
+                }
+                Op::Sign => {
+                    let v = pop!();
+                    self.stack.push(if v > 0.0 {
+                        1.0
+                    } else if v < 0.0 {
+                        -1.0
+                    } else {
+                        0.0
+                    });
+                }
+                Op::Eq => bin!(|a, b| (a == b) as u8 as f64),
+                Op::Ne => bin!(|a, b| (a != b) as u8 as f64),
+                Op::Lt => bin!(|a, b| (a < b) as u8 as f64),
+                Op::Le => bin!(|a, b| (a <= b) as u8 as f64),
+                Op::Gt => bin!(|a, b| (a > b) as u8 as f64),
+                Op::Ge => bin!(|a, b| (a >= b) as u8 as f64),
+                Op::Not => {
+                    let v = pop!();
+                    self.stack.push((v == 0.0) as u8 as f64);
+                }
+                Op::Jmp(t) => pc = t as usize,
+                Op::Jz(t) => {
+                    if pop!() == 0.0 {
+                        pc = t as usize;
+                    }
+                }
+                Op::Jnz(t) => {
+                    if pop!() != 0.0 {
+                        pc = t as usize;
+                    }
+                }
+                Op::Halt => break,
+                Op::Rand => self.stack.push(self.rng.next_f64()),
+                Op::Input => self.stack.push(self.input),
+                Op::Clear => {
+                    let i = pop!();
+                    self.display.push(DrawCmd::Clear(i as f32));
+                }
+                Op::Rect => {
+                    let i = pop!();
+                    let h = pop!();
+                    let w = pop!();
+                    let y = pop!();
+                    let x = pop!();
+                    self.display.push(DrawCmd::Rect {
+                        x: x as f32,
+                        y: y as f32,
+                        w: w as f32,
+                        h: h as f32,
+                        i: i as f32,
+                    });
+                }
+                Op::Disc => {
+                    let i = pop!();
+                    let r = pop!();
+                    let y = pop!();
+                    let x = pop!();
+                    self.display.push(DrawCmd::Disc {
+                        x: x as f32,
+                        y: y as f32,
+                        r: r as f32,
+                        i: i as f32,
+                    });
+                }
+                Op::Reward => {
+                    let v = pop!();
+                    self.reward += v;
+                }
+                Op::Die => self.game_over = true,
+            }
+        }
+        self.instructions += gas;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flash::assembler::assemble;
+
+    fn vm(src: &str) -> Vm {
+        Vm::new(assemble(src).unwrap())
+    }
+
+    #[test]
+    fn arithmetic_and_store() {
+        let mut m = vm("halt\nframe:\npush 6\npush 7\nmul\nstore 0\nhalt\n");
+        m.reset().unwrap();
+        m.frame(0.0).unwrap();
+        assert_eq!(m.memory[0], 42.0);
+    }
+
+    #[test]
+    fn init_runs_on_reset_only() {
+        let mut m = vm("push 5\nstore 1\nhalt\nframe:\nload 1\npush 1\nadd\nstore 1\nhalt\n");
+        m.reset().unwrap();
+        assert_eq!(m.memory[1], 5.0);
+        m.frame(0.0).unwrap();
+        m.frame(0.0).unwrap();
+        assert_eq!(m.memory[1], 7.0);
+        m.reset().unwrap();
+        assert_eq!(m.memory[1], 5.0);
+    }
+
+    #[test]
+    fn input_is_visible() {
+        let mut m = vm("halt\nframe:\ninput\nstore 2\nhalt\n");
+        m.reset().unwrap();
+        m.frame(3.0).unwrap();
+        assert_eq!(m.memory[2], 3.0);
+    }
+
+    #[test]
+    fn branches_and_loops() {
+        // Sum 0..10 with a loop.
+        let src = "
+halt
+frame:
+    push 0
+    store 0      ; i = 0
+    push 0
+    store 1      ; s = 0
+loop:
+    load 0
+    push 10
+    ge
+    jnz done
+    load 1
+    load 0
+    add
+    store 1
+    load 0
+    push 1
+    add
+    store 0
+    jmp loop
+done:
+    halt
+";
+        let mut m = vm(src);
+        m.reset().unwrap();
+        m.frame(0.0).unwrap();
+        assert_eq!(m.memory[1], 45.0);
+    }
+
+    #[test]
+    fn reward_and_die() {
+        let mut m = vm("halt\nframe:\npush 2.5\nreward\npush -1\nreward\ndie\nhalt\n");
+        m.reset().unwrap();
+        let r = m.frame(0.0).unwrap();
+        assert_eq!(r, 1.5);
+        assert!(m.game_over);
+        m.reset().unwrap();
+        assert!(!m.game_over);
+    }
+
+    #[test]
+    fn display_list_is_rebuilt_each_frame() {
+        let src = "halt\nframe:\npush 0\nclear\npush 1\npush 2\npush 3\npush 4\npush 0.5\nrect\nhalt\n";
+        let mut m = vm(src);
+        m.reset().unwrap();
+        m.frame(0.0).unwrap();
+        assert_eq!(m.display.len(), 2);
+        m.frame(0.0).unwrap();
+        assert_eq!(m.display.len(), 2);
+        match m.display[1] {
+            DrawCmd::Rect { x, y, w, h, i } => {
+                assert_eq!((x, y, w, h, i), (1.0, 2.0, 3.0, 4.0, 0.5));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn rand_is_seeded() {
+        let mut a = vm("halt\nframe:\nrand\nstore 0\nhalt\n");
+        let mut b = vm("halt\nframe:\nrand\nstore 0\nhalt\n");
+        a.seed(9);
+        b.seed(9);
+        a.reset().unwrap();
+        b.reset().unwrap();
+        for _ in 0..10 {
+            a.frame(0.0).unwrap();
+            b.frame(0.0).unwrap();
+            assert_eq!(a.memory[0], b.memory[0]);
+        }
+    }
+
+    #[test]
+    fn stack_underflow_traps() {
+        let mut m = vm("halt\nframe:\nadd\nhalt\n");
+        m.reset().unwrap();
+        assert!(m.frame(0.0).is_err());
+    }
+
+    #[test]
+    fn infinite_loop_hits_gas_limit() {
+        let mut m = vm("halt\nframe:\nspin:\njmp spin\n");
+        m.reset().unwrap();
+        let err = m.frame(0.0).unwrap_err().to_string();
+        assert!(err.contains("gas"), "{err}");
+    }
+
+    #[test]
+    fn comparison_ops() {
+        let mut m = vm("halt\nframe:\npush 3\npush 3\neq\nstore 0\npush 2\npush 3\nlt\nstore 1\npush 2\npush 3\nge\nstore 2\nhalt\n");
+        m.reset().unwrap();
+        m.frame(0.0).unwrap();
+        assert_eq!(m.memory[0], 1.0);
+        assert_eq!(m.memory[1], 1.0);
+        assert_eq!(m.memory[2], 0.0);
+    }
+
+    #[test]
+    fn sign_and_abs() {
+        let mut m = vm("halt\nframe:\npush -7\nsign\nstore 0\npush -7\nabs\nstore 1\npush 0\nsign\nstore 2\nhalt\n");
+        m.reset().unwrap();
+        m.frame(0.0).unwrap();
+        assert_eq!(m.memory[0], -1.0);
+        assert_eq!(m.memory[1], 7.0);
+        assert_eq!(m.memory[2], 0.0);
+    }
+}

@@ -1,0 +1,70 @@
+//! # CaiRL — a high-performance reinforcement-learning environment toolkit
+//!
+//! Reproduction of *"CaiRL: A High-Performance Reinforcement Learning
+//! Environment Toolkit"* (Andersen, Goodwin, Granmo — IEEE CoG 2022) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the toolkit itself: native environments,
+//!   wrappers, spaces, runners (interpreted-script and bytecode-VM
+//!   surrogates for the paper's Python/Flash runtimes), a software
+//!   renderer, agents, energy accounting, tournaments, and the experiment
+//!   coordinator.  Rust replaces the paper's C++; the paper's compile-time
+//!   template composition maps onto Rust generics/monomorphisation.
+//! * **L2 (python/compile/model.py)** — the DQN compute graph (Table I),
+//!   AOT-lowered once to HLO text.
+//! * **L1 (python/compile/kernels/)** — fused Pallas kernels (Q-network
+//!   forward/backward, batched CartPole physics, batched software
+//!   rasteriser), lowered inside the L2 artifacts.
+//!
+//! Python never runs after `make artifacts`: [`runtime`] loads the HLO
+//! artifacts through the PJRT C API (`xla` crate) and the whole training /
+//! benchmarking hot path is Rust.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use cairl::prelude::*;
+//!
+//! // Gym-compatible dynamic API (paper Listing 2):
+//! let mut env = cairl::make("CartPole-v1").unwrap();
+//! let obs = env.reset();
+//! let mut rng = Pcg32::new(0, 1);
+//! for _ in 0..200 {
+//!     let a = env.action_space().sample(&mut rng);
+//!     let step = env.step(&a);
+//!     if step.done { break; }
+//! }
+//! # let _ = obs;
+//!
+//! // Zero-cost static composition (paper Listing 1):
+//! let env = Flatten::new(TimeLimit::new(CartPole::new(), 200));
+//! # let _ = env;
+//! ```
+
+pub mod agents;
+pub mod coordinator;
+pub mod core;
+pub mod energy;
+pub mod envs;
+pub mod flash;
+pub mod puzzles;
+pub mod render;
+pub mod runtime;
+pub mod script;
+pub mod tooling;
+pub mod wrappers;
+
+pub use crate::core::env::{DynEnv, Env, Step};
+pub use crate::core::spaces::{Action, Space};
+pub use crate::coordinator::registry::{list_envs, make};
+
+/// Everything a typical experiment needs.
+pub mod prelude {
+    pub use crate::coordinator::registry::{list_envs, make};
+    pub use crate::core::env::{DynEnv, Env, Step};
+    pub use crate::core::rng::Pcg32;
+    pub use crate::core::spaces::{Action, Space};
+    pub use crate::envs::{Acrobot, CartPole, MountainCar, Pendulum};
+    pub use crate::render::Framebuffer;
+    pub use crate::wrappers::{Flatten, RecordEpisodeStatistics, TimeLimit};
+}

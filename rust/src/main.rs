@@ -1,0 +1,240 @@
+//! The `cairl` launcher: Gym-style toolkit operations from the command
+//! line (paper §III: "improve setup, development, and execution times").
+//!
+//! Argument parsing is in-tree (the offline build has no clap); see
+//! [`Args`] for the tiny flag grammar: `cairl <command> [--flag value]...`.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use cairl::agents::dqn::{DqnAgent, DqnConfig};
+use cairl::coordinator::config::{DqnSettings, ExperimentConfig};
+use cairl::coordinator::experiment::{run_stepping_workload, RenderMode};
+use cairl::core::env::Env;
+use cairl::core::rng::Pcg32;
+use cairl::energy::EnergyTracker;
+use cairl::envs::gridrts::{play_match, Bot, HarvestBot, MatchResult, RandomBot, RushBot};
+use cairl::render::Framebuffer;
+use cairl::runtime::Runtime;
+use cairl::tooling::tournament::{swiss, GameOutcome};
+use cairl::{list_envs, make};
+
+/// Parsed command line: a subcommand plus `--key value` / `--switch`
+/// flags.
+struct Args {
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args> {
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let arg = &argv[i];
+            let Some(key) = arg.strip_prefix("--") else {
+                bail!("unexpected positional argument {arg:?}");
+            };
+            // Boolean switch if next token is absent or another flag.
+            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                flags.insert(key.to_string(), argv[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        }
+        Ok(Args { flags })
+    }
+
+    fn str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.into())
+    }
+
+    fn u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} {v:?}")),
+        }
+    }
+
+    fn flag(&self, key: &str) -> bool {
+        self.flags.get(key).map(|v| v == "true").unwrap_or(false)
+    }
+
+    fn opt(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+}
+
+const USAGE: &str = "\
+cairl — CaiRL: a high-performance RL environment toolkit (CoG 2022 reproduction)
+
+USAGE: cairl <command> [flags]
+
+COMMANDS:
+  list-envs                       list every registered environment id
+  run        --env ID --steps N --seed S [--render] [--ascii]
+                                  random-action stepping workload + throughput
+  train      --env NAME [--seed S] [--max-steps N] [--config FILE.json]
+                                  train DQN via the PJRT artifacts
+                                  (NAME: cartpole|mountaincar|acrobot|pendulum|multitask)
+  config     [--show-dqn]         print config defaults / the Table-I DQN block
+  tournament [--rounds N] [--seed S]
+                                  Swiss tournament between the GridRTS bots
+  energy     --env ID --steps N [--render]
+                                  energy/carbon for a stepping workload (Table II)
+";
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(command) = argv.first() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..])?;
+
+    match command.as_str() {
+        "list-envs" => {
+            for (id, summary) in list_envs() {
+                println!("{id:<28} {summary}");
+            }
+        }
+        "run" => {
+            let env_id = args.str("env", "CartPole-v1");
+            let steps = args.u64("steps", 100_000)?;
+            let seed = args.u64("seed", 0)?;
+            let mut e = make(&env_id).map_err(|e| anyhow!("{e}"))?;
+            let mode = if args.flag("render") {
+                RenderMode::Software
+            } else {
+                RenderMode::Console
+            };
+            let r = run_stepping_workload(&mut e, steps, seed, mode);
+            println!(
+                "{env_id}: {} steps, {} episodes, {:.3}s, {:.0} steps/s",
+                r.steps,
+                r.episodes,
+                r.elapsed.as_secs_f64(),
+                r.throughput
+            );
+            if args.flag("ascii") {
+                let mut fb = Framebuffer::standard();
+                e.render(&mut fb);
+                println!("{}", fb.to_ascii());
+            }
+        }
+        "train" => {
+            let env = args.str("env", "cartpole");
+            let seed = args.u64("seed", 0)?;
+            let settings = match args.opt("config") {
+                Some(path) => ExperimentConfig::load(std::path::Path::new(path))
+                    .map_err(|e| anyhow!("{e}"))?
+                    .dqn,
+                None => DqnSettings::default(),
+            };
+            let mut cfg: DqnConfig = settings.to_config(seed);
+            if let Some(ms) = args.opt("max-steps") {
+                cfg.max_steps = ms.parse().context("--max-steps")?;
+            }
+            // Solve thresholds per env (paper: train "until mastering").
+            let (env_id, solve_return): (&str, f32) = match env.as_str() {
+                "cartpole" => ("CartPole-v1", 195.0),
+                "mountaincar" => ("MountainCar-v0", -130.0),
+                "acrobot" => ("Acrobot-v1", -100.0),
+                "pendulum" => ("PendulumDiscrete-v1", -300.0),
+                "multitask" => ("Flash/Multitask-v0", 800.0),
+                other => bail!("unknown artifact env {other:?}"),
+            };
+            cfg.solve_return = solve_return;
+            let mut rt =
+                Runtime::from_default_artifacts().map_err(|e| anyhow!("{e}"))?;
+            let mut agent =
+                DqnAgent::new(&rt, &env, cfg).map_err(|e| anyhow!("{e}"))?;
+            let mut environment = make(env_id).map_err(|e| anyhow!("{e}"))?;
+            println!("training DQN on {env_id} (artifacts: dqn_*_{env})");
+            let outcome = agent
+                .train(&mut rt, &mut environment)
+                .map_err(|e| anyhow!("{e}"))?;
+            println!(
+                "solved={} steps={} train_steps={} episodes={} wall={:.1}s mean_return={:.1}",
+                outcome.solved,
+                outcome.env_steps,
+                outcome.train_steps,
+                outcome.episodes,
+                outcome.wall_time.as_secs_f64(),
+                outcome.final_mean_return
+            );
+        }
+        "config" => {
+            if args.flag("show-dqn") {
+                println!("Table I — DQN hyperparameters");
+                for (k, v) in DqnSettings::default().table_one() {
+                    println!("  {k:<22} {v}");
+                }
+            } else {
+                println!("{}", ExperimentConfig::default().render());
+            }
+        }
+        "tournament" => {
+            let rounds = args.u64("rounds", 3)? as u32;
+            let seed = args.u64("seed", 0)?;
+            let mut bots: Vec<Box<dyn Bot>> = vec![
+                Box::new(RushBot),
+                Box::new(HarvestBot),
+                Box::new(RandomBot(Pcg32::new(seed, 1))),
+                Box::new(RandomBot(Pcg32::new(seed, 2))),
+            ];
+            let names: Vec<String> =
+                bots.iter().map(|b| b.name().to_string()).collect();
+            let mut rng = Pcg32::new(seed, 99);
+            let standings = swiss(bots.len(), rounds, &mut rng, |a, b| {
+                let result = {
+                    // Split borrow: take the two bots out by index.
+                    let (lo, hi) = (a.min(b), a.max(b));
+                    let (left, right) = bots.split_at_mut(hi);
+                    let (bot_lo, bot_hi) = (&mut left[lo], &mut right[0]);
+                    if a < b {
+                        play_match(bot_lo.as_mut(), bot_hi.as_mut())
+                    } else {
+                        play_match(bot_hi.as_mut(), bot_lo.as_mut())
+                    }
+                };
+                match result {
+                    MatchResult::Win(0) => GameOutcome::WinA,
+                    MatchResult::Win(_) => GameOutcome::WinB,
+                    MatchResult::Draw => GameOutcome::Draw,
+                }
+            });
+            println!("Swiss tournament, {rounds} rounds:");
+            for (rank, s) in standings.iter().enumerate() {
+                println!(
+                    "  {}. {:<10} {} pts ({} played)",
+                    rank + 1,
+                    names[s.player],
+                    s.score,
+                    s.played
+                );
+            }
+        }
+        "energy" => {
+            let env_id = args.str("env", "CartPole-v1");
+            let steps = args.u64("steps", 100_000)?;
+            let mut e = make(&env_id).map_err(|e| anyhow!("{e}"))?;
+            let mode = if args.flag("render") {
+                RenderMode::SimulatedHardware
+            } else {
+                RenderMode::Console
+            };
+            let tracker = EnergyTracker::start_default(&env_id);
+            run_stepping_workload(&mut e, steps, 0, mode);
+            let report = tracker.stop();
+            println!("{report}");
+        }
+        other => {
+            print!("{USAGE}");
+            bail!("unknown command {other:?}");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,307 @@
+//! Lights Out: pressing a cell toggles it and its orthogonal neighbours;
+//! turn every light off.
+//!
+//! The solver is exact: Lights Out over GF(2) is a linear system
+//! `A x = b` where `A` is the press-influence matrix — Gaussian
+//! elimination yields a minimal certificate of solvability, which the
+//! generator uses to emit only solvable instances (press-scrambling also
+//! guarantees it; the solver double-checks).
+
+use crate::core::env::{Env, Transition};
+use crate::core::rng::Pcg32;
+use crate::core::spaces::{Action, Space};
+use crate::render::{raster, Framebuffer};
+
+/// A Lights Out board of side `n`.
+#[derive(Clone, Debug)]
+pub struct LightsOut {
+    n: usize,
+    grid: Vec<bool>,
+    moves: u32,
+    rng: Pcg32,
+    scramble_presses: u32,
+}
+
+impl LightsOut {
+    pub fn new(n: usize) -> LightsOut {
+        LightsOut {
+            n,
+            grid: vec![false; n * n],
+            moves: 0,
+            rng: Pcg32::new(0, 0x1f123bb5159a55e5),
+            scramble_presses: (n * n) as u32,
+        }
+    }
+
+    /// Curriculum knob: scramble with exactly `k` random presses (easier
+    /// instances for small `k`).
+    pub fn with_scramble(mut self, k: u32) -> LightsOut {
+        self.scramble_presses = k;
+        self
+    }
+
+    /// Construct the registered env variant.
+    pub fn env(n: usize) -> LightsOut {
+        LightsOut::new(n)
+    }
+
+    pub fn side(&self) -> usize {
+        self.n
+    }
+
+    pub fn grid(&self) -> &[bool] {
+        &self.grid
+    }
+
+    /// Press cell `(r, c)`: toggle it and its orthogonal neighbours.
+    pub fn press(&mut self, r: usize, c: usize) {
+        let n = self.n;
+        let mut flip = |r: isize, c: isize| {
+            if r >= 0 && r < n as isize && c >= 0 && c < n as isize {
+                let i = r as usize * n + c as usize;
+                self.grid[i] = !self.grid[i];
+            }
+        };
+        let (r, c) = (r as isize, c as isize);
+        flip(r, c);
+        flip(r - 1, c);
+        flip(r + 1, c);
+        flip(r, c - 1);
+        flip(r, c + 1);
+    }
+
+    /// All lights off?
+    pub fn solved(&self) -> bool {
+        self.grid.iter().all(|&b| !b)
+    }
+
+    /// Exact solver: returns the set of cells to press (each at most
+    /// once; presses commute over GF(2)), or None if unsolvable.
+    pub fn solve(&self) -> Option<Vec<usize>> {
+        let n = self.n;
+        let m = n * n;
+        // Build the augmented influence matrix over GF(2), rows as bit
+        // vectors in u64 chunks (m <= 64 supported for n <= 8: use Vec of
+        // u128 to be safe up to n=11).
+        assert!(m <= 128, "LightsOut solver supports n <= 11");
+        let mut rows: Vec<(u128, bool)> = Vec::with_capacity(m);
+        for cell in 0..m {
+            let (r, c) = (cell / n, cell % n);
+            let mut mask: u128 = 0;
+            let mut add = |rr: isize, cc: isize| {
+                if rr >= 0 && rr < n as isize && cc >= 0 && cc < n as isize {
+                    mask |= 1u128 << (rr as usize * n + cc as usize);
+                }
+            };
+            let (r, c) = (r as isize, c as isize);
+            add(r, c);
+            add(r - 1, c);
+            add(r + 1, c);
+            add(r, c - 1);
+            add(r, c + 1);
+            // Row `cell` of A^T == column of A; A is symmetric here.
+            rows.push((mask, self.grid[cell]));
+        }
+        // Gaussian elimination.
+        let mut pivot_of_col: Vec<Option<usize>> = vec![None; m];
+        let mut row = 0;
+        for col in 0..m {
+            let Some(p) = (row..m).find(|&i| rows[i].0 >> col & 1 == 1) else {
+                continue;
+            };
+            rows.swap(row, p);
+            let (prow, pb) = rows[row];
+            for (i, entry) in rows.iter_mut().enumerate() {
+                if i != row && entry.0 >> col & 1 == 1 {
+                    entry.0 ^= prow;
+                    entry.1 ^= pb;
+                }
+            }
+            pivot_of_col[col] = Some(row);
+            row += 1;
+            if row == m {
+                break;
+            }
+        }
+        // Inconsistent rows (0 = 1) mean unsolvable.
+        if rows.iter().any(|&(mask, b)| mask == 0 && b) {
+            return None;
+        }
+        let mut presses = Vec::new();
+        for col in 0..m {
+            if let Some(r) = pivot_of_col[col] {
+                if rows[r].1 {
+                    presses.push(col);
+                }
+            }
+        }
+        Some(presses)
+    }
+}
+
+impl Env for LightsOut {
+    fn id(&self) -> String {
+        format!("Puzzle/LightsOut-{0}x{0}", self.n)
+    }
+
+    fn observation_space(&self) -> Space {
+        Space::box1(vec![0.0; self.n * self.n], vec![1.0; self.n * self.n])
+    }
+
+    fn action_space(&self) -> Space {
+        Space::Discrete { n: self.n * self.n }
+    }
+
+    fn obs_dim(&self) -> usize {
+        self.n * self.n
+    }
+
+    fn seed(&mut self, seed: u64) {
+        self.rng = Pcg32::new(seed, 0x1f123bb5159a55e5);
+    }
+
+    fn reset_into(&mut self, obs: &mut [f32]) {
+        // Scramble by pressing random cells from solved — every instance
+        // is solvable by construction.
+        self.grid.fill(false);
+        self.moves = 0;
+        for _ in 0..self.scramble_presses {
+            let cell = self.rng.below((self.n * self.n) as u32) as usize;
+            self.press(cell / self.n, cell % self.n);
+        }
+        if self.solved() {
+            // Pathological scramble landed back on solved; force one press.
+            self.press(0, 0);
+        }
+        for (o, &b) in obs.iter_mut().zip(&self.grid) {
+            *o = b as u8 as f32;
+        }
+    }
+
+    fn step_into(&mut self, action: &Action, obs: &mut [f32]) -> Transition {
+        let cell = action.index();
+        self.press(cell / self.n, cell % self.n);
+        self.moves += 1;
+        for (o, &b) in obs.iter_mut().zip(&self.grid) {
+            *o = b as u8 as f32;
+        }
+        if self.solved() {
+            Transition::terminal(10.0)
+        } else {
+            Transition::live(-0.1)
+        }
+    }
+
+    fn render(&self, fb: &mut Framebuffer) {
+        fb.clear(0.05);
+        let cw = fb.width() as f32 / self.n as f32;
+        let ch = fb.height() as f32 / self.n as f32;
+        for r in 0..self.n {
+            for c in 0..self.n {
+                if self.grid[r * self.n + c] {
+                    raster::fill_rect(
+                        fb,
+                        (c as f32 * cw + 1.0) as i32,
+                        (r as f32 * ch + 1.0) as i32,
+                        ((c + 1) as f32 * cw - 1.0) as i32,
+                        ((r + 1) as f32 * ch - 1.0) as i32,
+                        0.9,
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn press_toggles_plus_shape() {
+        let mut p = LightsOut::new(5);
+        p.press(2, 2);
+        let on: Vec<usize> = (0..25).filter(|&i| p.grid[i]).collect();
+        assert_eq!(on, vec![7, 11, 12, 13, 17]);
+    }
+
+    #[test]
+    fn press_twice_is_identity() {
+        let mut p = LightsOut::new(5);
+        p.press(1, 3);
+        p.press(1, 3);
+        assert!(p.solved());
+    }
+
+    #[test]
+    fn corner_press_clips() {
+        let mut p = LightsOut::new(3);
+        p.press(0, 0);
+        let on: Vec<usize> = (0..9).filter(|&i| p.grid[i]).collect();
+        assert_eq!(on, vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn solver_solves_scrambled_boards() {
+        for seed in 0..10 {
+            let mut p = LightsOut::new(5);
+            p.seed(seed);
+            let mut obs = vec![0.0; 25];
+            p.reset_into(&mut obs);
+            let presses = p.solve().expect("scrambles are solvable");
+            for cell in presses {
+                p.press(cell / 5, cell % 5);
+            }
+            assert!(p.solved(), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn solver_detects_unsolvable() {
+        // On 5x5 a single lit corner cell is famously unsolvable.
+        let mut p = LightsOut::new(5);
+        p.grid[0] = true;
+        assert!(p.solve().is_none());
+    }
+
+    #[test]
+    fn env_episode_via_solver() {
+        let mut env = LightsOut::new(3).with_scramble(4);
+        env.seed(1);
+        let mut obs = vec![0.0; 9];
+        env.reset_into(&mut obs);
+        let presses = env.solve().unwrap();
+        let total = presses.len();
+        for (i, cell) in presses.into_iter().enumerate() {
+            let t = env.step_into(&Action::Discrete(cell), &mut obs);
+            if i + 1 == total {
+                assert!(t.done);
+                assert_eq!(t.reward, 10.0);
+            } else {
+                assert!(!t.done);
+                assert_eq!(t.reward, -0.1);
+            }
+        }
+    }
+
+    #[test]
+    fn scramble_knob_controls_difficulty() {
+        let mut easy = LightsOut::new(5).with_scramble(1);
+        easy.seed(3);
+        let mut obs = vec![0.0; 25];
+        easy.reset_into(&mut obs);
+        // One press lights at most 5 cells.
+        assert!(easy.grid().iter().filter(|&&b| b).count() <= 5);
+    }
+
+    #[test]
+    fn render_shows_lit_cells() {
+        let mut env = LightsOut::new(5);
+        env.seed(0);
+        let mut obs = vec![0.0; 25];
+        env.reset_into(&mut obs);
+        let mut fb = Framebuffer::standard();
+        env.render(&mut fb);
+        assert!(fb.max() > 0.8);
+    }
+}

@@ -1,0 +1,16 @@
+//! The puzzle runtime — the paper's §IV-D Simon-Tatham-collection
+//! integration, rebuilt as three native puzzles.
+//!
+//! Every puzzle ships with a **heuristic/exact solver** ("All puzzles
+//! include a heuristic-based solver, enabling transfer and curriculum
+//! learning research"): the solvers generate demonstration trajectories
+//! and certify that every generated instance is solvable, which the
+//! curriculum example (`examples/puzzle_curriculum.rs`) builds on.
+
+pub mod fifteen;
+pub mod lightsout;
+pub mod nonogram;
+
+pub use fifteen::Fifteen;
+pub use lightsout::LightsOut;
+pub use nonogram::Nonogram;

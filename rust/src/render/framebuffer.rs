@@ -1,0 +1,185 @@
+//! Grayscale f32 framebuffer — the pixel store every renderer writes into.
+//!
+//! Row-major, intensity in `[0, 1]`.  The buffer is caller-owned and
+//! reused across frames (the paper's no-copy discipline: the agent reads
+//! the same memory the rasteriser wrote, no GPU readback, no per-frame
+//! allocation).
+
+/// A row-major grayscale framebuffer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Framebuffer {
+    width: usize,
+    height: usize,
+    data: Vec<f32>,
+}
+
+impl Framebuffer {
+    /// Allocate a `width x height` buffer cleared to 0.
+    pub fn new(width: usize, height: usize) -> Self {
+        Framebuffer {
+            width,
+            height,
+            data: vec![0.0; width * height],
+        }
+    }
+
+    /// Standard agent-facing resolution used across the toolkit (matches
+    /// the L1 render kernel's 64x64).
+    pub fn standard() -> Self {
+        Framebuffer::new(64, 64)
+    }
+
+    #[inline]
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    #[inline]
+    pub fn height(&self) -> usize {
+        self.height
+    }
+
+    /// Flat pixel slice (row-major), e.g. to feed the DQN as observations.
+    #[inline]
+    pub fn pixels(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable flat pixel slice for rasterisers.
+    #[inline]
+    pub fn pixels_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// One row as a contiguous slice — the rasteriser's unit of work
+    /// (contiguous fills auto-vectorise).
+    #[inline]
+    pub fn row_mut(&mut self, y: usize) -> &mut [f32] {
+        let w = self.width;
+        &mut self.data[y * w..(y + 1) * w]
+    }
+
+    /// Read one pixel (bounds-checked; test/debug use).
+    #[inline]
+    pub fn get(&self, x: usize, y: usize) -> f32 {
+        self.data[y * self.width + x]
+    }
+
+    /// Write one pixel, ignoring out-of-bounds coordinates (clip-safe for
+    /// shape edges).
+    #[inline]
+    pub fn put(&mut self, x: i32, y: i32, v: f32) {
+        if x >= 0 && (x as usize) < self.width && y >= 0 && (y as usize) < self.height {
+            self.data[y as usize * self.width + x as usize] = v;
+        }
+    }
+
+    /// Clear the whole buffer to an intensity.
+    pub fn clear(&mut self, v: f32) {
+        self.data.fill(v);
+    }
+
+    /// Sum of all intensities (golden tests against the L1 kernel).
+    pub fn sum(&self) -> f32 {
+        self.data.iter().sum()
+    }
+
+    /// Maximum intensity.
+    pub fn max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |a, &b| a.max(b))
+    }
+
+    /// Downsample into `out` (area averaging), e.g. 256x256 -> 64x64 for
+    /// agent observations.  `out` dimensions must divide `self`'s.
+    pub fn downsample_into(&self, out: &mut Framebuffer) {
+        let fx = self.width / out.width;
+        let fy = self.height / out.height;
+        assert!(fx >= 1 && fy >= 1);
+        assert_eq!(fx * out.width, self.width);
+        assert_eq!(fy * out.height, self.height);
+        let norm = 1.0 / (fx * fy) as f32;
+        for oy in 0..out.height {
+            for ox in 0..out.width {
+                let mut acc = 0.0;
+                for sy in 0..fy {
+                    let row = (oy * fy + sy) * self.width + ox * fx;
+                    acc += self.data[row..row + fx].iter().sum::<f32>();
+                }
+                out.data[oy * out.width + ox] = acc * norm;
+            }
+        }
+    }
+
+    /// Render as ASCII art (debugging / CLI `--render-ascii`).
+    pub fn to_ascii(&self) -> String {
+        const RAMP: &[u8] = b" .:-=+*#%@";
+        let mut s = String::with_capacity((self.width + 1) * self.height);
+        for y in 0..self.height {
+            for x in 0..self.width {
+                let v = self.get(x, y).clamp(0.0, 1.0);
+                let i = (v * (RAMP.len() - 1) as f32).round() as usize;
+                s.push(RAMP[i] as char);
+            }
+            s.push('\n');
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_is_black() {
+        let fb = Framebuffer::new(8, 4);
+        assert_eq!(fb.width(), 8);
+        assert_eq!(fb.height(), 4);
+        assert_eq!(fb.sum(), 0.0);
+        assert_eq!(fb.pixels().len(), 32);
+    }
+
+    #[test]
+    fn put_get_roundtrip_and_clipping() {
+        let mut fb = Framebuffer::new(4, 4);
+        fb.put(1, 2, 0.5);
+        assert_eq!(fb.get(1, 2), 0.5);
+        fb.put(-1, 0, 1.0); // silently clipped
+        fb.put(4, 0, 1.0);
+        fb.put(0, 4, 1.0);
+        assert_eq!(fb.sum(), 0.5);
+    }
+
+    #[test]
+    fn clear_sets_everything() {
+        let mut fb = Framebuffer::new(3, 3);
+        fb.clear(0.25);
+        assert_eq!(fb.sum(), 0.25 * 9.0);
+        assert_eq!(fb.max(), 0.25);
+    }
+
+    #[test]
+    fn downsample_averages_blocks() {
+        let mut big = Framebuffer::new(4, 4);
+        // Top-left 2x2 block all ones.
+        for y in 0..2 {
+            for x in 0..2 {
+                big.put(x, y, 1.0);
+            }
+        }
+        let mut small = Framebuffer::new(2, 2);
+        big.downsample_into(&mut small);
+        assert_eq!(small.get(0, 0), 1.0);
+        assert_eq!(small.get(1, 0), 0.0);
+        assert_eq!(small.get(0, 1), 0.0);
+        assert_eq!(small.get(1, 1), 0.0);
+    }
+
+    #[test]
+    fn ascii_has_one_row_per_line() {
+        let fb = Framebuffer::new(5, 3);
+        let art = fb.to_ascii();
+        assert_eq!(art.lines().count(), 3);
+        assert!(art.lines().all(|l| l.len() == 5));
+    }
+}

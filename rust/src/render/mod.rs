@@ -1,0 +1,26 @@
+//! Rendering — the paper's §III-A "Renderers" module.
+//!
+//! The paper's empirical claim (§II-B, Fig. 1): for simple 2-D scenes,
+//! *software* rendering into a CPU-resident framebuffer massively
+//! outperforms hardware (OpenGL) rendering whenever the agent needs the
+//! pixels, because reading the GPU framebuffer back stalls the pipeline.
+//!
+//! * [`framebuffer`] — the pixel store (f32 grayscale; RL agents consume
+//!   intensity planes, and one channel keeps the hot loop bandwidth-lean).
+//! * [`raster`] — scanline shape rasterisation (rects, discs, lines,
+//!   polylines) written so the inner loops auto-vectorise (row-contiguous
+//!   fills, no per-pixel branches) — the SIMD discipline of [21].
+//! * [`software`] — per-environment scene painters (the geometry matches
+//!   `python/compile/kernels/render.py` so L1 and L3 renderers can be
+//!   golden-tested against each other).
+//! * [`hardware_sim`] — a calibrated cost model of the GPU render +
+//!   readback path the paper benchmarks against (no GPU in this image;
+//!   DESIGN.md §Substitutions).
+
+pub mod framebuffer;
+pub mod hardware_sim;
+pub mod raster;
+pub mod software;
+
+pub use framebuffer::Framebuffer;
+pub use hardware_sim::HardwareSim;

@@ -1,0 +1,205 @@
+//! Shape rasterisation — scanline fills written for auto-vectorisation.
+//!
+//! The discipline (after [21], SIMD 2-D rendering): decompose every shape
+//! into horizontal runs and fill each run with a branch-free contiguous
+//! `slice::fill`.  LLVM vectorises those fills; there is no per-pixel
+//! branching anywhere in this module.  All edges clip against the
+//! framebuffer rectangle *before* the inner loop.
+
+use crate::render::Framebuffer;
+
+/// Fill an axis-aligned rectangle `[x0, x1) x [y0, y1)`.
+pub fn fill_rect(fb: &mut Framebuffer, x0: i32, y0: i32, x1: i32, y1: i32, v: f32) {
+    let w = fb.width() as i32;
+    let h = fb.height() as i32;
+    let cx0 = x0.max(0);
+    let cy0 = y0.max(0);
+    let cx1 = x1.min(w);
+    let cy1 = y1.min(h);
+    if cx0 >= cx1 || cy0 >= cy1 {
+        return;
+    }
+    for y in cy0..cy1 {
+        fb.row_mut(y as usize)[cx0 as usize..cx1 as usize].fill(v);
+    }
+}
+
+/// Fill a disc of radius `r` centred at `(cx, cy)` (pixel centres).
+pub fn fill_disc(fb: &mut Framebuffer, cx: f32, cy: f32, r: f32, v: f32) {
+    if r <= 0.0 {
+        return;
+    }
+    let h = fb.height() as i32;
+    let w = fb.width() as i32;
+    let y0 = ((cy - r).floor() as i32).max(0);
+    let y1 = ((cy + r).ceil() as i32).min(h - 1);
+    for y in y0..=y1 {
+        // Horizontal chord of the circle at this row.
+        let dy = y as f32 - cy;
+        let half = (r * r - dy * dy).max(0.0).sqrt();
+        let x0 = (((cx - half).ceil()) as i32).max(0);
+        let x1 = (((cx + half).floor()) as i32).min(w - 1);
+        if x0 <= x1 {
+            fb.row_mut(y as usize)[x0 as usize..=x1 as usize].fill(v);
+        }
+    }
+}
+
+/// Draw a line segment of the given half-thickness.
+///
+/// Implemented as a distance-to-segment test over the segment's bounding
+/// box, evaluated row by row so each row's span is a contiguous fill where
+/// possible; for thin lines the box is small and the cost negligible.
+pub fn draw_line(
+    fb: &mut Framebuffer,
+    x0: f32,
+    y0: f32,
+    x1: f32,
+    y1: f32,
+    half_thick: f32,
+    v: f32,
+) {
+    let dx = x1 - x0;
+    let dy = y1 - y0;
+    let len2 = dx * dx + dy * dy;
+    if len2 < 1e-12 {
+        fill_disc(fb, x0, y0, half_thick, v);
+        return;
+    }
+    let w = fb.width() as i32;
+    let h = fb.height() as i32;
+    let pad = half_thick + 1.0;
+    let bx0 = ((x0.min(x1) - pad).floor() as i32).max(0);
+    let bx1 = ((x0.max(x1) + pad).ceil() as i32).min(w - 1);
+    let by0 = ((y0.min(y1) - pad).floor() as i32).max(0);
+    let by1 = ((y0.max(y1) + pad).ceil() as i32).min(h - 1);
+    let ht2 = half_thick * half_thick;
+    let inv_len2 = 1.0 / len2;
+    for y in by0..=by1 {
+        let row = fb.row_mut(y as usize);
+        let py = y as f32 - y0;
+        for x in bx0..=bx1 {
+            let px = x as f32 - x0;
+            let t = ((px * dx + py * dy) * inv_len2).clamp(0.0, 1.0);
+            let ex = px - t * dx;
+            let ey = py - t * dy;
+            // Branch-free select: LLVM lowers this to a blend.
+            let inside = (ex * ex + ey * ey <= ht2) as u32 as f32;
+            let cur = row[x as usize];
+            row[x as usize] = cur + inside * (v - cur);
+        }
+    }
+}
+
+/// Horizontal 1-px line across the full width (track lines, horizons).
+pub fn hline(fb: &mut Framebuffer, y: i32, v: f32) {
+    if y >= 0 && (y as usize) < fb.height() {
+        fb.row_mut(y as usize).fill(v);
+    }
+}
+
+/// Polyline: consecutive segments through the given points.
+pub fn draw_polyline(fb: &mut Framebuffer, pts: &[(f32, f32)], half_thick: f32, v: f32) {
+    for pair in pts.windows(2) {
+        draw_line(fb, pair[0].0, pair[0].1, pair[1].0, pair[1].1, half_thick, v);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rect_fills_exact_area() {
+        let mut fb = Framebuffer::new(16, 16);
+        fill_rect(&mut fb, 2, 3, 6, 8, 1.0);
+        assert_eq!(fb.sum(), (4 * 5) as f32);
+        assert_eq!(fb.get(2, 3), 1.0);
+        assert_eq!(fb.get(5, 7), 1.0);
+        assert_eq!(fb.get(6, 8), 0.0); // exclusive edges
+    }
+
+    #[test]
+    fn rect_clips_out_of_bounds() {
+        let mut fb = Framebuffer::new(8, 8);
+        fill_rect(&mut fb, -5, -5, 3, 3, 1.0);
+        assert_eq!(fb.sum(), 9.0);
+        fill_rect(&mut fb, 100, 100, 200, 200, 1.0); // fully outside
+        assert_eq!(fb.sum(), 9.0);
+    }
+
+    #[test]
+    fn degenerate_rect_is_empty() {
+        let mut fb = Framebuffer::new(8, 8);
+        fill_rect(&mut fb, 4, 4, 4, 8, 1.0);
+        assert_eq!(fb.sum(), 0.0);
+    }
+
+    #[test]
+    fn disc_is_symmetric_and_bounded() {
+        let mut fb = Framebuffer::new(32, 32);
+        fill_disc(&mut fb, 16.0, 16.0, 5.0, 1.0);
+        // Area roughly pi*r^2, generous tolerance for pixelation.
+        let area = fb.sum();
+        assert!((60.0..100.0).contains(&area), "area={area}");
+        // Symmetry about the centre.
+        for dy in -5i32..=5 {
+            for dx in -5i32..=5 {
+                let a = fb.get((16 + dx) as usize, (16 + dy) as usize);
+                let b = fb.get((16 - dx) as usize, (16 - dy) as usize);
+                assert_eq!(a, b);
+            }
+        }
+    }
+
+    #[test]
+    fn line_connects_endpoints() {
+        let mut fb = Framebuffer::new(32, 32);
+        draw_line(&mut fb, 2.0, 2.0, 28.0, 28.0, 1.0, 1.0);
+        assert!(fb.get(2, 2) > 0.0);
+        assert!(fb.get(28, 28) > 0.0);
+        assert!(fb.get(15, 15) > 0.0);
+        assert_eq!(fb.get(30, 2), 0.0);
+    }
+
+    #[test]
+    fn vertical_line_has_thickness() {
+        let mut fb = Framebuffer::new(16, 16);
+        draw_line(&mut fb, 8.0, 2.0, 8.0, 14.0, 1.5, 1.0);
+        assert!(fb.get(8, 8) > 0.0);
+        assert!(fb.get(7, 8) > 0.0);
+        assert!(fb.get(9, 8) > 0.0);
+        assert_eq!(fb.get(3, 8), 0.0);
+    }
+
+    #[test]
+    fn zero_length_line_is_a_dot() {
+        let mut fb = Framebuffer::new(16, 16);
+        draw_line(&mut fb, 8.0, 8.0, 8.0, 8.0, 1.0, 1.0);
+        assert!(fb.get(8, 8) > 0.0);
+        assert!(fb.sum() < 10.0);
+    }
+
+    #[test]
+    fn hline_spans_width() {
+        let mut fb = Framebuffer::new(10, 10);
+        hline(&mut fb, 4, 0.3);
+        assert!((fb.sum() - 3.0).abs() < 1e-5);
+        hline(&mut fb, -1, 1.0); // clipped
+        hline(&mut fb, 10, 1.0);
+        assert!((fb.sum() - 3.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn polyline_draws_all_segments() {
+        let mut fb = Framebuffer::new(32, 32);
+        draw_polyline(
+            &mut fb,
+            &[(2.0, 2.0), (20.0, 2.0), (20.0, 20.0)],
+            0.8,
+            1.0,
+        );
+        assert!(fb.get(10, 2) > 0.0);
+        assert!(fb.get(20, 10) > 0.0);
+    }
+}

@@ -1,0 +1,221 @@
+//! Per-environment scene painters (software rendering).
+//!
+//! `paint_cartpole` reproduces the geometry of the L1 Pallas kernel
+//! (`python/compile/kernels/render.py`) *exactly* — same constants, same
+//! inclusive mask comparisons, same paint order (track, cart, pole) — so
+//! the two implementations are golden-tested against each other through
+//! the artifact manifest (`frame0_sum`).
+//!
+//! The other painters follow the same style: distinct intensities per
+//! element, all geometry derived from the environment's public state.
+
+use crate::render::raster;
+use crate::render::Framebuffer;
+
+// Constants shared with python/compile/kernels/render.py.
+pub const CART_W: f32 = 8.0;
+pub const CART_H: f32 = 4.0;
+pub const CART_Y: f32 = 48.0;
+pub const POLE_LEN: f32 = 20.0;
+pub const POLE_HALF_THICK: f32 = 1.0;
+pub const TRACK_I: f32 = 0.3;
+pub const CART_I: f32 = 0.6;
+pub const POLE_I: f32 = 1.0;
+const X_THRESHOLD: f32 = 2.4;
+
+/// CartPole scene: track line, cart rectangle, pole segment.
+///
+/// `x` is the world cart position, `theta` the pole angle (0 = upright).
+pub fn paint_cartpole(fb: &mut Framebuffer, x: f32, theta: f32) {
+    let w = fb.width() as f32;
+    fb.clear(0.0);
+
+    let cx = (x / X_THRESHOLD) * (w / 2.0 - CART_W) + w / 2.0;
+    let cy = CART_Y;
+
+    // Track line at row CART_Y + CART_H/2 (kernel: rows == 50).
+    raster::hline(fb, (CART_Y + CART_H / 2.0) as i32, TRACK_I);
+
+    // Cart: |col - cx| <= CART_W/2 and |row - cy| <= CART_H/2, inclusive —
+    // compute the integer span satisfying the float comparison.
+    let x0 = (cx - CART_W / 2.0).ceil() as i32;
+    let x1 = (cx + CART_W / 2.0).floor() as i32;
+    let y0 = (cy - CART_H / 2.0).ceil() as i32;
+    let y1 = (cy + CART_H / 2.0).floor() as i32;
+    raster::fill_rect(fb, x0, y0, x1 + 1, y1 + 1, CART_I);
+
+    // Pole: distance-to-segment mask, identical formula to the kernel.
+    let dx = theta.sin();
+    let dy = -theta.cos();
+    let fx1 = cx + POLE_LEN * dx;
+    let fy1 = cy + POLE_LEN * dy;
+    let pad = POLE_HALF_THICK + 1.0;
+    let bx0 = ((cx.min(fx1) - pad).floor() as i32).max(0);
+    let bx1 = ((cx.max(fx1) + pad).ceil() as i32).min(fb.width() as i32 - 1);
+    let by0 = ((cy.min(fy1) - pad).floor() as i32).max(0);
+    let by1 = ((cy.max(fy1) + pad).ceil() as i32).min(fb.height() as i32 - 1);
+    let ht2 = POLE_HALF_THICK * POLE_HALF_THICK;
+    for yy in by0..=by1 {
+        let row = fb.row_mut(yy as usize);
+        let py = yy as f32 - cy;
+        for xx in bx0..=bx1 {
+            let px = xx as f32 - cx;
+            let t = (px * dx + py * dy).clamp(0.0, POLE_LEN);
+            let ex = px - t * dx;
+            let ey = py - t * dy;
+            if ex * ex + ey * ey <= ht2 {
+                row[xx as usize] = POLE_I;
+            }
+        }
+    }
+}
+
+/// MountainCar scene: sinusoidal hill, car disc, goal flag.
+pub fn paint_mountaincar(fb: &mut Framebuffer, pos: f32, _vel: f32) {
+    let w = fb.width() as f32;
+    let h = fb.height() as f32;
+    fb.clear(0.0);
+    let to_px = |p: f32| (p + 1.2) / 1.8 * (w - 1.0);
+    let hill_y = |p: f32| h * 0.75 - (3.0 * p).sin() * h * 0.22;
+
+    // Hill as a polyline sampled once per column.
+    let mut pts = Vec::with_capacity(fb.width());
+    for i in 0..fb.width() {
+        let p = -1.2 + 1.8 * i as f32 / (w - 1.0);
+        pts.push((i as f32, hill_y(p)));
+    }
+    raster::draw_polyline(fb, &pts, 0.6, 0.3);
+
+    // Goal flag at pos = 0.5.
+    let gx = to_px(0.5);
+    let gy = hill_y(0.5);
+    raster::draw_line(fb, gx, gy, gx, gy - 10.0, 0.6, 0.8);
+    raster::fill_rect(fb, gx as i32, (gy - 10.0) as i32, gx as i32 + 4, (gy - 7.0) as i32, 0.8);
+
+    // Car.
+    raster::fill_disc(fb, to_px(pos), hill_y(pos) - 2.5, 2.5, 1.0);
+}
+
+/// Acrobot scene: two links hanging from the frame centre.
+pub fn paint_acrobot(fb: &mut Framebuffer, theta1: f32, theta2: f32) {
+    let w = fb.width() as f32;
+    let h = fb.height() as f32;
+    fb.clear(0.0);
+    let cx = w / 2.0;
+    let cy = h / 2.0;
+    let scale = h * 0.22; // each link ~22% of frame height
+
+    // Gym convention: theta1 measured from the downward vertical.
+    let x1 = cx + scale * theta1.sin();
+    let y1 = cy + scale * theta1.cos();
+    let x2 = x1 + scale * (theta1 + theta2).sin();
+    let y2 = y1 + scale * (theta1 + theta2).cos();
+
+    // Target height line (the paper's classic visualisation).
+    raster::hline(fb, (cy - scale) as i32, 0.3);
+    raster::draw_line(fb, cx, cy, x1, y1, 1.2, 0.7);
+    raster::draw_line(fb, x1, y1, x2, y2, 1.2, 1.0);
+    raster::fill_disc(fb, cx, cy, 1.6, 0.5);
+    raster::fill_disc(fb, x1, y1, 1.6, 0.5);
+}
+
+/// Pendulum scene: rod from centre, bob at the tip, torque unused.
+pub fn paint_pendulum(fb: &mut Framebuffer, theta: f32) {
+    let w = fb.width() as f32;
+    let h = fb.height() as f32;
+    fb.clear(0.0);
+    let cx = w / 2.0;
+    let cy = h / 2.0;
+    let len = h * 0.35;
+    // Gym convention: theta = 0 is upright.
+    let tx = cx + len * theta.sin();
+    let ty = cy - len * theta.cos();
+    raster::draw_line(fb, cx, cy, tx, ty, 1.5, 1.0);
+    raster::fill_disc(fb, tx, ty, 3.0, 0.8);
+    raster::fill_disc(fb, cx, cy, 1.5, 0.4);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cartpole_centre_geometry_matches_kernel_spec() {
+        let mut fb = Framebuffer::standard();
+        paint_cartpole(&mut fb, 0.0, 0.0);
+        // Pole pixel straight above the cart centre.
+        assert_eq!(fb.get(32, 38), POLE_I);
+        // Cart body pixel outside the pole's thickness.
+        assert_eq!(fb.get(35, 48), CART_I);
+        // Track line far from the cart.
+        assert_eq!(fb.get(2, 50), TRACK_I);
+        // Background corner.
+        assert_eq!(fb.get(0, 0), 0.0);
+    }
+
+    #[test]
+    fn cartpole_cart_tracks_x() {
+        let mut l = Framebuffer::standard();
+        let mut r = Framebuffer::standard();
+        paint_cartpole(&mut l, -1.2, 0.0);
+        paint_cartpole(&mut r, 1.2, 0.0);
+        let centroid = |fb: &Framebuffer| {
+            let mut s = 0.0;
+            let mut n = 0.0;
+            for y in 0..fb.height() {
+                for x in 0..fb.width() {
+                    if fb.get(x, y) == CART_I {
+                        s += x as f32;
+                        n += 1.0;
+                    }
+                }
+            }
+            s / n
+        };
+        assert!(centroid(&r) > centroid(&l) + 20.0);
+    }
+
+    #[test]
+    fn cartpole_pole_tilts_with_theta() {
+        let mut fb = Framebuffer::standard();
+        paint_cartpole(&mut fb, 0.0, 0.35);
+        // Tilted right: a pole pixel right of centre above the cart.
+        let found = (33..45).any(|x| fb.get(x, 34) == POLE_I || fb.get(x, 40) == POLE_I);
+        assert!(found);
+    }
+
+    #[test]
+    fn mountaincar_scene_nonempty_and_bounded() {
+        let mut fb = Framebuffer::standard();
+        paint_mountaincar(&mut fb, -0.5, 0.0);
+        assert!(fb.sum() > 10.0);
+        assert!(fb.max() <= 1.0);
+    }
+
+    #[test]
+    fn acrobot_links_move() {
+        let mut a = Framebuffer::standard();
+        let mut b = Framebuffer::standard();
+        paint_acrobot(&mut a, 0.0, 0.0);
+        paint_acrobot(&mut b, 1.2, 0.8);
+        assert_ne!(a.pixels(), b.pixels());
+        assert!(a.sum() > 10.0);
+    }
+
+    #[test]
+    fn pendulum_bob_follows_theta() {
+        let mut up = Framebuffer::standard();
+        let mut down = Framebuffer::standard();
+        paint_pendulum(&mut up, 0.0);
+        paint_pendulum(&mut down, std::f32::consts::PI);
+        // Upright: bright pixels above centre row. Down: below.
+        let upper_sum: f32 = (0..28)
+            .map(|y| (0..64).map(|x| up.get(x, y)).sum::<f32>())
+            .sum();
+        let lower_sum: f32 = (36..64)
+            .map(|y| (0..64).map(|x| down.get(x, y)).sum::<f32>())
+            .sum();
+        assert!(upper_sum > 1.0);
+        assert!(lower_sum > 1.0);
+    }
+}

@@ -1,0 +1,331 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime.
+//!
+//! The manifest records, for every artifact, the operand order and
+//! shapes (the HLO parameter list is positional), plus golden
+//! input/output vectors the integration tests replay, plus the cartpole
+//! seed parameters for bit-reproducible training runs.  Parsed with the
+//! in-tree JSON reader ([`crate::core::json`]).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::core::error::{CairlError, Result};
+use crate::core::json::{self, Value};
+
+/// Tensor signature of one operand.
+#[derive(Clone, Debug)]
+pub struct TensorSig {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSig {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Value) -> Result<TensorSig> {
+        let shape = v
+            .get("shape")
+            .and_then(|s| s.as_array())
+            .ok_or_else(|| CairlError::Runtime("tensor sig missing shape".into()))?
+            .iter()
+            .filter_map(|d| d.as_usize())
+            .collect();
+        let dtype = v
+            .get("dtype")
+            .and_then(|d| d.as_str())
+            .unwrap_or("float32")
+            .to_string();
+        Ok(TensorSig { shape, dtype })
+    }
+}
+
+/// One artifact's entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub file: String,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+    pub input_names: Vec<String>,
+    pub output_names: Vec<String>,
+}
+
+/// DQN hyperparameters as lowered (Table I).
+#[derive(Clone, Debug)]
+pub struct Hyperparameters {
+    pub gamma: f64,
+    pub lr: f64,
+    pub adam_b1: f64,
+    pub adam_b2: f64,
+    pub adam_eps: f64,
+    pub hidden: usize,
+    pub batch: usize,
+    pub huber_delta: f64,
+}
+
+/// Environment shape spec mirrored from `model.ENV_SPECS`.
+#[derive(Clone, Debug)]
+pub struct EnvShapeSpec {
+    pub obs_dim: usize,
+    pub n_actions: usize,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub format: String,
+    pub hyperparameters: Hyperparameters,
+    pub env_specs: HashMap<String, EnvShapeSpec>,
+    pub artifacts: HashMap<String, ArtifactMeta>,
+    goldens: Value,
+    init_params: Value,
+    root: PathBuf,
+}
+
+/// Locate the artifact directory: `$CAIRL_ARTIFACTS` or an `artifacts/`
+/// directory found by walking up from the current directory (so tests
+/// work from any target subdirectory).
+pub fn default_artifact_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("CAIRL_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !cur.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}
+
+fn names(v: &Value, key: &str) -> Vec<String> {
+    v.get(key)
+        .and_then(|xs| xs.as_array())
+        .map(|xs| {
+            xs.iter()
+                .filter_map(|s| s.as_str())
+                .map(String::from)
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+impl Manifest {
+    /// Load `manifest.json` from a directory.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            CairlError::Runtime(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        let doc = json::parse(&text)
+            .map_err(|e| CairlError::Runtime(format!("bad manifest: {e}")))?;
+
+        let hp = doc
+            .get("hyperparameters")
+            .ok_or_else(|| CairlError::Runtime("manifest missing hyperparameters".into()))?;
+        let f = |k: &str| hp.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+        let hyperparameters = Hyperparameters {
+            gamma: f("gamma"),
+            lr: f("lr"),
+            adam_b1: f("adam_b1"),
+            adam_b2: f("adam_b2"),
+            adam_eps: f("adam_eps"),
+            hidden: f("hidden") as usize,
+            batch: f("batch") as usize,
+            huber_delta: f("huber_delta"),
+        };
+
+        let mut env_specs = HashMap::new();
+        if let Some(specs) = doc.get("env_specs").and_then(|v| v.as_object()) {
+            for (name, spec) in specs {
+                env_specs.insert(
+                    name.clone(),
+                    EnvShapeSpec {
+                        obs_dim: spec
+                            .get("obs_dim")
+                            .and_then(|v| v.as_usize())
+                            .unwrap_or(0),
+                        n_actions: spec
+                            .get("n_actions")
+                            .and_then(|v| v.as_usize())
+                            .unwrap_or(0),
+                    },
+                );
+            }
+        }
+
+        let mut artifacts = HashMap::new();
+        if let Some(arts) = doc.get("artifacts").and_then(|v| v.as_object()) {
+            for (name, art) in arts {
+                let sigs = |key: &str| -> Result<Vec<TensorSig>> {
+                    art.get(key)
+                        .and_then(|xs| xs.as_array())
+                        .ok_or_else(|| {
+                            CairlError::Runtime(format!("{name}: missing {key}"))
+                        })?
+                        .iter()
+                        .map(TensorSig::from_json)
+                        .collect()
+                };
+                artifacts.insert(
+                    name.clone(),
+                    ArtifactMeta {
+                        file: art
+                            .get("file")
+                            .and_then(|v| v.as_str())
+                            .unwrap_or_default()
+                            .to_string(),
+                        inputs: sigs("inputs")?,
+                        outputs: sigs("outputs")?,
+                        input_names: names(art, "input_names"),
+                        output_names: names(art, "output_names"),
+                    },
+                );
+            }
+        }
+
+        Ok(Manifest {
+            format: doc
+                .get("format")
+                .and_then(|v| v.as_str())
+                .unwrap_or_default()
+                .to_string(),
+            hyperparameters,
+            env_specs,
+            artifacts,
+            goldens: doc.get("goldens").cloned().unwrap_or(Value::Null),
+            init_params: doc.get("init_params").cloned().unwrap_or(Value::Null),
+            root: dir.to_path_buf(),
+        })
+    }
+
+    /// Load from the default location.
+    pub fn load_default() -> Result<Manifest> {
+        Self::load(&default_artifact_dir())
+    }
+
+    /// Metadata for one artifact.
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts.get(name).ok_or_else(|| {
+            CairlError::Runtime(format!("artifact {name:?} not in manifest"))
+        })
+    }
+
+    /// Absolute path of an artifact's HLO text file.
+    pub fn artifact_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.root.join(&self.artifact(name)?.file))
+    }
+
+    /// Golden scalar (nested lookup, e.g. `["dqn_train_cartpole", "loss"]`).
+    pub fn golden_f64(&self, path: &[&str]) -> Option<f64> {
+        self.goldens.path(path)?.as_f64()
+    }
+
+    /// Golden vector.
+    pub fn golden_vec(&self, path: &[&str]) -> Option<Vec<f32>> {
+        self.goldens.path(path)?.as_f32_vec()
+    }
+
+    /// Seed parameter vector from `init_params` (e.g. cartpole / w1).
+    pub fn init_param(&self, env: &str, name: &str) -> Option<Vec<f32>> {
+        self.init_params.path(&[env, name])?.as_f32_vec()
+    }
+
+    /// All seed parameter tensors for an env in artifact order, if the
+    /// manifest carries them.
+    pub fn init_params_all(&self, env: &str) -> Option<Vec<Vec<f32>>> {
+        let names = ["w1", "b1", "w2", "b2", "w3", "b3"];
+        names
+            .iter()
+            .map(|n| self.init_param(env, n))
+            .collect::<Option<Vec<_>>>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Manifest {
+        Manifest::load_default().expect("artifacts present (make artifacts)")
+    }
+
+    #[test]
+    fn loads_and_has_expected_artifacts() {
+        let m = manifest();
+        assert_eq!(m.format, "hlo-text");
+        for env in ["cartpole", "mountaincar", "acrobot", "pendulum", "multitask"] {
+            assert!(m.artifacts.contains_key(&format!("dqn_act_{env}")));
+            assert!(m.artifacts.contains_key(&format!("dqn_train_{env}")));
+        }
+        assert!(m.artifacts.contains_key("env_step_cartpole"));
+        assert!(m.artifacts.contains_key("render_cartpole"));
+    }
+
+    #[test]
+    fn hyperparameters_match_table_one() {
+        let hp = manifest().hyperparameters;
+        assert_eq!(hp.batch, 32);
+        assert_eq!(hp.hidden, 32);
+        assert!((hp.gamma - 0.99).abs() < 1e-9);
+        assert!((hp.lr - 3e-4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn train_artifact_operand_contract() {
+        let m = manifest();
+        let art = m.artifact("dqn_train_cartpole").unwrap();
+        assert_eq!(art.inputs.len(), 30);
+        assert_eq!(art.outputs.len(), 20);
+        assert_eq!(art.input_names[24], "t");
+        assert_eq!(art.input_names[25], "s");
+        assert_eq!(art.output_names[19], "loss");
+        // Action operand is the only i32.
+        let a_idx = art.input_names.iter().position(|n| n == "a").unwrap();
+        assert_eq!(art.inputs[a_idx].dtype, "int32");
+        // s shape = [batch, obs_dim].
+        let s_idx = art.input_names.iter().position(|n| n == "s").unwrap();
+        assert_eq!(art.inputs[s_idx].shape, vec![32, 4]);
+    }
+
+    #[test]
+    fn artifact_paths_exist() {
+        let m = manifest();
+        for name in m.artifacts.keys() {
+            let p = m.artifact_path(name).unwrap();
+            assert!(p.exists(), "{}", p.display());
+        }
+    }
+
+    #[test]
+    fn goldens_accessible() {
+        let m = manifest();
+        assert!(m.golden_f64(&["dqn_train_cartpole", "loss"]).unwrap() > 0.0);
+        assert_eq!(m.golden_vec(&["dqn_act_cartpole", "q"]).unwrap().len(), 2);
+        assert_eq!(m.init_param("cartpole", "w1").unwrap().len(), 4 * 32);
+        let all = m.init_params_all("cartpole").unwrap();
+        assert_eq!(all.len(), 6);
+        assert_eq!(all[5].len(), 2); // b3
+    }
+
+    #[test]
+    fn unknown_artifact_errors() {
+        assert!(manifest().artifact("nope").is_err());
+    }
+
+    #[test]
+    fn env_specs_present() {
+        let m = manifest();
+        assert_eq!(m.env_specs["cartpole"].obs_dim, 4);
+        assert_eq!(m.env_specs["cartpole"].n_actions, 2);
+        assert_eq!(m.env_specs["multitask"].obs_dim, 32);
+    }
+}

@@ -1,0 +1,248 @@
+//! The DQN executor: Table-I network state held in Rust, compute done by
+//! the AOT artifacts (fused Pallas forward inside).
+//!
+//! Owns the online/target parameters, Adam state and step counter as
+//! host vectors; `act` and `train_step` marshal them into PJRT literals,
+//! execute the artifact, and write the updated state back.  Target-network
+//! sync is a host-side copy — no artifact needed.
+
+use crate::core::error::{CairlError, Result};
+use crate::core::rng::Pcg32;
+use crate::runtime::pjrt::{literal_f32, literal_i32, scalar_f32, Runtime};
+
+/// One transition batch in struct-of-arrays layout (matches the train
+/// artifact's `s, a, r, s2, done` operands).
+#[derive(Clone, Debug, Default)]
+pub struct Batch {
+    pub s: Vec<f32>,
+    pub a: Vec<i32>,
+    pub r: Vec<f32>,
+    pub s2: Vec<f32>,
+    pub done: Vec<f32>,
+}
+
+/// The six parameter tensors in artifact order (w1 b1 w2 b2 w3 b3).
+#[derive(Clone, Debug)]
+pub struct ParamSet {
+    pub tensors: Vec<Vec<f32>>,
+    pub shapes: Vec<Vec<usize>>,
+}
+
+impl ParamSet {
+    fn zeros_like(&self) -> ParamSet {
+        ParamSet {
+            tensors: self.tensors.iter().map(|t| vec![0.0; t.len()]).collect(),
+            shapes: self.shapes.clone(),
+        }
+    }
+}
+
+/// DQN bound to one environment spec's artifacts.
+pub struct DqnExecutor {
+    env_name: String,
+    pub obs_dim: usize,
+    pub n_actions: usize,
+    pub batch_size: usize,
+    params: ParamSet,
+    target: ParamSet,
+    adam_m: ParamSet,
+    adam_v: ParamSet,
+    t: f32,
+    /// Train steps executed.
+    pub steps: u64,
+}
+
+impl DqnExecutor {
+    /// Initialise with He-uniform weights (same scheme as
+    /// `model.init_params`) from a seed.
+    pub fn new(rt: &Runtime, env_name: &str, seed: u64) -> Result<DqnExecutor> {
+        let spec = rt
+            .manifest()
+            .env_specs
+            .get(env_name)
+            .ok_or_else(|| {
+                CairlError::Runtime(format!("no env spec {env_name:?} in manifest"))
+            })?
+            .clone();
+        let hidden = rt.manifest().hyperparameters.hidden;
+        let batch_size = rt.manifest().hyperparameters.batch;
+        let shapes: Vec<Vec<usize>> = vec![
+            vec![spec.obs_dim, hidden],
+            vec![hidden],
+            vec![hidden, hidden],
+            vec![hidden],
+            vec![hidden, spec.n_actions],
+            vec![spec.n_actions],
+        ];
+        let mut rng = Pcg32::new(seed, 0x0dd4b2b0b2b7e0d5);
+        let tensors = shapes
+            .iter()
+            .map(|sh| {
+                let n: usize = sh.iter().product();
+                if sh.len() == 2 {
+                    let bound = (6.0 / sh[0] as f32).sqrt();
+                    (0..n).map(|_| rng.uniform(-bound, bound)).collect()
+                } else {
+                    vec![0.0; n]
+                }
+            })
+            .collect();
+        let params = ParamSet { tensors, shapes };
+        let target = params.clone();
+        let adam_m = params.zeros_like();
+        let adam_v = params.zeros_like();
+        Ok(DqnExecutor {
+            env_name: env_name.to_string(),
+            obs_dim: spec.obs_dim,
+            n_actions: spec.n_actions,
+            batch_size,
+            params,
+            target,
+            adam_m,
+            adam_v,
+            t: 0.0,
+            steps: 0,
+        })
+    }
+
+    /// Replace the online parameters (e.g. with the manifest's seeded
+    /// init for bit-reproducible golden tests).
+    pub fn set_params(&mut self, tensors: Vec<Vec<f32>>) {
+        assert_eq!(tensors.len(), 6);
+        for (t, sh) in tensors.iter().zip(&self.params.shapes) {
+            assert_eq!(t.len(), sh.iter().product::<usize>());
+        }
+        self.params.tensors = tensors.clone();
+        self.target.tensors = tensors;
+    }
+
+    /// Current online parameters (flattened, artifact order).
+    pub fn params(&self) -> &[Vec<f32>] {
+        &self.params.tensors
+    }
+
+    /// Copy online -> target (the DQN target-network sync).
+    pub fn sync_target(&mut self) {
+        self.target.tensors.clone_from(&self.params.tensors);
+    }
+
+    fn param_literals(&self, set: &ParamSet) -> Result<Vec<xla::Literal>> {
+        set.tensors
+            .iter()
+            .zip(&set.shapes)
+            .map(|(t, sh)| literal_f32(t, sh))
+            .collect()
+    }
+
+    /// Q-values for a single observation computed natively on the host.
+    ///
+    /// §Perf fast path: the online parameters already live host-side
+    /// (they are round-tripped by every train step), and a 4->32->32->|A|
+    /// forward is ~2.5 kFLOP — microseconds in Rust versus ~300 us of
+    /// PJRT dispatch for the same numbers on the CPU client.  The math
+    /// mirrors the L1 fused kernel exactly (elu, same layer order);
+    /// `runtime_integration::native_act_matches_artifact` pins the two
+    /// together to 1e-4.
+    pub fn q_values_native(&self, obs: &[f32]) -> Vec<f32> {
+        assert_eq!(obs.len(), self.obs_dim);
+        let p = &self.params.tensors;
+        let hidden = self.params.shapes[0][1];
+        let elu = |x: f32| if x > 0.0 { x } else { x.exp() - 1.0 };
+        // h1 = elu(obs @ w1 + b1)
+        let mut h1 = vec![0.0f32; hidden];
+        for (j, h) in h1.iter_mut().enumerate() {
+            let mut acc = p[1][j];
+            for (i, &o) in obs.iter().enumerate() {
+                acc += o * p[0][i * hidden + j];
+            }
+            *h = elu(acc);
+        }
+        // h2 = elu(h1 @ w2 + b2)
+        let mut h2 = vec![0.0f32; hidden];
+        for (j, h) in h2.iter_mut().enumerate() {
+            let mut acc = p[3][j];
+            for (i, &x) in h1.iter().enumerate() {
+                acc += x * p[2][i * hidden + j];
+            }
+            *h = elu(acc);
+        }
+        // q = h2 @ w3 + b3
+        let mut q = vec![0.0f32; self.n_actions];
+        for (j, qv) in q.iter_mut().enumerate() {
+            let mut acc = p[5][j];
+            for (i, &x) in h2.iter().enumerate() {
+                acc += x * p[4][i * self.n_actions + j];
+            }
+            *qv = acc;
+        }
+        q
+    }
+
+    /// Greedy action via the native forward (§Perf fast path).
+    pub fn act_greedy_native(&self, obs: &[f32]) -> usize {
+        let q = self.q_values_native(obs);
+        q.iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+
+    /// Q-values for a single observation through `dqn_act_<env>`.
+    pub fn q_values(&self, rt: &mut Runtime, obs: &[f32]) -> Result<Vec<f32>> {
+        assert_eq!(obs.len(), self.obs_dim);
+        let mut inputs = self.param_literals(&self.params)?;
+        inputs.push(literal_f32(obs, &[1, self.obs_dim])?);
+        let module = rt.load(&format!("dqn_act_{}", self.env_name))?;
+        let out = module.execute_f32(&inputs)?;
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    /// Greedy action for one observation.
+    pub fn act_greedy(&self, rt: &mut Runtime, obs: &[f32]) -> Result<usize> {
+        let q = self.q_values(rt, obs)?;
+        Ok(q.iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0))
+    }
+
+    /// One fused train step through `dqn_train_<env>`; returns the loss.
+    pub fn train_step(&mut self, rt: &mut Runtime, batch: &Batch) -> Result<f32> {
+        let b = self.batch_size;
+        assert_eq!(batch.s.len(), b * self.obs_dim);
+        assert_eq!(batch.a.len(), b);
+        assert_eq!(batch.r.len(), b);
+        assert_eq!(batch.s2.len(), b * self.obs_dim);
+        assert_eq!(batch.done.len(), b);
+
+        let mut inputs = Vec::with_capacity(30);
+        inputs.extend(self.param_literals(&self.params)?);
+        inputs.extend(self.param_literals(&self.target)?);
+        inputs.extend(self.param_literals(&self.adam_m)?);
+        inputs.extend(self.param_literals(&self.adam_v)?);
+        inputs.push(scalar_f32(self.t));
+        inputs.push(literal_f32(&batch.s, &[b, self.obs_dim])?);
+        inputs.push(literal_i32(&batch.a));
+        inputs.push(literal_f32(&batch.r, &[b])?);
+        inputs.push(literal_f32(&batch.s2, &[b, self.obs_dim])?);
+        inputs.push(literal_f32(&batch.done, &[b])?);
+
+        let module = rt.load(&format!("dqn_train_{}", self.env_name))?;
+        let out = module.execute_f32(&inputs)?;
+        debug_assert_eq!(out.len(), 20);
+        for (i, tensor) in out[0..6].iter().enumerate() {
+            self.params.tensors[i].copy_from_slice(tensor);
+        }
+        for (i, tensor) in out[6..12].iter().enumerate() {
+            self.adam_m.tensors[i].copy_from_slice(tensor);
+        }
+        for (i, tensor) in out[12..18].iter().enumerate() {
+            self.adam_v.tensors[i].copy_from_slice(tensor);
+        }
+        self.t = out[18][0];
+        self.steps += 1;
+        Ok(out[19][0])
+    }
+}

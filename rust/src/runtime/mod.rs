@@ -1,0 +1,22 @@
+//! PJRT runtime — loads the AOT artifacts emitted by `make artifacts`
+//! and executes them from the Rust hot path.
+//!
+//! Python (jax) runs exactly once, at build time, to lower the L2 compute
+//! graph (with the L1 Pallas kernels inlined) to HLO **text**; this
+//! module parses that text with the XLA parser, compiles it on the PJRT
+//! CPU client, and exposes typed executors.  No Python on the request
+//! path — the binary is self-contained once `artifacts/` exists.
+//!
+//! * [`artifacts`] — manifest parsing (operand order, shapes, goldens).
+//! * [`pjrt`] — client + executable wrapper (`HloModuleProto::from_text_file`
+//!   -> `XlaComputation::from_proto` -> `client.compile` -> `execute`).
+//! * [`dqn_exec`] — the Table-I DQN bound to literals: parameter store,
+//!   act/train-step calls, target-network sync.
+
+pub mod artifacts;
+pub mod dqn_exec;
+pub mod pjrt;
+
+pub use artifacts::Manifest;
+pub use dqn_exec::DqnExecutor;
+pub use pjrt::{Module, Runtime};

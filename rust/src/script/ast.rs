@@ -1,0 +1,84 @@
+//! MiniScript abstract syntax tree.
+
+/// Binary operators (dynamic dispatch happens in the interpreter).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Mod,
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    And,
+    Or,
+}
+
+/// Unary operators.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UnOp {
+    Neg,
+    Not,
+}
+
+/// Expressions.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Expr {
+    Num(f64),
+    Bool(bool),
+    Str(String),
+    None_,
+    /// Variable reference, resolved by name at run time (CPython-style).
+    Var(String),
+    List(Vec<Expr>),
+    /// `xs[i]`
+    Index(Box<Expr>, Box<Expr>),
+    Un(UnOp, Box<Expr>),
+    Bin(BinOp, Box<Expr>, Box<Expr>),
+    /// `f(a, b, ...)` — user function or builtin, resolved at run time.
+    Call(String, Vec<Expr>),
+}
+
+/// Statements.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Stmt {
+    /// `x = e;` — assigns in the innermost scope unless declared global.
+    Assign(String, Expr),
+    /// `xs[i] = e;`
+    IndexAssign(String, Expr, Expr),
+    /// `x += e;` / `x -= e;` desugared by the parser into Assign.
+    Expr(Expr),
+    If {
+        /// `(condition, body)` for if/elif arms in order.
+        arms: Vec<(Expr, Vec<Stmt>)>,
+        else_body: Vec<Stmt>,
+    },
+    While(Expr, Vec<Stmt>),
+    /// `for i = start, stop { ... }` — integer loop, half-open.
+    For(String, Expr, Expr, Vec<Stmt>),
+    Return(Option<Expr>),
+    Break,
+    Continue,
+    /// `global x;` inside a function body.
+    Global(String),
+}
+
+/// A function definition.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FuncDef {
+    pub name: String,
+    pub params: Vec<String>,
+    pub body: Vec<Stmt>,
+}
+
+/// A parsed program: top-level statements (run once, build globals) and
+/// function definitions.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Program {
+    pub top: Vec<Stmt>,
+    pub funcs: Vec<FuncDef>,
+}

@@ -1,0 +1,507 @@
+//! Classic-control environments as MiniScript programs + the
+//! [`ScriptEnv`] adapter exposing them through the standard [`Env`]
+//! trait.
+//!
+//! These are the experiments' **AI Gym baseline**: the same dynamics as
+//! the native envs, executed by the interpreted runner.  The scripts
+//! follow the Gym sources line by line (f64 arithmetic, like CPython
+//! floats — the native envs use f32, so cross-runner tests compare with
+//! tolerance).
+//!
+//! Script protocol:
+//! * globals `obs_dim`, `n_actions` must be defined at the top level;
+//! * `reset()` returns a list of `obs_dim` floats;
+//! * `step(action)` returns a list of `obs_dim + 2` floats:
+//!   `[obs..., reward, done]`.
+
+use crate::core::env::{Env, Transition};
+use crate::core::spaces::{Action, Space};
+use crate::render::{software, Framebuffer};
+use crate::script::interp::{Interpreter, Value};
+
+/// How to paint this scripted env (reads interpreter globals).
+#[derive(Clone, Copy, Debug)]
+pub enum RenderHint {
+    CartPole,
+    MountainCar,
+    Acrobot,
+    Pendulum,
+    None,
+}
+
+/// A MiniScript program running behind the [`Env`] trait — the paper's
+/// "Python environment in the toolkit" path (§IV-B).
+pub struct ScriptEnv {
+    id: String,
+    interp: Interpreter,
+    obs_dim: usize,
+    n_actions: usize,
+    stream: u64,
+    hint: RenderHint,
+}
+
+impl ScriptEnv {
+    /// Load a script.  `stream` is the PCG stream id of the *native*
+    /// counterpart env (reset-noise parity); pass any constant for
+    /// script-only envs.
+    pub fn load(id: &str, src: &str, stream: u64, hint: RenderHint) -> ScriptEnv {
+        let interp = Interpreter::load(src)
+            .unwrap_or_else(|e| panic!("script env {id}: {e}"));
+        let obs_dim = interp
+            .global("obs_dim")
+            .and_then(|v| v.as_num().ok())
+            .unwrap_or_else(|| panic!("script env {id}: missing obs_dim global"))
+            as usize;
+        let n_actions = interp
+            .global("n_actions")
+            .and_then(|v| v.as_num().ok())
+            .unwrap_or_else(|| panic!("script env {id}: missing n_actions global"))
+            as usize;
+        ScriptEnv {
+            id: id.to_string(),
+            interp,
+            obs_dim,
+            n_actions,
+            stream,
+            hint,
+        }
+    }
+
+    /// Statements the interpreter has executed (profiling).
+    pub fn statements_executed(&self) -> u64 {
+        self.interp.steps_executed
+    }
+
+    fn global_f32(&self, name: &str) -> f32 {
+        self.interp
+            .global(name)
+            .and_then(|v| v.as_num().ok())
+            .unwrap_or(0.0) as f32
+    }
+
+    fn unpack_list(&self, v: Value, want: usize, ctx: &str) -> Vec<f32> {
+        match v {
+            Value::List(xs) => {
+                let xs = xs.lock().unwrap();
+                assert_eq!(
+                    xs.len(),
+                    want,
+                    "{}: {ctx} returned {} values, wanted {want}",
+                    self.id,
+                    xs.len()
+                );
+                xs.iter()
+                    .map(|v| v.as_num().unwrap_or(f64::NAN) as f32)
+                    .collect()
+            }
+            other => panic!("{}: {ctx} returned {other:?}, wanted a list", self.id),
+        }
+    }
+}
+
+impl Env for ScriptEnv {
+    fn id(&self) -> String {
+        self.id.clone()
+    }
+
+    fn observation_space(&self) -> Space {
+        // Scripts expose dynamics, not bounds; report an unbounded box of
+        // the right dimension (agents in this toolkit read bounds from
+        // native envs only).
+        Space::box1(vec![f32::MIN; self.obs_dim], vec![f32::MAX; self.obs_dim])
+    }
+
+    fn action_space(&self) -> Space {
+        Space::Discrete { n: self.n_actions }
+    }
+
+    fn obs_dim(&self) -> usize {
+        self.obs_dim
+    }
+
+    fn seed(&mut self, seed: u64) {
+        self.interp.seed_with_stream(seed, self.stream);
+    }
+
+    fn reset_into(&mut self, obs: &mut [f32]) {
+        let v = self
+            .interp
+            .call("reset", &[])
+            .unwrap_or_else(|e| panic!("{}: reset(): {e}", self.id));
+        let vals = self.unpack_list(v, self.obs_dim, "reset()");
+        obs.copy_from_slice(&vals);
+    }
+
+    fn step_into(&mut self, action: &Action, obs: &mut [f32]) -> Transition {
+        let v = self
+            .interp
+            .call("step", &[Value::Num(action.index() as f64)])
+            .unwrap_or_else(|e| panic!("{}: step(): {e}", self.id));
+        let vals = self.unpack_list(v, self.obs_dim + 2, "step()");
+        obs.copy_from_slice(&vals[..self.obs_dim]);
+        Transition {
+            reward: vals[self.obs_dim],
+            done: vals[self.obs_dim + 1] != 0.0,
+            truncated: false,
+        }
+    }
+
+    fn render(&self, fb: &mut Framebuffer) {
+        match self.hint {
+            RenderHint::CartPole => {
+                software::paint_cartpole(fb, self.global_f32("x"), self.global_f32("th"))
+            }
+            RenderHint::MountainCar => software::paint_mountaincar(
+                fb,
+                self.global_f32("pos"),
+                self.global_f32("vel"),
+            ),
+            RenderHint::Acrobot => {
+                software::paint_acrobot(fb, self.global_f32("t1"), self.global_f32("t2"))
+            }
+            RenderHint::Pendulum => software::paint_pendulum(fb, self.global_f32("th")),
+            RenderHint::None => {}
+        }
+    }
+}
+
+// --------------------------------------------------------------- sources
+
+/// Gym CartPole-v1, line-for-line (explicit Euler, "euler" integrator).
+pub const CARTPOLE_SRC: &str = r#"
+obs_dim = 4;
+n_actions = 2;
+x = 0; xd = 0; th = 0; thd = 0;
+
+def reset() {
+    global x; global xd; global th; global thd;
+    x = uniform(-0.05, 0.05);
+    xd = uniform(-0.05, 0.05);
+    th = uniform(-0.05, 0.05);
+    thd = uniform(-0.05, 0.05);
+    return [x, xd, th, thd];
+}
+
+def step(action) {
+    global x; global xd; global th; global thd;
+    force = -10.0;
+    if (action == 1) { force = 10.0; }
+    costh = cos(th);
+    sinth = sin(th);
+    # masspole*length = 0.05, total_mass = 1.1
+    temp = (force + 0.05 * thd * thd * sinth) / 1.1;
+    thacc = (9.8 * sinth - costh * temp)
+        / (0.5 * (4.0 / 3.0 - 0.1 * costh * costh / 1.1));
+    xacc = temp - 0.05 * thacc * costh / 1.1;
+    x = x + 0.02 * xd;
+    xd = xd + 0.02 * xacc;
+    th = th + 0.02 * thd;
+    thd = thd + 0.02 * thacc;
+    done = 0;
+    # theta threshold = 12 degrees = 0.20943951...
+    if (x < -2.4 or x > 2.4 or th < -0.2094395102393195 or th > 0.2094395102393195) {
+        done = 1;
+    }
+    return [x, xd, th, thd, 1.0, done];
+}
+"#;
+
+/// Gym MountainCar-v0, line-for-line.
+pub const MOUNTAINCAR_SRC: &str = r#"
+obs_dim = 2;
+n_actions = 3;
+pos = 0; vel = 0;
+
+def reset() {
+    global pos; global vel;
+    pos = uniform(-0.6, -0.4);
+    vel = 0;
+    return [pos, vel];
+}
+
+def step(action) {
+    global pos; global vel;
+    vel = vel + (action - 1) * 0.001 + cos(3 * pos) * (0 - 0.0025);
+    vel = clamp(vel, -0.07, 0.07);
+    pos = pos + vel;
+    pos = clamp(pos, -1.2, 0.6);
+    if (pos == -1.2 and vel < 0) { vel = 0; }
+    done = 0;
+    if (pos >= 0.5) { done = 1; }
+    return [pos, vel, -1.0, done];
+}
+"#;
+
+/// Gym Acrobot-v1 ("book" dynamics, single RK4 step of 0.2 s).
+pub const ACROBOT_SRC: &str = r#"
+obs_dim = 6;
+n_actions = 3;
+t1 = 0; t2 = 0; d1v = 0; d2v = 0;
+
+def dsdt(s0, s1, s2, s3, torque) {
+    # m1=m2=1, l1=1, lc1=lc2=0.5, I1=I2=1, g=9.8
+    d1 = 1 * 0.25 + 1 * (1 + 0.25 + 2 * 0.5 * cos(s1)) + 1 + 1;
+    d2 = 1 * (0.25 + 0.5 * cos(s1)) + 1;
+    phi2 = 1 * 0.5 * 9.8 * cos(s0 + s1 - pi() / 2);
+    phi1 = 0 - 1 * 0.5 * s3 * s3 * sin(s1)
+        - 2 * 0.5 * s3 * s2 * sin(s1)
+        + (1 * 0.5 + 1 * 1) * 9.8 * cos(s0 - pi() / 2)
+        + phi2;
+    dd2 = (torque + d2 / d1 * phi1 - 1 * 0.5 * s2 * s2 * sin(s1) - phi2)
+        / (1 * 0.25 + 1 - d2 * d2 / d1);
+    dd1 = 0 - (d2 * dd2 + phi1) / d1;
+    return [s2, s3, dd1, dd2];
+}
+
+def wrap_pi(v) {
+    while (v > pi()) { v = v - 2 * pi(); }
+    while (v < 0 - pi()) { v = v + 2 * pi(); }
+    return v;
+}
+
+def reset() {
+    global t1; global t2; global d1v; global d2v;
+    t1 = uniform(-0.1, 0.1);
+    t2 = uniform(-0.1, 0.1);
+    d1v = uniform(-0.1, 0.1);
+    d2v = uniform(-0.1, 0.1);
+    return [cos(t1), sin(t1), cos(t2), sin(t2), d1v, d2v];
+}
+
+def step(action) {
+    global t1; global t2; global d1v; global d2v;
+    torque = action - 1;
+    dt = 0.2;
+    k1 = dsdt(t1, t2, d1v, d2v, torque);
+    k2 = dsdt(t1 + dt / 2 * k1[0], t2 + dt / 2 * k1[1],
+              d1v + dt / 2 * k1[2], d2v + dt / 2 * k1[3], torque);
+    k3 = dsdt(t1 + dt / 2 * k2[0], t2 + dt / 2 * k2[1],
+              d1v + dt / 2 * k2[2], d2v + dt / 2 * k2[3], torque);
+    k4 = dsdt(t1 + dt * k3[0], t2 + dt * k3[1],
+              d1v + dt * k3[2], d2v + dt * k3[3], torque);
+    t1 = t1 + dt / 6 * (k1[0] + 2 * k2[0] + 2 * k3[0] + k4[0]);
+    t2 = t2 + dt / 6 * (k1[1] + 2 * k2[1] + 2 * k3[1] + k4[1]);
+    d1v = d1v + dt / 6 * (k1[2] + 2 * k2[2] + 2 * k3[2] + k4[2]);
+    d2v = d2v + dt / 6 * (k1[3] + 2 * k2[3] + 2 * k3[3] + k4[3]);
+    t1 = wrap_pi(t1);
+    t2 = wrap_pi(t2);
+    d1v = clamp(d1v, -4 * pi(), 4 * pi());
+    d2v = clamp(d2v, -9 * pi(), 9 * pi());
+    done = 0;
+    reward = -1.0;
+    if (0 - cos(t1) - cos(t2 + t1) > 1.0) { done = 1; reward = 0.0; }
+    return [cos(t1), sin(t1), cos(t2), sin(t2), d1v, d2v, reward, done];
+}
+"#;
+
+/// Gym Pendulum-v1 with the toolkit's 5-level torque discretisation.
+pub const PENDULUM_SRC: &str = r#"
+obs_dim = 3;
+n_actions = 5;
+th = 0; thd = 0;
+
+def angle_normalize(v) {
+    while (v > pi()) { v = v - 2 * pi(); }
+    while (v < 0 - pi()) { v = v + 2 * pi(); }
+    return v;
+}
+
+def reset() {
+    global th; global thd;
+    th = uniform(0 - pi(), pi());
+    thd = uniform(-1, 1);
+    return [cos(th), sin(th), thd];
+}
+
+def step(action) {
+    global th; global thd;
+    u = (action - 2) * 1.0;
+    u = clamp(u, -2, 2);
+    norm = angle_normalize(th);
+    cost = norm * norm + 0.1 * thd * thd + 0.001 * u * u;
+    # g=10, m=1, l=1, dt=0.05
+    thd = thd + (3 * 10.0 / 2.0 * sin(th) + 3.0 * u) * 0.05;
+    thd = clamp(thd, -8, 8);
+    th = th + thd * 0.05;
+    return [cos(th), sin(th), thd, 0 - cost, 0];
+}
+"#;
+
+// Stream ids matching the native envs (reset-noise parity for equal seeds).
+const CARTPOLE_STREAM: u64 = 0x9e3779b97f4a7c15;
+const MOUNTAINCAR_STREAM: u64 = 0xd3c5b1a49e7f2263;
+const ACROBOT_STREAM: u64 = 0x2545f4914f6cdd1d;
+const PENDULUM_STREAM: u64 = 0x6a09e667f3bcc909;
+
+/// CartPole on the interpreted runner.
+pub fn cartpole() -> ScriptEnv {
+    ScriptEnv::load(
+        "Script/CartPole-v1",
+        CARTPOLE_SRC,
+        CARTPOLE_STREAM,
+        RenderHint::CartPole,
+    )
+}
+
+/// MountainCar on the interpreted runner.
+pub fn mountain_car() -> ScriptEnv {
+    ScriptEnv::load(
+        "Script/MountainCar-v0",
+        MOUNTAINCAR_SRC,
+        MOUNTAINCAR_STREAM,
+        RenderHint::MountainCar,
+    )
+}
+
+/// Acrobot on the interpreted runner.
+pub fn acrobot() -> ScriptEnv {
+    ScriptEnv::load(
+        "Script/Acrobot-v1",
+        ACROBOT_SRC,
+        ACROBOT_STREAM,
+        RenderHint::Acrobot,
+    )
+}
+
+/// Discrete-torque Pendulum on the interpreted runner.
+pub fn pendulum() -> ScriptEnv {
+    ScriptEnv::load(
+        "Script/Pendulum-v1",
+        PENDULUM_SRC,
+        PENDULUM_STREAM,
+        RenderHint::Pendulum,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::rng::Pcg32;
+    use crate::envs;
+
+    #[test]
+    fn all_four_scripts_load_and_reset() {
+        for mut env in [cartpole(), mountain_car(), acrobot(), pendulum()] {
+            env.seed(0);
+            let obs = env.reset();
+            assert_eq!(obs.len(), env.obs_dim());
+            assert!(obs.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn script_cartpole_matches_native_trajectory() {
+        let mut native = envs::CartPole::new();
+        let mut script = cartpole();
+        native.seed(123);
+        script.seed(123);
+        let mut on = vec![0.0f32; 4];
+        let mut os = vec![0.0f32; 4];
+        native.reset_into(&mut on);
+        script.reset_into(&mut os);
+        for (a, b) in on.iter().zip(&os) {
+            assert!((a - b).abs() < 1e-5, "reset parity: {on:?} vs {os:?}");
+        }
+        // Follow the same action sequence for 50 steps; f32-vs-f64 drift
+        // stays tiny over this horizon.
+        let mut rng = Pcg32::new(7, 7);
+        for step in 0..50 {
+            let a = Action::Discrete(rng.below(2) as usize);
+            let tn = native.step_into(&a, &mut on);
+            let ts = script.step_into(&a, &mut os);
+            for (x, y) in on.iter().zip(&os) {
+                assert!(
+                    (x - y).abs() < 1e-3,
+                    "step {step}: {on:?} vs {os:?}"
+                );
+            }
+            assert_eq!(tn.done, ts.done, "step {step}");
+            if tn.done {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn script_mountaincar_matches_native_trajectory() {
+        let mut native = envs::MountainCar::new();
+        let mut script = mountain_car();
+        native.seed(5);
+        script.seed(5);
+        let mut on = vec![0.0f32; 2];
+        let mut os = vec![0.0f32; 2];
+        native.reset_into(&mut on);
+        script.reset_into(&mut os);
+        assert!((on[0] - os[0]).abs() < 1e-5);
+        for _ in 0..100 {
+            let a = Action::Discrete(2);
+            native.step_into(&a, &mut on);
+            script.step_into(&a, &mut os);
+        }
+        assert!((on[0] - os[0]).abs() < 1e-3, "{on:?} vs {os:?}");
+        assert!((on[1] - os[1]).abs() < 1e-3);
+    }
+
+    #[test]
+    fn script_acrobot_matches_native_trajectory() {
+        let mut native = envs::Acrobot::new();
+        let mut script = acrobot();
+        native.seed(11);
+        script.seed(11);
+        let mut on = vec![0.0f32; 6];
+        let mut os = vec![0.0f32; 6];
+        native.reset_into(&mut on);
+        script.reset_into(&mut os);
+        for _ in 0..20 {
+            let a = Action::Discrete(2);
+            native.step_into(&a, &mut on);
+            script.step_into(&a, &mut os);
+        }
+        for (x, y) in on.iter().zip(&os) {
+            assert!((x - y).abs() < 5e-3, "{on:?} vs {os:?}");
+        }
+    }
+
+    #[test]
+    fn script_pendulum_matches_native_trajectory() {
+        let mut native = envs::Pendulum::discrete();
+        let mut script = pendulum();
+        native.seed(3);
+        script.seed(3);
+        let mut on = vec![0.0f32; 3];
+        let mut os = vec![0.0f32; 3];
+        native.reset_into(&mut on);
+        script.reset_into(&mut os);
+        let mut tr_n = 0.0;
+        let mut tr_s = 0.0;
+        for _ in 0..50 {
+            let a = Action::Discrete(4);
+            tr_n += native.step_into(&a, &mut on).reward;
+            tr_s += script.step_into(&a, &mut os).reward;
+        }
+        for (x, y) in on.iter().zip(&os) {
+            assert!((x - y).abs() < 1e-2, "{on:?} vs {os:?}");
+        }
+        assert!((tr_n - tr_s).abs() < 0.1, "{tr_n} vs {tr_s}");
+    }
+
+    #[test]
+    fn script_env_render_paints() {
+        let mut env = cartpole();
+        env.seed(0);
+        env.reset();
+        let mut fb = Framebuffer::standard();
+        env.render(&mut fb);
+        assert!(fb.sum() > 10.0);
+    }
+
+    #[test]
+    fn statement_counter_advances() {
+        let mut env = cartpole();
+        env.seed(0);
+        env.reset();
+        let before = env.statements_executed();
+        env.step(&Action::Discrete(0));
+        assert!(env.statements_executed() > before + 10);
+    }
+}

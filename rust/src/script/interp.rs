@@ -1,0 +1,530 @@
+//! MiniScript tree-walking interpreter.
+//!
+//! Deliberately conventional (see the module docs in [`crate::script`]):
+//! boxed values, string-keyed scope lookups, per-call frame allocation,
+//! dynamic operator dispatch.  Do NOT optimise this module — it is the
+//! measured baseline; making it fast would un-calibrate Fig. 1/2 and
+//! Table II.
+
+use std::sync::{Arc, Mutex};
+use std::collections::HashMap;
+
+
+use crate::core::error::{CairlError, Result};
+use crate::core::rng::Pcg32;
+use crate::script::ast::*;
+use crate::script::parser::parse;
+
+/// A dynamic MiniScript value (CPython `PyObject` analogue).
+#[derive(Clone, Debug)]
+pub enum Value {
+    Num(f64),
+    Bool(bool),
+    Str(Arc<String>),
+    List(Arc<Mutex<Vec<Value>>>),
+    None,
+}
+
+impl Value {
+    pub fn list(items: Vec<Value>) -> Value {
+        Value::List(Arc::new(Mutex::new(items)))
+    }
+
+    pub fn as_num(&self) -> Result<f64> {
+        match self {
+            Value::Num(v) => Ok(*v),
+            Value::Bool(b) => Ok(*b as u8 as f64),
+            other => Err(CairlError::Script(format!("expected number, got {other:?}"))),
+        }
+    }
+
+    pub fn truthy(&self) -> bool {
+        match self {
+            Value::Num(v) => *v != 0.0,
+            Value::Bool(b) => *b,
+            Value::Str(s) => !s.is_empty(),
+            Value::List(xs) => !xs.lock().unwrap().is_empty(),
+            Value::None => false,
+        }
+    }
+}
+
+enum Flow {
+    Normal,
+    Break,
+    Continue,
+    Return(Value),
+}
+
+/// A loaded MiniScript program with its global state.
+pub struct Interpreter {
+    funcs: HashMap<String, Arc<FuncDef>>,
+    globals: HashMap<String, Value>,
+    rng: Pcg32,
+    /// Total statements executed (profiling / Fig.-1 accounting).
+    pub steps_executed: u64,
+}
+
+struct Frame {
+    locals: HashMap<String, Value>,
+    global_decls: Vec<String>,
+}
+
+impl Interpreter {
+    /// Parse `src` and run its top-level statements (builds globals).
+    pub fn load(src: &str) -> Result<Interpreter> {
+        let prog = parse(src)?;
+        let mut interp = Interpreter {
+            funcs: prog
+                .funcs
+                .into_iter()
+                .map(|f| (f.name.clone(), Arc::new(f)))
+                .collect(),
+            globals: HashMap::new(),
+            rng: Pcg32::new(0, 0xe7037ed1a0b428db),
+            steps_executed: 0,
+        };
+        let mut top_frame = Frame {
+            locals: HashMap::new(),
+            global_decls: Vec::new(),
+        };
+        // Top-level assignments go straight to globals.
+        for stmt in &prog.top {
+            let flow = interp.exec_top(stmt, &mut top_frame)?;
+            if !matches!(flow, Flow::Normal) {
+                return Err(CairlError::Script(
+                    "break/continue/return at top level".into(),
+                ));
+            }
+        }
+        Ok(interp)
+    }
+
+    /// Re-seed the interpreter's `uniform()` builtin.
+    pub fn seed(&mut self, seed: u64) {
+        self.rng = Pcg32::new(seed, 0xe7037ed1a0b428db);
+    }
+
+    /// Re-seed with an explicit PCG stream id.  [`ScriptEnv`]
+    /// (crate::script::envs::ScriptEnv) uses the *same* stream id as the
+    /// native counterpart env so that, for equal seeds, both runners draw
+    /// identical reset noise — the cross-runner trajectory tests depend
+    /// on this.
+    pub fn seed_with_stream(&mut self, seed: u64, stream: u64) {
+        self.rng = Pcg32::new(seed, stream);
+    }
+
+    /// Read a global variable.
+    pub fn global(&self, name: &str) -> Option<&Value> {
+        self.globals.get(name)
+    }
+
+    /// Call a script function by name.
+    pub fn call(&mut self, name: &str, args: &[Value]) -> Result<Value> {
+        let func = self
+            .funcs
+            .get(name)
+            .cloned()
+            .ok_or_else(|| CairlError::Script(format!("no function {name:?}")))?;
+        if func.params.len() != args.len() {
+            return Err(CairlError::Script(format!(
+                "{name}() takes {} args, got {}",
+                func.params.len(),
+                args.len()
+            )));
+        }
+        // A fresh frame per call — the CPython-frame analogue.
+        let mut frame = Frame {
+            locals: func
+                .params
+                .iter()
+                .cloned()
+                .zip(args.iter().cloned())
+                .collect(),
+            global_decls: Vec::new(),
+        };
+        match self.exec_block(&func.body, &mut frame)? {
+            Flow::Return(v) => Ok(v),
+            _ => Ok(Value::None),
+        }
+    }
+
+    // ------------------------------------------------------------ exec
+
+    /// Top-level statement: assignments bind globals directly.
+    fn exec_top(&mut self, stmt: &Stmt, frame: &mut Frame) -> Result<Flow> {
+        if let Stmt::Assign(name, e) = stmt {
+            let v = self.eval(e, frame)?;
+            self.globals.insert(name.clone(), v);
+            self.steps_executed += 1;
+            return Ok(Flow::Normal);
+        }
+        self.exec(stmt, frame)
+    }
+
+    fn exec_block(&mut self, stmts: &[Stmt], frame: &mut Frame) -> Result<Flow> {
+        for s in stmts {
+            match self.exec(s, frame)? {
+                Flow::Normal => {}
+                other => return Ok(other),
+            }
+        }
+        Ok(Flow::Normal)
+    }
+
+    fn exec(&mut self, stmt: &Stmt, frame: &mut Frame) -> Result<Flow> {
+        self.steps_executed += 1;
+        match stmt {
+            Stmt::Assign(name, e) => {
+                let v = self.eval(e, frame)?;
+                if frame.global_decls.iter().any(|g| g == name) {
+                    self.globals.insert(name.clone(), v);
+                } else {
+                    frame.locals.insert(name.clone(), v);
+                }
+                Ok(Flow::Normal)
+            }
+            Stmt::IndexAssign(name, idx, e) => {
+                let i = self.eval(idx, frame)?.as_num()? as usize;
+                let v = self.eval(e, frame)?;
+                let target = self.lookup(name, frame)?;
+                match target {
+                    Value::List(xs) => {
+                        let mut xs = xs.lock().unwrap();
+                        if i >= xs.len() {
+                            return Err(CairlError::Script(format!(
+                                "index {i} out of range (len {})",
+                                xs.len()
+                            )));
+                        }
+                        xs[i] = v;
+                        Ok(Flow::Normal)
+                    }
+                    other => Err(CairlError::Script(format!(
+                        "cannot index into {other:?}"
+                    ))),
+                }
+            }
+            Stmt::Expr(e) => {
+                self.eval(e, frame)?;
+                Ok(Flow::Normal)
+            }
+            Stmt::If { arms, else_body } => {
+                for (cond, body) in arms {
+                    if self.eval(cond, frame)?.truthy() {
+                        return self.exec_block(body, frame);
+                    }
+                }
+                self.exec_block(else_body, frame)
+            }
+            Stmt::While(cond, body) => {
+                while self.eval(cond, frame)?.truthy() {
+                    match self.exec_block(body, frame)? {
+                        Flow::Break => break,
+                        Flow::Continue | Flow::Normal => {}
+                        ret @ Flow::Return(_) => return Ok(ret),
+                    }
+                }
+                Ok(Flow::Normal)
+            }
+            Stmt::For(var, start, stop, body) => {
+                let s = self.eval(start, frame)?.as_num()?;
+                let e = self.eval(stop, frame)?.as_num()?;
+                let mut i = s;
+                while i < e {
+                    frame.locals.insert(var.clone(), Value::Num(i));
+                    match self.exec_block(body, frame)? {
+                        Flow::Break => break,
+                        Flow::Continue | Flow::Normal => {}
+                        ret @ Flow::Return(_) => return Ok(ret),
+                    }
+                    i += 1.0;
+                }
+                Ok(Flow::Normal)
+            }
+            Stmt::Return(e) => {
+                let v = match e {
+                    Some(e) => self.eval(e, frame)?,
+                    None => Value::None,
+                };
+                Ok(Flow::Return(v))
+            }
+            Stmt::Break => Ok(Flow::Break),
+            Stmt::Continue => Ok(Flow::Continue),
+            Stmt::Global(name) => {
+                frame.global_decls.push(name.clone());
+                Ok(Flow::Normal)
+            }
+        }
+    }
+
+    fn lookup(&self, name: &str, frame: &Frame) -> Result<Value> {
+        // LOAD_FAST then LOAD_GLOBAL, both dict probes.
+        if let Some(v) = frame.locals.get(name) {
+            return Ok(v.clone());
+        }
+        if let Some(v) = self.globals.get(name) {
+            return Ok(v.clone());
+        }
+        Err(CairlError::Script(format!("undefined variable {name:?}")))
+    }
+
+    // ------------------------------------------------------------ eval
+
+    fn eval(&mut self, e: &Expr, frame: &mut Frame) -> Result<Value> {
+        match e {
+            Expr::Num(v) => Ok(Value::Num(*v)),
+            Expr::Bool(b) => Ok(Value::Bool(*b)),
+            Expr::Str(s) => Ok(Value::Str(Arc::new(s.clone()))),
+            Expr::None_ => Ok(Value::None),
+            Expr::Var(name) => self.lookup(name, frame),
+            Expr::List(items) => {
+                let mut out = Vec::with_capacity(items.len());
+                for it in items {
+                    out.push(self.eval(it, frame)?);
+                }
+                Ok(Value::list(out))
+            }
+            Expr::Index(target, idx) => {
+                let xs = self.eval(target, frame)?;
+                let i = self.eval(idx, frame)?.as_num()? as usize;
+                match xs {
+                    Value::List(xs) => {
+                        let xs = xs.lock().unwrap();
+                        xs.get(i).cloned().ok_or_else(|| {
+                            CairlError::Script(format!(
+                                "index {i} out of range (len {})",
+                                xs.len()
+                            ))
+                        })
+                    }
+                    other => Err(CairlError::Script(format!(
+                        "cannot index into {other:?}"
+                    ))),
+                }
+            }
+            Expr::Un(op, inner) => {
+                let v = self.eval(inner, frame)?;
+                match op {
+                    UnOp::Neg => Ok(Value::Num(-v.as_num()?)),
+                    UnOp::Not => Ok(Value::Bool(!v.truthy())),
+                }
+            }
+            Expr::Bin(op, lhs, rhs) => {
+                // Short-circuit logic first.
+                if *op == BinOp::And {
+                    let l = self.eval(lhs, frame)?;
+                    if !l.truthy() {
+                        return Ok(Value::Bool(false));
+                    }
+                    return Ok(Value::Bool(self.eval(rhs, frame)?.truthy()));
+                }
+                if *op == BinOp::Or {
+                    let l = self.eval(lhs, frame)?;
+                    if l.truthy() {
+                        return Ok(Value::Bool(true));
+                    }
+                    return Ok(Value::Bool(self.eval(rhs, frame)?.truthy()));
+                }
+                let l = self.eval(lhs, frame)?;
+                let r = self.eval(rhs, frame)?;
+                let a = l.as_num()?;
+                let b = r.as_num()?;
+                Ok(match op {
+                    BinOp::Add => Value::Num(a + b),
+                    BinOp::Sub => Value::Num(a - b),
+                    BinOp::Mul => Value::Num(a * b),
+                    BinOp::Div => Value::Num(a / b),
+                    BinOp::Mod => Value::Num(a.rem_euclid(b)),
+                    BinOp::Eq => Value::Bool(a == b),
+                    BinOp::Ne => Value::Bool(a != b),
+                    BinOp::Lt => Value::Bool(a < b),
+                    BinOp::Le => Value::Bool(a <= b),
+                    BinOp::Gt => Value::Bool(a > b),
+                    BinOp::Ge => Value::Bool(a >= b),
+                    BinOp::And | BinOp::Or => unreachable!(),
+                })
+            }
+            Expr::Call(name, args) => {
+                let mut vals = Vec::with_capacity(args.len());
+                for a in args {
+                    vals.push(self.eval(a, frame)?);
+                }
+                self.call_any(name, vals)
+            }
+        }
+    }
+
+    fn call_any(&mut self, name: &str, args: Vec<Value>) -> Result<Value> {
+        // Builtins take precedence (like CPython's builtins module probe
+        // after globals miss — inverted here for simplicity; scripts don't
+        // shadow builtins).
+        if let Some(v) = self.builtin(name, &args)? {
+            return Ok(v);
+        }
+        self.call(name, &args)
+    }
+
+    /// Math/builtin dispatch.  Returns Ok(None) when `name` is not a
+    /// builtin (fall through to user functions).
+    fn builtin(&mut self, name: &str, args: &[Value]) -> Result<Option<Value>> {
+        let n1 = |args: &[Value]| -> Result<f64> { args[0].as_num() };
+        let v = match (name, args.len()) {
+            ("cos", 1) => Value::Num(n1(args)?.cos()),
+            ("sin", 1) => Value::Num(n1(args)?.sin()),
+            ("tan", 1) => Value::Num(n1(args)?.tan()),
+            ("sqrt", 1) => Value::Num(n1(args)?.sqrt()),
+            ("exp", 1) => Value::Num(n1(args)?.exp()),
+            ("ln", 1) => Value::Num(n1(args)?.ln()),
+            ("abs", 1) => Value::Num(n1(args)?.abs()),
+            ("floor", 1) => Value::Num(n1(args)?.floor()),
+            ("ceil", 1) => Value::Num(n1(args)?.ceil()),
+            ("sign", 1) => Value::Num(n1(args)?.signum()),
+            ("pow", 2) => Value::Num(n1(args)?.powf(args[1].as_num()?)),
+            ("min", 2) => Value::Num(n1(args)?.min(args[1].as_num()?)),
+            ("max", 2) => Value::Num(n1(args)?.max(args[1].as_num()?)),
+            ("clamp", 3) => Value::Num(
+                n1(args)?
+                    .max(args[1].as_num()?)
+                    .min(args[2].as_num()?),
+            ),
+            ("pi", 0) => Value::Num(std::f64::consts::PI),
+            ("uniform", 2) => {
+                let lo = args[0].as_num()?;
+                let hi = args[1].as_num()?;
+                Value::Num(lo + (hi - lo) * self.rng.next_f64())
+            }
+            ("len", 1) => match &args[0] {
+                Value::List(xs) => Value::Num(xs.lock().unwrap().len() as f64),
+                other => {
+                    return Err(CairlError::Script(format!("len of {other:?}")))
+                }
+            },
+            ("push", 2) => match &args[0] {
+                Value::List(xs) => {
+                    xs.lock().unwrap().push(args[1].clone());
+                    Value::None
+                }
+                other => {
+                    return Err(CairlError::Script(format!("push to {other:?}")))
+                }
+            },
+            ("zeros", 1) => {
+                let n = n1(args)? as usize;
+                Value::list(vec![Value::Num(0.0); n])
+            }
+            _ => return Ok(None),
+        };
+        Ok(Some(v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(src: &str, func: &str, args: &[Value]) -> Value {
+        let mut interp = Interpreter::load(src).unwrap();
+        interp.call(func, args).unwrap()
+    }
+
+    #[test]
+    fn arithmetic_and_return() {
+        let v = run("def f(a, b) { return a * 10 + b; }", "f",
+                    &[Value::Num(4.0), Value::Num(2.0)]);
+        assert_eq!(v.as_num().unwrap(), 42.0);
+    }
+
+    #[test]
+    fn globals_persist_between_calls() {
+        let src = "count = 0; def bump() { global count; count = count + 1; return count; }";
+        let mut interp = Interpreter::load(src).unwrap();
+        assert_eq!(interp.call("bump", &[]).unwrap().as_num().unwrap(), 1.0);
+        assert_eq!(interp.call("bump", &[]).unwrap().as_num().unwrap(), 2.0);
+        assert_eq!(interp.global("count").unwrap().as_num().unwrap(), 2.0);
+    }
+
+    #[test]
+    fn locals_do_not_leak_without_global() {
+        let src = "x = 5; def f() { x = 10; return x; } def g() { return x; }";
+        let mut interp = Interpreter::load(src).unwrap();
+        assert_eq!(interp.call("f", &[]).unwrap().as_num().unwrap(), 10.0);
+        assert_eq!(interp.call("g", &[]).unwrap().as_num().unwrap(), 5.0);
+    }
+
+    #[test]
+    fn while_loop_with_break_continue() {
+        let src = "def f() { s = 0; i = 0; while (true) { i += 1; if (i > 10) { break; } if (i % 2 == 0) { continue; } s += i; } return s; }";
+        let v = run(src, "f", &[]);
+        assert_eq!(v.as_num().unwrap(), 25.0); // 1+3+5+7+9
+    }
+
+    #[test]
+    fn for_loop_sums() {
+        let v = run("def f() { s = 0; for i = 0, 10 { s += i; } return s; }", "f", &[]);
+        assert_eq!(v.as_num().unwrap(), 45.0);
+    }
+
+    #[test]
+    fn lists_index_and_mutate() {
+        let src = "def f() { xs = zeros(3); xs[1] = 7; push(xs, 9); return xs[1] + xs[3] + len(xs); }";
+        assert_eq!(run(src, "f", &[]).as_num().unwrap(), 20.0);
+    }
+
+    #[test]
+    fn builtin_math() {
+        let v = run("def f() { return clamp(cos(0) * 5, 0, 2) + sqrt(16); }", "f", &[]);
+        assert_eq!(v.as_num().unwrap(), 6.0);
+    }
+
+    #[test]
+    fn uniform_is_seeded() {
+        let src = "def f() { return uniform(-1, 1); }";
+        let mut a = Interpreter::load(src).unwrap();
+        let mut b = Interpreter::load(src).unwrap();
+        a.seed(42);
+        b.seed(42);
+        for _ in 0..10 {
+            let va = a.call("f", &[]).unwrap().as_num().unwrap();
+            let vb = b.call("f", &[]).unwrap().as_num().unwrap();
+            assert_eq!(va, vb);
+            assert!((-1.0..1.0).contains(&va));
+        }
+    }
+
+    #[test]
+    fn user_functions_call_each_other() {
+        let src = "def sq(x) { return x * x; } def f(x) { return sq(x) + sq(x + 1); }";
+        assert_eq!(run(src, "f", &[Value::Num(2.0)]).as_num().unwrap(), 13.0);
+    }
+
+    #[test]
+    fn recursion_works() {
+        let src = "def fib(n) { if (n < 2) { return n; } return fib(n - 1) + fib(n - 2); }";
+        assert_eq!(run(src, "fib", &[Value::Num(10.0)]).as_num().unwrap(), 55.0);
+    }
+
+    #[test]
+    fn short_circuit_logic() {
+        // Division by zero on the rhs must not be evaluated.
+        let src = "def f() { x = 0; if (x != 0 and 1 / x > 0) { return 1; } return 0; }";
+        assert_eq!(run(src, "f", &[]).as_num().unwrap(), 0.0);
+    }
+
+    #[test]
+    fn errors_are_reported() {
+        let mut interp = Interpreter::load("def f() { return missing; }").unwrap();
+        assert!(interp.call("f", &[]).is_err());
+        assert!(interp.call("nope", &[]).is_err());
+        let mut i2 = Interpreter::load("def f() { xs = zeros(2); return xs[5]; }").unwrap();
+        assert!(i2.call("f", &[]).is_err());
+    }
+
+    #[test]
+    fn elif_chains() {
+        let src = "def f(x) { if (x > 0) { return 1; } elif (x < 0) { return -1; } else { return 0; } }";
+        assert_eq!(run(src, "f", &[Value::Num(5.0)]).as_num().unwrap(), 1.0);
+        assert_eq!(run(src, "f", &[Value::Num(-5.0)]).as_num().unwrap(), -1.0);
+        assert_eq!(run(src, "f", &[Value::Num(0.0)]).as_num().unwrap(), 0.0);
+    }
+}

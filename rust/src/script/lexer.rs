@@ -1,0 +1,376 @@
+//! MiniScript lexer: source text -> token stream.
+//!
+//! The language is expression-oriented with C-style braces and
+//! semicolons (no significant whitespace — keeps the parser simple while
+//! the *interpreter* carries the Python-like dynamic costs, which is
+//! what the baseline models).
+
+use crate::core::error::{CairlError, Result};
+
+/// One lexical token with its source line (for error messages).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tok {
+    Num(f64),
+    Ident(String),
+    Str(String),
+    // keywords
+    Def,
+    If,
+    Elif,
+    Else,
+    While,
+    For,
+    Return,
+    Break,
+    Continue,
+    True,
+    False,
+    None_,
+    And,
+    Or,
+    Not,
+    Global,
+    // punctuation
+    LParen,
+    RParen,
+    LBrace,
+    RBrace,
+    LBracket,
+    RBracket,
+    Comma,
+    Semi,
+    // operators
+    Assign,
+    Plus,
+    Minus,
+    Star,
+    Slash,
+    Percent,
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    PlusAssign,
+    MinusAssign,
+    Eof,
+}
+
+/// A token tagged with its 1-based source line.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Spanned {
+    pub tok: Tok,
+    pub line: u32,
+}
+
+fn keyword(word: &str) -> Option<Tok> {
+    Some(match word {
+        "def" => Tok::Def,
+        "if" => Tok::If,
+        "elif" => Tok::Elif,
+        "else" => Tok::Else,
+        "while" => Tok::While,
+        "for" => Tok::For,
+        "return" => Tok::Return,
+        "break" => Tok::Break,
+        "continue" => Tok::Continue,
+        "true" => Tok::True,
+        "false" => Tok::False,
+        "none" => Tok::None_,
+        "and" => Tok::And,
+        "or" => Tok::Or,
+        "not" => Tok::Not,
+        "global" => Tok::Global,
+        _ => return None,
+    })
+}
+
+/// Tokenise a full program.
+pub fn lex(src: &str) -> Result<Vec<Spanned>> {
+    let mut out = Vec::new();
+    let bytes = src.as_bytes();
+    let mut i = 0;
+    let mut line = 1u32;
+    let n = bytes.len();
+
+    macro_rules! push {
+        ($t:expr) => {
+            out.push(Spanned { tok: $t, line })
+        };
+    }
+
+    while i < n {
+        let c = bytes[i] as char;
+        match c {
+            '\n' => {
+                line += 1;
+                i += 1;
+            }
+            ' ' | '\t' | '\r' => i += 1,
+            '#' => {
+                // comment to end of line
+                while i < n && bytes[i] != b'\n' {
+                    i += 1;
+                }
+            }
+            '(' => {
+                push!(Tok::LParen);
+                i += 1;
+            }
+            ')' => {
+                push!(Tok::RParen);
+                i += 1;
+            }
+            '{' => {
+                push!(Tok::LBrace);
+                i += 1;
+            }
+            '}' => {
+                push!(Tok::RBrace);
+                i += 1;
+            }
+            '[' => {
+                push!(Tok::LBracket);
+                i += 1;
+            }
+            ']' => {
+                push!(Tok::RBracket);
+                i += 1;
+            }
+            ',' => {
+                push!(Tok::Comma);
+                i += 1;
+            }
+            ';' => {
+                push!(Tok::Semi);
+                i += 1;
+            }
+            '+' => {
+                if i + 1 < n && bytes[i + 1] == b'=' {
+                    push!(Tok::PlusAssign);
+                    i += 2;
+                } else {
+                    push!(Tok::Plus);
+                    i += 1;
+                }
+            }
+            '-' => {
+                if i + 1 < n && bytes[i + 1] == b'=' {
+                    push!(Tok::MinusAssign);
+                    i += 2;
+                } else {
+                    push!(Tok::Minus);
+                    i += 1;
+                }
+            }
+            '*' => {
+                push!(Tok::Star);
+                i += 1;
+            }
+            '/' => {
+                push!(Tok::Slash);
+                i += 1;
+            }
+            '%' => {
+                push!(Tok::Percent);
+                i += 1;
+            }
+            '=' => {
+                if i + 1 < n && bytes[i + 1] == b'=' {
+                    push!(Tok::Eq);
+                    i += 2;
+                } else {
+                    push!(Tok::Assign);
+                    i += 1;
+                }
+            }
+            '!' => {
+                if i + 1 < n && bytes[i + 1] == b'=' {
+                    push!(Tok::Ne);
+                    i += 2;
+                } else {
+                    return Err(CairlError::Script(format!("line {line}: lone '!'")));
+                }
+            }
+            '<' => {
+                if i + 1 < n && bytes[i + 1] == b'=' {
+                    push!(Tok::Le);
+                    i += 2;
+                } else {
+                    push!(Tok::Lt);
+                    i += 1;
+                }
+            }
+            '>' => {
+                if i + 1 < n && bytes[i + 1] == b'=' {
+                    push!(Tok::Ge);
+                    i += 2;
+                } else {
+                    push!(Tok::Gt);
+                    i += 1;
+                }
+            }
+            '"' => {
+                let start = i + 1;
+                let mut j = start;
+                while j < n && bytes[j] != b'"' {
+                    if bytes[j] == b'\n' {
+                        line += 1;
+                    }
+                    j += 1;
+                }
+                if j == n {
+                    return Err(CairlError::Script(format!(
+                        "line {line}: unterminated string"
+                    )));
+                }
+                push!(Tok::Str(src[start..j].to_string()));
+                i = j + 1;
+            }
+            '0'..='9' | '.' => {
+                let start = i;
+                let mut seen_dot = false;
+                while i < n {
+                    match bytes[i] as char {
+                        '0'..='9' => i += 1,
+                        '.' if !seen_dot => {
+                            seen_dot = true;
+                            i += 1;
+                        }
+                        'e' | 'E' => {
+                            i += 1;
+                            if i < n && (bytes[i] == b'+' || bytes[i] == b'-') {
+                                i += 1;
+                            }
+                        }
+                        _ => break,
+                    }
+                }
+                let text = &src[start..i];
+                let v: f64 = text.parse().map_err(|_| {
+                    CairlError::Script(format!("line {line}: bad number {text:?}"))
+                })?;
+                push!(Tok::Num(v));
+            }
+            'a'..='z' | 'A'..='Z' | '_' => {
+                let start = i;
+                while i < n
+                    && (bytes[i].is_ascii_alphanumeric() || bytes[i] == b'_')
+                {
+                    i += 1;
+                }
+                let word = &src[start..i];
+                match keyword(word) {
+                    Some(t) => push!(t),
+                    None => push!(Tok::Ident(word.to_string())),
+                }
+            }
+            other => {
+                return Err(CairlError::Script(format!(
+                    "line {line}: unexpected character {other:?}"
+                )))
+            }
+        }
+    }
+    out.push(Spanned {
+        tok: Tok::Eof,
+        line,
+    });
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(src: &str) -> Vec<Tok> {
+        lex(src).unwrap().into_iter().map(|s| s.tok).collect()
+    }
+
+    #[test]
+    fn lexes_numbers_and_ops() {
+        assert_eq!(
+            toks("x = 1.5 + 2e3;"),
+            vec![
+                Tok::Ident("x".into()),
+                Tok::Assign,
+                Tok::Num(1.5),
+                Tok::Plus,
+                Tok::Num(2000.0),
+                Tok::Semi,
+                Tok::Eof
+            ]
+        );
+    }
+
+    #[test]
+    fn keywords_vs_identifiers() {
+        assert_eq!(
+            toks("if iffy"),
+            vec![Tok::If, Tok::Ident("iffy".into()), Tok::Eof]
+        );
+    }
+
+    #[test]
+    fn comments_are_skipped() {
+        assert_eq!(
+            toks("x; # a comment\ny;"),
+            vec![
+                Tok::Ident("x".into()),
+                Tok::Semi,
+                Tok::Ident("y".into()),
+                Tok::Semi,
+                Tok::Eof
+            ]
+        );
+    }
+
+    #[test]
+    fn comparison_operators() {
+        assert_eq!(
+            toks("<= >= == != < >"),
+            vec![Tok::Le, Tok::Ge, Tok::Eq, Tok::Ne, Tok::Lt, Tok::Gt, Tok::Eof]
+        );
+    }
+
+    #[test]
+    fn compound_assign() {
+        assert_eq!(
+            toks("x += 1; y -= 2;"),
+            vec![
+                Tok::Ident("x".into()),
+                Tok::PlusAssign,
+                Tok::Num(1.0),
+                Tok::Semi,
+                Tok::Ident("y".into()),
+                Tok::MinusAssign,
+                Tok::Num(2.0),
+                Tok::Semi,
+                Tok::Eof
+            ]
+        );
+    }
+
+    #[test]
+    fn tracks_line_numbers() {
+        let spanned = lex("a;\nb;\nc;").unwrap();
+        assert_eq!(spanned[0].line, 1);
+        assert_eq!(spanned[2].line, 2);
+        assert_eq!(spanned[4].line, 3);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(lex("x = @;").is_err());
+        assert!(lex("\"unterminated").is_err());
+    }
+
+    #[test]
+    fn strings() {
+        assert_eq!(
+            toks("\"hello\""),
+            vec![Tok::Str("hello".into()), Tok::Eof]
+        );
+    }
+}

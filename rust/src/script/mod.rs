@@ -1,0 +1,39 @@
+//! The interpreted-script runner — CaiRL's "Python environment" path and
+//! the experiments' AI-Gym baseline surrogate.
+//!
+//! The paper benchmarks compiled (C++) environments against the same
+//! dynamics running under CPython.  This image has the environments in
+//! Rust; to reproduce the *interpreted dynamic language vs compiled
+//! native* comparison (Fig. 1, Fig. 2, Table II) without shipping
+//! CPython, this module implements **MiniScript**: a small dynamic
+//! language executed by a deliberately conventional tree-walking
+//! interpreter with
+//!
+//! * boxed dynamic values ([`interp::Value`]) — every number is
+//!   heap-semantics tagged data, like CPython's `PyObject*`,
+//! * string-keyed hash-map variable lookup on every access — like
+//!   CPython's `LOAD_NAME`/`LOAD_GLOBAL` dict probes,
+//! * dynamic operator dispatch with run-time type checks — like
+//!   CPython's `BINARY_OP` protocol,
+//! * per-call environment allocation — like CPython frames.
+//!
+//! These are the overhead classes Zehra et al. [24] and Zhang et al. [16]
+//! attribute Python's ~50x slowdown to; DESIGN.md §Substitutions states
+//! the calibration argument.  The four classic-control environments are
+//! re-implemented as MiniScript programs ([`envs`]) running behind the
+//! standard [`Env`](crate::core::env::Env) trait, so every benchmark and
+//! agent runs unchanged on either runner — the paper's "unified API
+//! across run-times" (§III-A).
+//!
+//! MiniScript math is f64 (like Python floats) while the native envs use
+//! f32; the cross-runner tests therefore compare trajectories with a
+//! tolerance over bounded horizons.
+
+pub mod ast;
+pub mod envs;
+pub mod interp;
+pub mod lexer;
+pub mod parser;
+
+pub use envs::ScriptEnv;
+pub use interp::{Interpreter, Value};

@@ -1,0 +1,484 @@
+//! MiniScript recursive-descent parser: tokens -> [`Program`].
+
+use crate::core::error::{CairlError, Result};
+use crate::script::ast::*;
+use crate::script::lexer::{lex, Spanned, Tok};
+
+struct Parser {
+    toks: Vec<Spanned>,
+    pos: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> &Tok {
+        &self.toks[self.pos].tok
+    }
+
+    fn line(&self) -> u32 {
+        self.toks[self.pos].line
+    }
+
+    fn advance(&mut self) -> Tok {
+        let t = self.toks[self.pos].tok.clone();
+        if self.pos + 1 < self.toks.len() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn expect(&mut self, want: Tok) -> Result<()> {
+        if *self.peek() == want {
+            self.advance();
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected {want:?}, found {:?}", self.peek())))
+        }
+    }
+
+    fn err(&self, msg: &str) -> CairlError {
+        CairlError::Script(format!("parse error, line {}: {msg}", self.line()))
+    }
+
+    fn ident(&mut self) -> Result<String> {
+        match self.advance() {
+            Tok::Ident(s) => Ok(s),
+            other => Err(self.err(&format!("expected identifier, found {other:?}"))),
+        }
+    }
+
+    // ---------------------------------------------------------- program
+
+    fn program(&mut self) -> Result<Program> {
+        let mut prog = Program::default();
+        while *self.peek() != Tok::Eof {
+            if *self.peek() == Tok::Def {
+                prog.funcs.push(self.func_def()?);
+            } else {
+                prog.top.push(self.statement()?);
+            }
+        }
+        Ok(prog)
+    }
+
+    fn func_def(&mut self) -> Result<FuncDef> {
+        self.expect(Tok::Def)?;
+        let name = self.ident()?;
+        self.expect(Tok::LParen)?;
+        let mut params = Vec::new();
+        if *self.peek() != Tok::RParen {
+            loop {
+                params.push(self.ident()?);
+                if *self.peek() == Tok::Comma {
+                    self.advance();
+                } else {
+                    break;
+                }
+            }
+        }
+        self.expect(Tok::RParen)?;
+        let body = self.block()?;
+        Ok(FuncDef { name, params, body })
+    }
+
+    fn block(&mut self) -> Result<Vec<Stmt>> {
+        self.expect(Tok::LBrace)?;
+        let mut stmts = Vec::new();
+        while *self.peek() != Tok::RBrace {
+            if *self.peek() == Tok::Eof {
+                return Err(self.err("unterminated block"));
+            }
+            stmts.push(self.statement()?);
+        }
+        self.expect(Tok::RBrace)?;
+        Ok(stmts)
+    }
+
+    // --------------------------------------------------------- statement
+
+    fn statement(&mut self) -> Result<Stmt> {
+        match self.peek().clone() {
+            Tok::If => self.if_stmt(),
+            Tok::While => {
+                self.advance();
+                self.expect(Tok::LParen)?;
+                let cond = self.expr()?;
+                self.expect(Tok::RParen)?;
+                let body = self.block()?;
+                Ok(Stmt::While(cond, body))
+            }
+            Tok::For => {
+                // for i = start, stop { ... }
+                self.advance();
+                let var = self.ident()?;
+                self.expect(Tok::Assign)?;
+                let start = self.expr()?;
+                self.expect(Tok::Comma)?;
+                let stop = self.expr()?;
+                let body = self.block()?;
+                Ok(Stmt::For(var, start, stop, body))
+            }
+            Tok::Return => {
+                self.advance();
+                let value = if *self.peek() == Tok::Semi {
+                    None
+                } else {
+                    Some(self.expr()?)
+                };
+                self.expect(Tok::Semi)?;
+                Ok(Stmt::Return(value))
+            }
+            Tok::Break => {
+                self.advance();
+                self.expect(Tok::Semi)?;
+                Ok(Stmt::Break)
+            }
+            Tok::Continue => {
+                self.advance();
+                self.expect(Tok::Semi)?;
+                Ok(Stmt::Continue)
+            }
+            Tok::Global => {
+                self.advance();
+                let name = self.ident()?;
+                self.expect(Tok::Semi)?;
+                Ok(Stmt::Global(name))
+            }
+            Tok::Ident(name) => {
+                // Lookahead to distinguish assignment forms from bare calls.
+                let save = self.pos;
+                self.advance();
+                match self.peek().clone() {
+                    Tok::Assign => {
+                        self.advance();
+                        let e = self.expr()?;
+                        self.expect(Tok::Semi)?;
+                        Ok(Stmt::Assign(name, e))
+                    }
+                    Tok::PlusAssign => {
+                        self.advance();
+                        let e = self.expr()?;
+                        self.expect(Tok::Semi)?;
+                        Ok(Stmt::Assign(
+                            name.clone(),
+                            Expr::Bin(
+                                BinOp::Add,
+                                Box::new(Expr::Var(name)),
+                                Box::new(e),
+                            ),
+                        ))
+                    }
+                    Tok::MinusAssign => {
+                        self.advance();
+                        let e = self.expr()?;
+                        self.expect(Tok::Semi)?;
+                        Ok(Stmt::Assign(
+                            name.clone(),
+                            Expr::Bin(
+                                BinOp::Sub,
+                                Box::new(Expr::Var(name)),
+                                Box::new(e),
+                            ),
+                        ))
+                    }
+                    Tok::LBracket => {
+                        self.advance();
+                        let idx = self.expr()?;
+                        self.expect(Tok::RBracket)?;
+                        if *self.peek() == Tok::Assign {
+                            self.advance();
+                            let e = self.expr()?;
+                            self.expect(Tok::Semi)?;
+                            Ok(Stmt::IndexAssign(name, idx, e))
+                        } else {
+                            // An expression like xs[i] used as a statement:
+                            // rewind and parse as expression statement.
+                            self.pos = save;
+                            let e = self.expr()?;
+                            self.expect(Tok::Semi)?;
+                            Ok(Stmt::Expr(e))
+                        }
+                    }
+                    _ => {
+                        self.pos = save;
+                        let e = self.expr()?;
+                        self.expect(Tok::Semi)?;
+                        Ok(Stmt::Expr(e))
+                    }
+                }
+            }
+            _ => {
+                let e = self.expr()?;
+                self.expect(Tok::Semi)?;
+                Ok(Stmt::Expr(e))
+            }
+        }
+    }
+
+    fn if_stmt(&mut self) -> Result<Stmt> {
+        self.expect(Tok::If)?;
+        self.expect(Tok::LParen)?;
+        let cond = self.expr()?;
+        self.expect(Tok::RParen)?;
+        let body = self.block()?;
+        let mut arms = vec![(cond, body)];
+        let mut else_body = Vec::new();
+        loop {
+            match self.peek() {
+                Tok::Elif => {
+                    self.advance();
+                    self.expect(Tok::LParen)?;
+                    let c = self.expr()?;
+                    self.expect(Tok::RParen)?;
+                    let b = self.block()?;
+                    arms.push((c, b));
+                }
+                Tok::Else => {
+                    self.advance();
+                    else_body = self.block()?;
+                    break;
+                }
+                _ => break,
+            }
+        }
+        Ok(Stmt::If { arms, else_body })
+    }
+
+    // -------------------------------------------------------- expression
+    // Precedence climbing: or < and < comparison < additive <
+    // multiplicative < unary < postfix < primary.
+
+    fn expr(&mut self) -> Result<Expr> {
+        self.or_expr()
+    }
+
+    fn or_expr(&mut self) -> Result<Expr> {
+        let mut lhs = self.and_expr()?;
+        while *self.peek() == Tok::Or {
+            self.advance();
+            let rhs = self.and_expr()?;
+            lhs = Expr::Bin(BinOp::Or, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn and_expr(&mut self) -> Result<Expr> {
+        let mut lhs = self.cmp_expr()?;
+        while *self.peek() == Tok::And {
+            self.advance();
+            let rhs = self.cmp_expr()?;
+            lhs = Expr::Bin(BinOp::And, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn cmp_expr(&mut self) -> Result<Expr> {
+        let lhs = self.add_expr()?;
+        let op = match self.peek() {
+            Tok::Eq => BinOp::Eq,
+            Tok::Ne => BinOp::Ne,
+            Tok::Lt => BinOp::Lt,
+            Tok::Le => BinOp::Le,
+            Tok::Gt => BinOp::Gt,
+            Tok::Ge => BinOp::Ge,
+            _ => return Ok(lhs),
+        };
+        self.advance();
+        let rhs = self.add_expr()?;
+        Ok(Expr::Bin(op, Box::new(lhs), Box::new(rhs)))
+    }
+
+    fn add_expr(&mut self) -> Result<Expr> {
+        let mut lhs = self.mul_expr()?;
+        loop {
+            let op = match self.peek() {
+                Tok::Plus => BinOp::Add,
+                Tok::Minus => BinOp::Sub,
+                _ => break,
+            };
+            self.advance();
+            let rhs = self.mul_expr()?;
+            lhs = Expr::Bin(op, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn mul_expr(&mut self) -> Result<Expr> {
+        let mut lhs = self.unary_expr()?;
+        loop {
+            let op = match self.peek() {
+                Tok::Star => BinOp::Mul,
+                Tok::Slash => BinOp::Div,
+                Tok::Percent => BinOp::Mod,
+                _ => break,
+            };
+            self.advance();
+            let rhs = self.unary_expr()?;
+            lhs = Expr::Bin(op, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn unary_expr(&mut self) -> Result<Expr> {
+        match self.peek() {
+            Tok::Minus => {
+                self.advance();
+                Ok(Expr::Un(UnOp::Neg, Box::new(self.unary_expr()?)))
+            }
+            Tok::Not => {
+                self.advance();
+                Ok(Expr::Un(UnOp::Not, Box::new(self.unary_expr()?)))
+            }
+            _ => self.postfix_expr(),
+        }
+    }
+
+    fn postfix_expr(&mut self) -> Result<Expr> {
+        let mut e = self.primary()?;
+        while *self.peek() == Tok::LBracket {
+            self.advance();
+            let idx = self.expr()?;
+            self.expect(Tok::RBracket)?;
+            e = Expr::Index(Box::new(e), Box::new(idx));
+        }
+        Ok(e)
+    }
+
+    fn primary(&mut self) -> Result<Expr> {
+        match self.advance() {
+            Tok::Num(v) => Ok(Expr::Num(v)),
+            Tok::True => Ok(Expr::Bool(true)),
+            Tok::False => Ok(Expr::Bool(false)),
+            Tok::None_ => Ok(Expr::None_),
+            Tok::Str(s) => Ok(Expr::Str(s)),
+            Tok::LParen => {
+                let e = self.expr()?;
+                self.expect(Tok::RParen)?;
+                Ok(e)
+            }
+            Tok::LBracket => {
+                let mut items = Vec::new();
+                if *self.peek() != Tok::RBracket {
+                    loop {
+                        items.push(self.expr()?);
+                        if *self.peek() == Tok::Comma {
+                            self.advance();
+                        } else {
+                            break;
+                        }
+                    }
+                }
+                self.expect(Tok::RBracket)?;
+                Ok(Expr::List(items))
+            }
+            Tok::Ident(name) => {
+                if *self.peek() == Tok::LParen {
+                    self.advance();
+                    let mut args = Vec::new();
+                    if *self.peek() != Tok::RParen {
+                        loop {
+                            args.push(self.expr()?);
+                            if *self.peek() == Tok::Comma {
+                                self.advance();
+                            } else {
+                                break;
+                            }
+                        }
+                    }
+                    self.expect(Tok::RParen)?;
+                    Ok(Expr::Call(name, args))
+                } else {
+                    Ok(Expr::Var(name))
+                }
+            }
+            other => Err(self.err(&format!("unexpected token {other:?}"))),
+        }
+    }
+}
+
+/// Parse a MiniScript program from source text.
+pub fn parse(src: &str) -> Result<Program> {
+    let toks = lex(src)?;
+    let mut p = Parser { toks, pos: 0 };
+    p.program()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_assignment_and_arith_with_precedence() {
+        let prog = parse("x = 1 + 2 * 3;").unwrap();
+        assert_eq!(prog.top.len(), 1);
+        match &prog.top[0] {
+            Stmt::Assign(name, Expr::Bin(BinOp::Add, _, rhs)) => {
+                assert_eq!(name, "x");
+                assert!(matches!(**rhs, Expr::Bin(BinOp::Mul, _, _)));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_function_def() {
+        let prog = parse("def f(a, b) { return a + b; }").unwrap();
+        assert_eq!(prog.funcs.len(), 1);
+        assert_eq!(prog.funcs[0].params, vec!["a", "b"]);
+    }
+
+    #[test]
+    fn parses_if_elif_else() {
+        let prog = parse(
+            "def f(x) { if (x > 0) { return 1; } elif (x < 0) { return -1; } else { return 0; } }",
+        )
+        .unwrap();
+        match &prog.funcs[0].body[0] {
+            Stmt::If { arms, else_body } => {
+                assert_eq!(arms.len(), 2);
+                assert_eq!(else_body.len(), 1);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_while_and_compound_assign() {
+        let prog = parse("def f() { i = 0; while (i < 10) { i += 1; } return i; }").unwrap();
+        assert!(matches!(prog.funcs[0].body[1], Stmt::While(_, _)));
+    }
+
+    #[test]
+    fn parses_for_loop() {
+        let prog = parse("def f() { s = 0; for i = 0, 10 { s += i; } return s; }").unwrap();
+        assert!(matches!(prog.funcs[0].body[1], Stmt::For(_, _, _, _)));
+    }
+
+    #[test]
+    fn parses_lists_and_indexing() {
+        let prog = parse("xs = [1, 2, 3]; y = xs[1]; xs[0] = 9;").unwrap();
+        assert_eq!(prog.top.len(), 3);
+        assert!(matches!(prog.top[2], Stmt::IndexAssign(_, _, _)));
+    }
+
+    #[test]
+    fn parses_calls_and_logic() {
+        let prog = parse("z = cos(1.0) and not sin(x) or y;").unwrap();
+        assert_eq!(prog.top.len(), 1);
+    }
+
+    #[test]
+    fn error_on_missing_semi() {
+        assert!(parse("x = 1").is_err());
+    }
+
+    #[test]
+    fn error_on_unterminated_block() {
+        assert!(parse("def f() { x = 1;").is_err());
+    }
+
+    #[test]
+    fn index_expression_statement() {
+        // xs[0]; is a valid (useless) expression statement.
+        assert!(parse("xs[0];").is_ok());
+    }
+}

@@ -1,0 +1,88 @@
+//! Structured CSV logging for experiment outputs.
+//!
+//! Every figure/table reproduction writes its rows through this logger,
+//! giving EXPERIMENTS.md a stable on-disk provenance trail under
+//! `results/`.
+
+use std::fs::{self, File};
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+use crate::core::error::Result;
+
+/// A buffered CSV writer with a fixed header.
+pub struct CsvLogger {
+    path: PathBuf,
+    writer: BufWriter<File>,
+    columns: usize,
+    rows: usize,
+}
+
+impl CsvLogger {
+    /// Create (truncate) `path`, writing the header immediately.  Parent
+    /// directories are created as needed.
+    pub fn create(path: &Path, header: &[&str]) -> Result<CsvLogger> {
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        let file = File::create(path)?;
+        let mut writer = BufWriter::new(file);
+        writeln!(writer, "{}", header.join(","))?;
+        Ok(CsvLogger {
+            path: path.to_path_buf(),
+            writer,
+            columns: header.len(),
+            rows: 0,
+        })
+    }
+
+    /// Write one row of display-formatted fields.
+    pub fn row(&mut self, fields: &[String]) -> Result<()> {
+        debug_assert_eq!(
+            fields.len(),
+            self.columns,
+            "{}: row width mismatch",
+            self.path.display()
+        );
+        writeln!(self.writer, "{}", fields.join(","))?;
+        self.rows += 1;
+        Ok(())
+    }
+
+    /// Convenience: all-f64 row.
+    pub fn row_f64(&mut self, fields: &[f64]) -> Result<()> {
+        let formatted: Vec<String> = fields.iter().map(|v| format!("{v}")).collect();
+        self.row(&formatted)
+    }
+
+    /// Rows written (excluding header).
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Flush to disk.
+    pub fn flush(&mut self) -> Result<()> {
+        self.writer.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let dir = std::env::temp_dir().join(format!("cairl_csv_test_{}", std::process::id()));
+        let path = dir.join("sub").join("log.csv");
+        let mut log = CsvLogger::create(&path, &["a", "b"]).unwrap();
+        log.row(&["1".into(), "x".into()]).unwrap();
+        log.row_f64(&[2.5, 3.5]).unwrap();
+        log.flush().unwrap();
+        assert_eq!(log.rows(), 2);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines, vec!["a,b", "1,x", "2.5,3.5"]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

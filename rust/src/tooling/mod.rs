@@ -1,0 +1,11 @@
+//! Tooling — the paper's §III-A module for "contributions that reach a
+//! stable state": the tournament framework (single-elimination and
+//! Swiss), summary statistics, and structured result logging.
+
+pub mod csvlog;
+pub mod stats;
+pub mod tournament;
+
+pub use csvlog::CsvLogger;
+pub use stats::Summary;
+pub use tournament::{swiss, single_elimination, Standing};

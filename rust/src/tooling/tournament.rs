@@ -1,0 +1,266 @@
+//! Tournament framework — "trivializes running single-elimination and
+//! Swiss-based tournaments" (paper §III-A, Tooling).
+//!
+//! Generic over a match function so any two-player game plugs in; the
+//! GridRTS bots ([`crate::envs::gridrts`]) are the built-in workload
+//! (`examples/tournament.rs`).
+
+use crate::core::rng::Pcg32;
+
+/// Result of one pairing from the first player's perspective.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GameOutcome {
+    WinA,
+    WinB,
+    Draw,
+}
+
+/// Final placement row.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Standing {
+    pub player: usize,
+    /// Swiss: match points (win 2, draw 1).  Single-elim: rounds survived.
+    pub score: u32,
+    /// Number of matches played.
+    pub played: u32,
+}
+
+/// Run a single-elimination bracket over `n` players.
+///
+/// `play(a, b)` decides each pairing (draws are replayed with colours
+/// swapped; a second draw eliminates the higher-indexed player, keeping
+/// the bracket total).  Returns standings sorted best-first; the
+/// champion is `standings[0].player`.
+pub fn single_elimination(
+    n: usize,
+    rng: &mut Pcg32,
+    mut play: impl FnMut(usize, usize) -> GameOutcome,
+) -> Vec<Standing> {
+    assert!(n >= 2);
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let mut played = vec![0u32; n];
+    let mut rounds_survived = vec![0u32; n];
+    let mut alive = order;
+    let mut round = 0;
+    while alive.len() > 1 {
+        round += 1;
+        let mut next = Vec::with_capacity(alive.len() / 2 + 1);
+        let mut it = alive.chunks(2);
+        for pair in &mut it {
+            if pair.len() == 1 {
+                // Bye: advances without playing.
+                rounds_survived[pair[0]] = round;
+                next.push(pair[0]);
+                continue;
+            }
+            let (a, b) = (pair[0], pair[1]);
+            played[a] += 1;
+            played[b] += 1;
+            let winner = match play(a, b) {
+                GameOutcome::WinA => a,
+                GameOutcome::WinB => b,
+                GameOutcome::Draw => {
+                    // Replay with colours swapped.
+                    played[a] += 1;
+                    played[b] += 1;
+                    match play(b, a) {
+                        GameOutcome::WinA => b,
+                        GameOutcome::WinB => a,
+                        GameOutcome::Draw => a.min(b),
+                    }
+                }
+            };
+            rounds_survived[winner] = round;
+            next.push(winner);
+        }
+        alive = next;
+    }
+    let mut standings: Vec<Standing> = (0..n)
+        .map(|p| Standing {
+            player: p,
+            score: rounds_survived[p],
+            played: played[p],
+        })
+        .collect();
+    standings.sort_by(|a, b| b.score.cmp(&a.score).then(a.player.cmp(&b.player)));
+    standings
+}
+
+/// Run a Swiss tournament: `rounds` rounds, players paired by standing,
+/// no pair meets twice, odd player out gets a bye (2 points, once max).
+pub fn swiss(
+    n: usize,
+    rounds: u32,
+    rng: &mut Pcg32,
+    mut play: impl FnMut(usize, usize) -> GameOutcome,
+) -> Vec<Standing> {
+    assert!(n >= 2);
+    let mut points = vec![0u32; n];
+    let mut played_count = vec![0u32; n];
+    let mut met = vec![false; n * n];
+    let mut had_bye = vec![false; n];
+
+    for round in 0..rounds {
+        // Order by points (stable shuffle inside equal scores via rng on
+        // round 0 to randomise initial pairings).
+        let mut order: Vec<usize> = (0..n).collect();
+        if round == 0 {
+            rng.shuffle(&mut order);
+        } else {
+            order.sort_by(|&a, &b| points[b].cmp(&points[a]).then(a.cmp(&b)));
+        }
+        let mut paired = vec![false; n];
+        let mut pairs: Vec<(usize, usize)> = Vec::with_capacity(n / 2);
+        let mut bye: Option<usize> = None;
+        for i in 0..n {
+            let a = order[i];
+            if paired[a] {
+                continue;
+            }
+            // Find the highest-ranked unpaired opponent not yet met.
+            let opp = order[i + 1..]
+                .iter()
+                .copied()
+                .find(|&b| !paired[b] && !met[a * n + b]);
+            match opp {
+                Some(b) => {
+                    paired[a] = true;
+                    paired[b] = true;
+                    pairs.push((a, b));
+                }
+                None => {
+                    // No fresh opponent: bye (prefer someone without one).
+                    if bye.is_none() && !had_bye[a] {
+                        paired[a] = true;
+                        bye = Some(a);
+                    }
+                }
+            }
+        }
+        // Anyone left unpaired (rematch-locked) also byes this round.
+        if bye.is_none() {
+            bye = (0..n).find(|&p| !paired[p]);
+        }
+        if let Some(b) = bye {
+            points[b] += 2;
+            had_bye[b] = true;
+        }
+        for (a, b) in pairs {
+            met[a * n + b] = true;
+            met[b * n + a] = true;
+            played_count[a] += 1;
+            played_count[b] += 1;
+            match play(a, b) {
+                GameOutcome::WinA => points[a] += 2,
+                GameOutcome::WinB => points[b] += 2,
+                GameOutcome::Draw => {
+                    points[a] += 1;
+                    points[b] += 1;
+                }
+            }
+        }
+    }
+    let mut standings: Vec<Standing> = (0..n)
+        .map(|p| Standing {
+            player: p,
+            score: points[p],
+            played: played_count[p],
+        })
+        .collect();
+    standings.sort_by(|a, b| b.score.cmp(&a.score).then(a.player.cmp(&b.player)));
+    standings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic strength model: lower index always wins.
+    fn by_strength(a: usize, b: usize) -> GameOutcome {
+        if a < b {
+            GameOutcome::WinA
+        } else {
+            GameOutcome::WinB
+        }
+    }
+
+    #[test]
+    fn single_elim_crowns_the_strongest() {
+        for seed in 0..5 {
+            let mut rng = Pcg32::new(seed, 1);
+            let standings = single_elimination(8, &mut rng, by_strength);
+            assert_eq!(standings[0].player, 0, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn single_elim_handles_odd_field() {
+        let mut rng = Pcg32::new(1, 1);
+        let standings = single_elimination(7, &mut rng, by_strength);
+        assert_eq!(standings.len(), 7);
+        assert_eq!(standings[0].player, 0);
+        // Total matches in a 7-player knockout = 6 (ignoring draw replays).
+        let total: u32 = standings.iter().map(|s| s.played).sum();
+        assert_eq!(total, 12); // each match counts for both players
+    }
+
+    #[test]
+    fn single_elim_draws_are_replayed() {
+        let mut calls = 0;
+        let mut rng = Pcg32::new(2, 1);
+        let standings = single_elimination(2, &mut rng, |_, _| {
+            calls += 1;
+            if calls == 1 {
+                GameOutcome::Draw
+            } else {
+                GameOutcome::WinA
+            }
+        });
+        assert_eq!(calls, 2);
+        assert_eq!(standings[0].played, 2);
+    }
+
+    #[test]
+    fn swiss_ranks_by_strength() {
+        let mut rng = Pcg32::new(3, 1);
+        let standings = swiss(8, 3, &mut rng, by_strength);
+        // Strongest two players should finish in the top half.
+        let pos0 = standings.iter().position(|s| s.player == 0).unwrap();
+        assert!(pos0 <= 1, "player 0 finished {pos0}: {standings:?}");
+        // Weakest finishes in the bottom half.
+        let pos7 = standings.iter().position(|s| s.player == 7).unwrap();
+        assert!(pos7 >= 4, "{standings:?}");
+    }
+
+    #[test]
+    fn swiss_no_rematches() {
+        let mut seen = std::collections::HashSet::new();
+        let mut rng = Pcg32::new(4, 1);
+        swiss(6, 4, &mut rng, |a, b| {
+            let key = (a.min(b), a.max(b));
+            assert!(seen.insert(key), "rematch {key:?}");
+            by_strength(a, b)
+        });
+    }
+
+    #[test]
+    fn swiss_odd_field_byes_are_balanced() {
+        let mut rng = Pcg32::new(5, 1);
+        let standings = swiss(5, 3, &mut rng, by_strength);
+        // 5 players, 3 rounds: every round has exactly one bye, nobody
+        // plays more than 3 matches.
+        assert!(standings.iter().all(|s| s.played <= 3));
+        let total_points: u32 = standings.iter().map(|s| s.score).sum();
+        // Each round distributes 2 points per pair + 2 for the bye = 6.
+        assert_eq!(total_points, 18);
+    }
+
+    #[test]
+    fn swiss_draws_split_points() {
+        let mut rng = Pcg32::new(6, 1);
+        let standings = swiss(2, 1, &mut rng, |_, _| GameOutcome::Draw);
+        assert_eq!(standings[0].score, 1);
+        assert_eq!(standings[1].score, 1);
+    }
+}

@@ -1,0 +1,99 @@
+//! ClipReward — clamp rewards into `[lo, hi]` (DQN's reward clipping;
+//! tames the Flash games' −10 death bursts for value-scale stability).
+
+use crate::core::env::{Env, Transition};
+use crate::core::spaces::{Action, Space};
+use crate::render::Framebuffer;
+
+/// Clamps every reward to `[lo, hi]`.
+#[derive(Clone, Debug)]
+pub struct ClipReward<E: Env> {
+    inner: E,
+    lo: f32,
+    hi: f32,
+}
+
+impl<E: Env> ClipReward<E> {
+    pub fn new(inner: E, lo: f32, hi: f32) -> Self {
+        assert!(lo <= hi);
+        ClipReward { inner, lo, hi }
+    }
+
+    /// The Mnih et al. convention: `[-1, 1]`.
+    pub fn unit(inner: E) -> Self {
+        Self::new(inner, -1.0, 1.0)
+    }
+}
+
+impl<E: Env> Env for ClipReward<E> {
+    fn id(&self) -> String {
+        format!("ClipReward({}, [{}, {}])", self.inner.id(), self.lo, self.hi)
+    }
+
+    fn observation_space(&self) -> Space {
+        self.inner.observation_space()
+    }
+
+    fn action_space(&self) -> Space {
+        self.inner.action_space()
+    }
+
+    fn obs_dim(&self) -> usize {
+        self.inner.obs_dim()
+    }
+
+    fn seed(&mut self, seed: u64) {
+        self.inner.seed(seed);
+    }
+
+    fn reset_into(&mut self, obs: &mut [f32]) {
+        self.inner.reset_into(obs);
+    }
+
+    fn step_into(&mut self, action: &Action, obs: &mut [f32]) -> Transition {
+        let mut t = self.inner.step_into(action, obs);
+        t.reward = t.reward.clamp(self.lo, self.hi);
+        t
+    }
+
+    fn render(&self, fb: &mut Framebuffer) {
+        self.inner.render(fb);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flash::games;
+
+    #[test]
+    fn clips_death_burst() {
+        // Drive Multitask to a miss; the raw -10 burst clips to -1.
+        let mut env = ClipReward::unit(games::multitask());
+        env.seed(3);
+        let mut obs = vec![0.0f32; 32];
+        env.reset_into(&mut obs);
+        let mut saw_terminal = false;
+        for _ in 0..20_000 {
+            let t = env.step_into(&Action::Discrete(0), &mut obs);
+            assert!(t.reward >= -1.0 && t.reward <= 1.0, "{}", t.reward);
+            if t.done {
+                saw_terminal = true;
+                assert_eq!(t.reward, -1.0);
+                break;
+            }
+        }
+        assert!(saw_terminal);
+    }
+
+    #[test]
+    fn passes_in_range_rewards() {
+        use crate::envs::CartPole;
+        let mut env = ClipReward::new(CartPole::new(), -5.0, 5.0);
+        env.seed(0);
+        let mut obs = vec![0.0f32; 4];
+        env.reset_into(&mut obs);
+        let t = env.step_into(&Action::Discrete(0), &mut obs);
+        assert_eq!(t.reward, 1.0);
+    }
+}

@@ -1,0 +1,148 @@
+//! Flatten — present any Box observation as a flat 1-D vector.
+//!
+//! One of the two wrappers the paper ships in its initial release
+//! (§III-A: "wrappers to flatten the state observation").  Observations
+//! are already stored flat in this toolkit, so the wrapper's job is the
+//! *space* transformation: downstream code sees `shape == [n]` regardless
+//! of the inner env's tensor shape.
+
+use crate::core::env::{Env, Transition};
+use crate::core::spaces::{Action, Space};
+use crate::render::Framebuffer;
+
+/// Flattens the observation space to 1-D.
+#[derive(Clone, Debug)]
+pub struct Flatten<E: Env> {
+    inner: E,
+}
+
+impl<E: Env> Flatten<E> {
+    pub fn new(inner: E) -> Self {
+        Flatten { inner }
+    }
+
+    pub fn inner(&self) -> &E {
+        &self.inner
+    }
+}
+
+impl<E: Env> Env for Flatten<E> {
+    fn id(&self) -> String {
+        format!("Flatten({})", self.inner.id())
+    }
+
+    fn observation_space(&self) -> Space {
+        match self.inner.observation_space() {
+            Space::Box { low, high, shape } => {
+                let n = shape.iter().product();
+                Space::Box {
+                    low,
+                    high,
+                    shape: vec![n],
+                }
+            }
+            d @ Space::Discrete { .. } => {
+                // A discrete observation flattens to a single f32 cell.
+                let n = d.flat_dim();
+                Space::Box {
+                    low: vec![f32::MIN; n],
+                    high: vec![f32::MAX; n],
+                    shape: vec![n],
+                }
+            }
+        }
+    }
+
+    fn action_space(&self) -> Space {
+        self.inner.action_space()
+    }
+
+    fn obs_dim(&self) -> usize {
+        self.inner.obs_dim()
+    }
+
+    fn seed(&mut self, seed: u64) {
+        self.inner.seed(seed);
+    }
+
+    fn reset_into(&mut self, obs: &mut [f32]) {
+        self.inner.reset_into(obs);
+    }
+
+    fn step_into(&mut self, action: &Action, obs: &mut [f32]) -> Transition {
+        self.inner.step_into(action, obs)
+    }
+
+    fn render(&self, fb: &mut Framebuffer) {
+        self.inner.render(fb);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::rng::Pcg32;
+    use crate::envs::CartPole;
+    use crate::wrappers::TimeLimit;
+
+    /// Env with a 2-D observation space to make flattening observable.
+    struct Grid2D;
+
+    impl Env for Grid2D {
+        fn id(&self) -> String {
+            "Grid2D-v0".into()
+        }
+        fn observation_space(&self) -> Space {
+            Space::Box {
+                low: vec![0.0; 6],
+                high: vec![1.0; 6],
+                shape: vec![2, 3],
+            }
+        }
+        fn action_space(&self) -> Space {
+            Space::Discrete { n: 1 }
+        }
+        fn seed(&mut self, _s: u64) {}
+        fn reset_into(&mut self, obs: &mut [f32]) {
+            for (i, o) in obs.iter_mut().enumerate() {
+                *o = i as f32 / 10.0;
+            }
+        }
+        fn step_into(&mut self, _a: &Action, obs: &mut [f32]) -> Transition {
+            self.reset_into(obs);
+            Transition::live(0.0)
+        }
+    }
+
+    #[test]
+    fn flattens_shape_preserving_elements() {
+        let env = Flatten::new(Grid2D);
+        match env.observation_space() {
+            Space::Box { shape, low, .. } => {
+                assert_eq!(shape, vec![6]);
+                assert_eq!(low.len(), 6);
+            }
+            _ => panic!("expected box"),
+        }
+        assert_eq!(env.obs_dim(), 6);
+    }
+
+    #[test]
+    fn values_pass_through_in_order() {
+        let mut env = Flatten::new(Grid2D);
+        let obs = env.reset();
+        assert_eq!(obs, vec![0.0, 0.1, 0.2, 0.3, 0.4, 0.5]);
+    }
+
+    #[test]
+    fn listing1_composition_compiles_and_runs() {
+        // The paper's Listing 1: Flatten<TimeLimit<200, CartPoleEnv>>.
+        let mut env = Flatten::new(TimeLimit::new(CartPole::new(), 200));
+        env.seed(0);
+        let mut rng = Pcg32::new(0, 1);
+        let (ret, len) = crate::core::env::random_rollout(&mut env, &mut rng, 500);
+        assert!(len <= 200);
+        assert_eq!(ret, len as f32);
+        assert_eq!(env.id(), "Flatten(TimeLimit(CartPole-v1, 200))");
+    }
+}

@@ -1,0 +1,116 @@
+//! FrameSkip — repeat each agent action for `k` environment frames,
+//! accumulating reward (the DQN action-repeat of Mnih et al. 2015,
+//! standard for the high-frame-rate Flash games).
+
+use crate::core::env::{Env, Transition};
+use crate::core::spaces::{Action, Space};
+use crate::render::Framebuffer;
+
+/// Repeats actions `k` times per agent step.
+#[derive(Clone, Debug)]
+pub struct FrameSkip<E: Env> {
+    inner: E,
+    k: u32,
+}
+
+impl<E: Env> FrameSkip<E> {
+    pub fn new(inner: E, k: u32) -> Self {
+        assert!(k >= 1);
+        FrameSkip { inner, k }
+    }
+}
+
+impl<E: Env> Env for FrameSkip<E> {
+    fn id(&self) -> String {
+        format!("FrameSkip({}, {})", self.inner.id(), self.k)
+    }
+
+    fn observation_space(&self) -> Space {
+        self.inner.observation_space()
+    }
+
+    fn action_space(&self) -> Space {
+        self.inner.action_space()
+    }
+
+    fn obs_dim(&self) -> usize {
+        self.inner.obs_dim()
+    }
+
+    fn seed(&mut self, seed: u64) {
+        self.inner.seed(seed);
+    }
+
+    fn reset_into(&mut self, obs: &mut [f32]) {
+        self.inner.reset_into(obs);
+    }
+
+    fn step_into(&mut self, action: &Action, obs: &mut [f32]) -> Transition {
+        let mut total = 0.0;
+        for _ in 0..self.k {
+            let t = self.inner.step_into(action, obs);
+            total += t.reward;
+            if t.done || t.truncated {
+                return Transition {
+                    reward: total,
+                    done: t.done,
+                    truncated: t.truncated,
+                };
+            }
+        }
+        Transition::live(total)
+    }
+
+    fn render(&self, fb: &mut Framebuffer) {
+        self.inner.render(fb);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::{CartPole, Pendulum};
+    use crate::wrappers::TimeLimit;
+
+    #[test]
+    fn accumulates_k_rewards() {
+        let mut env = FrameSkip::new(TimeLimit::new(Pendulum::discrete(), 100), 4);
+        env.seed(0);
+        let mut obs = vec![0.0f32; 3];
+        env.reset_into(&mut obs);
+        let t = env.step_into(&Action::Discrete(2), &mut obs);
+        // Four pendulum steps of negative cost accumulate.
+        assert!(t.reward < 0.0);
+        assert!(!t.done);
+    }
+
+    #[test]
+    fn stops_mid_skip_on_termination() {
+        let mut env = FrameSkip::new(CartPole::new(), 50);
+        env.seed(0);
+        let mut obs = vec![0.0f32; 4];
+        env.reset_into(&mut obs);
+        // Constant pushes topple the pole before 50 frames; the skip must
+        // stop at the terminal frame, so reward < 50.
+        let t = env.step_into(&Action::Discrete(1), &mut obs);
+        assert!(t.done);
+        assert!(t.reward < 50.0);
+        assert!(t.reward >= 1.0);
+    }
+
+    #[test]
+    fn k_one_is_identity() {
+        let mut a = FrameSkip::new(CartPole::new(), 1);
+        let mut b = CartPole::new();
+        a.seed(5);
+        b.seed(5);
+        let mut oa = vec![0.0f32; 4];
+        let mut ob = vec![0.0f32; 4];
+        a.reset_into(&mut oa);
+        b.reset_into(&mut ob);
+        let ta = a.step_into(&Action::Discrete(0), &mut oa);
+        let tb = b.step_into(&Action::Discrete(0), &mut ob);
+        assert_eq!(ta, tb);
+        assert_eq!(oa, ob);
+    }
+}

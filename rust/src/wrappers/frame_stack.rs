@@ -1,0 +1,191 @@
+//! FrameStack — concatenate the last `k` observations.
+//!
+//! The standard DQN trick for making velocity observable from positions
+//! (Mnih et al. 2015 stack 4 Atari frames); here it works over any Box
+//! observation.  The stack is a ring buffer, so a step costs one copy of
+//! the newest frame plus one ordered read-out — no shifting.
+
+use crate::core::env::{Env, Transition};
+use crate::core::spaces::{Action, Space};
+use crate::render::Framebuffer;
+
+/// Stacks the most recent `k` observations into one flat vector
+/// (oldest first).  On reset the initial observation is replicated `k`
+/// times, matching Gym's FrameStack.
+#[derive(Clone, Debug)]
+pub struct FrameStack<E: Env> {
+    inner: E,
+    k: usize,
+    dim: usize,
+    ring: Vec<f32>,
+    head: usize,
+}
+
+impl<E: Env> FrameStack<E> {
+    pub fn new(inner: E, k: usize) -> Self {
+        assert!(k >= 1);
+        let dim = inner.obs_dim();
+        FrameStack {
+            inner,
+            k,
+            dim,
+            ring: vec![0.0; dim * k],
+            head: 0,
+        }
+    }
+
+    /// Copy the ring out, oldest frame first.
+    fn read_out(&self, obs: &mut [f32]) {
+        for i in 0..self.k {
+            let slot = (self.head + i) % self.k;
+            obs[i * self.dim..(i + 1) * self.dim]
+                .copy_from_slice(&self.ring[slot * self.dim..(slot + 1) * self.dim]);
+        }
+    }
+
+    fn push(&mut self, frame: &[f32]) {
+        let slot = self.head;
+        self.ring[slot * self.dim..(slot + 1) * self.dim].copy_from_slice(frame);
+        self.head = (self.head + 1) % self.k;
+    }
+}
+
+impl<E: Env> Env for FrameStack<E> {
+    fn id(&self) -> String {
+        format!("FrameStack({}, {})", self.inner.id(), self.k)
+    }
+
+    fn observation_space(&self) -> Space {
+        match self.inner.observation_space() {
+            Space::Box { low, high, .. } => Space::Box {
+                low: low.repeat(self.k),
+                high: high.repeat(self.k),
+                shape: vec![self.k * self.dim],
+            },
+            d => d,
+        }
+    }
+
+    fn action_space(&self) -> Space {
+        self.inner.action_space()
+    }
+
+    fn obs_dim(&self) -> usize {
+        self.dim * self.k
+    }
+
+    fn seed(&mut self, seed: u64) {
+        self.inner.seed(seed);
+    }
+
+    fn reset_into(&mut self, obs: &mut [f32]) {
+        let mut frame = vec![0.0; self.dim];
+        self.inner.reset_into(&mut frame);
+        // Replicate the first observation into every slot.
+        for i in 0..self.k {
+            self.ring[i * self.dim..(i + 1) * self.dim].copy_from_slice(&frame);
+        }
+        self.head = 0;
+        self.read_out(obs);
+    }
+
+    fn step_into(&mut self, action: &Action, obs: &mut [f32]) -> Transition {
+        let mut frame = vec![0.0; self.dim];
+        let t = self.inner.step_into(action, &mut frame);
+        self.push(&frame);
+        self.read_out(obs);
+        t
+    }
+
+    fn render(&self, fb: &mut Framebuffer) {
+        self.inner.render(fb);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Observation = [step counter], never terminates.
+    struct Counter(f32);
+
+    impl Env for Counter {
+        fn id(&self) -> String {
+            "Counter-v0".into()
+        }
+        fn observation_space(&self) -> Space {
+            Space::box1(vec![0.0], vec![1e6])
+        }
+        fn action_space(&self) -> Space {
+            Space::Discrete { n: 1 }
+        }
+        fn seed(&mut self, _s: u64) {}
+        fn reset_into(&mut self, obs: &mut [f32]) {
+            self.0 = 0.0;
+            obs[0] = 0.0;
+        }
+        fn step_into(&mut self, _a: &Action, obs: &mut [f32]) -> Transition {
+            self.0 += 1.0;
+            obs[0] = self.0;
+            Transition::live(0.0)
+        }
+    }
+
+    #[test]
+    fn reset_replicates_first_frame() {
+        let mut env = FrameStack::new(Counter(0.0), 4);
+        let obs = env.reset();
+        assert_eq!(obs, vec![0.0, 0.0, 0.0, 0.0]);
+        assert_eq!(env.obs_dim(), 4);
+    }
+
+    #[test]
+    fn stack_is_oldest_first_sliding_window() {
+        let mut env = FrameStack::new(Counter(0.0), 3);
+        let mut obs = vec![0.0; 3];
+        env.reset_into(&mut obs);
+        let a = Action::Discrete(0);
+        env.step_into(&a, &mut obs);
+        assert_eq!(obs, vec![0.0, 0.0, 1.0]);
+        env.step_into(&a, &mut obs);
+        assert_eq!(obs, vec![0.0, 1.0, 2.0]);
+        env.step_into(&a, &mut obs);
+        assert_eq!(obs, vec![1.0, 2.0, 3.0]);
+        env.step_into(&a, &mut obs);
+        assert_eq!(obs, vec![2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn space_bounds_are_repeated() {
+        let env = FrameStack::new(Counter(0.0), 2);
+        match env.observation_space() {
+            Space::Box { low, high, shape } => {
+                assert_eq!(low, vec![0.0, 0.0]);
+                assert_eq!(high, vec![1e6, 1e6]);
+                assert_eq!(shape, vec![2]);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn k_one_is_identity() {
+        let mut env = FrameStack::new(Counter(0.0), 1);
+        let mut obs = vec![0.0; 1];
+        env.reset_into(&mut obs);
+        env.step_into(&Action::Discrete(0), &mut obs);
+        assert_eq!(obs, vec![1.0]);
+    }
+
+    #[test]
+    fn reset_clears_history() {
+        let mut env = FrameStack::new(Counter(0.0), 3);
+        let mut obs = vec![0.0; 3];
+        env.reset_into(&mut obs);
+        for _ in 0..5 {
+            env.step_into(&Action::Discrete(0), &mut obs);
+        }
+        env.reset_into(&mut obs);
+        assert_eq!(obs, vec![0.0, 0.0, 0.0]);
+    }
+}

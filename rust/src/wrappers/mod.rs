@@ -1,0 +1,30 @@
+//! Wrappers — the paper's §III-A "Wrappers" module.
+//!
+//! Every wrapper is a generic struct `W<E: Env>` implementing [`Env`], so
+//! compositions like `Flatten<TimeLimit<CartPole>>` (paper Listing 1)
+//! monomorphise to straight-line code with zero dynamic dispatch — the
+//! Rust equivalent of the paper's C++ template evaluation at compile
+//! time.  Because `Box<dyn Env>` also implements `Env`, the same wrappers
+//! compose over the dynamic registry (`TimeLimit::new(make(..)?, 200)`),
+//! at the cost of one vtable call per step; `benches/ablation_dispatch.rs`
+//! measures exactly that trade-off.
+
+pub mod clip_reward;
+pub mod flatten;
+pub mod frame_skip;
+pub mod frame_stack;
+pub mod normalize;
+pub mod pixel_obs;
+pub mod record_stats;
+pub mod reward_scale;
+pub mod time_limit;
+
+pub use clip_reward::ClipReward;
+pub use flatten::Flatten;
+pub use frame_skip::FrameSkip;
+pub use frame_stack::FrameStack;
+pub use normalize::NormalizeObs;
+pub use pixel_obs::PixelObs;
+pub use record_stats::RecordEpisodeStatistics;
+pub use reward_scale::RewardScale;
+pub use time_limit::TimeLimit;

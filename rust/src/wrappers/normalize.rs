@@ -1,0 +1,154 @@
+//! NormalizeObs — rescale Box observations to `[-1, 1]` using the space
+//! bounds (static normalisation, no running statistics, so trajectories
+//! stay deterministic and reproducible).
+//!
+//! Unbounded dimensions (`|bound| >= f32::MAX`, e.g. CartPole velocities)
+//! are passed through unchanged.
+
+use crate::core::env::{Env, Transition};
+use crate::core::spaces::{Action, Space};
+use crate::render::Framebuffer;
+
+/// Linearly maps each bounded observation dimension to `[-1, 1]`.
+#[derive(Clone, Debug)]
+pub struct NormalizeObs<E: Env> {
+    inner: E,
+    /// Per-dimension (centre, half-range) or None for unbounded dims.
+    scale: Vec<Option<(f32, f32)>>,
+}
+
+impl<E: Env> NormalizeObs<E> {
+    pub fn new(inner: E) -> Self {
+        let scale = match inner.observation_space() {
+            Space::Box { low, high, .. } => low
+                .iter()
+                .zip(&high)
+                .map(|(&lo, &hi)| {
+                    if lo <= f32::MIN || hi >= f32::MAX || hi <= lo {
+                        None
+                    } else {
+                        Some(((lo + hi) * 0.5, (hi - lo) * 0.5))
+                    }
+                })
+                .collect(),
+            Space::Discrete { .. } => vec![None],
+        };
+        NormalizeObs { inner, scale }
+    }
+
+    #[inline]
+    fn apply(&self, obs: &mut [f32]) {
+        for (o, s) in obs.iter_mut().zip(&self.scale) {
+            if let Some((centre, half)) = s {
+                *o = (*o - centre) / half;
+            }
+        }
+    }
+}
+
+impl<E: Env> Env for NormalizeObs<E> {
+    fn id(&self) -> String {
+        format!("NormalizeObs({})", self.inner.id())
+    }
+
+    fn observation_space(&self) -> Space {
+        match self.inner.observation_space() {
+            Space::Box { low, high, shape } => {
+                let (lo2, hi2) = low
+                    .iter()
+                    .zip(&high)
+                    .map(|(&lo, &hi)| {
+                        if lo <= f32::MIN || hi >= f32::MAX || hi <= lo {
+                            (lo, hi)
+                        } else {
+                            (-1.0, 1.0)
+                        }
+                    })
+                    .unzip();
+                Space::Box {
+                    low: lo2,
+                    high: hi2,
+                    shape,
+                }
+            }
+            d => d,
+        }
+    }
+
+    fn action_space(&self) -> Space {
+        self.inner.action_space()
+    }
+
+    fn obs_dim(&self) -> usize {
+        self.inner.obs_dim()
+    }
+
+    fn seed(&mut self, seed: u64) {
+        self.inner.seed(seed);
+    }
+
+    fn reset_into(&mut self, obs: &mut [f32]) {
+        self.inner.reset_into(obs);
+        self.apply(obs);
+    }
+
+    fn step_into(&mut self, action: &Action, obs: &mut [f32]) -> Transition {
+        let t = self.inner.step_into(action, obs);
+        self.apply(obs);
+        t
+    }
+
+    fn render(&self, fb: &mut Framebuffer) {
+        self.inner.render(fb);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::{MountainCar, Pendulum};
+
+    #[test]
+    fn bounded_dims_map_to_unit_interval() {
+        let mut env = NormalizeObs::new(MountainCar::new());
+        env.seed(0);
+        let obs = env.reset();
+        // Start position in [-0.6, -0.4] maps inside [-1, 1].
+        assert!(obs.iter().all(|v| (-1.0..=1.0).contains(v)), "{obs:?}");
+    }
+
+    #[test]
+    fn space_reports_normalised_bounds() {
+        let env = NormalizeObs::new(Pendulum::new());
+        match env.observation_space() {
+            Space::Box { low, high, .. } => {
+                assert!(low.iter().all(|&v| v == -1.0));
+                assert!(high.iter().all(|&v| v == 1.0));
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn midpoint_maps_to_zero() {
+        // MountainCar position midpoint is (-1.2 + 0.6)/2 = -0.3.
+        let mut env = NormalizeObs::new(MountainCar::new());
+        env.inner.set_state([-0.3, 0.0]);
+        let mut obs = [0.0f32; 2];
+        let t = env.step_into(&Action::Discrete(1), &mut obs);
+        assert!(!t.done);
+        // After one coast step near the midpoint, still near zero.
+        assert!(obs[0].abs() < 0.05, "{obs:?}");
+    }
+
+    #[test]
+    fn unbounded_dims_untouched() {
+        use crate::envs::CartPole;
+        let mut env = NormalizeObs::new(CartPole::new());
+        env.inner.set_state([0.0, 3.5, 0.0, -2.0]);
+        let mut obs = [0.0f32; 4];
+        env.step_into(&Action::Discrete(0), &mut obs);
+        // Velocity dims (1, 3) pass through with their raw magnitudes.
+        assert!(obs[1].abs() > 1.0 || obs[3].abs() > 1.0);
+    }
+}

@@ -1,0 +1,155 @@
+//! PixelObs — raw-pixel observations through the software renderer.
+//!
+//! The paper's environments expose "either raw pixels or the virtual
+//! Flash memory" (§IV-C) and the Fig.-2/Table-II experiments "use raw
+//! images as input" (§V-B).  This wrapper turns *any* renderable env
+//! into a pixel-observation env: each step paints the scene into an
+//! internal framebuffer (the paper's software-rendering path — no GPU
+//! readback) and emits a downsampled grayscale image as the flat
+//! observation.
+
+use crate::core::env::{Env, Transition};
+use crate::core::spaces::{Action, Space};
+use crate::render::Framebuffer;
+
+/// Replaces the observation with a `size x size` grayscale frame.
+pub struct PixelObs<E: Env> {
+    inner: E,
+    full: Framebuffer,
+    small: Framebuffer,
+    size: usize,
+}
+
+impl<E: Env> PixelObs<E> {
+    /// `size` must divide 64 (the painters' native resolution).
+    pub fn new(inner: E, size: usize) -> PixelObs<E> {
+        assert!(size > 0 && 64 % size == 0, "size must divide 64");
+        PixelObs {
+            inner,
+            full: Framebuffer::standard(),
+            small: Framebuffer::new(size, size),
+            size,
+        }
+    }
+
+    /// The wrapped environment.
+    pub fn inner(&self) -> &E {
+        &self.inner
+    }
+
+    fn observe(&mut self, obs: &mut [f32]) {
+        self.inner.render(&mut self.full);
+        if self.size == 64 {
+            obs.copy_from_slice(self.full.pixels());
+        } else {
+            self.full.downsample_into(&mut self.small);
+            obs.copy_from_slice(self.small.pixels());
+        }
+    }
+}
+
+impl<E: Env> Env for PixelObs<E> {
+    fn id(&self) -> String {
+        format!("PixelObs({}, {}x{})", self.inner.id(), self.size, self.size)
+    }
+
+    fn observation_space(&self) -> Space {
+        let n = self.size * self.size;
+        Space::Box {
+            low: vec![0.0; n],
+            high: vec![1.0; n],
+            shape: vec![self.size, self.size],
+        }
+    }
+
+    fn action_space(&self) -> Space {
+        self.inner.action_space()
+    }
+
+    fn obs_dim(&self) -> usize {
+        self.size * self.size
+    }
+
+    fn seed(&mut self, seed: u64) {
+        self.inner.seed(seed);
+    }
+
+    fn reset_into(&mut self, obs: &mut [f32]) {
+        // Inner observation is discarded; pixels are the observation.
+        let mut scratch = vec![0.0f32; self.inner.obs_dim()];
+        self.inner.reset_into(&mut scratch);
+        self.observe(obs);
+    }
+
+    fn step_into(&mut self, action: &Action, obs: &mut [f32]) -> Transition {
+        let mut scratch = vec![0.0f32; self.inner.obs_dim()];
+        let t = self.inner.step_into(action, &mut scratch);
+        self.observe(obs);
+        t
+    }
+
+    fn render(&self, fb: &mut Framebuffer) {
+        self.inner.render(fb);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::CartPole;
+    use crate::wrappers::TimeLimit;
+
+    #[test]
+    fn obs_is_a_frame_in_unit_range() {
+        let mut env = PixelObs::new(TimeLimit::new(CartPole::new(), 200), 16);
+        env.seed(0);
+        let obs = env.reset();
+        assert_eq!(obs.len(), 256);
+        assert_eq!(env.obs_dim(), 256);
+        assert!(obs.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        // The cart scene is non-empty.
+        assert!(obs.iter().sum::<f32>() > 0.5);
+    }
+
+    #[test]
+    fn full_resolution_matches_renderer() {
+        let mut env = PixelObs::new(CartPole::new(), 64);
+        env.seed(0);
+        let obs = env.reset();
+        let mut fb = Framebuffer::standard();
+        env.render(&mut fb);
+        assert_eq!(obs, fb.pixels());
+    }
+
+    #[test]
+    fn pixels_track_dynamics() {
+        let mut env = PixelObs::new(CartPole::new(), 32);
+        env.seed(1);
+        let a = env.reset();
+        let mut obs = vec![0.0f32; 1024];
+        for i in 0..6 {
+            // Alternate pushes: the pole swings visibly without toppling.
+            let t = env.step_into(&Action::Discrete(i % 2), &mut obs);
+            assert!(!t.done);
+        }
+        assert_ne!(a, obs, "frames must change as the cart moves");
+    }
+
+    #[test]
+    fn space_is_2d_box() {
+        let env = PixelObs::new(CartPole::new(), 16);
+        match env.observation_space() {
+            Space::Box { shape, .. } => assert_eq!(shape, vec![16, 16]),
+            _ => panic!(),
+        }
+        // Flatten composes on top for 1-D consumers.
+        let flat = crate::wrappers::Flatten::new(PixelObs::new(CartPole::new(), 16));
+        assert_eq!(flat.observation_space().shape(), vec![256]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn size_must_divide_64() {
+        PixelObs::new(CartPole::new(), 12);
+    }
+}

@@ -1,0 +1,203 @@
+//! RecordEpisodeStatistics — track episode returns/lengths and attach
+//! them to the final [`Step`] of each episode.
+//!
+//! The coordinator's experiment orchestrator and the Fig.-2/Fig.-3
+//! training drivers read convergence criteria from this wrapper (mean
+//! return over a sliding window), so it keeps a bounded history.
+
+use std::collections::VecDeque;
+
+use crate::core::env::{Env, EpisodeStats, Step, Transition};
+use crate::core::spaces::{Action, Space};
+use crate::render::Framebuffer;
+
+/// Records per-episode undiscounted return and length.
+#[derive(Clone, Debug)]
+pub struct RecordEpisodeStatistics<E: Env> {
+    inner: E,
+    ret: f32,
+    len: u32,
+    /// Completed episodes, most recent last (bounded).
+    history: VecDeque<EpisodeStats>,
+    capacity: usize,
+    last: Option<EpisodeStats>,
+}
+
+impl<E: Env> RecordEpisodeStatistics<E> {
+    /// Keep up to `capacity` most recent episode records.
+    pub fn new(inner: E, capacity: usize) -> Self {
+        RecordEpisodeStatistics {
+            inner,
+            ret: 0.0,
+            len: 0,
+            history: VecDeque::with_capacity(capacity),
+            capacity,
+            last: None,
+        }
+    }
+
+    /// Stats of the most recently completed episode.
+    pub fn last_episode(&self) -> Option<EpisodeStats> {
+        self.last
+    }
+
+    /// Completed-episode history, oldest first.
+    pub fn history(&self) -> impl Iterator<Item = &EpisodeStats> {
+        self.history.iter()
+    }
+
+    /// Number of completed episodes observed (within capacity).
+    pub fn episodes(&self) -> usize {
+        self.history.len()
+    }
+
+    /// Mean return over the most recent `n` episodes (None until `n`
+    /// episodes have completed) — the Fig.-2 solve criterion.
+    pub fn mean_return(&self, n: usize) -> Option<f32> {
+        if self.history.len() < n || n == 0 {
+            return None;
+        }
+        let sum: f32 = self.history.iter().rev().take(n).map(|e| e.ret).sum();
+        Some(sum / n as f32)
+    }
+
+    fn on_step(&mut self, t: &Transition) {
+        self.ret += t.reward;
+        self.len += 1;
+        if t.done || t.truncated {
+            let stats = EpisodeStats {
+                ret: self.ret,
+                len: self.len,
+            };
+            self.last = Some(stats);
+            if self.history.len() == self.capacity {
+                self.history.pop_front();
+            }
+            self.history.push_back(stats);
+        }
+    }
+}
+
+impl<E: Env> Env for RecordEpisodeStatistics<E> {
+    fn id(&self) -> String {
+        format!("RecordEpisodeStatistics({})", self.inner.id())
+    }
+
+    fn observation_space(&self) -> Space {
+        self.inner.observation_space()
+    }
+
+    fn action_space(&self) -> Space {
+        self.inner.action_space()
+    }
+
+    fn obs_dim(&self) -> usize {
+        self.inner.obs_dim()
+    }
+
+    fn seed(&mut self, seed: u64) {
+        self.inner.seed(seed);
+    }
+
+    fn reset_into(&mut self, obs: &mut [f32]) {
+        self.ret = 0.0;
+        self.len = 0;
+        self.inner.reset_into(obs);
+    }
+
+    fn step_into(&mut self, action: &Action, obs: &mut [f32]) -> Transition {
+        let t = self.inner.step_into(action, obs);
+        self.on_step(&t);
+        t
+    }
+
+    /// The allocating step additionally attaches [`EpisodeStats`] on the
+    /// final step of an episode (Gym's `info["episode"]`).
+    fn step(&mut self, action: &Action) -> Step {
+        let mut obs = vec![0.0; self.obs_dim()];
+        let t = self.step_into(action, &mut obs);
+        Step {
+            obs,
+            reward: t.reward,
+            done: t.done || t.truncated,
+            truncated: t.truncated,
+            episode: if t.done || t.truncated { self.last } else { None },
+        }
+    }
+
+    fn render(&self, fb: &mut Framebuffer) {
+        self.inner.render(fb);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::Pendulum;
+    use crate::wrappers::TimeLimit;
+
+    fn fixed_episode_env(len: u32) -> RecordEpisodeStatistics<TimeLimit<Pendulum>> {
+        let mut env =
+            RecordEpisodeStatistics::new(TimeLimit::new(Pendulum::discrete(), len), 100);
+        env.seed(0);
+        env
+    }
+
+    #[test]
+    fn records_return_and_length() {
+        let mut env = fixed_episode_env(5);
+        let mut obs = vec![0.0; 3];
+        env.reset_into(&mut obs);
+        let mut total = 0.0;
+        for _ in 0..5 {
+            let t = env.step_into(&Action::Discrete(2), &mut obs);
+            total += t.reward;
+        }
+        let stats = env.last_episode().unwrap();
+        assert_eq!(stats.len, 5);
+        assert!((stats.ret - total).abs() < 1e-6);
+    }
+
+    #[test]
+    fn attaches_stats_only_on_final_step() {
+        let mut env = fixed_episode_env(3);
+        env.reset();
+        let a = Action::Discrete(0);
+        assert!(env.step(&a).episode.is_none());
+        assert!(env.step(&a).episode.is_none());
+        let last = env.step(&a);
+        assert!(last.done);
+        assert!(last.episode.is_some());
+        assert_eq!(last.episode.unwrap().len, 3);
+    }
+
+    #[test]
+    fn mean_return_needs_enough_episodes() {
+        let mut env = fixed_episode_env(2);
+        let a = Action::Discrete(2);
+        assert_eq!(env.mean_return(2), None);
+        for _ in 0..3 {
+            env.reset();
+            env.step(&a);
+            env.step(&a);
+        }
+        assert_eq!(env.episodes(), 3);
+        assert!(env.mean_return(2).is_some());
+        assert_eq!(env.mean_return(0), None);
+    }
+
+    #[test]
+    fn history_is_bounded() {
+        let mut env = RecordEpisodeStatistics::new(
+            TimeLimit::new(Pendulum::discrete(), 1),
+            4,
+        );
+        env.seed(0);
+        let a = Action::Discrete(0);
+        for _ in 0..10 {
+            env.reset();
+            env.step(&a);
+        }
+        assert_eq!(env.episodes(), 4);
+    }
+}

@@ -1,0 +1,97 @@
+//! RewardScale — affine reward transformation `r' = scale * r + shift`.
+//!
+//! Small but load-bearing: DQN on MountainCar/Acrobot benefits from
+//! scaled rewards, and the flash Multitask environment uses it to map the
+//! VM's score delta into the paper's +1/-1 scheme.
+
+use crate::core::env::{Env, Transition};
+use crate::core::spaces::{Action, Space};
+use crate::render::Framebuffer;
+
+/// Applies `reward * scale + shift` to every step.
+#[derive(Clone, Debug)]
+pub struct RewardScale<E: Env> {
+    inner: E,
+    scale: f32,
+    shift: f32,
+}
+
+impl<E: Env> RewardScale<E> {
+    pub fn new(inner: E, scale: f32, shift: f32) -> Self {
+        RewardScale {
+            inner,
+            scale,
+            shift,
+        }
+    }
+}
+
+impl<E: Env> Env for RewardScale<E> {
+    fn id(&self) -> String {
+        format!("RewardScale({}, x{}, +{})", self.inner.id(), self.scale, self.shift)
+    }
+
+    fn observation_space(&self) -> Space {
+        self.inner.observation_space()
+    }
+
+    fn action_space(&self) -> Space {
+        self.inner.action_space()
+    }
+
+    fn obs_dim(&self) -> usize {
+        self.inner.obs_dim()
+    }
+
+    fn seed(&mut self, seed: u64) {
+        self.inner.seed(seed);
+    }
+
+    fn reset_into(&mut self, obs: &mut [f32]) {
+        self.inner.reset_into(obs);
+    }
+
+    fn step_into(&mut self, action: &Action, obs: &mut [f32]) -> Transition {
+        let mut t = self.inner.step_into(action, obs);
+        t.reward = t.reward * self.scale + self.shift;
+        t
+    }
+
+    fn render(&self, fb: &mut Framebuffer) {
+        self.inner.render(fb);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::CartPole;
+
+    #[test]
+    fn scales_and_shifts() {
+        let mut env = RewardScale::new(CartPole::new(), 2.0, -0.5);
+        env.seed(0);
+        let mut obs = vec![0.0; 4];
+        env.reset_into(&mut obs);
+        let t = env.step_into(&Action::Discrete(0), &mut obs);
+        // CartPole reward is 1.0 -> 2.0 * 1.0 - 0.5 = 1.5.
+        assert!((t.reward - 1.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn identity_transform_is_transparent() {
+        let mut a = RewardScale::new(CartPole::new(), 1.0, 0.0);
+        let mut b = CartPole::new();
+        a.seed(3);
+        b.seed(3);
+        let mut oa = vec![0.0; 4];
+        let mut ob = vec![0.0; 4];
+        a.reset_into(&mut oa);
+        b.reset_into(&mut ob);
+        assert_eq!(oa, ob);
+        let ta = a.step_into(&Action::Discrete(1), &mut oa);
+        let tb = b.step_into(&Action::Discrete(1), &mut ob);
+        assert_eq!(ta, tb);
+        assert_eq!(oa, ob);
+    }
+}

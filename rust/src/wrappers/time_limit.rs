@@ -1,0 +1,143 @@
+//! TimeLimit — truncate episodes after a maximum number of steps.
+//!
+//! The paper's first example wrapper (`TimeLimit<200, CartPoleEnv>` in
+//! Listing 1).  Truncation is reported via [`Transition::truncated`], kept
+//! distinct from environment termination exactly as Gym does, because the
+//! DQN bootstrap must *not* zero the value of a truncated next state.
+
+use crate::core::env::{Env, Transition};
+use crate::core::spaces::{Action, Space};
+use crate::render::Framebuffer;
+
+/// Ends episodes after `max_steps` environment steps.
+#[derive(Clone, Debug)]
+pub struct TimeLimit<E: Env> {
+    inner: E,
+    max_steps: u32,
+    elapsed: u32,
+}
+
+impl<E: Env> TimeLimit<E> {
+    pub fn new(inner: E, max_steps: u32) -> Self {
+        TimeLimit {
+            inner,
+            max_steps,
+            elapsed: 0,
+        }
+    }
+
+    /// Steps taken in the current episode.
+    pub fn elapsed(&self) -> u32 {
+        self.elapsed
+    }
+
+    /// The wrapped environment.
+    pub fn inner(&self) -> &E {
+        &self.inner
+    }
+
+    pub fn inner_mut(&mut self) -> &mut E {
+        &mut self.inner
+    }
+}
+
+impl<E: Env> Env for TimeLimit<E> {
+    fn id(&self) -> String {
+        format!("TimeLimit({}, {})", self.inner.id(), self.max_steps)
+    }
+
+    fn observation_space(&self) -> Space {
+        self.inner.observation_space()
+    }
+
+    fn action_space(&self) -> Space {
+        self.inner.action_space()
+    }
+
+    fn obs_dim(&self) -> usize {
+        self.inner.obs_dim()
+    }
+
+    fn seed(&mut self, seed: u64) {
+        self.inner.seed(seed);
+    }
+
+    fn reset_into(&mut self, obs: &mut [f32]) {
+        self.elapsed = 0;
+        self.inner.reset_into(obs);
+    }
+
+    fn step_into(&mut self, action: &Action, obs: &mut [f32]) -> Transition {
+        let mut t = self.inner.step_into(action, obs);
+        self.elapsed += 1;
+        if self.elapsed >= self.max_steps && !t.done {
+            t.truncated = true;
+        }
+        t
+    }
+
+    fn render(&self, fb: &mut Framebuffer) {
+        self.inner.render(fb);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::{CartPole, Pendulum};
+
+    #[test]
+    fn truncates_at_limit() {
+        let mut env = TimeLimit::new(Pendulum::discrete(), 10);
+        env.seed(0);
+        let mut obs = vec![0.0; env.obs_dim()];
+        env.reset_into(&mut obs);
+        for i in 1..=10 {
+            let t = env.step_into(&Action::Discrete(2), &mut obs);
+            if i < 10 {
+                assert!(!t.done && !t.truncated);
+            } else {
+                assert!(t.truncated);
+                assert!(!t.done, "truncation is not termination");
+            }
+        }
+    }
+
+    #[test]
+    fn reset_clears_counter() {
+        let mut env = TimeLimit::new(Pendulum::discrete(), 5);
+        env.seed(0);
+        let mut obs = vec![0.0; env.obs_dim()];
+        env.reset_into(&mut obs);
+        for _ in 0..5 {
+            env.step_into(&Action::Discrete(0), &mut obs);
+        }
+        env.reset_into(&mut obs);
+        assert_eq!(env.elapsed(), 0);
+        let t = env.step_into(&Action::Discrete(0), &mut obs);
+        assert!(!t.truncated);
+    }
+
+    #[test]
+    fn natural_termination_is_not_truncation() {
+        let mut env = TimeLimit::new(CartPole::new(), 10_000);
+        env.seed(0);
+        let mut obs = vec![0.0; 4];
+        env.reset_into(&mut obs);
+        // Constant pushes right topple the pole well before 10k steps.
+        loop {
+            let t = env.step_into(&Action::Discrete(1), &mut obs);
+            if t.done || t.truncated {
+                assert!(t.done);
+                assert!(!t.truncated);
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn id_describes_composition() {
+        let env = TimeLimit::new(CartPole::new(), 200);
+        assert_eq!(env.id(), "TimeLimit(CartPole-v1, 200)");
+    }
+}

@@ -1,0 +1,116 @@
+//! Integration: the `cairl` launcher binary end to end.
+
+use std::process::Command;
+
+fn cairl(args: &[&str]) -> (String, String, bool) {
+    let out = Command::new(env!("CARGO_BIN_EXE_cairl"))
+        .args(args)
+        .output()
+        .expect("binary runs");
+    (
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+        out.status.success(),
+    )
+}
+
+#[test]
+fn no_args_prints_usage() {
+    let (stdout, _, ok) = cairl(&[]);
+    assert!(ok);
+    assert!(stdout.contains("USAGE"));
+    assert!(stdout.contains("list-envs"));
+}
+
+#[test]
+fn unknown_command_fails_with_usage() {
+    let (stdout, _, ok) = cairl(&["frobnicate"]);
+    assert!(!ok);
+    assert!(stdout.contains("USAGE"));
+}
+
+#[test]
+fn list_envs_shows_all_runners() {
+    let (stdout, _, ok) = cairl(&["list-envs"]);
+    assert!(ok);
+    for id in [
+        "CartPole-v1",
+        "Script/CartPole-v1",
+        "Flash/Multitask-v0",
+        "Puzzle/LightsOut-v0",
+        "GridRTS-v0",
+    ] {
+        assert!(stdout.contains(id), "missing {id}:\n{stdout}");
+    }
+}
+
+#[test]
+fn run_reports_throughput() {
+    let (stdout, _, ok) = cairl(&["run", "--env", "CartPole-v1", "--steps", "5000"]);
+    assert!(ok, "{stdout}");
+    assert!(stdout.contains("5000 steps"));
+    assert!(stdout.contains("steps/s"));
+}
+
+#[test]
+fn run_rejects_unknown_env() {
+    let (_, stderr, ok) = cairl(&["run", "--env", "NoSuchEnv-v9"]);
+    assert!(!ok);
+    assert!(stderr.contains("NoSuchEnv-v9"), "{stderr}");
+}
+
+#[test]
+fn run_ascii_renders_a_frame() {
+    let (stdout, _, ok) = cairl(&[
+        "run", "--env", "CartPole-v1", "--steps", "50", "--render", "--ascii",
+    ]);
+    assert!(ok);
+    // ASCII art contains at least one shaded row.
+    assert!(stdout.lines().filter(|l| l.contains('#') || l.contains('@')).count() > 0
+        || stdout.contains('.'), "{stdout}");
+}
+
+#[test]
+fn config_show_dqn_prints_table_one() {
+    let (stdout, _, ok) = cairl(&["config", "--show-dqn"]);
+    assert!(ok);
+    for row in ["Discount", "Huber", "50000", "3e-4", "Table I"] {
+        assert!(stdout.contains(row), "missing {row}:\n{stdout}");
+    }
+}
+
+#[test]
+fn config_default_is_parseable_json() {
+    let (stdout, _, ok) = cairl(&["config"]);
+    assert!(ok);
+    // The printed config must round-trip through the toolkit's parser.
+    assert!(stdout.trim_start().starts_with('{'));
+    assert!(stdout.contains("\"dqn\""));
+}
+
+#[test]
+fn tournament_prints_standings() {
+    let (stdout, _, ok) = cairl(&["tournament", "--rounds", "2", "--seed", "1"]);
+    assert!(ok, "{stdout}");
+    assert!(stdout.contains("Swiss tournament"));
+    assert!(stdout.contains("rush"));
+    assert!(stdout.contains("pts"));
+}
+
+#[test]
+fn energy_reports_co2() {
+    let (stdout, _, ok) = cairl(&["energy", "--env", "CartPole-v1", "--steps", "20000"]);
+    assert!(ok, "{stdout}");
+    assert!(stdout.contains("co2="));
+    assert!(stdout.contains("mWh"));
+}
+
+#[test]
+fn train_smoke_via_cli() {
+    let (stdout, _, ok) = cairl(&[
+        "train", "--env", "cartpole", "--max-steps", "700", "--seed", "3",
+    ]);
+    assert!(ok, "{stdout}");
+    assert!(stdout.contains("training DQN on CartPole-v1"));
+    assert!(stdout.contains("steps=700"));
+}

@@ -1,0 +1,116 @@
+//! Integration: DQN agent training through the full stack —
+//! Rust env -> replay -> epsilon-greedy -> PJRT train-step artifact.
+//!
+//! Short-budget runs (seconds, not the full Fig.-2 protocol — that lives
+//! in `examples/dqn_cartpole.rs` and `benches/fig2_dqn_training.rs`).
+
+use cairl::agents::dqn::{DqnAgent, DqnConfig};
+use cairl::make;
+use cairl::runtime::Runtime;
+
+fn quick_config(seed: u64, max_steps: u32) -> DqnConfig {
+    DqnConfig {
+        max_steps,
+        learn_start: 200,
+        epsilon_decay_steps: 2_000,
+        solve_return: f32::INFINITY, // never early-stop in smoke tests
+        seed,
+        ..DqnConfig::default()
+    }
+}
+
+#[test]
+fn dqn_runs_2000_steps_on_cartpole() {
+    let mut rt = Runtime::from_default_artifacts().unwrap();
+    let mut agent = DqnAgent::new(&rt, "cartpole", quick_config(0, 2_000)).unwrap();
+    let mut env = make("CartPole-v1").unwrap();
+    let out = agent.train(&mut rt, &mut env).unwrap();
+    assert_eq!(out.env_steps, 2_000);
+    assert!(out.train_steps > 1_000, "{}", out.train_steps);
+    assert!(out.episodes > 10);
+    assert!(!out.curve.is_empty());
+    assert!(out.curve.iter().all(|p| p.ret.is_finite()));
+    assert!(out.losses.iter().all(|l| l.is_finite()));
+}
+
+#[test]
+fn dqn_improves_over_random_on_cartpole() {
+    // 15k steps is enough for DQN to hold the pole noticeably longer
+    // than the ~22-step random baseline.
+    let mut rt = Runtime::from_default_artifacts().unwrap();
+    let mut agent = DqnAgent::new(&rt, "cartpole", quick_config(1, 15_000)).unwrap();
+    let mut env = make("CartPole-v1").unwrap();
+    let out = agent.train(&mut rt, &mut env).unwrap();
+    let last20: Vec<f32> = out.curve.iter().rev().take(20).map(|p| p.ret).collect();
+    let mean_late = last20.iter().sum::<f32>() / last20.len() as f32;
+    // Random CartPole averages ~22 steps/episode; require a clear >1.5x
+    // improvement within this short budget (full convergence is the
+    // Fig.-2 bench's job, not a unit test's).
+    assert!(
+        mean_late > 35.0,
+        "late mean return {mean_late} (curve tail: {last20:?})"
+    );
+}
+
+#[test]
+fn dqn_training_is_seed_reproducible() {
+    let run = |seed: u64| {
+        let mut rt = Runtime::from_default_artifacts().unwrap();
+        let mut agent =
+            DqnAgent::new(&rt, "cartpole", quick_config(seed, 1_200)).unwrap();
+        let mut env = make("CartPole-v1").unwrap();
+        let out = agent.train(&mut rt, &mut env).unwrap();
+        (
+            out.episodes,
+            out.curve.iter().map(|p| p.ret).collect::<Vec<f32>>(),
+        )
+    };
+    let (ep_a, curve_a) = run(42);
+    let (ep_b, curve_b) = run(42);
+    assert_eq!(ep_a, ep_b);
+    assert_eq!(curve_a, curve_b, "same seed must give identical curves");
+    let (_, curve_c) = run(43);
+    assert_ne!(curve_a, curve_c, "different seeds must differ");
+}
+
+#[test]
+fn dqn_trains_on_flash_multitask() {
+    // Fig.-3 smoke: the flash runner feeds DQN through the same loop.
+    let mut rt = Runtime::from_default_artifacts().unwrap();
+    let mut cfg = quick_config(3, 1_500);
+    cfg.learn_start = 300;
+    let mut agent = DqnAgent::new(&rt, "multitask", cfg).unwrap();
+    let mut env = make("Flash/Multitask-v0").unwrap();
+    let out = agent.train(&mut rt, &mut env).unwrap();
+    assert_eq!(out.env_steps, 1_500);
+    assert!(out.episodes >= 1);
+    assert!(out.train_steps > 0);
+}
+
+#[test]
+fn dqn_trains_on_every_artifact_env() {
+    let pairs = [
+        ("cartpole", "CartPole-v1"),
+        ("mountaincar", "MountainCar-v0"),
+        ("acrobot", "Acrobot-v1"),
+        ("pendulum", "PendulumDiscrete-v1"),
+    ];
+    let mut rt = Runtime::from_default_artifacts().unwrap();
+    for (art, env_id) in pairs {
+        let mut agent = DqnAgent::new(&rt, art, quick_config(0, 600)).unwrap();
+        let mut env = make(env_id).unwrap();
+        let out = agent.train(&mut rt, &mut env).unwrap();
+        assert_eq!(out.env_steps, 600, "{env_id}");
+        assert!(out.train_steps > 0, "{env_id}");
+    }
+}
+
+#[test]
+fn epsilon_schedule_reaches_final_value() {
+    let rt = Runtime::from_default_artifacts().unwrap();
+    let agent = DqnAgent::new(&rt, "cartpole", quick_config(0, 100)).unwrap();
+    assert!((agent.epsilon(0) - 1.0).abs() < 1e-6);
+    assert!((agent.epsilon(2_000) - 0.01).abs() < 1e-6);
+    assert!(agent.epsilon(1_000) < 0.6);
+    assert!(agent.epsilon(1_000) > 0.4);
+}

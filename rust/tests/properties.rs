@@ -1,0 +1,297 @@
+//! Property-based tests over coordinator invariants.
+//!
+//! proptest is unavailable in this offline build, so these are
+//! PCG-driven randomised properties: each test draws hundreds of random
+//! cases from a seeded generator and asserts the invariant on every one
+//! (failures print the offending case).  The invariants mirror the
+//! DESIGN.md §Testing list: wrapper semantics, vec-env equivalence,
+//! replay-buffer bounds, VM safety, tournament pairing rules, RNG
+//! reproducibility.
+
+use cairl::core::env::{Env, Transition};
+use cairl::core::rng::Pcg32;
+use cairl::core::spaces::{Action, Space};
+use cairl::coordinator::vec_env::VecEnv;
+use cairl::envs::{CartPole, MountainCar, Pendulum};
+use cairl::flash::assembler::assemble;
+use cairl::flash::opcode::Op;
+use cairl::flash::vm::Vm;
+use cairl::tooling::tournament::{swiss, GameOutcome};
+use cairl::wrappers::{Flatten, FrameStack, NormalizeObs, TimeLimit};
+
+/// Draw `n` random cases with a labelled seed loop.
+fn cases(n: u32) -> impl Iterator<Item = (u32, Pcg32)> {
+    (0..n).map(|i| (i, Pcg32::new(0xC0FFEE + i as u64, i as u64 + 1)))
+}
+
+#[test]
+fn prop_time_limit_never_exceeds_cap() {
+    for (case, mut rng) in cases(60) {
+        let cap = 1 + rng.below(50);
+        let mut env = TimeLimit::new(Pendulum::discrete(), cap);
+        env.seed(case as u64);
+        let mut obs = vec![0.0f32; 3];
+        env.reset_into(&mut obs);
+        let mut len = 0;
+        loop {
+            let a = Action::Discrete(rng.below(5) as usize);
+            let t = env.step_into(&a, &mut obs);
+            len += 1;
+            assert!(len <= cap, "case {case}: exceeded cap {cap}");
+            if t.done || t.truncated {
+                assert_eq!(len, cap, "case {case}: pendulum only ends by cap");
+                assert!(t.truncated);
+                break;
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_flatten_preserves_values_and_count() {
+    for (case, mut rng) in cases(40) {
+        let mut plain = CartPole::new();
+        let mut flat = Flatten::new(CartPole::new());
+        plain.seed(case as u64);
+        flat.seed(case as u64);
+        let mut o1 = vec![0.0f32; 4];
+        let mut o2 = vec![0.0f32; 4];
+        plain.reset_into(&mut o1);
+        flat.reset_into(&mut o2);
+        for _ in 0..30 {
+            let a = Action::Discrete(rng.below(2) as usize);
+            let t1 = plain.step_into(&a, &mut o1);
+            let t2 = flat.step_into(&a, &mut o2);
+            assert_eq!(o1, o2, "case {case}");
+            assert_eq!(t1, t2);
+            if t1.done {
+                break;
+            }
+        }
+        assert_eq!(flat.obs_dim(), plain.obs_dim());
+    }
+}
+
+#[test]
+fn prop_normalize_bounded_dims_stay_in_unit_box() {
+    for (case, mut rng) in cases(40) {
+        let mut env = NormalizeObs::new(MountainCar::new());
+        env.seed(case as u64);
+        let mut obs = vec![0.0f32; 2];
+        env.reset_into(&mut obs);
+        for _ in 0..200 {
+            let a = Action::Discrete(rng.below(3) as usize);
+            let t = env.step_into(&a, &mut obs);
+            for &v in &obs {
+                assert!(
+                    (-1.0 - 1e-5..=1.0 + 1e-5).contains(&v),
+                    "case {case}: {obs:?}"
+                );
+            }
+            if t.done {
+                break;
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_frame_stack_window_shifts_by_one() {
+    for (case, mut rng) in cases(30) {
+        let k = 2 + rng.below(4) as usize;
+        let mut env = FrameStack::new(Pendulum::discrete(), k);
+        env.seed(case as u64);
+        let dim = 3;
+        let mut prev = vec![0.0f32; dim * k];
+        let mut cur = vec![0.0f32; dim * k];
+        env.reset_into(&mut prev);
+        for _ in 0..10 {
+            let a = Action::Discrete(rng.below(5) as usize);
+            env.step_into(&a, &mut cur);
+            // cur[0..(k-1)*dim] must equal prev[dim..k*dim].
+            assert_eq!(
+                &cur[..(k - 1) * dim],
+                &prev[dim..],
+                "case {case} k={k}"
+            );
+            std::mem::swap(&mut prev, &mut cur);
+        }
+    }
+}
+
+#[test]
+fn prop_vec_env_equals_sequential() {
+    for (case, mut rng) in cases(15) {
+        let n = 1 + rng.below(6) as usize;
+        let seed = 1000 + case as u64;
+        let mut venv = VecEnv::new(n, seed, || TimeLimit::new(CartPole::new(), 30));
+        let mut obs = vec![0.0f32; n * 4];
+        venv.reset_into(&mut obs);
+        let mut refs: Vec<_> = (0..n)
+            .map(|i| {
+                let mut e = TimeLimit::new(CartPole::new(), 30);
+                e.seed(seed + i as u64);
+                let mut o = vec![0.0f32; 4];
+                e.reset_into(&mut o);
+                (e, o)
+            })
+            .collect();
+        let mut tr = vec![Transition::default(); n];
+        for _ in 0..60 {
+            let actions: Vec<Action> = (0..n)
+                .map(|_| Action::Discrete(rng.below(2) as usize))
+                .collect();
+            venv.step_into(&actions, &mut obs, &mut tr);
+            for (i, (e, o)) in refs.iter_mut().enumerate() {
+                let t = e.step_into(&actions[i], o);
+                if t.done || t.truncated {
+                    e.reset_into(o);
+                }
+                assert_eq!(tr[i], t, "case {case} lane {i}");
+                assert_eq!(&obs[i * 4..(i + 1) * 4], &o[..], "case {case} lane {i}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_replay_buffer_len_bounded_and_samples_valid() {
+    use cairl::agents::ReplayBuffer;
+    use cairl::runtime::dqn_exec::Batch;
+    for (case, mut rng) in cases(30) {
+        let cap = 1 + rng.below(64) as usize;
+        let dim = 1 + rng.below(8) as usize;
+        let mut rb = ReplayBuffer::new(cap, dim);
+        let pushes = rng.below(200) + 1;
+        for p in 0..pushes {
+            let v = p as f32;
+            rb.push(&vec![v; dim], p as usize % 4, v, &vec![v + 1.0; dim], p % 3 == 0);
+            assert!(rb.len() <= cap, "case {case}");
+            assert_eq!(rb.len(), ((p + 1) as usize).min(cap));
+        }
+        let n = 1 + rng.below(rb.len() as u32) as usize;
+        let mut batch = Batch::default();
+        rb.sample_into(&mut rng, n, &mut batch);
+        // Sampled transitions must each be one of the last `cap` pushes.
+        let oldest = pushes as i64 - cap as i64;
+        for k in 0..n {
+            let v = batch.s[k * dim];
+            assert!(
+                (v as i64) >= oldest.max(0) && (v as i64) < pushes as i64,
+                "case {case}: sampled stale transition {v}"
+            );
+            assert_eq!(batch.s2[k * dim], v + 1.0);
+        }
+    }
+}
+
+#[test]
+fn prop_vm_never_panics_on_random_linear_programs() {
+    // Random (jump-free) instruction sequences either run to Halt or trap
+    // with a clean error — never panic, never corrupt memory bounds.
+    for (case, mut rng) in cases(300) {
+        let ops = [
+            "push 1.5", "push -2", "load 3", "store 3", "dup", "pop", "add",
+            "sub", "mul", "div", "min", "max", "neg", "abs", "sign", "eq",
+            "lt", "not", "rand", "input", "reward",
+        ];
+        let len = 1 + rng.below(30);
+        let mut src = String::from("halt\nframe:\n");
+        for _ in 0..len {
+            src.push_str(ops[rng.below(ops.len() as u32) as usize]);
+            src.push('\n');
+        }
+        src.push_str("halt\n");
+        let program = assemble(&src).unwrap();
+        // Structural sanity: all stores stay in bounds by construction.
+        assert!(program.code.iter().all(|op| match op {
+            Op::Store(s) | Op::Load(s) => (*s as usize) < 64,
+            _ => true,
+        }));
+        let mut vm = Vm::new(program);
+        vm.seed(case as u64);
+        vm.reset().unwrap();
+        // Result may be Ok or Err(trap) — both acceptable, panics are not.
+        let _ = vm.frame(1.0);
+    }
+}
+
+#[test]
+fn prop_swiss_points_conserved_and_no_rematch() {
+    for (case, mut rng) in cases(40) {
+        let n = 2 + rng.below(9) as usize;
+        let rounds = 1 + rng.below(4);
+        let mut pairs_seen = std::collections::HashSet::new();
+        let mut outcome_rng = Pcg32::new(case as u64, 77);
+        let standings = swiss(n, rounds, &mut rng, |a, b| {
+            assert!(
+                pairs_seen.insert((a.min(b), a.max(b))),
+                "case {case}: rematch"
+            );
+            match outcome_rng.below(3) {
+                0 => GameOutcome::WinA,
+                1 => GameOutcome::WinB,
+                _ => GameOutcome::Draw,
+            }
+        });
+        // Each round hands out exactly 2 points per pair + 2 per bye; with
+        // n players that is 2 * ceil(n/2) per round when a bye exists.
+        let total: u32 = standings.iter().map(|s| s.score).sum();
+        let per_round = 2 * n.div_ceil(2) as u32;
+        assert!(
+            total <= rounds * per_round,
+            "case {case}: {total} > {}",
+            rounds * per_round
+        );
+        assert_eq!(standings.len(), n);
+        // Sorted best-first.
+        for w in standings.windows(2) {
+            assert!(w[0].score >= w[1].score, "case {case}");
+        }
+    }
+}
+
+#[test]
+fn prop_pcg_streams_reproducible_and_independent() {
+    for (case, _) in cases(50) {
+        let seed = 0xABCD + case as u64;
+        let mut a1 = Pcg32::new(seed, 1);
+        let mut a2 = Pcg32::new(seed, 1);
+        let mut b = Pcg32::new(seed, 2);
+        let mut equal_ab = 0;
+        for _ in 0..200 {
+            let x = a1.next_u32();
+            assert_eq!(x, a2.next_u32());
+            if x == b.next_u32() {
+                equal_ab += 1;
+            }
+        }
+        assert!(equal_ab < 5, "case {case}: streams correlate");
+    }
+}
+
+#[test]
+fn prop_space_sample_always_contained() {
+    for (case, mut rng) in cases(60) {
+        let dim = 1 + rng.below(6) as usize;
+        let mut low = Vec::new();
+        let mut high = Vec::new();
+        for _ in 0..dim {
+            let a = rng.uniform(-10.0, 10.0);
+            let b = a + rng.uniform(0.1, 5.0);
+            low.push(a);
+            high.push(b);
+        }
+        let space = Space::box1(low, high);
+        for _ in 0..50 {
+            let a = space.sample(&mut rng);
+            assert!(space.contains(&a), "case {case}: {a:?}");
+        }
+        let d = Space::Discrete {
+            n: 1 + rng.below(20) as usize,
+        };
+        for _ in 0..50 {
+            assert!(d.contains(&d.sample(&mut rng)), "case {case}");
+        }
+    }
+}
