@@ -43,8 +43,8 @@ fn drive<E: Env + ?Sized>(env: &mut E, steps: u64, seed: u64) -> f64 {
 }
 
 fn main() {
-    let steps = knob("CAIRL_STEPS", 2_000_000);
-    let trials = knob("CAIRL_TRIALS", 5);
+    let steps = knob_q("CAIRL_STEPS", 2_000_000, 100_000);
+    let trials = knob_q("CAIRL_TRIALS", 5, 2);
     banner(&format!(
         "Ablation — dispatch & runner cost on Flatten<TimeLimit<CartPole, 200>>, {steps} steps x {trials}"
     ));
@@ -72,16 +72,50 @@ fn main() {
     println!("dynamic (Box<dyn Env>):  {dyn_ns:>9.1} ns/step  ({:.2}x static)", dyn_ns / static_ns);
     println!("script  (interpreted):   {script_ns:>9.1} ns/step  ({:.1}x static)", script_ns / static_ns);
 
+    // --- executor-layer dispatch: the same workload behind the
+    // BatchedExecutor trait, sequential vs persistent-worker pools.
+    // Per-lane-step cost includes action sampling and (for the pools)
+    // the per-batch synchronisation, i.e. the executor overhead the
+    // fig1_console comparison amortises with large batches.
+    use cairl::coordinator::experiment::{
+        build_executor, run_batched_workload, ExecutorKind,
+    };
+    let lanes = knob_q("CAIRL_LANES", 256, 64) as usize;
+    let lane_steps = (steps / lanes as u64).max(1);
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut executor_rows = Vec::new();
+    for (kind, name) in [
+        (ExecutorKind::Sequential, "vec-env"),
+        (ExecutorKind::PoolSync, "pool-sync"),
+        (ExecutorKind::PoolAsync, "pool-async"),
+    ] {
+        let best: f64 = (0..trials)
+            .map(|i| {
+                let mut exec =
+                    build_executor("CartPole-v1", kind, lanes, threads, i).unwrap();
+                run_batched_workload(exec.as_mut(), lane_steps, i).throughput
+            })
+            .fold(0.0, f64::max);
+        let exec_ns = 1e9 / best;
+        println!(
+            "{name:<9} ({lanes} lanes):     {exec_ns:>9.1} ns/lane-step  ({:.2}x static)",
+            exec_ns / static_ns
+        );
+        executor_rows.push((name, exec_ns, lane_steps * lanes as u64));
+    }
+
     let mut log = CsvLogger::create(
         std::path::Path::new("results/ablation_dispatch.csv"),
         &["variant", "ns_per_step", "steps", "trials"],
     )
     .unwrap();
-    for (name, v, n) in [
+    let mut rows: Vec<(&str, f64, u64)> = vec![
         ("static", static_ns, steps),
         ("dynamic", dyn_ns, steps),
         ("script", script_ns, script_steps),
-    ] {
+    ];
+    rows.extend(executor_rows);
+    for (name, v, n) in rows {
         log.row(&[
             name.into(),
             format!("{v:.2}"),

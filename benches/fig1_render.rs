@@ -20,8 +20,8 @@ use cairl::tooling::stats::Summary;
 use harness::*;
 
 fn main() {
-    let trials = knob("CAIRL_TRIALS", 5) as u32;
-    let steps = knob("CAIRL_STEPS", 3_000);
+    let trials = knob_q("CAIRL_TRIALS", 5, 2) as u32;
+    let steps = knob_q("CAIRL_STEPS", 3_000, 600);
     banner(&format!(
         "Fig. 1 / render — {steps} steps x {trials} trials (paper: 100000 x 100)"
     ));

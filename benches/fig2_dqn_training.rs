@@ -94,13 +94,21 @@ fn train_with_render(
 }
 
 fn main() {
-    let trials = knob("CAIRL_TRIALS", 3) as u32;
-    let steps = knob("CAIRL_FIG2_STEPS", 4_000) as u32;
+    let trials = knob_q("CAIRL_TRIALS", 3, 2) as u32;
+    let steps = knob_q("CAIRL_FIG2_STEPS", 4_000, 800) as u32;
     banner(&format!(
         "Fig. 2 — DQN training wall-clock, {steps} steps x {trials} trials (paper: to-convergence x 100)"
     ));
 
-    let mut rt = Runtime::from_default_artifacts().unwrap();
+    let mut rt = match Runtime::from_default_artifacts() {
+        Ok(rt) => rt,
+        Err(e) => {
+            // Training needs the PJRT artifacts; in smoke/offline builds
+            // report the skip instead of failing the bench harness.
+            println!("SKIP fig2_dqn_training: {e}");
+            return;
+        }
+    };
     let pairs = [
         ("cartpole", "CartPole-v1", "Script/CartPole-v1"),
         ("mountaincar", "MountainCar-v0", "Script/MountainCar-v0"),

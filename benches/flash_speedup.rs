@@ -43,9 +43,10 @@ fn run_frames(clock: FrameClock, frames: u64, seed: u64) -> f64 {
 }
 
 fn main() {
-    let unlocked_frames = knob("CAIRL_FLASH_FRAMES", 50_000);
-    // Locked at 30 FPS, keep the wall time reasonable.
-    let locked_frames = knob("CAIRL_FLASH_LOCKED_FRAMES", 240);
+    let unlocked_frames = knob_q("CAIRL_FLASH_FRAMES", 50_000, 5_000);
+    // Locked at 30 FPS, keep the wall time reasonable (the quick budget
+    // still spans ~3s of frame-clock so the 25-32 FPS window is stable).
+    let locked_frames = knob_q("CAIRL_FLASH_LOCKED_FRAMES", 240, 90);
     banner("SS V-B — flash runner: unlocked FPS and speed-up over browser-locked");
 
     let unlocked_secs = run_frames(FrameClock::Unlocked, unlocked_frames, 0);

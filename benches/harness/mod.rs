@@ -5,10 +5,14 @@
 //! *and* a CSV under `results/` so EXPERIMENTS.md has provenance.
 //!
 //! Environment variables scale the workload:
-//!   CAIRL_TRIALS  — trials per configuration (paper: 100; default lighter)
-//!   CAIRL_STEPS   — steps per trial          (paper: 100 000)
+//!   CAIRL_TRIALS       — trials per configuration (paper: 100; default lighter)
+//!   CAIRL_STEPS        — steps per trial          (paper: 100 000)
+//!   CAIRL_BENCH_QUICK  — `1` = smoke mode: tiny step budgets so CI can
+//!                        execute every bench binary end-to-end (shape
+//!                        checks still run; absolute numbers are noise)
 //! so `CAIRL_TRIALS=100 CAIRL_STEPS=100000 cargo bench` reproduces the
-//! full paper protocol.
+//! full paper protocol and `CAIRL_BENCH_QUICK=1 cargo bench` is the CI
+//! smoke path.  An explicit knob always beats the quick default.
 
 #![allow(dead_code)]
 
@@ -17,12 +21,27 @@ use std::path::Path;
 use cairl::tooling::csvlog::CsvLogger;
 use cairl::tooling::stats::Summary;
 
+/// True when the CI smoke path (`CAIRL_BENCH_QUICK=1`) is active.
+pub fn quick() -> bool {
+    std::env::var("CAIRL_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
 /// Read a workload knob from the environment.
 pub fn knob(name: &str, default: u64) -> u64 {
     std::env::var(name)
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(default)
+}
+
+/// Read a workload knob with a separate smoke-mode default: explicit
+/// env var > quick default (under `CAIRL_BENCH_QUICK=1`) > default.
+pub fn knob_q(name: &str, default: u64, quick_default: u64) -> u64 {
+    match std::env::var(name).ok().and_then(|v| v.parse().ok()) {
+        Some(v) => v,
+        None if quick() => quick_default,
+        None => default,
+    }
 }
 
 /// Run `trials` timed trials of `f(trial_index)` and summarise seconds.

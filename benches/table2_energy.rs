@@ -31,8 +31,8 @@ fn measure(env_id: &str, steps: u64, mode: RenderMode, label: &str) -> EnergyRep
 }
 
 fn main() {
-    let console_steps = knob("CAIRL_T2_CONSOLE", 200_000);
-    let render_steps = knob("CAIRL_T2_RENDER", 4_000);
+    let console_steps = knob_q("CAIRL_T2_CONSOLE", 200_000, 30_000);
+    let render_steps = knob_q("CAIRL_T2_RENDER", 4_000, 800);
     banner(&format!(
         "Table II — energy/carbon, console {console_steps} steps, graphical {render_steps} steps (paper: 1e6 / 1e4)"
     ));

@@ -1,5 +1,6 @@
-//! Vectorised simulation through the L1 Pallas kernel: 256 CartPole
-//! lanes advanced per PJRT call, versus the native scalar loop.
+//! Vectorised simulation two ways: the executor layer (native lanes on
+//! `VecEnv` / `EnvPool`, config-flippable) and the L1 Pallas kernel
+//! (256 CartPole lanes advanced per PJRT call).
 //!
 //! This is the §Hardware-Adaptation demo: the paper vectorises
 //! environment arithmetic with CPU SIMD; the TPU translation is a
@@ -8,24 +9,56 @@
 //! the CPU PJRT backend the call overhead dominates at this tiny state
 //! size — the point is the *architecture* (batched lanes, one dispatch)
 //! plus a numerics cross-check, with per-lane cost reported honestly.
+//! The native section shows the same batched shape on the host executors
+//! so the comparison runs even where PJRT/artifacts are absent.
 //!
 //! ```sh
 //! cargo run --release --example vectorized_pallas
+//! CAIRL_EXECUTOR=pool-async cargo run --release --example vectorized_pallas
 //! ```
 
+use cairl::coordinator::experiment::{
+    build_executor, run_batched_workload, ExecutorKind,
+};
 use cairl::core::rng::Pcg32;
 use cairl::envs::CartPole;
 use cairl::runtime::pjrt::{literal_f32, Runtime};
 
 const BATCH: usize = 256; // lowering batch of env_step_cartpole
 
-fn main() {
-    let mut rt = Runtime::from_default_artifacts().expect("make artifacts first");
-    let rounds: usize = std::env::var("CAIRL_VEC_ROUNDS")
+fn env_knob(name: &str, default: usize) -> usize {
+    std::env::var(name)
         .ok()
         .and_then(|v| v.parse().ok())
-        .unwrap_or(200);
+        .unwrap_or(default)
+}
 
+/// Native batched stepping through the executor layer: the workload is
+/// identical across executors, only the stepping engine flips.
+fn executor_section(rounds: usize) {
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let chosen = std::env::var("CAIRL_EXECUTOR")
+        .ok()
+        .and_then(|v| ExecutorKind::parse(&v))
+        .unwrap_or(ExecutorKind::PoolSync);
+    println!("native executor layer ({BATCH} lanes, {rounds} rounds, {threads} threads):");
+    for kind in [ExecutorKind::Sequential, chosen] {
+        let mut exec = build_executor("CartPole-v1", kind, BATCH, threads, 0)
+            .expect("CartPole-v1 is registered");
+        let r = run_batched_workload(exec.as_mut(), rounds as u64, 0);
+        println!(
+            "  {:<12} {:>12.0} lane-steps/s  ({} episodes finished)",
+            kind.label(),
+            r.throughput,
+            r.episodes
+        );
+    }
+}
+
+/// The original kernel demo: one PJRT call advances all 256 lanes; the
+/// native scalar loop replays the identical workload for a numerics
+/// cross-check.
+fn kernel_section(rt: &mut Runtime, rounds: usize) {
     // Seed 256 lanes with small random states and a fixed action stream.
     let mut rng = Pcg32::new(0, 5);
     let mut states: Vec<f32> = (0..BATCH * 4).map(|_| rng.uniform(-0.05, 0.05)).collect();
@@ -87,7 +120,7 @@ fn main() {
         .zip(&native_states)
         .map(|(a, b)| (a - b).abs())
         .fold(0.0f32, f32::max);
-    println!("lanes {BATCH}, rounds {rounds} -> {lane_steps:.0} lane-steps");
+    println!("\nkernel path: lanes {BATCH}, rounds {rounds} -> {lane_steps:.0} lane-steps");
     println!(
         "kernel (PJRT, batched):  {kernel_secs:.3}s = {:>8.0} lane-steps/s  ({} resets)",
         lane_steps / kernel_secs,
@@ -106,4 +139,18 @@ fn main() {
     );
     assert!(max_diff < 1e-4, "kernel and native dynamics diverged");
     assert_eq!(kernel_resets, native_resets);
+}
+
+fn main() {
+    let rounds = env_knob("CAIRL_VEC_ROUNDS", 200);
+    executor_section(rounds);
+    match Runtime::from_default_artifacts() {
+        Ok(mut rt) => kernel_section(&mut rt, rounds),
+        Err(e) => {
+            println!(
+                "\nkernel path skipped (PJRT runtime unavailable): {e}\n\
+                 run `make artifacts` with the real xla bindings to enable it"
+            );
+        }
+    }
 }

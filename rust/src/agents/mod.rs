@@ -12,7 +12,9 @@ pub mod qtable;
 pub mod random;
 pub mod replay;
 
-pub use dqn::{DqnAgent, DqnConfig, TrainOutcome};
+pub use dqn::{
+    evaluate_greedy_batched, BatchedEvalOutcome, DqnAgent, DqnConfig, TrainOutcome,
+};
 pub use qtable::QTableAgent;
 pub use random::RandomAgent;
 pub use replay::ReplayBuffer;

@@ -9,6 +9,7 @@
 use std::path::Path;
 
 use crate::agents::dqn::DqnConfig;
+use crate::coordinator::experiment::ExecutorKind;
 use crate::core::error::{CairlError, Result};
 use crate::core::json::{self, Value};
 
@@ -117,6 +118,65 @@ impl DqnSettings {
     }
 }
 
+/// Executor block — which [`BatchedExecutor`]
+/// (crate::coordinator::pool::BatchedExecutor) runs batched workloads,
+/// and at what width.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExecutorSettings {
+    /// `"vec"` (sequential), `"pool"` (sync workers) or `"pool-async"`.
+    pub kind: String,
+    /// Environment lanes stepped per batch.
+    pub lanes: usize,
+    /// Worker threads for the pooled kinds; `0` = one per available core.
+    pub threads: usize,
+}
+
+impl Default for ExecutorSettings {
+    fn default() -> Self {
+        ExecutorSettings {
+            kind: "vec".into(),
+            lanes: 1,
+            threads: 0,
+        }
+    }
+}
+
+impl ExecutorSettings {
+    /// Resolve the configured kind name.
+    pub fn to_kind(&self) -> Result<ExecutorKind> {
+        ExecutorKind::parse(&self.kind).ok_or_else(|| {
+            CairlError::Config(format!(
+                "unknown executor kind {:?} (expected vec | pool | pool-async)",
+                self.kind
+            ))
+        })
+    }
+
+    /// Worker-thread count with the `0 = all cores` default applied.
+    pub fn effective_threads(&self) -> usize {
+        if self.threads == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        } else {
+            self.threads
+        }
+    }
+
+    /// Overlay fields present in a JSON object.
+    fn apply(&mut self, v: &Value) {
+        if let Some(s) = v.get("kind").and_then(Value::as_str) {
+            self.kind = s.to_string();
+        }
+        if let Some(x) = v.get("lanes").and_then(Value::as_f64) {
+            self.lanes = (x as usize).max(1);
+        }
+        if let Some(x) = v.get("threads").and_then(Value::as_f64) {
+            self.threads = x as usize;
+        }
+    }
+}
+
 /// A full experiment description.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ExperimentConfig {
@@ -133,6 +193,8 @@ pub struct ExperimentConfig {
     /// Output directory for CSV results.
     pub out_dir: String,
     pub dqn: DqnSettings,
+    /// Batched-executor selection for vectorised workloads.
+    pub executor: ExecutorSettings,
 }
 
 impl Default for ExperimentConfig {
@@ -145,6 +207,7 @@ impl Default for ExperimentConfig {
             render: false,
             out_dir: "results".into(),
             dqn: DqnSettings::default(),
+            executor: ExecutorSettings::default(),
         }
     }
 }
@@ -185,13 +248,16 @@ impl ExperimentConfig {
         if let Some(d) = v.get("dqn") {
             cfg.dqn.apply(d);
         }
+        if let Some(e) = v.get("executor") {
+            cfg.executor.apply(e);
+        }
         Ok(cfg)
     }
 
     /// Serialise (pretty enough for `cairl config`).
     pub fn render(&self) -> String {
         format!(
-            "{{\n  \"env\": \"{}\",\n  \"agent\": \"{}\",\n  \"trials\": {},\n  \"seed\": {},\n  \"render\": {},\n  \"out_dir\": \"{}\",\n  \"dqn\": {{\n    \"epsilon_start\": {},\n    \"epsilon_final\": {},\n    \"epsilon_decay_steps\": {},\n    \"target_update_freq\": {},\n    \"memory_size\": {},\n    \"learn_start\": {},\n    \"train_every\": {},\n    \"max_steps\": {},\n    \"solve_return\": {},\n    \"solve_window\": {}\n  }}\n}}",
+            "{{\n  \"env\": \"{}\",\n  \"agent\": \"{}\",\n  \"trials\": {},\n  \"seed\": {},\n  \"render\": {},\n  \"out_dir\": \"{}\",\n  \"dqn\": {{\n    \"epsilon_start\": {},\n    \"epsilon_final\": {},\n    \"epsilon_decay_steps\": {},\n    \"target_update_freq\": {},\n    \"memory_size\": {},\n    \"learn_start\": {},\n    \"train_every\": {},\n    \"max_steps\": {},\n    \"solve_return\": {},\n    \"solve_window\": {}\n  }},\n  \"executor\": {{\n    \"kind\": \"{}\",\n    \"lanes\": {},\n    \"threads\": {}\n  }}\n}}",
             self.env,
             self.agent,
             self.trials,
@@ -208,6 +274,9 @@ impl ExperimentConfig {
             self.dqn.max_steps,
             self.dqn.solve_return,
             self.dqn.solve_window,
+            self.executor.kind,
+            self.executor.lanes,
+            self.executor.threads,
         )
     }
 }
@@ -263,5 +332,34 @@ mod tests {
         let cfg = ExperimentConfig::default();
         let back = ExperimentConfig::parse(&cfg.render()).unwrap();
         assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn parses_executor_block() {
+        let cfg = ExperimentConfig::parse(
+            r#"{"executor": {"kind": "pool", "lanes": 256, "threads": 8}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.executor.kind, "pool");
+        assert_eq!(cfg.executor.lanes, 256);
+        assert_eq!(cfg.executor.threads, 8);
+        assert_eq!(cfg.executor.effective_threads(), 8);
+        assert!(cfg.executor.to_kind().is_ok());
+    }
+
+    #[test]
+    fn executor_defaults_to_sequential_vec() {
+        let cfg = ExperimentConfig::parse("{}").unwrap();
+        assert_eq!(cfg.executor, ExecutorSettings::default());
+        use crate::coordinator::experiment::ExecutorKind;
+        assert_eq!(cfg.executor.to_kind().unwrap(), ExecutorKind::Sequential);
+        assert!(cfg.executor.effective_threads() >= 1);
+    }
+
+    #[test]
+    fn bad_executor_kind_is_config_error() {
+        let cfg =
+            ExperimentConfig::parse(r#"{"executor": {"kind": "warp"}}"#).unwrap();
+        assert!(matches!(cfg.executor.to_kind(), Err(CairlError::Config(_))));
     }
 }

@@ -7,8 +7,13 @@
 
 use std::time::{Duration, Instant};
 
-use crate::core::env::{DynEnv, Env};
+use crate::coordinator::pool::{AsyncEnvPool, BatchedExecutor, EnvPool};
+use crate::coordinator::registry;
+use crate::coordinator::vec_env::VecEnv;
+use crate::core::env::{DynEnv, Env, Transition};
+use crate::core::error::Result;
 use crate::core::rng::Pcg32;
+use crate::core::spaces::Action;
 use crate::render::{Framebuffer, HardwareSim};
 use crate::tooling::stats::Summary;
 
@@ -92,6 +97,105 @@ pub fn stepping_trials(
                 .as_secs_f64()
         })
         .collect()
+}
+
+/// Which [`BatchedExecutor`] a batched workload runs on.  Selected by
+/// configuration ([`crate::coordinator::config::ExecutorSettings`]) or
+/// CLI flags so every workload can flip executors without code changes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecutorKind {
+    /// Sequential [`VecEnv`] — the bit-exact reference.
+    Sequential,
+    /// [`EnvPool`] sync mode: persistent workers, barrier per batch,
+    /// trajectories identical to [`ExecutorKind::Sequential`].
+    PoolSync,
+    /// [`AsyncEnvPool`] driven in lockstep: persistent workers, ready
+    /// queue, no barrier inside the pool.
+    PoolAsync,
+}
+
+impl ExecutorKind {
+    /// Parse a config/CLI name.
+    pub fn parse(name: &str) -> Option<ExecutorKind> {
+        match name {
+            "vec" | "sequential" => Some(ExecutorKind::Sequential),
+            "pool" | "pool-sync" => Some(ExecutorKind::PoolSync),
+            "pool-async" | "async" => Some(ExecutorKind::PoolAsync),
+            _ => None,
+        }
+    }
+
+    /// Stable display name (also the accepted config spelling).
+    pub fn label(&self) -> &'static str {
+        match self {
+            ExecutorKind::Sequential => "vec",
+            ExecutorKind::PoolSync => "pool",
+            ExecutorKind::PoolAsync => "pool-async",
+        }
+    }
+}
+
+/// Build a batched executor over `lanes` instances of a registry env.
+/// Lane `i` is seeded `base_seed + i` on every executor kind, which is
+/// what makes the kinds interchangeable mid-experiment.
+pub fn build_executor(
+    env_id: &str,
+    kind: ExecutorKind,
+    lanes: usize,
+    threads: usize,
+    base_seed: u64,
+) -> Result<Box<dyn BatchedExecutor>> {
+    // Validate the id once up front so the per-lane factory can't fail.
+    let _ = registry::make(env_id)?;
+    let factory = || registry::make(env_id).expect("env id validated above");
+    Ok(match kind {
+        ExecutorKind::Sequential => Box::new(VecEnv::new(lanes, base_seed, factory)),
+        ExecutorKind::PoolSync => {
+            Box::new(EnvPool::new(lanes, base_seed, threads, factory))
+        }
+        ExecutorKind::PoolAsync => {
+            Box::new(AsyncEnvPool::new(lanes, base_seed, threads, factory))
+        }
+    })
+}
+
+/// Run `steps_per_lane` random-action batch steps on any executor
+/// (auto-reset) — the batched counterpart of [`run_stepping_workload`],
+/// and the workload behind the executor comparison in
+/// `benches/fig1_console.rs`.  `steps` in the result counts lane-steps
+/// (`steps_per_lane * num_lanes`).
+pub fn run_batched_workload(
+    exec: &mut dyn BatchedExecutor,
+    steps_per_lane: u64,
+    seed: u64,
+) -> SteppingResult {
+    let n = exec.num_lanes();
+    let d = exec.obs_dim();
+    let space = exec.action_space();
+    let mut rng = Pcg32::new(seed, 23);
+    let mut obs = vec![0.0f32; n * d];
+    let mut transitions = vec![Transition::default(); n];
+    let mut actions: Vec<Action> = Vec::with_capacity(n);
+    exec.reset_into(&mut obs);
+    let mut episodes = 0u64;
+    let start = Instant::now();
+    for _ in 0..steps_per_lane {
+        actions.clear();
+        actions.extend((0..n).map(|_| space.sample(&mut rng)));
+        exec.step_into(&actions, &mut obs, &mut transitions);
+        episodes += transitions
+            .iter()
+            .filter(|t| t.done || t.truncated)
+            .count() as u64;
+    }
+    let elapsed = start.elapsed();
+    let steps = steps_per_lane * n as u64;
+    SteppingResult {
+        steps,
+        episodes,
+        elapsed,
+        throughput: steps as f64 / elapsed.as_secs_f64(),
+    }
 }
 
 /// A named comparison row (CaiRL vs baseline) with the paper's ratio.
@@ -179,5 +283,45 @@ mod tests {
         let s = timed_trials(4, |_| count += 1);
         assert_eq!(count, 4);
         assert_eq!(s.n, 4);
+    }
+
+    #[test]
+    fn executor_kind_parses_config_names() {
+        assert_eq!(ExecutorKind::parse("vec"), Some(ExecutorKind::Sequential));
+        assert_eq!(ExecutorKind::parse("pool"), Some(ExecutorKind::PoolSync));
+        assert_eq!(
+            ExecutorKind::parse("pool-async"),
+            Some(ExecutorKind::PoolAsync)
+        );
+        assert_eq!(ExecutorKind::parse("nope"), None);
+        for kind in [
+            ExecutorKind::Sequential,
+            ExecutorKind::PoolSync,
+            ExecutorKind::PoolAsync,
+        ] {
+            assert_eq!(ExecutorKind::parse(kind.label()), Some(kind));
+        }
+    }
+
+    #[test]
+    fn build_executor_rejects_unknown_env() {
+        assert!(build_executor("NoSuchEnv-v0", ExecutorKind::PoolSync, 2, 2, 0).is_err());
+    }
+
+    #[test]
+    fn batched_workload_agrees_across_executor_kinds() {
+        // Same seed, same action stream: every executor kind must count
+        // the same number of steps *and* episode ends — the workload-level
+        // face of the bit-determinism invariant.
+        let run = |kind: ExecutorKind| {
+            let mut exec = build_executor("CartPole-v1", kind, 6, 3, 40).unwrap();
+            let r = run_batched_workload(exec.as_mut(), 80, 7);
+            (r.steps, r.episodes)
+        };
+        let seq = run(ExecutorKind::Sequential);
+        assert_eq!(seq.0, 6 * 80);
+        assert!(seq.1 > 0, "random cartpole must finish episodes");
+        assert_eq!(seq, run(ExecutorKind::PoolSync));
+        assert_eq!(seq, run(ExecutorKind::PoolAsync));
     }
 }

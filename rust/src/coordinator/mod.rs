@@ -1,14 +1,20 @@
-//! Experiment coordination — registry, config system, vectorised
-//! execution and trial orchestration.
+//! Experiment coordination — registry, config system, batched executors
+//! and trial orchestration.
 //!
 //! This is the toolkit's L3 "coordinator" in the three-layer architecture:
 //! it owns env construction ([`registry`]), the experiment configuration
 //! surface ([`config`], Table I defaults), batched environment execution
-//! ([`vec_env`]) and multi-trial experiment runs with stopping criteria
-//! ([`experiment`]) — the machinery behind every figure and table
+//! — the sequential [`vec_env`] reference and the persistent-worker
+//! [`pool`] executors behind one [`pool::BatchedExecutor`] interface —
+//! and multi-trial experiment runs with stopping criteria
+//! ([`experiment`]): the machinery behind every figure and table
 //! reproduction.
 
 pub mod config;
 pub mod experiment;
+pub mod pool;
 pub mod registry;
 pub mod vec_env;
+
+pub use pool::{AsyncEnvPool, BatchedExecutor, EnvPool};
+pub use vec_env::VecEnv;

@@ -1,0 +1,1010 @@
+//! Persistent-worker batched executors — the EnvPool-style scaling
+//! substrate (Weng et al., 2022).
+//!
+//! The seed toolkit stepped `VecEnv` lanes sequentially, and its only
+//! threaded path spawned throwaway threads per call.  This module
+//! replaces that with **persistent workers that own lanes for the life
+//! of the pool** and step them against shared `[n * obs_dim]` batch
+//! buffers:
+//!
+//! * [`BatchedExecutor`] — the common executor interface.  `VecEnv`
+//!   (sequential), [`EnvPool`] (threaded, synchronous) and
+//!   [`AsyncEnvPool`] (threaded, workers run ahead) all implement it, so
+//!   every workload can flip executors via configuration
+//!   ([`crate::coordinator::config::ExecutorSettings`]).
+//! * [`EnvPool`] — **sync mode**: one spin-barrier per batch.  Lane `i`
+//!   is seeded `base_seed + i` and stepped in order by exactly one
+//!   worker, so trajectories are **bit-identical to sequential
+//!   `VecEnv`** for any thread count (`rust/tests/executor_pool.rs`
+//!   pins this for every registered env id).  Threading is a pure
+//!   performance transform, never a semantics change.
+//! * [`AsyncEnvPool`] — **async mode**: workers step a lane the moment
+//!   its action arrives; the coordinator exchanges
+//!   [`AsyncEnvPool::send_actions`] / [`AsyncEnvPool::recv_batch`] over
+//!   a ready-queue.  Batches come back compacted (`[k * obs_dim]` plus
+//!   the lane ids) — EnvPool's XLA-friendly shape, where the learner
+//!   consumes whatever subset of lanes is ready instead of waiting for
+//!   stragglers.
+//!
+//! Auto-reset follows the `VecEnv` convention everywhere: a finished
+//! lane's transition reports the episode end exactly once and its
+//! observation is the first observation of the next episode.
+//!
+//! Synchronisation in sync mode is a seqlock-style broadcast
+//! (`AtomicU64` command sequence + `AtomicUsize` completion count) with
+//! bounded spinning before yielding, because a condvar wake costs more
+//! than an entire batch of cheap classic-control steps.  Workers burn
+//! cycles only between `step_into` calls issued back-to-back; an idle
+//! pool parks on `yield_now`.
+
+use std::cell::UnsafeCell;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::core::env::{Env, Transition};
+use crate::core::rng::Pcg32;
+use crate::core::spaces::{Action, Space};
+
+/// A batch of homogeneous environment lanes stepped as one unit.
+///
+/// The contract every implementation upholds (and the property tests
+/// enforce): lane `i` behaves exactly like a single env seeded
+/// `base_seed + i`, stepped sequentially with auto-reset — executors
+/// differ only in *how fast* the batch advances.
+pub trait BatchedExecutor {
+    /// Number of lanes in the batch.
+    fn num_lanes(&self) -> usize;
+
+    /// Flattened per-lane observation length.
+    fn obs_dim(&self) -> usize;
+
+    /// The (shared) action space of every lane.
+    fn action_space(&self) -> Space;
+
+    /// Reset every lane; `obs` is `[num_lanes * obs_dim]`.
+    fn reset_into(&mut self, obs: &mut [f32]);
+
+    /// Step every lane with its action; finished lanes auto-reset.
+    /// `actions.len() == transitions.len() == num_lanes`,
+    /// `obs.len() == num_lanes * obs_dim`.
+    fn step_into(
+        &mut self,
+        actions: &[Action],
+        obs: &mut [f32],
+        transitions: &mut [Transition],
+    );
+}
+
+/// Iterations of `spin_loop` before a waiter starts yielding the core.
+const SPIN_LIMIT: u32 = 1 << 12;
+
+/// Spin until the command sequence moves past `last`, returning the new
+/// value — or `None` if the pool was poisoned (a sibling worker
+/// panicked), telling the caller to exit.
+fn wait_for_seq(shared: &SyncShared, last: u64) -> Option<u64> {
+    let mut spins = 0u32;
+    loop {
+        if shared.poisoned.load(Ordering::Acquire) {
+            return None;
+        }
+        let s = shared.seq.load(Ordering::Acquire);
+        if s != last {
+            return Some(s);
+        }
+        spins = spins.saturating_add(1);
+        if spins < SPIN_LIMIT {
+            std::hint::spin_loop();
+        } else {
+            std::thread::yield_now();
+        }
+    }
+}
+
+/// One broadcast command.  Raw pointers stay valid for the whole
+/// barrier: the coordinator publishes a command and then blocks until
+/// every worker has acknowledged completion, so the borrows behind
+/// these pointers outlive all worker accesses.
+#[derive(Clone, Copy)]
+enum Cmd {
+    Idle,
+    Reset {
+        obs: *mut f32,
+    },
+    Step {
+        actions: *const Action,
+        obs: *mut f32,
+        transitions: *mut Transition,
+    },
+    /// Free-running random-action rollout executed entirely worker-side
+    /// (one barrier for the whole workload) — the throughput mode behind
+    /// [`crate::coordinator::vec_env::parallel_random_steps`].
+    RandomSteps {
+        steps_per_lane: u64,
+    },
+    Shutdown,
+}
+
+/// Coordinator/worker mailbox for the sync pool.
+struct SyncShared {
+    /// Bumped (release) by the coordinator after writing `cmd`.
+    seq: AtomicU64,
+    /// Incremented (release) by each worker when its lanes are done.
+    done: AtomicUsize,
+    /// Set when a worker's env panicked mid-command.  A panicking worker
+    /// still acknowledges the round before exiting (so the barrier's ack
+    /// quorum always completes), surviving workers exit on seeing the
+    /// flag, and the coordinator re-raises the panic — no command is
+    /// ever issued against a partially dead pool.
+    poisoned: AtomicBool,
+    /// The current command.  Written only by the coordinator while all
+    /// workers are quiescent (`done` drained to 0), read only by
+    /// workers after observing a new `seq` — never concurrently
+    /// accessed for writing and reading.
+    cmd: UnsafeCell<Cmd>,
+}
+
+// SAFETY: `cmd` is protected by the seq/done handshake described above,
+// and the raw pointers it carries are only dereferenced for disjoint
+// lane ranges while the owning borrow is pinned by the barrier.
+unsafe impl Send for SyncShared {}
+unsafe impl Sync for SyncShared {}
+
+/// Persistent-worker pool, synchronous mode.
+///
+/// Construction partitions `n` lanes into contiguous chunks, one
+/// long-lived worker thread per chunk.  [`EnvPool::step_into`] publishes
+/// the batch command, every worker steps its own lanes directly into the
+/// shared buffers, and the call returns once the last worker checks in —
+/// a barrier per batch, amortised across all lanes.
+pub struct EnvPool {
+    shared: Arc<SyncShared>,
+    handles: Vec<JoinHandle<()>>,
+    n: usize,
+    obs_dim: usize,
+    action_space: Space,
+    base_seed: u64,
+}
+
+impl EnvPool {
+    /// Build a pool of `n` lanes across up to `threads` workers; lane
+    /// `i` is seeded `base_seed + i` (the same rule as
+    /// [`VecEnv::new`](crate::coordinator::vec_env::VecEnv::new), which
+    /// is what makes the two executors trajectory-compatible).
+    pub fn new<E, F>(n: usize, base_seed: u64, threads: usize, mut factory: F) -> EnvPool
+    where
+        E: Env + Send + 'static,
+        F: FnMut() -> E,
+    {
+        assert!(n > 0, "EnvPool needs at least one lane");
+        let mut envs: Vec<E> = (0..n).map(|_| factory()).collect();
+        for (i, env) in envs.iter_mut().enumerate() {
+            env.seed(base_seed + i as u64);
+        }
+        let obs_dim = envs[0].obs_dim();
+        let action_space = envs[0].action_space();
+
+        let threads = threads.clamp(1, n);
+        let chunk = n.div_ceil(threads);
+        let shared = Arc::new(SyncShared {
+            seq: AtomicU64::new(0),
+            done: AtomicUsize::new(0),
+            poisoned: AtomicBool::new(false),
+            cmd: UnsafeCell::new(Cmd::Idle),
+        });
+
+        let mut handles = Vec::new();
+        let mut lane_start = 0usize;
+        let mut remaining = envs;
+        while lane_start < n {
+            let take = chunk.min(n - lane_start);
+            let lane_envs: Vec<E> = remaining.drain(..take).collect();
+            let shared_w = Arc::clone(&shared);
+            let handle = std::thread::Builder::new()
+                .name(format!("envpool-{lane_start}"))
+                .spawn(move || {
+                    sync_worker(shared_w, lane_envs, lane_start, obs_dim, base_seed)
+                })
+                .expect("spawn pool worker");
+            handles.push(handle);
+            lane_start += take;
+        }
+
+        EnvPool {
+            shared,
+            handles,
+            n,
+            obs_dim,
+            action_space,
+            base_seed,
+        }
+    }
+
+    /// Number of worker threads actually running.
+    pub fn threads(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// The base seed the lanes were constructed with (lane `i` holds
+    /// `base_seed + i`).
+    pub fn base_seed(&self) -> u64 {
+        self.base_seed
+    }
+
+    /// Run `steps_per_lane` uniform-random steps on every lane entirely
+    /// worker-side — one barrier for the *whole workload*, so cheap envs
+    /// run free of per-step synchronisation (the Fig.-1 aggregate
+    /// throughput mode).  Lane `i` draws actions from the dedicated
+    /// stream `Pcg32::new(base_seed ^ 0xabcd, i + 1)` and resets before
+    /// starting, so results are reproducible and thread-count
+    /// independent.  Returns total lane-steps executed.
+    ///
+    /// Note this advances lane state without reporting observations;
+    /// don't interleave with trait-driven lockstep batches that assume
+    /// they saw every transition.
+    pub fn random_rollout(&mut self, steps_per_lane: u64) -> u64 {
+        self.broadcast(Cmd::RandomSteps { steps_per_lane });
+        steps_per_lane * self.n as u64
+    }
+
+    /// Publish `cmd` and block until every worker has processed it,
+    /// re-raising any worker panic on the coordinator thread.
+    ///
+    /// Safety of the barrier under panics: workers only ever die by
+    /// panicking inside a command, a panicking worker acknowledges the
+    /// round *before* exiting, and a poisoned pool refuses to publish
+    /// further commands — so every round's ack quorum is the full
+    /// worker count and the caller's buffer borrows are never released
+    /// while a worker could still write through them.
+    fn broadcast(&self, cmd: Cmd) {
+        if self.shared.poisoned.load(Ordering::Acquire) {
+            panic!("EnvPool is poisoned: a worker panicked in an earlier batch");
+        }
+        debug_assert_eq!(self.shared.done.load(Ordering::Acquire), 0);
+        // SAFETY: all workers are quiescent between barriers (done was
+        // drained to 0), so this is the only access to `cmd`.
+        unsafe {
+            *self.shared.cmd.get() = cmd;
+        }
+        self.shared.seq.fetch_add(1, Ordering::Release);
+        self.await_acks();
+        if self.shared.poisoned.load(Ordering::Acquire) {
+            panic!("EnvPool worker panicked while executing a batch command");
+        }
+    }
+
+    /// Spin until every worker acknowledged the current command (a
+    /// panicking worker still acks, so this always terminates).
+    fn await_acks(&self) {
+        let workers = self.handles.len();
+        let mut spins = 0u32;
+        while self.shared.done.load(Ordering::Acquire) < workers {
+            spins = spins.saturating_add(1);
+            if spins < SPIN_LIMIT {
+                std::hint::spin_loop();
+            } else {
+                std::thread::yield_now();
+            }
+        }
+        self.shared.done.store(0, Ordering::Release);
+    }
+}
+
+impl BatchedExecutor for EnvPool {
+    fn num_lanes(&self) -> usize {
+        self.n
+    }
+
+    fn obs_dim(&self) -> usize {
+        self.obs_dim
+    }
+
+    fn action_space(&self) -> Space {
+        self.action_space.clone()
+    }
+
+    fn reset_into(&mut self, obs: &mut [f32]) {
+        assert_eq!(obs.len(), self.n * self.obs_dim);
+        self.broadcast(Cmd::Reset {
+            obs: obs.as_mut_ptr(),
+        });
+    }
+
+    fn step_into(
+        &mut self,
+        actions: &[Action],
+        obs: &mut [f32],
+        transitions: &mut [Transition],
+    ) {
+        assert_eq!(actions.len(), self.n);
+        assert_eq!(obs.len(), self.n * self.obs_dim);
+        assert_eq!(transitions.len(), self.n);
+        self.broadcast(Cmd::Step {
+            actions: actions.as_ptr(),
+            obs: obs.as_mut_ptr(),
+            transitions: transitions.as_mut_ptr(),
+        });
+    }
+}
+
+impl Drop for EnvPool {
+    fn drop(&mut self) {
+        if self.shared.poisoned.load(Ordering::Acquire) {
+            // Workers exit on their own via the poison flag; never
+            // panic out of drop.
+        } else {
+            // Publish Shutdown directly (broadcast would re-panic if a
+            // worker somehow poisoned the final round).
+            // SAFETY: workers are quiescent between barriers.
+            unsafe {
+                *self.shared.cmd.get() = Cmd::Shutdown;
+            }
+            self.shared.seq.fetch_add(1, Ordering::Release);
+            self.await_acks();
+        }
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+/// Body of one sync worker: wait for a command, run it over the owned
+/// lane range, acknowledge, repeat.  Env panics are caught so the
+/// round's ack still happens; the pool is poisoned instead of deadlocked.
+fn sync_worker<E: Env>(
+    shared: Arc<SyncShared>,
+    mut envs: Vec<E>,
+    lane_start: usize,
+    obs_dim: usize,
+    base_seed: u64,
+) {
+    let mut last_seq = 0u64;
+    loop {
+        let Some(seq) = wait_for_seq(&shared, last_seq) else {
+            return; // a sibling worker panicked: the pool is done
+        };
+        last_seq = seq;
+        // SAFETY: the coordinator finished writing `cmd` before the seq
+        // bump we just acquired, and will not write again until this
+        // worker (and all others) increments `done`.
+        let cmd = unsafe { *shared.cmd.get() };
+        let shutdown = matches!(cmd, Cmd::Shutdown);
+        let ok = catch_unwind(AssertUnwindSafe(|| {
+            run_cmd(cmd, &mut envs, lane_start, obs_dim, base_seed);
+        }))
+        .is_ok();
+        if !ok {
+            shared.poisoned.store(true, Ordering::Release);
+        }
+        shared.done.fetch_add(1, Ordering::Release);
+        if !ok || shutdown {
+            return;
+        }
+    }
+}
+
+/// Execute one command over a worker's lane range.
+fn run_cmd<E: Env>(
+    cmd: Cmd,
+    envs: &mut [E],
+    lane_start: usize,
+    obs_dim: usize,
+    base_seed: u64,
+) {
+    match cmd {
+        Cmd::Idle | Cmd::Shutdown => {}
+        Cmd::Reset { obs } => {
+            for (k, env) in envs.iter_mut().enumerate() {
+                let lane = lane_start + k;
+                // SAFETY: lane ranges are disjoint across workers and
+                // the caller's `&mut [f32]` is pinned by the barrier.
+                let lane_obs = unsafe {
+                    std::slice::from_raw_parts_mut(obs.add(lane * obs_dim), obs_dim)
+                };
+                env.reset_into(lane_obs);
+            }
+        }
+        Cmd::Step {
+            actions,
+            obs,
+            transitions,
+        } => {
+            for (k, env) in envs.iter_mut().enumerate() {
+                let lane = lane_start + k;
+                // SAFETY: as above — disjoint lanes, barrier-pinned
+                // borrows, actions only read.
+                let action = unsafe { &*actions.add(lane) };
+                let lane_obs = unsafe {
+                    std::slice::from_raw_parts_mut(obs.add(lane * obs_dim), obs_dim)
+                };
+                let t = env.step_into(action, lane_obs);
+                unsafe {
+                    *transitions.add(lane) = t;
+                }
+                if t.done || t.truncated {
+                    env.reset_into(lane_obs);
+                }
+            }
+        }
+        Cmd::RandomSteps { steps_per_lane } => {
+            // Free-running: no coordinator round-trips, matching the
+            // per-thread loop `parallel_random_steps` historically ran
+            // (same per-lane rng streams, same seeding).
+            for (k, env) in envs.iter_mut().enumerate() {
+                let lane = lane_start + k;
+                let mut rng = Pcg32::new(base_seed ^ 0xabcd, lane as u64 + 1);
+                let space = env.action_space();
+                let mut obs = vec![0.0f32; obs_dim];
+                env.reset_into(&mut obs);
+                for _ in 0..steps_per_lane {
+                    let a = space.sample(&mut rng);
+                    let t = env.step_into(&a, &mut obs);
+                    if t.done || t.truncated {
+                        env.reset_into(&mut obs);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// One ready lane reported by an async worker.
+pub struct ReadyLane {
+    /// Global lane index.
+    pub lane: usize,
+    /// Current observation (first obs of the next episode if the lane
+    /// just finished).
+    pub obs: Vec<f32>,
+    /// The transition that produced `obs` (`Transition::default()` for
+    /// the initial reset).
+    pub transition: Transition,
+}
+
+/// A compacted batch of ready lanes — EnvPool's XLA-friendly shape.
+pub struct AsyncBatch {
+    /// Lane ids, in ready order; `lanes[j]`'s observation occupies
+    /// `obs[j * obs_dim .. (j + 1) * obs_dim]`.
+    pub lanes: Vec<usize>,
+    /// `[lanes.len() * obs_dim]` observation block.
+    pub obs: Vec<f32>,
+    /// Per-entry transitions, aligned with `lanes`.
+    pub transitions: Vec<Transition>,
+}
+
+/// Queue contents plus the poison flag, under one lock so waiters can
+/// check both atomically (no lost-wakeup window).
+struct QueueState {
+    q: VecDeque<ReadyLane>,
+    poisoned: bool,
+}
+
+struct ReadyQueue {
+    state: Mutex<QueueState>,
+    cv: Condvar,
+}
+
+impl ReadyQueue {
+    fn push(&self, r: ReadyLane) {
+        self.state.lock().unwrap().q.push_back(r);
+        self.cv.notify_one();
+    }
+
+    /// Mark the pool dead (a worker's env panicked) and wake every
+    /// waiter so blocked `recv_batch`/`collect_exact` calls surface the
+    /// failure instead of sleeping forever.
+    fn poison(&self) {
+        self.state.lock().unwrap().poisoned = true;
+        self.cv.notify_all();
+    }
+}
+
+enum WorkerMsg {
+    Step { lane: usize, action: Action },
+    Reset,
+}
+
+/// Persistent-worker pool, asynchronous mode: workers run ahead.
+///
+/// After construction every lane is reset and enqueued ready.  The
+/// coordinator loop is
+/// [`recv_batch`](AsyncEnvPool::recv_batch) → act →
+/// [`send_actions`](AsyncEnvPool::send_actions): a worker steps a lane
+/// the moment its action lands, regardless of what other lanes are
+/// doing, so slow lanes never stall the batch (the async half of
+/// EnvPool's design).  There is no global barrier anywhere.
+///
+/// Per-lane trajectories remain bit-identical to sequential execution —
+/// only the interleaving across lanes is nondeterministic.
+///
+/// The [`BatchedExecutor`] impl drives the same machinery in lockstep
+/// (send all, receive all) for drop-in comparisons with the sync
+/// executors; don't interleave trait calls with the native async API.
+pub struct AsyncEnvPool {
+    senders: Vec<Sender<WorkerMsg>>,
+    handles: Vec<JoinHandle<()>>,
+    ready: Arc<ReadyQueue>,
+    /// lane -> owning worker index.
+    owner: Vec<usize>,
+    /// True until the construction-time reset results are consumed.  The
+    /// first lockstep `reset_into` takes those instead of re-resetting,
+    /// so lane RNG streams stay aligned with `VecEnv` (whose first
+    /// `reset_into` is each env's *first* reset).
+    pristine: bool,
+    n: usize,
+    obs_dim: usize,
+    action_space: Space,
+}
+
+impl AsyncEnvPool {
+    /// Build an async pool; seeding and lane partitioning follow
+    /// [`EnvPool::new`] exactly.
+    pub fn new<E, F>(
+        n: usize,
+        base_seed: u64,
+        threads: usize,
+        mut factory: F,
+    ) -> AsyncEnvPool
+    where
+        E: Env + Send + 'static,
+        F: FnMut() -> E,
+    {
+        assert!(n > 0, "AsyncEnvPool needs at least one lane");
+        let mut envs: Vec<E> = (0..n).map(|_| factory()).collect();
+        for (i, env) in envs.iter_mut().enumerate() {
+            env.seed(base_seed + i as u64);
+        }
+        let obs_dim = envs[0].obs_dim();
+        let action_space = envs[0].action_space();
+
+        let threads = threads.clamp(1, n);
+        let chunk = n.div_ceil(threads);
+        let ready = Arc::new(ReadyQueue {
+            state: Mutex::new(QueueState {
+                q: VecDeque::new(),
+                poisoned: false,
+            }),
+            cv: Condvar::new(),
+        });
+
+        let mut senders = Vec::new();
+        let mut handles = Vec::new();
+        let mut owner = vec![0usize; n];
+        let mut lane_start = 0usize;
+        let mut remaining = envs;
+        while lane_start < n {
+            let take = chunk.min(n - lane_start);
+            let lane_envs: Vec<E> = remaining.drain(..take).collect();
+            let worker_idx = senders.len();
+            owner[lane_start..lane_start + take].fill(worker_idx);
+            let (tx, rx) = channel::<WorkerMsg>();
+            let ready_w = Arc::clone(&ready);
+            let handle = std::thread::Builder::new()
+                .name(format!("envpool-async-{lane_start}"))
+                .spawn(move || async_worker(rx, ready_w, lane_envs, lane_start, obs_dim))
+                .expect("spawn async pool worker");
+            senders.push(tx);
+            handles.push(handle);
+            lane_start += take;
+        }
+
+        AsyncEnvPool {
+            senders,
+            handles,
+            ready,
+            owner,
+            pristine: true,
+            n,
+            obs_dim,
+            action_space,
+        }
+    }
+
+    /// Number of worker threads actually running.
+    pub fn threads(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Submit actions for specific lanes.  Each named lane must be
+    /// "owed" to the pool: received via [`recv_batch`]
+    /// (AsyncEnvPool::recv_batch) (or initially ready) and not yet sent
+    /// an action.
+    pub fn send_actions(&mut self, actions: &[(usize, Action)]) {
+        for (lane, action) in actions {
+            assert!(*lane < self.n, "lane {lane} out of range");
+            let msg = WorkerMsg::Step {
+                lane: *lane,
+                action: action.clone(),
+            };
+            if self.senders[self.owner[*lane]].send(msg).is_err() {
+                panic!("AsyncEnvPool worker panicked before receiving an action");
+            }
+        }
+    }
+
+    /// Receive up to `max` ready lanes, blocking until at least one is
+    /// available.  Only lanes with submitted (or initial) work become
+    /// ready, so call this with outstanding lanes or it will block
+    /// forever.
+    pub fn recv_batch(&mut self, max: usize) -> AsyncBatch {
+        assert!(max > 0);
+        let mut batch = AsyncBatch {
+            lanes: Vec::new(),
+            obs: Vec::new(),
+            transitions: Vec::new(),
+        };
+        let mut state = self.ready.state.lock().unwrap();
+        while state.q.is_empty() {
+            assert!(
+                !state.poisoned,
+                "AsyncEnvPool worker panicked; no more lanes will become ready"
+            );
+            state = self.ready.cv.wait(state).unwrap();
+        }
+        let k = state.q.len().min(max);
+        batch.lanes.reserve(k);
+        batch.obs.reserve(k * self.obs_dim);
+        batch.transitions.reserve(k);
+        for _ in 0..k {
+            let r = state.q.pop_front().expect("non-empty by construction");
+            batch.lanes.push(r.lane);
+            batch.obs.extend_from_slice(&r.obs);
+            batch.transitions.push(r.transition);
+        }
+        drop(state);
+        self.pristine = false;
+        batch
+    }
+
+    /// Pop exactly `k` ready lanes (blocking), handing each to `sink`.
+    fn collect_exact(&self, k: usize, mut sink: impl FnMut(ReadyLane)) {
+        let mut state = self.ready.state.lock().unwrap();
+        for _ in 0..k {
+            while state.q.is_empty() {
+                assert!(
+                    !state.poisoned,
+                    "AsyncEnvPool worker panicked; no more lanes will become ready"
+                );
+                state = self.ready.cv.wait(state).unwrap();
+            }
+            sink(state.q.pop_front().expect("non-empty by construction"));
+        }
+    }
+}
+
+impl BatchedExecutor for AsyncEnvPool {
+    fn num_lanes(&self) -> usize {
+        self.n
+    }
+
+    fn obs_dim(&self) -> usize {
+        self.obs_dim
+    }
+
+    fn action_space(&self) -> Space {
+        self.action_space.clone()
+    }
+
+    fn reset_into(&mut self, obs: &mut [f32]) {
+        assert_eq!(obs.len(), self.n * self.obs_dim);
+        if !self.pristine {
+            // Re-reset every lane; the queue is empty between lockstep
+            // calls, so the next n entries are exactly the reset results.
+            for tx in &self.senders {
+                if tx.send(WorkerMsg::Reset).is_err() {
+                    panic!("AsyncEnvPool worker panicked before receiving a reset");
+                }
+            }
+        }
+        // A pristine pool consumes the construction-time reset instead:
+        // each env's first reset, matching sequential `VecEnv` exactly.
+        self.pristine = false;
+        let d = self.obs_dim;
+        self.collect_exact(self.n, |r| {
+            obs[r.lane * d..(r.lane + 1) * d].copy_from_slice(&r.obs);
+        });
+    }
+
+    fn step_into(
+        &mut self,
+        actions: &[Action],
+        obs: &mut [f32],
+        transitions: &mut [Transition],
+    ) {
+        assert_eq!(actions.len(), self.n);
+        assert_eq!(obs.len(), self.n * self.obs_dim);
+        assert_eq!(transitions.len(), self.n);
+        if self.pristine {
+            // Stepping without an explicit reset: the lanes were reset at
+            // construction; drain those entries so the collection below
+            // sees only step results.
+            self.collect_exact(self.n, |_| {});
+            self.pristine = false;
+        }
+        for (lane, action) in actions.iter().enumerate() {
+            let msg = WorkerMsg::Step {
+                lane,
+                action: action.clone(),
+            };
+            if self.senders[self.owner[lane]].send(msg).is_err() {
+                panic!("AsyncEnvPool worker panicked before receiving an action");
+            }
+        }
+        let d = self.obs_dim;
+        // Collect all n results; per-lane writes land in lane order
+        // regardless of arrival order, restoring batch determinism.
+        // Exactly-once per lane holds because each lane was sent exactly
+        // one action and workers publish one entry per action (pinned by
+        // the executor_pool integration tests).
+        self.collect_exact(self.n, |r| {
+            obs[r.lane * d..(r.lane + 1) * d].copy_from_slice(&r.obs);
+            transitions[r.lane] = r.transition;
+        });
+    }
+}
+
+impl Drop for AsyncEnvPool {
+    fn drop(&mut self) {
+        self.senders.clear(); // hang up: workers exit on recv error
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+/// Body of one async worker: step a lane per message, publish the
+/// result, auto-reset finished lanes.  Env panics poison the ready
+/// queue (waking blocked receivers) instead of leaving them asleep.
+fn async_worker<E: Env>(
+    rx: Receiver<WorkerMsg>,
+    ready: Arc<ReadyQueue>,
+    mut envs: Vec<E>,
+    lane_start: usize,
+    obs_dim: usize,
+) {
+    fn publish_reset<E: Env>(
+        envs: &mut [E],
+        ready: &ReadyQueue,
+        lane_start: usize,
+        obs_dim: usize,
+    ) {
+        for (k, env) in envs.iter_mut().enumerate() {
+            let mut obs = vec![0.0f32; obs_dim];
+            env.reset_into(&mut obs);
+            ready.push(ReadyLane {
+                lane: lane_start + k,
+                obs,
+                transition: Transition::default(),
+            });
+        }
+    }
+
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        publish_reset(&mut envs, &ready, lane_start, obs_dim);
+        while let Ok(msg) = rx.recv() {
+            match msg {
+                WorkerMsg::Reset => {
+                    publish_reset(&mut envs, &ready, lane_start, obs_dim)
+                }
+                WorkerMsg::Step { lane, action } => {
+                    let k = lane - lane_start;
+                    let mut obs = vec![0.0f32; obs_dim];
+                    let t = envs[k].step_into(&action, &mut obs);
+                    if t.done || t.truncated {
+                        envs[k].reset_into(&mut obs);
+                    }
+                    ready.push(ReadyLane {
+                        lane,
+                        obs,
+                        transition: t,
+                    });
+                }
+            }
+        }
+    }));
+    if result.is_err() {
+        ready.poison();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::vec_env::VecEnv;
+    use crate::envs::CartPole;
+    use crate::wrappers::TimeLimit;
+
+    fn cartpole_factory() -> impl Fn() -> TimeLimit<CartPole> {
+        || TimeLimit::new(CartPole::new(), 40)
+    }
+
+    /// Drive any executor with a fixed action pattern, returning the
+    /// concatenated (obs, transition) stream.
+    fn drive(
+        exec: &mut dyn BatchedExecutor,
+        steps: usize,
+    ) -> (Vec<f32>, Vec<Transition>) {
+        let n = exec.num_lanes();
+        let d = exec.obs_dim();
+        let mut obs = vec![0.0f32; n * d];
+        let mut tr = vec![Transition::default(); n];
+        let mut obs_trace = Vec::new();
+        let mut tr_trace = Vec::new();
+        exec.reset_into(&mut obs);
+        obs_trace.extend_from_slice(&obs);
+        for step in 0..steps {
+            let actions: Vec<Action> =
+                (0..n).map(|i| Action::Discrete((step + i) % 2)).collect();
+            exec.step_into(&actions, &mut obs, &mut tr);
+            obs_trace.extend_from_slice(&obs);
+            tr_trace.extend_from_slice(&tr);
+        }
+        (obs_trace, tr_trace)
+    }
+
+    #[test]
+    fn sync_pool_matches_vec_env_bitwise() {
+        let mut vec_env = VecEnv::new(5, 900, cartpole_factory());
+        let mut pool = EnvPool::new(5, 900, 2, cartpole_factory());
+        let (obs_a, tr_a) = drive(&mut vec_env, 150);
+        let (obs_b, tr_b) = drive(&mut pool, 150);
+        assert_eq!(tr_a, tr_b);
+        assert_eq!(obs_a, obs_b);
+    }
+
+    #[test]
+    fn sync_pool_is_thread_count_invariant() {
+        let traces: Vec<_> = [1usize, 3, 5]
+            .iter()
+            .map(|&threads| {
+                let mut pool = EnvPool::new(4, 31, threads, cartpole_factory());
+                drive(&mut pool, 120)
+            })
+            .collect();
+        assert_eq!(traces[0], traces[1]);
+        assert_eq!(traces[0], traces[2]);
+    }
+
+    #[test]
+    fn async_pool_lockstep_matches_vec_env_bitwise() {
+        let mut vec_env = VecEnv::new(4, 77, cartpole_factory());
+        let mut pool = AsyncEnvPool::new(4, 77, 2, cartpole_factory());
+        let (obs_a, tr_a) = drive(&mut vec_env, 100);
+        let (obs_b, tr_b) = drive(&mut pool, 100);
+        assert_eq!(tr_a, tr_b);
+        assert_eq!(obs_a, obs_b);
+    }
+
+    #[test]
+    fn async_native_api_initial_lanes_are_all_ready() {
+        let n = 6;
+        let mut pool = AsyncEnvPool::new(n, 5, 3, cartpole_factory());
+        let mut seen = vec![false; n];
+        let mut got = 0;
+        while got < n {
+            let batch = pool.recv_batch(n);
+            for (j, &lane) in batch.lanes.iter().enumerate() {
+                assert!(!seen[lane], "lane {lane} ready twice before any action");
+                seen[lane] = true;
+                assert_eq!(batch.obs[j * 4..(j + 1) * 4].len(), 4);
+                assert!(!batch.transitions[j].done);
+            }
+            got += batch.lanes.len();
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn async_native_api_round_trips_actions() {
+        let n = 4;
+        let mut pool = AsyncEnvPool::new(n, 11, 2, cartpole_factory());
+        let mut sends_per_lane = vec![0u32; n];
+        // Keep every received lane busy: each ready state gets an action.
+        for _ in 0..200 {
+            let batch = pool.recv_batch(n);
+            let sends: Vec<(usize, Action)> = batch
+                .lanes
+                .iter()
+                .map(|&lane| {
+                    sends_per_lane[lane] += 1;
+                    (lane, Action::Discrete(lane % 2))
+                })
+                .collect();
+            pool.send_actions(&sends);
+        }
+        for (lane, &s) in sends_per_lane.iter().enumerate() {
+            assert!(s > 10, "lane {lane} starved: {s} actions submitted");
+        }
+    }
+
+    #[test]
+    fn pools_shut_down_cleanly_on_drop() {
+        let pool = EnvPool::new(3, 0, 2, cartpole_factory());
+        drop(pool);
+        let pool = AsyncEnvPool::new(3, 0, 2, cartpole_factory());
+        drop(pool);
+    }
+
+    #[test]
+    fn random_rollout_counts_lane_steps_and_stays_reusable() {
+        let mut pool = EnvPool::new(4, 9, 2, cartpole_factory());
+        assert_eq!(pool.random_rollout(500), 2_000);
+        // The pool survives the bulk command and still serves batches.
+        assert_eq!(pool.random_rollout(10), 40);
+        let mut obs = vec![0.0f32; 4 * 4];
+        BatchedExecutor::reset_into(&mut pool, &mut obs);
+        assert!(obs.iter().all(|v| v.is_finite()));
+    }
+
+    /// Env that panics on the `boom`-th step — exercises worker-death
+    /// handling.
+    struct Grenade {
+        fuse: u32,
+        boom: u32,
+    }
+
+    impl Env for Grenade {
+        fn id(&self) -> String {
+            "Grenade-v0".into()
+        }
+        fn observation_space(&self) -> Space {
+            Space::box1(vec![0.0], vec![1.0])
+        }
+        fn action_space(&self) -> Space {
+            Space::Discrete { n: 2 }
+        }
+        fn seed(&mut self, _seed: u64) {}
+        fn reset_into(&mut self, obs: &mut [f32]) {
+            obs[0] = 0.0;
+        }
+        fn step_into(&mut self, _a: &Action, obs: &mut [f32]) -> Transition {
+            self.fuse += 1;
+            assert!(self.fuse < self.boom, "grenade went off");
+            obs[0] = self.fuse as f32;
+            Transition::live(0.0)
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "EnvPool worker panicked")]
+    fn sync_pool_surfaces_env_panics_instead_of_hanging() {
+        let mut pool = EnvPool::new(4, 0, 2, || Grenade { fuse: 0, boom: 3 });
+        let mut obs = vec![0.0f32; 4];
+        let mut tr = vec![Transition::default(); 4];
+        BatchedExecutor::reset_into(&mut pool, &mut obs);
+        for _ in 0..10 {
+            let actions = vec![Action::Discrete(0); 4];
+            BatchedExecutor::step_into(&mut pool, &actions, &mut obs, &mut tr);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "AsyncEnvPool worker panicked")]
+    fn async_pool_surfaces_env_panics_instead_of_hanging() {
+        let mut pool = AsyncEnvPool::new(4, 0, 2, || Grenade { fuse: 0, boom: 3 });
+        let mut obs = vec![0.0f32; 4];
+        let mut tr = vec![Transition::default(); 4];
+        BatchedExecutor::reset_into(&mut pool, &mut obs);
+        for _ in 0..10 {
+            let actions = vec![Action::Discrete(0); 4];
+            BatchedExecutor::step_into(&mut pool, &actions, &mut obs, &mut tr);
+        }
+    }
+
+    #[test]
+    fn pool_works_over_dyn_envs() {
+        let mut pool = EnvPool::new(3, 1, 2, || {
+            crate::coordinator::registry::make("CartPole-v1").unwrap()
+        });
+        let mut obs = vec![0.0f32; 3 * 4];
+        let mut tr = vec![Transition::default(); 3];
+        BatchedExecutor::reset_into(&mut pool, &mut obs);
+        for _ in 0..10 {
+            let actions = vec![Action::Discrete(0); 3];
+            BatchedExecutor::step_into(&mut pool, &actions, &mut obs, &mut tr);
+        }
+        assert!(obs.iter().all(|v| v.is_finite()));
+    }
+}

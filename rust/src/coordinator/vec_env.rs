@@ -8,6 +8,7 @@
 //! follows the standard vector-env convention: when a lane finishes, the
 //! returned observation is the *first observation of the next episode*.
 
+use crate::coordinator::pool::{BatchedExecutor, EnvPool};
 use crate::core::env::{Env, Transition};
 use crate::core::spaces::{Action, Space};
 
@@ -80,10 +81,46 @@ impl<E: Env> VecEnv<E> {
     }
 }
 
+// The sequential reference implementation of the executor interface:
+// `EnvPool` (sync) must reproduce these trajectories bit-for-bit.
+impl<E: Env> BatchedExecutor for VecEnv<E> {
+    fn num_lanes(&self) -> usize {
+        self.len()
+    }
+
+    fn obs_dim(&self) -> usize {
+        VecEnv::obs_dim(self)
+    }
+
+    fn action_space(&self) -> Space {
+        VecEnv::action_space(self)
+    }
+
+    fn reset_into(&mut self, obs: &mut [f32]) {
+        VecEnv::reset_into(self, obs)
+    }
+
+    fn step_into(
+        &mut self,
+        actions: &[Action],
+        obs: &mut [f32],
+        transitions: &mut [Transition],
+    ) {
+        VecEnv::step_into(self, actions, obs, transitions)
+    }
+}
+
 /// Step a workload of `total_steps` random-action steps across `threads`
-/// worker threads, each owning its own environment instance (the
-/// throughput mode behind the Fig.-1 aggregate numbers).  Returns total
-/// steps actually executed.
+/// persistent workers, one lane per worker (the throughput mode behind
+/// the Fig.-1 aggregate numbers).  Returns total steps actually executed.
+///
+/// Since the executor refactor this runs on [`EnvPool`]'s worker-side
+/// bulk rollout ([`EnvPool::random_rollout`]): workers are persistent,
+/// but the loop itself is free-running — one barrier for the whole
+/// workload, not one per step — so the per-step cost matches the
+/// throwaway-thread implementation this replaced while the pool stays
+/// reusable.  Lane seeding (`base_seed + lane`) and the per-lane action
+/// streams match the old behaviour exactly.
 pub fn parallel_random_steps<E, F>(
     threads: usize,
     total_steps: u64,
@@ -91,37 +128,13 @@ pub fn parallel_random_steps<E, F>(
     factory: F,
 ) -> u64
 where
-    E: Env,
-    F: Fn() -> E + Sync,
+    E: Env + Send + 'static,
+    F: FnMut() -> E,
 {
     assert!(threads > 0);
-    let per_thread = total_steps / threads as u64;
-    std::thread::scope(|scope| {
-        let mut handles = Vec::with_capacity(threads);
-        for tid in 0..threads {
-            let factory = &factory;
-            handles.push(scope.spawn(move || {
-                let mut env = factory();
-                env.seed(base_seed + tid as u64);
-                let mut rng =
-                    crate::core::rng::Pcg32::new(base_seed ^ 0xabcd, tid as u64 + 1);
-                let space = env.action_space();
-                let mut obs = vec![0.0f32; env.obs_dim()];
-                env.reset_into(&mut obs);
-                let mut done_steps = 0u64;
-                while done_steps < per_thread {
-                    let a = space.sample(&mut rng);
-                    let t = env.step_into(&a, &mut obs);
-                    done_steps += 1;
-                    if t.done || t.truncated {
-                        env.reset_into(&mut obs);
-                    }
-                }
-                done_steps
-            }));
-        }
-        handles.into_iter().map(|h| h.join().unwrap()).sum()
-    })
+    let per_lane = total_steps / threads as u64;
+    let mut pool = EnvPool::new(threads, base_seed, threads, factory);
+    pool.random_rollout(per_lane)
 }
 
 #[cfg(test)]

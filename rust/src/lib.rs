@@ -20,6 +20,20 @@
 //! artifacts through the PJRT C API (`xla` crate) and the whole training /
 //! benchmarking hot path is Rust.
 //!
+//! ## The executor layer
+//!
+//! Batched environment execution goes through one interface,
+//! [`coordinator::pool::BatchedExecutor`], with three interchangeable
+//! implementations: sequential [`coordinator::vec_env::VecEnv`] (the
+//! bit-exact reference), [`coordinator::pool::EnvPool`]
+//! (persistent-worker threads, barrier per batch, trajectories identical
+//! to `VecEnv` for any thread count) and
+//! [`coordinator::pool::AsyncEnvPool`] (workers run ahead over a
+//! ready-queue, EnvPool-style `send_actions`/`recv_batch`).  Workloads
+//! select an executor via [`coordinator::config::ExecutorSettings`] or
+//! `cairl run --executor pool --lanes 1024`; see README §"Choosing an
+//! executor".
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -41,6 +55,16 @@
 //! # let _ = env;
 //! ```
 
+// Style lints this codebase consciously opts out of: environments expose
+// `new()` constructors without `Default` (Gym idiom), physics constants
+// keep their published precision, and index-heavy kernel/raster math
+// reads better as ranges.
+#![allow(clippy::new_without_default)]
+#![allow(clippy::excessive_precision)]
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::manual_range_contains)]
+#![allow(clippy::too_many_arguments)]
+
 pub mod agents;
 pub mod coordinator;
 pub mod core;
@@ -60,7 +84,9 @@ pub use crate::coordinator::registry::{list_envs, make};
 
 /// Everything a typical experiment needs.
 pub mod prelude {
+    pub use crate::coordinator::pool::{AsyncEnvPool, BatchedExecutor, EnvPool};
     pub use crate::coordinator::registry::{list_envs, make};
+    pub use crate::coordinator::vec_env::VecEnv;
     pub use crate::core::env::{DynEnv, Env, Step};
     pub use crate::core::rng::Pcg32;
     pub use crate::core::spaces::{Action, Space};

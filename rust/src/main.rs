@@ -10,7 +10,10 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use cairl::agents::dqn::{DqnAgent, DqnConfig};
 use cairl::coordinator::config::{DqnSettings, ExperimentConfig};
-use cairl::coordinator::experiment::{run_stepping_workload, RenderMode};
+use cairl::coordinator::experiment::{
+    build_executor, run_batched_workload, run_stepping_workload, ExecutorKind,
+    RenderMode,
+};
 use cairl::core::env::Env;
 use cairl::core::rng::Pcg32;
 use cairl::energy::EnergyTracker;
@@ -75,7 +78,12 @@ USAGE: cairl <command> [flags]
 COMMANDS:
   list-envs                       list every registered environment id
   run        --env ID --steps N --seed S [--render] [--ascii]
-                                  random-action stepping workload + throughput
+             [--executor vec|pool|pool-async --lanes N --threads T]
+             [--config FILE.json]
+                                  random-action stepping workload + throughput;
+                                  lanes > 1 runs the batched executor layer;
+                                  FILE.json's \"executor\" block sets the
+                                  defaults for --executor/--lanes/--threads
   train      --env NAME [--seed S] [--max-steps N] [--config FILE.json]
                                   train DQN via the PJRT artifacts
                                   (NAME: cartpole|mountaincar|acrobot|pendulum|multitask)
@@ -101,27 +109,70 @@ fn main() -> Result<()> {
             }
         }
         "run" => {
-            let env_id = args.str("env", "CartPole-v1");
-            let steps = args.u64("steps", 100_000)?;
-            let seed = args.u64("seed", 0)?;
-            let mut e = make(&env_id).map_err(|e| anyhow!("{e}"))?;
-            let mode = if args.flag("render") {
-                RenderMode::Software
-            } else {
-                RenderMode::Console
+            // --config seeds the defaults (env, seed, and the executor
+            // block — the ExecutorSettings consumer); explicit flags win.
+            let file_cfg = match args.opt("config") {
+                Some(path) => ExperimentConfig::load(std::path::Path::new(path))
+                    .map_err(|e| anyhow!("{e}"))?,
+                None => ExperimentConfig::default(),
             };
-            let r = run_stepping_workload(&mut e, steps, seed, mode);
-            println!(
-                "{env_id}: {} steps, {} episodes, {:.3}s, {:.0} steps/s",
-                r.steps,
-                r.episodes,
-                r.elapsed.as_secs_f64(),
-                r.throughput
-            );
-            if args.flag("ascii") {
-                let mut fb = Framebuffer::standard();
-                e.render(&mut fb);
-                println!("{}", fb.to_ascii());
+            let env_id = args.str("env", &file_cfg.env);
+            let steps = args.u64("steps", 100_000)?;
+            let seed = args.u64("seed", file_cfg.seed)?;
+            let lanes =
+                args.u64("lanes", file_cfg.executor.lanes as u64)?.max(1) as usize;
+            let executor = args.str("executor", &file_cfg.executor.kind);
+            if lanes > 1 || executor != "vec" {
+                // Batched path: flip executors without touching the workload.
+                if args.flag("render") || args.flag("ascii") {
+                    eprintln!(
+                        "note: --render/--ascii apply to the single-env path and \
+                         are ignored by the batched executor"
+                    );
+                }
+                let kind = ExecutorKind::parse(&executor).ok_or_else(|| {
+                    anyhow!("unknown executor {executor:?} (vec | pool | pool-async)")
+                })?;
+                let threads =
+                    match args.u64("threads", file_cfg.executor.threads as u64)? as usize
+                    {
+                        0 => std::thread::available_parallelism()
+                            .map(|n| n.get())
+                            .unwrap_or(1),
+                        t => t,
+                    };
+                let mut exec = build_executor(&env_id, kind, lanes, threads, seed)
+                    .map_err(|e| anyhow!("{e}"))?;
+                let steps_per_lane = (steps / lanes as u64).max(1);
+                let r = run_batched_workload(exec.as_mut(), steps_per_lane, seed);
+                println!(
+                    "{env_id} [{} x {lanes} lanes]: {} lane-steps, {} episodes, {:.3}s, {:.0} steps/s",
+                    kind.label(),
+                    r.steps,
+                    r.episodes,
+                    r.elapsed.as_secs_f64(),
+                    r.throughput
+                );
+            } else {
+                let mut e = make(&env_id).map_err(|e| anyhow!("{e}"))?;
+                let mode = if args.flag("render") {
+                    RenderMode::Software
+                } else {
+                    RenderMode::Console
+                };
+                let r = run_stepping_workload(&mut e, steps, seed, mode);
+                println!(
+                    "{env_id}: {} steps, {} episodes, {:.3}s, {:.0} steps/s",
+                    r.steps,
+                    r.episodes,
+                    r.elapsed.as_secs_f64(),
+                    r.throughput
+                );
+                if args.flag("ascii") {
+                    let mut fb = Framebuffer::standard();
+                    e.render(&mut fb);
+                    println!("{}", fb.to_ascii());
+                }
             }
         }
         "train" => {

@@ -54,7 +54,8 @@ pub struct DqnExecutor {
 
 impl DqnExecutor {
     /// Initialise with He-uniform weights (same scheme as
-    /// `model.init_params`) from a seed.
+    /// `model.init_params`) from a seed, reading the network spec from
+    /// the runtime's artifact manifest.
     pub fn new(rt: &Runtime, env_name: &str, seed: u64) -> Result<DqnExecutor> {
         let spec = rt
             .manifest()
@@ -66,13 +67,40 @@ impl DqnExecutor {
             .clone();
         let hidden = rt.manifest().hyperparameters.hidden;
         let batch_size = rt.manifest().hyperparameters.batch;
+        Ok(Self::from_spec(
+            env_name,
+            spec.obs_dim,
+            spec.n_actions,
+            hidden,
+            batch_size,
+            seed,
+        ))
+    }
+
+    /// Initialise from explicit network dimensions, without a [`Runtime`]
+    /// or artifacts.  The native host paths ([`Self::q_values_native`],
+    /// [`Self::act_greedy_batch_native`]) are fully functional on such an
+    /// executor; the PJRT paths additionally need a runtime whose
+    /// manifest carries matching `dqn_*_{env_name}` artifacts.  Batched
+    /// greedy evaluation over a
+    /// [`BatchedExecutor`](crate::coordinator::pool::BatchedExecutor)
+    /// builds on this (see
+    /// [`crate::agents::dqn::evaluate_greedy_batched`]).
+    pub fn from_spec(
+        env_name: &str,
+        obs_dim: usize,
+        n_actions: usize,
+        hidden: usize,
+        batch_size: usize,
+        seed: u64,
+    ) -> DqnExecutor {
         let shapes: Vec<Vec<usize>> = vec![
-            vec![spec.obs_dim, hidden],
+            vec![obs_dim, hidden],
             vec![hidden],
             vec![hidden, hidden],
             vec![hidden],
-            vec![hidden, spec.n_actions],
-            vec![spec.n_actions],
+            vec![hidden, n_actions],
+            vec![n_actions],
         ];
         let mut rng = Pcg32::new(seed, 0x0dd4b2b0b2b7e0d5);
         let tensors = shapes
@@ -91,10 +119,10 @@ impl DqnExecutor {
         let target = params.clone();
         let adam_m = params.zeros_like();
         let adam_v = params.zeros_like();
-        Ok(DqnExecutor {
+        DqnExecutor {
             env_name: env_name.to_string(),
-            obs_dim: spec.obs_dim,
-            n_actions: spec.n_actions,
+            obs_dim,
+            n_actions,
             batch_size,
             params,
             target,
@@ -102,7 +130,7 @@ impl DqnExecutor {
             adam_v,
             t: 0.0,
             steps: 0,
-        })
+        }
     }
 
     /// Replace the online parameters (e.g. with the manifest's seeded
@@ -134,6 +162,45 @@ impl DqnExecutor {
             .collect()
     }
 
+    /// The native forward pass into caller-owned buffers (`h1`/`h2` are
+    /// hidden-layer scratch, reused across rows by the batched paths so
+    /// the hot loop is allocation-free).
+    fn forward_into(&self, obs: &[f32], h1: &mut [f32], h2: &mut [f32], q: &mut [f32]) {
+        assert_eq!(obs.len(), self.obs_dim);
+        let p = &self.params.tensors;
+        let hidden = self.params.shapes[0][1];
+        let elu = |x: f32| if x > 0.0 { x } else { x.exp() - 1.0 };
+        // h1 = elu(obs @ w1 + b1)
+        for (j, h) in h1.iter_mut().enumerate() {
+            let mut acc = p[1][j];
+            for (i, &o) in obs.iter().enumerate() {
+                acc += o * p[0][i * hidden + j];
+            }
+            *h = elu(acc);
+        }
+        // h2 = elu(h1 @ w2 + b2)
+        for (j, h) in h2.iter_mut().enumerate() {
+            let mut acc = p[3][j];
+            for (i, &x) in h1.iter().enumerate() {
+                acc += x * p[2][i * hidden + j];
+            }
+            *h = elu(acc);
+        }
+        // q = h2 @ w3 + b3
+        for (j, qv) in q.iter_mut().enumerate() {
+            let mut acc = p[5][j];
+            for (i, &x) in h2.iter().enumerate() {
+                acc += x * p[4][i * self.n_actions + j];
+            }
+            *qv = acc;
+        }
+    }
+
+    /// Hidden width (scratch-buffer size for the native forward).
+    fn hidden_dim(&self) -> usize {
+        self.params.shapes[0][1]
+    }
+
     /// Q-values for a single observation computed natively on the host.
     ///
     /// §Perf fast path: the online parameters already live host-side
@@ -144,48 +211,54 @@ impl DqnExecutor {
     /// `runtime_integration::native_act_matches_artifact` pins the two
     /// together to 1e-4.
     pub fn q_values_native(&self, obs: &[f32]) -> Vec<f32> {
-        assert_eq!(obs.len(), self.obs_dim);
-        let p = &self.params.tensors;
-        let hidden = self.params.shapes[0][1];
-        let elu = |x: f32| if x > 0.0 { x } else { x.exp() - 1.0 };
-        // h1 = elu(obs @ w1 + b1)
+        let hidden = self.hidden_dim();
         let mut h1 = vec![0.0f32; hidden];
-        for (j, h) in h1.iter_mut().enumerate() {
-            let mut acc = p[1][j];
-            for (i, &o) in obs.iter().enumerate() {
-                acc += o * p[0][i * hidden + j];
-            }
-            *h = elu(acc);
-        }
-        // h2 = elu(h1 @ w2 + b2)
         let mut h2 = vec![0.0f32; hidden];
-        for (j, h) in h2.iter_mut().enumerate() {
-            let mut acc = p[3][j];
-            for (i, &x) in h1.iter().enumerate() {
-                acc += x * p[2][i * hidden + j];
-            }
-            *h = elu(acc);
-        }
-        // q = h2 @ w3 + b3
         let mut q = vec![0.0f32; self.n_actions];
-        for (j, qv) in q.iter_mut().enumerate() {
-            let mut acc = p[5][j];
-            for (i, &x) in h2.iter().enumerate() {
-                acc += x * p[4][i * self.n_actions + j];
-            }
-            *qv = acc;
-        }
+        self.forward_into(obs, &mut h1, &mut h2, &mut q);
         q
     }
 
     /// Greedy action via the native forward (§Perf fast path).
     pub fn act_greedy_native(&self, obs: &[f32]) -> usize {
-        let q = self.q_values_native(obs);
-        q.iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(i, _)| i)
-            .unwrap_or(0)
+        argmax(&self.q_values_native(obs))
+    }
+
+    /// Native forward over a `[k * obs_dim]` observation batch, writing
+    /// Q-values into a `[k * n_actions]` buffer — the shape a
+    /// [`BatchedExecutor`](crate::coordinator::pool::BatchedExecutor)
+    /// hands back, consumed without reshuffling.  Scratch is allocated
+    /// once per call, not per row.
+    pub fn q_values_batch_native(&self, obs_batch: &[f32], q_out: &mut [f32]) {
+        assert_eq!(obs_batch.len() % self.obs_dim, 0, "ragged obs batch");
+        assert_eq!(
+            q_out.len() / self.n_actions,
+            obs_batch.len() / self.obs_dim,
+            "q buffer rows must match obs rows"
+        );
+        let hidden = self.hidden_dim();
+        let mut h1 = vec![0.0f32; hidden];
+        let mut h2 = vec![0.0f32; hidden];
+        for (obs, q) in obs_batch
+            .chunks_exact(self.obs_dim)
+            .zip(q_out.chunks_exact_mut(self.n_actions))
+        {
+            self.forward_into(obs, &mut h1, &mut h2, q);
+        }
+    }
+
+    /// Greedy actions for a `[k * obs_dim]` observation batch
+    /// (allocation-free per row; this sits inside batched rollout loops).
+    pub fn act_greedy_batch_native(&self, obs_batch: &[f32], actions: &mut [usize]) {
+        assert_eq!(obs_batch.len(), actions.len() * self.obs_dim);
+        let hidden = self.hidden_dim();
+        let mut h1 = vec![0.0f32; hidden];
+        let mut h2 = vec![0.0f32; hidden];
+        let mut q = vec![0.0f32; self.n_actions];
+        for (obs, a) in obs_batch.chunks_exact(self.obs_dim).zip(actions.iter_mut()) {
+            self.forward_into(obs, &mut h1, &mut h2, &mut q);
+            *a = argmax(&q);
+        }
     }
 
     /// Q-values for a single observation through `dqn_act_<env>`.
@@ -244,5 +317,61 @@ impl DqnExecutor {
         self.t = out[18][0];
         self.steps += 1;
         Ok(out[19][0])
+    }
+}
+
+/// Index of the largest Q-value (ties resolve to the last index, the
+/// same rule the PJRT act path used; inputs are NaN-free by contract).
+fn argmax(q: &[f32]) -> usize {
+    q.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Everything here runs without a PJRT runtime: `from_spec` plus the
+    // native host paths.  The artifact paths are covered by
+    // rust/tests/runtime_integration.rs (gated on artifact presence).
+
+    #[test]
+    fn from_spec_builds_without_runtime() {
+        let exec = DqnExecutor::from_spec("cartpole", 4, 2, 32, 32, 0);
+        assert_eq!(exec.obs_dim, 4);
+        assert_eq!(exec.n_actions, 2);
+        assert_eq!(exec.batch_size, 32);
+        let q = exec.q_values_native(&[0.01, -0.02, 0.03, 0.0]);
+        assert_eq!(q.len(), 2);
+        assert!(q.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn from_spec_is_seed_deterministic() {
+        let a = DqnExecutor::from_spec("cartpole", 4, 2, 32, 32, 9);
+        let b = DqnExecutor::from_spec("cartpole", 4, 2, 32, 32, 9);
+        assert_eq!(a.params(), b.params());
+        let c = DqnExecutor::from_spec("cartpole", 4, 2, 32, 32, 10);
+        assert_ne!(a.params(), c.params());
+    }
+
+    #[test]
+    fn batched_native_forward_matches_single() {
+        let exec = DqnExecutor::from_spec("cartpole", 4, 2, 32, 32, 3);
+        let rows = 5;
+        let obs: Vec<f32> =
+            (0..rows * 4).map(|i| (i as f32 * 0.13).sin() * 0.5).collect();
+        let mut q = vec![0.0f32; rows * 2];
+        exec.q_values_batch_native(&obs, &mut q);
+        let mut acts = vec![0usize; rows];
+        exec.act_greedy_batch_native(&obs, &mut acts);
+        for r in 0..rows {
+            let row_obs = &obs[r * 4..(r + 1) * 4];
+            assert_eq!(&q[r * 2..(r + 1) * 2], &exec.q_values_native(row_obs)[..]);
+            assert_eq!(acts[r], exec.act_greedy_native(row_obs));
+        }
     }
 }

@@ -1,0 +1,122 @@
+//! Minimal offline shim of the `anyhow` crate.
+//!
+//! The launcher (`rust/src/main.rs`) only needs a message-carrying error
+//! type, the `anyhow!` / `bail!` macros, `Context` on `Result`, and a
+//! `Result` alias whose `Debug` output is the human-readable message
+//! (what `fn main() -> Result<()>` prints on exit).  This shim provides
+//! exactly that surface with no dependencies; swap the path dependency
+//! for the real crate when a registry is available — call sites are
+//! source-compatible.
+
+use std::fmt;
+
+/// A message-carrying error.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build from any displayable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+}
+
+// `fn main() -> Result<()>` prints errors with `{:?}`; match anyhow by
+// showing the plain message rather than a struct dump.
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow`-shaped result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Attach context to an error, anyhow-style: `"context: cause"`.
+pub trait Context<T, E> {
+    /// Wrap the error with a fixed context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+
+    /// Wrap the error with a lazily built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{context}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<u64> {
+        s.parse::<u64>().with_context(|| format!("bad number {s:?}"))
+    }
+
+    #[test]
+    fn context_prefixes_the_cause() {
+        let err = parse("xyz").unwrap_err();
+        let text = format!("{err}");
+        assert!(text.starts_with("bad number \"xyz\": "), "{text}");
+        assert_eq!(format!("{err:?}"), text, "Debug matches Display");
+    }
+
+    #[test]
+    fn ok_passes_through() {
+        assert_eq!(parse("17").unwrap(), 17);
+    }
+
+    #[test]
+    fn bail_and_anyhow_format() {
+        fn f(flag: bool) -> Result<u32> {
+            if flag {
+                bail!("flag was {flag}");
+            }
+            Err(anyhow!("plain {}", "message"))
+        }
+        assert_eq!(format!("{}", f(true).unwrap_err()), "flag was true");
+        assert_eq!(format!("{}", f(false).unwrap_err()), "plain message");
+    }
+
+    #[test]
+    fn std_errors_convert() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(format!("{e}").contains("gone"));
+    }
+}

@@ -1,0 +1,312 @@
+//! Offline stub of the `xla` (xla-rs) PJRT bindings.
+//!
+//! The toolkit's runtime layer (`cairl::runtime`) is written against the
+//! xla-rs API.  This image carries no libxla / PJRT plugin, so this crate
+//! provides the same surface with two behaviours:
+//!
+//! * **Host-side [`Literal`]s are fully functional** — construction,
+//!   reshape, readback.  Everything that doesn't need a device works and
+//!   is unit-tested.
+//! * **Device entry points fail honestly** — [`PjRtClient::cpu`] returns
+//!   an error, which makes every executable/buffer type uninhabited.
+//!   Callers (see `cairl::runtime::pjrt::Runtime::new`) surface that
+//!   error and the toolkit's artifact-dependent paths skip gracefully.
+//!
+//! To run the real artifacts, point the `xla` path dependency in
+//! `rust/Cargo.toml` at the actual bindings; no `cairl` source changes
+//! are needed — the signatures below match xla-rs.
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::path::Path;
+
+/// Stub error: a message, `Display`-compatible with xla-rs errors.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT is unavailable in this build (offline `xla` stub; \
+         point the xla path dependency at the real bindings to enable \
+         artifact execution)"
+    ))
+}
+
+/// Element types a [`Literal`] can hold.  Mirrors xla-rs's sealed
+/// element-type trait for the two dtypes the toolkit marshals.
+pub trait NativeType: Copy {
+    fn wrap(data: &[Self]) -> Buf;
+    fn unwrap(buf: &Buf) -> Option<Vec<Self>>;
+}
+
+/// Typed host buffer backing a [`Literal`].
+#[derive(Clone, Debug)]
+pub enum Buf {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Buf {
+    fn len(&self) -> usize {
+        match self {
+            Buf::F32(v) => v.len(),
+            Buf::I32(v) => v.len(),
+        }
+    }
+}
+
+impl NativeType for f32 {
+    fn wrap(data: &[Self]) -> Buf {
+        Buf::F32(data.to_vec())
+    }
+    fn unwrap(buf: &Buf) -> Option<Vec<Self>> {
+        match buf {
+            Buf::F32(v) => Some(v.clone()),
+            Buf::I32(_) => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: &[Self]) -> Buf {
+        Buf::I32(data.to_vec())
+    }
+    fn unwrap(buf: &Buf) -> Option<Vec<Self>> {
+        match buf {
+            Buf::I32(v) => Some(v.clone()),
+            Buf::F32(_) => None,
+        }
+    }
+}
+
+/// A host-side tensor literal (fully functional in the stub).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    buf: Buf,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// 1-D literal from a slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal {
+            dims: vec![data.len() as i64],
+            buf: T::wrap(data),
+        }
+    }
+
+    /// Rank-0 literal.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal {
+            buf: T::wrap(&[v]),
+            dims: Vec::new(),
+        }
+    }
+
+    /// Total element count.
+    pub fn element_count(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Same data, new logical shape (element counts must agree).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want as usize != self.buf.len() {
+            return Err(Error(format!(
+                "reshape: cannot view {} elements as {dims:?}",
+                self.buf.len()
+            )));
+        }
+        Ok(Literal {
+            buf: self.buf.clone(),
+            dims: dims.to_vec(),
+        })
+    }
+
+    /// Read the elements back (row-major), erroring on a dtype mismatch.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.buf)
+            .ok_or_else(|| Error("to_vec: literal holds a different dtype".into()))
+    }
+
+    /// Decompose a tuple literal.  The stub never produces tuples (they
+    /// only come back from device execution), so this always errors.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error("to_tuple: not a tuple literal".into()))
+    }
+
+    /// Logical dimensions.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Uninhabited marker: device objects cannot exist in the stub, so every
+/// method on them is statically unreachable (`match void {}`).
+#[derive(Clone, Copy, Debug)]
+pub enum Void {}
+
+/// A PJRT device handle (uninhabited in the stub).
+#[derive(Debug)]
+pub struct PjRtDevice {
+    #[allow(dead_code)] // uninhabitedness marker; only matched in richer types
+    void: Void,
+}
+
+/// A PJRT client (uninhabited in the stub — [`PjRtClient::cpu`] errors).
+#[derive(Debug)]
+pub struct PjRtClient {
+    void: Void,
+}
+
+impl PjRtClient {
+    /// Create a CPU PJRT client.  Always fails in the stub.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    /// Compile a computation for this client.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        match self.void {}
+    }
+
+    /// Upload a host tensor to the device.
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<&PjRtDevice>,
+    ) -> Result<PjRtBuffer> {
+        match self.void {}
+    }
+}
+
+/// A device-resident buffer (uninhabited in the stub).
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    void: Void,
+}
+
+impl PjRtBuffer {
+    /// Copy the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        match self.void {}
+    }
+}
+
+/// A compiled executable (uninhabited in the stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    void: Void,
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with literal operands; one result vector per device.
+    pub fn execute<L: Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        match self.void {}
+    }
+
+    /// Execute with device-buffer operands.
+    pub fn execute_b<B: Borrow<PjRtBuffer>>(
+        &self,
+        _args: &[B],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        match self.void {}
+    }
+}
+
+/// Parsed HLO module (the stub carries no parser — loading errors).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    void: Void,
+}
+
+impl HloModuleProto {
+    /// Parse HLO text from a file.  Always fails in the stub (there is
+    /// no XLA parser to call), but client construction fails first in
+    /// every toolkit code path.
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto> {
+        Err(unavailable(&format!(
+            "HloModuleProto::from_text_file({})",
+            path.as_ref().display()
+        )))
+    }
+}
+
+/// An XLA computation wrapping a parsed module.
+#[derive(Debug)]
+pub struct XlaComputation {
+    #[allow(dead_code)] // uninhabitedness marker; constructed from no value
+    void: Void,
+}
+
+impl XlaComputation {
+    /// Wrap a parsed proto.
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        match proto.void {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.element_count(), 4);
+        assert_eq!(l.dims(), &[4]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn literal_dtype_mismatch_errors() {
+        let l = Literal::vec1(&[1i32, 2]);
+        assert!(l.to_vec::<f32>().is_err());
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn scalar_has_rank_zero() {
+        let s = Literal::scalar(7.5f32);
+        assert_eq!(s.element_count(), 1);
+        assert!(s.dims().is_empty());
+        assert_eq!(s.to_vec::<f32>().unwrap(), vec![7.5]);
+    }
+
+    #[test]
+    fn bad_reshape_errors() {
+        assert!(Literal::vec1(&[1.0f32, 2.0]).reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn tuple_decomposition_errors_on_stub_literals() {
+        assert!(Literal::vec1(&[0.0f32]).to_tuple().is_err());
+    }
+
+    #[test]
+    fn cpu_client_reports_unavailable() {
+        let err = PjRtClient::cpu().err().expect("stub has no PJRT");
+        assert!(err.to_string().contains("PJRT is unavailable"), "{err}");
+    }
+
+    #[test]
+    fn hlo_parsing_reports_unavailable() {
+        assert!(HloModuleProto::from_text_file("artifacts/x.hlo.txt").is_err());
+    }
+}
