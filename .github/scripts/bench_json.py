@@ -1,0 +1,60 @@
+#!/usr/bin/env python3
+"""Assemble the per-PR machine-readable bench artifact (BENCH_ci.json).
+
+Usage: bench_json.py <results_dir> <out_json>
+
+Collects every CSV the bench binaries wrote under <results_dir> (the
+CsvLogger outputs: fig1_console.csv, fig1_executors.csv,
+ablation_dispatch.csv, ...) into one JSON document, plus every
+steps/sec line from the smoke log, stamped with the commit under test.
+CI uploads the result as a build artifact so the perf trajectory of the
+executor layer is inspectable PR over PR without re-running anything.
+"""
+
+import csv
+import json
+import os
+import re
+import sys
+from pathlib import Path
+
+
+def main() -> int:
+    if len(sys.argv) != 3:
+        print(__doc__, file=sys.stderr)
+        return 2
+    results_dir = Path(sys.argv[1])
+    out_path = Path(sys.argv[2])
+
+    doc = {
+        "schema": "cairl-bench-ci/v1",
+        "commit": os.environ.get("GITHUB_SHA", "unknown"),
+        "ref": os.environ.get("GITHUB_REF", "unknown"),
+        "run_id": os.environ.get("GITHUB_RUN_ID", "unknown"),
+        "quick_mode": os.environ.get("CAIRL_BENCH_QUICK", "") == "1",
+        "tables": {},
+        "steps_per_sec_lines": [],
+    }
+
+    for csv_path in sorted(results_dir.glob("*.csv")):
+        with csv_path.open(newline="") as fh:
+            rows = list(csv.DictReader(fh))
+        doc["tables"][csv_path.stem] = rows
+
+    log_path = results_dir / "bench_smoke.log"
+    if log_path.exists():
+        pattern = re.compile(r"steps/s")
+        with log_path.open(errors="replace") as fh:
+            doc["steps_per_sec_lines"] = [
+                line.rstrip("\n") for line in fh if pattern.search(line)
+            ]
+
+    out_path.write_text(json.dumps(doc, indent=2) + "\n")
+    n_tables = len(doc["tables"])
+    n_lines = len(doc["steps_per_sec_lines"])
+    print(f"wrote {out_path}: {n_tables} tables, {n_lines} steps/sec lines")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

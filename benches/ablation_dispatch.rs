@@ -83,16 +83,22 @@ fn main() {
     let lanes = knob_q("CAIRL_LANES", 256, 64) as usize;
     let lane_steps = (steps / lanes as u64).max(1);
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    // The homogeneous rows plus a scenario mixture (half CartPole, half
+    // MountainCar): per-lane dispatch through heterogeneous env ids and
+    // obs padding, at the same lane count.  `max(1)` keeps the spec
+    // valid when CAIRL_LANES=1.
+    let half = (lanes / 2).max(1);
+    let mix = format!("CartPole-v1:{half},MountainCar-v0:{half}");
     let mut executor_rows = Vec::new();
-    for (kind, name) in [
-        (ExecutorKind::Sequential, "vec-env"),
-        (ExecutorKind::PoolSync, "pool-sync"),
-        (ExecutorKind::PoolAsync, "pool-async"),
+    for (spec, kind, name) in [
+        ("CartPole-v1", ExecutorKind::Sequential, "vec-env"),
+        ("CartPole-v1", ExecutorKind::PoolSync, "pool-sync"),
+        ("CartPole-v1", ExecutorKind::PoolAsync, "pool-async"),
+        (mix.as_str(), ExecutorKind::PoolSync, "pool-mix"),
     ] {
         let best: f64 = (0..trials)
             .map(|i| {
-                let mut exec =
-                    build_executor("CartPole-v1", kind, lanes, threads, i).unwrap();
+                let mut exec = build_executor(spec, kind, lanes, threads, i).unwrap();
                 run_batched_workload(exec.as_mut(), lane_steps, i).throughput
             })
             .fold(0.0, f64::max);

@@ -16,14 +16,18 @@
 mod harness;
 
 use cairl::coordinator::experiment::{
-    build_executor, run_batched_workload, stepping_trials, ExecutorKind, RenderMode,
+    build_executor, run_batched_workload, run_random_workload, stepping_trials,
+    ExecutorKind, RenderMode,
 };
+use cairl::coordinator::pool::EnvPool;
 use cairl::make;
 use cairl::tooling::csvlog::CsvLogger;
 use harness::*;
 
-/// Best-of-`trials` steps/sec for one executor configuration.
+/// Best-of-`trials` steps/sec for one executor configuration over an
+/// env spec (a bare id or a scenario mixture).
 fn executor_throughput(
+    env_spec: &str,
     kind: ExecutorKind,
     lanes: usize,
     threads: usize,
@@ -33,7 +37,7 @@ fn executor_throughput(
     (0..trials)
         .map(|trial| {
             let mut exec =
-                build_executor("CartPole-v1", kind, lanes, threads, trial).unwrap();
+                build_executor(env_spec, kind, lanes, threads, trial).unwrap();
             run_batched_workload(exec.as_mut(), steps_per_lane, trial).throughput
         })
         .fold(0.0, f64::max)
@@ -58,7 +62,14 @@ fn executor_comparison() {
     )
     .expect("create results csv");
 
-    let seq = executor_throughput(ExecutorKind::Sequential, lanes, 1, steps_per_lane, trials);
+    let seq = executor_throughput(
+        "CartPole-v1",
+        ExecutorKind::Sequential,
+        lanes,
+        1,
+        steps_per_lane,
+        trials,
+    );
     println!("{:<26} {seq:>12.0} steps/s", "VecEnv (sequential)");
     log.row(&[
         "vec".into(),
@@ -79,7 +90,14 @@ fn executor_comparison() {
             (ExecutorKind::PoolSync, "pool"),
             (ExecutorKind::PoolAsync, "pool-async"),
         ] {
-            let tput = executor_throughput(kind, lanes, threads, steps_per_lane, trials);
+            let tput = executor_throughput(
+                "CartPole-v1",
+                kind,
+                lanes,
+                threads,
+                steps_per_lane,
+                trials,
+            );
             println!(
                 "{:<26} {tput:>12.0} steps/s  ({:.2}x sequential)",
                 format!("EnvPool {label} ({threads}t)"),
@@ -98,6 +116,65 @@ fn executor_comparison() {
             }
         }
     }
+
+    // Free-running row: the whole random workload executes worker-side
+    // behind one barrier (`run_random_workload`), bounding what per-step
+    // synchronisation costs the lockstep rows above.
+    let max_threads = cores.min(8).max(1);
+    let free = (0..trials)
+        .map(|trial| {
+            let mut pool = EnvPool::new(lanes, trial, max_threads, || {
+                make("CartPole-v1").unwrap()
+            });
+            run_random_workload(&mut pool, steps_per_lane).throughput
+        })
+        .fold(0.0, f64::max);
+    println!(
+        "{:<26} {free:>12.0} steps/s  ({:.2}x sequential)",
+        format!("EnvPool free-run ({max_threads}t)"),
+        free / seq
+    );
+    log.row(&[
+        "pool-free-running".into(),
+        max_threads.to_string(),
+        lanes.to_string(),
+        steps_per_lane.to_string(),
+        format!("{free:.0}"),
+    ])
+    .unwrap();
+
+    // Scenario-mixture rows: half CartPole, half Acrobot lanes through
+    // one heterogeneous pool (per-lane env ids + obs padding).  `max(1)`
+    // keeps the spec valid when CAIRL_LANES=1.
+    let half = (lanes / 2).max(1);
+    let mix = format!("CartPole-v1:{half},Acrobot-v1:{half}");
+    for (kind, label) in [
+        (ExecutorKind::PoolSync, "pool-mix"),
+        (ExecutorKind::PoolAsync, "pool-async-mix"),
+    ] {
+        let tput = executor_throughput(
+            &mix,
+            kind,
+            lanes,
+            max_threads,
+            steps_per_lane,
+            trials,
+        );
+        println!(
+            "{:<26} {tput:>12.0} steps/s  ({:.2}x sequential)",
+            format!("EnvPool {label} ({max_threads}t)"),
+            tput / seq
+        );
+        log.row(&[
+            label.into(),
+            max_threads.to_string(),
+            lanes.to_string(),
+            steps_per_lane.to_string(),
+            format!("{tput:.0}"),
+        ])
+        .unwrap();
+    }
+
     log.flush().unwrap();
     println!("rows -> results/fig1_executors.csv");
 

@@ -12,7 +12,7 @@ use crate::coordinator::pool::BatchedExecutor;
 use crate::core::env::{Env, Transition};
 use crate::core::error::Result;
 use crate::core::rng::Pcg32;
-use crate::core::spaces::Action;
+use crate::core::spaces::{Action, Space};
 use crate::runtime::dqn_exec::{Batch, DqnExecutor};
 use crate::runtime::Runtime;
 
@@ -258,6 +258,15 @@ pub struct BatchedEvalOutcome {
 /// (the network weights already live host-side).  Lane episode returns
 /// are accumulated per lane and recorded once at each episode end
 /// (auto-reset keeps every lane live for the whole window).
+///
+/// Scenario-mixture pools are supported as long as every lane is
+/// network-compatible: each lane's true `obs_dim` must equal the
+/// network's input width and each lane's action space must be discrete,
+/// accepting every action index the network can emit (validated against
+/// [`BatchedExecutor::lane_specs`] — e.g. `CartPole-v1` mixed with
+/// `Script/CartPole-v1` evaluates one policy across both runners).
+/// Since every lane is full-width, the padded batch buffer degenerates
+/// to the unpadded layout and feeds the batched forward directly.
 pub fn evaluate_greedy_batched(
     exec: &DqnExecutor,
     pool: &mut dyn BatchedExecutor,
@@ -265,6 +274,26 @@ pub fn evaluate_greedy_batched(
 ) -> BatchedEvalOutcome {
     let n = pool.num_lanes();
     let d = pool.obs_dim();
+    for spec in pool.lane_specs() {
+        assert_eq!(
+            spec.obs_dim, exec.obs_dim,
+            "lane env {} obs_dim must match the network input",
+            spec.env_id
+        );
+        match &spec.action_space {
+            Space::Discrete { n } => assert!(
+                *n >= exec.n_actions,
+                "lane env {} accepts {} actions but the network may emit any of {}",
+                spec.env_id,
+                n,
+                exec.n_actions
+            ),
+            Space::Box { .. } => {
+                panic!("lane env {} is continuous; DQN is discrete", spec.env_id)
+            }
+        }
+    }
+    // Every lane is full-width, so padded == unpadded.
     assert_eq!(d, exec.obs_dim, "network obs_dim must match the lanes");
     let start = Instant::now();
     let mut obs = vec![0.0f32; n * d];
@@ -366,5 +395,57 @@ mod tests {
         // on every executor.
         assert_eq!(outcomes[0], outcomes[1]);
         assert_eq!(outcomes[0], outcomes[2]);
+    }
+
+    #[test]
+    fn batched_greedy_eval_handles_scenario_mixtures() {
+        use crate::coordinator::experiment::{build_executor, ExecutorKind};
+        use crate::runtime::dqn_exec::DqnExecutor;
+
+        // One 4-input/2-action network across native and script-runner
+        // cart-pole lanes in the same pool (both are obs_dim 4, 2
+        // actions, so every lane is network-compatible).
+        let exec = DqnExecutor::from_spec("cartpole", 4, 2, 32, 32, 5);
+        let mut outcomes = Vec::new();
+        for kind in [
+            ExecutorKind::Sequential,
+            ExecutorKind::PoolSync,
+            ExecutorKind::PoolAsync,
+        ] {
+            let mut pool = build_executor(
+                "CartPole-v1:2,Script/CartPole-v1:2",
+                kind,
+                1,
+                2,
+                123,
+            )
+            .unwrap();
+            let out = evaluate_greedy_batched(&exec, pool.as_mut(), 80);
+            assert_eq!(out.lane_steps, 4 * 80, "{kind:?}");
+            assert!(out.episodes > 0, "{kind:?}: greedy cartpole must end");
+            assert!(out.mean_return.is_finite(), "{kind:?}");
+            outcomes.push((out.episodes, out.mean_return));
+        }
+        assert_eq!(outcomes[0], outcomes[1]);
+        assert_eq!(outcomes[0], outcomes[2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "obs_dim must match the network input")]
+    fn batched_greedy_eval_rejects_incompatible_lanes() {
+        use crate::coordinator::experiment::{build_executor, ExecutorKind};
+        use crate::runtime::dqn_exec::DqnExecutor;
+
+        let exec = DqnExecutor::from_spec("cartpole", 4, 2, 32, 32, 5);
+        // MountainCar lanes are obs_dim 2: the network can't read them.
+        let mut pool = build_executor(
+            "CartPole-v1:2,MountainCar-v0:2",
+            ExecutorKind::Sequential,
+            1,
+            1,
+            0,
+        )
+        .unwrap();
+        let _ = evaluate_greedy_batched(&exec, pool.as_mut(), 10);
     }
 }

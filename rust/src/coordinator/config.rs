@@ -121,11 +121,18 @@ impl DqnSettings {
 /// Executor block — which [`BatchedExecutor`]
 /// (crate::coordinator::pool::BatchedExecutor) runs batched workloads,
 /// and at what width.
+///
+/// The experiment's `env` field may be a scenario-mixture spec
+/// (`"CartPole-v1:32,Acrobot-v1:16"`, see
+/// [`crate::coordinator::registry::MixtureSpec`]); in that case the
+/// spec's per-component counts define the lane list and `lanes` here is
+/// ignored.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ExecutorSettings {
     /// `"vec"` (sequential), `"pool"` (sync workers) or `"pool-async"`.
     pub kind: String,
-    /// Environment lanes stepped per batch.
+    /// Environment lanes stepped per batch (homogeneous env ids only;
+    /// mixture specs carry their own counts).
     pub lanes: usize,
     /// Worker threads for the pooled kinds; `0` = one per available core.
     pub threads: usize,
@@ -180,7 +187,8 @@ impl ExecutorSettings {
 /// A full experiment description.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ExperimentConfig {
-    /// Registry id, e.g. "CartPole-v1".
+    /// Registry id (e.g. "CartPole-v1") or a scenario-mixture spec
+    /// (e.g. "CartPole-v1:32,Acrobot-v1:16") for batched workloads.
     pub env: String,
     /// "dqn", "qtable" or "random".
     pub agent: String,
@@ -354,6 +362,19 @@ mod tests {
         use crate::coordinator::experiment::ExecutorKind;
         assert_eq!(cfg.executor.to_kind().unwrap(), ExecutorKind::Sequential);
         assert!(cfg.executor.effective_threads() >= 1);
+    }
+
+    #[test]
+    fn env_field_accepts_mixture_specs() {
+        let cfg = ExperimentConfig::parse(
+            r#"{"env": "CartPole-v1:32,Acrobot-v1:16", "executor": {"kind": "pool-async", "threads": 4}}"#,
+        )
+        .unwrap();
+        use crate::coordinator::registry::MixtureSpec;
+        assert!(MixtureSpec::is_mixture(&cfg.env));
+        let spec = MixtureSpec::parse(&cfg.env).unwrap();
+        assert_eq!(spec.total_lanes(), 48);
+        assert!(cfg.executor.to_kind().is_ok());
     }
 
     #[test]

@@ -7,8 +7,8 @@
 
 use std::time::{Duration, Instant};
 
-use crate::coordinator::pool::{AsyncEnvPool, BatchedExecutor, EnvPool};
-use crate::coordinator::registry;
+use crate::coordinator::pool::{AsyncEnvPool, BatchedExecutor, EnvPool, LaneSpec};
+use crate::coordinator::registry::{self, MixtureSpec};
 use crate::coordinator::vec_env::VecEnv;
 use crate::core::env::{DynEnv, Env, Transition};
 use crate::core::error::Result;
@@ -135,19 +135,28 @@ impl ExecutorKind {
     }
 }
 
-/// Build a batched executor over `lanes` instances of a registry env.
-/// Lane `i` is seeded `base_seed + i` on every executor kind, which is
-/// what makes the kinds interchangeable mid-experiment.
+/// Build a batched executor from an env spec.  `env_spec` is either a
+/// bare registry id (`"CartPole-v1"` — `lanes` homogeneous copies) or a
+/// scenario-mixture spec (`"CartPole-v1:32,Acrobot-v1:16"` — per-lane
+/// env ids in spec order; `lanes` is ignored because the spec carries
+/// its own counts).  Lane `i` is seeded `base_seed + i` on every
+/// executor kind, which is what makes the kinds interchangeable
+/// mid-experiment and mixture pools bit-identical to their single-env
+/// references.
 pub fn build_executor(
-    env_id: &str,
+    env_spec: &str,
     kind: ExecutorKind,
     lanes: usize,
     threads: usize,
     base_seed: u64,
 ) -> Result<Box<dyn BatchedExecutor>> {
+    if MixtureSpec::is_mixture(env_spec) {
+        let spec = MixtureSpec::parse(env_spec)?;
+        return build_mixture_executor(&spec, kind, threads, base_seed);
+    }
     // Validate the id once up front so the per-lane factory can't fail.
-    let _ = registry::make(env_id)?;
-    let factory = || registry::make(env_id).expect("env id validated above");
+    let _ = registry::make(env_spec)?;
+    let factory = || registry::make(env_spec).expect("env id validated above");
     Ok(match kind {
         ExecutorKind::Sequential => Box::new(VecEnv::new(lanes, base_seed, factory)),
         ExecutorKind::PoolSync => {
@@ -155,6 +164,29 @@ pub fn build_executor(
         }
         ExecutorKind::PoolAsync => {
             Box::new(AsyncEnvPool::new(lanes, base_seed, threads, factory))
+        }
+    })
+}
+
+/// Build a heterogeneous executor over a parsed [`MixtureSpec`]: lane
+/// `i` runs the `i`-th env of the flattened spec, seeded `base_seed + i`.
+pub fn build_mixture_executor(
+    spec: &MixtureSpec,
+    kind: ExecutorKind,
+    threads: usize,
+    base_seed: u64,
+) -> Result<Box<dyn BatchedExecutor>> {
+    let (ids, envs): (Vec<String>, Vec<_>) =
+        spec.build_labeled_envs()?.into_iter().unzip();
+    Ok(match kind {
+        ExecutorKind::Sequential => {
+            Box::new(VecEnv::from_labeled_envs(ids, envs, base_seed))
+        }
+        ExecutorKind::PoolSync => {
+            Box::new(EnvPool::from_labeled_envs(ids, envs, base_seed, threads))
+        }
+        ExecutorKind::PoolAsync => {
+            Box::new(AsyncEnvPool::from_labeled_envs(ids, envs, base_seed, threads))
         }
     })
 }
@@ -171,7 +203,10 @@ pub fn run_batched_workload(
 ) -> SteppingResult {
     let n = exec.num_lanes();
     let d = exec.obs_dim();
-    let space = exec.action_space();
+    // Sample per lane from its own action space (spec order), so
+    // mixtures draw valid actions everywhere; homogeneous pools draw
+    // the exact stream the shared-space sampler produced.
+    let specs: Vec<LaneSpec> = exec.lane_specs().to_vec();
     let mut rng = Pcg32::new(seed, 23);
     let mut obs = vec![0.0f32; n * d];
     let mut transitions = vec![Transition::default(); n];
@@ -181,7 +216,7 @@ pub fn run_batched_workload(
     let start = Instant::now();
     for _ in 0..steps_per_lane {
         actions.clear();
-        actions.extend((0..n).map(|_| space.sample(&mut rng)));
+        actions.extend(specs.iter().map(|s| s.action_space.sample(&mut rng)));
         exec.step_into(&actions, &mut obs, &mut transitions);
         episodes += transitions
             .iter()
@@ -195,6 +230,24 @@ pub fn run_batched_workload(
         episodes,
         elapsed,
         throughput: steps as f64 / elapsed.as_secs_f64(),
+    }
+}
+
+/// Free-running random-action workload on the sync pool: the whole
+/// rollout executes worker-side behind **one** barrier
+/// ([`EnvPool::random_rollout`]), with the aggregate step *and* episode
+/// counts folded into the standard [`SteppingResult`] reporting.  This
+/// replaces the old `parallel_random_steps` free function, which
+/// reported bare step counts only.
+pub fn run_random_workload(pool: &mut EnvPool, steps_per_lane: u64) -> SteppingResult {
+    let start = Instant::now();
+    let counts = pool.random_rollout(steps_per_lane);
+    let elapsed = start.elapsed();
+    SteppingResult {
+        steps: counts.steps,
+        episodes: counts.episodes,
+        elapsed,
+        throughput: counts.steps as f64 / elapsed.as_secs_f64(),
     }
 }
 
@@ -306,6 +359,58 @@ mod tests {
     #[test]
     fn build_executor_rejects_unknown_env() {
         assert!(build_executor("NoSuchEnv-v0", ExecutorKind::PoolSync, 2, 2, 0).is_err());
+        assert!(build_executor("NoSuchEnv-v0:4", ExecutorKind::PoolSync, 2, 2, 0).is_err());
+    }
+
+    #[test]
+    fn build_executor_accepts_mixture_specs() {
+        for kind in [
+            ExecutorKind::Sequential,
+            ExecutorKind::PoolSync,
+            ExecutorKind::PoolAsync,
+        ] {
+            let exec =
+                build_executor("CartPole-v1:3,MountainCar-v0:2", kind, 1, 2, 0).unwrap();
+            assert_eq!(exec.num_lanes(), 5, "{kind:?}");
+            // Padded to CartPole's width; MountainCar lanes are narrower.
+            assert_eq!(exec.obs_dim(), 4, "{kind:?}");
+            let specs = exec.lane_specs();
+            assert_eq!(specs[0].env_id, "CartPole-v1");
+            assert_eq!(specs[4].env_id, "MountainCar-v0");
+            assert_eq!(specs[4].obs_dim, 2);
+            assert_eq!(specs[4].offset, 16);
+        }
+    }
+
+    #[test]
+    fn batched_workload_runs_mixtures_on_every_executor_kind() {
+        // Per-lane action sampling must respect each lane's space, and
+        // the aggregate counts must be executor-invariant.
+        let run = |kind: ExecutorKind| {
+            let mut exec =
+                build_executor("CartPole-v1:3,Acrobot-v1:2", kind, 1, 2, 11).unwrap();
+            let r = run_batched_workload(exec.as_mut(), 60, 5);
+            (r.steps, r.episodes)
+        };
+        let seq = run(ExecutorKind::Sequential);
+        assert_eq!(seq.0, 5 * 60);
+        assert_eq!(seq, run(ExecutorKind::PoolSync));
+        assert_eq!(seq, run(ExecutorKind::PoolAsync));
+    }
+
+    #[test]
+    fn random_workload_reports_steps_and_episodes() {
+        use crate::envs::CartPole;
+        use crate::wrappers::TimeLimit;
+        let mut pool = EnvPool::new(4, 7, 4, || TimeLimit::new(CartPole::new(), 200));
+        let r = run_random_workload(&mut pool, 10_000);
+        assert_eq!(r.steps, 40_000);
+        assert!(r.episodes > 100, "random cartpole ends every ~20-40 steps");
+        assert!(r.throughput > 0.0);
+        // Thread-count invariance of the folded counts.
+        let mut single = EnvPool::new(4, 7, 1, || TimeLimit::new(CartPole::new(), 200));
+        let r1 = run_random_workload(&mut single, 10_000);
+        assert_eq!((r.steps, r.episodes), (r1.steps, r1.episodes));
     }
 
     #[test]

@@ -16,5 +16,6 @@ pub mod pool;
 pub mod registry;
 pub mod vec_env;
 
-pub use pool::{AsyncEnvPool, BatchedExecutor, EnvPool};
+pub use pool::{AsyncEnvPool, BatchedExecutor, EnvPool, LaneSpec};
+pub use registry::MixtureSpec;
 pub use vec_env::VecEnv;

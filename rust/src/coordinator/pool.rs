@@ -21,10 +21,26 @@
 //! * [`AsyncEnvPool`] — **async mode**: workers step a lane the moment
 //!   its action arrives; the coordinator exchanges
 //!   [`AsyncEnvPool::send_actions`] / [`AsyncEnvPool::recv_batch`] over
-//!   a ready-queue.  Batches come back compacted (`[k * obs_dim]` plus
-//!   the lane ids) — EnvPool's XLA-friendly shape, where the learner
-//!   consumes whatever subset of lanes is ready instead of waiting for
-//!   stragglers.
+//!   a ready-queue.  Observations live in **per-lane slots of one shared
+//!   block**: workers write a lane's slot in place and hand back only the
+//!   lane id, so steady-state `send_actions`/`recv_batch` performs **zero
+//!   heap allocations** (pinned by `rust/tests/alloc_free.rs` with a
+//!   counting global allocator; continuous `Action`s carry a `Vec` and
+//!   are the one exception).
+//!
+//! # Scenario mixtures (heterogeneous lanes)
+//!
+//! Every executor accepts **per-lane environments**: a pool can run 32
+//! lanes of `CartPole-v1` next to 16 of `Acrobot-v1` and 16 of a
+//! script-runner env behind the same batch interface
+//! ([`crate::coordinator::experiment::build_executor`] parses
+//! `"CartPole-v1:32,Acrobot-v1:16"` specs).  Batch buffers pad every
+//! lane to the pool-wide maximum observation length:
+//! [`BatchedExecutor::obs_dim`] is the **padded** width, lane `i` owns
+//! `obs[i * padded .. (i + 1) * padded]`, writes its true observation at
+//! the front and keeps the tail **zeroed**.  [`BatchedExecutor::lane_specs`]
+//! exposes `(env_id, obs_dim, offset)` per lane so agents can slice
+//! unpadded views without knowing the mixture layout.
 //!
 //! Auto-reset follows the `VecEnv` convention everywhere: a finished
 //! lane's transition reports the episode end exactly once and its
@@ -41,7 +57,6 @@ use std::cell::UnsafeCell;
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
@@ -49,21 +64,80 @@ use crate::core::env::{Env, Transition};
 use crate::core::rng::Pcg32;
 use crate::core::spaces::{Action, Space};
 
-/// A batch of homogeneous environment lanes stepped as one unit.
+/// Per-lane metadata of a (possibly heterogeneous) batched executor.
+///
+/// `offset` addresses the lane's slot inside a `[n * padded]` batch
+/// buffer where `padded` is [`BatchedExecutor::obs_dim`]; the lane's
+/// true observation is `obs[offset .. offset + obs_dim]` and the tail
+/// `obs[offset + obs_dim .. offset + padded]` is always zero.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LaneSpec {
+    /// Environment id this lane runs (e.g. `"CartPole-v1"`).
+    pub env_id: String,
+    /// The lane's true (unpadded) observation length.
+    pub obs_dim: usize,
+    /// Start of the lane's slot in a flat batch buffer.
+    pub offset: usize,
+    /// The lane's action space.
+    pub action_space: Space,
+}
+
+/// Compute per-lane specs and the pool-wide padded observation width
+/// (the maximum lane `obs_dim`) for a lane-ordered env list.  `ids[i]`
+/// labels lane `i` — the registry id for registry-built mixtures
+/// (wrapper composition like `TimeLimit(...)` is an implementation
+/// detail the label should not leak).
+pub(crate) fn lane_layout<E: Env>(envs: &[E], ids: &[String]) -> (Vec<LaneSpec>, usize) {
+    assert!(!envs.is_empty(), "an executor needs at least one lane");
+    assert_eq!(envs.len(), ids.len());
+    let padded = envs.iter().map(|e| e.obs_dim()).max().unwrap_or(0);
+    assert!(padded > 0, "lane observations must be non-empty");
+    let specs = envs
+        .iter()
+        .zip(ids)
+        .enumerate()
+        .map(|(i, (e, id))| LaneSpec {
+            env_id: id.clone(),
+            obs_dim: e.obs_dim(),
+            offset: i * padded,
+            action_space: e.action_space(),
+        })
+        .collect();
+    (specs, padded)
+}
+
+/// Lane labels derived from [`Env::id`] — the fallback when a caller
+/// hands envs without registry labels.
+pub(crate) fn own_ids<E: Env>(envs: &[E]) -> Vec<String> {
+    envs.iter().map(|e| e.id()).collect()
+}
+
+/// A batch of environment lanes stepped as one unit.
 ///
 /// The contract every implementation upholds (and the property tests
 /// enforce): lane `i` behaves exactly like a single env seeded
 /// `base_seed + i`, stepped sequentially with auto-reset — executors
-/// differ only in *how fast* the batch advances.
+/// differ only in *how fast* the batch advances.  Lanes may run
+/// different environments; see the module docs on padding.
 pub trait BatchedExecutor {
     /// Number of lanes in the batch.
     fn num_lanes(&self) -> usize;
 
-    /// Flattened per-lane observation length.
+    /// Padded per-lane observation length: the maximum lane `obs_dim`
+    /// across the pool.  Homogeneous pools pad nothing.
     fn obs_dim(&self) -> usize;
 
-    /// The (shared) action space of every lane.
-    fn action_space(&self) -> Space;
+    /// Per-lane `(env_id, obs_dim, offset, action_space)` metadata, in
+    /// lane order — the key to slicing unpadded views out of a mixture
+    /// batch.
+    fn lane_specs(&self) -> &[LaneSpec];
+
+    /// Lane 0's action space.  For homogeneous pools this is *the*
+    /// action space; mixtures must consult [`BatchedExecutor::lane_specs`]
+    /// per lane.
+    fn action_space(&self) -> Space {
+        self.lane_specs()[0].action_space.clone()
+    }
 
     /// Reset every lane; `obs` is `[num_lanes * obs_dim]`.
     fn reset_into(&mut self, obs: &mut [f32]);
@@ -77,6 +151,17 @@ pub trait BatchedExecutor {
         obs: &mut [f32],
         transitions: &mut [Transition],
     );
+}
+
+/// Aggregate counts of a worker-side free-running rollout
+/// ([`EnvPool::random_rollout`]), folded into
+/// [`crate::coordinator::experiment::run_random_workload`] reporting.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RolloutCounts {
+    /// Total lane-steps executed.
+    pub steps: u64,
+    /// Episodes that ended (terminated or truncated) during the rollout.
+    pub episodes: u64,
 }
 
 /// Iterations of `spin_loop` before a waiter starts yielding the core.
@@ -121,7 +206,7 @@ enum Cmd {
     },
     /// Free-running random-action rollout executed entirely worker-side
     /// (one barrier for the whole workload) — the throughput mode behind
-    /// [`crate::coordinator::vec_env::parallel_random_steps`].
+    /// [`crate::coordinator::experiment::run_random_workload`].
     RandomSteps {
         steps_per_lane: u64,
     },
@@ -134,6 +219,10 @@ struct SyncShared {
     seq: AtomicU64,
     /// Incremented (release) by each worker when its lanes are done.
     done: AtomicUsize,
+    /// Episode-end tally of the current `RandomSteps` command; workers
+    /// add their local counts before acknowledging, the coordinator
+    /// reads after the barrier.
+    episodes: AtomicU64,
     /// Set when a worker's env panicked mid-command.  A panicking worker
     /// still acknowledges the round before exiting (so the barrier's ack
     /// quorum always completes), surviving workers exit on seeing the
@@ -163,15 +252,15 @@ unsafe impl Sync for SyncShared {}
 pub struct EnvPool {
     shared: Arc<SyncShared>,
     handles: Vec<JoinHandle<()>>,
+    specs: Vec<LaneSpec>,
     n: usize,
-    obs_dim: usize,
-    action_space: Space,
+    padded: usize,
     base_seed: u64,
 }
 
 impl EnvPool {
-    /// Build a pool of `n` lanes across up to `threads` workers; lane
-    /// `i` is seeded `base_seed + i` (the same rule as
+    /// Build a homogeneous pool of `n` lanes across up to `threads`
+    /// workers; lane `i` is seeded `base_seed + i` (the same rule as
     /// [`VecEnv::new`](crate::coordinator::vec_env::VecEnv::new), which
     /// is what makes the two executors trajectory-compatible).
     pub fn new<E, F>(n: usize, base_seed: u64, threads: usize, mut factory: F) -> EnvPool
@@ -180,18 +269,49 @@ impl EnvPool {
         F: FnMut() -> E,
     {
         assert!(n > 0, "EnvPool needs at least one lane");
-        let mut envs: Vec<E> = (0..n).map(|_| factory()).collect();
+        let envs: Vec<E> = (0..n).map(|_| factory()).collect();
+        EnvPool::from_envs(envs, base_seed, threads)
+    }
+
+    /// Build a pool over an explicit lane-ordered env list — the
+    /// scenario-mixture constructor.  Lane `i` runs `envs[i]` seeded
+    /// `base_seed + i`; observations are padded to the widest lane.
+    /// Lane labels come from [`Env::id`]; use
+    /// [`EnvPool::from_labeled_envs`] to keep registry ids.
+    pub fn from_envs<E>(envs: Vec<E>, base_seed: u64, threads: usize) -> EnvPool
+    where
+        E: Env + Send + 'static,
+    {
+        let ids = own_ids(&envs);
+        EnvPool::from_labeled_envs(ids, envs, base_seed, threads)
+    }
+
+    /// [`EnvPool::from_envs`] with explicit lane labels (`ids[i]` names
+    /// lane `i` in [`BatchedExecutor::lane_specs`]) — what the registry
+    /// mixture path uses so specs carry `"CartPole-v1"`, not the
+    /// wrapper-composed [`Env::id`].
+    pub fn from_labeled_envs<E>(
+        ids: Vec<String>,
+        mut envs: Vec<E>,
+        base_seed: u64,
+        threads: usize,
+    ) -> EnvPool
+    where
+        E: Env + Send + 'static,
+    {
+        let n = envs.len();
+        assert!(n > 0, "EnvPool needs at least one lane");
         for (i, env) in envs.iter_mut().enumerate() {
             env.seed(base_seed + i as u64);
         }
-        let obs_dim = envs[0].obs_dim();
-        let action_space = envs[0].action_space();
+        let (specs, padded) = lane_layout(&envs, &ids);
 
         let threads = threads.clamp(1, n);
         let chunk = n.div_ceil(threads);
         let shared = Arc::new(SyncShared {
             seq: AtomicU64::new(0),
             done: AtomicUsize::new(0),
+            episodes: AtomicU64::new(0),
             poisoned: AtomicBool::new(false),
             cmd: UnsafeCell::new(Cmd::Idle),
         });
@@ -202,11 +322,15 @@ impl EnvPool {
         while lane_start < n {
             let take = chunk.min(n - lane_start);
             let lane_envs: Vec<E> = remaining.drain(..take).collect();
+            let dims: Vec<usize> = specs[lane_start..lane_start + take]
+                .iter()
+                .map(|s| s.obs_dim)
+                .collect();
             let shared_w = Arc::clone(&shared);
             let handle = std::thread::Builder::new()
                 .name(format!("envpool-{lane_start}"))
                 .spawn(move || {
-                    sync_worker(shared_w, lane_envs, lane_start, obs_dim, base_seed)
+                    sync_worker(shared_w, lane_envs, lane_start, padded, dims, base_seed)
                 })
                 .expect("spawn pool worker");
             handles.push(handle);
@@ -216,9 +340,9 @@ impl EnvPool {
         EnvPool {
             shared,
             handles,
+            specs,
             n,
-            obs_dim,
-            action_space,
+            padded,
             base_seed,
         }
     }
@@ -240,14 +364,18 @@ impl EnvPool {
     /// throughput mode).  Lane `i` draws actions from the dedicated
     /// stream `Pcg32::new(base_seed ^ 0xabcd, i + 1)` and resets before
     /// starting, so results are reproducible and thread-count
-    /// independent.  Returns total lane-steps executed.
+    /// independent.  Returns aggregate step *and* episode counts.
     ///
     /// Note this advances lane state without reporting observations;
     /// don't interleave with trait-driven lockstep batches that assume
     /// they saw every transition.
-    pub fn random_rollout(&mut self, steps_per_lane: u64) -> u64 {
+    pub fn random_rollout(&mut self, steps_per_lane: u64) -> RolloutCounts {
+        self.shared.episodes.store(0, Ordering::Relaxed);
         self.broadcast(Cmd::RandomSteps { steps_per_lane });
-        steps_per_lane * self.n as u64
+        RolloutCounts {
+            steps: steps_per_lane * self.n as u64,
+            episodes: self.shared.episodes.load(Ordering::Acquire),
+        }
     }
 
     /// Publish `cmd` and block until every worker has processed it,
@@ -299,15 +427,15 @@ impl BatchedExecutor for EnvPool {
     }
 
     fn obs_dim(&self) -> usize {
-        self.obs_dim
+        self.padded
     }
 
-    fn action_space(&self) -> Space {
-        self.action_space.clone()
+    fn lane_specs(&self) -> &[LaneSpec] {
+        &self.specs
     }
 
     fn reset_into(&mut self, obs: &mut [f32]) {
-        assert_eq!(obs.len(), self.n * self.obs_dim);
+        assert_eq!(obs.len(), self.n * self.padded);
         self.broadcast(Cmd::Reset {
             obs: obs.as_mut_ptr(),
         });
@@ -320,7 +448,7 @@ impl BatchedExecutor for EnvPool {
         transitions: &mut [Transition],
     ) {
         assert_eq!(actions.len(), self.n);
-        assert_eq!(obs.len(), self.n * self.obs_dim);
+        assert_eq!(obs.len(), self.n * self.padded);
         assert_eq!(transitions.len(), self.n);
         self.broadcast(Cmd::Step {
             actions: actions.as_ptr(),
@@ -358,7 +486,8 @@ fn sync_worker<E: Env>(
     shared: Arc<SyncShared>,
     mut envs: Vec<E>,
     lane_start: usize,
-    obs_dim: usize,
+    padded: usize,
+    dims: Vec<usize>,
     base_seed: u64,
 ) {
     let mut last_seq = 0u64;
@@ -373,7 +502,7 @@ fn sync_worker<E: Env>(
         let cmd = unsafe { *shared.cmd.get() };
         let shutdown = matches!(cmd, Cmd::Shutdown);
         let ok = catch_unwind(AssertUnwindSafe(|| {
-            run_cmd(cmd, &mut envs, lane_start, obs_dim, base_seed);
+            run_cmd(cmd, &mut envs, lane_start, padded, &dims, base_seed, &shared);
         }))
         .is_ok();
         if !ok {
@@ -386,25 +515,31 @@ fn sync_worker<E: Env>(
     }
 }
 
-/// Execute one command over a worker's lane range.
+/// Execute one command over a worker's lane range.  `dims[k]` is the
+/// true observation length of `envs[k]`; slots are `padded` wide and
+/// tails are re-zeroed on every write (caller buffers are arbitrary).
 fn run_cmd<E: Env>(
     cmd: Cmd,
     envs: &mut [E],
     lane_start: usize,
-    obs_dim: usize,
+    padded: usize,
+    dims: &[usize],
     base_seed: u64,
+    shared: &SyncShared,
 ) {
     match cmd {
         Cmd::Idle | Cmd::Shutdown => {}
         Cmd::Reset { obs } => {
             for (k, env) in envs.iter_mut().enumerate() {
                 let lane = lane_start + k;
-                // SAFETY: lane ranges are disjoint across workers and
+                // SAFETY: lane slots are disjoint across workers and
                 // the caller's `&mut [f32]` is pinned by the barrier.
-                let lane_obs = unsafe {
-                    std::slice::from_raw_parts_mut(obs.add(lane * obs_dim), obs_dim)
+                let slot = unsafe {
+                    std::slice::from_raw_parts_mut(obs.add(lane * padded), padded)
                 };
+                let (lane_obs, tail) = slot.split_at_mut(dims[k]);
                 env.reset_into(lane_obs);
+                tail.fill(0.0);
             }
         }
         Cmd::Step {
@@ -417,9 +552,10 @@ fn run_cmd<E: Env>(
                 // SAFETY: as above — disjoint lanes, barrier-pinned
                 // borrows, actions only read.
                 let action = unsafe { &*actions.add(lane) };
-                let lane_obs = unsafe {
-                    std::slice::from_raw_parts_mut(obs.add(lane * obs_dim), obs_dim)
+                let slot = unsafe {
+                    std::slice::from_raw_parts_mut(obs.add(lane * padded), padded)
                 };
+                let (lane_obs, tail) = slot.split_at_mut(dims[k]);
                 let t = env.step_into(action, lane_obs);
                 unsafe {
                     *transitions.add(lane) = t;
@@ -427,57 +563,104 @@ fn run_cmd<E: Env>(
                 if t.done || t.truncated {
                     env.reset_into(lane_obs);
                 }
+                tail.fill(0.0);
             }
         }
         Cmd::RandomSteps { steps_per_lane } => {
-            // Free-running: no coordinator round-trips, matching the
-            // per-thread loop `parallel_random_steps` historically ran
-            // (same per-lane rng streams, same seeding).
+            // Free-running: no coordinator round-trips.  Per-lane rng
+            // streams and seeding are fixed, so counts are reproducible
+            // and thread-count independent.
+            let mut episodes = 0u64;
             for (k, env) in envs.iter_mut().enumerate() {
                 let lane = lane_start + k;
                 let mut rng = Pcg32::new(base_seed ^ 0xabcd, lane as u64 + 1);
                 let space = env.action_space();
-                let mut obs = vec![0.0f32; obs_dim];
+                let mut obs = vec![0.0f32; dims[k]];
                 env.reset_into(&mut obs);
                 for _ in 0..steps_per_lane {
                     let a = space.sample(&mut rng);
                     let t = env.step_into(&a, &mut obs);
                     if t.done || t.truncated {
+                        episodes += 1;
                         env.reset_into(&mut obs);
                     }
                 }
             }
+            // Published to the coordinator by the Release ack in
+            // `sync_worker` (it reads only after the barrier drains).
+            shared.episodes.fetch_add(episodes, Ordering::Relaxed);
         }
     }
 }
 
-/// One ready lane reported by an async worker.
-pub struct ReadyLane {
-    /// Global lane index.
-    pub lane: usize,
-    /// Current observation (first obs of the next episode if the lane
-    /// just finished).
-    pub obs: Vec<f32>,
-    /// The transition that produced `obs` (`Transition::default()` for
-    /// the initial reset).
-    pub transition: Transition,
+/// One ready lane handed back by an async worker: the lane id plus its
+/// transition.  The observation is *not* carried here — it already sits
+/// in the lane's slot of the shared block (the zero-copy handoff).
+#[derive(Clone, Copy)]
+struct ReadyEntry {
+    lane: usize,
+    transition: Transition,
 }
 
-/// A compacted batch of ready lanes — EnvPool's XLA-friendly shape.
-pub struct AsyncBatch {
-    /// Lane ids, in ready order; `lanes[j]`'s observation occupies
-    /// `obs[j * obs_dim .. (j + 1) * obs_dim]`.
-    pub lanes: Vec<usize>,
-    /// `[lanes.len() * obs_dim]` observation block.
-    pub obs: Vec<f32>,
-    /// Per-entry transitions, aligned with `lanes`.
-    pub transitions: Vec<Transition>,
+/// The shared `[n * padded]` observation block behind [`AsyncEnvPool`].
+///
+/// Ownership protocol (which is what makes the unsafe accessors sound):
+/// a lane's slot belongs to its worker from the moment the coordinator
+/// enqueues a command for that lane until the worker pushes the lane id
+/// onto the ready queue; it belongs to the coordinator from popping the
+/// lane id until the next command for that lane.  Both handoffs happen
+/// through a `Mutex`, so the writes are published before the other side
+/// can touch the slot.
+struct SlotBlock {
+    ptr: *mut [f32],
+    padded: usize,
 }
+
+impl SlotBlock {
+    fn new(n: usize, padded: usize) -> SlotBlock {
+        let block = vec![0.0f32; n * padded].into_boxed_slice();
+        SlotBlock {
+            ptr: Box::into_raw(block),
+            padded,
+        }
+    }
+
+    /// SAFETY: the caller must own `lane` per the protocol above.
+    unsafe fn lane(&self, lane: usize) -> &[f32] {
+        std::slice::from_raw_parts(
+            (self.ptr as *const f32).add(lane * self.padded),
+            self.padded,
+        )
+    }
+
+    /// SAFETY: the caller must own `lane` per the protocol above.
+    #[allow(clippy::mut_from_ref)] // interior mutability via the ownership protocol
+    unsafe fn lane_mut(&self, lane: usize) -> &mut [f32] {
+        std::slice::from_raw_parts_mut(
+            (self.ptr as *mut f32).add(lane * self.padded),
+            self.padded,
+        )
+    }
+}
+
+impl Drop for SlotBlock {
+    fn drop(&mut self) {
+        // SAFETY: `ptr` came from `Box::into_raw` in `new` and is
+        // dropped exactly once (SlotBlock is never cloned).
+        unsafe {
+            drop(Box::from_raw(self.ptr));
+        }
+    }
+}
+
+// SAFETY: slot access is serialised per lane by the ownership protocol.
+unsafe impl Send for SlotBlock {}
+unsafe impl Sync for SlotBlock {}
 
 /// Queue contents plus the poison flag, under one lock so waiters can
 /// check both atomically (no lost-wakeup window).
 struct QueueState {
-    q: VecDeque<ReadyLane>,
+    q: VecDeque<ReadyEntry>,
     poisoned: bool,
 }
 
@@ -487,8 +670,18 @@ struct ReadyQueue {
 }
 
 impl ReadyQueue {
-    fn push(&self, r: ReadyLane) {
-        self.state.lock().unwrap().q.push_back(r);
+    fn with_capacity(n: usize) -> ReadyQueue {
+        ReadyQueue {
+            state: Mutex::new(QueueState {
+                q: VecDeque::with_capacity(n),
+                poisoned: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn push(&self, e: ReadyEntry) {
+        self.state.lock().unwrap().q.push_back(e);
         self.cv.notify_one();
     }
 
@@ -506,6 +699,51 @@ enum WorkerMsg {
     Reset,
 }
 
+/// Per-worker command mailbox: a bounded-by-contract deque (at most one
+/// outstanding action per lane) so pushes never reallocate in steady
+/// state, plus a `closed` flag for shutdown and panic signalling.
+struct Mailbox {
+    state: Mutex<MailboxState>,
+    cv: Condvar,
+}
+
+struct MailboxState {
+    q: VecDeque<WorkerMsg>,
+    closed: bool,
+}
+
+impl Mailbox {
+    fn with_capacity(n: usize) -> Mailbox {
+        Mailbox {
+            state: Mutex::new(MailboxState {
+                // +2: a Reset alongside a full complement of Steps,
+                // with one slot of slack so a push never reallocates.
+                q: VecDeque::with_capacity(n + 2),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Enqueue a command; panics if the worker is gone.
+    fn send(&self, msg: WorkerMsg, what: &str) {
+        let mut st = self.state.lock().unwrap();
+        assert!(
+            !st.closed,
+            "AsyncEnvPool worker panicked before receiving {what}"
+        );
+        st.q.push_back(msg);
+        drop(st);
+        self.cv.notify_one();
+    }
+
+    /// Close the mailbox (shutdown or worker panic) and wake the waiter.
+    fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+}
+
 /// Persistent-worker pool, asynchronous mode: workers run ahead.
 ///
 /// After construction every lane is reset and enqueued ready.  The
@@ -516,6 +754,13 @@ enum WorkerMsg {
 /// doing, so slow lanes never stall the batch (the async half of
 /// EnvPool's design).  There is no global barrier anywhere.
 ///
+/// Observations travel zero-copy: each lane owns a slot in one shared
+/// `[n * padded]` block ([`SlotBlock`]); a worker steps the env straight
+/// into the slot and hands back only `(lane, transition)`.
+/// [`AsyncBatch`] views borrow the slots in place, so a steady-state
+/// `recv_batch`/`send_actions` cycle performs **zero heap allocations**
+/// (continuous actions, which box a `Vec`, are the one exception).
+///
 /// Per-lane trajectories remain bit-identical to sequential execution —
 /// only the interleaving across lanes is nondeterministic.
 ///
@@ -523,53 +768,73 @@ enum WorkerMsg {
 /// (send all, receive all) for drop-in comparisons with the sync
 /// executors; don't interleave trait calls with the native async API.
 pub struct AsyncEnvPool {
-    senders: Vec<Sender<WorkerMsg>>,
+    mailboxes: Vec<Arc<Mailbox>>,
     handles: Vec<JoinHandle<()>>,
     ready: Arc<ReadyQueue>,
+    slots: Arc<SlotBlock>,
     /// lane -> owning worker index.
     owner: Vec<usize>,
+    /// Reusable `recv_batch` output buffers (capacity `n`, never grown
+    /// past it — the allocation-free guarantee).
+    batch_lanes: Vec<usize>,
+    batch_transitions: Vec<Transition>,
+    specs: Vec<LaneSpec>,
     /// True until the construction-time reset results are consumed.  The
     /// first lockstep `reset_into` takes those instead of re-resetting,
     /// so lane RNG streams stay aligned with `VecEnv` (whose first
     /// `reset_into` is each env's *first* reset).
     pristine: bool,
     n: usize,
-    obs_dim: usize,
-    action_space: Space,
+    padded: usize,
 }
 
 impl AsyncEnvPool {
-    /// Build an async pool; seeding and lane partitioning follow
-    /// [`EnvPool::new`] exactly.
-    pub fn new<E, F>(
-        n: usize,
-        base_seed: u64,
-        threads: usize,
-        mut factory: F,
-    ) -> AsyncEnvPool
+    /// Build a homogeneous async pool; seeding and lane partitioning
+    /// follow [`EnvPool::new`] exactly.
+    pub fn new<E, F>(n: usize, base_seed: u64, threads: usize, mut factory: F) -> AsyncEnvPool
     where
         E: Env + Send + 'static,
         F: FnMut() -> E,
     {
         assert!(n > 0, "AsyncEnvPool needs at least one lane");
-        let mut envs: Vec<E> = (0..n).map(|_| factory()).collect();
+        let envs: Vec<E> = (0..n).map(|_| factory()).collect();
+        AsyncEnvPool::from_envs(envs, base_seed, threads)
+    }
+
+    /// Build an async pool over an explicit lane-ordered env list — the
+    /// scenario-mixture constructor ([`EnvPool::from_envs`] semantics).
+    pub fn from_envs<E>(envs: Vec<E>, base_seed: u64, threads: usize) -> AsyncEnvPool
+    where
+        E: Env + Send + 'static,
+    {
+        let ids = own_ids(&envs);
+        AsyncEnvPool::from_labeled_envs(ids, envs, base_seed, threads)
+    }
+
+    /// [`AsyncEnvPool::from_envs`] with explicit lane labels
+    /// ([`EnvPool::from_labeled_envs`] semantics).
+    pub fn from_labeled_envs<E>(
+        ids: Vec<String>,
+        mut envs: Vec<E>,
+        base_seed: u64,
+        threads: usize,
+    ) -> AsyncEnvPool
+    where
+        E: Env + Send + 'static,
+    {
+        let n = envs.len();
+        assert!(n > 0, "AsyncEnvPool needs at least one lane");
         for (i, env) in envs.iter_mut().enumerate() {
             env.seed(base_seed + i as u64);
         }
-        let obs_dim = envs[0].obs_dim();
-        let action_space = envs[0].action_space();
+        let (specs, padded) = lane_layout(&envs, &ids);
 
         let threads = threads.clamp(1, n);
         let chunk = n.div_ceil(threads);
-        let ready = Arc::new(ReadyQueue {
-            state: Mutex::new(QueueState {
-                q: VecDeque::new(),
-                poisoned: false,
-            }),
-            cv: Condvar::new(),
-        });
+        let ready = Arc::new(ReadyQueue::with_capacity(n));
+        let slots = Arc::new(SlotBlock::new(n, padded));
 
-        let mut senders = Vec::new();
+        let mut mailboxes = Vec::new();
         let mut handles = Vec::new();
         let mut owner = vec![0usize; n];
         let mut lane_start = 0usize;
@@ -577,28 +842,39 @@ impl AsyncEnvPool {
         while lane_start < n {
             let take = chunk.min(n - lane_start);
             let lane_envs: Vec<E> = remaining.drain(..take).collect();
-            let worker_idx = senders.len();
+            let dims: Vec<usize> = specs[lane_start..lane_start + take]
+                .iter()
+                .map(|s| s.obs_dim)
+                .collect();
+            let worker_idx = mailboxes.len();
             owner[lane_start..lane_start + take].fill(worker_idx);
-            let (tx, rx) = channel::<WorkerMsg>();
+            let mailbox = Arc::new(Mailbox::with_capacity(take));
+            let mailbox_w = Arc::clone(&mailbox);
             let ready_w = Arc::clone(&ready);
+            let slots_w = Arc::clone(&slots);
             let handle = std::thread::Builder::new()
                 .name(format!("envpool-async-{lane_start}"))
-                .spawn(move || async_worker(rx, ready_w, lane_envs, lane_start, obs_dim))
+                .spawn(move || {
+                    async_worker(mailbox_w, ready_w, slots_w, lane_envs, lane_start, dims)
+                })
                 .expect("spawn async pool worker");
-            senders.push(tx);
+            mailboxes.push(mailbox);
             handles.push(handle);
             lane_start += take;
         }
 
         AsyncEnvPool {
-            senders,
+            mailboxes,
             handles,
             ready,
+            slots,
             owner,
+            batch_lanes: Vec::with_capacity(n),
+            batch_transitions: Vec::with_capacity(n),
+            specs,
             pristine: true,
             n,
-            obs_dim,
-            action_space,
+            padded,
         }
     }
 
@@ -608,19 +884,19 @@ impl AsyncEnvPool {
     }
 
     /// Submit actions for specific lanes.  Each named lane must be
-    /// "owed" to the pool: received via [`recv_batch`]
-    /// (AsyncEnvPool::recv_batch) (or initially ready) and not yet sent
-    /// an action.
+    /// "owed" to the pool: received via
+    /// [`recv_batch`](AsyncEnvPool::recv_batch) (or initially ready) and
+    /// not yet sent an action.
     pub fn send_actions(&mut self, actions: &[(usize, Action)]) {
         for (lane, action) in actions {
             assert!(*lane < self.n, "lane {lane} out of range");
-            let msg = WorkerMsg::Step {
-                lane: *lane,
-                action: action.clone(),
-            };
-            if self.senders[self.owner[*lane]].send(msg).is_err() {
-                panic!("AsyncEnvPool worker panicked before receiving an action");
-            }
+            self.mailboxes[self.owner[*lane]].send(
+                WorkerMsg::Step {
+                    lane: *lane,
+                    action: action.clone(),
+                },
+                "an action",
+            );
         }
     }
 
@@ -628,38 +904,38 @@ impl AsyncEnvPool {
     /// available.  Only lanes with submitted (or initial) work become
     /// ready, so call this with outstanding lanes or it will block
     /// forever.
-    pub fn recv_batch(&mut self, max: usize) -> AsyncBatch {
+    ///
+    /// The returned [`AsyncBatch`] borrows the pool: observations are
+    /// read in place from the shared slot block (no copy, no
+    /// allocation).  Drop the batch before the next
+    /// [`send_actions`](AsyncEnvPool::send_actions).
+    pub fn recv_batch(&mut self, max: usize) -> AsyncBatch<'_> {
         assert!(max > 0);
-        let mut batch = AsyncBatch {
-            lanes: Vec::new(),
-            obs: Vec::new(),
-            transitions: Vec::new(),
-        };
-        let mut state = self.ready.state.lock().unwrap();
-        while state.q.is_empty() {
-            assert!(
-                !state.poisoned,
-                "AsyncEnvPool worker panicked; no more lanes will become ready"
-            );
-            state = self.ready.cv.wait(state).unwrap();
+        self.batch_lanes.clear();
+        self.batch_transitions.clear();
+        {
+            let mut state = self.ready.state.lock().unwrap();
+            while state.q.is_empty() {
+                assert!(
+                    !state.poisoned,
+                    "AsyncEnvPool worker panicked; no more lanes will become ready"
+                );
+                state = self.ready.cv.wait(state).unwrap();
+            }
+            let k = state.q.len().min(max);
+            for _ in 0..k {
+                let e = state.q.pop_front().expect("non-empty by construction");
+                self.batch_lanes.push(e.lane);
+                self.batch_transitions.push(e.transition);
+            }
         }
-        let k = state.q.len().min(max);
-        batch.lanes.reserve(k);
-        batch.obs.reserve(k * self.obs_dim);
-        batch.transitions.reserve(k);
-        for _ in 0..k {
-            let r = state.q.pop_front().expect("non-empty by construction");
-            batch.lanes.push(r.lane);
-            batch.obs.extend_from_slice(&r.obs);
-            batch.transitions.push(r.transition);
-        }
-        drop(state);
         self.pristine = false;
-        batch
+        AsyncBatch { pool: self }
     }
 
-    /// Pop exactly `k` ready lanes (blocking), handing each to `sink`.
-    fn collect_exact(&self, k: usize, mut sink: impl FnMut(ReadyLane)) {
+    /// Pop exactly `k` ready lanes (blocking), handing each entry's lane
+    /// id, transition and slot contents to `sink`.
+    fn collect_exact(&self, k: usize, mut sink: impl FnMut(usize, Transition, &[f32])) {
         let mut state = self.ready.state.lock().unwrap();
         for _ in 0..k {
             while state.q.is_empty() {
@@ -669,8 +945,65 @@ impl AsyncEnvPool {
                 );
                 state = self.ready.cv.wait(state).unwrap();
             }
-            sink(state.q.pop_front().expect("non-empty by construction"));
+            let e = state.q.pop_front().expect("non-empty by construction");
+            // SAFETY: popping the entry transferred slot ownership to us.
+            let obs = unsafe { self.slots.lane(e.lane) };
+            sink(e.lane, e.transition, obs);
         }
+    }
+}
+
+/// A batch of ready lanes, borrowing the pool's shared slot block —
+/// EnvPool's compacted XLA-friendly shape without the compaction copy.
+///
+/// Entry `j` is lane `lanes()[j]`; its padded observation slot is
+/// [`obs`](AsyncBatch::obs)`(j)` and its true (unpadded) observation is
+/// [`obs_unpadded`](AsyncBatch::obs_unpadded)`(j)`.  The borrow pins the
+/// pool, so the slots cannot be overwritten while the batch is alive.
+pub struct AsyncBatch<'p> {
+    pool: &'p AsyncEnvPool,
+}
+
+impl AsyncBatch<'_> {
+    /// Number of ready lanes in the batch.
+    pub fn len(&self) -> usize {
+        self.pool.batch_lanes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pool.batch_lanes.is_empty()
+    }
+
+    /// Lane ids, in ready order.
+    pub fn lanes(&self) -> &[usize] {
+        &self.pool.batch_lanes
+    }
+
+    /// Per-entry transitions, aligned with [`lanes`](AsyncBatch::lanes)
+    /// (`Transition::default()` for the initial reset).
+    pub fn transitions(&self) -> &[Transition] {
+        &self.pool.batch_transitions
+    }
+
+    /// Entry `j`'s padded observation slot (length
+    /// [`BatchedExecutor::obs_dim`]); the tail beyond the lane's true
+    /// `obs_dim` is zero.
+    pub fn obs(&self, j: usize) -> &[f32] {
+        let lane = self.pool.batch_lanes[j];
+        // SAFETY: lanes in the batch are coordinator-owned until the
+        // next command, and the borrow of the pool pins that state.
+        unsafe { self.pool.slots.lane(lane) }
+    }
+
+    /// Entry `j`'s observation sliced to its lane's true `obs_dim`.
+    pub fn obs_unpadded(&self, j: usize) -> &[f32] {
+        let lane = self.pool.batch_lanes[j];
+        &self.obs(j)[..self.pool.specs[lane].obs_dim]
+    }
+
+    /// Entry `j`'s lane spec.
+    pub fn lane_spec(&self, j: usize) -> &LaneSpec {
+        &self.pool.specs[self.pool.batch_lanes[j]]
     }
 }
 
@@ -680,30 +1013,28 @@ impl BatchedExecutor for AsyncEnvPool {
     }
 
     fn obs_dim(&self) -> usize {
-        self.obs_dim
+        self.padded
     }
 
-    fn action_space(&self) -> Space {
-        self.action_space.clone()
+    fn lane_specs(&self) -> &[LaneSpec] {
+        &self.specs
     }
 
     fn reset_into(&mut self, obs: &mut [f32]) {
-        assert_eq!(obs.len(), self.n * self.obs_dim);
+        assert_eq!(obs.len(), self.n * self.padded);
         if !self.pristine {
             // Re-reset every lane; the queue is empty between lockstep
             // calls, so the next n entries are exactly the reset results.
-            for tx in &self.senders {
-                if tx.send(WorkerMsg::Reset).is_err() {
-                    panic!("AsyncEnvPool worker panicked before receiving a reset");
-                }
+            for mailbox in &self.mailboxes {
+                mailbox.send(WorkerMsg::Reset, "a reset");
             }
         }
         // A pristine pool consumes the construction-time reset instead:
         // each env's first reset, matching sequential `VecEnv` exactly.
         self.pristine = false;
-        let d = self.obs_dim;
-        self.collect_exact(self.n, |r| {
-            obs[r.lane * d..(r.lane + 1) * d].copy_from_slice(&r.obs);
+        let d = self.padded;
+        self.collect_exact(self.n, |lane, _t, slot| {
+            obs[lane * d..(lane + 1) * d].copy_from_slice(slot);
         });
     }
 
@@ -714,90 +1045,113 @@ impl BatchedExecutor for AsyncEnvPool {
         transitions: &mut [Transition],
     ) {
         assert_eq!(actions.len(), self.n);
-        assert_eq!(obs.len(), self.n * self.obs_dim);
+        assert_eq!(obs.len(), self.n * self.padded);
         assert_eq!(transitions.len(), self.n);
         if self.pristine {
             // Stepping without an explicit reset: the lanes were reset at
             // construction; drain those entries so the collection below
             // sees only step results.
-            self.collect_exact(self.n, |_| {});
+            self.collect_exact(self.n, |_, _, _| {});
             self.pristine = false;
         }
         for (lane, action) in actions.iter().enumerate() {
-            let msg = WorkerMsg::Step {
-                lane,
-                action: action.clone(),
-            };
-            if self.senders[self.owner[lane]].send(msg).is_err() {
-                panic!("AsyncEnvPool worker panicked before receiving an action");
-            }
+            self.mailboxes[self.owner[lane]].send(
+                WorkerMsg::Step {
+                    lane,
+                    action: action.clone(),
+                },
+                "an action",
+            );
         }
-        let d = self.obs_dim;
+        let d = self.padded;
         // Collect all n results; per-lane writes land in lane order
         // regardless of arrival order, restoring batch determinism.
         // Exactly-once per lane holds because each lane was sent exactly
         // one action and workers publish one entry per action (pinned by
         // the executor_pool integration tests).
-        self.collect_exact(self.n, |r| {
-            obs[r.lane * d..(r.lane + 1) * d].copy_from_slice(&r.obs);
-            transitions[r.lane] = r.transition;
+        self.collect_exact(self.n, |lane, t, slot| {
+            obs[lane * d..(lane + 1) * d].copy_from_slice(slot);
+            transitions[lane] = t;
         });
     }
 }
 
 impl Drop for AsyncEnvPool {
     fn drop(&mut self) {
-        self.senders.clear(); // hang up: workers exit on recv error
+        for mailbox in &self.mailboxes {
+            mailbox.close(); // hang up: workers exit on the closed flag
+        }
         for handle in self.handles.drain(..) {
             let _ = handle.join();
         }
     }
 }
 
-/// Body of one async worker: step a lane per message, publish the
-/// result, auto-reset finished lanes.  Env panics poison the ready
-/// queue (waking blocked receivers) instead of leaving them asleep.
+/// Body of one async worker: step a lane per message straight into its
+/// shared slot, publish `(lane, transition)`, auto-reset finished lanes.
+/// Env panics poison the ready queue (waking blocked receivers) and
+/// close the mailbox (failing senders) instead of leaving them asleep.
 fn async_worker<E: Env>(
-    rx: Receiver<WorkerMsg>,
+    mailbox: Arc<Mailbox>,
     ready: Arc<ReadyQueue>,
+    slots: Arc<SlotBlock>,
     mut envs: Vec<E>,
     lane_start: usize,
-    obs_dim: usize,
+    dims: Vec<usize>,
 ) {
     fn publish_reset<E: Env>(
         envs: &mut [E],
         ready: &ReadyQueue,
+        slots: &SlotBlock,
         lane_start: usize,
-        obs_dim: usize,
+        dims: &[usize],
     ) {
         for (k, env) in envs.iter_mut().enumerate() {
-            let mut obs = vec![0.0f32; obs_dim];
-            env.reset_into(&mut obs);
-            ready.push(ReadyLane {
-                lane: lane_start + k,
-                obs,
+            let lane = lane_start + k;
+            // SAFETY: a reset command (or construction) handed this
+            // worker ownership of all its lanes' slots.
+            let slot = unsafe { slots.lane_mut(lane) };
+            let (obs, tail) = slot.split_at_mut(dims[k]);
+            env.reset_into(obs);
+            tail.fill(0.0);
+            ready.push(ReadyEntry {
+                lane,
                 transition: Transition::default(),
             });
         }
     }
 
     let result = catch_unwind(AssertUnwindSafe(|| {
-        publish_reset(&mut envs, &ready, lane_start, obs_dim);
-        while let Ok(msg) = rx.recv() {
+        publish_reset(&mut envs, &ready, &slots, lane_start, &dims);
+        loop {
+            let msg = {
+                let mut st = mailbox.state.lock().unwrap();
+                loop {
+                    if let Some(m) = st.q.pop_front() {
+                        break m;
+                    }
+                    if st.closed {
+                        return;
+                    }
+                    st = mailbox.cv.wait(st).unwrap();
+                }
+            };
             match msg {
                 WorkerMsg::Reset => {
-                    publish_reset(&mut envs, &ready, lane_start, obs_dim)
+                    publish_reset(&mut envs, &ready, &slots, lane_start, &dims)
                 }
                 WorkerMsg::Step { lane, action } => {
                     let k = lane - lane_start;
-                    let mut obs = vec![0.0f32; obs_dim];
-                    let t = envs[k].step_into(&action, &mut obs);
+                    // SAFETY: the Step message handed us this lane's slot.
+                    let slot = unsafe { slots.lane_mut(lane) };
+                    let (obs, tail) = slot.split_at_mut(dims[k]);
+                    let t = envs[k].step_into(&action, obs);
                     if t.done || t.truncated {
-                        envs[k].reset_into(&mut obs);
+                        envs[k].reset_into(obs);
                     }
-                    ready.push(ReadyLane {
+                    tail.fill(0.0);
+                    ready.push(ReadyEntry {
                         lane,
-                        obs,
                         transition: t,
                     });
                 }
@@ -806,6 +1160,7 @@ fn async_worker<E: Env>(
     }));
     if result.is_err() {
         ready.poison();
+        mailbox.close();
     }
 }
 
@@ -813,7 +1168,7 @@ fn async_worker<E: Env>(
 mod tests {
     use super::*;
     use crate::coordinator::vec_env::VecEnv;
-    use crate::envs::CartPole;
+    use crate::envs::{CartPole, MountainCar};
     use crate::wrappers::TimeLimit;
 
     fn cartpole_factory() -> impl Fn() -> TimeLimit<CartPole> {
@@ -885,13 +1240,14 @@ mod tests {
         let mut got = 0;
         while got < n {
             let batch = pool.recv_batch(n);
-            for (j, &lane) in batch.lanes.iter().enumerate() {
+            for (j, &lane) in batch.lanes().iter().enumerate() {
                 assert!(!seen[lane], "lane {lane} ready twice before any action");
                 seen[lane] = true;
-                assert_eq!(batch.obs[j * 4..(j + 1) * 4].len(), 4);
-                assert!(!batch.transitions[j].done);
+                assert_eq!(batch.obs(j).len(), 4);
+                assert_eq!(batch.obs_unpadded(j).len(), 4);
+                assert!(!batch.transitions()[j].done);
             }
-            got += batch.lanes.len();
+            got += batch.len();
         }
         assert!(seen.iter().all(|&s| s));
     }
@@ -905,7 +1261,7 @@ mod tests {
         for _ in 0..200 {
             let batch = pool.recv_batch(n);
             let sends: Vec<(usize, Action)> = batch
-                .lanes
+                .lanes()
                 .iter()
                 .map(|&lane| {
                     sends_per_lane[lane] += 1;
@@ -930,12 +1286,80 @@ mod tests {
     #[test]
     fn random_rollout_counts_lane_steps_and_stays_reusable() {
         let mut pool = EnvPool::new(4, 9, 2, cartpole_factory());
-        assert_eq!(pool.random_rollout(500), 2_000);
+        let counts = pool.random_rollout(500);
+        assert_eq!(counts.steps, 2_000);
+        assert!(
+            counts.episodes > 10,
+            "40-step-capped cartpole over 500 steps/lane: {} episodes",
+            counts.episodes
+        );
         // The pool survives the bulk command and still serves batches.
-        assert_eq!(pool.random_rollout(10), 40);
+        assert_eq!(pool.random_rollout(10).steps, 40);
         let mut obs = vec![0.0f32; 4 * 4];
         BatchedExecutor::reset_into(&mut pool, &mut obs);
         assert!(obs.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn random_rollout_episode_counts_are_thread_invariant() {
+        // Fresh pools with the same lane seeds must tally the same
+        // episode ends regardless of worker partitioning.
+        let counts: Vec<RolloutCounts> = [1usize, 2, 4]
+            .iter()
+            .map(|&threads| {
+                let mut pool = EnvPool::new(4, 9, threads, cartpole_factory());
+                pool.random_rollout(500)
+            })
+            .collect();
+        assert!(counts[0].episodes > 10);
+        assert_eq!(counts[0], counts[1]);
+        assert_eq!(counts[0], counts[2]);
+    }
+
+    #[test]
+    fn mixture_pools_pad_and_expose_lane_specs() {
+        // CartPole (dim 4) + MountainCar (dim 2): padded width 4, the
+        // MountainCar lanes zero their tails on every executor.
+        let build_envs = || -> Vec<crate::core::env::DynEnv> {
+            vec![
+                Box::new(TimeLimit::new(CartPole::new(), 40)),
+                Box::new(TimeLimit::new(MountainCar::new(), 40)),
+                Box::new(TimeLimit::new(MountainCar::new(), 40)),
+            ]
+        };
+        let mut vec_env = VecEnv::from_envs(build_envs(), 5);
+        let mut sync_pool = EnvPool::from_envs(build_envs(), 5, 2);
+        let mut async_pool = AsyncEnvPool::from_envs(build_envs(), 5, 2);
+        for exec in [
+            &mut vec_env as &mut dyn BatchedExecutor,
+            &mut sync_pool,
+            &mut async_pool,
+        ] {
+            assert_eq!(exec.obs_dim(), 4);
+            let specs = exec.lane_specs().to_vec();
+            assert_eq!(specs.len(), 3);
+            assert_eq!(specs[0].obs_dim, 4);
+            assert_eq!(specs[1].obs_dim, 2);
+            assert_eq!(specs[1].offset, 4);
+            assert_eq!(specs[2].offset, 8);
+            // Pre-poison the buffer: the executor must zero the tails.
+            let mut obs = vec![f32::NAN; 3 * 4];
+            exec.reset_into(&mut obs);
+            for spec in &specs[1..] {
+                assert_eq!(
+                    &obs[spec.offset + spec.obs_dim..spec.offset + 4],
+                    &[0.0, 0.0],
+                    "padded tail must be zeroed"
+                );
+            }
+        }
+        // The heterogeneous trajectories agree bit-for-bit across all
+        // three executors (the mixture determinism contract).
+        let a = drive(&mut vec_env, 90);
+        let b = drive(&mut sync_pool, 90);
+        let c = drive(&mut async_pool, 90);
+        assert_eq!(a, b);
+        assert_eq!(a, c);
     }
 
     /// Env that panics on the `boom`-th step — exercises worker-death

@@ -5,6 +5,12 @@
 //! flash-runner games (`Flash/...`) and the puzzle runtime (`Puzzle/...`)
 //! all register here, giving one uniform id namespace across runners —
 //! the paper's "unified API for all environments" (§III-A Runners).
+//!
+//! The same namespace feeds **scenario mixtures** ([`MixtureSpec`]):
+//! `"CartPole-v1:32,Acrobot-v1:16"` describes a heterogeneous lane list
+//! that the batched executors run behind one interface (`cairl run
+//! --env "CartPole-v1:32,Acrobot-v1:16"`); any registered id — native,
+//! script, flash or puzzle — can appear as a mixture component.
 
 use crate::core::env::DynEnv;
 use crate::core::error::{CairlError, Result};
@@ -148,6 +154,105 @@ pub fn list_envs() -> Vec<(&'static str, &'static str)> {
     table().iter().map(|e| (e.id, e.summary)).collect()
 }
 
+/// A parsed scenario-mixture spec: an ordered list of `(env_id, lanes)`
+/// pairs, e.g. `"CartPole-v1:32,Acrobot-v1:16"` → 32 CartPole lanes
+/// followed by 16 Acrobot lanes.  Lane order is the spec order, which
+/// fixes the per-lane seeds (`base_seed + lane`) and therefore the
+/// bit-determinism contract of mixture pools.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MixtureSpec {
+    entries: Vec<(String, usize)>,
+}
+
+impl MixtureSpec {
+    /// Whether `spec` is a mixture spec (rather than a bare env id):
+    /// mixtures contain a `:` lane count or a `,` separator, which no
+    /// registered id does.
+    pub fn is_mixture(spec: &str) -> bool {
+        spec.contains(':') || spec.contains(',')
+    }
+
+    /// Parse `"Id-v1:32,Other-v0:16"`.  A component without `:count`
+    /// contributes one lane.  Every id is validated against the
+    /// registry; counts must be positive.
+    pub fn parse(spec: &str) -> Result<MixtureSpec> {
+        let mut entries = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                return Err(CairlError::Config(format!(
+                    "mixture spec {spec:?}: empty component"
+                )));
+            }
+            let (id, count) = match part.rsplit_once(':') {
+                Some((id, count)) => {
+                    let count: usize = count.trim().parse().map_err(|_| {
+                        CairlError::Config(format!(
+                            "mixture spec {spec:?}: bad lane count in {part:?}"
+                        ))
+                    })?;
+                    (id.trim(), count)
+                }
+                None => (part, 1),
+            };
+            if count == 0 {
+                return Err(CairlError::Config(format!(
+                    "mixture spec {spec:?}: {id:?} has zero lanes"
+                )));
+            }
+            // Validate membership eagerly so executor construction can't
+            // fail on an unknown id (no throwaway env construction).
+            if !table().iter().any(|e| e.id == id) {
+                return Err(CairlError::UnknownEnv(id.to_string()));
+            }
+            entries.push((id.to_string(), count));
+        }
+        if entries.is_empty() {
+            return Err(CairlError::Config(format!("empty mixture spec {spec:?}")));
+        }
+        Ok(MixtureSpec { entries })
+    }
+
+    /// The `(env_id, lanes)` components in lane order.
+    pub fn entries(&self) -> &[(String, usize)] {
+        &self.entries
+    }
+
+    /// Total lane count across all components.
+    pub fn total_lanes(&self) -> usize {
+        self.entries.iter().map(|(_, n)| n).sum()
+    }
+
+    /// Construct the lane-ordered env list (lane `i` runs the `i`-th
+    /// env of the flattened spec).
+    pub fn build_envs(&self) -> Result<Vec<DynEnv>> {
+        Ok(self.build_labeled_envs()?.into_iter().map(|(_, e)| e).collect())
+    }
+
+    /// [`MixtureSpec::build_envs`] paired with each lane's registry id —
+    /// the labels `lane_specs()` should carry (an env's own
+    /// [`Env`](crate::core::env::Env)`::id` reports wrapper composition
+    /// like `TimeLimit(CartPole-v1, 500)`, not the registry id).
+    pub fn build_labeled_envs(&self) -> Result<Vec<(String, DynEnv)>> {
+        let mut envs = Vec::with_capacity(self.total_lanes());
+        for (id, count) in &self.entries {
+            for _ in 0..*count {
+                envs.push((id.clone(), make(id)?));
+            }
+        }
+        Ok(envs)
+    }
+
+    /// Render back to the canonical `id:count,id:count` spelling.
+    pub fn render(&self) -> String {
+        self.entries
+            .iter()
+            .map(|(id, count)| format!("{id}:{count}"))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -178,6 +283,52 @@ mod tests {
         dedup.sort_unstable();
         dedup.dedup();
         assert_eq!(ids.len(), dedup.len());
+    }
+
+    #[test]
+    fn mixture_spec_parses_and_builds_lane_ordered_envs() {
+        let spec = MixtureSpec::parse("CartPole-v1:2, Script/CartPole-v1:1,Acrobot-v1").unwrap();
+        assert_eq!(spec.total_lanes(), 4);
+        assert_eq!(spec.entries()[1], ("Script/CartPole-v1".to_string(), 1));
+        assert_eq!(spec.entries()[2], ("Acrobot-v1".to_string(), 1));
+        let envs = spec.build_labeled_envs().unwrap();
+        assert_eq!(envs.len(), 4);
+        // Labels are the registry ids; the envs themselves report their
+        // wrapper-composed Env::id.
+        assert_eq!(envs[0].0, "CartPole-v1");
+        assert_eq!(envs[0].1.id(), "TimeLimit(CartPole-v1, 500)");
+        assert_eq!(envs[3].0, "Acrobot-v1");
+        assert_eq!(spec.build_envs().unwrap().len(), 4);
+        assert_eq!(spec.render(), "CartPole-v1:2,Script/CartPole-v1:1,Acrobot-v1:1");
+    }
+
+    #[test]
+    fn mixture_spec_rejects_bad_input() {
+        assert!(matches!(
+            MixtureSpec::parse("CartPole-v1:0"),
+            Err(CairlError::Config(_))
+        ));
+        assert!(matches!(
+            MixtureSpec::parse("CartPole-v1:two"),
+            Err(CairlError::Config(_))
+        ));
+        assert!(matches!(
+            MixtureSpec::parse("NoSuchEnv-v0:4"),
+            Err(CairlError::UnknownEnv(_))
+        ));
+        assert!(MixtureSpec::parse("CartPole-v1:2,,Acrobot-v1:2").is_err());
+    }
+
+    #[test]
+    fn mixture_detection_leaves_bare_ids_alone() {
+        assert!(!MixtureSpec::is_mixture("CartPole-v1"));
+        assert!(!MixtureSpec::is_mixture("Script/CartPole-v1"));
+        assert!(MixtureSpec::is_mixture("CartPole-v1:32"));
+        assert!(MixtureSpec::is_mixture("CartPole-v1:32,Acrobot-v1:16"));
+        // No registered id may ever contain the mixture metacharacters.
+        for (id, _) in list_envs() {
+            assert!(!MixtureSpec::is_mixture(id), "{id}");
+        }
     }
 
     #[test]

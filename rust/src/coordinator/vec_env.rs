@@ -1,5 +1,6 @@
 //! Vectorised environment execution: N environments stepped as one
-//! batch, sequentially or across worker threads.
+//! batch, sequentially — the bit-exact reference the threaded pools are
+//! tested against.
 //!
 //! The invariant the property tests pin down: a `VecEnv` over N
 //! identically-seeded environments produces *exactly* the trajectories of
@@ -7,27 +8,55 @@
 //! pure performance transform, never a semantics change.  Auto-reset
 //! follows the standard vector-env convention: when a lane finishes, the
 //! returned observation is the *first observation of the next episode*.
+//!
+//! Lanes may run **different environments** ([`VecEnv::from_envs`], the
+//! scenario-mixture constructor): observations are padded to the widest
+//! lane and [`BatchedExecutor::lane_specs`] describes the layout — see
+//! the [`crate::coordinator::pool`] module docs.
 
-use crate::coordinator::pool::{BatchedExecutor, EnvPool};
+use crate::coordinator::pool::{BatchedExecutor, LaneSpec};
 use crate::core::env::{Env, Transition};
 use crate::core::spaces::{Action, Space};
 
-/// A batch of homogeneous environments with auto-reset.
+/// A batch of environments with auto-reset, stepped sequentially.
 pub struct VecEnv<E: Env> {
     envs: Vec<E>,
-    obs_dim: usize,
+    specs: Vec<LaneSpec>,
+    padded: usize,
 }
 
 impl<E: Env> VecEnv<E> {
-    /// Build from a factory; lane `i` is seeded `base_seed + i`.
+    /// Build a homogeneous batch from a factory; lane `i` is seeded
+    /// `base_seed + i`.
     pub fn new(n: usize, base_seed: u64, factory: impl Fn() -> E) -> VecEnv<E> {
         assert!(n > 0);
-        let mut envs: Vec<E> = (0..n).map(|_| factory()).collect();
+        let envs: Vec<E> = (0..n).map(|_| factory()).collect();
+        VecEnv::from_envs(envs, base_seed)
+    }
+
+    /// Build from an explicit lane-ordered env list — the
+    /// scenario-mixture constructor.  Lane `i` runs `envs[i]` seeded
+    /// `base_seed + i`; observations are padded to the widest lane with
+    /// zeroed tails.  Lane labels come from [`Env::id`]; use
+    /// [`VecEnv::from_labeled_envs`] to keep registry ids.
+    pub fn from_envs(envs: Vec<E>, base_seed: u64) -> VecEnv<E> {
+        let ids = crate::coordinator::pool::own_ids(&envs);
+        VecEnv::from_labeled_envs(ids, envs, base_seed)
+    }
+
+    /// [`VecEnv::from_envs`] with explicit lane labels (`ids[i]` names
+    /// lane `i` in [`BatchedExecutor::lane_specs`]).
+    pub fn from_labeled_envs(ids: Vec<String>, mut envs: Vec<E>, base_seed: u64) -> VecEnv<E> {
+        assert!(!envs.is_empty());
         for (i, env) in envs.iter_mut().enumerate() {
             env.seed(base_seed + i as u64);
         }
-        let obs_dim = envs[0].obs_dim();
-        VecEnv { envs, obs_dim }
+        let (specs, padded) = crate::coordinator::pool::lane_layout(&envs, &ids);
+        VecEnv {
+            envs,
+            specs,
+            padded,
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -38,19 +67,24 @@ impl<E: Env> VecEnv<E> {
         self.envs.is_empty()
     }
 
+    /// Padded per-lane observation length (the widest lane's `obs_dim`).
     pub fn obs_dim(&self) -> usize {
-        self.obs_dim
+        self.padded
     }
 
+    /// Lane 0's action space (the shared space of a homogeneous batch).
     pub fn action_space(&self) -> Space {
         self.envs[0].action_space()
     }
 
     /// Reset every lane; `obs` is `[n * obs_dim]`.
     pub fn reset_into(&mut self, obs: &mut [f32]) {
-        let d = self.obs_dim;
+        let d = self.padded;
         for (i, env) in self.envs.iter_mut().enumerate() {
-            env.reset_into(&mut obs[i * d..(i + 1) * d]);
+            let slot = &mut obs[i * d..(i + 1) * d];
+            let (lane_obs, tail) = slot.split_at_mut(self.specs[i].obs_dim);
+            env.reset_into(lane_obs);
+            tail.fill(0.0);
         }
     }
 
@@ -64,14 +98,16 @@ impl<E: Env> VecEnv<E> {
     ) {
         assert_eq!(actions.len(), self.envs.len());
         assert_eq!(transitions.len(), self.envs.len());
-        let d = self.obs_dim;
+        let d = self.padded;
         for (i, env) in self.envs.iter_mut().enumerate() {
-            let lane_obs = &mut obs[i * d..(i + 1) * d];
+            let slot = &mut obs[i * d..(i + 1) * d];
+            let (lane_obs, tail) = slot.split_at_mut(self.specs[i].obs_dim);
             let t = env.step_into(&actions[i], lane_obs);
             transitions[i] = t;
             if t.done || t.truncated {
                 env.reset_into(lane_obs);
             }
+            tail.fill(0.0);
         }
     }
 
@@ -92,6 +128,10 @@ impl<E: Env> BatchedExecutor for VecEnv<E> {
         VecEnv::obs_dim(self)
     }
 
+    fn lane_specs(&self) -> &[LaneSpec] {
+        &self.specs
+    }
+
     fn action_space(&self) -> Space {
         VecEnv::action_space(self)
     }
@@ -110,37 +150,10 @@ impl<E: Env> BatchedExecutor for VecEnv<E> {
     }
 }
 
-/// Step a workload of `total_steps` random-action steps across `threads`
-/// persistent workers, one lane per worker (the throughput mode behind
-/// the Fig.-1 aggregate numbers).  Returns total steps actually executed.
-///
-/// Since the executor refactor this runs on [`EnvPool`]'s worker-side
-/// bulk rollout ([`EnvPool::random_rollout`]): workers are persistent,
-/// but the loop itself is free-running — one barrier for the whole
-/// workload, not one per step — so the per-step cost matches the
-/// throwaway-thread implementation this replaced while the pool stays
-/// reusable.  Lane seeding (`base_seed + lane`) and the per-lane action
-/// streams match the old behaviour exactly.
-pub fn parallel_random_steps<E, F>(
-    threads: usize,
-    total_steps: u64,
-    base_seed: u64,
-    factory: F,
-) -> u64
-where
-    E: Env + Send + 'static,
-    F: FnMut() -> E,
-{
-    assert!(threads > 0);
-    let per_lane = total_steps / threads as u64;
-    let mut pool = EnvPool::new(threads, base_seed, threads, factory);
-    pool.random_rollout(per_lane)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::envs::CartPole;
+    use crate::envs::{CartPole, MountainCar};
     use crate::wrappers::TimeLimit;
 
     #[test]
@@ -198,17 +211,41 @@ mod tests {
     }
 
     #[test]
-    fn parallel_steps_complete() {
-        let total = parallel_random_steps(4, 40_000, 7, || {
-            TimeLimit::new(CartPole::new(), 200)
-        });
-        assert_eq!(total, 40_000);
-    }
+    fn mixture_lanes_pad_to_the_widest_and_zero_the_tail() {
+        // CartPole (4) + MountainCar (2): padded width 4.
+        let envs: Vec<crate::core::env::DynEnv> = vec![
+            Box::new(TimeLimit::new(CartPole::new(), 50)),
+            Box::new(TimeLimit::new(MountainCar::new(), 50)),
+        ];
+        let mut v = VecEnv::from_envs(envs, 7);
+        assert_eq!(v.obs_dim(), 4);
+        let specs = BatchedExecutor::lane_specs(&v).to_vec();
+        // Unlabeled construction falls back to the envs' own (wrapper
+        // composed) ids; registry mixtures use `from_labeled_envs`.
+        assert_eq!(specs[0].env_id, "TimeLimit(CartPole-v1, 50)");
+        assert_eq!(specs[1].obs_dim, 2);
+        assert_eq!(specs[1].offset, 4);
 
-    #[test]
-    fn parallel_single_thread_equals_request() {
-        let total =
-            parallel_random_steps(1, 5_000, 3, || TimeLimit::new(CartPole::new(), 200));
-        assert_eq!(total, 5_000);
+        // The mixture lane must match a lone MountainCar seeded 7 + 1.
+        let mut single = TimeLimit::new(MountainCar::new(), 50);
+        single.seed(8);
+        let mut obs = vec![f32::NAN; 2 * 4];
+        let mut single_obs = vec![0.0f32; 2];
+        let mut tr = vec![Transition::default(); 2];
+        v.reset_into(&mut obs);
+        single.reset_into(&mut single_obs);
+        assert_eq!(&obs[4..6], &single_obs[..]);
+        assert_eq!(&obs[6..8], &[0.0, 0.0]);
+        for step in 0..120 {
+            let actions = [Action::Discrete(step % 2), Action::Discrete(step % 3)];
+            v.step_into(&actions, &mut obs, &mut tr);
+            let t = single.step_into(&actions[1], &mut single_obs);
+            if t.done || t.truncated {
+                single.reset_into(&mut single_obs);
+            }
+            assert_eq!(tr[1], t, "step {step}");
+            assert_eq!(&obs[4..6], &single_obs[..], "step {step}");
+            assert_eq!(&obs[6..8], &[0.0, 0.0], "step {step}: tail must stay zero");
+        }
     }
 }

@@ -29,10 +29,17 @@
 //! (persistent-worker threads, barrier per batch, trajectories identical
 //! to `VecEnv` for any thread count) and
 //! [`coordinator::pool::AsyncEnvPool`] (workers run ahead over a
-//! ready-queue, EnvPool-style `send_actions`/`recv_batch`).  Workloads
+//! ready-queue, EnvPool-style `send_actions`/`recv_batch` with zero-copy
+//! per-lane slots — steady state allocates nothing).  Workloads
 //! select an executor via [`coordinator::config::ExecutorSettings`] or
 //! `cairl run --executor pool --lanes 1024`; see README §"Choosing an
 //! executor".
+//!
+//! Pools may be **scenario mixtures** — per-lane env ids behind the same
+//! interface (`cairl run --env "CartPole-v1:32,Acrobot-v1:16"`), with
+//! observations padded to the widest lane and
+//! [`coordinator::pool::BatchedExecutor::lane_specs`] describing the
+//! per-lane layout; see README §"Scenario mixtures".
 //!
 //! ## Quickstart
 //!
@@ -84,8 +91,8 @@ pub use crate::coordinator::registry::{list_envs, make};
 
 /// Everything a typical experiment needs.
 pub mod prelude {
-    pub use crate::coordinator::pool::{AsyncEnvPool, BatchedExecutor, EnvPool};
-    pub use crate::coordinator::registry::{list_envs, make};
+    pub use crate::coordinator::pool::{AsyncEnvPool, BatchedExecutor, EnvPool, LaneSpec};
+    pub use crate::coordinator::registry::{list_envs, make, MixtureSpec};
     pub use crate::coordinator::vec_env::VecEnv;
     pub use crate::core::env::{DynEnv, Env, Step};
     pub use crate::core::rng::Pcg32;

@@ -14,6 +14,7 @@ use cairl::coordinator::experiment::{
     build_executor, run_batched_workload, run_stepping_workload, ExecutorKind,
     RenderMode,
 };
+use cairl::coordinator::registry::MixtureSpec;
 use cairl::core::env::Env;
 use cairl::core::rng::Pcg32;
 use cairl::energy::EnergyTracker;
@@ -77,13 +78,18 @@ USAGE: cairl <command> [flags]
 
 COMMANDS:
   list-envs                       list every registered environment id
-  run        --env ID --steps N --seed S [--render] [--ascii]
+  run        --env SPEC --steps N --seed S [--render] [--ascii]
              [--executor vec|pool|pool-async --lanes N --threads T]
              [--config FILE.json]
                                   random-action stepping workload + throughput;
-                                  lanes > 1 runs the batched executor layer;
-                                  FILE.json's \"executor\" block sets the
-                                  defaults for --executor/--lanes/--threads
+                                  SPEC is a registry id (CartPole-v1) or a
+                                  scenario mixture with per-lane env ids
+                                  (\"CartPole-v1:32,Acrobot-v1:16\" — lane
+                                  counts come from the spec, --lanes is
+                                  ignored); lanes > 1 or a mixture runs the
+                                  batched executor layer; FILE.json's
+                                  \"executor\" block sets the defaults for
+                                  --executor/--lanes/--threads
   train      --env NAME [--seed S] [--max-steps N] [--config FILE.json]
                                   train DQN via the PJRT artifacts
                                   (NAME: cartpole|mountaincar|acrobot|pendulum|multitask)
@@ -122,12 +128,21 @@ fn main() -> Result<()> {
             let lanes =
                 args.u64("lanes", file_cfg.executor.lanes as u64)?.max(1) as usize;
             let executor = args.str("executor", &file_cfg.executor.kind);
-            if lanes > 1 || executor != "vec" {
+            // A mixture spec always takes the batched path: its per-lane
+            // env ids are meaningless to the single-env loop.
+            let mixture = MixtureSpec::is_mixture(&env_id);
+            if lanes > 1 || executor != "vec" || mixture {
                 // Batched path: flip executors without touching the workload.
                 if args.flag("render") || args.flag("ascii") {
                     eprintln!(
                         "note: --render/--ascii apply to the single-env path and \
                          are ignored by the batched executor"
+                    );
+                }
+                if mixture && args.opt("lanes").is_some() {
+                    eprintln!(
+                        "note: --lanes is ignored for mixture specs \
+                         (lane counts come from the spec)"
                     );
                 }
                 let kind = ExecutorKind::parse(&executor).ok_or_else(|| {
@@ -143,6 +158,7 @@ fn main() -> Result<()> {
                     };
                 let mut exec = build_executor(&env_id, kind, lanes, threads, seed)
                     .map_err(|e| anyhow!("{e}"))?;
+                let lanes = exec.num_lanes();
                 let steps_per_lane = (steps / lanes as u64).max(1);
                 let r = run_batched_workload(exec.as_mut(), steps_per_lane, seed);
                 println!(

@@ -373,6 +373,22 @@ pub fn pendulum() -> ScriptEnv {
     )
 }
 
+/// The script-runner registry ids, in registration order.
+///
+/// These ids participate in the scenario-mixture namespace like any
+/// other registered env: `"CartPole-v1:32,Script/CartPole-v1:16"` runs
+/// native and interpreted lanes side by side in one pool (the
+/// `rust/tests/mixture_pool.rs` suite pins the cross-runner
+/// determinism of exactly that shape).
+pub fn ids() -> [&'static str; 4] {
+    [
+        "Script/CartPole-v1",
+        "Script/MountainCar-v0",
+        "Script/Acrobot-v1",
+        "Script/Pendulum-v1",
+    ]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

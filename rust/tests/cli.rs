@@ -154,6 +154,38 @@ fn run_honors_executor_config_file() {
 }
 
 #[test]
+fn run_mixture_spec_selects_batched_path_with_spec_lanes() {
+    let (stdout, stderr, ok) = cairl(&[
+        "run", "--env", "CartPole-v1:3,Acrobot-v1:2", "--steps", "500",
+        "--executor", "pool", "--threads", "2",
+    ]);
+    assert!(ok, "{stdout}\n{stderr}");
+    // 5 lanes come from the spec, not --lanes.
+    assert!(stdout.contains("[pool x 5 lanes]"), "{stdout}");
+    assert!(stdout.contains("500 lane-steps"), "{stdout}");
+}
+
+#[test]
+fn run_mixture_spec_ignores_lanes_flag_with_a_note() {
+    let (stdout, stderr, ok) = cairl(&[
+        "run", "--env", "CartPole-v1:2,MountainCar-v0:2", "--steps", "400",
+        "--lanes", "64",
+    ]);
+    assert!(ok, "{stdout}\n{stderr}");
+    assert!(stdout.contains("x 4 lanes]"), "{stdout}");
+    assert!(stderr.contains("--lanes is ignored"), "{stderr}");
+}
+
+#[test]
+fn run_rejects_bad_mixture_spec() {
+    let (_, stderr, ok) = cairl(&[
+        "run", "--env", "CartPole-v1:0", "--steps", "100",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("zero lanes"), "{stderr}");
+}
+
+#[test]
 fn run_rejects_unknown_executor() {
     let (_, stderr, ok) = cairl(&[
         "run", "--env", "CartPole-v1", "--steps", "100", "--executor", "warp",

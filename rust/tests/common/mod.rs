@@ -1,0 +1,16 @@
+//! Helpers shared by the executor integration suites (not a test
+//! binary itself: `tests/common/` is only compiled where `mod common;`
+//! pulls it in).
+
+/// Worker-thread counts exercised by the determinism tests:
+/// `CAIRL_TEST_THREADS=<t>` pins a single count (the CI determinism
+/// matrix runs 1, 2, 4 and 8), otherwise a 1/2/4 sweep runs locally.
+pub fn test_threads() -> Vec<usize> {
+    match std::env::var("CAIRL_TEST_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+    {
+        Some(t) if t > 0 => vec![t],
+        _ => vec![1, 2, 4],
+    }
+}

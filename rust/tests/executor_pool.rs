@@ -8,6 +8,13 @@
 //! registry exposes, auto-reset included.  The async-mode tests pin the
 //! ready-queue semantics: every lane makes progress and each episode
 //! end is reported exactly once.
+//!
+//! Thread counts under test default to 1/2/4; the CI determinism matrix
+//! re-runs this suite pinned to each of 1, 2, 4 and 8 via
+//! `CAIRL_TEST_THREADS=<t>` so every per-thread configuration gets its
+//! own hard gate.
+
+mod common;
 
 use cairl::coordinator::pool::{AsyncEnvPool, BatchedExecutor, EnvPool};
 use cairl::coordinator::vec_env::VecEnv;
@@ -17,8 +24,11 @@ use cairl::core::spaces::Action;
 use cairl::envs::CartPole;
 use cairl::wrappers::TimeLimit;
 use cairl::{list_envs, make};
+use common::test_threads;
 
-const LANES: usize = 4;
+// 8 lanes so every CI matrix leg (1/2/4/8 threads) gets a distinct
+// worker partitioning — pools clamp threads to the lane count.
+const LANES: usize = 8;
 const STEPS: usize = 220;
 const BASE_SEED: u64 = 7;
 
@@ -62,7 +72,7 @@ fn pool_sync_is_bit_identical_to_vec_env_for_every_registered_env() {
         let tape = action_tape(id, STEPS, LANES);
         let mut reference = VecEnv::new(LANES, BASE_SEED, || make(id).unwrap());
         let (obs_ref, tr_ref) = trajectory(&mut reference, &tape);
-        for threads in [1usize, 2, 4] {
+        for threads in test_threads() {
             let mut pool =
                 EnvPool::new(LANES, BASE_SEED, threads, || make(id).unwrap());
             let (obs, tr) = trajectory(&mut pool, &tape);
@@ -86,11 +96,13 @@ fn async_pool_lockstep_is_bit_identical_on_representative_envs() {
         let tape = action_tape(id, STEPS, LANES);
         let mut reference = VecEnv::new(LANES, BASE_SEED, || make(id).unwrap());
         let (obs_ref, tr_ref) = trajectory(&mut reference, &tape);
-        let mut pool =
-            AsyncEnvPool::new(LANES, BASE_SEED, 2, || make(id).unwrap());
-        let (obs, tr) = trajectory(&mut pool, &tape);
-        assert_eq!(tr_ref, tr, "{id}: async transitions diverged");
-        assert_eq!(obs_ref, obs, "{id}: async observations diverged");
+        for threads in test_threads() {
+            let mut pool =
+                AsyncEnvPool::new(LANES, BASE_SEED, threads, || make(id).unwrap());
+            let (obs, tr) = trajectory(&mut pool, &tape);
+            assert_eq!(tr_ref, tr, "{id}: async transitions diverged at {threads} threads");
+            assert_eq!(obs_ref, obs, "{id}: async observations diverged at {threads} threads");
+        }
     }
 }
 
@@ -122,11 +134,13 @@ fn executor_reset_is_repeatable_mid_run() {
     };
 
     let mut vec_env = VecEnv::new(LANES, 11, factory);
-    let mut sync_pool = EnvPool::new(LANES, 11, 2, factory);
-    let mut async_pool = AsyncEnvPool::new(LANES, 11, 2, factory);
     let reference = run(&mut vec_env);
-    assert_eq!(reference, run(&mut sync_pool));
-    assert_eq!(reference, run(&mut async_pool));
+    for threads in test_threads() {
+        let mut sync_pool = EnvPool::new(LANES, 11, threads, factory);
+        let mut async_pool = AsyncEnvPool::new(LANES, 11, threads, factory);
+        assert_eq!(reference, run(&mut sync_pool), "sync at {threads} threads");
+        assert_eq!(reference, run(&mut async_pool), "async at {threads} threads");
+    }
 }
 
 #[test]
@@ -148,10 +162,10 @@ fn async_native_api_all_lanes_progress_and_episode_ends_report_once() {
     while total < target {
         let batch = pool.recv_batch(n);
         let mut sends = Vec::new();
-        for (j, &lane) in batch.lanes.iter().enumerate() {
+        for (j, &lane) in batch.lanes().iter().enumerate() {
             received[lane].push((
-                batch.obs[j * 4..(j + 1) * 4].to_vec(),
-                batch.transitions[j],
+                batch.obs_unpadded(j).to_vec(),
+                batch.transitions()[j],
             ));
             total += 1;
             if sent[lane] < per_lane {
@@ -193,4 +207,38 @@ fn async_native_api_all_lanes_progress_and_episode_ends_report_once() {
         assert_eq!(got_ends, ends, "lane {lane}: episode ends reported {got_ends}x");
         assert_eq!(received[lane], expected, "lane {lane}: stream diverged");
     }
+}
+
+#[test]
+fn async_native_api_serves_scenario_mixtures() {
+    // A mixture through the native ready-queue API: lane specs are
+    // reachable per entry, unpadded views have per-lane widths, and the
+    // padded tails read back zero.
+    let spec = cairl::coordinator::registry::MixtureSpec::parse(
+        "CartPole-v1:2,MountainCar-v0:2",
+    )
+    .unwrap();
+    let (ids, envs): (Vec<String>, Vec<_>) =
+        spec.build_labeled_envs().unwrap().into_iter().unzip();
+    let mut apool = AsyncEnvPool::from_labeled_envs(ids, envs, 9, 2);
+    let n = apool.num_lanes();
+    let mut rounds = 0;
+    let mut seen_mountain_car = false;
+    while rounds < 50 {
+        let batch = apool.recv_batch(n);
+        let mut sends = Vec::new();
+        for (j, &lane) in batch.lanes().iter().enumerate() {
+            let spec = batch.lane_spec(j).clone();
+            assert_eq!(batch.obs(j).len(), 4, "padded width");
+            assert_eq!(batch.obs_unpadded(j).len(), spec.obs_dim);
+            if spec.env_id == "MountainCar-v0" {
+                seen_mountain_car = true;
+                assert_eq!(&batch.obs(j)[2..], &[0.0, 0.0], "tail must stay zero");
+            }
+            sends.push((lane, Action::Discrete(0)));
+        }
+        rounds += 1;
+        apool.send_actions(&sends);
+    }
+    assert!(seen_mountain_car, "mixture lanes must all surface");
 }

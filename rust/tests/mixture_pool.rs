@@ -1,0 +1,198 @@
+//! Property tests: scenario-mixture pools.
+//!
+//! The heterogeneous-pool contract (ISSUE 2): a mixture pool's per-lane
+//! trajectories are **bit-identical** to N single-env pools constructed
+//! with the same per-lane seeds — across every executor kind and thread
+//! count, through auto-reset boundaries — and the zero-padded tail of
+//! every narrow lane stays zero no matter what garbage the caller's
+//! batch buffer held.
+//!
+//! Thread counts default to 1/2/4; the CI determinism matrix re-runs
+//! the suite with `CAIRL_TEST_THREADS` pinned to each of 1, 2, 4, 8.
+
+mod common;
+
+use cairl::coordinator::experiment::{build_mixture_executor, ExecutorKind};
+use cairl::coordinator::pool::BatchedExecutor;
+use cairl::coordinator::registry::MixtureSpec;
+use cairl::coordinator::vec_env::VecEnv;
+use cairl::core::env::Transition;
+use cairl::core::rng::Pcg32;
+use cairl::core::spaces::Action;
+use cairl::make;
+use common::test_threads;
+
+const BASE_SEED: u64 = 41;
+/// Enough steps to cross MountainCar-v0's 200-step truncation boundary
+/// and many random-action CartPole terminations (auto-reset coverage).
+const STEPS: usize = 230;
+
+/// The reference mixture: wide + narrow + interpreted lanes.  8 lanes
+/// so every CI matrix leg (1/2/4/8 threads) gets a distinct worker
+/// partitioning — pools clamp threads to the lane count.
+const SPEC: &str = "CartPole-v1:4,MountainCar-v0:2,Script/CartPole-v1:2";
+
+/// Per-step, per-lane action tape drawn from each lane's own action
+/// space with a lane-keyed rng stream (tape is independent of executor
+/// and thread count).
+fn mixture_tape(spec: &MixtureSpec, steps: usize) -> Vec<Vec<Action>> {
+    let mut spaces = Vec::new();
+    for (id, count) in spec.entries() {
+        let env = make(id).unwrap();
+        for _ in 0..*count {
+            spaces.push(env.action_space());
+        }
+    }
+    let mut rngs: Vec<Pcg32> = (0..spaces.len())
+        .map(|lane| Pcg32::new(0x7a9e_5eed, lane as u64 + 1))
+        .collect();
+    (0..steps)
+        .map(|_| {
+            spaces
+                .iter()
+                .zip(rngs.iter_mut())
+                .map(|(space, rng)| space.sample(rng))
+                .collect()
+        })
+        .collect()
+}
+
+/// Replay the tape on a mixture executor, poisoning the batch buffer
+/// before every call (the executor must overwrite lanes and re-zero
+/// tails), returning per-lane unpadded (obs, transition) streams.
+fn mixture_trajectory(
+    exec: &mut dyn BatchedExecutor,
+    tape: &[Vec<Action>],
+) -> Vec<Vec<(Vec<f32>, Transition)>> {
+    let n = exec.num_lanes();
+    let padded = exec.obs_dim();
+    let specs = exec.lane_specs().to_vec();
+    let mut obs = vec![f32::NAN; n * padded];
+    let mut tr = vec![Transition::default(); n];
+    let mut streams: Vec<Vec<(Vec<f32>, Transition)>> = vec![Vec::new(); n];
+    exec.reset_into(&mut obs);
+    for (lane, spec) in specs.iter().enumerate() {
+        let slot = &obs[spec.offset..spec.offset + padded];
+        assert!(
+            slot[spec.obs_dim..].iter().all(|&v| v == 0.0),
+            "lane {lane}: padded tail not zeroed on reset"
+        );
+        streams[lane].push((slot[..spec.obs_dim].to_vec(), Transition::default()));
+    }
+    for actions in tape {
+        obs.fill(f32::NAN); // executors must fully own the buffer
+        exec.step_into(actions, &mut obs, &mut tr);
+        for (lane, spec) in specs.iter().enumerate() {
+            let slot = &obs[spec.offset..spec.offset + padded];
+            assert!(
+                slot[spec.obs_dim..].iter().all(|&v| v == 0.0),
+                "lane {lane}: padded tail not zeroed on step"
+            );
+            streams[lane].push((slot[..spec.obs_dim].to_vec(), tr[lane]));
+        }
+    }
+    streams
+}
+
+/// The single-env references: one homogeneous `VecEnv` per mixture
+/// component, seeded with the same per-lane seeds the mixture assigns
+/// (`BASE_SEED + global_lane`), replaying the same per-lane actions.
+fn reference_trajectories(
+    spec: &MixtureSpec,
+    tape: &[Vec<Action>],
+) -> Vec<Vec<(Vec<f32>, Transition)>> {
+    let mut streams = Vec::new();
+    let mut lane0 = 0usize;
+    for (id, count) in spec.entries() {
+        let mut v = VecEnv::new(*count, BASE_SEED + lane0 as u64, || make(id).unwrap());
+        let d = BatchedExecutor::obs_dim(&v);
+        let mut obs = vec![0.0f32; count * d];
+        let mut tr = vec![Transition::default(); *count];
+        let mut comp: Vec<Vec<(Vec<f32>, Transition)>> = vec![Vec::new(); *count];
+        v.reset_into(&mut obs);
+        for (k, stream) in comp.iter_mut().enumerate() {
+            stream.push((obs[k * d..(k + 1) * d].to_vec(), Transition::default()));
+        }
+        let mut actions = Vec::with_capacity(*count);
+        for step_actions in tape {
+            actions.clear();
+            actions.extend_from_slice(&step_actions[lane0..lane0 + count]);
+            v.step_into(&actions, &mut obs, &mut tr);
+            for (k, stream) in comp.iter_mut().enumerate() {
+                stream.push((obs[k * d..(k + 1) * d].to_vec(), tr[k]));
+            }
+        }
+        streams.extend(comp);
+        lane0 += count;
+    }
+    streams
+}
+
+#[test]
+fn mixture_lanes_are_bit_identical_to_single_env_pools() {
+    let spec = MixtureSpec::parse(SPEC).unwrap();
+    let tape = mixture_tape(&spec, STEPS);
+    let reference = reference_trajectories(&spec, &tape);
+
+    for kind in [
+        ExecutorKind::Sequential,
+        ExecutorKind::PoolSync,
+        ExecutorKind::PoolAsync,
+    ] {
+        for threads in test_threads() {
+            let mut exec =
+                build_mixture_executor(&spec, kind, threads, BASE_SEED).unwrap();
+            let streams = mixture_trajectory(exec.as_mut(), &tape);
+            assert_eq!(streams.len(), reference.len());
+            for (lane, (got, want)) in streams.iter().zip(&reference).enumerate() {
+                assert_eq!(
+                    got, want,
+                    "{kind:?} at {threads} threads: lane {lane} diverged from its \
+                     single-env reference"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn mixture_crosses_auto_reset_boundaries() {
+    // The tape is long enough that every component finishes episodes:
+    // assert it actually happened, so the bit-equality above is known to
+    // cover auto-reset boundaries rather than vacuously passing.
+    let spec = MixtureSpec::parse(SPEC).unwrap();
+    let tape = mixture_tape(&spec, STEPS);
+    let reference = reference_trajectories(&spec, &tape);
+    let mut lane0 = 0usize;
+    for (id, count) in spec.entries() {
+        for lane in lane0..lane0 + count {
+            let ends = reference[lane]
+                .iter()
+                .filter(|(_, t)| t.done || t.truncated)
+                .count();
+            assert!(
+                ends > 0,
+                "{id} lane {lane}: no episode ended in {STEPS} steps — \
+                 auto-reset boundaries not exercised"
+            );
+        }
+        lane0 += count;
+    }
+}
+
+#[test]
+fn every_script_env_participates_in_the_mixture_namespace() {
+    // Script-runner ids are first-class mixture components.
+    for id in cairl::script::envs::ids() {
+        let spec = MixtureSpec::parse(&format!("CartPole-v1:1,{id}:1")).unwrap();
+        let mut exec =
+            build_mixture_executor(&spec, ExecutorKind::PoolSync, 2, 3).unwrap();
+        assert_eq!(exec.num_lanes(), 2);
+        assert_eq!(exec.lane_specs()[1].env_id, id);
+        let tape = mixture_tape(&spec, 25);
+        let streams = mixture_trajectory(exec.as_mut(), &tape);
+        assert!(streams[1]
+            .iter()
+            .all(|(obs, _)| obs.iter().all(|v| v.is_finite())));
+    }
+}
