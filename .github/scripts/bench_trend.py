@@ -1,0 +1,111 @@
+#!/usr/bin/env python3
+"""Compare this run's BENCH_ci.json against the previous run's artifact.
+
+Usage: bench_trend.py <current_json> <previous_json_or_dir> [--threshold PCT]
+
+Pairs up the `steps_per_sec_lines` entries of the two documents by their
+shape (every digit run collapsed, so timing noise inside a label does
+not break the match), extracts the trailing `<number> steps/s` figure,
+and emits a GitHub `::warning::` annotation for every line whose
+throughput dropped by more than the threshold (default 20%, the
+ROADMAP's trend-tracking bar).  Regressions never fail the build — the
+CI bench runners are shared and quick-mode budgets are tiny — but the
+annotations make a real regression visible on the PR.
+
+Exit status: 0 always, unless the *current* document is unreadable.
+A missing previous artifact (first run, expired retention) is a no-op.
+"""
+
+import json
+import re
+import sys
+from pathlib import Path
+
+STEPS_RE = re.compile(r"([0-9][0-9_.,]*(?:e[+-]?[0-9]+)?)\s*steps/s")
+
+
+def normalise(line: str) -> str:
+    """Collapse digit runs so the same workload matches across runs."""
+    return re.sub(r"[0-9][0-9_.,]*", "#", line)
+
+
+def throughput(line: str) -> float | None:
+    m = STEPS_RE.search(line)
+    if not m:
+        return None
+    try:
+        return float(m.group(1).replace(",", "").replace("_", ""))
+    except ValueError:
+        return None
+
+
+def load_lines(path: Path) -> dict[str, float]:
+    doc = json.loads(path.read_text())
+    table: dict[str, float] = {}
+    for line in doc.get("steps_per_sec_lines", []):
+        value = throughput(line)
+        if value is not None and value > 0:
+            # Last write wins on duplicate shapes; that keeps pairing
+            # stable without inventing per-line identifiers.
+            table[normalise(line)] = value
+    return table
+
+
+def find_previous(arg: Path) -> Path | None:
+    if arg.is_file():
+        return arg
+    if arg.is_dir():
+        hits = sorted(arg.glob("**/BENCH_ci.json"))
+        if hits:
+            return hits[0]
+    return None
+
+
+def main() -> int:
+    args = [a for a in sys.argv[1:] if not a.startswith("--")]
+    threshold = 20.0
+    for flag in sys.argv[1:]:
+        if flag.startswith("--threshold"):
+            threshold = float(flag.split("=", 1)[1])
+    if len(args) != 2:
+        print(__doc__, file=sys.stderr)
+        return 2
+
+    current_path = Path(args[0])
+    current = load_lines(current_path)
+
+    previous_path = find_previous(Path(args[1]))
+    if previous_path is None:
+        print(f"bench_trend: no previous BENCH_ci.json under {args[1]!r}; skipping")
+        return 0
+    previous = load_lines(previous_path)
+
+    shared = sorted(set(current) & set(previous))
+    print(
+        f"bench_trend: comparing {len(shared)} shared workloads "
+        f"({len(current)} current, {len(previous)} previous, "
+        f"threshold {threshold:.0f}%)"
+    )
+    regressions = 0
+    for key in shared:
+        old, new = previous[key], current[key]
+        delta = 100.0 * (new - old) / old
+        marker = ""
+        if delta <= -threshold:
+            regressions += 1
+            marker = "  <-- REGRESSION"
+            print(
+                f"::warning title=bench throughput regression::"
+                f"{key.strip()} dropped {-delta:.0f}% "
+                f"({old:.0f} -> {new:.0f} steps/s)"
+            )
+        print(f"  {delta:+6.1f}%  {old:>12.0f} -> {new:>12.0f}  {key.strip()}{marker}")
+    if regressions:
+        print(f"bench_trend: {regressions} workload(s) regressed > {threshold:.0f}%")
+    else:
+        print("bench_trend: no regressions beyond threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -70,7 +70,10 @@ fn main() {
     let script_ns = ns(script.mean, script_steps);
     println!("static  (monomorphised): {static_ns:>9.1} ns/step");
     println!("dynamic (Box<dyn Env>):  {dyn_ns:>9.1} ns/step  ({:.2}x static)", dyn_ns / static_ns);
-    println!("script  (interpreted):   {script_ns:>9.1} ns/step  ({:.1}x static)", script_ns / static_ns);
+    println!(
+        "script  (interpreted):   {script_ns:>9.1} ns/step  ({:.1}x static)",
+        script_ns / static_ns
+    );
 
     // --- executor-layer dispatch: the same workload behind the
     // BatchedExecutor trait, sequential vs persistent-worker pools.

@@ -65,7 +65,10 @@ fn main() {
     let console_ratio = console_cairl.co2_ratio_vs(&console_gym);
     let render_ratio = render_cairl.co2_ratio_vs(&render_gym);
 
-    println!("\n{:<12} {:<11} {:>12} {:>12} {:>14}", "Measurement", "Environment", "CaiRL", "Gym", "Ratio");
+    println!(
+        "\n{:<12} {:<11} {:>12} {:>12} {:>14}",
+        "Measurement", "Environment", "CaiRL", "Gym", "Ratio"
+    );
     println!(
         "{:<12} {:<11} {:>12.3e} {:>12.3e} {:>14.1}",
         "CO2/kg", "Console", console_cairl.co2_kg, console_gym.co2_kg, console_ratio

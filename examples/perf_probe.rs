@@ -174,7 +174,10 @@ fn main() {
             // One loss readback at the end.
             let loss = bufs[19].to_literal_sync().unwrap().to_vec::<f32>().unwrap();
             let chained_us = t0.elapsed().as_micros() as f64 / n as f64;
-            println!("train step (buffer-chained):           {chained_us:>9.1} us (final loss {:.4})", loss[0]);
+            println!(
+                "train step (buffer-chained):           {chained_us:>9.1} us (final loss {:.4})",
+                loss[0]
+            );
             println!(
                 "DQN loop step (chained)    = {:.1} us -> {:.0} steps/s",
                 native_act_ns / 1e3 + chained_us,

@@ -187,9 +187,15 @@ impl ExecutorSettings {
 /// A full experiment description.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ExperimentConfig {
-    /// Registry id (e.g. "CartPole-v1") or a scenario-mixture spec
+    /// Registry id (e.g. "CartPole-v1", optionally with kwargs:
+    /// "CartPole-v1?max_steps=200") or a scenario-mixture spec
     /// (e.g. "CartPole-v1:32,Acrobot-v1:16") for batched workloads.
     pub env: String,
+    /// Declarative wrapper chain applied to every constructed env/lane,
+    /// one [`WrapperSpec`](crate::wrappers::WrapperSpec) item per
+    /// entry (e.g. `["TimeLimit(200)", "NormalizeObs"]`); validated
+    /// when the experiment builds its envs.
+    pub wrappers: Vec<String>,
     /// "dqn", "qtable" or "random".
     pub agent: String,
     /// Independent trials (paper: 100 for Fig. 1/2, 10 for Fig. 3).
@@ -209,6 +215,7 @@ impl Default for ExperimentConfig {
     fn default() -> Self {
         ExperimentConfig {
             env: "CartPole-v1".into(),
+            wrappers: Vec::new(),
             agent: "random".into(),
             trials: 1,
             seed: 0,
@@ -238,6 +245,16 @@ impl ExperimentConfig {
         if let Some(s) = v.get("env").and_then(Value::as_str) {
             cfg.env = s.to_string();
         }
+        if let Some(items) = v.get("wrappers").and_then(Value::as_array) {
+            for item in items {
+                let Some(s) = item.as_str() else {
+                    return Err(CairlError::Config(format!(
+                        "\"wrappers\" entries must be strings, got {item:?}"
+                    )));
+                };
+                cfg.wrappers.push(s.to_string());
+            }
+        }
         if let Some(s) = v.get("agent").and_then(Value::as_str) {
             cfg.agent = s.to_string();
         }
@@ -264,9 +281,23 @@ impl ExperimentConfig {
 
     /// Serialise (pretty enough for `cairl config`).
     pub fn render(&self) -> String {
+        let wrappers = self
+            .wrappers
+            .iter()
+            .map(|w| format!("{w:?}"))
+            .collect::<Vec<_>>()
+            .join(", ");
         format!(
-            "{{\n  \"env\": \"{}\",\n  \"agent\": \"{}\",\n  \"trials\": {},\n  \"seed\": {},\n  \"render\": {},\n  \"out_dir\": \"{}\",\n  \"dqn\": {{\n    \"epsilon_start\": {},\n    \"epsilon_final\": {},\n    \"epsilon_decay_steps\": {},\n    \"target_update_freq\": {},\n    \"memory_size\": {},\n    \"learn_start\": {},\n    \"train_every\": {},\n    \"max_steps\": {},\n    \"solve_return\": {},\n    \"solve_window\": {}\n  }},\n  \"executor\": {{\n    \"kind\": \"{}\",\n    \"lanes\": {},\n    \"threads\": {}\n  }}\n}}",
+            "{{\n  \"env\": \"{}\",\n  \"wrappers\": [{}],\n  \"agent\": \"{}\",\n  \
+             \"trials\": {},\n  \"seed\": {},\n  \"render\": {},\n  \"out_dir\": \"{}\",\n  \
+             \"dqn\": {{\n    \"epsilon_start\": {},\n    \"epsilon_final\": {},\n    \
+             \"epsilon_decay_steps\": {},\n    \"target_update_freq\": {},\n    \
+             \"memory_size\": {},\n    \"learn_start\": {},\n    \"train_every\": {},\n    \
+             \"max_steps\": {},\n    \"solve_return\": {},\n    \"solve_window\": {}\n  \
+             }},\n  \"executor\": {{\n    \"kind\": \"{}\",\n    \"lanes\": {},\n    \
+             \"threads\": {}\n  }}\n}}",
             self.env,
+            wrappers,
             self.agent,
             self.trials,
             self.seed,
@@ -362,6 +393,22 @@ mod tests {
         use crate::coordinator::experiment::ExecutorKind;
         assert_eq!(cfg.executor.to_kind().unwrap(), ExecutorKind::Sequential);
         assert!(cfg.executor.effective_threads() >= 1);
+    }
+
+    #[test]
+    fn parses_and_renders_wrappers_block() {
+        let src = r#"{"wrappers": ["TimeLimit(200)", "NormalizeObs"]}"#;
+        let cfg = ExperimentConfig::parse(src).unwrap();
+        assert_eq!(cfg.wrappers, vec!["TimeLimit(200)", "NormalizeObs"]);
+        use crate::wrappers::WrapperSpec;
+        let chain = WrapperSpec::parse_chain(&cfg.wrappers.join(",")).unwrap();
+        assert_eq!(chain.len(), 2);
+        let back = ExperimentConfig::parse(&cfg.render()).unwrap();
+        assert_eq!(back, cfg);
+        assert!(ExperimentConfig::parse(r#"{"wrappers": [1]}"#).is_err());
+        // A non-array value is ignored like every other wrong-typed field.
+        let lax = ExperimentConfig::parse(r#"{"wrappers": "TimeLimit(200)"}"#).unwrap();
+        assert!(lax.wrappers.is_empty());
     }
 
     #[test]

@@ -16,6 +16,7 @@ use crate::core::rng::Pcg32;
 use crate::core::spaces::Action;
 use crate::render::{Framebuffer, HardwareSim};
 use crate::tooling::stats::Summary;
+use crate::wrappers::{apply_wrappers, WrapperSpec};
 
 /// Which rendering path a stepping workload exercises (Fig. 1's rows).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -136,7 +137,8 @@ impl ExecutorKind {
 }
 
 /// Build a batched executor from an env spec.  `env_spec` is either a
-/// bare registry id (`"CartPole-v1"` — `lanes` homogeneous copies) or a
+/// bare registry id (`"CartPole-v1"` — `lanes` homogeneous copies,
+/// optionally parameterized: `"CartPole-v1?max_steps=200"`) or a
 /// scenario-mixture spec (`"CartPole-v1:32,Acrobot-v1:16"` — per-lane
 /// env ids in spec order; `lanes` is ignored because the spec carries
 /// its own counts).  Lane `i` is seeded `base_seed + i` on every
@@ -150,13 +152,37 @@ pub fn build_executor(
     threads: usize,
     base_seed: u64,
 ) -> Result<Box<dyn BatchedExecutor>> {
+    build_executor_wrapped(env_spec, kind, lanes, threads, base_seed, &[])
+}
+
+/// [`build_executor`] with a declarative wrapper chain applied to every
+/// lane (outside any wrappers the registry spec itself declares) — the
+/// machinery behind `cairl run --wrap` and the config `"wrappers"`
+/// block.  The empty chain is exactly [`build_executor`].
+pub fn build_executor_wrapped(
+    env_spec: &str,
+    kind: ExecutorKind,
+    lanes: usize,
+    threads: usize,
+    base_seed: u64,
+    wrappers: &[WrapperSpec],
+) -> Result<Box<dyn BatchedExecutor>> {
+    for wrapper in wrappers {
+        wrapper.validate()?;
+    }
     if MixtureSpec::is_mixture(env_spec) {
         let spec = MixtureSpec::parse(env_spec)?;
-        return build_mixture_executor(&spec, kind, threads, base_seed);
+        return build_mixture_executor_wrapped(&spec, kind, threads, base_seed, wrappers);
     }
-    // Validate the id once up front so the per-lane factory can't fail.
+    // Validate the spec once up front (id, kwargs, and builder errors)
+    // so the per-lane factory can't fail.
     let _ = registry::make(env_spec)?;
-    let factory = || registry::make(env_spec).expect("env id validated above");
+    let factory = || {
+        apply_wrappers(
+            registry::make(env_spec).expect("env spec validated above"),
+            wrappers,
+        )
+    };
     Ok(match kind {
         ExecutorKind::Sequential => Box::new(VecEnv::new(lanes, base_seed, factory)),
         ExecutorKind::PoolSync => {
@@ -176,8 +202,27 @@ pub fn build_mixture_executor(
     threads: usize,
     base_seed: u64,
 ) -> Result<Box<dyn BatchedExecutor>> {
-    let (ids, envs): (Vec<String>, Vec<_>) =
-        spec.build_labeled_envs()?.into_iter().unzip();
+    build_mixture_executor_wrapped(spec, kind, threads, base_seed, &[])
+}
+
+/// [`build_mixture_executor`] with a wrapper chain applied to every
+/// lane; lane labels keep the registry ids (wrapper composition is an
+/// implementation detail the labels should not leak).
+pub fn build_mixture_executor_wrapped(
+    spec: &MixtureSpec,
+    kind: ExecutorKind,
+    threads: usize,
+    base_seed: u64,
+    wrappers: &[WrapperSpec],
+) -> Result<Box<dyn BatchedExecutor>> {
+    for wrapper in wrappers {
+        wrapper.validate()?;
+    }
+    let (ids, envs): (Vec<String>, Vec<_>) = spec
+        .build_labeled_envs()?
+        .into_iter()
+        .map(|(id, env)| (id, apply_wrappers(env, wrappers)))
+        .unzip();
     Ok(match kind {
         ExecutorKind::Sequential => {
             Box::new(VecEnv::from_labeled_envs(ids, envs, base_seed))
@@ -396,6 +441,28 @@ mod tests {
         assert_eq!(seq.0, 5 * 60);
         assert_eq!(seq, run(ExecutorKind::PoolSync));
         assert_eq!(seq, run(ExecutorKind::PoolAsync));
+    }
+
+    #[test]
+    fn build_executor_accepts_parameterized_specs_and_wrap_chains() {
+        use crate::wrappers::WrapperSpec;
+        // "?max_steps=5" and an explicit --wrap TimeLimit(5) chain must
+        // produce the same workload counts: the 5-step cap dominates
+        // either way and the action streams are identical.
+        let kind = ExecutorKind::Sequential;
+        let mut short = build_executor("CartPole-v1?max_steps=5", kind, 2, 1, 0).unwrap();
+        let r = run_batched_workload(short.as_mut(), 50, 3);
+        assert!(r.episodes >= 10, "5-step cap must end many episodes");
+
+        let chain = [WrapperSpec::TimeLimit { max_steps: 5 }];
+        let mut wrapped = build_executor_wrapped("CartPole-v1", kind, 2, 1, 0, &chain).unwrap();
+        let rw = run_batched_workload(wrapped.as_mut(), 50, 3);
+        assert_eq!((r.steps, r.episodes), (rw.steps, rw.episodes));
+
+        // Invalid chains and kwargs fail fast, on every path.
+        let bad = [WrapperSpec::TimeLimit { max_steps: 0 }];
+        assert!(build_executor_wrapped("CartPole-v1", kind, 2, 1, 0, &bad).is_err());
+        assert!(build_executor("CartPole-v1?nope=1", kind, 2, 1, 0).is_err());
     }
 
     #[test]

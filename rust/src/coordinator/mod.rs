@@ -2,7 +2,9 @@
 //! and trial orchestration.
 //!
 //! This is the toolkit's L3 "coordinator" in the three-layer architecture:
-//! it owns env construction ([`registry`]), the experiment configuration
+//! it owns env construction ([`registry`] — a runtime [`registry::EnvSpec`]
+//! table with parameterized `make` and declarative wrapper chains), the
+//! experiment configuration
 //! surface ([`config`], Table I defaults), batched environment execution
 //! — the sequential [`vec_env`] reference and the persistent-worker
 //! [`pool`] executors behind one [`pool::BatchedExecutor`] interface —
@@ -17,5 +19,5 @@ pub mod registry;
 pub mod vec_env;
 
 pub use pool::{AsyncEnvPool, BatchedExecutor, EnvPool, LaneSpec};
-pub use registry::MixtureSpec;
+pub use registry::{EnvSpec, MixtureSpec};
 pub use vec_env::VecEnv;

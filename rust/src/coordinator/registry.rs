@@ -1,164 +1,512 @@
-//! The environment registry behind [`make`] — the paper's
-//! `cairl.make("CartPole-v1")` Gym-compatible entry point (Listing 2).
+//! The dynamic environment registry behind [`make`] — the paper's
+//! `cairl.make("CartPole-v1")` Gym-compatible entry point (Listing 2),
+//! redesigned around a first-class [`EnvSpec`].
 //!
-//! Native envs, the interpreted-script baseline envs (`Script/...`), the
-//! flash-runner games (`Flash/...`) and the puzzle runtime (`Puzzle/...`)
-//! all register here, giving one uniform id namespace across runners —
-//! the paper's "unified API for all environments" (§III-A Runners).
+//! Every environment is one **spec**: id, summary, typed kwarg defaults,
+//! a declarative [`WrapperSpec`] chain and a builder closure.  The
+//! registry is a process-wide `RwLock` table seeded with the built-in
+//! entries (native envs, the interpreted-script baselines `Script/...`,
+//! the flash-runner games `Flash/...` and the puzzle runtime
+//! `Puzzle/...`) and **extensible at runtime**:
+//!
+//! * [`register`] adds any [`EnvSpec`];
+//! * [`register_script`] compiles a MiniScript source into the
+//!   `Script/` namespace — `cairl run --register-script MyEnv=my.mpy`
+//!   makes `--env "Script/MyEnv:8"` work without recompiling;
+//! * [`make_with`] constructs with explicit kwargs, and [`make`] parses
+//!   Gym-style id kwargs uniformly (`"CartPole-v1?max_steps=200"`).
 //!
 //! The same namespace feeds **scenario mixtures** ([`MixtureSpec`]):
-//! `"CartPole-v1:32,Acrobot-v1:16"` describes a heterogeneous lane list
-//! that the batched executors run behind one interface (`cairl run
-//! --env "CartPole-v1:32,Acrobot-v1:16"`); any registered id — native,
-//! script, flash or puzzle — can appear as a mixture component.
+//! `"Script/MyEnv:8,CartPole-v1?max_steps=200:4"` describes a
+//! heterogeneous lane list that the batched executors run behind one
+//! interface; any registered id — native, script, flash, puzzle or
+//! runtime-registered — can appear as a component, parameterized or
+//! not.  Gym-standard time limits are part of the registered spec
+//! (CartPole-v1 is *defined* as 500-step-capped) exactly as before; an
+//! unparameterized id builds the identical wrapper stack, so
+//! pre-redesign trajectories are preserved bit for bit.
+
+use std::fmt;
+use std::sync::{Arc, OnceLock, RwLock};
 
 use crate::core::env::DynEnv;
 use crate::core::error::{CairlError, Result};
+use crate::core::kwargs::{Kwargs, KwargValue};
 use crate::envs::{Acrobot, CartPole, GridRts, LineWars, MountainCar, Pendulum};
 use crate::flash;
 use crate::puzzles;
 use crate::script;
-use crate::wrappers::TimeLimit;
+use crate::script::envs::{RenderHint, ScriptEnv};
+use crate::wrappers::{apply_wrappers, WrapperSpec};
 
-/// One registry row: id, docstring, constructor.
-struct Entry {
-    id: &'static str,
-    summary: &'static str,
-    build: fn() -> DynEnv,
+/// The builder half of an [`EnvSpec`]: merged kwargs in, base env out
+/// (wrappers are applied by the spec, not the builder).
+pub type EnvBuilder = Arc<dyn Fn(&Kwargs) -> Result<DynEnv> + Send + Sync>;
+
+/// A spec-level kwarg invariant (e.g. a value range the builder relies
+/// on), run by [`EnvSpec::checked_kwargs`] — i.e. both by
+/// [`EnvSpec::build`] *and* by [`validate`], so [`MixtureSpec::parse`]
+/// rejects a bad component without constructing anything.
+pub type KwargCheck = Arc<dyn Fn(&Kwargs) -> Result<()> + Send + Sync>;
+
+/// One registry entry: everything needed to construct a parameterized,
+/// wrapper-composed environment from its id.
+///
+/// ```
+/// use cairl::coordinator::registry::{self, EnvSpec};
+///
+/// registry::register(
+///     EnvSpec::new("Docs/CartPole-v1", "500-step cart-pole for the docs", |_| {
+///         Ok(Box::new(cairl::envs::CartPole::new()) as cairl::DynEnv)
+///     })
+///     .with_time_limit(500),
+/// )
+/// .unwrap();
+///
+/// // Registered specs accept Gym-style id kwargs immediately:
+/// let mut env = cairl::make("Docs/CartPole-v1?max_steps=10").unwrap();
+/// assert_eq!(env.reset().len(), 4);
+/// ```
+#[derive(Clone)]
+pub struct EnvSpec {
+    id: String,
+    summary: String,
+    defaults: Kwargs,
+    wrappers: Vec<WrapperSpec>,
+    builder: EnvBuilder,
+    check: Option<KwargCheck>,
 }
 
-/// The static registry table.  Gym-standard time limits are part of the
-/// registered id (CartPole-v1 is *defined* as 500-step-capped), matching
-/// Gym's registration semantics.
-fn table() -> &'static [Entry] {
-    &[
-        Entry {
-            id: "CartPole-v1",
-            summary: "native cart-pole balancing (500-step limit)",
-            build: || Box::new(TimeLimit::new(CartPole::new(), 500)),
-        },
-        Entry {
-            id: "MountainCar-v0",
-            summary: "native mountain car (200-step limit)",
-            build: || Box::new(TimeLimit::new(MountainCar::new(), 200)),
-        },
-        Entry {
-            id: "Acrobot-v1",
-            summary: "native acrobot swing-up (500-step limit)",
-            build: || Box::new(TimeLimit::new(Acrobot::new(), 500)),
-        },
-        Entry {
-            id: "Pendulum-v1",
-            summary: "native pendulum swing-up, continuous torque (200-step limit)",
-            build: || Box::new(TimeLimit::new(Pendulum::new(), 200)),
-        },
-        Entry {
-            id: "PendulumDiscrete-v1",
-            summary: "pendulum with 5 discrete torque levels for DQN (200-step limit)",
-            build: || Box::new(TimeLimit::new(Pendulum::discrete(), 200)),
-        },
-        Entry {
-            id: "LineWars-v0",
-            summary: "Deep-Line-Wars-class lane strategy vs scripted opponent",
-            build: || Box::new(LineWars::new()),
-        },
-        Entry {
-            id: "GridRTS-v0",
-            summary: "MicroRTS-class grid strategy vs scripted opponent",
-            build: || Box::new(GridRts::new()),
-        },
-        Entry {
-            id: "Script/CartPole-v1",
-            summary: "cart-pole on the interpreted MiniPy runner (Gym baseline surrogate)",
-            build: || Box::new(TimeLimit::new(script::envs::cartpole(), 500)),
-        },
-        Entry {
-            id: "Script/MountainCar-v0",
-            summary: "mountain car on the interpreted MiniPy runner",
-            build: || Box::new(TimeLimit::new(script::envs::mountain_car(), 200)),
-        },
-        Entry {
-            id: "Script/Acrobot-v1",
-            summary: "acrobot on the interpreted MiniPy runner",
-            build: || Box::new(TimeLimit::new(script::envs::acrobot(), 500)),
-        },
-        Entry {
-            id: "Script/Pendulum-v1",
-            summary: "discrete-torque pendulum on the interpreted MiniPy runner",
-            build: || Box::new(TimeLimit::new(script::envs::pendulum(), 200)),
-        },
-        Entry {
-            id: "Flash/Multitask-v0",
-            summary: "concurrent mini-games on the ASVM flash runner (paper SS IV-C)",
-            build: || Box::new(flash::games::multitask()),
-        },
-        Entry {
-            id: "Flash/Pong-v0",
-            summary: "pong on the ASVM flash runner",
-            build: || Box::new(flash::games::pong()),
-        },
-        Entry {
-            id: "Flash/Dodge-v0",
-            summary: "projectile dodging on the ASVM flash runner",
-            build: || Box::new(flash::games::dodge()),
-        },
-        Entry {
-            id: "Flash/X1337Shooter-v0",
-            summary: "X1337 space shooter on the ASVM flash runner (paper SS III)",
-            build: || Box::new(flash::games::shooter()),
-        },
-        Entry {
-            id: "Pixel/CartPole-v1",
-            summary: "cart-pole with 16x16 raw-pixel observations (software render)",
-            build: || {
-                Box::new(crate::wrappers::PixelObs::new(
-                    TimeLimit::new(CartPole::new(), 500),
-                    16,
-                ))
-            },
-        },
-        Entry {
-            id: "Puzzle/LightsOut-v0",
-            summary: "5x5 lights-out puzzle with heuristic solver",
-            build: || Box::new(puzzles::LightsOut::env(5)),
-        },
-        Entry {
-            id: "Puzzle/Fifteen-v0",
-            summary: "4x4 sliding-tile puzzle with heuristic solver",
-            build: || Box::new(puzzles::Fifteen::env(4)),
-        },
-        Entry {
-            id: "Puzzle/Nonogram-v0",
-            summary: "5x5 nonogram with line-logic solver",
-            build: || Box::new(puzzles::Nonogram::env()),
-        },
+impl fmt::Debug for EnvSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("EnvSpec")
+            .field("id", &self.id)
+            .field("summary", &self.summary)
+            .field("defaults", &self.defaults)
+            .field("wrappers", &self.wrappers)
+            .finish_non_exhaustive()
+    }
+}
+
+impl EnvSpec {
+    /// A spec with no kwargs and no wrappers; chain `with_*` builders
+    /// to declare them.
+    pub fn new(
+        id: &str,
+        summary: &str,
+        builder: impl Fn(&Kwargs) -> Result<DynEnv> + Send + Sync + 'static,
+    ) -> EnvSpec {
+        EnvSpec {
+            id: id.to_string(),
+            summary: summary.to_string(),
+            defaults: Kwargs::new(),
+            wrappers: Vec::new(),
+            builder: Arc::new(builder),
+            check: None,
+        }
+    }
+
+    /// Attach a spec-level kwarg invariant, checked before the builder
+    /// runs and by eager validation ([`validate`], mixture parsing).
+    pub fn with_check(
+        mut self,
+        check: impl Fn(&Kwargs) -> Result<()> + Send + Sync + 'static,
+    ) -> EnvSpec {
+        self.check = Some(Arc::new(check));
+        self
+    }
+
+    /// Declare a kwarg with its typed default value.
+    ///
+    /// Caveat for [`KwargValue::Str`] kwargs: a *value* containing `,`
+    /// or `:` cannot be passed through a mixture spec string (those are
+    /// the component/lane-count separators [`MixtureSpec::parse`]
+    /// splits on first) — pass such values via [`make_with`] or a
+    /// config file instead.
+    pub fn with_default(mut self, key: &str, value: KwargValue) -> EnvSpec {
+        self.defaults.insert(key, value);
+        self
+    }
+
+    /// Append one wrapper to the declarative chain (applied
+    /// innermost-first, see [`apply_wrappers`]).
+    pub fn with_wrapper(mut self, wrapper: WrapperSpec) -> EnvSpec {
+        self.wrappers.push(wrapper);
+        self
+    }
+
+    /// Gym-style registration time limit: declares the `max_steps`
+    /// kwarg *and* the [`WrapperSpec::TimeLimit`] chain entry it
+    /// overrides.
+    pub fn with_time_limit(self, max_steps: u32) -> EnvSpec {
+        self.with_default("max_steps", KwargValue::Int(max_steps as i64))
+            .with_wrapper(WrapperSpec::TimeLimit { max_steps })
+    }
+
+    /// Pixel observations: declares the `pixels` kwarg and the
+    /// [`WrapperSpec::PixelObs`] chain entry.
+    pub fn with_pixels(self, size: usize) -> EnvSpec {
+        self.with_default("pixels", KwargValue::Int(size as i64))
+            .with_wrapper(WrapperSpec::PixelObs { size })
+    }
+
+    /// The registered id.
+    pub fn id(&self) -> &str {
+        &self.id
+    }
+
+    /// One-line human description.
+    pub fn summary(&self) -> &str {
+        &self.summary
+    }
+
+    /// Declared kwargs with their typed defaults.
+    pub fn defaults(&self) -> &Kwargs {
+        &self.defaults
+    }
+
+    /// The declarative wrapper chain (pre-override).
+    pub fn wrappers(&self) -> &[WrapperSpec] {
+        &self.wrappers
+    }
+
+    /// User kwargs merged over the defaults — the validation step
+    /// ([`CairlError::Config`] on unknown keys or bad values).
+    pub fn merged_kwargs(&self, user: &Kwargs) -> Result<Kwargs> {
+        Kwargs::merged_over(&self.defaults, user, &self.id)
+    }
+
+    /// The wrapper chain with kwarg overrides substituted in (an
+    /// out-of-range override is a [`CairlError::Config`]).
+    pub fn effective_wrappers(&self, merged: &Kwargs) -> Result<Vec<WrapperSpec>> {
+        self.wrappers
+            .iter()
+            .map(|w| w.overridden_by(merged))
+            .collect()
+    }
+
+    /// The full static validation prefix shared by [`EnvSpec::build`]
+    /// and [`validate`]: merge user kwargs over the defaults, resolve
+    /// and range-check the wrapper chain, and run the spec-level
+    /// [`KwargCheck`].  Returns the merged kwargs on success.
+    pub fn checked_kwargs(&self, user: &Kwargs) -> Result<Kwargs> {
+        let merged = self.merged_kwargs(user)?;
+        for wrapper in self.effective_wrappers(&merged)? {
+            wrapper.validate()?;
+        }
+        if let Some(check) = &self.check {
+            check(&merged)?;
+        }
+        Ok(merged)
+    }
+
+    /// Construct: run every static check ([`EnvSpec::checked_kwargs`]),
+    /// then the builder, then apply the kwarg-overridden wrapper chain.
+    pub fn build(&self, user: &Kwargs) -> Result<DynEnv> {
+        let merged = self.checked_kwargs(user)?;
+        let wrappers = self.effective_wrappers(&merged)?;
+        let base = (self.builder)(&merged)?;
+        Ok(apply_wrappers(base, &wrappers))
+    }
+}
+
+/// Range check for the puzzle `size` kwarg (the boards are quadratic;
+/// a negative or absurd size would otherwise panic deep in a solver).
+fn board_size(kw: &Kwargs, id: &str, min: i64) -> Result<usize> {
+    let size = kw.i64_or("size", min);
+    if size < min || size > 16 {
+        return Err(CairlError::Config(format!(
+            "{id}: kwarg \"size\" must be in {min}..=16, got {size}"
+        )));
+    }
+    Ok(size as usize)
+}
+
+/// The built-in table the registry is seeded with; runtime
+/// registrations append after these.
+fn builtin_specs() -> Vec<EnvSpec> {
+    vec![
+        EnvSpec::new("CartPole-v1", "native cart-pole balancing (500-step limit)", |_| {
+            Ok(Box::new(CartPole::new()) as DynEnv)
+        })
+        .with_time_limit(500),
+        EnvSpec::new("MountainCar-v0", "native mountain car (200-step limit)", |_| {
+            Ok(Box::new(MountainCar::new()) as DynEnv)
+        })
+        .with_time_limit(200),
+        EnvSpec::new("Acrobot-v1", "native acrobot swing-up (500-step limit)", |_| {
+            Ok(Box::new(Acrobot::new()) as DynEnv)
+        })
+        .with_time_limit(500),
+        EnvSpec::new(
+            "Pendulum-v1",
+            "native pendulum swing-up, continuous torque (200-step limit)",
+            |_| Ok(Box::new(Pendulum::new()) as DynEnv),
+        )
+        .with_time_limit(200),
+        EnvSpec::new(
+            "PendulumDiscrete-v1",
+            "pendulum with 5 discrete torque levels for DQN (200-step limit)",
+            |_| Ok(Box::new(Pendulum::discrete()) as DynEnv),
+        )
+        .with_time_limit(200),
+        EnvSpec::new(
+            "LineWars-v0",
+            "Deep-Line-Wars-class lane strategy vs scripted opponent",
+            |_| Ok(Box::new(LineWars::new()) as DynEnv),
+        ),
+        EnvSpec::new(
+            "GridRTS-v0",
+            "MicroRTS-class grid strategy vs scripted opponent",
+            |_| Ok(Box::new(GridRts::new()) as DynEnv),
+        ),
+        EnvSpec::new(
+            "Script/CartPole-v1",
+            "cart-pole on the interpreted MiniPy runner (Gym baseline surrogate)",
+            |_| Ok(Box::new(script::envs::cartpole()) as DynEnv),
+        )
+        .with_time_limit(500),
+        EnvSpec::new(
+            "Script/MountainCar-v0",
+            "mountain car on the interpreted MiniPy runner",
+            |_| Ok(Box::new(script::envs::mountain_car()) as DynEnv),
+        )
+        .with_time_limit(200),
+        EnvSpec::new(
+            "Script/Acrobot-v1",
+            "acrobot on the interpreted MiniPy runner",
+            |_| Ok(Box::new(script::envs::acrobot()) as DynEnv),
+        )
+        .with_time_limit(500),
+        EnvSpec::new(
+            "Script/Pendulum-v1",
+            "discrete-torque pendulum on the interpreted MiniPy runner",
+            |_| Ok(Box::new(script::envs::pendulum()) as DynEnv),
+        )
+        .with_time_limit(200),
+        EnvSpec::new(
+            "Flash/Multitask-v0",
+            "concurrent mini-games on the ASVM flash runner (paper SS IV-C)",
+            |_| Ok(Box::new(flash::games::multitask()) as DynEnv),
+        ),
+        EnvSpec::new("Flash/Pong-v0", "pong on the ASVM flash runner", |_| {
+            Ok(Box::new(flash::games::pong()) as DynEnv)
+        }),
+        EnvSpec::new(
+            "Flash/Dodge-v0",
+            "projectile dodging on the ASVM flash runner",
+            |_| Ok(Box::new(flash::games::dodge()) as DynEnv),
+        ),
+        EnvSpec::new(
+            "Flash/X1337Shooter-v0",
+            "X1337 space shooter on the ASVM flash runner (paper SS III)",
+            |_| Ok(Box::new(flash::games::shooter()) as DynEnv),
+        ),
+        EnvSpec::new(
+            "Pixel/CartPole-v1",
+            "cart-pole with 16x16 raw-pixel observations (software render)",
+            |_| Ok(Box::new(CartPole::new()) as DynEnv),
+        )
+        .with_time_limit(500)
+        .with_pixels(16),
+        EnvSpec::new(
+            "Puzzle/LightsOut-v0",
+            "size x size lights-out puzzle with heuristic solver",
+            |kw| Ok(Box::new(puzzles::LightsOut::env(kw.i64_or("size", 5) as usize)) as DynEnv),
+        )
+        .with_default("size", KwargValue::Int(5))
+        .with_check(|kw| board_size(kw, "Puzzle/LightsOut-v0", 1).map(|_| ())),
+        EnvSpec::new(
+            "Puzzle/Fifteen-v0",
+            "size x size sliding-tile puzzle with heuristic solver",
+            |kw| Ok(Box::new(puzzles::Fifteen::env(kw.i64_or("size", 4) as usize)) as DynEnv),
+        )
+        .with_default("size", KwargValue::Int(4))
+        .with_check(|kw| board_size(kw, "Puzzle/Fifteen-v0", 2).map(|_| ())),
+        EnvSpec::new(
+            "Puzzle/Nonogram-v0",
+            "5x5 nonogram with line-logic solver",
+            |_| Ok(Box::new(puzzles::Nonogram::env()) as DynEnv),
+        ),
     ]
 }
 
-/// Construct an environment by id — the Gym-compatible dynamic API.
+static REGISTRY: OnceLock<RwLock<Vec<EnvSpec>>> = OnceLock::new();
+
+/// The process-wide spec table, lazily seeded with the built-ins.
+fn registry() -> &'static RwLock<Vec<EnvSpec>> {
+    REGISTRY.get_or_init(|| RwLock::new(builtin_specs()))
+}
+
+/// Characters an id can never contain: they are the mixture-spec and
+/// kwarg metacharacters ([`MixtureSpec::is_mixture`] relies on this).
+const ID_METACHARS: [char; 5] = [':', ',', '?', '&', '='];
+
+/// Register a spec.  Duplicate ids and ids containing mixture/kwarg
+/// metacharacters or whitespace are [`CairlError::Config`] errors.
+pub fn register(spec: EnvSpec) -> Result<()> {
+    if spec.id.is_empty()
+        || spec.id.contains(&ID_METACHARS[..])
+        || spec.id.contains(char::is_whitespace)
+    {
+        return Err(CairlError::Config(format!(
+            "env id {:?} is empty or contains one of ':,?&=' or whitespace",
+            spec.id
+        )));
+    }
+    let mut specs = registry().write().unwrap_or_else(|e| e.into_inner());
+    if specs.iter().any(|s| s.id == spec.id) {
+        return Err(CairlError::Config(format!(
+            "env id {:?} is already registered",
+            spec.id
+        )));
+    }
+    specs.push(spec);
+    Ok(())
+}
+
+/// FNV-1a of the id: the PCG stream of runtime-registered script envs
+/// (deterministic across runs and registration orders).
+fn script_stream(id: &str) -> u64 {
+    let mut hash: u64 = 0xcbf2_9ce4_8422_2325;
+    for byte in id.as_bytes() {
+        hash ^= *byte as u64;
+        hash = hash.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    hash
+}
+
+/// Register a MiniScript source as an environment in the `Script/`
+/// namespace, returning the full registered id.  The source is
+/// compiled and probed (one `reset()` + one `step(0)` shape check)
+/// **now**, so a broken script fails here with a [`CairlError::Script`]
+/// instead of panicking inside a worker later.
 ///
-/// ```no_run
-/// let mut env = cairl::make("CartPole-v1").unwrap();
-/// let _obs = env.reset();
+/// `name` may be bare (`"MyEnv"` registers `"Script/MyEnv"`) or a full
+/// id containing `/`, which is used verbatim.
+///
 /// ```
-pub fn make(id: &str) -> Result<DynEnv> {
-    table()
+/// use cairl::coordinator::registry;
+///
+/// let src = "
+/// obs_dim = 1;
+/// n_actions = 2;
+/// def reset() { return [0]; }
+/// def step(action) { return [action, 1.0, 1]; }
+/// ";
+/// let id = registry::register_script("DocsDemo", src).unwrap();
+/// assert_eq!(id, "Script/DocsDemo");
+/// let mut env = cairl::make("Script/DocsDemo").unwrap();
+/// assert_eq!(env.reset(), vec![0.0]);
+/// ```
+pub fn register_script(name: &str, src: &str) -> Result<String> {
+    let id = if name.contains('/') {
+        name.to_string()
+    } else {
+        format!("Script/{name}")
+    };
+    let stream = script_stream(&id);
+    let mut probe = ScriptEnv::try_load(&id, src, stream, RenderHint::None)?;
+    probe.probe()?;
+    let (build_id, build_src) = (id.clone(), src.to_string());
+    register(
+        EnvSpec::new(&id, "runtime-registered MiniScript environment", move |_| {
+            Ok(Box::new(ScriptEnv::try_load(
+                &build_id,
+                &build_src,
+                stream,
+                RenderHint::None,
+            )?) as DynEnv)
+        }),
+    )?;
+    Ok(id)
+}
+
+/// Split `"Id?key=value&key=value"` into the bare id and its kwargs.
+fn parse_id_kwargs(spec: &str) -> Result<(String, Kwargs)> {
+    match spec.split_once('?') {
+        Some((id, query)) => Ok((id.trim().to_string(), Kwargs::parse_query(query)?)),
+        None => Ok((spec.trim().to_string(), Kwargs::new())),
+    }
+}
+
+/// Look up a spec by bare id (clones out of the read lock, so builders
+/// never run under it).
+fn find_spec(id: &str) -> Result<EnvSpec> {
+    registry()
+        .read()
+        .unwrap_or_else(|e| e.into_inner())
         .iter()
-        .find(|e| e.id == id)
-        .map(|e| (e.build)())
+        .find(|s| s.id == id)
+        .cloned()
         .ok_or_else(|| CairlError::UnknownEnv(id.to_string()))
 }
 
-/// All registered ids with one-line summaries, registration order.
-pub fn list_envs() -> Vec<(&'static str, &'static str)> {
-    table().iter().map(|e| (e.id, e.summary)).collect()
+/// The registered spec for a bare id (no kwargs).
+pub fn env_spec(id: &str) -> Result<EnvSpec> {
+    find_spec(id)
+}
+
+/// Construct an environment by id — the Gym-compatible dynamic API.
+/// The id may carry Gym-style kwargs after `?`, validated against the
+/// spec's typed defaults.
+///
+/// ```
+/// let mut env = cairl::make("CartPole-v1").unwrap();
+/// let _obs = env.reset();
+///
+/// // Parameterized: override the registered 500-step limit.
+/// let mut short = cairl::make("CartPole-v1?max_steps=25").unwrap();
+/// let _obs = short.reset();
+///
+/// // Unknown kwargs are errors, not silent fallbacks.
+/// assert!(cairl::make("CartPole-v1?nope=1").is_err());
+/// ```
+pub fn make(spec: &str) -> Result<DynEnv> {
+    let (id, kwargs) = parse_id_kwargs(spec)?;
+    make_with(&id, &kwargs)
+}
+
+/// [`make`] with explicit kwargs: merge over the spec's defaults
+/// (unknown key / uncoercible value → [`CairlError::Config`]), build,
+/// apply the wrapper chain.
+///
+/// ```
+/// use cairl::core::kwargs::{Kwargs, KwargValue};
+///
+/// let kwargs = Kwargs::new().with("max_steps", KwargValue::Int(25));
+/// let mut env = cairl::coordinator::registry::make_with("CartPole-v1", &kwargs).unwrap();
+/// let _obs = env.reset();
+/// ```
+pub fn make_with(id: &str, kwargs: &Kwargs) -> Result<DynEnv> {
+    find_spec(id)?.build(kwargs)
+}
+
+/// Validate an `"Id?kwargs"` spec — id registered, kwargs well-formed,
+/// wrapper overrides in range, spec-level checks satisfied — without
+/// constructing the environment ([`EnvSpec::checked_kwargs`]).
+pub fn validate(spec: &str) -> Result<()> {
+    let (id, kwargs) = parse_id_kwargs(spec)?;
+    find_spec(&id)?.checked_kwargs(&kwargs).map(|_| ())
+}
+
+/// All registered ids with one-line summaries, registration order
+/// (built-ins first, runtime registrations after).
+pub fn list_envs() -> Vec<(String, String)> {
+    registry()
+        .read()
+        .unwrap_or_else(|e| e.into_inner())
+        .iter()
+        .map(|s| (s.id.clone(), s.summary.clone()))
+        .collect()
 }
 
 /// A parsed scenario-mixture spec: an ordered list of `(env_id, lanes)`
 /// pairs, e.g. `"CartPole-v1:32,Acrobot-v1:16"` → 32 CartPole lanes
-/// followed by 16 Acrobot lanes.  Lane order is the spec order, which
-/// fixes the per-lane seeds (`base_seed + lane`) and therefore the
-/// bit-determinism contract of mixture pools.
+/// followed by 16 Acrobot lanes.  Components may carry id kwargs
+/// (`"CartPole-v1?max_steps=200:4"`).  Lane order is the spec order,
+/// which fixes the per-lane seeds (`base_seed + lane`) and therefore
+/// the bit-determinism contract of mixture pools.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct MixtureSpec {
     entries: Vec<(String, usize)>,
@@ -167,14 +515,17 @@ pub struct MixtureSpec {
 impl MixtureSpec {
     /// Whether `spec` is a mixture spec (rather than a bare env id):
     /// mixtures contain a `:` lane count or a `,` separator, which no
-    /// registered id does.
+    /// registered id does ([`register`] enforces it).  Kwarg *values*
+    /// containing these metacharacters would also trip this test, so
+    /// string kwargs with `,`/`:` must go through [`make_with`] or a
+    /// config file rather than a spec string.
     pub fn is_mixture(spec: &str) -> bool {
         spec.contains(':') || spec.contains(',')
     }
 
-    /// Parse `"Id-v1:32,Other-v0:16"`.  A component without `:count`
-    /// contributes one lane.  Every id is validated against the
-    /// registry; counts must be positive.
+    /// Parse `"Id-v1:32,Other-v0?k=v:16"`.  A component without
+    /// `:count` contributes one lane.  Every id (and its kwargs) is
+    /// validated against the registry; counts must be positive.
     pub fn parse(spec: &str) -> Result<MixtureSpec> {
         let mut entries = Vec::new();
         for part in spec.split(',') {
@@ -200,11 +551,10 @@ impl MixtureSpec {
                     "mixture spec {spec:?}: {id:?} has zero lanes"
                 )));
             }
-            // Validate membership eagerly so executor construction can't
-            // fail on an unknown id (no throwaway env construction).
-            if !table().iter().any(|e| e.id == id) {
-                return Err(CairlError::UnknownEnv(id.to_string()));
-            }
+            // Validate membership and kwargs eagerly so executor
+            // construction can't fail on a bad component (no throwaway
+            // env construction).
+            validate(id)?;
             entries.push((id.to_string(), count));
         }
         if entries.is_empty() {
@@ -233,6 +583,7 @@ impl MixtureSpec {
     /// the labels `lane_specs()` should carry (an env's own
     /// [`Env`](crate::core::env::Env)`::id` reports wrapper composition
     /// like `TimeLimit(CartPole-v1, 500)`, not the registry id).
+    /// Parameterized components keep their kwargs in the label.
     pub fn build_labeled_envs(&self) -> Result<Vec<(String, DynEnv)>> {
         let mut envs = Vec::with_capacity(self.total_lanes());
         for (id, count) in &self.entries {
@@ -269,7 +620,7 @@ mod tests {
     #[test]
     fn make_every_registered_env_and_reset() {
         for (id, _) in list_envs() {
-            let mut env = make(id).unwrap_or_else(|e| panic!("{id}: {e}"));
+            let mut env = make(&id).unwrap_or_else(|e| panic!("{id}: {e}"));
             let obs = env.reset();
             assert_eq!(obs.len(), env.obs_dim(), "{id}");
             assert!(env.obs_dim() > 0, "{id}");
@@ -278,11 +629,102 @@ mod tests {
 
     #[test]
     fn registered_ids_are_unique() {
-        let ids: Vec<_> = list_envs().iter().map(|(id, _)| *id).collect();
+        let ids: Vec<String> = list_envs().into_iter().map(|(id, _)| id).collect();
         let mut dedup = ids.clone();
         dedup.sort_unstable();
         dedup.dedup();
         assert_eq!(ids.len(), dedup.len());
+    }
+
+    #[test]
+    fn id_kwargs_reach_the_time_limit() {
+        let mut env = make("CartPole-v1?max_steps=500").unwrap();
+        assert_eq!(env.id(), "TimeLimit(CartPole-v1, 500)");
+        let mut env2 = make("CartPole-v1").unwrap();
+        assert_eq!(env.reset().len(), env2.reset().len());
+        let short = make("CartPole-v1?max_steps=7").unwrap();
+        assert_eq!(short.id(), "TimeLimit(CartPole-v1, 7)");
+    }
+
+    #[test]
+    fn id_kwargs_reject_unknown_keys_and_bad_values() {
+        assert!(matches!(
+            make("CartPole-v1?nope=3"),
+            Err(CairlError::Config(_))
+        ));
+        assert!(matches!(
+            make("CartPole-v1?max_steps=abc"),
+            Err(CairlError::Config(_))
+        ));
+        assert!(matches!(
+            make("CartPole-v1?max_steps"),
+            Err(CairlError::Config(_))
+        ));
+        // Out of u32 range errors rather than silently clamping.
+        assert!(matches!(
+            make("CartPole-v1?max_steps=9999999999"),
+            Err(CairlError::Config(_))
+        ));
+        assert!(matches!(make("NoSuchEnv-v0?x=1"), Err(CairlError::UnknownEnv(_))));
+    }
+
+    #[test]
+    fn builder_kwargs_parameterize_puzzles() {
+        let mut small = make("Puzzle/LightsOut-v0?size=3").unwrap();
+        assert_eq!(small.obs_dim(), 9);
+        let obs = small.reset();
+        assert_eq!(obs.len(), 9);
+        let mut default = make("Puzzle/LightsOut-v0").unwrap();
+        assert_eq!(default.obs_dim(), 25);
+        assert_eq!(default.reset().len(), 25);
+        assert!(matches!(
+            make("Puzzle/LightsOut-v0?size=0"),
+            Err(CairlError::Config(_))
+        ));
+        assert!(matches!(
+            make("Puzzle/Fifteen-v0?size=99"),
+            Err(CairlError::Config(_))
+        ));
+    }
+
+    #[test]
+    fn register_rejects_duplicates_and_bad_ids() {
+        register(EnvSpec::new("UnitReg/Once-v0", "unit test spec", |_| {
+            Ok(Box::new(CartPole::new()) as DynEnv)
+        }))
+        .unwrap();
+        let dup = register(EnvSpec::new("UnitReg/Once-v0", "again", |_| {
+            Ok(Box::new(CartPole::new()) as DynEnv)
+        }));
+        assert!(matches!(dup, Err(CairlError::Config(_))));
+        for bad in ["", "Has:Colon", "Has,Comma", "Has?Query", "Has Space", "a=b"] {
+            let r = register(EnvSpec::new(bad, "bad id", |_| {
+                Ok(Box::new(CartPole::new()) as DynEnv)
+            }));
+            assert!(matches!(r, Err(CairlError::Config(_))), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn register_script_validates_the_source() {
+        assert!(matches!(
+            register_script("UnitBroken", "this is not MiniScript ("),
+            Err(CairlError::Script(_))
+        ));
+        // Parses but violates the env protocol: no step().
+        let no_step = "obs_dim = 1;\nn_actions = 1;\ndef reset() { return [0]; }";
+        assert!(matches!(
+            register_script("UnitNoStep", no_step),
+            Err(CairlError::Script(_))
+        ));
+        // Wrong reset arity.
+        let bad_shape = "obs_dim = 2;\nn_actions = 1;\n\
+                         def reset() { return [0]; }\n\
+                         def step(a) { return [0, 0, 0, 0]; }";
+        assert!(matches!(
+            register_script("UnitBadShape", bad_shape),
+            Err(CairlError::Script(_))
+        ));
     }
 
     #[test]
@@ -303,6 +745,18 @@ mod tests {
     }
 
     #[test]
+    fn mixture_spec_accepts_parameterized_components() {
+        let spec = MixtureSpec::parse("CartPole-v1?max_steps=9:2,CartPole-v1:1").unwrap();
+        assert_eq!(spec.total_lanes(), 3);
+        assert_eq!(spec.entries()[0].0, "CartPole-v1?max_steps=9");
+        let envs = spec.build_labeled_envs().unwrap();
+        assert_eq!(envs[0].0, "CartPole-v1?max_steps=9");
+        assert_eq!(envs[0].1.id(), "TimeLimit(CartPole-v1, 9)");
+        assert_eq!(envs[2].1.id(), "TimeLimit(CartPole-v1, 500)");
+        assert_eq!(spec.render(), "CartPole-v1?max_steps=9:2,CartPole-v1:1");
+    }
+
+    #[test]
     fn mixture_spec_rejects_bad_input() {
         assert!(matches!(
             MixtureSpec::parse("CartPole-v1:0"),
@@ -316,6 +770,16 @@ mod tests {
             MixtureSpec::parse("NoSuchEnv-v0:4"),
             Err(CairlError::UnknownEnv(_))
         ));
+        assert!(matches!(
+            MixtureSpec::parse("CartPole-v1?bogus=1:4"),
+            Err(CairlError::Config(_))
+        ));
+        // Spec-level checks run eagerly too: a builder-range violation
+        // fails at parse, not later inside executor construction.
+        assert!(matches!(
+            MixtureSpec::parse("Puzzle/LightsOut-v0?size=0:4"),
+            Err(CairlError::Config(_))
+        ));
         assert!(MixtureSpec::parse("CartPole-v1:2,,Acrobot-v1:2").is_err());
     }
 
@@ -323,11 +787,12 @@ mod tests {
     fn mixture_detection_leaves_bare_ids_alone() {
         assert!(!MixtureSpec::is_mixture("CartPole-v1"));
         assert!(!MixtureSpec::is_mixture("Script/CartPole-v1"));
+        assert!(!MixtureSpec::is_mixture("CartPole-v1?max_steps=200"));
         assert!(MixtureSpec::is_mixture("CartPole-v1:32"));
         assert!(MixtureSpec::is_mixture("CartPole-v1:32,Acrobot-v1:16"));
         // No registered id may ever contain the mixture metacharacters.
         for (id, _) in list_envs() {
-            assert!(!MixtureSpec::is_mixture(id), "{id}");
+            assert!(!MixtureSpec::is_mixture(&id), "{id}");
         }
     }
 

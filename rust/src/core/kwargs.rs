@@ -1,0 +1,292 @@
+//! Construction kwargs — the typed key/value surface behind
+//! [`make_with`](crate::coordinator::registry::make_with) and Gym-style
+//! id kwargs (`"CartPole-v1?max_steps=200"`).
+//!
+//! An [`EnvSpec`](crate::coordinator::registry::EnvSpec) declares its
+//! permitted keys with **typed defaults**; user kwargs are merged over
+//! those defaults with strict validation — an unknown key or an
+//! uncoercible value is a [`CairlError::Config`], never a silent
+//! fallback.  Query-string kwargs arrive as [`KwargValue::Str`] and are
+//! coerced against the default's type during the merge, so
+//! `"max_steps=200"` and `KwargValue::Int(200)` behave identically.
+
+use std::fmt;
+
+use crate::core::error::{CairlError, Result};
+
+/// A typed kwarg value.  The default's variant fixes the key's type;
+/// user-supplied strings are parsed to that type at merge time.
+#[derive(Clone, Debug, PartialEq)]
+pub enum KwargValue {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+}
+
+impl KwargValue {
+    /// Human-readable type name for error messages.
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            KwargValue::Int(_) => "int",
+            KwargValue::Float(_) => "float",
+            KwargValue::Bool(_) => "bool",
+            KwargValue::Str(_) => "string",
+        }
+    }
+
+    fn parse_as(raw: &str, template: &KwargValue) -> Option<KwargValue> {
+        match template {
+            KwargValue::Int(_) => raw.parse::<i64>().ok().map(KwargValue::Int),
+            KwargValue::Float(_) => raw.parse::<f64>().ok().map(KwargValue::Float),
+            KwargValue::Bool(_) => match raw {
+                "true" | "1" => Some(KwargValue::Bool(true)),
+                "false" | "0" => Some(KwargValue::Bool(false)),
+                _ => None,
+            },
+            KwargValue::Str(_) => Some(KwargValue::Str(raw.to_string())),
+        }
+    }
+
+    /// Coerce this value to the template's type: strings parse, ints
+    /// widen to floats, matching variants clone.  `None` = type error.
+    pub fn coerce_like(&self, template: &KwargValue) -> Option<KwargValue> {
+        match (self, template) {
+            (KwargValue::Str(s), t) if !matches!(t, KwargValue::Str(_)) => {
+                KwargValue::parse_as(s, t)
+            }
+            (KwargValue::Int(i), KwargValue::Float(_)) => Some(KwargValue::Float(*i as f64)),
+            (v, t) if std::mem::discriminant(v) == std::mem::discriminant(t) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for KwargValue {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            KwargValue::Int(i) => write!(f, "{i}"),
+            KwargValue::Float(x) => write!(f, "{x}"),
+            KwargValue::Bool(b) => write!(f, "{b}"),
+            KwargValue::Str(s) => write!(f, "{s}"),
+        }
+    }
+}
+
+/// An ordered key → [`KwargValue`] map (insertion order is preserved so
+/// rendered specs stay stable).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Kwargs {
+    pairs: Vec<(String, KwargValue)>,
+}
+
+impl Kwargs {
+    /// An empty kwarg set.
+    pub fn new() -> Kwargs {
+        Kwargs { pairs: Vec::new() }
+    }
+
+    /// Builder-style insert.
+    ///
+    /// ```
+    /// use cairl::core::kwargs::{KwargValue, Kwargs};
+    /// let kw = Kwargs::new().with("max_steps", KwargValue::Int(200));
+    /// assert_eq!(kw.i64_or("max_steps", 0), 200);
+    /// ```
+    pub fn with(mut self, key: &str, value: KwargValue) -> Kwargs {
+        self.insert(key, value);
+        self
+    }
+
+    /// Insert or overwrite a key.
+    pub fn insert(&mut self, key: &str, value: KwargValue) {
+        if let Some(slot) = self.pairs.iter_mut().find(|(k, _)| k.as_str() == key) {
+            slot.1 = value;
+        } else {
+            self.pairs.push((key.to_string(), value));
+        }
+    }
+
+    /// Look up a key.
+    pub fn get(&self, key: &str) -> Option<&KwargValue> {
+        self.pairs
+            .iter()
+            .find(|(k, _)| k.as_str() == key)
+            .map(|(_, v)| v)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pairs.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.pairs.len()
+    }
+
+    /// `(key, value)` pairs in insertion order.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &KwargValue)> {
+        self.pairs.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    /// The keys in insertion order.
+    pub fn keys(&self) -> Vec<&str> {
+        self.pairs.iter().map(|(k, _)| k.as_str()).collect()
+    }
+
+    /// The value of an `Int` key, or `default` when absent (or not an
+    /// int).  Post-merge kwargs are type-stable, so builders use this.
+    pub fn i64_or(&self, key: &str, default: i64) -> i64 {
+        match self.get(key) {
+            Some(KwargValue::Int(i)) => *i,
+            _ => default,
+        }
+    }
+
+    /// The value of a `Float` key, or `default`.
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        match self.get(key) {
+            Some(KwargValue::Float(x)) => *x,
+            _ => default,
+        }
+    }
+
+    /// The value of a `Bool` key, or `default`.
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        match self.get(key) {
+            Some(KwargValue::Bool(b)) => *b,
+            _ => default,
+        }
+    }
+
+    /// Parse a Gym-style query string, `"max_steps=200&size=5"`.  Every
+    /// value arrives as [`KwargValue::Str`]; the merge against the
+    /// spec's defaults types it.
+    pub fn parse_query(query: &str) -> Result<Kwargs> {
+        let mut kwargs = Kwargs::new();
+        for part in query.split('&') {
+            let part = part.trim();
+            if part.is_empty() {
+                return Err(CairlError::Config(format!(
+                    "kwargs {query:?}: empty component"
+                )));
+            }
+            let Some((key, value)) = part.split_once('=') else {
+                return Err(CairlError::Config(format!(
+                    "kwargs {query:?}: expected key=value, got {part:?}"
+                )));
+            };
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(CairlError::Config(format!(
+                    "kwargs {query:?}: empty key in {part:?}"
+                )));
+            }
+            kwargs.insert(key, KwargValue::Str(value.trim().to_string()));
+        }
+        Ok(kwargs)
+    }
+
+    /// Merge `user` kwargs over `defaults`: every user key must exist in
+    /// the defaults and its value must coerce to the default's type.
+    /// `context` names the env id in error messages.
+    pub fn merged_over(defaults: &Kwargs, user: &Kwargs, context: &str) -> Result<Kwargs> {
+        let mut merged = defaults.clone();
+        for (key, value) in user.iter() {
+            let Some(template) = defaults.get(key) else {
+                let valid = if defaults.is_empty() {
+                    "none".to_string()
+                } else {
+                    defaults.keys().join(", ")
+                };
+                return Err(CairlError::Config(format!(
+                    "{context}: unknown kwarg {key:?} (valid kwargs: {valid})"
+                )));
+            };
+            let Some(coerced) = value.coerce_like(template) else {
+                return Err(CairlError::Config(format!(
+                    "{context}: kwarg {key:?}: cannot read {value:?} as {}",
+                    template.type_name()
+                )));
+            };
+            merged.insert(key, coerced);
+        }
+        Ok(merged)
+    }
+
+    /// Render back to the canonical `key=value&key=value` query string.
+    pub fn render(&self) -> String {
+        self.pairs
+            .iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect::<Vec<_>>()
+            .join("&")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn query_parses_and_renders() {
+        let kw = Kwargs::parse_query("max_steps=200&size=5").unwrap();
+        assert_eq!(kw.len(), 2);
+        assert_eq!(kw.get("max_steps"), Some(&KwargValue::Str("200".into())));
+        assert_eq!(kw.render(), "max_steps=200&size=5");
+    }
+
+    #[test]
+    fn query_rejects_malformed_input() {
+        assert!(Kwargs::parse_query("").is_err());
+        assert!(Kwargs::parse_query("max_steps").is_err());
+        assert!(Kwargs::parse_query("=5").is_err());
+        assert!(Kwargs::parse_query("a=1&&b=2").is_err());
+    }
+
+    #[test]
+    fn merge_types_string_values_against_defaults() {
+        let defaults = Kwargs::new()
+            .with("max_steps", KwargValue::Int(500))
+            .with("scale", KwargValue::Float(1.0))
+            .with("verbose", KwargValue::Bool(false));
+        let user = Kwargs::parse_query("max_steps=200&scale=2&verbose=true").unwrap();
+        let merged = Kwargs::merged_over(&defaults, &user, "Test-v0").unwrap();
+        assert_eq!(merged.i64_or("max_steps", 0), 200);
+        assert_eq!(merged.f64_or("scale", 0.0), 2.0);
+        assert!(merged.bool_or("verbose", false));
+    }
+
+    #[test]
+    fn merge_rejects_unknown_keys_and_bad_values() {
+        let defaults = Kwargs::new().with("max_steps", KwargValue::Int(500));
+        let unknown = Kwargs::new().with("nope", KwargValue::Int(1));
+        let err = Kwargs::merged_over(&defaults, &unknown, "Test-v0").unwrap_err();
+        assert!(err.to_string().contains("nope"), "{err}");
+        assert!(err.to_string().contains("max_steps"), "{err}");
+        let bad = Kwargs::new().with("max_steps", KwargValue::Str("abc".into()));
+        assert!(Kwargs::merged_over(&defaults, &bad, "Test-v0").is_err());
+    }
+
+    #[test]
+    fn merge_keeps_defaults_for_unset_keys() {
+        let defaults = Kwargs::new()
+            .with("max_steps", KwargValue::Int(500))
+            .with("size", KwargValue::Int(5));
+        let user = Kwargs::new().with("size", KwargValue::Int(3));
+        let merged = Kwargs::merged_over(&defaults, &user, "Test-v0").unwrap();
+        assert_eq!(merged.i64_or("max_steps", 0), 500);
+        assert_eq!(merged.i64_or("size", 0), 3);
+    }
+
+    #[test]
+    fn int_widens_to_float_but_not_the_reverse() {
+        let defaults = Kwargs::new().with("scale", KwargValue::Float(1.0));
+        let user = Kwargs::new().with("scale", KwargValue::Int(2));
+        let merged = Kwargs::merged_over(&defaults, &user, "Test-v0").unwrap();
+        assert_eq!(merged.f64_or("scale", 0.0), 2.0);
+
+        let defaults = Kwargs::new().with("n", KwargValue::Int(1));
+        let user = Kwargs::new().with("n", KwargValue::Float(2.5));
+        assert!(Kwargs::merged_over(&defaults, &user, "Test-v0").is_err());
+    }
+}

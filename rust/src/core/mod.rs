@@ -1,5 +1,5 @@
 //! Core abstractions: the [`env::Env`] trait, [`spaces`], deterministic
-//! [`rng`], and toolkit-wide [`error`] types.
+//! [`rng`], construction [`kwargs`], and toolkit-wide [`error`] types.
 //!
 //! This is the paper's §III-A "building blocks" layer (Environments +
 //! Spaces), kept dependency-free so every other module (native envs,
@@ -9,5 +9,6 @@
 pub mod env;
 pub mod error;
 pub mod json;
+pub mod kwargs;
 pub mod rng;
 pub mod spaces;

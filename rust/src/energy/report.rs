@@ -50,7 +50,8 @@ impl fmt::Display for EnergyReport {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(
             f,
-            "[{}] cpu={:.2}s wall={:.2}s util={:.0}% energy={:.6} mWh co2={:.3e} kg (TDP {:.0} W, {:.3} kg/kWh)",
+            "[{}] cpu={:.2}s wall={:.2}s util={:.0}% energy={:.6} mWh co2={:.3e} kg \
+             (TDP {:.0} W, {:.3} kg/kWh)",
             self.label,
             self.cpu_seconds,
             self.wall_seconds,

@@ -306,7 +306,8 @@ done:
 
     #[test]
     fn display_list_is_rebuilt_each_frame() {
-        let src = "halt\nframe:\npush 0\nclear\npush 1\npush 2\npush 3\npush 4\npush 0.5\nrect\nhalt\n";
+        let src = "halt\nframe:\npush 0\nclear\npush 1\npush 2\npush 3\npush 4\n\
+                   push 0.5\nrect\nhalt\n";
         let mut m = vm(src);
         m.reset().unwrap();
         m.frame(0.0).unwrap();
@@ -353,7 +354,8 @@ done:
 
     #[test]
     fn comparison_ops() {
-        let mut m = vm("halt\nframe:\npush 3\npush 3\neq\nstore 0\npush 2\npush 3\nlt\nstore 1\npush 2\npush 3\nge\nstore 2\nhalt\n");
+        let mut m = vm("halt\nframe:\npush 3\npush 3\neq\nstore 0\npush 2\npush 3\nlt\n\
+                        store 1\npush 2\npush 3\nge\nstore 2\nhalt\n");
         m.reset().unwrap();
         m.frame(0.0).unwrap();
         assert_eq!(m.memory[0], 1.0);
@@ -363,7 +365,8 @@ done:
 
     #[test]
     fn sign_and_abs() {
-        let mut m = vm("halt\nframe:\npush -7\nsign\nstore 0\npush -7\nabs\nstore 1\npush 0\nsign\nstore 2\nhalt\n");
+        let mut m = vm("halt\nframe:\npush -7\nsign\nstore 0\npush -7\nabs\nstore 1\n\
+                        push 0\nsign\nstore 2\nhalt\n");
         m.reset().unwrap();
         m.frame(0.0).unwrap();
         assert_eq!(m.memory[0], -1.0);

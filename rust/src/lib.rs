@@ -41,6 +41,19 @@
 //! [`coordinator::pool::BatchedExecutor::lane_specs`] describing the
 //! per-lane layout; see README §"Scenario mixtures".
 //!
+//! ## The registry: `EnvSpec`, kwargs, wrapper chains
+//!
+//! Environment construction is spec-driven
+//! ([`coordinator::registry::EnvSpec`]): a runtime `RwLock` registry
+//! maps ids to specs carrying typed kwarg defaults, a declarative
+//! [`wrappers::WrapperSpec`] chain and a builder.  [`make`] accepts
+//! Gym-style id kwargs (`"CartPole-v1?max_steps=200"`),
+//! [`make_with`] takes explicit [`core::kwargs::Kwargs`], and
+//! [`register`] / [`register_script`] extend the namespace at runtime —
+//! `cairl run --register-script MyEnv=my.mpy --env "Script/MyEnv:8"`
+//! runs a user MiniScript env in a mixture pool without recompiling.
+//! See README §"Registry & EnvSpec".
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -56,6 +69,15 @@
 //!     if step.done { break; }
 //! }
 //! # let _ = obs;
+//!
+//! // Parameterized construction (Gym-style id kwargs):
+//! let env = cairl::make("CartPole-v1?max_steps=200").unwrap();
+//! # let _ = env;
+//!
+//! // Declarative wrapper chains (the --wrap / config grammar):
+//! let chain = WrapperSpec::parse_chain("TimeLimit(200),NormalizeObs").unwrap();
+//! let env = apply_wrappers(Box::new(CartPole::new()), &chain);
+//! # let _ = env;
 //!
 //! // Zero-cost static composition (paper Listing 1):
 //! let env = Flatten::new(TimeLimit::new(CartPole::new(), 200));
@@ -85,19 +107,26 @@ pub mod script;
 pub mod tooling;
 pub mod wrappers;
 
+pub use crate::coordinator::registry::{
+    list_envs, make, make_with, register, register_script, EnvSpec,
+};
 pub use crate::core::env::{DynEnv, Env, Step};
 pub use crate::core::spaces::{Action, Space};
-pub use crate::coordinator::registry::{list_envs, make};
 
 /// Everything a typical experiment needs.
 pub mod prelude {
     pub use crate::coordinator::pool::{AsyncEnvPool, BatchedExecutor, EnvPool, LaneSpec};
-    pub use crate::coordinator::registry::{list_envs, make, MixtureSpec};
+    pub use crate::coordinator::registry::{
+        list_envs, make, make_with, register, register_script, EnvSpec, MixtureSpec,
+    };
     pub use crate::coordinator::vec_env::VecEnv;
     pub use crate::core::env::{DynEnv, Env, Step};
+    pub use crate::core::kwargs::{Kwargs, KwargValue};
     pub use crate::core::rng::Pcg32;
     pub use crate::core::spaces::{Action, Space};
     pub use crate::envs::{Acrobot, CartPole, MountainCar, Pendulum};
     pub use crate::render::Framebuffer;
-    pub use crate::wrappers::{Flatten, RecordEpisodeStatistics, TimeLimit};
+    pub use crate::wrappers::{
+        apply_wrappers, Flatten, RecordEpisodeStatistics, TimeLimit, WrapperSpec,
+    };
 }

@@ -11,10 +11,10 @@ use anyhow::{anyhow, bail, Context, Result};
 use cairl::agents::dqn::{DqnAgent, DqnConfig};
 use cairl::coordinator::config::{DqnSettings, ExperimentConfig};
 use cairl::coordinator::experiment::{
-    build_executor, run_batched_workload, run_stepping_workload, ExecutorKind,
+    build_executor_wrapped, run_batched_workload, run_stepping_workload, ExecutorKind,
     RenderMode,
 };
-use cairl::coordinator::registry::MixtureSpec;
+use cairl::coordinator::registry::{self, MixtureSpec};
 use cairl::core::env::Env;
 use cairl::core::rng::Pcg32;
 use cairl::energy::EnergyTracker;
@@ -22,6 +22,7 @@ use cairl::envs::gridrts::{play_match, Bot, HarvestBot, MatchResult, RandomBot, 
 use cairl::render::Framebuffer;
 use cairl::runtime::Runtime;
 use cairl::tooling::tournament::{swiss, GameOutcome};
+use cairl::wrappers::{apply_wrappers, WrapperSpec};
 use cairl::{list_envs, make};
 
 /// Parsed command line: a subcommand plus `--key value` / `--switch`
@@ -80,16 +81,23 @@ COMMANDS:
   list-envs                       list every registered environment id
   run        --env SPEC --steps N --seed S [--render] [--ascii]
              [--executor vec|pool|pool-async --lanes N --threads T]
+             [--wrap \"TimeLimit(200),NormalizeObs\"]
+             [--register-script NAME=FILE.mpy[,NAME=FILE.mpy...]]
              [--config FILE.json]
                                   random-action stepping workload + throughput;
-                                  SPEC is a registry id (CartPole-v1) or a
-                                  scenario mixture with per-lane env ids
-                                  (\"CartPole-v1:32,Acrobot-v1:16\" — lane
-                                  counts come from the spec, --lanes is
+                                  SPEC is a registry id (CartPole-v1), optionally
+                                  parameterized with Gym-style kwargs
+                                  (CartPole-v1?max_steps=200), or a scenario
+                                  mixture with per-lane env ids
+                                  (\"Script/MyEnv:8,CartPole-v1?max_steps=200:4\"
+                                  — lane counts come from the spec, --lanes is
                                   ignored); lanes > 1 or a mixture runs the
-                                  batched executor layer; FILE.json's
-                                  \"executor\" block sets the defaults for
-                                  --executor/--lanes/--threads
+                                  batched executor layer; --register-script
+                                  loads MiniScript sources into the Script/
+                                  namespace before SPEC is parsed, --wrap
+                                  applies a declarative wrapper chain to every
+                                  env/lane; FILE.json's \"executor\" and
+                                  \"wrappers\" blocks set the matching defaults
   train      --env NAME [--seed S] [--max-steps N] [--config FILE.json]
                                   train DQN via the PJRT artifacts
                                   (NAME: cartpole|mountaincar|acrobot|pendulum|multitask)
@@ -115,8 +123,24 @@ fn main() -> Result<()> {
             }
         }
         "run" => {
-            // --config seeds the defaults (env, seed, and the executor
-            // block — the ExecutorSettings consumer); explicit flags win.
+            // User scripts register first, so --env (and the config env
+            // field) can reference Script/NAME ids without recompiling.
+            if let Some(scripts) = args.opt("register-script") {
+                for part in scripts.split(',') {
+                    let part = part.trim();
+                    let Some((name, path)) = part.split_once('=') else {
+                        bail!("--register-script expects NAME=FILE.mpy, got {part:?}");
+                    };
+                    let path = path.trim();
+                    let src = std::fs::read_to_string(path)
+                        .with_context(|| format!("--register-script {part:?}"))?;
+                    let id = registry::register_script(name.trim(), &src)
+                        .map_err(|e| anyhow!("{e}"))?;
+                    eprintln!("registered {id} from {path}");
+                }
+            }
+            // --config seeds the defaults (env, seed, wrappers and the
+            // executor block); explicit flags win.
             let file_cfg = match args.opt("config") {
                 Some(path) => ExperimentConfig::load(std::path::Path::new(path))
                     .map_err(|e| anyhow!("{e}"))?,
@@ -128,6 +152,12 @@ fn main() -> Result<()> {
             let lanes =
                 args.u64("lanes", file_cfg.executor.lanes as u64)?.max(1) as usize;
             let executor = args.str("executor", &file_cfg.executor.kind);
+            let wrap_src = match args.opt("wrap") {
+                Some(chain) => chain.to_string(),
+                None => file_cfg.wrappers.join(","),
+            };
+            let wrap_chain =
+                WrapperSpec::parse_chain(&wrap_src).map_err(|e| anyhow!("{e}"))?;
             // A mixture spec always takes the batched path: its per-lane
             // env ids are meaningless to the single-env loop.
             let mixture = MixtureSpec::is_mixture(&env_id);
@@ -156,13 +186,15 @@ fn main() -> Result<()> {
                             .unwrap_or(1),
                         t => t,
                     };
-                let mut exec = build_executor(&env_id, kind, lanes, threads, seed)
-                    .map_err(|e| anyhow!("{e}"))?;
+                let mut exec =
+                    build_executor_wrapped(&env_id, kind, lanes, threads, seed, &wrap_chain)
+                        .map_err(|e| anyhow!("{e}"))?;
                 let lanes = exec.num_lanes();
                 let steps_per_lane = (steps / lanes as u64).max(1);
                 let r = run_batched_workload(exec.as_mut(), steps_per_lane, seed);
                 println!(
-                    "{env_id} [{} x {lanes} lanes]: {} lane-steps, {} episodes, {:.3}s, {:.0} steps/s",
+                    "{env_id} [{} x {lanes} lanes]: {} lane-steps, {} episodes, \
+                     {:.3}s, {:.0} steps/s",
                     kind.label(),
                     r.steps,
                     r.episodes,
@@ -170,7 +202,8 @@ fn main() -> Result<()> {
                     r.throughput
                 );
             } else {
-                let mut e = make(&env_id).map_err(|e| anyhow!("{e}"))?;
+                let env = make(&env_id).map_err(|e| anyhow!("{e}"))?;
+                let mut e = apply_wrappers(env, &wrap_chain);
                 let mode = if args.flag("render") {
                     RenderMode::Software
                 } else {

@@ -15,6 +15,7 @@
 //!   `[obs..., reward, done]`.
 
 use crate::core::env::{Env, Transition};
+use crate::core::error::{CairlError, Result};
 use crate::core::spaces::{Action, Space};
 use crate::render::{software, Framebuffer};
 use crate::script::interp::{Interpreter, Value};
@@ -43,27 +44,75 @@ pub struct ScriptEnv {
 impl ScriptEnv {
     /// Load a script.  `stream` is the PCG stream id of the *native*
     /// counterpart env (reset-noise parity); pass any constant for
-    /// script-only envs.
+    /// script-only envs.  Panics on a malformed script (the built-in
+    /// sources are compile-time constants); user-supplied sources go
+    /// through [`ScriptEnv::try_load`] instead.
     pub fn load(id: &str, src: &str, stream: u64, hint: RenderHint) -> ScriptEnv {
+        ScriptEnv::try_load(id, src, stream, hint).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Non-panicking [`ScriptEnv::load`] — the path
+    /// [`register_script`](crate::coordinator::registry::register_script)
+    /// takes for runtime-registered sources, where a broken script must
+    /// be a [`CairlError::Script`] the caller can report.
+    pub fn try_load(id: &str, src: &str, stream: u64, hint: RenderHint) -> Result<ScriptEnv> {
         let interp = Interpreter::load(src)
-            .unwrap_or_else(|e| panic!("script env {id}: {e}"));
-        let obs_dim = interp
-            .global("obs_dim")
-            .and_then(|v| v.as_num().ok())
-            .unwrap_or_else(|| panic!("script env {id}: missing obs_dim global"))
-            as usize;
-        let n_actions = interp
-            .global("n_actions")
-            .and_then(|v| v.as_num().ok())
-            .unwrap_or_else(|| panic!("script env {id}: missing n_actions global"))
-            as usize;
-        ScriptEnv {
+            .map_err(|e| CairlError::Script(format!("script env {id}: {e}")))?;
+        let read_dim = |name: &str| -> Result<usize> {
+            let value = interp
+                .global(name)
+                .and_then(|v| v.as_num().ok())
+                .ok_or_else(|| {
+                    CairlError::Script(format!("script env {id}: missing {name} global"))
+                })?;
+            if value < 1.0 {
+                return Err(CairlError::Script(format!(
+                    "script env {id}: {name} must be >= 1, got {value}"
+                )));
+            }
+            Ok(value as usize)
+        };
+        let obs_dim = read_dim("obs_dim")?;
+        let n_actions = read_dim("n_actions")?;
+        Ok(ScriptEnv {
             id: id.to_string(),
             interp,
             obs_dim,
             n_actions,
             stream,
             hint,
+        })
+    }
+
+    /// Exercise the env protocol once without panicking: seed, call
+    /// `reset()` and `step(0)`, and shape-check both return values.
+    /// Registration-time validation for user scripts.
+    pub fn probe(&mut self) -> Result<()> {
+        self.interp.seed_with_stream(0, self.stream);
+        let v = self.interp.call("reset", &[])?;
+        self.expect_list(&v, self.obs_dim, "reset()")?;
+        let v = self.interp.call("step", &[Value::Num(0.0)])?;
+        self.expect_list(&v, self.obs_dim + 2, "step(action)")?;
+        Ok(())
+    }
+
+    fn expect_list(&self, v: &Value, want: usize, ctx: &str) -> Result<()> {
+        match v {
+            Value::List(xs) => {
+                let n = xs.lock().unwrap().len();
+                if n == want {
+                    Ok(())
+                } else {
+                    Err(CairlError::Script(format!(
+                        "{}: {ctx} returned {n} values, wanted {want}",
+                        self.id
+                    )))
+                }
+            }
+            other => Err(CairlError::Script(format!(
+                "{}: {ctx} returned {other:?}, wanted a list",
+                self.id
+            ))),
         }
     }
 

@@ -6,9 +6,8 @@
 //! measured baseline; making it fast would un-calibrate Fig. 1/2 and
 //! Table II.
 
-use std::sync::{Arc, Mutex};
 use std::collections::HashMap;
-
+use std::sync::{Arc, Mutex};
 
 use crate::core::error::{CairlError, Result};
 use crate::core::rng::Pcg32;
@@ -454,7 +453,8 @@ mod tests {
 
     #[test]
     fn while_loop_with_break_continue() {
-        let src = "def f() { s = 0; i = 0; while (true) { i += 1; if (i > 10) { break; } if (i % 2 == 0) { continue; } s += i; } return s; }";
+        let src = "def f() { s = 0; i = 0; while (true) { i += 1; if (i > 10) { break; } \
+                   if (i % 2 == 0) { continue; } s += i; } return s; }";
         let v = run(src, "f", &[]);
         assert_eq!(v.as_num().unwrap(), 25.0); // 1+3+5+7+9
     }
@@ -467,7 +467,8 @@ mod tests {
 
     #[test]
     fn lists_index_and_mutate() {
-        let src = "def f() { xs = zeros(3); xs[1] = 7; push(xs, 9); return xs[1] + xs[3] + len(xs); }";
+        let src = "def f() { xs = zeros(3); xs[1] = 7; push(xs, 9); \
+                   return xs[1] + xs[3] + len(xs); }";
         assert_eq!(run(src, "f", &[]).as_num().unwrap(), 20.0);
     }
 
@@ -522,7 +523,8 @@ mod tests {
 
     #[test]
     fn elif_chains() {
-        let src = "def f(x) { if (x > 0) { return 1; } elif (x < 0) { return -1; } else { return 0; } }";
+        let src = "def f(x) { if (x > 0) { return 1; } elif (x < 0) { return -1; } \
+                   else { return 0; } }";
         assert_eq!(run(src, "f", &[Value::Num(5.0)]).as_num().unwrap(), 1.0);
         assert_eq!(run(src, "f", &[Value::Num(-5.0)]).as_num().unwrap(), -1.0);
         assert_eq!(run(src, "f", &[Value::Num(0.0)]).as_num().unwrap(), 0.0);

@@ -9,6 +9,12 @@
 //! at the cost of one vtable call per step; `benches/ablation_dispatch.rs`
 //! measures exactly that trade-off.
 
+//! Wrapper composition is also available as **data**: a
+//! [`WrapperSpec`] chain (`"TimeLimit(200),NormalizeObs"`) names the
+//! same stack declaratively, applied by [`apply_wrappers`] — the form
+//! the dynamic registry ([`crate::coordinator::registry::EnvSpec`]),
+//! experiment configs and `cairl run --wrap` consume.
+
 pub mod clip_reward;
 pub mod flatten;
 pub mod frame_skip;
@@ -17,6 +23,7 @@ pub mod normalize;
 pub mod pixel_obs;
 pub mod record_stats;
 pub mod reward_scale;
+pub mod spec;
 pub mod time_limit;
 
 pub use clip_reward::ClipReward;
@@ -27,4 +34,5 @@ pub use normalize::NormalizeObs;
 pub use pixel_obs::PixelObs;
 pub use record_stats::RecordEpisodeStatistics;
 pub use reward_scale::RewardScale;
+pub use spec::{apply_wrappers, WrapperSpec};
 pub use time_limit::TimeLimit;

@@ -1,0 +1,376 @@
+//! Declarative wrapper chains — wrapper composition as **data**.
+//!
+//! A [`WrapperSpec`] names one wrapper plus its parameters; an ordered
+//! `&[WrapperSpec]` is a whole stack, applied innermost-first by
+//! [`apply_wrappers`].  The same chain language serves three surfaces:
+//! built-in registry entries ([`EnvSpec`]
+//! (crate::coordinator::registry::EnvSpec) stores its stack as specs),
+//! experiment configs (the `"wrappers"` block), and the CLI
+//! (`cairl run --wrap "TimeLimit(200),NormalizeObs"`).
+//!
+//! The textual grammar is one item per wrapper, parameters in parens:
+//! `TimeLimit(200)`, `Flatten`, `FrameStack(4)`, `FrameSkip(2)`,
+//! `NormalizeObs`, `ClipReward` or `ClipReward(-1,1)`,
+//! `RewardScale(0.5)` or `RewardScale(0.5,0.25)`, `RecordStats` or
+//! `RecordStats(100)`, `PixelObs(16)` — chained with top-level commas.
+//!
+//! Declarative application costs one `Box` per wrapper (each layer
+//! erases to [`DynEnv`]); the generic structs remain available for
+//! zero-dispatch static composition, and `rust/tests/env_spec.rs` pins
+//! that both spellings produce bit-identical trajectories.
+
+use crate::core::env::DynEnv;
+use crate::core::error::{CairlError, Result};
+use crate::core::kwargs::Kwargs;
+use crate::wrappers;
+
+/// One wrapper layer, as data.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WrapperSpec {
+    /// [`wrappers::TimeLimit`]: truncate after `max_steps` steps.
+    TimeLimit { max_steps: u32 },
+    /// [`wrappers::Flatten`]: flatten the observation shape.
+    Flatten,
+    /// [`wrappers::FrameStack`]: stack the last `k` observations.
+    FrameStack { k: usize },
+    /// [`wrappers::FrameSkip`]: repeat each action `k` frames.
+    FrameSkip { k: u32 },
+    /// [`wrappers::NormalizeObs`]: rescale bounded dims to `[-1, 1]`.
+    NormalizeObs,
+    /// [`wrappers::ClipReward`]: clamp rewards into `[lo, hi]`.
+    ClipReward { lo: f32, hi: f32 },
+    /// [`wrappers::RewardScale`]: `r' = scale * r + shift`.
+    RewardScale { scale: f32, shift: f32 },
+    /// [`wrappers::RecordEpisodeStatistics`] with a bounded history.
+    RecordStats { capacity: usize },
+    /// [`wrappers::PixelObs`]: `size x size` grayscale pixels.
+    PixelObs { size: usize },
+}
+
+impl WrapperSpec {
+    /// Wrap `env` in this wrapper.
+    pub fn apply(&self, env: DynEnv) -> DynEnv {
+        match self {
+            WrapperSpec::TimeLimit { max_steps } => {
+                Box::new(wrappers::TimeLimit::new(env, *max_steps))
+            }
+            WrapperSpec::Flatten => Box::new(wrappers::Flatten::new(env)),
+            WrapperSpec::FrameStack { k } => Box::new(wrappers::FrameStack::new(env, *k)),
+            WrapperSpec::FrameSkip { k } => Box::new(wrappers::FrameSkip::new(env, *k)),
+            WrapperSpec::NormalizeObs => Box::new(wrappers::NormalizeObs::new(env)),
+            WrapperSpec::ClipReward { lo, hi } => {
+                Box::new(wrappers::ClipReward::new(env, *lo, *hi))
+            }
+            WrapperSpec::RewardScale { scale, shift } => {
+                Box::new(wrappers::RewardScale::new(env, *scale, *shift))
+            }
+            WrapperSpec::RecordStats { capacity } => {
+                Box::new(wrappers::RecordEpisodeStatistics::new(env, *capacity))
+            }
+            WrapperSpec::PixelObs { size } => Box::new(wrappers::PixelObs::new(env, *size)),
+        }
+    }
+
+    /// This spec with its parameters overridden by the reserved kwarg
+    /// keys (`max_steps`, `frame_stack`, `frame_skip`, `pixels`) when
+    /// present — how `"CartPole-v1?max_steps=200"` reaches the
+    /// registered TimeLimit layer.  An override outside `0..=u32::MAX`
+    /// is a [`CairlError::Config`], never a silent clamp.
+    pub fn overridden_by(&self, kwargs: &Kwargs) -> Result<WrapperSpec> {
+        let count = |key: &str, default: i64| -> Result<i64> {
+            let value = kwargs.i64_or(key, default);
+            if value < 0 || value > u32::MAX as i64 {
+                return Err(CairlError::Config(format!(
+                    "wrapper {}: kwarg {key:?} out of range: {value}",
+                    self.render()
+                )));
+            }
+            Ok(value)
+        };
+        Ok(match self {
+            WrapperSpec::TimeLimit { max_steps } => WrapperSpec::TimeLimit {
+                max_steps: count("max_steps", *max_steps as i64)? as u32,
+            },
+            WrapperSpec::FrameStack { k } => WrapperSpec::FrameStack {
+                k: count("frame_stack", *k as i64)? as usize,
+            },
+            WrapperSpec::FrameSkip { k } => WrapperSpec::FrameSkip {
+                k: count("frame_skip", *k as i64)? as u32,
+            },
+            WrapperSpec::PixelObs { size } => WrapperSpec::PixelObs {
+                size: count("pixels", *size as i64)? as usize,
+            },
+            other => other.clone(),
+        })
+    }
+
+    /// Check the parameters a constructor would otherwise `assert!` on,
+    /// as a [`CairlError::Config`] — the guard [`EnvSpec`]
+    /// (crate::coordinator::registry::EnvSpec)`::build` runs on the
+    /// kwarg-overridden chain so a bad override is an error, not a
+    /// panic inside a worker thread.
+    pub fn validate(&self) -> Result<()> {
+        let bad = |msg: String| {
+            Err(CairlError::Config(format!("wrapper {}: {msg}", self.render())))
+        };
+        match self {
+            WrapperSpec::TimeLimit { max_steps: 0 } => bad("max_steps must be >= 1".into()),
+            WrapperSpec::FrameStack { k: 0 } => bad("k must be >= 1".into()),
+            WrapperSpec::FrameSkip { k: 0 } => bad("k must be >= 1".into()),
+            WrapperSpec::ClipReward { lo, hi } if lo > hi => {
+                bad(format!("needs lo <= hi, got ({lo}, {hi})"))
+            }
+            WrapperSpec::PixelObs { size } if *size == 0 || 64 % *size != 0 => {
+                bad(format!("size must divide 64, got {size}"))
+            }
+            _ => Ok(()),
+        }
+    }
+
+    /// Parse one item of the chain grammar (see the module docs).
+    pub fn parse(src: &str) -> Result<WrapperSpec> {
+        let bad = |msg: String| CairlError::Config(format!("wrapper spec {src:?}: {msg}"));
+        let s = src.trim();
+        let (name, args): (&str, Vec<&str>) = match s.split_once('(') {
+            Some((name, rest)) => {
+                let Some(inner) = rest.trim_end().strip_suffix(')') else {
+                    return Err(bad("missing closing paren".into()));
+                };
+                let args = if inner.trim().is_empty() {
+                    Vec::new()
+                } else {
+                    inner.split(',').map(str::trim).collect()
+                };
+                (name.trim(), args)
+            }
+            None => (s, Vec::new()),
+        };
+        let num_f32 = |raw: &str| -> Result<f32> {
+            raw.parse::<f32>()
+                .map_err(|_| bad(format!("bad number {raw:?}")))
+        };
+        let num_u32 = |raw: &str| -> Result<u32> {
+            raw.parse::<u32>()
+                .map_err(|_| bad(format!("bad count {raw:?}")))
+        };
+        match (name, args.as_slice()) {
+            ("TimeLimit", [n]) => {
+                let max_steps = num_u32(n)?;
+                if max_steps == 0 {
+                    return Err(bad("TimeLimit needs max_steps >= 1".into()));
+                }
+                Ok(WrapperSpec::TimeLimit { max_steps })
+            }
+            ("Flatten", []) => Ok(WrapperSpec::Flatten),
+            ("FrameStack", [k]) => {
+                let k = num_u32(k)? as usize;
+                if k == 0 {
+                    return Err(bad("FrameStack needs k >= 1".into()));
+                }
+                Ok(WrapperSpec::FrameStack { k })
+            }
+            ("FrameSkip", [k]) => {
+                let k = num_u32(k)?;
+                if k == 0 {
+                    return Err(bad("FrameSkip needs k >= 1".into()));
+                }
+                Ok(WrapperSpec::FrameSkip { k })
+            }
+            ("NormalizeObs", []) => Ok(WrapperSpec::NormalizeObs),
+            ("ClipReward", []) => Ok(WrapperSpec::ClipReward { lo: -1.0, hi: 1.0 }),
+            ("ClipReward", [lo, hi]) => {
+                let (lo, hi) = (num_f32(lo)?, num_f32(hi)?);
+                if lo > hi {
+                    return Err(bad(format!("ClipReward needs lo <= hi, got ({lo}, {hi})")));
+                }
+                Ok(WrapperSpec::ClipReward { lo, hi })
+            }
+            ("RewardScale", [scale]) => Ok(WrapperSpec::RewardScale {
+                scale: num_f32(scale)?,
+                shift: 0.0,
+            }),
+            ("RewardScale", [scale, shift]) => Ok(WrapperSpec::RewardScale {
+                scale: num_f32(scale)?,
+                shift: num_f32(shift)?,
+            }),
+            ("RecordStats", []) => Ok(WrapperSpec::RecordStats { capacity: 100 }),
+            ("RecordStats", [capacity]) => Ok(WrapperSpec::RecordStats {
+                capacity: num_u32(capacity)? as usize,
+            }),
+            ("PixelObs", [size]) => {
+                let size = num_u32(size)? as usize;
+                if size == 0 || 64 % size != 0 {
+                    return Err(bad(format!("PixelObs size must divide 64, got {size}")));
+                }
+                Ok(WrapperSpec::PixelObs { size })
+            }
+            _ => Err(bad(
+                "expected TimeLimit(n) | Flatten | FrameStack(k) | FrameSkip(k) | \
+                 NormalizeObs | ClipReward[(lo,hi)] | RewardScale(scale[,shift]) | \
+                 RecordStats[(cap)] | PixelObs(size)"
+                    .into(),
+            )),
+        }
+    }
+
+    /// Parse a whole chain, `"TimeLimit(200),ClipReward(-1,1)"` —
+    /// top-level commas separate items, commas inside parens are
+    /// parameter separators.  The empty string is the empty chain.
+    pub fn parse_chain(src: &str) -> Result<Vec<WrapperSpec>> {
+        let src = src.trim();
+        if src.is_empty() {
+            return Ok(Vec::new());
+        }
+        split_top_level(src, ',')
+            .into_iter()
+            .map(WrapperSpec::parse)
+            .collect()
+    }
+
+    /// Render back to the canonical item spelling
+    /// (`parse(render()) == self`).
+    pub fn render(&self) -> String {
+        match self {
+            WrapperSpec::TimeLimit { max_steps } => format!("TimeLimit({max_steps})"),
+            WrapperSpec::Flatten => "Flatten".into(),
+            WrapperSpec::FrameStack { k } => format!("FrameStack({k})"),
+            WrapperSpec::FrameSkip { k } => format!("FrameSkip({k})"),
+            WrapperSpec::NormalizeObs => "NormalizeObs".into(),
+            WrapperSpec::ClipReward { lo, hi } => format!("ClipReward({lo},{hi})"),
+            WrapperSpec::RewardScale { scale, shift } => {
+                format!("RewardScale({scale},{shift})")
+            }
+            WrapperSpec::RecordStats { capacity } => format!("RecordStats({capacity})"),
+            WrapperSpec::PixelObs { size } => format!("PixelObs({size})"),
+        }
+    }
+
+    /// Render a whole chain with top-level comma separators.
+    pub fn render_chain(chain: &[WrapperSpec]) -> String {
+        chain
+            .iter()
+            .map(WrapperSpec::render)
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+}
+
+/// Apply a declarative chain innermost-first: `[A, B]` produces
+/// `B(A(env))`, mirroring `B::new(A::new(env))`.
+pub fn apply_wrappers(env: DynEnv, chain: &[WrapperSpec]) -> DynEnv {
+    chain.iter().fold(env, |env, spec| spec.apply(env))
+}
+
+/// Split on `sep` at paren depth zero only.
+fn split_top_level(src: &str, sep: char) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    for (i, c) in src.char_indices() {
+        if c == '(' {
+            depth += 1;
+        } else if c == ')' {
+            depth = depth.saturating_sub(1);
+        } else if c == sep && depth == 0 {
+            parts.push(&src[start..i]);
+            start = i + c.len_utf8();
+        }
+    }
+    parts.push(&src[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::env::Env;
+    use crate::core::kwargs::{Kwargs, KwargValue};
+    use crate::envs::CartPole;
+
+    #[test]
+    fn every_item_round_trips_through_the_grammar() {
+        let chain = vec![
+            WrapperSpec::TimeLimit { max_steps: 200 },
+            WrapperSpec::Flatten,
+            WrapperSpec::FrameStack { k: 4 },
+            WrapperSpec::FrameSkip { k: 2 },
+            WrapperSpec::NormalizeObs,
+            WrapperSpec::ClipReward { lo: -1.0, hi: 1.0 },
+            WrapperSpec::RewardScale { scale: 0.5, shift: 0.25 },
+            WrapperSpec::RecordStats { capacity: 100 },
+            WrapperSpec::PixelObs { size: 16 },
+        ];
+        let rendered = WrapperSpec::render_chain(&chain);
+        assert_eq!(WrapperSpec::parse_chain(&rendered).unwrap(), chain);
+    }
+
+    #[test]
+    fn chain_parse_respects_parens_and_defaults() {
+        let chain =
+            WrapperSpec::parse_chain("TimeLimit(100), ClipReward(-0.5, 0.5), RecordStats")
+                .unwrap();
+        assert_eq!(chain.len(), 3);
+        assert_eq!(chain[0], WrapperSpec::TimeLimit { max_steps: 100 });
+        assert_eq!(chain[1], WrapperSpec::ClipReward { lo: -0.5, hi: 0.5 });
+        assert_eq!(chain[2], WrapperSpec::RecordStats { capacity: 100 });
+        assert!(WrapperSpec::parse_chain("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "TimeLimit",
+            "TimeLimit(0)",
+            "TimeLimit(abc)",
+            "TimeLimit(1",
+            "Nope(3)",
+            "ClipReward(1,-1)",
+            "FrameStack(0)",
+            "PixelObs(7)",
+            "Flatten(1)",
+        ] {
+            assert!(WrapperSpec::parse(bad).is_err(), "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn apply_wrappers_composes_innermost_first() {
+        let env: crate::core::env::DynEnv = Box::new(CartPole::new());
+        let wrapped = apply_wrappers(
+            env,
+            &[
+                WrapperSpec::TimeLimit { max_steps: 100 },
+                WrapperSpec::NormalizeObs,
+            ],
+        );
+        assert_eq!(wrapped.id(), "NormalizeObs(TimeLimit(CartPole-v1, 100))");
+    }
+
+    #[test]
+    fn kwarg_overrides_reach_the_right_items() {
+        let kwargs = Kwargs::new()
+            .with("max_steps", KwargValue::Int(33))
+            .with("pixels", KwargValue::Int(8));
+        let chain = [
+            WrapperSpec::TimeLimit { max_steps: 500 },
+            WrapperSpec::PixelObs { size: 16 },
+            WrapperSpec::NormalizeObs,
+        ];
+        let eff: Vec<_> = chain.iter().map(|w| w.overridden_by(&kwargs).unwrap()).collect();
+        assert_eq!(eff[0], WrapperSpec::TimeLimit { max_steps: 33 });
+        assert_eq!(eff[1], WrapperSpec::PixelObs { size: 8 });
+        assert_eq!(eff[2], WrapperSpec::NormalizeObs);
+    }
+
+    #[test]
+    fn out_of_range_overrides_error_instead_of_clamping() {
+        let spec = WrapperSpec::TimeLimit { max_steps: 500 };
+        for bad in [-1i64, i64::from(u32::MAX) + 1, i64::MAX] {
+            let kwargs = Kwargs::new().with("max_steps", KwargValue::Int(bad));
+            let err = spec.overridden_by(&kwargs).unwrap_err();
+            assert!(err.to_string().contains("out of range"), "{bad}: {err}");
+        }
+        let fine = Kwargs::new();
+        assert_eq!(spec.overridden_by(&fine).unwrap(), spec);
+    }
+}

@@ -185,6 +185,111 @@ fn run_rejects_bad_mixture_spec() {
     assert!(stderr.contains("zero lanes"), "{stderr}");
 }
 
+/// The episode count out of a `run` report line
+/// (`"...: N steps, M episodes, ..."`).
+fn episode_count(stdout: &str) -> u64 {
+    stdout
+        .split(" episodes")
+        .next()
+        .and_then(|head| head.rsplit(' ').next())
+        .and_then(|n| n.parse().ok())
+        .unwrap_or_else(|| panic!("no episode count in {stdout:?}"))
+}
+
+#[test]
+fn run_register_script_builds_heterogeneous_pool_without_recompiling() {
+    // The acceptance path: register a user MiniScript env from a file,
+    // then run it in one pool next to a kwarg-parameterized native env.
+    let script = concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/bounce.mpy");
+    let (stdout, stderr, ok) = cairl(&[
+        "run",
+        "--register-script",
+        &format!("MyEnv={script}"),
+        "--env",
+        "Script/MyEnv:8,CartPole-v1?max_steps=200:4",
+        "--steps",
+        "1200",
+        "--threads",
+        "2",
+    ]);
+    assert!(ok, "{stdout}\n{stderr}");
+    assert!(stderr.contains("registered Script/MyEnv"), "{stderr}");
+    assert!(stdout.contains("x 12 lanes]"), "{stdout}");
+    assert!(stdout.contains("1200 lane-steps"), "{stdout}");
+    assert!(stdout.contains("steps/s"), "{stdout}");
+}
+
+#[test]
+fn run_register_script_rejects_broken_sources_and_specs() {
+    let dir = std::env::temp_dir().join(format!("cairl_cli_mpy_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("broken.mpy");
+    std::fs::write(&path, "this is not MiniScript (").unwrap();
+    let (_, stderr, ok) = cairl(&[
+        "run",
+        "--register-script",
+        &format!("Broken={}", path.display()),
+        "--steps",
+        "10",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("script error"), "{stderr}");
+    let (_, stderr, ok) = cairl(&["run", "--register-script", "NoEquals", "--steps", "10"]);
+    assert!(!ok);
+    assert!(stderr.contains("NAME=FILE.mpy"), "{stderr}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn run_id_kwargs_shorten_episodes() {
+    let (stdout, stderr, ok) = cairl(&[
+        "run", "--env", "CartPole-v1?max_steps=5", "--steps", "400",
+    ]);
+    assert!(ok, "{stdout}\n{stderr}");
+    // A 5-step cap over 400 steps ends at least 400/5 = 80 episodes.
+    let episodes = episode_count(&stdout);
+    assert!(episodes >= 80, "{stdout}");
+}
+
+#[test]
+fn run_rejects_unknown_kwargs_with_the_valid_set() {
+    let (_, stderr, ok) = cairl(&["run", "--env", "CartPole-v1?nope=3", "--steps", "100"]);
+    assert!(!ok);
+    assert!(stderr.contains("nope"), "{stderr}");
+    assert!(stderr.contains("max_steps"), "valid kwargs listed: {stderr}");
+}
+
+#[test]
+fn run_wrap_applies_a_declarative_chain() {
+    let (stdout, stderr, ok) = cairl(&[
+        "run", "--env", "CartPole-v1", "--steps", "400", "--wrap", "TimeLimit(5)",
+    ]);
+    assert!(ok, "{stdout}\n{stderr}");
+    let episodes = episode_count(&stdout);
+    assert!(episodes >= 80, "{stdout}");
+
+    let (_, stderr, ok) = cairl(&[
+        "run", "--env", "CartPole-v1", "--steps", "100", "--wrap", "Bogus(1)",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("Bogus"), "{stderr}");
+}
+
+#[test]
+fn run_honors_config_wrappers_block() {
+    let dir = std::env::temp_dir().join(format!("cairl_cli_wrap_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("exp.json");
+    std::fs::write(&path, r#"{"env": "CartPole-v1", "wrappers": ["TimeLimit(5)"]}"#).unwrap();
+    let (stdout, stderr, ok) = cairl(&[
+        "run", "--steps", "400", "--config", path.to_str().unwrap(),
+    ]);
+    assert!(ok, "{stdout}\n{stderr}");
+    let episodes = episode_count(&stdout);
+    assert!(episodes >= 80, "{stdout}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 #[test]
 fn run_rejects_unknown_executor() {
     let (_, stderr, ok) = cairl(&[

@@ -1,0 +1,298 @@
+//! Integration: the dynamic `EnvSpec` registry.
+//!
+//! Four contracts pinned here:
+//!
+//! 1. **Wrapper-chain equivalence** — a declarative [`WrapperSpec`]
+//!    chain is bit-identical to the hand-composed generic wrapper
+//!    stack, standalone and through every executor/thread count.
+//! 2. **Parameterized construction** — `make("Id?kwargs")` and
+//!    `make_with` agree bit-for-bit, and malformed kwargs are errors.
+//! 3. **Parameterized mixtures** — kwarg-carrying mixture components
+//!    reproduce hand-built per-lane envs exactly, on every executor.
+//! 4. **Registry thread safety** — concurrent `register_script` +
+//!    `make` traffic races cleanly (and duplicate ids get exactly one
+//!    winner).
+//!
+//! Thread counts default to 1/2/4; the CI determinism matrix re-runs
+//! the suite with `CAIRL_TEST_THREADS` pinned to each of 1, 2, 4, 8.
+
+mod common;
+
+use cairl::coordinator::experiment::{
+    build_executor, build_executor_wrapped, run_batched_workload, ExecutorKind,
+};
+use cairl::coordinator::pool::{BatchedExecutor, EnvPool};
+use cairl::coordinator::vec_env::VecEnv;
+use cairl::core::env::{DynEnv, Env, Transition};
+use cairl::core::kwargs::{Kwargs, KwargValue};
+use cairl::core::rng::Pcg32;
+use cairl::core::spaces::Action;
+use cairl::envs::CartPole;
+use cairl::wrappers::{
+    apply_wrappers, ClipReward, FrameStack, NormalizeObs, RewardScale, TimeLimit, WrapperSpec,
+};
+use cairl::{list_envs, make, make_with, register_script};
+use common::test_threads;
+
+/// Deterministic single-env rollout with auto-reset: seed, then follow
+/// a fixed discrete action stream, recording every observation and
+/// transition.
+fn rollout<E: Env + ?Sized>(env: &mut E, steps: u32, seed: u64) -> (Vec<f32>, Vec<Transition>) {
+    let mut rng = Pcg32::new(seed, 5);
+    let mut obs = vec![0.0f32; env.obs_dim()];
+    env.seed(seed);
+    env.reset_into(&mut obs);
+    let mut obs_stream = obs.clone();
+    let mut tr_stream = Vec::new();
+    for _ in 0..steps {
+        let a = Action::Discrete(rng.below(2) as usize);
+        let t = env.step_into(&a, &mut obs);
+        obs_stream.extend_from_slice(&obs);
+        tr_stream.push(t);
+        if t.done || t.truncated {
+            env.reset_into(&mut obs);
+            obs_stream.extend_from_slice(&obs);
+        }
+    }
+    (obs_stream, tr_stream)
+}
+
+/// Replay a per-step action tape on any executor, returning the full
+/// (obs, transition) stream.
+fn batch_trajectory(
+    exec: &mut dyn BatchedExecutor,
+    tape: &[Vec<Action>],
+) -> (Vec<f32>, Vec<Transition>) {
+    let n = exec.num_lanes();
+    let d = exec.obs_dim();
+    let mut obs = vec![0.0f32; n * d];
+    let mut tr = vec![Transition::default(); n];
+    let mut obs_stream = Vec::new();
+    let mut tr_stream = Vec::new();
+    exec.reset_into(&mut obs);
+    obs_stream.extend_from_slice(&obs);
+    for actions in tape {
+        exec.step_into(actions, &mut obs, &mut tr);
+        obs_stream.extend_from_slice(&obs);
+        tr_stream.extend_from_slice(&tr);
+    }
+    (obs_stream, tr_stream)
+}
+
+/// `steps` batches of identical-space discrete actions for `lanes`
+/// lanes, from a fixed stream.
+fn discrete_tape(steps: usize, lanes: usize, seed: u64) -> Vec<Vec<Action>> {
+    let mut rng = Pcg32::new(seed, 3);
+    (0..steps)
+        .map(|_| {
+            (0..lanes)
+                .map(|_| Action::Discrete(rng.below(2) as usize))
+                .collect()
+        })
+        .collect()
+}
+
+#[test]
+fn declarative_chain_matches_hand_composed_stack() {
+    let chain = WrapperSpec::parse_chain(
+        "TimeLimit(90),NormalizeObs,FrameStack(2),RewardScale(2,2),ClipReward(-3,3)",
+    )
+    .unwrap();
+    let mut declarative = apply_wrappers(Box::new(CartPole::new()), &chain);
+    let mut manual = ClipReward::new(
+        RewardScale::new(
+            FrameStack::new(NormalizeObs::new(TimeLimit::new(CartPole::new(), 90)), 2),
+            2.0,
+            2.0,
+        ),
+        -3.0,
+        3.0,
+    );
+    assert_eq!(declarative.id(), manual.id());
+    assert_eq!(declarative.obs_dim(), manual.obs_dim());
+    let (obs_d, tr_d) = rollout(declarative.as_mut(), 400, 9);
+    let (obs_m, tr_m) = rollout(&mut manual, 400, 9);
+    assert_eq!(tr_d, tr_m, "declarative vs static transitions diverged");
+    assert_eq!(obs_d, obs_m, "declarative vs static observations diverged");
+    // The clip actually engaged (reward 1 -> x2 + 2 = 4 -> clipped 3).
+    assert!(tr_d.iter().all(|t| t.reward == 3.0));
+}
+
+#[test]
+fn declarative_chains_are_bit_identical_across_executors_and_threads() {
+    const LANES: usize = 8;
+    let chain = [
+        WrapperSpec::TimeLimit { max_steps: 40 },
+        WrapperSpec::NormalizeObs,
+    ];
+    let factory = || apply_wrappers(Box::new(CartPole::new()) as DynEnv, &chain);
+    let tape = discrete_tape(120, LANES, 77);
+    let mut reference = VecEnv::new(LANES, 5, factory);
+    let (obs_ref, tr_ref) = batch_trajectory(&mut reference, &tape);
+    for threads in test_threads() {
+        let mut pool = EnvPool::new(LANES, 5, threads, factory);
+        let (obs, tr) = batch_trajectory(&mut pool, &tape);
+        assert_eq!(tr_ref, tr, "transitions diverged at {threads} threads");
+        assert_eq!(obs_ref, obs, "observations diverged at {threads} threads");
+    }
+}
+
+#[test]
+fn make_with_and_id_kwargs_agree_bit_for_bit() {
+    let kwargs = Kwargs::new().with("max_steps", KwargValue::Int(60));
+    let mut from_id = make("CartPole-v1?max_steps=60").unwrap();
+    let mut from_kwargs = make_with("CartPole-v1", &kwargs).unwrap();
+    let (obs_a, tr_a) = rollout(from_id.as_mut(), 300, 3);
+    let (obs_b, tr_b) = rollout(from_kwargs.as_mut(), 300, 3);
+    assert_eq!(tr_a, tr_b);
+    assert_eq!(obs_a, obs_b);
+    // The 60-step cap binds: every episode ends within 60 steps.
+    let mut run_len = 0u32;
+    for t in &tr_a {
+        run_len += 1;
+        if t.done || t.truncated {
+            assert!(run_len <= 60, "episode ran {run_len} > 60 steps");
+            run_len = 0;
+        }
+    }
+}
+
+#[test]
+fn malformed_kwargs_are_rejected_everywhere() {
+    // Unknown key, bad value, missing '=', unknown id.
+    assert!(make("CartPole-v1?bogus=1").is_err());
+    assert!(make("CartPole-v1?max_steps=banana").is_err());
+    assert!(make("CartPole-v1?max_steps").is_err());
+    assert!(make("NoSuchEnv-v0?max_steps=1").is_err());
+    let bogus = Kwargs::new().with("bogus", KwargValue::Int(1));
+    assert!(make_with("CartPole-v1", &bogus).is_err());
+    let wrong_type = Kwargs::new().with("max_steps", KwargValue::Str("banana".into()));
+    assert!(make_with("CartPole-v1", &wrong_type).is_err());
+    // The same validation guards executor construction, mixtures included.
+    let kind = ExecutorKind::Sequential;
+    assert!(build_executor("CartPole-v1?bogus=1", kind, 2, 1, 0).is_err());
+    assert!(build_executor("CartPole-v1?bogus=1:2,Acrobot-v1:2", kind, 1, 1, 0).is_err());
+}
+
+#[test]
+fn parameterized_mixture_lanes_match_hand_built_envs() {
+    const SPEC: &str = "CartPole-v1?max_steps=7:2,CartPole-v1:2";
+    let tape = discrete_tape(40, 4, 13);
+    // Hand-built reference: the kwargs resolve to per-lane TimeLimits.
+    let hand_built: Vec<DynEnv> = vec![
+        Box::new(TimeLimit::new(CartPole::new(), 7)),
+        Box::new(TimeLimit::new(CartPole::new(), 7)),
+        Box::new(TimeLimit::new(CartPole::new(), 500)),
+        Box::new(TimeLimit::new(CartPole::new(), 500)),
+    ];
+    let mut reference = VecEnv::from_envs(hand_built, 11);
+    let (obs_ref, tr_ref) = batch_trajectory(&mut reference, &tape);
+    for kind in [
+        ExecutorKind::Sequential,
+        ExecutorKind::PoolSync,
+        ExecutorKind::PoolAsync,
+    ] {
+        for threads in test_threads() {
+            let mut exec = build_executor(SPEC, kind, 1, threads, 11).unwrap();
+            assert_eq!(exec.num_lanes(), 4);
+            assert_eq!(exec.lane_specs()[0].env_id, "CartPole-v1?max_steps=7");
+            assert_eq!(exec.lane_specs()[2].env_id, "CartPole-v1");
+            let (obs, tr) = batch_trajectory(exec.as_mut(), &tape);
+            assert_eq!(tr_ref, tr, "{kind:?} diverged at {threads} threads");
+            assert_eq!(obs_ref, obs, "{kind:?} diverged at {threads} threads");
+        }
+    }
+}
+
+#[test]
+fn registered_script_joins_mixture_pools_end_to_end() {
+    // The CLI acceptance path, at the library level: register the
+    // checked-in example script, then run it next to a parameterized
+    // native env in one pool on every executor kind.
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/bounce.mpy");
+    let src = std::fs::read_to_string(path).unwrap();
+    let id = register_script("BounceSuite", &src).unwrap();
+    assert_eq!(id, "Script/BounceSuite");
+    let spec = format!("{id}:3,CartPole-v1?max_steps=50:2");
+    let mut counts = Vec::new();
+    for kind in [
+        ExecutorKind::Sequential,
+        ExecutorKind::PoolSync,
+        ExecutorKind::PoolAsync,
+    ] {
+        let mut exec = build_executor(&spec, kind, 1, 2, 7).unwrap();
+        assert_eq!(exec.num_lanes(), 5, "{kind:?}");
+        assert_eq!(exec.obs_dim(), 4, "{kind:?}: padded to CartPole's width");
+        assert_eq!(exec.lane_specs()[0].env_id, id);
+        assert_eq!(exec.lane_specs()[0].obs_dim, 2);
+        let r = run_batched_workload(exec.as_mut(), 60, 3);
+        assert_eq!(r.steps, 5 * 60);
+        counts.push((r.steps, r.episodes));
+    }
+    assert_eq!(counts[0], counts[1], "sync pool diverged from sequential");
+    assert_eq!(counts[0], counts[2], "async pool diverged from sequential");
+
+    // A --wrap chain applies to every lane, script lanes included.
+    let chain = [WrapperSpec::TimeLimit { max_steps: 5 }];
+    let kind = ExecutorKind::Sequential;
+    let mut wrapped = build_executor_wrapped(&spec, kind, 1, 1, 7, &chain).unwrap();
+    let r = run_batched_workload(wrapped.as_mut(), 60, 3);
+    assert!(
+        r.episodes >= 5 * (60 / 5),
+        "5-step cap on 5 lanes x 60 steps must end >= 60 episodes, got {}",
+        r.episodes
+    );
+}
+
+#[test]
+fn concurrent_register_script_and_make_are_thread_safe() {
+    const SRC: &str = "obs_dim = 1;\nn_actions = 2;\nx = 0;\n\
+                       def reset() { global x; x = 0; return [x]; }\n\
+                       def step(a) { global x; x = x + 1; return [x, 1.0, 0]; }";
+    // Four writers registering unique ids, each interleaving reads of
+    // both built-in and freshly registered specs.
+    let registered: Vec<String> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..4)
+            .map(|worker| {
+                scope.spawn(move || {
+                    let mut ids = Vec::new();
+                    for i in 0..8 {
+                        let name = format!("SpecRace{worker}x{i}");
+                        let id = register_script(&name, SRC).unwrap();
+                        let mut builtin = make("CartPole-v1").unwrap();
+                        assert_eq!(builtin.reset().len(), 4);
+                        let mut own = make(&id).unwrap();
+                        assert_eq!(own.reset(), vec![0.0]);
+                        ids.push(id);
+                    }
+                    ids
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().unwrap())
+            .collect()
+    });
+    assert_eq!(registered.len(), 32);
+    let listed: std::collections::HashSet<String> =
+        list_envs().into_iter().map(|(id, _)| id).collect();
+    for id in &registered {
+        assert!(listed.contains(id), "{id} missing from list_envs");
+        let mut env = make(id).unwrap();
+        assert_eq!(env.reset(), vec![0.0]);
+    }
+
+    // Racing duplicate registrations: exactly one winner.
+    let errors: usize = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..4)
+            .map(|_| scope.spawn(|| register_script("SpecRaceDup", SRC).is_err()))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .filter(|&failed| failed)
+            .count()
+    });
+    assert_eq!(errors, 3, "exactly one of four racing registrations wins");
+}

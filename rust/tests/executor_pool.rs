@@ -69,12 +69,12 @@ fn trajectory(
 #[test]
 fn pool_sync_is_bit_identical_to_vec_env_for_every_registered_env() {
     for (id, _) in list_envs() {
-        let tape = action_tape(id, STEPS, LANES);
-        let mut reference = VecEnv::new(LANES, BASE_SEED, || make(id).unwrap());
+        let tape = action_tape(&id, STEPS, LANES);
+        let mut reference = VecEnv::new(LANES, BASE_SEED, || make(&id).unwrap());
         let (obs_ref, tr_ref) = trajectory(&mut reference, &tape);
         for threads in test_threads() {
             let mut pool =
-                EnvPool::new(LANES, BASE_SEED, threads, || make(id).unwrap());
+                EnvPool::new(LANES, BASE_SEED, threads, || make(&id).unwrap());
             let (obs, tr) = trajectory(&mut pool, &tape);
             assert_eq!(tr_ref, tr, "{id}: transitions diverged at {threads} threads");
             assert_eq!(obs_ref, obs, "{id}: observations diverged at {threads} threads");

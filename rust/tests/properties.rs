@@ -8,10 +8,10 @@
 //! replay-buffer bounds, VM safety, tournament pairing rules, RNG
 //! reproducibility.
 
+use cairl::coordinator::vec_env::VecEnv;
 use cairl::core::env::{Env, Transition};
 use cairl::core::rng::Pcg32;
 use cairl::core::spaces::{Action, Space};
-use cairl::coordinator::vec_env::VecEnv;
 use cairl::envs::{CartPole, MountainCar, Pendulum};
 use cairl::flash::assembler::assemble;
 use cairl::flash::opcode::Op;

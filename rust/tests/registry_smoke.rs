@@ -11,7 +11,7 @@ use cairl::{list_envs, make};
 #[test]
 fn every_env_survives_1000_random_steps() {
     for (id, _) in list_envs() {
-        let mut env = make(id).unwrap();
+        let mut env = make(&id).unwrap();
         env.seed(1);
         let mut rng = Pcg32::new(2, 2);
         let mut steps = 0u32;
@@ -33,7 +33,7 @@ fn every_env_survives_1000_random_steps() {
 fn every_env_renders_without_panicking() {
     let mut fb = Framebuffer::standard();
     for (id, _) in list_envs() {
-        let mut env = make(id).unwrap();
+        let mut env = make(&id).unwrap();
         env.seed(0);
         let mut obs = vec![0.0f32; env.obs_dim()];
         env.reset_into(&mut obs);
@@ -48,7 +48,7 @@ fn every_env_renders_without_panicking() {
 #[test]
 fn observation_matches_declared_space_dim() {
     for (id, _) in list_envs() {
-        let mut env = make(id).unwrap();
+        let mut env = make(&id).unwrap();
         let obs = env.reset();
         assert_eq!(obs.len(), env.obs_dim(), "{id}");
         assert_eq!(
@@ -63,7 +63,7 @@ fn observation_matches_declared_space_dim() {
 fn sampled_actions_are_always_contained() {
     let mut rng = Pcg32::new(5, 5);
     for (id, _) in list_envs() {
-        let env = make(id).unwrap();
+        let env = make(&id).unwrap();
         let space = env.action_space();
         for _ in 0..200 {
             let a = space.sample(&mut rng);
@@ -75,7 +75,7 @@ fn sampled_actions_are_always_contained() {
 #[test]
 fn discrete_envs_accept_every_action() {
     for (id, _) in list_envs() {
-        let mut env = make(id).unwrap();
+        let mut env = make(&id).unwrap();
         env.seed(9);
         if let Space::Discrete { n } = env.action_space() {
             let mut obs = vec![0.0f32; env.obs_dim()];
@@ -95,7 +95,7 @@ fn seeding_controls_reset_distribution() {
     for (id, _) in list_envs() {
         // Puzzle/flash envs with constant starts are allowed to be equal
         // across seeds only if they are *also* equal for the same seed.
-        let mut env = make(id).unwrap();
+        let mut env = make(&id).unwrap();
         env.seed(100);
         let a = env.reset();
         env.seed(100);
