@@ -36,10 +36,15 @@ def main() -> int:
         "steps_per_sec_lines": [],
     }
 
+    kernels: set[str] = set()
     for csv_path in sorted(results_dir.glob("*.csv")):
         with csv_path.open(newline="") as fh:
             rows = list(csv.DictReader(fh))
         doc["tables"][csv_path.stem] = rows
+        kernels.update(row["kernel"] for row in rows if row.get("kernel"))
+    # Which stepping kernels the bench rows cover (scalar/fused), so the
+    # trend tooling and humans compare like against like across runs.
+    doc["kernel_modes"] = sorted(kernels)
 
     log_path = results_dir / "bench_smoke.log"
     if log_path.exists():
@@ -52,7 +57,11 @@ def main() -> int:
     out_path.write_text(json.dumps(doc, indent=2) + "\n")
     n_tables = len(doc["tables"])
     n_lines = len(doc["steps_per_sec_lines"])
-    print(f"wrote {out_path}: {n_tables} tables, {n_lines} steps/sec lines")
+    modes = ",".join(doc["kernel_modes"]) or "none"
+    print(
+        f"wrote {out_path}: {n_tables} tables, {n_lines} steps/sec lines, "
+        f"kernel modes: {modes}"
+    )
     return 0
 
 

@@ -13,7 +13,10 @@ CI bench runners are shared and quick-mode budgets are tiny — but the
 annotations make a real regression visible on the PR.
 
 Exit status: 0 always, unless the *current* document is unreadable.
-A missing previous artifact (first run, expired retention) is a no-op.
+A missing previous artifact (first run on a branch, expired retention,
+failed download) degrades gracefully: an informational `::notice::`
+annotation, exit 0.  A corrupt/unreadable previous artifact is treated
+the same way — only the current document is load-bearing.
 """
 
 import json
@@ -76,9 +79,23 @@ def main() -> int:
 
     previous_path = find_previous(Path(args[1]))
     if previous_path is None:
-        print(f"bench_trend: no previous BENCH_ci.json under {args[1]!r}; skipping")
+        print(
+            "::notice title=bench trend::no previous BENCH_ci.json artifact "
+            f"under {args[1]!r} (first run on this branch, or retention "
+            "expired) — nothing to compare against, skipping"
+        )
         return 0
-    previous = load_lines(previous_path)
+    try:
+        previous = load_lines(previous_path)
+    except (OSError, ValueError, AttributeError, TypeError) as err:
+        # ValueError covers json.JSONDecodeError; AttributeError/TypeError
+        # cover well-formed JSON of the wrong shape (e.g. a bare null or
+        # list from a truncated upload).
+        print(
+            "::notice title=bench trend::previous BENCH_ci.json at "
+            f"{previous_path} is unreadable ({err}) — skipping comparison"
+        )
+        return 0
 
     shared = sorted(set(current) & set(previous))
     print(

@@ -76,12 +76,14 @@ fn main() {
     );
 
     // --- executor-layer dispatch: the same workload behind the
-    // BatchedExecutor trait, sequential vs persistent-worker pools.
-    // Per-lane-step cost includes action sampling and (for the pools)
-    // the per-batch synchronisation, i.e. the executor overhead the
-    // fig1_console comparison amortises with large batches.
+    // BatchedExecutor trait, sequential vs persistent-worker pools, on
+    // both stepping kernels (scalar per-lane dispatch vs fused SoA
+    // batch — the ISSUE-4 A/B).  Per-lane-step cost includes action
+    // sampling and (for the pools) the per-batch synchronisation, i.e.
+    // the executor overhead the fig1_console comparison amortises with
+    // large batches.
     use cairl::coordinator::experiment::{
-        build_executor, run_batched_workload, ExecutorKind,
+        build_executor_with_kernel, run_batched_workload, ExecutorKind, KernelMode,
     };
     let lanes = knob_q("CAIRL_LANES", 256, 64) as usize;
     let lane_steps = (steps / lanes as u64).max(1);
@@ -92,41 +94,81 @@ fn main() {
     // valid when CAIRL_LANES=1.
     let half = (lanes / 2).max(1);
     let mix = format!("CartPole-v1:{half},MountainCar-v0:{half}");
-    let mut executor_rows = Vec::new();
+    let bench_executor = |spec: &str, kind: ExecutorKind, n_lanes: usize, kernel| {
+        let lane_budget = (steps / n_lanes as u64).max(1);
+        let best: f64 = (0..trials)
+            .map(|i| {
+                let mut exec =
+                    build_executor_with_kernel(spec, kind, n_lanes, threads, i, &[], kernel)
+                        .unwrap();
+                run_batched_workload(exec.as_mut(), lane_budget, i).throughput
+            })
+            .fold(0.0, f64::max);
+        1e9 / best
+    };
+    let mut executor_rows: Vec<(String, &'static str, f64, u64)> = Vec::new();
     for (spec, kind, name) in [
         ("CartPole-v1", ExecutorKind::Sequential, "vec-env"),
         ("CartPole-v1", ExecutorKind::PoolSync, "pool-sync"),
         ("CartPole-v1", ExecutorKind::PoolAsync, "pool-async"),
         (mix.as_str(), ExecutorKind::PoolSync, "pool-mix"),
     ] {
-        let best: f64 = (0..trials)
-            .map(|i| {
-                let mut exec = build_executor(spec, kind, lanes, threads, i).unwrap();
-                run_batched_workload(exec.as_mut(), lane_steps, i).throughput
-            })
-            .fold(0.0, f64::max);
-        let exec_ns = 1e9 / best;
-        println!(
-            "{name:<9} ({lanes} lanes):     {exec_ns:>9.1} ns/lane-step  ({:.2}x static)",
-            exec_ns / static_ns
-        );
-        executor_rows.push((name, exec_ns, lane_steps * lanes as u64));
+        for kernel in [KernelMode::Scalar, KernelMode::Fused] {
+            let exec_ns = bench_executor(spec, kind, lanes, kernel);
+            println!(
+                "{:<16} ({lanes} lanes): {exec_ns:>9.1} ns/lane-step  ({:.2}x static)",
+                format!("{name}/{}", kernel.label()),
+                exec_ns / static_ns
+            );
+            executor_rows.push((
+                name.to_string(),
+                kernel.label(),
+                exec_ns,
+                lane_steps * lanes as u64,
+            ));
+        }
     }
+
+    // The ISSUE-4 acceptance workload: a 32-lane homogeneous CartPole
+    // pool, --kernel fused vs --kernel scalar.
+    let pool32_scalar =
+        bench_executor("CartPole-v1", ExecutorKind::PoolSync, 32, KernelMode::Scalar);
+    let pool32_fused =
+        bench_executor("CartPole-v1", ExecutorKind::PoolSync, 32, KernelMode::Fused);
+    println!(
+        "pool-32/scalar   (32 lanes): {pool32_scalar:>9.1} ns/lane-step\n\
+         pool-32/fused    (32 lanes): {pool32_fused:>9.1} ns/lane-step\n\
+         fused-kernel speedup on the 32-lane CartPole pool: {:.2}x",
+        pool32_scalar / pool32_fused
+    );
+    executor_rows.push((
+        "pool-32".to_string(),
+        KernelMode::Scalar.label(),
+        pool32_scalar,
+        (steps / 32).max(1) * 32,
+    ));
+    executor_rows.push((
+        "pool-32".to_string(),
+        KernelMode::Fused.label(),
+        pool32_fused,
+        (steps / 32).max(1) * 32,
+    ));
 
     let mut log = CsvLogger::create(
         std::path::Path::new("results/ablation_dispatch.csv"),
-        &["variant", "ns_per_step", "steps", "trials"],
+        &["variant", "kernel", "ns_per_step", "steps", "trials"],
     )
     .unwrap();
-    let mut rows: Vec<(&str, f64, u64)> = vec![
-        ("static", static_ns, steps),
-        ("dynamic", dyn_ns, steps),
-        ("script", script_ns, script_steps),
+    let mut rows: Vec<(String, &'static str, f64, u64)> = vec![
+        ("static".to_string(), "scalar", static_ns, steps),
+        ("dynamic".to_string(), "scalar", dyn_ns, steps),
+        ("script".to_string(), "scalar", script_ns, script_steps),
     ];
     rows.extend(executor_rows);
-    for (name, v, n) in rows {
+    for (name, kernel, v, n) in rows {
         log.row(&[
-            name.into(),
+            name,
+            kernel.into(),
             format!("{v:.2}"),
             n.to_string(),
             trials.to_string(),

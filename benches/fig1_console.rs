@@ -16,8 +16,8 @@
 mod harness;
 
 use cairl::coordinator::experiment::{
-    build_executor, run_batched_workload, run_random_workload, stepping_trials,
-    ExecutorKind, RenderMode,
+    build_executor_with_kernel, run_batched_workload, run_random_workload, stepping_trials,
+    ExecutorKind, KernelMode, RenderMode,
 };
 use cairl::coordinator::pool::EnvPool;
 use cairl::make;
@@ -29,6 +29,7 @@ use harness::*;
 fn executor_throughput(
     env_spec: &str,
     kind: ExecutorKind,
+    kernel: KernelMode,
     lanes: usize,
     threads: usize,
     steps_per_lane: u64,
@@ -37,7 +38,8 @@ fn executor_throughput(
     (0..trials)
         .map(|trial| {
             let mut exec =
-                build_executor(env_spec, kind, lanes, threads, trial).unwrap();
+                build_executor_with_kernel(env_spec, kind, lanes, threads, trial, &[], kernel)
+                    .unwrap();
             run_batched_workload(exec.as_mut(), steps_per_lane, trial).throughput
         })
         .fold(0.0, f64::max)
@@ -58,13 +60,16 @@ fn executor_comparison() {
 
     let mut log = CsvLogger::create(
         std::path::Path::new("results/fig1_executors.csv"),
-        &["executor", "threads", "lanes", "steps_per_lane", "steps_per_sec"],
+        &["executor", "kernel", "threads", "lanes", "steps_per_lane", "steps_per_sec"],
     )
     .expect("create results csv");
 
+    // The historical rows run the scalar kernel (their meaning since
+    // PR 1); the fused SoA rows follow below as an explicit A/B.
     let seq = executor_throughput(
         "CartPole-v1",
         ExecutorKind::Sequential,
+        KernelMode::Scalar,
         lanes,
         1,
         steps_per_lane,
@@ -73,6 +78,7 @@ fn executor_comparison() {
     println!("{:<26} {seq:>12.0} steps/s", "VecEnv (sequential)");
     log.row(&[
         "vec".into(),
+        "scalar".into(),
         "1".into(),
         lanes.to_string(),
         steps_per_lane.to_string(),
@@ -93,6 +99,7 @@ fn executor_comparison() {
             let tput = executor_throughput(
                 "CartPole-v1",
                 kind,
+                KernelMode::Scalar,
                 lanes,
                 threads,
                 steps_per_lane,
@@ -105,6 +112,7 @@ fn executor_comparison() {
             );
             log.row(&[
                 label.into(),
+                "scalar".into(),
                 threads.to_string(),
                 lanes.to_string(),
                 steps_per_lane.to_string(),
@@ -115,6 +123,40 @@ fn executor_comparison() {
                 pooled_at_4_plus.push((threads, tput));
             }
         }
+    }
+
+    // Fused SoA kernel rows (the ISSUE-4 A/B): the same workloads with
+    // --kernel fused.  Distinct labels keep the trend tracker pairing
+    // like against like across runs.
+    let fused_threads = cores.min(8).max(1);
+    for (kind, label, threads) in [
+        (ExecutorKind::Sequential, "vec-fused", 1usize),
+        (ExecutorKind::PoolSync, "pool-fused", fused_threads),
+        (ExecutorKind::PoolAsync, "pool-async-fused", fused_threads),
+    ] {
+        let tput = executor_throughput(
+            "CartPole-v1",
+            kind,
+            KernelMode::Fused,
+            lanes,
+            threads,
+            steps_per_lane,
+            trials,
+        );
+        println!(
+            "{:<26} {tput:>12.0} steps/s  ({:.2}x sequential, fused kernel)",
+            format!("EnvPool {label} ({threads}t)"),
+            tput / seq
+        );
+        log.row(&[
+            label.into(),
+            "fused".into(),
+            threads.to_string(),
+            lanes.to_string(),
+            steps_per_lane.to_string(),
+            format!("{tput:.0}"),
+        ])
+        .unwrap();
     }
 
     // Free-running row: the whole random workload executes worker-side
@@ -136,6 +178,7 @@ fn executor_comparison() {
     );
     log.row(&[
         "pool-free-running".into(),
+        "scalar".into(),
         max_threads.to_string(),
         lanes.to_string(),
         steps_per_lane.to_string(),
@@ -155,6 +198,7 @@ fn executor_comparison() {
         let tput = executor_throughput(
             &mix,
             kind,
+            KernelMode::Scalar,
             lanes,
             max_threads,
             steps_per_lane,
@@ -167,6 +211,7 @@ fn executor_comparison() {
         );
         log.row(&[
             label.into(),
+            "scalar".into(),
             max_threads.to_string(),
             lanes.to_string(),
             steps_per_lane.to_string(),
@@ -174,6 +219,32 @@ fn executor_comparison() {
         ])
         .unwrap();
     }
+
+    // Mixture with per-group fusion: the fused CartPole/Acrobot groups
+    // step as SoA batches inside one heterogeneous pool.
+    let mix_fused = executor_throughput(
+        &mix,
+        ExecutorKind::PoolSync,
+        KernelMode::Fused,
+        lanes,
+        max_threads,
+        steps_per_lane,
+        trials,
+    );
+    println!(
+        "{:<26} {mix_fused:>12.0} steps/s  ({:.2}x sequential, fused kernel)",
+        format!("EnvPool pool-mix-fused ({max_threads}t)"),
+        mix_fused / seq
+    );
+    log.row(&[
+        "pool-mix-fused".into(),
+        "fused".into(),
+        max_threads.to_string(),
+        lanes.to_string(),
+        steps_per_lane.to_string(),
+        format!("{mix_fused:.0}"),
+    ])
+    .unwrap();
 
     log.flush().unwrap();
     println!("rows -> results/fig1_executors.csv");

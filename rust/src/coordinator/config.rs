@@ -9,7 +9,7 @@
 use std::path::Path;
 
 use crate::agents::dqn::DqnConfig;
-use crate::coordinator::experiment::ExecutorKind;
+use crate::coordinator::experiment::{ExecutorKind, KernelMode};
 use crate::core::error::{CairlError, Result};
 use crate::core::json::{self, Value};
 
@@ -136,6 +136,10 @@ pub struct ExecutorSettings {
     pub lanes: usize,
     /// Worker threads for the pooled kinds; `0` = one per available core.
     pub threads: usize,
+    /// `"fused"` (SoA batch kernels where available, the default) or
+    /// `"scalar"` (per-lane dispatch, the A/B baseline) — `cairl run
+    /// --kernel` overrides it.
+    pub kernel: String,
 }
 
 impl Default for ExecutorSettings {
@@ -144,6 +148,7 @@ impl Default for ExecutorSettings {
             kind: "vec".into(),
             lanes: 1,
             threads: 0,
+            kernel: KernelMode::default().label().into(),
         }
     }
 }
@@ -155,6 +160,16 @@ impl ExecutorSettings {
             CairlError::Config(format!(
                 "unknown executor kind {:?} (expected vec | pool | pool-async)",
                 self.kind
+            ))
+        })
+    }
+
+    /// Resolve the configured kernel name.
+    pub fn to_kernel(&self) -> Result<KernelMode> {
+        KernelMode::parse(&self.kernel).ok_or_else(|| {
+            CairlError::Config(format!(
+                "unknown kernel mode {:?} (expected scalar | fused)",
+                self.kernel
             ))
         })
     }
@@ -180,6 +195,9 @@ impl ExecutorSettings {
         }
         if let Some(x) = v.get("threads").and_then(Value::as_f64) {
             self.threads = x as usize;
+        }
+        if let Some(s) = v.get("kernel").and_then(Value::as_str) {
+            self.kernel = s.to_string();
         }
     }
 }
@@ -295,7 +313,7 @@ impl ExperimentConfig {
              \"memory_size\": {},\n    \"learn_start\": {},\n    \"train_every\": {},\n    \
              \"max_steps\": {},\n    \"solve_return\": {},\n    \"solve_window\": {}\n  \
              }},\n  \"executor\": {{\n    \"kind\": \"{}\",\n    \"lanes\": {},\n    \
-             \"threads\": {}\n  }}\n}}",
+             \"threads\": {},\n    \"kernel\": \"{}\"\n  }}\n}}",
             self.env,
             wrappers,
             self.agent,
@@ -316,6 +334,7 @@ impl ExperimentConfig {
             self.executor.kind,
             self.executor.lanes,
             self.executor.threads,
+            self.executor.kernel,
         )
     }
 }
@@ -384,6 +403,18 @@ mod tests {
         assert_eq!(cfg.executor.threads, 8);
         assert_eq!(cfg.executor.effective_threads(), 8);
         assert!(cfg.executor.to_kind().is_ok());
+        // Unset kernel keeps the fused default.
+        assert_eq!(cfg.executor.to_kernel().unwrap(), KernelMode::Fused);
+    }
+
+    #[test]
+    fn parses_kernel_mode() {
+        let src = r#"{"executor": {"kind": "pool", "kernel": "scalar"}}"#;
+        let cfg = ExperimentConfig::parse(src).unwrap();
+        assert_eq!(cfg.executor.kernel, "scalar");
+        assert_eq!(cfg.executor.to_kernel().unwrap(), KernelMode::Scalar);
+        let bad = ExperimentConfig::parse(r#"{"executor": {"kernel": "warp"}}"#).unwrap();
+        assert!(matches!(bad.executor.to_kernel(), Err(CairlError::Config(_))));
     }
 
     #[test]

@@ -7,9 +7,10 @@
 
 use std::time::{Duration, Instant};
 
-use crate::coordinator::pool::{AsyncEnvPool, BatchedExecutor, EnvPool, LaneSpec};
+use crate::coordinator::pool::{AsyncEnvPool, BatchedExecutor, EnvPool, LaneGroupSpec, LaneSpec};
 use crate::coordinator::registry::{self, MixtureSpec};
 use crate::coordinator::vec_env::VecEnv;
+use crate::core::batch::{DynBatchEnv, ScalarBatch};
 use crate::core::env::{DynEnv, Env, Transition};
 use crate::core::error::Result;
 use crate::core::rng::Pcg32;
@@ -136,6 +137,43 @@ impl ExecutorKind {
     }
 }
 
+/// Which stepping kernel a batched workload runs — the `cairl run
+/// --kernel` A/B switch.
+///
+/// Both modes are **bit-identical** (`rust/tests/batch_kernel.rs` pins
+/// it); they differ only in how homogeneous lane runs are stepped.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KernelMode {
+    /// Every lane steps through its own `Box<dyn Env>` — the pre-fusion
+    /// per-lane dispatch path, kept for A/B benchmarking.
+    Scalar,
+    /// Homogeneous lane groups with a registered batch builder step
+    /// through one SoA `step_batch` call per group
+    /// ([`crate::core::batch`]); everything else falls back to scalar
+    /// lanes.  The default.
+    #[default]
+    Fused,
+}
+
+impl KernelMode {
+    /// Parse a config/CLI name.
+    pub fn parse(name: &str) -> Option<KernelMode> {
+        match name {
+            "scalar" => Some(KernelMode::Scalar),
+            "fused" => Some(KernelMode::Fused),
+            _ => None,
+        }
+    }
+
+    /// Stable display name (also the accepted config spelling).
+    pub fn label(&self) -> &'static str {
+        match self {
+            KernelMode::Scalar => "scalar",
+            KernelMode::Fused => "fused",
+        }
+    }
+}
+
 /// Build a batched executor from an env spec.  `env_spec` is either a
 /// bare registry id (`"CartPole-v1"` — `lanes` homogeneous copies,
 /// optionally parameterized: `"CartPole-v1?max_steps=200"`) or a
@@ -144,7 +182,7 @@ impl ExecutorKind {
 /// its own counts).  Lane `i` is seeded `base_seed + i` on every
 /// executor kind, which is what makes the kinds interchangeable
 /// mid-experiment and mixture pools bit-identical to their single-env
-/// references.
+/// references.  Runs the default fused kernel mode.
 pub fn build_executor(
     env_spec: &str,
     kind: ExecutorKind,
@@ -167,31 +205,110 @@ pub fn build_executor_wrapped(
     base_seed: u64,
     wrappers: &[WrapperSpec],
 ) -> Result<Box<dyn BatchedExecutor>> {
+    build_executor_with_kernel(
+        env_spec,
+        kind,
+        lanes,
+        threads,
+        base_seed,
+        wrappers,
+        KernelMode::default(),
+    )
+}
+
+/// The full executor build surface: env spec (bare id or mixture),
+/// executor kind, extra wrapper chain and kernel mode.
+///
+/// Lanes are planned as contiguous **groups** keyed by (env id, kwargs,
+/// wrapper chain): under [`KernelMode::Fused`] each group whose
+/// registry spec advertises a batch builder (and whose chain the
+/// kernel can absorb — an extra `--wrap` chain always forces the
+/// fallback) becomes one fused SoA batch, everything else a
+/// [`ScalarBatch`] over per-lane envs.  [`KernelMode::Scalar`] forces
+/// the fallback everywhere; trajectories are identical either way.
+pub fn build_executor_with_kernel(
+    env_spec: &str,
+    kind: ExecutorKind,
+    lanes: usize,
+    threads: usize,
+    base_seed: u64,
+    wrappers: &[WrapperSpec],
+    kernel: KernelMode,
+) -> Result<Box<dyn BatchedExecutor>> {
     for wrapper in wrappers {
         wrapper.validate()?;
     }
-    if MixtureSpec::is_mixture(env_spec) {
-        let spec = MixtureSpec::parse(env_spec)?;
-        return build_mixture_executor_wrapped(&spec, kind, threads, base_seed, wrappers);
-    }
-    // Validate the spec once up front (id, kwargs, and builder errors)
-    // so the per-lane factory can't fail.
-    let _ = registry::make(env_spec)?;
-    let factory = || {
-        apply_wrappers(
-            registry::make(env_spec).expect("env spec validated above"),
-            wrappers,
-        )
+    let entries: Vec<(String, usize)> = if MixtureSpec::is_mixture(env_spec) {
+        // Parsing validates every component id + kwargs eagerly.
+        MixtureSpec::parse(env_spec)?.entries().to_vec()
+    } else {
+        registry::validate(env_spec)?;
+        vec![(env_spec.to_string(), lanes.max(1))]
     };
+    let groups = lane_groups_for(&entries, wrappers, kernel)?;
     Ok(match kind {
-        ExecutorKind::Sequential => Box::new(VecEnv::new(lanes, base_seed, factory)),
+        ExecutorKind::Sequential => Box::new(VecEnv::from_groups(groups, base_seed)),
         ExecutorKind::PoolSync => {
-            Box::new(EnvPool::new(lanes, base_seed, threads, factory))
+            Box::new(EnvPool::from_groups(groups, base_seed, threads))
         }
         ExecutorKind::PoolAsync => {
-            Box::new(AsyncEnvPool::new(lanes, base_seed, threads, factory))
+            Box::new(AsyncEnvPool::from_groups(groups, base_seed, threads))
         }
     })
+}
+
+/// Plan the contiguous lane groups of an executor build: adjacent
+/// entries with the same id merge into one group, each group resolves
+/// its fused builder (or a scalar fallback closure) once, and the
+/// executors invoke the builder per worker sub-range.
+fn lane_groups_for(
+    entries: &[(String, usize)],
+    wrappers: &[WrapperSpec],
+    kernel: KernelMode,
+) -> Result<Vec<LaneGroupSpec>> {
+    let mut merged: Vec<(String, usize)> = Vec::new();
+    for (id, count) in entries {
+        match merged.last_mut() {
+            Some((last_id, last_count)) if *last_id == *id => *last_count += count,
+            _ => merged.push((id.clone(), *count)),
+        }
+    }
+    let mut groups = Vec::with_capacity(merged.len());
+    for (id, count) in merged {
+        // An extra wrapper chain wraps every lane *outside* the
+        // registered spec, which no fused kernel can absorb.
+        let fused = if kernel == KernelMode::Fused && wrappers.is_empty() {
+            registry::fused_lane_builder(&id)?
+        } else {
+            None
+        };
+        let group = match fused {
+            Some(build) => LaneGroupSpec::new(&id, count, move |lanes| (*build)(lanes)),
+            None => {
+                // Probe one construction up front so *builder* errors
+                // surface as Err (static kwarg/wrapper errors were
+                // caught by validation, but an EnvBuilder may fail for
+                // reasons of its own); the executor-side factory can
+                // then never fail.
+                let _ = registry::make(&id)?;
+                let spec = id.clone();
+                let chain = wrappers.to_vec();
+                LaneGroupSpec::new(&id, count, move |lanes| -> DynBatchEnv {
+                    let envs: Vec<DynEnv> = (0..lanes)
+                        .map(|_| {
+                            apply_wrappers(
+                                registry::make(&spec).expect("env spec validated above"),
+                                &chain,
+                            )
+                        })
+                        .collect();
+                    Box::new(ScalarBatch::from_envs(envs))
+                })
+            }
+        };
+        groups.push(group);
+    }
+    Ok(groups)
 }
 
 /// Build a heterogeneous executor over a parsed [`MixtureSpec`]: lane
@@ -207,7 +324,12 @@ pub fn build_mixture_executor(
 
 /// [`build_mixture_executor`] with a wrapper chain applied to every
 /// lane; lane labels keep the registry ids (wrapper composition is an
-/// implementation detail the labels should not leak).
+/// implementation detail the labels should not leak).  Components whose
+/// spec advertises a batch builder fuse per group, exactly as in
+/// [`build_executor_with_kernel`] — this convenience API always runs
+/// the default fused mode; pass the rendered spec string to
+/// [`build_executor_with_kernel`] when the caller needs explicit
+/// `--kernel` control (the CLI/config path does).
 pub fn build_mixture_executor_wrapped(
     spec: &MixtureSpec,
     kind: ExecutorKind,
@@ -218,20 +340,14 @@ pub fn build_mixture_executor_wrapped(
     for wrapper in wrappers {
         wrapper.validate()?;
     }
-    let (ids, envs): (Vec<String>, Vec<_>) = spec
-        .build_labeled_envs()?
-        .into_iter()
-        .map(|(id, env)| (id, apply_wrappers(env, wrappers)))
-        .unzip();
+    let groups = lane_groups_for(spec.entries(), wrappers, KernelMode::default())?;
     Ok(match kind {
-        ExecutorKind::Sequential => {
-            Box::new(VecEnv::from_labeled_envs(ids, envs, base_seed))
-        }
+        ExecutorKind::Sequential => Box::new(VecEnv::from_groups(groups, base_seed)),
         ExecutorKind::PoolSync => {
-            Box::new(EnvPool::from_labeled_envs(ids, envs, base_seed, threads))
+            Box::new(EnvPool::from_groups(groups, base_seed, threads))
         }
         ExecutorKind::PoolAsync => {
-            Box::new(AsyncEnvPool::from_labeled_envs(ids, envs, base_seed, threads))
+            Box::new(AsyncEnvPool::from_groups(groups, base_seed, threads))
         }
     })
 }
@@ -463,6 +579,37 @@ mod tests {
         let bad = [WrapperSpec::TimeLimit { max_steps: 0 }];
         assert!(build_executor_wrapped("CartPole-v1", kind, 2, 1, 0, &bad).is_err());
         assert!(build_executor("CartPole-v1?nope=1", kind, 2, 1, 0).is_err());
+    }
+
+    #[test]
+    fn kernel_modes_parse_and_agree_on_workload_counts() {
+        assert_eq!(KernelMode::parse("scalar"), Some(KernelMode::Scalar));
+        assert_eq!(KernelMode::parse("fused"), Some(KernelMode::Fused));
+        assert_eq!(KernelMode::parse("nope"), None);
+        assert_eq!(KernelMode::default(), KernelMode::Fused);
+        for kernel in [KernelMode::Scalar, KernelMode::Fused] {
+            assert_eq!(KernelMode::parse(kernel.label()), Some(kernel));
+        }
+        // Same seeds, same action streams: both kernels count the same
+        // steps and episode ends (full bit-equality is pinned by
+        // rust/tests/batch_kernel.rs).
+        let run = |kernel: KernelMode| {
+            let mut exec = build_executor_with_kernel(
+                "CartPole-v1",
+                ExecutorKind::PoolSync,
+                6,
+                2,
+                40,
+                &[],
+                kernel,
+            )
+            .unwrap();
+            let r = run_batched_workload(exec.as_mut(), 80, 7);
+            (r.steps, r.episodes)
+        };
+        let scalar = run(KernelMode::Scalar);
+        assert!(scalar.1 > 0);
+        assert_eq!(scalar, run(KernelMode::Fused));
     }
 
     #[test]

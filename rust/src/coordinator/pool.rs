@@ -46,6 +46,27 @@
 //! lane's transition reports the episode end exactly once and its
 //! observation is the first observation of the next episode.
 //!
+//! # Fused lane groups
+//!
+//! Workers do not step lanes one `Box<dyn Env>` at a time: every worker
+//! owns a list of [`BatchEnv`](crate::core::batch::BatchEnv) **groups**
+//! — contiguous lane runs that step as one unit.  The generic
+//! constructors wrap each worker's lanes in one
+//! [`ScalarBatch`](crate::core::batch::ScalarBatch) (bit-identical to
+//! the old per-lane loop), while the registry-driven
+//! [`EnvPool::from_groups`] / [`AsyncEnvPool::from_groups`] path
+//! ([`crate::coordinator::experiment::build_executor_with_kernel`])
+//! fuses homogeneous runs into SoA kernels: 32 CartPole lanes become
+//! one `step_batch` call on four `Vec<f32>` state columns instead of 32
+//! virtual `step_into` calls.  A group never spans a worker boundary —
+//! [`LaneGroupSpec`] builders are invoked per (group ∩ worker chunk),
+//! so thread partitioning is unchanged and per-lane seeding
+//! (`base_seed + lane`) is preserved exactly.  In the async pool the
+//! ready-queue semantics (a lane steps the moment its action lands)
+//! keep stepping per-lane, but each step is a single
+//! [`BatchEnv::step_lane`](crate::core::batch::BatchEnv::step_lane)
+//! call into the group's SoA state — no wrapper-chain dispatch.
+//!
 //! Synchronisation in sync mode is a seqlock-style broadcast
 //! (`AtomicU64` command sequence + `AtomicUsize` completion count) with
 //! bounded spinning before yielding, because a condvar wake costs more
@@ -60,8 +81,8 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
+use crate::core::batch::{batch_random_steps, BatchEnv, DynBatchEnv, ScalarBatch};
 use crate::core::env::{Env, Transition};
-use crate::core::rng::Pcg32;
 use crate::core::spaces::{Action, Space};
 
 /// Per-lane metadata of a (possibly heterogeneous) batched executor.
@@ -110,6 +131,137 @@ pub(crate) fn lane_layout<E: Env>(envs: &[E], ids: &[String]) -> (Vec<LaneSpec>,
 /// hands envs without registry labels.
 pub(crate) fn own_ids<E: Env>(envs: &[E]) -> Vec<String> {
     envs.iter().map(|e| e.id()).collect()
+}
+
+/// One homogeneous lane group of an executor build plan: a label, a
+/// lane count and a builder the executor may invoke once per worker
+/// sub-range (a group never spans a worker boundary, so a 32-lane group
+/// split across 2 workers becomes two independent 16-lane batches;
+/// seeding by `base_seed + lane` keeps the split bit-invariant).
+pub struct LaneGroupSpec {
+    id: String,
+    lanes: usize,
+    build: Box<dyn FnMut(usize) -> DynBatchEnv>,
+}
+
+impl LaneGroupSpec {
+    /// A group of `lanes` lanes labeled `id` in
+    /// [`BatchedExecutor::lane_specs`]; `build(k)` must return a fresh
+    /// `k`-lane batch each call.
+    pub fn new(
+        id: &str,
+        lanes: usize,
+        build: impl FnMut(usize) -> DynBatchEnv + 'static,
+    ) -> LaneGroupSpec {
+        assert!(lanes > 0, "lane group {id:?} needs at least one lane");
+        LaneGroupSpec {
+            id: id.to_string(),
+            lanes,
+            build: Box::new(build),
+        }
+    }
+
+    /// The group's lane-spec label.
+    pub fn id(&self) -> &str {
+        &self.id
+    }
+
+    /// Number of lanes the group contributes.
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+}
+
+/// A constructed group bound to its first lane — what workers own.
+pub(crate) struct BuiltGroup {
+    pub(crate) lane_start: usize,
+    pub(crate) batch: DynBatchEnv,
+}
+
+/// Build and seed every (group ∩ worker-chunk) sub-batch in lane order,
+/// returning the built groups plus the executor-wide lane specs and
+/// padded width.  `chunk` is the worker width (`n` for a sequential
+/// executor: no splitting).
+pub(crate) fn materialize_groups(
+    groups: Vec<LaneGroupSpec>,
+    base_seed: u64,
+    chunk: usize,
+) -> (Vec<BuiltGroup>, Vec<LaneSpec>, usize) {
+    assert!(chunk > 0);
+    let mut built = Vec::new();
+    let mut meta: Vec<(String, usize, Space)> = Vec::new();
+    let mut lane = 0usize;
+    for mut group in groups {
+        let mut remaining = group.lanes;
+        while remaining > 0 {
+            let until_chunk = chunk - (lane % chunk);
+            let take = remaining.min(until_chunk);
+            let mut batch = (group.build)(take);
+            assert_eq!(
+                batch.lanes(),
+                take,
+                "group {:?}: builder returned the wrong lane count",
+                group.id
+            );
+            batch.seed(base_seed + lane as u64);
+            for k in 0..take {
+                meta.push((
+                    group.id.clone(),
+                    batch.lane_obs_dim(k),
+                    batch.lane_action_space(k),
+                ));
+            }
+            built.push(BuiltGroup { lane_start: lane, batch });
+            lane += take;
+            remaining -= take;
+        }
+    }
+    assert!(lane > 0, "an executor needs at least one lane");
+    let padded = meta.iter().map(|(_, d, _)| *d).max().unwrap_or(0);
+    assert!(padded > 0, "lane observations must be non-empty");
+    let specs = meta
+        .into_iter()
+        .enumerate()
+        .map(|(i, (env_id, obs_dim, action_space))| LaneSpec {
+            env_id,
+            obs_dim,
+            offset: i * padded,
+            action_space,
+        })
+        .collect();
+    (built, specs, padded)
+}
+
+/// Wrap a seeded lane-ordered env list into one [`ScalarBatch`] group
+/// per `chunk`-wide worker range — the generic constructors' plan.
+fn scalar_chunks<E: Env + Send + 'static>(envs: Vec<E>, chunk: usize) -> Vec<BuiltGroup> {
+    let n = envs.len();
+    let mut built = Vec::new();
+    let mut lane_start = 0usize;
+    let mut remaining = envs;
+    while lane_start < n {
+        let take = chunk.min(n - lane_start);
+        let lane_envs: Vec<E> = remaining.drain(..take).collect();
+        built.push(BuiltGroup {
+            lane_start,
+            batch: Box::new(ScalarBatch::from_envs(lane_envs)),
+        });
+        lane_start += take;
+    }
+    built
+}
+
+/// Distribute built groups to their owning workers (`lane_start /
+/// chunk`; materialisation guarantees no group straddles a chunk
+/// boundary, so every group maps to exactly one worker and every
+/// worker's list is non-empty and lane-ordered).
+fn group_by_worker(built: Vec<BuiltGroup>, n: usize, chunk: usize) -> Vec<Vec<BuiltGroup>> {
+    let workers = n.div_ceil(chunk);
+    let mut per_worker: Vec<Vec<BuiltGroup>> = (0..workers).map(|_| Vec::new()).collect();
+    for group in built {
+        per_worker[group.lane_start / chunk].push(group);
+    }
+    per_worker
 }
 
 /// A batch of environment lanes stepped as one unit.
@@ -306,8 +458,37 @@ impl EnvPool {
         }
         let (specs, padded) = lane_layout(&envs, &ids);
 
-        let threads = threads.clamp(1, n);
-        let chunk = n.div_ceil(threads);
+        let chunk = n.div_ceil(threads.clamp(1, n));
+        EnvPool::spawn(scalar_chunks(envs, chunk), specs, padded, base_seed, chunk)
+    }
+
+    /// Build a pool from a lane-group plan — the fused-kernel
+    /// constructor behind
+    /// [`build_executor_with_kernel`]
+    /// (crate::coordinator::experiment::build_executor_with_kernel).
+    /// Groups occupy contiguous lanes in plan order; lane `i` is seeded
+    /// `base_seed + i` exactly as in [`EnvPool::from_labeled_envs`], and
+    /// a group split across worker chunks is rebuilt per sub-range, so
+    /// trajectories are thread-count and kernel invariant.
+    pub fn from_groups(groups: Vec<LaneGroupSpec>, base_seed: u64, threads: usize) -> EnvPool {
+        let n: usize = groups.iter().map(|g| g.lanes()).sum();
+        assert!(n > 0, "EnvPool needs at least one lane");
+        let chunk = n.div_ceil(threads.clamp(1, n));
+        let (built, specs, padded) = materialize_groups(groups, base_seed, chunk);
+        EnvPool::spawn(built, specs, padded, base_seed, chunk)
+    }
+
+    /// Spawn one worker per `chunk`-wide lane range, handing it the
+    /// groups that fall inside the range (materialisation guarantees no
+    /// group straddles a boundary).
+    fn spawn(
+        built: Vec<BuiltGroup>,
+        specs: Vec<LaneSpec>,
+        padded: usize,
+        base_seed: u64,
+        chunk: usize,
+    ) -> EnvPool {
+        let n = specs.len();
         let shared = Arc::new(SyncShared {
             seq: AtomicU64::new(0),
             done: AtomicUsize::new(0),
@@ -317,24 +498,17 @@ impl EnvPool {
         });
 
         let mut handles = Vec::new();
-        let mut lane_start = 0usize;
-        let mut remaining = envs;
-        while lane_start < n {
-            let take = chunk.min(n - lane_start);
-            let lane_envs: Vec<E> = remaining.drain(..take).collect();
-            let dims: Vec<usize> = specs[lane_start..lane_start + take]
-                .iter()
-                .map(|s| s.obs_dim)
-                .collect();
+        for worker_groups in group_by_worker(built, n, chunk) {
+            let first = worker_groups
+                .first()
+                .expect("every worker chunk owns at least one group")
+                .lane_start;
             let shared_w = Arc::clone(&shared);
             let handle = std::thread::Builder::new()
-                .name(format!("envpool-{lane_start}"))
-                .spawn(move || {
-                    sync_worker(shared_w, lane_envs, lane_start, padded, dims, base_seed)
-                })
+                .name(format!("envpool-{first}"))
+                .spawn(move || sync_worker(shared_w, worker_groups, padded, base_seed))
                 .expect("spawn pool worker");
             handles.push(handle);
-            lane_start += take;
         }
 
         EnvPool {
@@ -480,14 +654,12 @@ impl Drop for EnvPool {
 }
 
 /// Body of one sync worker: wait for a command, run it over the owned
-/// lane range, acknowledge, repeat.  Env panics are caught so the
+/// lane groups, acknowledge, repeat.  Env panics are caught so the
 /// round's ack still happens; the pool is poisoned instead of deadlocked.
-fn sync_worker<E: Env>(
+fn sync_worker(
     shared: Arc<SyncShared>,
-    mut envs: Vec<E>,
-    lane_start: usize,
+    mut groups: Vec<BuiltGroup>,
     padded: usize,
-    dims: Vec<usize>,
     base_seed: u64,
 ) {
     let mut last_seq = 0u64;
@@ -502,7 +674,7 @@ fn sync_worker<E: Env>(
         let cmd = unsafe { *shared.cmd.get() };
         let shutdown = matches!(cmd, Cmd::Shutdown);
         let ok = catch_unwind(AssertUnwindSafe(|| {
-            run_cmd(cmd, &mut envs, lane_start, padded, &dims, base_seed, &shared);
+            run_cmd(cmd, &mut groups, padded, base_seed, &shared);
         }))
         .is_ok();
         if !ok {
@@ -515,31 +687,32 @@ fn sync_worker<E: Env>(
     }
 }
 
-/// Execute one command over a worker's lane range.  `dims[k]` is the
-/// true observation length of `envs[k]`; slots are `padded` wide and
-/// tails are re-zeroed on every write (caller buffers are arbitrary).
-fn run_cmd<E: Env>(
+/// Execute one command over a worker's lane groups — one batch call per
+/// group (the fusion hot path: a fused group advances all its lanes in
+/// a single `step_batch`, a scalar group replays the per-lane loop).
+/// Slots are `padded` wide; groups re-zero tails on every write (caller
+/// buffers are arbitrary).
+fn run_cmd(
     cmd: Cmd,
-    envs: &mut [E],
-    lane_start: usize,
+    groups: &mut [BuiltGroup],
     padded: usize,
-    dims: &[usize],
     base_seed: u64,
     shared: &SyncShared,
 ) {
     match cmd {
         Cmd::Idle | Cmd::Shutdown => {}
         Cmd::Reset { obs } => {
-            for (k, env) in envs.iter_mut().enumerate() {
-                let lane = lane_start + k;
-                // SAFETY: lane slots are disjoint across workers and
-                // the caller's `&mut [f32]` is pinned by the barrier.
-                let slot = unsafe {
-                    std::slice::from_raw_parts_mut(obs.add(lane * padded), padded)
+            for group in groups {
+                let lanes = group.batch.lanes();
+                // SAFETY: group lane ranges are disjoint across workers
+                // and the caller's `&mut [f32]` is pinned by the barrier.
+                let block = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        obs.add(group.lane_start * padded),
+                        lanes * padded,
+                    )
                 };
-                let (lane_obs, tail) = slot.split_at_mut(dims[k]);
-                env.reset_into(lane_obs);
-                tail.fill(0.0);
+                group.batch.reset_batch(block, padded);
             }
         }
         Cmd::Step {
@@ -547,23 +720,23 @@ fn run_cmd<E: Env>(
             obs,
             transitions,
         } => {
-            for (k, env) in envs.iter_mut().enumerate() {
-                let lane = lane_start + k;
-                // SAFETY: as above — disjoint lanes, barrier-pinned
-                // borrows, actions only read.
-                let action = unsafe { &*actions.add(lane) };
-                let slot = unsafe {
-                    std::slice::from_raw_parts_mut(obs.add(lane * padded), padded)
+            for group in groups {
+                let lanes = group.batch.lanes();
+                // SAFETY: as above — disjoint contiguous lane ranges,
+                // barrier-pinned borrows, actions only read.
+                let acts = unsafe {
+                    std::slice::from_raw_parts(actions.add(group.lane_start), lanes)
                 };
-                let (lane_obs, tail) = slot.split_at_mut(dims[k]);
-                let t = env.step_into(action, lane_obs);
-                unsafe {
-                    *transitions.add(lane) = t;
-                }
-                if t.done || t.truncated {
-                    env.reset_into(lane_obs);
-                }
-                tail.fill(0.0);
+                let block = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        obs.add(group.lane_start * padded),
+                        lanes * padded,
+                    )
+                };
+                let trs = unsafe {
+                    std::slice::from_raw_parts_mut(transitions.add(group.lane_start), lanes)
+                };
+                group.batch.step_batch(acts, block, padded, trs);
             }
         }
         Cmd::RandomSteps { steps_per_lane } => {
@@ -571,20 +744,13 @@ fn run_cmd<E: Env>(
             // streams and seeding are fixed, so counts are reproducible
             // and thread-count independent.
             let mut episodes = 0u64;
-            for (k, env) in envs.iter_mut().enumerate() {
-                let lane = lane_start + k;
-                let mut rng = Pcg32::new(base_seed ^ 0xabcd, lane as u64 + 1);
-                let space = env.action_space();
-                let mut obs = vec![0.0f32; dims[k]];
-                env.reset_into(&mut obs);
-                for _ in 0..steps_per_lane {
-                    let a = space.sample(&mut rng);
-                    let t = env.step_into(&a, &mut obs);
-                    if t.done || t.truncated {
-                        episodes += 1;
-                        env.reset_into(&mut obs);
-                    }
-                }
+            for group in groups {
+                episodes += batch_random_steps(
+                    group.batch.as_mut(),
+                    steps_per_lane,
+                    base_seed,
+                    group.lane_start,
+                );
             }
             // Published to the coordinator by the Release ack in
             // `sync_worker` (it reads only after the barrier drains).
@@ -829,38 +995,59 @@ impl AsyncEnvPool {
         }
         let (specs, padded) = lane_layout(&envs, &ids);
 
-        let threads = threads.clamp(1, n);
-        let chunk = n.div_ceil(threads);
+        let chunk = n.div_ceil(threads.clamp(1, n));
+        AsyncEnvPool::spawn(scalar_chunks(envs, chunk), specs, padded, chunk)
+    }
+
+    /// Build an async pool from a lane-group plan
+    /// ([`EnvPool::from_groups`] semantics).  Groups give workers SoA
+    /// lane state; stepping stays eager per lane (the ready-queue
+    /// contract) through single [`BatchEnv::step_lane`] calls.
+    pub fn from_groups(
+        groups: Vec<LaneGroupSpec>,
+        base_seed: u64,
+        threads: usize,
+    ) -> AsyncEnvPool {
+        let n: usize = groups.iter().map(|g| g.lanes()).sum();
+        assert!(n > 0, "AsyncEnvPool needs at least one lane");
+        let chunk = n.div_ceil(threads.clamp(1, n));
+        let (built, specs, padded) = materialize_groups(groups, base_seed, chunk);
+        AsyncEnvPool::spawn(built, specs, padded, chunk)
+    }
+
+    /// Spawn one worker per `chunk`-wide lane range with the groups
+    /// inside it, reset every lane and enqueue it ready.
+    fn spawn(
+        built: Vec<BuiltGroup>,
+        specs: Vec<LaneSpec>,
+        padded: usize,
+        chunk: usize,
+    ) -> AsyncEnvPool {
+        let n = specs.len();
         let ready = Arc::new(ReadyQueue::with_capacity(n));
         let slots = Arc::new(SlotBlock::new(n, padded));
 
+        let per_worker = group_by_worker(built, n, chunk);
         let mut mailboxes = Vec::new();
         let mut handles = Vec::new();
         let mut owner = vec![0usize; n];
-        let mut lane_start = 0usize;
-        let mut remaining = envs;
-        while lane_start < n {
-            let take = chunk.min(n - lane_start);
-            let lane_envs: Vec<E> = remaining.drain(..take).collect();
-            let dims: Vec<usize> = specs[lane_start..lane_start + take]
-                .iter()
-                .map(|s| s.obs_dim)
-                .collect();
-            let worker_idx = mailboxes.len();
-            owner[lane_start..lane_start + take].fill(worker_idx);
-            let mailbox = Arc::new(Mailbox::with_capacity(take));
+        for (worker_idx, worker_groups) in per_worker.into_iter().enumerate() {
+            let first = worker_groups
+                .first()
+                .expect("every worker chunk owns at least one group")
+                .lane_start;
+            let lanes: usize = worker_groups.iter().map(|g| g.batch.lanes()).sum();
+            owner[first..first + lanes].fill(worker_idx);
+            let mailbox = Arc::new(Mailbox::with_capacity(lanes));
             let mailbox_w = Arc::clone(&mailbox);
             let ready_w = Arc::clone(&ready);
             let slots_w = Arc::clone(&slots);
             let handle = std::thread::Builder::new()
-                .name(format!("envpool-async-{lane_start}"))
-                .spawn(move || {
-                    async_worker(mailbox_w, ready_w, slots_w, lane_envs, lane_start, dims)
-                })
+                .name(format!("envpool-async-{first}"))
+                .spawn(move || async_worker(mailbox_w, ready_w, slots_w, worker_groups))
                 .expect("spawn async pool worker");
             mailboxes.push(mailbox);
             handles.push(handle);
-            lane_start += take;
         }
 
         AsyncEnvPool {
@@ -1088,41 +1275,44 @@ impl Drop for AsyncEnvPool {
 }
 
 /// Body of one async worker: step a lane per message straight into its
-/// shared slot, publish `(lane, transition)`, auto-reset finished lanes.
+/// shared slot (one [`BatchEnv::step_lane`] call into the owning
+/// group's SoA state), publish `(lane, transition)`, auto-reset inline.
 /// Env panics poison the ready queue (waking blocked receivers) and
 /// close the mailbox (failing senders) instead of leaving them asleep.
-fn async_worker<E: Env>(
+fn async_worker(
     mailbox: Arc<Mailbox>,
     ready: Arc<ReadyQueue>,
     slots: Arc<SlotBlock>,
-    mut envs: Vec<E>,
-    lane_start: usize,
-    dims: Vec<usize>,
+    mut groups: Vec<BuiltGroup>,
 ) {
-    fn publish_reset<E: Env>(
-        envs: &mut [E],
-        ready: &ReadyQueue,
-        slots: &SlotBlock,
-        lane_start: usize,
-        dims: &[usize],
-    ) {
-        for (k, env) in envs.iter_mut().enumerate() {
-            let lane = lane_start + k;
-            // SAFETY: a reset command (or construction) handed this
-            // worker ownership of all its lanes' slots.
-            let slot = unsafe { slots.lane_mut(lane) };
-            let (obs, tail) = slot.split_at_mut(dims[k]);
-            env.reset_into(obs);
-            tail.fill(0.0);
-            ready.push(ReadyEntry {
-                lane,
-                transition: Transition::default(),
-            });
+    fn publish_reset(groups: &mut [BuiltGroup], ready: &ReadyQueue, slots: &SlotBlock) {
+        for group in groups {
+            for k in 0..group.batch.lanes() {
+                let lane = group.lane_start + k;
+                // SAFETY: a reset command (or construction) handed this
+                // worker ownership of all its lanes' slots.
+                let slot = unsafe { slots.lane_mut(lane) };
+                let (obs, tail) = slot.split_at_mut(group.batch.lane_obs_dim(k));
+                group.batch.reset_lane(k, obs);
+                tail.fill(0.0);
+                ready.push(ReadyEntry {
+                    lane,
+                    transition: Transition::default(),
+                });
+            }
         }
     }
 
+    // O(1) message routing: lane -> owning group index, built once (the
+    // worker's lanes are contiguous starting at its first group).
+    let first_lane = groups.first().map_or(0, |g| g.lane_start);
+    let mut lane_group: Vec<usize> = Vec::new();
+    for (gi, group) in groups.iter().enumerate() {
+        lane_group.extend(std::iter::repeat(gi).take(group.batch.lanes()));
+    }
+
     let result = catch_unwind(AssertUnwindSafe(|| {
-        publish_reset(&mut envs, &ready, &slots, lane_start, &dims);
+        publish_reset(&mut groups, &ready, &slots);
         loop {
             let msg = {
                 let mut st = mailbox.state.lock().unwrap();
@@ -1137,18 +1327,14 @@ fn async_worker<E: Env>(
                 }
             };
             match msg {
-                WorkerMsg::Reset => {
-                    publish_reset(&mut envs, &ready, &slots, lane_start, &dims)
-                }
+                WorkerMsg::Reset => publish_reset(&mut groups, &ready, &slots),
                 WorkerMsg::Step { lane, action } => {
-                    let k = lane - lane_start;
+                    let group = &mut groups[lane_group[lane - first_lane]];
+                    let k = lane - group.lane_start;
                     // SAFETY: the Step message handed us this lane's slot.
                     let slot = unsafe { slots.lane_mut(lane) };
-                    let (obs, tail) = slot.split_at_mut(dims[k]);
-                    let t = envs[k].step_into(&action, obs);
-                    if t.done || t.truncated {
-                        envs[k].reset_into(obs);
-                    }
+                    let (obs, tail) = slot.split_at_mut(group.batch.lane_obs_dim(k));
+                    let t = group.batch.step_lane(k, &action, obs);
                     tail.fill(0.0);
                     ready.push(ReadyEntry {
                         lane,
@@ -1360,6 +1546,44 @@ mod tests {
         let c = drive(&mut async_pool, 90);
         assert_eq!(a, b);
         assert_eq!(a, c);
+    }
+
+    #[test]
+    fn grouped_pools_match_scalar_pools_bitwise() {
+        use crate::core::batch::DynBatchEnv;
+        let groups = || {
+            vec![LaneGroupSpec::new("CartPole-v1", 5, |lanes| -> DynBatchEnv {
+                Box::new(crate::envs::CartPole::batch(lanes, Some(40)))
+            })]
+        };
+        let mut scalar = EnvPool::new(5, 900, 2, cartpole_factory());
+        let (obs_ref, tr_ref) = drive(&mut scalar, 150);
+        // Fused sync pools at several thread counts (group split across
+        // workers included), plus the async pool in lockstep.
+        for threads in [1, 2, 3] {
+            let mut fused = EnvPool::from_groups(groups(), 900, threads);
+            let (obs, tr) = drive(&mut fused, 150);
+            assert_eq!(tr_ref, tr, "{threads} threads");
+            assert_eq!(obs_ref, obs, "{threads} threads");
+        }
+        let mut fused_async = AsyncEnvPool::from_groups(groups(), 900, 2);
+        let (obs, tr) = drive(&mut fused_async, 150);
+        assert_eq!(tr_ref, tr);
+        assert_eq!(obs_ref, obs);
+    }
+
+    #[test]
+    fn grouped_random_rollout_counts_match_scalar() {
+        use crate::core::batch::DynBatchEnv;
+        let mut scalar = EnvPool::new(4, 9, 2, cartpole_factory());
+        let mut fused = EnvPool::from_groups(
+            vec![LaneGroupSpec::new("CartPole-v1", 4, |lanes| -> DynBatchEnv {
+                Box::new(crate::envs::CartPole::batch(lanes, Some(40)))
+            })],
+            9,
+            2,
+        );
+        assert_eq!(scalar.random_rollout(500), fused.random_rollout(500));
     }
 
     /// Env that panics on the `boom`-th step — exercises worker-death

@@ -26,11 +26,14 @@
 //! unparameterized id builds the identical wrapper stack, so
 //! pre-redesign trajectories are preserved bit for bit.
 
+use std::collections::BTreeMap;
 use std::fmt;
 use std::sync::{Arc, OnceLock, RwLock};
 
+use crate::core::batch::DynBatchEnv;
 use crate::core::env::DynEnv;
 use crate::core::error::{CairlError, Result};
+use crate::core::json::Value;
 use crate::core::kwargs::{Kwargs, KwargValue};
 use crate::envs::{Acrobot, CartPole, GridRts, LineWars, MountainCar, Pendulum};
 use crate::flash;
@@ -48,6 +51,20 @@ pub type EnvBuilder = Arc<dyn Fn(&Kwargs) -> Result<DynEnv> + Send + Sync>;
 /// [`EnvSpec::build`] *and* by [`validate`], so [`MixtureSpec::parse`]
 /// rejects a bad component without constructing anything.
 pub type KwargCheck = Arc<dyn Fn(&Kwargs) -> Result<()> + Send + Sync>;
+
+/// A resolved fused-batch constructor: lane count in, SoA batch group
+/// out.  The executors call it per worker sub-range, so it must be
+/// reusable (each call builds an independent group; seeding happens
+/// afterwards via [`BatchEnv::seed`](crate::core::batch::BatchEnv::seed)).
+pub type LaneBatchBuilder = Arc<dyn Fn(usize) -> DynBatchEnv + Send + Sync>;
+
+/// The batch half of an [`EnvSpec`]: given the merged kwargs and the
+/// kwarg-overridden effective wrapper chain, decide whether this
+/// configuration can run on a fused SoA kernel — `Some(builder)` when it
+/// can, `None` to fall back to scalar stepping (e.g. a chain the kernel
+/// cannot absorb; see
+/// [`WrapperSpec::as_fused_time_limit`]).
+pub type BatchHook = Arc<dyn Fn(&Kwargs, &[WrapperSpec]) -> Option<LaneBatchBuilder> + Send + Sync>;
 
 /// One registry entry: everything needed to construct a parameterized,
 /// wrapper-composed environment from its id.
@@ -75,6 +92,7 @@ pub struct EnvSpec {
     wrappers: Vec<WrapperSpec>,
     builder: EnvBuilder,
     check: Option<KwargCheck>,
+    batch: Option<BatchHook>,
 }
 
 impl fmt::Debug for EnvSpec {
@@ -103,7 +121,37 @@ impl EnvSpec {
             wrappers: Vec::new(),
             builder: Arc::new(builder),
             check: None,
+            batch: None,
         }
+    }
+
+    /// Advertise a fused-batch builder ([`BatchHook`]): homogeneous lane
+    /// groups of this spec step through one SoA kernel instead of
+    /// per-lane virtual dispatch wherever the hook accepts the
+    /// configuration.  Fused trajectories must be bit-identical to the
+    /// scalar build — `rust/tests/batch_kernel.rs` pins this for the
+    /// built-in kernels.
+    pub fn with_batch(
+        mut self,
+        hook: impl Fn(&Kwargs, &[WrapperSpec]) -> Option<LaneBatchBuilder> + Send + Sync + 'static,
+    ) -> EnvSpec {
+        self.batch = Some(Arc::new(hook));
+        self
+    }
+
+    /// Whether this spec advertises a fused-batch builder at all
+    /// (specific kwargs/wrapper configurations may still fall back).
+    pub fn batch_capable(&self) -> bool {
+        self.batch.is_some()
+    }
+
+    /// Resolve the fused-batch builder for these kwargs: `Ok(None)`
+    /// when the spec has no hook or the hook declines this
+    /// configuration (the caller falls back to scalar lanes).
+    pub fn fused_builder(&self, user: &Kwargs) -> Result<Option<LaneBatchBuilder>> {
+        let merged = self.checked_kwargs(user)?;
+        let wrappers = self.effective_wrappers(&merged)?;
+        Ok(self.batch.as_ref().and_then(|hook| (**hook)(&merged, &wrappers)))
     }
 
     /// Attach a spec-level kwarg invariant, checked before the builder
@@ -222,6 +270,18 @@ fn board_size(kw: &Kwargs, id: &str, min: i64) -> Result<usize> {
     Ok(size as usize)
 }
 
+/// The shared [`BatchHook`] of the classic-control specs: fuse whenever
+/// the effective chain is bare or a single `TimeLimit` (folded into the
+/// kernel's step counter); any other chain falls back to scalar lanes.
+fn classic_batch(
+    build: fn(usize, Option<u32>) -> DynBatchEnv,
+) -> impl Fn(&Kwargs, &[WrapperSpec]) -> Option<LaneBatchBuilder> + Send + Sync + 'static {
+    move |_, wrappers| {
+        WrapperSpec::as_fused_time_limit(wrappers)
+            .map(|limit| -> LaneBatchBuilder { Arc::new(move |lanes| build(lanes, limit)) })
+    }
+}
+
 /// The built-in table the registry is seeded with; runtime
 /// registrations append after these.
 fn builtin_specs() -> Vec<EnvSpec> {
@@ -229,27 +289,42 @@ fn builtin_specs() -> Vec<EnvSpec> {
         EnvSpec::new("CartPole-v1", "native cart-pole balancing (500-step limit)", |_| {
             Ok(Box::new(CartPole::new()) as DynEnv)
         })
-        .with_time_limit(500),
+        .with_time_limit(500)
+        .with_batch(classic_batch(|lanes, limit| -> DynBatchEnv {
+            Box::new(CartPole::batch(lanes, limit))
+        })),
         EnvSpec::new("MountainCar-v0", "native mountain car (200-step limit)", |_| {
             Ok(Box::new(MountainCar::new()) as DynEnv)
         })
-        .with_time_limit(200),
+        .with_time_limit(200)
+        .with_batch(classic_batch(|lanes, limit| -> DynBatchEnv {
+            Box::new(MountainCar::batch(lanes, limit))
+        })),
         EnvSpec::new("Acrobot-v1", "native acrobot swing-up (500-step limit)", |_| {
             Ok(Box::new(Acrobot::new()) as DynEnv)
         })
-        .with_time_limit(500),
+        .with_time_limit(500)
+        .with_batch(classic_batch(|lanes, limit| -> DynBatchEnv {
+            Box::new(Acrobot::batch(lanes, limit))
+        })),
         EnvSpec::new(
             "Pendulum-v1",
             "native pendulum swing-up, continuous torque (200-step limit)",
             |_| Ok(Box::new(Pendulum::new()) as DynEnv),
         )
-        .with_time_limit(200),
+        .with_time_limit(200)
+        .with_batch(classic_batch(|lanes, limit| -> DynBatchEnv {
+            Box::new(Pendulum::batch(lanes, limit))
+        })),
         EnvSpec::new(
             "PendulumDiscrete-v1",
             "pendulum with 5 discrete torque levels for DQN (200-step limit)",
             |_| Ok(Box::new(Pendulum::discrete()) as DynEnv),
         )
-        .with_time_limit(200),
+        .with_time_limit(200)
+        .with_batch(classic_batch(|lanes, limit| -> DynBatchEnv {
+            Box::new(Pendulum::batch_discrete(lanes, limit))
+        })),
         EnvSpec::new(
             "LineWars-v0",
             "Deep-Line-Wars-class lane strategy vs scripted opponent",
@@ -499,6 +574,61 @@ pub fn list_envs() -> Vec<(String, String)> {
         .iter()
         .map(|s| (s.id.clone(), s.summary.clone()))
         .collect()
+}
+
+/// Every registered spec, cloned out of the table in registration order.
+pub fn all_specs() -> Vec<EnvSpec> {
+    registry()
+        .read()
+        .unwrap_or_else(|e| e.into_inner())
+        .clone()
+}
+
+/// Resolve the fused-batch builder for an `"Id?kwargs"` spec string —
+/// `Ok(None)` when the id is registered but cannot fuse under this
+/// configuration (the executors then fall back to
+/// [`ScalarBatch`](crate::core::batch::ScalarBatch) lanes).
+pub fn fused_lane_builder(spec: &str) -> Result<Option<LaneBatchBuilder>> {
+    let (id, kwargs) = parse_id_kwargs(spec)?;
+    find_spec(&id)?.fused_builder(&kwargs)
+}
+
+/// The whole registry as a JSON document (`cairl envs --json`): one
+/// entry per spec with id, summary, typed kwarg defaults, declarative
+/// wrapper chain and the batch-capable flag — the experiment-provenance
+/// dump the ROADMAP asks for.
+pub fn registry_json() -> Value {
+    let envs: Vec<Value> = all_specs()
+        .iter()
+        .map(|s| {
+            let kwargs: BTreeMap<String, Value> = s
+                .defaults()
+                .iter()
+                .map(|(key, value)| {
+                    let v = match value {
+                        KwargValue::Int(i) => Value::Num(*i as f64),
+                        KwargValue::Float(x) => Value::Num(*x),
+                        KwargValue::Bool(b) => Value::Bool(*b),
+                        KwargValue::Str(t) => Value::Str(t.clone()),
+                    };
+                    (key.to_string(), v)
+                })
+                .collect();
+            let wrappers: Vec<Value> =
+                s.wrappers().iter().map(|w| Value::Str(w.render())).collect();
+            let mut obj = BTreeMap::new();
+            obj.insert("id".to_string(), Value::Str(s.id().to_string()));
+            obj.insert("summary".to_string(), Value::Str(s.summary().to_string()));
+            obj.insert("kwargs".to_string(), Value::Object(kwargs));
+            obj.insert("wrappers".to_string(), Value::Array(wrappers));
+            obj.insert("batch_capable".to_string(), Value::Bool(s.batch_capable()));
+            Value::Object(obj)
+        })
+        .collect();
+    let mut doc = BTreeMap::new();
+    doc.insert("schema".to_string(), Value::Str("cairl-envs/v1".to_string()));
+    doc.insert("envs".to_string(), Value::Array(envs));
+    Value::Object(doc)
 }
 
 /// A parsed scenario-mixture spec: an ordered list of `(env_id, lanes)`
@@ -794,6 +924,63 @@ mod tests {
         for (id, _) in list_envs() {
             assert!(!MixtureSpec::is_mixture(&id), "{id}");
         }
+    }
+
+    #[test]
+    fn classic_specs_advertise_fused_builders() {
+        for id in [
+            "CartPole-v1",
+            "MountainCar-v0",
+            "Acrobot-v1",
+            "Pendulum-v1",
+            "PendulumDiscrete-v1",
+        ] {
+            assert!(env_spec(id).unwrap().batch_capable(), "{id}");
+            let builder = fused_lane_builder(id).unwrap().unwrap_or_else(|| {
+                panic!("{id}: registered TimeLimit chain must fuse")
+            });
+            let batch = (*builder)(3);
+            assert_eq!(batch.lanes(), 3, "{id}");
+            assert!(batch.obs_dim() > 0, "{id}");
+        }
+        // Kwargs flow into the fused limit path without erroring.
+        assert!(fused_lane_builder("CartPole-v1?max_steps=25").unwrap().is_some());
+        assert!(fused_lane_builder("CartPole-v1?bogus=1").is_err());
+        // PixelObs in the chain blocks fusion; script envs have no hook.
+        assert!(fused_lane_builder("Pixel/CartPole-v1").unwrap().is_none());
+        assert!(fused_lane_builder("Script/CartPole-v1").unwrap().is_none());
+        assert!(!env_spec("Script/CartPole-v1").unwrap().batch_capable());
+        assert!(matches!(
+            fused_lane_builder("NoSuchEnv-v0"),
+            Err(CairlError::UnknownEnv(_))
+        ));
+    }
+
+    #[test]
+    fn registry_json_dumps_every_spec() {
+        let doc = registry_json();
+        assert_eq!(doc.get("schema").and_then(Value::as_str), Some("cairl-envs/v1"));
+        let envs = match doc.get("envs") {
+            Some(Value::Array(envs)) => envs,
+            other => panic!("envs must be an array, got {other:?}"),
+        };
+        assert!(envs.len() >= list_envs().len());
+        let cartpole = envs
+            .iter()
+            .find(|e| e.get("id").and_then(Value::as_str) == Some("CartPole-v1"))
+            .expect("CartPole-v1 in the dump");
+        assert_eq!(cartpole.get("batch_capable"), Some(&Value::Bool(true)));
+        assert_eq!(
+            cartpole.get("kwargs").and_then(|k| k.get("max_steps")).and_then(Value::as_f64),
+            Some(500.0)
+        );
+        assert_eq!(
+            cartpole.get("wrappers").and_then(|w| w.idx(0)).and_then(Value::as_str),
+            Some("TimeLimit(500)")
+        );
+        // The document round-trips through the in-tree JSON reader.
+        let rendered = doc.render();
+        assert_eq!(crate::core::json::parse(&rendered).unwrap(), doc);
     }
 
     #[test]

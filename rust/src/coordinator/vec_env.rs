@@ -13,16 +13,34 @@
 //! scenario-mixture constructor): observations are padded to the widest
 //! lane and [`BatchedExecutor::lane_specs`] describes the layout — see
 //! the [`crate::coordinator::pool`] module docs.
+//!
+//! Internally the lanes are [`BatchEnv`](crate::core::batch::BatchEnv)
+//! groups: the generic constructors wrap the env list in one
+//! [`ScalarBatch`] (the historical per-lane loop, bit for bit), while
+//! [`VecEnv::from_groups`] steps fused SoA kernels — one `step_batch`
+//! call per homogeneous group instead of per-lane virtual dispatch (see
+//! [`crate::core::batch`]).
 
-use crate::coordinator::pool::{BatchedExecutor, LaneSpec};
-use crate::core::env::{Env, Transition};
+use crate::coordinator::pool::{
+    materialize_groups, BatchedExecutor, BuiltGroup, LaneGroupSpec, LaneSpec,
+};
+use crate::core::batch::{BatchEnv, ScalarBatch};
+use crate::core::env::{DynEnv, Env, Transition};
 use crate::core::spaces::{Action, Space};
+
+/// The lane storage behind a [`VecEnv`]: one scalar group (generic
+/// constructors, with direct lane access) or a fused group list.
+enum Kernel<E: Env> {
+    Scalar(ScalarBatch<E>),
+    Groups(Vec<BuiltGroup>),
+}
 
 /// A batch of environments with auto-reset, stepped sequentially.
 pub struct VecEnv<E: Env> {
-    envs: Vec<E>,
+    kernel: Kernel<E>,
     specs: Vec<LaneSpec>,
     padded: usize,
+    n: usize,
 }
 
 impl<E: Env> VecEnv<E> {
@@ -52,19 +70,21 @@ impl<E: Env> VecEnv<E> {
             env.seed(base_seed + i as u64);
         }
         let (specs, padded) = crate::coordinator::pool::lane_layout(&envs, &ids);
+        let n = envs.len();
         VecEnv {
-            envs,
+            kernel: Kernel::Scalar(ScalarBatch::from_envs(envs)),
             specs,
             padded,
+            n,
         }
     }
 
     pub fn len(&self) -> usize {
-        self.envs.len()
+        self.n
     }
 
     pub fn is_empty(&self) -> bool {
-        self.envs.is_empty()
+        self.n == 0
     }
 
     /// Padded per-lane observation length (the widest lane's `obs_dim`).
@@ -74,17 +94,22 @@ impl<E: Env> VecEnv<E> {
 
     /// Lane 0's action space (the shared space of a homogeneous batch).
     pub fn action_space(&self) -> Space {
-        self.envs[0].action_space()
+        self.specs[0].action_space.clone()
     }
 
     /// Reset every lane; `obs` is `[n * obs_dim]`.
     pub fn reset_into(&mut self, obs: &mut [f32]) {
+        assert_eq!(obs.len(), self.n * self.padded);
         let d = self.padded;
-        for (i, env) in self.envs.iter_mut().enumerate() {
-            let slot = &mut obs[i * d..(i + 1) * d];
-            let (lane_obs, tail) = slot.split_at_mut(self.specs[i].obs_dim);
-            env.reset_into(lane_obs);
-            tail.fill(0.0);
+        match &mut self.kernel {
+            Kernel::Scalar(batch) => batch.reset_batch(obs, d),
+            Kernel::Groups(groups) => {
+                for group in groups {
+                    let lanes = group.batch.lanes();
+                    let start = group.lane_start * d;
+                    group.batch.reset_batch(&mut obs[start..start + lanes * d], d);
+                }
+            }
         }
     }
 
@@ -96,24 +121,54 @@ impl<E: Env> VecEnv<E> {
         obs: &mut [f32],
         transitions: &mut [Transition],
     ) {
-        assert_eq!(actions.len(), self.envs.len());
-        assert_eq!(transitions.len(), self.envs.len());
+        assert_eq!(actions.len(), self.n);
+        assert_eq!(obs.len(), self.n * self.padded);
+        assert_eq!(transitions.len(), self.n);
         let d = self.padded;
-        for (i, env) in self.envs.iter_mut().enumerate() {
-            let slot = &mut obs[i * d..(i + 1) * d];
-            let (lane_obs, tail) = slot.split_at_mut(self.specs[i].obs_dim);
-            let t = env.step_into(&actions[i], lane_obs);
-            transitions[i] = t;
-            if t.done || t.truncated {
-                env.reset_into(lane_obs);
+        match &mut self.kernel {
+            Kernel::Scalar(batch) => batch.step_batch(actions, obs, d, transitions),
+            Kernel::Groups(groups) => {
+                for group in groups {
+                    let lanes = group.batch.lanes();
+                    let (first, start) = (group.lane_start, group.lane_start * d);
+                    group.batch.step_batch(
+                        &actions[first..first + lanes],
+                        &mut obs[start..start + lanes * d],
+                        d,
+                        &mut transitions[first..first + lanes],
+                    );
+                }
             }
-            tail.fill(0.0);
         }
     }
 
-    /// Direct lane access.
+    /// Direct lane access (scalar-built batches only; a group-fused
+    /// `VecEnv` has no per-lane `Env` values and panics here).
     pub fn lane(&mut self, i: usize) -> &mut E {
-        &mut self.envs[i]
+        match &mut self.kernel {
+            Kernel::Scalar(batch) => batch.lane_mut(i),
+            Kernel::Groups(_) => {
+                panic!("VecEnv::lane is not available on a group-fused batch")
+            }
+        }
+    }
+}
+
+impl VecEnv<DynEnv> {
+    /// Build from a lane-group plan — the fused-kernel constructor
+    /// ([`EnvPool::from_groups`](crate::coordinator::pool::EnvPool::from_groups)
+    /// semantics, sequential).  Groups occupy contiguous lanes in plan
+    /// order, lane `i` seeded `base_seed + i`.
+    pub fn from_groups(groups: Vec<LaneGroupSpec>, base_seed: u64) -> VecEnv<DynEnv> {
+        let n: usize = groups.iter().map(|g| g.lanes()).sum();
+        assert!(n > 0);
+        let (built, specs, padded) = materialize_groups(groups, base_seed, n);
+        VecEnv {
+            kernel: Kernel::Groups(built),
+            specs,
+            padded,
+            n,
+        }
     }
 }
 
@@ -246,6 +301,55 @@ mod tests {
             assert_eq!(tr[1], t, "step {step}");
             assert_eq!(&obs[4..6], &single_obs[..], "step {step}");
             assert_eq!(&obs[6..8], &[0.0, 0.0], "step {step}: tail must stay zero");
+        }
+    }
+
+    #[test]
+    fn from_groups_matches_scalar_construction_bitwise() {
+        use crate::core::batch::DynBatchEnv;
+        // Two groups: fused CartPole lanes + scalar MountainCar lanes —
+        // the mixed fused/fallback shape the executors build.
+        let groups = || {
+            vec![
+                LaneGroupSpec::new("CartPole-v1", 2, |lanes| -> DynBatchEnv {
+                    Box::new(CartPole::batch(lanes, Some(30)))
+                }),
+                LaneGroupSpec::new("MountainCar-v0", 1, |lanes| -> DynBatchEnv {
+                    let envs: Vec<crate::core::env::DynEnv> = (0..lanes)
+                        .map(|_| {
+                            Box::new(TimeLimit::new(MountainCar::new(), 30))
+                                as crate::core::env::DynEnv
+                        })
+                        .collect();
+                    Box::new(crate::core::batch::ScalarBatch::from_envs(envs))
+                }),
+            ]
+        };
+        let scalar_envs: Vec<crate::core::env::DynEnv> = vec![
+            Box::new(TimeLimit::new(CartPole::new(), 30)),
+            Box::new(TimeLimit::new(CartPole::new(), 30)),
+            Box::new(TimeLimit::new(MountainCar::new(), 30)),
+        ];
+        let mut reference = VecEnv::from_envs(scalar_envs, 21);
+        let mut fused = VecEnv::from_groups(groups(), 21);
+        assert_eq!(fused.num_lanes(), 3);
+        assert_eq!(fused.obs_dim(), 4);
+        assert_eq!(fused.lane_specs()[0].env_id, "CartPole-v1");
+        assert_eq!(fused.lane_specs()[2].obs_dim, 2);
+        let mut obs_a = vec![f32::NAN; 3 * 4];
+        let mut obs_b = vec![f32::NAN; 3 * 4];
+        let mut tr_a = vec![Transition::default(); 3];
+        let mut tr_b = vec![Transition::default(); 3];
+        reference.reset_into(&mut obs_a);
+        fused.reset_into(&mut obs_b);
+        assert_eq!(obs_a, obs_b);
+        for step in 0..100 {
+            let actions: Vec<Action> =
+                (0..3).map(|i| Action::Discrete((step + i) % 2)).collect();
+            reference.step_into(&actions, &mut obs_a, &mut tr_a);
+            fused.step_into(&actions, &mut obs_b, &mut tr_b);
+            assert_eq!(tr_a, tr_b, "step {step}");
+            assert_eq!(obs_a, obs_b, "step {step}");
         }
     }
 }

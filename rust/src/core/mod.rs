@@ -1,11 +1,13 @@
-//! Core abstractions: the [`env::Env`] trait, [`spaces`], deterministic
-//! [`rng`], construction [`kwargs`], and toolkit-wide [`error`] types.
+//! Core abstractions: the [`env::Env`] trait, the fused [`batch`]
+//! stepping layer, [`spaces`], deterministic [`rng`], construction
+//! [`kwargs`], and toolkit-wide [`error`] types.
 //!
 //! This is the paper's §III-A "building blocks" layer (Environments +
 //! Spaces), kept dependency-free so every other module (native envs,
 //! script runner, flash runner, wrappers, coordinator) builds on the same
 //! minimal surface.
 
+pub mod batch;
 pub mod env;
 pub mod error;
 pub mod json;

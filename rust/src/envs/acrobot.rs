@@ -5,6 +5,7 @@
 //! `[cos t1, sin t1, cos t2, sin t2, dt1, dt2]`, actions `{0: -1, 1: 0,
 //! 2: +1}` torque, reward -1 per step until termination.
 
+use crate::core::batch::{FusedBatch, LaneKernel};
 use crate::core::env::{Env, Transition};
 use crate::core::rng::Pcg32;
 use crate::core::spaces::{Action, Space};
@@ -108,6 +109,20 @@ impl Acrobot {
         self.done = false;
     }
 
+    /// A fused SoA batch of `lanes` acrobots ([`CartPole::batch`]
+    /// (crate::envs::CartPole::batch) semantics).
+    pub fn batch(lanes: usize, max_steps: Option<u32>) -> FusedBatch<AcrobotLanes> {
+        FusedBatch::new(
+            AcrobotLanes {
+                theta1: vec![0.0; lanes],
+                theta2: vec![0.0; lanes],
+                dtheta1: vec![0.0; lanes],
+                dtheta2: vec![0.0; lanes],
+            },
+            max_steps,
+        )
+    }
+
     /// Pure dynamics: one environment step on an explicit state.
     pub fn dynamics(s: [f32; 4], action: usize) -> ([f32; 4], bool) {
         let torque = action as f32 - 1.0;
@@ -184,6 +199,64 @@ impl Env for Acrobot {
 
     fn render(&self, fb: &mut Framebuffer) {
         software::paint_acrobot(fb, self.state[0], self.state[1]);
+    }
+}
+
+/// SoA state columns of a fused acrobot group ([`Acrobot::batch`]).
+pub struct AcrobotLanes {
+    theta1: Vec<f32>,
+    theta2: Vec<f32>,
+    dtheta1: Vec<f32>,
+    dtheta2: Vec<f32>,
+}
+
+impl LaneKernel for AcrobotLanes {
+    fn obs_dim(&self) -> usize {
+        6
+    }
+
+    fn action_space(&self) -> Space {
+        Space::Discrete { n: 3 }
+    }
+
+    fn rng_stream(&self) -> u64 {
+        0x2545f4914f6cdd1d
+    }
+
+    fn lanes(&self) -> usize {
+        self.theta1.len()
+    }
+
+    fn reset_lane(&mut self, k: usize, rng: &mut Pcg32, obs: &mut [f32]) {
+        // Draw order matches the scalar `reset_into` (state array order).
+        self.theta1[k] = rng.uniform(-0.1, 0.1);
+        self.theta2[k] = rng.uniform(-0.1, 0.1);
+        self.dtheta1[k] = rng.uniform(-0.1, 0.1);
+        self.dtheta2[k] = rng.uniform(-0.1, 0.1);
+        self.write_obs(k, obs);
+    }
+
+    fn step_lane(&mut self, k: usize, action: &Action, obs: &mut [f32]) -> Transition {
+        let s = [self.theta1[k], self.theta2[k], self.dtheta1[k], self.dtheta2[k]];
+        let (ns, done) = Acrobot::dynamics(s, action.index());
+        [self.theta1[k], self.theta2[k], self.dtheta1[k], self.dtheta2[k]] = ns;
+        self.write_obs(k, obs);
+        Transition {
+            reward: if done { 0.0 } else { -1.0 },
+            done,
+            truncated: false,
+        }
+    }
+}
+
+impl AcrobotLanes {
+    fn write_obs(&self, k: usize, obs: &mut [f32]) {
+        obs[0] = self.theta1[k].cos();
+        obs[1] = self.theta1[k].sin();
+        obs[2] = self.theta2[k].cos();
+        obs[3] = self.theta2[k].sin();
+        obs[4] = self.dtheta1[k];
+        obs[5] = self.dtheta2[k];
     }
 }
 

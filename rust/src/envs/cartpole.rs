@@ -5,6 +5,7 @@
 //! operation: the integration tests step all three implementations with
 //! identical states and assert trajectory agreement.
 
+use crate::core::batch::{FusedBatch, LaneKernel};
 use crate::core::env::{Env, Transition};
 use crate::core::rng::Pcg32;
 use crate::core::spaces::{Action, Space};
@@ -49,6 +50,23 @@ impl CartPole {
     pub fn set_state(&mut self, s: [f32; 4]) {
         self.state = s;
         self.done = false;
+    }
+
+    /// A fused SoA batch of `lanes` cart-poles: state in parallel
+    /// columns, physics stepped in one tight loop, the registered
+    /// `TimeLimit` (`max_steps`) and auto-reset folded in.  Trajectories
+    /// are bit-identical to per-lane `TimeLimit<CartPole>` scalars with
+    /// the same seeds (`rust/tests/batch_kernel.rs`).
+    pub fn batch(lanes: usize, max_steps: Option<u32>) -> FusedBatch<CartPoleLanes> {
+        FusedBatch::new(
+            CartPoleLanes {
+                x: vec![0.0; lanes],
+                x_dot: vec![0.0; lanes],
+                theta: vec![0.0; lanes],
+                theta_dot: vec![0.0; lanes],
+            },
+            max_steps,
+        )
     }
 
     /// One step of the dynamics on an explicit state — the pure function
@@ -131,6 +149,55 @@ impl Env for CartPole {
 
     fn render(&self, fb: &mut Framebuffer) {
         software::paint_cartpole(fb, self.state[0], self.state[2]);
+    }
+}
+
+/// SoA state columns of a fused cart-pole group ([`CartPole::batch`]):
+/// one `Vec<f32>` per state variable, stepped through the same
+/// [`CartPole::dynamics`] as the scalar env.
+pub struct CartPoleLanes {
+    x: Vec<f32>,
+    x_dot: Vec<f32>,
+    theta: Vec<f32>,
+    theta_dot: Vec<f32>,
+}
+
+impl LaneKernel for CartPoleLanes {
+    fn obs_dim(&self) -> usize {
+        4
+    }
+
+    fn action_space(&self) -> Space {
+        Space::Discrete { n: 2 }
+    }
+
+    fn rng_stream(&self) -> u64 {
+        0x9e3779b97f4a7c15
+    }
+
+    fn lanes(&self) -> usize {
+        self.x.len()
+    }
+
+    fn reset_lane(&mut self, k: usize, rng: &mut Pcg32, obs: &mut [f32]) {
+        // Draw order matches the scalar `reset_into` (state array order).
+        self.x[k] = rng.uniform(-0.05, 0.05);
+        self.x_dot[k] = rng.uniform(-0.05, 0.05);
+        self.theta[k] = rng.uniform(-0.05, 0.05);
+        self.theta_dot[k] = rng.uniform(-0.05, 0.05);
+        obs.copy_from_slice(&[self.x[k], self.x_dot[k], self.theta[k], self.theta_dot[k]]);
+    }
+
+    fn step_lane(&mut self, k: usize, action: &Action, obs: &mut [f32]) -> Transition {
+        let s = [self.x[k], self.x_dot[k], self.theta[k], self.theta_dot[k]];
+        let (next, done) = CartPole::dynamics(s, action.index() == 1);
+        [self.x[k], self.x_dot[k], self.theta[k], self.theta_dot[k]] = next;
+        obs.copy_from_slice(&next);
+        Transition {
+            reward: 1.0,
+            done,
+            truncated: false,
+        }
     }
 }
 

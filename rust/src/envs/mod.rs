@@ -18,9 +18,9 @@ pub mod linewars;
 pub mod mountain_car;
 pub mod pendulum;
 
-pub use acrobot::Acrobot;
-pub use cartpole::CartPole;
+pub use acrobot::{Acrobot, AcrobotLanes};
+pub use cartpole::{CartPole, CartPoleLanes};
 pub use gridrts::GridRts;
 pub use linewars::LineWars;
-pub use mountain_car::MountainCar;
-pub use pendulum::{Pendulum, PENDULUM_TORQUES};
+pub use mountain_car::{MountainCar, MountainCarLanes};
+pub use pendulum::{Pendulum, PendulumLanes, PENDULUM_TORQUES};

@@ -4,6 +4,7 @@
 //! summit.  Observation `[position, velocity]`, actions `{0: push left,
 //! 1: coast, 2: push right}`, reward -1 per step, terminal at the goal.
 
+use crate::core::batch::{FusedBatch, LaneKernel};
 use crate::core::env::{Env, Transition};
 use crate::core::rng::Pcg32;
 use crate::core::spaces::{Action, Space};
@@ -43,6 +44,19 @@ impl MountainCar {
         self.position = s[0];
         self.velocity = s[1];
         self.done = false;
+    }
+
+    /// A fused SoA batch of `lanes` mountain cars ([`CartPole::batch`]
+    /// (crate::envs::CartPole::batch) semantics: same dynamics as the
+    /// scalar env, `TimeLimit` and auto-reset folded in).
+    pub fn batch(lanes: usize, max_steps: Option<u32>) -> FusedBatch<MountainCarLanes> {
+        FusedBatch::new(
+            MountainCarLanes {
+                position: vec![0.0; lanes],
+                velocity: vec![0.0; lanes],
+            },
+            max_steps,
+        )
     }
 
     /// Pure dynamics shared with the scripted baseline tests.
@@ -117,6 +131,52 @@ impl Env for MountainCar {
 
     fn render(&self, fb: &mut Framebuffer) {
         software::paint_mountaincar(fb, self.position, self.velocity);
+    }
+}
+
+/// SoA state columns of a fused mountain-car group
+/// ([`MountainCar::batch`]).
+pub struct MountainCarLanes {
+    position: Vec<f32>,
+    velocity: Vec<f32>,
+}
+
+impl LaneKernel for MountainCarLanes {
+    fn obs_dim(&self) -> usize {
+        2
+    }
+
+    fn action_space(&self) -> Space {
+        Space::Discrete { n: 3 }
+    }
+
+    fn rng_stream(&self) -> u64 {
+        0xd3c5b1a49e7f2263
+    }
+
+    fn lanes(&self) -> usize {
+        self.position.len()
+    }
+
+    fn reset_lane(&mut self, k: usize, rng: &mut Pcg32, obs: &mut [f32]) {
+        self.position[k] = rng.uniform(-0.6, -0.4);
+        self.velocity[k] = 0.0;
+        obs[0] = self.position[k];
+        obs[1] = self.velocity[k];
+    }
+
+    fn step_lane(&mut self, k: usize, action: &Action, obs: &mut [f32]) -> Transition {
+        let (p, v, done) =
+            MountainCar::dynamics(self.position[k], self.velocity[k], action.index());
+        self.position[k] = p;
+        self.velocity[k] = v;
+        obs[0] = p;
+        obs[1] = v;
+        Transition {
+            reward: -1.0,
+            done,
+            truncated: false,
+        }
     }
 }
 

@@ -7,6 +7,7 @@
 //! paper's Table-I agent) trains on it.  There is no terminal state — the
 //! standard TimeLimit(200) wrapper ends episodes.
 
+use crate::core::batch::{FusedBatch, LaneKernel};
 use crate::core::env::{Env, Transition};
 use crate::core::rng::Pcg32;
 use crate::core::spaces::{Action, Space};
@@ -55,6 +56,17 @@ impl Pendulum {
             discrete: true,
             ..Self::new()
         }
+    }
+
+    /// A fused SoA batch of `lanes` continuous-torque pendulums
+    /// ([`CartPole::batch`](crate::envs::CartPole::batch) semantics).
+    pub fn batch(lanes: usize, max_steps: Option<u32>) -> FusedBatch<PendulumLanes> {
+        FusedBatch::new(PendulumLanes::new(lanes, false), max_steps)
+    }
+
+    /// [`Pendulum::batch`] for the discrete-torque (DQN) variant.
+    pub fn batch_discrete(lanes: usize, max_steps: Option<u32>) -> FusedBatch<PendulumLanes> {
+        FusedBatch::new(PendulumLanes::new(lanes, true), max_steps)
     }
 
     pub fn state(&self) -> [f32; 2] {
@@ -154,6 +166,72 @@ impl Env for Pendulum {
 
     fn render(&self, fb: &mut Framebuffer) {
         software::paint_pendulum(fb, self.theta);
+    }
+}
+
+/// SoA state columns of a fused pendulum group ([`Pendulum::batch`] /
+/// [`Pendulum::batch_discrete`]).
+pub struct PendulumLanes {
+    theta: Vec<f32>,
+    theta_dot: Vec<f32>,
+    discrete: bool,
+}
+
+impl PendulumLanes {
+    fn new(lanes: usize, discrete: bool) -> PendulumLanes {
+        PendulumLanes {
+            theta: vec![0.0; lanes],
+            theta_dot: vec![0.0; lanes],
+            discrete,
+        }
+    }
+}
+
+impl LaneKernel for PendulumLanes {
+    fn obs_dim(&self) -> usize {
+        3
+    }
+
+    fn action_space(&self) -> Space {
+        if self.discrete {
+            Space::Discrete {
+                n: PENDULUM_TORQUES.len(),
+            }
+        } else {
+            Space::box1(vec![-MAX_TORQUE], vec![MAX_TORQUE])
+        }
+    }
+
+    fn rng_stream(&self) -> u64 {
+        0x6a09e667f3bcc909
+    }
+
+    fn lanes(&self) -> usize {
+        self.theta.len()
+    }
+
+    fn reset_lane(&mut self, k: usize, rng: &mut Pcg32, obs: &mut [f32]) {
+        self.theta[k] = rng.uniform(-std::f32::consts::PI, std::f32::consts::PI);
+        self.theta_dot[k] = rng.uniform(-1.0, 1.0);
+        obs[0] = self.theta[k].cos();
+        obs[1] = self.theta[k].sin();
+        obs[2] = self.theta_dot[k];
+    }
+
+    fn step_lane(&mut self, k: usize, action: &Action, obs: &mut [f32]) -> Transition {
+        let torque = if self.discrete {
+            PENDULUM_TORQUES[action.index()]
+        } else {
+            action.vector()[0]
+        };
+        let (t, td, reward) = Pendulum::dynamics(self.theta[k], self.theta_dot[k], torque);
+        self.theta[k] = t;
+        self.theta_dot[k] = td;
+        obs[0] = t.cos();
+        obs[1] = t.sin();
+        obs[2] = td;
+        // Never terminal: the fused TimeLimit ends episodes.
+        Transition::live(reward)
     }
 }
 

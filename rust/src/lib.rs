@@ -41,6 +41,15 @@
 //! [`coordinator::pool::BatchedExecutor::lane_specs`] describing the
 //! per-lane layout; see README §"Scenario mixtures".
 //!
+//! Inside every executor, contiguous same-spec lanes form **groups**
+//! stepped through one [`core::batch::BatchEnv`] call: the
+//! classic-control envs ship fused SoA kernels (state in parallel
+//! `Vec<f32>` columns, registered `TimeLimit` folded in, bit-identical
+//! to scalar stepping), everything else runs on the
+//! [`core::batch::ScalarBatch`] fallback.  `cairl run --kernel
+//! scalar|fused` flips the mode for A/B benching; see README §"Batch
+//! kernels".
+//!
 //! ## The registry: `EnvSpec`, kwargs, wrapper chains
 //!
 //! Environment construction is spec-driven
@@ -115,11 +124,15 @@ pub use crate::core::spaces::{Action, Space};
 
 /// Everything a typical experiment needs.
 pub mod prelude {
-    pub use crate::coordinator::pool::{AsyncEnvPool, BatchedExecutor, EnvPool, LaneSpec};
+    pub use crate::coordinator::experiment::{ExecutorKind, KernelMode};
+    pub use crate::coordinator::pool::{
+        AsyncEnvPool, BatchedExecutor, EnvPool, LaneGroupSpec, LaneSpec,
+    };
     pub use crate::coordinator::registry::{
         list_envs, make, make_with, register, register_script, EnvSpec, MixtureSpec,
     };
     pub use crate::coordinator::vec_env::VecEnv;
+    pub use crate::core::batch::{BatchEnv, DynBatchEnv, FusedBatch, LaneKernel, ScalarBatch};
     pub use crate::core::env::{DynEnv, Env, Step};
     pub use crate::core::kwargs::{Kwargs, KwargValue};
     pub use crate::core::rng::Pcg32;

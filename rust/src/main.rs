@@ -11,8 +11,8 @@ use anyhow::{anyhow, bail, Context, Result};
 use cairl::agents::dqn::{DqnAgent, DqnConfig};
 use cairl::coordinator::config::{DqnSettings, ExperimentConfig};
 use cairl::coordinator::experiment::{
-    build_executor_wrapped, run_batched_workload, run_stepping_workload, ExecutorKind,
-    RenderMode,
+    build_executor_with_kernel, run_batched_workload, run_stepping_workload, ExecutorKind,
+    KernelMode, RenderMode,
 };
 use cairl::coordinator::registry::{self, MixtureSpec};
 use cairl::core::env::Env;
@@ -78,9 +78,14 @@ cairl — CaiRL: a high-performance RL environment toolkit (CoG 2022 reproductio
 USAGE: cairl <command> [flags]
 
 COMMANDS:
-  list-envs                       list every registered environment id
+  list-envs | envs [--json]       list every registered environment id;
+                                  --json dumps the full registry (id,
+                                  summary, kwarg defaults, wrapper chain,
+                                  batch-capable flag) for experiment
+                                  provenance
   run        --env SPEC --steps N --seed S [--render] [--ascii]
              [--executor vec|pool|pool-async --lanes N --threads T]
+             [--kernel scalar|fused]
              [--wrap \"TimeLimit(200),NormalizeObs\"]
              [--register-script NAME=FILE.mpy[,NAME=FILE.mpy...]]
              [--config FILE.json]
@@ -96,8 +101,12 @@ COMMANDS:
                                   loads MiniScript sources into the Script/
                                   namespace before SPEC is parsed, --wrap
                                   applies a declarative wrapper chain to every
-                                  env/lane; FILE.json's \"executor\" and
-                                  \"wrappers\" blocks set the matching defaults
+                                  env/lane; --kernel flips the batched stepping
+                                  path between fused SoA kernels (default) and
+                                  per-lane scalar dispatch for A/B benching
+                                  (bit-identical either way); FILE.json's
+                                  \"executor\" and \"wrappers\" blocks set the
+                                  matching defaults
   train      --env NAME [--seed S] [--max-steps N] [--config FILE.json]
                                   train DQN via the PJRT artifacts
                                   (NAME: cartpole|mountaincar|acrobot|pendulum|multitask)
@@ -117,9 +126,16 @@ fn main() -> Result<()> {
     let args = Args::parse(&argv[1..])?;
 
     match command.as_str() {
-        "list-envs" => {
-            for (id, summary) in list_envs() {
-                println!("{id:<28} {summary}");
+        "list-envs" | "envs" => {
+            if args.flag("json") {
+                // The registry as JSON — experiment provenance: capture
+                // exactly which specs (kwargs, wrappers, batch kernels)
+                // a run had available.
+                println!("{}", registry::registry_json().render());
+            } else {
+                for (id, summary) in list_envs() {
+                    println!("{id:<28} {summary}");
+                }
             }
         }
         "run" => {
@@ -178,6 +194,10 @@ fn main() -> Result<()> {
                 let kind = ExecutorKind::parse(&executor).ok_or_else(|| {
                     anyhow!("unknown executor {executor:?} (vec | pool | pool-async)")
                 })?;
+                let kernel_name = args.str("kernel", &file_cfg.executor.kernel);
+                let kernel = KernelMode::parse(&kernel_name).ok_or_else(|| {
+                    anyhow!("unknown kernel {kernel_name:?} (scalar | fused)")
+                })?;
                 let threads =
                     match args.u64("threads", file_cfg.executor.threads as u64)? as usize
                     {
@@ -186,16 +206,24 @@ fn main() -> Result<()> {
                             .unwrap_or(1),
                         t => t,
                     };
-                let mut exec =
-                    build_executor_wrapped(&env_id, kind, lanes, threads, seed, &wrap_chain)
-                        .map_err(|e| anyhow!("{e}"))?;
+                let mut exec = build_executor_with_kernel(
+                    &env_id,
+                    kind,
+                    lanes,
+                    threads,
+                    seed,
+                    &wrap_chain,
+                    kernel,
+                )
+                .map_err(|e| anyhow!("{e}"))?;
                 let lanes = exec.num_lanes();
                 let steps_per_lane = (steps / lanes as u64).max(1);
                 let r = run_batched_workload(exec.as_mut(), steps_per_lane, seed);
                 println!(
-                    "{env_id} [{} x {lanes} lanes]: {} lane-steps, {} episodes, \
-                     {:.3}s, {:.0} steps/s",
+                    "{env_id} [{} x {lanes} lanes, {} kernel]: {} lane-steps, \
+                     {} episodes, {:.3}s, {:.0} steps/s",
                     kind.label(),
+                    kernel.label(),
                     r.steps,
                     r.episodes,
                     r.elapsed.as_secs_f64(),

@@ -127,6 +127,20 @@ impl WrapperSpec {
         }
     }
 
+    /// The wrapper chains a fused SoA batch kernel
+    /// ([`FusedBatch`](crate::core::batch::FusedBatch)) can absorb:
+    /// the empty chain (`Some(None)`) or a single `TimeLimit` layer
+    /// (`Some(Some(max_steps))`, folded into the kernel's step
+    /// counter).  Anything else returns `None` — those lanes fall back
+    /// to [`ScalarBatch`](crate::core::batch::ScalarBatch) stepping.
+    pub fn as_fused_time_limit(chain: &[WrapperSpec]) -> Option<Option<u32>> {
+        match chain {
+            [] => Some(None),
+            [WrapperSpec::TimeLimit { max_steps }] => Some(Some(*max_steps)),
+            _ => None,
+        }
+    }
+
     /// Parse one item of the chain grammar (see the module docs).
     pub fn parse(src: &str) -> Result<WrapperSpec> {
         let bad = |msg: String| CairlError::Config(format!("wrapper spec {src:?}: {msg}"));
@@ -360,6 +374,26 @@ mod tests {
         assert_eq!(eff[0], WrapperSpec::TimeLimit { max_steps: 33 });
         assert_eq!(eff[1], WrapperSpec::PixelObs { size: 8 });
         assert_eq!(eff[2], WrapperSpec::NormalizeObs);
+    }
+
+    #[test]
+    fn fused_time_limit_accepts_only_bare_or_time_limited_chains() {
+        assert_eq!(WrapperSpec::as_fused_time_limit(&[]), Some(None));
+        assert_eq!(
+            WrapperSpec::as_fused_time_limit(&[WrapperSpec::TimeLimit { max_steps: 500 }]),
+            Some(Some(500))
+        );
+        assert_eq!(
+            WrapperSpec::as_fused_time_limit(&[WrapperSpec::NormalizeObs]),
+            None
+        );
+        assert_eq!(
+            WrapperSpec::as_fused_time_limit(&[
+                WrapperSpec::TimeLimit { max_steps: 500 },
+                WrapperSpec::PixelObs { size: 16 },
+            ]),
+            None
+        );
     }
 
     #[test]

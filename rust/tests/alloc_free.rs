@@ -1,22 +1,36 @@
-//! The zero-allocation guarantee of the async executor (ISSUE 2
-//! acceptance): once warmed up, a steady-state
-//! `recv_batch` → `send_actions` cycle on [`AsyncEnvPool`] performs
-//! **zero heap allocations** — observations travel through per-lane
-//! slots of one shared block, lane ids through capacity-reserved
-//! queues, and the batch view borrows instead of copying.
+//! The zero-allocation guarantees of the executor hot paths (ISSUE 2 +
+//! ISSUE 4 acceptance): once warmed up,
 //!
-//! Pinned with a counting global allocator, which is why this test
-//! lives alone in its own integration binary: every allocation from
-//! any thread in the process is counted, so the measured window must
-//! contain nothing but the pool loop.
+//! * a steady-state `recv_batch` → `send_actions` cycle on
+//!   [`AsyncEnvPool`] performs **zero heap allocations** — observations
+//!   travel through per-lane slots of one shared block, lane ids
+//!   through capacity-reserved queues, and the batch view borrows
+//!   instead of copying;
+//! * a steady-state lockstep `step_into` loop on the sync [`EnvPool`]
+//!   allocates nothing, on **both** kernel modes — the fused SoA
+//!   `step_batch` path steps columns in place, and the scalar fallback
+//!   replays the pre-fusion per-lane loop without a single allocation.
+//!
+//! Pinned with a counting global allocator, which is why these tests
+//! live alone in their own integration binary: every allocation from
+//! any thread in the process is counted, so a measured window must
+//! contain nothing but the pool loop (the tests serialise on a mutex
+//! to keep each other's warm-up out of the windows).
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
-use cairl::coordinator::pool::AsyncEnvPool;
+use cairl::coordinator::pool::{AsyncEnvPool, BatchedExecutor, EnvPool, LaneGroupSpec};
+use cairl::core::batch::DynBatchEnv;
+use cairl::core::env::Transition;
 use cairl::core::spaces::Action;
 use cairl::envs::CartPole;
 use cairl::wrappers::TimeLimit;
+
+/// Serialises the measuring tests: the counter is process-global, so a
+/// concurrently warming-up sibling test would pollute every window.
+static WINDOW_LOCK: Mutex<()> = Mutex::new(());
 
 /// System allocator with a global allocation counter (frees are not
 /// counted: the guarantee is about allocations).
@@ -63,8 +77,31 @@ fn drive_cycles(pool: &mut AsyncEnvPool, n: usize, sends: &mut Vec<(usize, Actio
     }
 }
 
+/// Measure `run(iters)` over a few windows; pass as soon as one window
+/// is allocation-free.  The loop itself must allocate nothing, but the
+/// counter is process-global, so tolerate windows polluted by harness
+/// background activity — a clean window proves the loop allocates zero
+/// (noise only adds).
+fn assert_some_window_is_clean(what: &str, mut run: impl FnMut(u32)) {
+    let mut deltas = Vec::new();
+    for _ in 0..3 {
+        let before = ALLOCS.load(Ordering::SeqCst);
+        run(2_000);
+        let after = ALLOCS.load(Ordering::SeqCst);
+        deltas.push(after - before);
+        if after == before {
+            return; // proven allocation-free
+        }
+    }
+    panic!(
+        "steady-state {what} allocated in every measured window: \
+         {deltas:?} allocations per 2000-cycle window"
+    );
+}
+
 #[test]
 fn steady_state_recv_and_send_allocate_nothing() {
+    let _guard = WINDOW_LOCK.lock().unwrap_or_else(|e| e.into_inner());
     let n = 8;
     let mut pool = AsyncEnvPool::new(n, 17, 2, || TimeLimit::new(CartPole::new(), 50));
     let mut sends: Vec<(usize, Action)> = Vec::with_capacity(n);
@@ -73,22 +110,56 @@ fn steady_state_recv_and_send_allocate_nothing() {
     // auto-resets, condvar parking) and of lazy runtime structures.
     drive_cycles(&mut pool, n, &mut sends, 400);
 
-    // Measure a few windows; the loop itself must allocate nothing, but
-    // the counter is process-global, so tolerate a window polluted by
-    // harness background activity as long as one window is clean — a
-    // clean window proves the loop allocates zero (noise only adds).
-    let mut deltas = Vec::new();
-    for _ in 0..3 {
-        let before = ALLOCS.load(Ordering::SeqCst);
-        drive_cycles(&mut pool, n, &mut sends, 2_000);
-        let after = ALLOCS.load(Ordering::SeqCst);
-        deltas.push(after - before);
-        if after == before {
-            return; // proven allocation-free
-        }
+    assert_some_window_is_clean("AsyncEnvPool recv_batch/send_actions", |iters| {
+        drive_cycles(&mut pool, n, &mut sends, iters)
+    });
+}
+
+/// Drive `iters` lockstep batches on a sync pool with fixed buffers.
+fn drive_lockstep(
+    pool: &mut EnvPool,
+    actions: &[Action],
+    obs: &mut [f32],
+    tr: &mut [Transition],
+    iters: u32,
+) {
+    for _ in 0..iters {
+        BatchedExecutor::step_into(pool, actions, obs, tr);
+        std::hint::black_box(obs[0]);
     }
-    panic!(
-        "steady-state AsyncEnvPool recv_batch/send_actions allocated in every \
-         measured window: {deltas:?} allocations per 2000-cycle window"
+}
+
+/// The sync-pool steady-state loop on a given pool: warm up, then
+/// require a clean window.
+fn assert_sync_pool_step_loop_is_clean(mut pool: EnvPool, what: &str) {
+    let n = pool.num_lanes();
+    let d = pool.obs_dim();
+    let actions: Vec<Action> = (0..n).map(|i| Action::Discrete(i % 2)).collect();
+    let mut obs = vec![0.0f32; n * d];
+    let mut tr = vec![Transition::default(); n];
+    BatchedExecutor::reset_into(&mut pool, &mut obs);
+    drive_lockstep(&mut pool, &actions, &mut obs, &mut tr, 400);
+    assert_some_window_is_clean(what, |iters| {
+        drive_lockstep(&mut pool, &actions, &mut obs, &mut tr, iters)
+    });
+}
+
+#[test]
+fn fused_step_batch_path_allocates_nothing() {
+    let _guard = WINDOW_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let pool = EnvPool::from_groups(
+        vec![LaneGroupSpec::new("CartPole-v1", 8, |lanes| -> DynBatchEnv {
+            Box::new(CartPole::batch(lanes, Some(50)))
+        })],
+        17,
+        2,
     );
+    assert_sync_pool_step_loop_is_clean(pool, "fused EnvPool step_batch loop");
+}
+
+#[test]
+fn scalar_sync_pool_step_loop_allocates_nothing() {
+    let _guard = WINDOW_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let pool = EnvPool::new(8, 17, 2, || TimeLimit::new(CartPole::new(), 50));
+    assert_sync_pool_step_loop_is_clean(pool, "scalar EnvPool step_into loop");
 }

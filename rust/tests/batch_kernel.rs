@@ -1,0 +1,263 @@
+//! Integration: fused SoA batch kernels vs scalar dispatch.
+//!
+//! The load-bearing invariant of the ISSUE-4 fusion refactor: **the
+//! kernel mode is a pure performance transform**.  For every
+//! classic-control env, on every executor kind, at every thread count,
+//! `--kernel fused` must reproduce `--kernel scalar` trajectories
+//! bit-for-bit — same observations, same rewards, same episode
+//! boundaries (the fused `TimeLimit` step counter included), auto-reset
+//! and mixtures with mixed fused/fallback groups included.
+//!
+//! Thread counts under test default to 1/2/4; the CI determinism matrix
+//! re-runs this suite pinned to each of 1, 2, 4 and 8 via
+//! `CAIRL_TEST_THREADS=<t>`.
+
+mod common;
+
+use cairl::coordinator::experiment::{
+    build_executor_with_kernel, run_batched_workload, ExecutorKind, KernelMode,
+};
+use cairl::coordinator::pool::{BatchedExecutor, LaneSpec};
+use cairl::coordinator::registry::{self, MixtureSpec};
+use cairl::core::env::Transition;
+use cairl::core::rng::Pcg32;
+use cairl::core::spaces::Action;
+use cairl::wrappers::WrapperSpec;
+use common::test_threads;
+
+const LANES: usize = 8;
+const STEPS: usize = 90;
+const BASE_SEED: u64 = 7;
+
+const EXECUTORS: [ExecutorKind; 3] = [
+    ExecutorKind::Sequential,
+    ExecutorKind::PoolSync,
+    ExecutorKind::PoolAsync,
+];
+
+/// The fused-kernel env ids, capped short so auto-reset fires many
+/// times inside the tape (random CartPole also terminates naturally).
+const CLASSIC: [&str; 5] = [
+    "CartPole-v1?max_steps=25",
+    "MountainCar-v0?max_steps=30",
+    "Acrobot-v1?max_steps=40",
+    "Pendulum-v1?max_steps=20",
+    "PendulumDiscrete-v1?max_steps=20",
+];
+
+/// Deterministic action tape drawn from the per-lane action spaces
+/// (spec order), so mixtures and continuous-action lanes replay the
+/// identical workload on every executor/kernel combination.
+fn action_tape(specs: &[LaneSpec], steps: usize, stream: u64) -> Vec<Vec<Action>> {
+    let mut rng = Pcg32::new(0xba7c4 ^ stream, 42);
+    (0..steps)
+        .map(|_| specs.iter().map(|s| s.action_space.sample(&mut rng)).collect())
+        .collect()
+}
+
+/// Replay a tape, returning the full (obs, transition) stream.
+fn trajectory(
+    exec: &mut dyn BatchedExecutor,
+    tape: &[Vec<Action>],
+) -> (Vec<f32>, Vec<Transition>) {
+    let n = exec.num_lanes();
+    let d = exec.obs_dim();
+    let mut obs = vec![f32::NAN; n * d];
+    let mut tr = vec![Transition::default(); n];
+    let mut obs_stream = Vec::with_capacity((tape.len() + 1) * n * d);
+    let mut tr_stream = Vec::with_capacity(tape.len() * n);
+    exec.reset_into(&mut obs);
+    obs_stream.extend_from_slice(&obs);
+    for actions in tape {
+        exec.step_into(actions, &mut obs, &mut tr);
+        obs_stream.extend_from_slice(&obs);
+        tr_stream.extend_from_slice(&tr);
+    }
+    (obs_stream, tr_stream)
+}
+
+/// Scalar-vs-fused equality for one env spec across every executor kind
+/// and thread count, including lane-spec equality.
+fn assert_kernel_equality(spec: &str, lanes: usize) {
+    let mut reference = build_executor_with_kernel(
+        spec,
+        ExecutorKind::Sequential,
+        lanes,
+        1,
+        BASE_SEED,
+        &[],
+        KernelMode::Scalar,
+    )
+    .unwrap();
+    let specs_ref = reference.lane_specs().to_vec();
+    let tape = action_tape(&specs_ref, STEPS, spec.len() as u64);
+    let (obs_ref, tr_ref) = trajectory(reference.as_mut(), &tape);
+    let ends = tr_ref.iter().filter(|t| t.done || t.truncated).count();
+    assert!(ends > 0, "{spec}: the tape must exercise auto-reset");
+    for kind in EXECUTORS {
+        for threads in test_threads() {
+            for kernel in [KernelMode::Scalar, KernelMode::Fused] {
+                let mut exec =
+                    build_executor_with_kernel(spec, kind, lanes, threads, BASE_SEED, &[], kernel)
+                        .unwrap();
+                assert_eq!(
+                    exec.lane_specs(),
+                    &specs_ref[..],
+                    "{spec}: lane specs diverged ({kind:?}, {threads}t, {kernel:?})"
+                );
+                let (obs, tr) = trajectory(exec.as_mut(), &tape);
+                assert_eq!(
+                    tr_ref, tr,
+                    "{spec}: transitions diverged ({kind:?}, {threads}t, {kernel:?})"
+                );
+                assert_eq!(
+                    obs_ref, obs,
+                    "{spec}: observations diverged ({kind:?}, {threads}t, {kernel:?})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_kernels_are_bit_identical_for_every_classic_env() {
+    for spec in CLASSIC {
+        assert_kernel_equality(spec, LANES);
+    }
+}
+
+#[test]
+fn registered_limits_fuse_bit_identically_too() {
+    // The unparameterized ids carry their Gym-standard limits (500/200)
+    // into the fused step counter; natural termination dominates the
+    // episode ends here.
+    assert_kernel_equality("CartPole-v1", 4);
+}
+
+#[test]
+fn mixtures_fuse_per_group_with_scalar_fallback_lanes() {
+    // Fused CartPole group + script fallback group + fused MountainCar
+    // group in one pool: per-group fusion, padding and zeroed tails
+    // must match the scalar build everywhere.
+    let spec = "CartPole-v1?max_steps=20:3,Script/CartPole-v1:2,MountainCar-v0?max_steps=30:3";
+    assert!(MixtureSpec::is_mixture(spec));
+    assert_kernel_equality(spec, 1);
+
+    // Spot-check the layout: MountainCar lanes are narrower than the
+    // padded width and their tails stay zero on the fused path.
+    let mut exec = build_executor_with_kernel(
+        spec,
+        ExecutorKind::PoolSync,
+        1,
+        2,
+        BASE_SEED,
+        &[],
+        KernelMode::Fused,
+    )
+    .unwrap();
+    assert_eq!(exec.num_lanes(), 8);
+    assert_eq!(exec.obs_dim(), 4);
+    let specs = exec.lane_specs().to_vec();
+    assert_eq!(specs[0].env_id, "CartPole-v1?max_steps=20");
+    assert_eq!(specs[3].env_id, "Script/CartPole-v1");
+    assert_eq!(specs[5].env_id, "MountainCar-v0?max_steps=30");
+    assert_eq!(specs[5].obs_dim, 2);
+    let tape = action_tape(&specs, 40, 3);
+    let (obs, _) = trajectory(exec.as_mut(), &tape);
+    for frame in obs.chunks(8 * 4) {
+        for spec in &specs[5..] {
+            assert_eq!(
+                &frame[spec.offset + spec.obs_dim..spec.offset + 4],
+                &[0.0, 0.0],
+                "padded tail must stay zero"
+            );
+        }
+    }
+}
+
+#[test]
+fn wrap_chains_force_the_scalar_fallback_and_stay_identical() {
+    // An extra --wrap chain can't be absorbed by a fused kernel: both
+    // kernel modes must run the same scalar lanes.
+    let chain = [WrapperSpec::NormalizeObs];
+    let run = |kernel: KernelMode| {
+        let mut exec = build_executor_with_kernel(
+            "CartPole-v1?max_steps=25",
+            ExecutorKind::PoolSync,
+            4,
+            2,
+            BASE_SEED,
+            &chain,
+            kernel,
+        )
+        .unwrap();
+        let specs = exec.lane_specs().to_vec();
+        let tape = action_tape(&specs, 60, 9);
+        trajectory(exec.as_mut(), &tape)
+    };
+    assert_eq!(run(KernelMode::Scalar), run(KernelMode::Fused));
+}
+
+#[test]
+fn adjacent_identical_components_merge_into_one_group() {
+    // "CartPole-v1:4,CartPole-v1:4" is one 8-lane fused group; it must
+    // equal the single-component spelling bit for bit.
+    let merged = build_and_run("CartPole-v1?max_steps=25:8");
+    let split = build_and_run("CartPole-v1?max_steps=25:4,CartPole-v1?max_steps=25:4");
+    assert_eq!(merged, split);
+}
+
+fn build_and_run(spec: &str) -> (Vec<f32>, Vec<Transition>) {
+    let mut exec = build_executor_with_kernel(
+        spec,
+        ExecutorKind::PoolSync,
+        1,
+        3,
+        BASE_SEED,
+        &[],
+        KernelMode::Fused,
+    )
+    .unwrap();
+    let specs = exec.lane_specs().to_vec();
+    let tape = action_tape(&specs, STEPS, 1);
+    trajectory(exec.as_mut(), &tape)
+}
+
+#[test]
+fn fused_workload_counts_match_scalar_on_every_executor() {
+    // The workload-level face of the invariant, through the public
+    // run_batched_workload driver (per-lane action sampling included).
+    for kind in EXECUTORS {
+        let run = |kernel: KernelMode| {
+            let mut exec =
+                build_executor_with_kernel("CartPole-v1", kind, 6, 2, 40, &[], kernel).unwrap();
+            let r = run_batched_workload(exec.as_mut(), 80, 7);
+            (r.steps, r.episodes)
+        };
+        let scalar = run(KernelMode::Scalar);
+        assert!(scalar.1 > 0, "{kind:?}: random cartpole must end episodes");
+        assert_eq!(scalar, run(KernelMode::Fused), "{kind:?}");
+    }
+}
+
+#[test]
+fn every_classic_spec_advertises_a_fused_builder() {
+    for id in [
+        "CartPole-v1",
+        "MountainCar-v0",
+        "Acrobot-v1",
+        "Pendulum-v1",
+        "PendulumDiscrete-v1",
+    ] {
+        assert!(registry::env_spec(id).unwrap().batch_capable(), "{id}");
+        assert!(
+            registry::fused_lane_builder(id).unwrap().is_some(),
+            "{id}: registered chain must fuse"
+        );
+    }
+    // Script/flash/puzzle and pixel-wrapped specs fall back.
+    for id in ["Script/CartPole-v1", "Flash/Pong-v0", "Puzzle/Nonogram-v0"] {
+        assert!(registry::fused_lane_builder(id).unwrap().is_none(), "{id}");
+    }
+    assert!(registry::fused_lane_builder("Pixel/CartPole-v1").unwrap().is_none());
+}

@@ -128,7 +128,7 @@ fn run_batched_executor_reports_lane_throughput() {
         "--executor", "pool", "--threads", "2",
     ]);
     assert!(ok, "{stdout}\n{stderr}");
-    assert!(stdout.contains("[pool x 8 lanes]"), "{stdout}");
+    assert!(stdout.contains("[pool x 8 lanes, fused kernel]"), "{stdout}");
     assert!(stdout.contains("8000 lane-steps"), "{stdout}");
     assert!(stdout.contains("steps/s"), "{stdout}");
 }
@@ -148,7 +148,7 @@ fn run_honors_executor_config_file() {
     ]);
     assert!(ok, "{stdout}\n{stderr}");
     // The executor block alone must select the pooled batched path.
-    assert!(stdout.contains("[pool x 4 lanes]"), "{stdout}");
+    assert!(stdout.contains("[pool x 4 lanes, fused kernel]"), "{stdout}");
     assert!(stdout.contains("4000 lane-steps"), "{stdout}");
     let _ = std::fs::remove_dir_all(&dir);
 }
@@ -161,7 +161,7 @@ fn run_mixture_spec_selects_batched_path_with_spec_lanes() {
     ]);
     assert!(ok, "{stdout}\n{stderr}");
     // 5 lanes come from the spec, not --lanes.
-    assert!(stdout.contains("[pool x 5 lanes]"), "{stdout}");
+    assert!(stdout.contains("[pool x 5 lanes, fused kernel]"), "{stdout}");
     assert!(stdout.contains("500 lane-steps"), "{stdout}");
 }
 
@@ -172,7 +172,7 @@ fn run_mixture_spec_ignores_lanes_flag_with_a_note() {
         "--lanes", "64",
     ]);
     assert!(ok, "{stdout}\n{stderr}");
-    assert!(stdout.contains("x 4 lanes]"), "{stdout}");
+    assert!(stdout.contains("x 4 lanes, fused kernel]"), "{stdout}");
     assert!(stderr.contains("--lanes is ignored"), "{stderr}");
 }
 
@@ -214,7 +214,7 @@ fn run_register_script_builds_heterogeneous_pool_without_recompiling() {
     ]);
     assert!(ok, "{stdout}\n{stderr}");
     assert!(stderr.contains("registered Script/MyEnv"), "{stderr}");
-    assert!(stdout.contains("x 12 lanes]"), "{stdout}");
+    assert!(stdout.contains("x 12 lanes, fused kernel]"), "{stdout}");
     assert!(stdout.contains("1200 lane-steps"), "{stdout}");
     assert!(stdout.contains("steps/s"), "{stdout}");
 }
@@ -288,6 +288,56 @@ fn run_honors_config_wrappers_block() {
     let episodes = episode_count(&stdout);
     assert!(episodes >= 80, "{stdout}");
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn run_kernel_flag_flips_the_stepping_path() {
+    // Same workload on both kernels: identical counts (bit-equality is
+    // pinned at the library level), distinct report labels.
+    let run = |kernel: &str| {
+        let (stdout, stderr, ok) = cairl(&[
+            "run", "--env", "CartPole-v1", "--steps", "4000", "--lanes", "4",
+            "--executor", "pool", "--threads", "2", "--kernel", kernel,
+        ]);
+        assert!(ok, "{stdout}\n{stderr}");
+        assert!(
+            stdout.contains(&format!("[pool x 4 lanes, {kernel} kernel]")),
+            "{stdout}"
+        );
+        episode_count(&stdout)
+    };
+    assert_eq!(run("scalar"), run("fused"));
+
+    let (_, stderr, ok) = cairl(&[
+        "run", "--env", "CartPole-v1", "--steps", "100", "--lanes", "2",
+        "--kernel", "warp",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("warp"), "{stderr}");
+}
+
+#[test]
+fn envs_json_dumps_the_registry() {
+    for cmd in ["envs", "list-envs"] {
+        let (stdout, _, ok) = cairl(&[cmd, "--json"]);
+        assert!(ok);
+        assert!(stdout.trim_start().starts_with('{'), "{cmd}: {stdout}");
+        for needle in [
+            "\"schema\":\"cairl-envs/v1\"",
+            "\"id\":\"CartPole-v1\"",
+            "\"batch_capable\":true",
+            "\"batch_capable\":false",
+            "\"max_steps\":500",
+            "TimeLimit(500)",
+        ] {
+            assert!(stdout.contains(needle), "{cmd}: missing {needle}\n{stdout}");
+        }
+    }
+    // Without --json the human listing is unchanged.
+    let (stdout, _, ok) = cairl(&["envs"]);
+    assert!(ok);
+    assert!(stdout.contains("CartPole-v1"));
+    assert!(!stdout.trim_start().starts_with('{'));
 }
 
 #[test]
