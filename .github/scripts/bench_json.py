@@ -37,14 +37,20 @@ def main() -> int:
     }
 
     kernels: set[str] = set()
+    topologies: set[str] = set()
     for csv_path in sorted(results_dir.glob("*.csv")):
         with csv_path.open(newline="") as fh:
             rows = list(csv.DictReader(fh))
         doc["tables"][csv_path.stem] = rows
         kernels.update(row["kernel"] for row in rows if row.get("kernel"))
+        topologies.update(row["topology"] for row in rows if row.get("topology"))
     # Which stepping kernels the bench rows cover (scalar/fused), so the
     # trend tooling and humans compare like against like across runs.
     doc["kernel_modes"] = sorted(kernels)
+    # Which execution topologies the rows cover ("local" vs "shard-N"):
+    # the trend tooling uses its presence to tell whether a previous
+    # artifact predates the sharded rows entirely.
+    doc["topologies"] = sorted(topologies)
 
     log_path = results_dir / "bench_smoke.log"
     if log_path.exists():
@@ -58,9 +64,10 @@ def main() -> int:
     n_tables = len(doc["tables"])
     n_lines = len(doc["steps_per_sec_lines"])
     modes = ",".join(doc["kernel_modes"]) or "none"
+    topos = ",".join(doc["topologies"]) or "none"
     print(
         f"wrote {out_path}: {n_tables} tables, {n_lines} steps/sec lines, "
-        f"kernel modes: {modes}"
+        f"kernel modes: {modes}, topologies: {topos}"
     )
     return 0
 

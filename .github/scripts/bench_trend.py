@@ -42,8 +42,14 @@ def throughput(line: str) -> float | None:
         return None
 
 
-def load_lines(path: Path) -> dict[str, float]:
+def load_doc(path: Path) -> dict:
     doc = json.loads(path.read_text())
+    if not isinstance(doc, dict):
+        raise ValueError(f"{path}: expected a JSON object, got {type(doc).__name__}")
+    return doc
+
+
+def lines_table(doc: dict) -> dict[str, float]:
     table: dict[str, float] = {}
     for line in doc.get("steps_per_sec_lines", []):
         value = throughput(line)
@@ -52,6 +58,12 @@ def load_lines(path: Path) -> dict[str, float]:
             # stable without inventing per-line identifiers.
             table[normalise(line)] = value
     return table
+
+
+def is_shard_row(key: str) -> bool:
+    """Sharded bench rows carry 'shard' in their label (fig1_console
+    prints `EnvPool shard-2 (...) ... steps/s`)."""
+    return "shard" in key.lower()
 
 
 def find_previous(arg: Path) -> Path | None:
@@ -75,7 +87,8 @@ def main() -> int:
         return 2
 
     current_path = Path(args[0])
-    current = load_lines(current_path)
+    current_doc = load_doc(current_path)
+    current = lines_table(current_doc)
 
     previous_path = find_previous(Path(args[1]))
     if previous_path is None:
@@ -86,7 +99,8 @@ def main() -> int:
         )
         return 0
     try:
-        previous = load_lines(previous_path)
+        previous_doc = load_doc(previous_path)
+        previous = lines_table(previous_doc)
     except (OSError, ValueError, AttributeError, TypeError) as err:
         # ValueError covers json.JSONDecodeError; AttributeError/TypeError
         # cover well-formed JSON of the wrong shape (e.g. a bare null or
@@ -96,6 +110,20 @@ def main() -> int:
             f"{previous_path} is unreadable ({err}) — skipping comparison"
         )
         return 0
+
+    # Sharded rows (the `topology` column) only exist from the shard-PR
+    # onward.  A previous artifact that predates the field has no
+    # baseline for them — drop the current shard rows from the pairing
+    # and say so, instead of silently reporting fewer shared workloads.
+    if current_doc.get("topologies") and "topologies" not in previous_doc:
+        n_shard = sum(1 for key in current if is_shard_row(key))
+        if n_shard:
+            print(
+                "::notice title=bench trend::previous BENCH_ci.json predates "
+                f"the topology field — skipping {n_shard} sharded row(s) "
+                "that have no baseline yet (they compare from the next run)"
+            )
+            current = {k: v for k, v in current.items() if not is_shard_row(k)}
 
     shared = sorted(set(current) & set(previous))
     print(
@@ -111,8 +139,13 @@ def main() -> int:
         if delta <= -threshold:
             regressions += 1
             marker = "  <-- REGRESSION"
+            title = "bench throughput regression"
+            if is_shard_row(key):
+                # Transport overhead regressions get their own label so
+                # shard-layer changes are attributable at a glance.
+                title = "sharded bench throughput regression"
             print(
-                f"::warning title=bench throughput regression::"
+                f"::warning title={title}::"
                 f"{key.strip()} dropped {-delta:.0f}% "
                 f"({old:.0f} -> {new:.0f} steps/s)"
             )

@@ -60,7 +60,15 @@ fn executor_comparison() {
 
     let mut log = CsvLogger::create(
         std::path::Path::new("results/fig1_executors.csv"),
-        &["executor", "kernel", "threads", "lanes", "steps_per_lane", "steps_per_sec"],
+        &[
+            "executor",
+            "kernel",
+            "threads",
+            "lanes",
+            "steps_per_lane",
+            "steps_per_sec",
+            "topology",
+        ],
     )
     .expect("create results csv");
 
@@ -83,6 +91,7 @@ fn executor_comparison() {
         lanes.to_string(),
         steps_per_lane.to_string(),
         format!("{seq:.0}"),
+        "local".into(),
     ])
     .unwrap();
 
@@ -117,6 +126,7 @@ fn executor_comparison() {
                 lanes.to_string(),
                 steps_per_lane.to_string(),
                 format!("{tput:.0}"),
+                "local".into(),
             ])
             .unwrap();
             if kind == ExecutorKind::PoolSync && threads >= 4 {
@@ -155,6 +165,7 @@ fn executor_comparison() {
             lanes.to_string(),
             steps_per_lane.to_string(),
             format!("{tput:.0}"),
+            "local".into(),
         ])
         .unwrap();
     }
@@ -183,6 +194,7 @@ fn executor_comparison() {
         lanes.to_string(),
         steps_per_lane.to_string(),
         format!("{free:.0}"),
+        "local".into(),
     ])
     .unwrap();
 
@@ -216,6 +228,7 @@ fn executor_comparison() {
             lanes.to_string(),
             steps_per_lane.to_string(),
             format!("{tput:.0}"),
+            "local".into(),
         ])
         .unwrap();
     }
@@ -243,8 +256,14 @@ fn executor_comparison() {
         lanes.to_string(),
         steps_per_lane.to_string(),
         format!("{mix_fused:.0}"),
+        "local".into(),
     ])
     .unwrap();
+
+    // Sharded row: the same CartPole workload through two in-process
+    // `cairl serve` shards over Unix sockets — BENCH_ci.json starts
+    // tracking transport overhead per PR (topology column).
+    shard_rows(&mut log, seq, lanes, steps_per_lane, trials);
 
     log.flush().unwrap();
     println!("rows -> results/fig1_executors.csv");
@@ -266,6 +285,67 @@ fn executor_comparison() {
     } else {
         println!("(only {cores} cores: pooled-beats-sequential assert skipped)");
     }
+}
+
+/// The 2-shard Unix-socket row: spin up two shard daemons, connect a
+/// `ShardedEnvPool` and run the standard batched workload.  The label
+/// carries "shard" so `bench_trend.py` can pair (and, for older
+/// baselines, skip) sharded rows explicitly.
+#[cfg(unix)]
+fn shard_rows(log: &mut CsvLogger, seq: f64, lanes: usize, steps_per_lane: u64, trials: u64) {
+    use cairl::shard::{ServeConfig, ShardServer, ShardedEnvPool};
+
+    let shards = 2usize;
+    let mut addrs = Vec::new();
+    let mut handles = Vec::new();
+    for i in 0..shards {
+        let path = std::env::temp_dir().join(format!(
+            "cairl-bench-shard-{}-{i}.sock",
+            std::process::id()
+        ));
+        let config = ServeConfig {
+            threads: 2,
+            ..ServeConfig::new("CartPole-v1")
+        };
+        let server = ShardServer::bind(&format!("unix://{}", path.display()), config)
+            .expect("bind bench shard");
+        addrs.push(server.local_addr());
+        handles.push(server.spawn());
+    }
+
+    let mut costs = std::collections::BTreeMap::new();
+    costs.insert("CartPole-v1".to_string(), 1.0);
+    let tput = (0..trials)
+        .map(|trial| {
+            let mut pool =
+                ShardedEnvPool::connect_with_costs(&addrs, "CartPole-v1", lanes, trial, &costs)
+                    .expect("connect bench shards");
+            run_batched_workload(&mut pool, steps_per_lane, trial).throughput
+        })
+        .fold(0.0, f64::max);
+    println!(
+        "{:<26} {tput:>12.0} steps/s  ({:.2}x sequential, unix transport)",
+        format!("EnvPool shard-{shards} (in-proc)"),
+        tput / seq
+    );
+    log.row(&[
+        format!("shard-{shards}"),
+        "fused".into(),
+        "2".into(),
+        lanes.to_string(),
+        steps_per_lane.to_string(),
+        format!("{tput:.0}"),
+        format!("shard-{shards}"),
+    ])
+    .unwrap();
+    for handle in handles {
+        handle.shutdown();
+    }
+}
+
+#[cfg(not(unix))]
+fn shard_rows(_log: &mut CsvLogger, _seq: f64, _lanes: usize, _steps_per_lane: u64, _trials: u64) {
+    println!("(non-unix host: shard-2 unix-socket row skipped)");
 }
 
 fn main() {

@@ -140,6 +140,12 @@ pub struct ExecutorSettings {
     /// `"scalar"` (per-lane dispatch, the A/B baseline) — `cairl run
     /// --kernel` overrides it.
     pub kernel: String,
+    /// Remote shard addresses (`"unix:///tmp/s0.sock"` /
+    /// `"tcp://host:port"`).  Non-empty routes batched workloads
+    /// through a [`ShardedEnvPool`](crate::shard::ShardedEnvPool)
+    /// instead of a local executor; `kind`/`threads`/`kernel` then
+    /// apply on the serving side.  `cairl run --shard` overrides it.
+    pub shards: Vec<String>,
 }
 
 impl Default for ExecutorSettings {
@@ -149,6 +155,7 @@ impl Default for ExecutorSettings {
             lanes: 1,
             threads: 0,
             kernel: KernelMode::default().label().into(),
+            shards: Vec::new(),
         }
     }
 }
@@ -198,6 +205,13 @@ impl ExecutorSettings {
         }
         if let Some(s) = v.get("kernel").and_then(Value::as_str) {
             self.kernel = s.to_string();
+        }
+        if let Some(items) = v.get("shards").and_then(Value::as_array) {
+            self.shards = items
+                .iter()
+                .filter_map(Value::as_str)
+                .map(str::to_string)
+                .collect();
         }
     }
 }
@@ -313,7 +327,7 @@ impl ExperimentConfig {
              \"memory_size\": {},\n    \"learn_start\": {},\n    \"train_every\": {},\n    \
              \"max_steps\": {},\n    \"solve_return\": {},\n    \"solve_window\": {}\n  \
              }},\n  \"executor\": {{\n    \"kind\": \"{}\",\n    \"lanes\": {},\n    \
-             \"threads\": {},\n    \"kernel\": \"{}\"\n  }}\n}}",
+             \"threads\": {},\n    \"kernel\": \"{}\",\n    \"shards\": [{}]\n  }}\n}}",
             self.env,
             wrappers,
             self.agent,
@@ -335,6 +349,7 @@ impl ExperimentConfig {
             self.executor.lanes,
             self.executor.threads,
             self.executor.kernel,
+            self.executor.shards.iter().map(|s| format!("{s:?}")).collect::<Vec<_>>().join(", "),
         )
     }
 }
@@ -453,6 +468,22 @@ mod tests {
         let spec = MixtureSpec::parse(&cfg.env).unwrap();
         assert_eq!(spec.total_lanes(), 48);
         assert!(cfg.executor.to_kind().is_ok());
+    }
+
+    #[test]
+    fn parses_and_renders_shard_addresses() {
+        let cfg = ExperimentConfig::parse(
+            r#"{"executor": {"kind": "pool", "shards": ["unix:///tmp/s0.sock", "tcp://10.0.0.2:7000"]}}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.executor.shards,
+            vec!["unix:///tmp/s0.sock".to_string(), "tcp://10.0.0.2:7000".to_string()]
+        );
+        let back = ExperimentConfig::parse(&cfg.render()).unwrap();
+        assert_eq!(back, cfg);
+        // Default: no shards, local execution.
+        assert!(ExperimentConfig::parse("{}").unwrap().executor.shards.is_empty());
     }
 
     #[test]

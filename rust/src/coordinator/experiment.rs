@@ -7,7 +7,9 @@
 
 use std::time::{Duration, Instant};
 
-use crate::coordinator::pool::{AsyncEnvPool, BatchedExecutor, EnvPool, LaneGroupSpec, LaneSpec};
+use crate::coordinator::pool::{
+    AsyncEnvPool, BatchedExecutor, EnvPool, LaneGroupSpec, LaneSpec, RandomRollout,
+};
 use crate::coordinator::registry::{self, MixtureSpec};
 use crate::coordinator::vec_env::VecEnv;
 use crate::core::batch::{DynBatchEnv, ScalarBatch};
@@ -38,6 +40,13 @@ pub struct SteppingResult {
     pub elapsed: Duration,
     /// Steps per second.
     pub throughput: f64,
+    /// Undiscounted return of every episode that finished, in
+    /// deterministic completion order (step-major, lane-minor for
+    /// batched workloads) — the seed-parity log `cairl run
+    /// --returns-log` writes and the CI shard-smoke job diffs against
+    /// the local executor.  Empty for free-running rollouts, which
+    /// tally counts worker-side without reporting per-episode returns.
+    pub episode_returns: Vec<f32>,
 }
 
 /// Run `steps` random-action steps on `env` (auto-reset), optionally
@@ -56,6 +65,8 @@ pub fn run_stepping_workload(
     env.seed(seed);
     env.reset_into(&mut obs);
     let mut episodes = 0u64;
+    let mut episode_returns = Vec::new();
+    let mut ret = 0.0f32;
     let start = Instant::now();
     for _ in 0..steps {
         let a = space.sample(&mut rng);
@@ -68,8 +79,11 @@ pub fn run_stepping_workload(
                 hw.readback(&fb);
             }
         }
+        ret += t.reward;
         if t.done || t.truncated {
             episodes += 1;
+            episode_returns.push(ret);
+            ret = 0.0;
             env.reset_into(&mut obs);
         }
     }
@@ -79,6 +93,7 @@ pub fn run_stepping_workload(
         episodes,
         elapsed,
         throughput: steps as f64 / elapsed.as_secs_f64(),
+        episode_returns,
     }
 }
 
@@ -276,9 +291,12 @@ fn lane_groups_for(
     let mut groups = Vec::with_capacity(merged.len());
     for (id, count) in merged {
         // An extra wrapper chain wraps every lane *outside* the
-        // registered spec, which no fused kernel can absorb.
-        let fused = if kernel == KernelMode::Fused && wrappers.is_empty() {
-            registry::fused_lane_builder(&id)?
+        // registered spec; the batch hook sees the full effective stack
+        // and absorbs what it can (a trailing NormalizeObs/RewardScale
+        // folds into the kernel's affine epilogue) — anything longer
+        // forces the scalar fallback.
+        let fused = if kernel == KernelMode::Fused {
+            registry::fused_lane_builder_with(&id, wrappers)?
         } else {
             None
         };
@@ -309,6 +327,36 @@ fn lane_groups_for(
         groups.push(group);
     }
     Ok(groups)
+}
+
+/// Build a **sync** [`EnvPool`] directly (not boxed) for one shard of a
+/// larger lane space: lanes seed `global_base + first_lane + local`,
+/// and the free-running rollout draws lane action streams from the
+/// *global* lane ids, so both lockstep trajectories and
+/// [`EnvPool::random_rollout`] counts are bit-identical to the
+/// equivalent local pool.  `first_lane = 0` is exactly the local build
+/// — the `cairl serve` daemon calls this per connection.
+pub fn build_env_pool_shard(
+    env_spec: &str,
+    lanes: usize,
+    threads: usize,
+    global_base: u64,
+    first_lane: usize,
+    kernel: KernelMode,
+) -> Result<EnvPool> {
+    let entries: Vec<(String, usize)> = if MixtureSpec::is_mixture(env_spec) {
+        MixtureSpec::parse(env_spec)?.entries().to_vec()
+    } else {
+        registry::validate(env_spec)?;
+        vec![(env_spec.to_string(), lanes.max(1))]
+    };
+    let groups = lane_groups_for(&entries, &[], kernel)?;
+    Ok(EnvPool::from_groups_with_origin(
+        groups,
+        global_base + first_lane as u64,
+        threads,
+        (global_base, first_lane),
+    ))
 }
 
 /// Build a heterogeneous executor over a parsed [`MixtureSpec`]: lane
@@ -374,15 +422,24 @@ pub fn run_batched_workload(
     let mut actions: Vec<Action> = Vec::with_capacity(n);
     exec.reset_into(&mut obs);
     let mut episodes = 0u64;
+    let mut episode_returns = Vec::new();
+    let mut lane_return = vec![0.0f32; n];
     let start = Instant::now();
     for _ in 0..steps_per_lane {
         actions.clear();
         actions.extend(specs.iter().map(|s| s.action_space.sample(&mut rng)));
         exec.step_into(&actions, &mut obs, &mut transitions);
-        episodes += transitions
-            .iter()
-            .filter(|t| t.done || t.truncated)
-            .count() as u64;
+        // Lane order inside a step is fixed, so the completion log is
+        // deterministic for a given seed — identical on every executor
+        // kind, kernel mode and shard layout.
+        for (acc, t) in lane_return.iter_mut().zip(&transitions) {
+            *acc += t.reward;
+            if t.done || t.truncated {
+                episodes += 1;
+                episode_returns.push(*acc);
+                *acc = 0.0;
+            }
+        }
     }
     let elapsed = start.elapsed();
     let steps = steps_per_lane * n as u64;
@@ -391,16 +448,19 @@ pub fn run_batched_workload(
         episodes,
         elapsed,
         throughput: steps as f64 / elapsed.as_secs_f64(),
+        episode_returns,
     }
 }
 
-/// Free-running random-action workload on the sync pool: the whole
-/// rollout executes worker-side behind **one** barrier
-/// ([`EnvPool::random_rollout`]), with the aggregate step *and* episode
-/// counts folded into the standard [`SteppingResult`] reporting.  This
-/// replaces the old `parallel_random_steps` free function, which
-/// reported bare step counts only.
-pub fn run_random_workload(pool: &mut EnvPool, steps_per_lane: u64) -> SteppingResult {
+/// Free-running random-action workload on any [`RandomRollout`]
+/// executor: the whole rollout runs without per-step coordination —
+/// worker-side behind **one** barrier on the sync [`EnvPool`], and
+/// behind **one frame per shard** on a
+/// [`ShardedEnvPool`](crate::shard::ShardedEnvPool) — with the
+/// aggregate step *and* episode counts folded into the standard
+/// [`SteppingResult`] reporting.  Counts are identical across thread
+/// counts and shard layouts (global per-lane action streams).
+pub fn run_random_workload(pool: &mut dyn RandomRollout, steps_per_lane: u64) -> SteppingResult {
     let start = Instant::now();
     let counts = pool.random_rollout(steps_per_lane);
     let elapsed = start.elapsed();
@@ -409,6 +469,7 @@ pub fn run_random_workload(pool: &mut EnvPool, steps_per_lane: u64) -> SteppingR
         episodes: counts.episodes,
         elapsed,
         throughput: counts.steps as f64 / elapsed.as_secs_f64(),
+        episode_returns: Vec::new(),
     }
 }
 

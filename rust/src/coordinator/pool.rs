@@ -316,6 +316,19 @@ pub struct RolloutCounts {
     pub episodes: u64,
 }
 
+/// Executors that can run a whole free-running random workload on their
+/// own (no per-step coordination) — [`EnvPool`] worker-side, and
+/// [`ShardedEnvPool`](crate::shard::ShardedEnvPool) with one frame per
+/// shard.  Lane `i` draws actions from the dedicated stream
+/// `Pcg32::new(base_seed ^ 0xabcd, i + 1)` where `i` is the *global*
+/// lane id, so counts are identical across thread counts, kernels and
+/// shard layouts.
+pub trait RandomRollout {
+    /// Run `steps_per_lane` uniform-random steps on every lane,
+    /// returning aggregate step and episode counts.
+    fn random_rollout(&mut self, steps_per_lane: u64) -> RolloutCounts;
+}
+
 /// Iterations of `spin_loop` before a waiter starts yielding the core.
 const SPIN_LIMIT: u32 = 1 << 12;
 
@@ -410,6 +423,13 @@ pub struct EnvPool {
     base_seed: u64,
 }
 
+/// The free-running rollout's action-stream origin: the global base
+/// seed and this pool's first global lane.  A plain local pool is
+/// `(base_seed, 0)`; a shard hosting lanes `[first, first + n)` of a
+/// larger pool passes `(global_base, first)` so its lanes draw the
+/// exact streams they would draw locally.
+type RolloutOrigin = (u64, usize);
+
 impl EnvPool {
     /// Build a homogeneous pool of `n` lanes across up to `threads`
     /// workers; lane `i` is seeded `base_seed + i` (the same rule as
@@ -459,7 +479,14 @@ impl EnvPool {
         let (specs, padded) = lane_layout(&envs, &ids);
 
         let chunk = n.div_ceil(threads.clamp(1, n));
-        EnvPool::spawn(scalar_chunks(envs, chunk), specs, padded, base_seed, chunk)
+        EnvPool::spawn(
+            scalar_chunks(envs, chunk),
+            specs,
+            padded,
+            base_seed,
+            chunk,
+            (base_seed, 0),
+        )
     }
 
     /// Build a pool from a lane-group plan — the fused-kernel
@@ -471,11 +498,27 @@ impl EnvPool {
     /// a group split across worker chunks is rebuilt per sub-range, so
     /// trajectories are thread-count and kernel invariant.
     pub fn from_groups(groups: Vec<LaneGroupSpec>, base_seed: u64, threads: usize) -> EnvPool {
+        EnvPool::from_groups_with_origin(groups, base_seed, threads, (base_seed, 0))
+    }
+
+    /// [`EnvPool::from_groups`] for a pool that is one **shard** of a
+    /// larger lane space: `origin = (global_base, first_lane)` tells the
+    /// free-running rollout to draw lane action streams from the global
+    /// lane ids, so a sharded [`random_rollout`](EnvPool::random_rollout)
+    /// tallies exactly what the equivalent local pool would.  Lane
+    /// seeding is unchanged (`base_seed + local_lane`; the caller passes
+    /// `base_seed = global_base + first_lane`).
+    pub fn from_groups_with_origin(
+        groups: Vec<LaneGroupSpec>,
+        base_seed: u64,
+        threads: usize,
+        origin: RolloutOrigin,
+    ) -> EnvPool {
         let n: usize = groups.iter().map(|g| g.lanes()).sum();
         assert!(n > 0, "EnvPool needs at least one lane");
         let chunk = n.div_ceil(threads.clamp(1, n));
         let (built, specs, padded) = materialize_groups(groups, base_seed, chunk);
-        EnvPool::spawn(built, specs, padded, base_seed, chunk)
+        EnvPool::spawn(built, specs, padded, base_seed, chunk, origin)
     }
 
     /// Spawn one worker per `chunk`-wide lane range, handing it the
@@ -487,6 +530,7 @@ impl EnvPool {
         padded: usize,
         base_seed: u64,
         chunk: usize,
+        origin: RolloutOrigin,
     ) -> EnvPool {
         let n = specs.len();
         let shared = Arc::new(SyncShared {
@@ -506,7 +550,7 @@ impl EnvPool {
             let shared_w = Arc::clone(&shared);
             let handle = std::thread::Builder::new()
                 .name(format!("envpool-{first}"))
-                .spawn(move || sync_worker(shared_w, worker_groups, padded, base_seed))
+                .spawn(move || sync_worker(shared_w, worker_groups, padded, origin))
                 .expect("spawn pool worker");
             handles.push(handle);
         }
@@ -595,6 +639,12 @@ impl EnvPool {
     }
 }
 
+impl RandomRollout for EnvPool {
+    fn random_rollout(&mut self, steps_per_lane: u64) -> RolloutCounts {
+        EnvPool::random_rollout(self, steps_per_lane)
+    }
+}
+
 impl BatchedExecutor for EnvPool {
     fn num_lanes(&self) -> usize {
         self.n
@@ -660,7 +710,7 @@ fn sync_worker(
     shared: Arc<SyncShared>,
     mut groups: Vec<BuiltGroup>,
     padded: usize,
-    base_seed: u64,
+    origin: RolloutOrigin,
 ) {
     let mut last_seq = 0u64;
     loop {
@@ -674,7 +724,7 @@ fn sync_worker(
         let cmd = unsafe { *shared.cmd.get() };
         let shutdown = matches!(cmd, Cmd::Shutdown);
         let ok = catch_unwind(AssertUnwindSafe(|| {
-            run_cmd(cmd, &mut groups, padded, base_seed, &shared);
+            run_cmd(cmd, &mut groups, padded, origin, &shared);
         }))
         .is_ok();
         if !ok {
@@ -696,7 +746,7 @@ fn run_cmd(
     cmd: Cmd,
     groups: &mut [BuiltGroup],
     padded: usize,
-    base_seed: u64,
+    origin: RolloutOrigin,
     shared: &SyncShared,
 ) {
     match cmd {
@@ -748,8 +798,8 @@ fn run_cmd(
                 episodes += batch_random_steps(
                     group.batch.as_mut(),
                     steps_per_lane,
-                    base_seed,
-                    group.lane_start,
+                    origin.0,
+                    origin.1 + group.lane_start,
                 );
             }
             // Published to the coordinator by the Release ack in
@@ -805,6 +855,20 @@ impl SlotBlock {
         std::slice::from_raw_parts_mut(
             (self.ptr as *mut f32).add(lane * self.padded),
             self.padded,
+        )
+    }
+
+    /// Contiguous slots of lanes `[first, first + lanes)` as one strided
+    /// block — the group-drain fast path writes a whole `step_batch`
+    /// result here in place.
+    ///
+    /// SAFETY: the caller must own **every** lane in the range per the
+    /// protocol above.
+    #[allow(clippy::mut_from_ref)] // interior mutability via the ownership protocol
+    unsafe fn range_mut(&self, first: usize, lanes: usize) -> &mut [f32] {
+        std::slice::from_raw_parts_mut(
+            (self.ptr as *mut f32).add(first * self.padded),
+            lanes * self.padded,
         )
     }
 }
@@ -1274,9 +1338,23 @@ impl Drop for AsyncEnvPool {
     }
 }
 
-/// Body of one async worker: step a lane per message straight into its
-/// shared slot (one [`BatchEnv::step_lane`] call into the owning
-/// group's SoA state), publish `(lane, transition)`, auto-reset inline.
+/// Body of one async worker: buffer the mailbox backlog, then step it.
+///
+/// The baseline behaviour is eager per-lane stepping (one
+/// [`BatchEnv::step_lane`] call straight into the lane's shared slot the
+/// moment its action lands — the ready-queue contract).  On top of
+/// that, the worker **opportunistically drains** whatever has already
+/// accumulated in its mailbox before stepping: when the backlog covers
+/// *all* of a group's lanes — the steady state of a lockstep
+/// coordinator, which posts every action before collecting — the whole
+/// group advances through **one [`BatchEnv::step_batch`] call** into
+/// its contiguous slot range instead of N `step_lane` dispatches, so
+/// fused SoA kernels run their tight columnar loop even in the async
+/// pool.  Partially covered groups step lane by lane as before; either
+/// way the per-lane operations are identical, so trajectories are
+/// unchanged bit for bit (the executor equality suites pin this — the
+/// drain is a pure performance transform).
+///
 /// Env panics poison the ready queue (waking blocked receivers) and
 /// close the mailbox (failing senders) instead of leaving them asleep.
 fn async_worker(
@@ -1303,17 +1381,83 @@ fn async_worker(
         }
     }
 
-    // O(1) message routing: lane -> owning group index, built once (the
-    // worker's lanes are contiguous starting at its first group).
-    let first_lane = groups.first().map_or(0, |g| g.lane_start);
-    let mut lane_group: Vec<usize> = Vec::new();
-    for (gi, group) in groups.iter().enumerate() {
-        lane_group.extend(std::iter::repeat(gi).take(group.batch.lanes()));
+    /// Step every buffered action: one `step_batch` per fully covered
+    /// group, `step_lane` for the rest.  Buffers are caller-owned and
+    /// capacity-reserved, so the steady state allocates nothing.
+    #[allow(clippy::too_many_arguments)]
+    fn flush_pending(
+        groups: &mut [BuiltGroup],
+        first_lane: usize,
+        pending: &mut [Option<Action>],
+        pending_count: &mut usize,
+        act_buf: &mut Vec<Action>,
+        tr_buf: &mut [Transition],
+        ready: &ReadyQueue,
+        slots: &SlotBlock,
+    ) {
+        if *pending_count == 0 {
+            return;
+        }
+        for group in groups {
+            let lanes = group.batch.lanes();
+            let base = group.lane_start - first_lane;
+            let have = pending[base..base + lanes].iter().filter(|a| a.is_some()).count();
+            if have == 0 {
+                continue;
+            }
+            if have == lanes {
+                // Full backlog: the whole group steps as one batch,
+                // straight into its contiguous slot range.
+                act_buf.clear();
+                for slot in &mut pending[base..base + lanes] {
+                    act_buf.push(slot.take().expect("counted above"));
+                }
+                // SAFETY: every lane in the range carried a pending
+                // action, so this worker owns all of their slots.
+                let block = unsafe { slots.range_mut(group.lane_start, lanes) };
+                group.batch.step_batch(act_buf, block, slots.padded, &mut tr_buf[..lanes]);
+                for (k, t) in tr_buf[..lanes].iter().enumerate() {
+                    ready.push(ReadyEntry {
+                        lane: group.lane_start + k,
+                        transition: *t,
+                    });
+                }
+                *pending_count -= lanes;
+            } else {
+                for k in 0..lanes {
+                    let Some(action) = pending[base + k].take() else {
+                        continue;
+                    };
+                    let lane = group.lane_start + k;
+                    // SAFETY: the Step message handed us this lane's slot.
+                    let slot = unsafe { slots.lane_mut(lane) };
+                    let (obs, tail) = slot.split_at_mut(group.batch.lane_obs_dim(k));
+                    let t = group.batch.step_lane(k, &action, obs);
+                    tail.fill(0.0);
+                    ready.push(ReadyEntry {
+                        lane,
+                        transition: t,
+                    });
+                    *pending_count -= 1;
+                }
+            }
+        }
     }
+
+    let first_lane = groups.first().map_or(0, |g| g.lane_start);
+    let total_lanes: usize = groups.iter().map(|g| g.batch.lanes()).sum();
+    // Backlog buffers, allocated once: at most one outstanding action
+    // per lane by the mailbox contract.
+    let mut pending: Vec<Option<Action>> = vec![None; total_lanes];
+    let mut pending_count = 0usize;
+    let mut act_buf: Vec<Action> = Vec::with_capacity(total_lanes);
+    let mut tr_buf: Vec<Transition> = vec![Transition::default(); total_lanes];
 
     let result = catch_unwind(AssertUnwindSafe(|| {
         publish_reset(&mut groups, &ready, &slots);
         loop {
+            // Block for the first message, then drain the backlog
+            // without blocking.
             let msg = {
                 let mut st = mailbox.state.lock().unwrap();
                 loop {
@@ -1326,22 +1470,50 @@ fn async_worker(
                     st = mailbox.cv.wait(st).unwrap();
                 }
             };
-            match msg {
-                WorkerMsg::Reset => publish_reset(&mut groups, &ready, &slots),
-                WorkerMsg::Step { lane, action } => {
-                    let group = &mut groups[lane_group[lane - first_lane]];
-                    let k = lane - group.lane_start;
-                    // SAFETY: the Step message handed us this lane's slot.
-                    let slot = unsafe { slots.lane_mut(lane) };
-                    let (obs, tail) = slot.split_at_mut(group.batch.lane_obs_dim(k));
-                    let t = group.batch.step_lane(k, &action, obs);
-                    tail.fill(0.0);
-                    ready.push(ReadyEntry {
-                        lane,
-                        transition: t,
-                    });
+            let mut next = Some(msg);
+            while let Some(msg) = next {
+                match msg {
+                    WorkerMsg::Reset => {
+                        // Order-preserving: whatever was queued before
+                        // the reset steps first.
+                        flush_pending(
+                            &mut groups,
+                            first_lane,
+                            &mut pending,
+                            &mut pending_count,
+                            &mut act_buf,
+                            &mut tr_buf,
+                            &ready,
+                            &slots,
+                        );
+                        publish_reset(&mut groups, &ready, &slots);
+                    }
+                    WorkerMsg::Step { lane, action } => {
+                        let idx = lane - first_lane;
+                        // Hard assert (not debug): silently overwriting a
+                        // buffered action would lose a transition and
+                        // deadlock the coordinator; panicking poisons the
+                        // pool and surfaces the contract violation.
+                        assert!(
+                            pending[idx].is_none(),
+                            "lane {lane} was sent two actions without a recv"
+                        );
+                        pending[idx] = Some(action);
+                        pending_count += 1;
+                    }
                 }
+                next = mailbox.state.lock().unwrap().q.pop_front();
             }
+            flush_pending(
+                &mut groups,
+                first_lane,
+                &mut pending,
+                &mut pending_count,
+                &mut act_buf,
+                &mut tr_buf,
+                &ready,
+                &slots,
+            );
         }
     }));
     if result.is_err() {

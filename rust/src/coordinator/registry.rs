@@ -30,7 +30,7 @@ use std::collections::BTreeMap;
 use std::fmt;
 use std::sync::{Arc, OnceLock, RwLock};
 
-use crate::core::batch::DynBatchEnv;
+use crate::core::batch::{DynBatchEnv, FusedChain};
 use crate::core::env::DynEnv;
 use crate::core::error::{CairlError, Result};
 use crate::core::json::Value;
@@ -63,7 +63,7 @@ pub type LaneBatchBuilder = Arc<dyn Fn(usize) -> DynBatchEnv + Send + Sync>;
 /// configuration can run on a fused SoA kernel — `Some(builder)` when it
 /// can, `None` to fall back to scalar stepping (e.g. a chain the kernel
 /// cannot absorb; see
-/// [`WrapperSpec::as_fused_time_limit`]).
+/// [`WrapperSpec::as_fused_chain`]).
 pub type BatchHook = Arc<dyn Fn(&Kwargs, &[WrapperSpec]) -> Option<LaneBatchBuilder> + Send + Sync>;
 
 /// One registry entry: everything needed to construct a parameterized,
@@ -149,8 +149,22 @@ impl EnvSpec {
     /// when the spec has no hook or the hook declines this
     /// configuration (the caller falls back to scalar lanes).
     pub fn fused_builder(&self, user: &Kwargs) -> Result<Option<LaneBatchBuilder>> {
+        self.fused_builder_with(user, &[])
+    }
+
+    /// [`EnvSpec::fused_builder`] with an extra wrapper chain appended
+    /// *outside* the spec's own (the `--wrap`/config chain): the hook
+    /// sees the full effective stack, so an absorbable extra layer
+    /// (e.g. a trailing `NormalizeObs`) still fuses instead of forcing
+    /// the scalar fallback.
+    pub fn fused_builder_with(
+        &self,
+        user: &Kwargs,
+        extra: &[WrapperSpec],
+    ) -> Result<Option<LaneBatchBuilder>> {
         let merged = self.checked_kwargs(user)?;
-        let wrappers = self.effective_wrappers(&merged)?;
+        let mut wrappers = self.effective_wrappers(&merged)?;
+        wrappers.extend_from_slice(extra);
         Ok(self.batch.as_ref().and_then(|hook| (**hook)(&merged, &wrappers)))
     }
 
@@ -271,14 +285,17 @@ fn board_size(kw: &Kwargs, id: &str, min: i64) -> Result<usize> {
 }
 
 /// The shared [`BatchHook`] of the classic-control specs: fuse whenever
-/// the effective chain is bare or a single `TimeLimit` (folded into the
-/// kernel's step counter); any other chain falls back to scalar lanes.
+/// the effective chain is absorbable ([`WrapperSpec::as_fused_chain`])
+/// — bare, a single `TimeLimit` (folded into the kernel's step
+/// counter), and/or one trailing `NormalizeObs`/`RewardScale` (folded
+/// into the kernel's affine epilogue); any other chain falls back to
+/// scalar lanes.
 fn classic_batch(
-    build: fn(usize, Option<u32>) -> DynBatchEnv,
+    build: fn(usize, &FusedChain) -> DynBatchEnv,
 ) -> impl Fn(&Kwargs, &[WrapperSpec]) -> Option<LaneBatchBuilder> + Send + Sync + 'static {
     move |_, wrappers| {
-        WrapperSpec::as_fused_time_limit(wrappers)
-            .map(|limit| -> LaneBatchBuilder { Arc::new(move |lanes| build(lanes, limit)) })
+        WrapperSpec::as_fused_chain(wrappers)
+            .map(|chain| -> LaneBatchBuilder { Arc::new(move |lanes| build(lanes, &chain)) })
     }
 }
 
@@ -290,22 +307,24 @@ fn builtin_specs() -> Vec<EnvSpec> {
             Ok(Box::new(CartPole::new()) as DynEnv)
         })
         .with_time_limit(500)
-        .with_batch(classic_batch(|lanes, limit| -> DynBatchEnv {
-            Box::new(CartPole::batch(lanes, limit))
+        .with_batch(classic_batch(|lanes, chain| -> DynBatchEnv {
+            Box::new(CartPole::batch(lanes, chain.max_steps).with_epilogue(chain.epilogue.as_ref()))
         })),
         EnvSpec::new("MountainCar-v0", "native mountain car (200-step limit)", |_| {
             Ok(Box::new(MountainCar::new()) as DynEnv)
         })
         .with_time_limit(200)
-        .with_batch(classic_batch(|lanes, limit| -> DynBatchEnv {
-            Box::new(MountainCar::batch(lanes, limit))
+        .with_batch(classic_batch(|lanes, chain| -> DynBatchEnv {
+            Box::new(
+                MountainCar::batch(lanes, chain.max_steps).with_epilogue(chain.epilogue.as_ref()),
+            )
         })),
         EnvSpec::new("Acrobot-v1", "native acrobot swing-up (500-step limit)", |_| {
             Ok(Box::new(Acrobot::new()) as DynEnv)
         })
         .with_time_limit(500)
-        .with_batch(classic_batch(|lanes, limit| -> DynBatchEnv {
-            Box::new(Acrobot::batch(lanes, limit))
+        .with_batch(classic_batch(|lanes, chain| -> DynBatchEnv {
+            Box::new(Acrobot::batch(lanes, chain.max_steps).with_epilogue(chain.epilogue.as_ref()))
         })),
         EnvSpec::new(
             "Pendulum-v1",
@@ -313,8 +332,8 @@ fn builtin_specs() -> Vec<EnvSpec> {
             |_| Ok(Box::new(Pendulum::new()) as DynEnv),
         )
         .with_time_limit(200)
-        .with_batch(classic_batch(|lanes, limit| -> DynBatchEnv {
-            Box::new(Pendulum::batch(lanes, limit))
+        .with_batch(classic_batch(|lanes, chain| -> DynBatchEnv {
+            Box::new(Pendulum::batch(lanes, chain.max_steps).with_epilogue(chain.epilogue.as_ref()))
         })),
         EnvSpec::new(
             "PendulumDiscrete-v1",
@@ -322,8 +341,11 @@ fn builtin_specs() -> Vec<EnvSpec> {
             |_| Ok(Box::new(Pendulum::discrete()) as DynEnv),
         )
         .with_time_limit(200)
-        .with_batch(classic_batch(|lanes, limit| -> DynBatchEnv {
-            Box::new(Pendulum::batch_discrete(lanes, limit))
+        .with_batch(classic_batch(|lanes, chain| -> DynBatchEnv {
+            Box::new(
+                Pendulum::batch_discrete(lanes, chain.max_steps)
+                    .with_epilogue(chain.epilogue.as_ref()),
+            )
         })),
         EnvSpec::new(
             "LineWars-v0",
@@ -589,8 +611,18 @@ pub fn all_specs() -> Vec<EnvSpec> {
 /// configuration (the executors then fall back to
 /// [`ScalarBatch`](crate::core::batch::ScalarBatch) lanes).
 pub fn fused_lane_builder(spec: &str) -> Result<Option<LaneBatchBuilder>> {
+    fused_lane_builder_with(spec, &[])
+}
+
+/// [`fused_lane_builder`] with an extra wrapper chain applied outside
+/// the registered spec ([`EnvSpec::fused_builder_with`]) — how
+/// `--wrap NormalizeObs` keeps classic-control lanes on the fused path.
+pub fn fused_lane_builder_with(
+    spec: &str,
+    extra: &[WrapperSpec],
+) -> Result<Option<LaneBatchBuilder>> {
     let (id, kwargs) = parse_id_kwargs(spec)?;
-    find_spec(&id)?.fused_builder(&kwargs)
+    find_spec(&id)?.fused_builder_with(&kwargs, extra)
 }
 
 /// The whole registry as a JSON document (`cairl envs --json`): one
@@ -946,6 +978,23 @@ mod tests {
         // Kwargs flow into the fused limit path without erroring.
         assert!(fused_lane_builder("CartPole-v1?max_steps=25").unwrap().is_some());
         assert!(fused_lane_builder("CartPole-v1?bogus=1").is_err());
+        // A single trailing affine wrapper is absorbed as a kernel
+        // epilogue; longer extra chains fall back to scalar lanes.
+        assert!(fused_lane_builder_with("CartPole-v1", &[WrapperSpec::NormalizeObs])
+            .unwrap()
+            .is_some());
+        assert!(fused_lane_builder_with(
+            "MountainCar-v0",
+            &[WrapperSpec::RewardScale { scale: 0.5, shift: 0.0 }],
+        )
+        .unwrap()
+        .is_some());
+        assert!(fused_lane_builder_with(
+            "CartPole-v1",
+            &[WrapperSpec::NormalizeObs, WrapperSpec::NormalizeObs],
+        )
+        .unwrap()
+        .is_none());
         // PixelObs in the chain blocks fusion; script envs have no hook.
         assert!(fused_lane_builder("Pixel/CartPole-v1").unwrap().is_none());
         assert!(fused_lane_builder("Script/CartPole-v1").unwrap().is_none());

@@ -16,8 +16,9 @@
 //! * [`FusedBatch`]`<K>` — the fused kernel: a [`LaneKernel`] owns the
 //!   SoA state columns (one per state variable), and the generic shell
 //!   adds per-lane RNG streams, the registered `TimeLimit` (folded into
-//!   a per-lane step counter instead of a wrapper layer) and inline
-//!   auto-reset.  The classic-control envs each provide a kernel
+//!   a per-lane step counter instead of a wrapper layer), an optional
+//!   trailing `NormalizeObs`/`RewardScale` (folded in as a per-lane
+//!   [`AffineEpilogue`]) and inline auto-reset.  The classic-control envs each provide a kernel
 //!   ([`CartPole::batch`](crate::envs::CartPole::batch),
 //!   [`MountainCar::batch`](crate::envs::MountainCar::batch),
 //!   [`Pendulum::batch`](crate::envs::Pendulum::batch),
@@ -216,6 +217,85 @@ impl<E: Env> BatchEnv for ScalarBatch<E> {
     }
 }
 
+/// The wrapper chains a fused kernel can absorb, as data: an optional
+/// [`TimeLimit`](crate::wrappers::TimeLimit) (folded into the step
+/// counter) plus at most one **trailing affine epilogue**
+/// ([`AffineEpilogue`]).  Produced by
+/// [`WrapperSpec::as_fused_chain`](crate::wrappers::WrapperSpec::as_fused_chain);
+/// consumed by [`FusedBatch::with_epilogue`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct FusedChain {
+    /// `Some(n)` reproduces `TimeLimit(env, n)` exactly.
+    pub max_steps: Option<u32>,
+    /// The trailing affine layer, if any.
+    pub epilogue: Option<AffineEpilogue>,
+}
+
+/// A single trailing per-lane affine wrapper a fused kernel absorbs:
+/// both [`NormalizeObs`](crate::wrappers::NormalizeObs) (a per-dimension
+/// affine map of the observation) and [`RewardScale`]
+/// (crate::wrappers::RewardScale) (an affine map of the reward) are
+/// pure element-wise transforms, so folding them into the kernel's
+/// epilogue reproduces the wrapper stack to the f32 operation (pinned
+/// by `rust/tests/batch_kernel.rs`).  Longer chains fall back to
+/// [`ScalarBatch`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum AffineEpilogue {
+    /// Rescale bounded observation dims to `[-1, 1]` from the kernel's
+    /// observation-space bounds — `NormalizeObs` semantics.
+    NormalizeObs,
+    /// `r' = scale * r + shift` — `RewardScale` semantics.
+    RewardScale { scale: f32, shift: f32 },
+}
+
+/// Per-dimension `(centre, half-range)` affine factors precomputed from
+/// a [`Space`], applied as `(o - centre) / half` — **the** bounded-dim
+/// rescaling arithmetic, shared by the
+/// [`NormalizeObs`](crate::wrappers::NormalizeObs) wrapper and the
+/// fused epilogue so the two can never drift apart (unbounded or
+/// degenerate dims pass through).
+#[derive(Clone, Debug)]
+pub struct ObsAffine {
+    scale: Vec<Option<(f32, f32)>>,
+}
+
+impl ObsAffine {
+    /// Derive the factors from a space's bounds.
+    pub fn from_space(space: &Space) -> ObsAffine {
+        let scale = match space {
+            Space::Box { low, high, .. } => low
+                .iter()
+                .zip(high)
+                .map(|(&lo, &hi)| {
+                    if lo <= f32::MIN || hi >= f32::MAX || hi <= lo {
+                        None
+                    } else {
+                        Some(((lo + hi) * 0.5, (hi - lo) * 0.5))
+                    }
+                })
+                .collect(),
+            Space::Discrete { .. } => vec![None],
+        };
+        ObsAffine { scale }
+    }
+
+    /// Rescale every bounded dimension in place.
+    #[inline]
+    pub fn apply(&self, obs: &mut [f32]) {
+        for (o, s) in obs.iter_mut().zip(&self.scale) {
+            if let Some((centre, half)) = s {
+                *o = (*o - centre) / half;
+            }
+        }
+    }
+
+    /// Whether dimension `i` is rescaled (bounded) — the space-reporting
+    /// half of `NormalizeObs` keys off this.
+    pub fn is_bounded(&self, i: usize) -> bool {
+        self.scale.get(i).is_some_and(|s| s.is_some())
+    }
+}
+
 /// The per-env half of a fused kernel: SoA state columns plus the pure
 /// single-lane physics, with the RNG passed in so [`FusedBatch`] owns
 /// the per-lane streams.  Implementations must reproduce the scalar
@@ -224,6 +304,11 @@ impl<E: Env> BatchEnv for ScalarBatch<E> {
 pub trait LaneKernel {
     /// Observation length (uniform across the group).
     fn obs_dim(&self) -> usize;
+
+    /// The group's observation space — must match the scalar env's
+    /// bounds exactly (the fused `NormalizeObs` epilogue derives its
+    /// affine factors from it).
+    fn observation_space(&self) -> Space;
 
     /// The group's action space.
     fn action_space(&self) -> Space;
@@ -246,7 +331,8 @@ pub trait LaneKernel {
 
 /// The generic fused-group shell: a [`LaneKernel`] plus per-lane RNG
 /// streams, the registered time limit (fused into a step counter — no
-/// wrapper layer, no extra dispatch) and inline auto-reset.
+/// wrapper layer, no extra dispatch), an optional trailing
+/// [`AffineEpilogue`] and inline auto-reset.
 pub struct FusedBatch<K: LaneKernel> {
     kernel: K,
     rngs: Vec<Pcg32>,
@@ -254,6 +340,15 @@ pub struct FusedBatch<K: LaneKernel> {
     /// `Some(n)` reproduces `TimeLimit(env, n)` exactly; `None` runs
     /// the bare dynamics.
     max_steps: Option<u32>,
+    /// Fused `NormalizeObs`: applied to every observation write (reset
+    /// and step, auto-reset included), exactly like the outermost
+    /// wrapper would.
+    obs_affine: Option<ObsAffine>,
+    /// Fused `RewardScale`: `(scale, shift)` applied to every step
+    /// reward after the time-limit flags are set (the wrapper sits
+    /// outside `TimeLimit`, which never touches rewards — the two
+    /// orders are arithmetically identical).
+    reward_affine: Option<(f32, f32)>,
 }
 
 impl<K: LaneKernel> FusedBatch<K> {
@@ -268,7 +363,26 @@ impl<K: LaneKernel> FusedBatch<K> {
             rngs: (0..lanes).map(|_| Pcg32::new(0, stream)).collect(),
             elapsed: vec![0; lanes],
             max_steps,
+            obs_affine: None,
+            reward_affine: None,
         }
+    }
+
+    /// Fold a trailing affine wrapper into the group (builder style):
+    /// `NormalizeObs` precomputes its per-dimension factors from the
+    /// kernel's observation space, `RewardScale` records its `(scale,
+    /// shift)`.  `None` leaves the batch unchanged.
+    pub fn with_epilogue(mut self, epilogue: Option<&AffineEpilogue>) -> FusedBatch<K> {
+        match epilogue {
+            None => {}
+            Some(AffineEpilogue::NormalizeObs) => {
+                self.obs_affine = Some(ObsAffine::from_space(&self.kernel.observation_space()));
+            }
+            Some(AffineEpilogue::RewardScale { scale, shift }) => {
+                self.reward_affine = Some((*scale, *shift));
+            }
+        }
+        self
     }
 
     /// The fused time limit (`None` = no limit).
@@ -300,6 +414,9 @@ impl<K: LaneKernel> BatchEnv for FusedBatch<K> {
     fn reset_lane(&mut self, k: usize, obs: &mut [f32]) {
         self.kernel.reset_lane(k, &mut self.rngs[k], obs);
         self.elapsed[k] = 0;
+        if let Some(affine) = &self.obs_affine {
+            affine.apply(obs);
+        }
     }
 
     fn step_lane(&mut self, k: usize, action: &Action, obs: &mut [f32]) -> Transition {
@@ -312,9 +429,18 @@ impl<K: LaneKernel> BatchEnv for FusedBatch<K> {
                 t.truncated = true;
             }
         }
+        if let Some((scale, shift)) = self.reward_affine {
+            t.reward = t.reward * scale + shift;
+        }
         if t.done || t.truncated {
             self.kernel.reset_lane(k, &mut self.rngs[k], obs);
             self.elapsed[k] = 0;
+        }
+        // One application covers both the step observation and the
+        // auto-reset observation — exactly what the outermost
+        // NormalizeObs wrapper sees in the scalar path.
+        if let Some(affine) = &self.obs_affine {
+            affine.apply(obs);
         }
         t
     }
@@ -462,6 +588,72 @@ mod tests {
         let b = batch_random_steps(&mut scalar, 500, 9, 0);
         assert_eq!(a, b);
         assert!(a > 10, "40-step-capped cartpole over 500 steps/lane: {a}");
+    }
+
+    #[test]
+    fn affine_epilogues_match_the_wrapper_stack_bitwise() {
+        use crate::wrappers::{NormalizeObs, RewardScale};
+        // NormalizeObs outside TimeLimit(15) on MountainCar: bounded
+        // dims rescale on reset, step and auto-reset alike.
+        let lanes = 2;
+        let mut fused = MountainCar::batch(lanes, Some(15))
+            .with_epilogue(Some(&AffineEpilogue::NormalizeObs));
+        fused.seed(11);
+        let mut scalars: Vec<_> = (0..lanes)
+            .map(|k| {
+                let mut e = NormalizeObs::new(TimeLimit::new(MountainCar::new(), 15));
+                e.seed(11 + k as u64);
+                e
+            })
+            .collect();
+        let dim = fused.obs_dim();
+        let mut obs = vec![0.0f32; lanes * dim];
+        let mut tr = vec![Transition::default(); lanes];
+        let mut ref_obs = vec![0.0f32; dim];
+        fused.reset_batch(&mut obs, dim);
+        for (k, e) in scalars.iter_mut().enumerate() {
+            e.reset_into(&mut ref_obs);
+            assert_eq!(&obs[k * dim..(k + 1) * dim], &ref_obs[..]);
+        }
+        for step in 0..60 {
+            let actions: Vec<Action> =
+                (0..lanes).map(|k| Action::Discrete((step + k) % 3)).collect();
+            fused.step_batch(&actions, &mut obs, dim, &mut tr);
+            for (k, e) in scalars.iter_mut().enumerate() {
+                let t = e.step_into(&actions[k], &mut ref_obs);
+                if t.done || t.truncated {
+                    e.reset_into(&mut ref_obs);
+                }
+                assert_eq!(tr[k], t, "lane {k} step {step}");
+                assert_eq!(&obs[k * dim..(k + 1) * dim], &ref_obs[..], "lane {k} step {step}");
+            }
+        }
+
+        // RewardScale outside TimeLimit(10) on CartPole: every reward
+        // (terminating steps included) maps through scale/shift.
+        let mut fused = CartPole::batch(1, Some(10)).with_epilogue(Some(
+            &AffineEpilogue::RewardScale { scale: 2.0, shift: -0.5 },
+        ));
+        fused.seed(4);
+        let mut scalar = RewardScale::new(TimeLimit::new(CartPole::new(), 10), 2.0, -0.5);
+        scalar.seed(4);
+        let dim = fused.obs_dim();
+        let mut obs = vec![0.0f32; dim];
+        let mut tr = vec![Transition::default(); 1];
+        let mut ref_obs = vec![0.0f32; dim];
+        fused.reset_batch(&mut obs, dim);
+        scalar.reset_into(&mut ref_obs);
+        assert_eq!(obs, ref_obs);
+        for step in 0..40 {
+            let actions = vec![Action::Discrete(step % 2)];
+            fused.step_batch(&actions, &mut obs, dim, &mut tr);
+            let t = scalar.step_into(&actions[0], &mut ref_obs);
+            if t.done || t.truncated {
+                scalar.reset_into(&mut ref_obs);
+            }
+            assert_eq!(tr[0], t, "step {step}");
+            assert_eq!(obs, ref_obs, "step {step}");
+        }
     }
 
     #[test]

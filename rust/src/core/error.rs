@@ -20,6 +20,9 @@ pub enum CairlError {
     Vm(String),
     /// Configuration file problems.
     Config(String),
+    /// Shard transport/protocol failures (frame corruption, handshake
+    /// mismatches, a remote shard replying with an error).
+    Shard(String),
     /// Underlying I/O.
     Io(std::io::Error),
 }
@@ -35,6 +38,7 @@ impl fmt::Display for CairlError {
             CairlError::Script(m) => write!(f, "script error: {m}"),
             CairlError::Vm(m) => write!(f, "vm trap: {m}"),
             CairlError::Config(m) => write!(f, "config error: {m}"),
+            CairlError::Shard(m) => write!(f, "shard error: {m}"),
             CairlError::Io(e) => write!(f, "io error: {e}"),
         }
     }

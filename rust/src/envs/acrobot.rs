@@ -152,16 +152,22 @@ impl Default for Acrobot {
     }
 }
 
+/// The Gym observation-space bounds — one definition shared by the
+/// scalar env and the fused lane kernel.
+fn obs_space() -> Space {
+    Space::box1(
+        vec![-1.0, -1.0, -1.0, -1.0, -MAX_VEL_1, -MAX_VEL_2],
+        vec![1.0, 1.0, 1.0, 1.0, MAX_VEL_1, MAX_VEL_2],
+    )
+}
+
 impl Env for Acrobot {
     fn id(&self) -> String {
         "Acrobot-v1".into()
     }
 
     fn observation_space(&self) -> Space {
-        Space::box1(
-            vec![-1.0, -1.0, -1.0, -1.0, -MAX_VEL_1, -MAX_VEL_2],
-            vec![1.0, 1.0, 1.0, 1.0, MAX_VEL_1, MAX_VEL_2],
-        )
+        obs_space()
     }
 
     fn action_space(&self) -> Space {
@@ -213,6 +219,10 @@ pub struct AcrobotLanes {
 impl LaneKernel for AcrobotLanes {
     fn obs_dim(&self) -> usize {
         6
+    }
+
+    fn observation_space(&self) -> Space {
+        obs_space()
     }
 
     fn action_space(&self) -> Space {

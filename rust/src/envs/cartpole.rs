@@ -22,6 +22,17 @@ pub const TAU: f32 = 0.02;
 pub const THETA_THRESHOLD: f32 = 12.0 * 2.0 * std::f32::consts::PI / 360.0;
 pub const X_THRESHOLD: f32 = 2.4;
 
+/// The Gym observation-space bounds — one definition shared by the
+/// scalar env and the fused lane kernel (the fused `NormalizeObs`
+/// epilogue derives its affine factors from these, so the two impls
+/// must never diverge).
+fn obs_space() -> Space {
+    Space::box1(
+        vec![-X_THRESHOLD * 2.0, f32::MIN, -THETA_THRESHOLD * 2.0, f32::MIN],
+        vec![X_THRESHOLD * 2.0, f32::MAX, THETA_THRESHOLD * 2.0, f32::MAX],
+    )
+}
+
 /// The cart-pole balancing task.  Observation `[x, x_dot, theta,
 /// theta_dot]`, actions `{0: push left, 1: push right}`, reward 1 per
 /// step, terminal when `|x| > 2.4` or `|theta| > 12 deg`.
@@ -106,10 +117,7 @@ impl Env for CartPole {
     }
 
     fn observation_space(&self) -> Space {
-        Space::box1(
-            vec![-X_THRESHOLD * 2.0, f32::MIN, -THETA_THRESHOLD * 2.0, f32::MIN],
-            vec![X_THRESHOLD * 2.0, f32::MAX, THETA_THRESHOLD * 2.0, f32::MAX],
-        )
+        obs_space()
     }
 
     fn action_space(&self) -> Space {
@@ -165,6 +173,10 @@ pub struct CartPoleLanes {
 impl LaneKernel for CartPoleLanes {
     fn obs_dim(&self) -> usize {
         4
+    }
+
+    fn observation_space(&self) -> Space {
+        obs_space()
     }
 
     fn action_space(&self) -> Space {

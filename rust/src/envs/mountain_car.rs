@@ -82,16 +82,22 @@ impl Default for MountainCar {
     }
 }
 
+/// The Gym observation-space bounds — one definition shared by the
+/// scalar env and the fused lane kernel.
+fn obs_space() -> Space {
+    Space::box1(
+        vec![MIN_POSITION, -MAX_SPEED],
+        vec![MAX_POSITION, MAX_SPEED],
+    )
+}
+
 impl Env for MountainCar {
     fn id(&self) -> String {
         "MountainCar-v0".into()
     }
 
     fn observation_space(&self) -> Space {
-        Space::box1(
-            vec![MIN_POSITION, -MAX_SPEED],
-            vec![MAX_POSITION, MAX_SPEED],
-        )
+        obs_space()
     }
 
     fn action_space(&self) -> Space {
@@ -144,6 +150,10 @@ pub struct MountainCarLanes {
 impl LaneKernel for MountainCarLanes {
     fn obs_dim(&self) -> usize {
         2
+    }
+
+    fn observation_space(&self) -> Space {
+        obs_space()
     }
 
     fn action_space(&self) -> Space {

@@ -106,6 +106,15 @@ impl Pendulum {
     }
 }
 
+/// The Gym observation-space bounds — one definition shared by the
+/// scalar env and the fused lane kernel.
+fn obs_space() -> Space {
+    Space::box1(
+        vec![-1.0, -1.0, -MAX_SPEED],
+        vec![1.0, 1.0, MAX_SPEED],
+    )
+}
+
 impl Default for Pendulum {
     fn default() -> Self {
         Self::new()
@@ -122,10 +131,7 @@ impl Env for Pendulum {
     }
 
     fn observation_space(&self) -> Space {
-        Space::box1(
-            vec![-1.0, -1.0, -MAX_SPEED],
-            vec![1.0, 1.0, MAX_SPEED],
-        )
+        obs_space()
     }
 
     fn action_space(&self) -> Space {
@@ -190,6 +196,10 @@ impl PendulumLanes {
 impl LaneKernel for PendulumLanes {
     fn obs_dim(&self) -> usize {
         3
+    }
+
+    fn observation_space(&self) -> Space {
+        obs_space()
     }
 
     fn action_space(&self) -> Space {

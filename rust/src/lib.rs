@@ -44,11 +44,21 @@
 //! Inside every executor, contiguous same-spec lanes form **groups**
 //! stepped through one [`core::batch::BatchEnv`] call: the
 //! classic-control envs ship fused SoA kernels (state in parallel
-//! `Vec<f32>` columns, registered `TimeLimit` folded in, bit-identical
-//! to scalar stepping), everything else runs on the
-//! [`core::batch::ScalarBatch`] fallback.  `cairl run --kernel
+//! `Vec<f32>` columns, registered `TimeLimit` — and a single trailing
+//! `NormalizeObs`/`RewardScale`, folded in as a per-lane affine
+//! epilogue — bit-identical to scalar stepping), everything else runs
+//! on the [`core::batch::ScalarBatch`] fallback.  `cairl run --kernel
 //! scalar|fused` flips the mode for A/B benching; see README §"Batch
 //! kernels".
+//!
+//! Executors also scale **out of process**: `cairl serve` hosts any
+//! executor configuration behind a Unix-socket/TCP listener
+//! ([`shard::ShardServer`]) and [`shard::ShardedEnvPool`] is a
+//! `BatchedExecutor` over one or more such shards — same `lane_specs()`
+//! layout, bit-identical trajectories, with mixture components placed
+//! by measured per-env step cost ([`shard::ShardPlan`]).  `cairl run
+//! --shard unix:///tmp/s0.sock` flips a workload from local to remote;
+//! see README §"Sharded execution".
 //!
 //! ## The registry: `EnvSpec`, kwargs, wrapper chains
 //!
@@ -113,6 +123,7 @@ pub mod puzzles;
 pub mod render;
 pub mod runtime;
 pub mod script;
+pub mod shard;
 pub mod tooling;
 pub mod wrappers;
 
@@ -139,6 +150,7 @@ pub mod prelude {
     pub use crate::core::spaces::{Action, Space};
     pub use crate::envs::{Acrobot, CartPole, MountainCar, Pendulum};
     pub use crate::render::Framebuffer;
+    pub use crate::shard::{ServeConfig, ShardPlan, ShardServer, ShardedEnvPool};
     pub use crate::wrappers::{
         apply_wrappers, Flatten, RecordEpisodeStatistics, TimeLimit, WrapperSpec,
     };

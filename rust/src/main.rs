@@ -12,7 +12,7 @@ use cairl::agents::dqn::{DqnAgent, DqnConfig};
 use cairl::coordinator::config::{DqnSettings, ExperimentConfig};
 use cairl::coordinator::experiment::{
     build_executor_with_kernel, run_batched_workload, run_stepping_workload, ExecutorKind,
-    KernelMode, RenderMode,
+    KernelMode, RenderMode, SteppingResult,
 };
 use cairl::coordinator::registry::{self, MixtureSpec};
 use cairl::core::env::Env;
@@ -21,6 +21,7 @@ use cairl::energy::EnergyTracker;
 use cairl::envs::gridrts::{play_match, Bot, HarvestBot, MatchResult, RandomBot, RushBot};
 use cairl::render::Framebuffer;
 use cairl::runtime::Runtime;
+use cairl::shard::{ServeConfig, ShardServer, ShardedEnvPool};
 use cairl::tooling::tournament::{swiss, GameOutcome};
 use cairl::wrappers::{apply_wrappers, WrapperSpec};
 use cairl::{list_envs, make};
@@ -86,6 +87,7 @@ COMMANDS:
   run        --env SPEC --steps N --seed S [--render] [--ascii]
              [--executor vec|pool|pool-async --lanes N --threads T]
              [--kernel scalar|fused]
+             [--shard ADDR[,ADDR...]] [--returns-log FILE]
              [--wrap \"TimeLimit(200),NormalizeObs\"]
              [--register-script NAME=FILE.mpy[,NAME=FILE.mpy...]]
              [--config FILE.json]
@@ -106,7 +108,21 @@ COMMANDS:
                                   per-lane scalar dispatch for A/B benching
                                   (bit-identical either way); FILE.json's
                                   \"executor\" and \"wrappers\" blocks set the
-                                  matching defaults
+                                  matching defaults; --shard routes the batched
+                                  workload through remote `cairl serve` shards
+                                  (cost-aware lane placement, bit-identical to
+                                  the local run of the same SPEC/seed) and
+                                  --returns-log writes every finished episode's
+                                  return, one per line, for seed-parity diffs
+  serve      --env SPEC --lanes N --listen ADDR
+             [--executor vec|pool|pool-async] [--threads T]
+             [--kernel scalar|fused]
+                                  host a batched environment shard: one framed
+                                  stream and one private executor per client on
+                                  a unix:///path.sock or tcp://host:port
+                                  listener; clients (cairl run --shard,
+                                  ShardedEnvPool) may request any registered
+                                  spec — --env is the default for bare Hellos
   train      --env NAME [--seed S] [--max-steps N] [--config FILE.json]
                                   train DQN via the PJRT artifacts
                                   (NAME: cartpole|mountaincar|acrobot|pendulum|multitask)
@@ -116,6 +132,23 @@ COMMANDS:
   energy     --env ID --steps N [--render]
                                   energy/carbon for a stepping workload (Table II)
 ";
+
+/// Honour `--returns-log FILE`: every finished episode's return, one
+/// per line, in the workload's deterministic completion order — the
+/// seed-parity artifact the CI shard-smoke job diffs between a sharded
+/// and a local run.
+fn write_returns_log(args: &Args, r: &SteppingResult) -> Result<()> {
+    let Some(path) = args.opt("returns-log") else {
+        return Ok(());
+    };
+    let mut out = String::with_capacity(r.episode_returns.len() * 8);
+    for ret in &r.episode_returns {
+        out.push_str(&format!("{ret}\n"));
+    }
+    std::fs::write(path, out).with_context(|| format!("--returns-log {path:?}"))?;
+    eprintln!("wrote {} episode returns to {path}", r.episode_returns.len());
+    Ok(())
+}
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -174,10 +207,51 @@ fn main() -> Result<()> {
             };
             let wrap_chain =
                 WrapperSpec::parse_chain(&wrap_src).map_err(|e| anyhow!("{e}"))?;
+            let shard_list: Vec<String> = match args.opt("shard") {
+                Some(spec) => spec
+                    .split(',')
+                    .map(|s| s.trim().to_string())
+                    .filter(|s| !s.is_empty())
+                    .collect(),
+                None => file_cfg.executor.shards.clone(),
+            };
             // A mixture spec always takes the batched path: its per-lane
             // env ids are meaningless to the single-env loop.
             let mixture = MixtureSpec::is_mixture(&env_id);
-            if lanes > 1 || executor != "vec" || mixture {
+            if !shard_list.is_empty() {
+                // Sharded path: the workload runs against remote
+                // `cairl serve` daemons; executor knobs are theirs.
+                if !wrap_chain.is_empty() {
+                    bail!(
+                        "--wrap is not supported with --shard \
+                         (wrapper chains apply on the serving side)"
+                    );
+                }
+                for flag in ["executor", "threads", "kernel"] {
+                    if args.opt(flag).is_some() {
+                        eprintln!(
+                            "note: --{flag} applies to the serving side and is \
+                             ignored by sharded runs"
+                        );
+                    }
+                }
+                let mut exec = ShardedEnvPool::connect(&shard_list, &env_id, lanes, seed)
+                    .map_err(|e| anyhow!("{e}"))?;
+                eprintln!("shard plan: {}", exec.plan().describe());
+                let lanes = cairl::coordinator::pool::BatchedExecutor::num_lanes(&exec);
+                let steps_per_lane = (steps / lanes as u64).max(1);
+                let r = run_batched_workload(&mut exec, steps_per_lane, seed);
+                println!(
+                    "{env_id} [{} shards x {lanes} lanes]: {} lane-steps, \
+                     {} episodes, {:.3}s, {:.0} steps/s",
+                    exec.shards(),
+                    r.steps,
+                    r.episodes,
+                    r.elapsed.as_secs_f64(),
+                    r.throughput
+                );
+                write_returns_log(&args, &r)?;
+            } else if lanes > 1 || executor != "vec" || mixture {
                 // Batched path: flip executors without touching the workload.
                 if args.flag("render") || args.flag("ascii") {
                     eprintln!(
@@ -229,6 +303,7 @@ fn main() -> Result<()> {
                     r.elapsed.as_secs_f64(),
                     r.throughput
                 );
+                write_returns_log(&args, &r)?;
             } else {
                 let env = make(&env_id).map_err(|e| anyhow!("{e}"))?;
                 let mut e = apply_wrappers(env, &wrap_chain);
@@ -245,12 +320,49 @@ fn main() -> Result<()> {
                     r.elapsed.as_secs_f64(),
                     r.throughput
                 );
+                write_returns_log(&args, &r)?;
                 if args.flag("ascii") {
                     let mut fb = Framebuffer::standard();
                     e.render(&mut fb);
                     println!("{}", fb.to_ascii());
                 }
             }
+        }
+        "serve" => {
+            let env_spec = args.str("env", "CartPole-v1");
+            let listen = args.str("listen", "unix:///tmp/cairl-shard.sock");
+            let lanes = args.u64("lanes", 1)?.max(1) as usize;
+            let threads = args.u64("threads", 0)? as usize;
+            let executor = args.str("executor", "pool");
+            let kind = ExecutorKind::parse(&executor).ok_or_else(|| {
+                anyhow!("unknown executor {executor:?} (vec | pool | pool-async)")
+            })?;
+            let kernel_name = args.str("kernel", KernelMode::default().label());
+            let kernel = KernelMode::parse(&kernel_name).ok_or_else(|| {
+                anyhow!("unknown kernel {kernel_name:?} (scalar | fused)")
+            })?;
+            let server = ShardServer::bind(
+                &listen,
+                ServeConfig {
+                    env_spec: env_spec.clone(),
+                    kind,
+                    lanes,
+                    threads,
+                    kernel,
+                },
+            )
+            .map_err(|e| anyhow!("{e}"))?;
+            println!(
+                "serving {env_spec} [{} x {lanes} lanes, {} kernel] on {}",
+                kind.label(),
+                kernel.label(),
+                server.local_addr()
+            );
+            // Make the banner visible to pipes/supervisors before the
+            // accept loop takes over for good.
+            use std::io::Write as _;
+            let _ = std::io::stdout().flush();
+            server.run().map_err(|e| anyhow!("{e}"))?;
         }
         "train" => {
             let env = args.str("env", "cartpole");

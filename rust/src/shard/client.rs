@@ -1,0 +1,392 @@
+//! The client half: [`ShardClient`] (one connection) and
+//! [`ShardedEnvPool`] (a [`BatchedExecutor`] over one or more remote
+//! shards).
+//!
+//! A `ShardedEnvPool` is a drop-in executor: `lane_specs()`,
+//! `obs_dim()`, `reset_into` and `step_into` behave identically to a
+//! local pool over the same spec and seed — including **bit-identical
+//! trajectories**, because each shard seeds its local lane `j` with
+//! `base_seed + first_lane + j` (exactly the seed that lane holds
+//! locally) and placement never reorders lanes
+//! ([`ShardPlan`](crate::shard::plan::ShardPlan) cuts the lane list
+//! contiguously at cost-balanced boundaries).
+//!
+//! Batches pipeline across shards: `step_into` writes every shard's
+//! `Step` frame before reading any `StepResult`, so remote executors
+//! step in parallel and the batch costs one round-trip to the slowest
+//! shard, not the sum.
+//!
+//! **Padded-obs reassembly.**  Each shard pads observations to *its
+//! own* widest lane; the pool-wide padded width can be larger (a shard
+//! holding only `MountainCar-v0` lanes ships 2-wide rows into a 4-wide
+//! pool).  Reassembly copies each lane's true observation into its
+//! global slot and re-zeroes the tail, so mixture consumers see exactly
+//! the local layout.
+//!
+//! Transport failures inside the `BatchedExecutor` surface as panics —
+//! the same contract as a poisoned worker pool (the trait has no error
+//! channel); connect-time problems return [`CairlError`] normally.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::pool::{BatchedExecutor, LaneSpec, RandomRollout, RolloutCounts};
+use crate::coordinator::registry::{self, MixtureSpec};
+use crate::core::env::Transition;
+use crate::core::error::{CairlError, Result};
+use crate::core::spaces::Action;
+use crate::shard::net::{FramedStream, ShardAddr};
+use crate::shard::plan::{calibrate_costs, ShardPlan};
+use crate::shard::proto::{Msg, MsgRef};
+
+fn err(msg: impl Into<String>) -> CairlError {
+    CairlError::Shard(msg.into())
+}
+
+/// One framed connection to a shard daemon, post-handshake.
+pub struct ShardClient {
+    stream: FramedStream,
+    addr: String,
+    specs: Vec<LaneSpec>,
+    padded: usize,
+}
+
+impl ShardClient {
+    /// Dial `addr`, handshake with `spec` (`""` = the daemon's default)
+    /// and the seeding origin, and return the connected client with the
+    /// shard's lane metadata.
+    pub fn connect(
+        addr: &str,
+        spec: &str,
+        base_seed: u64,
+        first_lane: usize,
+    ) -> Result<ShardClient> {
+        let parsed = ShardAddr::parse(addr)?;
+        let mut stream = FramedStream::connect(&parsed)?;
+        stream.send(MsgRef::Hello {
+            spec,
+            base_seed,
+            first_lane: first_lane as u64,
+        })?;
+        match stream.recv()? {
+            Msg::Spec { obs_dim, lane_specs } => Ok(ShardClient {
+                stream,
+                addr: parsed.render(),
+                specs: lane_specs,
+                padded: obs_dim as usize,
+            }),
+            Msg::Error { message } => Err(err(format!("{}: {message}", parsed.render()))),
+            other => Err(err(format!(
+                "{}: expected Spec after Hello, got {other:?}",
+                parsed.render()
+            ))),
+        }
+    }
+
+    /// The dialed address (canonical form).
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// The shard's per-lane metadata (shard-local offsets/padding).
+    pub fn lane_specs(&self) -> &[LaneSpec] {
+        &self.specs
+    }
+
+    /// The shard-local padded observation width.
+    pub fn obs_dim(&self) -> usize {
+        self.padded
+    }
+
+    /// Number of lanes hosted by this shard.
+    pub fn num_lanes(&self) -> usize {
+        self.specs.len()
+    }
+
+    /// Receive one reply, surfacing a server `Error` frame as [`Err`].
+    fn expect_reply(&mut self) -> Result<Msg> {
+        match self.stream.recv()? {
+            Msg::Error { message } => Err(err(format!("{}: {message}", self.addr))),
+            msg => Ok(msg),
+        }
+    }
+
+    /// Write a `Reset` frame (reply read by [`ShardClient::recv_obs`]).
+    pub fn send_reset(&mut self) -> Result<()> {
+        self.stream.send(MsgRef::Reset)
+    }
+
+    /// Write a `Step` frame (reply read by [`ShardClient::recv_step`]).
+    pub fn send_step(&mut self, actions: &[Action]) -> Result<()> {
+        self.stream.send(MsgRef::Step { actions })
+    }
+
+    /// Write a `RandomRollout` frame (reply read by
+    /// [`ShardClient::recv_rollout`]).
+    pub fn send_rollout(&mut self, steps_per_lane: u64) -> Result<()> {
+        self.stream.send(MsgRef::RandomRollout { steps_per_lane })
+    }
+
+    /// Read an `Obs` reply.
+    pub fn recv_obs(&mut self) -> Result<Vec<f32>> {
+        match self.expect_reply()? {
+            Msg::Obs { obs } => Ok(obs),
+            other => Err(err(format!(
+                "{}: expected Obs, got {other:?}",
+                self.addr
+            ))),
+        }
+    }
+
+    /// Read a `StepResult` reply.
+    pub fn recv_step(&mut self) -> Result<(Vec<f32>, Vec<Transition>)> {
+        match self.expect_reply()? {
+            Msg::StepResult { obs, transitions } => Ok((obs, transitions)),
+            other => Err(err(format!(
+                "{}: expected StepResult, got {other:?}",
+                self.addr
+            ))),
+        }
+    }
+
+    /// Read a `RolloutDone` reply.
+    pub fn recv_rollout(&mut self) -> Result<RolloutCounts> {
+        match self.expect_reply()? {
+            Msg::RolloutDone { steps, episodes } => Ok(RolloutCounts { steps, episodes }),
+            other => Err(err(format!(
+                "{}: expected RolloutDone, got {other:?}",
+                self.addr
+            ))),
+        }
+    }
+}
+
+impl Drop for ShardClient {
+    fn drop(&mut self) {
+        // Orderly hang-up; the daemon tolerates a plain disconnect too.
+        let _ = self.stream.send(MsgRef::Close);
+    }
+}
+
+/// Flatten an env spec into mixture entries (a bare id contributes
+/// `lanes` copies, mirroring
+/// [`build_executor`](crate::coordinator::experiment::build_executor)).
+fn entries_for(env_spec: &str, lanes: usize) -> Result<Vec<(String, usize)>> {
+    if MixtureSpec::is_mixture(env_spec) {
+        Ok(MixtureSpec::parse(env_spec)?.entries().to_vec())
+    } else {
+        registry::validate(env_spec)?;
+        Ok(vec![(env_spec.to_string(), lanes.max(1))])
+    }
+}
+
+/// A [`BatchedExecutor`] whose lanes live on remote shards.
+pub struct ShardedEnvPool {
+    clients: Vec<ShardClient>,
+    plan: ShardPlan,
+    specs: Vec<LaneSpec>,
+    n: usize,
+    padded: usize,
+}
+
+impl ShardedEnvPool {
+    /// Connect to `addrs` with a cost-aware plan from a fresh
+    /// calibration rollout ([`calibrate_costs`]).
+    pub fn connect(
+        addrs: &[String],
+        env_spec: &str,
+        lanes: usize,
+        base_seed: u64,
+    ) -> Result<ShardedEnvPool> {
+        let entries = entries_for(env_spec, lanes)?;
+        let costs = calibrate_costs(&entries)?;
+        Self::connect_planned(addrs, &entries, base_seed, &costs)
+    }
+
+    /// [`ShardedEnvPool::connect`] with explicit per-id costs — the
+    /// deterministic entry point (tests, or operators pinning a known
+    /// cost model instead of re-measuring at connect time).
+    pub fn connect_with_costs(
+        addrs: &[String],
+        env_spec: &str,
+        lanes: usize,
+        base_seed: u64,
+        costs: &BTreeMap<String, f64>,
+    ) -> Result<ShardedEnvPool> {
+        let entries = entries_for(env_spec, lanes)?;
+        Self::connect_planned(addrs, &entries, base_seed, costs)
+    }
+
+    fn connect_planned(
+        addrs: &[String],
+        entries: &[(String, usize)],
+        base_seed: u64,
+        costs: &BTreeMap<String, f64>,
+    ) -> Result<ShardedEnvPool> {
+        if addrs.is_empty() {
+            return Err(CairlError::Config(
+                "a sharded pool needs at least one shard address".into(),
+            ));
+        }
+        let plan = ShardPlan::plan(entries, addrs.len(), costs)?;
+        let mut clients = Vec::with_capacity(addrs.len());
+        for (addr, assignment) in addrs.iter().zip(plan.assignments()) {
+            let client =
+                ShardClient::connect(addr, &assignment.spec(), base_seed, assignment.first_lane)?;
+            if client.num_lanes() != assignment.lanes {
+                return Err(err(format!(
+                    "{addr}: hosts {} lanes, plan expected {}",
+                    client.num_lanes(),
+                    assignment.lanes
+                )));
+            }
+            clients.push(client);
+        }
+
+        // Global layout: pool-wide padding is the widest lane anywhere;
+        // offsets are recomputed in global lane order.
+        let padded = clients
+            .iter()
+            .flat_map(|c| c.lane_specs())
+            .map(|s| s.obs_dim)
+            .max()
+            .ok_or_else(|| err("sharded pool has no lanes"))?;
+        let mut specs = Vec::with_capacity(plan.total_lanes());
+        for (client, assignment) in clients.iter().zip(plan.assignments()) {
+            for (j, spec) in client.lane_specs().iter().enumerate() {
+                specs.push(LaneSpec {
+                    env_id: spec.env_id.clone(),
+                    obs_dim: spec.obs_dim,
+                    offset: (assignment.first_lane + j) * padded,
+                    action_space: spec.action_space.clone(),
+                });
+            }
+        }
+        let n = specs.len();
+        Ok(ShardedEnvPool {
+            clients,
+            plan,
+            specs,
+            n,
+            padded,
+        })
+    }
+
+    /// The placement this pool connected with.
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    /// Number of connected shards.
+    pub fn shards(&self) -> usize {
+        self.clients.len()
+    }
+
+    /// Reassemble one shard's `[lanes * shard_padded]` block into the
+    /// global `[n * padded]` buffer: copy each lane's true observation,
+    /// re-zero the global tail.
+    fn scatter_obs(&self, shard: usize, shard_obs: &[f32], obs: &mut [f32]) {
+        let assignment = &self.plan.assignments()[shard];
+        let client = &self.clients[shard];
+        let local_padded = client.obs_dim();
+        assert_eq!(
+            shard_obs.len(),
+            assignment.lanes * local_padded,
+            "{}: short observation block",
+            client.addr()
+        );
+        for j in 0..assignment.lanes {
+            let width = client.lane_specs()[j].obs_dim;
+            let src = &shard_obs[j * local_padded..j * local_padded + width];
+            let base = (assignment.first_lane + j) * self.padded;
+            obs[base..base + width].copy_from_slice(src);
+            obs[base + width..base + self.padded].fill(0.0);
+        }
+    }
+}
+
+impl BatchedExecutor for ShardedEnvPool {
+    fn num_lanes(&self) -> usize {
+        self.n
+    }
+
+    fn obs_dim(&self) -> usize {
+        self.padded
+    }
+
+    fn lane_specs(&self) -> &[LaneSpec] {
+        &self.specs
+    }
+
+    fn reset_into(&mut self, obs: &mut [f32]) {
+        assert_eq!(obs.len(), self.n * self.padded);
+        // Write every shard's request before reading any reply: the
+        // shards reset in parallel.
+        for client in &mut self.clients {
+            client
+                .send_reset()
+                .unwrap_or_else(|e| panic!("sharded reset failed: {e}"));
+        }
+        for shard in 0..self.clients.len() {
+            let shard_obs = self.clients[shard]
+                .recv_obs()
+                .unwrap_or_else(|e| panic!("sharded reset failed: {e}"));
+            self.scatter_obs(shard, &shard_obs, obs);
+        }
+    }
+
+    fn step_into(
+        &mut self,
+        actions: &[Action],
+        obs: &mut [f32],
+        transitions: &mut [Transition],
+    ) {
+        assert_eq!(actions.len(), self.n);
+        assert_eq!(obs.len(), self.n * self.padded);
+        assert_eq!(transitions.len(), self.n);
+        for (client, assignment) in self.clients.iter_mut().zip(self.plan.assignments()) {
+            let slice = &actions[assignment.first_lane..assignment.first_lane + assignment.lanes];
+            client
+                .send_step(slice)
+                .unwrap_or_else(|e| panic!("sharded step failed: {e}"));
+        }
+        for shard in 0..self.clients.len() {
+            let (shard_obs, shard_tr) = self.clients[shard]
+                .recv_step()
+                .unwrap_or_else(|e| panic!("sharded step failed: {e}"));
+            let assignment = &self.plan.assignments()[shard];
+            assert_eq!(
+                shard_tr.len(),
+                assignment.lanes,
+                "{}: short transition block",
+                self.clients[shard].addr()
+            );
+            self.scatter_obs(shard, &shard_obs, obs);
+            transitions[assignment.first_lane..assignment.first_lane + assignment.lanes]
+                .copy_from_slice(&shard_tr);
+        }
+    }
+}
+
+impl RandomRollout for ShardedEnvPool {
+    /// The free-running workload crosses the wire **once per shard**:
+    /// every shard runs its whole rollout worker-side and reports
+    /// aggregate counts.  Lane action streams are derived from the
+    /// *global* base seed and lane ids (the shard knows its
+    /// `first_lane`), so counts equal the local pool's bit for bit.
+    fn random_rollout(&mut self, steps_per_lane: u64) -> RolloutCounts {
+        for client in &mut self.clients {
+            client
+                .send_rollout(steps_per_lane)
+                .unwrap_or_else(|e| panic!("sharded rollout failed: {e}"));
+        }
+        let mut total = RolloutCounts::default();
+        for client in &mut self.clients {
+            let counts = client
+                .recv_rollout()
+                .unwrap_or_else(|e| panic!("sharded rollout failed: {e}"));
+            total.steps += counts.steps;
+            total.episodes += counts.episodes;
+        }
+        total
+    }
+}

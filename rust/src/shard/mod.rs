@@ -1,0 +1,61 @@
+//! Sharded environment service — the first out-of-process scaling axis.
+//!
+//! Everything below the executor layer is in-process; this module opens
+//! the seam the ROADMAP named (replace the sync pool's in-process
+//! broadcast with a transport) and turns a [`BatchedExecutor`]
+//! (crate::coordinator::pool::BatchedExecutor) into a network service:
+//!
+//! * [`proto`] — the compact length-prefixed binary frame protocol:
+//!   versioned, checksummed, f32 observation payloads, [`LaneSpec`]
+//!   (crate::coordinator::pool::LaneSpec) reused for the handshake.
+//!   Decoding is total — corrupt frames are errors, never panics.
+//! * [`server`] — the `cairl serve` daemon: any executor configuration
+//!   (fused kernels included) behind a Unix-socket or TCP listener, one
+//!   framed stream and one private executor per client.
+//! * [`client`] — [`ShardClient`] plus [`ShardedEnvPool`], a
+//!   `BatchedExecutor` over one or more remote shards with padded-obs
+//!   reassembly, so training loops are transparently local or remote.
+//! * [`plan`] — [`ShardPlan`]: cost-aware lane placement.  A quick
+//!   calibration rollout measures per-env step cost and the planner
+//!   cuts the mixture at cost-balanced (not lane-balanced) boundaries,
+//!   keeping placement contiguous so per-lane seeds — and therefore
+//!   trajectories — are bit-identical to a local pool.
+//!
+//! ## Runnable example
+//!
+//! Serve a mixture on one shard and run a seeded workload against it
+//! (the same spec/seed on `--executor vec` reproduces the identical
+//! episode returns — the CI shard-smoke job diffs exactly that):
+//!
+//! ```text
+//! cairl serve --env "CartPole-v1:6,MountainCar-v0:2" \
+//!     --listen unix:///tmp/cairl-s0.sock --executor pool --threads 2 &
+//! cairl run --env "CartPole-v1:6,MountainCar-v0:2" --steps 8000 --seed 11 \
+//!     --shard unix:///tmp/cairl-s0.sock
+//! ```
+//!
+//! In-process, the same round trip:
+//!
+//! ```no_run
+//! use cairl::coordinator::pool::BatchedExecutor;
+//! use cairl::shard::{ServeConfig, ShardServer, ShardedEnvPool};
+//!
+//! let server = ShardServer::bind("tcp://127.0.0.1:0", ServeConfig::new("CartPole-v1")).unwrap();
+//! let addr = server.local_addr();
+//! let handle = server.spawn();
+//! let pool = ShardedEnvPool::connect(&[addr], "CartPole-v1", 8, 7).unwrap();
+//! assert_eq!(pool.num_lanes(), 8);
+//! # drop(pool);
+//! handle.shutdown();
+//! ```
+
+pub mod client;
+pub mod net;
+pub mod plan;
+pub mod proto;
+pub mod server;
+
+pub use client::{ShardClient, ShardedEnvPool};
+pub use net::ShardAddr;
+pub use plan::{calibrate_costs, ShardAssignment, ShardPlan};
+pub use server::{ServeConfig, ShardServer, ShardServerHandle};

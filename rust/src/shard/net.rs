@@ -1,0 +1,277 @@
+//! Shard transport: address grammar, listeners and framed streams.
+//!
+//! Two schemes cover the deployment shapes the service targets:
+//!
+//! * `unix:///path/to/shard.sock` — a Unix domain socket, the
+//!   same-host default (lowest latency, filesystem-scoped access).
+//! * `tcp://host:port` — TCP for cross-host shards (`port` may be `0`
+//!   to let the OS pick; [`ShardListener::local_addr`] reports the
+//!   bound address).  A bare `host:port` is accepted as TCP shorthand.
+//!
+//! [`FramedStream`] pairs a buffered reader and writer over one
+//! connection and speaks [`proto`](crate::shard::proto) frames;
+//! `TCP_NODELAY` is set on TCP streams because the protocol is strictly
+//! request/reply — Nagle would serialise every batch behind a delayed
+//! ACK.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+#[cfg(unix)]
+use std::path::PathBuf;
+
+use crate::core::error::{CairlError, Result};
+use crate::shard::proto::{self, Msg, MsgRef};
+
+fn err(msg: impl Into<String>) -> CairlError {
+    CairlError::Shard(msg.into())
+}
+
+/// A parsed shard address.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ShardAddr {
+    /// `unix://<path>`.
+    #[cfg(unix)]
+    Unix(PathBuf),
+    /// `tcp://<host:port>` (or bare `host:port`).
+    Tcp(String),
+}
+
+impl ShardAddr {
+    /// Parse the address grammar above.
+    pub fn parse(addr: &str) -> Result<ShardAddr> {
+        let addr = addr.trim();
+        if let Some(path) = addr.strip_prefix("unix://") {
+            #[cfg(unix)]
+            {
+                if path.is_empty() {
+                    return Err(err(format!("empty unix socket path in {addr:?}")));
+                }
+                return Ok(ShardAddr::Unix(PathBuf::from(path)));
+            }
+            #[cfg(not(unix))]
+            {
+                return Err(err(format!(
+                    "unix socket address {addr:?} is not supported on this platform"
+                )));
+            }
+        }
+        let host_port = addr.strip_prefix("tcp://").unwrap_or(addr);
+        if host_port.contains("://") {
+            return Err(err(format!(
+                "unknown shard address scheme in {addr:?} (expected unix:// or tcp://)"
+            )));
+        }
+        if !host_port.contains(':') {
+            return Err(err(format!(
+                "shard address {addr:?} needs host:port (or a unix:// path)"
+            )));
+        }
+        Ok(ShardAddr::Tcp(host_port.to_string()))
+    }
+
+    /// Canonical textual form (what `--listen`/`--shard` accept).
+    pub fn render(&self) -> String {
+        match self {
+            #[cfg(unix)]
+            ShardAddr::Unix(path) => format!("unix://{}", path.display()),
+            ShardAddr::Tcp(hp) => format!("tcp://{hp}"),
+        }
+    }
+}
+
+/// One accepted or dialed connection (Unix or TCP).
+pub(crate) enum RawStream {
+    #[cfg(unix)]
+    Unix(UnixStream),
+    Tcp(TcpStream),
+}
+
+impl RawStream {
+    fn try_clone(&self) -> std::io::Result<RawStream> {
+        Ok(match self {
+            #[cfg(unix)]
+            RawStream::Unix(s) => RawStream::Unix(s.try_clone()?),
+            RawStream::Tcp(s) => RawStream::Tcp(s.try_clone()?),
+        })
+    }
+}
+
+impl Read for RawStream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            #[cfg(unix)]
+            RawStream::Unix(s) => s.read(buf),
+            RawStream::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for RawStream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            #[cfg(unix)]
+            RawStream::Unix(s) => s.write(buf),
+            RawStream::Tcp(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            #[cfg(unix)]
+            RawStream::Unix(s) => s.flush(),
+            RawStream::Tcp(s) => s.flush(),
+        }
+    }
+}
+
+/// A buffered, framed connection: [`send`](FramedStream::send) writes
+/// one protocol frame and flushes, [`recv`](FramedStream::recv) blocks
+/// for the next.
+pub(crate) struct FramedStream {
+    r: BufReader<RawStream>,
+    w: BufWriter<RawStream>,
+}
+
+impl FramedStream {
+    pub(crate) fn new(stream: RawStream) -> Result<FramedStream> {
+        if let RawStream::Tcp(s) = &stream {
+            // Request/reply over small frames: never wait out Nagle.
+            let _ = s.set_nodelay(true);
+        }
+        let writer = stream.try_clone()?;
+        Ok(FramedStream {
+            r: BufReader::new(stream),
+            w: BufWriter::new(writer),
+        })
+    }
+
+    /// Dial a shard address.
+    pub(crate) fn connect(addr: &ShardAddr) -> Result<FramedStream> {
+        let stream = match addr {
+            #[cfg(unix)]
+            ShardAddr::Unix(path) => RawStream::Unix(UnixStream::connect(path).map_err(|e| {
+                err(format!("connect {}: {e}", addr.render()))
+            })?),
+            ShardAddr::Tcp(hp) => RawStream::Tcp(TcpStream::connect(hp).map_err(|e| {
+                err(format!("connect {}: {e}", addr.render()))
+            })?),
+        };
+        FramedStream::new(stream)
+    }
+
+    pub(crate) fn send(&mut self, msg: MsgRef<'_>) -> Result<()> {
+        proto::write_msg(&mut self.w, msg)
+    }
+
+    pub(crate) fn recv(&mut self) -> Result<Msg> {
+        proto::read_msg(&mut self.r)
+    }
+}
+
+/// A bound shard listener; nonblocking so the accept loop can poll a
+/// shutdown flag.  Unix listeners own their socket file and remove it
+/// (stale leftovers at bind, their own at drop).
+pub(crate) enum ShardListener {
+    #[cfg(unix)]
+    Unix { listener: UnixListener, path: PathBuf },
+    Tcp(TcpListener),
+}
+
+impl ShardListener {
+    pub(crate) fn bind(addr: &ShardAddr) -> Result<ShardListener> {
+        match addr {
+            #[cfg(unix)]
+            ShardAddr::Unix(path) => {
+                // A dead daemon leaves its socket file behind; binding
+                // over it is the restart path.
+                let _ = std::fs::remove_file(path);
+                let listener = UnixListener::bind(path)
+                    .map_err(|e| err(format!("bind {}: {e}", addr.render())))?;
+                listener.set_nonblocking(true)?;
+                Ok(ShardListener::Unix {
+                    listener,
+                    path: path.clone(),
+                })
+            }
+            ShardAddr::Tcp(hp) => {
+                let listener = TcpListener::bind(hp)
+                    .map_err(|e| err(format!("bind {}: {e}", addr.render())))?;
+                listener.set_nonblocking(true)?;
+                Ok(ShardListener::Tcp(listener))
+            }
+        }
+    }
+
+    /// The bound address in canonical form (TCP reports the real port,
+    /// so `tcp://127.0.0.1:0` comes back dialable).
+    pub(crate) fn local_addr(&self) -> String {
+        match self {
+            #[cfg(unix)]
+            ShardListener::Unix { path, .. } => format!("unix://{}", path.display()),
+            ShardListener::Tcp(listener) => match listener.local_addr() {
+                Ok(a) => format!("tcp://{a}"),
+                Err(_) => "tcp://<unknown>".to_string(),
+            },
+        }
+    }
+
+    /// One nonblocking accept: `Ok(None)` when no client is waiting.
+    pub(crate) fn accept_nonblocking(&self) -> std::io::Result<Option<RawStream>> {
+        match self {
+            #[cfg(unix)]
+            ShardListener::Unix { listener, .. } => match listener.accept() {
+                Ok((stream, _)) => {
+                    stream.set_nonblocking(false)?;
+                    Ok(Some(RawStream::Unix(stream)))
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => Ok(None),
+                Err(e) => Err(e),
+            },
+            ShardListener::Tcp(listener) => match listener.accept() {
+                Ok((stream, _)) => {
+                    stream.set_nonblocking(false)?;
+                    Ok(Some(RawStream::Tcp(stream)))
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => Ok(None),
+                Err(e) => Err(e),
+            },
+        }
+    }
+}
+
+#[cfg(unix)]
+impl Drop for ShardListener {
+    fn drop(&mut self) {
+        if let ShardListener::Unix { path, .. } = self {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn address_grammar_parses_and_renders() {
+        #[cfg(unix)]
+        {
+            let a = ShardAddr::parse("unix:///tmp/s0.sock").unwrap();
+            assert_eq!(a, ShardAddr::Unix(PathBuf::from("/tmp/s0.sock")));
+            assert_eq!(a.render(), "unix:///tmp/s0.sock");
+        }
+        let t = ShardAddr::parse("tcp://127.0.0.1:7000").unwrap();
+        assert_eq!(t, ShardAddr::Tcp("127.0.0.1:7000".into()));
+        assert_eq!(t.render(), "tcp://127.0.0.1:7000");
+        // Bare host:port is TCP shorthand.
+        assert_eq!(
+            ShardAddr::parse("localhost:7000").unwrap(),
+            ShardAddr::Tcp("localhost:7000".into())
+        );
+        for bad in ["", "unix://", "quic://x:1", "justahost"] {
+            assert!(ShardAddr::parse(bad).is_err(), "{bad:?} must not parse");
+        }
+    }
+}

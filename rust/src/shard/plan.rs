@@ -1,0 +1,319 @@
+//! Cost-aware shard placement: which lanes live on which shard.
+//!
+//! A mixture's components can differ in step cost by orders of
+//! magnitude (a fused CartPole lane vs a `GridRTS-v0` match), so
+//! splitting lanes *evenly* across shards leaves the cheap shard idle
+//! while the expensive one drags every lockstep batch.  [`ShardPlan`]
+//! instead balances **measured cost**: a quick calibration rollout
+//! ([`calibrate_costs`]) times one env per distinct component id, and
+//! the planner cuts the lane list where the *cumulative cost* crosses
+//! each shard's fair share — `CartPole-v1:32,GridRTS-v0:4` lands ~34
+//! cheap lanes on one shard and ~2 expensive ones on the other rather
+//! than 18/18.
+//!
+//! Placement is **contiguous in global lane order**: shard `s` owns
+//! lanes `[first_lane, first_lane + lanes)`.  That is what preserves
+//! the determinism contract — the shard seeds local lane `j` with
+//! `base_seed + first_lane + j`, exactly the seed the same lane holds
+//! in a local pool, so sharded trajectories are bit-identical to local
+//! ones (`rust/tests/shard_pool.rs` pins it).  The placement tests
+//! assert on the plan itself, never on wall clock.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::coordinator::registry;
+use crate::core::error::{CairlError, Result};
+use crate::core::rng::Pcg32;
+
+/// Steps timed per distinct component id by [`calibrate_costs`] — small
+/// enough to be invisible at connect time, large enough to average out
+/// the reset transient.
+pub const CALIBRATION_STEPS: u64 = 128;
+
+/// One shard's slice of the global lane list.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardAssignment {
+    /// Sub-mixture hosted by this shard, in lane order.
+    pub entries: Vec<(String, usize)>,
+    /// First global lane index of the slice.
+    pub first_lane: usize,
+    /// Number of lanes on this shard.
+    pub lanes: usize,
+    /// Modelled cost share (sum of the slice's per-lane costs).
+    pub cost: f64,
+}
+
+impl ShardAssignment {
+    /// Render the sub-mixture as a spec string (`"id:count,..."`) — the
+    /// `Hello` payload the client sends this shard.
+    pub fn spec(&self) -> String {
+        self.entries
+            .iter()
+            .map(|(id, count)| format!("{id}:{count}"))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+}
+
+/// A complete placement: one [`ShardAssignment`] per shard, covering
+/// every global lane exactly once, in order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardPlan {
+    assignments: Vec<ShardAssignment>,
+}
+
+impl ShardPlan {
+    /// Plan `entries` (the flattened `(id, lanes)` mixture, spec order)
+    /// across `shards` shards using per-id step `costs` (seconds per
+    /// step, or any consistent unit; ids missing from the map count
+    /// 1.0).  Boundaries fall where cumulative cost crosses each
+    /// shard's fair share of the total, clamped so every shard gets at
+    /// least one lane.
+    pub fn plan(
+        entries: &[(String, usize)],
+        shards: usize,
+        costs: &BTreeMap<String, f64>,
+    ) -> Result<ShardPlan> {
+        let n: usize = entries.iter().map(|(_, count)| count).sum();
+        if shards == 0 {
+            return Err(CairlError::Config("a shard plan needs at least one shard".into()));
+        }
+        if n == 0 {
+            return Err(CairlError::Config("a shard plan needs at least one lane".into()));
+        }
+        if shards > n {
+            return Err(CairlError::Config(format!(
+                "cannot place {n} lanes on {shards} shards (every shard needs a lane)"
+            )));
+        }
+
+        // Per-lane cost in lane order; prefix[i] = cost of lanes [0, i).
+        let mut lane_cost = Vec::with_capacity(n);
+        for (id, count) in entries {
+            let c = costs.get(id).copied().unwrap_or(1.0).max(1e-12);
+            lane_cost.extend(std::iter::repeat(c).take(*count));
+        }
+        let mut prefix = Vec::with_capacity(n + 1);
+        let mut acc = 0.0f64;
+        prefix.push(0.0);
+        for &c in &lane_cost {
+            acc += c;
+            prefix.push(acc);
+        }
+        let total = acc;
+
+        // Cut lane boundaries at the fair-share crossings.
+        let mut cuts = Vec::with_capacity(shards + 1);
+        cuts.push(0usize);
+        let mut prev = 0usize;
+        for s in 0..shards {
+            let cut = if s == shards - 1 {
+                n
+            } else {
+                let target = total * (s + 1) as f64 / shards as f64;
+                let mut idx = prev + 1;
+                while idx < n && prefix[idx] < target {
+                    idx += 1;
+                }
+                // Leave one lane for each remaining shard.
+                idx.min(n - (shards - 1 - s))
+            };
+            cuts.push(cut);
+            prev = cut;
+        }
+
+        // Slice the component list along the cuts.
+        let mut assignments = Vec::with_capacity(shards);
+        let mut component = 0usize; // index into entries
+        let mut used = 0usize; // lanes of entries[component] already placed
+        for s in 0..shards {
+            let (start, end) = (cuts[s], cuts[s + 1]);
+            let mut remaining = end - start;
+            let mut sub: Vec<(String, usize)> = Vec::new();
+            while remaining > 0 {
+                let (id, count) = &entries[component];
+                let available = count - used;
+                let take = available.min(remaining);
+                sub.push((id.clone(), take));
+                used += take;
+                remaining -= take;
+                if used == *count {
+                    component += 1;
+                    used = 0;
+                }
+            }
+            assignments.push(ShardAssignment {
+                entries: sub,
+                first_lane: start,
+                lanes: end - start,
+                cost: prefix[end] - prefix[start],
+            });
+        }
+        Ok(ShardPlan { assignments })
+    }
+
+    /// The per-shard assignments, shard order (= global lane order).
+    pub fn assignments(&self) -> &[ShardAssignment] {
+        &self.assignments
+    }
+
+    /// Total lanes across every shard.
+    pub fn total_lanes(&self) -> usize {
+        self.assignments.iter().map(|a| a.lanes).sum()
+    }
+
+    /// Human-readable one-liner per shard (CLI/bench logging).
+    pub fn describe(&self) -> String {
+        self.assignments
+            .iter()
+            .enumerate()
+            .map(|(s, a)| {
+                format!(
+                    "shard {s}: lanes {}..{} ({}, cost {:.3})",
+                    a.first_lane,
+                    a.first_lane + a.lanes,
+                    a.spec(),
+                    a.cost
+                )
+            })
+            .collect::<Vec<_>>()
+            .join("; ")
+    }
+}
+
+/// Measure per-step wall-clock cost for every distinct component id: one
+/// env per id, seeded and reset, [`CALIBRATION_STEPS`] uniform-random
+/// steps timed.  Wall-clock is inherently noisy — the plan built on it
+/// is best-effort load balancing, while correctness (bit-determinism)
+/// never depends on where a lane landed.
+pub fn calibrate_costs(entries: &[(String, usize)]) -> Result<BTreeMap<String, f64>> {
+    let mut costs = BTreeMap::new();
+    for (id, _) in entries {
+        if costs.contains_key(id) {
+            continue;
+        }
+        let mut env = registry::make(id)?;
+        let space = env.action_space();
+        let mut obs = vec![0.0f32; env.obs_dim()];
+        let mut rng = Pcg32::new(0xca11b, 17);
+        env.seed(0);
+        env.reset_into(&mut obs);
+        let start = Instant::now();
+        for _ in 0..CALIBRATION_STEPS {
+            let a = space.sample(&mut rng);
+            let t = env.step_into(&a, &mut obs);
+            if t.done || t.truncated {
+                env.reset_into(&mut obs);
+            }
+        }
+        let secs = start.elapsed().as_secs_f64().max(1e-9);
+        costs.insert(id.clone(), secs / CALIBRATION_STEPS as f64);
+    }
+    Ok(costs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn costs(pairs: &[(&str, f64)]) -> BTreeMap<String, f64> {
+        pairs.iter().map(|(id, c)| (id.to_string(), *c)).collect()
+    }
+
+    fn entries(pairs: &[(&str, usize)]) -> Vec<(String, usize)> {
+        pairs.iter().map(|(id, n)| (id.to_string(), *n)).collect()
+    }
+
+    #[test]
+    fn uniform_costs_split_evenly() {
+        let plan = ShardPlan::plan(
+            &entries(&[("CartPole-v1", 8)]),
+            2,
+            &costs(&[("CartPole-v1", 1.0)]),
+        )
+        .unwrap();
+        let a = plan.assignments();
+        assert_eq!(a.len(), 2);
+        assert_eq!((a[0].first_lane, a[0].lanes), (0, 4));
+        assert_eq!((a[1].first_lane, a[1].lanes), (4, 4));
+        assert_eq!(a[0].spec(), "CartPole-v1:4");
+        assert_eq!(plan.total_lanes(), 8);
+    }
+
+    #[test]
+    fn expensive_components_pull_the_boundary() {
+        // 32 cheap + 4 expensive lanes: the cost-aware cut lands far
+        // from the even 18/18 split.
+        let plan = ShardPlan::plan(
+            &entries(&[("CartPole-v1", 32), ("GridRTS-v0", 4)]),
+            2,
+            &costs(&[("CartPole-v1", 1.0), ("GridRTS-v0", 50.0)]),
+        )
+        .unwrap();
+        let a = plan.assignments();
+        assert_eq!(a[0].lanes + a[1].lanes, 36);
+        assert_ne!(a[0].lanes, 18, "placement must not be an even lane split");
+        // The first shard absorbs all the cheap lanes plus a slice of
+        // the expensive ones; the costs end up near parity.
+        assert!(a[0].lanes > 30, "cheap shard got {} lanes", a[0].lanes);
+        let ratio = a[0].cost / a[1].cost;
+        assert!((0.4..2.5).contains(&ratio), "cost ratio {ratio}");
+    }
+
+    #[test]
+    fn every_shard_gets_at_least_one_lane() {
+        // One component so expensive it would swallow every target: the
+        // clamp still leaves a lane for the last shard.
+        let plan = ShardPlan::plan(
+            &entries(&[("GridRTS-v0", 2), ("CartPole-v1", 1)]),
+            3,
+            &costs(&[("GridRTS-v0", 1000.0), ("CartPole-v1", 1.0)]),
+        )
+        .unwrap();
+        for a in plan.assignments() {
+            assert!(a.lanes >= 1);
+        }
+        assert_eq!(plan.total_lanes(), 3);
+    }
+
+    #[test]
+    fn degenerate_plans_error() {
+        let e = entries(&[("CartPole-v1", 2)]);
+        let c = costs(&[]);
+        assert!(ShardPlan::plan(&e, 0, &c).is_err());
+        assert!(ShardPlan::plan(&e, 3, &c).is_err());
+        assert!(ShardPlan::plan(&[], 1, &c).is_err());
+    }
+
+    #[test]
+    fn sub_specs_cover_the_mixture_in_order() {
+        let plan = ShardPlan::plan(
+            &entries(&[("A-v0", 3), ("B-v0", 3)]),
+            2,
+            &costs(&[("A-v0", 1.0), ("B-v0", 1.0)]),
+        )
+        .unwrap();
+        let a = plan.assignments();
+        assert_eq!(a[0].spec(), "A-v0:3");
+        assert_eq!(a[1].spec(), "B-v0:3");
+        // A cut inside a component splits it across both sub-specs.
+        let skew = ShardPlan::plan(
+            &entries(&[("A-v0", 3), ("B-v0", 3)]),
+            2,
+            &costs(&[("A-v0", 10.0), ("B-v0", 1.0)]),
+        )
+        .unwrap();
+        assert_eq!(skew.assignments()[0].spec(), "A-v0:2");
+        assert_eq!(skew.assignments()[1].spec(), "A-v0:1,B-v0:3");
+    }
+
+    #[test]
+    fn calibration_measures_every_distinct_id() {
+        let costs =
+            calibrate_costs(&entries(&[("CartPole-v1", 4), ("MountainCar-v0", 2)])).unwrap();
+        assert_eq!(costs.len(), 2);
+        assert!(costs.values().all(|&c| c > 0.0));
+        assert!(calibrate_costs(&entries(&[("NoSuchEnv-v0", 1)])).is_err());
+    }
+}

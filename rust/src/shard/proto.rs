@@ -1,0 +1,710 @@
+//! The shard wire protocol: compact length-prefixed binary frames.
+//!
+//! Every message travels as one frame:
+//!
+//! ```text
+//! [len: u32 LE] [payload: len bytes]
+//! payload = [version: u8] [tag: u8] [body ...] [checksum: u32 LE]
+//! ```
+//!
+//! `len` counts the payload (version through checksum).  The checksum is
+//! FNV-1a/32 over `version..body`, so a flipped bit anywhere in a frame
+//! is rejected before the body is even parsed.  Frames larger than
+//! [`MAX_FRAME`] are refused outright — a corrupt length prefix can
+//! never drive a gigabyte allocation.
+//!
+//! Decoding is **total**: every read is bounds-checked and every invalid
+//! input (truncated body, bad tag, bad bool, non-UTF-8 string, trailing
+//! garbage, checksum mismatch) returns [`CairlError::Shard`] — the
+//! decoder never panics, which `rust/tests/shard_pool.rs` fuzzes.
+//!
+//! The message set mirrors the [`BatchedExecutor`]
+//! (crate::coordinator::pool::BatchedExecutor) surface: a `Hello`
+//! handshake answered by `Spec` (reusing [`LaneSpec`] so the client sees
+//! exactly the metadata a local pool would report), `Reset`/`Obs`,
+//! `Step`/`StepResult` with f32 observation payloads, a whole-workload
+//! `RandomRollout`/`RolloutDone` pair (the free-running throughput mode
+//! crosses the wire **once**), `Close` and `Error`.
+//!
+//! Two enums, one format: [`MsgRef`] borrows its payloads for
+//! allocation-light encoding on the hot path, [`Msg`] owns them for
+//! decoding; `decode(encode(m))` round-trips every message.
+
+use std::io::{Read, Write};
+
+use crate::coordinator::pool::LaneSpec;
+use crate::core::env::Transition;
+use crate::core::error::{CairlError, Result};
+use crate::core::spaces::{Action, Space};
+
+/// Protocol revision; bumped on any wire-format change.  A frame whose
+/// version byte differs is rejected at decode.
+pub const PROTO_VERSION: u8 = 1;
+
+/// Hard ceiling on payload length (64 MiB) — refuse corrupt length
+/// prefixes before allocating.
+pub const MAX_FRAME: usize = 1 << 26;
+
+const TAG_HELLO: u8 = 1;
+const TAG_SPEC: u8 = 2;
+const TAG_RESET: u8 = 3;
+const TAG_OBS: u8 = 4;
+const TAG_STEP: u8 = 5;
+const TAG_STEP_RESULT: u8 = 6;
+const TAG_RANDOM_ROLLOUT: u8 = 7;
+const TAG_ROLLOUT_DONE: u8 = 8;
+const TAG_CLOSE: u8 = 9;
+const TAG_ERROR: u8 = 10;
+
+/// An outbound message, borrowing its payloads (no clone to send a
+/// `&[Action]` or an observation buffer).
+#[derive(Clone, Copy, Debug)]
+pub enum MsgRef<'a> {
+    /// Client handshake: the env spec the shard should host (empty =
+    /// the daemon's configured default), the pool-wide base seed and
+    /// this shard's first global lane.  The shard seeds local lane `j`
+    /// with `base_seed + first_lane + j`, so a sharded pool's lanes hold
+    /// exactly the RNG streams of the equivalent local pool.
+    Hello {
+        spec: &'a str,
+        base_seed: u64,
+        first_lane: u64,
+    },
+    /// Server handshake reply: the hosted executor's padded width and
+    /// per-lane metadata (shard-local offsets).
+    Spec {
+        obs_dim: u64,
+        lane_specs: &'a [LaneSpec],
+    },
+    /// Reset every lane; answered by [`MsgRef::Obs`].
+    Reset,
+    /// A `[lanes * obs_dim]` observation block (shard-local padding).
+    Obs { obs: &'a [f32] },
+    /// One lockstep batch of actions, lane order; answered by
+    /// [`MsgRef::StepResult`].
+    Step { actions: &'a [Action] },
+    /// Batch step reply: the observation block plus per-lane transitions.
+    StepResult {
+        obs: &'a [f32],
+        transitions: &'a [Transition],
+    },
+    /// Run a whole free-running random rollout shard-side; answered by
+    /// [`MsgRef::RolloutDone`].
+    RandomRollout { steps_per_lane: u64 },
+    /// Aggregate counts of a completed shard-side rollout.
+    RolloutDone { steps: u64, episodes: u64 },
+    /// Orderly hang-up.
+    Close,
+    /// Server-side failure (bad spec, wrong action count, executor
+    /// panic); the connection closes after this frame.
+    Error { message: &'a str },
+}
+
+/// A decoded (owned) message; the receive-side mirror of [`MsgRef`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum Msg {
+    Hello {
+        spec: String,
+        base_seed: u64,
+        first_lane: u64,
+    },
+    Spec {
+        obs_dim: u64,
+        lane_specs: Vec<LaneSpec>,
+    },
+    Reset,
+    Obs {
+        obs: Vec<f32>,
+    },
+    Step {
+        actions: Vec<Action>,
+    },
+    StepResult {
+        obs: Vec<f32>,
+        transitions: Vec<Transition>,
+    },
+    RandomRollout {
+        steps_per_lane: u64,
+    },
+    RolloutDone {
+        steps: u64,
+        episodes: u64,
+    },
+    Close,
+    Error {
+        message: String,
+    },
+}
+
+fn err(msg: impl Into<String>) -> CairlError {
+    CairlError::Shard(msg.into())
+}
+
+/// FNV-1a/32 over a byte slice — the frame checksum.
+fn checksum(bytes: &[u8]) -> u32 {
+    let mut h: u32 = 0x811c_9dc5;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+// ---------------------------------------------------------------------
+// Encoding
+// ---------------------------------------------------------------------
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    put_u32(out, xs.len() as u32);
+    for &x in xs {
+        put_f32(out, x);
+    }
+}
+
+fn put_space(out: &mut Vec<u8>, space: &Space) {
+    match space {
+        Space::Discrete { n } => {
+            out.push(0);
+            put_u64(out, *n as u64);
+        }
+        Space::Box { low, high, shape } => {
+            out.push(1);
+            put_f32s(out, low);
+            put_f32s(out, high);
+            put_u32(out, shape.len() as u32);
+            for &d in shape {
+                put_u64(out, d as u64);
+            }
+        }
+    }
+}
+
+fn put_action(out: &mut Vec<u8>, action: &Action) {
+    match action {
+        Action::Discrete(i) => {
+            out.push(0);
+            put_u64(out, *i as u64);
+        }
+        Action::Continuous(v) => {
+            out.push(1);
+            put_f32s(out, v);
+        }
+    }
+}
+
+fn put_lane_spec(out: &mut Vec<u8>, spec: &LaneSpec) {
+    put_str(out, &spec.env_id);
+    put_u32(out, spec.obs_dim as u32);
+    put_u64(out, spec.offset as u64);
+    put_space(out, &spec.action_space);
+}
+
+/// Encode a message into a complete frame (length prefix included).
+pub fn encode(msg: MsgRef<'_>) -> Vec<u8> {
+    let mut payload = Vec::with_capacity(64);
+    payload.push(PROTO_VERSION);
+    match msg {
+        MsgRef::Hello {
+            spec,
+            base_seed,
+            first_lane,
+        } => {
+            payload.push(TAG_HELLO);
+            put_str(&mut payload, spec);
+            put_u64(&mut payload, base_seed);
+            put_u64(&mut payload, first_lane);
+        }
+        MsgRef::Spec {
+            obs_dim,
+            lane_specs,
+        } => {
+            payload.push(TAG_SPEC);
+            put_u64(&mut payload, obs_dim);
+            put_u32(&mut payload, lane_specs.len() as u32);
+            for spec in lane_specs {
+                put_lane_spec(&mut payload, spec);
+            }
+        }
+        MsgRef::Reset => payload.push(TAG_RESET),
+        MsgRef::Obs { obs } => {
+            payload.push(TAG_OBS);
+            put_f32s(&mut payload, obs);
+        }
+        MsgRef::Step { actions } => {
+            payload.push(TAG_STEP);
+            put_u32(&mut payload, actions.len() as u32);
+            for action in actions {
+                put_action(&mut payload, action);
+            }
+        }
+        MsgRef::StepResult { obs, transitions } => {
+            payload.push(TAG_STEP_RESULT);
+            put_f32s(&mut payload, obs);
+            put_u32(&mut payload, transitions.len() as u32);
+            for t in transitions {
+                put_f32(&mut payload, t.reward);
+                payload.push(t.done as u8);
+                payload.push(t.truncated as u8);
+            }
+        }
+        MsgRef::RandomRollout { steps_per_lane } => {
+            payload.push(TAG_RANDOM_ROLLOUT);
+            put_u64(&mut payload, steps_per_lane);
+        }
+        MsgRef::RolloutDone { steps, episodes } => {
+            payload.push(TAG_ROLLOUT_DONE);
+            put_u64(&mut payload, steps);
+            put_u64(&mut payload, episodes);
+        }
+        MsgRef::Close => payload.push(TAG_CLOSE),
+        MsgRef::Error { message } => {
+            payload.push(TAG_ERROR);
+            put_str(&mut payload, message);
+        }
+    }
+    let sum = checksum(&payload);
+    payload.extend_from_slice(&sum.to_le_bytes());
+
+    let mut frame = Vec::with_capacity(4 + payload.len());
+    frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    frame.extend_from_slice(&payload);
+    frame
+}
+
+// ---------------------------------------------------------------------
+// Decoding
+// ---------------------------------------------------------------------
+
+/// Bounds-checked cursor over a payload; every accessor fails with a
+/// [`CairlError::Shard`] instead of slicing out of range.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(err(format!(
+                "truncated frame: wanted {n} more bytes, have {}",
+                self.remaining()
+            )));
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn bool(&mut self) -> Result<bool> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            other => Err(err(format!("bad bool byte {other}"))),
+        }
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    /// A `usize` carried as u64 (rejects values beyond the platform).
+    fn size(&mut self) -> Result<usize> {
+        usize::try_from(self.u64()?).map_err(|_| err("size field overflows usize"))
+    }
+
+    /// Element count with a remaining-bytes sanity bound: `count *
+    /// min_elem_size` may never exceed what is left, so a corrupt count
+    /// cannot drive a huge allocation.
+    fn count(&mut self, min_elem_size: usize) -> Result<usize> {
+        let n = self.u32()? as usize;
+        if n.saturating_mul(min_elem_size) > self.remaining() {
+            return Err(err(format!(
+                "count {n} exceeds the bytes left in the frame ({})",
+                self.remaining()
+            )));
+        }
+        Ok(n)
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.count(1)?;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| err("string field is not UTF-8"))
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.count(4)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.f32()?);
+        }
+        Ok(out)
+    }
+
+    fn space(&mut self) -> Result<Space> {
+        match self.u8()? {
+            0 => Ok(Space::Discrete {
+                n: self.size()?,
+            }),
+            1 => {
+                let low = self.f32s()?;
+                let high = self.f32s()?;
+                if low.len() != high.len() {
+                    return Err(err("box space low/high length mismatch"));
+                }
+                let dims = self.count(8)?;
+                let mut shape = Vec::with_capacity(dims);
+                for _ in 0..dims {
+                    shape.push(self.size()?);
+                }
+                Ok(Space::Box { low, high, shape })
+            }
+            other => Err(err(format!("bad space tag {other}"))),
+        }
+    }
+
+    fn action(&mut self) -> Result<Action> {
+        match self.u8()? {
+            0 => Ok(Action::Discrete(self.size()?)),
+            1 => Ok(Action::Continuous(self.f32s()?)),
+            other => Err(err(format!("bad action tag {other}"))),
+        }
+    }
+
+    fn lane_spec(&mut self) -> Result<LaneSpec> {
+        Ok(LaneSpec {
+            env_id: self.str()?,
+            obs_dim: self.u32()? as usize,
+            offset: self.size()?,
+            action_space: self.space()?,
+        })
+    }
+}
+
+/// Decode one payload (a frame minus its length prefix): verify the
+/// checksum and version, parse the tagged body, reject trailing bytes.
+pub fn decode_payload(payload: &[u8]) -> Result<Msg> {
+    // version + tag + checksum is the smallest possible payload.
+    if payload.len() < 6 {
+        return Err(err(format!("frame too short ({} bytes)", payload.len())));
+    }
+    let (body, sum_bytes) = payload.split_at(payload.len() - 4);
+    let wire_sum = u32::from_le_bytes([sum_bytes[0], sum_bytes[1], sum_bytes[2], sum_bytes[3]]);
+    let computed = checksum(body);
+    if wire_sum != computed {
+        return Err(err(format!(
+            "checksum mismatch (wire {wire_sum:#010x}, computed {computed:#010x})"
+        )));
+    }
+    let mut r = Reader::new(body);
+    let version = r.u8()?;
+    if version != PROTO_VERSION {
+        return Err(err(format!(
+            "protocol version mismatch (peer {version}, ours {PROTO_VERSION})"
+        )));
+    }
+    let tag = r.u8()?;
+    let msg = match tag {
+        TAG_HELLO => Msg::Hello {
+            spec: r.str()?,
+            base_seed: r.u64()?,
+            first_lane: r.u64()?,
+        },
+        TAG_SPEC => {
+            let obs_dim = r.u64()?;
+            let n = r.count(1)?;
+            let mut lane_specs = Vec::with_capacity(n);
+            for _ in 0..n {
+                lane_specs.push(r.lane_spec()?);
+            }
+            Msg::Spec { obs_dim, lane_specs }
+        }
+        TAG_RESET => Msg::Reset,
+        TAG_OBS => Msg::Obs { obs: r.f32s()? },
+        TAG_STEP => {
+            let n = r.count(1)?;
+            let mut actions = Vec::with_capacity(n);
+            for _ in 0..n {
+                actions.push(r.action()?);
+            }
+            Msg::Step { actions }
+        }
+        TAG_STEP_RESULT => {
+            let obs = r.f32s()?;
+            let n = r.count(6)?;
+            let mut transitions = Vec::with_capacity(n);
+            for _ in 0..n {
+                transitions.push(Transition {
+                    reward: r.f32()?,
+                    done: r.bool()?,
+                    truncated: r.bool()?,
+                });
+            }
+            Msg::StepResult { obs, transitions }
+        }
+        TAG_RANDOM_ROLLOUT => Msg::RandomRollout {
+            steps_per_lane: r.u64()?,
+        },
+        TAG_ROLLOUT_DONE => Msg::RolloutDone {
+            steps: r.u64()?,
+            episodes: r.u64()?,
+        },
+        TAG_CLOSE => Msg::Close,
+        TAG_ERROR => Msg::Error { message: r.str()? },
+        other => return Err(err(format!("unknown message tag {other}"))),
+    };
+    if r.remaining() != 0 {
+        return Err(err(format!(
+            "{} trailing bytes after the message body",
+            r.remaining()
+        )));
+    }
+    Ok(msg)
+}
+
+/// Write one complete frame.
+pub fn write_msg(w: &mut impl Write, msg: MsgRef<'_>) -> Result<()> {
+    w.write_all(&encode(msg))?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one complete frame, enforcing the length bounds before any
+/// allocation.  An EOF on the length prefix surfaces as the underlying
+/// [`CairlError::Io`] (a clean peer hang-up for callers to match on).
+pub fn read_msg(r: &mut impl Read) -> Result<Msg> {
+    let mut len_bytes = [0u8; 4];
+    r.read_exact(&mut len_bytes)?;
+    let len = u32::from_le_bytes(len_bytes) as usize;
+    if len < 6 {
+        return Err(err(format!("frame length {len} below the minimum of 6")));
+    }
+    if len > MAX_FRAME {
+        return Err(err(format!(
+            "frame length {len} exceeds the {MAX_FRAME}-byte ceiling"
+        )));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    decode_payload(&payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip(msg: MsgRef<'_>) -> Msg {
+        let frame = encode(msg);
+        let mut cursor = &frame[..];
+        read_msg(&mut cursor).expect("round trip")
+    }
+
+    #[test]
+    fn every_message_round_trips() {
+        assert_eq!(
+            round_trip(MsgRef::Hello {
+                spec: "CartPole-v1:4,GridRTS-v0:2",
+                base_seed: 99,
+                first_lane: 12,
+            }),
+            Msg::Hello {
+                spec: "CartPole-v1:4,GridRTS-v0:2".into(),
+                base_seed: 99,
+                first_lane: 12,
+            }
+        );
+        let specs = vec![
+            LaneSpec {
+                env_id: "CartPole-v1".into(),
+                obs_dim: 4,
+                offset: 0,
+                action_space: Space::Discrete { n: 2 },
+            },
+            LaneSpec {
+                env_id: "Pendulum-v1".into(),
+                obs_dim: 3,
+                offset: 4,
+                action_space: Space::box1(vec![-2.0], vec![2.0]),
+            },
+        ];
+        assert_eq!(
+            round_trip(MsgRef::Spec {
+                obs_dim: 4,
+                lane_specs: &specs,
+            }),
+            Msg::Spec {
+                obs_dim: 4,
+                lane_specs: specs.clone(),
+            }
+        );
+        assert_eq!(round_trip(MsgRef::Reset), Msg::Reset);
+        let obs = vec![0.5f32, -1.25, 3.0];
+        assert_eq!(
+            round_trip(MsgRef::Obs { obs: &obs }),
+            Msg::Obs { obs: obs.clone() }
+        );
+        let actions = vec![Action::Discrete(1), Action::Continuous(vec![0.5, -0.5])];
+        assert_eq!(
+            round_trip(MsgRef::Step { actions: &actions }),
+            Msg::Step {
+                actions: actions.clone(),
+            }
+        );
+        let transitions = vec![
+            Transition::live(1.0),
+            Transition {
+                reward: -0.5,
+                done: false,
+                truncated: true,
+            },
+        ];
+        assert_eq!(
+            round_trip(MsgRef::StepResult {
+                obs: &obs,
+                transitions: &transitions,
+            }),
+            Msg::StepResult {
+                obs: obs.clone(),
+                transitions: transitions.clone(),
+            }
+        );
+        assert_eq!(
+            round_trip(MsgRef::RandomRollout { steps_per_lane: 7 }),
+            Msg::RandomRollout { steps_per_lane: 7 }
+        );
+        assert_eq!(
+            round_trip(MsgRef::RolloutDone {
+                steps: 700,
+                episodes: 31,
+            }),
+            Msg::RolloutDone {
+                steps: 700,
+                episodes: 31,
+            }
+        );
+        assert_eq!(round_trip(MsgRef::Close), Msg::Close);
+        assert_eq!(
+            round_trip(MsgRef::Error { message: "boom" }),
+            Msg::Error {
+                message: "boom".into(),
+            }
+        );
+    }
+
+    #[test]
+    fn corrupt_frames_error_without_panicking() {
+        let frame = encode(MsgRef::Hello {
+            spec: "CartPole-v1",
+            base_seed: 3,
+            first_lane: 0,
+        });
+        // Flip every single byte in turn: each corruption must be an
+        // error (length, checksum, version or body), never a panic or a
+        // silently different message.
+        for i in 0..frame.len() {
+            let mut bad = frame.clone();
+            bad[i] ^= 0x41;
+            let mut cursor = &bad[..];
+            match read_msg(&mut cursor) {
+                Ok(msg) => {
+                    // A flipped length byte may reframe into a valid
+                    // message only if the checksum still holds — which a
+                    // 1-bit flip cannot arrange.
+                    panic!("byte {i} corruption decoded as {msg:?}");
+                }
+                Err(e) => assert!(
+                    matches!(e, CairlError::Shard(_) | CairlError::Io(_)),
+                    "byte {i}: unexpected error kind {e}"
+                ),
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_frames_error_at_every_length() {
+        let frame = encode(MsgRef::Step {
+            actions: &[Action::Discrete(0), Action::Continuous(vec![1.0])],
+        });
+        for keep in 0..frame.len() {
+            let mut cursor = &frame[..keep];
+            assert!(
+                read_msg(&mut cursor).is_err(),
+                "truncation to {keep} bytes must not decode"
+            );
+        }
+    }
+
+    #[test]
+    fn hostile_lengths_and_counts_are_bounded() {
+        // A frame claiming a 4 GiB payload dies on the length check.
+        let mut huge = Vec::new();
+        huge.extend_from_slice(&(u32::MAX).to_le_bytes());
+        huge.extend_from_slice(&[0u8; 16]);
+        let mut cursor = &huge[..];
+        assert!(read_msg(&mut cursor).is_err());
+
+        // A valid envelope around a hostile element count dies on the
+        // count-vs-remaining bound, not in the allocator.
+        let mut payload = vec![PROTO_VERSION, TAG_OBS];
+        payload.extend_from_slice(&u32::MAX.to_le_bytes()); // count
+        let sum = checksum(&payload);
+        payload.extend_from_slice(&sum.to_le_bytes());
+        assert!(decode_payload(&payload).is_err());
+    }
+
+    #[test]
+    fn version_mismatch_is_rejected() {
+        let mut frame = encode(MsgRef::Close);
+        // Rewrite the version byte and fix the checksum up so only the
+        // version check can fire.
+        frame[4] = PROTO_VERSION + 1;
+        let body_end = frame.len() - 4;
+        let sum = checksum(&frame[4..body_end]);
+        frame[body_end..].copy_from_slice(&sum.to_le_bytes());
+        let mut cursor = &frame[..];
+        let e = read_msg(&mut cursor).unwrap_err();
+        assert!(e.to_string().contains("version"), "{e}");
+    }
+}

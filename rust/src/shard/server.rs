@@ -1,0 +1,391 @@
+//! The shard daemon: a [`BatchedExecutor`] behind a socket.
+//!
+//! `cairl serve --env <spec> --lanes N --listen <addr>` hosts the
+//! configured executor machinery (fused kernels included) behind a
+//! Unix-socket or TCP listener.  One framed stream per client, and one
+//! **private executor per connection**: the client's `Hello` names the
+//! env spec it wants (its slice of a sharded mixture — empty for the
+//! daemon's configured default), the pool-wide base seed and its first
+//! global lane, and the daemon builds a fresh executor seeded exactly
+//! as a local pool would seed those lanes.  Per-connection executors
+//! are what make the determinism contract trivial: two clients can
+//! never interleave steps into each other's trajectories.
+//!
+//! Inside a connection the protocol is strict request/reply
+//! (`Reset`→`Obs`, `Step`→`StepResult`,
+//! `RandomRollout`→`RolloutDone`), with every batch drained into the
+//! executor's `step_into` — the sync pool then fans it out over its
+//! worker `step_batch` groups as usual.  Malformed frames, bad specs,
+//! wrong action counts and executor panics all answer with an `Error`
+//! frame before the connection closes; the daemon itself never goes
+//! down with a client.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::coordinator::experiment::{
+    build_env_pool_shard, build_executor_with_kernel, ExecutorKind, KernelMode,
+};
+use crate::coordinator::pool::{BatchedExecutor, EnvPool, RolloutCounts};
+use crate::coordinator::registry::{self, MixtureSpec};
+use crate::core::env::Transition;
+use crate::core::error::{CairlError, Result};
+use crate::shard::net::{FramedStream, RawStream, ShardAddr, ShardListener};
+use crate::shard::proto::{Msg, MsgRef};
+
+/// What a shard daemon hosts: the default env spec plus the executor
+/// knobs every connection's pool is built with.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Default env spec (bare id or mixture) for clients whose `Hello`
+    /// does not name one.
+    pub env_spec: String,
+    /// Executor kind behind every connection ([`ExecutorKind::PoolSync`]
+    /// is the default and the only kind that serves `RandomRollout`).
+    pub kind: ExecutorKind,
+    /// Lane count when the spec is a bare id (mixtures carry their own).
+    pub lanes: usize,
+    /// Worker threads per connection executor (`0` = one per core).
+    pub threads: usize,
+    /// Stepping kernel ([`KernelMode::Fused`] by default).
+    pub kernel: KernelMode,
+}
+
+impl ServeConfig {
+    /// Defaults: sync pool, one lane, all cores, fused kernels.
+    pub fn new(env_spec: &str) -> ServeConfig {
+        ServeConfig {
+            env_spec: env_spec.to_string(),
+            kind: ExecutorKind::PoolSync,
+            lanes: 1,
+            threads: 0,
+            kernel: KernelMode::default(),
+        }
+    }
+
+    fn effective_threads(&self) -> usize {
+        if self.threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            self.threads
+        }
+    }
+}
+
+/// The executor behind one connection.  The sync pool is kept concrete
+/// so the whole-workload `RandomRollout` command can run worker-side
+/// ([`EnvPool::random_rollout`] — one barrier, zero per-step frames).
+enum HostExec {
+    Pool(EnvPool),
+    Boxed(Box<dyn BatchedExecutor>),
+}
+
+impl HostExec {
+    fn exec(&mut self) -> &mut dyn BatchedExecutor {
+        match self {
+            HostExec::Pool(pool) => pool,
+            HostExec::Boxed(exec) => exec.as_mut(),
+        }
+    }
+
+    fn random_rollout(&mut self, steps_per_lane: u64) -> Option<RolloutCounts> {
+        match self {
+            HostExec::Pool(pool) => Some(pool.random_rollout(steps_per_lane)),
+            HostExec::Boxed(_) => None,
+        }
+    }
+}
+
+/// A bound-but-not-yet-serving shard daemon.
+pub struct ShardServer {
+    listener: ShardListener,
+    config: Arc<ServeConfig>,
+}
+
+impl ShardServer {
+    /// Bind `addr` (`unix://...` or `tcp://...`) and validate the
+    /// configured default spec eagerly, so a typo fails here and not on
+    /// the first client.
+    pub fn bind(addr: &str, config: ServeConfig) -> Result<ShardServer> {
+        validate_spec(&config.env_spec)?;
+        let addr = ShardAddr::parse(addr)?;
+        let listener = ShardListener::bind(&addr)?;
+        Ok(ShardServer {
+            listener,
+            config: Arc::new(config),
+        })
+    }
+
+    /// The bound address in dialable form (TCP reports the real port).
+    pub fn local_addr(&self) -> String {
+        self.listener.local_addr()
+    }
+
+    /// Serve until the process exits — the `cairl serve` foreground path.
+    pub fn run(self) -> Result<()> {
+        accept_loop(self.listener, self.config, None);
+        Ok(())
+    }
+
+    /// Serve on a background thread; the returned handle shuts the
+    /// accept loop down on [`ShardServerHandle::shutdown`] or drop.
+    /// In-flight connections drain on their own when clients hang up.
+    pub fn spawn(self) -> ShardServerHandle {
+        let stop = Arc::new(AtomicBool::new(false));
+        let addr = self.local_addr();
+        let stop_thread = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("cairl-shard-accept".into())
+            .spawn(move || accept_loop(self.listener, self.config, Some(stop_thread)))
+            .expect("spawn shard accept loop");
+        ShardServerHandle {
+            stop,
+            handle: Some(handle),
+            addr,
+        }
+    }
+}
+
+/// Handle to a background [`ShardServer`]; see [`ShardServer::spawn`].
+pub struct ShardServerHandle {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+    addr: String,
+}
+
+impl ShardServerHandle {
+    /// The served address (dialable).
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Stop accepting and join the accept loop.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(handle) = self.handle.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for ShardServerHandle {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+/// Eager validation of an env spec string (bare id or mixture).
+fn validate_spec(spec: &str) -> Result<()> {
+    if spec.is_empty() {
+        return Err(CairlError::Config("serve needs a non-empty env spec".into()));
+    }
+    if MixtureSpec::is_mixture(spec) {
+        MixtureSpec::parse(spec).map(|_| ())
+    } else {
+        registry::validate(spec)
+    }
+}
+
+/// Poll-accept until stopped (or forever when `stop` is `None`); each
+/// connection gets its own detached thread.
+fn accept_loop(listener: ShardListener, config: Arc<ServeConfig>, stop: Option<Arc<AtomicBool>>) {
+    loop {
+        if let Some(flag) = &stop {
+            if flag.load(Ordering::Acquire) {
+                return;
+            }
+        }
+        match listener.accept_nonblocking() {
+            Ok(Some(stream)) => {
+                let config = Arc::clone(&config);
+                let _ = std::thread::Builder::new()
+                    .name("cairl-shard-conn".into())
+                    .spawn(move || serve_conn(stream, &config));
+            }
+            Ok(None) => std::thread::sleep(Duration::from_millis(2)),
+            Err(_) => std::thread::sleep(Duration::from_millis(20)),
+        }
+    }
+}
+
+/// Best-effort error reply; the connection closes either way.
+fn bail(stream: &mut FramedStream, message: &str) {
+    let _ = stream.send(MsgRef::Error { message });
+}
+
+/// One connection: handshake, then request/reply until `Close`/EOF.
+fn serve_conn(stream: RawStream, config: &ServeConfig) {
+    let Ok(mut stream) = FramedStream::new(stream) else {
+        return;
+    };
+    let mut host: Option<HostExec> = None;
+    // Reusable step/reset buffers, sized at handshake.
+    let mut obs: Vec<f32> = Vec::new();
+    let mut transitions: Vec<Transition> = Vec::new();
+
+    loop {
+        let msg = match stream.recv() {
+            Ok(msg) => msg,
+            Err(CairlError::Io(_)) => return, // peer hung up
+            Err(e) => {
+                bail(&mut stream, &format!("bad frame: {e}"));
+                return;
+            }
+        };
+        match msg {
+            Msg::Hello {
+                spec,
+                base_seed,
+                first_lane,
+            } => {
+                let spec = if spec.is_empty() {
+                    config.env_spec.clone()
+                } else {
+                    spec
+                };
+                let threads = config.effective_threads();
+                let built: Result<HostExec> = match config.kind {
+                    // Keep the sync pool concrete so RandomRollout can
+                    // run worker-side with the *global* lane streams.
+                    ExecutorKind::PoolSync => build_env_pool_shard(
+                        &spec,
+                        config.lanes,
+                        threads,
+                        base_seed,
+                        first_lane as usize,
+                        config.kernel,
+                    )
+                    .map(HostExec::Pool),
+                    kind => build_executor_with_kernel(
+                        &spec,
+                        kind,
+                        config.lanes,
+                        threads,
+                        base_seed + first_lane,
+                        &[],
+                        config.kernel,
+                    )
+                    .map(HostExec::Boxed),
+                };
+                match built {
+                    Ok(mut built) => {
+                        let exec = built.exec();
+                        let n = exec.num_lanes();
+                        let d = exec.obs_dim();
+                        obs = vec![0.0f32; n * d];
+                        transitions = vec![Transition::default(); n];
+                        if stream
+                            .send(MsgRef::Spec {
+                                obs_dim: d as u64,
+                                lane_specs: exec.lane_specs(),
+                            })
+                            .is_err()
+                        {
+                            return;
+                        }
+                        host = Some(built);
+                    }
+                    Err(e) => {
+                        bail(&mut stream, &format!("cannot host {spec:?}: {e}"));
+                        return;
+                    }
+                }
+            }
+            Msg::Reset => {
+                let Some(host) = host.as_mut() else {
+                    bail(&mut stream, "Reset before Hello");
+                    return;
+                };
+                let ok = catch_exec(|| host.exec().reset_into(&mut obs));
+                if !ok {
+                    bail(&mut stream, "executor panicked during Reset");
+                    return;
+                }
+                if stream.send(MsgRef::Obs { obs: &obs }).is_err() {
+                    return;
+                }
+            }
+            Msg::Step { actions } => {
+                let Some(host) = host.as_mut() else {
+                    bail(&mut stream, "Step before Hello");
+                    return;
+                };
+                if actions.len() != transitions.len() {
+                    bail(
+                        &mut stream,
+                        &format!(
+                            "Step carried {} actions for {} lanes",
+                            actions.len(),
+                            transitions.len()
+                        ),
+                    );
+                    return;
+                }
+                let ok =
+                    catch_exec(|| host.exec().step_into(&actions, &mut obs, &mut transitions));
+                if !ok {
+                    bail(&mut stream, "executor panicked during Step");
+                    return;
+                }
+                if stream
+                    .send(MsgRef::StepResult {
+                        obs: &obs,
+                        transitions: &transitions,
+                    })
+                    .is_err()
+                {
+                    return;
+                }
+            }
+            Msg::RandomRollout { steps_per_lane } => {
+                let Some(host) = host.as_mut() else {
+                    bail(&mut stream, "RandomRollout before Hello");
+                    return;
+                };
+                let mut counts = None;
+                let ok = catch_exec(|| counts = host.random_rollout(steps_per_lane));
+                if !ok {
+                    bail(&mut stream, "executor panicked during RandomRollout");
+                    return;
+                }
+                match counts {
+                    Some(c) => {
+                        if stream
+                            .send(MsgRef::RolloutDone {
+                                steps: c.steps,
+                                episodes: c.episodes,
+                            })
+                            .is_err()
+                        {
+                            return;
+                        }
+                    }
+                    None => {
+                        bail(
+                            &mut stream,
+                            "RandomRollout needs a pool-sync shard (serve --executor pool)",
+                        );
+                        return;
+                    }
+                }
+            }
+            Msg::Close => return,
+            other => {
+                bail(&mut stream, &format!("unexpected message {other:?}"));
+                return;
+            }
+        }
+    }
+}
+
+/// Run an executor call, converting a panic (a poisoned pool) into a
+/// clean `false` so the client gets an `Error` frame instead of EOF.
+fn catch_exec(f: impl FnOnce()) -> bool {
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)).is_ok()
+}

@@ -5,44 +5,31 @@
 //! Unbounded dimensions (`|bound| >= f32::MAX`, e.g. CartPole velocities)
 //! are passed through unchanged.
 
+use crate::core::batch::ObsAffine;
 use crate::core::env::{Env, Transition};
 use crate::core::spaces::{Action, Space};
 use crate::render::Framebuffer;
 
 /// Linearly maps each bounded observation dimension to `[-1, 1]`.
+///
+/// The affine factors live in [`ObsAffine`], which is also what the
+/// fused batch kernels apply as an epilogue — one arithmetic, two
+/// call sites, bit-identical by construction.
 #[derive(Clone, Debug)]
 pub struct NormalizeObs<E: Env> {
     inner: E,
-    /// Per-dimension (centre, half-range) or None for unbounded dims.
-    scale: Vec<Option<(f32, f32)>>,
+    affine: ObsAffine,
 }
 
 impl<E: Env> NormalizeObs<E> {
     pub fn new(inner: E) -> Self {
-        let scale = match inner.observation_space() {
-            Space::Box { low, high, .. } => low
-                .iter()
-                .zip(&high)
-                .map(|(&lo, &hi)| {
-                    if lo <= f32::MIN || hi >= f32::MAX || hi <= lo {
-                        None
-                    } else {
-                        Some(((lo + hi) * 0.5, (hi - lo) * 0.5))
-                    }
-                })
-                .collect(),
-            Space::Discrete { .. } => vec![None],
-        };
-        NormalizeObs { inner, scale }
+        let affine = ObsAffine::from_space(&inner.observation_space());
+        NormalizeObs { inner, affine }
     }
 
     #[inline]
     fn apply(&self, obs: &mut [f32]) {
-        for (o, s) in obs.iter_mut().zip(&self.scale) {
-            if let Some((centre, half)) = s {
-                *o = (*o - centre) / half;
-            }
-        }
+        self.affine.apply(obs);
     }
 }
 
@@ -57,11 +44,12 @@ impl<E: Env> Env for NormalizeObs<E> {
                 let (lo2, hi2) = low
                     .iter()
                     .zip(&high)
-                    .map(|(&lo, &hi)| {
-                        if lo <= f32::MIN || hi >= f32::MAX || hi <= lo {
-                            (lo, hi)
-                        } else {
+                    .enumerate()
+                    .map(|(i, (&lo, &hi))| {
+                        if self.affine.is_bounded(i) {
                             (-1.0, 1.0)
+                        } else {
+                            (lo, hi)
                         }
                     })
                     .unzip();

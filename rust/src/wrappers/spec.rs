@@ -19,6 +19,7 @@
 //! zero-dispatch static composition, and `rust/tests/env_spec.rs` pins
 //! that both spellings produce bit-identical trajectories.
 
+use crate::core::batch::{AffineEpilogue, FusedChain};
 use crate::core::env::DynEnv;
 use crate::core::error::{CairlError, Result};
 use crate::core::kwargs::Kwargs;
@@ -128,17 +129,30 @@ impl WrapperSpec {
     }
 
     /// The wrapper chains a fused SoA batch kernel
-    /// ([`FusedBatch`](crate::core::batch::FusedBatch)) can absorb:
-    /// the empty chain (`Some(None)`) or a single `TimeLimit` layer
-    /// (`Some(Some(max_steps))`, folded into the kernel's step
-    /// counter).  Anything else returns `None` — those lanes fall back
-    /// to [`ScalarBatch`](crate::core::batch::ScalarBatch) stepping.
-    pub fn as_fused_time_limit(chain: &[WrapperSpec]) -> Option<Option<u32>> {
-        match chain {
-            [] => Some(None),
-            [WrapperSpec::TimeLimit { max_steps }] => Some(Some(*max_steps)),
-            _ => None,
-        }
+    /// ([`FusedBatch`](crate::core::batch::FusedBatch)) can absorb, as
+    /// a [`FusedChain`]: an optional `TimeLimit` (folded into the
+    /// kernel's step counter) followed by at most one **trailing**
+    /// affine layer — `NormalizeObs` or `RewardScale`, both pure
+    /// per-lane affine maps the kernel applies as an epilogue
+    /// ([`AffineEpilogue`]).  Anything else (longer chains, other
+    /// wrappers, an affine layer *under* the time limit) returns `None`
+    /// — those lanes fall back to
+    /// [`ScalarBatch`](crate::core::batch::ScalarBatch) stepping.
+    pub fn as_fused_chain(chain: &[WrapperSpec]) -> Option<FusedChain> {
+        let (max_steps, trailing) = match chain {
+            [WrapperSpec::TimeLimit { max_steps }, rest @ ..] => (Some(*max_steps), rest),
+            rest => (None, rest),
+        };
+        let epilogue = match trailing {
+            [] => None,
+            [WrapperSpec::NormalizeObs] => Some(AffineEpilogue::NormalizeObs),
+            [WrapperSpec::RewardScale { scale, shift }] => Some(AffineEpilogue::RewardScale {
+                scale: *scale,
+                shift: *shift,
+            }),
+            _ => return None,
+        };
+        Some(FusedChain { max_steps, epilogue })
     }
 
     /// Parse one item of the chain grammar (see the module docs).
@@ -377,23 +391,66 @@ mod tests {
     }
 
     #[test]
-    fn fused_time_limit_accepts_only_bare_or_time_limited_chains() {
-        assert_eq!(WrapperSpec::as_fused_time_limit(&[]), Some(None));
+    fn fused_chain_absorbs_a_single_trailing_affine_layer() {
+        use crate::core::batch::{AffineEpilogue, FusedChain};
         assert_eq!(
-            WrapperSpec::as_fused_time_limit(&[WrapperSpec::TimeLimit { max_steps: 500 }]),
-            Some(Some(500))
+            WrapperSpec::as_fused_chain(&[]),
+            Some(FusedChain {
+                max_steps: None,
+                epilogue: None,
+            })
         );
         assert_eq!(
-            WrapperSpec::as_fused_time_limit(&[WrapperSpec::NormalizeObs]),
-            None
+            WrapperSpec::as_fused_chain(&[WrapperSpec::TimeLimit { max_steps: 500 }]),
+            Some(FusedChain {
+                max_steps: Some(500),
+                epilogue: None,
+            })
         );
         assert_eq!(
-            WrapperSpec::as_fused_time_limit(&[
+            WrapperSpec::as_fused_chain(&[
                 WrapperSpec::TimeLimit { max_steps: 500 },
                 WrapperSpec::PixelObs { size: 16 },
             ]),
             None
         );
+        assert_eq!(
+            WrapperSpec::as_fused_chain(&[
+                WrapperSpec::TimeLimit { max_steps: 200 },
+                WrapperSpec::NormalizeObs,
+            ]),
+            Some(FusedChain {
+                max_steps: Some(200),
+                epilogue: Some(AffineEpilogue::NormalizeObs),
+            })
+        );
+        assert_eq!(
+            WrapperSpec::as_fused_chain(&[WrapperSpec::RewardScale {
+                scale: 0.5,
+                shift: 0.25,
+            }]),
+            Some(FusedChain {
+                max_steps: None,
+                epilogue: Some(AffineEpilogue::RewardScale {
+                    scale: 0.5,
+                    shift: 0.25,
+                }),
+            })
+        );
+        // Longer chains, other wrappers, or an affine layer *under* the
+        // time limit all fall back.
+        for chain in [
+            &[WrapperSpec::NormalizeObs, WrapperSpec::NormalizeObs][..],
+            &[
+                WrapperSpec::TimeLimit { max_steps: 200 },
+                WrapperSpec::NormalizeObs,
+                WrapperSpec::RewardScale { scale: 1.0, shift: 0.0 },
+            ][..],
+            &[WrapperSpec::NormalizeObs, WrapperSpec::TimeLimit { max_steps: 200 }][..],
+            &[WrapperSpec::ClipReward { lo: -1.0, hi: 1.0 }][..],
+        ] {
+            assert_eq!(WrapperSpec::as_fused_chain(chain), None, "{chain:?}");
+        }
     }
 
     #[test]

@@ -177,25 +177,95 @@ fn mixtures_fuse_per_group_with_scalar_fallback_lanes() {
 
 #[test]
 fn wrap_chains_force_the_scalar_fallback_and_stay_identical() {
-    // An extra --wrap chain can't be absorbed by a fused kernel: both
-    // kernel modes must run the same scalar lanes.
-    let chain = [WrapperSpec::NormalizeObs];
-    let run = |kernel: KernelMode| {
-        let mut exec = build_executor_with_kernel(
-            "CartPole-v1?max_steps=25",
-            ExecutorKind::PoolSync,
-            4,
-            2,
-            BASE_SEED,
-            &chain,
-            kernel,
-        )
-        .unwrap();
-        let specs = exec.lane_specs().to_vec();
-        let tape = action_tape(&specs, 60, 9);
-        trajectory(exec.as_mut(), &tape)
-    };
-    assert_eq!(run(KernelMode::Scalar), run(KernelMode::Fused));
+    // An extra --wrap chain the kernels cannot absorb (ClipReward, and
+    // a two-layer affine stack): both kernel modes must run the same
+    // scalar lanes.
+    for chain in [
+        vec![WrapperSpec::ClipReward { lo: -1.0, hi: 0.5 }],
+        vec![
+            WrapperSpec::NormalizeObs,
+            WrapperSpec::RewardScale { scale: 0.5, shift: 0.25 },
+        ],
+    ] {
+        assert!(
+            registry::fused_lane_builder_with("CartPole-v1?max_steps=25", &chain)
+                .unwrap()
+                .is_none(),
+            "{chain:?} must not fuse"
+        );
+        let run = |kernel: KernelMode| {
+            let mut exec = build_executor_with_kernel(
+                "CartPole-v1?max_steps=25",
+                ExecutorKind::PoolSync,
+                4,
+                2,
+                BASE_SEED,
+                &chain,
+                kernel,
+            )
+            .unwrap();
+            let specs = exec.lane_specs().to_vec();
+            let tape = action_tape(&specs, 60, 9);
+            trajectory(exec.as_mut(), &tape)
+        };
+        assert_eq!(run(KernelMode::Scalar), run(KernelMode::Fused));
+    }
+}
+
+#[test]
+fn trailing_affine_wrap_chains_fuse_bit_identically() {
+    // A single trailing NormalizeObs or RewardScale is absorbed into
+    // the kernel's affine epilogue — the fused path must reproduce the
+    // scalar wrapper stack bit for bit, on every executor kind and
+    // thread count, auto-reset included.
+    let chains = [
+        vec![WrapperSpec::NormalizeObs],
+        vec![WrapperSpec::RewardScale { scale: 2.0, shift: -0.5 }],
+    ];
+    for chain in &chains {
+        for spec in ["CartPole-v1?max_steps=25", "MountainCar-v0?max_steps=30"] {
+            // The configuration really takes the fused path.
+            assert!(
+                registry::fused_lane_builder_with(spec, chain).unwrap().is_some(),
+                "{spec} + {chain:?} must fuse"
+            );
+            let mut reference = build_executor_with_kernel(
+                spec,
+                ExecutorKind::Sequential,
+                4,
+                1,
+                BASE_SEED,
+                chain,
+                KernelMode::Scalar,
+            )
+            .unwrap();
+            let specs_ref = reference.lane_specs().to_vec();
+            let tape = action_tape(&specs_ref, STEPS, 13);
+            let reference_trace = trajectory(reference.as_mut(), &tape);
+            let ends = reference_trace.1.iter().filter(|t| t.done || t.truncated).count();
+            assert!(ends > 0, "{spec}: the tape must exercise auto-reset");
+            for kind in EXECUTORS {
+                for threads in test_threads() {
+                    let mut fused = build_executor_with_kernel(
+                        spec,
+                        kind,
+                        4,
+                        threads,
+                        BASE_SEED,
+                        chain,
+                        KernelMode::Fused,
+                    )
+                    .unwrap();
+                    assert_eq!(fused.lane_specs(), &specs_ref[..]);
+                    let trace = trajectory(fused.as_mut(), &tape);
+                    assert_eq!(
+                        reference_trace, trace,
+                        "{spec} + {chain:?} diverged ({kind:?}, {threads}t)"
+                    );
+                }
+            }
+        }
+    }
 }
 
 #[test]

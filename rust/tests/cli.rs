@@ -185,6 +185,96 @@ fn run_rejects_bad_mixture_spec() {
     assert!(stderr.contains("zero lanes"), "{stderr}");
 }
 
+#[test]
+fn run_writes_a_deterministic_returns_log() {
+    // The same spec/seed must produce byte-identical episode-return
+    // logs on different executors — the artifact the CI shard-smoke
+    // job diffs.
+    let dir = std::env::temp_dir();
+    let log = |tag: &str| {
+        dir.join(format!("cairl-returns-{}-{tag}.log", std::process::id()))
+    };
+    let run = |executor: &str, path: &std::path::Path| {
+        let (stdout, stderr, ok) = cairl(&[
+            "run", "--env", "CartPole-v1?max_steps=20", "--steps", "2000",
+            "--seed", "3", "--lanes", "4", "--executor", executor,
+            "--threads", "2", "--returns-log", path.to_str().unwrap(),
+        ]);
+        assert!(ok, "{stdout}\n{stderr}");
+    };
+    let (vec_log, pool_log) = (log("vec"), log("pool"));
+    run("vec", &vec_log);
+    run("pool", &pool_log);
+    let a = std::fs::read_to_string(&vec_log).unwrap();
+    let b = std::fs::read_to_string(&pool_log).unwrap();
+    assert!(a.lines().count() > 10, "{a:?}");
+    assert_eq!(a, b, "returns logs must be executor-invariant");
+    let _ = std::fs::remove_file(&vec_log);
+    let _ = std::fs::remove_file(&pool_log);
+}
+
+#[cfg(unix)]
+#[test]
+fn serve_and_run_shard_round_trip_via_cli() {
+    // The CI shard-smoke job in miniature: serve a mixture on a unix
+    // socket, run a seeded sharded workload against it, and require
+    // the episode-return log to equal the local executor's.
+    use std::process::{Command, Stdio};
+    let dir = std::env::temp_dir();
+    let sock = dir.join(format!("cairl-cli-shard-{}.sock", std::process::id()));
+    let addr = format!("unix://{}", sock.display());
+    let spec = "CartPole-v1?max_steps=25:3,MountainCar-v0?max_steps=30:2";
+    let mut server = Command::new(env!("CARGO_BIN_EXE_cairl"))
+        .args(["serve", "--env", spec, "--listen", &addr, "--threads", "2"])
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn serve daemon");
+    // Wait for the socket to appear.
+    for _ in 0..100 {
+        if sock.exists() {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    assert!(sock.exists(), "serve daemon never bound {addr}");
+
+    let shard_log = dir.join(format!("cairl-cli-shard-{}.log", std::process::id()));
+    let local_log = dir.join(format!("cairl-cli-local-{}.log", std::process::id()));
+    let (stdout, stderr, ok) = cairl(&[
+        "run", "--env", spec, "--steps", "4000", "--seed", "11",
+        "--shard", &addr, "--returns-log", shard_log.to_str().unwrap(),
+    ]);
+    let _ = server.kill();
+    let _ = server.wait();
+    assert!(ok, "{stdout}\n{stderr}");
+    assert!(stdout.contains("[1 shards x 5 lanes]"), "{stdout}");
+    assert!(stderr.contains("shard plan:"), "{stderr}");
+
+    let (stdout, stderr, ok) = cairl(&[
+        "run", "--env", spec, "--steps", "4000", "--seed", "11",
+        "--executor", "vec", "--returns-log", local_log.to_str().unwrap(),
+    ]);
+    assert!(ok, "{stdout}\n{stderr}");
+    let sharded = std::fs::read_to_string(&shard_log).unwrap();
+    let local = std::fs::read_to_string(&local_log).unwrap();
+    assert!(sharded.lines().count() > 5, "{sharded:?}");
+    assert_eq!(sharded, local, "sharded and local returns logs must match");
+    let _ = std::fs::remove_file(&shard_log);
+    let _ = std::fs::remove_file(&local_log);
+    let _ = std::fs::remove_file(&sock);
+}
+
+#[test]
+fn run_shard_rejects_wrap_chains() {
+    let (_, stderr, ok) = cairl(&[
+        "run", "--env", "CartPole-v1", "--steps", "100",
+        "--shard", "unix:///tmp/nonexistent-cairl.sock", "--wrap", "NormalizeObs",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("--wrap is not supported"), "{stderr}");
+}
+
 /// The episode count out of a `run` report line
 /// (`"...: N steps, M episodes, ..."`).
 fn episode_count(stdout: &str) -> u64 {
