@@ -1,7 +1,8 @@
 #!/usr/bin/env python3
 """Compare this run's BENCH_ci.json against the previous run's artifact.
 
-Usage: bench_trend.py <current_json> <previous_json_or_dir> [--threshold PCT]
+Usage: bench_trend.py <current_json> <previous_json_or_dir>
+                      [--threshold PCT] [--fallback PATH]
 
 Pairs up the `steps_per_sec_lines` entries of the two documents by their
 shape (every digit run collapsed, so timing noise inside a label does
@@ -12,11 +13,20 @@ ROADMAP's trend-tracking bar).  Regressions never fail the build — the
 CI bench runners are shared and quick-mode budgets are tiny — but the
 annotations make a real regression visible on the PR.
 
+`--fallback PATH` names a document to compare against when the previous
+artifact is missing or unreadable — in this repo, the tracked
+`BENCH_baseline.json` anchor, so the first run on a branch (or a fork
+without artifact access) still gets a comparison.  A document carrying
+`"baseline": true` downgrades regression `::warning::`s to
+`::notice::`s: baseline numbers are machine-dependent estimates, good
+for "did throughput fall off a cliff", not percent-level deltas.
+
 Exit status: 0 always, unless the *current* document is unreadable.
 A missing previous artifact (first run on a branch, expired retention,
-failed download) degrades gracefully: an informational `::notice::`
-annotation, exit 0.  A corrupt/unreadable previous artifact is treated
-the same way — only the current document is load-bearing.
+failed download) with no usable fallback degrades gracefully: an
+informational `::notice::` annotation, exit 0.  A corrupt/unreadable
+previous artifact is treated the same way — only the current document
+is load-bearing.
 """
 
 import json
@@ -76,12 +86,31 @@ def find_previous(arg: Path) -> Path | None:
     return None
 
 
-def main() -> int:
-    args = [a for a in sys.argv[1:] if not a.startswith("--")]
+def parse_args(argv: list[str]) -> tuple[list[str], float, Path | None]:
+    """Positional args, --threshold, --fallback.  Both flags accept
+    `--flag value` and `--flag=value` spellings."""
+    positional: list[str] = []
     threshold = 20.0
-    for flag in sys.argv[1:]:
-        if flag.startswith("--threshold"):
-            threshold = float(flag.split("=", 1)[1])
+    fallback: Path | None = None
+    i = 0
+    while i < len(argv):
+        arg = argv[i]
+        if arg.startswith("--threshold"):
+            value = arg.split("=", 1)[1] if "=" in arg else argv[i + 1]
+            i += 1 if "=" in arg else 2
+            threshold = float(value)
+        elif arg.startswith("--fallback"):
+            value = arg.split("=", 1)[1] if "=" in arg else argv[i + 1]
+            i += 1 if "=" in arg else 2
+            fallback = Path(value)
+        else:
+            positional.append(arg)
+            i += 1
+    return positional, threshold, fallback
+
+
+def main() -> int:
+    args, threshold, fallback = parse_args(sys.argv[1:])
     if len(args) != 2:
         print(__doc__, file=sys.stderr)
         return 2
@@ -90,26 +119,45 @@ def main() -> int:
     current_doc = load_doc(current_path)
     current = lines_table(current_doc)
 
+    previous_doc: dict | None = None
     previous_path = find_previous(Path(args[1]))
-    if previous_path is None:
+    if previous_path is not None:
+        try:
+            previous_doc = load_doc(previous_path)
+        except (OSError, ValueError, AttributeError, TypeError) as err:
+            # ValueError covers json.JSONDecodeError; AttributeError/
+            # TypeError cover well-formed JSON of the wrong shape (e.g.
+            # a bare null or list from a truncated upload).
+            print(
+                "::notice title=bench trend::previous BENCH_ci.json at "
+                f"{previous_path} is unreadable ({err})"
+            )
+            previous_doc = None
+    if previous_doc is None and fallback is not None:
+        try:
+            previous_doc = load_doc(fallback)
+            previous_path = fallback
+            print(
+                "::notice title=bench trend::no previous run artifact — "
+                f"comparing against the tracked anchor {fallback}"
+            )
+        except (OSError, ValueError, AttributeError, TypeError) as err:
+            print(
+                f"::notice title=bench trend::fallback {fallback} is "
+                f"unreadable ({err})"
+            )
+            previous_doc = None
+    if previous_doc is None:
         print(
             "::notice title=bench trend::no previous BENCH_ci.json artifact "
             f"under {args[1]!r} (first run on this branch, or retention "
             "expired) — nothing to compare against, skipping"
         )
         return 0
-    try:
-        previous_doc = load_doc(previous_path)
-        previous = lines_table(previous_doc)
-    except (OSError, ValueError, AttributeError, TypeError) as err:
-        # ValueError covers json.JSONDecodeError; AttributeError/TypeError
-        # cover well-formed JSON of the wrong shape (e.g. a bare null or
-        # list from a truncated upload).
-        print(
-            "::notice title=bench trend::previous BENCH_ci.json at "
-            f"{previous_path} is unreadable ({err}) — skipping comparison"
-        )
-        return 0
+    previous = lines_table(previous_doc)
+    # Baseline anchors carry estimated, machine-dependent figures; a
+    # delta against them is a sanity check, not a regression signal.
+    is_baseline = bool(previous_doc.get("baseline"))
 
     # Sharded rows (the `topology` column) only exist from the shard-PR
     # onward.  A previous artifact that predates the field has no
@@ -144,8 +192,12 @@ def main() -> int:
                 # Transport overhead regressions get their own label so
                 # shard-layer changes are attributable at a glance.
                 title = "sharded bench throughput regression"
+            severity = "warning"
+            if is_baseline:
+                severity = "notice"
+                title += " (vs tracked baseline estimates)"
             print(
-                f"::warning title={title}::"
+                f"::{severity} title={title}::"
                 f"{key.strip()} dropped {-delta:.0f}% "
                 f"({old:.0f} -> {new:.0f} steps/s)"
             )

@@ -1,0 +1,76 @@
+#!/usr/bin/env python3
+"""Check that every relative markdown link resolves to a real file.
+
+Usage: check_links.py <file-or-dir> [<file-or-dir> ...]
+
+Scans the given markdown files (directories are searched recursively
+for *.md) for inline links and images — `[text](target)` — and fails
+listing every target that does not exist on disk.  External links
+(http/https/mailto) and pure in-page anchors (`#section`) are skipped;
+a `path#fragment` target is checked for the path only.  This keeps the
+README and docs/ cross-reference web (ARCHITECTURE.md, the wire spec,
+source-file pointers) from silently rotting as files move.
+
+Exit status: 0 when every link resolves, 1 otherwise, 2 on bad usage.
+"""
+
+import re
+import sys
+from pathlib import Path
+
+# Inline link or image: [text](target) / ![alt](target).  Nested
+# brackets in the text are rare in this repo and not worth a full
+# CommonMark parser; the target group stops at the first unbalanced ')'.
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^()\s]+(?:\([^()]*\)[^()\s]*)*)\)")
+
+SKIP_PREFIXES = ("http://", "https://", "mailto:")
+
+
+def collect(args: list[str]) -> list[Path]:
+    files: list[Path] = []
+    for arg in args:
+        path = Path(arg)
+        if path.is_dir():
+            files.extend(sorted(path.rglob("*.md")))
+        elif path.is_file():
+            files.append(path)
+        else:
+            print(f"check_links: no such file or directory: {arg}", file=sys.stderr)
+            sys.exit(2)
+    return files
+
+
+def main() -> int:
+    if len(sys.argv) < 2:
+        print(__doc__, file=sys.stderr)
+        return 2
+
+    broken: list[tuple[Path, str]] = []
+    checked = 0
+    for md in collect(sys.argv[1:]):
+        text = md.read_text(errors="replace")
+        # Fenced code blocks contain things that look like links
+        # (e.g. JSON with brackets); drop them before matching.
+        text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+        for match in LINK_RE.finditer(text):
+            target = match.group(1)
+            if target.startswith(SKIP_PREFIXES) or target.startswith("#"):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            checked += 1
+            if not (md.parent / rel).exists():
+                broken.append((md, target))
+
+    if broken:
+        for md, target in broken:
+            print(f"::error file={md}::broken relative link: {target}")
+        print(f"check_links: {len(broken)} broken link(s) out of {checked} checked")
+        return 1
+    print(f"check_links: all {checked} relative links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -293,7 +293,7 @@ fn executor_comparison() {
 /// baselines, skip) sharded rows explicitly.
 #[cfg(unix)]
 fn shard_rows(log: &mut CsvLogger, seq: f64, lanes: usize, steps_per_lane: u64, trials: u64) {
-    use cairl::shard::{ServeConfig, ShardServer, ShardedEnvPool};
+    use cairl::shard::{ServeConfig, ShardPoolOptions, ShardServer, ShardedEnvPool};
 
     let shards = 2usize;
     let mut addrs = Vec::new();
@@ -335,6 +335,46 @@ fn shard_rows(log: &mut CsvLogger, seq: f64, lanes: usize, steps_per_lane: u64, 
         lanes.to_string(),
         steps_per_lane.to_string(),
         format!("{tput:.0}"),
+        format!("shard-{shards}"),
+    ])
+    .unwrap();
+
+    // Pipelined row: the same fabric with 4 batches in flight per
+    // shard, so wire latency overlaps env compute.  The label's
+    // digit-collapsed shape ("shard-#-pipe#") keeps the trend tracker
+    // from pairing it against the lockstep "shard-#" row.
+    let depth = 4usize;
+    let mut pipe_latency_us = f64::INFINITY;
+    let pipe_tput = (0..trials)
+        .map(|trial| {
+            let opts = ShardPoolOptions {
+                lanes,
+                base_seed: trial,
+                pipeline: depth,
+                costs: Some(costs.clone()),
+                ..Default::default()
+            };
+            let mut pool = ShardedEnvPool::connect_opts(&addrs, "CartPole-v1", opts)
+                .expect("connect bench shards (pipelined)");
+            let r = pool.run_pipelined_workload(steps_per_lane, trial);
+            let per_batch = r.elapsed.as_secs_f64() * 1e6 / steps_per_lane as f64;
+            pipe_latency_us = pipe_latency_us.min(per_batch);
+            r.throughput
+        })
+        .fold(0.0, f64::max);
+    println!(
+        "{:<26} {pipe_tput:>12.0} steps/s  ({:.2}x sequential, {:.1} us/batch, depth {depth})",
+        format!("EnvPool shard-{shards}-pipe{depth}"),
+        pipe_tput / seq,
+        pipe_latency_us
+    );
+    log.row(&[
+        format!("shard-{shards}-pipe{depth}"),
+        "fused".into(),
+        "2".into(),
+        lanes.to_string(),
+        steps_per_lane.to_string(),
+        format!("{pipe_tput:.0}"),
         format!("shard-{shards}"),
     ])
     .unwrap();

@@ -146,6 +146,13 @@ pub struct ExecutorSettings {
     /// instead of a local executor; `kind`/`threads`/`kernel` then
     /// apply on the serving side.  `cairl run --shard` overrides it.
     pub shards: Vec<String>,
+    /// Batches kept in flight per shard connection (`1` = lockstep;
+    /// clamped to [`MAX_PIPELINE`](crate::shard::MAX_PIPELINE)).
+    /// `cairl run --pipeline` overrides it.
+    pub pipeline: usize,
+    /// Auth token presented to `--token`'d shard daemons (`""` = none).
+    /// `cairl run --token` overrides it.
+    pub shard_token: String,
 }
 
 impl Default for ExecutorSettings {
@@ -156,6 +163,8 @@ impl Default for ExecutorSettings {
             threads: 0,
             kernel: KernelMode::default().label().into(),
             shards: Vec::new(),
+            pipeline: 1,
+            shard_token: String::new(),
         }
     }
 }
@@ -212,6 +221,12 @@ impl ExecutorSettings {
                 .filter_map(Value::as_str)
                 .map(str::to_string)
                 .collect();
+        }
+        if let Some(x) = v.get("pipeline").and_then(Value::as_f64) {
+            self.pipeline = (x as usize).max(1);
+        }
+        if let Some(s) = v.get("shard_token").and_then(Value::as_str) {
+            self.shard_token = s.to_string();
         }
     }
 }
@@ -327,7 +342,8 @@ impl ExperimentConfig {
              \"memory_size\": {},\n    \"learn_start\": {},\n    \"train_every\": {},\n    \
              \"max_steps\": {},\n    \"solve_return\": {},\n    \"solve_window\": {}\n  \
              }},\n  \"executor\": {{\n    \"kind\": \"{}\",\n    \"lanes\": {},\n    \
-             \"threads\": {},\n    \"kernel\": \"{}\",\n    \"shards\": [{}]\n  }}\n}}",
+             \"threads\": {},\n    \"kernel\": \"{}\",\n    \"shards\": [{}],\n    \
+             \"pipeline\": {},\n    \"shard_token\": {:?}\n  }}\n}}",
             self.env,
             wrappers,
             self.agent,
@@ -350,6 +366,8 @@ impl ExperimentConfig {
             self.executor.threads,
             self.executor.kernel,
             self.executor.shards.iter().map(|s| format!("{s:?}")).collect::<Vec<_>>().join(", "),
+            self.executor.pipeline,
+            self.executor.shard_token,
         )
     }
 }
@@ -482,8 +500,26 @@ mod tests {
         );
         let back = ExperimentConfig::parse(&cfg.render()).unwrap();
         assert_eq!(back, cfg);
-        // Default: no shards, local execution.
-        assert!(ExperimentConfig::parse("{}").unwrap().executor.shards.is_empty());
+        // Default: no shards, local execution, lockstep, no token.
+        let bare = ExperimentConfig::parse("{}").unwrap();
+        assert!(bare.executor.shards.is_empty());
+        assert_eq!(bare.executor.pipeline, 1);
+        assert!(bare.executor.shard_token.is_empty());
+    }
+
+    #[test]
+    fn parses_pipeline_and_token() {
+        let cfg = ExperimentConfig::parse(
+            r#"{"executor": {"shards": ["tcp://10.0.0.2:7000"], "pipeline": 4, "shard_token": "hunter2"}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.executor.pipeline, 4);
+        assert_eq!(cfg.executor.shard_token, "hunter2");
+        let back = ExperimentConfig::parse(&cfg.render()).unwrap();
+        assert_eq!(back, cfg);
+        // pipeline 0 would deadlock the window; it clamps to lockstep.
+        let zero = ExperimentConfig::parse(r#"{"executor": {"pipeline": 0}}"#).unwrap();
+        assert_eq!(zero.executor.pipeline, 1);
     }
 
     #[test]

@@ -405,6 +405,13 @@ pub fn build_mixture_executor_wrapped(
 /// and the workload behind the executor comparison in
 /// `benches/fig1_console.rs`.  `steps` in the result counts lane-steps
 /// (`steps_per_lane * num_lanes`).
+///
+/// Actions are sampled obs-independently, one batch ahead of the step
+/// that consumes them; the pipelined driver
+/// ([`ShardedEnvPool::run_pipelined_workload`]
+/// (crate::shard::ShardedEnvPool::run_pipelined_workload)) draws the
+/// identical RNG stream at submit time, so its `episode_returns` log is
+/// byte-identical to this lockstep loop at any pipeline depth.
 pub fn run_batched_workload(
     exec: &mut dyn BatchedExecutor,
     steps_per_lane: u64,

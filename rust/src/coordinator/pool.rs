@@ -270,7 +270,12 @@ fn group_by_worker(built: Vec<BuiltGroup>, n: usize, chunk: usize) -> Vec<Vec<Bu
 /// enforce): lane `i` behaves exactly like a single env seeded
 /// `base_seed + i`, stepped sequentially with auto-reset — executors
 /// differ only in *how fast* the batch advances.  Lanes may run
-/// different environments; see the module docs on padding.
+/// different environments; see the module docs on padding.  The
+/// contract extends across the shard fabric: a
+/// [`ShardedEnvPool`](crate::shard::ShardedEnvPool) upholds it over
+/// remote lanes, through its pipelined in-flight window and even across
+/// mid-workload shard failovers (`docs/ARCHITECTURE.md` states the full
+/// determinism contract once).
 pub trait BatchedExecutor {
     /// Number of lanes in the batch.
     fn num_lanes(&self) -> usize;

@@ -23,6 +23,10 @@ pub enum CairlError {
     /// Shard transport/protocol failures (frame corruption, handshake
     /// mismatches, a remote shard replying with an error).
     Shard(String),
+    /// A shard daemon exists but cannot take the work right now (lane
+    /// budget exhausted, `Busy` retries spent).  Distinct from
+    /// [`CairlError::Shard`] so callers can back off instead of failing.
+    Unavailable(String),
     /// Underlying I/O.
     Io(std::io::Error),
 }
@@ -39,6 +43,7 @@ impl fmt::Display for CairlError {
             CairlError::Vm(m) => write!(f, "vm trap: {m}"),
             CairlError::Config(m) => write!(f, "config error: {m}"),
             CairlError::Shard(m) => write!(f, "shard error: {m}"),
+            CairlError::Unavailable(m) => write!(f, "shard unavailable: {m}"),
             CairlError::Io(e) => write!(f, "io error: {e}"),
         }
     }

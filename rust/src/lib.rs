@@ -56,9 +56,19 @@
 //! ([`shard::ShardServer`]) and [`shard::ShardedEnvPool`] is a
 //! `BatchedExecutor` over one or more such shards — same `lane_specs()`
 //! layout, bit-identical trajectories, with mixture components placed
-//! by measured per-env step cost ([`shard::ShardPlan`]).  `cairl run
-//! --shard unix:///tmp/s0.sock` flips a workload from local to remote;
-//! see README §"Sharded execution".
+//! by measured per-env step cost ([`shard::ShardPlan`]).  The fabric is
+//! production-shaped: requests are sequence-numbered and pipelined
+//! (`cairl run --shard ... --pipeline 4` keeps four batches in flight
+//! per shard), a lost connection fails over transparently (re-dial with
+//! bounded backoff, deterministic replay of the lost lanes, re-plan
+//! onto a surviving shard as the fallback — trajectories stay
+//! bit-identical throughout), and one daemon serves many clients under
+//! an optional lane budget and auth token (`cairl serve --max-lanes
+//! --token`, introspected live via `cairl serve --status ADDR`).
+//! `cairl run --shard unix:///tmp/s0.sock` flips a workload from local
+//! to remote; see README §"Sharded execution", the layer map in
+//! `docs/ARCHITECTURE.md` and the normative wire spec in
+//! `docs/shard-protocol.md`.
 //!
 //! ## The registry: `EnvSpec`, kwargs, wrapper chains
 //!
@@ -150,7 +160,9 @@ pub mod prelude {
     pub use crate::core::spaces::{Action, Space};
     pub use crate::envs::{Acrobot, CartPole, MountainCar, Pendulum};
     pub use crate::render::Framebuffer;
-    pub use crate::shard::{ServeConfig, ShardPlan, ShardServer, ShardedEnvPool};
+    pub use crate::shard::{
+        ServeConfig, ShardPlan, ShardPoolOptions, ShardServer, ShardedEnvPool,
+    };
     pub use crate::wrappers::{
         apply_wrappers, Flatten, RecordEpisodeStatistics, TimeLimit, WrapperSpec,
     };

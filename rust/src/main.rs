@@ -21,7 +21,7 @@ use cairl::energy::EnergyTracker;
 use cairl::envs::gridrts::{play_match, Bot, HarvestBot, MatchResult, RandomBot, RushBot};
 use cairl::render::Framebuffer;
 use cairl::runtime::Runtime;
-use cairl::shard::{ServeConfig, ShardServer, ShardedEnvPool};
+use cairl::shard::{shard_status, ServeConfig, ShardPoolOptions, ShardServer, ShardedEnvPool};
 use cairl::tooling::tournament::{swiss, GameOutcome};
 use cairl::wrappers::{apply_wrappers, WrapperSpec};
 use cairl::{list_envs, make};
@@ -87,7 +87,8 @@ COMMANDS:
   run        --env SPEC --steps N --seed S [--render] [--ascii]
              [--executor vec|pool|pool-async --lanes N --threads T]
              [--kernel scalar|fused]
-             [--shard ADDR[,ADDR...]] [--returns-log FILE]
+             [--shard ADDR[,ADDR...]] [--pipeline K] [--token T]
+             [--returns-log FILE]
              [--wrap \"TimeLimit(200),NormalizeObs\"]
              [--register-script NAME=FILE.mpy[,NAME=FILE.mpy...]]
              [--config FILE.json]
@@ -111,18 +112,30 @@ COMMANDS:
                                   matching defaults; --shard routes the batched
                                   workload through remote `cairl serve` shards
                                   (cost-aware lane placement, bit-identical to
-                                  the local run of the same SPEC/seed) and
+                                  the local run of the same SPEC/seed even
+                                  across shard failures — lost lanes replay
+                                  deterministically after reconnect);
+                                  --pipeline keeps up to K batches in flight
+                                  per shard (default 1 = lockstep), --token
+                                  authenticates against a --token'd daemon, and
                                   --returns-log writes every finished episode's
                                   return, one per line, for seed-parity diffs
   serve      --env SPEC --lanes N --listen ADDR
              [--executor vec|pool|pool-async] [--threads T]
-             [--kernel scalar|fused]
+             [--kernel scalar|fused] [--max-lanes N] [--token T]
+  serve      --status ADDR [--token T]
                                   host a batched environment shard: one framed
                                   stream and one private executor per client on
                                   a unix:///path.sock or tcp://host:port
                                   listener; clients (cairl run --shard,
                                   ShardedEnvPool) may request any registered
-                                  spec — --env is the default for bare Hellos
+                                  spec — --env is the default for bare Hellos;
+                                  --max-lanes caps total lanes across clients
+                                  (over-budget Hellos get a Busy backpressure
+                                  reply), --token requires clients to present a
+                                  shared secret; --status ADDR queries a running
+                                  daemon and prints its JSON report (per-client
+                                  lanes, pipeline depth, frames/sec, reconnects)
   train      --env NAME [--seed S] [--max-steps N] [--config FILE.json]
                                   train DQN via the PJRT artifacts
                                   (NAME: cartpole|mountaincar|acrobot|pendulum|multitask)
@@ -235,12 +248,23 @@ fn main() -> Result<()> {
                         );
                     }
                 }
-                let mut exec = ShardedEnvPool::connect(&shard_list, &env_id, lanes, seed)
+                let pipeline = args
+                    .u64("pipeline", file_cfg.executor.pipeline as u64)?
+                    .max(1) as usize;
+                let token = args.str("token", &file_cfg.executor.shard_token);
+                let opts = ShardPoolOptions {
+                    lanes,
+                    base_seed: seed,
+                    pipeline,
+                    token,
+                    ..Default::default()
+                };
+                let mut exec = ShardedEnvPool::connect_opts(&shard_list, &env_id, opts)
                     .map_err(|e| anyhow!("{e}"))?;
                 eprintln!("shard plan: {}", exec.plan().describe());
                 let lanes = cairl::coordinator::pool::BatchedExecutor::num_lanes(&exec);
                 let steps_per_lane = (steps / lanes as u64).max(1);
-                let r = run_batched_workload(&mut exec, steps_per_lane, seed);
+                let r = exec.run_pipelined_workload(steps_per_lane, seed);
                 println!(
                     "{env_id} [{} shards x {lanes} lanes]: {} lane-steps, \
                      {} episodes, {:.3}s, {:.0} steps/s",
@@ -250,6 +274,14 @@ fn main() -> Result<()> {
                     r.elapsed.as_secs_f64(),
                     r.throughput
                 );
+                let reconnects: u64 = exec.reconnects().iter().sum();
+                if reconnects > 0 {
+                    eprintln!(
+                        "shard failover: {reconnects} reconnect(s) across {} shard(s) \
+                         (returns unaffected — lost lanes replayed deterministically)",
+                        exec.shards()
+                    );
+                }
                 write_returns_log(&args, &r)?;
             } else if lanes > 1 || executor != "vec" || mixture {
                 // Batched path: flip executors without touching the workload.
@@ -329,10 +361,19 @@ fn main() -> Result<()> {
             }
         }
         "serve" => {
+            if let Some(addr) = args.opt("status") {
+                // Query mode: ask a running daemon for its JSON report.
+                let token = args.str("token", "");
+                let report = shard_status(addr, &token).map_err(|e| anyhow!("{e}"))?;
+                println!("{report}");
+                return Ok(());
+            }
             let env_spec = args.str("env", "CartPole-v1");
             let listen = args.str("listen", "unix:///tmp/cairl-shard.sock");
             let lanes = args.u64("lanes", 1)?.max(1) as usize;
             let threads = args.u64("threads", 0)? as usize;
+            let max_lanes = args.u64("max-lanes", 0)? as usize;
+            let token = args.str("token", "");
             let executor = args.str("executor", "pool");
             let kind = ExecutorKind::parse(&executor).ok_or_else(|| {
                 anyhow!("unknown executor {executor:?} (vec | pool | pool-async)")
@@ -349,6 +390,8 @@ fn main() -> Result<()> {
                     lanes,
                     threads,
                     kernel,
+                    max_lanes,
+                    token,
                 },
             )
             .map_err(|e| anyhow!("{e}"))?;

@@ -1,6 +1,6 @@
 //! The client half: [`ShardClient`] (one connection) and
 //! [`ShardedEnvPool`] (a [`BatchedExecutor`] over one or more remote
-//! shards).
+//! shards, with pipelining and transparent failover).
 //!
 //! A `ShardedEnvPool` is a drop-in executor: `lane_specs()`,
 //! `obs_dim()`, `reset_into` and `step_into` behave identically to a
@@ -11,10 +11,34 @@
 //! ([`ShardPlan`](crate::shard::plan::ShardPlan) cuts the lane list
 //! contiguously at cost-balanced boundaries).
 //!
-//! Batches pipeline across shards: `step_into` writes every shard's
-//! `Step` frame before reading any `StepResult`, so remote executors
-//! step in parallel and the batch costs one round-trip to the slowest
-//! shard, not the sum.
+//! **Pipelining.**  Every request frame carries a sequence number and
+//! every reply echoes it, so a client may keep up to
+//! [`ShardPoolOptions::pipeline`] batches in flight per shard:
+//! [`ShardedEnvPool::submit_step`] sends a batch without waiting,
+//! [`ShardedEnvPool::recv_oldest_step`] consumes the oldest outstanding
+//! reply, and wire latency overlaps the shard's env compute.
+//! [`ShardedEnvPool::run_pipelined_workload`] is the batched random
+//! driver on top — it samples actions obs-independently in batch order
+//! (the same RNG stream as the lockstep driver), so its episode-return
+//! log is byte-identical to `run_batched_workload` on a local executor
+//! at any depth.  Depth is clamped to [`MAX_PIPELINE`]: replies the
+//! client has not read yet sit in OS socket buffers, so the in-flight
+//! window times the reply frame size must stay comfortably inside
+//! kernel buffering.
+//!
+//! **Failover.**  The pool keeps a replay log of every operation since
+//! connect (resets, action batches, rollout commands — all
+//! deterministic functions of the connection's seeding origin).  When a
+//! connection dies mid-workload the pool re-dials the same address with
+//! bounded exponential backoff and replays the log against the fresh
+//! private executor, which reconstructs the lost lanes bit-exactly; if
+//! the daemon itself is gone it re-plans the lost assignment onto a
+//! surviving shard ([`FailoverConfig::replan`]).  A shard death
+//! degrades; it never corrupts a trajectory.  Only when every candidate
+//! is exhausted does the executor surface panic (the
+//! [`BatchedExecutor`] trait has no error channel).  A deterministic
+//! *remote* error (bad action count, executor panic shard-side) is
+//! never retried — replaying would reproduce it.
 //!
 //! **Padded-obs reassembly.**  Each shard pads observations to *its
 //! own* widest lane; the pool-wide padded width can be larger (a shard
@@ -22,63 +46,153 @@
 //! pool).  Reassembly copies each lane's true observation into its
 //! global slot and re-zeroes the tail, so mixture consumers see exactly
 //! the local layout.
-//!
-//! Transport failures inside the `BatchedExecutor` surface as panics —
-//! the same contract as a poisoned worker pool (the trait has no error
-//! channel); connect-time problems return [`CairlError`] normally.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
+use std::time::{Duration, Instant};
 
+use crate::coordinator::experiment::SteppingResult;
 use crate::coordinator::pool::{BatchedExecutor, LaneSpec, RandomRollout, RolloutCounts};
 use crate::coordinator::registry::{self, MixtureSpec};
 use crate::core::env::Transition;
 use crate::core::error::{CairlError, Result};
+use crate::core::rng::Pcg32;
 use crate::core::spaces::Action;
 use crate::shard::net::{FramedStream, ShardAddr};
-use crate::shard::plan::{calibrate_costs, ShardPlan};
-use crate::shard::proto::{Msg, MsgRef};
+use crate::shard::plan::{calibrate_costs, ShardAssignment, ShardPlan};
+use crate::shard::proto::{next_seq, Msg, MsgRef, SEQ_NONE};
+
+/// Hard ceiling on the pipeline depth: unread replies live in OS socket
+/// buffers, so the in-flight window must stay small enough that `depth
+/// * reply_frame_bytes` fits kernel buffering on both ends.
+pub const MAX_PIPELINE: usize = 64;
 
 fn err(msg: impl Into<String>) -> CairlError {
     CairlError::Shard(msg.into())
 }
 
-/// One framed connection to a shard daemon, post-handshake.
+/// Handshake knobs for a single [`ShardClient`] connection.
+#[derive(Clone, Debug)]
+pub struct ConnectOptions {
+    /// Pipeline depth the client intends to use (reported to the daemon
+    /// for its status table).
+    pub pipeline: u32,
+    /// Auth token (must match the daemon's `--token`; `""` = none).
+    pub token: String,
+    /// How many times to retry a `Hello` answered with `Busy` before
+    /// giving up with [`CairlError::Unavailable`].
+    pub busy_retries: u32,
+}
+
+impl Default for ConnectOptions {
+    fn default() -> ConnectOptions {
+        ConnectOptions {
+            pipeline: 1,
+            token: String::new(),
+            busy_retries: 4,
+        }
+    }
+}
+
+/// One framed connection to a shard daemon, post-handshake.  Assigns
+/// sequence numbers to outgoing requests and verifies that every reply
+/// echoes the seq of the oldest in-flight request.
 pub struct ShardClient {
     stream: FramedStream,
     addr: String,
     specs: Vec<LaneSpec>,
     padded: usize,
+    seq_last: u32,
+    pending: VecDeque<u32>,
 }
 
 impl ShardClient {
     /// Dial `addr`, handshake with `spec` (`""` = the daemon's default)
     /// and the seeding origin, and return the connected client with the
-    /// shard's lane metadata.
+    /// shard's lane metadata.  Defaults: depth-1 pipeline, no token.
     pub fn connect(
         addr: &str,
         spec: &str,
         base_seed: u64,
         first_lane: usize,
     ) -> Result<ShardClient> {
+        Self::connect_with(addr, spec, base_seed, first_lane, &ConnectOptions::default())
+    }
+
+    /// [`ShardClient::connect`] with explicit handshake options.  A
+    /// `Busy` reply (daemon lane budget exhausted) is retried up to
+    /// [`ConnectOptions::busy_retries`] times with the daemon-suggested
+    /// back-off, then surfaces as [`CairlError::Unavailable`].
+    pub fn connect_with(
+        addr: &str,
+        spec: &str,
+        base_seed: u64,
+        first_lane: usize,
+        opts: &ConnectOptions,
+    ) -> Result<ShardClient> {
         let parsed = ShardAddr::parse(addr)?;
         let mut stream = FramedStream::connect(&parsed)?;
-        stream.send(MsgRef::Hello {
-            spec,
-            base_seed,
-            first_lane: first_lane as u64,
-        })?;
-        match stream.recv()? {
-            Msg::Spec { obs_dim, lane_specs } => Ok(ShardClient {
-                stream,
-                addr: parsed.render(),
-                specs: lane_specs,
-                padded: obs_dim as usize,
-            }),
-            Msg::Error { message } => Err(err(format!("{}: {message}", parsed.render()))),
-            other => Err(err(format!(
-                "{}: expected Spec after Hello, got {other:?}",
-                parsed.render()
-            ))),
+        let mut seq_last = SEQ_NONE;
+        let mut attempt = 0u32;
+        loop {
+            let seq = next_seq(seq_last);
+            stream.send(
+                seq,
+                MsgRef::Hello {
+                    spec,
+                    base_seed,
+                    first_lane: first_lane as u64,
+                    pipeline: opts.pipeline,
+                    token: &opts.token,
+                },
+            )?;
+            seq_last = seq;
+            let frame = stream.recv()?;
+            let pre_parse_error =
+                frame.seq == SEQ_NONE && matches!(frame.msg, Msg::Error { .. });
+            if frame.seq != seq && !pre_parse_error {
+                return Err(err(format!(
+                    "{}: handshake reply sequence {} does not answer Hello {seq}",
+                    parsed.render(),
+                    frame.seq
+                )));
+            }
+            match frame.msg {
+                Msg::Spec { obs_dim, lane_specs } => {
+                    return Ok(ShardClient {
+                        stream,
+                        addr: parsed.render(),
+                        specs: lane_specs,
+                        padded: obs_dim as usize,
+                        seq_last,
+                        pending: VecDeque::new(),
+                    })
+                }
+                Msg::Busy {
+                    active_lanes,
+                    max_lanes,
+                    retry_ms,
+                } => {
+                    if attempt >= opts.busy_retries {
+                        return Err(CairlError::Unavailable(format!(
+                            "{}: lane budget exhausted ({active_lanes}/{max_lanes} lanes \
+                             reserved) after {} Hello attempt(s)",
+                            parsed.render(),
+                            attempt + 1
+                        )));
+                    }
+                    attempt += 1;
+                    std::thread::sleep(Duration::from_millis(retry_ms.clamp(1, 1000)));
+                }
+                Msg::Error { message } => {
+                    return Err(err(format!("{}: {message}", parsed.render())))
+                }
+                other => {
+                    return Err(err(format!(
+                        "{}: expected Spec after Hello, got {other:?}",
+                        parsed.render()
+                    )))
+                }
+            }
         }
     }
 
@@ -102,9 +216,48 @@ impl ShardClient {
         self.specs.len()
     }
 
+    /// Requests sent whose replies have not been received yet.
+    pub fn in_flight(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Stamp and send one request frame, recording its seq as pending.
+    fn send_request(&mut self, msg: MsgRef<'_>) -> Result<()> {
+        let seq = next_seq(self.seq_last);
+        self.stream.send(seq, msg)?;
+        self.seq_last = seq;
+        self.pending.push_back(seq);
+        Ok(())
+    }
+
+    /// Receive the reply to the oldest in-flight request, enforcing the
+    /// seq echo.  A server `Error` comes back as `Ok(Msg::Error)` —
+    /// callers decide whether it is fatal.
+    fn recv_reply(&mut self) -> Result<Msg> {
+        let expected = self
+            .pending
+            .front()
+            .copied()
+            .ok_or_else(|| err(format!("{}: no request in flight", self.addr)))?;
+        let frame = self.stream.recv()?;
+        if frame.seq != expected {
+            // A pre-parse server error carries the reserved seq 0.
+            if frame.seq == SEQ_NONE && matches!(frame.msg, Msg::Error { .. }) {
+                self.pending.pop_front();
+                return Ok(frame.msg);
+            }
+            return Err(err(format!(
+                "{}: reply sequence {} does not answer the oldest in-flight request {expected}",
+                self.addr, frame.seq
+            )));
+        }
+        self.pending.pop_front();
+        Ok(frame.msg)
+    }
+
     /// Receive one reply, surfacing a server `Error` frame as [`Err`].
     fn expect_reply(&mut self) -> Result<Msg> {
-        match self.stream.recv()? {
+        match self.recv_reply()? {
             Msg::Error { message } => Err(err(format!("{}: {message}", self.addr))),
             msg => Ok(msg),
         }
@@ -112,18 +265,18 @@ impl ShardClient {
 
     /// Write a `Reset` frame (reply read by [`ShardClient::recv_obs`]).
     pub fn send_reset(&mut self) -> Result<()> {
-        self.stream.send(MsgRef::Reset)
+        self.send_request(MsgRef::Reset)
     }
 
     /// Write a `Step` frame (reply read by [`ShardClient::recv_step`]).
     pub fn send_step(&mut self, actions: &[Action]) -> Result<()> {
-        self.stream.send(MsgRef::Step { actions })
+        self.send_request(MsgRef::Step { actions })
     }
 
     /// Write a `RandomRollout` frame (reply read by
     /// [`ShardClient::recv_rollout`]).
     pub fn send_rollout(&mut self, steps_per_lane: u64) -> Result<()> {
-        self.stream.send(MsgRef::RandomRollout { steps_per_lane })
+        self.send_request(MsgRef::RandomRollout { steps_per_lane })
     }
 
     /// Read an `Obs` reply.
@@ -163,7 +316,25 @@ impl ShardClient {
 impl Drop for ShardClient {
     fn drop(&mut self) {
         // Orderly hang-up; the daemon tolerates a plain disconnect too.
-        let _ = self.stream.send(MsgRef::Close);
+        let _ = self.stream.send(next_seq(self.seq_last), MsgRef::Close);
+    }
+}
+
+/// Query a daemon's status report (the `cairl serve --status` path):
+/// dial, send `Status`, return the JSON document.  Works without a
+/// `Hello`, so it never reserves lanes.
+pub fn shard_status(addr: &str, token: &str) -> Result<String> {
+    let parsed = ShardAddr::parse(addr)?;
+    let mut stream = FramedStream::connect(&parsed)?;
+    stream.send(1, MsgRef::Status { token })?;
+    let frame = stream.recv()?;
+    match frame.msg {
+        Msg::StatusReport { report } => Ok(report),
+        Msg::Error { message } => Err(err(format!("{}: {message}", parsed.render()))),
+        other => Err(err(format!(
+            "{}: expected StatusReport, got {other:?}",
+            parsed.render()
+        ))),
     }
 }
 
@@ -179,27 +350,213 @@ fn entries_for(env_spec: &str, lanes: usize) -> Result<Vec<(String, usize)>> {
     }
 }
 
-/// A [`BatchedExecutor`] whose lanes live on remote shards.
+/// Recovery policy when a shard connection is lost mid-workload.
+#[derive(Clone, Debug)]
+pub struct FailoverConfig {
+    /// Re-dial attempts against the lost shard's own address before
+    /// falling back to re-planning (`0` skips straight to re-planning,
+    /// or — with [`FailoverConfig::replan`] off — disables failover).
+    pub redial_attempts: u32,
+    /// Initial back-off before the first re-dial, doubled per attempt.
+    pub backoff_ms: u64,
+    /// Back-off ceiling.
+    pub backoff_cap_ms: u64,
+    /// After re-dials are exhausted, offer the lost assignment to each
+    /// surviving shard address in turn (their daemons host it as a new
+    /// private executor).
+    pub replan: bool,
+}
+
+impl Default for FailoverConfig {
+    fn default() -> FailoverConfig {
+        FailoverConfig {
+            redial_attempts: 4,
+            backoff_ms: 25,
+            backoff_cap_ms: 400,
+            replan: true,
+        }
+    }
+}
+
+/// Connection options for a [`ShardedEnvPool`].
+#[derive(Clone, Debug)]
+pub struct ShardPoolOptions {
+    /// Lane count when the spec is a bare id (mixtures carry their own).
+    pub lanes: usize,
+    /// Pool-wide base seed (lane `i` is seeded `base_seed + i`
+    /// wherever it lands).
+    pub base_seed: u64,
+    /// Outstanding batches per shard connection, clamped to
+    /// `1..=`[`MAX_PIPELINE`].  Depth 1 is classic lockstep.
+    pub pipeline: usize,
+    /// Auth token forwarded on every handshake (`""` = none).
+    pub token: String,
+    /// `Busy` retries per handshake before
+    /// [`CairlError::Unavailable`].
+    pub busy_retries: u32,
+    /// Per-id step costs for placement; `None` runs a calibration
+    /// rollout at connect time ([`calibrate_costs`]).
+    pub costs: Option<BTreeMap<String, f64>>,
+    /// Recovery policy on connection loss.
+    pub failover: FailoverConfig,
+}
+
+impl Default for ShardPoolOptions {
+    fn default() -> ShardPoolOptions {
+        ShardPoolOptions {
+            lanes: 1,
+            base_seed: 0,
+            pipeline: 1,
+            token: String::new(),
+            busy_retries: 4,
+            costs: None,
+            failover: FailoverConfig::default(),
+        }
+    }
+}
+
+/// One replayable operation in a pool's lifetime.  Every variant is a
+/// deterministic function of the connection's seeding origin — a random
+/// rollout resets its lanes and draws from dedicated per-call streams
+/// ([`crate::coordinator::pool::EnvPool::random_rollout`]) — so
+/// replaying the full log against a fresh executor reconstructs lane
+/// state bit-exactly.
+enum ReplayOp {
+    Reset,
+    /// The full global action batch (each shard replays its slice).
+    /// Empty when failover is disabled — nothing will ever replay it.
+    Step(Vec<Action>),
+    Rollout(u64),
+}
+
+/// How a shard interaction failed, from the pool's perspective.
+enum Fault {
+    /// The connection is unusable (I/O error, EOF, frame corruption, a
+    /// sequencing violation): failover may transparently rebuild it.
+    Lost(String),
+    /// The shard answered with a deterministic `Error` frame; replaying
+    /// would reproduce it, so failover must not retry.
+    Remote(String),
+}
+
+/// Receive one reply, classifying failures for the failover machinery.
+fn recv_msg_fault(client: &mut ShardClient) -> std::result::Result<Msg, Fault> {
+    match client.recv_reply() {
+        Ok(Msg::Error { message }) => {
+            Err(Fault::Remote(format!("{}: {message}", client.addr())))
+        }
+        Ok(msg) => Ok(msg),
+        Err(e) => Err(Fault::Lost(format!("{}: {e}", client.addr()))),
+    }
+}
+
+fn recv_obs_fault(client: &mut ShardClient) -> std::result::Result<Vec<f32>, Fault> {
+    match recv_msg_fault(client)? {
+        Msg::Obs { obs } => Ok(obs),
+        other => Err(Fault::Lost(format!(
+            "{}: expected Obs, got {other:?}",
+            client.addr()
+        ))),
+    }
+}
+
+fn recv_step_fault(
+    client: &mut ShardClient,
+) -> std::result::Result<(Vec<f32>, Vec<Transition>), Fault> {
+    match recv_msg_fault(client)? {
+        Msg::StepResult { obs, transitions } => Ok((obs, transitions)),
+        other => Err(Fault::Lost(format!(
+            "{}: expected StepResult, got {other:?}",
+            client.addr()
+        ))),
+    }
+}
+
+fn recv_rollout_fault(client: &mut ShardClient) -> std::result::Result<RolloutCounts, Fault> {
+    match recv_msg_fault(client)? {
+        Msg::RolloutDone { steps, episodes } => Ok(RolloutCounts { steps, episodes }),
+        other => Err(Fault::Lost(format!(
+            "{}: expected RolloutDone, got {other:?}",
+            client.addr()
+        ))),
+    }
+}
+
+/// A [`BatchedExecutor`] whose lanes live on remote shards, with an
+/// in-flight pipeline window and deterministic failover.
+///
+/// # Example: pipelined stepping against an in-process daemon
+///
+/// ```
+/// use cairl::coordinator::pool::BatchedExecutor;
+/// use cairl::shard::{ServeConfig, ShardPoolOptions, ShardServer, ShardedEnvPool};
+///
+/// let mut config = ServeConfig::new("CartPole-v1");
+/// config.lanes = 2;
+/// config.threads = 1;
+/// let handle = ShardServer::bind("tcp://127.0.0.1:0", config).unwrap().spawn();
+///
+/// let addrs = vec![handle.addr().to_string()];
+/// let opts = ShardPoolOptions {
+///     lanes: 2,
+///     base_seed: 7,
+///     pipeline: 2,                       // keep 2 batches in flight
+///     costs: Some(Default::default()),   // skip calibration
+///     ..Default::default()
+/// };
+/// let mut pool = ShardedEnvPool::connect_opts(&addrs, "CartPole-v1", opts).unwrap();
+/// assert_eq!(pool.pipeline_depth(), 2);
+///
+/// // Identical episode-return log to a local pool at any depth:
+/// let result = pool.run_pipelined_workload(40, 7);
+/// assert_eq!(result.steps, 80);
+/// drop(pool);
+/// handle.shutdown();
+/// ```
 pub struct ShardedEnvPool {
     clients: Vec<ShardClient>,
     plan: ShardPlan,
     specs: Vec<LaneSpec>,
     n: usize,
     padded: usize,
+    /// Dial address per shard slot (updated when a slot re-plans onto a
+    /// surviving daemon).
+    addrs: Vec<String>,
+    base_seed: u64,
+    depth: usize,
+    token: String,
+    busy_retries: u32,
+    failover: FailoverConfig,
+    /// Replay log since connect; the failover source of truth.
+    history: Vec<ReplayOp>,
+    /// Per shard: ops from `history` sent on its current connection.
+    ops_sent: Vec<usize>,
+    /// Per shard: ops whose replies were consumed by the pool.
+    ops_acked: Vec<usize>,
+    /// Ops fully consumed across all shards (pool-level barrier index).
+    ops_consumed: usize,
+    reconnects: Vec<u64>,
 }
 
 impl ShardedEnvPool {
     /// Connect to `addrs` with a cost-aware plan from a fresh
-    /// calibration rollout ([`calibrate_costs`]).
+    /// calibration rollout ([`calibrate_costs`]); lockstep (depth-1)
+    /// pipeline, default failover.
     pub fn connect(
         addrs: &[String],
         env_spec: &str,
         lanes: usize,
         base_seed: u64,
     ) -> Result<ShardedEnvPool> {
-        let entries = entries_for(env_spec, lanes)?;
-        let costs = calibrate_costs(&entries)?;
-        Self::connect_planned(addrs, &entries, base_seed, &costs)
+        Self::connect_opts(
+            addrs,
+            env_spec,
+            ShardPoolOptions {
+                lanes,
+                base_seed,
+                ..Default::default()
+            },
+        )
     }
 
     /// [`ShardedEnvPool::connect`] with explicit per-id costs — the
@@ -212,26 +569,60 @@ impl ShardedEnvPool {
         base_seed: u64,
         costs: &BTreeMap<String, f64>,
     ) -> Result<ShardedEnvPool> {
-        let entries = entries_for(env_spec, lanes)?;
-        Self::connect_planned(addrs, &entries, base_seed, costs)
+        Self::connect_opts(
+            addrs,
+            env_spec,
+            ShardPoolOptions {
+                lanes,
+                base_seed,
+                costs: Some(costs.clone()),
+                ..Default::default()
+            },
+        )
+    }
+
+    /// Connect with the full option set: pipeline depth, auth token,
+    /// pinned costs and failover policy.
+    pub fn connect_opts(
+        addrs: &[String],
+        env_spec: &str,
+        opts: ShardPoolOptions,
+    ) -> Result<ShardedEnvPool> {
+        let entries = entries_for(env_spec, opts.lanes)?;
+        let costs = match &opts.costs {
+            Some(costs) => costs.clone(),
+            None => calibrate_costs(&entries)?,
+        };
+        Self::connect_planned(addrs, &entries, &costs, opts)
     }
 
     fn connect_planned(
         addrs: &[String],
         entries: &[(String, usize)],
-        base_seed: u64,
         costs: &BTreeMap<String, f64>,
+        opts: ShardPoolOptions,
     ) -> Result<ShardedEnvPool> {
         if addrs.is_empty() {
             return Err(CairlError::Config(
                 "a sharded pool needs at least one shard address".into(),
             ));
         }
+        let depth = opts.pipeline.clamp(1, MAX_PIPELINE);
         let plan = ShardPlan::plan(entries, addrs.len(), costs)?;
+        let conn_opts = ConnectOptions {
+            pipeline: depth as u32,
+            token: opts.token.clone(),
+            busy_retries: opts.busy_retries,
+        };
         let mut clients = Vec::with_capacity(addrs.len());
         for (addr, assignment) in addrs.iter().zip(plan.assignments()) {
-            let client =
-                ShardClient::connect(addr, &assignment.spec(), base_seed, assignment.first_lane)?;
+            let client = ShardClient::connect_with(
+                addr,
+                &assignment.spec(),
+                opts.base_seed,
+                assignment.first_lane,
+                &conn_opts,
+            )?;
             if client.num_lanes() != assignment.lanes {
                 return Err(err(format!(
                     "{addr}: hosts {} lanes, plan expected {}",
@@ -262,12 +653,24 @@ impl ShardedEnvPool {
             }
         }
         let n = specs.len();
+        let shards = clients.len();
         Ok(ShardedEnvPool {
             clients,
             plan,
             specs,
             n,
             padded,
+            addrs: addrs.to_vec(),
+            base_seed: opts.base_seed,
+            depth,
+            token: opts.token,
+            busy_retries: opts.busy_retries,
+            failover: opts.failover,
+            history: Vec::new(),
+            ops_sent: vec![0; shards],
+            ops_acked: vec![0; shards],
+            ops_consumed: 0,
+            reconnects: vec![0; shards],
         })
     }
 
@@ -279,6 +682,34 @@ impl ShardedEnvPool {
     /// Number of connected shards.
     pub fn shards(&self) -> usize {
         self.clients.len()
+    }
+
+    /// The configured in-flight window (1 = lockstep).
+    pub fn pipeline_depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Batches submitted but not yet consumed.
+    pub fn in_flight(&self) -> usize {
+        self.history.len() - self.ops_consumed
+    }
+
+    /// Per-shard reconnect counts (re-dials plus re-plans) since
+    /// connect — zero everywhere on a healthy fabric.
+    pub fn reconnects(&self) -> &[u64] {
+        &self.reconnects
+    }
+
+    /// Whether operations are logged for replay (on unless the failover
+    /// policy can never act).
+    fn failover_enabled(&self) -> bool {
+        self.failover.redial_attempts > 0 || self.failover.replan
+    }
+
+    /// The `(first_lane, lanes)` slice owned by shard `s`.
+    fn slice_of(&self, s: usize) -> (usize, usize) {
+        let a = &self.plan.assignments()[s];
+        (a.first_lane, a.lanes)
     }
 
     /// Reassemble one shard's `[lanes * shard_padded]` block into the
@@ -302,6 +733,246 @@ impl ShardedEnvPool {
             obs[base + width..base + self.padded].fill(0.0);
         }
     }
+
+    /// Recover shard `s` after its connection was lost: bounded-backoff
+    /// re-dials against its own address, then (if configured) offer its
+    /// assignment to each surviving shard address.  Panics only when
+    /// every candidate is exhausted — the executor traits have no error
+    /// channel, and by then the fabric is truly gone.
+    fn failover(&mut self, s: usize, cause: &str) {
+        let assignment = self.plan.assignments()[s].clone();
+        let own = self.addrs[s].clone();
+        if !self.failover_enabled() {
+            panic!("shard {s} ({own}) lost with failover disabled: {cause}");
+        }
+        eprintln!("cairl: shard {s} ({own}) lost ({cause}); recovering");
+        let mut last = cause.to_string();
+        let mut delay = self.failover.backoff_ms.max(1);
+        for attempt in 0..self.failover.redial_attempts {
+            std::thread::sleep(Duration::from_millis(delay));
+            delay = delay.saturating_mul(2).min(self.failover.backoff_cap_ms.max(1));
+            match self.dial_and_replay(&own, s, &assignment) {
+                Ok(()) => {
+                    eprintln!(
+                        "cairl: shard {s} reconnected to {own} after {} attempt(s), \
+                         replayed {} op(s)",
+                        attempt + 1,
+                        self.history.len()
+                    );
+                    return;
+                }
+                Err(e) => last = e.to_string(),
+            }
+        }
+        if self.failover.replan {
+            for j in 0..self.addrs.len() {
+                if j == s || self.addrs[j] == own {
+                    continue;
+                }
+                let candidate = self.addrs[j].clone();
+                match self.dial_and_replay(&candidate, s, &assignment) {
+                    Ok(()) => {
+                        self.addrs[s] = candidate.clone();
+                        eprintln!(
+                            "cairl: shard {s} re-planned lanes {}..{} onto {candidate}",
+                            assignment.first_lane,
+                            assignment.first_lane + assignment.lanes
+                        );
+                        return;
+                    }
+                    Err(e) => last = e.to_string(),
+                }
+            }
+        }
+        panic!(
+            "shard {s} ({own}) lost and unrecoverable after {} re-dial attempt(s){}: {last}",
+            self.failover.redial_attempts,
+            if self.failover.replan {
+                " and re-planning across every surviving shard"
+            } else {
+                ""
+            }
+        );
+    }
+
+    /// Dial `addr` for shard slot `s` and replay the full operation log
+    /// against its fresh private executor.  Replies for ops the pool
+    /// already consumed are drained in send/recv lockstep; the unacked
+    /// tail (at most the pipeline window) is left in flight for the
+    /// caller to consume normally.
+    fn dial_and_replay(&mut self, addr: &str, s: usize, a: &ShardAssignment) -> Result<()> {
+        let conn_opts = ConnectOptions {
+            pipeline: self.depth as u32,
+            token: self.token.clone(),
+            busy_retries: self.busy_retries,
+        };
+        let mut client =
+            ShardClient::connect_with(addr, &a.spec(), self.base_seed, a.first_lane, &conn_opts)?;
+        if client.lane_specs() != self.clients[s].lane_specs() {
+            return Err(err(format!(
+                "{addr}: replacement shard reported a different lane layout"
+            )));
+        }
+        let acked = self.ops_acked[s];
+        for (i, op) in self.history.iter().enumerate() {
+            match op {
+                ReplayOp::Reset => client.send_reset()?,
+                ReplayOp::Step(actions) => {
+                    client.send_step(&actions[a.first_lane..a.first_lane + a.lanes])?
+                }
+                ReplayOp::Rollout(steps) => client.send_rollout(*steps)?,
+            }
+            if i < acked {
+                // The pool already consumed this op's result on the old
+                // connection; drain and discard the replayed reply.
+                match op {
+                    ReplayOp::Reset => {
+                        client.recv_obs()?;
+                    }
+                    ReplayOp::Step(_) => {
+                        client.recv_step()?;
+                    }
+                    ReplayOp::Rollout(_) => {
+                        client.recv_rollout()?;
+                    }
+                }
+            }
+        }
+        self.clients[s] = client;
+        self.ops_sent[s] = self.history.len();
+        self.reconnects[s] += 1;
+        Ok(())
+    }
+
+    /// Submit one global action batch without waiting for its result.
+    /// Panics if the in-flight window ([`ShardedEnvPool::pipeline_depth`])
+    /// is already full — call [`ShardedEnvPool::recv_oldest_step`] first.
+    pub fn submit_step(&mut self, actions: &[Action]) {
+        assert_eq!(actions.len(), self.n);
+        assert!(
+            self.in_flight() < self.depth,
+            "pipeline window of {} batch(es) is full — recv_oldest_step first",
+            self.depth
+        );
+        let logged = if self.failover_enabled() {
+            actions.to_vec()
+        } else {
+            Vec::new()
+        };
+        self.history.push(ReplayOp::Step(logged));
+        let target = self.history.len();
+        for s in 0..self.clients.len() {
+            loop {
+                if self.ops_sent[s] >= target {
+                    break; // a failover replay already sent it
+                }
+                let (first, lanes) = self.slice_of(s);
+                match self.clients[s].send_step(&actions[first..first + lanes]) {
+                    Ok(()) => {
+                        self.ops_sent[s] += 1;
+                        break;
+                    }
+                    Err(e) => {
+                        let cause = format!("{}: {e}", self.clients[s].addr());
+                        self.failover(s, &cause);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Receive the oldest in-flight batch into `obs`/`transitions`
+    /// (identical layout to [`BatchedExecutor::step_into`]).  Panics on
+    /// a deterministic remote error; transparently fails over on a lost
+    /// connection.
+    pub fn recv_oldest_step(&mut self, obs: &mut [f32], transitions: &mut [Transition]) {
+        assert!(
+            self.in_flight() > 0,
+            "recv_oldest_step with no batch in flight"
+        );
+        assert_eq!(obs.len(), self.n * self.padded);
+        assert_eq!(transitions.len(), self.n);
+        let idx = self.ops_consumed;
+        debug_assert!(
+            matches!(self.history[idx], ReplayOp::Step(_)),
+            "oldest unconsumed op is not a Step"
+        );
+        for s in 0..self.clients.len() {
+            if self.ops_acked[s] > idx {
+                continue;
+            }
+            loop {
+                match recv_step_fault(&mut self.clients[s]) {
+                    Ok((shard_obs, shard_tr)) => {
+                        let (first, lanes) = self.slice_of(s);
+                        assert_eq!(
+                            shard_tr.len(),
+                            lanes,
+                            "{}: short transition block",
+                            self.clients[s].addr()
+                        );
+                        self.scatter_obs(s, &shard_obs, obs);
+                        transitions[first..first + lanes].copy_from_slice(&shard_tr);
+                        self.ops_acked[s] = idx + 1;
+                        break;
+                    }
+                    Err(Fault::Remote(m)) => panic!("sharded step failed: {m}"),
+                    Err(Fault::Lost(m)) => self.failover(s, &m),
+                }
+            }
+        }
+        self.ops_consumed += 1;
+    }
+
+    /// Run `steps_per_lane` random-action batches keeping up to the
+    /// configured pipeline depth in flight.  Samples actions
+    /// obs-independently in batch order — the exact RNG stream of
+    /// [`run_batched_workload`](crate::coordinator::experiment::run_batched_workload)
+    /// — so `episode_returns` is byte-identical to the lockstep driver
+    /// on a local executor, at any depth, across failovers.
+    pub fn run_pipelined_workload(&mut self, steps_per_lane: u64, seed: u64) -> SteppingResult {
+        let n = self.n;
+        let d = self.padded;
+        let specs = self.specs.clone();
+        let mut rng = Pcg32::new(seed, 23);
+        let mut obs = vec![0.0f32; n * d];
+        let mut transitions = vec![Transition::default(); n];
+        let mut actions: Vec<Action> = Vec::with_capacity(n);
+        self.reset_into(&mut obs);
+        let mut episodes = 0u64;
+        let mut episode_returns = Vec::new();
+        let mut lane_return = vec![0.0f32; n];
+        let start = Instant::now();
+        let mut submitted = 0u64;
+        let mut consumed = 0u64;
+        while consumed < steps_per_lane {
+            while submitted < steps_per_lane && self.in_flight() < self.depth {
+                actions.clear();
+                actions.extend(specs.iter().map(|s| s.action_space.sample(&mut rng)));
+                self.submit_step(&actions);
+                submitted += 1;
+            }
+            self.recv_oldest_step(&mut obs, &mut transitions);
+            consumed += 1;
+            for (acc, t) in lane_return.iter_mut().zip(&transitions) {
+                *acc += t.reward;
+                if t.done || t.truncated {
+                    episodes += 1;
+                    episode_returns.push(*acc);
+                    *acc = 0.0;
+                }
+            }
+        }
+        let elapsed = start.elapsed();
+        let steps = steps_per_lane * n as u64;
+        SteppingResult {
+            steps,
+            episodes,
+            elapsed,
+            throughput: steps as f64 / elapsed.as_secs_f64(),
+            episode_returns,
+        }
+    }
 }
 
 impl BatchedExecutor for ShardedEnvPool {
@@ -319,19 +990,49 @@ impl BatchedExecutor for ShardedEnvPool {
 
     fn reset_into(&mut self, obs: &mut [f32]) {
         assert_eq!(obs.len(), self.n * self.padded);
+        assert_eq!(
+            self.in_flight(),
+            0,
+            "reset_into while batches are in flight — drain the pipeline first"
+        );
+        self.history.push(ReplayOp::Reset);
+        let target = self.history.len();
         // Write every shard's request before reading any reply: the
         // shards reset in parallel.
-        for client in &mut self.clients {
-            client
-                .send_reset()
-                .unwrap_or_else(|e| panic!("sharded reset failed: {e}"));
+        for s in 0..self.clients.len() {
+            loop {
+                if self.ops_sent[s] >= target {
+                    break;
+                }
+                match self.clients[s].send_reset() {
+                    Ok(()) => {
+                        self.ops_sent[s] += 1;
+                        break;
+                    }
+                    Err(e) => {
+                        let cause = format!("{}: {e}", self.clients[s].addr());
+                        self.failover(s, &cause);
+                    }
+                }
+            }
         }
-        for shard in 0..self.clients.len() {
-            let shard_obs = self.clients[shard]
-                .recv_obs()
-                .unwrap_or_else(|e| panic!("sharded reset failed: {e}"));
-            self.scatter_obs(shard, &shard_obs, obs);
+        for s in 0..self.clients.len() {
+            loop {
+                if self.ops_acked[s] >= target {
+                    break;
+                }
+                match recv_obs_fault(&mut self.clients[s]) {
+                    Ok(shard_obs) => {
+                        self.scatter_obs(s, &shard_obs, obs);
+                        self.ops_acked[s] = target;
+                        break;
+                    }
+                    Err(Fault::Remote(m)) => panic!("sharded reset failed: {m}"),
+                    Err(Fault::Lost(m)) => self.failover(s, &m),
+                }
+            }
         }
+        self.ops_consumed = target;
     }
 
     fn step_into(
@@ -340,30 +1041,13 @@ impl BatchedExecutor for ShardedEnvPool {
         obs: &mut [f32],
         transitions: &mut [Transition],
     ) {
-        assert_eq!(actions.len(), self.n);
-        assert_eq!(obs.len(), self.n * self.padded);
-        assert_eq!(transitions.len(), self.n);
-        for (client, assignment) in self.clients.iter_mut().zip(self.plan.assignments()) {
-            let slice = &actions[assignment.first_lane..assignment.first_lane + assignment.lanes];
-            client
-                .send_step(slice)
-                .unwrap_or_else(|e| panic!("sharded step failed: {e}"));
-        }
-        for shard in 0..self.clients.len() {
-            let (shard_obs, shard_tr) = self.clients[shard]
-                .recv_step()
-                .unwrap_or_else(|e| panic!("sharded step failed: {e}"));
-            let assignment = &self.plan.assignments()[shard];
-            assert_eq!(
-                shard_tr.len(),
-                assignment.lanes,
-                "{}: short transition block",
-                self.clients[shard].addr()
-            );
-            self.scatter_obs(shard, &shard_obs, obs);
-            transitions[assignment.first_lane..assignment.first_lane + assignment.lanes]
-                .copy_from_slice(&shard_tr);
-        }
+        assert_eq!(
+            self.in_flight(),
+            0,
+            "step_into while batches are in flight — use recv_oldest_step to drain"
+        );
+        self.submit_step(actions);
+        self.recv_oldest_step(obs, transitions);
     }
 }
 
@@ -372,21 +1056,54 @@ impl RandomRollout for ShardedEnvPool {
     /// every shard runs its whole rollout worker-side and reports
     /// aggregate counts.  Lane action streams are derived from the
     /// *global* base seed and lane ids (the shard knows its
-    /// `first_lane`), so counts equal the local pool's bit for bit.
+    /// `first_lane`), so counts equal the local pool's bit for bit —
+    /// and because a rollout resets its lanes and draws from dedicated
+    /// per-call streams, it is itself a replayable operation under
+    /// failover.
     fn random_rollout(&mut self, steps_per_lane: u64) -> RolloutCounts {
-        for client in &mut self.clients {
-            client
-                .send_rollout(steps_per_lane)
-                .unwrap_or_else(|e| panic!("sharded rollout failed: {e}"));
+        assert_eq!(
+            self.in_flight(),
+            0,
+            "random_rollout while batches are in flight — drain the pipeline first"
+        );
+        self.history.push(ReplayOp::Rollout(steps_per_lane));
+        let target = self.history.len();
+        for s in 0..self.clients.len() {
+            loop {
+                if self.ops_sent[s] >= target {
+                    break;
+                }
+                match self.clients[s].send_rollout(steps_per_lane) {
+                    Ok(()) => {
+                        self.ops_sent[s] += 1;
+                        break;
+                    }
+                    Err(e) => {
+                        let cause = format!("{}: {e}", self.clients[s].addr());
+                        self.failover(s, &cause);
+                    }
+                }
+            }
         }
         let mut total = RolloutCounts::default();
-        for client in &mut self.clients {
-            let counts = client
-                .recv_rollout()
-                .unwrap_or_else(|e| panic!("sharded rollout failed: {e}"));
-            total.steps += counts.steps;
-            total.episodes += counts.episodes;
+        for s in 0..self.clients.len() {
+            loop {
+                if self.ops_acked[s] >= target {
+                    break;
+                }
+                match recv_rollout_fault(&mut self.clients[s]) {
+                    Ok(counts) => {
+                        total.steps += counts.steps;
+                        total.episodes += counts.episodes;
+                        self.ops_acked[s] = target;
+                        break;
+                    }
+                    Err(Fault::Remote(m)) => panic!("sharded rollout failed: {m}"),
+                    Err(Fault::Lost(m)) => self.failover(s, &m),
+                }
+            }
         }
+        self.ops_consumed = target;
         total
     }
 }

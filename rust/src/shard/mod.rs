@@ -1,37 +1,50 @@
-//! Sharded environment service — the first out-of-process scaling axis.
+//! Sharded environment service — the out-of-process scaling axis.
 //!
 //! Everything below the executor layer is in-process; this module opens
 //! the seam the ROADMAP named (replace the sync pool's in-process
-//! broadcast with a transport) and turns a [`BatchedExecutor`]
+//! broadcast with a transport) and turns a `BatchedExecutor`
 //! (crate::coordinator::pool::BatchedExecutor) into a network service:
 //!
-//! * [`proto`] — the compact length-prefixed binary frame protocol:
-//!   versioned, checksummed, f32 observation payloads, [`LaneSpec`]
-//!   (crate::coordinator::pool::LaneSpec) reused for the handshake.
-//!   Decoding is total — corrupt frames are errors, never panics.
+//! * [`proto`] — the versioned, checksummed, sequence-numbered binary
+//!   frame protocol (the normative wire spec lives in
+//!   `docs/shard-protocol.md`).  Decoding is total — corrupt frames are
+//!   errors, never panics.
 //! * [`server`] — the `cairl serve` daemon: any executor configuration
-//!   (fused kernels included) behind a Unix-socket or TCP listener, one
-//!   framed stream and one private executor per client.
+//!   (fused kernels included) behind a Unix-socket or TCP listener.
+//!   One daemon hosts many concurrent clients, each with a private
+//!   executor, under an optional lane budget (`--max-lanes`, `Busy`
+//!   backpressure) and auth token; a `Status` frame returns the live
+//!   JSON report behind `cairl serve --status`.
 //! * [`client`] — [`ShardClient`] plus [`ShardedEnvPool`], a
 //!   `BatchedExecutor` over one or more remote shards with padded-obs
-//!   reassembly, so training loops are transparently local or remote.
+//!   reassembly, a configurable in-flight pipeline window
+//!   ([`ShardPoolOptions::pipeline`]) and transparent failover: a lost
+//!   connection is re-dialed with bounded backoff and its lanes
+//!   replayed bit-exactly from the operation log, falling back to
+//!   re-planning onto a surviving shard.
 //! * [`plan`] — [`ShardPlan`]: cost-aware lane placement.  A quick
 //!   calibration rollout measures per-env step cost and the planner
 //!   cuts the mixture at cost-balanced (not lane-balanced) boundaries,
 //!   keeping placement contiguous so per-lane seeds — and therefore
 //!   trajectories — are bit-identical to a local pool.
 //!
+//! The layer map and the determinism contract shared by every executor
+//! (local, fused, sharded, pipelined, post-failover) are documented
+//! once in `docs/ARCHITECTURE.md`.
+//!
 //! ## Runnable example
 //!
-//! Serve a mixture on one shard and run a seeded workload against it
-//! (the same spec/seed on `--executor vec` reproduces the identical
-//! episode returns — the CI shard-smoke job diffs exactly that):
+//! Serve a mixture on one shard and run a pipelined seeded workload
+//! against it (the same spec/seed on `--executor vec` reproduces the
+//! identical episode returns — the CI shard-smoke job diffs exactly
+//! that, including with a shard killed mid-run):
 //!
 //! ```text
 //! cairl serve --env "CartPole-v1:6,MountainCar-v0:2" \
 //!     --listen unix:///tmp/cairl-s0.sock --executor pool --threads 2 &
 //! cairl run --env "CartPole-v1:6,MountainCar-v0:2" --steps 8000 --seed 11 \
-//!     --shard unix:///tmp/cairl-s0.sock
+//!     --shard unix:///tmp/cairl-s0.sock --pipeline 4
+//! cairl serve --status unix:///tmp/cairl-s0.sock
 //! ```
 //!
 //! In-process, the same round trip:
@@ -49,13 +62,18 @@
 //! handle.shutdown();
 //! ```
 
+#![warn(missing_docs)]
+
 pub mod client;
 pub mod net;
 pub mod plan;
 pub mod proto;
 pub mod server;
 
-pub use client::{ShardClient, ShardedEnvPool};
+pub use client::{
+    shard_status, ConnectOptions, FailoverConfig, ShardClient, ShardPoolOptions, ShardedEnvPool,
+    MAX_PIPELINE,
+};
 pub use net::ShardAddr;
 pub use plan::{calibrate_costs, ShardAssignment, ShardPlan};
-pub use server::{ServeConfig, ShardServer, ShardServerHandle};
+pub use server::{ServeConfig, ServerStats, ShardServer, ShardServerHandle};

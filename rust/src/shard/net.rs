@@ -22,7 +22,7 @@ use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::PathBuf;
 
 use crate::core::error::{CairlError, Result};
-use crate::shard::proto::{self, Msg, MsgRef};
+use crate::shard::proto::{self, Frame, MsgRef};
 
 fn err(msg: impl Into<String>) -> CairlError {
     CairlError::Shard(msg.into())
@@ -89,12 +89,27 @@ pub(crate) enum RawStream {
 }
 
 impl RawStream {
-    fn try_clone(&self) -> std::io::Result<RawStream> {
+    pub(crate) fn try_clone(&self) -> std::io::Result<RawStream> {
         Ok(match self {
             #[cfg(unix)]
             RawStream::Unix(s) => RawStream::Unix(s.try_clone()?),
             RawStream::Tcp(s) => RawStream::Tcp(s.try_clone()?),
         })
+    }
+
+    /// Force-close both directions of the connection.  Any blocked read
+    /// on the peer (or on a clone of this stream) returns immediately —
+    /// the server's kill switch for failover drills.
+    pub(crate) fn shutdown(&self) {
+        match self {
+            #[cfg(unix)]
+            RawStream::Unix(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+            RawStream::Tcp(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+        }
     }
 }
 
@@ -161,11 +176,13 @@ impl FramedStream {
         FramedStream::new(stream)
     }
 
-    pub(crate) fn send(&mut self, msg: MsgRef<'_>) -> Result<()> {
-        proto::write_msg(&mut self.w, msg)
+    /// Write one frame stamped with `seq` and flush it.
+    pub(crate) fn send(&mut self, seq: u32, msg: MsgRef<'_>) -> Result<()> {
+        proto::write_msg(&mut self.w, seq, msg)
     }
 
-    pub(crate) fn recv(&mut self) -> Result<Msg> {
+    /// Block for the next frame (sequence number + message).
+    pub(crate) fn recv(&mut self) -> Result<Frame> {
         proto::read_msg(&mut self.r)
     }
 }

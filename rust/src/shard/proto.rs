@@ -1,17 +1,27 @@
 //! The shard wire protocol: compact length-prefixed binary frames.
 //!
-//! Every message travels as one frame:
+//! The normative specification lives in `docs/shard-protocol.md`; this
+//! module is the implementation.  Every message travels as one frame:
 //!
 //! ```text
 //! [len: u32 LE] [payload: len bytes]
-//! payload = [version: u8] [tag: u8] [body ...] [checksum: u32 LE]
+//! payload = [version: u8] [tag: u8] [seq: u32 LE] [body ...] [checksum: u32 LE]
 //! ```
 //!
 //! `len` counts the payload (version through checksum).  The checksum is
-//! FNV-1a/32 over `version..body`, so a flipped bit anywhere in a frame
-//! is rejected before the body is even parsed.  Frames larger than
-//! [`MAX_FRAME`] are refused outright — a corrupt length prefix can
-//! never drive a gigabyte allocation.
+//! FNV-1a/32 over `version..body` (sequence number included), so a
+//! flipped bit anywhere in a frame is rejected before the body is even
+//! parsed.  Frames larger than [`MAX_FRAME`] are refused outright — a
+//! corrupt length prefix can never drive a gigabyte allocation.
+//!
+//! **Sequence numbers** make the fabric pipelinable: each side stamps
+//! its requests with a monotonically increasing `seq` starting at 1
+//! (`Hello` is seq 1), replies echo the seq of the request they answer,
+//! and [`SeqTracker`] enforces the strict successor rule on receipt —
+//! a duplicated, stale or reordered frame is detected immediately
+//! instead of silently desynchronising lane state.  Seq [`SEQ_NONE`]
+//! (zero) is reserved for server `Error` frames emitted before any
+//! request seq is known (an undecodable first frame).
 //!
 //! Decoding is **total**: every read is bounds-checked and every invalid
 //! input (truncated body, bad tag, bad bool, non-UTF-8 string, trailing
@@ -21,10 +31,12 @@
 //! The message set mirrors the [`BatchedExecutor`]
 //! (crate::coordinator::pool::BatchedExecutor) surface: a `Hello`
 //! handshake answered by `Spec` (reusing [`LaneSpec`] so the client sees
-//! exactly the metadata a local pool would report), `Reset`/`Obs`,
-//! `Step`/`StepResult` with f32 observation payloads, a whole-workload
-//! `RandomRollout`/`RolloutDone` pair (the free-running throughput mode
-//! crosses the wire **once**), `Close` and `Error`.
+//! exactly the metadata a local pool would report) or `Busy` (admission
+//! control), `Reset`/`Obs`, `Step`/`StepResult` with f32 observation
+//! payloads, a whole-workload `RandomRollout`/`RolloutDone` pair (the
+//! free-running throughput mode crosses the wire **once**),
+//! `Status`/`StatusReport` for daemon introspection, `Close` and
+//! `Error`.
 //!
 //! Two enums, one format: [`MsgRef`] borrows its payloads for
 //! allocation-light encoding on the hot path, [`Msg`] owns them for
@@ -38,12 +50,18 @@ use crate::core::error::{CairlError, Result};
 use crate::core::spaces::{Action, Space};
 
 /// Protocol revision; bumped on any wire-format change.  A frame whose
-/// version byte differs is rejected at decode.
-pub const PROTO_VERSION: u8 = 1;
+/// version byte differs is rejected at decode — there is no negotiation
+/// (both halves ship in one binary; see `docs/shard-protocol.md` for
+/// the compatibility story).
+pub const PROTO_VERSION: u8 = 2;
 
 /// Hard ceiling on payload length (64 MiB) — refuse corrupt length
 /// prefixes before allocating.
 pub const MAX_FRAME: usize = 1 << 26;
+
+/// The reserved "no sequence" number: never assigned to a request, used
+/// by server `Error` frames sent before a request seq is known.
+pub const SEQ_NONE: u32 = 0;
 
 const TAG_HELLO: u8 = 1;
 const TAG_SPEC: u8 = 2;
@@ -55,6 +73,76 @@ const TAG_RANDOM_ROLLOUT: u8 = 7;
 const TAG_ROLLOUT_DONE: u8 = 8;
 const TAG_CLOSE: u8 = 9;
 const TAG_ERROR: u8 = 10;
+const TAG_STATUS: u8 = 11;
+const TAG_STATUS_REPORT: u8 = 12;
+const TAG_BUSY: u8 = 13;
+
+/// The successor of `seq` in the 1-based sequence space (wraps around
+/// [`SEQ_NONE`], which is reserved).
+pub fn next_seq(seq: u32) -> u32 {
+    match seq.wrapping_add(1) {
+        SEQ_NONE => 1,
+        v => v,
+    }
+}
+
+/// Enforces the strict-successor sequencing rule on one direction of a
+/// connection: requests on the server side, reply echoes on the client
+/// side.  [`SeqTracker::accept`] distinguishes stale/duplicated frames
+/// from gaps (a reordered or dropped frame) so the error names the
+/// actual fault.
+#[derive(Clone, Debug, Default)]
+pub struct SeqTracker {
+    last: u32,
+}
+
+impl SeqTracker {
+    /// A fresh tracker: the first acceptable sequence number is 1.
+    pub fn new() -> SeqTracker {
+        SeqTracker { last: SEQ_NONE }
+    }
+
+    /// The next sequence number this tracker will accept.
+    pub fn expected(&self) -> u32 {
+        next_seq(self.last)
+    }
+
+    /// Accept `seq` if it is the expected successor, otherwise report
+    /// what went wrong without mutating the tracker.
+    pub fn accept(&mut self, seq: u32) -> Result<()> {
+        let expected = next_seq(self.last);
+        if seq == expected {
+            self.last = seq;
+            return Ok(());
+        }
+        if seq == SEQ_NONE {
+            return Err(err(format!(
+                "frame carries reserved sequence number 0 (expected {expected})"
+            )));
+        }
+        if seq.wrapping_sub(expected) > u32::MAX / 2 {
+            // seq < expected modulo wrap: the peer re-sent old traffic.
+            Err(err(format!(
+                "stale or duplicated frame: sequence {seq}, expected {expected}"
+            )))
+        } else {
+            Err(err(format!(
+                "sequence gap: got {seq}, expected {expected} (reordered or dropped frame)"
+            )))
+        }
+    }
+}
+
+/// One decoded frame: the echoed/assigned sequence number plus the
+/// message it carries.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Frame {
+    /// Sequence number stamped by the sender ([`SEQ_NONE`] only on
+    /// server `Error` frames emitted before a request seq is known).
+    pub seq: u32,
+    /// The decoded message body.
+    pub msg: Msg,
+}
 
 /// An outbound message, borrowing its payloads (no clone to send a
 /// `&[Action]` or an observation buffer).
@@ -66,72 +154,171 @@ pub enum MsgRef<'a> {
     /// with `base_seed + first_lane + j`, so a sharded pool's lanes hold
     /// exactly the RNG streams of the equivalent local pool.
     Hello {
+        /// Env spec to host (`""` = the daemon's configured default).
         spec: &'a str,
+        /// Pool-wide base seed.
         base_seed: u64,
+        /// First global lane index hosted by this shard.
         first_lane: u64,
+        /// Requested pipeline depth (outstanding batches); informational
+        /// for the daemon's status report.
+        pipeline: u32,
+        /// Auth token (`""` when the daemon runs without `--token`).
+        token: &'a str,
     },
     /// Server handshake reply: the hosted executor's padded width and
     /// per-lane metadata (shard-local offsets).
     Spec {
+        /// Shard-local padded observation width.
         obs_dim: u64,
+        /// Per-lane metadata, shard-local lane order.
         lane_specs: &'a [LaneSpec],
     },
     /// Reset every lane; answered by [`MsgRef::Obs`].
     Reset,
     /// A `[lanes * obs_dim]` observation block (shard-local padding).
-    Obs { obs: &'a [f32] },
+    Obs {
+        /// The observation block.
+        obs: &'a [f32],
+    },
     /// One lockstep batch of actions, lane order; answered by
     /// [`MsgRef::StepResult`].
-    Step { actions: &'a [Action] },
+    Step {
+        /// One action per hosted lane, lane order.
+        actions: &'a [Action],
+    },
     /// Batch step reply: the observation block plus per-lane transitions.
     StepResult {
+        /// The post-step observation block.
         obs: &'a [f32],
+        /// One transition per hosted lane, lane order.
         transitions: &'a [Transition],
     },
     /// Run a whole free-running random rollout shard-side; answered by
     /// [`MsgRef::RolloutDone`].
-    RandomRollout { steps_per_lane: u64 },
+    RandomRollout {
+        /// Steps each lane advances before the rollout stops.
+        steps_per_lane: u64,
+    },
     /// Aggregate counts of a completed shard-side rollout.
-    RolloutDone { steps: u64, episodes: u64 },
+    RolloutDone {
+        /// Total env steps taken across the shard's lanes.
+        steps: u64,
+        /// Episodes completed across the shard's lanes.
+        episodes: u64,
+    },
+    /// Ask the daemon for its status report; answered by
+    /// [`MsgRef::StatusReport`].  Valid before any `Hello`.
+    Status {
+        /// Auth token (checked exactly like `Hello`'s).
+        token: &'a str,
+    },
+    /// Daemon introspection reply: a JSON document (uptime, lane budget,
+    /// per-client table) rendered server-side.
+    StatusReport {
+        /// The JSON status document.
+        report: &'a str,
+    },
+    /// Admission-control reply to `Hello`: the daemon's lane budget is
+    /// exhausted.  The connection stays open — the client may retry the
+    /// handshake after `retry_ms`.
+    Busy {
+        /// Lanes currently reserved by connected clients.
+        active_lanes: u64,
+        /// The daemon's `--max-lanes` budget.
+        max_lanes: u64,
+        /// Suggested client back-off before re-sending `Hello`.
+        retry_ms: u64,
+    },
     /// Orderly hang-up.
     Close,
-    /// Server-side failure (bad spec, wrong action count, executor
-    /// panic); the connection closes after this frame.
-    Error { message: &'a str },
+    /// Server-side failure (bad spec, wrong action count, bad sequence
+    /// number, bad token, executor panic); the connection closes after
+    /// this frame.
+    Error {
+        /// Human-readable description of the failure.
+        message: &'a str,
+    },
 }
 
 /// A decoded (owned) message; the receive-side mirror of [`MsgRef`].
 #[derive(Clone, Debug, PartialEq)]
 pub enum Msg {
+    /// See [`MsgRef::Hello`].
     Hello {
+        /// Env spec to host (`""` = the daemon's configured default).
         spec: String,
+        /// Pool-wide base seed.
         base_seed: u64,
+        /// First global lane index hosted by this shard.
         first_lane: u64,
+        /// Requested pipeline depth (outstanding batches).
+        pipeline: u32,
+        /// Auth token (`""` when unauthenticated).
+        token: String,
     },
+    /// See [`MsgRef::Spec`].
     Spec {
+        /// Shard-local padded observation width.
         obs_dim: u64,
+        /// Per-lane metadata, shard-local lane order.
         lane_specs: Vec<LaneSpec>,
     },
+    /// See [`MsgRef::Reset`].
     Reset,
+    /// See [`MsgRef::Obs`].
     Obs {
+        /// The observation block.
         obs: Vec<f32>,
     },
+    /// See [`MsgRef::Step`].
     Step {
+        /// One action per hosted lane, lane order.
         actions: Vec<Action>,
     },
+    /// See [`MsgRef::StepResult`].
     StepResult {
+        /// The post-step observation block.
         obs: Vec<f32>,
+        /// One transition per hosted lane, lane order.
         transitions: Vec<Transition>,
     },
+    /// See [`MsgRef::RandomRollout`].
     RandomRollout {
+        /// Steps each lane advances before the rollout stops.
         steps_per_lane: u64,
     },
+    /// See [`MsgRef::RolloutDone`].
     RolloutDone {
+        /// Total env steps taken across the shard's lanes.
         steps: u64,
+        /// Episodes completed across the shard's lanes.
         episodes: u64,
     },
+    /// See [`MsgRef::Status`].
+    Status {
+        /// Auth token (checked exactly like `Hello`'s).
+        token: String,
+    },
+    /// See [`MsgRef::StatusReport`].
+    StatusReport {
+        /// The JSON status document.
+        report: String,
+    },
+    /// See [`MsgRef::Busy`].
+    Busy {
+        /// Lanes currently reserved by connected clients.
+        active_lanes: u64,
+        /// The daemon's `--max-lanes` budget.
+        max_lanes: u64,
+        /// Suggested client back-off before re-sending `Hello`.
+        retry_ms: u64,
+    },
+    /// See [`MsgRef::Close`].
     Close,
+    /// See [`MsgRef::Error`].
     Error {
+        /// Human-readable description of the failure.
         message: String,
     },
 }
@@ -216,8 +403,9 @@ fn put_lane_spec(out: &mut Vec<u8>, spec: &LaneSpec) {
     put_space(out, &spec.action_space);
 }
 
-/// Encode a message into a complete frame (length prefix included).
-pub fn encode(msg: MsgRef<'_>) -> Vec<u8> {
+/// Encode a message into a complete frame (length prefix included),
+/// stamped with `seq`.
+pub fn encode(seq: u32, msg: MsgRef<'_>) -> Vec<u8> {
     let mut payload = Vec::with_capacity(64);
     payload.push(PROTO_VERSION);
     match msg {
@@ -225,30 +413,41 @@ pub fn encode(msg: MsgRef<'_>) -> Vec<u8> {
             spec,
             base_seed,
             first_lane,
+            pipeline,
+            token,
         } => {
             payload.push(TAG_HELLO);
+            put_u32(&mut payload, seq);
             put_str(&mut payload, spec);
             put_u64(&mut payload, base_seed);
             put_u64(&mut payload, first_lane);
+            put_u32(&mut payload, pipeline);
+            put_str(&mut payload, token);
         }
         MsgRef::Spec {
             obs_dim,
             lane_specs,
         } => {
             payload.push(TAG_SPEC);
+            put_u32(&mut payload, seq);
             put_u64(&mut payload, obs_dim);
             put_u32(&mut payload, lane_specs.len() as u32);
             for spec in lane_specs {
                 put_lane_spec(&mut payload, spec);
             }
         }
-        MsgRef::Reset => payload.push(TAG_RESET),
+        MsgRef::Reset => {
+            payload.push(TAG_RESET);
+            put_u32(&mut payload, seq);
+        }
         MsgRef::Obs { obs } => {
             payload.push(TAG_OBS);
+            put_u32(&mut payload, seq);
             put_f32s(&mut payload, obs);
         }
         MsgRef::Step { actions } => {
             payload.push(TAG_STEP);
+            put_u32(&mut payload, seq);
             put_u32(&mut payload, actions.len() as u32);
             for action in actions {
                 put_action(&mut payload, action);
@@ -256,6 +455,7 @@ pub fn encode(msg: MsgRef<'_>) -> Vec<u8> {
         }
         MsgRef::StepResult { obs, transitions } => {
             payload.push(TAG_STEP_RESULT);
+            put_u32(&mut payload, seq);
             put_f32s(&mut payload, obs);
             put_u32(&mut payload, transitions.len() as u32);
             for t in transitions {
@@ -266,16 +466,43 @@ pub fn encode(msg: MsgRef<'_>) -> Vec<u8> {
         }
         MsgRef::RandomRollout { steps_per_lane } => {
             payload.push(TAG_RANDOM_ROLLOUT);
+            put_u32(&mut payload, seq);
             put_u64(&mut payload, steps_per_lane);
         }
         MsgRef::RolloutDone { steps, episodes } => {
             payload.push(TAG_ROLLOUT_DONE);
+            put_u32(&mut payload, seq);
             put_u64(&mut payload, steps);
             put_u64(&mut payload, episodes);
         }
-        MsgRef::Close => payload.push(TAG_CLOSE),
+        MsgRef::Status { token } => {
+            payload.push(TAG_STATUS);
+            put_u32(&mut payload, seq);
+            put_str(&mut payload, token);
+        }
+        MsgRef::StatusReport { report } => {
+            payload.push(TAG_STATUS_REPORT);
+            put_u32(&mut payload, seq);
+            put_str(&mut payload, report);
+        }
+        MsgRef::Busy {
+            active_lanes,
+            max_lanes,
+            retry_ms,
+        } => {
+            payload.push(TAG_BUSY);
+            put_u32(&mut payload, seq);
+            put_u64(&mut payload, active_lanes);
+            put_u64(&mut payload, max_lanes);
+            put_u64(&mut payload, retry_ms);
+        }
+        MsgRef::Close => {
+            payload.push(TAG_CLOSE);
+            put_u32(&mut payload, seq);
+        }
         MsgRef::Error { message } => {
             payload.push(TAG_ERROR);
+            put_u32(&mut payload, seq);
             put_str(&mut payload, message);
         }
     }
@@ -424,10 +651,11 @@ impl<'a> Reader<'a> {
 }
 
 /// Decode one payload (a frame minus its length prefix): verify the
-/// checksum and version, parse the tagged body, reject trailing bytes.
-pub fn decode_payload(payload: &[u8]) -> Result<Msg> {
-    // version + tag + checksum is the smallest possible payload.
-    if payload.len() < 6 {
+/// checksum and version, parse the sequence number and tagged body,
+/// reject trailing bytes.
+pub fn decode_payload(payload: &[u8]) -> Result<Frame> {
+    // version + tag + seq + checksum is the smallest possible payload.
+    if payload.len() < 10 {
         return Err(err(format!("frame too short ({} bytes)", payload.len())));
     }
     let (body, sum_bytes) = payload.split_at(payload.len() - 4);
@@ -442,15 +670,19 @@ pub fn decode_payload(payload: &[u8]) -> Result<Msg> {
     let version = r.u8()?;
     if version != PROTO_VERSION {
         return Err(err(format!(
-            "protocol version mismatch (peer {version}, ours {PROTO_VERSION})"
+            "protocol version mismatch (peer {version}, ours {PROTO_VERSION}); \
+             both halves must run the same cairl build"
         )));
     }
     let tag = r.u8()?;
+    let seq = r.u32()?;
     let msg = match tag {
         TAG_HELLO => Msg::Hello {
             spec: r.str()?,
             base_seed: r.u64()?,
             first_lane: r.u64()?,
+            pipeline: r.u32()?,
+            token: r.str()?,
         },
         TAG_SPEC => {
             let obs_dim = r.u64()?;
@@ -491,6 +723,13 @@ pub fn decode_payload(payload: &[u8]) -> Result<Msg> {
             steps: r.u64()?,
             episodes: r.u64()?,
         },
+        TAG_STATUS => Msg::Status { token: r.str()? },
+        TAG_STATUS_REPORT => Msg::StatusReport { report: r.str()? },
+        TAG_BUSY => Msg::Busy {
+            active_lanes: r.u64()?,
+            max_lanes: r.u64()?,
+            retry_ms: r.u64()?,
+        },
         TAG_CLOSE => Msg::Close,
         TAG_ERROR => Msg::Error { message: r.str()? },
         other => return Err(err(format!("unknown message tag {other}"))),
@@ -501,12 +740,12 @@ pub fn decode_payload(payload: &[u8]) -> Result<Msg> {
             r.remaining()
         )));
     }
-    Ok(msg)
+    Ok(Frame { seq, msg })
 }
 
-/// Write one complete frame.
-pub fn write_msg(w: &mut impl Write, msg: MsgRef<'_>) -> Result<()> {
-    w.write_all(&encode(msg))?;
+/// Write one complete frame stamped with `seq`.
+pub fn write_msg(w: &mut impl Write, seq: u32, msg: MsgRef<'_>) -> Result<()> {
+    w.write_all(&encode(seq, msg))?;
     w.flush()?;
     Ok(())
 }
@@ -514,12 +753,12 @@ pub fn write_msg(w: &mut impl Write, msg: MsgRef<'_>) -> Result<()> {
 /// Read one complete frame, enforcing the length bounds before any
 /// allocation.  An EOF on the length prefix surfaces as the underlying
 /// [`CairlError::Io`] (a clean peer hang-up for callers to match on).
-pub fn read_msg(r: &mut impl Read) -> Result<Msg> {
+pub fn read_msg(r: &mut impl Read) -> Result<Frame> {
     let mut len_bytes = [0u8; 4];
     r.read_exact(&mut len_bytes)?;
     let len = u32::from_le_bytes(len_bytes) as usize;
-    if len < 6 {
-        return Err(err(format!("frame length {len} below the minimum of 6")));
+    if len < 10 {
+        return Err(err(format!("frame length {len} below the minimum of 10")));
     }
     if len > MAX_FRAME {
         return Err(err(format!(
@@ -535,25 +774,39 @@ pub fn read_msg(r: &mut impl Read) -> Result<Msg> {
 mod tests {
     use super::*;
 
-    fn round_trip(msg: MsgRef<'_>) -> Msg {
-        let frame = encode(msg);
+    fn round_trip(seq: u32, msg: MsgRef<'_>) -> Frame {
+        let frame = encode(seq, msg);
         let mut cursor = &frame[..];
         read_msg(&mut cursor).expect("round trip")
+    }
+
+    fn framed(seq: u32, msg: Msg) -> Frame {
+        Frame { seq, msg }
     }
 
     #[test]
     fn every_message_round_trips() {
         assert_eq!(
-            round_trip(MsgRef::Hello {
-                spec: "CartPole-v1:4,GridRTS-v0:2",
-                base_seed: 99,
-                first_lane: 12,
-            }),
-            Msg::Hello {
-                spec: "CartPole-v1:4,GridRTS-v0:2".into(),
-                base_seed: 99,
-                first_lane: 12,
-            }
+            round_trip(
+                1,
+                MsgRef::Hello {
+                    spec: "CartPole-v1:4,GridRTS-v0:2",
+                    base_seed: 99,
+                    first_lane: 12,
+                    pipeline: 4,
+                    token: "hunter2",
+                }
+            ),
+            framed(
+                1,
+                Msg::Hello {
+                    spec: "CartPole-v1:4,GridRTS-v0:2".into(),
+                    base_seed: 99,
+                    first_lane: 12,
+                    pipeline: 4,
+                    token: "hunter2".into(),
+                }
+            )
         );
         let specs = vec![
             LaneSpec {
@@ -570,27 +823,36 @@ mod tests {
             },
         ];
         assert_eq!(
-            round_trip(MsgRef::Spec {
-                obs_dim: 4,
-                lane_specs: &specs,
-            }),
-            Msg::Spec {
-                obs_dim: 4,
-                lane_specs: specs.clone(),
-            }
+            round_trip(
+                1,
+                MsgRef::Spec {
+                    obs_dim: 4,
+                    lane_specs: &specs,
+                }
+            ),
+            framed(
+                1,
+                Msg::Spec {
+                    obs_dim: 4,
+                    lane_specs: specs.clone(),
+                }
+            )
         );
-        assert_eq!(round_trip(MsgRef::Reset), Msg::Reset);
+        assert_eq!(round_trip(7, MsgRef::Reset), framed(7, Msg::Reset));
         let obs = vec![0.5f32, -1.25, 3.0];
         assert_eq!(
-            round_trip(MsgRef::Obs { obs: &obs }),
-            Msg::Obs { obs: obs.clone() }
+            round_trip(8, MsgRef::Obs { obs: &obs }),
+            framed(8, Msg::Obs { obs: obs.clone() })
         );
         let actions = vec![Action::Discrete(1), Action::Continuous(vec![0.5, -0.5])];
         assert_eq!(
-            round_trip(MsgRef::Step { actions: &actions }),
-            Msg::Step {
-                actions: actions.clone(),
-            }
+            round_trip(9, MsgRef::Step { actions: &actions }),
+            framed(
+                9,
+                Msg::Step {
+                    actions: actions.clone(),
+                }
+            )
         );
         let transitions = vec![
             Transition::live(1.0),
@@ -601,58 +863,109 @@ mod tests {
             },
         ];
         assert_eq!(
-            round_trip(MsgRef::StepResult {
-                obs: &obs,
-                transitions: &transitions,
-            }),
-            Msg::StepResult {
-                obs: obs.clone(),
-                transitions: transitions.clone(),
-            }
+            round_trip(
+                9,
+                MsgRef::StepResult {
+                    obs: &obs,
+                    transitions: &transitions,
+                }
+            ),
+            framed(
+                9,
+                Msg::StepResult {
+                    obs: obs.clone(),
+                    transitions: transitions.clone(),
+                }
+            )
         );
         assert_eq!(
-            round_trip(MsgRef::RandomRollout { steps_per_lane: 7 }),
-            Msg::RandomRollout { steps_per_lane: 7 }
+            round_trip(10, MsgRef::RandomRollout { steps_per_lane: 7 }),
+            framed(10, Msg::RandomRollout { steps_per_lane: 7 })
         );
         assert_eq!(
-            round_trip(MsgRef::RolloutDone {
-                steps: 700,
-                episodes: 31,
-            }),
-            Msg::RolloutDone {
-                steps: 700,
-                episodes: 31,
-            }
+            round_trip(
+                10,
+                MsgRef::RolloutDone {
+                    steps: 700,
+                    episodes: 31,
+                }
+            ),
+            framed(
+                10,
+                Msg::RolloutDone {
+                    steps: 700,
+                    episodes: 31,
+                }
+            )
         );
-        assert_eq!(round_trip(MsgRef::Close), Msg::Close);
         assert_eq!(
-            round_trip(MsgRef::Error { message: "boom" }),
-            Msg::Error {
-                message: "boom".into(),
-            }
+            round_trip(1, MsgRef::Status { token: "" }),
+            framed(1, Msg::Status { token: "".into() })
+        );
+        assert_eq!(
+            round_trip(1, MsgRef::StatusReport { report: "{}" }),
+            framed(
+                1,
+                Msg::StatusReport {
+                    report: "{}".into()
+                }
+            )
+        );
+        assert_eq!(
+            round_trip(
+                1,
+                MsgRef::Busy {
+                    active_lanes: 96,
+                    max_lanes: 128,
+                    retry_ms: 50,
+                }
+            ),
+            framed(
+                1,
+                Msg::Busy {
+                    active_lanes: 96,
+                    max_lanes: 128,
+                    retry_ms: 50,
+                }
+            )
+        );
+        assert_eq!(round_trip(11, MsgRef::Close), framed(11, Msg::Close));
+        assert_eq!(
+            round_trip(SEQ_NONE, MsgRef::Error { message: "boom" }),
+            framed(
+                SEQ_NONE,
+                Msg::Error {
+                    message: "boom".into(),
+                }
+            )
         );
     }
 
     #[test]
     fn corrupt_frames_error_without_panicking() {
-        let frame = encode(MsgRef::Hello {
-            spec: "CartPole-v1",
-            base_seed: 3,
-            first_lane: 0,
-        });
+        let frame = encode(
+            3,
+            MsgRef::Hello {
+                spec: "CartPole-v1",
+                base_seed: 3,
+                first_lane: 0,
+                pipeline: 1,
+                token: "",
+            },
+        );
         // Flip every single byte in turn: each corruption must be an
-        // error (length, checksum, version or body), never a panic or a
-        // silently different message.
+        // error (length, checksum, version, seq or body), never a panic
+        // or a silently different message.
         for i in 0..frame.len() {
             let mut bad = frame.clone();
             bad[i] ^= 0x41;
             let mut cursor = &bad[..];
             match read_msg(&mut cursor) {
-                Ok(msg) => {
+                Ok(frame) => {
                     // A flipped length byte may reframe into a valid
                     // message only if the checksum still holds — which a
                     // 1-bit flip cannot arrange.
-                    panic!("byte {i} corruption decoded as {msg:?}");
+                    panic!("byte {i} corruption decoded as {frame:?}");
                 }
                 Err(e) => assert!(
                     matches!(e, CairlError::Shard(_) | CairlError::Io(_)),
@@ -664,9 +977,12 @@ mod tests {
 
     #[test]
     fn truncated_frames_error_at_every_length() {
-        let frame = encode(MsgRef::Step {
-            actions: &[Action::Discrete(0), Action::Continuous(vec![1.0])],
-        });
+        let frame = encode(
+            5,
+            MsgRef::Step {
+                actions: &[Action::Discrete(0), Action::Continuous(vec![1.0])],
+            },
+        );
         for keep in 0..frame.len() {
             let mut cursor = &frame[..keep];
             assert!(
@@ -688,6 +1004,7 @@ mod tests {
         // A valid envelope around a hostile element count dies on the
         // count-vs-remaining bound, not in the allocator.
         let mut payload = vec![PROTO_VERSION, TAG_OBS];
+        payload.extend_from_slice(&1u32.to_le_bytes()); // seq
         payload.extend_from_slice(&u32::MAX.to_le_bytes()); // count
         let sum = checksum(&payload);
         payload.extend_from_slice(&sum.to_le_bytes());
@@ -696,9 +1013,10 @@ mod tests {
 
     #[test]
     fn version_mismatch_is_rejected() {
-        let mut frame = encode(MsgRef::Close);
+        let mut frame = encode(1, MsgRef::Close);
         // Rewrite the version byte and fix the checksum up so only the
-        // version check can fire.
+        // version check can fire.  A v1 peer fails here with a message
+        // naming both revisions — the whole compatibility story.
         frame[4] = PROTO_VERSION + 1;
         let body_end = frame.len() - 4;
         let sum = checksum(&frame[4..body_end]);
@@ -706,5 +1024,39 @@ mod tests {
         let mut cursor = &frame[..];
         let e = read_msg(&mut cursor).unwrap_err();
         assert!(e.to_string().contains("version"), "{e}");
+    }
+
+    #[test]
+    fn seq_tracker_enforces_strict_successors() {
+        let mut t = SeqTracker::new();
+        assert_eq!(t.expected(), 1);
+        t.accept(1).unwrap();
+        t.accept(2).unwrap();
+        assert_eq!(t.expected(), 3);
+
+        // Duplicate and stale frames are named as such...
+        let dup = t.accept(2).unwrap_err();
+        assert!(dup.to_string().contains("stale or duplicated"), "{dup}");
+        let stale = t.accept(1).unwrap_err();
+        assert!(stale.to_string().contains("stale or duplicated"), "{stale}");
+        // ...gaps (reordered/dropped) as such...
+        let gap = t.accept(5).unwrap_err();
+        assert!(gap.to_string().contains("sequence gap"), "{gap}");
+        // ...and the reserved zero is never a valid request seq.
+        let zero = t.accept(SEQ_NONE).unwrap_err();
+        assert!(zero.to_string().contains("reserved"), "{zero}");
+
+        // A rejected frame does not advance the tracker.
+        assert_eq!(t.expected(), 3);
+        t.accept(3).unwrap();
+    }
+
+    #[test]
+    fn seq_space_wraps_around_the_reserved_zero() {
+        assert_eq!(next_seq(1), 2);
+        assert_eq!(next_seq(u32::MAX), 1, "wrap skips the reserved 0");
+        let mut t = SeqTracker { last: u32::MAX };
+        assert_eq!(t.expected(), 1);
+        t.accept(1).unwrap();
     }
 }

@@ -2,28 +2,45 @@
 //!
 //! `cairl serve --env <spec> --lanes N --listen <addr>` hosts the
 //! configured executor machinery (fused kernels included) behind a
-//! Unix-socket or TCP listener.  One framed stream per client, and one
-//! **private executor per connection**: the client's `Hello` names the
-//! env spec it wants (its slice of a sharded mixture — empty for the
-//! daemon's configured default), the pool-wide base seed and its first
-//! global lane, and the daemon builds a fresh executor seeded exactly
-//! as a local pool would seed those lanes.  Per-connection executors
-//! are what make the determinism contract trivial: two clients can
-//! never interleave steps into each other's trajectories.
+//! Unix-socket or TCP listener.  The daemon is **multi-tenant**: one
+//! shared listener, any number of concurrent clients, and one **private
+//! executor per connection** — the client's `Hello` names the env spec
+//! it wants (its slice of a sharded mixture, empty for the daemon's
+//! configured default), the pool-wide base seed and its first global
+//! lane, and the daemon builds a fresh executor seeded exactly as a
+//! local pool would seed those lanes.  Per-connection executors are
+//! what make the determinism contract trivial: two clients can never
+//! interleave steps into each other's trajectories.
 //!
-//! Inside a connection the protocol is strict request/reply
-//! (`Reset`→`Obs`, `Step`→`StepResult`,
-//! `RandomRollout`→`RolloutDone`), with every batch drained into the
-//! executor's `step_into` — the sync pool then fans it out over its
-//! worker `step_batch` groups as usual.  Malformed frames, bad specs,
-//! wrong action counts and executor panics all answer with an `Error`
-//! frame before the connection closes; the daemon itself never goes
-//! down with a client.
+//! **Admission control.**  `--max-lanes N` caps the summed lane count
+//! across live connections; a `Hello` that would exceed the budget is
+//! answered with a `Busy` frame (current/maximum lanes plus a suggested
+//! back-off) and the connection stays open for a retry.  `--token T`
+//! requires every `Hello`/`Status` to carry the same token — transport
+//! security stays out of scope (run TCP shards behind an SSH tunnel or
+//! on a trusted network; see README).
+//!
+//! **Introspection.**  A `Status` request — valid before any `Hello`,
+//! which is how `cairl serve --status <addr>` works — answers with a
+//! JSON [`ServerStats`] snapshot: uptime, lane budget, frame/step
+//! totals, reconnect count and a per-client table.
+//!
+//! Inside a connection the protocol is sequenced request/reply
+//! (`Reset`→`Obs`, `Step`→`StepResult`, `RandomRollout`→`RolloutDone`):
+//! the daemon enforces the strict-successor rule on request sequence
+//! numbers and echoes each request's seq on its reply, which is what
+//! lets a client keep several batches in flight (pipelining) and still
+//! pair every reply with its request.  Requests are processed strictly
+//! in order.  Malformed frames, bad sequence numbers, bad tokens, bad
+//! specs, wrong action counts and executor panics all answer with an
+//! `Error` frame before the connection closes; the daemon itself never
+//! goes down with a client.
 
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::experiment::{
     build_env_pool_shard, build_executor_with_kernel, ExecutorKind, KernelMode,
@@ -32,8 +49,12 @@ use crate::coordinator::pool::{BatchedExecutor, EnvPool, RolloutCounts};
 use crate::coordinator::registry::{self, MixtureSpec};
 use crate::core::env::Transition;
 use crate::core::error::{CairlError, Result};
+use crate::core::json::Value;
 use crate::shard::net::{FramedStream, RawStream, ShardAddr, ShardListener};
-use crate::shard::proto::{Msg, MsgRef};
+use crate::shard::proto::{Msg, MsgRef, SeqTracker, PROTO_VERSION, SEQ_NONE};
+
+/// Back-off the daemon suggests in a `Busy` frame.
+const BUSY_RETRY_MS: u64 = 50;
 
 /// What a shard daemon hosts: the default env spec plus the executor
 /// knobs every connection's pool is built with.
@@ -51,10 +72,17 @@ pub struct ServeConfig {
     pub threads: usize,
     /// Stepping kernel ([`KernelMode::Fused`] by default).
     pub kernel: KernelMode,
+    /// Admission budget: summed lanes across live connections (`0` =
+    /// unlimited).  A `Hello` over budget answers `Busy`.
+    pub max_lanes: usize,
+    /// Shared-secret auth token (`""` = no auth).  Checked on every
+    /// `Hello` and `Status`.
+    pub token: String,
 }
 
 impl ServeConfig {
-    /// Defaults: sync pool, one lane, all cores, fused kernels.
+    /// Defaults: sync pool, one lane, all cores, fused kernels, no lane
+    /// budget, no auth token.
     pub fn new(env_spec: &str) -> ServeConfig {
         ServeConfig {
             env_spec: env_spec.to_string(),
@@ -62,6 +90,8 @@ impl ServeConfig {
             lanes: 1,
             threads: 0,
             kernel: KernelMode::default(),
+            max_lanes: 0,
+            token: String::new(),
         }
     }
 
@@ -98,23 +128,281 @@ impl HostExec {
     }
 }
 
+/// One connected client's slice of the status report.
+struct ClientEntry {
+    spec: String,
+    lanes: usize,
+    pipeline: u32,
+    frames: u64,
+    steps: u64,
+    since: Instant,
+}
+
+/// Shared daemon counters behind [`ShardServer`]/[`ShardServerHandle`]:
+/// everything `cairl serve --status` reports.  All methods are safe to
+/// call from any thread while the daemon serves.
+pub struct ServerStats {
+    started: Instant,
+    max_lanes: usize,
+    total_connections: AtomicU64,
+    hellos: AtomicU64,
+    reconnects: AtomicU64,
+    busy_rejections: AtomicU64,
+    auth_failures: AtomicU64,
+    frames: AtomicU64,
+    steps: AtomicU64,
+    active_lanes: AtomicUsize,
+    clients: Mutex<BTreeMap<u64, ClientEntry>>,
+    /// `(spec, base_seed, first_lane)` triples seen across the daemon's
+    /// lifetime: a repeat is a client re-handshaking after a connection
+    /// loss, i.e. a failover reconnect.
+    origins: Mutex<BTreeMap<(String, u64, u64), u64>>,
+}
+
+impl ServerStats {
+    fn new(max_lanes: usize) -> ServerStats {
+        ServerStats {
+            started: Instant::now(),
+            max_lanes,
+            total_connections: AtomicU64::new(0),
+            hellos: AtomicU64::new(0),
+            reconnects: AtomicU64::new(0),
+            busy_rejections: AtomicU64::new(0),
+            auth_failures: AtomicU64::new(0),
+            frames: AtomicU64::new(0),
+            steps: AtomicU64::new(0),
+            active_lanes: AtomicUsize::new(0),
+            clients: Mutex::new(BTreeMap::new()),
+            origins: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Lanes currently reserved by connected clients.
+    pub fn active_lanes(&self) -> usize {
+        self.active_lanes.load(Ordering::Relaxed)
+    }
+
+    /// Connections that have completed a `Hello` and hold an executor.
+    pub fn active_clients(&self) -> usize {
+        self.clients.lock().map(|c| c.len()).unwrap_or(0)
+    }
+
+    /// `Hello`s refused with a `Busy` frame over the daemon's lifetime.
+    pub fn busy_rejections(&self) -> u64 {
+        self.busy_rejections.load(Ordering::Relaxed)
+    }
+
+    /// `Hello`s that re-presented a previously-seen seeding origin — a
+    /// client re-handshaking after losing its connection.
+    pub fn reconnects(&self) -> u64 {
+        self.reconnects.load(Ordering::Relaxed)
+    }
+
+    /// Valid frames received over the daemon's lifetime.
+    pub fn frames(&self) -> u64 {
+        self.frames.load(Ordering::Relaxed)
+    }
+
+    /// Lane-steps served over the daemon's lifetime.
+    pub fn steps(&self) -> u64 {
+        self.steps.load(Ordering::Relaxed)
+    }
+
+    /// Reserve `lanes` against the budget; `false` = over budget.
+    fn try_reserve(&self, lanes: usize) -> bool {
+        if self.max_lanes == 0 {
+            self.active_lanes.fetch_add(lanes, Ordering::Relaxed);
+            return true;
+        }
+        let mut cur = self.active_lanes.load(Ordering::Relaxed);
+        loop {
+            if cur + lanes > self.max_lanes {
+                return false;
+            }
+            match self.active_lanes.compare_exchange(
+                cur,
+                cur + lanes,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return true,
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    fn release_lanes(&self, lanes: usize) {
+        if lanes > 0 {
+            self.active_lanes.fetch_sub(lanes, Ordering::Relaxed);
+        }
+    }
+
+    fn register_client(&self, id: u64, spec: &str, lanes: usize, pipeline: u32) {
+        if let Ok(mut clients) = self.clients.lock() {
+            clients.insert(
+                id,
+                ClientEntry {
+                    spec: spec.to_string(),
+                    lanes,
+                    pipeline,
+                    frames: 0,
+                    steps: 0,
+                    since: Instant::now(),
+                },
+            );
+        }
+    }
+
+    /// Remove `id`'s entry (if any) and release its lane reservation.
+    /// Runs on connection end and on a re-`Hello`.
+    fn drop_client(&self, id: u64) {
+        let lanes = self
+            .clients
+            .lock()
+            .ok()
+            .and_then(|mut c| c.remove(&id))
+            .map(|e| e.lanes)
+            .unwrap_or(0);
+        self.release_lanes(lanes);
+    }
+
+    /// Global + per-client frame/step accounting for one request.
+    fn note_request(&self, id: u64, steps: u64) {
+        self.frames.fetch_add(1, Ordering::Relaxed);
+        if steps > 0 {
+            self.steps.fetch_add(steps, Ordering::Relaxed);
+        }
+        if let Ok(mut clients) = self.clients.lock() {
+            if let Some(entry) = clients.get_mut(&id) {
+                entry.frames += 1;
+                entry.steps += steps;
+            }
+        }
+    }
+
+    /// Record a `Hello`'s seeding origin; a repeat counts as a
+    /// failover reconnect.
+    fn note_origin(&self, spec: &str, base_seed: u64, first_lane: u64) {
+        self.hellos.fetch_add(1, Ordering::Relaxed);
+        if let Ok(mut origins) = self.origins.lock() {
+            let count = origins
+                .entry((spec.to_string(), base_seed, first_lane))
+                .or_insert(0);
+            if *count > 0 {
+                self.reconnects.fetch_add(1, Ordering::Relaxed);
+            }
+            *count += 1;
+        }
+    }
+
+    /// Render the status snapshot as a compact JSON document — the
+    /// `StatusReport` payload and the `cairl serve --status` output.
+    pub fn render_status(&self) -> String {
+        let uptime = self.started.elapsed().as_secs_f64().max(1e-9);
+        let frames = self.frames() as f64;
+        let steps = self.steps() as f64;
+        let mut doc = BTreeMap::new();
+        doc.insert("proto_version".into(), Value::Num(PROTO_VERSION as f64));
+        doc.insert("uptime_secs".into(), Value::Num(uptime));
+        doc.insert(
+            "total_connections".into(),
+            Value::Num(self.total_connections.load(Ordering::Relaxed) as f64),
+        );
+        doc.insert(
+            "hellos".into(),
+            Value::Num(self.hellos.load(Ordering::Relaxed) as f64),
+        );
+        doc.insert("reconnects".into(), Value::Num(self.reconnects() as f64));
+        doc.insert(
+            "busy_rejections".into(),
+            Value::Num(self.busy_rejections() as f64),
+        );
+        doc.insert(
+            "auth_failures".into(),
+            Value::Num(self.auth_failures.load(Ordering::Relaxed) as f64),
+        );
+        doc.insert("frames".into(), Value::Num(frames));
+        doc.insert("frames_per_sec".into(), Value::Num(frames / uptime));
+        doc.insert("steps".into(), Value::Num(steps));
+        doc.insert("steps_per_sec".into(), Value::Num(steps / uptime));
+        doc.insert("active_lanes".into(), Value::Num(self.active_lanes() as f64));
+        doc.insert("max_lanes".into(), Value::Num(self.max_lanes as f64));
+        let clients: Vec<Value> = self
+            .clients
+            .lock()
+            .map(|clients| {
+                clients
+                    .iter()
+                    .map(|(id, e)| {
+                        let mut c = BTreeMap::new();
+                        c.insert("id".into(), Value::Num(*id as f64));
+                        c.insert("spec".into(), Value::Str(e.spec.clone()));
+                        c.insert("lanes".into(), Value::Num(e.lanes as f64));
+                        c.insert("pipeline".into(), Value::Num(e.pipeline as f64));
+                        c.insert("frames".into(), Value::Num(e.frames as f64));
+                        c.insert("steps".into(), Value::Num(e.steps as f64));
+                        c.insert(
+                            "connected_secs".into(),
+                            Value::Num(e.since.elapsed().as_secs_f64()),
+                        );
+                        Value::Object(c)
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        doc.insert("active_clients".into(), Value::Num(clients.len() as f64));
+        doc.insert("clients".into(), Value::Array(clients));
+        Value::Object(doc).render()
+    }
+}
+
+/// Live connections, by id — the raw handles let
+/// [`ShardServerHandle::kill_connections`] sever every client at once
+/// (the failover drill in tests and CI).
+type ConnTable = Mutex<Vec<(u64, RawStream)>>;
+
 /// A bound-but-not-yet-serving shard daemon.
 pub struct ShardServer {
     listener: ShardListener,
     config: Arc<ServeConfig>,
+    stats: Arc<ServerStats>,
+    conns: Arc<ConnTable>,
 }
 
 impl ShardServer {
     /// Bind `addr` (`unix://...` or `tcp://...`) and validate the
     /// configured default spec eagerly, so a typo fails here and not on
     /// the first client.
+    ///
+    /// # Example: the serve handshake end to end
+    ///
+    /// ```
+    /// use cairl::shard::{ServeConfig, ShardClient, ShardServer};
+    ///
+    /// let mut config = ServeConfig::new("CartPole-v1");
+    /// config.lanes = 2;
+    /// config.threads = 1;
+    /// let server = ShardServer::bind("tcp://127.0.0.1:0", config).unwrap();
+    /// let handle = server.spawn();
+    ///
+    /// // Hello -> Spec: the daemon builds a private 2-lane executor
+    /// // seeded like local lanes [0, 2) and reports its lane metadata.
+    /// let client = ShardClient::connect(handle.addr(), "CartPole-v1:2", 7, 0).unwrap();
+    /// assert_eq!(client.num_lanes(), 2);
+    /// assert_eq!(client.obs_dim(), 4);
+    /// drop(client);
+    /// handle.shutdown();
+    /// ```
     pub fn bind(addr: &str, config: ServeConfig) -> Result<ShardServer> {
         validate_spec(&config.env_spec)?;
         let addr = ShardAddr::parse(addr)?;
         let listener = ShardListener::bind(&addr)?;
+        let stats = Arc::new(ServerStats::new(config.max_lanes));
         Ok(ShardServer {
             listener,
             config: Arc::new(config),
+            stats,
+            conns: Arc::new(Mutex::new(Vec::new())),
         })
     }
 
@@ -123,9 +411,14 @@ impl ShardServer {
         self.listener.local_addr()
     }
 
+    /// The daemon's shared counters (lives on after `run`/`spawn`).
+    pub fn stats(&self) -> Arc<ServerStats> {
+        Arc::clone(&self.stats)
+    }
+
     /// Serve until the process exits — the `cairl serve` foreground path.
     pub fn run(self) -> Result<()> {
-        accept_loop(self.listener, self.config, None);
+        accept_loop(self.listener, self.config, self.stats, self.conns, None);
         Ok(())
     }
 
@@ -136,14 +429,26 @@ impl ShardServer {
         let stop = Arc::new(AtomicBool::new(false));
         let addr = self.local_addr();
         let stop_thread = Arc::clone(&stop);
+        let stats = Arc::clone(&self.stats);
+        let conns = Arc::clone(&self.conns);
         let handle = std::thread::Builder::new()
             .name("cairl-shard-accept".into())
-            .spawn(move || accept_loop(self.listener, self.config, Some(stop_thread)))
+            .spawn(move || {
+                accept_loop(
+                    self.listener,
+                    self.config,
+                    self.stats,
+                    self.conns,
+                    Some(stop_thread),
+                )
+            })
             .expect("spawn shard accept loop");
         ShardServerHandle {
             stop,
             handle: Some(handle),
             addr,
+            stats,
+            conns,
         }
     }
 }
@@ -153,12 +458,34 @@ pub struct ShardServerHandle {
     stop: Arc<AtomicBool>,
     handle: Option<JoinHandle<()>>,
     addr: String,
+    stats: Arc<ServerStats>,
+    conns: Arc<ConnTable>,
 }
 
 impl ShardServerHandle {
     /// The served address (dialable).
     pub fn addr(&self) -> &str {
         &self.addr
+    }
+
+    /// The daemon's shared counters.
+    pub fn stats(&self) -> Arc<ServerStats> {
+        Arc::clone(&self.stats)
+    }
+
+    /// Sever every live connection (the accept loop keeps running, so
+    /// clients can re-dial and replay — the failover drill).  Returns
+    /// the number of connections cut.
+    pub fn kill_connections(&self) -> usize {
+        match self.conns.lock() {
+            Ok(conns) => {
+                for (_, raw) in conns.iter() {
+                    raw.shutdown();
+                }
+                conns.len()
+            }
+            Err(_) => 0,
+        }
     }
 
     /// Stop accepting and join the accept loop.
@@ -192,9 +519,29 @@ fn validate_spec(spec: &str) -> Result<()> {
     }
 }
 
+/// The lane count a `Hello` for `spec` will reserve (what the builder
+/// will produce: a mixture's summed lane counts, or the daemon's
+/// configured default for a bare id).
+fn requested_lanes(spec: &str, config: &ServeConfig) -> Result<usize> {
+    if MixtureSpec::is_mixture(spec) {
+        let parsed = MixtureSpec::parse(spec)?;
+        Ok(parsed.entries().iter().map(|(_, n)| n).sum())
+    } else {
+        registry::validate(spec)?;
+        Ok(config.lanes.max(1))
+    }
+}
+
 /// Poll-accept until stopped (or forever when `stop` is `None`); each
-/// connection gets its own detached thread.
-fn accept_loop(listener: ShardListener, config: Arc<ServeConfig>, stop: Option<Arc<AtomicBool>>) {
+/// connection gets its own detached thread, a stable id and a raw
+/// handle in the kill table.
+fn accept_loop(
+    listener: ShardListener,
+    config: Arc<ServeConfig>,
+    stats: Arc<ServerStats>,
+    conns: Arc<ConnTable>,
+    stop: Option<Arc<AtomicBool>>,
+) {
     loop {
         if let Some(flag) = &stop {
             if flag.load(Ordering::Acquire) {
@@ -203,10 +550,24 @@ fn accept_loop(listener: ShardListener, config: Arc<ServeConfig>, stop: Option<A
         }
         match listener.accept_nonblocking() {
             Ok(Some(stream)) => {
+                let id = stats.total_connections.fetch_add(1, Ordering::Relaxed) + 1;
+                if let Ok(raw) = stream.try_clone() {
+                    if let Ok(mut table) = conns.lock() {
+                        table.push((id, raw));
+                    }
+                }
                 let config = Arc::clone(&config);
+                let stats = Arc::clone(&stats);
+                let conns = Arc::clone(&conns);
                 let _ = std::thread::Builder::new()
                     .name("cairl-shard-conn".into())
-                    .spawn(move || serve_conn(stream, &config));
+                    .spawn(move || {
+                        serve_conn(stream, &config, &stats, id);
+                        stats.drop_client(id);
+                        if let Ok(mut table) = conns.lock() {
+                            table.retain(|(cid, _)| *cid != id);
+                        }
+                    });
             }
             Ok(None) => std::thread::sleep(Duration::from_millis(2)),
             Err(_) => std::thread::sleep(Duration::from_millis(20)),
@@ -214,41 +575,88 @@ fn accept_loop(listener: ShardListener, config: Arc<ServeConfig>, stop: Option<A
     }
 }
 
-/// Best-effort error reply; the connection closes either way.
-fn bail(stream: &mut FramedStream, message: &str) {
-    let _ = stream.send(MsgRef::Error { message });
+/// Best-effort error reply stamped with the offending request's seq
+/// (or [`SEQ_NONE`] when no request seq is known); the connection
+/// closes either way.
+fn bail(stream: &mut FramedStream, seq: u32, message: &str) {
+    let _ = stream.send(seq, MsgRef::Error { message });
 }
 
-/// One connection: handshake, then request/reply until `Close`/EOF.
-fn serve_conn(stream: RawStream, config: &ServeConfig) {
+/// Token check shared by `Hello` and `Status`.
+fn authorized(config: &ServeConfig, token: &str) -> bool {
+    config.token.is_empty() || token == config.token
+}
+
+/// One connection: handshake, then sequenced request/reply until
+/// `Close`/EOF.
+fn serve_conn(stream: RawStream, config: &ServeConfig, stats: &ServerStats, id: u64) {
     let Ok(mut stream) = FramedStream::new(stream) else {
         return;
     };
     let mut host: Option<HostExec> = None;
+    let mut seqs = SeqTracker::new();
     // Reusable step/reset buffers, sized at handshake.
     let mut obs: Vec<f32> = Vec::new();
     let mut transitions: Vec<Transition> = Vec::new();
 
     loop {
-        let msg = match stream.recv() {
-            Ok(msg) => msg,
+        let frame = match stream.recv() {
+            Ok(frame) => frame,
             Err(CairlError::Io(_)) => return, // peer hung up
             Err(e) => {
-                bail(&mut stream, &format!("bad frame: {e}"));
+                bail(&mut stream, SEQ_NONE, &format!("bad frame: {e}"));
                 return;
             }
         };
-        match msg {
+        if let Err(e) = seqs.accept(frame.seq) {
+            bail(&mut stream, SEQ_NONE, &e.to_string());
+            return;
+        }
+        let seq = frame.seq;
+        match frame.msg {
             Msg::Hello {
                 spec,
                 base_seed,
                 first_lane,
+                pipeline,
+                token,
             } => {
+                stats.note_request(id, 0);
+                if !authorized(config, &token) {
+                    stats.auth_failures.fetch_add(1, Ordering::Relaxed);
+                    bail(&mut stream, seq, "unauthorized: bad or missing token");
+                    return;
+                }
                 let spec = if spec.is_empty() {
                     config.env_spec.clone()
                 } else {
                     spec
                 };
+                // Admission control happens *before* the (expensive)
+                // executor build: compute the lanes this Hello needs,
+                // release any previous reservation (re-handshake), and
+                // reserve against the budget.
+                let lanes = match requested_lanes(&spec, config) {
+                    Ok(lanes) => lanes,
+                    Err(e) => {
+                        bail(&mut stream, seq, &format!("cannot host {spec:?}: {e}"));
+                        return;
+                    }
+                };
+                stats.drop_client(id);
+                host = None;
+                if !stats.try_reserve(lanes) {
+                    stats.busy_rejections.fetch_add(1, Ordering::Relaxed);
+                    let busy = MsgRef::Busy {
+                        active_lanes: stats.active_lanes() as u64,
+                        max_lanes: config.max_lanes as u64,
+                        retry_ms: BUSY_RETRY_MS,
+                    };
+                    if stream.send(seq, busy).is_err() {
+                        return;
+                    }
+                    continue; // the client may retry its Hello
+                }
                 let threads = config.effective_threads();
                 let built: Result<HostExec> = match config.kind {
                     // Keep the sync pool concrete so RandomRollout can
@@ -277,48 +685,82 @@ fn serve_conn(stream: RawStream, config: &ServeConfig) {
                     Ok(mut built) => {
                         let exec = built.exec();
                         let n = exec.num_lanes();
+                        if n != lanes {
+                            // The builder's lane count wins — reconcile
+                            // the admission reservation to match.
+                            stats.release_lanes(lanes);
+                            stats.active_lanes.fetch_add(n, Ordering::Relaxed);
+                        }
                         let d = exec.obs_dim();
                         obs = vec![0.0f32; n * d];
                         transitions = vec![Transition::default(); n];
+                        // Register before replying: a client that probes
+                        // `--status` right after its handshake must see
+                        // itself in the table.
+                        stats.register_client(id, &spec, n, pipeline);
+                        stats.note_origin(&spec, base_seed, first_lane);
                         if stream
-                            .send(MsgRef::Spec {
-                                obs_dim: d as u64,
-                                lane_specs: exec.lane_specs(),
-                            })
+                            .send(
+                                seq,
+                                MsgRef::Spec {
+                                    obs_dim: d as u64,
+                                    lane_specs: exec.lane_specs(),
+                                },
+                            )
                             .is_err()
                         {
+                            stats.drop_client(id);
                             return;
                         }
                         host = Some(built);
                     }
                     Err(e) => {
-                        bail(&mut stream, &format!("cannot host {spec:?}: {e}"));
+                        stats.release_lanes(lanes);
+                        bail(&mut stream, seq, &format!("cannot host {spec:?}: {e}"));
                         return;
                     }
                 }
             }
+            Msg::Status { token } => {
+                stats.note_request(id, 0);
+                if !authorized(config, &token) {
+                    stats.auth_failures.fetch_add(1, Ordering::Relaxed);
+                    bail(&mut stream, seq, "unauthorized: bad or missing token");
+                    return;
+                }
+                let report = stats.render_status();
+                if stream
+                    .send(seq, MsgRef::StatusReport { report: &report })
+                    .is_err()
+                {
+                    return;
+                }
+            }
             Msg::Reset => {
+                stats.note_request(id, 0);
                 let Some(host) = host.as_mut() else {
-                    bail(&mut stream, "Reset before Hello");
+                    bail(&mut stream, seq, "Reset before Hello");
                     return;
                 };
                 let ok = catch_exec(|| host.exec().reset_into(&mut obs));
                 if !ok {
-                    bail(&mut stream, "executor panicked during Reset");
+                    bail(&mut stream, seq, "executor panicked during Reset");
                     return;
                 }
-                if stream.send(MsgRef::Obs { obs: &obs }).is_err() {
+                if stream.send(seq, MsgRef::Obs { obs: &obs }).is_err() {
                     return;
                 }
             }
             Msg::Step { actions } => {
+                stats.note_request(id, actions.len() as u64);
                 let Some(host) = host.as_mut() else {
-                    bail(&mut stream, "Step before Hello");
+                    bail(&mut stream, seq, "Step before Hello");
                     return;
                 };
                 if actions.len() != transitions.len() {
                     bail(
                         &mut stream,
+                        seq,
                         &format!(
                             "Step carried {} actions for {} lanes",
                             actions.len(),
@@ -330,14 +772,17 @@ fn serve_conn(stream: RawStream, config: &ServeConfig) {
                 let ok =
                     catch_exec(|| host.exec().step_into(&actions, &mut obs, &mut transitions));
                 if !ok {
-                    bail(&mut stream, "executor panicked during Step");
+                    bail(&mut stream, seq, "executor panicked during Step");
                     return;
                 }
                 if stream
-                    .send(MsgRef::StepResult {
-                        obs: &obs,
-                        transitions: &transitions,
-                    })
+                    .send(
+                        seq,
+                        MsgRef::StepResult {
+                            obs: &obs,
+                            transitions: &transitions,
+                        },
+                    )
                     .is_err()
                 {
                     return;
@@ -345,39 +790,51 @@ fn serve_conn(stream: RawStream, config: &ServeConfig) {
             }
             Msg::RandomRollout { steps_per_lane } => {
                 let Some(host) = host.as_mut() else {
-                    bail(&mut stream, "RandomRollout before Hello");
+                    stats.note_request(id, 0);
+                    bail(&mut stream, seq, "RandomRollout before Hello");
                     return;
                 };
                 let mut counts = None;
                 let ok = catch_exec(|| counts = host.random_rollout(steps_per_lane));
                 if !ok {
-                    bail(&mut stream, "executor panicked during RandomRollout");
+                    stats.note_request(id, 0);
+                    bail(&mut stream, seq, "executor panicked during RandomRollout");
                     return;
                 }
                 match counts {
                     Some(c) => {
+                        stats.note_request(id, c.steps);
                         if stream
-                            .send(MsgRef::RolloutDone {
-                                steps: c.steps,
-                                episodes: c.episodes,
-                            })
+                            .send(
+                                seq,
+                                MsgRef::RolloutDone {
+                                    steps: c.steps,
+                                    episodes: c.episodes,
+                                },
+                            )
                             .is_err()
                         {
                             return;
                         }
                     }
                     None => {
+                        stats.note_request(id, 0);
                         bail(
                             &mut stream,
+                            seq,
                             "RandomRollout needs a pool-sync shard (serve --executor pool)",
                         );
                         return;
                     }
                 }
             }
-            Msg::Close => return,
+            Msg::Close => {
+                stats.note_request(id, 0);
+                return;
+            }
             other => {
-                bail(&mut stream, &format!("unexpected message {other:?}"));
+                stats.note_request(id, 0);
+                bail(&mut stream, seq, &format!("unexpected message {other:?}"));
                 return;
             }
         }

@@ -3,27 +3,34 @@
 //! The load-bearing invariant: a [`ShardedEnvPool`] is a pure
 //! *transport* transform — for the same env spec and seed, a sharded
 //! run reproduces the local executor's trajectories **bit for bit**,
-//! across 1 and 2 shards, scalar and fused serving kernels, and
-//! heterogeneous mixtures (padded-obs reassembly included).  On top of
-//! that: the protocol rejects truncated/corrupt frames with errors
-//! (never panics), the cost-aware [`ShardPlan`] places mixtures
-//! unevenly (asserted on the plan, not wall-clock), and the
-//! free-running workload and batched greedy evaluation run unchanged
-//! over shards.
+//! across 1 and 2 shards, scalar and fused serving kernels,
+//! heterogeneous mixtures (padded-obs reassembly included), any
+//! pipeline depth, and **across mid-workload connection kills** (the
+//! failover replay log reconstructs lost lanes exactly).  On top of
+//! that: the protocol rejects truncated/corrupt/mis-sequenced frames
+//! with errors (never panics), the daemon enforces lane budgets
+//! (`Busy`) and auth tokens, `shard_status` reports the live client
+//! table, the cost-aware [`ShardPlan`] places mixtures unevenly
+//! (asserted on the plan, not wall-clock), and the free-running
+//! workload and batched greedy evaluation run unchanged over shards.
 
 use std::collections::BTreeMap;
 use std::io::Write;
 use std::sync::atomic::{AtomicU32, Ordering};
 
 use cairl::coordinator::experiment::{
-    build_executor_with_kernel, run_random_workload, ExecutorKind, KernelMode,
+    build_executor_with_kernel, run_batched_workload, run_random_workload, ExecutorKind,
+    KernelMode,
 };
 use cairl::coordinator::pool::{BatchedExecutor, EnvPool, LaneSpec};
 use cairl::core::env::Transition;
 use cairl::core::error::CairlError;
 use cairl::core::rng::Pcg32;
 use cairl::core::spaces::Action;
-use cairl::shard::{proto, ServeConfig, ShardPlan, ShardServer, ShardedEnvPool};
+use cairl::shard::{
+    proto, shard_status, ConnectOptions, FailoverConfig, ServeConfig, ShardClient, ShardPlan,
+    ShardPoolOptions, ShardServer, ShardedEnvPool,
+};
 
 const MIX: &str = "CartPole-v1?max_steps=25:3,MountainCar-v0?max_steps=30:3";
 const STEPS: usize = 70;
@@ -295,23 +302,45 @@ fn protocol_fuzz_rejects_corruption_without_panicking() {
         action_space: cairl::core::spaces::Space::Discrete { n: 2 },
     }];
     let frames: Vec<Vec<u8>> = vec![
-        proto::encode(proto::MsgRef::Hello {
-            spec: MIX,
-            base_seed: 7,
-            first_lane: 3,
-        }),
-        proto::encode(proto::MsgRef::Spec {
-            obs_dim: 4,
-            lane_specs: &specs,
-        }),
-        proto::encode(proto::MsgRef::Step {
-            actions: &[Action::Discrete(1), Action::Continuous(vec![0.25, -1.0])],
-        }),
-        proto::encode(proto::MsgRef::StepResult {
-            obs: &[0.0, 1.0, 2.0, 3.0],
-            transitions: &[Transition::live(1.0)],
-        }),
-        proto::encode(proto::MsgRef::Error { message: "x" }),
+        proto::encode(
+            1,
+            proto::MsgRef::Hello {
+                spec: MIX,
+                base_seed: 7,
+                first_lane: 3,
+                pipeline: 4,
+                token: "s3cret",
+            },
+        ),
+        proto::encode(
+            1,
+            proto::MsgRef::Spec {
+                obs_dim: 4,
+                lane_specs: &specs,
+            },
+        ),
+        proto::encode(
+            2,
+            proto::MsgRef::Step {
+                actions: &[Action::Discrete(1), Action::Continuous(vec![0.25, -1.0])],
+            },
+        ),
+        proto::encode(
+            2,
+            proto::MsgRef::StepResult {
+                obs: &[0.0, 1.0, 2.0, 3.0],
+                transitions: &[Transition::live(1.0)],
+            },
+        ),
+        proto::encode(
+            3,
+            proto::MsgRef::Busy {
+                active_lanes: 96,
+                max_lanes: 96,
+                retry_ms: 50,
+            },
+        ),
+        proto::encode(proto::SEQ_NONE, proto::MsgRef::Error { message: "x" }),
     ];
     let mut rng = Pcg32::new(0xf522, 2);
     let mut rejected = 0u32;
@@ -417,5 +446,444 @@ fn tcp_shards_round_trip_too() {
     let tape = action_tape(&local.lane_specs().to_vec(), 50);
     assert_eq!(trajectory(local.as_mut(), &tape), trajectory(&mut pool, &tape));
     drop(pool);
+    handle.shutdown();
+}
+
+/// Quick failover policy for tests: short backoff, a few re-dials.
+fn fast_failover() -> FailoverConfig {
+    FailoverConfig {
+        redial_attempts: 5,
+        backoff_ms: 5,
+        backoff_cap_ms: 40,
+        replan: true,
+    }
+}
+
+#[test]
+fn pipelined_driver_matches_lockstep_returns_at_any_depth() {
+    // The pipelined driver samples actions obs-independently in batch
+    // order — the same RNG stream as the lockstep loop — so its
+    // episode-return log must match byte for byte at every depth.
+    let mut local = build_executor_with_kernel(
+        MIX,
+        ExecutorKind::Sequential,
+        1,
+        1,
+        SEED,
+        &[],
+        KernelMode::Fused,
+    )
+    .unwrap();
+    let reference = run_batched_workload(local.as_mut(), 80, SEED);
+    assert!(reference.episodes > 0);
+
+    let (addrs, handles) = spawn_shards(2, KernelMode::Fused);
+    for depth in [1usize, 2, 4] {
+        let opts = ShardPoolOptions {
+            base_seed: SEED,
+            pipeline: depth,
+            costs: Some(uniform_costs()),
+            failover: fast_failover(),
+            ..Default::default()
+        };
+        let mut pool = ShardedEnvPool::connect_opts(&addrs, MIX, opts).unwrap();
+        assert_eq!(pool.pipeline_depth(), depth);
+        let r = pool.run_pipelined_workload(80, SEED);
+        assert_eq!(r.steps, reference.steps, "depth {depth}");
+        assert_eq!(r.episodes, reference.episodes, "depth {depth}");
+        assert_eq!(
+            r.episode_returns, reference.episode_returns,
+            "depth {depth}: episode returns diverged"
+        );
+        assert_eq!(pool.reconnects(), &[0, 0], "healthy run must not reconnect");
+    }
+    for handle in handles {
+        handle.shutdown();
+    }
+}
+
+#[test]
+fn failover_replays_killed_connections_bit_exactly() {
+    // Kill every live connection on both daemons mid-tape (daemons stay
+    // up): the pool must re-dial, replay its operation log against the
+    // fresh executors, and finish with a bit-identical trajectory.
+    let mut local = build_executor_with_kernel(
+        MIX,
+        ExecutorKind::Sequential,
+        1,
+        1,
+        SEED,
+        &[],
+        KernelMode::Fused,
+    )
+    .unwrap();
+    let tape = action_tape(&local.lane_specs().to_vec(), STEPS);
+    let (obs_ref, tr_ref) = trajectory(local.as_mut(), &tape);
+
+    let (addrs, handles) = spawn_shards(2, KernelMode::Fused);
+    let opts = ShardPoolOptions {
+        base_seed: SEED,
+        costs: Some(uniform_costs()),
+        failover: fast_failover(),
+        ..Default::default()
+    };
+    let mut pool = ShardedEnvPool::connect_opts(&addrs, MIX, opts).unwrap();
+    let n = pool.num_lanes();
+    let d = pool.obs_dim();
+    let mut obs = vec![f32::NAN; n * d];
+    let mut tr = vec![Transition::default(); n];
+    let mut obs_stream = Vec::new();
+    let mut tr_stream = Vec::new();
+    pool.reset_into(&mut obs);
+    obs_stream.extend_from_slice(&obs);
+    for (i, actions) in tape.iter().enumerate() {
+        if i == STEPS / 2 {
+            let killed: usize = handles.iter().map(|h| h.kill_connections()).sum();
+            assert!(killed >= 2, "expected live connections to kill, got {killed}");
+        }
+        pool.step_into(actions, &mut obs, &mut tr);
+        obs_stream.extend_from_slice(&obs);
+        tr_stream.extend_from_slice(&tr);
+    }
+    assert_eq!(tr_ref, tr_stream, "transitions diverged across the kill");
+    assert_eq!(obs_ref, obs_stream, "observations diverged across the kill");
+    let reconnects: u64 = pool.reconnects().iter().sum();
+    assert!(reconnects >= 2, "both shards must have failed over: {reconnects}");
+    drop(pool);
+    for handle in handles {
+        handle.shutdown();
+    }
+}
+
+#[test]
+fn pipelined_workload_survives_mid_run_kill_with_identical_returns() {
+    // The acceptance shape: a heterogeneous workload at depth >= 2 with
+    // connections killed mid-run.  This replicates the pipelined driver
+    // loop so the kill lands at a deterministic batch index.
+    let steps_per_lane = 120u64;
+    let mut local = build_executor_with_kernel(
+        MIX,
+        ExecutorKind::Sequential,
+        1,
+        1,
+        SEED,
+        &[],
+        KernelMode::Fused,
+    )
+    .unwrap();
+    let reference = run_batched_workload(local.as_mut(), steps_per_lane, SEED);
+
+    let (addrs, handles) = spawn_shards(2, KernelMode::Fused);
+    let opts = ShardPoolOptions {
+        base_seed: SEED,
+        pipeline: 3,
+        costs: Some(uniform_costs()),
+        failover: fast_failover(),
+        ..Default::default()
+    };
+    let mut pool = ShardedEnvPool::connect_opts(&addrs, MIX, opts).unwrap();
+    let specs = pool.lane_specs().to_vec();
+    let n = pool.num_lanes();
+    let mut rng = Pcg32::new(SEED, 23);
+    let mut obs = vec![0.0f32; n * pool.obs_dim()];
+    let mut transitions = vec![Transition::default(); n];
+    let mut actions: Vec<Action> = Vec::with_capacity(n);
+    pool.reset_into(&mut obs);
+    let mut episode_returns = Vec::new();
+    let mut lane_return = vec![0.0f32; n];
+    let mut episodes = 0u64;
+    let (mut submitted, mut consumed) = (0u64, 0u64);
+    while consumed < steps_per_lane {
+        while submitted < steps_per_lane && pool.in_flight() < pool.pipeline_depth() {
+            actions.clear();
+            actions.extend(specs.iter().map(|s| s.action_space.sample(&mut rng)));
+            pool.submit_step(&actions);
+            submitted += 1;
+        }
+        if consumed == steps_per_lane / 2 {
+            // The in-flight tail (up to depth batches) is replayed and
+            // left pending on the fresh connections.
+            let killed: usize = handles.iter().map(|h| h.kill_connections()).sum();
+            assert!(killed >= 2, "expected live connections to kill, got {killed}");
+        }
+        pool.recv_oldest_step(&mut obs, &mut transitions);
+        consumed += 1;
+        for (acc, t) in lane_return.iter_mut().zip(&transitions) {
+            *acc += t.reward;
+            if t.done || t.truncated {
+                episodes += 1;
+                episode_returns.push(*acc);
+                *acc = 0.0;
+            }
+        }
+    }
+    assert_eq!(episodes, reference.episodes);
+    assert_eq!(
+        episode_returns, reference.episode_returns,
+        "episode returns diverged across a depth-3 mid-run kill"
+    );
+    let reconnects: u64 = pool.reconnects().iter().sum();
+    assert!(reconnects >= 2, "both shards must have failed over: {reconnects}");
+    drop(pool);
+    for handle in handles {
+        handle.shutdown();
+    }
+}
+
+#[test]
+fn shard_death_replans_onto_survivor_and_preserves_returns() {
+    // A daemon that is gone for good (listener down, socket removed):
+    // re-dials exhaust, the lost assignment re-plans onto the survivor,
+    // and the workload's returns are still byte-identical to local.
+    let mut local = build_executor_with_kernel(
+        MIX,
+        ExecutorKind::Sequential,
+        1,
+        1,
+        SEED,
+        &[],
+        KernelMode::Fused,
+    )
+    .unwrap();
+    let reference = run_batched_workload(local.as_mut(), 40, SEED);
+
+    let (addrs, mut handles) = spawn_shards(2, KernelMode::Fused);
+    let opts = ShardPoolOptions {
+        base_seed: SEED,
+        pipeline: 2,
+        costs: Some(uniform_costs()),
+        failover: FailoverConfig {
+            redial_attempts: 1,
+            backoff_ms: 5,
+            backoff_cap_ms: 10,
+            replan: true,
+        },
+        ..Default::default()
+    };
+    let mut pool = ShardedEnvPool::connect_opts(&addrs, MIX, opts).unwrap();
+    assert_eq!(pool.shards(), 2);
+    // Take shard 1's daemon down entirely.
+    let dead = handles.remove(1);
+    dead.kill_connections();
+    dead.shutdown();
+
+    let r = pool.run_pipelined_workload(40, SEED);
+    assert_eq!(r.episodes, reference.episodes);
+    assert_eq!(
+        r.episode_returns, reference.episode_returns,
+        "returns diverged after re-planning onto the survivor"
+    );
+    assert!(pool.reconnects()[1] >= 1, "shard 1 must have re-planned");
+    drop(pool);
+    for handle in handles {
+        handle.shutdown();
+    }
+}
+
+#[test]
+fn lane_budget_answers_busy_and_frees_on_disconnect() {
+    let config = ServeConfig {
+        max_lanes: 2,
+        threads: 1,
+        ..ServeConfig::new("CartPole-v1")
+    };
+    let server = ShardServer::bind(&fresh_addr(), config).unwrap();
+    let addr = server.local_addr();
+    let handle = server.spawn();
+
+    let first = ShardClient::connect(&addr, "CartPole-v1:2", 0, 0).unwrap();
+    assert_eq!(first.num_lanes(), 2);
+
+    // Budget exhausted: an impatient client gets Unavailable, not a hang.
+    let opts = ConnectOptions {
+        busy_retries: 0,
+        ..ConnectOptions::default()
+    };
+    let err = ShardClient::connect_with(&addr, "CartPole-v1:1", 0, 0, &opts).unwrap_err();
+    assert!(
+        matches!(err, CairlError::Unavailable(_)),
+        "expected Unavailable, got {err}"
+    );
+    assert!(handle.stats().busy_rejections() >= 1);
+
+    // A patient client wins the lanes once the first disconnects.
+    drop(first);
+    let opts = ConnectOptions {
+        busy_retries: 40,
+        ..ConnectOptions::default()
+    };
+    let second = ShardClient::connect_with(&addr, "CartPole-v1:2", 0, 0, &opts).unwrap();
+    assert_eq!(second.num_lanes(), 2);
+    drop(second);
+    handle.shutdown();
+}
+
+#[test]
+fn auth_token_gates_hello_and_status() {
+    let config = ServeConfig {
+        token: "s3cret".to_string(),
+        threads: 1,
+        ..ServeConfig::new("CartPole-v1")
+    };
+    let server = ShardServer::bind(&fresh_addr(), config).unwrap();
+    let addr = server.local_addr();
+    let handle = server.spawn();
+
+    let err = ShardClient::connect(&addr, "CartPole-v1:1", 0, 0).unwrap_err();
+    assert!(err.to_string().contains("unauthorized"), "{err}");
+    assert!(shard_status(&addr, "").is_err());
+    assert!(shard_status(&addr, "wrong").is_err());
+
+    let opts = ConnectOptions {
+        token: "s3cret".to_string(),
+        ..ConnectOptions::default()
+    };
+    let client = ShardClient::connect_with(&addr, "CartPole-v1:1", 0, 0, &opts).unwrap();
+    assert_eq!(client.num_lanes(), 1);
+    let report = shard_status(&addr, "s3cret").unwrap();
+    assert!(report.contains("\"active_lanes\""), "{report}");
+    drop(client);
+    handle.shutdown();
+}
+
+#[test]
+fn status_report_exposes_the_client_table() {
+    let (addrs, handles) = spawn_shards(1, KernelMode::Fused);
+    let opts = ConnectOptions {
+        pipeline: 3,
+        ..ConnectOptions::default()
+    };
+    let client = ShardClient::connect_with(&addrs[0], "CartPole-v1:2", 11, 0, &opts).unwrap();
+
+    let report = shard_status(&addrs[0], "").unwrap();
+    let v = cairl::core::json::parse(&report).unwrap();
+    assert_eq!(v.get("proto_version").and_then(|x| x.as_usize()), Some(2));
+    assert_eq!(v.get("active_clients").and_then(|x| x.as_usize()), Some(1));
+    assert_eq!(v.get("active_lanes").and_then(|x| x.as_usize()), Some(2));
+    assert_eq!(v.get("max_lanes").and_then(|x| x.as_usize()), Some(0));
+    let clients = v.get("clients").and_then(|x| x.as_array()).unwrap();
+    assert_eq!(clients.len(), 1);
+    assert_eq!(clients[0].get("lanes").and_then(|x| x.as_usize()), Some(2));
+    assert_eq!(clients[0].get("pipeline").and_then(|x| x.as_usize()), Some(3));
+    assert_eq!(
+        clients[0].get("spec").and_then(|x| x.as_str()),
+        Some("CartPole-v1:2")
+    );
+    // The status probe itself must not reserve lanes or count as a client.
+    let again = shard_status(&addrs[0], "").unwrap();
+    let v2 = cairl::core::json::parse(&again).unwrap();
+    assert_eq!(v2.get("active_clients").and_then(|x| x.as_usize()), Some(1));
+    drop(client);
+    handles.into_iter().for_each(|h| h.shutdown());
+}
+
+#[test]
+fn sequence_fuzz_accepts_only_strict_successors() {
+    // Reorder / duplicate / stale-seq fuzz over the tracker: only the
+    // strict successor ever advances, everything else errors (and does
+    // not advance the window).
+    let mut rng = Pcg32::new(0x5e9f, 7);
+    let mut tracker = proto::SeqTracker::new();
+    let mut expected = 1u32;
+    let mut accepted = 0u32;
+    for _ in 0..20_000 {
+        let roll = rng.below(10);
+        let candidate = match roll {
+            0..=3 => expected,                            // in order
+            4..=5 => expected.wrapping_sub(1 + rng.below(8)), // stale / duplicate
+            6..=7 => expected.wrapping_add(1 + rng.below(8)), // gap / reorder
+            _ => rng.below(u32::MAX),                     // anything
+        };
+        let ok = tracker.accept(candidate).is_ok();
+        assert_eq!(
+            ok,
+            candidate == expected,
+            "seq {candidate} vs expected {expected}"
+        );
+        if ok {
+            accepted += 1;
+            expected = proto::next_seq(expected);
+        }
+    }
+    assert!(accepted > 1000, "fuzz must exercise the accept path");
+    // Decoded frames carry their seq verbatim for the tracker to judge.
+    for seq in [1u32, 2, 0xdead_beef, u32::MAX] {
+        let frame = proto::encode(seq, proto::MsgRef::Reset);
+        let mut cursor = &frame[..];
+        assert_eq!(proto::read_msg(&mut cursor).unwrap().seq, seq);
+    }
+}
+
+#[test]
+fn server_closes_connections_on_sequence_violations() {
+    use std::net::TcpStream;
+    // Raw TCP so the test controls the seq bytes on the wire.
+    let server =
+        ShardServer::bind("tcp://127.0.0.1:0", ServeConfig::new("CartPole-v1")).unwrap();
+    let addr = server.local_addr();
+    let handle = server.spawn();
+    let hp = addr.strip_prefix("tcp://").unwrap();
+
+    // A Hello arriving with seq 5 (expected 1): rejected as a gap, and
+    // the error frame carries the reserved seq 0.
+    {
+        let mut stream = TcpStream::connect(hp).unwrap();
+        stream
+            .write_all(&proto::encode(
+                5,
+                proto::MsgRef::Hello {
+                    spec: "CartPole-v1:1",
+                    base_seed: 0,
+                    first_lane: 0,
+                    pipeline: 1,
+                    token: "",
+                },
+            ))
+            .unwrap();
+        let frame = proto::read_msg(&mut stream).unwrap();
+        assert_eq!(frame.seq, proto::SEQ_NONE);
+        match frame.msg {
+            proto::Msg::Error { message } => {
+                assert!(message.contains("sequence"), "{message}")
+            }
+            other => panic!("expected Error, got {other:?}"),
+        }
+        // The connection is closed after the violation.
+        assert!(proto::read_msg(&mut stream).is_err());
+    }
+
+    // A duplicate seq after a good handshake: same rejection.
+    {
+        let mut stream = TcpStream::connect(hp).unwrap();
+        stream
+            .write_all(&proto::encode(
+                1,
+                proto::MsgRef::Hello {
+                    spec: "CartPole-v1:1",
+                    base_seed: 0,
+                    first_lane: 0,
+                    pipeline: 1,
+                    token: "",
+                },
+            ))
+            .unwrap();
+        let spec_frame = proto::read_msg(&mut stream).unwrap();
+        assert_eq!(spec_frame.seq, 1);
+        assert!(matches!(spec_frame.msg, proto::Msg::Spec { .. }));
+        stream.write_all(&proto::encode(1, proto::MsgRef::Reset)).unwrap();
+        let frame = proto::read_msg(&mut stream).unwrap();
+        match frame.msg {
+            proto::Msg::Error { message } => {
+                assert!(message.contains("stale"), "{message}")
+            }
+            other => panic!("expected Error, got {other:?}"),
+        }
+        assert!(proto::read_msg(&mut stream).is_err());
+    }
+
+    // The daemon survives both abuses.
+    let client = ShardClient::connect(&addr, "CartPole-v1:1", 0, 0).unwrap();
+    assert_eq!(client.num_lanes(), 1);
+    drop(client);
     handle.shutdown();
 }
