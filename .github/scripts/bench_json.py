@@ -38,12 +38,18 @@ def main() -> int:
 
     kernels: set[str] = set()
     topologies: set[str] = set()
+    script_runners: set[str] = set()
     for csv_path in sorted(results_dir.glob("*.csv")):
         with csv_path.open(newline="") as fh:
             rows = list(csv.DictReader(fh))
         doc["tables"][csv_path.stem] = rows
         kernels.update(row["kernel"] for row in rows if row.get("kernel"))
         topologies.update(row["topology"] for row in rows if row.get("topology"))
+        script_runners.update(
+            row["variant"]
+            for row in rows
+            if row.get("variant", "").startswith("bounce")
+        )
     # Which stepping kernels the bench rows cover (scalar/fused), so the
     # trend tooling and humans compare like against like across runs.
     doc["kernel_modes"] = sorted(kernels)
@@ -51,6 +57,10 @@ def main() -> int:
     # the trend tooling uses its presence to tell whether a previous
     # artifact predates the sharded rows entirely.
     doc["topologies"] = sorted(topologies)
+    # Which script-runner rows exist (tree-walk AST / bytecode VM /
+    # batched SoA on bounce.mpy): like `topologies`, its presence tells
+    # the trend tooling whether a previous artifact predates them.
+    doc["script_runners"] = sorted(script_runners)
 
     log_path = results_dir / "bench_smoke.log"
     if log_path.exists():

@@ -76,6 +76,12 @@ def is_shard_row(key: str) -> bool:
     return "shard" in key.lower()
 
 
+def is_script_row(key: str) -> bool:
+    """Script-runner bench rows carry 'bounce' in their label
+    (ablation_dispatch prints `bounce tree-walk ... steps/s`)."""
+    return "bounce" in key.lower()
+
+
 def find_previous(arg: Path) -> Path | None:
     if arg.is_file():
         return arg
@@ -172,6 +178,20 @@ def main() -> int:
                 "that have no baseline yet (they compare from the next run)"
             )
             current = {k: v for k, v in current.items() if not is_shard_row(k)}
+
+    # Same story for the script-runner rows (tree-walk / bytecode /
+    # batched SoA on bounce.mpy): they only exist from the bytecode-VM
+    # PR onward, so a previous artifact without the marker field has no
+    # baseline for them yet.
+    if current_doc.get("script_runners") and "script_runners" not in previous_doc:
+        n_script = sum(1 for key in current if is_script_row(key))
+        if n_script:
+            print(
+                "::notice title=bench trend::previous BENCH_ci.json predates "
+                f"the script-runner rows — skipping {n_script} row(s) "
+                "that have no baseline yet (they compare from the next run)"
+            )
+            current = {k: v for k, v in current.items() if not is_script_row(k)}
 
     shared = sorted(set(current) & set(previous))
     print(

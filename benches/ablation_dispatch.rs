@@ -14,6 +14,12 @@
 //! is small in absolute terms (a vtable call per step) while the
 //! interpreter pays orders of magnitude — i.e. the language choice, not
 //! the dispatch mechanism, carries Fig. 1.
+//!
+//! The scripting-tentpole rows re-run one MiniScript program
+//! (`examples/bounce.mpy`) on all three script runners: the tree-walk
+//! AST interpreter, the register-bytecode VM (target: >=5x over the
+//! tree-walk), and the SoA `ScriptBatch` kernel where a single VM steps
+//! a 32-lane group's state columns.
 
 #[path = "harness/mod.rs"]
 mod harness;
@@ -154,6 +160,100 @@ fn main() {
         (steps / 32).max(1) * 32,
     ));
 
+    // --- scripting tentpole: the same MiniScript program on all three
+    // script runners.  Single-env rows first (one lane, Env trait), then
+    // the batched row: the program is registered at runtime, so the
+    // registry's fused lane builder picks it up and ONE bytecode VM
+    // steps every lane's SoA state columns.
+    const BOUNCE: &str = include_str!("../examples/bounce.mpy");
+    const BOUNCE_STREAM: u64 = 0xb0b;
+    use cairl::script::envs::{RenderHint, ScriptEnv};
+    use cairl::script::vm::CompiledScriptEnv;
+    let tree = time_trials(trials, |i| {
+        let mut env =
+            ScriptEnv::try_load("Script/Bounce-v0", BOUNCE, BOUNCE_STREAM, RenderHint::None)
+                .unwrap();
+        drive(&mut env, script_steps, i);
+    });
+    let vm = time_trials(trials, |i| {
+        let mut env = CompiledScriptEnv::try_load(
+            "Script/Bounce-v0",
+            BOUNCE,
+            BOUNCE_STREAM,
+            RenderHint::None,
+        )
+        .unwrap();
+        drive(&mut env, script_steps, i);
+    });
+    let tree_ns = ns(tree.mean, script_steps);
+    let vm_ns = ns(vm.mean, script_steps);
+    let vm_speedup = tree_ns / vm_ns;
+    cairl::coordinator::registry::register_script("Bounce-v0", BOUNCE).unwrap();
+    let bench_bounce_pool = |kernel: KernelMode| {
+        let n_lanes = 32usize;
+        let lane_budget = (script_steps / n_lanes as u64).max(1);
+        let best: f64 = (0..trials)
+            .map(|i| {
+                let mut exec = build_executor_with_kernel(
+                    "Script/Bounce-v0",
+                    ExecutorKind::Sequential,
+                    n_lanes,
+                    1,
+                    i,
+                    &[],
+                    kernel,
+                )
+                .unwrap();
+                run_batched_workload(exec.as_mut(), lane_budget, i).throughput
+            })
+            .fold(0.0, f64::max);
+        1e9 / best
+    };
+    let bounce_scalar = bench_bounce_pool(KernelMode::Scalar);
+    let bounce_fused = bench_bounce_pool(KernelMode::Fused);
+    println!(
+        "bounce/tree-walk  (1 lane):   {tree_ns:>9.1} ns/step\n\
+         bounce/bytecode   (1 lane):   {vm_ns:>9.1} ns/step  ({vm_speedup:.1}x over tree-walk)\n\
+         bounce/scalar     (32 lanes): {bounce_scalar:>9.1} ns/lane-step\n\
+         bounce/fused-soa  (32 lanes): {bounce_fused:>9.1} ns/lane-step  ({:.1}x over scalar lanes)\n\
+         bytecode-vs-tree-walk speedup on examples/bounce.mpy: {vm_speedup:.1}x",
+        bounce_scalar / bounce_fused
+    );
+    // steps/s spellings of the same rows, so the bench-trend tooling
+    // tracks the script runners PR over PR like every other workload.
+    for (label, row_ns) in [
+        ("tree-walk", tree_ns),
+        ("bytecode", vm_ns),
+        ("batched-soa", bounce_fused),
+    ] {
+        println!("bounce {label:<12} {:>12.0} steps/s", 1e9 / row_ns);
+    }
+    let bounce_lane_steps = (script_steps / 32).max(1) * 32;
+    executor_rows.push((
+        "bounce-ast".to_string(),
+        KernelMode::Scalar.label(),
+        tree_ns,
+        script_steps,
+    ));
+    executor_rows.push((
+        "bounce-vm".to_string(),
+        KernelMode::Scalar.label(),
+        vm_ns,
+        script_steps,
+    ));
+    executor_rows.push((
+        "bounce-32".to_string(),
+        KernelMode::Scalar.label(),
+        bounce_scalar,
+        bounce_lane_steps,
+    ));
+    executor_rows.push((
+        "bounce-32".to_string(),
+        KernelMode::Fused.label(),
+        bounce_fused,
+        bounce_lane_steps,
+    ));
+
     let mut log = CsvLogger::create(
         std::path::Path::new("results/ablation_dispatch.csv"),
         &["variant", "kernel", "ns_per_step", "steps", "trials"],
@@ -181,5 +281,10 @@ fn main() {
     assert!(
         script_ns > 10.0 * static_ns,
         "interpreter should dominate dispatch costs"
+    );
+    assert!(
+        vm_speedup >= 5.0,
+        "bytecode VM should be >=5x over the tree-walk on bounce.mpy, \
+         got {vm_speedup:.1}x"
     );
 }

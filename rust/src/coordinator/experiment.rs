@@ -10,7 +10,7 @@ use std::time::{Duration, Instant};
 use crate::coordinator::pool::{
     AsyncEnvPool, BatchedExecutor, EnvPool, LaneGroupSpec, LaneSpec, RandomRollout,
 };
-use crate::coordinator::registry::{self, MixtureSpec};
+use crate::coordinator::registry::{self, MixtureEntry, MixtureSpec};
 use crate::coordinator::vec_env::VecEnv;
 use crate::core::batch::{DynBatchEnv, ScalarBatch};
 use crate::core::env::{DynEnv, Env, Transition};
@@ -231,16 +231,19 @@ pub fn build_executor_wrapped(
     )
 }
 
-/// The full executor build surface: env spec (bare id or mixture),
-/// executor kind, extra wrapper chain and kernel mode.
+/// The full executor build surface: env spec (bare id or mixture, with
+/// optional per-component `+`-joined wrapper chains), executor kind,
+/// extra wrapper chain and kernel mode.
 ///
 /// Lanes are planned as contiguous **groups** keyed by (env id, kwargs,
 /// wrapper chain): under [`KernelMode::Fused`] each group whose
-/// registry spec advertises a batch builder (and whose chain the
-/// kernel can absorb — an extra `--wrap` chain always forces the
-/// fallback) becomes one fused SoA batch, everything else a
-/// [`ScalarBatch`] over per-lane envs.  [`KernelMode::Scalar`] forces
-/// the fallback everywhere; trajectories are identical either way.
+/// registry spec advertises a batch builder (and whose full effective
+/// chain — component `+`-chain plus the extra `--wrap` chain — the
+/// kernel can absorb) becomes one fused SoA batch, everything else a
+/// [`ScalarBatch`] over per-lane envs.  A chain that breaks fusion
+/// falls back to scalar lanes; it never errors.  [`KernelMode::Scalar`]
+/// forces the fallback everywhere; trajectories are identical either
+/// way.
 pub fn build_executor_with_kernel(
     env_spec: &str,
     kind: ExecutorKind,
@@ -253,12 +256,12 @@ pub fn build_executor_with_kernel(
     for wrapper in wrappers {
         wrapper.validate()?;
     }
-    let entries: Vec<(String, usize)> = if MixtureSpec::is_mixture(env_spec) {
-        // Parsing validates every component id + kwargs eagerly.
+    let entries: Vec<MixtureEntry> = if MixtureSpec::is_mixture(env_spec) {
+        // Parsing validates every component id + kwargs + chain eagerly.
         MixtureSpec::parse(env_spec)?.entries().to_vec()
     } else {
         registry::validate(env_spec)?;
-        vec![(env_spec.to_string(), lanes.max(1))]
+        vec![MixtureEntry::bare(env_spec, lanes.max(1))]
     };
     let groups = lane_groups_for(&entries, wrappers, kernel)?;
     Ok(match kind {
@@ -273,45 +276,57 @@ pub fn build_executor_with_kernel(
 }
 
 /// Plan the contiguous lane groups of an executor build: adjacent
-/// entries with the same id merge into one group, each group resolves
-/// its fused builder (or a scalar fallback closure) once, and the
-/// executors invoke the builder per worker sub-range.
+/// entries with the same id *and* the same per-component chain merge
+/// into one group, each group resolves its fused builder (or a scalar
+/// fallback closure) once, and the executors invoke the builder per
+/// worker sub-range.
 fn lane_groups_for(
-    entries: &[(String, usize)],
+    entries: &[MixtureEntry],
     wrappers: &[WrapperSpec],
     kernel: KernelMode,
 ) -> Result<Vec<LaneGroupSpec>> {
-    let mut merged: Vec<(String, usize)> = Vec::new();
-    for (id, count) in entries {
+    let mut merged: Vec<MixtureEntry> = Vec::new();
+    for entry in entries {
         match merged.last_mut() {
-            Some((last_id, last_count)) if *last_id == *id => *last_count += count,
-            _ => merged.push((id.clone(), *count)),
+            Some(last) if last.spec == entry.spec && last.wrappers == entry.wrappers => {
+                last.count += entry.count
+            }
+            _ => merged.push(entry.clone()),
         }
     }
     let mut groups = Vec::with_capacity(merged.len());
-    for (id, count) in merged {
-        // An extra wrapper chain wraps every lane *outside* the
-        // registered spec; the batch hook sees the full effective stack
-        // and absorbs what it can (a trailing NormalizeObs/RewardScale
-        // folds into the kernel's affine epilogue) — anything longer
-        // forces the scalar fallback.
+    for entry in merged {
+        // The effective extra chain per lane: the component's own
+        // `+`-chain first (innermost), then the pool-level `--wrap`
+        // chain — both *outside* the registered spec's declared stack.
+        // The batch hook sees the full effective chain and absorbs what
+        // it can (a trailing NormalizeObs/RewardScale folds into the
+        // kernel's affine epilogue); anything longer forces the scalar
+        // fallback.
+        let mut chain = entry.wrappers.clone();
+        chain.extend_from_slice(wrappers);
+        // Lane labels carry the component as written in the mixture
+        // grammar (id + kwargs + `+`-chain); the pool-level chain stays
+        // out of the label, as before.
+        let label = entry.label();
         let fused = if kernel == KernelMode::Fused {
-            registry::fused_lane_builder_with(&id, wrappers)?
+            registry::fused_lane_builder_with(&entry.spec, &chain)?
         } else {
             None
         };
         let group = match fused {
-            Some(build) => LaneGroupSpec::new(&id, count, move |lanes| (*build)(lanes)),
+            Some(build) => {
+                LaneGroupSpec::new(&label, entry.count, move |lanes| (*build)(lanes))
+            }
             None => {
                 // Probe one construction up front so *builder* errors
                 // surface as Err (static kwarg/wrapper errors were
                 // caught by validation, but an EnvBuilder may fail for
                 // reasons of its own); the executor-side factory can
                 // then never fail.
-                let _ = registry::make(&id)?;
-                let spec = id.clone();
-                let chain = wrappers.to_vec();
-                LaneGroupSpec::new(&id, count, move |lanes| -> DynBatchEnv {
+                let _ = registry::make(&entry.spec)?;
+                let spec = entry.spec.clone();
+                LaneGroupSpec::new(&label, entry.count, move |lanes| -> DynBatchEnv {
                     let envs: Vec<DynEnv> = (0..lanes)
                         .map(|_| {
                             apply_wrappers(
@@ -335,7 +350,11 @@ fn lane_groups_for(
 /// *global* lane ids, so both lockstep trajectories and
 /// [`EnvPool::random_rollout`] counts are bit-identical to the
 /// equivalent local pool.  `first_lane = 0` is exactly the local build
-/// — the `cairl serve` daemon calls this per connection.
+/// — the `cairl serve` daemon calls this per connection.  `wrappers`
+/// is the pool-level chain (`cairl serve --wrap` / the `Hello.wrap`
+/// field), applied to every lane outside the registered spec;
+/// absorbable chains still fuse, everything else falls back to scalar
+/// lanes.
 pub fn build_env_pool_shard(
     env_spec: &str,
     lanes: usize,
@@ -343,14 +362,18 @@ pub fn build_env_pool_shard(
     global_base: u64,
     first_lane: usize,
     kernel: KernelMode,
+    wrappers: &[WrapperSpec],
 ) -> Result<EnvPool> {
-    let entries: Vec<(String, usize)> = if MixtureSpec::is_mixture(env_spec) {
+    for wrapper in wrappers {
+        wrapper.validate()?;
+    }
+    let entries: Vec<MixtureEntry> = if MixtureSpec::is_mixture(env_spec) {
         MixtureSpec::parse(env_spec)?.entries().to_vec()
     } else {
         registry::validate(env_spec)?;
-        vec![(env_spec.to_string(), lanes.max(1))]
+        vec![MixtureEntry::bare(env_spec, lanes.max(1))]
     };
-    let groups = lane_groups_for(&entries, &[], kernel)?;
+    let groups = lane_groups_for(&entries, wrappers, kernel)?;
     Ok(EnvPool::from_groups_with_origin(
         groups,
         global_base + first_lane as u64,
@@ -371,8 +394,9 @@ pub fn build_mixture_executor(
 }
 
 /// [`build_mixture_executor`] with a wrapper chain applied to every
-/// lane; lane labels keep the registry ids (wrapper composition is an
-/// implementation detail the labels should not leak).  Components whose
+/// lane; lane labels keep the component labels (id + kwargs +
+/// per-component `+`-chain) — the pool-level chain stays out of the
+/// labels.  Components whose
 /// spec advertises a batch builder fuse per group, exactly as in
 /// [`build_executor_with_kernel`] — this convenience API always runs
 /// the default fused mode; pass the rendered spec string to
@@ -647,6 +671,43 @@ mod tests {
         let bad = [WrapperSpec::TimeLimit { max_steps: 0 }];
         assert!(build_executor_wrapped("CartPole-v1", kind, 2, 1, 0, &bad).is_err());
         assert!(build_executor("CartPole-v1?nope=1", kind, 2, 1, 0).is_err());
+    }
+
+    #[test]
+    fn mixture_components_with_chains_build_and_run() {
+        // A fusable per-component chain (trailing NormalizeObs folds
+        // into the kernel epilogue) next to bare lanes of the same env:
+        // two distinct groups, labels carry the chain.
+        let mut exec = build_executor(
+            "CartPole-v1+NormalizeObs:2,CartPole-v1:2",
+            ExecutorKind::Sequential,
+            1,
+            1,
+            0,
+        )
+        .unwrap();
+        assert_eq!(exec.num_lanes(), 4);
+        let specs = exec.lane_specs();
+        assert_eq!(specs[0].env_id, "CartPole-v1+NormalizeObs");
+        assert_eq!(specs[2].env_id, "CartPole-v1");
+        let r = run_batched_workload(exec.as_mut(), 30, 5);
+        assert_eq!(r.steps, 4 * 30);
+
+        // A chain the kernel cannot absorb falls back to ScalarBatch —
+        // it builds and runs, it never errors.
+        let mut stacked = build_executor(
+            "CartPole-v1+FrameStack(2):2",
+            ExecutorKind::PoolSync,
+            1,
+            2,
+            0,
+        )
+        .unwrap();
+        assert_eq!(stacked.num_lanes(), 2);
+        assert_eq!(stacked.obs_dim(), 8, "FrameStack(2) doubles the window");
+        assert_eq!(stacked.lane_specs()[0].env_id, "CartPole-v1+FrameStack(2)");
+        let r = run_batched_workload(stacked.as_mut(), 20, 3);
+        assert_eq!(r.steps, 2 * 20);
     }
 
     #[test]

@@ -19,5 +19,5 @@ pub mod registry;
 pub mod vec_env;
 
 pub use pool::{AsyncEnvPool, BatchedExecutor, EnvPool, LaneSpec};
-pub use registry::{EnvSpec, MixtureSpec};
+pub use registry::{EnvSpec, MixtureEntry, MixtureSpec};
 pub use vec_env::VecEnv;

@@ -26,7 +26,7 @@
 //! unparameterized id builds the identical wrapper stack, so
 //! pre-redesign trajectories are preserved bit for bit.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 use std::fmt;
 use std::sync::{Arc, OnceLock, RwLock};
 
@@ -35,11 +35,16 @@ use crate::core::env::DynEnv;
 use crate::core::error::{CairlError, Result};
 use crate::core::json::Value;
 use crate::core::kwargs::{Kwargs, KwargValue};
+use crate::core::spaces::Space;
 use crate::envs::{Acrobot, CartPole, GridRts, LineWars, MountainCar, Pendulum};
 use crate::flash;
 use crate::puzzles;
 use crate::script;
-use crate::script::envs::{RenderHint, ScriptEnv};
+use crate::script::batch::ScriptBatch;
+use crate::script::compile::compile_src;
+use crate::script::envs::{LoadedScript, RenderHint, ScriptCell, ScriptEnv};
+use crate::script::vm::CompiledScriptEnv;
+use crate::wrappers::spec::split_top_level;
 use crate::wrappers::{apply_wrappers, WrapperSpec};
 
 /// The builder half of an [`EnvSpec`]: merged kwargs in, base env out
@@ -180,11 +185,11 @@ impl EnvSpec {
 
     /// Declare a kwarg with its typed default value.
     ///
-    /// Caveat for [`KwargValue::Str`] kwargs: a *value* containing `,`
-    /// or `:` cannot be passed through a mixture spec string (those are
-    /// the component/lane-count separators [`MixtureSpec::parse`]
-    /// splits on first) — pass such values via [`make_with`] or a
-    /// config file instead.
+    /// Caveat for [`KwargValue::Str`] kwargs: a *value* containing `,`,
+    /// `:` or `+` cannot be passed through a mixture spec string (those
+    /// are the component/lane-count/wrapper-chain separators
+    /// [`MixtureSpec::parse`] splits on first) — pass such values via
+    /// [`make_with`] or a config file instead.
     pub fn with_default(mut self, key: &str, value: KwargValue) -> EnvSpec {
         self.defaults.insert(key, value);
         self
@@ -299,6 +304,32 @@ fn classic_batch(
     }
 }
 
+/// The [`BatchHook`] of the built-in `Script/*` specs: the source is
+/// compiled to register bytecode once (here, eagerly — these sources
+/// are compile-time constants), and absorbable chains build a
+/// [`ScriptBatch`] SoA group stepping all lanes under that one program.
+/// The *scalar* builder keeps the tree-walk interpreter — it is the
+/// calibrated Gym-baseline surrogate — so only fused lane groups run
+/// the bytecode VM, whose bit-equality with the tree-walk is pinned by
+/// `rust/tests/script_vm.rs` and `rust/tests/batch_kernel.rs`.
+fn script_batch(
+    id: &'static str,
+    src: &'static str,
+    stream: u64,
+) -> impl Fn(&Kwargs, &[WrapperSpec]) -> Option<LaneBatchBuilder> + Send + Sync + 'static {
+    let program = Arc::new(compile_src(src).unwrap_or_else(|e| panic!("{id}: {e}")));
+    move |_, wrappers| {
+        let chain = WrapperSpec::as_fused_chain(wrappers)?;
+        let program = Arc::clone(&program);
+        Some(Arc::new(move |lanes| {
+            Box::new(
+                ScriptBatch::try_new(id, Arc::clone(&program), stream, lanes, &chain)
+                    .unwrap_or_else(|e| panic!("{id}: {e}")),
+            ) as DynBatchEnv
+        }))
+    }
+}
+
 /// The built-in table the registry is seeded with; runtime
 /// registrations append after these.
 fn builtin_specs() -> Vec<EnvSpec> {
@@ -362,25 +393,45 @@ fn builtin_specs() -> Vec<EnvSpec> {
             "cart-pole on the interpreted MiniPy runner (Gym baseline surrogate)",
             |_| Ok(Box::new(script::envs::cartpole()) as DynEnv),
         )
-        .with_time_limit(500),
+        .with_time_limit(500)
+        .with_batch(script_batch(
+            "Script/CartPole-v1",
+            script::envs::CARTPOLE_SRC,
+            script::envs::CARTPOLE_STREAM,
+        )),
         EnvSpec::new(
             "Script/MountainCar-v0",
             "mountain car on the interpreted MiniPy runner",
             |_| Ok(Box::new(script::envs::mountain_car()) as DynEnv),
         )
-        .with_time_limit(200),
+        .with_time_limit(200)
+        .with_batch(script_batch(
+            "Script/MountainCar-v0",
+            script::envs::MOUNTAINCAR_SRC,
+            script::envs::MOUNTAINCAR_STREAM,
+        )),
         EnvSpec::new(
             "Script/Acrobot-v1",
             "acrobot on the interpreted MiniPy runner",
             |_| Ok(Box::new(script::envs::acrobot()) as DynEnv),
         )
-        .with_time_limit(500),
+        .with_time_limit(500)
+        .with_batch(script_batch(
+            "Script/Acrobot-v1",
+            script::envs::ACROBOT_SRC,
+            script::envs::ACROBOT_STREAM,
+        )),
         EnvSpec::new(
             "Script/Pendulum-v1",
             "discrete-torque pendulum on the interpreted MiniPy runner",
             |_| Ok(Box::new(script::envs::pendulum()) as DynEnv),
         )
-        .with_time_limit(200),
+        .with_time_limit(200)
+        .with_batch(script_batch(
+            "Script/Pendulum-v1",
+            script::envs::PENDULUM_SRC,
+            script::envs::PENDULUM_STREAM,
+        )),
         EnvSpec::new(
             "Flash/Multitask-v0",
             "concurrent mini-games on the ASVM flash runner (paper SS IV-C)",
@@ -435,9 +486,10 @@ fn registry() -> &'static RwLock<Vec<EnvSpec>> {
     REGISTRY.get_or_init(|| RwLock::new(builtin_specs()))
 }
 
-/// Characters an id can never contain: they are the mixture-spec and
-/// kwarg metacharacters ([`MixtureSpec::is_mixture`] relies on this).
-const ID_METACHARS: [char; 5] = [':', ',', '?', '&', '='];
+/// Characters an id can never contain: they are the mixture-spec,
+/// wrapper-chain and kwarg metacharacters ([`MixtureSpec::is_mixture`]
+/// relies on this).
+const ID_METACHARS: [char; 6] = [':', ',', '?', '&', '=', '+'];
 
 /// Register a spec.  Duplicate ids and ids containing mixture/kwarg
 /// metacharacters or whitespace are [`CairlError::Config`] errors.
@@ -447,7 +499,7 @@ pub fn register(spec: EnvSpec) -> Result<()> {
         || spec.id.contains(char::is_whitespace)
     {
         return Err(CairlError::Config(format!(
-            "env id {:?} is empty or contains one of ':,?&=' or whitespace",
+            "env id {:?} is empty or contains one of ':,?&=+' or whitespace",
             spec.id
         )));
     }
@@ -473,14 +525,46 @@ fn script_stream(id: &str) -> u64 {
     hash
 }
 
+/// The hot-reload cells of runtime-registered scripts: one
+/// [`ScriptCell`] per [`register_script`] id, shared with every env
+/// built from that id.
+static SCRIPT_CELLS: OnceLock<RwLock<HashMap<String, Arc<ScriptCell>>>> = OnceLock::new();
+
+fn script_cells() -> &'static RwLock<HashMap<String, Arc<ScriptCell>>> {
+    SCRIPT_CELLS.get_or_init(|| RwLock::new(HashMap::new()))
+}
+
 /// Register a MiniScript source as an environment in the `Script/`
 /// namespace, returning the full registered id.  The source is
-/// compiled and probed (one `reset()` + one `step(0)` shape check)
-/// **now**, so a broken script fails here with a [`CairlError::Script`]
-/// instead of panicking inside a worker later.
+/// validated **now** on both runners — tree-walk load + probe (one
+/// `reset()` + one `step(0)` shape check), then an eager bytecode
+/// compile + VM probe for the fused path — so a broken script fails
+/// here with a [`CairlError::Script`] instead of panicking inside a
+/// worker later.  Registered ids are `batch_capable`: homogeneous lane
+/// groups step through a [`ScriptBatch`] SoA kernel whenever the
+/// effective wrapper chain is absorbable.
 ///
 /// `name` may be bare (`"MyEnv"` registers `"Script/MyEnv"`) or a full
 /// id containing `/`, which is used verbatim.
+///
+/// # Hot reload & concurrency
+///
+/// Re-registering an id previously created by `register_script`
+/// **replaces the source in place** after the same eager validation —
+/// the registry keeps its single entry for the id.  Envs and fused
+/// groups built afterwards use the new program immediately; live
+/// [`ScriptEnv`]s finish their current episode on the old program and
+/// rebuild at their next `reset()`, re-seeded with their last
+/// [`Env::seed`](crate::core::env::Env::seed) value.  A reload that
+/// changes `obs_dim`/`n_actions` only affects envs built afterwards:
+/// live envs keep the old program (their observation buffers are
+/// already sized).  Fused [`ScriptBatch`] groups snapshot the program
+/// at construction and never reload mid-run.  The swap is one `RwLock`
+/// write over an `Arc` — concurrent builders observe either the old or
+/// the new version atomically, never a mix.  Ids registered through
+/// plain [`register`] (including the built-in `Script/*` baselines)
+/// have no reload cell; re-registering them stays a duplicate-id
+/// [`CairlError::Config`].
 ///
 /// ```
 /// use cairl::coordinator::registry;
@@ -503,19 +587,66 @@ pub fn register_script(name: &str, src: &str) -> Result<String> {
         format!("Script/{name}")
     };
     let stream = script_stream(&id);
+    // Validate on the tree-walk runner (the scalar path)...
     let mut probe = ScriptEnv::try_load(&id, src, stream, RenderHint::None)?;
     probe.probe()?;
-    let (build_id, build_src) = (id.clone(), src.to_string());
-    register(
+    // ...and on the bytecode VM (the fused path).
+    let program =
+        Arc::new(compile_src(src).map_err(|e| CairlError::Script(format!("script env {id}: {e}")))?);
+    let mut vm_probe = CompiledScriptEnv::from_program(&id, Arc::clone(&program), stream, RenderHint::None)?;
+    vm_probe.probe()?;
+    let obs_dim = crate::core::env::Env::obs_dim(&probe);
+    let n_actions = match crate::core::env::Env::action_space(&probe) {
+        Space::Discrete { n } => n,
+        other => unreachable!("script envs are discrete, got {other:?}"),
+    };
+    let loaded = LoadedScript {
+        src: src.to_string(),
+        stream,
+        obs_dim,
+        n_actions,
+        program,
+        generation: 0,
+    };
+    let mut cells = script_cells().write().unwrap_or_else(|e| e.into_inner());
+    if let Some(cell) = cells.get(&id) {
+        // Hot reload: swap the cell contents; the registered spec's
+        // closures read the cell at build time, so nothing else moves.
+        cell.replace(loaded);
+        return Ok(id);
+    }
+    let cell = Arc::new(ScriptCell::new(loaded));
+    cells.insert(id.clone(), Arc::clone(&cell));
+    let build_cell = Arc::clone(&cell);
+    let build_id = id.clone();
+    let hook_cell = Arc::clone(&cell);
+    let hook_id = id.clone();
+    let registered = register(
         EnvSpec::new(&id, "runtime-registered MiniScript environment", move |_| {
-            Ok(Box::new(ScriptEnv::try_load(
-                &build_id,
-                &build_src,
-                stream,
-                RenderHint::None,
-            )?) as DynEnv)
+            let cur = build_cell.snapshot();
+            Ok(Box::new(
+                ScriptEnv::try_load(&build_id, &cur.src, cur.stream, RenderHint::None)?
+                    .with_cell(Arc::clone(&build_cell)),
+            ) as DynEnv)
+        })
+        .with_batch(move |_, wrappers| {
+            let chain = WrapperSpec::as_fused_chain(wrappers)?;
+            let cur = hook_cell.snapshot();
+            let id = hook_id.clone();
+            Some(Arc::new(move |lanes| {
+                Box::new(
+                    ScriptBatch::try_new(&id, Arc::clone(&cur.program), cur.stream, lanes, &chain)
+                        .unwrap_or_else(|e| panic!("{id}: {e}")),
+                ) as DynBatchEnv
+            }))
         }),
-    )?;
+    );
+    if registered.is_err() {
+        // The id exists in the registry but was not script-registered
+        // (e.g. a built-in): no cell for it.
+        cells.remove(&id);
+    }
+    registered?;
     Ok(id)
 }
 
@@ -663,61 +794,126 @@ pub fn registry_json() -> Value {
     Value::Object(doc)
 }
 
-/// A parsed scenario-mixture spec: an ordered list of `(env_id, lanes)`
-/// pairs, e.g. `"CartPole-v1:32,Acrobot-v1:16"` → 32 CartPole lanes
-/// followed by 16 Acrobot lanes.  Components may carry id kwargs
-/// (`"CartPole-v1?max_steps=200:4"`).  Lane order is the spec order,
-/// which fixes the per-lane seeds (`base_seed + lane`) and therefore
-/// the bit-determinism contract of mixture pools.
-#[derive(Clone, Debug, PartialEq, Eq)]
+/// One component of a [`MixtureSpec`]: an `"Id?kwargs"` spec string, a
+/// lane count, and the per-component wrapper chain written with `+` in
+/// the mixture grammar (`"CartPole-v1+NormalizeObs:8"`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MixtureEntry {
+    /// The component's `"Id?kwargs"` spec (no wrappers, no count).
+    pub spec: String,
+    /// Number of consecutive lanes this component occupies.
+    pub count: usize,
+    /// Per-component wrappers, applied *outside* the registered spec's
+    /// own chain and *inside* any pool-level `--wrap` chain.
+    pub wrappers: Vec<WrapperSpec>,
+}
+
+impl MixtureEntry {
+    /// A chainless entry — the pre-redesign `(id, count)` shape.
+    pub fn bare(spec: impl Into<String>, count: usize) -> MixtureEntry {
+        MixtureEntry {
+            spec: spec.into(),
+            count,
+            wrappers: Vec::new(),
+        }
+    }
+
+    /// The component as written in the mixture grammar, minus the lane
+    /// count: `"Id?kwargs"` plus its `+`-joined wrapper chain.  This is
+    /// the label lane lists carry.
+    pub fn label(&self) -> String {
+        let mut label = self.spec.clone();
+        for w in &self.wrappers {
+            label.push('+');
+            label.push_str(&w.render());
+        }
+        label
+    }
+}
+
+/// A parsed scenario-mixture spec: an ordered list of components, e.g.
+/// `"CartPole-v1:32,Acrobot-v1:16"` → 32 CartPole lanes followed by 16
+/// Acrobot lanes.  Components may carry id kwargs
+/// (`"CartPole-v1?max_steps=200:4"`) and per-component wrapper chains
+/// joined with `+` (`"CartPole-v1+NormalizeObs:8,Script/MyEnv+TimeLimit(200):4"`);
+/// chains the fused kernels cannot absorb fall back to scalar lanes at
+/// group-planning time — they never error.  Lane order is the spec
+/// order, which fixes the per-lane seeds (`base_seed + lane`) and
+/// therefore the bit-determinism contract of mixture pools.
+#[derive(Clone, Debug, PartialEq)]
 pub struct MixtureSpec {
-    entries: Vec<(String, usize)>,
+    entries: Vec<MixtureEntry>,
 }
 
 impl MixtureSpec {
     /// Whether `spec` is a mixture spec (rather than a bare env id):
-    /// mixtures contain a `:` lane count or a `,` separator, which no
-    /// registered id does ([`register`] enforces it).  Kwarg *values*
-    /// containing these metacharacters would also trip this test, so
-    /// string kwargs with `,`/`:` must go through [`make_with`] or a
-    /// config file rather than a spec string.
+    /// mixtures contain a `:` lane count, a `,` separator or a `+`
+    /// wrapper chain, none of which a registered id may contain
+    /// ([`register`] enforces it).  Kwarg *values* containing these
+    /// metacharacters would also trip this test, so string kwargs with
+    /// `,`/`:`/`+` must go through [`make_with`] or a config file
+    /// rather than a spec string.
     pub fn is_mixture(spec: &str) -> bool {
-        spec.contains(':') || spec.contains(',')
+        spec.contains(':') || spec.contains(',') || spec.contains('+')
     }
 
-    /// Parse `"Id-v1:32,Other-v0?k=v:16"`.  A component without
-    /// `:count` contributes one lane.  Every id (and its kwargs) is
-    /// validated against the registry; counts must be positive.
+    /// Parse `"Id-v1:32,Other-v0?k=v+NormalizeObs:16"`.  A component
+    /// without `:count` contributes one lane.  Every id (with kwargs)
+    /// is validated against the registry and every wrapper chain is
+    /// parsed and range-checked eagerly; counts must be positive.
+    /// Separators split at paren depth zero only, so wrapper arguments
+    /// like `ClipReward(-1,1)` pass through intact.
     pub fn parse(spec: &str) -> Result<MixtureSpec> {
         let mut entries = Vec::new();
-        for part in spec.split(',') {
+        for part in split_top_level(spec, ',') {
             let part = part.trim();
             if part.is_empty() {
                 return Err(CairlError::Config(format!(
                     "mixture spec {spec:?}: empty component"
                 )));
             }
-            let (id, count) = match part.rsplit_once(':') {
-                Some((id, count)) => {
+            let (head, count) = match part.rsplit_once(':') {
+                Some((head, count)) => {
                     let count: usize = count.trim().parse().map_err(|_| {
                         CairlError::Config(format!(
                             "mixture spec {spec:?}: bad lane count in {part:?}"
                         ))
                     })?;
-                    (id.trim(), count)
+                    (head.trim(), count)
                 }
                 None => (part, 1),
             };
             if count == 0 {
                 return Err(CairlError::Config(format!(
-                    "mixture spec {spec:?}: {id:?} has zero lanes"
+                    "mixture spec {spec:?}: {head:?} has zero lanes"
                 )));
+            }
+            let mut segments = split_top_level(head, '+').into_iter();
+            let id = segments.next().unwrap_or("").trim();
+            if id.is_empty() {
+                return Err(CairlError::Config(format!(
+                    "mixture spec {spec:?}: component {part:?} has no env id"
+                )));
+            }
+            let mut wrappers = Vec::new();
+            for seg in segments {
+                let wrapper = WrapperSpec::parse(seg.trim()).map_err(|e| {
+                    CairlError::Config(format!(
+                        "mixture spec {spec:?}: component {part:?}: {e}"
+                    ))
+                })?;
+                wrapper.validate()?;
+                wrappers.push(wrapper);
             }
             // Validate membership and kwargs eagerly so executor
             // construction can't fail on a bad component (no throwaway
             // env construction).
             validate(id)?;
-            entries.push((id.to_string(), count));
+            entries.push(MixtureEntry {
+                spec: id.to_string(),
+                count,
+                wrappers,
+            });
         }
         if entries.is_empty() {
             return Err(CairlError::Config(format!("empty mixture spec {spec:?}")));
@@ -725,14 +921,14 @@ impl MixtureSpec {
         Ok(MixtureSpec { entries })
     }
 
-    /// The `(env_id, lanes)` components in lane order.
-    pub fn entries(&self) -> &[(String, usize)] {
+    /// The components in lane order.
+    pub fn entries(&self) -> &[MixtureEntry] {
         &self.entries
     }
 
     /// Total lane count across all components.
     pub fn total_lanes(&self) -> usize {
-        self.entries.iter().map(|(_, n)| n).sum()
+        self.entries.iter().map(|e| e.count).sum()
     }
 
     /// Construct the lane-ordered env list (lane `i` runs the `i`-th
@@ -741,26 +937,31 @@ impl MixtureSpec {
         Ok(self.build_labeled_envs()?.into_iter().map(|(_, e)| e).collect())
     }
 
-    /// [`MixtureSpec::build_envs`] paired with each lane's registry id —
-    /// the labels `lane_specs()` should carry (an env's own
+    /// [`MixtureSpec::build_envs`] paired with each lane's component
+    /// label ([`MixtureEntry::label`]) — the labels `lane_specs()`
+    /// should carry (an env's own
     /// [`Env`](crate::core::env::Env)`::id` reports wrapper composition
     /// like `TimeLimit(CartPole-v1, 500)`, not the registry id).
-    /// Parameterized components keep their kwargs in the label.
+    /// Parameterized components keep their kwargs and `+`-chains in
+    /// the label; per-component wrappers are applied outside the
+    /// registered spec's own chain.
     pub fn build_labeled_envs(&self) -> Result<Vec<(String, DynEnv)>> {
         let mut envs = Vec::with_capacity(self.total_lanes());
-        for (id, count) in &self.entries {
-            for _ in 0..*count {
-                envs.push((id.clone(), make(id)?));
+        for entry in &self.entries {
+            let label = entry.label();
+            for _ in 0..entry.count {
+                let env = apply_wrappers(make(&entry.spec)?, &entry.wrappers);
+                envs.push((label.clone(), env));
             }
         }
         Ok(envs)
     }
 
-    /// Render back to the canonical `id:count,id:count` spelling.
+    /// Render back to the canonical `id+chain:count,...` spelling.
     pub fn render(&self) -> String {
         self.entries
             .iter()
-            .map(|(id, count)| format!("{id}:{count}"))
+            .map(|e| format!("{}:{}", e.label(), e.count))
             .collect::<Vec<_>>()
             .join(",")
     }
@@ -859,7 +1060,15 @@ mod tests {
             Ok(Box::new(CartPole::new()) as DynEnv)
         }));
         assert!(matches!(dup, Err(CairlError::Config(_))));
-        for bad in ["", "Has:Colon", "Has,Comma", "Has?Query", "Has Space", "a=b"] {
+        for bad in [
+            "",
+            "Has:Colon",
+            "Has,Comma",
+            "Has?Query",
+            "Has Space",
+            "a=b",
+            "Has+Plus",
+        ] {
             let r = register(EnvSpec::new(bad, "bad id", |_| {
                 Ok(Box::new(CartPole::new()) as DynEnv)
             }));
@@ -893,8 +1102,8 @@ mod tests {
     fn mixture_spec_parses_and_builds_lane_ordered_envs() {
         let spec = MixtureSpec::parse("CartPole-v1:2, Script/CartPole-v1:1,Acrobot-v1").unwrap();
         assert_eq!(spec.total_lanes(), 4);
-        assert_eq!(spec.entries()[1], ("Script/CartPole-v1".to_string(), 1));
-        assert_eq!(spec.entries()[2], ("Acrobot-v1".to_string(), 1));
+        assert_eq!(spec.entries()[1], MixtureEntry::bare("Script/CartPole-v1", 1));
+        assert_eq!(spec.entries()[2], MixtureEntry::bare("Acrobot-v1", 1));
         let envs = spec.build_labeled_envs().unwrap();
         assert_eq!(envs.len(), 4);
         // Labels are the registry ids; the envs themselves report their
@@ -910,7 +1119,7 @@ mod tests {
     fn mixture_spec_accepts_parameterized_components() {
         let spec = MixtureSpec::parse("CartPole-v1?max_steps=9:2,CartPole-v1:1").unwrap();
         assert_eq!(spec.total_lanes(), 3);
-        assert_eq!(spec.entries()[0].0, "CartPole-v1?max_steps=9");
+        assert_eq!(spec.entries()[0].spec, "CartPole-v1?max_steps=9");
         let envs = spec.build_labeled_envs().unwrap();
         assert_eq!(envs[0].0, "CartPole-v1?max_steps=9");
         assert_eq!(envs[0].1.id(), "TimeLimit(CartPole-v1, 9)");
@@ -952,6 +1161,9 @@ mod tests {
         assert!(!MixtureSpec::is_mixture("CartPole-v1?max_steps=200"));
         assert!(MixtureSpec::is_mixture("CartPole-v1:32"));
         assert!(MixtureSpec::is_mixture("CartPole-v1:32,Acrobot-v1:16"));
+        // A wrapper chain makes a one-component spec a mixture too, so
+        // `--env "CartPole-v1+NormalizeObs"` routes through the parser.
+        assert!(MixtureSpec::is_mixture("CartPole-v1+NormalizeObs"));
         // No registered id may ever contain the mixture metacharacters.
         for (id, _) in list_envs() {
             assert!(!MixtureSpec::is_mixture(&id), "{id}");
@@ -995,14 +1207,123 @@ mod tests {
         )
         .unwrap()
         .is_none());
-        // PixelObs in the chain blocks fusion; script envs have no hook.
+        // PixelObs in the chain blocks fusion.
         assert!(fused_lane_builder("Pixel/CartPole-v1").unwrap().is_none());
-        assert!(fused_lane_builder("Script/CartPole-v1").unwrap().is_none());
-        assert!(!env_spec("Script/CartPole-v1").unwrap().batch_capable());
         assert!(matches!(
             fused_lane_builder("NoSuchEnv-v0"),
             Err(CairlError::UnknownEnv(_))
         ));
+    }
+
+    #[test]
+    fn script_specs_advertise_fused_builders() {
+        // The interpreted baselines fuse via the bytecode ScriptBatch
+        // kernel (their registered TimeLimit chain is absorbable).
+        for id in [
+            "Script/CartPole-v1",
+            "Script/MountainCar-v0",
+            "Script/Acrobot-v1",
+            "Script/Pendulum-v1",
+        ] {
+            assert!(env_spec(id).unwrap().batch_capable(), "{id}");
+            let builder = fused_lane_builder(id)
+                .unwrap()
+                .unwrap_or_else(|| panic!("{id}: registered TimeLimit chain must fuse"));
+            let batch = (*builder)(3);
+            assert_eq!(batch.lanes(), 3, "{id}");
+            assert!(batch.obs_dim() > 0, "{id}");
+        }
+        // Non-absorbable extra chains fall back to scalar, never error.
+        assert!(fused_lane_builder_with(
+            "Script/CartPole-v1",
+            &[WrapperSpec::FrameStack { k: 2 }],
+        )
+        .unwrap()
+        .is_none());
+    }
+
+    #[test]
+    fn mixture_components_carry_wrapper_chains() {
+        let spec = MixtureSpec::parse(
+            "CartPole-v1+NormalizeObs:2,CartPole-v1?max_steps=9+ClipReward(-1,1):1",
+        )
+        .unwrap();
+        assert_eq!(spec.total_lanes(), 3);
+        assert_eq!(spec.entries()[0].wrappers, vec![WrapperSpec::NormalizeObs]);
+        assert_eq!(spec.entries()[1].spec, "CartPole-v1?max_steps=9");
+        assert_eq!(spec.entries()[1].wrappers.len(), 1);
+        let envs = spec.build_labeled_envs().unwrap();
+        assert_eq!(envs[0].0, "CartPole-v1+NormalizeObs");
+        // Per-component wrappers apply outside the spec's own chain.
+        assert_eq!(envs[0].1.id(), "NormalizeObs(TimeLimit(CartPole-v1, 500))");
+        assert_eq!(
+            envs[2].1.id(),
+            "ClipReward(TimeLimit(CartPole-v1, 9), [-1, 1])"
+        );
+        // The grammar round-trips.
+        assert_eq!(
+            spec.render(),
+            "CartPole-v1+NormalizeObs:2,CartPole-v1?max_steps=9+ClipReward(-1,1):1"
+        );
+        assert_eq!(MixtureSpec::parse(&spec.render()).unwrap(), spec);
+        // A chained component without :count contributes one lane.
+        assert_eq!(
+            MixtureSpec::parse("CartPole-v1+NormalizeObs").unwrap().total_lanes(),
+            1
+        );
+        // Bad chains fail eagerly at parse time.
+        assert!(MixtureSpec::parse("CartPole-v1+NoSuchWrapper:2").is_err());
+        assert!(MixtureSpec::parse("CartPole-v1+TimeLimit(0):2").is_err());
+        assert!(MixtureSpec::parse("+NormalizeObs:2").is_err());
+    }
+
+    #[test]
+    fn register_script_hot_reloads_in_place() {
+        let src_a = "obs_dim = 1;\nn_actions = 2;\n\
+                     def reset() { return [1.0]; }\n\
+                     def step(action) { return [1.0, 1.0, 0]; }";
+        let src_b = "obs_dim = 1;\nn_actions = 2;\n\
+                     def reset() { return [2.0]; }\n\
+                     def step(action) { return [2.0, 1.0, 0]; }";
+        let id = register_script("UnitReload", src_a).unwrap();
+        let table_len = list_envs().len();
+        let mut env = make(&id).unwrap();
+        env.seed(0);
+        assert_eq!(env.reset(), vec![1.0]);
+        // Re-registering replaces the source in place...
+        register_script("UnitReload", src_b).unwrap();
+        assert_eq!(list_envs().len(), table_len, "no second registry entry");
+        // ...live envs rebuild on their next reset...
+        assert_eq!(env.reset(), vec![2.0]);
+        // ...and envs built afterwards start on the new program.
+        let mut fresh = make(&id).unwrap();
+        fresh.seed(0);
+        assert_eq!(fresh.reset(), vec![2.0]);
+        // A broken replacement is rejected and leaves the old version.
+        assert!(register_script("UnitReload", "not a script (").is_err());
+        assert_eq!(env.reset(), vec![2.0]);
+        // Built-ins have no reload cell: still a duplicate-id error.
+        assert!(matches!(
+            register_script("Script/CartPole-v1", src_a),
+            Err(CairlError::Config(_))
+        ));
+    }
+
+    #[test]
+    fn runtime_scripts_are_batch_capable() {
+        let src = "obs_dim = 1;\nn_actions = 2;\n\
+                   def reset() { return [0.5]; }\n\
+                   def step(action) { return [0.5, 1.0, 0]; }";
+        let id = register_script("UnitFused", src).unwrap();
+        assert!(env_spec(&id).unwrap().batch_capable());
+        let builder = fused_lane_builder(&id).unwrap().expect("bare chain fuses");
+        let batch = (*builder)(2);
+        assert_eq!(batch.lanes(), 2);
+        assert_eq!(batch.obs_dim(), 1);
+        // A chain the kernel cannot absorb falls back, never errors.
+        assert!(fused_lane_builder_with(&id, &[WrapperSpec::Flatten])
+            .unwrap()
+            .is_none());
     }
 
     #[test]

@@ -11,7 +11,7 @@
 //! EnvPool/Jumanji fusion that turns the per-lane dispatch tax into a
 //! single virtual call per *group* per batch.
 //!
-//! Two implementations cover every environment:
+//! Three implementations cover every environment:
 //!
 //! * [`FusedBatch`]`<K>` — the fused kernel: a [`LaneKernel`] owns the
 //!   SoA state columns (one per state variable), and the generic shell
@@ -26,11 +26,18 @@
 //!   pure `dynamics` functions as the scalar envs, so fused trajectories
 //!   are **bit-identical** to the scalar path (pinned by
 //!   `rust/tests/batch_kernel.rs`).
+//! * [`ScriptBatch`](crate::script::batch::ScriptBatch) — the fused
+//!   kernel for `Script/*` lane groups: one register-bytecode VM
+//!   ([`crate::script::vm`]) steps every lane's SoA state columns,
+//!   with the same folded `TimeLimit`, affine epilogues and inline
+//!   auto-reset as [`FusedBatch`]; bit-identical to the tree-walk
+//!   scalar path (pinned by `rust/tests/script_vm.rs` and
+//!   `rust/tests/batch_kernel.rs`).
 //! * [`ScalarBatch`] — the universal fallback: wraps any existing
 //!   [`Env`] lane list unchanged and replays the exact per-lane
 //!   `step_into` + auto-reset loop the executors used before fusion.
-//!   Wrapped lanes, script/flash/puzzle envs and `--kernel scalar` all
-//!   run through it.
+//!   Wrapped lanes, flash/puzzle envs and `--kernel scalar` all run
+//!   through it.
 //!
 //! The executors ([`crate::coordinator::vec_env::VecEnv`],
 //! [`crate::coordinator::pool::EnvPool`],

@@ -150,7 +150,8 @@ pub mod prelude {
         AsyncEnvPool, BatchedExecutor, EnvPool, LaneGroupSpec, LaneSpec,
     };
     pub use crate::coordinator::registry::{
-        list_envs, make, make_with, register, register_script, EnvSpec, MixtureSpec,
+        list_envs, make, make_with, register, register_script, EnvSpec, MixtureEntry,
+        MixtureSpec,
     };
     pub use crate::coordinator::vec_env::VecEnv;
     pub use crate::core::batch::{BatchEnv, DynBatchEnv, FusedBatch, LaneKernel, ScalarBatch};

@@ -117,12 +117,16 @@ COMMANDS:
                                   deterministically after reconnect);
                                   --pipeline keeps up to K batches in flight
                                   per shard (default 1 = lockstep), --token
-                                  authenticates against a --token'd daemon, and
+                                  authenticates against a --token'd daemon,
+                                  --wrap is forwarded to every shard in the
+                                  Hello handshake (applied server-side,
+                                  bit-identical to the local run), and
                                   --returns-log writes every finished episode's
                                   return, one per line, for seed-parity diffs
   serve      --env SPEC --lanes N --listen ADDR
              [--executor vec|pool|pool-async] [--threads T]
              [--kernel scalar|fused] [--max-lanes N] [--token T]
+             [--wrap \"TimeLimit(200),NormalizeObs\"]
   serve      --status ADDR [--token T]
                                   host a batched environment shard: one framed
                                   stream and one private executor per client on
@@ -133,7 +137,10 @@ COMMANDS:
                                   --max-lanes caps total lanes across clients
                                   (over-budget Hellos get a Busy backpressure
                                   reply), --token requires clients to present a
-                                  shared secret; --status ADDR queries a running
+                                  shared secret, --wrap applies a wrapper chain
+                                  to every hosted lane by default (a client's
+                                  non-empty Hello wrap overrides it);
+                                  --status ADDR queries a running
                                   daemon and prints its JSON report (per-client
                                   lanes, pipeline depth, frames/sec, reconnects)
   train      --env NAME [--seed S] [--max-steps N] [--config FILE.json]
@@ -234,12 +241,9 @@ fn main() -> Result<()> {
             if !shard_list.is_empty() {
                 // Sharded path: the workload runs against remote
                 // `cairl serve` daemons; executor knobs are theirs.
-                if !wrap_chain.is_empty() {
-                    bail!(
-                        "--wrap is not supported with --shard \
-                         (wrapper chains apply on the serving side)"
-                    );
-                }
+                // --wrap travels in the Hello `wrap` field and is
+                // applied server-side, so the chain behaves exactly as
+                // it would locally.
                 for flag in ["executor", "threads", "kernel"] {
                     if args.opt(flag).is_some() {
                         eprintln!(
@@ -252,11 +256,17 @@ fn main() -> Result<()> {
                     .u64("pipeline", file_cfg.executor.pipeline as u64)?
                     .max(1) as usize;
                 let token = args.str("token", &file_cfg.executor.shard_token);
+                let wrap = wrap_chain
+                    .iter()
+                    .map(|w| w.render())
+                    .collect::<Vec<_>>()
+                    .join(",");
                 let opts = ShardPoolOptions {
                     lanes,
                     base_seed: seed,
                     pipeline,
                     token,
+                    wrap,
                     ..Default::default()
                 };
                 let mut exec = ShardedEnvPool::connect_opts(&shard_list, &env_id, opts)
@@ -374,6 +384,7 @@ fn main() -> Result<()> {
             let threads = args.u64("threads", 0)? as usize;
             let max_lanes = args.u64("max-lanes", 0)? as usize;
             let token = args.str("token", "");
+            let wrap = args.str("wrap", "");
             let executor = args.str("executor", "pool");
             let kind = ExecutorKind::parse(&executor).ok_or_else(|| {
                 anyhow!("unknown executor {executor:?} (vec | pool | pool-async)")
@@ -392,6 +403,7 @@ fn main() -> Result<()> {
                     kernel,
                     max_lanes,
                     token,
+                    wrap,
                 },
             )
             .map_err(|e| anyhow!("{e}"))?;

@@ -1,0 +1,377 @@
+//! Batched stepping for compiled scripts: one VM, N lanes.
+//!
+//! [`ScriptBatch`] is the scripted-env counterpart of
+//! [`FusedBatch`](crate::core::batch::FusedBatch): a lane group stepped
+//! as one unit behind [`BatchEnv`], with per-lane PCG streams, the
+//! registered `TimeLimit` folded into a step counter, the trailing
+//! affine epilogue, and inline auto-reset.  Where a
+//! [`LaneKernel`](crate::core::batch::LaneKernel) keeps f32 state
+//! columns, a script's state is its global variables — so the SoA
+//! layout here is **one shared compiled program + register scratch**
+//! (the expensive, lane-invariant half) over **per-lane global columns
+//! and RNGs** (the cheap, lane-varying half).  Stepping lane `k` swaps
+//! in column `k` and runs the bytecode; no per-lane interpreter, no
+//! per-lane wrapper chain, no per-lane virtual dispatch.
+//!
+//! Equivalence contract: a `ScriptBatch` lane is bit-identical to a
+//! scalar `TimeLimit(ScriptEnv)` stack with the same seed — the
+//! bytecode VM replays the tree-walk's arithmetic and RNG draws
+//! exactly, and the shell replays `FusedBatch`'s step/truncate/reset
+//! ordering exactly.  `rust/tests/batch_kernel.rs` and
+//! `rust/tests/script_vm.rs` pin both halves.
+//!
+//! Lane isolation: list values are deep-cloned per lane (a naive
+//! `Vec::clone` would share `Arc<Mutex<_>>` list cells across lanes and
+//! let one lane's mutation corrupt another's episode).
+
+use std::sync::Arc;
+
+use crate::core::batch::{AffineEpilogue, BatchEnv, FusedChain, ObsAffine};
+use crate::core::env::Transition;
+use crate::core::error::{CairlError, Result};
+use crate::core::rng::Pcg32;
+use crate::core::spaces::{Action, Space};
+use crate::script::compile::CompiledProgram;
+use crate::script::interp::Value;
+use crate::script::vm::Vm;
+
+/// Clone a value with fresh list cells (recursively) — lane columns
+/// must not alias each other's `Arc<Mutex<_>>` lists.
+fn deep_clone(v: &Value) -> Value {
+    match v {
+        Value::List(xs) => {
+            let items = xs.lock().unwrap().iter().map(deep_clone).collect();
+            Value::list(items)
+        }
+        other => other.clone(),
+    }
+}
+
+/// A group of same-script lanes stepped by one shared VM — the batch
+/// path behind `batch_capable` `Script/*` registry ids.
+pub struct ScriptBatch {
+    id: String,
+    vm: Vm,
+    obs_dim: usize,
+    n_actions: usize,
+    stream: u64,
+    reset_f: u16,
+    step_f: u16,
+    /// Per-lane global columns (deep-cloned from the post-load
+    /// snapshot, so every lane starts from the same top-level state).
+    lane_globals: Vec<Vec<Option<Value>>>,
+    rngs: Vec<Pcg32>,
+    elapsed: Vec<u32>,
+    max_steps: Option<u32>,
+    obs_affine: Option<ObsAffine>,
+    reward_affine: Option<(f32, f32)>,
+}
+
+impl ScriptBatch {
+    /// Build a `lanes`-wide group over a shared compiled program.
+    /// `stream` is the script's PCG stream id (the one its scalar
+    /// [`ScriptEnv`](crate::script::envs::ScriptEnv) seeds with);
+    /// `chain` is the fused wrapper chain
+    /// ([`WrapperSpec::as_fused_chain`](crate::wrappers::WrapperSpec::as_fused_chain)).
+    pub fn try_new(
+        id: &str,
+        program: Arc<CompiledProgram>,
+        stream: u64,
+        lanes: usize,
+        chain: &FusedChain,
+    ) -> Result<ScriptBatch> {
+        assert!(lanes > 0, "a batch group needs at least one lane");
+        let vm = Vm::with_program(program)
+            .map_err(|e| CairlError::Script(format!("script env {id}: {e}")))?;
+        let read_dim = |name: &str| -> Result<usize> {
+            let value = vm.global(name).and_then(|v| v.as_num().ok()).ok_or_else(|| {
+                CairlError::Script(format!("script env {id}: missing {name} global"))
+            })?;
+            if value < 1.0 {
+                return Err(CairlError::Script(format!(
+                    "script env {id}: {name} must be >= 1, got {value}"
+                )));
+            }
+            Ok(value as usize)
+        };
+        let obs_dim = read_dim("obs_dim")?;
+        let n_actions = read_dim("n_actions")?;
+        let protocol_fn = |name: &str| -> Result<u16> {
+            vm.func_index(name).ok_or_else(|| {
+                CairlError::Script(format!("script env {id}: no function {name:?}"))
+            })
+        };
+        let reset_f = protocol_fn("reset")?;
+        let step_f = protocol_fn("step")?;
+        let template = vm.globals_snapshot().to_vec();
+        let lane_globals: Vec<Vec<Option<Value>>> = (0..lanes)
+            .map(|_| template.iter().map(|g| g.as_ref().map(deep_clone)).collect())
+            .collect();
+        // NormalizeObs over an unbounded script space is the identity
+        // map — derive it from the same space the scalar wrapper sees
+        // so the two can never drift.
+        let obs_affine = match &chain.epilogue {
+            Some(AffineEpilogue::NormalizeObs) => Some(ObsAffine::from_space(&Space::box1(
+                vec![f32::MIN; obs_dim],
+                vec![f32::MAX; obs_dim],
+            ))),
+            _ => None,
+        };
+        let reward_affine = match &chain.epilogue {
+            Some(AffineEpilogue::RewardScale { scale, shift }) => Some((*scale, *shift)),
+            _ => None,
+        };
+        Ok(ScriptBatch {
+            id: id.to_string(),
+            vm,
+            obs_dim,
+            n_actions,
+            stream,
+            reset_f,
+            step_f,
+            lane_globals,
+            rngs: (0..lanes).map(|_| Pcg32::new(0, stream)).collect(),
+            elapsed: vec![0; lanes],
+            max_steps: chain.max_steps,
+            obs_affine,
+            reward_affine,
+        })
+    }
+
+    /// Run a protocol function against lane `k`'s global column.
+    fn call_lane(&mut self, k: usize, f: u16, args: &[Value], ctx: &str) -> Value {
+        let ScriptBatch { vm, lane_globals, rngs, id, .. } = self;
+        vm.call_index_with(f, args, &mut lane_globals[k], &mut rngs[k])
+            .unwrap_or_else(|e| panic!("{id}: {ctx}: {e}"))
+    }
+
+    fn unpack_list(&self, v: Value, want: usize, ctx: &str) -> Vec<f32> {
+        match v {
+            Value::List(xs) => {
+                let xs = xs.lock().unwrap();
+                assert_eq!(
+                    xs.len(),
+                    want,
+                    "{}: {ctx} returned {} values, wanted {want}",
+                    self.id,
+                    xs.len()
+                );
+                xs.iter().map(|v| v.as_num().unwrap_or(f64::NAN) as f32).collect()
+            }
+            other => panic!("{}: {ctx} returned {other:?}, wanted a list", self.id),
+        }
+    }
+
+    /// Reset without the obs epilogue (the caller applies it once, per
+    /// the `FusedBatch` convention).
+    fn reset_lane_inner(&mut self, k: usize, obs: &mut [f32]) {
+        let v = self.call_lane(k, self.reset_f, &[], "reset()");
+        let vals = self.unpack_list(v, self.obs_dim, "reset()");
+        obs.copy_from_slice(&vals);
+        self.elapsed[k] = 0;
+    }
+}
+
+impl BatchEnv for ScriptBatch {
+    fn lanes(&self) -> usize {
+        self.lane_globals.len()
+    }
+
+    fn obs_dim(&self) -> usize {
+        self.obs_dim
+    }
+
+    fn action_space(&self) -> Space {
+        Space::Discrete { n: self.n_actions }
+    }
+
+    fn seed(&mut self, first_seed: u64) {
+        for (k, rng) in self.rngs.iter_mut().enumerate() {
+            *rng = Pcg32::new(first_seed + k as u64, self.stream);
+        }
+    }
+
+    fn reset_lane(&mut self, k: usize, obs: &mut [f32]) {
+        self.reset_lane_inner(k, obs);
+        if let Some(affine) = &self.obs_affine {
+            affine.apply(obs);
+        }
+    }
+
+    fn step_lane(&mut self, k: usize, action: &Action, obs: &mut [f32]) -> Transition {
+        let step_f = self.step_f;
+        let v = self.call_lane(k, step_f, &[Value::Num(action.index() as f64)], "step()");
+        let vals = self.unpack_list(v, self.obs_dim + 2, "step()");
+        obs.copy_from_slice(&vals[..self.obs_dim]);
+        let mut t = Transition {
+            reward: vals[self.obs_dim],
+            done: vals[self.obs_dim + 1] != 0.0,
+            truncated: false,
+        };
+        self.elapsed[k] += 1;
+        if let Some(max) = self.max_steps {
+            if self.elapsed[k] >= max && !t.done {
+                t.truncated = true;
+            }
+        }
+        if let Some((scale, shift)) = self.reward_affine {
+            t.reward = t.reward * scale + shift;
+        }
+        if t.done || t.truncated {
+            self.reset_lane_inner(k, obs);
+        }
+        if let Some(affine) = &self.obs_affine {
+            affine.apply(obs);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::env::Env;
+    use crate::script::compile::compile_src;
+    use crate::script::envs::{ScriptEnv, RenderHint, CARTPOLE_SRC};
+    use crate::wrappers::TimeLimit;
+
+    const CARTPOLE_STREAM: u64 = 0x9e3779b97f4a7c15;
+
+    fn chain(max_steps: Option<u32>) -> FusedChain {
+        FusedChain { max_steps, epilogue: None }
+    }
+
+    /// The load-bearing property: a batched script lane is bit-identical
+    /// to the scalar TimeLimit(tree-walk ScriptEnv) stack, auto-reset
+    /// included.
+    #[test]
+    fn batched_cartpole_matches_scalar_tree_walk_bitwise() {
+        let lanes = 3;
+        let limit = 25;
+        let program = Arc::new(compile_src(CARTPOLE_SRC).unwrap());
+        let mut batch = ScriptBatch::try_new(
+            "Script/CartPole-v1",
+            program,
+            CARTPOLE_STREAM,
+            lanes,
+            &chain(Some(limit)),
+        )
+        .unwrap();
+        batch.seed(41);
+        let mut scalars: Vec<_> = (0..lanes)
+            .map(|k| {
+                let mut e = TimeLimit::new(
+                    ScriptEnv::load(
+                        "Script/CartPole-v1",
+                        CARTPOLE_SRC,
+                        CARTPOLE_STREAM,
+                        RenderHint::CartPole,
+                    ),
+                    limit,
+                );
+                e.seed(41 + k as u64);
+                e
+            })
+            .collect();
+        let dim = batch.obs_dim();
+        let mut obs = vec![0.0f32; lanes * dim];
+        let mut tr = vec![Transition::default(); lanes];
+        batch.reset_batch(&mut obs, dim);
+        let mut ref_obs = vec![0.0f32; dim];
+        for (k, e) in scalars.iter_mut().enumerate() {
+            e.reset_into(&mut ref_obs);
+            assert_eq!(&obs[k * dim..(k + 1) * dim], &ref_obs[..]);
+        }
+        for step in 0..120 {
+            let actions: Vec<Action> =
+                (0..lanes).map(|k| Action::Discrete((step + k) % 2)).collect();
+            batch.step_batch(&actions, &mut obs, dim, &mut tr);
+            for (k, e) in scalars.iter_mut().enumerate() {
+                let t = e.step_into(&actions[k], &mut ref_obs);
+                if t.done || t.truncated {
+                    e.reset_into(&mut ref_obs);
+                }
+                assert_eq!(tr[k], t, "lane {k} step {step}");
+                assert_eq!(
+                    &obs[k * dim..(k + 1) * dim],
+                    &ref_obs[..],
+                    "lane {k} step {step}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lanes_do_not_alias_list_state() {
+        // Global list state: with naive cloning every lane would share
+        // one Arc'd list and the counters would interleave.
+        let src = "obs_dim = 1; n_actions = 2; xs = zeros(1);\n\
+                   def reset() { global xs; xs[0] = 0; return [xs[0]]; }\n\
+                   def step(action) { global xs; xs[0] = xs[0] + 1; \
+                   return [xs[0], 1.0, 0]; }";
+        let program = Arc::new(compile_src(src).unwrap());
+        let mut batch =
+            ScriptBatch::try_new("Script/Counter", program, 7, 2, &chain(None)).unwrap();
+        batch.seed(0);
+        let mut obs = vec![0.0f32; 1];
+        batch.reset_lane(0, &mut obs);
+        batch.reset_lane(1, &mut obs);
+        batch.step_lane(0, &Action::Discrete(0), &mut obs);
+        batch.step_lane(0, &Action::Discrete(0), &mut obs);
+        assert_eq!(obs[0], 2.0, "lane 0 stepped twice");
+        batch.step_lane(1, &Action::Discrete(0), &mut obs);
+        assert_eq!(obs[0], 1.0, "lane 1 stepped once, isolated from lane 0");
+    }
+
+    #[test]
+    fn reseeding_reproduces_draws_per_lane() {
+        let program = Arc::new(compile_src(CARTPOLE_SRC).unwrap());
+        let mut batch = ScriptBatch::try_new(
+            "Script/CartPole-v1",
+            program,
+            CARTPOLE_STREAM,
+            2,
+            &chain(None),
+        )
+        .unwrap();
+        batch.seed(5);
+        let dim = batch.obs_dim();
+        let mut obs = vec![0.0f32; 2 * dim];
+        batch.reset_batch(&mut obs, dim);
+        assert_ne!(&obs[..dim], &obs[dim..], "lanes must differ");
+        let first = obs.clone();
+        batch.seed(5);
+        batch.reset_batch(&mut obs, dim);
+        assert_eq!(first, obs);
+    }
+
+    #[test]
+    fn reward_scale_epilogue_applies_after_truncation_flags() {
+        let src = "obs_dim = 1; n_actions = 2; x = 0;\n\
+                   def reset() { global x; x = 0; return [x]; }\n\
+                   def step(action) { global x; x = x + 1; return [x, 1.0, 0]; }";
+        let program = Arc::new(compile_src(src).unwrap());
+        let mut batch = ScriptBatch::try_new(
+            "Script/Lin",
+            program,
+            7,
+            1,
+            &FusedChain {
+                max_steps: Some(3),
+                epilogue: Some(AffineEpilogue::RewardScale { scale: 2.0, shift: -0.5 }),
+            },
+        )
+        .unwrap();
+        batch.seed(0);
+        let mut obs = vec![0.0f32; 1];
+        batch.reset_lane(0, &mut obs);
+        for step in 1..=6 {
+            let t = batch.step_lane(0, &Action::Discrete(0), &mut obs);
+            assert_eq!(t.reward, 1.5, "step {step}");
+            assert_eq!(t.truncated, step % 3 == 0, "step {step}");
+            // Auto-reset on truncation: obs restarts the count.
+            let expect = if step % 3 == 0 { 0.0 } else { (step % 3) as f32 };
+            assert_eq!(obs[0], expect, "step {step}");
+        }
+    }
+}

@@ -1,0 +1,1039 @@
+//! MiniScript AST → register-bytecode compiler.
+//!
+//! Lowers the tree ([`crate::script::ast`]) to the compact register
+//! bytecode executed by [`Vm`](crate::script::vm::Vm), modeled on the
+//! in-repo Flash VM (`rust/src/flash/vm.rs`) but register-based: every
+//! expression compiles into a destination register inside a per-call
+//! register window, so the hot loop is a flat `match` over [`Op`]s with
+//! no tree recursion, no string-keyed scope probes and no per-node
+//! dispatch.
+//!
+//! The contract is **observable equivalence with the tree-walk
+//! interpreter** ([`crate::script::interp::Interpreter`]): the same f64
+//! arithmetic in the same order, the same `uniform()` RNG draw
+//! sequence, and the same runtime error messages raised lazily at the
+//! same execution points.  Calls to unknown functions or with the wrong
+//! arity compile to an [`Op::Trap`] *after* the argument evaluation
+//! code, so they fail exactly when (and only if) the tree-walk would.
+//! `rust/tests/script_vm.rs` pins the equivalence over the shipped
+//! scripts and an adversarial corpus; `rust/tests/batch_kernel.rs` pins
+//! it transitively for batched lanes.
+//!
+//! Variable resolution is static: per function, `global` declarations
+//! select [`Op::StoreGlobal`] targets, every other assigned name gets a
+//! local register slot, and reads compile to [`Op::LoadVar`] which
+//! replays the interpreter's locals-then-globals probe (a local slot
+//! that has not been written yet falls through to the global, then to
+//! the `undefined variable` error).  One deliberate approximation:
+//! `global` declarations are hoisted to function scope at compile time,
+//! where the tree-walk applies them at their execution point — scripts
+//! that declare `global` before assigning, as every shipped source
+//! does, behave identically.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::core::error::{CairlError, Result};
+use crate::script::ast::{BinOp, Expr, FuncDef, Program as Ast, Stmt, UnOp};
+use crate::script::interp::Value;
+use crate::script::parser::parse;
+
+/// Sentinel register / slot index meaning "absent".
+pub const NO_REG: u16 = u16::MAX;
+
+/// Builtin functions, resolved at compile time by `(name, arity)` —
+/// the same key the tree-walk matches at call time, so a wrong-arity
+/// builtin name falls through to user functions exactly as it does
+/// there.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[allow(missing_docs)]
+pub enum Builtin {
+    Cos,
+    Sin,
+    Tan,
+    Sqrt,
+    Exp,
+    Ln,
+    Abs,
+    Floor,
+    Ceil,
+    Sign,
+    Pow,
+    Min,
+    Max,
+    Clamp,
+    Pi,
+    Uniform,
+    Len,
+    Push,
+    Zeros,
+}
+
+impl Builtin {
+    /// Resolve a call-site `(name, argc)` pair to a builtin, mirroring
+    /// the tree-walk's `(name, args.len())` match arms one for one.
+    pub fn resolve(name: &str, argc: usize) -> Option<Builtin> {
+        Some(match (name, argc) {
+            ("cos", 1) => Builtin::Cos,
+            ("sin", 1) => Builtin::Sin,
+            ("tan", 1) => Builtin::Tan,
+            ("sqrt", 1) => Builtin::Sqrt,
+            ("exp", 1) => Builtin::Exp,
+            ("ln", 1) => Builtin::Ln,
+            ("abs", 1) => Builtin::Abs,
+            ("floor", 1) => Builtin::Floor,
+            ("ceil", 1) => Builtin::Ceil,
+            ("sign", 1) => Builtin::Sign,
+            ("pow", 2) => Builtin::Pow,
+            ("min", 2) => Builtin::Min,
+            ("max", 2) => Builtin::Max,
+            ("clamp", 3) => Builtin::Clamp,
+            ("pi", 0) => Builtin::Pi,
+            ("uniform", 2) => Builtin::Uniform,
+            ("len", 1) => Builtin::Len,
+            ("push", 2) => Builtin::Push,
+            ("zeros", 1) => Builtin::Zeros,
+            _ => return None,
+        })
+    }
+}
+
+/// One register-bytecode instruction.  Register operands index the
+/// current call's register window; jump targets are absolute code
+/// offsets.
+#[derive(Clone, Copy, Debug)]
+#[allow(missing_docs)]
+pub enum Op {
+    /// `dst = consts[idx]`.
+    Const { dst: u16, idx: u16 },
+    /// `dst = src`.
+    Move { dst: u16, src: u16 },
+    /// The interpreter's locals-then-globals probe: `dst` gets the
+    /// local `slot` if it has been written, else global `global` if
+    /// set, else the run errors with `undefined variable
+    /// strings[name]`.  Either index may be [`NO_REG`].
+    LoadVar { dst: u16, slot: u16, global: u16, name: u16 },
+    /// `globals[idx] = src`.
+    StoreGlobal { idx: u16, src: u16 },
+    /// `dst = Num(as_num(src))` — the interpreter's eager numeric
+    /// conversion points (`for` bounds, index expressions).
+    AsNum { dst: u16, src: u16 },
+    Add { dst: u16, a: u16, b: u16 },
+    Sub { dst: u16, a: u16, b: u16 },
+    Mul { dst: u16, a: u16, b: u16 },
+    Div { dst: u16, a: u16, b: u16 },
+    /// Euclidean remainder, like the tree-walk's `%`.
+    Mod { dst: u16, a: u16, b: u16 },
+    Eq { dst: u16, a: u16, b: u16 },
+    Ne { dst: u16, a: u16, b: u16 },
+    Lt { dst: u16, a: u16, b: u16 },
+    Le { dst: u16, a: u16, b: u16 },
+    Gt { dst: u16, a: u16, b: u16 },
+    Ge { dst: u16, a: u16, b: u16 },
+    Neg { dst: u16, src: u16 },
+    Not { dst: u16, src: u16 },
+    /// `dst = Bool(truthy(src))` — the `and`/`or` result coercion.
+    Truthy { dst: u16, src: u16 },
+    Jmp(u32),
+    JmpIfFalse { cond: u16, to: u32 },
+    JmpIfTrue { cond: u16, to: u32 },
+    /// `dst = [regs[start], ..., regs[start + n - 1]]` (fresh list).
+    MakeList { dst: u16, start: u16, n: u16 },
+    /// `dst = xs[idx]` with the interpreter's conversion/bounds errors.
+    IndexGet { dst: u16, xs: u16, idx: u16 },
+    /// `xs[idx] = src` (idx already numeric via [`Op::AsNum`]).
+    IndexSet { xs: u16, idx: u16, src: u16 },
+    /// Call `funcs[func]` with `argc` args at `regs[start..]`.
+    CallFn { dst: u16, func: u16, start: u16, argc: u16 },
+    /// Dispatch a [`Builtin`] over `argc` args at `regs[start..]`.
+    CallBuiltin { dst: u16, builtin: Builtin, start: u16, argc: u16 },
+    /// Return `src` to the caller (or finish the run at depth 0).
+    Return { src: u16 },
+    /// Return `None` (fallthrough off a function body, bare `return`,
+    /// `break`/`continue` outside any loop inside a function).
+    ReturnNone,
+    /// Raise `CairlError::Script(strings[msg])` — pre-formatted
+    /// call-resolution and top-level-flow errors, raised lazily.
+    Trap { msg: u16 },
+}
+
+/// A compiled function's metadata.
+#[derive(Clone, Debug)]
+pub struct FuncInfo {
+    /// Source name (error messages, [`Vm::call`](crate::script::vm::Vm::call)).
+    pub name: String,
+    /// Absolute entry offset into [`CompiledProgram::code`].
+    pub entry: u32,
+    /// Number of parameters (arity checks).
+    pub n_params: u16,
+    /// Register window size (params + locals + temps).
+    pub n_regs: u16,
+}
+
+/// A compiled MiniScript program — immutable and shareable: VMs hold an
+/// `Arc<CompiledProgram>` and keep all mutable state (globals,
+/// registers, RNG) on the side, which is what lets one program step
+/// many batch lanes.
+#[derive(Clone, Debug, Default)]
+pub struct CompiledProgram {
+    /// Flat instruction stream (top-level first, then each function).
+    pub code: Vec<Op>,
+    /// Deduplicated constant pool.
+    pub consts: Vec<Value>,
+    /// Identifier / trap-message pool.
+    pub strings: Vec<String>,
+    /// Function table in definition order (duplicates kept; the map
+    /// below points at the last definition, like the tree-walk).
+    pub funcs: Vec<FuncInfo>,
+    /// Function name → index of its (last) definition.
+    pub func_map: HashMap<String, u16>,
+    /// Global variable names in slot order.
+    pub global_names: Vec<String>,
+    /// Global name → slot.
+    pub global_map: HashMap<String, u16>,
+    /// Entry offset of the top-level statement code.
+    pub top_entry: u32,
+    /// Register window size of the top-level code.
+    pub top_regs: u16,
+}
+
+/// Compile MiniScript source text (parse + lower).
+pub fn compile_src(src: &str) -> Result<CompiledProgram> {
+    compile(&parse(src)?)
+}
+
+/// Lower a parsed program to bytecode.
+pub fn compile(prog: &Ast) -> Result<CompiledProgram> {
+    let mut c = Compiler::default();
+    // Pass 1: the global name space — top-level direct-assign targets
+    // plus every `global` declaration anywhere (the only ways the
+    // interpreter's globals map ever gains a key).
+    for s in &prog.top {
+        if let Stmt::Assign(name, _) = s {
+            c.global_idx(name)?;
+        }
+    }
+    let mut g_top = Vec::new();
+    collect_global_decls(&prog.top, &mut g_top);
+    for name in &g_top {
+        c.global_idx(name)?;
+    }
+    for f in &prog.funcs {
+        let mut g = Vec::new();
+        collect_global_decls(&f.body, &mut g);
+        for name in &g {
+            c.global_idx(name)?;
+        }
+    }
+    // Pass 2: the function table, before any body compiles (forward
+    // references).  Last duplicate wins, like the tree-walk's HashMap.
+    if prog.funcs.len() >= u16::MAX as usize {
+        return Err(CairlError::Script("script too large: function table overflow".into()));
+    }
+    for (i, f) in prog.funcs.iter().enumerate() {
+        if f.params.len() >= NO_REG as usize {
+            return Err(CairlError::Script(format!(
+                "{}(): too many parameters",
+                f.name
+            )));
+        }
+        c.funcs.push(FuncInfo {
+            name: f.name.clone(),
+            entry: 0,
+            n_params: f.params.len() as u16,
+            n_regs: 0,
+        });
+        c.func_map.insert(f.name.clone(), i as u16);
+    }
+    // Pass 3: code.
+    let (top_entry, top_regs) = c.compile_top(prog, &g_top)?;
+    for (i, f) in prog.funcs.iter().enumerate() {
+        c.compile_func(i, f)?;
+    }
+    Ok(CompiledProgram {
+        code: c.code,
+        consts: c.consts,
+        strings: c.strings,
+        funcs: c.funcs,
+        func_map: c.func_map,
+        global_names: c.global_names,
+        global_map: c.global_map,
+        top_entry,
+        top_regs,
+    })
+}
+
+/// Collect `global` declarations recursively (compile-time hoisting).
+fn collect_global_decls(stmts: &[Stmt], out: &mut Vec<String>) {
+    for s in stmts {
+        match s {
+            Stmt::Global(name) => {
+                if !out.iter().any(|n| n == name) {
+                    out.push(name.clone());
+                }
+            }
+            Stmt::If { arms, else_body } => {
+                for (_, body) in arms {
+                    collect_global_decls(body, out);
+                }
+                collect_global_decls(else_body, out);
+            }
+            Stmt::While(_, body) | Stmt::For(_, _, _, body) => {
+                collect_global_decls(body, out);
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Collect assignment-target names recursively.
+fn collect_assign_targets(stmts: &[Stmt], out: &mut Vec<String>) {
+    for s in stmts {
+        match s {
+            Stmt::Assign(name, _) => push_unique(out, name),
+            Stmt::If { arms, else_body } => {
+                for (_, body) in arms {
+                    collect_assign_targets(body, out);
+                }
+                collect_assign_targets(else_body, out);
+            }
+            Stmt::While(_, body) | Stmt::For(_, _, _, body) => {
+                collect_assign_targets(body, out);
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Collect `for`-loop variables recursively — these are *always* local
+/// (the tree-walk writes the counter straight into the frame's locals,
+/// `global` declaration or not).
+fn collect_for_vars(stmts: &[Stmt], out: &mut Vec<String>) {
+    for s in stmts {
+        match s {
+            Stmt::For(var, _, _, body) => {
+                push_unique(out, var);
+                collect_for_vars(body, out);
+            }
+            Stmt::If { arms, else_body } => {
+                for (_, body) in arms {
+                    collect_for_vars(body, out);
+                }
+                collect_for_vars(else_body, out);
+            }
+            Stmt::While(_, body) => collect_for_vars(body, out),
+            _ => {}
+        }
+    }
+}
+
+fn push_unique(out: &mut Vec<String>, name: &str) {
+    if !out.iter().any(|n| n == name) {
+        out.push(name.to_string());
+    }
+}
+
+/// Constant-pool dedup key (`f64` by bit pattern).
+#[derive(Clone, PartialEq, Eq, Hash)]
+enum ConstKey {
+    Num(u64),
+    Bool(bool),
+    Str(String),
+    None,
+}
+
+/// An open loop: `break`/`continue` jump fixups.
+struct LoopCtx {
+    break_patches: Vec<usize>,
+    continue_patches: Vec<usize>,
+    /// `while` knows its condition label up front; `for` patches to the
+    /// increment section after the body.
+    continue_to: Option<u32>,
+}
+
+/// Per-function compilation state: the slot map and a stack-discipline
+/// temp allocator (statements mark/reset, so temp pressure is the
+/// deepest expression, not the function length).
+struct FnScope {
+    slots: HashMap<String, u16>,
+    global_decls: Vec<String>,
+    next: u16,
+    max: u16,
+    loops: Vec<LoopCtx>,
+    /// Top-level code: `break`/`continue`/`return` that escape every
+    /// loop trap instead of returning.
+    top: bool,
+}
+
+impl FnScope {
+    fn new(top: bool) -> FnScope {
+        FnScope {
+            slots: HashMap::new(),
+            global_decls: Vec::new(),
+            next: 0,
+            max: 0,
+            loops: Vec::new(),
+            top,
+        }
+    }
+
+    fn alloc(&mut self) -> Result<u16> {
+        if self.next + 1 >= NO_REG {
+            return Err(CairlError::Script(
+                "script too large: register window overflow".into(),
+            ));
+        }
+        let r = self.next;
+        self.next += 1;
+        if self.next > self.max {
+            self.max = self.next;
+        }
+        Ok(r)
+    }
+
+    fn mark(&self) -> u16 {
+        self.next
+    }
+
+    fn reset(&mut self, m: u16) {
+        self.next = m;
+    }
+
+    fn add_slot(&mut self, name: &str) -> Result<()> {
+        if !self.slots.contains_key(name) {
+            let r = self.alloc()?;
+            self.slots.insert(name.to_string(), r);
+        }
+        Ok(())
+    }
+
+    fn is_global(&self, name: &str) -> bool {
+        self.global_decls.iter().any(|n| n == name)
+    }
+}
+
+#[derive(Default)]
+struct Compiler {
+    code: Vec<Op>,
+    consts: Vec<Value>,
+    const_map: HashMap<ConstKey, u16>,
+    strings: Vec<String>,
+    string_map: HashMap<String, u16>,
+    funcs: Vec<FuncInfo>,
+    func_map: HashMap<String, u16>,
+    global_names: Vec<String>,
+    global_map: HashMap<String, u16>,
+}
+
+impl Compiler {
+    fn emit(&mut self, op: Op) -> usize {
+        self.code.push(op);
+        self.code.len() - 1
+    }
+
+    fn here(&self) -> u32 {
+        self.code.len() as u32
+    }
+
+    fn patch_to(&mut self, at: usize, to: u32) {
+        match &mut self.code[at] {
+            Op::Jmp(t) | Op::JmpIfFalse { to: t, .. } | Op::JmpIfTrue { to: t, .. } => *t = to,
+            other => unreachable!("patch target {other:?} is not a jump"),
+        }
+    }
+
+    fn patch_here(&mut self, at: usize) {
+        let to = self.here();
+        self.patch_to(at, to);
+    }
+
+    fn global_idx(&mut self, name: &str) -> Result<u16> {
+        if let Some(&i) = self.global_map.get(name) {
+            return Ok(i);
+        }
+        if self.global_names.len() >= NO_REG as usize {
+            return Err(CairlError::Script("script too large: too many globals".into()));
+        }
+        let i = self.global_names.len() as u16;
+        self.global_names.push(name.to_string());
+        self.global_map.insert(name.to_string(), i);
+        Ok(i)
+    }
+
+    fn const_idx(&mut self, key: ConstKey) -> Result<u16> {
+        if let Some(&i) = self.const_map.get(&key) {
+            return Ok(i);
+        }
+        if self.consts.len() >= u16::MAX as usize {
+            return Err(CairlError::Script("script too large: constant pool overflow".into()));
+        }
+        let v = match &key {
+            ConstKey::Num(bits) => Value::Num(f64::from_bits(*bits)),
+            ConstKey::Bool(b) => Value::Bool(*b),
+            ConstKey::Str(s) => Value::Str(Arc::new(s.clone())),
+            ConstKey::None => Value::None,
+        };
+        let i = self.consts.len() as u16;
+        self.consts.push(v);
+        self.const_map.insert(key, i);
+        Ok(i)
+    }
+
+    fn string_idx(&mut self, s: &str) -> Result<u16> {
+        if let Some(&i) = self.string_map.get(s) {
+            return Ok(i);
+        }
+        if self.strings.len() >= u16::MAX as usize {
+            return Err(CairlError::Script("script too large: string pool overflow".into()));
+        }
+        let i = self.strings.len() as u16;
+        self.strings.push(s.to_string());
+        self.string_map.insert(s.to_string(), i);
+        Ok(i)
+    }
+
+    fn emit_trap(&mut self, msg: &str) -> Result<()> {
+        let i = self.string_idx(msg)?;
+        self.emit(Op::Trap { msg: i });
+        Ok(())
+    }
+
+    // -------------------------------------------------------- drivers
+
+    /// Top-level statement code: direct assignments store globals (the
+    /// interpreter's `exec_top` special case), everything else runs
+    /// under normal scoping with the top-level `global` declarations.
+    fn compile_top(&mut self, prog: &Ast, g_top: &[String]) -> Result<(u32, u16)> {
+        let mut scope = FnScope::new(true);
+        scope.global_decls = g_top.to_vec();
+        // Locals of the top-level frame: names assigned inside nested
+        // statements (not `global`-declared) plus `for` variables —
+        // direct assignments bypass the frame entirely.
+        let mut for_vars = Vec::new();
+        let mut targets = Vec::new();
+        for s in &prog.top {
+            if !matches!(s, Stmt::Assign(..)) {
+                collect_for_vars(std::slice::from_ref(s), &mut for_vars);
+                collect_assign_targets(std::slice::from_ref(s), &mut targets);
+            }
+        }
+        for name in &for_vars {
+            scope.add_slot(name)?;
+        }
+        for name in &targets {
+            if !scope.is_global(name) {
+                scope.add_slot(name)?;
+            }
+        }
+        let entry = self.here();
+        for s in &prog.top {
+            if let Stmt::Assign(name, e) = s {
+                let m = scope.mark();
+                let t = self.expr(&mut scope, e)?;
+                let g = self.global_map[name.as_str()];
+                self.emit(Op::StoreGlobal { idx: g, src: t });
+                scope.reset(m);
+            } else {
+                self.stmt(&mut scope, s)?;
+            }
+        }
+        self.emit(Op::ReturnNone);
+        Ok((entry, scope.max))
+    }
+
+    fn compile_func(&mut self, idx: usize, def: &FuncDef) -> Result<()> {
+        let mut scope = FnScope::new(false);
+        collect_global_decls(&def.body, &mut scope.global_decls);
+        for p in &def.params {
+            scope.add_slot(p)?;
+        }
+        let mut for_vars = Vec::new();
+        collect_for_vars(&def.body, &mut for_vars);
+        for name in &for_vars {
+            scope.add_slot(name)?;
+        }
+        let mut targets = Vec::new();
+        collect_assign_targets(&def.body, &mut targets);
+        for name in &targets {
+            if !scope.is_global(name) {
+                scope.add_slot(name)?;
+            }
+        }
+        self.funcs[idx].entry = self.here();
+        self.block(&mut scope, &def.body)?;
+        self.emit(Op::ReturnNone);
+        self.funcs[idx].n_regs = scope.max;
+        Ok(())
+    }
+
+    // ----------------------------------------------------- statements
+
+    fn block(&mut self, scope: &mut FnScope, stmts: &[Stmt]) -> Result<()> {
+        for s in stmts {
+            self.stmt(scope, s)?;
+        }
+        Ok(())
+    }
+
+    fn stmt(&mut self, scope: &mut FnScope, s: &Stmt) -> Result<()> {
+        match s {
+            Stmt::Assign(name, e) => {
+                let m = scope.mark();
+                let t = self.expr(scope, e)?;
+                if scope.is_global(name) {
+                    let g = self.global_map[name.as_str()];
+                    self.emit(Op::StoreGlobal { idx: g, src: t });
+                } else {
+                    let slot = scope.slots[name.as_str()];
+                    self.emit(Op::Move { dst: slot, src: t });
+                }
+                scope.reset(m);
+            }
+            Stmt::IndexAssign(name, idx, e) => {
+                // Interpreter order: index expression, numeric
+                // conversion, value expression, *then* the name lookup
+                // and the list-type/bounds checks.
+                let m = scope.mark();
+                let t0 = self.expr(scope, idx)?;
+                let ti = scope.alloc()?;
+                self.emit(Op::AsNum { dst: ti, src: t0 });
+                let tv = self.expr(scope, e)?;
+                let txs = self.load_var(scope, name)?;
+                self.emit(Op::IndexSet { xs: txs, idx: ti, src: tv });
+                scope.reset(m);
+            }
+            Stmt::Expr(e) => {
+                let m = scope.mark();
+                self.expr(scope, e)?;
+                scope.reset(m);
+            }
+            Stmt::If { arms, else_body } => {
+                let mut end_jumps = Vec::new();
+                for (cond, body) in arms {
+                    let m = scope.mark();
+                    let t = self.expr(scope, cond)?;
+                    let jf = self.emit(Op::JmpIfFalse { cond: t, to: 0 });
+                    scope.reset(m);
+                    self.block(scope, body)?;
+                    end_jumps.push(self.emit(Op::Jmp(0)));
+                    self.patch_here(jf);
+                }
+                self.block(scope, else_body)?;
+                for j in end_jumps {
+                    self.patch_here(j);
+                }
+            }
+            Stmt::While(cond, body) => {
+                let l_cond = self.here();
+                let m = scope.mark();
+                let t = self.expr(scope, cond)?;
+                let jf = self.emit(Op::JmpIfFalse { cond: t, to: 0 });
+                scope.reset(m);
+                scope.loops.push(LoopCtx {
+                    break_patches: Vec::new(),
+                    continue_patches: Vec::new(),
+                    continue_to: Some(l_cond),
+                });
+                self.block(scope, body)?;
+                let ctx = scope.loops.pop().expect("loop context pushed above");
+                self.emit(Op::Jmp(l_cond));
+                self.patch_here(jf);
+                for b in ctx.break_patches {
+                    self.patch_here(b);
+                }
+            }
+            Stmt::For(var, start, stop, body) => {
+                // The loop counter is a hidden f64 (the tree-walk never
+                // reads it back from the variable), kept in a register
+                // that outlives the body alongside the bound.
+                let m = scope.mark();
+                let t_counter = scope.alloc()?;
+                let t_stop = scope.alloc()?;
+                {
+                    let m2 = scope.mark();
+                    let t = self.expr(scope, start)?;
+                    self.emit(Op::AsNum { dst: t_counter, src: t });
+                    scope.reset(m2);
+                }
+                {
+                    let m2 = scope.mark();
+                    let t = self.expr(scope, stop)?;
+                    self.emit(Op::AsNum { dst: t_stop, src: t });
+                    scope.reset(m2);
+                }
+                let l_cond = self.here();
+                let m2 = scope.mark();
+                let t = scope.alloc()?;
+                self.emit(Op::Lt { dst: t, a: t_counter, b: t_stop });
+                let jf = self.emit(Op::JmpIfFalse { cond: t, to: 0 });
+                scope.reset(m2);
+                let slot = scope.slots[var.as_str()];
+                self.emit(Op::Move { dst: slot, src: t_counter });
+                scope.loops.push(LoopCtx {
+                    break_patches: Vec::new(),
+                    continue_patches: Vec::new(),
+                    continue_to: None,
+                });
+                self.block(scope, body)?;
+                let ctx = scope.loops.pop().expect("loop context pushed above");
+                let l_inc = self.here();
+                for c in ctx.continue_patches {
+                    self.patch_to(c, l_inc);
+                }
+                let m2 = scope.mark();
+                let t_one = scope.alloc()?;
+                let one = self.const_idx(ConstKey::Num(1.0f64.to_bits()))?;
+                self.emit(Op::Const { dst: t_one, idx: one });
+                self.emit(Op::Add { dst: t_counter, a: t_counter, b: t_one });
+                scope.reset(m2);
+                self.emit(Op::Jmp(l_cond));
+                self.patch_here(jf);
+                for b in ctx.break_patches {
+                    self.patch_here(b);
+                }
+                scope.reset(m);
+            }
+            Stmt::Return(e) => {
+                if scope.top {
+                    // The tree-walk evaluates the expression, *then*
+                    // rejects the flow — keep the side effects.
+                    let m = scope.mark();
+                    if let Some(e) = e {
+                        self.expr(scope, e)?;
+                    }
+                    self.emit_trap("break/continue/return at top level")?;
+                    scope.reset(m);
+                } else {
+                    match e {
+                        Some(e) => {
+                            let m = scope.mark();
+                            let t = self.expr(scope, e)?;
+                            self.emit(Op::Return { src: t });
+                            scope.reset(m);
+                        }
+                        None => {
+                            self.emit(Op::ReturnNone);
+                        }
+                    }
+                }
+            }
+            Stmt::Break => {
+                if let Some(ctx) = scope.loops.last_mut() {
+                    let j = self.code.len();
+                    self.code.push(Op::Jmp(0));
+                    ctx.break_patches.push(j);
+                } else if scope.top {
+                    self.emit_trap("break/continue/return at top level")?;
+                } else {
+                    // Unwound silently to the caller, like the
+                    // tree-walk's `call()` ignoring stray flow.
+                    self.emit(Op::ReturnNone);
+                }
+            }
+            Stmt::Continue => {
+                if let Some(ctx) = scope.loops.last_mut() {
+                    match ctx.continue_to {
+                        Some(to) => {
+                            self.emit(Op::Jmp(to));
+                        }
+                        None => {
+                            let j = self.code.len();
+                            self.code.push(Op::Jmp(0));
+                            ctx.continue_patches.push(j);
+                        }
+                    }
+                } else if scope.top {
+                    self.emit_trap("break/continue/return at top level")?;
+                } else {
+                    self.emit(Op::ReturnNone);
+                }
+            }
+            Stmt::Global(_) => {} // hoisted in the scope-analysis pass
+        }
+        Ok(())
+    }
+
+    // ---------------------------------------------------- expressions
+
+    /// Emit a [`Op::LoadVar`] for `name` into a fresh temp.
+    fn load_var(&mut self, scope: &mut FnScope, name: &str) -> Result<u16> {
+        let dst = scope.alloc()?;
+        let slot = scope.slots.get(name).copied().unwrap_or(NO_REG);
+        let global = self.global_map.get(name).copied().unwrap_or(NO_REG);
+        let n = self.string_idx(name)?;
+        self.emit(Op::LoadVar { dst, slot, global, name: n });
+        Ok(dst)
+    }
+
+    /// Compile an expression; returns the register holding the result.
+    fn expr(&mut self, scope: &mut FnScope, e: &Expr) -> Result<u16> {
+        match e {
+            Expr::Num(v) => {
+                let dst = scope.alloc()?;
+                let idx = self.const_idx(ConstKey::Num(v.to_bits()))?;
+                self.emit(Op::Const { dst, idx });
+                Ok(dst)
+            }
+            Expr::Bool(b) => {
+                let dst = scope.alloc()?;
+                let idx = self.const_idx(ConstKey::Bool(*b))?;
+                self.emit(Op::Const { dst, idx });
+                Ok(dst)
+            }
+            Expr::Str(s) => {
+                let dst = scope.alloc()?;
+                let idx = self.const_idx(ConstKey::Str(s.clone()))?;
+                self.emit(Op::Const { dst, idx });
+                Ok(dst)
+            }
+            Expr::None_ => {
+                let dst = scope.alloc()?;
+                let idx = self.const_idx(ConstKey::None)?;
+                self.emit(Op::Const { dst, idx });
+                Ok(dst)
+            }
+            Expr::Var(name) => self.load_var(scope, name),
+            Expr::List(items) => {
+                if items.len() >= NO_REG as usize {
+                    return Err(CairlError::Script("script too large: list literal".into()));
+                }
+                let dst = scope.alloc()?;
+                let start = scope.mark();
+                for _ in items {
+                    scope.alloc()?;
+                }
+                for (i, item) in items.iter().enumerate() {
+                    let m = scope.mark();
+                    let t = self.expr(scope, item)?;
+                    self.emit(Op::Move { dst: start + i as u16, src: t });
+                    scope.reset(m);
+                }
+                self.emit(Op::MakeList { dst, start, n: items.len() as u16 });
+                scope.reset(start);
+                Ok(dst)
+            }
+            Expr::Index(target, idx) => {
+                let dst = scope.alloc()?;
+                let m = scope.mark();
+                let t_xs = self.expr(scope, target)?;
+                let t_i = self.expr(scope, idx)?;
+                self.emit(Op::IndexGet { dst, xs: t_xs, idx: t_i });
+                scope.reset(m);
+                Ok(dst)
+            }
+            Expr::Un(op, inner) => {
+                let dst = scope.alloc()?;
+                let m = scope.mark();
+                let src = self.expr(scope, inner)?;
+                match op {
+                    UnOp::Neg => self.emit(Op::Neg { dst, src }),
+                    UnOp::Not => self.emit(Op::Not { dst, src }),
+                };
+                scope.reset(m);
+                Ok(dst)
+            }
+            Expr::Bin(BinOp::And, lhs, rhs) => {
+                let dst = scope.alloc()?;
+                let m = scope.mark();
+                let tl = self.expr(scope, lhs)?;
+                let jf = self.emit(Op::JmpIfFalse { cond: tl, to: 0 });
+                scope.reset(m);
+                let tr = self.expr(scope, rhs)?;
+                self.emit(Op::Truthy { dst, src: tr });
+                let j_end = self.emit(Op::Jmp(0));
+                self.patch_here(jf);
+                let f = self.const_idx(ConstKey::Bool(false))?;
+                self.emit(Op::Const { dst, idx: f });
+                self.patch_here(j_end);
+                scope.reset(m);
+                Ok(dst)
+            }
+            Expr::Bin(BinOp::Or, lhs, rhs) => {
+                let dst = scope.alloc()?;
+                let m = scope.mark();
+                let tl = self.expr(scope, lhs)?;
+                let jt = self.emit(Op::JmpIfTrue { cond: tl, to: 0 });
+                scope.reset(m);
+                let tr = self.expr(scope, rhs)?;
+                self.emit(Op::Truthy { dst, src: tr });
+                let j_end = self.emit(Op::Jmp(0));
+                self.patch_here(jt);
+                let t = self.const_idx(ConstKey::Bool(true))?;
+                self.emit(Op::Const { dst, idx: t });
+                self.patch_here(j_end);
+                scope.reset(m);
+                Ok(dst)
+            }
+            Expr::Bin(op, lhs, rhs) => {
+                let dst = scope.alloc()?;
+                let m = scope.mark();
+                let a = self.expr(scope, lhs)?;
+                let b = self.expr(scope, rhs)?;
+                let op = match op {
+                    BinOp::Add => Op::Add { dst, a, b },
+                    BinOp::Sub => Op::Sub { dst, a, b },
+                    BinOp::Mul => Op::Mul { dst, a, b },
+                    BinOp::Div => Op::Div { dst, a, b },
+                    BinOp::Mod => Op::Mod { dst, a, b },
+                    BinOp::Eq => Op::Eq { dst, a, b },
+                    BinOp::Ne => Op::Ne { dst, a, b },
+                    BinOp::Lt => Op::Lt { dst, a, b },
+                    BinOp::Le => Op::Le { dst, a, b },
+                    BinOp::Gt => Op::Gt { dst, a, b },
+                    BinOp::Ge => Op::Ge { dst, a, b },
+                    BinOp::And | BinOp::Or => unreachable!("handled above"),
+                };
+                self.emit(op);
+                scope.reset(m);
+                Ok(dst)
+            }
+            Expr::Call(name, args) => {
+                if args.len() >= NO_REG as usize {
+                    return Err(CairlError::Script("script too large: call arity".into()));
+                }
+                let dst = scope.alloc()?;
+                let m = scope.mark();
+                let start = scope.mark();
+                for _ in args {
+                    scope.alloc()?;
+                }
+                for (i, arg) in args.iter().enumerate() {
+                    let m2 = scope.mark();
+                    let t = self.expr(scope, arg)?;
+                    self.emit(Op::Move { dst: start + i as u16, src: t });
+                    scope.reset(m2);
+                }
+                let argc = args.len() as u16;
+                // Resolution order mirrors `call_any`: builtins by
+                // (name, arity) first, then user functions; failures
+                // trap *after* the argument code so they fire exactly
+                // when the tree-walk's runtime lookup would.
+                if let Some(builtin) = Builtin::resolve(name, args.len()) {
+                    self.emit(Op::CallBuiltin { dst, builtin, start, argc });
+                } else if let Some(&fi) = self.func_map.get(name.as_str()) {
+                    let n_params = self.funcs[fi as usize].n_params;
+                    if n_params == argc {
+                        self.emit(Op::CallFn { dst, func: fi, start, argc });
+                    } else {
+                        let msg =
+                            format!("{name}() takes {n_params} args, got {argc}");
+                        self.emit_trap(&msg)?;
+                    }
+                } else {
+                    self.emit_trap(&format!("no function {name:?}"))?;
+                }
+                scope.reset(m);
+                Ok(dst)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ops(src: &str) -> Vec<Op> {
+        compile_src(src).unwrap().code
+    }
+
+    #[test]
+    fn straight_line_compiles_to_flat_code() {
+        let p = compile_src("x = 1 + 2;").unwrap();
+        assert_eq!(p.global_names, vec!["x".to_string()]);
+        assert_eq!(p.top_entry, 0);
+        // Const, Const, Add, StoreGlobal, ReturnNone.
+        assert_eq!(p.code.len(), 5);
+        assert!(matches!(p.code[3], Op::StoreGlobal { idx: 0, .. }));
+    }
+
+    #[test]
+    fn constants_are_deduplicated() {
+        let p = compile_src("x = 1; y = 1; z = 1;").unwrap();
+        let nums = p
+            .consts
+            .iter()
+            .filter(|v| matches!(v, Value::Num(_)))
+            .count();
+        assert_eq!(nums, 1);
+    }
+
+    #[test]
+    fn function_table_records_arity_and_entry() {
+        let p = compile_src("def f(a, b) { return a + b; } def g() { return f(1, 2); }")
+            .unwrap();
+        assert_eq!(p.funcs.len(), 2);
+        let f = &p.funcs[p.func_map["f"] as usize];
+        assert_eq!(f.n_params, 2);
+        assert!(f.n_regs >= 2);
+        assert!(f.entry > 0, "top-level code compiles first");
+    }
+
+    #[test]
+    fn duplicate_function_defs_resolve_to_the_last() {
+        let p = compile_src("def f() { return 1; } def f() { return 2; }").unwrap();
+        assert_eq!(p.funcs.len(), 2);
+        assert_eq!(p.func_map["f"], 1);
+    }
+
+    #[test]
+    fn unknown_call_compiles_to_a_lazy_trap() {
+        // Compiles fine; the trap only fires if executed (parity with
+        // the tree-walk's runtime lookup).
+        let code = ops("def f() { return nope(); }");
+        assert!(code.iter().any(|op| matches!(op, Op::Trap { .. })));
+    }
+
+    #[test]
+    fn arity_mismatch_compiles_to_a_lazy_trap() {
+        let p = compile_src("def f(a) { return a; } def g() { return f(1, 2); }").unwrap();
+        let has_trap = p.code.iter().any(|op| matches!(op, Op::Trap { .. }));
+        assert!(has_trap);
+        assert!(p.strings.iter().any(|s| s == "f() takes 1 args, got 2"));
+    }
+
+    #[test]
+    fn short_circuit_compiles_to_jumps() {
+        let code = ops("def f(x) { return x != 0 and 1 / x > 0; }");
+        assert!(code.iter().any(|op| matches!(op, Op::JmpIfFalse { .. })));
+    }
+
+    #[test]
+    fn global_decls_select_store_global() {
+        let p = compile_src("c = 0; def bump() { global c; c = c + 1; }").unwrap();
+        let stores = p
+            .code
+            .iter()
+            .filter(|op| matches!(op, Op::StoreGlobal { .. }))
+            .count();
+        assert_eq!(stores, 2, "top-level init + the function body");
+    }
+
+    #[test]
+    fn builtin_resolution_is_arity_sensitive() {
+        assert_eq!(Builtin::resolve("min", 2), Some(Builtin::Min));
+        assert_eq!(Builtin::resolve("min", 3), None);
+        assert_eq!(Builtin::resolve("pi", 0), Some(Builtin::Pi));
+        assert_eq!(Builtin::resolve("nope", 1), None);
+    }
+
+    #[test]
+    fn shipped_sources_compile() {
+        use crate::script::envs;
+        for src in [
+            envs::CARTPOLE_SRC,
+            envs::MOUNTAINCAR_SRC,
+            envs::ACROBOT_SRC,
+            envs::PENDULUM_SRC,
+        ] {
+            let p = compile_src(src).unwrap();
+            assert!(p.func_map.contains_key("reset"));
+            assert!(p.func_map.contains_key("step"));
+        }
+    }
+
+    #[test]
+    fn parse_errors_pass_through() {
+        assert!(compile_src("def f( {").is_err());
+    }
+}

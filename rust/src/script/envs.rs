@@ -18,7 +18,9 @@ use crate::core::env::{Env, Transition};
 use crate::core::error::{CairlError, Result};
 use crate::core::spaces::{Action, Space};
 use crate::render::{software, Framebuffer};
+use crate::script::compile::CompiledProgram;
 use crate::script::interp::{Interpreter, Value};
+use std::sync::{Arc, RwLock};
 
 /// How to paint this scripted env (reads interpreter globals).
 #[derive(Clone, Copy, Debug)]
@@ -30,6 +32,51 @@ pub enum RenderHint {
     None,
 }
 
+/// One validated version of a runtime-registered script: the source, the
+/// protocol dims it declared, and its eagerly compiled bytecode.
+///
+/// `generation` increases by one on every successful
+/// [`register_script`](crate::coordinator::registry::register_script)
+/// call for the same id; live [`ScriptEnv`]s compare it against the
+/// generation they were built from to detect a hot reload.
+pub struct LoadedScript {
+    pub src: String,
+    pub stream: u64,
+    pub obs_dim: usize,
+    pub n_actions: usize,
+    pub program: Arc<CompiledProgram>,
+    pub generation: u64,
+}
+
+/// Shared, swappable handle to the current [`LoadedScript`] of one
+/// registry id.  The registry holds one cell per `register_script` id;
+/// every env built from that id holds a clone, so swapping the cell's
+/// contents reaches all of them at their next `reset()`.
+pub struct ScriptCell {
+    inner: RwLock<Arc<LoadedScript>>,
+}
+
+impl ScriptCell {
+    pub fn new(loaded: LoadedScript) -> ScriptCell {
+        ScriptCell {
+            inner: RwLock::new(Arc::new(loaded)),
+        }
+    }
+
+    /// The current version (cheap: clones the inner `Arc`).
+    pub fn snapshot(&self) -> Arc<LoadedScript> {
+        Arc::clone(&self.inner.read().unwrap())
+    }
+
+    /// Install a new version; its `generation` is forced to the
+    /// predecessor's plus one regardless of what the caller set.
+    pub fn replace(&self, mut loaded: LoadedScript) {
+        let mut slot = self.inner.write().unwrap();
+        loaded.generation = slot.generation + 1;
+        *slot = Arc::new(loaded);
+    }
+}
+
 /// A MiniScript program running behind the [`Env`] trait — the paper's
 /// "Python environment in the toolkit" path (§IV-B).
 pub struct ScriptEnv {
@@ -39,6 +86,13 @@ pub struct ScriptEnv {
     n_actions: usize,
     stream: u64,
     hint: RenderHint,
+    /// Hot-reload handle (runtime-registered scripts only).
+    cell: Option<Arc<ScriptCell>>,
+    /// Generation of `cell` this interpreter was built from.
+    generation: u64,
+    /// Last seed passed to [`Env::seed`], replayed after a hot reload so
+    /// the rebuilt interpreter stays on the env's seeded stream.
+    last_seed: u64,
 }
 
 impl ScriptEnv {
@@ -81,7 +135,45 @@ impl ScriptEnv {
             n_actions,
             stream,
             hint,
+            cell: None,
+            generation: 0,
+            last_seed: 0,
         })
+    }
+
+    /// Attach a hot-reload cell: from now on every `reset()` first checks
+    /// whether the cell holds a newer generation and, if the protocol
+    /// dims still match, rebuilds the interpreter from the new source
+    /// (re-seeded with the last [`Env::seed`] value).  A reload that
+    /// *changed* `obs_dim`/`n_actions` is ignored by live envs — their
+    /// observation buffers are already sized — and only affects envs
+    /// built afterwards.
+    pub fn with_cell(mut self, cell: Arc<ScriptCell>) -> ScriptEnv {
+        self.generation = cell.snapshot().generation;
+        self.cell = Some(cell);
+        self
+    }
+
+    /// Rebuild the interpreter if the attached [`ScriptCell`] moved to a
+    /// newer, shape-compatible generation.  Called on every `reset()`.
+    fn maybe_reload(&mut self) {
+        let Some(cell) = &self.cell else { return };
+        let cur = cell.snapshot();
+        if cur.generation == self.generation {
+            return;
+        }
+        if cur.obs_dim != self.obs_dim || cur.n_actions != self.n_actions {
+            // Shape-incompatible reload: stay on the old program (do not
+            // record the generation, so a later compatible reload is
+            // still picked up).
+            return;
+        }
+        // The cell's contents were validated at registration time, so
+        // this load cannot fail for the same source.
+        self.interp = Interpreter::load(&cur.src)
+            .unwrap_or_else(|e| panic!("{}: hot reload: {e}", self.id));
+        self.interp.seed_with_stream(self.last_seed, self.stream);
+        self.generation = cur.generation;
     }
 
     /// Exercise the env protocol once without panicking: seed, call
@@ -169,10 +261,12 @@ impl Env for ScriptEnv {
     }
 
     fn seed(&mut self, seed: u64) {
+        self.last_seed = seed;
         self.interp.seed_with_stream(seed, self.stream);
     }
 
     fn reset_into(&mut self, obs: &mut [f32]) {
+        self.maybe_reload();
         let v = self
             .interp
             .call("reset", &[])
@@ -376,11 +470,13 @@ def step(action) {
 }
 "#;
 
-// Stream ids matching the native envs (reset-noise parity for equal seeds).
-const CARTPOLE_STREAM: u64 = 0x9e3779b97f4a7c15;
-const MOUNTAINCAR_STREAM: u64 = 0xd3c5b1a49e7f2263;
-const ACROBOT_STREAM: u64 = 0x2545f4914f6cdd1d;
-const PENDULUM_STREAM: u64 = 0x6a09e667f3bcc909;
+// Stream ids matching the native envs (reset-noise parity for equal
+// seeds).  pub(crate): the registry's batch hooks build [`ScriptBatch`]
+// kernels on the same streams.
+pub(crate) const CARTPOLE_STREAM: u64 = 0x9e3779b97f4a7c15;
+pub(crate) const MOUNTAINCAR_STREAM: u64 = 0xd3c5b1a49e7f2263;
+pub(crate) const ACROBOT_STREAM: u64 = 0x2545f4914f6cdd1d;
+pub(crate) const PENDULUM_STREAM: u64 = 0x6a09e667f3bcc909;
 
 /// CartPole on the interpreted runner.
 pub fn cartpole() -> ScriptEnv {
@@ -568,5 +664,65 @@ mod tests {
         let before = env.statements_executed();
         env.step(&Action::Discrete(0));
         assert!(env.statements_executed() > before + 10);
+    }
+
+    fn const_src(v: f64, obs_dim: usize) -> String {
+        let obs = (0..obs_dim)
+            .map(|_| format!("{v:?}"))
+            .collect::<Vec<_>>()
+            .join(", ");
+        format!(
+            "obs_dim = {obs_dim}; n_actions = 2;\n\
+             def reset() {{ return [{obs}]; }}\n\
+             def step(action) {{ return [{obs}, 1.0, 0]; }}\n"
+        )
+    }
+
+    fn loaded(src: &str, obs_dim: usize) -> LoadedScript {
+        LoadedScript {
+            src: src.to_string(),
+            stream: 1,
+            obs_dim,
+            n_actions: 2,
+            program: Arc::new(crate::script::compile::compile_src(src).unwrap()),
+            generation: 0,
+        }
+    }
+
+    #[test]
+    fn hot_reload_rebuilds_on_next_reset() {
+        let src_a = const_src(1.0, 1);
+        let src_b = const_src(2.0, 1);
+        let cell = Arc::new(ScriptCell::new(loaded(&src_a, 1)));
+        let mut env = ScriptEnv::try_load("Script/Reload", &src_a, 1, RenderHint::None)
+            .unwrap()
+            .with_cell(Arc::clone(&cell));
+        env.seed(9);
+        assert_eq!(env.reset(), vec![1.0]);
+        cell.replace(loaded(&src_b, 1));
+        // Mid-episode steps keep running the old program...
+        let mut obs = vec![0.0f32; 1];
+        env.step_into(&Action::Discrete(0), &mut obs);
+        assert_eq!(obs, vec![1.0]);
+        // ...and the next reset() swaps in the new one.
+        assert_eq!(env.reset(), vec![2.0]);
+    }
+
+    #[test]
+    fn shape_incompatible_reload_is_ignored_by_live_envs() {
+        let src_a = const_src(1.0, 1);
+        let src_wide = const_src(3.0, 2);
+        let src_b = const_src(2.0, 1);
+        let cell = Arc::new(ScriptCell::new(loaded(&src_a, 1)));
+        let mut env = ScriptEnv::try_load("Script/Reload", &src_a, 1, RenderHint::None)
+            .unwrap()
+            .with_cell(Arc::clone(&cell));
+        env.seed(0);
+        cell.replace(loaded(&src_wide, 2));
+        // obs_dim changed: the live env stays on its old program.
+        assert_eq!(env.reset(), vec![1.0]);
+        // A later shape-compatible reload is still picked up.
+        cell.replace(loaded(&src_b, 1));
+        assert_eq!(env.reset(), vec![2.0]);
     }
 }

@@ -28,12 +28,31 @@
 //! MiniScript math is f64 (like Python floats) while the native envs use
 //! f32; the cross-runner tests therefore compare trajectories with a
 //! tolerance over bounded horizons.
+//!
+//! Next to the calibrated baseline sits the **bytecode pipeline**: the
+//! same AST lowers to a compact register bytecode ([`compile`]) executed
+//! by a Flash-VM-style virtual machine ([`vm`]) that replays the
+//! tree-walk observably — identical arithmetic, RNG draw order and
+//! error messages (pinned by `rust/tests/script_vm.rs`) — at a fraction
+//! of the dispatch cost (`ablation_dispatch` measures the ratio).  The
+//! batch half ([`batch::ScriptBatch`]) steps N lanes' global columns
+//! under one shared program, which is what makes `Script/*` registry
+//! ids `batch_capable` and lets them fuse into executor lane groups
+//! like the classic-control envs.  The tree-walk stays the *scalar*
+//! registry path (it is the measured Fig.-1/2 baseline); the bytecode
+//! VM serves the fused path and the compiled-vs-interpreted ablation.
 
 pub mod ast;
+pub mod batch;
+pub mod compile;
 pub mod envs;
 pub mod interp;
 pub mod lexer;
 pub mod parser;
+pub mod vm;
 
+pub use batch::ScriptBatch;
+pub use compile::CompiledProgram;
 pub use envs::ScriptEnv;
 pub use interp::{Interpreter, Value};
+pub use vm::{CompiledScriptEnv, Vm};

@@ -1,0 +1,807 @@
+//! Register-bytecode VM for compiled MiniScript.
+//!
+//! Executes [`CompiledProgram`]s produced by
+//! [`crate::script::compile`].  The design follows the in-repo Flash VM
+//! (`rust/src/flash/vm.rs`): a flat instruction array, one `match` per
+//! op, no recursion — calls push a [`CallInfo`] and reuse the same
+//! register vector as a growing window stack.  All mutable state
+//! (registers, globals, RNG) lives outside the shared
+//! `Arc<CompiledProgram>`, which is what lets one compiled program
+//! drive N batch lanes ([`crate::script::batch::ScriptBatch`]).
+//!
+//! **Equivalence contract:** a [`Vm`] is observably identical to
+//! [`Interpreter`](crate::script::interp::Interpreter) on the same
+//! source — same f64 results, same `uniform()` draw order, same error
+//! strings — except that runaway recursion fails gracefully with a
+//! `call depth exceeded` script error where the tree-walk would blow
+//! the host stack.  `rust/tests/script_vm.rs` pins the contract.
+
+use std::sync::Arc;
+
+use crate::core::env::{Env, Transition};
+use crate::core::error::{CairlError, Result};
+use crate::core::rng::Pcg32;
+use crate::core::spaces::{Action, Space};
+use crate::render::{software, Framebuffer};
+use crate::script::compile::{compile_src, Builtin, CompiledProgram, Op, NO_REG};
+use crate::script::envs::RenderHint;
+use crate::script::interp::Value;
+
+/// The interpreter's default RNG stream (matches `Interpreter::load`).
+pub(crate) const DEFAULT_STREAM: u64 = 0xe7037ed1a0b428db;
+
+/// Recursion limit — the tree-walk overflows the host stack somewhere
+/// past this; the VM turns it into a reportable script error instead.
+const MAX_CALL_DEPTH: usize = 10_000;
+
+/// A suspended caller: where to resume and where the result goes.
+#[derive(Clone, Copy)]
+pub(crate) struct CallInfo {
+    ret_pc: usize,
+    ret_dst: u16,
+    base: usize,
+}
+
+/// Reusable execution state: the register window stack and call stack.
+/// Kept outside [`run_function`] so the hot path never allocates after
+/// the first episode.
+#[derive(Default)]
+pub(crate) struct Scratch {
+    regs: Vec<Option<Value>>,
+    calls: Vec<CallInfo>,
+}
+
+#[inline]
+fn get<'a>(regs: &'a [Option<Value>], base: usize, i: u16) -> &'a Value {
+    regs[base + usize::from(i)]
+        .as_ref()
+        .expect("vm: unset register (compiler bug)")
+}
+
+#[inline]
+fn num(regs: &[Option<Value>], base: usize, i: u16) -> Result<f64> {
+    get(regs, base, i).as_num()
+}
+
+/// Run one function (or the top-level code) to completion.
+///
+/// `globals` and `rng` are passed in rather than owned so batch lanes
+/// can swap per-lane state under one shared program; `counter` counts
+/// executed ops (the profiling analogue of the tree-walk's
+/// `steps_executed`).
+pub(crate) fn run_function(
+    p: &CompiledProgram,
+    entry: usize,
+    n_regs: u16,
+    args: &[Value],
+    globals: &mut [Option<Value>],
+    rng: &mut Pcg32,
+    scratch: &mut Scratch,
+    counter: &mut u64,
+) -> Result<Value> {
+    scratch.regs.clear();
+    scratch.calls.clear();
+    for a in args {
+        scratch.regs.push(Some(a.clone()));
+    }
+    scratch.regs.resize(usize::from(n_regs), None);
+    let mut pc = entry;
+    let mut base = 0usize;
+    loop {
+        let op = p.code[pc];
+        pc += 1;
+        *counter += 1;
+        let regs = &mut scratch.regs;
+        match op {
+            Op::Const { dst, idx } => {
+                regs[base + usize::from(dst)] = Some(p.consts[usize::from(idx)].clone());
+            }
+            Op::Move { dst, src } => {
+                let v = regs[base + usize::from(src)].clone();
+                regs[base + usize::from(dst)] = v;
+            }
+            Op::LoadVar { dst, slot, global, name } => {
+                let v = if slot != NO_REG && regs[base + usize::from(slot)].is_some() {
+                    regs[base + usize::from(slot)].clone()
+                } else if global != NO_REG && globals[usize::from(global)].is_some() {
+                    globals[usize::from(global)].clone()
+                } else {
+                    return Err(CairlError::Script(format!(
+                        "undefined variable {:?}",
+                        p.strings[usize::from(name)]
+                    )));
+                };
+                regs[base + usize::from(dst)] = v;
+            }
+            Op::StoreGlobal { idx, src } => {
+                globals[usize::from(idx)] = Some(get(regs, base, src).clone());
+            }
+            Op::AsNum { dst, src } => {
+                let v = num(regs, base, src)?;
+                regs[base + usize::from(dst)] = Some(Value::Num(v));
+            }
+            Op::Add { dst, a, b } => {
+                let v = num(regs, base, a)? + num(regs, base, b)?;
+                regs[base + usize::from(dst)] = Some(Value::Num(v));
+            }
+            Op::Sub { dst, a, b } => {
+                let v = num(regs, base, a)? - num(regs, base, b)?;
+                regs[base + usize::from(dst)] = Some(Value::Num(v));
+            }
+            Op::Mul { dst, a, b } => {
+                let v = num(regs, base, a)? * num(regs, base, b)?;
+                regs[base + usize::from(dst)] = Some(Value::Num(v));
+            }
+            Op::Div { dst, a, b } => {
+                let v = num(regs, base, a)? / num(regs, base, b)?;
+                regs[base + usize::from(dst)] = Some(Value::Num(v));
+            }
+            Op::Mod { dst, a, b } => {
+                let v = num(regs, base, a)?.rem_euclid(num(regs, base, b)?);
+                regs[base + usize::from(dst)] = Some(Value::Num(v));
+            }
+            Op::Eq { dst, a, b } => {
+                let v = num(regs, base, a)? == num(regs, base, b)?;
+                regs[base + usize::from(dst)] = Some(Value::Bool(v));
+            }
+            Op::Ne { dst, a, b } => {
+                let v = num(regs, base, a)? != num(regs, base, b)?;
+                regs[base + usize::from(dst)] = Some(Value::Bool(v));
+            }
+            Op::Lt { dst, a, b } => {
+                let v = num(regs, base, a)? < num(regs, base, b)?;
+                regs[base + usize::from(dst)] = Some(Value::Bool(v));
+            }
+            Op::Le { dst, a, b } => {
+                let v = num(regs, base, a)? <= num(regs, base, b)?;
+                regs[base + usize::from(dst)] = Some(Value::Bool(v));
+            }
+            Op::Gt { dst, a, b } => {
+                let v = num(regs, base, a)? > num(regs, base, b)?;
+                regs[base + usize::from(dst)] = Some(Value::Bool(v));
+            }
+            Op::Ge { dst, a, b } => {
+                let v = num(regs, base, a)? >= num(regs, base, b)?;
+                regs[base + usize::from(dst)] = Some(Value::Bool(v));
+            }
+            Op::Neg { dst, src } => {
+                let v = num(regs, base, src)?;
+                regs[base + usize::from(dst)] = Some(Value::Num(-v));
+            }
+            Op::Not { dst, src } => {
+                let v = !get(regs, base, src).truthy();
+                regs[base + usize::from(dst)] = Some(Value::Bool(v));
+            }
+            Op::Truthy { dst, src } => {
+                let v = get(regs, base, src).truthy();
+                regs[base + usize::from(dst)] = Some(Value::Bool(v));
+            }
+            Op::Jmp(to) => {
+                pc = to as usize;
+            }
+            Op::JmpIfFalse { cond, to } => {
+                if !get(regs, base, cond).truthy() {
+                    pc = to as usize;
+                }
+            }
+            Op::JmpIfTrue { cond, to } => {
+                if get(regs, base, cond).truthy() {
+                    pc = to as usize;
+                }
+            }
+            Op::MakeList { dst, start, n } => {
+                let items: Vec<Value> = (0..usize::from(n))
+                    .map(|i| get(regs, base, start + i as u16).clone())
+                    .collect();
+                regs[base + usize::from(dst)] = Some(Value::list(items));
+            }
+            Op::IndexGet { dst, xs, idx } => {
+                // Interpreter order: numeric conversion of the index,
+                // then the list-type check, then bounds.
+                let i = num(regs, base, idx)? as usize;
+                let v = match get(regs, base, xs) {
+                    Value::List(items) => {
+                        let items = items.lock().unwrap();
+                        items.get(i).cloned().ok_or_else(|| {
+                            CairlError::Script(format!(
+                                "index {i} out of range (len {})",
+                                items.len()
+                            ))
+                        })?
+                    }
+                    other => {
+                        return Err(CairlError::Script(format!("cannot index into {other:?}")))
+                    }
+                };
+                regs[base + usize::from(dst)] = Some(v);
+            }
+            Op::IndexSet { xs, idx, src } => {
+                let i = num(regs, base, idx)? as usize;
+                let v = get(regs, base, src).clone();
+                match get(regs, base, xs) {
+                    Value::List(items) => {
+                        let mut items = items.lock().unwrap();
+                        if i >= items.len() {
+                            return Err(CairlError::Script(format!(
+                                "index {i} out of range (len {})",
+                                items.len()
+                            )));
+                        }
+                        items[i] = v;
+                    }
+                    other => {
+                        return Err(CairlError::Script(format!("cannot index into {other:?}")))
+                    }
+                }
+            }
+            Op::CallBuiltin { dst, builtin, start, argc } => {
+                let args = &regs[base + usize::from(start)..base + usize::from(start + argc)];
+                let v = builtin_call(builtin, args, rng)?;
+                regs[base + usize::from(dst)] = Some(v);
+            }
+            Op::CallFn { dst, func, start, argc } => {
+                if scratch.calls.len() >= MAX_CALL_DEPTH {
+                    return Err(CairlError::Script("call depth exceeded".into()));
+                }
+                let f = &p.funcs[usize::from(func)];
+                scratch.calls.push(CallInfo { ret_pc: pc, ret_dst: dst, base });
+                let new_base = regs.len();
+                for i in 0..usize::from(argc) {
+                    let v = regs[base + usize::from(start) + i].clone();
+                    regs.push(v);
+                }
+                regs.resize(new_base + usize::from(f.n_regs), None);
+                base = new_base;
+                pc = f.entry as usize;
+            }
+            Op::Return { src } => {
+                let v = regs[base + usize::from(src)]
+                    .take()
+                    .expect("vm: unset register (compiler bug)");
+                match scratch.calls.pop() {
+                    None => return Ok(v),
+                    Some(ci) => {
+                        regs.truncate(base);
+                        base = ci.base;
+                        pc = ci.ret_pc;
+                        regs[base + usize::from(ci.ret_dst)] = Some(v);
+                    }
+                }
+            }
+            Op::ReturnNone => match scratch.calls.pop() {
+                None => return Ok(Value::None),
+                Some(ci) => {
+                    regs.truncate(base);
+                    base = ci.base;
+                    pc = ci.ret_pc;
+                    regs[base + usize::from(ci.ret_dst)] = Some(Value::None);
+                }
+            },
+            Op::Trap { msg } => {
+                return Err(CairlError::Script(p.strings[usize::from(msg)].clone()));
+            }
+        }
+    }
+}
+
+/// Builtin dispatch — formula-for-formula the tree-walk's `builtin`,
+/// including argument conversion order (error parity) and the single
+/// `uniform()` RNG draw.
+fn builtin_call(b: Builtin, args: &[Option<Value>], rng: &mut Pcg32) -> Result<Value> {
+    let arg = |i: usize| -> &Value {
+        args[i].as_ref().expect("vm: unset argument register")
+    };
+    let num = |i: usize| -> Result<f64> { arg(i).as_num() };
+    Ok(match b {
+        Builtin::Cos => Value::Num(num(0)?.cos()),
+        Builtin::Sin => Value::Num(num(0)?.sin()),
+        Builtin::Tan => Value::Num(num(0)?.tan()),
+        Builtin::Sqrt => Value::Num(num(0)?.sqrt()),
+        Builtin::Exp => Value::Num(num(0)?.exp()),
+        Builtin::Ln => Value::Num(num(0)?.ln()),
+        Builtin::Abs => Value::Num(num(0)?.abs()),
+        Builtin::Floor => Value::Num(num(0)?.floor()),
+        Builtin::Ceil => Value::Num(num(0)?.ceil()),
+        Builtin::Sign => Value::Num(num(0)?.signum()),
+        Builtin::Pow => Value::Num(num(0)?.powf(num(1)?)),
+        Builtin::Min => Value::Num(num(0)?.min(num(1)?)),
+        Builtin::Max => Value::Num(num(0)?.max(num(1)?)),
+        Builtin::Clamp => Value::Num(num(0)?.max(num(1)?).min(num(2)?)),
+        Builtin::Pi => Value::Num(std::f64::consts::PI),
+        Builtin::Uniform => {
+            let lo = num(0)?;
+            let hi = num(1)?;
+            Value::Num(lo + (hi - lo) * rng.next_f64())
+        }
+        Builtin::Len => match arg(0) {
+            Value::List(xs) => Value::Num(xs.lock().unwrap().len() as f64),
+            other => return Err(CairlError::Script(format!("len of {other:?}"))),
+        },
+        Builtin::Push => match arg(0) {
+            Value::List(xs) => {
+                let v = arg(1).clone();
+                xs.lock().unwrap().push(v);
+                Value::None
+            }
+            other => return Err(CairlError::Script(format!("push to {other:?}"))),
+        },
+        Builtin::Zeros => {
+            let n = num(0)? as usize;
+            Value::list(vec![Value::Num(0.0); n])
+        }
+    })
+}
+
+/// A loaded bytecode program with its global state — the compiled
+/// counterpart of [`Interpreter`](crate::script::interp::Interpreter),
+/// API-compatible where it matters (`load` / `seed` /
+/// `seed_with_stream` / `global` / `call`).
+pub struct Vm {
+    program: Arc<CompiledProgram>,
+    globals: Vec<Option<Value>>,
+    rng: Pcg32,
+    /// Total bytecode ops executed (profiling; the compiled analogue of
+    /// the tree-walk's `steps_executed`).
+    pub ops_executed: u64,
+    scratch: Scratch,
+}
+
+impl Vm {
+    /// Compile `src` and run its top-level statements (builds globals).
+    pub fn load(src: &str) -> Result<Vm> {
+        Vm::with_program(Arc::new(compile_src(src)?))
+    }
+
+    /// Instantiate a VM over an already-compiled (shared) program and
+    /// run its top-level statements.
+    pub fn with_program(program: Arc<CompiledProgram>) -> Result<Vm> {
+        let mut vm = Vm {
+            globals: vec![None; program.global_names.len()],
+            program,
+            rng: Pcg32::new(0, DEFAULT_STREAM),
+            ops_executed: 0,
+            scratch: Scratch::default(),
+        };
+        let program = Arc::clone(&vm.program);
+        run_function(
+            &program,
+            program.top_entry as usize,
+            program.top_regs,
+            &[],
+            &mut vm.globals,
+            &mut vm.rng,
+            &mut vm.scratch,
+            &mut vm.ops_executed,
+        )?;
+        Ok(vm)
+    }
+
+    /// The shared compiled program.
+    pub fn program(&self) -> &Arc<CompiledProgram> {
+        &self.program
+    }
+
+    /// Re-seed the `uniform()` builtin (default stream).
+    pub fn seed(&mut self, seed: u64) {
+        self.rng = Pcg32::new(seed, DEFAULT_STREAM);
+    }
+
+    /// Re-seed with an explicit PCG stream id — same contract as
+    /// [`Interpreter::seed_with_stream`](crate::script::interp::Interpreter::seed_with_stream).
+    pub fn seed_with_stream(&mut self, seed: u64, stream: u64) {
+        self.rng = Pcg32::new(seed, stream);
+    }
+
+    /// Read a global variable.
+    pub fn global(&self, name: &str) -> Option<&Value> {
+        let idx = *self.program.global_map.get(name)?;
+        self.globals[usize::from(idx)].as_ref()
+    }
+
+    /// Resolve a function name to its table index (for repeated calls
+    /// without the map probe).
+    pub fn func_index(&self, name: &str) -> Option<u16> {
+        self.program.func_map.get(name).copied()
+    }
+
+    /// Call a script function by name.
+    pub fn call(&mut self, name: &str, args: &[Value]) -> Result<Value> {
+        let idx = self
+            .func_index(name)
+            .ok_or_else(|| CairlError::Script(format!("no function {name:?}")))?;
+        self.call_index(idx, args)
+    }
+
+    /// Call a script function by table index.
+    pub fn call_index(&mut self, idx: u16, args: &[Value]) -> Result<Value> {
+        let program = Arc::clone(&self.program);
+        let Vm { globals, rng, scratch, ops_executed, .. } = self;
+        let f = &program.funcs[usize::from(idx)];
+        if usize::from(f.n_params) != args.len() {
+            return Err(CairlError::Script(format!(
+                "{}() takes {} args, got {}",
+                f.name,
+                f.n_params,
+                args.len()
+            )));
+        }
+        run_function(
+            &program,
+            f.entry as usize,
+            f.n_regs,
+            args,
+            globals,
+            rng,
+            scratch,
+            ops_executed,
+        )
+    }
+
+    /// Call with externally-held globals and RNG — the batch-lane path:
+    /// one VM (program + scratch) steps many lanes' state columns.
+    pub(crate) fn call_index_with(
+        &mut self,
+        idx: u16,
+        args: &[Value],
+        globals: &mut [Option<Value>],
+        rng: &mut Pcg32,
+    ) -> Result<Value> {
+        let program = Arc::clone(&self.program);
+        let Vm { scratch, ops_executed, .. } = self;
+        let f = &program.funcs[usize::from(idx)];
+        if usize::from(f.n_params) != args.len() {
+            return Err(CairlError::Script(format!(
+                "{}() takes {} args, got {}",
+                f.name,
+                f.n_params,
+                args.len()
+            )));
+        }
+        run_function(
+            &program,
+            f.entry as usize,
+            f.n_regs,
+            args,
+            globals,
+            rng,
+            scratch,
+            ops_executed,
+        )
+    }
+
+    /// The VM's own global column (template for batch lanes).
+    pub(crate) fn globals_snapshot(&self) -> &[Option<Value>] {
+        &self.globals
+    }
+}
+
+/// A MiniScript program compiled to bytecode, behind the [`Env`] trait
+/// — drop-in for [`ScriptEnv`](crate::script::envs::ScriptEnv) with the
+/// same script protocol, error strings, and (given equal seeds)
+/// bit-identical trajectories.
+pub struct CompiledScriptEnv {
+    id: String,
+    vm: Vm,
+    obs_dim: usize,
+    n_actions: usize,
+    stream: u64,
+    reset_f: Option<u16>,
+    step_f: Option<u16>,
+    hint: RenderHint,
+}
+
+impl CompiledScriptEnv {
+    /// Compile and load a script (see
+    /// [`ScriptEnv::try_load`](crate::script::envs::ScriptEnv::try_load)
+    /// for the contract; errors carry the same messages).
+    pub fn try_load(
+        id: &str,
+        src: &str,
+        stream: u64,
+        hint: RenderHint,
+    ) -> Result<CompiledScriptEnv> {
+        let vm =
+            Vm::load(src).map_err(|e| CairlError::Script(format!("script env {id}: {e}")))?;
+        CompiledScriptEnv::from_vm(id, vm, stream, hint)
+    }
+
+    /// Load from an already-compiled (shared) program — the batch /
+    /// registry path, compiling once per spec rather than per lane.
+    pub fn from_program(
+        id: &str,
+        program: Arc<CompiledProgram>,
+        stream: u64,
+        hint: RenderHint,
+    ) -> Result<CompiledScriptEnv> {
+        let vm = Vm::with_program(program)
+            .map_err(|e| CairlError::Script(format!("script env {id}: {e}")))?;
+        CompiledScriptEnv::from_vm(id, vm, stream, hint)
+    }
+
+    fn from_vm(id: &str, vm: Vm, stream: u64, hint: RenderHint) -> Result<CompiledScriptEnv> {
+        let read_dim = |name: &str| -> Result<usize> {
+            let value = vm.global(name).and_then(|v| v.as_num().ok()).ok_or_else(|| {
+                CairlError::Script(format!("script env {id}: missing {name} global"))
+            })?;
+            if value < 1.0 {
+                return Err(CairlError::Script(format!(
+                    "script env {id}: {name} must be >= 1, got {value}"
+                )));
+            }
+            Ok(value as usize)
+        };
+        let obs_dim = read_dim("obs_dim")?;
+        let n_actions = read_dim("n_actions")?;
+        let reset_f = vm.func_index("reset");
+        let step_f = vm.func_index("step");
+        Ok(CompiledScriptEnv {
+            id: id.to_string(),
+            vm,
+            obs_dim,
+            n_actions,
+            stream,
+            reset_f,
+            step_f,
+            hint,
+        })
+    }
+
+    /// Registration-time validation: seed, `reset()`, `step(0)`, shape
+    /// checks — mirrors
+    /// [`ScriptEnv::probe`](crate::script::envs::ScriptEnv::probe).
+    pub fn probe(&mut self) -> Result<()> {
+        self.vm.seed_with_stream(0, self.stream);
+        let v = self.vm.call("reset", &[])?;
+        self.expect_list(&v, self.obs_dim, "reset()")?;
+        let v = self.vm.call("step", &[Value::Num(0.0)])?;
+        self.expect_list(&v, self.obs_dim + 2, "step(action)")?;
+        Ok(())
+    }
+
+    fn expect_list(&self, v: &Value, want: usize, ctx: &str) -> Result<()> {
+        match v {
+            Value::List(xs) => {
+                let n = xs.lock().unwrap().len();
+                if n == want {
+                    Ok(())
+                } else {
+                    Err(CairlError::Script(format!(
+                        "{}: {ctx} returned {n} values, wanted {want}",
+                        self.id
+                    )))
+                }
+            }
+            other => Err(CairlError::Script(format!(
+                "{}: {ctx} returned {other:?}, wanted a list",
+                self.id
+            ))),
+        }
+    }
+
+    /// Bytecode ops executed so far (profiling).
+    pub fn ops_executed(&self) -> u64 {
+        self.vm.ops_executed
+    }
+
+    fn global_f32(&self, name: &str) -> f32 {
+        self.vm.global(name).and_then(|v| v.as_num().ok()).unwrap_or(0.0) as f32
+    }
+
+    fn unpack_list(&self, v: Value, want: usize, ctx: &str) -> Vec<f32> {
+        match v {
+            Value::List(xs) => {
+                let xs = xs.lock().unwrap();
+                assert_eq!(
+                    xs.len(),
+                    want,
+                    "{}: {ctx} returned {} values, wanted {want}",
+                    self.id,
+                    xs.len()
+                );
+                xs.iter().map(|v| v.as_num().unwrap_or(f64::NAN) as f32).collect()
+            }
+            other => panic!("{}: {ctx} returned {other:?}, wanted a list", self.id),
+        }
+    }
+
+    fn call_protocol(&mut self, f: Option<u16>, name: &str, args: &[Value]) -> Result<Value> {
+        match f {
+            Some(idx) => self.vm.call_index(idx, args),
+            None => Err(CairlError::Script(format!("no function {name:?}"))),
+        }
+    }
+}
+
+impl Env for CompiledScriptEnv {
+    fn id(&self) -> String {
+        self.id.clone()
+    }
+
+    fn observation_space(&self) -> Space {
+        Space::box1(vec![f32::MIN; self.obs_dim], vec![f32::MAX; self.obs_dim])
+    }
+
+    fn action_space(&self) -> Space {
+        Space::Discrete { n: self.n_actions }
+    }
+
+    fn obs_dim(&self) -> usize {
+        self.obs_dim
+    }
+
+    fn seed(&mut self, seed: u64) {
+        self.vm.seed_with_stream(seed, self.stream);
+    }
+
+    fn reset_into(&mut self, obs: &mut [f32]) {
+        let v = self
+            .call_protocol(self.reset_f, "reset", &[])
+            .unwrap_or_else(|e| panic!("{}: reset(): {e}", self.id));
+        let vals = self.unpack_list(v, self.obs_dim, "reset()");
+        obs.copy_from_slice(&vals);
+    }
+
+    fn step_into(&mut self, action: &Action, obs: &mut [f32]) -> Transition {
+        let v = self
+            .call_protocol(self.step_f, "step", &[Value::Num(action.index() as f64)])
+            .unwrap_or_else(|e| panic!("{}: step(): {e}", self.id));
+        let vals = self.unpack_list(v, self.obs_dim + 2, "step()");
+        obs.copy_from_slice(&vals[..self.obs_dim]);
+        Transition {
+            reward: vals[self.obs_dim],
+            done: vals[self.obs_dim + 1] != 0.0,
+            truncated: false,
+        }
+    }
+
+    fn render(&self, fb: &mut Framebuffer) {
+        match self.hint {
+            RenderHint::CartPole => {
+                software::paint_cartpole(fb, self.global_f32("x"), self.global_f32("th"))
+            }
+            RenderHint::MountainCar => {
+                software::paint_mountaincar(fb, self.global_f32("pos"), self.global_f32("vel"))
+            }
+            RenderHint::Acrobot => {
+                software::paint_acrobot(fb, self.global_f32("t1"), self.global_f32("t2"))
+            }
+            RenderHint::Pendulum => software::paint_pendulum(fb, self.global_f32("th")),
+            RenderHint::None => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::script::interp::Interpreter;
+
+    fn run(src: &str, func: &str, args: &[Value]) -> Value {
+        let mut vm = Vm::load(src).unwrap();
+        vm.call(func, args).unwrap()
+    }
+
+    #[test]
+    fn arithmetic_and_return() {
+        let v = run(
+            "def f(a, b) { return a * 10 + b; }",
+            "f",
+            &[Value::Num(4.0), Value::Num(2.0)],
+        );
+        assert_eq!(v.as_num().unwrap(), 42.0);
+    }
+
+    #[test]
+    fn globals_persist_between_calls() {
+        let src = "count = 0; def bump() { global count; count = count + 1; return count; }";
+        let mut vm = Vm::load(src).unwrap();
+        assert_eq!(vm.call("bump", &[]).unwrap().as_num().unwrap(), 1.0);
+        assert_eq!(vm.call("bump", &[]).unwrap().as_num().unwrap(), 2.0);
+        assert_eq!(vm.global("count").unwrap().as_num().unwrap(), 2.0);
+    }
+
+    #[test]
+    fn locals_do_not_leak_without_global() {
+        let src = "x = 5; def f() { x = 10; return x; } def g() { return x; }";
+        let mut vm = Vm::load(src).unwrap();
+        assert_eq!(vm.call("f", &[]).unwrap().as_num().unwrap(), 10.0);
+        assert_eq!(vm.call("g", &[]).unwrap().as_num().unwrap(), 5.0);
+    }
+
+    #[test]
+    fn while_loop_with_break_continue() {
+        let src = "def f() { s = 0; i = 0; while (true) { i += 1; if (i > 10) { break; } \
+                   if (i % 2 == 0) { continue; } s += i; } return s; }";
+        assert_eq!(run(src, "f", &[]).as_num().unwrap(), 25.0);
+    }
+
+    #[test]
+    fn for_loop_sums() {
+        let v = run("def f() { s = 0; for i = 0, 10 { s += i; } return s; }", "f", &[]);
+        assert_eq!(v.as_num().unwrap(), 45.0);
+    }
+
+    #[test]
+    fn lists_index_and_mutate() {
+        let src = "def f() { xs = zeros(3); xs[1] = 7; push(xs, 9); \
+                   return xs[1] + xs[3] + len(xs); }";
+        assert_eq!(run(src, "f", &[]).as_num().unwrap(), 20.0);
+    }
+
+    #[test]
+    fn recursion_works() {
+        let src = "def fib(n) { if (n < 2) { return n; } return fib(n - 1) + fib(n - 2); }";
+        assert_eq!(run(src, "fib", &[Value::Num(10.0)]).as_num().unwrap(), 55.0);
+    }
+
+    #[test]
+    fn short_circuit_skips_rhs() {
+        let src = "def f() { x = 0; if (x != 0 and 1 / x > 0) { return 1; } return 0; }";
+        assert_eq!(run(src, "f", &[]).as_num().unwrap(), 0.0);
+    }
+
+    #[test]
+    fn uniform_draws_match_the_tree_walk_bit_for_bit() {
+        let src = "def f() { return uniform(-1, 1); }";
+        let mut interp = Interpreter::load(src).unwrap();
+        let mut vm = Vm::load(src).unwrap();
+        interp.seed(42);
+        vm.seed(42);
+        for _ in 0..32 {
+            let a = interp.call("f", &[]).unwrap().as_num().unwrap();
+            let b = vm.call("f", &[]).unwrap().as_num().unwrap();
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn error_messages_match_the_tree_walk() {
+        for (src, call) in [
+            ("def f() { return missing; }", "f"),
+            ("def f() { xs = zeros(2); return xs[5]; }", "f"),
+            ("def f() { return len(1); }", "f"),
+            ("def f() { return 1 + [1]; }", "f"),
+            ("def g() { return 0; } def f() { return g(1); }", "f"),
+            ("def f() { return nope(); }", "f"),
+        ] {
+            let te = Interpreter::load(src).unwrap().call(call, &[]).unwrap_err();
+            let ve = Vm::load(src).unwrap().call(call, &[]).unwrap_err();
+            assert_eq!(te.to_string(), ve.to_string(), "source: {src}");
+        }
+    }
+
+    #[test]
+    fn deep_recursion_errors_instead_of_overflowing() {
+        let src = "def f(n) { return f(n + 1); }";
+        let err = Vm::load(src).unwrap().call("f", &[Value::Num(0.0)]).unwrap_err();
+        assert!(err.to_string().contains("call depth exceeded"));
+    }
+
+    #[test]
+    fn compiled_cartpole_matches_tree_walk_bitwise() {
+        use crate::script::envs::{cartpole, CARTPOLE_SRC};
+        let mut tree = cartpole();
+        let mut comp = CompiledScriptEnv::try_load(
+            "Script/CartPole-v1",
+            CARTPOLE_SRC,
+            0x9e3779b97f4a7c15,
+            RenderHint::CartPole,
+        )
+        .unwrap();
+        comp.probe().unwrap();
+        tree.seed(123);
+        comp.seed(123);
+        let mut ot = vec![0.0f32; 4];
+        let mut oc = vec![0.0f32; 4];
+        tree.reset_into(&mut ot);
+        comp.reset_into(&mut oc);
+        assert_eq!(ot, oc);
+        for step in 0..200 {
+            let a = Action::Discrete(step % 2);
+            let tt = tree.step_into(&a, &mut ot);
+            let tc = comp.step_into(&a, &mut oc);
+            assert_eq!(ot, oc, "step {step}");
+            assert_eq!(tt, tc, "step {step}");
+        }
+    }
+}

@@ -52,7 +52,7 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::experiment::SteppingResult;
 use crate::coordinator::pool::{BatchedExecutor, LaneSpec, RandomRollout, RolloutCounts};
-use crate::coordinator::registry::{self, MixtureSpec};
+use crate::coordinator::registry::{self, MixtureEntry, MixtureSpec};
 use crate::core::env::Transition;
 use crate::core::error::{CairlError, Result};
 use crate::core::rng::Pcg32;
@@ -60,6 +60,7 @@ use crate::core::spaces::Action;
 use crate::shard::net::{FramedStream, ShardAddr};
 use crate::shard::plan::{calibrate_costs, ShardAssignment, ShardPlan};
 use crate::shard::proto::{next_seq, Msg, MsgRef, SEQ_NONE};
+use crate::wrappers::WrapperSpec;
 
 /// Hard ceiling on the pipeline depth: unread replies live in OS socket
 /// buffers, so the in-flight window must stay small enough that `depth
@@ -81,6 +82,10 @@ pub struct ConnectOptions {
     /// How many times to retry a `Hello` answered with `Busy` before
     /// giving up with [`CairlError::Unavailable`].
     pub busy_retries: u32,
+    /// Pool-level wrapper chain forwarded in the `Hello` `wrap` field
+    /// (`--wrap` grammar; `""` defers to the daemon's configured
+    /// default).  The chain applies to every hosted lane server-side.
+    pub wrap: String,
 }
 
 impl Default for ConnectOptions {
@@ -89,6 +94,7 @@ impl Default for ConnectOptions {
             pipeline: 1,
             token: String::new(),
             busy_retries: 4,
+            wrap: String::new(),
         }
     }
 }
@@ -143,6 +149,7 @@ impl ShardClient {
                     first_lane: first_lane as u64,
                     pipeline: opts.pipeline,
                     token: &opts.token,
+                    wrap: &opts.wrap,
                 },
             )?;
             seq_last = seq;
@@ -341,12 +348,12 @@ pub fn shard_status(addr: &str, token: &str) -> Result<String> {
 /// Flatten an env spec into mixture entries (a bare id contributes
 /// `lanes` copies, mirroring
 /// [`build_executor`](crate::coordinator::experiment::build_executor)).
-fn entries_for(env_spec: &str, lanes: usize) -> Result<Vec<(String, usize)>> {
+fn entries_for(env_spec: &str, lanes: usize) -> Result<Vec<MixtureEntry>> {
     if MixtureSpec::is_mixture(env_spec) {
         Ok(MixtureSpec::parse(env_spec)?.entries().to_vec())
     } else {
         registry::validate(env_spec)?;
-        Ok(vec![(env_spec.to_string(), lanes.max(1))])
+        Ok(vec![MixtureEntry::bare(env_spec, lanes.max(1))])
     }
 }
 
@@ -394,6 +401,11 @@ pub struct ShardPoolOptions {
     /// `Busy` retries per handshake before
     /// [`CairlError::Unavailable`].
     pub busy_retries: u32,
+    /// Pool-level wrapper chain applied server-side to every lane
+    /// (`--wrap` grammar, e.g. `"TimeLimit(200),NormalizeObs"`; `""`
+    /// defers to each daemon's configured default).  Forwarded verbatim
+    /// in the `Hello` `wrap` field, including on failover re-dials.
+    pub wrap: String,
     /// Per-id step costs for placement; `None` runs a calibration
     /// rollout at connect time ([`calibrate_costs`]).
     pub costs: Option<BTreeMap<String, f64>>,
@@ -409,6 +421,7 @@ impl Default for ShardPoolOptions {
             pipeline: 1,
             token: String::new(),
             busy_retries: 4,
+            wrap: String::new(),
             costs: None,
             failover: FailoverConfig::default(),
         }
@@ -526,6 +539,7 @@ pub struct ShardedEnvPool {
     depth: usize,
     token: String,
     busy_retries: u32,
+    wrap: String,
     failover: FailoverConfig,
     /// Replay log since connect; the failover source of truth.
     history: Vec<ReplayOp>,
@@ -589,6 +603,9 @@ impl ShardedEnvPool {
         opts: ShardPoolOptions,
     ) -> Result<ShardedEnvPool> {
         let entries = entries_for(env_spec, opts.lanes)?;
+        // Fail fast on a malformed chain instead of letting every
+        // daemon reject the handshake one by one.
+        WrapperSpec::parse_chain(&opts.wrap)?;
         let costs = match &opts.costs {
             Some(costs) => costs.clone(),
             None => calibrate_costs(&entries)?,
@@ -598,7 +615,7 @@ impl ShardedEnvPool {
 
     fn connect_planned(
         addrs: &[String],
-        entries: &[(String, usize)],
+        entries: &[MixtureEntry],
         costs: &BTreeMap<String, f64>,
         opts: ShardPoolOptions,
     ) -> Result<ShardedEnvPool> {
@@ -613,6 +630,7 @@ impl ShardedEnvPool {
             pipeline: depth as u32,
             token: opts.token.clone(),
             busy_retries: opts.busy_retries,
+            wrap: opts.wrap.clone(),
         };
         let mut clients = Vec::with_capacity(addrs.len());
         for (addr, assignment) in addrs.iter().zip(plan.assignments()) {
@@ -665,6 +683,7 @@ impl ShardedEnvPool {
             depth,
             token: opts.token,
             busy_retries: opts.busy_retries,
+            wrap: opts.wrap,
             failover: opts.failover,
             history: Vec::new(),
             ops_sent: vec![0; shards],
@@ -805,6 +824,7 @@ impl ShardedEnvPool {
             pipeline: self.depth as u32,
             token: self.token.clone(),
             busy_retries: self.busy_retries,
+            wrap: self.wrap.clone(),
         };
         let mut client =
             ShardClient::connect_with(addr, &a.spec(), self.base_seed, a.first_lane, &conn_opts)?;

@@ -22,9 +22,10 @@
 use std::collections::BTreeMap;
 use std::time::Instant;
 
-use crate::coordinator::registry;
+use crate::coordinator::registry::{self, MixtureEntry};
 use crate::core::error::{CairlError, Result};
 use crate::core::rng::Pcg32;
+use crate::wrappers::apply_wrappers;
 
 /// Steps timed per distinct component id by [`calibrate_costs`] — small
 /// enough to be invisible at connect time, large enough to average out
@@ -34,8 +35,9 @@ pub const CALIBRATION_STEPS: u64 = 128;
 /// One shard's slice of the global lane list.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ShardAssignment {
-    /// Sub-mixture hosted by this shard, in lane order.
-    pub entries: Vec<(String, usize)>,
+    /// Sub-mixture hosted by this shard, in lane order (component
+    /// wrapper chains included).
+    pub entries: Vec<MixtureEntry>,
     /// First global lane index of the slice.
     pub first_lane: usize,
     /// Number of lanes on this shard.
@@ -45,12 +47,14 @@ pub struct ShardAssignment {
 }
 
 impl ShardAssignment {
-    /// Render the sub-mixture as a spec string (`"id:count,..."`) — the
-    /// `Hello` payload the client sends this shard.
+    /// Render the sub-mixture as a spec string (`"id[+chain]:count,..."`)
+    /// — the `Hello` payload the client sends this shard.  Component
+    /// wrapper chains ride along in the label, so the daemon rebuilds
+    /// exactly the lane groups a local pool would.
     pub fn spec(&self) -> String {
         self.entries
             .iter()
-            .map(|(id, count)| format!("{id}:{count}"))
+            .map(|e| format!("{}:{}", e.label(), e.count))
             .collect::<Vec<_>>()
             .join(",")
     }
@@ -64,18 +68,18 @@ pub struct ShardPlan {
 }
 
 impl ShardPlan {
-    /// Plan `entries` (the flattened `(id, lanes)` mixture, spec order)
-    /// across `shards` shards using per-id step `costs` (seconds per
-    /// step, or any consistent unit; ids missing from the map count
-    /// 1.0).  Boundaries fall where cumulative cost crosses each
-    /// shard's fair share of the total, clamped so every shard gets at
-    /// least one lane.
+    /// Plan `entries` (the flattened mixture components, spec order)
+    /// across `shards` shards using per-component step `costs` (keyed
+    /// by [`MixtureEntry::label`]; seconds per step, or any consistent
+    /// unit; labels missing from the map count 1.0).  Boundaries fall
+    /// where cumulative cost crosses each shard's fair share of the
+    /// total, clamped so every shard gets at least one lane.
     pub fn plan(
-        entries: &[(String, usize)],
+        entries: &[MixtureEntry],
         shards: usize,
         costs: &BTreeMap<String, f64>,
     ) -> Result<ShardPlan> {
-        let n: usize = entries.iter().map(|(_, count)| count).sum();
+        let n: usize = entries.iter().map(|e| e.count).sum();
         if shards == 0 {
             return Err(CairlError::Config("a shard plan needs at least one shard".into()));
         }
@@ -90,9 +94,9 @@ impl ShardPlan {
 
         // Per-lane cost in lane order; prefix[i] = cost of lanes [0, i).
         let mut lane_cost = Vec::with_capacity(n);
-        for (id, count) in entries {
-            let c = costs.get(id).copied().unwrap_or(1.0).max(1e-12);
-            lane_cost.extend(std::iter::repeat(c).take(*count));
+        for entry in entries {
+            let c = costs.get(&entry.label()).copied().unwrap_or(1.0).max(1e-12);
+            lane_cost.extend(std::iter::repeat(c).take(entry.count));
         }
         let mut prefix = Vec::with_capacity(n + 1);
         let mut acc = 0.0f64;
@@ -130,15 +134,19 @@ impl ShardPlan {
         for s in 0..shards {
             let (start, end) = (cuts[s], cuts[s + 1]);
             let mut remaining = end - start;
-            let mut sub: Vec<(String, usize)> = Vec::new();
+            let mut sub: Vec<MixtureEntry> = Vec::new();
             while remaining > 0 {
-                let (id, count) = &entries[component];
-                let available = count - used;
+                let entry = &entries[component];
+                let available = entry.count - used;
                 let take = available.min(remaining);
-                sub.push((id.clone(), take));
+                sub.push(MixtureEntry {
+                    spec: entry.spec.clone(),
+                    count: take,
+                    wrappers: entry.wrappers.clone(),
+                });
                 used += take;
                 remaining -= take;
-                if used == *count {
+                if used == entry.count {
                     component += 1;
                     used = 0;
                 }
@@ -182,18 +190,21 @@ impl ShardPlan {
     }
 }
 
-/// Measure per-step wall-clock cost for every distinct component id: one
-/// env per id, seeded and reset, [`CALIBRATION_STEPS`] uniform-random
-/// steps timed.  Wall-clock is inherently noisy — the plan built on it
-/// is best-effort load balancing, while correctness (bit-determinism)
-/// never depends on where a lane landed.
-pub fn calibrate_costs(entries: &[(String, usize)]) -> Result<BTreeMap<String, f64>> {
+/// Measure per-step wall-clock cost for every distinct component
+/// (keyed by [`MixtureEntry::label`], so a wrapped variant is costed
+/// with its chain applied): one env per label, seeded and reset,
+/// [`CALIBRATION_STEPS`] uniform-random steps timed.  Wall-clock is
+/// inherently noisy — the plan built on it is best-effort load
+/// balancing, while correctness (bit-determinism) never depends on
+/// where a lane landed.
+pub fn calibrate_costs(entries: &[MixtureEntry]) -> Result<BTreeMap<String, f64>> {
     let mut costs = BTreeMap::new();
-    for (id, _) in entries {
-        if costs.contains_key(id) {
+    for entry in entries {
+        let id = entry.label();
+        if costs.contains_key(&id) {
             continue;
         }
-        let mut env = registry::make(id)?;
+        let mut env = apply_wrappers(registry::make(&entry.spec)?, &entry.wrappers);
         let space = env.action_space();
         let mut obs = vec![0.0f32; env.obs_dim()];
         let mut rng = Pcg32::new(0xca11b, 17);
@@ -221,8 +232,8 @@ mod tests {
         pairs.iter().map(|(id, c)| (id.to_string(), *c)).collect()
     }
 
-    fn entries(pairs: &[(&str, usize)]) -> Vec<(String, usize)> {
-        pairs.iter().map(|(id, n)| (id.to_string(), *n)).collect()
+    fn entries(pairs: &[(&str, usize)]) -> Vec<MixtureEntry> {
+        pairs.iter().map(|(id, n)| MixtureEntry::bare(id, *n)).collect()
     }
 
     #[test]

@@ -53,7 +53,7 @@ use crate::core::spaces::{Action, Space};
 /// version byte differs is rejected at decode — there is no negotiation
 /// (both halves ship in one binary; see `docs/shard-protocol.md` for
 /// the compatibility story).
-pub const PROTO_VERSION: u8 = 2;
+pub const PROTO_VERSION: u8 = 3;
 
 /// Hard ceiling on payload length (64 MiB) — refuse corrupt length
 /// prefixes before allocating.
@@ -165,6 +165,10 @@ pub enum MsgRef<'a> {
         pipeline: u32,
         /// Auth token (`""` when the daemon runs without `--token`).
         token: &'a str,
+        /// Pool-level wrapper chain applied to every hosted lane,
+        /// rendered in the `--wrap` grammar (`""` = the daemon's
+        /// configured default, which itself defaults to no wrappers).
+        wrap: &'a str,
     },
     /// Server handshake reply: the hosted executor's padded width and
     /// per-lane metadata (shard-local offsets).
@@ -256,6 +260,9 @@ pub enum Msg {
         pipeline: u32,
         /// Auth token (`""` when unauthenticated).
         token: String,
+        /// Pool-level wrapper chain (`--wrap` grammar; `""` = the
+        /// daemon's configured default).
+        wrap: String,
     },
     /// See [`MsgRef::Spec`].
     Spec {
@@ -415,6 +422,7 @@ pub fn encode(seq: u32, msg: MsgRef<'_>) -> Vec<u8> {
             first_lane,
             pipeline,
             token,
+            wrap,
         } => {
             payload.push(TAG_HELLO);
             put_u32(&mut payload, seq);
@@ -423,6 +431,7 @@ pub fn encode(seq: u32, msg: MsgRef<'_>) -> Vec<u8> {
             put_u64(&mut payload, first_lane);
             put_u32(&mut payload, pipeline);
             put_str(&mut payload, token);
+            put_str(&mut payload, wrap);
         }
         MsgRef::Spec {
             obs_dim,
@@ -683,6 +692,7 @@ pub fn decode_payload(payload: &[u8]) -> Result<Frame> {
             first_lane: r.u64()?,
             pipeline: r.u32()?,
             token: r.str()?,
+            wrap: r.str()?,
         },
         TAG_SPEC => {
             let obs_dim = r.u64()?;
@@ -795,6 +805,7 @@ mod tests {
                     first_lane: 12,
                     pipeline: 4,
                     token: "hunter2",
+                    wrap: "TimeLimit(200),NormalizeObs",
                 }
             ),
             framed(
@@ -805,6 +816,7 @@ mod tests {
                     first_lane: 12,
                     pipeline: 4,
                     token: "hunter2".into(),
+                    wrap: "TimeLimit(200),NormalizeObs".into(),
                 }
             )
         );
@@ -951,6 +963,7 @@ mod tests {
                 first_lane: 0,
                 pipeline: 1,
                 token: "",
+                wrap: "",
             },
         );
         // Flip every single byte in turn: each corruption must be an

@@ -12,6 +12,14 @@
 //! what make the determinism contract trivial: two clients can never
 //! interleave steps into each other's trajectories.
 //!
+//! **Wrapper chains.**  `cairl serve --wrap CHAIN` sets a default
+//! pool-level wrapper chain for every hosted lane; a client's `Hello`
+//! may carry its own chain in the `wrap` field (protocol v3), which
+//! overrides the default for that connection.  Per-component `+`
+//! chains travel inside the mixture spec itself, so a sharded
+//! `"CartPole-v1+NormalizeObs:8"` builds exactly the lane groups a
+//! local pool would.
+//!
 //! **Admission control.**  `--max-lanes N` caps the summed lane count
 //! across live connections; a `Hello` that would exceed the budget is
 //! answered with a `Busy` frame (current/maximum lanes plus a suggested
@@ -50,6 +58,7 @@ use crate::coordinator::registry::{self, MixtureSpec};
 use crate::core::env::Transition;
 use crate::core::error::{CairlError, Result};
 use crate::core::json::Value;
+use crate::wrappers::WrapperSpec;
 use crate::shard::net::{FramedStream, RawStream, ShardAddr, ShardListener};
 use crate::shard::proto::{Msg, MsgRef, SeqTracker, PROTO_VERSION, SEQ_NONE};
 
@@ -78,6 +87,11 @@ pub struct ServeConfig {
     /// Shared-secret auth token (`""` = no auth).  Checked on every
     /// `Hello` and `Status`.
     pub token: String,
+    /// Default pool-level wrapper chain (`--wrap` grammar, e.g.
+    /// `"TimeLimit(200),NormalizeObs"`) applied to every hosted lane
+    /// when a client's `Hello` carries an empty `wrap` field.  A
+    /// non-empty `Hello.wrap` overrides it for that connection.
+    pub wrap: String,
 }
 
 impl ServeConfig {
@@ -92,6 +106,7 @@ impl ServeConfig {
             kernel: KernelMode::default(),
             max_lanes: 0,
             token: String::new(),
+            wrap: String::new(),
         }
     }
 
@@ -153,10 +168,10 @@ pub struct ServerStats {
     steps: AtomicU64,
     active_lanes: AtomicUsize,
     clients: Mutex<BTreeMap<u64, ClientEntry>>,
-    /// `(spec, base_seed, first_lane)` triples seen across the daemon's
-    /// lifetime: a repeat is a client re-handshaking after a connection
-    /// loss, i.e. a failover reconnect.
-    origins: Mutex<BTreeMap<(String, u64, u64), u64>>,
+    /// `(spec, wrap, base_seed, first_lane)` tuples seen across the
+    /// daemon's lifetime: a repeat is a client re-handshaking after a
+    /// connection loss, i.e. a failover reconnect.
+    origins: Mutex<BTreeMap<(String, String, u64, u64), u64>>,
 }
 
 impl ServerStats {
@@ -280,13 +295,14 @@ impl ServerStats {
         }
     }
 
-    /// Record a `Hello`'s seeding origin; a repeat counts as a
+    /// Record a `Hello`'s seeding origin (wrap chain included — a
+    /// different chain is a different trajectory); a repeat counts as a
     /// failover reconnect.
-    fn note_origin(&self, spec: &str, base_seed: u64, first_lane: u64) {
+    fn note_origin(&self, spec: &str, wrap: &str, base_seed: u64, first_lane: u64) {
         self.hellos.fetch_add(1, Ordering::Relaxed);
         if let Ok(mut origins) = self.origins.lock() {
             let count = origins
-                .entry((spec.to_string(), base_seed, first_lane))
+                .entry((spec.to_string(), wrap.to_string(), base_seed, first_lane))
                 .or_insert(0);
             if *count > 0 {
                 self.reconnects.fetch_add(1, Ordering::Relaxed);
@@ -395,6 +411,9 @@ impl ShardServer {
     /// ```
     pub fn bind(addr: &str, config: ServeConfig) -> Result<ShardServer> {
         validate_spec(&config.env_spec)?;
+        // Validate the default wrap chain eagerly too: a typo in
+        // `serve --wrap` fails at bind, not on the first bare Hello.
+        WrapperSpec::parse_chain(&config.wrap)?;
         let addr = ShardAddr::parse(addr)?;
         let listener = ShardListener::bind(&addr)?;
         let stats = Arc::new(ServerStats::new(config.max_lanes));
@@ -525,7 +544,7 @@ fn validate_spec(spec: &str) -> Result<()> {
 fn requested_lanes(spec: &str, config: &ServeConfig) -> Result<usize> {
     if MixtureSpec::is_mixture(spec) {
         let parsed = MixtureSpec::parse(spec)?;
-        Ok(parsed.entries().iter().map(|(_, n)| n).sum())
+        Ok(parsed.entries().iter().map(|e| e.count).sum())
     } else {
         registry::validate(spec)?;
         Ok(config.lanes.max(1))
@@ -620,6 +639,7 @@ fn serve_conn(stream: RawStream, config: &ServeConfig, stats: &ServerStats, id: 
                 first_lane,
                 pipeline,
                 token,
+                wrap,
             } => {
                 stats.note_request(id, 0);
                 if !authorized(config, &token) {
@@ -631,6 +651,20 @@ fn serve_conn(stream: RawStream, config: &ServeConfig, stats: &ServerStats, id: 
                     config.env_spec.clone()
                 } else {
                     spec
+                };
+                // An empty Hello.wrap defers to the daemon's configured
+                // default chain; a non-empty one overrides it.
+                let wrap = if wrap.is_empty() {
+                    config.wrap.clone()
+                } else {
+                    wrap
+                };
+                let wrap_chain = match WrapperSpec::parse_chain(&wrap) {
+                    Ok(chain) => chain,
+                    Err(e) => {
+                        bail(&mut stream, seq, &format!("bad wrap chain {wrap:?}: {e}"));
+                        return;
+                    }
                 };
                 // Admission control happens *before* the (expensive)
                 // executor build: compute the lanes this Hello needs,
@@ -668,6 +702,7 @@ fn serve_conn(stream: RawStream, config: &ServeConfig, stats: &ServerStats, id: 
                         base_seed,
                         first_lane as usize,
                         config.kernel,
+                        &wrap_chain,
                     )
                     .map(HostExec::Pool),
                     kind => build_executor_with_kernel(
@@ -676,7 +711,7 @@ fn serve_conn(stream: RawStream, config: &ServeConfig, stats: &ServerStats, id: 
                         config.lanes,
                         threads,
                         base_seed + first_lane,
-                        &[],
+                        &wrap_chain,
                         config.kernel,
                     )
                     .map(HostExec::Boxed),
@@ -698,7 +733,7 @@ fn serve_conn(stream: RawStream, config: &ServeConfig, stats: &ServerStats, id: 
                         // `--status` right after its handshake must see
                         // itself in the table.
                         stats.register_client(id, &spec, n, pipeline);
-                        stats.note_origin(&spec, base_seed, first_lane);
+                        stats.note_origin(&spec, &wrap, base_seed, first_lane);
                         if stream
                             .send(
                                 seq,

@@ -289,8 +289,11 @@ pub fn apply_wrappers(env: DynEnv, chain: &[WrapperSpec]) -> DynEnv {
     chain.iter().fold(env, |env, spec| spec.apply(env))
 }
 
-/// Split on `sep` at paren depth zero only.
-fn split_top_level(src: &str, sep: char) -> Vec<&str> {
+/// Split on `sep` at paren depth zero only.  pub(crate): the mixture
+/// grammar ([`crate::coordinator::registry::MixtureSpec`]) reuses this
+/// to split components and their `+`-joined wrapper chains without
+/// breaking inside wrapper argument lists like `ClipReward(-1,1)`.
+pub(crate) fn split_top_level(src: &str, sep: char) -> Vec<&str> {
     let mut parts = Vec::new();
     let mut depth = 0usize;
     let mut start = 0usize;

@@ -8,6 +8,12 @@
 //! boundaries (the fused `TimeLimit` step counter included), auto-reset
 //! and mixtures with mixed fused/fallback groups included.
 //!
+//! `Script/*` ids are under the same pin with a twist: their scalar
+//! path is the tree-walk interpreter and their fused path is the
+//! register-bytecode `ScriptBatch` VM, so kernel equality here **is**
+//! the tree-walk-vs-bytecode-vs-batched equivalence of the scripting
+//! tentpole.
+//!
 //! Thread counts under test default to 1/2/4; the CI determinism matrix
 //! re-runs this suite pinned to each of 1, 2, 4 and 8 via
 //! `CAIRL_TEST_THREADS=<t>`.
@@ -136,10 +142,13 @@ fn registered_limits_fuse_bit_identically_too() {
 
 #[test]
 fn mixtures_fuse_per_group_with_scalar_fallback_lanes() {
-    // Fused CartPole group + script fallback group + fused MountainCar
-    // group in one pool: per-group fusion, padding and zeroed tails
-    // must match the scalar build everywhere.
-    let spec = "CartPole-v1?max_steps=20:3,Script/CartPole-v1:2,MountainCar-v0?max_steps=30:3";
+    // Fused CartPole group + a per-component `+ClipReward` chain the
+    // kernels cannot absorb (forcing that group onto the scalar
+    // fallback — Script/CartPole-v1 itself fuses now) + fused
+    // MountainCar group in one pool: per-group fusion, padding and
+    // zeroed tails must match the scalar build everywhere.
+    let spec = "CartPole-v1?max_steps=20:3,Script/CartPole-v1+ClipReward(-1,1):2,\
+                MountainCar-v0?max_steps=30:3";
     assert!(MixtureSpec::is_mixture(spec));
     assert_kernel_equality(spec, 1);
 
@@ -159,7 +168,7 @@ fn mixtures_fuse_per_group_with_scalar_fallback_lanes() {
     assert_eq!(exec.obs_dim(), 4);
     let specs = exec.lane_specs().to_vec();
     assert_eq!(specs[0].env_id, "CartPole-v1?max_steps=20");
-    assert_eq!(specs[3].env_id, "Script/CartPole-v1");
+    assert_eq!(specs[3].env_id, "Script/CartPole-v1+ClipReward(-1,1)");
     assert_eq!(specs[5].env_id, "MountainCar-v0?max_steps=30");
     assert_eq!(specs[5].obs_dim, 2);
     let tape = action_tape(&specs, 40, 3);
@@ -318,6 +327,11 @@ fn every_classic_spec_advertises_a_fused_builder() {
         "Acrobot-v1",
         "Pendulum-v1",
         "PendulumDiscrete-v1",
+        // Script ids fuse through the bytecode ScriptBatch kernel.
+        "Script/CartPole-v1",
+        "Script/MountainCar-v0",
+        "Script/Acrobot-v1",
+        "Script/Pendulum-v1",
     ] {
         assert!(registry::env_spec(id).unwrap().batch_capable(), "{id}");
         assert!(
@@ -325,9 +339,43 @@ fn every_classic_spec_advertises_a_fused_builder() {
             "{id}: registered chain must fuse"
         );
     }
-    // Script/flash/puzzle and pixel-wrapped specs fall back.
-    for id in ["Script/CartPole-v1", "Flash/Pong-v0", "Puzzle/Nonogram-v0"] {
+    // Flash/puzzle and pixel-wrapped specs fall back.
+    for id in ["Flash/Pong-v0", "Puzzle/Nonogram-v0"] {
         assert!(registry::fused_lane_builder(id).unwrap().is_none(), "{id}");
     }
     assert!(registry::fused_lane_builder("Pixel/CartPole-v1").unwrap().is_none());
+}
+
+#[test]
+fn script_bytecode_batches_are_bit_identical_to_tree_walk() {
+    // The tentpole pin: scalar mode steps the tree-walk ScriptEnv
+    // interpreter, fused mode steps the register-VM ScriptBatch SoA
+    // kernel — bit-identical trajectories on every executor kind and
+    // thread count, auto-reset and TimeLimit truncation included.
+    for spec in [
+        "Script/CartPole-v1?max_steps=25",
+        "Script/MountainCar-v0?max_steps=30",
+        "Script/Acrobot-v1?max_steps=40",
+        "Script/Pendulum-v1?max_steps=20",
+    ] {
+        assert_kernel_equality(spec, 4);
+    }
+}
+
+#[test]
+fn script_lanes_with_affine_chains_fuse_bit_identically() {
+    // A trailing NormalizeObs rides the ScriptBatch epilogue exactly as
+    // it does on the native kernels — both via --wrap and via the
+    // per-component `+` mixture grammar.
+    let chain = vec![WrapperSpec::NormalizeObs];
+    assert!(
+        registry::fused_lane_builder_with("Script/CartPole-v1?max_steps=25", &chain)
+            .unwrap()
+            .is_some(),
+        "Script + NormalizeObs must fuse"
+    );
+    assert_kernel_equality(
+        "Script/CartPole-v1?max_steps=25+NormalizeObs:3,CartPole-v1?max_steps=25+NormalizeObs:3",
+        1,
+    );
 }

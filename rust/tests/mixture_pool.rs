@@ -37,9 +37,9 @@ const SPEC: &str = "CartPole-v1:4,MountainCar-v0:2,Script/CartPole-v1:2";
 /// and thread count).
 fn mixture_tape(spec: &MixtureSpec, steps: usize) -> Vec<Vec<Action>> {
     let mut spaces = Vec::new();
-    for (id, count) in spec.entries() {
-        let env = make(id).unwrap();
-        for _ in 0..*count {
+    for entry in spec.entries() {
+        let env = make(&entry.spec).unwrap();
+        for _ in 0..entry.count {
             spaces.push(env.action_space());
         }
     }
@@ -103,17 +103,21 @@ fn reference_trajectories(
 ) -> Vec<Vec<(Vec<f32>, Transition)>> {
     let mut streams = Vec::new();
     let mut lane0 = 0usize;
-    for (id, count) in spec.entries() {
-        let mut v = VecEnv::new(*count, BASE_SEED + lane0 as u64, || make(id).unwrap());
+    for entry in spec.entries() {
+        let count = entry.count;
+        let id = entry.spec.clone();
+        let mut v = VecEnv::new(count, BASE_SEED + lane0 as u64, move || {
+            make(&id).unwrap()
+        });
         let d = BatchedExecutor::obs_dim(&v);
         let mut obs = vec![0.0f32; count * d];
-        let mut tr = vec![Transition::default(); *count];
-        let mut comp: Vec<Vec<(Vec<f32>, Transition)>> = vec![Vec::new(); *count];
+        let mut tr = vec![Transition::default(); count];
+        let mut comp: Vec<Vec<(Vec<f32>, Transition)>> = vec![Vec::new(); count];
         v.reset_into(&mut obs);
         for (k, stream) in comp.iter_mut().enumerate() {
             stream.push((obs[k * d..(k + 1) * d].to_vec(), Transition::default()));
         }
-        let mut actions = Vec::with_capacity(*count);
+        let mut actions = Vec::with_capacity(count);
         for step_actions in tape {
             actions.clear();
             actions.extend_from_slice(&step_actions[lane0..lane0 + count]);
@@ -164,19 +168,20 @@ fn mixture_crosses_auto_reset_boundaries() {
     let tape = mixture_tape(&spec, STEPS);
     let reference = reference_trajectories(&spec, &tape);
     let mut lane0 = 0usize;
-    for (id, count) in spec.entries() {
-        for lane in lane0..lane0 + count {
+    for entry in spec.entries() {
+        for lane in lane0..lane0 + entry.count {
             let ends = reference[lane]
                 .iter()
                 .filter(|(_, t)| t.done || t.truncated)
                 .count();
             assert!(
                 ends > 0,
-                "{id} lane {lane}: no episode ended in {STEPS} steps — \
-                 auto-reset boundaries not exercised"
+                "{} lane {lane}: no episode ended in {STEPS} steps — \
+                 auto-reset boundaries not exercised",
+                entry.spec
             );
         }
-        lane0 += count;
+        lane0 += entry.count;
     }
 }
 

@@ -1,0 +1,361 @@
+//! Integration: the MiniScript bytecode pipeline (lexer → parser →
+//! compiler → register VM) against the tree-walk interpreter.
+//!
+//! The contract under test is **observable equivalence**: for any
+//! program the two runners return bit-identical values, draw the RNG in
+//! the same order, and fail with the same error strings — which is what
+//! lets the registry serve the tree-walk on the scalar path and the
+//! bytecode VM on the fused batch path while `--kernel` stays a pure
+//! performance transform.
+//!
+//! Thread counts default to 1/2/4; the CI determinism matrix re-runs
+//! the suite with `CAIRL_TEST_THREADS` pinned to each of 1, 2, 4, 8.
+
+mod common;
+
+use cairl::coordinator::experiment::{build_executor_with_kernel, ExecutorKind, KernelMode};
+use cairl::coordinator::pool::BatchedExecutor;
+use cairl::coordinator::registry;
+use cairl::core::env::{Env, Transition};
+use cairl::core::rng::Pcg32;
+use cairl::core::spaces::{Action, Space};
+use cairl::script::compile::{compile, compile_src};
+use cairl::script::envs::{RenderHint, ScriptEnv};
+use cairl::script::lexer::lex;
+use cairl::script::parser::parse;
+use cairl::script::vm::CompiledScriptEnv;
+use cairl::script::{Interpreter, Value, Vm};
+
+/// Well-formed programs: `(source, function, args, expected value)`.
+/// Deliberately spans every statement and expression form the language
+/// has — arithmetic, loops with break/continue, `for`, lists, builtins,
+/// user-function calls, recursion, short-circuit logic, elif chains,
+/// compound assignment and unary negation.
+const CORPUS: &[(&str, &str, &[f64], f64)] = &[
+    ("def f(a, b) { return a * 10 + b; }", "f", &[4.0, 2.0], 42.0),
+    (
+        "def f() { s = 0; i = 0; while (true) { i += 1; if (i > 10) { break; } \
+         if (i % 2 == 0) { continue; } s += i; } return s; }",
+        "f",
+        &[],
+        25.0,
+    ),
+    ("def f() { s = 0; for i = 0, 10 { s += i; } return s; }", "f", &[], 45.0),
+    (
+        "def f() { xs = zeros(3); xs[1] = 7; push(xs, 9); \
+         return xs[1] + xs[3] + len(xs); }",
+        "f",
+        &[],
+        20.0,
+    ),
+    ("def f() { return clamp(cos(0) * 5, 0, 2) + sqrt(16); }", "f", &[], 6.0),
+    (
+        "def sq(x) { return x * x; } def f(x) { return sq(x) + sq(x + 1); }",
+        "f",
+        &[2.0],
+        13.0,
+    ),
+    (
+        "def fib(n) { if (n < 2) { return n; } return fib(n - 1) + fib(n - 2); }",
+        "fib",
+        &[10.0],
+        55.0,
+    ),
+    (
+        "def f() { x = 0; if (x != 0 and 1 / x > 0) { return 1; } return 0; }",
+        "f",
+        &[],
+        0.0,
+    ),
+    (
+        "def f(x) { if (x > 0) { return 1; } elif (x < 0) { return -1; } \
+         else { return 0; } }",
+        "f",
+        &[-5.0],
+        -1.0,
+    ),
+    ("def f() { x = 2; x += 3 * 4; return x; }", "f", &[], 14.0),
+    ("def f(x) { return -x + max(pow(2, 3), pi()); }", "f", &[4.0], 4.0),
+    (
+        "g = 3; def f() { global g; g = g * 7; return g; }",
+        "f",
+        &[],
+        21.0,
+    ),
+];
+
+/// Broken programs that load fine and fail at call time — the error
+/// string must be identical on both runners.
+const ERROR_CORPUS: &[(&str, &str, &[f64])] = &[
+    ("def f() { return missing; }", "f", &[]),
+    ("def f() { xs = zeros(2); return xs[5]; }", "f", &[]),
+    ("def f() { xs = zeros(2); return xs + 1; }", "f", &[]),
+    ("def g(a) { return a; } def f() { return g(); }", "f", &[]),
+    ("def f() { return nosuchfn(1); }", "f", &[]),
+];
+
+fn nums(args: &[f64]) -> Vec<Value> {
+    args.iter().map(|&a| Value::Num(a)).collect()
+}
+
+#[test]
+fn vm_values_match_the_tree_walk_across_the_corpus() {
+    for &(src, func, args, want) in CORPUS {
+        let args = nums(args);
+        let tree = Interpreter::load(src)
+            .unwrap()
+            .call(func, &args)
+            .unwrap()
+            .as_num()
+            .unwrap();
+        let vm = Vm::load(src).unwrap().call(func, &args).unwrap().as_num().unwrap();
+        assert_eq!(tree.to_bits(), vm.to_bits(), "{src}");
+        assert_eq!(tree, want, "{src}: corpus expectation drifted");
+    }
+}
+
+#[test]
+fn runtime_errors_match_the_tree_walk_verbatim() {
+    for &(src, func, args) in ERROR_CORPUS {
+        let args = nums(args);
+        let tree = Interpreter::load(src).unwrap().call(func, &args).unwrap_err();
+        let vm = Vm::load(src).unwrap().call(func, &args).unwrap_err();
+        assert_eq!(format!("{tree}"), format!("{vm}"), "{src}");
+    }
+    // Calling a function that does not exist errors identically too.
+    let tree = Interpreter::load("x = 1;").unwrap().call("nope", &[]).unwrap_err();
+    let vm = Vm::load("x = 1;").unwrap().call("nope", &[]).unwrap_err();
+    assert_eq!(format!("{tree}"), format!("{vm}"));
+}
+
+#[test]
+fn rng_draw_order_is_preserved_by_compilation() {
+    // uniform() calls threaded through loops, conditions and nested
+    // calls: the VM must consume the PCG stream in exactly the
+    // tree-walk's order, so equal seeds give bit-equal results.
+    let src = "def inner() { return uniform(0, 1); } \
+               def draw(n) { s = 0; for i = 0, n { u = uniform(-1, 1); \
+               if (u > 0) { s += u * inner(); } else { s -= u * 0.5; } } return s; }";
+    for seed in [0u64, 7, 42, 0xdead_beef] {
+        let mut tree = Interpreter::load(src).unwrap();
+        let mut vm = Vm::load(src).unwrap();
+        tree.seed_with_stream(seed, 17);
+        vm.seed_with_stream(seed, 17);
+        for _ in 0..5 {
+            let a = tree.call("draw", &[Value::Num(20.0)]).unwrap().as_num().unwrap();
+            let b = vm.call("draw", &[Value::Num(20.0)]).unwrap().as_num().unwrap();
+            assert_eq!(a.to_bits(), b.to_bits(), "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn front_end_stages_round_trip() {
+    // lex → parse → compile must agree with the one-shot compile_src on
+    // every corpus program and on the shipped env sources, and parse
+    // errors must surface identically from both loaders.
+    let mut sources: Vec<&str> = CORPUS.iter().map(|&(src, ..)| src).collect();
+    sources.extend([
+        cairl::script::envs::CARTPOLE_SRC,
+        cairl::script::envs::MOUNTAINCAR_SRC,
+        cairl::script::envs::ACROBOT_SRC,
+        cairl::script::envs::PENDULUM_SRC,
+    ]);
+    for src in sources {
+        assert!(!lex(src).unwrap().is_empty(), "{src}");
+        let ast = parse(src).unwrap();
+        let direct = compile_src(src).unwrap();
+        let via_ast = compile(&ast).unwrap();
+        // Op carries no PartialEq; the Debug rendering is exact.
+        assert_eq!(format!("{:?}", direct.code), format!("{:?}", via_ast.code));
+        assert_eq!(direct.global_names, via_ast.global_names);
+        assert_eq!(direct.funcs.len(), via_ast.funcs.len());
+    }
+    for bad in ["def f( {", "x = ;", "def f() { if (1 { return 1; } }"] {
+        let tree = Interpreter::load(bad).unwrap_err();
+        let compiled = compile_src(bad).unwrap_err();
+        assert_eq!(format!("{tree}"), format!("{compiled}"), "{bad}");
+    }
+}
+
+/// Step both env adapters over the same deterministic action tape
+/// (Env-level auto-reset on done) and compare the full streams bitwise.
+fn assert_env_parity(id: &str, src: &str, stream: u64, steps: usize) {
+    let mut tree = ScriptEnv::try_load(id, src, stream, RenderHint::None).unwrap();
+    let mut vm = CompiledScriptEnv::try_load(id, src, stream, RenderHint::None).unwrap();
+    assert_eq!(tree.obs_dim(), vm.obs_dim(), "{id}");
+    assert_eq!(tree.action_space(), vm.action_space(), "{id}");
+    let space = tree.action_space();
+    let d = tree.obs_dim();
+    let mut rng = Pcg32::new(0xac7_1011, 3);
+    let tape: Vec<Action> = (0..steps).map(|_| space.sample(&mut rng)).collect();
+    let run = |env: &mut dyn Env| -> (Vec<f32>, Vec<Transition>) {
+        let mut obs = vec![f32::NAN; d];
+        let mut obs_stream = Vec::new();
+        let mut tr_stream = Vec::new();
+        env.seed(99);
+        env.reset_into(&mut obs);
+        obs_stream.extend_from_slice(&obs);
+        for action in &tape {
+            let t = env.step_into(action, &mut obs);
+            obs_stream.extend_from_slice(&obs);
+            tr_stream.push(t);
+            if t.done {
+                env.reset_into(&mut obs);
+                obs_stream.extend_from_slice(&obs);
+            }
+        }
+        (obs_stream, tr_stream)
+    };
+    let (obs_tree, tr_tree) = run(&mut tree);
+    let (obs_vm, tr_vm) = run(&mut vm);
+    assert_eq!(tr_tree, tr_vm, "{id}: transitions diverged");
+    assert_eq!(
+        obs_tree.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        obs_vm.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        "{id}: observations diverged"
+    );
+}
+
+#[test]
+fn compiled_envs_match_tree_walk_envs_on_the_builtin_sources() {
+    assert_env_parity("Script/CartPole-v1", cairl::script::envs::CARTPOLE_SRC, 11, 300);
+    assert_env_parity("Script/MountainCar-v0", cairl::script::envs::MOUNTAINCAR_SRC, 12, 300);
+    assert_env_parity("Script/Acrobot-v1", cairl::script::envs::ACROBOT_SRC, 13, 200);
+    assert_env_parity("Script/Pendulum-v1", cairl::script::envs::PENDULUM_SRC, 14, 200);
+}
+
+#[test]
+fn compiled_env_matches_tree_walk_on_the_example_script() {
+    // The user-facing example (`cairl run --register-script
+    // MyEnv=examples/bounce.mpy`) through both runners.
+    let src = std::fs::read_to_string(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../examples/bounce.mpy"
+    ))
+    .unwrap();
+    assert_env_parity("Script/Bounce-v0", &src, 5, 400);
+}
+
+#[test]
+fn script_trajectories_are_thread_count_invariant() {
+    // The determinism-matrix hook: fused (bytecode SoA) script lanes
+    // must reproduce the single-thread trajectory at every worker
+    // count, mixture grouping included.
+    let spec = "Script/CartPole-v1?max_steps=25:3,Script/MountainCar-v0?max_steps=30:3";
+    let build = |kind: ExecutorKind, threads: usize| {
+        build_executor_with_kernel(spec, kind, 1, threads, 5, &[], KernelMode::Fused).unwrap()
+    };
+    let mut reference = build(ExecutorKind::Sequential, 1);
+    let specs = reference.lane_specs().to_vec();
+    let mut rng = Pcg32::new(0x7ead5, 1);
+    let tape: Vec<Vec<Action>> = (0..90)
+        .map(|_| specs.iter().map(|s| s.action_space.sample(&mut rng)).collect())
+        .collect();
+    let run = |exec: &mut dyn BatchedExecutor| -> (Vec<f32>, Vec<Transition>) {
+        let n = exec.num_lanes();
+        let d = exec.obs_dim();
+        let mut obs = vec![f32::NAN; n * d];
+        let mut tr = vec![Transition::default(); n];
+        let mut obs_stream = Vec::new();
+        let mut tr_stream = Vec::new();
+        exec.reset_into(&mut obs);
+        obs_stream.extend_from_slice(&obs);
+        for actions in &tape {
+            exec.step_into(actions, &mut obs, &mut tr);
+            obs_stream.extend_from_slice(&obs);
+            tr_stream.extend_from_slice(&tr);
+        }
+        (obs_stream, tr_stream)
+    };
+    let want = run(reference.as_mut());
+    for kind in [ExecutorKind::PoolSync, ExecutorKind::PoolAsync] {
+        for threads in common::test_threads() {
+            let mut exec = build(kind, threads);
+            assert_eq!(exec.lane_specs(), &specs[..]);
+            assert_eq!(
+                run(exec.as_mut()),
+                want,
+                "{kind:?} at {threads} threads diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn hot_reload_reaches_both_runners_through_the_registry() {
+    // register_script → make() env (tree-walk) and a fused executor
+    // (bytecode batch): re-registering swaps the program for live envs
+    // at their next reset and for every build thereafter.
+    const SRC_A: &str = "obs_dim = 1; n_actions = 2; t = 0; \
+        def reset() { global t; t = 0; return [0.5]; } \
+        def step(action) { global t; t = t + 1; done = 0; \
+        if (t >= 5) { done = 1; } return [0.5, 1.0, done]; }";
+    const SRC_B: &str = "obs_dim = 1; n_actions = 2; t = 0; \
+        def reset() { global t; t = 0; return [0.25]; } \
+        def step(action) { global t; t = t + 1; done = 0; \
+        if (t >= 5) { done = 1; } return [0.25, 2.0, done]; }";
+    let id = registry::register_script("VmHotReload", SRC_A).unwrap();
+    assert_eq!(id, "Script/VmHotReload");
+    assert!(registry::env_spec(&id).unwrap().batch_capable(), "{id}");
+
+    let mut env = cairl::make(&id).unwrap();
+    env.seed(1);
+    assert_eq!(env.reset(), vec![0.5]);
+
+    registry::register_script("VmHotReload", SRC_B).unwrap();
+    // The live tree-walk env rebuilds at its next reset...
+    assert_eq!(env.reset(), vec![0.25]);
+    let step = env.step(&Action::Discrete(0));
+    assert_eq!(step.reward, 2.0);
+    // ...and a fresh fused build snapshots the new program.
+    let mut exec = build_executor_with_kernel(
+        &format!("{id}:2"),
+        ExecutorKind::PoolSync,
+        1,
+        2,
+        7,
+        &[],
+        KernelMode::Fused,
+    )
+    .unwrap();
+    let mut obs = vec![f32::NAN; exec.num_lanes() * exec.obs_dim()];
+    exec.reset_into(&mut obs);
+    assert_eq!(obs, vec![0.25, 0.25]);
+    let mut tr = vec![Transition::default(); exec.num_lanes()];
+    exec.step_into(
+        &[Action::Discrete(0), Action::Discrete(1)],
+        &mut obs,
+        &mut tr,
+    );
+    assert!(tr.iter().all(|t| t.reward == 2.0));
+}
+
+#[test]
+fn compiled_env_spaces_match_the_script_protocol() {
+    // The VM adapter derives spaces from the same obs_dim/n_actions
+    // globals as the tree-walk adapter.
+    let mut env = CompiledScriptEnv::try_load(
+        "Script/UnitSpaces",
+        "obs_dim = 3; n_actions = 4; \
+         def reset() { return [0, 0, 0]; } \
+         def step(a) { return [0, 0, 0, 1, 0]; }",
+        1,
+        RenderHint::None,
+    )
+    .unwrap();
+    env.probe().unwrap();
+    assert_eq!(env.action_space(), Space::Discrete { n: 4 });
+    assert_eq!(env.obs_dim(), 3);
+    // Shape violations carry the ScriptEnv error wording.
+    let err = CompiledScriptEnv::try_load(
+        "Script/UnitBad",
+        "obs_dim = 2; n_actions = 2; def reset() { return [0]; } \
+         def step(a) { return [0, 0, 1, 0]; }",
+        1,
+        RenderHint::None,
+    )
+    .and_then(|mut env| env.probe())
+    .unwrap_err();
+    assert!(format!("{err}").contains("reset()"), "{err}");
+}

@@ -23,6 +23,7 @@ use cairl::coordinator::experiment::{
     KernelMode,
 };
 use cairl::coordinator::pool::{BatchedExecutor, EnvPool, LaneSpec};
+use cairl::coordinator::registry::MixtureEntry;
 use cairl::core::env::Transition;
 use cairl::core::error::CairlError;
 use cairl::core::rng::Pcg32;
@@ -208,6 +209,7 @@ fn sharded_random_workload_counts_match_local() {
         SEED,
         0,
         KernelMode::Fused,
+        &[],
     )
     .unwrap();
     let local_result = run_random_workload(&mut local, 300);
@@ -260,8 +262,8 @@ fn cost_aware_plan_places_skewed_mixtures_unevenly() {
     // The ISSUE acceptance shape: CartPole-v1:32,GridRTS-v0:4 with
     // GridRTS costed far above CartPole.  Asserted on the plan itself.
     let entries = vec![
-        ("CartPole-v1".to_string(), 32usize),
-        ("GridRTS-v0".to_string(), 4usize),
+        MixtureEntry::bare("CartPole-v1", 32),
+        MixtureEntry::bare("GridRTS-v0", 4),
     ];
     let mut costs = BTreeMap::new();
     costs.insert("CartPole-v1".to_string(), 1.0);
@@ -291,6 +293,116 @@ fn cost_aware_plan_places_skewed_mixtures_unevenly() {
 }
 
 #[test]
+fn serve_wrap_chains_apply_server_side_and_match_local() {
+    use cairl::wrappers::WrapperSpec;
+    const CHAIN: &str = "TimeLimit(25),RewardScale(0.5)";
+    // Local reference: the same pool-level chain applied in process.
+    let chain = WrapperSpec::parse_chain(CHAIN).unwrap();
+    let mut local = build_executor_with_kernel(
+        "CartPole-v1",
+        ExecutorKind::Sequential,
+        4,
+        1,
+        SEED,
+        &chain,
+        KernelMode::Fused,
+    )
+    .unwrap();
+    let specs = local.lane_specs().to_vec();
+    let tape = action_tape(&specs, 60);
+    let (obs_ref, tr_ref) = trajectory(local.as_mut(), &tape);
+    assert!(
+        tr_ref.iter().any(|t| t.truncated),
+        "TimeLimit(25) must truncate within the tape"
+    );
+    let mut costs = BTreeMap::new();
+    costs.insert("CartPole-v1".to_string(), 1.0);
+
+    // Client-supplied wrap: travels in the Hello `wrap` field and is
+    // applied by the daemon — bit-identical to the local chain.
+    let (addrs, handles) = spawn_shards(1, KernelMode::Fused);
+    let mut pool = ShardedEnvPool::connect_opts(
+        &addrs,
+        "CartPole-v1",
+        ShardPoolOptions {
+            lanes: 4,
+            base_seed: SEED,
+            wrap: CHAIN.to_string(),
+            costs: Some(costs.clone()),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let (obs, tr) = trajectory(&mut pool, &tape);
+    assert_eq!(tr_ref, tr, "client-wrap transitions diverged");
+    assert_eq!(obs_ref, obs, "client-wrap observations diverged");
+    drop(pool);
+    handles.into_iter().for_each(|h| h.shutdown());
+
+    // Daemon-default wrap: an empty client wrap defers to the
+    // `cairl serve --wrap` chain.
+    let server = ShardServer::bind(
+        &fresh_addr(),
+        ServeConfig {
+            wrap: CHAIN.to_string(),
+            threads: 2,
+            ..ServeConfig::new("CartPole-v1")
+        },
+    )
+    .unwrap();
+    let addr = server.local_addr();
+    let handle = server.spawn();
+    let mut pool = ShardedEnvPool::connect_opts(
+        &[addr.clone()],
+        "CartPole-v1",
+        ShardPoolOptions {
+            lanes: 4,
+            base_seed: SEED,
+            costs: Some(costs),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let (obs, tr) = trajectory(&mut pool, &tape);
+    assert_eq!(tr_ref, tr, "daemon-default wrap transitions diverged");
+    assert_eq!(obs_ref, obs, "daemon-default wrap observations diverged");
+    drop(pool);
+    handle.shutdown();
+
+    // Malformed chains fail fast: at bind time for the daemon default,
+    // at connect time for the client option, and over the wire for a
+    // raw Hello.
+    assert!(ShardServer::bind(
+        &fresh_addr(),
+        ServeConfig {
+            wrap: "TimeLimit(".to_string(),
+            ..ServeConfig::new("CartPole-v1")
+        },
+    )
+    .is_err());
+    let (addrs, handles) = spawn_shards(1, KernelMode::Fused);
+    assert!(ShardedEnvPool::connect_opts(
+        &addrs,
+        "CartPole-v1",
+        ShardPoolOptions {
+            wrap: "NotAWrapper".to_string(),
+            ..Default::default()
+        },
+    )
+    .is_err());
+    let opts = ConnectOptions {
+        wrap: "NotAWrapper".to_string(),
+        ..ConnectOptions::default()
+    };
+    let err = match ShardClient::connect_with(&addrs[0], "CartPole-v1:1", 0, 0, &opts) {
+        Ok(_) => panic!("daemon must reject an unknown wrapper"),
+        Err(e) => e,
+    };
+    assert!(format!("{err}").contains("wrap"), "{err}");
+    handles.into_iter().for_each(|h| h.shutdown());
+}
+
+#[test]
 fn protocol_fuzz_rejects_corruption_without_panicking() {
     // Random mutations over every message shape: decoding must always
     // return (Ok or Err), never panic, and any Ok must re-encode to a
@@ -310,6 +422,7 @@ fn protocol_fuzz_rejects_corruption_without_panicking() {
                 first_lane: 3,
                 pipeline: 4,
                 token: "s3cret",
+                wrap: "TimeLimit(25)",
             },
         ),
         proto::encode(
@@ -757,7 +870,7 @@ fn status_report_exposes_the_client_table() {
 
     let report = shard_status(&addrs[0], "").unwrap();
     let v = cairl::core::json::parse(&report).unwrap();
-    assert_eq!(v.get("proto_version").and_then(|x| x.as_usize()), Some(2));
+    assert_eq!(v.get("proto_version").and_then(|x| x.as_usize()), Some(3));
     assert_eq!(v.get("active_clients").and_then(|x| x.as_usize()), Some(1));
     assert_eq!(v.get("active_lanes").and_then(|x| x.as_usize()), Some(2));
     assert_eq!(v.get("max_lanes").and_then(|x| x.as_usize()), Some(0));
@@ -837,6 +950,7 @@ fn server_closes_connections_on_sequence_violations() {
                     first_lane: 0,
                     pipeline: 1,
                     token: "",
+                    wrap: "",
                 },
             ))
             .unwrap();
@@ -864,6 +978,7 @@ fn server_closes_connections_on_sequence_violations() {
                     first_lane: 0,
                     pipeline: 1,
                     token: "",
+                    wrap: "",
                 },
             ))
             .unwrap();
