@@ -62,6 +62,25 @@ def main() -> int:
     # the trend tooling whether a previous artifact predates them.
     doc["script_runners"] = sorted(script_runners)
 
+    # Telemetry overhead: the ablation's metrics-on/off A/B on the
+    # 32-lane fused pool, surfaced as its own block so the <2% budget is
+    # trackable PR over PR (absent in artifacts predating telemetry).
+    ablation = doc["tables"].get("ablation_dispatch", [])
+    metrics_ab = {
+        row["variant"]: float(row["ns_per_step"])
+        for row in ablation
+        if row.get("variant") in ("pool-32-metrics-on", "pool-32-metrics-off")
+        and row.get("ns_per_step")
+    }
+    if len(metrics_ab) == 2:
+        ns_on = metrics_ab["pool-32-metrics-on"]
+        ns_off = metrics_ab["pool-32-metrics-off"]
+        doc["metrics"] = {
+            "ns_per_step_on": ns_on,
+            "ns_per_step_off": ns_off,
+            "overhead_pct": round(100.0 * (ns_on / ns_off - 1.0), 3),
+        }
+
     log_path = results_dir / "bench_smoke.log"
     if log_path.exists():
         pattern = re.compile(r"steps/s")

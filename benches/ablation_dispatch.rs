@@ -20,6 +20,10 @@
 //! AST interpreter, the register-bytecode VM (target: >=5x over the
 //! tree-walk), and the SoA `ScriptBatch` kernel where a single VM steps
 //! a 32-lane group's state columns.
+//!
+//! The telemetry rows A/B the 32-lane fused pool with the process-wide
+//! metrics gate on vs off and assert the observability tax stays under
+//! 2% — the budget README §"Observability" promises.
 
 #[path = "harness/mod.rs"]
 mod harness;
@@ -160,6 +164,36 @@ fn main() {
         (steps / 32).max(1) * 32,
     ));
 
+    // --- telemetry overhead A/B (ISSUE-8 acceptance): the same 32-lane
+    // fused pool workload with the process-wide metrics gate on vs off.
+    // The record path is a relaxed-atomic add per batch, so the on/off
+    // delta must stay under 2% (plus a small absolute floor to keep a
+    // sub-nanosecond baseline from making the ratio meaningless).
+    cairl::telemetry::set_enabled(false);
+    let pool32_metrics_off =
+        bench_executor("CartPole-v1", ExecutorKind::PoolSync, 32, KernelMode::Fused);
+    cairl::telemetry::set_enabled(true);
+    let pool32_metrics_on =
+        bench_executor("CartPole-v1", ExecutorKind::PoolSync, 32, KernelMode::Fused);
+    let overhead_pct = 100.0 * (pool32_metrics_on / pool32_metrics_off - 1.0);
+    println!(
+        "pool-32/metrics-off (32 lanes): {pool32_metrics_off:>9.1} ns/lane-step\n\
+         pool-32/metrics-on  (32 lanes): {pool32_metrics_on:>9.1} ns/lane-step\n\
+         telemetry overhead on the 32-lane fused pool: {overhead_pct:+.2}%"
+    );
+    executor_rows.push((
+        "pool-32-metrics-off".to_string(),
+        KernelMode::Fused.label(),
+        pool32_metrics_off,
+        (steps / 32).max(1) * 32,
+    ));
+    executor_rows.push((
+        "pool-32-metrics-on".to_string(),
+        KernelMode::Fused.label(),
+        pool32_metrics_on,
+        (steps / 32).max(1) * 32,
+    ));
+
     // --- scripting tentpole: the same MiniScript program on all three
     // script runners.  Single-env rows first (one lane, Env trait), then
     // the batched row: the program is registered at runtime, so the
@@ -286,5 +320,11 @@ fn main() {
         vm_speedup >= 5.0,
         "bytecode VM should be >=5x over the tree-walk on bounce.mpy, \
          got {vm_speedup:.1}x"
+    );
+    assert!(
+        pool32_metrics_on <= pool32_metrics_off * 1.02 + 5.0,
+        "telemetry must cost <2% on the steady-state step path: \
+         {pool32_metrics_on:.1} ns on vs {pool32_metrics_off:.1} ns off \
+         ({overhead_pct:+.2}%)"
     );
 }

@@ -18,6 +18,7 @@ use crate::core::error::Result;
 use crate::core::rng::Pcg32;
 use crate::core::spaces::Action;
 use crate::render::{Framebuffer, HardwareSim};
+use crate::telemetry::TapeWriter;
 use crate::tooling::stats::Summary;
 use crate::wrappers::{apply_wrappers, WrapperSpec};
 
@@ -441,6 +442,23 @@ pub fn run_batched_workload(
     steps_per_lane: u64,
     seed: u64,
 ) -> SteppingResult {
+    // Recording is off, so the tape writer can't fail.
+    run_recorded_workload(exec, steps_per_lane, seed, None)
+        .expect("workload without a tape is infallible")
+}
+
+/// [`run_batched_workload`] with an optional trajectory tape: every
+/// batch's actions and transitions stream onto `tape` as they happen
+/// (the `cairl run --record FILE` path).  The caller seals the tape
+/// with [`TapeWriter::finish`] afterwards.  The action stream, stepping
+/// order and `SteppingResult` are identical with and without a tape —
+/// recording observes the workload, never perturbs it.
+pub fn run_recorded_workload(
+    exec: &mut dyn BatchedExecutor,
+    steps_per_lane: u64,
+    seed: u64,
+    mut tape: Option<&mut TapeWriter>,
+) -> Result<SteppingResult> {
     let n = exec.num_lanes();
     let d = exec.obs_dim();
     // Sample per lane from its own action space (spec order), so
@@ -460,6 +478,9 @@ pub fn run_batched_workload(
         actions.clear();
         actions.extend(specs.iter().map(|s| s.action_space.sample(&mut rng)));
         exec.step_into(&actions, &mut obs, &mut transitions);
+        if let Some(w) = tape.as_deref_mut() {
+            w.write_batch(&actions, &transitions)?;
+        }
         // Lane order inside a step is fixed, so the completion log is
         // deterministic for a given seed — identical on every executor
         // kind, kernel mode and shard layout.
@@ -474,13 +495,13 @@ pub fn run_batched_workload(
     }
     let elapsed = start.elapsed();
     let steps = steps_per_lane * n as u64;
-    SteppingResult {
+    Ok(SteppingResult {
         steps,
         episodes,
         elapsed,
         throughput: steps as f64 / elapsed.as_secs_f64(),
         episode_returns,
-    }
+    })
 }
 
 /// Free-running random-action workload on any [`RandomRollout`]

@@ -84,6 +84,7 @@ use std::thread::JoinHandle;
 use crate::core::batch::{batch_random_steps, BatchEnv, DynBatchEnv, ScalarBatch};
 use crate::core::env::{Env, Transition};
 use crate::core::spaces::{Action, Space};
+use crate::telemetry::{gauge, ExecMetrics, Gauge};
 
 /// Per-lane metadata of a (possibly heterogeneous) batched executor.
 ///
@@ -426,6 +427,7 @@ pub struct EnvPool {
     n: usize,
     padded: usize,
     base_seed: u64,
+    metrics: ExecMetrics,
 }
 
 /// The free-running rollout's action-stream origin: the global base
@@ -567,6 +569,7 @@ impl EnvPool {
             n,
             padded,
             base_seed,
+            metrics: ExecMetrics::for_executor("pool"),
         }
     }
 
@@ -595,10 +598,13 @@ impl EnvPool {
     pub fn random_rollout(&mut self, steps_per_lane: u64) -> RolloutCounts {
         self.shared.episodes.store(0, Ordering::Relaxed);
         self.broadcast(Cmd::RandomSteps { steps_per_lane });
-        RolloutCounts {
-            steps: steps_per_lane * self.n as u64,
-            episodes: self.shared.episodes.load(Ordering::Acquire),
-        }
+        let episodes = self.shared.episodes.load(Ordering::Acquire);
+        let steps = steps_per_lane * self.n as u64;
+        // One tally for the whole free-running workload (there is no
+        // per-batch boundary to count worker-side).
+        self.metrics.steps.add(steps);
+        self.metrics.auto_resets.add(episodes);
+        RolloutCounts { steps, episodes }
     }
 
     /// Publish `cmd` and block until every worker has processed it,
@@ -684,6 +690,8 @@ impl BatchedExecutor for EnvPool {
             obs: obs.as_mut_ptr(),
             transitions: transitions.as_mut_ptr(),
         });
+        let ends = transitions.iter().filter(|t| t.done || t.truncated).count();
+        self.metrics.record_batch(self.n, ends);
     }
 }
 
@@ -1021,6 +1029,10 @@ pub struct AsyncEnvPool {
     pristine: bool,
     n: usize,
     padded: usize,
+    metrics: ExecMetrics,
+    /// Ready-queue depth left behind by the last `recv_batch`
+    /// (`cairl_async_ready_depth`).
+    ready_depth: Gauge,
 }
 
 impl AsyncEnvPool {
@@ -1100,6 +1112,9 @@ impl AsyncEnvPool {
         let mut mailboxes = Vec::new();
         let mut handles = Vec::new();
         let mut owner = vec![0usize; n];
+        // One shared backlog-depth gauge across workers (last write
+        // wins — a depth sample, not a sum).
+        let backlog_depth = gauge("cairl_async_backlog_depth");
         for (worker_idx, worker_groups) in per_worker.into_iter().enumerate() {
             let first = worker_groups
                 .first()
@@ -1111,9 +1126,10 @@ impl AsyncEnvPool {
             let mailbox_w = Arc::clone(&mailbox);
             let ready_w = Arc::clone(&ready);
             let slots_w = Arc::clone(&slots);
+            let backlog_w = backlog_depth.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("envpool-async-{first}"))
-                .spawn(move || async_worker(mailbox_w, ready_w, slots_w, worker_groups))
+                .spawn(move || async_worker(mailbox_w, ready_w, slots_w, worker_groups, backlog_w))
                 .expect("spawn async pool worker");
             mailboxes.push(mailbox);
             handles.push(handle);
@@ -1131,6 +1147,8 @@ impl AsyncEnvPool {
             pristine: true,
             n,
             padded,
+            metrics: ExecMetrics::for_executor("pool-async"),
+            ready_depth: gauge("cairl_async_ready_depth"),
         }
     }
 
@@ -1169,6 +1187,7 @@ impl AsyncEnvPool {
         assert!(max > 0);
         self.batch_lanes.clear();
         self.batch_transitions.clear();
+        let left_ready;
         {
             let mut state = self.ready.state.lock().unwrap();
             while state.q.is_empty() {
@@ -1184,7 +1203,15 @@ impl AsyncEnvPool {
                 self.batch_lanes.push(e.lane);
                 self.batch_transitions.push(e.transition);
             }
+            left_ready = state.q.len();
         }
+        self.ready_depth.set(left_ready as i64);
+        let ends = self
+            .batch_transitions
+            .iter()
+            .filter(|t| t.done || t.truncated)
+            .count();
+        self.metrics.record_batch(self.batch_lanes.len(), ends);
         self.pristine = false;
         AsyncBatch { pool: self }
     }
@@ -1329,6 +1356,8 @@ impl BatchedExecutor for AsyncEnvPool {
             obs[lane * d..(lane + 1) * d].copy_from_slice(slot);
             transitions[lane] = t;
         });
+        let ends = transitions.iter().filter(|t| t.done || t.truncated).count();
+        self.metrics.record_batch(self.n, ends);
     }
 }
 
@@ -1367,6 +1396,7 @@ fn async_worker(
     ready: Arc<ReadyQueue>,
     slots: Arc<SlotBlock>,
     mut groups: Vec<BuiltGroup>,
+    backlog: Gauge,
 ) {
     fn publish_reset(groups: &mut [BuiltGroup], ready: &ReadyQueue, slots: &SlotBlock) {
         for group in groups {
@@ -1509,6 +1539,9 @@ fn async_worker(
                 }
                 next = mailbox.state.lock().unwrap().q.pop_front();
             }
+            // Sample the backlog accumulated this round before stepping
+            // it (post-flush it is always zero).
+            backlog.set(pending_count as i64);
             flush_pending(
                 &mut groups,
                 first_lane,

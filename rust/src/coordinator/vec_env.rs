@@ -27,6 +27,7 @@ use crate::coordinator::pool::{
 use crate::core::batch::{BatchEnv, ScalarBatch};
 use crate::core::env::{DynEnv, Env, Transition};
 use crate::core::spaces::{Action, Space};
+use crate::telemetry::ExecMetrics;
 
 /// The lane storage behind a [`VecEnv`]: one scalar group (generic
 /// constructors, with direct lane access) or a fused group list.
@@ -41,6 +42,7 @@ pub struct VecEnv<E: Env> {
     specs: Vec<LaneSpec>,
     padded: usize,
     n: usize,
+    metrics: ExecMetrics,
 }
 
 impl<E: Env> VecEnv<E> {
@@ -76,6 +78,7 @@ impl<E: Env> VecEnv<E> {
             specs,
             padded,
             n,
+            metrics: ExecMetrics::for_executor("vec"),
         }
     }
 
@@ -140,6 +143,8 @@ impl<E: Env> VecEnv<E> {
                 }
             }
         }
+        let ends = transitions.iter().filter(|t| t.done || t.truncated).count();
+        self.metrics.record_batch(self.n, ends);
     }
 
     /// Direct lane access (scalar-built batches only; a group-fused
@@ -168,6 +173,7 @@ impl VecEnv<DynEnv> {
             specs,
             padded,
             n,
+            metrics: ExecMetrics::for_executor("vec"),
         }
     }
 }

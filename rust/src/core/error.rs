@@ -27,6 +27,9 @@ pub enum CairlError {
     /// budget exhausted, `Busy` retries spent).  Distinct from
     /// [`CairlError::Shard`] so callers can back off instead of failing.
     Unavailable(String),
+    /// Trajectory-tape problems: corruption, truncation, a replay
+    /// against a mismatched executor (telemetry module).
+    Tape(String),
     /// Underlying I/O.
     Io(std::io::Error),
 }
@@ -44,6 +47,7 @@ impl fmt::Display for CairlError {
             CairlError::Config(m) => write!(f, "config error: {m}"),
             CairlError::Shard(m) => write!(f, "shard error: {m}"),
             CairlError::Unavailable(m) => write!(f, "shard unavailable: {m}"),
+            CairlError::Tape(m) => write!(f, "tape error: {m}"),
             CairlError::Io(e) => write!(f, "io error: {e}"),
         }
     }

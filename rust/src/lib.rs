@@ -70,6 +70,14 @@
 //! `docs/ARCHITECTURE.md` and the normative wire spec in
 //! `docs/shard-protocol.md`.
 //!
+//! Every executor, the shard client and the serve daemon record into
+//! the zero-allocation [`telemetry`] metrics registry (JSON snapshot in
+//! `serve --status`, Prometheus text via `cairl metrics` / `cairl run
+//! --metrics FILE`), and any batched workload can be captured as a
+//! deterministic, checksummed trajectory tape (`cairl run --record
+//! FILE`) and re-executed bit-for-bit on a fresh executor of any kind
+//! (`cairl replay --tape FILE`); see README §"Observability".
+//!
 //! ## The registry: `EnvSpec`, kwargs, wrapper chains
 //!
 //! Environment construction is spec-driven
@@ -134,6 +142,7 @@ pub mod render;
 pub mod runtime;
 pub mod script;
 pub mod shard;
+pub mod telemetry;
 pub mod tooling;
 pub mod wrappers;
 
@@ -164,6 +173,7 @@ pub mod prelude {
     pub use crate::shard::{
         ServeConfig, ShardPlan, ShardPoolOptions, ShardServer, ShardedEnvPool,
     };
+    pub use crate::telemetry::{TapeHeader, TapeReader, TapeWriter};
     pub use crate::wrappers::{
         apply_wrappers, Flatten, RecordEpisodeStatistics, TimeLimit, WrapperSpec,
     };

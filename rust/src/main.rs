@@ -11,8 +11,8 @@ use anyhow::{anyhow, bail, Context, Result};
 use cairl::agents::dqn::{DqnAgent, DqnConfig};
 use cairl::coordinator::config::{DqnSettings, ExperimentConfig};
 use cairl::coordinator::experiment::{
-    build_executor_with_kernel, run_batched_workload, run_stepping_workload, ExecutorKind,
-    KernelMode, RenderMode, SteppingResult,
+    build_executor_with_kernel, run_batched_workload, run_recorded_workload,
+    run_stepping_workload, ExecutorKind, KernelMode, RenderMode, SteppingResult,
 };
 use cairl::coordinator::registry::{self, MixtureSpec};
 use cairl::core::env::Env;
@@ -22,6 +22,9 @@ use cairl::envs::gridrts::{play_match, Bot, HarvestBot, MatchResult, RandomBot, 
 use cairl::render::Framebuffer;
 use cairl::runtime::Runtime;
 use cairl::shard::{shard_status, ServeConfig, ShardPoolOptions, ShardServer, ShardedEnvPool};
+use cairl::telemetry::{
+    self, prometheus_from_snapshot, replay_against, TapeHeader, TapeReader, TapeWriter,
+};
 use cairl::tooling::tournament::{swiss, GameOutcome};
 use cairl::wrappers::{apply_wrappers, WrapperSpec};
 use cairl::{list_envs, make};
@@ -88,7 +91,7 @@ COMMANDS:
              [--executor vec|pool|pool-async --lanes N --threads T]
              [--kernel scalar|fused]
              [--shard ADDR[,ADDR...]] [--pipeline K] [--token T]
-             [--returns-log FILE]
+             [--returns-log FILE] [--record FILE] [--metrics FILE]
              [--wrap \"TimeLimit(200),NormalizeObs\"]
              [--register-script NAME=FILE.mpy[,NAME=FILE.mpy...]]
              [--config FILE.json]
@@ -122,10 +125,34 @@ COMMANDS:
                                   Hello handshake (applied server-side,
                                   bit-identical to the local run), and
                                   --returns-log writes every finished episode's
-                                  return, one per line, for seed-parity diffs
+                                  return, one per line, for seed-parity diffs;
+                                  --record captures the batched workload as a
+                                  checksummed binary tape (byte-identical across
+                                  executor kinds, thread counts, kernels and
+                                  shard placements — see `cairl replay`), and
+                                  --metrics dumps the process's telemetry
+                                  registry as Prometheus text after the run
+  replay     --tape FILE [--executor vec|pool|pool-async] [--threads T]
+             [--kernel scalar|fused] [--shard ADDR[,ADDR...]] [--token T]
+             [--register-script NAME=FILE.mpy[,...]]
+                                  re-execute a tape recorded by `cairl run
+                                  --record` against a freshly built executor
+                                  (spec, lanes and base seed come from the tape
+                                  header) and compare every transition bit for
+                                  bit; prints the first divergent (batch, lane)
+                                  and exits non-zero on mismatch — executor,
+                                  thread and kernel knobs are free to differ
+                                  from the recording run, which is the
+                                  determinism-bisect workflow
+  metrics    [--addr ADDR] [--token T]
+                                  print telemetry as Prometheus text: with
+                                  --addr, query a running `cairl serve` daemon
+                                  (its --status JSON embeds a metrics snapshot);
+                                  without, dump this process's registry
   serve      --env SPEC --lanes N --listen ADDR
              [--executor vec|pool|pool-async] [--threads T]
              [--kernel scalar|fused] [--max-lanes N] [--token T]
+             [--allow ADDR[,ADDR...]]
              [--wrap \"TimeLimit(200),NormalizeObs\"]
   serve      --status ADDR [--token T]
                                   host a batched environment shard: one framed
@@ -137,7 +164,11 @@ COMMANDS:
                                   --max-lanes caps total lanes across clients
                                   (over-budget Hellos get a Busy backpressure
                                   reply), --token requires clients to present a
-                                  shared secret, --wrap applies a wrapper chain
+                                  shared secret, --allow admits only peers whose
+                                  address starts with one of the given prefixes
+                                  (TCP peers render as ip:port; unix sockets are
+                                  always admitted — filesystem permissions scope
+                                  those), --wrap applies a wrapper chain
                                   to every hosted lane by default (a client's
                                   non-empty Hello wrap overrides it);
                                   --status ADDR queries a running
@@ -157,6 +188,40 @@ COMMANDS:
 /// per line, in the workload's deterministic completion order — the
 /// seed-parity artifact the CI shard-smoke job diffs between a sharded
 /// and a local run.
+/// Honour `--register-script NAME=FILE.mpy[,...]`: load MiniScript
+/// sources into the `Script/` namespace before any spec is parsed, so
+/// `run` and `replay` can reference Script/NAME ids.
+fn register_scripts(args: &Args) -> Result<()> {
+    let Some(scripts) = args.opt("register-script") else {
+        return Ok(());
+    };
+    for part in scripts.split(',') {
+        let part = part.trim();
+        let Some((name, path)) = part.split_once('=') else {
+            bail!("--register-script expects NAME=FILE.mpy, got {part:?}");
+        };
+        let path = path.trim();
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("--register-script {part:?}"))?;
+        let id = registry::register_script(name.trim(), &src).map_err(|e| anyhow!("{e}"))?;
+        eprintln!("registered {id} from {path}");
+    }
+    Ok(())
+}
+
+/// Honour `--metrics FILE`: dump the process telemetry registry as
+/// Prometheus text after the workload, so batch jobs leave a scrapeable
+/// artifact without running an exporter.
+fn write_metrics_dump(args: &Args) -> Result<()> {
+    let Some(path) = args.opt("metrics") else {
+        return Ok(());
+    };
+    std::fs::write(path, telemetry::render_prometheus())
+        .with_context(|| format!("--metrics {path:?}"))?;
+    eprintln!("wrote telemetry snapshot to {path}");
+    Ok(())
+}
+
 fn write_returns_log(args: &Args, r: &SteppingResult) -> Result<()> {
     let Some(path) = args.opt("returns-log") else {
         return Ok(());
@@ -194,20 +259,7 @@ fn main() -> Result<()> {
         "run" => {
             // User scripts register first, so --env (and the config env
             // field) can reference Script/NAME ids without recompiling.
-            if let Some(scripts) = args.opt("register-script") {
-                for part in scripts.split(',') {
-                    let part = part.trim();
-                    let Some((name, path)) = part.split_once('=') else {
-                        bail!("--register-script expects NAME=FILE.mpy, got {part:?}");
-                    };
-                    let path = path.trim();
-                    let src = std::fs::read_to_string(path)
-                        .with_context(|| format!("--register-script {part:?}"))?;
-                    let id = registry::register_script(name.trim(), &src)
-                        .map_err(|e| anyhow!("{e}"))?;
-                    eprintln!("registered {id} from {path}");
-                }
-            }
+            register_scripts(&args)?;
             // --config seeds the defaults (env, seed, wrappers and the
             // executor block); explicit flags win.
             let file_cfg = match args.opt("config") {
@@ -266,7 +318,7 @@ fn main() -> Result<()> {
                     base_seed: seed,
                     pipeline,
                     token,
-                    wrap,
+                    wrap: wrap.clone(),
                     ..Default::default()
                 };
                 let mut exec = ShardedEnvPool::connect_opts(&shard_list, &env_id, opts)
@@ -274,7 +326,26 @@ fn main() -> Result<()> {
                 eprintln!("shard plan: {}", exec.plan().describe());
                 let lanes = cairl::coordinator::pool::BatchedExecutor::num_lanes(&exec);
                 let steps_per_lane = (steps / lanes as u64).max(1);
-                let r = exec.run_pipelined_workload(steps_per_lane, seed);
+                let r = if let Some(path) = args.opt("record") {
+                    // Recording drives the pool lockstep through the
+                    // shared workload driver: the action stream is
+                    // identical to the pipelined one (lockstep RNG), so
+                    // the tape matches a local recording byte for byte.
+                    if pipeline > 1 {
+                        eprintln!("note: --record steps lockstep; --pipeline is ignored");
+                    }
+                    let header =
+                        TapeHeader::for_executor(&exec, &env_id, &wrap, seed, steps_per_lane);
+                    let mut w = TapeWriter::create(std::path::Path::new(path), &header)
+                        .map_err(|e| anyhow!("{e}"))?;
+                    let r = run_recorded_workload(&mut exec, steps_per_lane, seed, Some(&mut w))
+                        .map_err(|e| anyhow!("{e}"))?;
+                    let batches = w.finish().map_err(|e| anyhow!("{e}"))?;
+                    eprintln!("recorded {batches} batches to {path}");
+                    r
+                } else {
+                    exec.run_pipelined_workload(steps_per_lane, seed)
+                };
                 println!(
                     "{env_id} [{} shards x {lanes} lanes]: {} lane-steps, \
                      {} episodes, {:.3}s, {:.0} steps/s",
@@ -334,7 +405,30 @@ fn main() -> Result<()> {
                 .map_err(|e| anyhow!("{e}"))?;
                 let lanes = exec.num_lanes();
                 let steps_per_lane = (steps / lanes as u64).max(1);
-                let r = run_batched_workload(exec.as_mut(), steps_per_lane, seed);
+                let r = if let Some(path) = args.opt("record") {
+                    let wrap = wrap_chain
+                        .iter()
+                        .map(|w| w.render())
+                        .collect::<Vec<_>>()
+                        .join(",");
+                    let header = TapeHeader::for_executor(
+                        exec.as_ref(),
+                        &env_id,
+                        &wrap,
+                        seed,
+                        steps_per_lane,
+                    );
+                    let mut w = TapeWriter::create(std::path::Path::new(path), &header)
+                        .map_err(|e| anyhow!("{e}"))?;
+                    let r =
+                        run_recorded_workload(exec.as_mut(), steps_per_lane, seed, Some(&mut w))
+                            .map_err(|e| anyhow!("{e}"))?;
+                    let batches = w.finish().map_err(|e| anyhow!("{e}"))?;
+                    eprintln!("recorded {batches} batches to {path}");
+                    r
+                } else {
+                    run_batched_workload(exec.as_mut(), steps_per_lane, seed)
+                };
                 println!(
                     "{env_id} [{} x {lanes} lanes, {} kernel]: {} lane-steps, \
                      {} episodes, {:.3}s, {:.0} steps/s",
@@ -347,6 +441,12 @@ fn main() -> Result<()> {
                 );
                 write_returns_log(&args, &r)?;
             } else {
+                if args.opt("record").is_some() {
+                    bail!(
+                        "--record captures batched workloads; add --lanes/--executor \
+                         (or a mixture spec) to take the batched path"
+                    );
+                }
                 let env = make(&env_id).map_err(|e| anyhow!("{e}"))?;
                 let mut e = apply_wrappers(env, &wrap_chain);
                 let mode = if args.flag("render") {
@@ -369,6 +469,106 @@ fn main() -> Result<()> {
                     println!("{}", fb.to_ascii());
                 }
             }
+            write_metrics_dump(&args)?;
+        }
+        "replay" => {
+            register_scripts(&args)?;
+            let Some(path) = args.opt("tape") else {
+                bail!("replay needs --tape FILE (recorded by `cairl run --record`)");
+            };
+            let mut reader =
+                TapeReader::open(std::path::Path::new(path)).map_err(|e| anyhow!("{e}"))?;
+            let header = reader.header().clone();
+            eprintln!(
+                "tape {path}: {} [{} lanes, seed {}, {} steps/lane{}]",
+                header.spec,
+                header.lanes,
+                header.base_seed,
+                header.steps_per_lane,
+                if header.wrap.is_empty() {
+                    String::new()
+                } else {
+                    format!(", wrap {}", header.wrap)
+                }
+            );
+            let shard_list: Vec<String> = match args.opt("shard") {
+                Some(spec) => spec
+                    .split(',')
+                    .map(|s| s.trim().to_string())
+                    .filter(|s| !s.is_empty())
+                    .collect(),
+                None => Vec::new(),
+            };
+            let outcome = if !shard_list.is_empty() {
+                let opts = ShardPoolOptions {
+                    lanes: header.lanes,
+                    base_seed: header.base_seed,
+                    token: args.str("token", ""),
+                    wrap: header.wrap.clone(),
+                    ..Default::default()
+                };
+                let mut exec = ShardedEnvPool::connect_opts(&shard_list, &header.spec, opts)
+                    .map_err(|e| anyhow!("{e}"))?;
+                replay_against(&mut exec, &mut reader).map_err(|e| anyhow!("{e}"))?
+            } else {
+                let wrap_chain =
+                    WrapperSpec::parse_chain(&header.wrap).map_err(|e| anyhow!("{e}"))?;
+                let executor = args.str("executor", "pool");
+                let kind = ExecutorKind::parse(&executor).ok_or_else(|| {
+                    anyhow!("unknown executor {executor:?} (vec | pool | pool-async)")
+                })?;
+                let kernel_name = args.str("kernel", KernelMode::default().label());
+                let kernel = KernelMode::parse(&kernel_name).ok_or_else(|| {
+                    anyhow!("unknown kernel {kernel_name:?} (scalar | fused)")
+                })?;
+                let threads = match args.u64("threads", 0)? as usize {
+                    0 => std::thread::available_parallelism()
+                        .map(|n| n.get())
+                        .unwrap_or(1),
+                    t => t,
+                };
+                let mut exec = build_executor_with_kernel(
+                    &header.spec,
+                    kind,
+                    header.lanes,
+                    threads,
+                    header.base_seed,
+                    &wrap_chain,
+                    kernel,
+                )
+                .map_err(|e| anyhow!("{e}"))?;
+                replay_against(exec.as_mut(), &mut reader).map_err(|e| anyhow!("{e}"))?
+            };
+            match outcome.divergence {
+                None => println!(
+                    "replay OK: {} batches x {} lanes match bit for bit",
+                    outcome.batches, outcome.lanes
+                ),
+                Some(d) => {
+                    println!(
+                        "replay DIVERGED at batch {} lane {}: tape {:?}, fresh run {:?}",
+                        d.batch, d.lane, d.expected, d.actual
+                    );
+                    bail!("tape {path:?} does not replay bit-identically");
+                }
+            }
+        }
+        "metrics" => {
+            match args.opt("addr") {
+                Some(addr) => {
+                    // Remote: the daemon's --status JSON embeds a
+                    // telemetry snapshot; render it as Prometheus text.
+                    let token = args.str("token", "");
+                    let report = shard_status(addr, &token).map_err(|e| anyhow!("{e}"))?;
+                    let doc =
+                        cairl::core::json::parse(&report).map_err(|e| anyhow!("{e}"))?;
+                    let snap = doc.get("metrics").ok_or_else(|| {
+                        anyhow!("daemon status has no metrics block (pre-telemetry build?)")
+                    })?;
+                    print!("{}", prometheus_from_snapshot(snap));
+                }
+                None => print!("{}", telemetry::render_prometheus()),
+            }
         }
         "serve" => {
             if let Some(addr) = args.opt("status") {
@@ -384,6 +584,7 @@ fn main() -> Result<()> {
             let threads = args.u64("threads", 0)? as usize;
             let max_lanes = args.u64("max-lanes", 0)? as usize;
             let token = args.str("token", "");
+            let allow = args.str("allow", "");
             let wrap = args.str("wrap", "");
             let executor = args.str("executor", "pool");
             let kind = ExecutorKind::parse(&executor).ok_or_else(|| {
@@ -403,6 +604,7 @@ fn main() -> Result<()> {
                     kernel,
                     max_lanes,
                     token,
+                    allow,
                     wrap,
                 },
             )

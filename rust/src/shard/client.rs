@@ -60,6 +60,9 @@ use crate::core::spaces::Action;
 use crate::shard::net::{FramedStream, ShardAddr};
 use crate::shard::plan::{calibrate_costs, ShardAssignment, ShardPlan};
 use crate::shard::proto::{next_seq, Msg, MsgRef, SEQ_NONE};
+use crate::telemetry::{
+    counter, gauge, histogram, Counter, ExecMetrics, Gauge, Histogram, LATENCY_BOUNDS_US,
+};
 use crate::wrappers::WrapperSpec;
 
 /// Hard ceiling on the pipeline depth: unread replies live in OS socket
@@ -179,6 +182,9 @@ impl ShardClient {
                     max_lanes,
                     retry_ms,
                 } => {
+                    // Cold path (handshake), so a registry lookup per
+                    // retry is fine.
+                    counter("cairl_shard_busy_retries_total").inc();
                     if attempt >= opts.busy_retries {
                         return Err(CairlError::Unavailable(format!(
                             "{}: lane budget exhausted ({active_lanes}/{max_lanes} lanes \
@@ -550,6 +556,17 @@ pub struct ShardedEnvPool {
     /// Ops fully consumed across all shards (pool-level barrier index).
     ops_consumed: usize,
     reconnects: Vec<u64>,
+    metrics: ExecMetrics,
+    /// Per shard: send timestamps of in-flight `Step` ops on the
+    /// *current* connection (cleared on failover, so a replayed op never
+    /// reports a bogus round-trip).
+    sent_at: Vec<VecDeque<Instant>>,
+    /// Per shard: `cairl_shard_rtt_us{shard="s"}` round-trip histogram.
+    m_rtt: Vec<Histogram>,
+    /// Per shard: `cairl_shard_inflight{shard="s"}` occupancy gauge.
+    m_inflight: Vec<Gauge>,
+    /// `cairl_shard_reconnects_total` (re-dials plus re-plans).
+    m_reconnects: Counter,
 }
 
 impl ShardedEnvPool {
@@ -690,6 +707,19 @@ impl ShardedEnvPool {
             ops_acked: vec![0; shards],
             ops_consumed: 0,
             reconnects: vec![0; shards],
+            metrics: ExecMetrics::for_executor("shard"),
+            sent_at: (0..shards)
+                .map(|_| VecDeque::with_capacity(MAX_PIPELINE))
+                .collect(),
+            m_rtt: (0..shards)
+                .map(|s| {
+                    histogram(&format!("cairl_shard_rtt_us{{shard=\"{s}\"}}"), &LATENCY_BOUNDS_US)
+                })
+                .collect(),
+            m_inflight: (0..shards)
+                .map(|s| gauge(&format!("cairl_shard_inflight{{shard=\"{s}\"}}")))
+                .collect(),
+            m_reconnects: counter("cairl_shard_reconnects_total"),
         })
     }
 
@@ -731,22 +761,27 @@ impl ShardedEnvPool {
         (a.first_lane, a.lanes)
     }
 
-    /// Reassemble one shard's `[lanes * shard_padded]` block into the
-    /// global `[n * padded]` buffer: copy each lane's true observation,
-    /// re-zero the global tail.
+    /// Reassemble one shard's observation block into the global
+    /// `[n * padded]` buffer.  Since protocol v4 the wire block is
+    /// **tail-elided**: each lane ships only its true (unpadded)
+    /// observation back to back, so the block is `Σ lane obs_dim` floats
+    /// — padding never crosses the wire.  The client re-pads: copy each
+    /// lane's observation into its global slot and re-zero the tail.
     fn scatter_obs(&self, shard: usize, shard_obs: &[f32], obs: &mut [f32]) {
         let assignment = &self.plan.assignments()[shard];
         let client = &self.clients[shard];
-        let local_padded = client.obs_dim();
+        let expect: usize = client.lane_specs().iter().map(|s| s.obs_dim).sum();
         assert_eq!(
             shard_obs.len(),
-            assignment.lanes * local_padded,
+            expect,
             "{}: short observation block",
             client.addr()
         );
+        let mut cursor = 0usize;
         for j in 0..assignment.lanes {
             let width = client.lane_specs()[j].obs_dim;
-            let src = &shard_obs[j * local_padded..j * local_padded + width];
+            let src = &shard_obs[cursor..cursor + width];
+            cursor += width;
             let base = (assignment.first_lane + j) * self.padded;
             obs[base..base + width].copy_from_slice(src);
             obs[base + width..base + self.padded].fill(0.0);
@@ -861,6 +896,10 @@ impl ShardedEnvPool {
         self.clients[s] = client;
         self.ops_sent[s] = self.history.len();
         self.reconnects[s] += 1;
+        self.m_reconnects.inc();
+        // In-flight ops were re-sent by the replay; their round-trips
+        // are no longer meaningful samples.
+        self.sent_at[s].clear();
         Ok(())
     }
 
@@ -890,6 +929,8 @@ impl ShardedEnvPool {
                 match self.clients[s].send_step(&actions[first..first + lanes]) {
                     Ok(()) => {
                         self.ops_sent[s] += 1;
+                        self.sent_at[s].push_back(Instant::now());
+                        self.m_inflight[s].set(self.clients[s].in_flight() as i64);
                         break;
                     }
                     Err(e) => {
@@ -934,6 +975,12 @@ impl ShardedEnvPool {
                         self.scatter_obs(s, &shard_obs, obs);
                         transitions[first..first + lanes].copy_from_slice(&shard_tr);
                         self.ops_acked[s] = idx + 1;
+                        // A failover replay cleared the timestamp queue;
+                        // only samples from this connection count.
+                        if let Some(t0) = self.sent_at[s].pop_front() {
+                            self.m_rtt[s].record(t0.elapsed().as_micros() as u64);
+                        }
+                        self.m_inflight[s].set(self.clients[s].in_flight() as i64);
                         break;
                     }
                     Err(Fault::Remote(m)) => panic!("sharded step failed: {m}"),
@@ -942,6 +989,8 @@ impl ShardedEnvPool {
             }
         }
         self.ops_consumed += 1;
+        let ends = transitions.iter().filter(|t| t.done || t.truncated).count();
+        self.metrics.record_batch(self.n, ends);
     }
 
     /// Run `steps_per_lane` random-action batches keeping up to the

@@ -235,21 +235,24 @@ impl ShardListener {
     }
 
     /// One nonblocking accept: `Ok(None)` when no client is waiting.
-    pub(crate) fn accept_nonblocking(&self) -> std::io::Result<Option<RawStream>> {
+    /// A connection comes back with the peer's address (`"ip:port"` for
+    /// TCP, `"unix"` for a Unix socket — filesystem permissions already
+    /// scope those) for the daemon's `--allow` check.
+    pub(crate) fn accept_nonblocking(&self) -> std::io::Result<Option<(RawStream, String)>> {
         match self {
             #[cfg(unix)]
             ShardListener::Unix { listener, .. } => match listener.accept() {
                 Ok((stream, _)) => {
                     stream.set_nonblocking(false)?;
-                    Ok(Some(RawStream::Unix(stream)))
+                    Ok(Some((RawStream::Unix(stream), "unix".to_string())))
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => Ok(None),
                 Err(e) => Err(e),
             },
             ShardListener::Tcp(listener) => match listener.accept() {
-                Ok((stream, _)) => {
+                Ok((stream, peer)) => {
                     stream.set_nonblocking(false)?;
-                    Ok(Some(RawStream::Tcp(stream)))
+                    Ok(Some((RawStream::Tcp(stream), peer.to_string())))
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => Ok(None),
                 Err(e) => Err(e),

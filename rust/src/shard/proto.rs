@@ -52,8 +52,10 @@ use crate::core::spaces::{Action, Space};
 /// Protocol revision; bumped on any wire-format change.  A frame whose
 /// version byte differs is rejected at decode — there is no negotiation
 /// (both halves ship in one binary; see `docs/shard-protocol.md` for
-/// the compatibility story).
-pub const PROTO_VERSION: u8 = 3;
+/// the compatibility story).  v4: `Obs`/`StepResult` observation blocks
+/// are tail-elided — each lane ships its true (unpadded) width and the
+/// client re-pads, so padding zeros never cross the wire.
+pub const PROTO_VERSION: u8 = 4;
 
 /// Hard ceiling on payload length (64 MiB) — refuse corrupt length
 /// prefixes before allocating.

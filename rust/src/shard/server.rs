@@ -58,6 +58,7 @@ use crate::coordinator::registry::{self, MixtureSpec};
 use crate::core::env::Transition;
 use crate::core::error::{CairlError, Result};
 use crate::core::json::Value;
+use crate::telemetry::{self, counter, gauge, Counter, Gauge};
 use crate::wrappers::WrapperSpec;
 use crate::shard::net::{FramedStream, RawStream, ShardAddr, ShardListener};
 use crate::shard::proto::{Msg, MsgRef, SeqTracker, PROTO_VERSION, SEQ_NONE};
@@ -92,6 +93,14 @@ pub struct ServeConfig {
     /// when a client's `Hello` carries an empty `wrap` field.  A
     /// non-empty `Hello.wrap` overrides it for that connection.
     pub wrap: String,
+    /// Comma-separated peer-address prefixes admitted at accept time
+    /// (`""` = everyone).  A TCP peer must render (`"ip:port"`) with one
+    /// of the prefixes — `"127.0.0.1"` admits every local port,
+    /// `"10.0."` a subnet.  Unix-socket peers are always admitted
+    /// (filesystem permissions already scope them).  Complements
+    /// `--token`: the token authenticates inside the protocol, the
+    /// allow list rejects before a single frame is read.
+    pub allow: String,
 }
 
 impl ServeConfig {
@@ -107,6 +116,7 @@ impl ServeConfig {
             max_lanes: 0,
             token: String::new(),
             wrap: String::new(),
+            allow: String::new(),
         }
     }
 
@@ -167,6 +177,14 @@ pub struct ServerStats {
     frames: AtomicU64,
     steps: AtomicU64,
     active_lanes: AtomicUsize,
+    rejected_peers: AtomicU64,
+    /// Telemetry mirrors of the daemon counters, so `cairl metrics`
+    /// sees the serve fabric alongside executor and shard-client series.
+    m_connections: Counter,
+    m_frames: Counter,
+    m_bad_frames: Counter,
+    m_rejected_peers: Counter,
+    m_active_lanes: Gauge,
     clients: Mutex<BTreeMap<u64, ClientEntry>>,
     /// `(spec, wrap, base_seed, first_lane)` tuples seen across the
     /// daemon's lifetime: a repeat is a client re-handshaking after a
@@ -187,6 +205,12 @@ impl ServerStats {
             frames: AtomicU64::new(0),
             steps: AtomicU64::new(0),
             active_lanes: AtomicUsize::new(0),
+            rejected_peers: AtomicU64::new(0),
+            m_connections: counter("cairl_serve_connections_total"),
+            m_frames: counter("cairl_serve_frames_total"),
+            m_bad_frames: counter("cairl_serve_bad_frames_total"),
+            m_rejected_peers: counter("cairl_serve_rejected_peers_total"),
+            m_active_lanes: gauge("cairl_serve_active_lanes"),
             clients: Mutex::new(BTreeMap::new()),
             origins: Mutex::new(BTreeMap::new()),
         }
@@ -223,10 +247,28 @@ impl ServerStats {
         self.steps.load(Ordering::Relaxed)
     }
 
+    /// Connections rejected by the `--allow` peer list at accept time.
+    pub fn rejected_peers(&self) -> u64 {
+        self.rejected_peers.load(Ordering::Relaxed)
+    }
+
+    /// Count an `--allow` rejection (accept-time, pre-protocol).
+    fn note_rejected_peer(&self) {
+        self.rejected_peers.fetch_add(1, Ordering::Relaxed);
+        self.m_rejected_peers.inc();
+    }
+
+    /// Count a frame the connection loop could not decode (corruption,
+    /// checksum/length mismatch) or that violated request sequencing.
+    fn note_bad_frame(&self) {
+        self.m_bad_frames.inc();
+    }
+
     /// Reserve `lanes` against the budget; `false` = over budget.
     fn try_reserve(&self, lanes: usize) -> bool {
         if self.max_lanes == 0 {
             self.active_lanes.fetch_add(lanes, Ordering::Relaxed);
+            self.m_active_lanes.set(self.active_lanes() as i64);
             return true;
         }
         let mut cur = self.active_lanes.load(Ordering::Relaxed);
@@ -240,7 +282,10 @@ impl ServerStats {
                 Ordering::Relaxed,
                 Ordering::Relaxed,
             ) {
-                Ok(_) => return true,
+                Ok(_) => {
+                    self.m_active_lanes.set(self.active_lanes() as i64);
+                    return true;
+                }
                 Err(now) => cur = now,
             }
         }
@@ -249,6 +294,7 @@ impl ServerStats {
     fn release_lanes(&self, lanes: usize) {
         if lanes > 0 {
             self.active_lanes.fetch_sub(lanes, Ordering::Relaxed);
+            self.m_active_lanes.set(self.active_lanes() as i64);
         }
     }
 
@@ -284,6 +330,7 @@ impl ServerStats {
     /// Global + per-client frame/step accounting for one request.
     fn note_request(&self, id: u64, steps: u64) {
         self.frames.fetch_add(1, Ordering::Relaxed);
+        self.m_frames.inc();
         if steps > 0 {
             self.steps.fetch_add(steps, Ordering::Relaxed);
         }
@@ -343,6 +390,14 @@ impl ServerStats {
         doc.insert("steps_per_sec".into(), Value::Num(steps / uptime));
         doc.insert("active_lanes".into(), Value::Num(self.active_lanes() as f64));
         doc.insert("max_lanes".into(), Value::Num(self.max_lanes as f64));
+        doc.insert(
+            "rejected_peers".into(),
+            Value::Num(self.rejected_peers() as f64),
+        );
+        // The whole process-wide metrics registry rides along, so
+        // `cairl metrics --addr ADDR` can render Prometheus text from
+        // one status round-trip.
+        doc.insert("metrics".into(), telemetry::snapshot());
         let clients: Vec<Value> = self
             .clients
             .lock()
@@ -551,9 +606,25 @@ fn requested_lanes(spec: &str, config: &ServeConfig) -> Result<usize> {
     }
 }
 
+/// Does `peer` pass the daemon's `--allow` list?  Empty list admits
+/// everyone; Unix-socket peers (`"unix"`) are always admitted; a TCP
+/// peer (`"ip:port"`) must start with one of the comma-separated
+/// prefixes.
+fn peer_allowed(allow: &str, peer: &str) -> bool {
+    if allow.is_empty() || peer == "unix" {
+        return true;
+    }
+    allow
+        .split(',')
+        .map(str::trim)
+        .filter(|p| !p.is_empty())
+        .any(|prefix| peer.starts_with(prefix))
+}
+
 /// Poll-accept until stopped (or forever when `stop` is `None`); each
 /// connection gets its own detached thread, a stable id and a raw
-/// handle in the kill table.
+/// handle in the kill table.  Peers failing the `--allow` list are
+/// dropped here, before a single frame is read.
 fn accept_loop(
     listener: ShardListener,
     config: Arc<ServeConfig>,
@@ -568,8 +639,15 @@ fn accept_loop(
             }
         }
         match listener.accept_nonblocking() {
-            Ok(Some(stream)) => {
+            Ok(Some((stream, peer))) => {
+                if !peer_allowed(&config.allow, &peer) {
+                    stats.note_rejected_peer();
+                    eprintln!("cairl serve: rejected peer {peer} (not in --allow)");
+                    drop(stream);
+                    continue;
+                }
                 let id = stats.total_connections.fetch_add(1, Ordering::Relaxed) + 1;
+                stats.m_connections.inc();
                 if let Ok(raw) = stream.try_clone() {
                     if let Ok(mut table) = conns.lock() {
                         table.push((id, raw));
@@ -606,6 +684,17 @@ fn authorized(config: &ServeConfig, token: &str) -> bool {
     config.token.is_empty() || token == config.token
 }
 
+/// Pack a padded `[n * padded]` observation buffer into its tail-elided
+/// wire form: each lane's true observation back to back (protocol v4 —
+/// padding never crosses the wire; the client re-pads).
+fn pack_obs(obs: &[f32], padded: usize, widths: &[usize], packed: &mut [f32]) {
+    let mut cursor = 0usize;
+    for (i, &w) in widths.iter().enumerate() {
+        packed[cursor..cursor + w].copy_from_slice(&obs[i * padded..i * padded + w]);
+        cursor += w;
+    }
+}
+
 /// One connection: handshake, then sequenced request/reply until
 /// `Close`/EOF.
 fn serve_conn(stream: RawStream, config: &ServeConfig, stats: &ServerStats, id: u64) {
@@ -617,17 +706,24 @@ fn serve_conn(stream: RawStream, config: &ServeConfig, stats: &ServerStats, id: 
     // Reusable step/reset buffers, sized at handshake.
     let mut obs: Vec<f32> = Vec::new();
     let mut transitions: Vec<Transition> = Vec::new();
+    // Wire-form obs scratch: per-lane true widths and the tail-elided
+    // block they pack into (`Σ widths` floats), sized at handshake.
+    let mut padded = 0usize;
+    let mut widths: Vec<usize> = Vec::new();
+    let mut packed: Vec<f32> = Vec::new();
 
     loop {
         let frame = match stream.recv() {
             Ok(frame) => frame,
             Err(CairlError::Io(_)) => return, // peer hung up
             Err(e) => {
+                stats.note_bad_frame();
                 bail(&mut stream, SEQ_NONE, &format!("bad frame: {e}"));
                 return;
             }
         };
         if let Err(e) = seqs.accept(frame.seq) {
+            stats.note_bad_frame();
             bail(&mut stream, SEQ_NONE, &e.to_string());
             return;
         }
@@ -729,6 +825,9 @@ fn serve_conn(stream: RawStream, config: &ServeConfig, stats: &ServerStats, id: 
                         let d = exec.obs_dim();
                         obs = vec![0.0f32; n * d];
                         transitions = vec![Transition::default(); n];
+                        padded = d;
+                        widths = exec.lane_specs().iter().map(|s| s.obs_dim).collect();
+                        packed = vec![0.0f32; widths.iter().sum()];
                         // Register before replying: a client that probes
                         // `--status` right after its handshake must see
                         // itself in the table.
@@ -782,7 +881,8 @@ fn serve_conn(stream: RawStream, config: &ServeConfig, stats: &ServerStats, id: 
                     bail(&mut stream, seq, "executor panicked during Reset");
                     return;
                 }
-                if stream.send(seq, MsgRef::Obs { obs: &obs }).is_err() {
+                pack_obs(&obs, padded, &widths, &mut packed);
+                if stream.send(seq, MsgRef::Obs { obs: &packed }).is_err() {
                     return;
                 }
             }
@@ -810,11 +910,12 @@ fn serve_conn(stream: RawStream, config: &ServeConfig, stats: &ServerStats, id: 
                     bail(&mut stream, seq, "executor panicked during Step");
                     return;
                 }
+                pack_obs(&obs, padded, &widths, &mut packed);
                 if stream
                     .send(
                         seq,
                         MsgRef::StepResult {
-                            obs: &obs,
+                            obs: &packed,
                             transitions: &transitions,
                         },
                     )

@@ -1,0 +1,45 @@
+//! Fleet observability: the zero-allocation metrics core and the
+//! deterministic trajectory tape.
+//!
+//! Two halves, both opt-in at the edges and free on the hot path:
+//!
+//! * [`metrics`] — a process-wide registry of counters, gauges and
+//!   fixed-bucket histograms.  Handles are grabbed once at construction
+//!   time (the only allocating step); recording is a handful of relaxed
+//!   atomic operations with **zero steady-state allocation**, pinned by
+//!   the counting-allocator suite in `rust/tests/alloc_free.rs`.  Every
+//!   executor ([`VecEnv`](crate::coordinator::vec_env::VecEnv),
+//!   [`EnvPool`](crate::coordinator::pool::EnvPool),
+//!   [`AsyncEnvPool`](crate::coordinator::pool::AsyncEnvPool), the
+//!   sharded pool), the shard client and the `cairl serve` daemon
+//!   record into it.  Snapshots export as JSON (merged into
+//!   `cairl serve --status`) or a Prometheus-style text dump
+//!   (`cairl metrics`, `cairl run --metrics FILE`).  A process-wide
+//!   enable gate ([`metrics::set_enabled`]) exists for A/B overhead
+//!   measurement (`benches/ablation_dispatch.rs` asserts the cost).
+//! * [`tape`] — byte-stable, length-prefixed, checksummed binary
+//!   trajectory tapes.  `cairl run --record FILE` captures the header
+//!   (registry spec, seed, lane layout) plus every batch's actions and
+//!   transitions; observations are elided because the determinism
+//!   contract (docs/ARCHITECTURE.md) re-derives them.  `cairl replay
+//!   FILE` re-executes the tape against a fresh executor — any kind,
+//!   any thread count, local or sharded — and reports byte-for-byte
+//!   match or the first divergent (lane, step) with both transitions.
+//!
+//! The same tape recorded through any executor topology is
+//! byte-identical, which is what makes a tape a *portable* fleet
+//! artifact: record in production behind shards, bisect locally.
+
+#![warn(missing_docs)]
+
+pub mod metrics;
+pub mod tape;
+
+pub use metrics::{
+    counter, enabled, gauge, histogram, prometheus_from_snapshot, render_prometheus,
+    set_enabled, snapshot, Counter, ExecMetrics, Gauge, Histogram, LATENCY_BOUNDS_US,
+};
+pub use tape::{
+    replay_against, ReplayOutcome, TapeBatch, TapeDivergence, TapeHeader, TapeReader,
+    TapeWriter,
+};

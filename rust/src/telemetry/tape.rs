@@ -1,0 +1,667 @@
+//! Deterministic trajectory tapes: byte-stable record / replay of
+//! batched workloads.
+//!
+//! A tape is the *portable witness* of a seeded run.  The determinism
+//! contract (docs/ARCHITECTURE.md) says lane `i`'s trajectory is a pure
+//! function of `(spec, base_seed + i, action stream)` — so a tape only
+//! has to capture the header (spec, seed, lane layout) and, per batch,
+//! the actions fed in and the transitions that came back.  Observations
+//! are elided: replay re-derives them by re-executing, and the
+//! transition comparison catches any divergence the observations would.
+//!
+//! ## On-disk format (version 1)
+//!
+//! ```text
+//! file   = magic record*
+//! magic  = "CAIRLTP" [version: u8]            (8 bytes)
+//! record = [len: u32 LE] body [fnv1a32(body): u32 LE]
+//! body   = [tag: u8] ...
+//!   tag 1 HEADER: spec: str, wrap: str, lanes: u32, base_seed: u64,
+//!                 steps_per_lane: u64,
+//!                 [count: u32] (env_id: str, obs_dim: u32) x count
+//!   tag 2 BATCH:  [count: u32] action x count,
+//!                 [count: u32] transition x count
+//!   tag 3 END:    batches: u64
+//! ```
+//!
+//! `str` is `[len: u32] bytes` (UTF-8); `action` and `transition`
+//! follow the shard wire spec's grammar (kind byte + payload; reward as
+//! raw f32 bits, so equality is bit equality).  All integers are
+//! little-endian.  The checksum constants match the shard protocol's
+//! FNV-1a/32 ([`crate::shard::proto`]).
+//!
+//! Exactly one HEADER (first record) and one END (last record) are
+//! legal; a missing END means the recording process died mid-run.
+//! Decoding is **total**: truncation, checksum mismatch, hostile
+//! counts or trailing bytes surface [`CairlError::Tape`], never a
+//! panic and never an unbounded allocation.
+//!
+//! Byte stability: two runs of the same `(spec, wrap, lanes, seed,
+//! steps)` produce byte-identical tapes **regardless of executor kind,
+//! thread count, kernel mode or shard placement** — pinned by
+//! `rust/tests/telemetry.rs` and the CI shard-smoke `cmp`.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::coordinator::pool::BatchedExecutor;
+use crate::core::env::Transition;
+use crate::core::error::{CairlError, Result};
+use crate::core::spaces::Action;
+
+/// File magic: `CAIRLTP` + format version byte.
+pub const TAPE_MAGIC: [u8; 8] = *b"CAIRLTP\x01";
+/// Largest legal record payload; refused before allocation (a corrupt
+/// length prefix must not become an OOM kill).
+pub const MAX_RECORD: u32 = 1 << 26;
+
+const TAG_HEADER: u8 = 1;
+const TAG_BATCH: u8 = 2;
+const TAG_END: u8 = 3;
+
+fn terr(msg: impl Into<String>) -> CairlError {
+    CairlError::Tape(msg.into())
+}
+
+/// FNV-1a/32 — the same checksum the shard wire protocol uses.
+fn fnv1a32(bytes: &[u8]) -> u32 {
+    let mut hash: u32 = 0x811c_9dc5;
+    for &b in bytes {
+        hash ^= b as u32;
+        hash = hash.wrapping_mul(0x0100_0193);
+    }
+    hash
+}
+
+// --- encoding helpers -------------------------------------------------
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_action(out: &mut Vec<u8>, a: &Action) {
+    match a {
+        Action::Discrete(i) => {
+            out.push(0);
+            put_u64(out, *i as u64);
+        }
+        Action::Continuous(v) => {
+            out.push(1);
+            put_u32(out, v.len() as u32);
+            for &x in v {
+                put_u32(out, x.to_bits());
+            }
+        }
+    }
+}
+
+fn put_transition(out: &mut Vec<u8>, t: &Transition) {
+    put_u32(out, t.reward.to_bits());
+    out.push(u8::from(t.done) | (u8::from(t.truncated) << 1));
+}
+
+// --- bounds-checked decoding ------------------------------------------
+
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.buf.len() - self.pos < n {
+            return Err(terr(format!(
+                "truncated record body: wanted {n} bytes, {} left",
+                self.buf.len() - self.pos
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// A count field validated against the bytes actually present, so a
+    /// hostile count cannot drive a huge allocation.
+    fn count(&mut self, min_elem: usize) -> Result<usize> {
+        let n = self.u32()? as usize;
+        if n.saturating_mul(min_elem) > self.buf.len() - self.pos {
+            return Err(terr(format!(
+                "count {n} overruns record ({} bytes left)",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(n)
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.count(1)?;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| terr("invalid UTF-8 in tape string"))
+    }
+
+    fn action(&mut self) -> Result<Action> {
+        match self.u8()? {
+            0 => Ok(Action::Discrete(self.u64()? as usize)),
+            1 => {
+                let n = self.count(4)?;
+                let mut v = Vec::with_capacity(n);
+                for _ in 0..n {
+                    v.push(f32::from_bits(self.u32()?));
+                }
+                Ok(Action::Continuous(v))
+            }
+            k => Err(terr(format!("unknown action kind {k}"))),
+        }
+    }
+
+    fn transition(&mut self) -> Result<Transition> {
+        let reward = f32::from_bits(self.u32()?);
+        let flags = self.u8()?;
+        if flags > 3 {
+            return Err(terr(format!("invalid transition flags 0x{flags:02x}")));
+        }
+        Ok(Transition {
+            reward,
+            done: flags & 1 != 0,
+            truncated: flags & 2 != 0,
+        })
+    }
+
+    fn finish(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            return Err(terr(format!(
+                "{} trailing bytes after record body",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+// --- header -----------------------------------------------------------
+
+/// Everything replay needs to rebuild a bit-identical executor, plus
+/// per-lane summaries for divergence reporting.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TapeHeader {
+    /// Registry spec the executor was built from (mixtures included).
+    pub spec: String,
+    /// Pool-level wrapper chain (`--wrap` grammar; empty = none).
+    pub wrap: String,
+    /// Number of lanes.
+    pub lanes: usize,
+    /// Base seed; lane `i` was seeded `base_seed + i`.
+    pub base_seed: u64,
+    /// Steps per lane the recorded workload ran.
+    pub steps_per_lane: u64,
+    /// Per-lane `(env_id, obs_dim)` as reported by
+    /// [`BatchedExecutor::lane_specs`].
+    pub lane_summaries: Vec<(String, u32)>,
+}
+
+impl TapeHeader {
+    /// Assemble a header from a built executor and the workload knobs.
+    pub fn for_executor(
+        exec: &dyn BatchedExecutor,
+        spec: &str,
+        wrap: &str,
+        base_seed: u64,
+        steps_per_lane: u64,
+    ) -> TapeHeader {
+        TapeHeader {
+            spec: spec.to_string(),
+            wrap: wrap.to_string(),
+            lanes: exec.num_lanes(),
+            base_seed,
+            steps_per_lane,
+            lane_summaries: exec
+                .lane_specs()
+                .iter()
+                .map(|s| (s.env_id.clone(), s.obs_dim as u32))
+                .collect(),
+        }
+    }
+}
+
+// --- writer -----------------------------------------------------------
+
+/// Streams a workload onto disk as a tape.  Created by
+/// [`TapeWriter::create`]; [`TapeWriter::finish`] seals the tape with
+/// the END record (a tape without one reads back as an error).
+pub struct TapeWriter {
+    w: BufWriter<File>,
+    scratch: Vec<u8>,
+    batches: u64,
+    lanes: usize,
+}
+
+impl TapeWriter {
+    /// Create `path` and write the magic + HEADER record.
+    pub fn create(path: &Path, header: &TapeHeader) -> Result<TapeWriter> {
+        let file = File::create(path)?;
+        let mut writer = TapeWriter {
+            w: BufWriter::new(file),
+            scratch: Vec::with_capacity(4096),
+            batches: 0,
+            lanes: header.lanes,
+        };
+        writer.w.write_all(&TAPE_MAGIC)?;
+        writer.scratch.clear();
+        writer.scratch.push(TAG_HEADER);
+        put_str(&mut writer.scratch, &header.spec);
+        put_str(&mut writer.scratch, &header.wrap);
+        put_u32(&mut writer.scratch, header.lanes as u32);
+        put_u64(&mut writer.scratch, header.base_seed);
+        put_u64(&mut writer.scratch, header.steps_per_lane);
+        put_u32(&mut writer.scratch, header.lane_summaries.len() as u32);
+        for (id, dim) in &header.lane_summaries {
+            put_str(&mut writer.scratch, id);
+            put_u32(&mut writer.scratch, *dim);
+        }
+        writer.flush_record()?;
+        Ok(writer)
+    }
+
+    fn flush_record(&mut self) -> Result<()> {
+        let body = &self.scratch;
+        self.w.write_all(&(body.len() as u32).to_le_bytes())?;
+        self.w.write_all(body)?;
+        self.w.write_all(&fnv1a32(body).to_le_bytes())?;
+        Ok(())
+    }
+
+    /// Append one batch: the actions fed to `step_into` and the
+    /// transitions it returned.
+    pub fn write_batch(&mut self, actions: &[Action], transitions: &[Transition]) -> Result<()> {
+        debug_assert_eq!(actions.len(), self.lanes);
+        debug_assert_eq!(transitions.len(), self.lanes);
+        self.scratch.clear();
+        self.scratch.push(TAG_BATCH);
+        put_u32(&mut self.scratch, actions.len() as u32);
+        for a in actions {
+            put_action(&mut self.scratch, a);
+        }
+        put_u32(&mut self.scratch, transitions.len() as u32);
+        for t in transitions {
+            put_transition(&mut self.scratch, t);
+        }
+        self.batches += 1;
+        self.flush_record()
+    }
+
+    /// Seal the tape (END record) and flush to disk.  Returns the
+    /// number of batches written.
+    pub fn finish(mut self) -> Result<u64> {
+        self.scratch.clear();
+        self.scratch.push(TAG_END);
+        put_u64(&mut self.scratch, self.batches);
+        self.flush_record()?;
+        self.w.flush()?;
+        Ok(self.batches)
+    }
+}
+
+// --- reader -----------------------------------------------------------
+
+/// One decoded BATCH record.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TapeBatch {
+    /// Per-lane actions fed to the executor.
+    pub actions: Vec<Action>,
+    /// Per-lane transitions the executor returned.
+    pub transitions: Vec<Transition>,
+}
+
+/// Reads a tape back, validating every record's length and checksum.
+pub struct TapeReader {
+    r: BufReader<File>,
+    header: TapeHeader,
+    batches_read: u64,
+    ended: bool,
+}
+
+impl TapeReader {
+    /// Open `path`, validating the magic and the HEADER record.
+    pub fn open(path: &Path) -> Result<TapeReader> {
+        let file = File::open(path)?;
+        let mut r = BufReader::new(file);
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)
+            .map_err(|_| terr("file too short for tape magic"))?;
+        if magic[..7] != TAPE_MAGIC[..7] {
+            return Err(terr("not a CaiRL tape (bad magic)"));
+        }
+        if magic[7] != TAPE_MAGIC[7] {
+            return Err(terr(format!(
+                "unsupported tape version {} (this build reads {})",
+                magic[7], TAPE_MAGIC[7]
+            )));
+        }
+        let body = read_record(&mut r)?.ok_or_else(|| terr("tape ends before HEADER"))?;
+        let mut cur = Cur { buf: &body, pos: 0 };
+        if cur.u8()? != TAG_HEADER {
+            return Err(terr("first tape record is not HEADER"));
+        }
+        let spec = cur.str()?;
+        let wrap = cur.str()?;
+        let lanes = cur.u32()? as usize;
+        let base_seed = cur.u64()?;
+        let steps_per_lane = cur.u64()?;
+        let n = cur.count(5)?;
+        let mut lane_summaries = Vec::with_capacity(n);
+        for _ in 0..n {
+            let id = cur.str()?;
+            let dim = cur.u32()?;
+            lane_summaries.push((id, dim));
+        }
+        cur.finish()?;
+        if lanes == 0 || lane_summaries.len() != lanes {
+            return Err(terr(format!(
+                "header lane mismatch: {lanes} lanes, {} summaries",
+                lane_summaries.len()
+            )));
+        }
+        Ok(TapeReader {
+            r,
+            header: TapeHeader {
+                spec,
+                wrap,
+                lanes,
+                base_seed,
+                steps_per_lane,
+                lane_summaries,
+            },
+            batches_read: 0,
+            ended: false,
+        })
+    }
+
+    /// The decoded HEADER.
+    pub fn header(&self) -> &TapeHeader {
+        &self.header
+    }
+
+    /// Decode the next BATCH, or `None` after a valid END record.  EOF
+    /// without an END is an error (the recording died mid-run).
+    pub fn next_batch(&mut self) -> Result<Option<TapeBatch>> {
+        if self.ended {
+            return Ok(None);
+        }
+        let body = read_record(&mut self.r)?
+            .ok_or_else(|| terr("tape truncated: EOF before END record"))?;
+        let mut cur = Cur { buf: &body, pos: 0 };
+        match cur.u8()? {
+            TAG_BATCH => {
+                let na = cur.count(2)?;
+                let mut actions = Vec::with_capacity(na);
+                for _ in 0..na {
+                    actions.push(cur.action()?);
+                }
+                let nt = cur.count(5)?;
+                let mut transitions = Vec::with_capacity(nt);
+                for _ in 0..nt {
+                    transitions.push(cur.transition()?);
+                }
+                cur.finish()?;
+                if na != self.header.lanes || nt != self.header.lanes {
+                    return Err(terr(format!(
+                        "batch lane mismatch: {na} actions / {nt} transitions \
+                         on a {}-lane tape",
+                        self.header.lanes
+                    )));
+                }
+                self.batches_read += 1;
+                Ok(Some(TapeBatch { actions, transitions }))
+            }
+            TAG_END => {
+                let declared = cur.u64()?;
+                cur.finish()?;
+                if declared != self.batches_read {
+                    return Err(terr(format!(
+                        "END declares {declared} batches, read {}",
+                        self.batches_read
+                    )));
+                }
+                self.ended = true;
+                Ok(None)
+            }
+            TAG_HEADER => Err(terr("duplicate HEADER record")),
+            t => Err(terr(format!("unknown tape record tag {t}"))),
+        }
+    }
+}
+
+/// Read one `[len] body [checksum]` record; `Ok(None)` at clean EOF
+/// (the caller decides whether EOF is legal here).
+fn read_record(r: &mut BufReader<File>) -> Result<Option<Vec<u8>>> {
+    let mut len_buf = [0u8; 4];
+    match r.read_exact(&mut len_buf) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e.into()),
+    }
+    let len = u32::from_le_bytes(len_buf);
+    if len == 0 || len > MAX_RECORD {
+        return Err(terr(format!("implausible record length {len}")));
+    }
+    let mut body = vec![0u8; len as usize];
+    r.read_exact(&mut body)
+        .map_err(|_| terr("tape truncated inside a record body"))?;
+    let mut sum_buf = [0u8; 4];
+    r.read_exact(&mut sum_buf)
+        .map_err(|_| terr("tape truncated before a record checksum"))?;
+    let expect = u32::from_le_bytes(sum_buf);
+    let got = fnv1a32(&body);
+    if got != expect {
+        return Err(terr(format!(
+            "record checksum mismatch (stored {expect:#010x}, computed {got:#010x})"
+        )));
+    }
+    Ok(Some(body))
+}
+
+// --- replay -----------------------------------------------------------
+
+/// The first point where a replay's transitions differ from the tape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TapeDivergence {
+    /// 0-based batch index (== per-lane step index for lockstep runs).
+    pub batch: u64,
+    /// Lane whose transition diverged.
+    pub lane: usize,
+    /// What the tape recorded.
+    pub expected: Transition,
+    /// What the fresh executor produced.
+    pub actual: Transition,
+}
+
+/// Result of [`replay_against`]: how much tape was replayed and the
+/// first divergence, if any.
+#[derive(Clone, Debug)]
+pub struct ReplayOutcome {
+    /// Batches re-executed (stops at the first divergence).
+    pub batches: u64,
+    /// Lane count of the tape.
+    pub lanes: usize,
+    /// `None` = byte-for-byte match.
+    pub divergence: Option<TapeDivergence>,
+}
+
+/// Bit-exact transition equality (reward compared as raw f32 bits).
+fn same_transition(a: &Transition, b: &Transition) -> bool {
+    a.reward.to_bits() == b.reward.to_bits() && a.done == b.done && a.truncated == b.truncated
+}
+
+/// Re-execute `reader`'s tape against a freshly built executor (which
+/// must match the header's spec/lanes/seed — see
+/// [`TapeHeader`]) and compare every transition bit for bit.
+///
+/// Returns after the first divergent batch; a divergence is a
+/// *finding*, not an error (`Err` is reserved for tape corruption and
+/// executor/lane-shape mismatches).
+pub fn replay_against(
+    exec: &mut dyn BatchedExecutor,
+    reader: &mut TapeReader,
+) -> Result<ReplayOutcome> {
+    let lanes = reader.header().lanes;
+    if exec.num_lanes() != lanes {
+        return Err(terr(format!(
+            "executor has {} lanes, tape has {lanes}",
+            exec.num_lanes()
+        )));
+    }
+    let d = exec.obs_dim();
+    let mut obs = vec![0.0f32; lanes * d];
+    let mut transitions = vec![Transition::default(); lanes];
+    exec.reset_into(&mut obs);
+    let mut batches = 0u64;
+    while let Some(batch) = reader.next_batch()? {
+        exec.step_into(&batch.actions, &mut obs, &mut transitions);
+        for (lane, (expected, actual)) in
+            batch.transitions.iter().zip(transitions.iter()).enumerate()
+        {
+            if !same_transition(expected, actual) {
+                return Ok(ReplayOutcome {
+                    batches,
+                    lanes,
+                    divergence: Some(TapeDivergence {
+                        batch: batches,
+                        lane,
+                        expected: *expected,
+                        actual: *actual,
+                    }),
+                });
+            }
+        }
+        batches += 1;
+    }
+    Ok(ReplayOutcome {
+        batches,
+        lanes,
+        divergence: None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_path(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("cairl-tape-unit-{}-{tag}.tape", std::process::id()))
+    }
+
+    fn sample_header() -> TapeHeader {
+        TapeHeader {
+            spec: "CartPole-v1".to_string(),
+            wrap: String::new(),
+            lanes: 2,
+            base_seed: 7,
+            steps_per_lane: 3,
+            lane_summaries: vec![
+                ("CartPole-v1".to_string(), 4),
+                ("CartPole-v1".to_string(), 4),
+            ],
+        }
+    }
+
+    #[test]
+    fn roundtrip_header_and_batches() {
+        let path = tmp_path("roundtrip");
+        let header = sample_header();
+        let mut w = TapeWriter::create(&path, &header).unwrap();
+        let actions = vec![Action::Discrete(1), Action::Continuous(vec![0.5, -1.0])];
+        let transitions = vec![
+            Transition::live(1.0),
+            Transition {
+                reward: -0.25,
+                done: true,
+                truncated: true,
+            },
+        ];
+        w.write_batch(&actions, &transitions).unwrap();
+        assert_eq!(w.finish().unwrap(), 1);
+
+        let mut r = TapeReader::open(&path).unwrap();
+        assert_eq!(r.header(), &header);
+        let batch = r.next_batch().unwrap().expect("one batch");
+        assert_eq!(batch.actions, actions);
+        assert_eq!(batch.transitions, transitions);
+        assert!(r.next_batch().unwrap().is_none());
+        // Past END stays None.
+        assert!(r.next_batch().unwrap().is_none());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// Open and drain a tape end to end, surfacing the first error.
+    fn drain(path: &Path) -> Result<()> {
+        let mut r = TapeReader::open(path)?;
+        while r.next_batch()?.is_some() {}
+        Ok(())
+    }
+
+    #[test]
+    fn corruption_is_an_error_never_a_panic() {
+        let path = tmp_path("corrupt");
+        let mut w = TapeWriter::create(&path, &sample_header()).unwrap();
+        w.write_batch(
+            &[Action::Discrete(0), Action::Discrete(1)],
+            &[Transition::live(1.0), Transition::live(1.0)],
+        )
+        .unwrap();
+        w.finish().unwrap();
+        let clean = std::fs::read(&path).unwrap();
+        assert!(drain(&path).is_ok(), "pristine tape must read clean");
+
+        // Flip every byte in turn: every flip lands in the magic, a
+        // length prefix, a checksummed body or a checksum — all are
+        // detected.  The invariant under test: an error, never a panic.
+        let dirty = tmp_path("corrupt-dirty");
+        for i in 0..clean.len() {
+            let mut bytes = clean.clone();
+            bytes[i] ^= 0xff;
+            std::fs::write(&dirty, &bytes).unwrap();
+            assert!(drain(&dirty).is_err(), "byte {i} flip must be detected");
+        }
+        // Truncation at every length.
+        for cut in 0..clean.len() {
+            std::fs::write(&dirty, &clean[..cut]).unwrap();
+            assert!(drain(&dirty).is_err(), "truncation at {cut} must be detected");
+        }
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(&dirty);
+    }
+
+    #[test]
+    fn unsealed_tape_reads_as_truncated() {
+        // A writer dropped without finish() leaves no END record (the
+        // recording process died mid-run); reading it back is an error.
+        let path = tmp_path("unsealed");
+        let w = TapeWriter::create(&path, &sample_header()).unwrap();
+        drop(w); // BufWriter flushes magic + HEADER on drop
+        let err = drain(&path).unwrap_err();
+        assert!(matches!(err, CairlError::Tape(_)), "got {err}");
+        let _ = std::fs::remove_file(&path);
+    }
+}

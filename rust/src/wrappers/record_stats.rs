@@ -10,6 +10,7 @@ use std::collections::VecDeque;
 use crate::core::env::{Env, EpisodeStats, Step, Transition};
 use crate::core::spaces::{Action, Space};
 use crate::render::Framebuffer;
+use crate::telemetry::{counter, Counter};
 
 /// Records per-episode undiscounted return and length.
 #[derive(Clone, Debug)]
@@ -21,6 +22,11 @@ pub struct RecordEpisodeStatistics<E: Env> {
     history: VecDeque<EpisodeStats>,
     capacity: usize,
     last: Option<EpisodeStats>,
+    /// Process-wide episode tallies (`cairl_episodes_total`,
+    /// `cairl_episode_steps_total`) — the fleet-level view of the same
+    /// per-env stats this wrapper keeps locally.
+    m_episodes: Counter,
+    m_steps: Counter,
 }
 
 impl<E: Env> RecordEpisodeStatistics<E> {
@@ -33,6 +39,8 @@ impl<E: Env> RecordEpisodeStatistics<E> {
             history: VecDeque::with_capacity(capacity),
             capacity,
             last: None,
+            m_episodes: counter("cairl_episodes_total"),
+            m_steps: counter("cairl_episode_steps_total"),
         }
     }
 
@@ -69,6 +77,8 @@ impl<E: Env> RecordEpisodeStatistics<E> {
                 ret: self.ret,
                 len: self.len,
             };
+            self.m_episodes.inc();
+            self.m_steps.add(self.len as u64);
             self.last = Some(stats);
             if self.history.len() == self.capacity {
                 self.history.pop_front();

@@ -16,6 +16,10 @@
 //! any thread in the process is counted, so a measured window must
 //! contain nothing but the pool loop (the tests serialise on a mutex
 //! to keep each other's warm-up out of the windows).
+//!
+//! The telemetry record path (counter/gauge/histogram updates) is
+//! pinned here too: instrumentation rides the loops above, so it must
+//! be atomics-only once the handles exist.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -162,4 +166,34 @@ fn scalar_sync_pool_step_loop_allocates_nothing() {
     let _guard = WINDOW_LOCK.lock().unwrap_or_else(|e| e.into_inner());
     let pool = EnvPool::new(8, 17, 2, || TimeLimit::new(CartPole::new(), 50));
     assert_sync_pool_step_loop_is_clean(pool, "scalar EnvPool step_into loop");
+}
+
+#[test]
+fn telemetry_record_path_allocates_nothing() {
+    let _guard = WINDOW_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    // Registration is the cold path and may allocate; grab the handles
+    // once up front, exactly as the executors do at construction.
+    let c = cairl::telemetry::counter("alloc_free_test_counter");
+    let g = cairl::telemetry::gauge("alloc_free_test_gauge");
+    let h = cairl::telemetry::histogram(
+        "alloc_free_test_histogram",
+        &cairl::telemetry::LATENCY_BOUNDS_US,
+    );
+    // Warm-up: first touches of each handle.
+    c.add(2);
+    g.set(-3);
+    h.record(777);
+    let mut i: u64 = 0;
+    assert_some_window_is_clean("telemetry counter/gauge/histogram record", |iters| {
+        for _ in 0..iters {
+            c.inc();
+            c.add(3);
+            g.set(i as i64 - 7);
+            // Sweep the value so every histogram bucket (including the
+            // overflow slot) is exercised inside the window.
+            h.record(i * 131);
+            i += 1;
+        }
+        std::hint::black_box(&i);
+    });
 }

@@ -1,0 +1,304 @@
+//! Integration: fleet observability — deterministic trajectory tapes
+//! and the telemetry metrics registry.
+//!
+//! The tape contract (ISSUE 8): recording the same `(spec, seed,
+//! steps)` workload produces **byte-identical** tape files across every
+//! executor kind, thread count, kernel mode and local-vs-sharded
+//! transport — and replaying a tape against a freshly built executor of
+//! any of those shapes matches every transition bit for bit.  Tape
+//! corruption surfaces [`CairlError::Tape`], never a panic.  On the
+//! metrics side: stepped workloads populate the `cairl_exec_*` counters
+//! and the snapshot has the documented shape.
+//!
+//! Thread counts default to 1/2/4; the CI determinism matrix re-runs
+//! the suite with `CAIRL_TEST_THREADS` pinned to each of 1, 2, 4, 8.
+
+mod common;
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU32, Ordering};
+
+use cairl::coordinator::experiment::{
+    build_executor_with_kernel, run_recorded_workload, ExecutorKind, KernelMode,
+};
+use cairl::coordinator::pool::BatchedExecutor;
+use cairl::core::env::Env;
+use cairl::core::error::CairlError;
+use cairl::core::spaces::Action;
+use cairl::envs::Pendulum;
+use cairl::shard::{ServeConfig, ShardPoolOptions, ShardServer, ShardedEnvPool};
+use cairl::telemetry::{
+    counter, render_prometheus, replay_against, snapshot, TapeHeader, TapeReader, TapeWriter,
+};
+use cairl::wrappers::{RecordEpisodeStatistics, TimeLimit};
+use common::test_threads;
+
+/// Heterogeneous reference mixture: wide + narrow lanes, 8 total so
+/// every CI matrix leg (1/2/4/8 threads) partitions workers
+/// differently.  Short truncation horizons force auto-resets into the
+/// recorded window.
+const MIX: &str = "CartPole-v1?max_steps=25:4,MountainCar-v0?max_steps=30:4";
+const LANES: usize = 8;
+const SEED: u64 = 57;
+const STEPS_PER_LANE: u64 = 60;
+
+/// Unique temp path per tape (tests run in parallel).
+fn fresh_tape(tag: &str) -> PathBuf {
+    static NEXT: AtomicU32 = AtomicU32::new(0);
+    let k = NEXT.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!(
+        "cairl-telemetry-{}-{k}-{tag}.tape",
+        std::process::id()
+    ))
+}
+
+fn build(kind: &str, threads: usize, kernel: &str) -> Box<dyn BatchedExecutor> {
+    build_executor_with_kernel(
+        MIX,
+        ExecutorKind::parse(kind).unwrap(),
+        1, // lane counts come from the mixture spec
+        threads,
+        SEED,
+        &[],
+        KernelMode::parse(kernel).unwrap(),
+    )
+    .unwrap()
+}
+
+/// Record the standard workload on `exec` into `path`.
+fn record_tape(exec: &mut dyn BatchedExecutor, path: &Path) {
+    let header = TapeHeader::for_executor(exec, MIX, "", SEED, STEPS_PER_LANE);
+    let mut w = TapeWriter::create(path, &header).unwrap();
+    run_recorded_workload(exec, STEPS_PER_LANE, SEED, Some(&mut w)).unwrap();
+    assert_eq!(w.finish().unwrap(), STEPS_PER_LANE);
+}
+
+/// Unique listen address per in-process shard daemon.
+fn fresh_addr() -> String {
+    static NEXT: AtomicU32 = AtomicU32::new(0);
+    let k = NEXT.fetch_add(1, Ordering::Relaxed);
+    #[cfg(unix)]
+    {
+        let path = std::env::temp_dir().join(format!(
+            "cairl-telemetry-shard-{}-{k}.sock",
+            std::process::id()
+        ));
+        format!("unix://{}", path.display())
+    }
+    #[cfg(not(unix))]
+    {
+        let _ = k;
+        "tcp://127.0.0.1:0".to_string()
+    }
+}
+
+#[test]
+fn tapes_are_byte_identical_across_executors_threads_and_kernels() {
+    let ref_path = fresh_tape("ref");
+    let mut reference = build("vec", 1, "fused");
+    record_tape(reference.as_mut(), &ref_path);
+    let ref_bytes = std::fs::read(&ref_path).unwrap();
+    assert!(!ref_bytes.is_empty());
+
+    for kind in ["vec", "pool", "pool-async"] {
+        for &threads in &test_threads() {
+            for kernel in ["scalar", "fused"] {
+                let path = fresh_tape(&format!("{kind}-{threads}t-{kernel}"));
+                let mut exec = build(kind, threads, kernel);
+                record_tape(exec.as_mut(), &path);
+                let bytes = std::fs::read(&path).unwrap();
+                assert_eq!(
+                    bytes, ref_bytes,
+                    "{kind}/{threads} threads/{kernel}: tape differs from vec/1/fused"
+                );
+                let _ = std::fs::remove_file(&path);
+            }
+        }
+    }
+    let _ = std::fs::remove_file(&ref_path);
+}
+
+#[test]
+fn replay_matches_bit_for_bit_on_every_executor_shape() {
+    let path = fresh_tape("replay");
+    let mut rec = build("pool", 2, "fused");
+    record_tape(rec.as_mut(), &path);
+
+    for kind in ["vec", "pool", "pool-async"] {
+        for kernel in ["scalar", "fused"] {
+            let mut exec = build(kind, 2, kernel);
+            let mut reader = TapeReader::open(&path).unwrap();
+            assert_eq!(reader.header().lanes, LANES);
+            assert_eq!(reader.header().base_seed, SEED);
+            let outcome = replay_against(exec.as_mut(), &mut reader).unwrap();
+            assert!(
+                outcome.divergence.is_none(),
+                "{kind}/{kernel}: diverged at {:?}",
+                outcome.divergence
+            );
+            assert_eq!(outcome.batches, STEPS_PER_LANE);
+            assert_eq!(outcome.lanes, LANES);
+        }
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn sharded_recording_and_replay_match_local() {
+    // Local reference tape.
+    let local = fresh_tape("local");
+    let mut reference = build("vec", 1, "fused");
+    record_tape(reference.as_mut(), &local);
+    let local_bytes = std::fs::read(&local).unwrap();
+
+    // Two in-process shard daemons.
+    let mut addrs = Vec::new();
+    let mut handles = Vec::new();
+    for _ in 0..2 {
+        let config = ServeConfig {
+            threads: 2,
+            ..ServeConfig::new("CartPole-v1")
+        };
+        let server = ShardServer::bind(&fresh_addr(), config).expect("bind shard");
+        addrs.push(server.local_addr());
+        handles.push(server.spawn());
+    }
+    let opts = ShardPoolOptions {
+        lanes: LANES,
+        base_seed: SEED,
+        ..Default::default()
+    };
+
+    // Recording over the transport produces the same bytes...
+    let mut pool = ShardedEnvPool::connect_opts(&addrs, MIX, opts.clone()).unwrap();
+    let sharded = fresh_tape("sharded");
+    record_tape(&mut pool, &sharded);
+    assert_eq!(
+        std::fs::read(&sharded).unwrap(),
+        local_bytes,
+        "sharded tape differs from local"
+    );
+
+    // ...and the local tape replays cleanly over a fresh sharded pool.
+    let mut pool2 = ShardedEnvPool::connect_opts(&addrs, MIX, opts).unwrap();
+    let mut reader = TapeReader::open(&local).unwrap();
+    let outcome = replay_against(&mut pool2, &mut reader).unwrap();
+    assert!(
+        outcome.divergence.is_none(),
+        "sharded replay diverged at {:?}",
+        outcome.divergence
+    );
+    assert_eq!(outcome.batches, STEPS_PER_LANE);
+
+    drop(pool);
+    drop(pool2);
+    handles.into_iter().for_each(|h| h.shutdown());
+    let _ = std::fs::remove_file(&local);
+    let _ = std::fs::remove_file(&sharded);
+}
+
+#[test]
+fn replay_reports_the_first_divergence() {
+    let path = fresh_tape("diverge");
+    let mut rec = build("pool", 2, "fused");
+    record_tape(rec.as_mut(), &path);
+
+    // A fresh executor seeded differently walks different episode
+    // boundaries, so the transition streams must split.
+    let mut wrong = build_executor_with_kernel(
+        MIX,
+        ExecutorKind::parse("pool").unwrap(),
+        1,
+        2,
+        SEED + 1,
+        &[],
+        KernelMode::parse("fused").unwrap(),
+    )
+    .unwrap();
+    let mut reader = TapeReader::open(&path).unwrap();
+    let outcome = replay_against(wrong.as_mut(), &mut reader).unwrap();
+    let d = outcome
+        .divergence
+        .expect("a differently seeded replay must diverge");
+    assert!(d.batch < STEPS_PER_LANE);
+    assert!(d.lane < LANES);
+    assert_eq!(d.batch, outcome.batches, "divergence stops the replay");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn corrupt_tapes_surface_errors_never_panics() {
+    let path = fresh_tape("corrupt");
+    let mut rec = build("vec", 1, "fused");
+    record_tape(rec.as_mut(), &path);
+    let clean = std::fs::read(&path).unwrap();
+
+    // Truncation mid-stream: the header still parses, replay errors.
+    let cut = fresh_tape("corrupt-cut");
+    std::fs::write(&cut, &clean[..clean.len() - 10]).unwrap();
+    let mut exec = build("vec", 1, "fused");
+    let mut reader = TapeReader::open(&cut).unwrap();
+    let err = replay_against(exec.as_mut(), &mut reader).unwrap_err();
+    assert!(matches!(err, CairlError::Tape(_)), "got {err}");
+
+    // A flipped byte mid-file fails the record checksum.
+    let mut flipped = clean.clone();
+    let mid = flipped.len() / 2;
+    flipped[mid] ^= 0xff;
+    std::fs::write(&cut, &flipped).unwrap();
+    let mut drain = || -> Result<(), CairlError> {
+        let mut r = TapeReader::open(&cut)?;
+        while r.next_batch()?.is_some() {}
+        Ok(())
+    };
+    assert!(drain().is_err(), "flipped byte must be detected");
+
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(&cut);
+}
+
+#[test]
+fn workloads_populate_exec_metrics() {
+    let steps = counter("cairl_exec_steps_total{exec=\"pool\"}");
+    let batches = counter("cairl_exec_batches_total{exec=\"pool\"}");
+    let before_steps = steps.get();
+    let before_batches = batches.get();
+
+    let mut exec = build("pool", 2, "fused");
+    run_recorded_workload(exec.as_mut(), STEPS_PER_LANE, SEED, None).unwrap();
+
+    assert!(
+        steps.get() >= before_steps + STEPS_PER_LANE * LANES as u64,
+        "pool lane-step counter did not advance"
+    );
+    assert!(batches.get() >= before_batches + STEPS_PER_LANE);
+
+    // Snapshot shape: the counter shows up under "counters" and the
+    // Prometheus rendering splits its label block back out.
+    let snap = snapshot();
+    assert!(snap
+        .path(&["counters", "cairl_exec_steps_total{exec=\"pool\"}"])
+        .is_some());
+    let text = render_prometheus();
+    assert!(text.contains("# TYPE cairl_exec_steps_total counter"));
+    assert!(text.contains("cairl_exec_steps_total{exec=\"pool\"}"));
+}
+
+#[test]
+fn record_stats_feeds_fleet_episode_counters() {
+    let episodes = counter("cairl_episodes_total");
+    let ep_steps = counter("cairl_episode_steps_total");
+    let before_eps = episodes.get();
+    let before_steps = ep_steps.get();
+
+    let mut env = RecordEpisodeStatistics::new(TimeLimit::new(Pendulum::discrete(), 5), 10);
+    env.seed(0);
+    env.reset();
+    let a = Action::Discrete(0);
+    for _ in 0..5 {
+        env.step(&a);
+    }
+    assert!(env.last_episode().is_some(), "episode must have completed");
+    assert!(episodes.get() >= before_eps + 1);
+    assert!(ep_steps.get() >= before_steps + 1);
+}
