@@ -12,6 +12,7 @@ use crate::agents::dqn::DqnConfig;
 use crate::coordinator::experiment::{ExecutorKind, KernelMode};
 use crate::core::error::{CairlError, Result};
 use crate::core::json::{self, Value};
+use crate::faults::ChaosProfile;
 
 /// DQN block — Table I plus the loop knobs.
 #[derive(Clone, Debug, PartialEq)]
@@ -231,6 +232,40 @@ impl ExecutorSettings {
     }
 }
 
+/// Chaos block — deterministic fault injection for robustness drills.
+///
+/// A CI failure under chaos reproduces exactly from this block: the
+/// profile string carries both the fault rates and the seed (see
+/// [`ChaosProfile::parse`]), and every injection decision is a pure
+/// function of `(profile, connection stream, send index)`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ChaosSettings {
+    /// Fault profile in the `--chaos` grammar: a preset
+    /// (`"light@7"`, `"heavy@3"`), an explicit rate list
+    /// (`"corrupt=10,delay=40,delay_ms=2@seed"`) or `""` / `"off"` for
+    /// no injection.  `cairl run --chaos` / `cairl serve --chaos`
+    /// override it.
+    pub profile: String,
+}
+
+impl ChaosSettings {
+    /// Resolve the configured profile (`None` when empty/off).
+    pub fn to_profile(&self) -> Result<Option<ChaosProfile>> {
+        if self.profile.trim().is_empty() {
+            return Ok(None);
+        }
+        let profile = ChaosProfile::parse(&self.profile)?;
+        Ok(if profile.is_off() { None } else { Some(profile) })
+    }
+
+    /// Overlay fields present in a JSON object.
+    fn apply(&mut self, v: &Value) {
+        if let Some(s) = v.get("profile").and_then(Value::as_str) {
+            self.profile = s.to_string();
+        }
+    }
+}
+
 /// A full experiment description.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ExperimentConfig {
@@ -256,6 +291,8 @@ pub struct ExperimentConfig {
     pub dqn: DqnSettings,
     /// Batched-executor selection for vectorised workloads.
     pub executor: ExecutorSettings,
+    /// Deterministic fault injection (robustness drills; off by default).
+    pub chaos: ChaosSettings,
 }
 
 impl Default for ExperimentConfig {
@@ -270,6 +307,7 @@ impl Default for ExperimentConfig {
             out_dir: "results".into(),
             dqn: DqnSettings::default(),
             executor: ExecutorSettings::default(),
+            chaos: ChaosSettings::default(),
         }
     }
 }
@@ -323,6 +361,9 @@ impl ExperimentConfig {
         if let Some(e) = v.get("executor") {
             cfg.executor.apply(e);
         }
+        if let Some(c) = v.get("chaos") {
+            cfg.chaos.apply(c);
+        }
         Ok(cfg)
     }
 
@@ -343,7 +384,8 @@ impl ExperimentConfig {
              \"max_steps\": {},\n    \"solve_return\": {},\n    \"solve_window\": {}\n  \
              }},\n  \"executor\": {{\n    \"kind\": \"{}\",\n    \"lanes\": {},\n    \
              \"threads\": {},\n    \"kernel\": \"{}\",\n    \"shards\": [{}],\n    \
-             \"pipeline\": {},\n    \"shard_token\": {:?}\n  }}\n}}",
+             \"pipeline\": {},\n    \"shard_token\": {:?}\n  }},\n  \
+             \"chaos\": {{\n    \"profile\": {:?}\n  }}\n}}",
             self.env,
             wrappers,
             self.agent,
@@ -368,6 +410,7 @@ impl ExperimentConfig {
             self.executor.shards.iter().map(|s| format!("{s:?}")).collect::<Vec<_>>().join(", "),
             self.executor.pipeline,
             self.executor.shard_token,
+            self.chaos.profile,
         )
     }
 }
@@ -527,5 +570,32 @@ mod tests {
         let cfg =
             ExperimentConfig::parse(r#"{"executor": {"kind": "warp"}}"#).unwrap();
         assert!(matches!(cfg.executor.to_kind(), Err(CairlError::Config(_))));
+    }
+
+    #[test]
+    fn parses_and_renders_chaos_block() {
+        // Default: no chaos.
+        let bare = ExperimentConfig::parse("{}").unwrap();
+        assert!(bare.chaos.profile.is_empty());
+        assert!(bare.chaos.to_profile().unwrap().is_none());
+
+        let cfg = ExperimentConfig::parse(
+            r#"{"chaos": {"profile": "corrupt=10,delay=40,delay_ms=2@7"}}"#,
+        )
+        .unwrap();
+        let profile = cfg.chaos.to_profile().unwrap().expect("profile active");
+        assert_eq!(profile.seed, 7);
+        let back = ExperimentConfig::parse(&cfg.render()).unwrap();
+        assert_eq!(back, cfg);
+
+        // Presets resolve; "off" resolves to None.
+        let light = ExperimentConfig::parse(r#"{"chaos": {"profile": "light@3"}}"#).unwrap();
+        assert!(light.chaos.to_profile().unwrap().is_some());
+        let off = ExperimentConfig::parse(r#"{"chaos": {"profile": "off"}}"#).unwrap();
+        assert!(off.chaos.to_profile().unwrap().is_none());
+
+        // A malformed profile is a config-time error, not a silent no-op.
+        let bad = ExperimentConfig::parse(r#"{"chaos": {"profile": "explode=1"}}"#).unwrap();
+        assert!(bad.chaos.to_profile().is_err());
     }
 }

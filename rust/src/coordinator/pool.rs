@@ -46,6 +46,18 @@
 //! lane's transition reports the episode end exactly once and its
 //! observation is the first observation of the next episode.
 //!
+//! # Panic policy
+//!
+//! An env panic inside a pool **poisons** it by default — the
+//! coordinator call re-raises the panic, nothing steps again
+//! (fail-fast, and the long-standing determinism pins are untouched).
+//! Opting into [`PanicPolicy::Quarantine`] via
+//! [`BatchedExecutor::set_panic_policy`] (CLI: `--on-panic
+//! quarantine`) retires only the panicking lane: its slot reads zeroed
+//! observations and `done = true` transitions forever — across resets
+//! too — while every healthy lane keeps its exact trajectory, and each
+//! newly dead lane bumps the `cairl_quarantined_lanes_total` counter.
+//!
 //! # Fused lane groups
 //!
 //! Workers do not step lanes one `Box<dyn Env>` at a time: every worker
@@ -265,6 +277,58 @@ fn group_by_worker(built: Vec<BuiltGroup>, n: usize, chunk: usize) -> Vec<Vec<Bu
     per_worker
 }
 
+/// What an executor does when a lane's env panics mid-batch.
+///
+/// The default, [`PanicPolicy::Poison`], fails fast: the whole pool is
+/// poisoned and the coordinator call re-raises the panic — nothing
+/// about the pre-existing determinism pins changes.  Opt-in
+/// [`PanicPolicy::Quarantine`] (`--on-panic quarantine`) instead marks
+/// only the offending lane dead: its observation slot reads zero and
+/// its transition reports `done = true` (reward 0) forever, every
+/// healthy lane keeps its exact trajectory, and each newly dead lane
+/// bumps `cairl_quarantined_lanes_total`.  A quarantined lane stays
+/// dead across resets — its env state is unknown after the panic.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PanicPolicy {
+    /// Poison the whole pool and re-raise the panic (the default).
+    #[default]
+    Poison,
+    /// Mark only the panicking lane dead; the rest keep stepping.
+    Quarantine,
+}
+
+impl PanicPolicy {
+    /// Parse the `--on-panic` / config grammar (`"poison"` /
+    /// `"quarantine"`).
+    pub fn parse(s: &str) -> Option<PanicPolicy> {
+        match s.trim() {
+            "poison" => Some(PanicPolicy::Poison),
+            "quarantine" => Some(PanicPolicy::Quarantine),
+            _ => None,
+        }
+    }
+
+    /// The canonical spelling `parse` accepts.
+    pub fn render(&self) -> &'static str {
+        match self {
+            PanicPolicy::Poison => "poison",
+            PanicPolicy::Quarantine => "quarantine",
+        }
+    }
+}
+
+/// The transition a quarantined lane reports on every step after its
+/// env panicked: episode over, nothing earned.
+fn quarantined_transition() -> Transition {
+    Transition::terminal(0.0)
+}
+
+/// Count one newly quarantined lane (cold path — a lane dies at most
+/// once, so the registry lookup never touches the steady state).
+fn note_quarantined_lane() {
+    crate::telemetry::counter("cairl_quarantined_lanes_total").inc();
+}
+
 /// A batch of environment lanes stepped as one unit.
 ///
 /// The contract every implementation upholds (and the property tests
@@ -309,6 +373,12 @@ pub trait BatchedExecutor {
         obs: &mut [f32],
         transitions: &mut [Transition],
     );
+
+    /// Select what happens when a lane's env panics mid-batch (see
+    /// [`PanicPolicy`]).  The default implementation ignores the
+    /// policy: executors without a quarantine path keep their
+    /// fail-fast behaviour.
+    fn set_panic_policy(&mut self, _policy: PanicPolicy) {}
 }
 
 /// Aggregate counts of a worker-side free-running rollout
@@ -400,6 +470,10 @@ struct SyncShared {
     /// flag, and the coordinator re-raises the panic — no command is
     /// ever issued against a partially dead pool.
     poisoned: AtomicBool,
+    /// [`PanicPolicy::Quarantine`] selected: workers step lanes
+    /// individually under `catch_unwind` and retire panicking lanes
+    /// instead of poisoning the pool.
+    quarantine: AtomicBool,
     /// The current command.  Written only by the coordinator while all
     /// workers are quiescent (`done` drained to 0), read only by
     /// workers after observing a new `seq` — never concurrently
@@ -545,6 +619,7 @@ impl EnvPool {
             done: AtomicUsize::new(0),
             episodes: AtomicU64::new(0),
             poisoned: AtomicBool::new(false),
+            quarantine: AtomicBool::new(false),
             cmd: UnsafeCell::new(Cmd::Idle),
         });
 
@@ -693,6 +768,12 @@ impl BatchedExecutor for EnvPool {
         let ends = transitions.iter().filter(|t| t.done || t.truncated).count();
         self.metrics.record_batch(self.n, ends);
     }
+
+    fn set_panic_policy(&mut self, policy: PanicPolicy) {
+        self.shared
+            .quarantine
+            .store(matches!(policy, PanicPolicy::Quarantine), Ordering::Release);
+    }
 }
 
 impl Drop for EnvPool {
@@ -725,6 +806,11 @@ fn sync_worker(
     padded: usize,
     origin: RolloutOrigin,
 ) {
+    // Per-group dead-lane flags, only consulted in quarantine mode.
+    let mut dead: Vec<Vec<bool>> = groups
+        .iter()
+        .map(|g| vec![false; g.batch.lanes()])
+        .collect();
     let mut last_seq = 0u64;
     loop {
         let Some(seq) = wait_for_seq(&shared, last_seq) else {
@@ -736,8 +822,9 @@ fn sync_worker(
         // worker (and all others) increments `done`.
         let cmd = unsafe { *shared.cmd.get() };
         let shutdown = matches!(cmd, Cmd::Shutdown);
+        let quarantine = shared.quarantine.load(Ordering::Acquire);
         let ok = catch_unwind(AssertUnwindSafe(|| {
-            run_cmd(cmd, &mut groups, padded, origin, &shared);
+            run_cmd(cmd, &mut groups, padded, origin, &shared, quarantine, &mut dead);
         }))
         .is_ok();
         if !ok {
@@ -755,17 +842,25 @@ fn sync_worker(
 /// a single `step_batch`, a scalar group replays the per-lane loop).
 /// Slots are `padded` wide; groups re-zero tails on every write (caller
 /// buffers are arbitrary).
+///
+/// In quarantine mode (`quarantine` true) Reset/Step instead step each
+/// lane individually — `step_lane`/`reset_lane` are bitwise identical
+/// to the batch calls — under `catch_unwind`: a panicking lane flips
+/// its `dead` flag and from then on reads a zeroed slot and a
+/// [`quarantined_transition`], while every other lane is untouched.
 fn run_cmd(
     cmd: Cmd,
     groups: &mut [BuiltGroup],
     padded: usize,
     origin: RolloutOrigin,
     shared: &SyncShared,
+    quarantine: bool,
+    dead: &mut [Vec<bool>],
 ) {
     match cmd {
         Cmd::Idle | Cmd::Shutdown => {}
         Cmd::Reset { obs } => {
-            for group in groups {
+            for (gi, group) in groups.iter_mut().enumerate() {
                 let lanes = group.batch.lanes();
                 // SAFETY: group lane ranges are disjoint across workers
                 // and the caller's `&mut [f32]` is pinned by the barrier.
@@ -775,7 +870,27 @@ fn run_cmd(
                         lanes * padded,
                     )
                 };
-                group.batch.reset_batch(block, padded);
+                if !quarantine {
+                    group.batch.reset_batch(block, padded);
+                    continue;
+                }
+                for k in 0..lanes {
+                    let slot = &mut block[k * padded..(k + 1) * padded];
+                    if dead[gi][k] {
+                        slot.fill(0.0);
+                        continue;
+                    }
+                    let (front, tail) = slot.split_at_mut(group.batch.lane_obs_dim(k));
+                    match catch_unwind(AssertUnwindSafe(|| group.batch.reset_lane(k, front))) {
+                        Ok(()) => tail.fill(0.0),
+                        Err(_) => {
+                            dead[gi][k] = true;
+                            note_quarantined_lane();
+                            front.fill(0.0);
+                            tail.fill(0.0);
+                        }
+                    }
+                }
             }
         }
         Cmd::Step {
@@ -783,7 +898,7 @@ fn run_cmd(
             obs,
             transitions,
         } => {
-            for group in groups {
+            for (gi, group) in groups.iter_mut().enumerate() {
                 let lanes = group.batch.lanes();
                 // SAFETY: as above — disjoint contiguous lane ranges,
                 // barrier-pinned borrows, actions only read.
@@ -799,7 +914,34 @@ fn run_cmd(
                 let trs = unsafe {
                     std::slice::from_raw_parts_mut(transitions.add(group.lane_start), lanes)
                 };
-                group.batch.step_batch(acts, block, padded, trs);
+                if !quarantine {
+                    group.batch.step_batch(acts, block, padded, trs);
+                    continue;
+                }
+                for k in 0..lanes {
+                    let slot = &mut block[k * padded..(k + 1) * padded];
+                    if dead[gi][k] {
+                        slot.fill(0.0);
+                        trs[k] = quarantined_transition();
+                        continue;
+                    }
+                    let (front, tail) = slot.split_at_mut(group.batch.lane_obs_dim(k));
+                    match catch_unwind(AssertUnwindSafe(|| {
+                        group.batch.step_lane(k, &acts[k], front)
+                    })) {
+                        Ok(t) => {
+                            tail.fill(0.0);
+                            trs[k] = t;
+                        }
+                        Err(_) => {
+                            dead[gi][k] = true;
+                            note_quarantined_lane();
+                            front.fill(0.0);
+                            tail.fill(0.0);
+                            trs[k] = quarantined_transition();
+                        }
+                    }
+                }
             }
         }
         Cmd::RandomSteps { steps_per_lane } => {
@@ -1033,6 +1175,9 @@ pub struct AsyncEnvPool {
     /// Ready-queue depth left behind by the last `recv_batch`
     /// (`cairl_async_ready_depth`).
     ready_depth: Gauge,
+    /// [`PanicPolicy::Quarantine`] selected — workers step lanes under
+    /// per-lane `catch_unwind` and retire panicking lanes.
+    quarantine: Arc<AtomicBool>,
 }
 
 impl AsyncEnvPool {
@@ -1107,6 +1252,7 @@ impl AsyncEnvPool {
         let n = specs.len();
         let ready = Arc::new(ReadyQueue::with_capacity(n));
         let slots = Arc::new(SlotBlock::new(n, padded));
+        let quarantine = Arc::new(AtomicBool::new(false));
 
         let per_worker = group_by_worker(built, n, chunk);
         let mut mailboxes = Vec::new();
@@ -1127,9 +1273,12 @@ impl AsyncEnvPool {
             let ready_w = Arc::clone(&ready);
             let slots_w = Arc::clone(&slots);
             let backlog_w = backlog_depth.clone();
+            let quarantine_w = Arc::clone(&quarantine);
             let handle = std::thread::Builder::new()
                 .name(format!("envpool-async-{first}"))
-                .spawn(move || async_worker(mailbox_w, ready_w, slots_w, worker_groups, backlog_w))
+                .spawn(move || {
+                    async_worker(mailbox_w, ready_w, slots_w, worker_groups, backlog_w, quarantine_w)
+                })
                 .expect("spawn async pool worker");
             mailboxes.push(mailbox);
             handles.push(handle);
@@ -1149,6 +1298,7 @@ impl AsyncEnvPool {
             padded,
             metrics: ExecMetrics::for_executor("pool-async"),
             ready_depth: gauge("cairl_async_ready_depth"),
+            quarantine,
         }
     }
 
@@ -1359,6 +1509,11 @@ impl BatchedExecutor for AsyncEnvPool {
         let ends = transitions.iter().filter(|t| t.done || t.truncated).count();
         self.metrics.record_batch(self.n, ends);
     }
+
+    fn set_panic_policy(&mut self, policy: PanicPolicy) {
+        self.quarantine
+            .store(matches!(policy, PanicPolicy::Quarantine), Ordering::Release);
+    }
 }
 
 impl Drop for AsyncEnvPool {
@@ -1397,17 +1552,50 @@ fn async_worker(
     slots: Arc<SlotBlock>,
     mut groups: Vec<BuiltGroup>,
     backlog: Gauge,
+    quarantine: Arc<AtomicBool>,
 ) {
-    fn publish_reset(groups: &mut [BuiltGroup], ready: &ReadyQueue, slots: &SlotBlock) {
-        for group in groups {
+    fn publish_reset(
+        groups: &mut [BuiltGroup],
+        ready: &ReadyQueue,
+        slots: &SlotBlock,
+        quarantine: bool,
+        dead: &mut [Vec<bool>],
+    ) {
+        for (gi, group) in groups.iter_mut().enumerate() {
             for k in 0..group.batch.lanes() {
                 let lane = group.lane_start + k;
                 // SAFETY: a reset command (or construction) handed this
                 // worker ownership of all its lanes' slots.
                 let slot = unsafe { slots.lane_mut(lane) };
+                if quarantine && dead[gi][k] {
+                    // A quarantined lane stays dead across resets.
+                    slot.fill(0.0);
+                    ready.push(ReadyEntry {
+                        lane,
+                        transition: quarantined_transition(),
+                    });
+                    continue;
+                }
                 let (obs, tail) = slot.split_at_mut(group.batch.lane_obs_dim(k));
-                group.batch.reset_lane(k, obs);
-                tail.fill(0.0);
+                if quarantine {
+                    match catch_unwind(AssertUnwindSafe(|| group.batch.reset_lane(k, obs))) {
+                        Ok(()) => tail.fill(0.0),
+                        Err(_) => {
+                            dead[gi][k] = true;
+                            note_quarantined_lane();
+                            obs.fill(0.0);
+                            tail.fill(0.0);
+                            ready.push(ReadyEntry {
+                                lane,
+                                transition: quarantined_transition(),
+                            });
+                            continue;
+                        }
+                    }
+                } else {
+                    group.batch.reset_lane(k, obs);
+                    tail.fill(0.0);
+                }
                 ready.push(ReadyEntry {
                     lane,
                     transition: Transition::default(),
@@ -1418,7 +1606,10 @@ fn async_worker(
 
     /// Step every buffered action: one `step_batch` per fully covered
     /// group, `step_lane` for the rest.  Buffers are caller-owned and
-    /// capacity-reserved, so the steady state allocates nothing.
+    /// capacity-reserved, so the steady state allocates nothing.  In
+    /// quarantine mode every lane steps individually under
+    /// `catch_unwind` (bitwise identical per-lane operations); a
+    /// panicking lane is retired in place.
     #[allow(clippy::too_many_arguments)]
     fn flush_pending(
         groups: &mut [BuiltGroup],
@@ -1429,15 +1620,59 @@ fn async_worker(
         tr_buf: &mut [Transition],
         ready: &ReadyQueue,
         slots: &SlotBlock,
+        quarantine: bool,
+        dead: &mut [Vec<bool>],
     ) {
         if *pending_count == 0 {
             return;
         }
-        for group in groups {
+        for (gi, group) in groups.iter_mut().enumerate() {
             let lanes = group.batch.lanes();
             let base = group.lane_start - first_lane;
             let have = pending[base..base + lanes].iter().filter(|a| a.is_some()).count();
             if have == 0 {
+                continue;
+            }
+            if quarantine {
+                for k in 0..lanes {
+                    let Some(action) = pending[base + k].take() else {
+                        continue;
+                    };
+                    let lane = group.lane_start + k;
+                    // SAFETY: the Step message handed us this lane's slot.
+                    let slot = unsafe { slots.lane_mut(lane) };
+                    *pending_count -= 1;
+                    if dead[gi][k] {
+                        slot.fill(0.0);
+                        ready.push(ReadyEntry {
+                            lane,
+                            transition: quarantined_transition(),
+                        });
+                        continue;
+                    }
+                    let (obs, tail) = slot.split_at_mut(group.batch.lane_obs_dim(k));
+                    match catch_unwind(AssertUnwindSafe(|| {
+                        group.batch.step_lane(k, &action, obs)
+                    })) {
+                        Ok(t) => {
+                            tail.fill(0.0);
+                            ready.push(ReadyEntry {
+                                lane,
+                                transition: t,
+                            });
+                        }
+                        Err(_) => {
+                            dead[gi][k] = true;
+                            note_quarantined_lane();
+                            obs.fill(0.0);
+                            tail.fill(0.0);
+                            ready.push(ReadyEntry {
+                                lane,
+                                transition: quarantined_transition(),
+                            });
+                        }
+                    }
+                }
                 continue;
             }
             if have == lanes {
@@ -1487,9 +1722,20 @@ fn async_worker(
     let mut pending_count = 0usize;
     let mut act_buf: Vec<Action> = Vec::with_capacity(total_lanes);
     let mut tr_buf: Vec<Transition> = vec![Transition::default(); total_lanes];
+    // Per-group dead-lane flags, only consulted in quarantine mode.
+    let mut dead: Vec<Vec<bool>> = groups
+        .iter()
+        .map(|g| vec![false; g.batch.lanes()])
+        .collect();
 
     let result = catch_unwind(AssertUnwindSafe(|| {
-        publish_reset(&mut groups, &ready, &slots);
+        publish_reset(
+            &mut groups,
+            &ready,
+            &slots,
+            quarantine.load(Ordering::Acquire),
+            &mut dead,
+        );
         loop {
             // Block for the first message, then drain the backlog
             // without blocking.
@@ -1505,6 +1751,7 @@ fn async_worker(
                     st = mailbox.cv.wait(st).unwrap();
                 }
             };
+            let quarantined = quarantine.load(Ordering::Acquire);
             let mut next = Some(msg);
             while let Some(msg) = next {
                 match msg {
@@ -1520,8 +1767,10 @@ fn async_worker(
                             &mut tr_buf,
                             &ready,
                             &slots,
+                            quarantined,
+                            &mut dead,
                         );
-                        publish_reset(&mut groups, &ready, &slots);
+                        publish_reset(&mut groups, &ready, &slots, quarantined, &mut dead);
                     }
                     WorkerMsg::Step { lane, action } => {
                         let idx = lane - first_lane;
@@ -1551,6 +1800,8 @@ fn async_worker(
                 &mut tr_buf,
                 &ready,
                 &slots,
+                quarantined,
+                &mut dead,
             );
         }
     }));
@@ -1849,6 +2100,103 @@ mod tests {
             let actions = vec![Action::Discrete(0); 4];
             BatchedExecutor::step_into(&mut pool, &actions, &mut obs, &mut tr);
         }
+    }
+
+    #[test]
+    fn sync_pool_quarantines_only_the_panicking_lane() {
+        use crate::core::env::DynEnv;
+        let envs = || -> Vec<DynEnv> {
+            vec![
+                Box::new(Grenade { fuse: 0, boom: 3 }),
+                Box::new(TimeLimit::new(CartPole::new(), 40)),
+            ]
+        };
+        let mut pool = EnvPool::from_envs(envs(), 7, 2);
+        pool.set_panic_policy(PanicPolicy::Quarantine);
+        // Reference for the healthy lane: pool lane 1 is seeded 7 + 1.
+        let mut reference = VecEnv::from_envs(
+            vec![Box::new(TimeLimit::new(CartPole::new(), 40)) as DynEnv],
+            8,
+        );
+        let d = pool.obs_dim();
+        assert_eq!(d, 4);
+        let mut obs = vec![0.0f32; 2 * d];
+        let mut tr = vec![Transition::default(); 2];
+        let mut ref_obs = vec![0.0f32; d];
+        let mut ref_tr = vec![Transition::default(); 1];
+        BatchedExecutor::reset_into(&mut pool, &mut obs);
+        BatchedExecutor::reset_into(&mut reference, &mut ref_obs);
+        assert_eq!(&obs[d..], &ref_obs[..]);
+        for step in 0..12 {
+            let actions = vec![Action::Discrete(step % 2); 2];
+            BatchedExecutor::step_into(&mut pool, &actions, &mut obs, &mut tr);
+            BatchedExecutor::step_into(&mut reference, &actions[1..], &mut ref_obs, &mut ref_tr);
+            // The healthy lane's trajectory is untouched by the blast.
+            assert_eq!(&obs[d..], &ref_obs[..], "step {step}");
+            assert_eq!(tr[1], ref_tr[0], "step {step}");
+            if step >= 2 {
+                // The grenade went off on its third step: dead lane,
+                // zeroed slot, terminal transition — forever.
+                assert_eq!(tr[0], Transition::terminal(0.0), "step {step}");
+                assert_eq!(&obs[..d], &[0.0; 4], "step {step}");
+            }
+        }
+        // Quarantine survives a reset: the env's state after a panic
+        // is unknown, so the lane never comes back.
+        BatchedExecutor::reset_into(&mut pool, &mut obs);
+        assert_eq!(&obs[..d], &[0.0; 4]);
+        let actions = vec![Action::Discrete(0); 2];
+        BatchedExecutor::step_into(&mut pool, &actions, &mut obs, &mut tr);
+        assert_eq!(tr[0], Transition::terminal(0.0));
+    }
+
+    #[test]
+    fn async_pool_quarantines_only_the_panicking_lane() {
+        use crate::core::env::DynEnv;
+        let envs = || -> Vec<DynEnv> {
+            vec![
+                Box::new(Grenade { fuse: 0, boom: 3 }),
+                Box::new(TimeLimit::new(CartPole::new(), 40)),
+            ]
+        };
+        let mut pool = AsyncEnvPool::from_envs(envs(), 7, 2);
+        pool.set_panic_policy(PanicPolicy::Quarantine);
+        let mut reference = VecEnv::from_envs(
+            vec![Box::new(TimeLimit::new(CartPole::new(), 40)) as DynEnv],
+            8,
+        );
+        let d = pool.obs_dim();
+        let mut obs = vec![0.0f32; 2 * d];
+        let mut tr = vec![Transition::default(); 2];
+        let mut ref_obs = vec![0.0f32; d];
+        let mut ref_tr = vec![Transition::default(); 1];
+        BatchedExecutor::reset_into(&mut pool, &mut obs);
+        BatchedExecutor::reset_into(&mut reference, &mut ref_obs);
+        for step in 0..12 {
+            let actions = vec![Action::Discrete(step % 2); 2];
+            BatchedExecutor::step_into(&mut pool, &actions, &mut obs, &mut tr);
+            BatchedExecutor::step_into(&mut reference, &actions[1..], &mut ref_obs, &mut ref_tr);
+            assert_eq!(&obs[d..], &ref_obs[..], "step {step}");
+            assert_eq!(tr[1], ref_tr[0], "step {step}");
+            if step >= 2 {
+                assert_eq!(tr[0], Transition::terminal(0.0), "step {step}");
+                assert_eq!(&obs[..d], &[0.0; 4], "step {step}");
+            }
+        }
+    }
+
+    #[test]
+    fn panic_policy_parses_and_renders() {
+        assert_eq!(PanicPolicy::parse("poison"), Some(PanicPolicy::Poison));
+        assert_eq!(
+            PanicPolicy::parse(" quarantine "),
+            Some(PanicPolicy::Quarantine)
+        );
+        assert_eq!(PanicPolicy::parse("explode"), None);
+        for p in [PanicPolicy::Poison, PanicPolicy::Quarantine] {
+            assert_eq!(PanicPolicy::parse(p.render()), Some(p));
+        }
+        assert_eq!(PanicPolicy::default(), PanicPolicy::Poison);
     }
 
     #[test]

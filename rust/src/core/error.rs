@@ -30,6 +30,12 @@ pub enum CairlError {
     /// Trajectory-tape problems: corruption, truncation, a replay
     /// against a mismatched executor (telemetry module).
     Tape(String),
+    /// A configured read/write deadline elapsed before the peer
+    /// produced (or accepted) a frame — the bounded-window signal that
+    /// a shard is frozen rather than merely slow.  Recoverable: the
+    /// shard client classifies it like a lost connection and fails
+    /// over.
+    DeadlineExceeded(String),
     /// Underlying I/O.
     Io(std::io::Error),
 }
@@ -48,6 +54,7 @@ impl fmt::Display for CairlError {
             CairlError::Shard(m) => write!(f, "shard error: {m}"),
             CairlError::Unavailable(m) => write!(f, "shard unavailable: {m}"),
             CairlError::Tape(m) => write!(f, "tape error: {m}"),
+            CairlError::DeadlineExceeded(m) => write!(f, "deadline exceeded: {m}"),
             CairlError::Io(e) => write!(f, "io error: {e}"),
         }
     }

@@ -1,0 +1,483 @@
+//! Deterministic fault injection: seed-driven chaos for the shard
+//! fabric and the env layer.
+//!
+//! Everything here follows the toolkit's determinism contract: a
+//! [`ChaosProfile`] is `(rates, seed)`, a [`FaultPlan`] is a [`Pcg32`]
+//! stream over that seed, and the `n`-th decision of a plan is a pure
+//! function of `(profile, seed, stream, n)`.  A CI chaos failure
+//! therefore reproduces exactly from the profile string it was run
+//! with — `cairl run --chaos "corrupt=20,delay=50@7"` injects the same
+//! faults at the same points on every machine.
+//!
+//! Three injection surfaces:
+//!
+//! * **Wire** — [`FramedStream`](crate::shard::net) consults a plan on
+//!   every frame send and may corrupt a byte, truncate the frame,
+//!   delay, or reset the connection ([`WireFault`]).  Injectors attach
+//!   **after** the handshake, so connects and failover re-dials always
+//!   succeed and every injected fault lands on a connection the
+//!   failover path knows how to replace.
+//! * **Server freeze** — a one-shot long delay drawn from the same
+//!   stream ([`ChaosProfile::freeze`]), long enough to trip a client
+//!   read deadline: the frozen-shard drill.
+//! * **Env** — [`FaultyEnv`] wraps any [`Env`] and panics on a
+//!   plan-chosen step, driving the pool poison/quarantine machinery.
+//!
+//! Injections count into `cairl_faults_injected_total{kind=...}` so a
+//! chaos run's fault mix is visible in `cairl metrics`.
+
+use std::time::Duration;
+
+use crate::core::env::{Env, Step, Transition};
+use crate::core::error::{CairlError, Result};
+use crate::core::rng::Pcg32;
+use crate::core::spaces::{Action, Space};
+use crate::render::Framebuffer;
+use crate::telemetry::{counter, Counter};
+
+fn err(msg: impl Into<String>) -> CairlError {
+    CairlError::Config(msg.into())
+}
+
+/// Fault rates are expressed per [`RATE_SCALE`] sends (basis points):
+/// `corrupt = 25` corrupts ~0.25% of frames.
+pub const RATE_SCALE: u32 = 10_000;
+
+/// While a freeze budget remains, each send freezes with this
+/// probability (per [`RATE_SCALE`]) — 1%, early enough to land mid-run
+/// without dominating short workloads.
+const FREEZE_BAND: u32 = 100;
+
+/// A named, seeded fault mix.  Parsed from the `--chaos` flag / config
+/// grammar: a preset name (`off`, `light`, `heavy`) or a `k=v` list
+/// over the field names below, either followed by an optional `@seed`
+/// (`"light@7"`, `"corrupt=20,delay_ms=3@123"`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ChaosProfile {
+    /// Per-[`RATE_SCALE`] rate of single-byte frame corruption.
+    pub corrupt: u32,
+    /// Per-[`RATE_SCALE`] rate of mid-frame truncation (the connection
+    /// is killed after the partial write).
+    pub truncate: u32,
+    /// Per-[`RATE_SCALE`] rate of a [`ChaosProfile::delay_ms`] send
+    /// delay.
+    pub delay: u32,
+    /// Per-[`RATE_SCALE`] rate of an abrupt connection reset.
+    pub reset: u32,
+    /// Per-[`RATE_SCALE`] rate of an injected env-step panic
+    /// ([`FaultyEnv`] only; wire plans ignore it).
+    pub panic: u32,
+    /// Length of an injected delay, in milliseconds.
+    pub delay_ms: u64,
+    /// Budget of one-shot freezes (long stalls) to inject; each fires
+    /// with a fixed 1% per-send chance while budget remains.
+    pub freeze: u32,
+    /// Length of an injected freeze, in milliseconds.  Must exceed the
+    /// victim's read deadline for the frozen-shard drill to trip it.
+    pub freeze_ms: u64,
+    /// Seed of the plan's PCG stream.
+    pub seed: u64,
+}
+
+impl ChaosProfile {
+    /// The all-zero profile: no faults, ever.
+    pub fn off() -> ChaosProfile {
+        ChaosProfile {
+            corrupt: 0,
+            truncate: 0,
+            delay: 0,
+            reset: 0,
+            panic: 0,
+            delay_ms: 0,
+            freeze: 0,
+            freeze_ms: 0,
+            seed: 1,
+        }
+    }
+
+    /// Mild background noise: occasional corruption, truncation, short
+    /// delays and resets — every fault recoverable via failover.
+    pub fn light() -> ChaosProfile {
+        ChaosProfile {
+            corrupt: 10,
+            truncate: 5,
+            delay: 40,
+            reset: 5,
+            panic: 0,
+            delay_ms: 2,
+            freeze: 0,
+            freeze_ms: 0,
+            seed: 1,
+        }
+    }
+
+    /// Aggressive mix plus one mid-run freeze (1.5 s — longer than any
+    /// sane client read deadline, so the drill trips it).
+    pub fn heavy() -> ChaosProfile {
+        ChaosProfile {
+            corrupt: 80,
+            truncate: 40,
+            delay: 200,
+            reset: 40,
+            panic: 0,
+            delay_ms: 5,
+            freeze: 1,
+            freeze_ms: 1_500,
+            seed: 1,
+        }
+    }
+
+    /// True when no fault can ever fire (all rates and budgets zero).
+    pub fn is_off(&self) -> bool {
+        self.corrupt == 0
+            && self.truncate == 0
+            && self.delay == 0
+            && self.reset == 0
+            && self.panic == 0
+            && self.freeze == 0
+    }
+
+    /// Parse the `--chaos` grammar (see the type docs).
+    pub fn parse(s: &str) -> Result<ChaosProfile> {
+        let s = s.trim();
+        let (body, seed) = match s.rsplit_once('@') {
+            Some((body, seed)) => {
+                let seed = seed
+                    .parse::<u64>()
+                    .map_err(|_| err(format!("chaos profile {s:?}: bad seed {seed:?}")))?;
+                (body, Some(seed))
+            }
+            None => (s, None),
+        };
+        let mut p = match body {
+            "" | "off" => ChaosProfile::off(),
+            "light" => ChaosProfile::light(),
+            "heavy" => ChaosProfile::heavy(),
+            _ => {
+                let mut p = ChaosProfile::off();
+                for kv in body.split(',') {
+                    let (k, v) = kv.split_once('=').ok_or_else(|| {
+                        err(format!(
+                            "chaos profile {s:?}: expected key=value, got {kv:?} \
+                             (or a preset: off, light, heavy)"
+                        ))
+                    })?;
+                    let n = v.trim().parse::<u64>().map_err(|_| {
+                        err(format!("chaos profile {s:?}: bad value in {kv:?}"))
+                    })?;
+                    let rate = || -> Result<u32> {
+                        u32::try_from(n)
+                            .ok()
+                            .filter(|&r| r <= RATE_SCALE)
+                            .ok_or_else(|| {
+                                err(format!(
+                                    "chaos profile {s:?}: rate {n} out of range 0..={RATE_SCALE}"
+                                ))
+                            })
+                    };
+                    match k.trim() {
+                        "corrupt" => p.corrupt = rate()?,
+                        "truncate" => p.truncate = rate()?,
+                        "delay" => p.delay = rate()?,
+                        "reset" => p.reset = rate()?,
+                        "panic" => p.panic = rate()?,
+                        "delay_ms" => p.delay_ms = n,
+                        "freeze" => p.freeze = rate()?,
+                        "freeze_ms" => p.freeze_ms = n,
+                        "seed" => p.seed = n,
+                        other => {
+                            return Err(err(format!(
+                                "chaos profile {s:?}: unknown key {other:?}"
+                            )))
+                        }
+                    }
+                }
+                p
+            }
+        };
+        if let Some(seed) = seed {
+            p.seed = seed;
+        }
+        Ok(p)
+    }
+
+    /// Canonical `k=v,...@seed` form; `parse(render(p)) == p`.
+    pub fn render(&self) -> String {
+        if self.is_off() {
+            return format!("off@{}", self.seed);
+        }
+        format!(
+            "corrupt={},truncate={},delay={},reset={},panic={},delay_ms={},\
+             freeze={},freeze_ms={}@{}",
+            self.corrupt,
+            self.truncate,
+            self.delay,
+            self.reset,
+            self.panic,
+            self.delay_ms,
+            self.freeze,
+            self.freeze_ms,
+            self.seed
+        )
+    }
+}
+
+/// One wire-level fault decision (see
+/// [`FramedStream::send`](crate::shard::net)).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireFault {
+    /// XOR `mask` into the frame byte at `offset % len`.
+    Corrupt {
+        /// Raw offset; the injector reduces it modulo the frame length.
+        offset: u64,
+        /// Nonzero XOR mask (a single flipped bit).
+        mask: u8,
+    },
+    /// Write only `1 + keep % (len-1)` bytes, then kill the connection.
+    Truncate {
+        /// Raw prefix length; reduced modulo `len-1` at the injection
+        /// site so at least one byte is written and at least one lost.
+        keep: u64,
+    },
+    /// Sleep this long, then send normally (covers both background
+    /// delays and the one-shot freeze).
+    Delay(Duration),
+    /// Kill the connection without sending.
+    Reset,
+}
+
+/// A live fault stream: the profile's rates driven by one PCG stream.
+/// Every [`FaultPlan::next_wire_fault`] / [`FaultPlan::next_panic`]
+/// call advances the stream by exactly one base draw, so decision `n`
+/// is a pure function of `(profile, stream, n)` regardless of which
+/// faults actually fired.
+#[derive(Debug)]
+pub struct FaultPlan {
+    profile: ChaosProfile,
+    rng: Pcg32,
+    freeze_left: u32,
+    corrupt_count: Counter,
+    truncate_count: Counter,
+    delay_count: Counter,
+    reset_count: Counter,
+    freeze_count: Counter,
+    panic_count: Counter,
+}
+
+impl FaultPlan {
+    /// Build a plan over `profile.seed` and the given stream id.  Use a
+    /// distinct stream per connection/lane so concurrent injectors draw
+    /// independent (but individually reproducible) sequences.
+    pub fn new(profile: &ChaosProfile, stream: u64) -> FaultPlan {
+        FaultPlan {
+            profile: profile.clone(),
+            rng: Pcg32::new(profile.seed, stream),
+            freeze_left: profile.freeze,
+            corrupt_count: counter("cairl_faults_injected_total{kind=\"corrupt\"}"),
+            truncate_count: counter("cairl_faults_injected_total{kind=\"truncate\"}"),
+            delay_count: counter("cairl_faults_injected_total{kind=\"delay\"}"),
+            reset_count: counter("cairl_faults_injected_total{kind=\"reset\"}"),
+            freeze_count: counter("cairl_faults_injected_total{kind=\"freeze\"}"),
+            panic_count: counter("cairl_faults_injected_total{kind=\"panic\"}"),
+        }
+    }
+
+    /// The wire-fault decision for the next frame send, if any.  Bands
+    /// are checked in a fixed order (freeze, corrupt, truncate, delay,
+    /// reset) against one roll in `[0, RATE_SCALE)`.
+    pub fn next_wire_fault(&mut self) -> Option<WireFault> {
+        let roll = self.rng.below(RATE_SCALE);
+        let p = &self.profile;
+        let mut lo = 0;
+        if self.freeze_left > 0 {
+            if roll < FREEZE_BAND {
+                self.freeze_left -= 1;
+                self.freeze_count.inc();
+                return Some(WireFault::Delay(Duration::from_millis(p.freeze_ms)));
+            }
+            lo += FREEZE_BAND;
+        }
+        if roll < lo + p.corrupt {
+            // Extra draws only inside a fired band keep the base stream
+            // one-draw-per-call.
+            let offset = ((self.rng.next_u32() as u64) << 32) | self.rng.next_u32() as u64;
+            let mask = 1u8 << self.rng.below(8);
+            self.corrupt_count.inc();
+            return Some(WireFault::Corrupt { offset, mask });
+        }
+        lo += p.corrupt;
+        if roll < lo + p.truncate {
+            let keep = self.rng.next_u32() as u64;
+            self.truncate_count.inc();
+            return Some(WireFault::Truncate { keep });
+        }
+        lo += p.truncate;
+        if roll < lo + p.delay {
+            self.delay_count.inc();
+            return Some(WireFault::Delay(Duration::from_millis(p.delay_ms)));
+        }
+        lo += p.delay;
+        if roll < lo + p.reset {
+            self.reset_count.inc();
+            return Some(WireFault::Reset);
+        }
+        None
+    }
+
+    /// The env-panic decision for the next step ([`FaultyEnv`]).
+    pub fn next_panic(&mut self) -> bool {
+        let fired = self.rng.below(RATE_SCALE) < self.profile.panic;
+        if fired {
+            self.panic_count.inc();
+        }
+        fired
+    }
+}
+
+/// An [`Env`] wrapper that panics on plan-chosen steps — the
+/// deterministic stand-in for a buggy environment, used to drive the
+/// pools' poison/quarantine machinery in chaos tests.
+pub struct FaultyEnv<E: Env> {
+    env: E,
+    plan: FaultPlan,
+}
+
+impl<E: Env> FaultyEnv<E> {
+    /// Wrap `env`; panics are drawn from `profile.panic` on the given
+    /// stream.
+    pub fn new(env: E, profile: &ChaosProfile, stream: u64) -> FaultyEnv<E> {
+        FaultyEnv {
+            env,
+            plan: FaultPlan::new(profile, stream),
+        }
+    }
+}
+
+impl<E: Env> Env for FaultyEnv<E> {
+    fn id(&self) -> String {
+        self.env.id()
+    }
+    fn observation_space(&self) -> Space {
+        self.env.observation_space()
+    }
+    fn action_space(&self) -> Space {
+        self.env.action_space()
+    }
+    fn obs_dim(&self) -> usize {
+        self.env.obs_dim()
+    }
+    fn seed(&mut self, seed: u64) {
+        self.env.seed(seed)
+    }
+    fn reset_into(&mut self, obs: &mut [f32]) {
+        self.env.reset_into(obs)
+    }
+    fn step_into(&mut self, action: &Action, obs: &mut [f32]) -> Transition {
+        if self.plan.next_panic() {
+            panic!("chaos: injected env panic in {}", self.env.id());
+        }
+        self.env.step_into(action, obs)
+    }
+    fn render(&self, fb: &mut Framebuffer) {
+        self.env.render(fb)
+    }
+    fn reset(&mut self) -> Vec<f32> {
+        self.env.reset()
+    }
+    fn step(&mut self, action: &Action) -> Step {
+        self.env.step(action)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profile_grammar_parses_presets_and_overrides() {
+        assert_eq!(ChaosProfile::parse("off").unwrap(), ChaosProfile::off());
+        assert_eq!(ChaosProfile::parse("light").unwrap(), ChaosProfile::light());
+        let mut heavy7 = ChaosProfile::heavy();
+        heavy7.seed = 7;
+        assert_eq!(ChaosProfile::parse("heavy@7").unwrap(), heavy7);
+
+        let p = ChaosProfile::parse("corrupt=20,delay=50,delay_ms=3@123").unwrap();
+        assert_eq!(p.corrupt, 20);
+        assert_eq!(p.delay, 50);
+        assert_eq!(p.delay_ms, 3);
+        assert_eq!(p.seed, 123);
+        assert_eq!(p.truncate, 0);
+        assert!(!p.is_off());
+
+        for bad in [
+            "nosuchpreset",
+            "corrupt",
+            "corrupt=x",
+            "corrupt=10001",
+            "nope=1",
+            "light@notanum",
+        ] {
+            assert!(ChaosProfile::parse(bad).is_err(), "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn profile_render_round_trips() {
+        for p in [
+            ChaosProfile::off(),
+            ChaosProfile::light(),
+            ChaosProfile::heavy(),
+            ChaosProfile::parse("corrupt=7,freeze=2,freeze_ms=900@42").unwrap(),
+        ] {
+            assert_eq!(ChaosProfile::parse(&p.render()).unwrap(), p, "{}", p.render());
+        }
+    }
+
+    #[test]
+    fn plans_are_deterministic_per_seed_and_stream() {
+        let profile = ChaosProfile::parse("corrupt=500,truncate=300,delay=800,reset=200@9")
+            .unwrap();
+        let mut a = FaultPlan::new(&profile, 4);
+        let mut b = FaultPlan::new(&profile, 4);
+        let seq_a: Vec<_> = (0..2_000).map(|_| a.next_wire_fault()).collect();
+        let seq_b: Vec<_> = (0..2_000).map(|_| b.next_wire_fault()).collect();
+        assert_eq!(seq_a, seq_b, "same (profile, stream) must replay identically");
+        assert!(
+            seq_a.iter().any(|f| f.is_some()),
+            "rates this high must fire within 2000 draws"
+        );
+
+        let mut c = FaultPlan::new(&profile, 5);
+        let seq_c: Vec<_> = (0..2_000).map(|_| c.next_wire_fault()).collect();
+        assert_ne!(seq_a, seq_c, "distinct streams must diverge");
+    }
+
+    #[test]
+    fn freeze_budget_is_one_shot() {
+        let profile = ChaosProfile::parse("freeze=1,freeze_ms=77@3").unwrap();
+        let mut plan = FaultPlan::new(&profile, 1);
+        let freezes = (0..50_000)
+            .filter_map(|_| plan.next_wire_fault())
+            .filter(|f| *f == WireFault::Delay(Duration::from_millis(77)))
+            .count();
+        assert_eq!(freezes, 1, "budget of one means exactly one freeze");
+    }
+
+    #[test]
+    fn off_profile_never_fires() {
+        let mut plan = FaultPlan::new(&ChaosProfile::off(), 0);
+        assert!((0..10_000).all(|_| plan.next_wire_fault().is_none()));
+        assert!((0..10_000).all(|_| !plan.next_panic()));
+    }
+
+    #[test]
+    #[should_panic(expected = "chaos: injected env panic")]
+    fn faulty_env_panics_on_schedule() {
+        use crate::envs::CartPole;
+        let profile = ChaosProfile::parse("panic=10000@1").unwrap();
+        let mut env = FaultyEnv::new(CartPole::new(), &profile, 0);
+        let mut obs = vec![0.0; env.obs_dim()];
+        env.reset_into(&mut obs);
+        env.step_into(&Action::Discrete(0), &mut obs);
+    }
+}

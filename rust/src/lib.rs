@@ -136,6 +136,7 @@ pub mod coordinator;
 pub mod core;
 pub mod energy;
 pub mod envs;
+pub mod faults;
 pub mod flash;
 pub mod puzzles;
 pub mod render;
@@ -156,7 +157,7 @@ pub use crate::core::spaces::{Action, Space};
 pub mod prelude {
     pub use crate::coordinator::experiment::{ExecutorKind, KernelMode};
     pub use crate::coordinator::pool::{
-        AsyncEnvPool, BatchedExecutor, EnvPool, LaneGroupSpec, LaneSpec,
+        AsyncEnvPool, BatchedExecutor, EnvPool, LaneGroupSpec, LaneSpec, PanicPolicy,
     };
     pub use crate::coordinator::registry::{
         list_envs, make, make_with, register, register_script, EnvSpec, MixtureEntry,
@@ -169,6 +170,7 @@ pub mod prelude {
     pub use crate::core::rng::Pcg32;
     pub use crate::core::spaces::{Action, Space};
     pub use crate::envs::{Acrobot, CartPole, MountainCar, Pendulum};
+    pub use crate::faults::{ChaosProfile, FaultPlan, FaultyEnv};
     pub use crate::render::Framebuffer;
     pub use crate::shard::{
         ServeConfig, ShardPlan, ShardPoolOptions, ShardServer, ShardedEnvPool,

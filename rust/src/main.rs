@@ -5,11 +5,13 @@
 //! [`Args`] for the tiny flag grammar: `cairl <command> [--flag value]...`.
 
 use std::collections::HashMap;
+use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use cairl::agents::dqn::{DqnAgent, DqnConfig};
 use cairl::coordinator::config::{DqnSettings, ExperimentConfig};
+use cairl::coordinator::pool::PanicPolicy;
 use cairl::coordinator::experiment::{
     build_executor_with_kernel, run_batched_workload, run_recorded_workload,
     run_stepping_workload, ExecutorKind, KernelMode, RenderMode, SteppingResult,
@@ -19,6 +21,7 @@ use cairl::core::env::Env;
 use cairl::core::rng::Pcg32;
 use cairl::energy::EnergyTracker;
 use cairl::envs::gridrts::{play_match, Bot, HarvestBot, MatchResult, RandomBot, RushBot};
+use cairl::faults::ChaosProfile;
 use cairl::render::Framebuffer;
 use cairl::runtime::Runtime;
 use cairl::shard::{shard_status, ServeConfig, ShardPoolOptions, ShardServer, ShardedEnvPool};
@@ -91,6 +94,8 @@ COMMANDS:
              [--executor vec|pool|pool-async --lanes N --threads T]
              [--kernel scalar|fused]
              [--shard ADDR[,ADDR...]] [--pipeline K] [--token T]
+             [--read-timeout MS] [--write-timeout MS] [--heartbeat MS]
+             [--chaos PROFILE]
              [--returns-log FILE] [--record FILE] [--metrics FILE]
              [--wrap \"TimeLimit(200),NormalizeObs\"]
              [--register-script NAME=FILE.mpy[,NAME=FILE.mpy...]]
@@ -131,7 +136,18 @@ COMMANDS:
                                   executor kinds, thread counts, kernels and
                                   shard placements — see `cairl replay`), and
                                   --metrics dumps the process's telemetry
-                                  registry as Prometheus text after the run
+                                  registry as Prometheus text after the run;
+                                  --read-timeout/--write-timeout bound every
+                                  shard frame (MS, 0 = block forever) so a
+                                  frozen shard fails over within the deadline
+                                  instead of stalling, --heartbeat pings idle
+                                  connections every MS, and --chaos injects
+                                  deterministic wire faults client-side
+                                  (PROFILE: off | light@SEED | heavy@SEED |
+                                  corrupt=BP,truncate=BP,delay=BP,reset=BP,
+                                  delay_ms=N@SEED — rates in basis points;
+                                  returns stay bit-identical, see
+                                  docs/OPERATIONS.md)
   replay     --tape FILE [--executor vec|pool|pool-async] [--threads T]
              [--kernel scalar|fused] [--shard ADDR[,ADDR...]] [--token T]
              [--register-script NAME=FILE.mpy[,...]]
@@ -152,7 +168,8 @@ COMMANDS:
   serve      --env SPEC --lanes N --listen ADDR
              [--executor vec|pool|pool-async] [--threads T]
              [--kernel scalar|fused] [--max-lanes N] [--token T]
-             [--allow ADDR[,ADDR...]]
+             [--allow ADDR[,ADDR...]] [--read-timeout MS]
+             [--chaos PROFILE] [--on-panic poison|quarantine]
              [--wrap \"TimeLimit(200),NormalizeObs\"]
   serve      --status ADDR [--token T]
                                   host a batched environment shard: one framed
@@ -173,7 +190,17 @@ COMMANDS:
                                   non-empty Hello wrap overrides it);
                                   --status ADDR queries a running
                                   daemon and prints its JSON report (per-client
-                                  lanes, pipeline depth, frames/sec, reconnects)
+                                  lanes, pipeline depth, frames/sec, reconnects);
+                                  --read-timeout reaps connections idle for MS
+                                  (heartbeating clients stay warm),
+                                  --chaos injects deterministic wire faults on
+                                  every hosted connection (same PROFILE grammar
+                                  as `run`), --on-panic quarantine survives a
+                                  panicking env lane (zeroed obs, done=true,
+                                  lane marked dead) instead of poisoning the
+                                  executor (default: poison); SIGTERM drains
+                                  gracefully — in-flight batches finish, new
+                                  Hellos get Busy, then the daemon exits
   train      --env NAME [--seed S] [--max-steps N] [--config FILE.json]
                                   train DQN via the PJRT artifacts
                                   (NAME: cartpole|mountaincar|acrobot|pendulum|multitask)
@@ -220,6 +247,26 @@ fn write_metrics_dump(args: &Args) -> Result<()> {
         .with_context(|| format!("--metrics {path:?}"))?;
     eprintln!("wrote telemetry snapshot to {path}");
     Ok(())
+}
+
+/// Honour a `--KEY MS` millisecond knob: absent or `0` = disabled.
+fn ms_flag(args: &Args, key: &str) -> Result<Option<Duration>> {
+    Ok(match args.u64(key, 0)? {
+        0 => None,
+        ms => Some(Duration::from_millis(ms)),
+    })
+}
+
+/// Resolve the chaos profile for a run: `--chaos PROFILE` wins, then the
+/// config file's `chaos` block; an `off` profile resolves to `None`.
+fn chaos_profile(args: &Args, file_cfg: &ExperimentConfig) -> Result<Option<ChaosProfile>> {
+    match args.opt("chaos") {
+        Some(spec) => {
+            let p = ChaosProfile::parse(spec).map_err(|e| anyhow!("{e}"))?;
+            Ok(if p.is_off() { None } else { Some(p) })
+        }
+        None => file_cfg.chaos.to_profile().map_err(|e| anyhow!("{e}")),
+    }
 }
 
 fn write_returns_log(args: &Args, r: &SteppingResult) -> Result<()> {
@@ -290,6 +337,12 @@ fn main() -> Result<()> {
             // A mixture spec always takes the batched path: its per-lane
             // env ids are meaningless to the single-env loop.
             let mixture = MixtureSpec::is_mixture(&env_id);
+            if shard_list.is_empty() && args.opt("chaos").is_some() {
+                bail!(
+                    "--chaos injects faults at the shard wire; add --shard ADDR \
+                     (or run a daemon with `cairl serve --chaos`)"
+                );
+            }
             if !shard_list.is_empty() {
                 // Sharded path: the workload runs against remote
                 // `cairl serve` daemons; executor knobs are theirs.
@@ -313,12 +366,25 @@ fn main() -> Result<()> {
                     .map(|w| w.render())
                     .collect::<Vec<_>>()
                     .join(",");
+                let chaos = chaos_profile(&args, &file_cfg)?;
+                if let Some(profile) = &chaos {
+                    eprintln!(
+                        "chaos active (client side): {} — reproduce with \
+                         --chaos \"{}\"",
+                        profile.render(),
+                        profile.render()
+                    );
+                }
                 let opts = ShardPoolOptions {
                     lanes,
                     base_seed: seed,
                     pipeline,
                     token,
                     wrap: wrap.clone(),
+                    read_timeout: ms_flag(&args, "read-timeout")?,
+                    write_timeout: ms_flag(&args, "write-timeout")?,
+                    heartbeat: ms_flag(&args, "heartbeat")?,
+                    chaos,
                     ..Default::default()
                 };
                 let mut exec = ShardedEnvPool::connect_opts(&shard_list, &env_id, opts)
@@ -594,6 +660,32 @@ fn main() -> Result<()> {
             let kernel = KernelMode::parse(&kernel_name).ok_or_else(|| {
                 anyhow!("unknown kernel {kernel_name:?} (scalar | fused)")
             })?;
+            let read_timeout = ms_flag(&args, "read-timeout")?;
+            let chaos = match args.opt("chaos") {
+                Some(spec) => {
+                    let p = ChaosProfile::parse(spec).map_err(|e| anyhow!("{e}"))?;
+                    if p.is_off() {
+                        None
+                    } else {
+                        Some(p)
+                    }
+                }
+                None => None,
+            };
+            let on_panic = match args.opt("on-panic") {
+                Some(s) => PanicPolicy::parse(s).ok_or_else(|| {
+                    anyhow!("unknown --on-panic {s:?} (poison | quarantine)")
+                })?,
+                None => PanicPolicy::Poison,
+            };
+            if let Some(profile) = &chaos {
+                eprintln!(
+                    "chaos active (server side): {} — reproduce with \
+                     --chaos \"{}\"",
+                    profile.render(),
+                    profile.render()
+                );
+            }
             let server = ShardServer::bind(
                 &listen,
                 ServeConfig {
@@ -606,6 +698,9 @@ fn main() -> Result<()> {
                     token,
                     allow,
                     wrap,
+                    read_timeout,
+                    chaos,
+                    on_panic,
                 },
             )
             .map_err(|e| anyhow!("{e}"))?;

@@ -40,6 +40,16 @@
 //! *remote* error (bad action count, executor panic shard-side) is
 //! never retried — replaying would reproduce it.
 //!
+//! **Deadlines + heartbeats.**  [`ShardPoolOptions::read_timeout`] /
+//! [`ShardPoolOptions::write_timeout`] arm per-frame socket deadlines
+//! on every connection, so a *frozen* shard (SIGSTOP, wedged executor
+//! — no connection error, just silence) surfaces as
+//! [`CairlError::DeadlineExceeded`] within the bounded window and
+//! routes into the same failover path as a hard disconnect.
+//! [`ShardPoolOptions::heartbeat`] adds an idle `Ping`/`Pong` probe so
+//! a dead shard is caught between batches too; see
+//! `docs/OPERATIONS.md` for tuning.
+//!
 //! **Padded-obs reassembly.**  Each shard pads observations to *its
 //! own* widest lane; the pool-wide padded width can be larger (a shard
 //! holding only `MountainCar-v0` lanes ships 2-wide rows into a 4-wide
@@ -57,6 +67,7 @@ use crate::core::env::Transition;
 use crate::core::error::{CairlError, Result};
 use crate::core::rng::Pcg32;
 use crate::core::spaces::Action;
+use crate::faults::{ChaosProfile, FaultPlan};
 use crate::shard::net::{FramedStream, ShardAddr};
 use crate::shard::plan::{calibrate_costs, ShardAssignment, ShardPlan};
 use crate::shard::proto::{next_seq, Msg, MsgRef, SEQ_NONE};
@@ -89,6 +100,22 @@ pub struct ConnectOptions {
     /// (`--wrap` grammar; `""` defers to the daemon's configured
     /// default).  The chain applies to every hosted lane server-side.
     pub wrap: String,
+    /// Per-frame read deadline.  If the shard produces no frame within
+    /// this window the call fails with
+    /// [`CairlError::DeadlineExceeded`](crate::core::error::CairlError)
+    /// and the connection must be abandoned (a timeout can strike
+    /// mid-frame) — which is exactly what the pool's failover does.
+    /// `None` (default) blocks forever, the pre-v5 behavior.
+    pub read_timeout: Option<Duration>,
+    /// Per-frame write deadline (a peer that stops draining its socket
+    /// eventually stalls sends).  Same fatality rule as
+    /// [`ConnectOptions::read_timeout`].
+    pub write_timeout: Option<Duration>,
+    /// Idle heartbeat interval: when set, the client sends a
+    /// `Ping`/`Pong` probe before a request if the connection has been
+    /// idle at least this long with nothing in flight — so a frozen
+    /// shard is caught between batches, not only mid-batch.
+    pub heartbeat: Option<Duration>,
 }
 
 impl Default for ConnectOptions {
@@ -98,6 +125,9 @@ impl Default for ConnectOptions {
             token: String::new(),
             busy_retries: 4,
             wrap: String::new(),
+            read_timeout: None,
+            write_timeout: None,
+            heartbeat: None,
         }
     }
 }
@@ -112,6 +142,14 @@ pub struct ShardClient {
     padded: usize,
     seq_last: u32,
     pending: VecDeque<u32>,
+    /// Idle-probe interval ([`ConnectOptions::heartbeat`]).
+    heartbeat: Option<Duration>,
+    /// Last successful send or receive on this connection.
+    last_io: Instant,
+    /// `cairl_heartbeats_sent_total`.
+    hb_sent: Counter,
+    /// `cairl_heartbeats_missed_total` (probe sent, no valid `Pong`).
+    hb_missed: Counter,
 }
 
 impl ShardClient {
@@ -140,6 +178,10 @@ impl ShardClient {
     ) -> Result<ShardClient> {
         let parsed = ShardAddr::parse(addr)?;
         let mut stream = FramedStream::connect(&parsed)?;
+        // Deadlines arm before the handshake so a frozen daemon (e.g. a
+        // SIGSTOP'd process whose kernel still accepts connects) fails
+        // the Spec read within the bounded window instead of hanging.
+        stream.set_deadlines(opts.read_timeout, opts.write_timeout)?;
         let mut seq_last = SEQ_NONE;
         let mut attempt = 0u32;
         loop {
@@ -175,6 +217,10 @@ impl ShardClient {
                         padded: obs_dim as usize,
                         seq_last,
                         pending: VecDeque::new(),
+                        heartbeat: opts.heartbeat,
+                        last_io: Instant::now(),
+                        hb_sent: counter("cairl_heartbeats_sent_total"),
+                        hb_missed: counter("cairl_heartbeats_missed_total"),
                     })
                 }
                 Msg::Busy {
@@ -234,19 +280,93 @@ impl ShardClient {
         self.pending.len()
     }
 
+    /// Attach a deterministic fault injector to this connection's send
+    /// path (the `--chaos` machinery; see [`crate::faults`]).  Always
+    /// attach **after** the handshake — and, under failover, after
+    /// replay — so recovery itself is never sabotaged.
+    pub fn attach_chaos(&mut self, profile: &ChaosProfile, stream: u64) {
+        self.stream.set_fault_injector(Some(FaultPlan::new(profile, stream)));
+    }
+
+    /// Probe the connection with a `Ping`/`Pong` round trip.  Only
+    /// valid with nothing in flight (the probe's reply would otherwise
+    /// interleave with pending batch replies).  A failed probe counts
+    /// into `cairl_heartbeats_missed_total` and means the connection is
+    /// dead — pool callers fail over.
+    pub fn ping(&mut self) -> Result<()> {
+        if !self.pending.is_empty() {
+            return Err(err(format!(
+                "{}: ping with {} request(s) in flight",
+                self.addr,
+                self.pending.len()
+            )));
+        }
+        let seq = next_seq(self.seq_last);
+        let nonce = 0x6361_6972_0000_0000u64 | seq as u64;
+        self.hb_sent.inc();
+        let res = (|| -> Result<()> {
+            self.stream.send(seq, MsgRef::Ping { nonce })?;
+            self.seq_last = seq;
+            let frame = self.stream.recv()?;
+            if frame.seq != seq {
+                return Err(err(format!(
+                    "{}: pong sequence {} does not answer ping {seq}",
+                    self.addr, frame.seq
+                )));
+            }
+            match frame.msg {
+                Msg::Pong { nonce: echoed } if echoed == nonce => Ok(()),
+                other => Err(err(format!(
+                    "{}: expected Pong({nonce}), got {other:?}",
+                    self.addr
+                ))),
+            }
+        })();
+        match res {
+            Ok(()) => {
+                self.last_io = Instant::now();
+                Ok(())
+            }
+            Err(e) => {
+                self.hb_missed.inc();
+                Err(e)
+            }
+        }
+    }
+
+    /// Fire an idle heartbeat if one is due ([`ConnectOptions::
+    /// heartbeat`]): connection idle at least the interval, nothing in
+    /// flight.  Called before every request so a long think-time gap
+    /// can't hide a dead shard until the next batch is already at risk.
+    fn maybe_heartbeat(&mut self) -> Result<()> {
+        match self.heartbeat {
+            Some(interval)
+                if self.pending.is_empty() && self.last_io.elapsed() >= interval =>
+            {
+                self.ping()
+            }
+            _ => Ok(()),
+        }
+    }
+
     /// Stamp and send one request frame, recording its seq as pending.
     fn send_request(&mut self, msg: MsgRef<'_>) -> Result<()> {
+        self.maybe_heartbeat()?;
         let seq = next_seq(self.seq_last);
         self.stream.send(seq, msg)?;
         self.seq_last = seq;
         self.pending.push_back(seq);
+        self.last_io = Instant::now();
         Ok(())
     }
 
     /// Receive the reply to the oldest in-flight request, enforcing the
-    /// seq echo.  A server `Error` comes back as `Ok(Msg::Error)` —
-    /// callers decide whether it is fatal.
-    fn recv_reply(&mut self) -> Result<Msg> {
+    /// seq echo, and return the reply's seq alongside the message so
+    /// callers can tell a transport-level server `Error` (reserved seq
+    /// 0: the daemon bailed before parsing a request — corruption or
+    /// truncation, retryable via failover) from a deterministic
+    /// request-level `Error` (echoed seq — never retried).
+    fn recv_reply_seq(&mut self) -> Result<(u32, Msg)> {
         let expected = self
             .pending
             .front()
@@ -257,7 +377,7 @@ impl ShardClient {
             // A pre-parse server error carries the reserved seq 0.
             if frame.seq == SEQ_NONE && matches!(frame.msg, Msg::Error { .. }) {
                 self.pending.pop_front();
-                return Ok(frame.msg);
+                return Ok((SEQ_NONE, frame.msg));
             }
             return Err(err(format!(
                 "{}: reply sequence {} does not answer the oldest in-flight request {expected}",
@@ -265,7 +385,15 @@ impl ShardClient {
             )));
         }
         self.pending.pop_front();
-        Ok(frame.msg)
+        self.last_io = Instant::now();
+        Ok((frame.seq, frame.msg))
+    }
+
+    /// Receive the reply to the oldest in-flight request.  A server
+    /// `Error` comes back as `Ok(Msg::Error)` — callers decide whether
+    /// it is fatal.
+    fn recv_reply(&mut self) -> Result<Msg> {
+        self.recv_reply_seq().map(|(_, msg)| msg)
     }
 
     /// Receive one reply, surfacing a server `Error` frame as [`Err`].
@@ -417,6 +545,20 @@ pub struct ShardPoolOptions {
     pub costs: Option<BTreeMap<String, f64>>,
     /// Recovery policy on connection loss.
     pub failover: FailoverConfig,
+    /// Per-frame read deadline on every shard connection
+    /// ([`ConnectOptions::read_timeout`]).  With failover enabled, a
+    /// deadline turns a frozen shard into a bounded-latency failover
+    /// instead of an indefinite stall.
+    pub read_timeout: Option<Duration>,
+    /// Per-frame write deadline ([`ConnectOptions::write_timeout`]).
+    pub write_timeout: Option<Duration>,
+    /// Idle heartbeat interval ([`ConnectOptions::heartbeat`]).
+    pub heartbeat: Option<Duration>,
+    /// Client-side chaos: a fault injector attached to every shard
+    /// connection post-handshake (and re-attached after failover
+    /// replay, on a fresh stream).  `None` or an `off` profile injects
+    /// nothing.
+    pub chaos: Option<ChaosProfile>,
 }
 
 impl Default for ShardPoolOptions {
@@ -430,6 +572,10 @@ impl Default for ShardPoolOptions {
             wrap: String::new(),
             costs: None,
             failover: FailoverConfig::default(),
+            read_timeout: None,
+            write_timeout: None,
+            heartbeat: None,
+            chaos: None,
         }
     }
 }
@@ -459,12 +605,22 @@ enum Fault {
 }
 
 /// Receive one reply, classifying failures for the failover machinery.
+/// An `Error` frame with the reserved seq 0 is a transport-level bail
+/// (the daemon rejected an unparseable frame — corruption/truncation):
+/// that is [`Fault::Lost`], because a fresh connection replaying the
+/// log will not reproduce it.  An `Error` echoing a request seq is a
+/// deterministic execution failure: [`Fault::Remote`], never retried.
 fn recv_msg_fault(client: &mut ShardClient) -> std::result::Result<Msg, Fault> {
-    match client.recv_reply() {
-        Ok(Msg::Error { message }) => {
-            Err(Fault::Remote(format!("{}: {message}", client.addr())))
+    match client.recv_reply_seq() {
+        Ok((seq, Msg::Error { message })) => {
+            let tagged = format!("{}: {message}", client.addr());
+            if seq == SEQ_NONE {
+                Err(Fault::Lost(tagged))
+            } else {
+                Err(Fault::Remote(tagged))
+            }
         }
-        Ok(msg) => Ok(msg),
+        Ok((_, msg)) => Ok(msg),
         Err(e) => Err(Fault::Lost(format!("{}: {e}", client.addr()))),
     }
 }
@@ -547,6 +703,12 @@ pub struct ShardedEnvPool {
     busy_retries: u32,
     wrap: String,
     failover: FailoverConfig,
+    read_timeout: Option<Duration>,
+    write_timeout: Option<Duration>,
+    heartbeat: Option<Duration>,
+    /// Client-side chaos profile; injectors are attached per connection
+    /// on a fresh PCG stream (slot + reconnect generation).
+    chaos: Option<ChaosProfile>,
     /// Replay log since connect; the failover source of truth.
     history: Vec<ReplayOp>,
     /// Per shard: ops from `history` sent on its current connection.
@@ -648,6 +810,9 @@ impl ShardedEnvPool {
             token: opts.token.clone(),
             busy_retries: opts.busy_retries,
             wrap: opts.wrap.clone(),
+            read_timeout: opts.read_timeout,
+            write_timeout: opts.write_timeout,
+            heartbeat: opts.heartbeat,
         };
         let mut clients = Vec::with_capacity(addrs.len());
         for (addr, assignment) in addrs.iter().zip(plan.assignments()) {
@@ -689,7 +854,7 @@ impl ShardedEnvPool {
         }
         let n = specs.len();
         let shards = clients.len();
-        Ok(ShardedEnvPool {
+        let mut pool = ShardedEnvPool {
             clients,
             plan,
             specs,
@@ -702,6 +867,10 @@ impl ShardedEnvPool {
             busy_retries: opts.busy_retries,
             wrap: opts.wrap,
             failover: opts.failover,
+            read_timeout: opts.read_timeout,
+            write_timeout: opts.write_timeout,
+            heartbeat: opts.heartbeat,
+            chaos: opts.chaos,
             history: Vec::new(),
             ops_sent: vec![0; shards],
             ops_acked: vec![0; shards],
@@ -720,7 +889,25 @@ impl ShardedEnvPool {
                 .map(|s| gauge(&format!("cairl_shard_inflight{{shard=\"{s}\"}}")))
                 .collect(),
             m_reconnects: counter("cairl_shard_reconnects_total"),
-        })
+        };
+        for s in 0..pool.clients.len() {
+            pool.attach_chaos(s);
+        }
+        Ok(pool)
+    }
+
+    /// Arm the configured chaos injector on shard `s`'s current
+    /// connection.  The PCG stream combines the slot and its reconnect
+    /// generation, so a replacement connection draws a fresh (still
+    /// deterministic) fault sequence instead of re-hitting the same
+    /// faults at the same replay points forever.
+    fn attach_chaos(&mut self, s: usize) {
+        if let Some(profile) = &self.chaos {
+            if !profile.is_off() {
+                let stream = ((s as u64) << 32) | self.reconnects[s];
+                self.clients[s].attach_chaos(profile, stream);
+            }
+        }
     }
 
     /// The placement this pool connected with.
@@ -860,6 +1047,9 @@ impl ShardedEnvPool {
             token: self.token.clone(),
             busy_retries: self.busy_retries,
             wrap: self.wrap.clone(),
+            read_timeout: self.read_timeout,
+            write_timeout: self.write_timeout,
+            heartbeat: self.heartbeat,
         };
         let mut client =
             ShardClient::connect_with(addr, &a.spec(), self.base_seed, a.first_lane, &conn_opts)?;
@@ -900,7 +1090,34 @@ impl ShardedEnvPool {
         // In-flight ops were re-sent by the replay; their round-trips
         // are no longer meaningful samples.
         self.sent_at[s].clear();
+        // Chaos re-arms only now, after the replay — recovery itself
+        // runs fault-free, so a replay can never be sabotaged into a
+        // livelock by its own injector.
+        self.attach_chaos(s);
         Ok(())
+    }
+
+    /// Probe every shard connection with a `Ping`/`Pong` round trip,
+    /// transparently failing over any shard whose probe dies.  Only
+    /// valid between batches (nothing in flight) — the idle-fleet
+    /// health check for long think-time gaps.
+    pub fn heartbeat(&mut self) {
+        assert_eq!(
+            self.in_flight(),
+            0,
+            "heartbeat while batches are in flight — drain the pipeline first"
+        );
+        for s in 0..self.clients.len() {
+            loop {
+                match self.clients[s].ping() {
+                    Ok(()) => break,
+                    Err(e) => {
+                        let cause = format!("{}: {e}", self.clients[s].addr());
+                        self.failover(s, &cause);
+                    }
+                }
+            }
+        }
     }
 
     /// Submit one global action batch without waiting for its result.

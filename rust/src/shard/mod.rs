@@ -28,6 +28,17 @@
 //!   keeping placement contiguous so per-lane seeds — and therefore
 //!   trajectories — are bit-identical to a local pool.
 //!
+//! The fabric is hardened for real fleets (protocol v5): per-frame
+//! read/write deadlines surface a frozen shard as
+//! `CairlError::DeadlineExceeded` within a bounded window and route it
+//! into the failover replay path, idle clients keep connections warm
+//! with `Ping`/`Pong` heartbeats, a draining daemon (SIGTERM or
+//! [`ShardServerHandle::drain`]) finishes in-flight batches while
+//! answering new `Hello`s with `Busy`, and the whole stack can be
+//! torture-tested deterministically with seed-driven fault injection
+//! ([`crate::faults`], `--chaos PROFILE`).  Operational guidance lives
+//! in `docs/OPERATIONS.md`.
+//!
 //! The layer map and the determinism contract shared by every executor
 //! (local, fused, sharded, pipelined, post-failover) are documented
 //! once in `docs/ARCHITECTURE.md`.

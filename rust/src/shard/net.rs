@@ -13,6 +13,20 @@
 //! `TCP_NODELAY` is set on TCP streams because the protocol is strictly
 //! request/reply — Nagle would serialise every batch behind a delayed
 //! ACK.
+//!
+//! **Deadlines.**  [`FramedStream::set_deadlines`] arms per-frame
+//! read/write timeouts on the underlying socket; an elapsed deadline
+//! surfaces as [`CairlError::DeadlineExceeded`] and counts into
+//! `cairl_deadline_timeouts_total`.  A timeout can fire mid-frame, at
+//! which point the stream's framing position is lost — so a deadline is
+//! always **fatal to the connection**: callers must close (and, on the
+//! client, fail over), never retry the read.
+//!
+//! **Chaos.**  [`FramedStream::set_fault_injector`] attaches a
+//! seed-driven [`FaultPlan`](crate::faults::FaultPlan); each `send`
+//! consults it and may corrupt a byte, truncate the frame, delay, or
+//! reset the connection — the deterministic fault surface the chaos
+//! tests and `--chaos` profiles drive.
 
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -20,8 +34,10 @@ use std::net::{TcpListener, TcpStream};
 use std::os::unix::net::{UnixListener, UnixStream};
 #[cfg(unix)]
 use std::path::PathBuf;
+use std::time::Duration;
 
 use crate::core::error::{CairlError, Result};
+use crate::faults::{FaultPlan, WireFault};
 use crate::shard::proto::{self, Frame, MsgRef};
 
 fn err(msg: impl Into<String>) -> CairlError {
@@ -111,6 +127,44 @@ impl RawStream {
             }
         }
     }
+
+    /// Arm (or clear, with `None`) the socket's receive timeout.
+    pub(crate) fn set_read_timeout(&self, d: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            #[cfg(unix)]
+            RawStream::Unix(s) => s.set_read_timeout(d),
+            RawStream::Tcp(s) => s.set_read_timeout(d),
+        }
+    }
+
+    /// Arm (or clear, with `None`) the socket's send timeout.
+    pub(crate) fn set_write_timeout(&self, d: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            #[cfg(unix)]
+            RawStream::Unix(s) => s.set_write_timeout(d),
+            RawStream::Tcp(s) => s.set_write_timeout(d),
+        }
+    }
+}
+
+/// Rewrite a timed-out I/O error (`WouldBlock`/`TimedOut` is how a
+/// socket timeout surfaces) as [`CairlError::DeadlineExceeded`], and
+/// count it.  Everything else passes through unchanged.
+fn map_deadline<T>(res: Result<T>, dir: &str) -> Result<T> {
+    match res {
+        Err(CairlError::Io(e))
+            if matches!(
+                e.kind(),
+                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+            ) =>
+        {
+            crate::telemetry::counter("cairl_deadline_timeouts_total").inc();
+            Err(CairlError::DeadlineExceeded(format!(
+                "{dir} deadline elapsed: {e}"
+            )))
+        }
+        other => other,
+    }
 }
 
 impl Read for RawStream {
@@ -147,6 +201,7 @@ impl Write for RawStream {
 pub(crate) struct FramedStream {
     r: BufReader<RawStream>,
     w: BufWriter<RawStream>,
+    faults: Option<FaultPlan>,
 }
 
 impl FramedStream {
@@ -159,6 +214,7 @@ impl FramedStream {
         Ok(FramedStream {
             r: BufReader::new(stream),
             w: BufWriter::new(writer),
+            faults: None,
         })
     }
 
@@ -176,14 +232,79 @@ impl FramedStream {
         FramedStream::new(stream)
     }
 
+    /// Arm (or clear) per-frame read/write deadlines on the underlying
+    /// socket.  An elapsed deadline surfaces from `send`/`recv` as
+    /// [`CairlError::DeadlineExceeded`] and is fatal to the connection
+    /// (a timeout can strike mid-frame, losing framing) — close and,
+    /// client-side, fail over.
+    pub(crate) fn set_deadlines(
+        &self,
+        read: Option<Duration>,
+        write: Option<Duration>,
+    ) -> Result<()> {
+        self.r.get_ref().set_read_timeout(read)?;
+        self.w.get_ref().set_write_timeout(write)?;
+        Ok(())
+    }
+
+    /// Attach a seed-driven fault injector consulted on every `send`.
+    /// Attach only **after** the handshake so connects and failover
+    /// re-dials always succeed; `None` detaches.
+    pub(crate) fn set_fault_injector(&mut self, plan: Option<FaultPlan>) {
+        self.faults = plan;
+    }
+
+    /// Force-close the connection under the buffers (both halves share
+    /// the socket) — the injector's reset/truncate kill switch.
+    fn force_shutdown(&mut self) {
+        self.r.get_ref().shutdown();
+    }
+
     /// Write one frame stamped with `seq` and flush it.
     pub(crate) fn send(&mut self, seq: u32, msg: MsgRef<'_>) -> Result<()> {
-        proto::write_msg(&mut self.w, seq, msg)
+        let fault = self.faults.as_mut().and_then(|p| p.next_wire_fault());
+        match fault {
+            None => map_deadline(proto::write_msg(&mut self.w, seq, msg), "send"),
+            Some(WireFault::Delay(d)) => {
+                std::thread::sleep(d);
+                map_deadline(proto::write_msg(&mut self.w, seq, msg), "send")
+            }
+            Some(WireFault::Corrupt { offset, mask }) => {
+                let mut frame = proto::encode(seq, msg);
+                let i = (offset % frame.len() as u64) as usize;
+                frame[i] ^= mask;
+                let res = self
+                    .w
+                    .write_all(&frame)
+                    .and_then(|_| self.w.flush())
+                    .map_err(CairlError::from);
+                map_deadline(res, "send")
+            }
+            Some(WireFault::Truncate { keep }) => {
+                let frame = proto::encode(seq, msg);
+                let max_keep = frame.len().saturating_sub(1).max(1);
+                let keep = 1 + (keep as usize % max_keep);
+                let _ = self.w.write_all(&frame[..keep]);
+                let _ = self.w.flush();
+                self.force_shutdown();
+                Err(CairlError::Io(std::io::Error::new(
+                    std::io::ErrorKind::ConnectionReset,
+                    "chaos: frame truncated mid-send",
+                )))
+            }
+            Some(WireFault::Reset) => {
+                self.force_shutdown();
+                Err(CairlError::Io(std::io::Error::new(
+                    std::io::ErrorKind::ConnectionReset,
+                    "chaos: connection reset",
+                )))
+            }
+        }
     }
 
     /// Block for the next frame (sequence number + message).
     pub(crate) fn recv(&mut self) -> Result<Frame> {
-        proto::read_msg(&mut self.r)
+        map_deadline(proto::read_msg(&mut self.r), "recv")
     }
 }
 

@@ -35,8 +35,9 @@
 //! control), `Reset`/`Obs`, `Step`/`StepResult` with f32 observation
 //! payloads, a whole-workload `RandomRollout`/`RolloutDone` pair (the
 //! free-running throughput mode crosses the wire **once**),
-//! `Status`/`StatusReport` for daemon introspection, `Close` and
-//! `Error`.
+//! `Status`/`StatusReport` for daemon introspection, `Ping`/`Pong`
+//! liveness probes (valid before any `Hello`, no token required),
+//! `Close` and `Error`.
 //!
 //! Two enums, one format: [`MsgRef`] borrows its payloads for
 //! allocation-light encoding on the hot path, [`Msg`] owns them for
@@ -54,8 +55,11 @@ use crate::core::spaces::{Action, Space};
 /// (both halves ship in one binary; see `docs/shard-protocol.md` for
 /// the compatibility story).  v4: `Obs`/`StepResult` observation blocks
 /// are tail-elided — each lane ships its true (unpadded) width and the
-/// client re-pads, so padding zeros never cross the wire.
-pub const PROTO_VERSION: u8 = 4;
+/// client re-pads, so padding zeros never cross the wire.  v5:
+/// `Ping`/`Pong` liveness frames, per-frame read/write deadline
+/// semantics, and the drain handshake (`Hello` during drain answered
+/// with `Busy`).
+pub const PROTO_VERSION: u8 = 5;
 
 /// Hard ceiling on payload length (64 MiB) — refuse corrupt length
 /// prefixes before allocating.
@@ -78,6 +82,8 @@ const TAG_ERROR: u8 = 10;
 const TAG_STATUS: u8 = 11;
 const TAG_STATUS_REPORT: u8 = 12;
 const TAG_BUSY: u8 = 13;
+const TAG_PING: u8 = 14;
+const TAG_PONG: u8 = 15;
 
 /// The successor of `seq` in the 1-based sequence space (wraps around
 /// [`SEQ_NONE`], which is reserved).
@@ -236,6 +242,19 @@ pub enum MsgRef<'a> {
         /// Suggested client back-off before re-sending `Hello`.
         retry_ms: u64,
     },
+    /// Client-initiated liveness probe; answered by [`MsgRef::Pong`]
+    /// echoing the nonce.  Valid at any point — including before
+    /// `Hello` and without a token — because it reveals nothing beyond
+    /// liveness.
+    Ping {
+        /// Opaque value echoed back in the matching `Pong`.
+        nonce: u64,
+    },
+    /// Liveness reply: the nonce of the `Ping` it answers.
+    Pong {
+        /// Echo of the probe's nonce.
+        nonce: u64,
+    },
     /// Orderly hang-up.
     Close,
     /// Server-side failure (bad spec, wrong action count, bad sequence
@@ -322,6 +341,16 @@ pub enum Msg {
         max_lanes: u64,
         /// Suggested client back-off before re-sending `Hello`.
         retry_ms: u64,
+    },
+    /// See [`MsgRef::Ping`].
+    Ping {
+        /// Opaque value echoed back in the matching `Pong`.
+        nonce: u64,
+    },
+    /// See [`MsgRef::Pong`].
+    Pong {
+        /// Echo of the probe's nonce.
+        nonce: u64,
     },
     /// See [`MsgRef::Close`].
     Close,
@@ -506,6 +535,16 @@ pub fn encode(seq: u32, msg: MsgRef<'_>) -> Vec<u8> {
             put_u64(&mut payload, active_lanes);
             put_u64(&mut payload, max_lanes);
             put_u64(&mut payload, retry_ms);
+        }
+        MsgRef::Ping { nonce } => {
+            payload.push(TAG_PING);
+            put_u32(&mut payload, seq);
+            put_u64(&mut payload, nonce);
+        }
+        MsgRef::Pong { nonce } => {
+            payload.push(TAG_PONG);
+            put_u32(&mut payload, seq);
+            put_u64(&mut payload, nonce);
         }
         MsgRef::Close => {
             payload.push(TAG_CLOSE);
@@ -742,6 +781,8 @@ pub fn decode_payload(payload: &[u8]) -> Result<Frame> {
             max_lanes: r.u64()?,
             retry_ms: r.u64()?,
         },
+        TAG_PING => Msg::Ping { nonce: r.u64()? },
+        TAG_PONG => Msg::Pong { nonce: r.u64()? },
         TAG_CLOSE => Msg::Close,
         TAG_ERROR => Msg::Error { message: r.str()? },
         other => return Err(err(format!("unknown message tag {other}"))),
@@ -942,6 +983,14 @@ mod tests {
                     retry_ms: 50,
                 }
             )
+        );
+        assert_eq!(
+            round_trip(12, MsgRef::Ping { nonce: 0xdead_beef }),
+            framed(12, Msg::Ping { nonce: 0xdead_beef })
+        );
+        assert_eq!(
+            round_trip(12, MsgRef::Pong { nonce: 0xdead_beef }),
+            framed(12, Msg::Pong { nonce: 0xdead_beef })
         );
         assert_eq!(round_trip(11, MsgRef::Close), framed(11, Msg::Close));
         assert_eq!(

@@ -33,6 +33,22 @@
 //! JSON [`ServerStats`] snapshot: uptime, lane budget, frame/step
 //! totals, reconnect count and a per-client table.
 //!
+//! **Robustness (protocol v5).**  A `Ping` answers `Pong` at any point
+//! — before any `Hello` and without a token — which is what lets idle
+//! clients heartbeat.  `--read-timeout MS` arms a per-connection read
+//! deadline: a peer silent for longer (no request, no `Ping`) is
+//! reaped and its lanes released.  `--chaos PROFILE` arms a seed-driven
+//! wire-fault injector on every connection right after its `Spec`
+//! reply (see [`crate::faults`]; the handshake always runs clean), and
+//! `--on-panic quarantine` trades the poison-by-default executor
+//! behaviour for per-lane quarantine.  SIGTERM on the foreground
+//! daemon — and [`ShardServerHandle::drain`] /
+//! [`ShardServerHandle::shutdown_graceful`] on a background one —
+//! starts a **drain**: in-flight connections keep being served, new
+//! `Hello`s answer `Busy`, and the daemon exits once every connection
+//! has wound down or the grace window lapses.  The runbook view of all
+//! of this lives in `docs/OPERATIONS.md`.
+//!
 //! Inside a connection the protocol is sequenced request/reply
 //! (`Reset`→`Obs`, `Step`→`StepResult`, `RandomRollout`→`RolloutDone`):
 //! the daemon enforces the strict-successor rule on request sequence
@@ -53,11 +69,12 @@ use std::time::{Duration, Instant};
 use crate::coordinator::experiment::{
     build_env_pool_shard, build_executor_with_kernel, ExecutorKind, KernelMode,
 };
-use crate::coordinator::pool::{BatchedExecutor, EnvPool, RolloutCounts};
+use crate::coordinator::pool::{BatchedExecutor, EnvPool, PanicPolicy, RolloutCounts};
 use crate::coordinator::registry::{self, MixtureSpec};
 use crate::core::env::Transition;
 use crate::core::error::{CairlError, Result};
 use crate::core::json::Value;
+use crate::faults::{ChaosProfile, FaultPlan};
 use crate::telemetry::{self, counter, gauge, Counter, Gauge};
 use crate::wrappers::WrapperSpec;
 use crate::shard::net::{FramedStream, RawStream, ShardAddr, ShardListener};
@@ -65,6 +82,14 @@ use crate::shard::proto::{Msg, MsgRef, SeqTracker, PROTO_VERSION, SEQ_NONE};
 
 /// Back-off the daemon suggests in a `Busy` frame.
 const BUSY_RETRY_MS: u64 = 50;
+
+/// Grace window a SIGTERM-initiated drain gives in-flight connections
+/// before the foreground daemon exits anyway.
+const DRAIN_GRACE: Duration = Duration::from_secs(30);
+
+/// Idle back-off ceiling for the poll-accept loop: sleeps start at
+/// 1 ms, double per idle poll up to this cap, and reset on any accept.
+const ACCEPT_IDLE_CAP_MS: u64 = 20;
 
 /// What a shard daemon hosts: the default env spec plus the executor
 /// knobs every connection's pool is built with.
@@ -101,6 +126,23 @@ pub struct ServeConfig {
     /// `--token`: the token authenticates inside the protocol, the
     /// allow list rejects before a single frame is read.
     pub allow: String,
+    /// Per-connection read deadline (`None` = wait forever).  With a
+    /// deadline armed, a peer silent for longer — no request, no
+    /// `Ping` — is reaped: the blocked read surfaces as
+    /// [`CairlError::DeadlineExceeded`] and the connection closes,
+    /// releasing its lanes.  Clients that idle between batches should
+    /// heartbeat at an interval comfortably below this (see
+    /// `ConnectOptions::heartbeat`).
+    pub read_timeout: Option<Duration>,
+    /// Seed-driven wire-fault injector armed on every connection right
+    /// after its `Spec` reply — the handshake itself always runs clean.
+    /// `None` (or a profile whose [`ChaosProfile::is_off`] holds)
+    /// serves faithfully.
+    pub chaos: Option<ChaosProfile>,
+    /// What a hosted executor does when an env panics mid-batch:
+    /// poison the whole pool (the default — fail fast, the client gets
+    /// an `Error` frame) or quarantine just the offending lane.
+    pub on_panic: PanicPolicy,
 }
 
 impl ServeConfig {
@@ -117,6 +159,9 @@ impl ServeConfig {
             token: String::new(),
             wrap: String::new(),
             allow: String::new(),
+            read_timeout: None,
+            chaos: None,
+            on_panic: PanicPolicy::Poison,
         }
     }
 
@@ -427,6 +472,72 @@ impl ServerStats {
     }
 }
 
+/// Shutdown/drain switchboard shared by the accept loop, every
+/// connection thread and the [`ShardServerHandle`].  `stop` ends the
+/// accept loop immediately; `drain` keeps it serving but bounces new
+/// `Hello`s with `Busy` until every connection has wound down or the
+/// grace deadline lapses.
+struct ServeControl {
+    stop: AtomicBool,
+    drain: AtomicBool,
+    deadline: Mutex<Option<Instant>>,
+}
+
+impl ServeControl {
+    fn new() -> ServeControl {
+        ServeControl {
+            stop: AtomicBool::new(false),
+            drain: AtomicBool::new(false),
+            deadline: Mutex::new(None),
+        }
+    }
+
+    /// Enter drain mode; the first caller's grace window wins.
+    fn begin_drain(&self, grace: Duration) {
+        self.drain.store(true, Ordering::Release);
+        if let Ok(mut deadline) = self.deadline.lock() {
+            if deadline.is_none() {
+                *deadline = Some(Instant::now() + grace);
+            }
+        }
+    }
+
+    fn draining(&self) -> bool {
+        self.drain.load(Ordering::Acquire)
+    }
+
+    fn drain_expired(&self) -> bool {
+        self.deadline
+            .lock()
+            .ok()
+            .and_then(|d| *d)
+            .map(|d| Instant::now() >= d)
+            .unwrap_or(false)
+    }
+}
+
+/// Set by the SIGTERM handler the foreground daemon installs; the
+/// accept loop polls it and turns it into a drain.
+static TERM_FLAG: AtomicBool = AtomicBool::new(false);
+
+extern "C" fn on_sigterm(_signum: i32) {
+    // Only async-signal-safe work here: flip the flag, nothing else.
+    TERM_FLAG.store(true, Ordering::SeqCst);
+}
+
+/// Install [`on_sigterm`] as the process's SIGTERM handler via the
+/// libc `signal(2)` entry point — declared directly so the crate stays
+/// dependency-free.
+fn install_sigterm_handler() {
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGTERM, on_sigterm as usize);
+    }
+}
+
 /// Live connections, by id — the raw handles let
 /// [`ShardServerHandle::kill_connections`] sever every client at once
 /// (the failover drill in tests and CI).
@@ -438,6 +549,7 @@ pub struct ShardServer {
     config: Arc<ServeConfig>,
     stats: Arc<ServerStats>,
     conns: Arc<ConnTable>,
+    control: Arc<ServeControl>,
 }
 
 impl ShardServer {
@@ -477,6 +589,7 @@ impl ShardServer {
             config: Arc::new(config),
             stats,
             conns: Arc::new(Mutex::new(Vec::new())),
+            control: Arc::new(ServeControl::new()),
         })
     }
 
@@ -490,9 +603,27 @@ impl ShardServer {
         Arc::clone(&self.stats)
     }
 
-    /// Serve until the process exits — the `cairl serve` foreground path.
+    /// Serve until shut down — the `cairl serve` foreground path.
+    /// Installs a SIGTERM handler that drains: in-flight connections
+    /// finish their pipelined batches, new `Hello`s answer `Busy`, and
+    /// the daemon exits once every connection has wound down or
+    /// [`DRAIN_GRACE`] lapses.
     pub fn run(self) -> Result<()> {
-        accept_loop(self.listener, self.config, self.stats, self.conns, None);
+        install_sigterm_handler();
+        accept_loop(
+            self.listener,
+            self.config,
+            self.stats,
+            Arc::clone(&self.conns),
+            Arc::clone(&self.control),
+            true,
+        );
+        // Sever any connection that outlived the drain grace window.
+        if let Ok(conns) = self.conns.lock() {
+            for (_, raw) in conns.iter() {
+                raw.shutdown();
+            }
+        }
         Ok(())
     }
 
@@ -500,11 +631,10 @@ impl ShardServer {
     /// accept loop down on [`ShardServerHandle::shutdown`] or drop.
     /// In-flight connections drain on their own when clients hang up.
     pub fn spawn(self) -> ShardServerHandle {
-        let stop = Arc::new(AtomicBool::new(false));
         let addr = self.local_addr();
-        let stop_thread = Arc::clone(&stop);
         let stats = Arc::clone(&self.stats);
         let conns = Arc::clone(&self.conns);
+        let control = Arc::clone(&self.control);
         let handle = std::thread::Builder::new()
             .name("cairl-shard-accept".into())
             .spawn(move || {
@@ -513,12 +643,13 @@ impl ShardServer {
                     self.config,
                     self.stats,
                     self.conns,
-                    Some(stop_thread),
+                    self.control,
+                    false,
                 )
             })
             .expect("spawn shard accept loop");
         ShardServerHandle {
-            stop,
+            control,
             handle: Some(handle),
             addr,
             stats,
@@ -529,7 +660,7 @@ impl ShardServer {
 
 /// Handle to a background [`ShardServer`]; see [`ShardServer::spawn`].
 pub struct ShardServerHandle {
-    stop: Arc<AtomicBool>,
+    control: Arc<ServeControl>,
     handle: Option<JoinHandle<()>>,
     addr: String,
     stats: Arc<ServerStats>,
@@ -567,8 +698,34 @@ impl ShardServerHandle {
         self.stop_and_join();
     }
 
+    /// Begin draining without waiting: in-flight connections keep
+    /// being served, new `Hello`s answer `Busy`, and the accept loop
+    /// exits on its own once every connection has wound down (or the
+    /// default grace window lapses).  Follow with
+    /// [`ShardServerHandle::shutdown_graceful`] — or plain
+    /// [`ShardServerHandle::shutdown`] — to join it.
+    pub fn drain(&self) {
+        self.control.begin_drain(DRAIN_GRACE);
+    }
+
+    /// Is the daemon currently draining?
+    pub fn draining(&self) -> bool {
+        self.control.draining()
+    }
+
+    /// Drain with an explicit grace window and wait for the accept
+    /// loop to wind down; connections that outlive the window are
+    /// severed on the way out.
+    pub fn shutdown_graceful(mut self, grace: Duration) {
+        self.control.begin_drain(grace);
+        if let Some(handle) = self.handle.take() {
+            let _ = handle.join();
+        }
+        self.kill_connections();
+    }
+
     fn stop_and_join(&mut self) {
-        self.stop.store(true, Ordering::Release);
+        self.control.stop.store(true, Ordering::Release);
         if let Some(handle) = self.handle.take() {
             let _ = handle.join();
         }
@@ -608,8 +765,11 @@ fn requested_lanes(spec: &str, config: &ServeConfig) -> Result<usize> {
 
 /// Does `peer` pass the daemon's `--allow` list?  Empty list admits
 /// everyone; Unix-socket peers (`"unix"`) are always admitted; a TCP
-/// peer (`"ip:port"`) must start with one of the comma-separated
-/// prefixes.
+/// peer (`"ip:port"`, IPv6 as `"[addr]:port"`) must start with one of
+/// the comma-separated prefixes **ending at a component boundary**: the
+/// match must stop exactly where an octet, an IPv6 group or the port
+/// does (`.`/`:`/`]`), so `--allow 10.0.1` admits `10.0.1.7:555` but
+/// never `10.0.10.7:555`.
 fn peer_allowed(allow: &str, peer: &str) -> bool {
     if allow.is_empty() || peer == "unix" {
         return true;
@@ -618,28 +778,54 @@ fn peer_allowed(allow: &str, peer: &str) -> bool {
         .split(',')
         .map(str::trim)
         .filter(|p| !p.is_empty())
-        .any(|prefix| peer.starts_with(prefix))
+        .any(|prefix| match peer.strip_prefix(prefix) {
+            None => false,
+            Some("") => true,
+            Some(rest) => {
+                prefix.ends_with(['.', ':', ']']) || rest.starts_with(['.', ':', ']'])
+            }
+        })
 }
 
-/// Poll-accept until stopped (or forever when `stop` is `None`); each
-/// connection gets its own detached thread, a stable id and a raw
-/// handle in the kill table.  Peers failing the `--allow` list are
-/// dropped here, before a single frame is read.
+/// Poll-accept until stopped; each connection gets its own detached
+/// thread, a stable id and a raw handle in the kill table.  Peers
+/// failing the `--allow` list are dropped here, before a single frame
+/// is read.  Idle polls back off exponentially (1 ms doubling to
+/// [`ACCEPT_IDLE_CAP_MS`], reset on any accept) so an idle daemon
+/// costs ~50 wakeups/s instead of 500.  While draining the loop keeps
+/// accepting — a `Hello` during drain answers `Busy` in `serve_conn`
+/// — and returns once the connection table empties or the grace
+/// deadline lapses; `watch_sigterm` (the foreground path) additionally
+/// turns a delivered SIGTERM into a [`DRAIN_GRACE`] drain.
 fn accept_loop(
     listener: ShardListener,
     config: Arc<ServeConfig>,
     stats: Arc<ServerStats>,
     conns: Arc<ConnTable>,
-    stop: Option<Arc<AtomicBool>>,
+    control: Arc<ServeControl>,
+    watch_sigterm: bool,
 ) {
+    let mut idle_ms = 1u64;
     loop {
-        if let Some(flag) = &stop {
-            if flag.load(Ordering::Acquire) {
+        if control.stop.load(Ordering::Acquire) {
+            return;
+        }
+        if watch_sigterm && TERM_FLAG.load(Ordering::SeqCst) && !control.draining() {
+            eprintln!(
+                "cairl serve: SIGTERM — draining (grace {}s)",
+                DRAIN_GRACE.as_secs()
+            );
+            control.begin_drain(DRAIN_GRACE);
+        }
+        if control.draining() {
+            let empty = conns.lock().map(|table| table.is_empty()).unwrap_or(true);
+            if empty || control.drain_expired() {
                 return;
             }
         }
         match listener.accept_nonblocking() {
             Ok(Some((stream, peer))) => {
+                idle_ms = 1;
                 if !peer_allowed(&config.allow, &peer) {
                     stats.note_rejected_peer();
                     eprintln!("cairl serve: rejected peer {peer} (not in --allow)");
@@ -656,18 +842,21 @@ fn accept_loop(
                 let config = Arc::clone(&config);
                 let stats = Arc::clone(&stats);
                 let conns = Arc::clone(&conns);
+                let control = Arc::clone(&control);
                 let _ = std::thread::Builder::new()
                     .name("cairl-shard-conn".into())
                     .spawn(move || {
-                        serve_conn(stream, &config, &stats, id);
+                        serve_conn(stream, &config, &stats, id, &control);
                         stats.drop_client(id);
                         if let Ok(mut table) = conns.lock() {
                             table.retain(|(cid, _)| *cid != id);
                         }
                     });
             }
-            Ok(None) => std::thread::sleep(Duration::from_millis(2)),
-            Err(_) => std::thread::sleep(Duration::from_millis(20)),
+            Ok(None) | Err(_) => {
+                std::thread::sleep(Duration::from_millis(idle_ms));
+                idle_ms = (idle_ms * 2).min(ACCEPT_IDLE_CAP_MS);
+            }
         }
     }
 }
@@ -696,11 +885,21 @@ fn pack_obs(obs: &[f32], padded: usize, widths: &[usize], packed: &mut [f32]) {
 }
 
 /// One connection: handshake, then sequenced request/reply until
-/// `Close`/EOF.
-fn serve_conn(stream: RawStream, config: &ServeConfig, stats: &ServerStats, id: u64) {
+/// `Close`/EOF — or, with `--read-timeout` armed, until the peer goes
+/// silent for longer than the deadline (the idle reaper).
+fn serve_conn(
+    stream: RawStream,
+    config: &ServeConfig,
+    stats: &ServerStats,
+    id: u64,
+    control: &ServeControl,
+) {
     let Ok(mut stream) = FramedStream::new(stream) else {
         return;
     };
+    if stream.set_deadlines(config.read_timeout, None).is_err() {
+        return;
+    }
     let mut host: Option<HostExec> = None;
     let mut seqs = SeqTracker::new();
     // Reusable step/reset buffers, sized at handshake.
@@ -716,6 +915,11 @@ fn serve_conn(stream: RawStream, config: &ServeConfig, stats: &ServerStats, id: 
         let frame = match stream.recv() {
             Ok(frame) => frame,
             Err(CairlError::Io(_)) => return, // peer hung up
+            // The read deadline fired: the peer sent nothing — not
+            // even a Ping — for a whole window.  A timeout can strike
+            // mid-frame, which loses framing, so the only safe move is
+            // to close (releasing the client's lanes).
+            Err(CairlError::DeadlineExceeded(_)) => return,
             Err(e) => {
                 stats.note_bad_frame();
                 bail(&mut stream, SEQ_NONE, &format!("bad frame: {e}"));
@@ -742,6 +946,21 @@ fn serve_conn(stream: RawStream, config: &ServeConfig, stats: &ServerStats, id: 
                     stats.auth_failures.fetch_add(1, Ordering::Relaxed);
                     bail(&mut stream, seq, "unauthorized: bad or missing token");
                     return;
+                }
+                // A draining daemon serves what it already hosts but
+                // takes no new work: every Hello answers Busy until
+                // the drain completes.
+                if control.draining() {
+                    stats.busy_rejections.fetch_add(1, Ordering::Relaxed);
+                    let busy = MsgRef::Busy {
+                        active_lanes: stats.active_lanes() as u64,
+                        max_lanes: config.max_lanes as u64,
+                        retry_ms: BUSY_RETRY_MS,
+                    };
+                    if stream.send(seq, busy).is_err() {
+                        return;
+                    }
+                    continue;
                 }
                 let spec = if spec.is_empty() {
                     config.env_spec.clone()
@@ -815,6 +1034,7 @@ fn serve_conn(stream: RawStream, config: &ServeConfig, stats: &ServerStats, id: 
                 match built {
                     Ok(mut built) => {
                         let exec = built.exec();
+                        exec.set_panic_policy(config.on_panic);
                         let n = exec.num_lanes();
                         if n != lanes {
                             // The builder's lane count wins — reconcile
@@ -846,6 +1066,17 @@ fn serve_conn(stream: RawStream, config: &ServeConfig, stats: &ServerStats, id: 
                             stats.drop_client(id);
                             return;
                         }
+                        // Chaos arms only now, after the Spec reply:
+                        // the handshake always runs clean, and every
+                        // (re)connection draws a fresh fault stream
+                        // (its conn id), so a client that fails over
+                        // never deterministically re-hits the same
+                        // faults at the same replay points.
+                        if let Some(profile) = &config.chaos {
+                            if !profile.is_off() {
+                                stream.set_fault_injector(Some(FaultPlan::new(profile, id)));
+                            }
+                        }
                         host = Some(built);
                     }
                     Err(e) => {
@@ -853,6 +1084,15 @@ fn serve_conn(stream: RawStream, config: &ServeConfig, stats: &ServerStats, id: 
                         bail(&mut stream, seq, &format!("cannot host {spec:?}: {e}"));
                         return;
                     }
+                }
+            }
+            Msg::Ping { nonce } => {
+                // Liveness probe: valid at any point — before any
+                // Hello, without a token (it leaks nothing but
+                // liveness).  Echo the nonce back.
+                stats.note_request(id, 0);
+                if stream.send(seq, MsgRef::Pong { nonce }).is_err() {
+                    return;
                 }
             }
             Msg::Status { token } => {
@@ -981,4 +1221,53 @@ fn serve_conn(stream: RawStream, config: &ServeConfig, stats: &ServerStats, id: 
 /// clean `false` so the client gets an `Error` frame instead of EOF.
 fn catch_exec(f: impl FnOnce()) -> bool {
     std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)).is_ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::peer_allowed;
+
+    #[test]
+    fn allow_list_empty_and_unix_admit_everyone() {
+        assert!(peer_allowed("", "10.0.10.7:555"));
+        assert!(peer_allowed("10.0.1", "unix"));
+        // Blank entries (stray commas/spaces) never admit anyone.
+        assert!(!peer_allowed(" , ", "10.0.1.7:555"));
+    }
+
+    #[test]
+    fn allow_list_stops_at_component_boundaries() {
+        // An octet prefix admits only whole-component extensions...
+        assert!(peer_allowed("10.0.1", "10.0.1.7:555"));
+        assert!(peer_allowed("10.0.1", "10.0.1:555"));
+        // ...never a longer octet that merely shares digits.
+        assert!(!peer_allowed("10.0.1", "10.0.10.7:555"));
+        assert!(!peer_allowed("10.0.1", "10.0.17.7:555"));
+        // A trailing dot pins the boundary explicitly.
+        assert!(peer_allowed("10.0.", "10.0.1.7:555"));
+        assert!(!peer_allowed("10.0.", "10.10.1.7:555"));
+        // A full ip admits any port; a full ip:port admits only itself.
+        assert!(peer_allowed("127.0.0.1", "127.0.0.1:9000"));
+        assert!(!peer_allowed("127.0.0.10", "127.0.0.1:9000"));
+        assert!(peer_allowed("127.0.0.1:9000", "127.0.0.1:9000"));
+        assert!(!peer_allowed("127.0.0.1:900", "127.0.0.1:9000"));
+    }
+
+    #[test]
+    fn allow_list_handles_ipv6_literals() {
+        // Bracketed literal: the `]` closes the address component.
+        assert!(peer_allowed("[::1]", "[::1]:9000"));
+        assert!(peer_allowed("[::1", "[::1]:9000"));
+        assert!(!peer_allowed("[::1", "[::10]:9000"));
+        assert!(peer_allowed("[2001:db8:", "[2001:db8::7]:555"));
+        assert!(!peer_allowed("[2001:db8", "[2001:db80::7]:555"));
+    }
+
+    #[test]
+    fn allow_list_is_comma_separated_any_match() {
+        let allow = "127.0.0.1, 10.0.1";
+        assert!(peer_allowed(allow, "127.0.0.1:4"));
+        assert!(peer_allowed(allow, "10.0.1.9:4"));
+        assert!(!peer_allowed(allow, "10.0.19.9:4"));
+    }
 }

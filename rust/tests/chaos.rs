@@ -1,0 +1,445 @@
+//! Integration: the robustness layer (protocol v5).
+//!
+//! The load-bearing invariants: (1) a silent-but-open peer surfaces as
+//! [`CairlError::DeadlineExceeded`] within the configured window, never
+//! an indefinite stall — including a SIGSTOP'd daemon whose kernel
+//! still accepts connects; (2) deterministic seed-driven fault
+//! injection (`--chaos`) exercises the corruption / truncation / delay
+//! / reset machinery while the workload's episode returns stay **bit
+//! identical** to a fault-free local run (every fault routes into the
+//! failover replay path from PR 6); (3) `Ping`/`Pong` heartbeats keep
+//! idle connections off the server's idle reaper, and the reaper bites
+//! when they are absent; (4) a draining daemon finishes its in-flight
+//! clients, answers new `Hello`s with `Busy`, and exits.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::time::{Duration, Instant};
+
+use cairl::coordinator::experiment::{
+    build_executor_with_kernel, run_batched_workload, ExecutorKind, KernelMode,
+};
+use cairl::coordinator::pool::BatchedExecutor;
+use cairl::core::error::CairlError;
+use cairl::faults::ChaosProfile;
+use cairl::shard::{
+    ConnectOptions, FailoverConfig, ServeConfig, ShardClient, ShardPoolOptions, ShardServer,
+    ShardedEnvPool,
+};
+use cairl::telemetry;
+
+const MIX: &str = "CartPole-v1?max_steps=25:3,MountainCar-v0?max_steps=30:3";
+const SEED: u64 = 21;
+
+fn uniform_costs() -> BTreeMap<String, f64> {
+    let mut costs = BTreeMap::new();
+    costs.insert("CartPole-v1?max_steps=25".to_string(), 1.0);
+    costs.insert("MountainCar-v0?max_steps=30".to_string(), 1.0);
+    costs
+}
+
+fn cartpole_costs() -> BTreeMap<String, f64> {
+    let mut costs = BTreeMap::new();
+    costs.insert("CartPole-v1".to_string(), 1.0);
+    costs
+}
+
+/// Unique listen address per server (unix socket on unix, TCP loopback
+/// elsewhere).
+fn fresh_addr() -> String {
+    static NEXT: AtomicU32 = AtomicU32::new(0);
+    let k = NEXT.fetch_add(1, Ordering::Relaxed);
+    #[cfg(unix)]
+    {
+        let path = std::env::temp_dir().join(format!(
+            "cairl-chaos-test-{}-{k}.sock",
+            std::process::id()
+        ));
+        format!("unix://{}", path.display())
+    }
+    #[cfg(not(unix))]
+    {
+        let _ = k;
+        "tcp://127.0.0.1:0".to_string()
+    }
+}
+
+/// Quick failover policy: short backoff, a few re-dials, replan on.
+fn fast_failover() -> FailoverConfig {
+    FailoverConfig {
+        redial_attempts: 5,
+        backoff_ms: 5,
+        backoff_cap_ms: 40,
+        replan: true,
+    }
+}
+
+/// Sum of every wire-fault kind the injector counts.
+fn faults_injected() -> u64 {
+    ["corrupt", "truncate", "delay", "reset", "freeze"]
+        .iter()
+        .map(|k| {
+            telemetry::counter(&format!("cairl_faults_injected_total{{kind={k:?}}}")).get()
+        })
+        .sum()
+}
+
+#[test]
+fn read_deadline_surfaces_a_silent_peer_within_bound() {
+    // A black-hole peer: accepts the connection, holds it open, never
+    // answers a byte — the exact wire signature of a frozen shard.
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let port = listener.local_addr().unwrap().port();
+    std::thread::spawn(move || {
+        let mut held = Vec::new();
+        while let Ok((stream, _)) = listener.accept() {
+            held.push(stream);
+        }
+    });
+
+    let before = telemetry::counter("cairl_deadline_timeouts_total").get();
+    let opts = ConnectOptions {
+        read_timeout: Some(Duration::from_millis(150)),
+        ..ConnectOptions::default()
+    };
+    let start = Instant::now();
+    let err = ShardClient::connect_with(
+        &format!("tcp://127.0.0.1:{port}"),
+        "CartPole-v1:1",
+        0,
+        0,
+        &opts,
+    )
+    .expect_err("a silent peer must trip the read deadline");
+    let elapsed = start.elapsed();
+    assert!(
+        matches!(err, CairlError::DeadlineExceeded(_)),
+        "expected DeadlineExceeded, got {err}"
+    );
+    assert!(
+        elapsed >= Duration::from_millis(100) && elapsed < Duration::from_secs(5),
+        "deadline fired after {elapsed:?}, configured 150ms"
+    );
+    assert!(
+        telemetry::counter("cairl_deadline_timeouts_total").get() > before,
+        "timeout must count into cairl_deadline_timeouts_total"
+    );
+}
+
+#[test]
+fn ping_round_trips_and_counts_heartbeats() {
+    let server = ShardServer::bind(&fresh_addr(), ServeConfig::new("CartPole-v1")).unwrap();
+    let addr = server.local_addr();
+    let handle = server.spawn();
+
+    let sent_before = telemetry::counter("cairl_heartbeats_sent_total").get();
+    let mut client = ShardClient::connect(&addr, "CartPole-v1:1", 0, 0).unwrap();
+    client.ping().expect("ping over a healthy connection");
+    client.ping().expect("pings are repeatable");
+    assert!(
+        telemetry::counter("cairl_heartbeats_sent_total").get() >= sent_before + 2,
+        "each probe must count into cairl_heartbeats_sent_total"
+    );
+    // The probed connection still serves batches afterwards.
+    client.send_reset().unwrap();
+    let obs = client.recv_obs().unwrap();
+    assert_eq!(obs.len(), client.obs_dim() * client.num_lanes());
+    drop(client);
+    handle.shutdown();
+}
+
+#[test]
+fn idle_reaper_bites_without_heartbeats_and_spares_with_them() {
+    // Local reference for the returns comparison across the reap.
+    let mut local = build_executor_with_kernel(
+        "CartPole-v1",
+        ExecutorKind::Sequential,
+        2,
+        1,
+        SEED,
+        &[],
+        KernelMode::Fused,
+    )
+    .unwrap();
+    let reference = run_batched_workload(local.as_mut(), 30, SEED);
+
+    let config = ServeConfig {
+        read_timeout: Some(Duration::from_millis(250)),
+        threads: 1,
+        ..ServeConfig::new("CartPole-v1")
+    };
+    let server = ShardServer::bind(&fresh_addr(), config).unwrap();
+    let addr = server.local_addr();
+    let handle = server.spawn();
+
+    // No heartbeats: the daemon reaps the idle connection, and the next
+    // batch rides the failover replay path — returns unaffected.
+    let mut quiet = ShardedEnvPool::connect_opts(
+        &[addr.clone()],
+        "CartPole-v1",
+        ShardPoolOptions {
+            lanes: 2,
+            base_seed: SEED,
+            costs: Some(cartpole_costs()),
+            failover: fast_failover(),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    std::thread::sleep(Duration::from_millis(700));
+    let r = quiet.run_pipelined_workload(30, SEED);
+    assert_eq!(
+        r.episode_returns, reference.episode_returns,
+        "returns diverged across the idle reap"
+    );
+    assert!(
+        quiet.reconnects()[0] >= 1,
+        "the reaper must have severed the idle connection"
+    );
+    drop(quiet);
+
+    // With heartbeats under the reaper interval the connection stays
+    // warm through a much longer idle stretch.
+    let mut warm = ShardedEnvPool::connect_opts(
+        &[addr],
+        "CartPole-v1",
+        ShardPoolOptions {
+            lanes: 2,
+            base_seed: SEED,
+            costs: Some(cartpole_costs()),
+            failover: fast_failover(),
+            heartbeat: Some(Duration::from_millis(50)),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let idle_until = Instant::now() + Duration::from_millis(900);
+    while Instant::now() < idle_until {
+        std::thread::sleep(Duration::from_millis(80));
+        warm.heartbeat();
+    }
+    assert_eq!(
+        warm.reconnects(),
+        &[0],
+        "heartbeats must keep the idle connection off the reaper"
+    );
+    let r = warm.run_pipelined_workload(30, SEED);
+    assert_eq!(r.episode_returns, reference.episode_returns);
+    drop(warm);
+    handle.shutdown();
+}
+
+#[test]
+fn seeded_chaos_leaves_pipelined_returns_bit_identical() {
+    // The acceptance shape: a heterogeneous pipelined sharded workload
+    // under an aggressive seeded fault profile finishes byte-identical
+    // to the fault-free local run.
+    let mut local = build_executor_with_kernel(
+        MIX,
+        ExecutorKind::Sequential,
+        1,
+        1,
+        SEED,
+        &[],
+        KernelMode::Fused,
+    )
+    .unwrap();
+    let reference = run_batched_workload(local.as_mut(), 120, SEED);
+    assert!(reference.episodes > 0);
+
+    let mut addrs = Vec::new();
+    let mut handles = Vec::new();
+    for _ in 0..2 {
+        let config = ServeConfig {
+            threads: 2,
+            ..ServeConfig::new("CartPole-v1")
+        };
+        let server = ShardServer::bind(&fresh_addr(), config).unwrap();
+        addrs.push(server.local_addr());
+        handles.push(server.spawn());
+    }
+
+    // Rates in basis points: ~1.5% corrupt, 1% truncate, 2% delay, 1%
+    // reset per frame send — dozens of injections over this workload,
+    // every one reproducible from (profile, stream, send index).
+    let profile =
+        ChaosProfile::parse("corrupt=150,truncate=100,delay=200,delay_ms=1,reset=100@11")
+            .unwrap();
+    let before = faults_injected();
+    let opts = ShardPoolOptions {
+        base_seed: SEED,
+        pipeline: 4,
+        costs: Some(uniform_costs()),
+        failover: fast_failover(),
+        read_timeout: Some(Duration::from_millis(500)),
+        chaos: Some(profile),
+        ..Default::default()
+    };
+    let mut pool = ShardedEnvPool::connect_opts(&addrs, MIX, opts).unwrap();
+    let r = pool.run_pipelined_workload(120, SEED);
+    assert_eq!(r.episodes, reference.episodes, "episode count diverged under chaos");
+    assert_eq!(
+        r.episode_returns, reference.episode_returns,
+        "chaos must never change episode returns"
+    );
+    assert!(
+        faults_injected() > before,
+        "the profile must actually inject faults"
+    );
+    drop(pool);
+    for handle in handles {
+        handle.shutdown();
+    }
+}
+
+#[test]
+fn draining_daemon_answers_busy_then_exits() {
+    let server = ShardServer::bind(&fresh_addr(), ServeConfig::new("CartPole-v1")).unwrap();
+    let addr = server.local_addr();
+    let handle = server.spawn();
+
+    // An in-flight client connected before the drain keeps working.
+    let mut client = ShardClient::connect(&addr, "CartPole-v1:1", 0, 0).unwrap();
+    handle.drain();
+    assert!(handle.draining());
+    client.ping().expect("existing connections survive the drain");
+
+    // New Hellos are turned away with Busy while draining.
+    let opts = ConnectOptions {
+        busy_retries: 0,
+        ..ConnectOptions::default()
+    };
+    let err = ShardClient::connect_with(&addr, "CartPole-v1:1", 0, 0, &opts).unwrap_err();
+    assert!(
+        matches!(err, CairlError::Unavailable(_)),
+        "a draining daemon must answer Hello with Busy, got {err}"
+    );
+
+    // Once the last client leaves, the accept loop exits well inside
+    // the grace window.
+    drop(client);
+    let start = Instant::now();
+    handle.shutdown_graceful(Duration::from_secs(30));
+    assert!(
+        start.elapsed() < Duration::from_secs(10),
+        "drain must exit when the connection table empties, not at the deadline"
+    );
+}
+
+/// The ISSUE acceptance: a SIGSTOP'd daemon — kernel still accepting
+/// connects, process answering nothing — triggers deadline-driven
+/// failover onto the survivor within the configured bound, with episode
+/// returns identical to a healthy run.
+#[cfg(unix)]
+#[test]
+fn sigstopped_daemon_fails_over_within_deadline_bound() {
+    use std::process::{Command, Stdio};
+
+    let mut local = build_executor_with_kernel(
+        "CartPole-v1",
+        ExecutorKind::Sequential,
+        4,
+        1,
+        SEED,
+        &[],
+        KernelMode::Fused,
+    )
+    .unwrap();
+    let reference = run_batched_workload(local.as_mut(), 60, SEED);
+
+    // Two real daemons in child processes (SIGSTOP must freeze a whole
+    // process, not a thread).
+    let bin = env!("CARGO_BIN_EXE_cairl");
+    let mut children = Vec::new();
+    let mut addrs = Vec::new();
+    for _ in 0..2 {
+        let addr = fresh_addr();
+        let child = Command::new(bin)
+            .args(["serve", "--env", "CartPole-v1", "--listen", &addr, "--threads", "1"])
+            .stdout(Stdio::null())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn cairl serve");
+        addrs.push(addr);
+        children.push(child);
+    }
+    // Wait for both daemons to answer a handshake.
+    for addr in &addrs {
+        let deadline = Instant::now() + Duration::from_secs(20);
+        loop {
+            match ShardClient::connect(addr, "CartPole-v1:1", 0, 0) {
+                Ok(probe) => {
+                    drop(probe);
+                    break;
+                }
+                Err(_) if Instant::now() < deadline => {
+                    std::thread::sleep(Duration::from_millis(50))
+                }
+                Err(e) => panic!("daemon at {addr} never came up: {e}"),
+            }
+        }
+    }
+
+    let opts = ShardPoolOptions {
+        base_seed: SEED,
+        costs: Some(cartpole_costs()),
+        failover: FailoverConfig {
+            redial_attempts: 2,
+            backoff_ms: 5,
+            backoff_cap_ms: 20,
+            replan: true,
+        },
+        read_timeout: Some(Duration::from_millis(300)),
+        ..Default::default()
+    };
+    let mut pool =
+        ShardedEnvPool::connect_opts(&addrs, "CartPole-v1:4", opts).unwrap();
+    assert_eq!(pool.shards(), 2);
+
+    // Freeze shard 0's daemon mid-run: the socket stays open and the
+    // kernel keeps accepting, but no byte ever comes back.
+    let frozen = children[0].id().to_string();
+    let status = Command::new("kill").args(["-STOP", &frozen]).status().unwrap();
+    assert!(status.success(), "kill -STOP failed");
+
+    let start = Instant::now();
+    let r = pool.run_pipelined_workload(60, SEED);
+    let elapsed = start.elapsed();
+    assert_eq!(
+        r.episode_returns, reference.episode_returns,
+        "returns diverged across the SIGSTOP failover"
+    );
+    assert!(
+        pool.reconnects()[0] >= 1,
+        "the frozen shard must have failed over"
+    );
+    // Bound: a handful of 300ms deadline windows plus replay, far from
+    // an indefinite stall.
+    assert!(
+        elapsed < Duration::from_secs(30),
+        "failover took {elapsed:?} against a 300ms deadline"
+    );
+    drop(pool);
+
+    // Thaw, then exercise the SIGTERM drain path on both daemons: with
+    // no clients left they must exit promptly, of their own accord.
+    let _ = Command::new("kill").args(["-CONT", &frozen]).status();
+    for child in &children {
+        let _ = Command::new("kill").args(["-TERM", &child.id().to_string()]).status();
+    }
+    for mut child in children {
+        let deadline = Instant::now() + Duration::from_secs(20);
+        loop {
+            match child.try_wait() {
+                Ok(Some(_)) => break,
+                Ok(None) if Instant::now() < deadline => {
+                    std::thread::sleep(Duration::from_millis(50))
+                }
+                _ => {
+                    let _ = child.kill();
+                    panic!("daemon did not exit within the drain grace after SIGTERM");
+                }
+            }
+        }
+    }
+}

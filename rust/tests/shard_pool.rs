@@ -870,7 +870,10 @@ fn status_report_exposes_the_client_table() {
 
     let report = shard_status(&addrs[0], "").unwrap();
     let v = cairl::core::json::parse(&report).unwrap();
-    assert_eq!(v.get("proto_version").and_then(|x| x.as_usize()), Some(3));
+    assert_eq!(
+        v.get("proto_version").and_then(|x| x.as_usize()),
+        Some(proto::PROTO_VERSION as usize)
+    );
     assert_eq!(v.get("active_clients").and_then(|x| x.as_usize()), Some(1));
     assert_eq!(v.get("active_lanes").and_then(|x| x.as_usize()), Some(2));
     assert_eq!(v.get("max_lanes").and_then(|x| x.as_usize()), Some(0));
