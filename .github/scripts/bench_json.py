@@ -81,6 +81,47 @@ def main() -> int:
             "overhead_pct": round(100.0 * (ns_on / ns_off - 1.0), 3),
         }
 
+    # Tracing overhead: the same A/B with the span recorder
+    # (`cairl run --trace`) on vs off, sharing the <2% budget (absent
+    # in artifacts predating distributed tracing).
+    trace_ab = {
+        row["variant"]: float(row["ns_per_step"])
+        for row in ablation
+        if row.get("variant") in ("pool-32-trace-on", "pool-32-trace-off")
+        and row.get("ns_per_step")
+    }
+    if len(trace_ab) == 2:
+        ns_on = trace_ab["pool-32-trace-on"]
+        ns_off = trace_ab["pool-32-trace-off"]
+        doc["trace"] = {
+            "ns_per_step_on": ns_on,
+            "ns_per_step_off": ns_off,
+            "overhead_pct": round(100.0 * (ns_on / ns_off - 1.0), 3),
+        }
+
+    # Roofline: the classic-control fused kernels swept across lane
+    # widths (results/roofline.csv), lifted into a keyed block so
+    # bench_trend.py can pair rows across runs without relying on the
+    # digit-collapsing line matcher (lane counts are load-bearing
+    # digits here).  Absent in artifacts predating the sweep.
+    roofline_rows = doc["tables"].get("roofline", [])
+    roofline = []
+    for row in roofline_rows:
+        try:
+            roofline.append(
+                {
+                    "env": row["env"],
+                    "lanes": int(row["lanes"]),
+                    "kernel": row.get("kernel", "fused"),
+                    "ns_per_lane_step": float(row["ns_per_lane_step"]),
+                    "lane_steps_per_sec": float(row["lane_steps_per_sec"]),
+                }
+            )
+        except (KeyError, ValueError):
+            continue
+    if roofline:
+        doc["roofline"] = roofline
+
     log_path = results_dir / "bench_smoke.log"
     if log_path.exists():
         pattern = re.compile(r"steps/s")

@@ -82,6 +82,65 @@ def is_script_row(key: str) -> bool:
     return "bounce" in key.lower()
 
 
+def roofline_table(doc: dict) -> dict[str, float]:
+    """Key the `roofline` block rows by env/kernel/lane-count.  The
+    line matcher collapses digit runs, which would merge every lane
+    width of a sweep into one key — here the digits are the identity,
+    so the block is paired exactly."""
+    table: dict[str, float] = {}
+    for row in doc.get("roofline", []):
+        try:
+            key = f"{row['env']}/{row.get('kernel', 'fused')}@{int(row['lanes'])}"
+            value = float(row["lane_steps_per_sec"])
+        except (KeyError, TypeError, ValueError):
+            continue
+        if value > 0:
+            table[key] = value
+    return table
+
+
+def compare_roofline(
+    current_doc: dict, previous_doc: dict, threshold: float, is_baseline: bool
+) -> int:
+    """Pair roofline rows across runs; returns the regression count.
+    A previous artifact without the block predates the sweep — notice
+    and skip, same as the topology/script-runner markers."""
+    current = roofline_table(current_doc)
+    if not current:
+        return 0
+    if "roofline" not in previous_doc:
+        print(
+            "::notice title=bench trend::previous BENCH_ci.json predates "
+            f"the roofline block — skipping {len(current)} kernel-sweep "
+            "row(s) that have no baseline yet (they compare from the "
+            "next run)"
+        )
+        return 0
+    previous = roofline_table(previous_doc)
+    shared = sorted(set(current) & set(previous))
+    print(f"bench_trend: comparing {len(shared)} shared roofline rows")
+    regressions = 0
+    for key in shared:
+        old, new = previous[key], current[key]
+        delta = 100.0 * (new - old) / old
+        marker = ""
+        if delta <= -threshold:
+            regressions += 1
+            marker = "  <-- REGRESSION"
+            title = "roofline throughput regression"
+            severity = "warning"
+            if is_baseline:
+                severity = "notice"
+                title += " (vs tracked baseline estimates)"
+            print(
+                f"::{severity} title={title}::"
+                f"{key} dropped {-delta:.0f}% "
+                f"({old:.0f} -> {new:.0f} lane-steps/s)"
+            )
+        print(f"  {delta:+6.1f}%  {old:>12.0f} -> {new:>12.0f}  {key}{marker}")
+    return regressions
+
+
 def find_previous(arg: Path) -> Path | None:
     if arg.is_file():
         return arg
@@ -222,6 +281,7 @@ def main() -> int:
                 f"({old:.0f} -> {new:.0f} steps/s)"
             )
         print(f"  {delta:+6.1f}%  {old:>12.0f} -> {new:>12.0f}  {key.strip()}{marker}")
+    regressions += compare_roofline(current_doc, previous_doc, threshold, is_baseline)
     if regressions:
         print(f"bench_trend: {regressions} workload(s) regressed > {threshold:.0f}%")
     else:

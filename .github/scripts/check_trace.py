@@ -1,0 +1,234 @@
+#!/usr/bin/env python3
+"""Validate a Chrome trace written by `cairl run --trace`.
+
+Usage: check_trace.py <trace.json> [--require-kinds k1,k2,...]
+                      [--expect-server-spans] [--summary FILE]
+                      [--min-coverage PCT]
+
+Structural checks (always on):
+  * the file parses as Chrome `trace_event` JSON with a non-empty
+    `traceEvents` array of complete ("ph":"X") span events;
+  * every span carries nonzero `span_id`/`trace_id` args, a known
+    kind, and `t_end_ns >= t_start_ns`;
+  * the span forest is well-formed: every nonzero `parent` resolves
+    to a span recorded under the same trace id.
+
+Stitching checks:
+  * `--require-kinds` asserts each named span kind appears at least
+    once (the shard-smoke job requires the full client->server chain:
+    batch,encode,wire,decode,server_step,reassemble);
+  * `--expect-server-spans` asserts spans attributed to a shard
+    (args.shard != u32::MAX) exist AND share a trace id with a
+    client-side batch span — the cross-shard stitching acceptance.
+
+Attribution checks:
+  * `--summary FILE` takes the output of `cairl trace --summarize`:
+    every kind named in its table must appear among the trace events,
+    and the closing coverage line must be >= `--min-coverage`
+    (default 95, the ISSUE-10 acceptance bar).
+
+Exit status: 0 when every check passes, 1 otherwise (each failure is
+printed as a GitHub `::error::` annotation).
+"""
+
+import json
+import re
+import sys
+from pathlib import Path
+
+SHARD_LOCAL = 0xFFFFFFFF  # u32::MAX — spans recorded by the local process
+KNOWN_KINDS = {
+    "batch",
+    "dispatch",
+    "queue",
+    "kernel",
+    "epilogue",
+    "slot",
+    "encode",
+    "wire",
+    "decode",
+    "server_step",
+    "reassemble",
+    "reset",
+}
+COVERAGE_RE = re.compile(r"critical-path coverage:\s*([0-9.]+)%")
+
+
+def fail(msg: str) -> None:
+    print(f"::error title=trace check::{msg}")
+
+
+def parse_args(argv: list[str]):
+    positional: list[str] = []
+    kinds: set[str] = set()
+    expect_server = False
+    summary: Path | None = None
+    min_coverage = 95.0
+    i = 0
+    while i < len(argv):
+        arg = argv[i]
+        if arg.startswith("--require-kinds"):
+            value = arg.split("=", 1)[1] if "=" in arg else argv[i + 1]
+            i += 1 if "=" in arg else 2
+            kinds.update(k.strip() for k in value.split(",") if k.strip())
+        elif arg == "--expect-server-spans":
+            expect_server = True
+            i += 1
+        elif arg.startswith("--summary"):
+            value = arg.split("=", 1)[1] if "=" in arg else argv[i + 1]
+            i += 1 if "=" in arg else 2
+            summary = Path(value)
+        elif arg.startswith("--min-coverage"):
+            value = arg.split("=", 1)[1] if "=" in arg else argv[i + 1]
+            i += 1 if "=" in arg else 2
+            min_coverage = float(value)
+        else:
+            positional.append(arg)
+            i += 1
+    return positional, kinds, expect_server, summary, min_coverage
+
+
+def main() -> int:
+    positional, require_kinds, expect_server, summary, min_cov = parse_args(
+        sys.argv[1:]
+    )
+    if len(positional) != 1:
+        print(__doc__, file=sys.stderr)
+        return 2
+    trace_path = Path(positional[0])
+
+    try:
+        doc = json.loads(trace_path.read_text())
+    except (OSError, ValueError) as err:
+        fail(f"{trace_path} is not readable JSON: {err}")
+        return 1
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        fail(f"{trace_path} has no traceEvents array")
+        return 1
+
+    spans = []
+    errors = 0
+    for ev in events:
+        args = ev.get("args", {})
+        if "t_start_ns" not in args:
+            continue  # metadata event (process_name)
+        spans.append(ev)
+        kind = args.get("kind", "")
+        if kind not in KNOWN_KINDS:
+            fail(f"span {args.get('span_id')} has unknown kind {kind!r}")
+            errors += 1
+        if not args.get("span_id"):
+            fail(f"{kind} span has a zero span_id")
+            errors += 1
+        if not args.get("trace_id"):
+            fail(f"{kind} span {args.get('span_id')} has a zero trace_id")
+            errors += 1
+        if args.get("t_end_ns", 0) < args.get("t_start_ns", 0):
+            fail(f"{kind} span {args.get('span_id')} ends before it starts")
+            errors += 1
+    if not spans:
+        fail(f"{trace_path} contains no span events")
+        return 1
+
+    # Parent resolution: every nonzero parent must be a span recorded
+    # under the same trace id (the ring is large enough that a smoke
+    # run never overflows; a dangling parent means broken propagation).
+    by_trace: dict[int, set[int]] = {}
+    for ev in spans:
+        a = ev["args"]
+        by_trace.setdefault(a["trace_id"], set()).add(a["span_id"])
+    dangling = 0
+    for ev in spans:
+        a = ev["args"]
+        parent = a.get("parent", 0)
+        if parent and parent not in by_trace.get(a["trace_id"], set()):
+            if dangling < 5:
+                fail(
+                    f"{a.get('kind')} span {a['span_id']} parents under "
+                    f"{parent}, which is not in trace {a['trace_id']}"
+                )
+            dangling += 1
+    if dangling:
+        fail(f"{dangling} span(s) with dangling parents")
+        errors += 1
+
+    present_kinds = {ev["args"].get("kind") for ev in spans}
+    for kind in sorted(require_kinds):
+        if kind not in present_kinds:
+            fail(f"required span kind {kind!r} is absent from the trace")
+            errors += 1
+
+    if expect_server:
+        server = [ev for ev in spans if ev["args"].get("shard") != SHARD_LOCAL]
+        batch_traces = {
+            ev["args"]["trace_id"]
+            for ev in spans
+            if ev["args"].get("kind") == "batch"
+            and ev["args"].get("shard") == SHARD_LOCAL
+        }
+        if not server:
+            fail("no server-attributed spans (args.shard is local everywhere)")
+            errors += 1
+        stitched = [
+            ev for ev in server if ev["args"]["trace_id"] in batch_traces
+        ]
+        if server and not stitched:
+            fail(
+                "server spans never share a trace id with a client batch "
+                "span — cross-shard stitching is broken"
+            )
+            errors += 1
+        unstitched = len(server) - len(stitched)
+        if unstitched:
+            fail(
+                f"{unstitched} server span(s) carry a trace id with no "
+                "client batch span"
+            )
+            errors += 1
+
+    if summary is not None:
+        try:
+            text = summary.read_text()
+        except OSError as err:
+            fail(f"summary {summary} unreadable: {err}")
+            return 1
+        table_kinds = {
+            line.split()[0]
+            for line in text.splitlines()
+            if line.split() and line.split()[0] in KNOWN_KINDS
+        }
+        if not table_kinds:
+            fail(f"summary {summary} names no span kinds")
+            errors += 1
+        for kind in sorted(table_kinds - present_kinds):
+            fail(f"summary row {kind!r} has no matching span in the trace")
+            errors += 1
+        m = COVERAGE_RE.search(text)
+        if not m:
+            fail(f"summary {summary} has no critical-path coverage line")
+            errors += 1
+        elif float(m.group(1)) < min_cov:
+            fail(
+                f"critical-path coverage {m.group(1)}% is below the "
+                f"{min_cov:.0f}% acceptance bar"
+            )
+            errors += 1
+
+    n_server = sum(
+        1 for ev in spans if ev["args"].get("shard") != SHARD_LOCAL
+    )
+    print(
+        f"check_trace: {len(spans)} spans, {len(by_trace)} trace id(s), "
+        f"{n_server} server-attributed, kinds: "
+        f"{','.join(sorted(present_kinds))}"
+    )
+    if errors:
+        print(f"check_trace: {errors} check(s) failed")
+        return 1
+    print("check_trace: all checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

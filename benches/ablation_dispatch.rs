@@ -23,7 +23,12 @@
 //!
 //! The telemetry rows A/B the 32-lane fused pool with the process-wide
 //! metrics gate on vs off and assert the observability tax stays under
-//! 2% — the budget README §"Observability" promises.
+//! 2% — the budget README §"Observability" promises.  The tracing rows
+//! repeat the A/B with the span recorder (`cairl run --trace`) on vs
+//! off under the same budget, and the roofline sweep steps every
+//! classic-control fused kernel at lane widths 8..512 so the
+//! `roofline` block in BENCH_ci.json tracks where each kernel stops
+//! amortising per-batch overhead.
 
 #[path = "harness/mod.rs"]
 mod harness;
@@ -194,6 +199,39 @@ fn main() {
         (steps / 32).max(1) * 32,
     ));
 
+    // --- tracing overhead A/B (ISSUE-10 acceptance): the same 32-lane
+    // fused pool with the span recorder (`cairl run --trace`) on vs
+    // off.  Disabled tracing is one relaxed load and a branch per
+    // record site; enabled it writes POD records into per-thread
+    // rings, so the on/off delta shares the metrics budget: <2% plus
+    // the same absolute floor.  The metrics gate stays on for both
+    // rows so the delta isolates the span recorder alone.
+    cairl::telemetry::trace::set_enabled(false);
+    let pool32_trace_off =
+        bench_executor("CartPole-v1", ExecutorKind::PoolSync, 32, KernelMode::Fused);
+    cairl::telemetry::trace::set_enabled(true);
+    let pool32_trace_on =
+        bench_executor("CartPole-v1", ExecutorKind::PoolSync, 32, KernelMode::Fused);
+    cairl::telemetry::trace::set_enabled(false);
+    let trace_pct = 100.0 * (pool32_trace_on / pool32_trace_off - 1.0);
+    println!(
+        "pool-32/trace-off   (32 lanes): {pool32_trace_off:>9.1} ns/lane-step\n\
+         pool-32/trace-on    (32 lanes): {pool32_trace_on:>9.1} ns/lane-step\n\
+         tracing overhead on the 32-lane fused pool: {trace_pct:+.2}%"
+    );
+    executor_rows.push((
+        "pool-32-trace-off".to_string(),
+        KernelMode::Fused.label(),
+        pool32_trace_off,
+        (steps / 32).max(1) * 32,
+    ));
+    executor_rows.push((
+        "pool-32-trace-on".to_string(),
+        KernelMode::Fused.label(),
+        pool32_trace_on,
+        (steps / 32).max(1) * 32,
+    ));
+
     // --- scripting tentpole: the same MiniScript program on all three
     // script runners.  Single-env rows first (one lane, Env trait), then
     // the batched row: the program is registered at runtime, so the
@@ -288,6 +326,54 @@ fn main() {
         bounce_lane_steps,
     ));
 
+    // --- roofline sweep: every classic-control fused kernel at lane
+    // widths 8/32/128/512, on the sequential executor so each row
+    // isolates the SoA kernel's arithmetic from pool synchronisation.
+    // ns/lane-step falling as lanes grow means the kernel is still
+    // amortising per-batch overhead; the flat tail is its roofline.
+    // bench_json.py lifts these rows into the `roofline` block of
+    // BENCH_ci.json and bench_trend.py tracks them PR over PR.
+    let roofline_steps = (steps / 4).max(1);
+    let mut roofline = CsvLogger::create(
+        std::path::Path::new("results/roofline.csv"),
+        &["env", "lanes", "kernel", "ns_per_lane_step", "lane_steps_per_sec", "trials"],
+    )
+    .unwrap();
+    for env in ["CartPole-v1", "MountainCar-v0", "Acrobot-v1", "Pendulum-v1"] {
+        for n_lanes in [8usize, 32, 128, 512] {
+            let lane_budget = (roofline_steps / n_lanes as u64).max(1);
+            let best: f64 = (0..trials)
+                .map(|i| {
+                    let mut exec = build_executor_with_kernel(
+                        env,
+                        ExecutorKind::Sequential,
+                        n_lanes,
+                        1,
+                        i,
+                        &[],
+                        KernelMode::Fused,
+                    )
+                    .unwrap();
+                    run_batched_workload(exec.as_mut(), lane_budget, i).throughput
+                })
+                .fold(0.0, f64::max);
+            let row_ns = 1e9 / best;
+            println!("roofline {env:<16} {n_lanes:>3} lanes: {row_ns:>9.1} ns/lane-step");
+            roofline
+                .row(&[
+                    env.to_string(),
+                    n_lanes.to_string(),
+                    "fused".into(),
+                    format!("{row_ns:.2}"),
+                    format!("{best:.0}"),
+                    trials.to_string(),
+                ])
+                .unwrap();
+        }
+    }
+    roofline.flush().unwrap();
+    println!("rows -> results/roofline.csv");
+
     let mut log = CsvLogger::create(
         std::path::Path::new("results/ablation_dispatch.csv"),
         &["variant", "kernel", "ns_per_step", "steps", "trials"],
@@ -326,5 +412,11 @@ fn main() {
         "telemetry must cost <2% on the steady-state step path: \
          {pool32_metrics_on:.1} ns on vs {pool32_metrics_off:.1} ns off \
          ({overhead_pct:+.2}%)"
+    );
+    assert!(
+        pool32_trace_on <= pool32_trace_off * 1.02 + 5.0,
+        "tracing must cost <2% on the steady-state step path: \
+         {pool32_trace_on:.1} ns on vs {pool32_trace_off:.1} ns off \
+         ({trace_pct:+.2}%)"
     );
 }

@@ -96,6 +96,7 @@ use std::thread::JoinHandle;
 use crate::core::batch::{batch_random_steps, BatchEnv, DynBatchEnv, ScalarBatch};
 use crate::core::env::{Env, Transition};
 use crate::core::spaces::{Action, Space};
+use crate::telemetry::trace::{self, SpanKind, SpanRecord};
 use crate::telemetry::{gauge, ExecMetrics, Gauge};
 
 /// Per-lane metadata of a (possibly heterogeneous) batched executor.
@@ -444,6 +445,10 @@ enum Cmd {
         actions: *const Action,
         obs: *mut f32,
         transitions: *mut Transition,
+        /// `(trace_id, batch span)` of the coordinator's batch, or
+        /// `(0, 0)` when tracing is off — workers parent their kernel
+        /// spans here (published with `cmd` under the same seqlock).
+        trace: (u64, u64),
     },
     /// Free-running random-action rollout executed entirely worker-side
     /// (one barrier for the whole workload) — the throughput mode behind
@@ -502,6 +507,9 @@ pub struct EnvPool {
     padded: usize,
     base_seed: u64,
     metrics: ExecMetrics,
+    /// Trace id minted lazily on the first traced batch (0 until then);
+    /// every batch this pool steps shares it.
+    trace_id: u64,
 }
 
 /// The free-running rollout's action-stream origin: the global base
@@ -645,6 +653,7 @@ impl EnvPool {
             padded,
             base_seed,
             metrics: ExecMetrics::for_executor("pool"),
+            trace_id: 0,
         }
     }
 
@@ -682,6 +691,18 @@ impl EnvPool {
         RolloutCounts { steps, episodes }
     }
 
+    /// This pool's trace id, minted on first use while tracing is
+    /// enabled; `0` while tracing is off (one load + branch).
+    fn ensure_trace_id(&mut self) -> u64 {
+        if !trace::enabled() {
+            return 0;
+        }
+        if self.trace_id == 0 {
+            self.trace_id = trace::new_trace_id();
+        }
+        self.trace_id
+    }
+
     /// Publish `cmd` and block until every worker has processed it,
     /// re-raising any worker panic on the coordinator thread.
     ///
@@ -692,17 +713,40 @@ impl EnvPool {
     /// worker count and the caller's buffer borrows are never released
     /// while a worker could still write through them.
     fn broadcast(&self, cmd: Cmd) {
+        self.broadcast_traced(cmd, 0, 0);
+    }
+
+    /// As [`EnvPool::broadcast`], recording a `dispatch` span (command
+    /// publish) and a `queue` span (barrier wait) under `parent` when
+    /// `trace_id` is nonzero.
+    fn broadcast_traced(&self, cmd: Cmd, trace_id: u64, parent: u64) {
         if self.shared.poisoned.load(Ordering::Acquire) {
             panic!("EnvPool is poisoned: a worker panicked in an earlier batch");
         }
         debug_assert_eq!(self.shared.done.load(Ordering::Acquire), 0);
+        let t0 = if trace_id != 0 { trace::now_ns() } else { 0 };
         // SAFETY: all workers are quiescent between barriers (done was
         // drained to 0), so this is the only access to `cmd`.
         unsafe {
             *self.shared.cmd.get() = cmd;
         }
         self.shared.seq.fetch_add(1, Ordering::Release);
+        let t1 = if trace_id != 0 { trace::now_ns() } else { 0 };
         self.await_acks();
+        if trace_id != 0 {
+            let span = |kind, t_start_ns, t_end_ns| SpanRecord {
+                span_id: trace::next_span_id(),
+                parent,
+                trace_id,
+                t_start_ns,
+                t_end_ns,
+                lane_group: self.n as u32,
+                shard: trace::SHARD_LOCAL,
+                kind,
+            };
+            trace::record(span(SpanKind::Dispatch, t0, t1));
+            trace::record(span(SpanKind::Queue, t1, trace::now_ns()));
+        }
         if self.shared.poisoned.load(Ordering::Acquire) {
             panic!("EnvPool worker panicked while executing a batch command");
         }
@@ -746,9 +790,23 @@ impl BatchedExecutor for EnvPool {
 
     fn reset_into(&mut self, obs: &mut [f32]) {
         assert_eq!(obs.len(), self.n * self.padded);
+        let trace_id = self.ensure_trace_id();
+        let t0 = if trace_id != 0 { trace::now_ns() } else { 0 };
         self.broadcast(Cmd::Reset {
             obs: obs.as_mut_ptr(),
         });
+        if trace_id != 0 {
+            trace::record(SpanRecord {
+                span_id: trace::next_span_id(),
+                parent: 0,
+                trace_id,
+                t_start_ns: t0,
+                t_end_ns: trace::now_ns(),
+                lane_group: self.n as u32,
+                shard: trace::SHARD_LOCAL,
+                kind: SpanKind::Reset,
+            });
+        }
     }
 
     fn step_into(
@@ -760,13 +818,39 @@ impl BatchedExecutor for EnvPool {
         assert_eq!(actions.len(), self.n);
         assert_eq!(obs.len(), self.n * self.padded);
         assert_eq!(transitions.len(), self.n);
-        self.broadcast(Cmd::Step {
-            actions: actions.as_ptr(),
-            obs: obs.as_mut_ptr(),
-            transitions: transitions.as_mut_ptr(),
-        });
+        let trace_id = self.ensure_trace_id();
+        let batch_span = if trace_id != 0 { trace::next_span_id() } else { 0 };
+        let timed = trace_id != 0 || crate::telemetry::enabled();
+        let t_batch = if timed { trace::now_ns() } else { 0 };
+        self.broadcast_traced(
+            Cmd::Step {
+                actions: actions.as_ptr(),
+                obs: obs.as_mut_ptr(),
+                transitions: transitions.as_mut_ptr(),
+                trace: (trace_id, batch_span),
+            },
+            trace_id,
+            batch_span,
+        );
         let ends = transitions.iter().filter(|t| t.done || t.truncated).count();
-        self.metrics.record_batch(self.n, ends);
+        if timed {
+            let t_end = trace::now_ns();
+            if batch_span != 0 {
+                trace::record(SpanRecord {
+                    span_id: batch_span,
+                    parent: 0,
+                    trace_id,
+                    t_start_ns: t_batch,
+                    t_end_ns: t_end,
+                    lane_group: self.n as u32,
+                    shard: trace::SHARD_LOCAL,
+                    kind: SpanKind::Batch,
+                });
+            }
+            self.metrics.record_batch_timed(self.n, ends, t_batch, t_end);
+        } else {
+            self.metrics.record_batch(self.n, ends);
+        }
     }
 
     fn set_panic_policy(&mut self, policy: PanicPolicy) {
@@ -897,6 +981,7 @@ fn run_cmd(
             actions,
             obs,
             transitions,
+            trace: (trace_id, parent),
         } => {
             for (gi, group) in groups.iter_mut().enumerate() {
                 let lanes = group.batch.lanes();
@@ -915,7 +1000,15 @@ fn run_cmd(
                     std::slice::from_raw_parts_mut(transitions.add(group.lane_start), lanes)
                 };
                 if !quarantine {
-                    group.batch.step_batch(acts, block, padded, trs);
+                    let start = group.lane_start as u32;
+                    trace::with_span(
+                        SpanKind::Kernel,
+                        trace_id,
+                        parent,
+                        start,
+                        trace::SHARD_LOCAL,
+                        || group.batch.step_batch(acts, block, padded, trs),
+                    );
                     continue;
                 }
                 for k in 0..lanes {
@@ -1178,6 +1271,8 @@ pub struct AsyncEnvPool {
     /// [`PanicPolicy::Quarantine`] selected — workers step lanes under
     /// per-lane `catch_unwind` and retire panicking lanes.
     quarantine: Arc<AtomicBool>,
+    /// Trace id minted lazily on the first traced batch (0 until then).
+    trace_id: u64,
 }
 
 impl AsyncEnvPool {
@@ -1299,7 +1394,20 @@ impl AsyncEnvPool {
             metrics: ExecMetrics::for_executor("pool-async"),
             ready_depth: gauge("cairl_async_ready_depth"),
             quarantine,
+            trace_id: 0,
         }
+    }
+
+    /// This pool's trace id, minted on first use while tracing is
+    /// enabled; `0` while tracing is off (one load + branch).
+    fn ensure_trace_id(&mut self) -> u64 {
+        if !trace::enabled() {
+            return 0;
+        }
+        if self.trace_id == 0 {
+            self.trace_id = trace::new_trace_id();
+        }
+        self.trace_id
     }
 
     /// Number of worker threads actually running.
@@ -1455,6 +1563,8 @@ impl BatchedExecutor for AsyncEnvPool {
 
     fn reset_into(&mut self, obs: &mut [f32]) {
         assert_eq!(obs.len(), self.n * self.padded);
+        let trace_id = self.ensure_trace_id();
+        let t0 = if trace_id != 0 { trace::now_ns() } else { 0 };
         if !self.pristine {
             // Re-reset every lane; the queue is empty between lockstep
             // calls, so the next n entries are exactly the reset results.
@@ -1469,6 +1579,18 @@ impl BatchedExecutor for AsyncEnvPool {
         self.collect_exact(self.n, |lane, _t, slot| {
             obs[lane * d..(lane + 1) * d].copy_from_slice(slot);
         });
+        if trace_id != 0 {
+            trace::record(SpanRecord {
+                span_id: trace::next_span_id(),
+                parent: 0,
+                trace_id,
+                t_start_ns: t0,
+                t_end_ns: trace::now_ns(),
+                lane_group: self.n as u32,
+                shard: trace::SHARD_LOCAL,
+                kind: SpanKind::Reset,
+            });
+        }
     }
 
     fn step_into(
@@ -1487,27 +1609,54 @@ impl BatchedExecutor for AsyncEnvPool {
             self.collect_exact(self.n, |_, _, _| {});
             self.pristine = false;
         }
-        for (lane, action) in actions.iter().enumerate() {
-            self.mailboxes[self.owner[lane]].send(
-                WorkerMsg::Step {
-                    lane,
-                    action: action.clone(),
-                },
-                "an action",
-            );
-        }
+        let trace_id = self.ensure_trace_id();
+        let batch_span = if trace_id != 0 { trace::next_span_id() } else { 0 };
+        let timed = trace_id != 0 || crate::telemetry::enabled();
+        let t_batch = if timed { trace::now_ns() } else { 0 };
+        let n = self.n;
+        let shard = trace::SHARD_LOCAL;
+        trace::with_span(SpanKind::Dispatch, trace_id, batch_span, n as u32, shard, || {
+            for (lane, action) in actions.iter().enumerate() {
+                self.mailboxes[self.owner[lane]].send(
+                    WorkerMsg::Step {
+                        lane,
+                        action: action.clone(),
+                    },
+                    "an action",
+                );
+            }
+        });
         let d = self.padded;
         // Collect all n results; per-lane writes land in lane order
         // regardless of arrival order, restoring batch determinism.
         // Exactly-once per lane holds because each lane was sent exactly
         // one action and workers publish one entry per action (pinned by
         // the executor_pool integration tests).
-        self.collect_exact(self.n, |lane, t, slot| {
-            obs[lane * d..(lane + 1) * d].copy_from_slice(slot);
-            transitions[lane] = t;
+        trace::with_span(SpanKind::Slot, trace_id, batch_span, n as u32, shard, || {
+            self.collect_exact(n, |lane, t, slot| {
+                obs[lane * d..(lane + 1) * d].copy_from_slice(slot);
+                transitions[lane] = t;
+            });
         });
         let ends = transitions.iter().filter(|t| t.done || t.truncated).count();
-        self.metrics.record_batch(self.n, ends);
+        if timed {
+            let t_end = trace::now_ns();
+            if batch_span != 0 {
+                trace::record(SpanRecord {
+                    span_id: batch_span,
+                    parent: 0,
+                    trace_id,
+                    t_start_ns: t_batch,
+                    t_end_ns: t_end,
+                    lane_group: n as u32,
+                    shard: trace::SHARD_LOCAL,
+                    kind: SpanKind::Batch,
+                });
+            }
+            self.metrics.record_batch_timed(n, ends, t_batch, t_end);
+        } else {
+            self.metrics.record_batch(n, ends);
+        }
     }
 
     fn set_panic_policy(&mut self, policy: PanicPolicy) {

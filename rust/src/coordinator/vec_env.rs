@@ -27,6 +27,7 @@ use crate::coordinator::pool::{
 use crate::core::batch::{BatchEnv, ScalarBatch};
 use crate::core::env::{DynEnv, Env, Transition};
 use crate::core::spaces::{Action, Space};
+use crate::telemetry::trace::{self, SpanKind, SpanRecord};
 use crate::telemetry::ExecMetrics;
 
 /// The lane storage behind a [`VecEnv`]: one scalar group (generic
@@ -43,6 +44,8 @@ pub struct VecEnv<E: Env> {
     padded: usize,
     n: usize,
     metrics: ExecMetrics,
+    /// Trace id minted lazily on the first traced batch (0 until then).
+    trace_id: u64,
 }
 
 impl<E: Env> VecEnv<E> {
@@ -79,6 +82,7 @@ impl<E: Env> VecEnv<E> {
             padded,
             n,
             metrics: ExecMetrics::for_executor("vec"),
+            trace_id: 0,
         }
     }
 
@@ -100,9 +104,23 @@ impl<E: Env> VecEnv<E> {
         self.specs[0].action_space.clone()
     }
 
+    /// This executor's trace id, minted on first use while tracing is
+    /// enabled; `0` while tracing is off (one load + branch).
+    fn ensure_trace_id(&mut self) -> u64 {
+        if !trace::enabled() {
+            return 0;
+        }
+        if self.trace_id == 0 {
+            self.trace_id = trace::new_trace_id();
+        }
+        self.trace_id
+    }
+
     /// Reset every lane; `obs` is `[n * obs_dim]`.
     pub fn reset_into(&mut self, obs: &mut [f32]) {
         assert_eq!(obs.len(), self.n * self.padded);
+        let trace_id = self.ensure_trace_id();
+        let t0 = if trace_id != 0 { trace::now_ns() } else { 0 };
         let d = self.padded;
         match &mut self.kernel {
             Kernel::Scalar(batch) => batch.reset_batch(obs, d),
@@ -113,6 +131,18 @@ impl<E: Env> VecEnv<E> {
                     group.batch.reset_batch(&mut obs[start..start + lanes * d], d);
                 }
             }
+        }
+        if trace_id != 0 {
+            trace::record(SpanRecord {
+                span_id: trace::next_span_id(),
+                parent: 0,
+                trace_id,
+                t_start_ns: t0,
+                t_end_ns: trace::now_ns(),
+                lane_group: self.n as u32,
+                shard: trace::SHARD_LOCAL,
+                kind: SpanKind::Reset,
+            });
         }
     }
 
@@ -127,24 +157,53 @@ impl<E: Env> VecEnv<E> {
         assert_eq!(actions.len(), self.n);
         assert_eq!(obs.len(), self.n * self.padded);
         assert_eq!(transitions.len(), self.n);
+        let trace_id = self.ensure_trace_id();
+        let batch_span = if trace_id != 0 { trace::next_span_id() } else { 0 };
+        let timed = trace_id != 0 || crate::telemetry::enabled();
+        let t_batch = if timed { trace::now_ns() } else { 0 };
         let d = self.padded;
+        let shard = trace::SHARD_LOCAL;
         match &mut self.kernel {
-            Kernel::Scalar(batch) => batch.step_batch(actions, obs, d, transitions),
+            Kernel::Scalar(batch) => {
+                trace::with_span(SpanKind::Kernel, trace_id, batch_span, 0, shard, || {
+                    batch.step_batch(actions, obs, d, transitions)
+                });
+            }
             Kernel::Groups(groups) => {
                 for group in groups {
                     let lanes = group.batch.lanes();
                     let (first, start) = (group.lane_start, group.lane_start * d);
-                    group.batch.step_batch(
-                        &actions[first..first + lanes],
-                        &mut obs[start..start + lanes * d],
-                        d,
-                        &mut transitions[first..first + lanes],
-                    );
+                    let lg = first as u32;
+                    trace::with_span(SpanKind::Kernel, trace_id, batch_span, lg, shard, || {
+                        group.batch.step_batch(
+                            &actions[first..first + lanes],
+                            &mut obs[start..start + lanes * d],
+                            d,
+                            &mut transitions[first..first + lanes],
+                        )
+                    });
                 }
             }
         }
         let ends = transitions.iter().filter(|t| t.done || t.truncated).count();
-        self.metrics.record_batch(self.n, ends);
+        if timed {
+            let t_end = trace::now_ns();
+            if batch_span != 0 {
+                trace::record(SpanRecord {
+                    span_id: batch_span,
+                    parent: 0,
+                    trace_id,
+                    t_start_ns: t_batch,
+                    t_end_ns: t_end,
+                    lane_group: self.n as u32,
+                    shard,
+                    kind: SpanKind::Batch,
+                });
+            }
+            self.metrics.record_batch_timed(self.n, ends, t_batch, t_end);
+        } else {
+            self.metrics.record_batch(self.n, ends);
+        }
     }
 
     /// Direct lane access (scalar-built batches only; a group-fused
@@ -174,6 +233,7 @@ impl VecEnv<DynEnv> {
             padded,
             n,
             metrics: ExecMetrics::for_executor("vec"),
+            trace_id: 0,
         }
     }
 }

@@ -69,6 +69,7 @@
 use crate::core::env::{Env, Transition};
 use crate::core::rng::Pcg32;
 use crate::core::spaces::{Action, Space};
+use crate::telemetry::trace::{self, SpanKind};
 
 /// A group of environment lanes stepped as one unit, with auto-reset
 /// inline: a finished lane's transition reports the episode end exactly
@@ -396,6 +397,32 @@ impl<K: LaneKernel> FusedBatch<K> {
     pub fn max_steps(&self) -> Option<u32> {
         self.max_steps
     }
+
+    /// One lane step *without* the observation epilogue — the shared
+    /// body of [`BatchEnv::step_lane`] (which applies the affine
+    /// inline) and the two-pass [`BatchEnv::step_batch`] override
+    /// (which applies it to the whole group afterwards).  The affine is
+    /// a pure element-wise map of the output buffer, so the two orders
+    /// are bit-identical.
+    fn step_lane_raw(&mut self, k: usize, action: &Action, obs: &mut [f32]) -> Transition {
+        let mut t = self.kernel.step_lane(k, action, obs);
+        self.elapsed[k] += 1;
+        if let Some(max) = self.max_steps {
+            // TimeLimit semantics: truncation is distinct from (and
+            // masked by) environment termination.
+            if self.elapsed[k] >= max && !t.done {
+                t.truncated = true;
+            }
+        }
+        if let Some((scale, shift)) = self.reward_affine {
+            t.reward = t.reward * scale + shift;
+        }
+        if t.done || t.truncated {
+            self.kernel.reset_lane(k, &mut self.rngs[k], obs);
+            self.elapsed[k] = 0;
+        }
+        t
+    }
 }
 
 impl<K: LaneKernel> BatchEnv for FusedBatch<K> {
@@ -427,22 +454,7 @@ impl<K: LaneKernel> BatchEnv for FusedBatch<K> {
     }
 
     fn step_lane(&mut self, k: usize, action: &Action, obs: &mut [f32]) -> Transition {
-        let mut t = self.kernel.step_lane(k, action, obs);
-        self.elapsed[k] += 1;
-        if let Some(max) = self.max_steps {
-            // TimeLimit semantics: truncation is distinct from (and
-            // masked by) environment termination.
-            if self.elapsed[k] >= max && !t.done {
-                t.truncated = true;
-            }
-        }
-        if let Some((scale, shift)) = self.reward_affine {
-            t.reward = t.reward * scale + shift;
-        }
-        if t.done || t.truncated {
-            self.kernel.reset_lane(k, &mut self.rngs[k], obs);
-            self.elapsed[k] = 0;
-        }
+        let t = self.step_lane_raw(k, action, obs);
         // One application covers both the step observation and the
         // auto-reset observation — exactly what the outermost
         // NormalizeObs wrapper sees in the scalar path.
@@ -450,6 +462,41 @@ impl<K: LaneKernel> BatchEnv for FusedBatch<K> {
             affine.apply(obs);
         }
         t
+    }
+
+    /// Two-pass batch step: the dynamics loop over all lanes, then one
+    /// epilogue pass applying the fused `NormalizeObs` affine to the
+    /// whole group.  The affine is a pure element-wise map of the
+    /// output buffer (it never touches kernel state or RNG streams), so
+    /// this is bit-identical to the per-lane order — and the epilogue
+    /// pass is a traceable unit: it records an `epilogue` span under
+    /// the thread's current trace context when tracing is on.
+    fn step_batch(
+        &mut self,
+        actions: &[Action],
+        obs: &mut [f32],
+        stride: usize,
+        transitions: &mut [Transition],
+    ) {
+        let lanes = self.lanes();
+        assert_eq!(actions.len(), lanes);
+        assert_eq!(obs.len(), lanes * stride);
+        assert_eq!(transitions.len(), lanes);
+        let dim = self.kernel.obs_dim();
+        for k in 0..lanes {
+            let slot = &mut obs[k * stride..(k + 1) * stride];
+            let (lane_obs, tail) = slot.split_at_mut(dim);
+            transitions[k] = self.step_lane_raw(k, &actions[k], lane_obs);
+            tail.fill(0.0);
+        }
+        if let Some(affine) = &self.obs_affine {
+            let (trace_id, parent) = if trace::enabled() { trace::current() } else { (0, 0) };
+            trace::with_span(SpanKind::Epilogue, trace_id, parent, 0, trace::SHARD_LOCAL, || {
+                for k in 0..lanes {
+                    affine.apply(&mut obs[k * stride..k * stride + dim]);
+                }
+            });
+        }
     }
 }
 

@@ -97,6 +97,7 @@ COMMANDS:
              [--read-timeout MS] [--write-timeout MS] [--heartbeat MS]
              [--chaos PROFILE]
              [--returns-log FILE] [--record FILE] [--metrics FILE]
+             [--trace FILE]
              [--wrap \"TimeLimit(200),NormalizeObs\"]
              [--register-script NAME=FILE.mpy[,NAME=FILE.mpy...]]
              [--config FILE.json]
@@ -134,9 +135,20 @@ COMMANDS:
                                   --record captures the batched workload as a
                                   checksummed binary tape (byte-identical across
                                   executor kinds, thread counts, kernels and
-                                  shard placements — see `cairl replay`), and
+                                  shard placements — see `cairl replay`),
                                   --metrics dumps the process's telemetry
-                                  registry as Prometheus text after the run;
+                                  registry as Prometheus text after the run
+                                  (written atomically: temp file + rename), and
+                                  --trace records every batch's spans (dispatch,
+                                  kernel, epilogue, shard encode/wire/decode/
+                                  server step, reassembly) and writes Chrome
+                                  trace_event JSON after the run — loads in
+                                  Perfetto / chrome://tracing, summarized by
+                                  `cairl trace --summarize FILE`; sharded runs
+                                  stitch server-side spans into the client
+                                  timeline (one trace id end to end), and
+                                  returns stay byte-identical with tracing
+                                  on or off;
                                   --read-timeout/--write-timeout bound every
                                   shard frame (MS, 0 = block forever) so a
                                   frozen shard fails over within the deadline
@@ -165,6 +177,12 @@ COMMANDS:
                                   --addr, query a running `cairl serve` daemon
                                   (its --status JSON embeds a metrics snapshot);
                                   without, dump this process's registry
+  trace      --summarize FILE     critical-path attribution for a trace written
+                                  by `cairl run --trace`: per span kind, count,
+                                  total time, share of batch latency and
+                                  p50/p95/p99 durations, plus a coverage line
+                                  reporting how much of batch latency the
+                                  recorded child spans account for
   serve      --env SPEC --lanes N --listen ADDR
              [--executor vec|pool|pool-async] [--threads T]
              [--kernel scalar|fused] [--max-lanes N] [--token T]
@@ -238,14 +256,32 @@ fn register_scripts(args: &Args) -> Result<()> {
 
 /// Honour `--metrics FILE`: dump the process telemetry registry as
 /// Prometheus text after the workload, so batch jobs leave a scrapeable
-/// artifact without running an exporter.
+/// artifact without running an exporter.  Written atomically (temp file
+/// + rename) so a concurrent scraper never reads a torn file.
 fn write_metrics_dump(args: &Args) -> Result<()> {
     let Some(path) = args.opt("metrics") else {
         return Ok(());
     };
-    std::fs::write(path, telemetry::render_prometheus())
-        .with_context(|| format!("--metrics {path:?}"))?;
+    telemetry::trace::write_atomic(
+        std::path::Path::new(path),
+        telemetry::render_prometheus().as_bytes(),
+    )
+    .with_context(|| format!("--metrics {path:?}"))?;
     eprintln!("wrote telemetry snapshot to {path}");
+    Ok(())
+}
+
+/// Honour `--trace FILE`: drain every span ring into Chrome
+/// `trace_event` JSON after the workload (atomic write, like
+/// `--metrics`).  Span recording itself is switched on at the top of
+/// `run`, before any executor is built.
+fn write_trace_dump(args: &Args) -> Result<()> {
+    let Some(path) = args.opt("trace") else {
+        return Ok(());
+    };
+    let spans = telemetry::trace::write_chrome_trace(std::path::Path::new(path))
+        .with_context(|| format!("--trace {path:?}"))?;
+    eprintln!("wrote {spans} spans to {path}");
     Ok(())
 }
 
@@ -307,6 +343,11 @@ fn main() -> Result<()> {
             // User scripts register first, so --env (and the config env
             // field) can reference Script/NAME ids without recompiling.
             register_scripts(&args)?;
+            // Span recording goes live before any executor exists, so
+            // the very first reset/batch is captured.
+            if args.opt("trace").is_some() {
+                telemetry::trace::set_enabled(true);
+            }
             // --config seeds the defaults (env, seed, wrappers and the
             // executor block); explicit flags win.
             let file_cfg = match args.opt("config") {
@@ -536,6 +577,7 @@ fn main() -> Result<()> {
                 }
             }
             write_metrics_dump(&args)?;
+            write_trace_dump(&args)?;
         }
         "replay" => {
             register_scripts(&args)?;
@@ -618,6 +660,14 @@ fn main() -> Result<()> {
                     bail!("tape {path:?} does not replay bit-identically");
                 }
             }
+        }
+        "trace" => {
+            let Some(path) = args.opt("summarize") else {
+                bail!("trace needs --summarize FILE (written by `cairl run --trace`)");
+            };
+            let spans = telemetry::trace::read_chrome_trace(std::path::Path::new(path))
+                .map_err(|e| anyhow!("{e}"))?;
+            print!("{}", telemetry::trace::summarize(&spans));
         }
         "metrics" => {
             match args.opt("addr") {

@@ -50,6 +50,19 @@
 //! a dead shard is caught between batches too; see
 //! `docs/OPERATIONS.md` for tuning.
 //!
+//! **Tracing.**  With tracing enabled
+//! ([`trace::set_enabled`](crate::telemetry::trace::set_enabled), the
+//! `cairl run --trace` path), every batch records a span tree: a
+//! `batch` root, per-shard `encode` and `wire` spans, synthesized
+//! server-side `decode`/`server_step` spans (placed from the durations
+//! the v6 reply carries — client and shard clocks never compare, so
+//! the server reports *durations* and the client centers them in the
+//! observed wire window), and a `reassemble` span per shard reply.
+//! Requests carry the 16-byte v6 trace context so spans the server
+//! records locally stitch under the same trace id, and failover
+//! replays re-send each operation's **original** context — a replayed
+//! batch keeps its span ids instead of minting fresh ones.
+//!
 //! **Padded-obs reassembly.**  Each shard pads observations to *its
 //! own* widest lane; the pool-wide padded width can be larger (a shard
 //! holding only `MountainCar-v0` lanes ships 2-wide rows into a 4-wide
@@ -70,7 +83,8 @@ use crate::core::spaces::Action;
 use crate::faults::{ChaosProfile, FaultPlan};
 use crate::shard::net::{FramedStream, ShardAddr};
 use crate::shard::plan::{calibrate_costs, ShardAssignment, ShardPlan};
-use crate::shard::proto::{next_seq, Msg, MsgRef, SEQ_NONE};
+use crate::shard::proto::{next_seq, Msg, MsgRef, ServerTiming, SEQ_NONE};
+use crate::telemetry::trace::{self, SpanKind, SpanRecord, TraceCtx};
 use crate::telemetry::{
     counter, gauge, histogram, Counter, ExecMetrics, Gauge, Histogram, LATENCY_BOUNDS_US,
 };
@@ -116,6 +130,11 @@ pub struct ConnectOptions {
     /// idle at least this long with nothing in flight — so a frozen
     /// shard is caught between batches, not only mid-batch.
     pub heartbeat: Option<Duration>,
+    /// Trace id stamped into the `Hello` trace context (span id 0 —
+    /// the handshake has no parent batch).  `0` (default) means the
+    /// connection is untraced; per-batch requests still carry their own
+    /// context, so the field only seeds the daemon's status attribution.
+    pub trace_id: u64,
 }
 
 impl Default for ConnectOptions {
@@ -128,6 +147,7 @@ impl Default for ConnectOptions {
             read_timeout: None,
             write_timeout: None,
             heartbeat: None,
+            trace_id: 0,
         }
     }
 }
@@ -195,6 +215,10 @@ impl ShardClient {
                     pipeline: opts.pipeline,
                     token: &opts.token,
                     wrap: &opts.wrap,
+                    ctx: TraceCtx {
+                        trace_id: opts.trace_id,
+                        span_id: 0,
+                    },
                 },
             )?;
             seq_last = seq;
@@ -405,25 +429,27 @@ impl ShardClient {
     }
 
     /// Write a `Reset` frame (reply read by [`ShardClient::recv_obs`]).
-    pub fn send_reset(&mut self) -> Result<()> {
-        self.send_request(MsgRef::Reset)
+    /// `ctx` is the v6 trace context ([`TraceCtx::NONE`] = untraced).
+    pub fn send_reset(&mut self, ctx: TraceCtx) -> Result<()> {
+        self.send_request(MsgRef::Reset { ctx })
     }
 
     /// Write a `Step` frame (reply read by [`ShardClient::recv_step`]).
-    pub fn send_step(&mut self, actions: &[Action]) -> Result<()> {
-        self.send_request(MsgRef::Step { actions })
+    pub fn send_step(&mut self, actions: &[Action], ctx: TraceCtx) -> Result<()> {
+        self.send_request(MsgRef::Step { actions, ctx })
     }
 
     /// Write a `RandomRollout` frame (reply read by
     /// [`ShardClient::recv_rollout`]).
-    pub fn send_rollout(&mut self, steps_per_lane: u64) -> Result<()> {
-        self.send_request(MsgRef::RandomRollout { steps_per_lane })
+    pub fn send_rollout(&mut self, steps_per_lane: u64, ctx: TraceCtx) -> Result<()> {
+        self.send_request(MsgRef::RandomRollout { steps_per_lane, ctx })
     }
 
-    /// Read an `Obs` reply.
+    /// Read an `Obs` reply (the server-timing block is dropped; the
+    /// pool's pipelined receive path consumes it via its own helpers).
     pub fn recv_obs(&mut self) -> Result<Vec<f32>> {
         match self.expect_reply()? {
-            Msg::Obs { obs } => Ok(obs),
+            Msg::Obs { obs, .. } => Ok(obs),
             other => Err(err(format!(
                 "{}: expected Obs, got {other:?}",
                 self.addr
@@ -434,7 +460,7 @@ impl ShardClient {
     /// Read a `StepResult` reply.
     pub fn recv_step(&mut self) -> Result<(Vec<f32>, Vec<Transition>)> {
         match self.expect_reply()? {
-            Msg::StepResult { obs, transitions } => Ok((obs, transitions)),
+            Msg::StepResult { obs, transitions, .. } => Ok((obs, transitions)),
             other => Err(err(format!(
                 "{}: expected StepResult, got {other:?}",
                 self.addr
@@ -445,7 +471,7 @@ impl ShardClient {
     /// Read a `RolloutDone` reply.
     pub fn recv_rollout(&mut self) -> Result<RolloutCounts> {
         match self.expect_reply()? {
-            Msg::RolloutDone { steps, episodes } => Ok(RolloutCounts { steps, episodes }),
+            Msg::RolloutDone { steps, episodes, .. } => Ok(RolloutCounts { steps, episodes }),
             other => Err(err(format!(
                 "{}: expected RolloutDone, got {other:?}",
                 self.addr
@@ -585,13 +611,16 @@ impl Default for ShardPoolOptions {
 /// rollout resets its lanes and draws from dedicated per-call streams
 /// ([`crate::coordinator::pool::EnvPool::random_rollout`]) — so
 /// replaying the full log against a fresh executor reconstructs lane
-/// state bit-exactly.
+/// state bit-exactly.  Each op also keeps the trace context it was
+/// first sent with: a failover replay re-sends the **original** span
+/// ids (protocol v6 rule), so a replayed batch stays one node in the
+/// trace instead of forking a phantom sibling.
 enum ReplayOp {
-    Reset,
+    Reset { ctx: TraceCtx },
     /// The full global action batch (each shard replays its slice).
     /// Empty when failover is disabled — nothing will ever replay it.
-    Step(Vec<Action>),
-    Rollout(u64),
+    Step { actions: Vec<Action>, ctx: TraceCtx },
+    Rollout { steps: u64, ctx: TraceCtx },
 }
 
 /// How a shard interaction failed, from the pool's perspective.
@@ -627,7 +656,7 @@ fn recv_msg_fault(client: &mut ShardClient) -> std::result::Result<Msg, Fault> {
 
 fn recv_obs_fault(client: &mut ShardClient) -> std::result::Result<Vec<f32>, Fault> {
     match recv_msg_fault(client)? {
-        Msg::Obs { obs } => Ok(obs),
+        Msg::Obs { obs, .. } => Ok(obs),
         other => Err(Fault::Lost(format!(
             "{}: expected Obs, got {other:?}",
             client.addr()
@@ -637,9 +666,9 @@ fn recv_obs_fault(client: &mut ShardClient) -> std::result::Result<Vec<f32>, Fau
 
 fn recv_step_fault(
     client: &mut ShardClient,
-) -> std::result::Result<(Vec<f32>, Vec<Transition>), Fault> {
+) -> std::result::Result<(Vec<f32>, Vec<Transition>, ServerTiming), Fault> {
     match recv_msg_fault(client)? {
-        Msg::StepResult { obs, transitions } => Ok((obs, transitions)),
+        Msg::StepResult { obs, transitions, timing } => Ok((obs, transitions, timing)),
         other => Err(Fault::Lost(format!(
             "{}: expected StepResult, got {other:?}",
             client.addr()
@@ -649,12 +678,49 @@ fn recv_step_fault(
 
 fn recv_rollout_fault(client: &mut ShardClient) -> std::result::Result<RolloutCounts, Fault> {
     match recv_msg_fault(client)? {
-        Msg::RolloutDone { steps, episodes } => Ok(RolloutCounts { steps, episodes }),
+        Msg::RolloutDone { steps, episodes, .. } => Ok(RolloutCounts { steps, episodes }),
         other => Err(Fault::Lost(format!(
             "{}: expected RolloutDone, got {other:?}",
             client.addr()
         ))),
     }
+}
+
+/// Record the `wire` span for one shard reply and synthesize the
+/// server-side `decode` and `server_step` spans inside it.  The v6
+/// reply reports **durations only** ([`ServerTiming`]) — client and
+/// shard clocks are never compared — so the two remote spans are
+/// centered in the observed wire window: whatever the window holds
+/// beyond the reported server time splits evenly into outbound and
+/// return flight.  All three parent under the batch span, carrying the
+/// shard slot so the exporter can give each shard its own track.
+fn record_remote_spans(
+    trace_id: u64,
+    batch_span: u64,
+    shard: u32,
+    lanes: u32,
+    wire_start_ns: u64,
+    wire_end_ns: u64,
+    timing: ServerTiming,
+) {
+    let span = |kind, t_start_ns, t_end_ns| SpanRecord {
+        span_id: trace::next_span_id(),
+        parent: batch_span,
+        trace_id,
+        t_start_ns,
+        t_end_ns,
+        lane_group: lanes,
+        shard,
+        kind,
+    };
+    trace::record(span(SpanKind::Wire, wire_start_ns, wire_end_ns));
+    let window = wire_end_ns.saturating_sub(wire_start_ns);
+    let server = timing.decode_ns.saturating_add(timing.step_ns);
+    let gap = window.saturating_sub(server) / 2;
+    let decode_start = wire_start_ns + gap;
+    let step_start = decode_start + timing.decode_ns;
+    trace::record(span(SpanKind::Decode, decode_start, step_start));
+    trace::record(span(SpanKind::ServerStep, step_start, step_start + timing.step_ns));
 }
 
 /// A [`BatchedExecutor`] whose lanes live on remote shards, with an
@@ -719,6 +785,20 @@ pub struct ShardedEnvPool {
     ops_consumed: usize,
     reconnects: Vec<u64>,
     metrics: ExecMetrics,
+    /// Trace id shared by every span this pool records (assigned
+    /// lazily from [`trace::new_trace_id`] on the first traced op; `0`
+    /// until then).  One pool = one stitched timeline.
+    trace_id: u64,
+    /// Per shard: wire-window start (ns) of in-flight traced `Step`
+    /// ops on the *current* connection — the instant its request
+    /// finished sending.  Cleared on failover alongside `sent_at`:
+    /// replayed batches keep their span ids but report no wire spans.
+    wire_start: Vec<VecDeque<u64>>,
+    /// In-flight batches' `(batch_span_id, t_start_ns)`, pushed by
+    /// [`ShardedEnvPool::submit_step`], popped by
+    /// [`ShardedEnvPool::recv_oldest_step`].  Span id `0` = untraced
+    /// batch; start `0` = untimed (metrics and tracing both off).
+    batch_spans: VecDeque<(u64, u64)>,
     /// Per shard: send timestamps of in-flight `Step` ops on the
     /// *current* connection (cleared on failover, so a replayed op never
     /// reports a bogus round-trip).
@@ -805,6 +885,10 @@ impl ShardedEnvPool {
         }
         let depth = opts.pipeline.clamp(1, MAX_PIPELINE);
         let plan = ShardPlan::plan(entries, addrs.len(), costs)?;
+        // A pool connected while tracing is live stamps its trace id
+        // into every handshake; enabled later, the id is minted lazily
+        // by the first traced op instead.
+        let trace_id = if trace::enabled() { trace::new_trace_id() } else { 0 };
         let conn_opts = ConnectOptions {
             pipeline: depth as u32,
             token: opts.token.clone(),
@@ -813,6 +897,7 @@ impl ShardedEnvPool {
             read_timeout: opts.read_timeout,
             write_timeout: opts.write_timeout,
             heartbeat: opts.heartbeat,
+            trace_id,
         };
         let mut clients = Vec::with_capacity(addrs.len());
         for (addr, assignment) in addrs.iter().zip(plan.assignments()) {
@@ -877,6 +962,11 @@ impl ShardedEnvPool {
             ops_consumed: 0,
             reconnects: vec![0; shards],
             metrics: ExecMetrics::for_executor("shard"),
+            trace_id,
+            wire_start: (0..shards)
+                .map(|_| VecDeque::with_capacity(MAX_PIPELINE))
+                .collect(),
+            batch_spans: VecDeque::with_capacity(MAX_PIPELINE),
             sent_at: (0..shards)
                 .map(|_| VecDeque::with_capacity(MAX_PIPELINE))
                 .collect(),
@@ -1050,6 +1140,7 @@ impl ShardedEnvPool {
             read_timeout: self.read_timeout,
             write_timeout: self.write_timeout,
             heartbeat: self.heartbeat,
+            trace_id: self.trace_id,
         };
         let mut client =
             ShardClient::connect_with(addr, &a.spec(), self.base_seed, a.first_lane, &conn_opts)?;
@@ -1060,24 +1151,26 @@ impl ShardedEnvPool {
         }
         let acked = self.ops_acked[s];
         for (i, op) in self.history.iter().enumerate() {
+            // Replays re-send each op's original trace context (v6
+            // rule): the batch keeps its span ids across the failover.
             match op {
-                ReplayOp::Reset => client.send_reset()?,
-                ReplayOp::Step(actions) => {
-                    client.send_step(&actions[a.first_lane..a.first_lane + a.lanes])?
+                ReplayOp::Reset { ctx } => client.send_reset(*ctx)?,
+                ReplayOp::Step { actions, ctx } => {
+                    client.send_step(&actions[a.first_lane..a.first_lane + a.lanes], *ctx)?
                 }
-                ReplayOp::Rollout(steps) => client.send_rollout(*steps)?,
+                ReplayOp::Rollout { steps, ctx } => client.send_rollout(*steps, *ctx)?,
             }
             if i < acked {
                 // The pool already consumed this op's result on the old
                 // connection; drain and discard the replayed reply.
                 match op {
-                    ReplayOp::Reset => {
+                    ReplayOp::Reset { .. } => {
                         client.recv_obs()?;
                     }
-                    ReplayOp::Step(_) => {
+                    ReplayOp::Step { .. } => {
                         client.recv_step()?;
                     }
-                    ReplayOp::Rollout(_) => {
+                    ReplayOp::Rollout { .. } => {
                         client.recv_rollout()?;
                     }
                 }
@@ -1088,8 +1181,11 @@ impl ShardedEnvPool {
         self.reconnects[s] += 1;
         self.m_reconnects.inc();
         // In-flight ops were re-sent by the replay; their round-trips
-        // are no longer meaningful samples.
+        // are no longer meaningful samples — and their wire windows are
+        // gone with the old connection, so the replayed batches simply
+        // report no wire/decode/server_step spans.
         self.sent_at[s].clear();
+        self.wire_start[s].clear();
         // Chaos re-arms only now, after the replay — recovery itself
         // runs fault-free, so a replay can never be sabotaged into a
         // livelock by its own injector.
@@ -1130,12 +1226,27 @@ impl ShardedEnvPool {
             "pipeline window of {} batch(es) is full — recv_oldest_step first",
             self.depth
         );
+        let tracing = trace::enabled();
+        if tracing && self.trace_id == 0 {
+            self.trace_id = trace::new_trace_id();
+        }
+        let batch_span = if tracing { trace::next_span_id() } else { 0 };
+        let t_batch = if tracing || crate::telemetry::enabled() {
+            trace::now_ns()
+        } else {
+            0
+        };
+        let ctx = if tracing {
+            TraceCtx { trace_id: self.trace_id, span_id: batch_span }
+        } else {
+            TraceCtx::NONE
+        };
         let logged = if self.failover_enabled() {
             actions.to_vec()
         } else {
             Vec::new()
         };
-        self.history.push(ReplayOp::Step(logged));
+        self.history.push(ReplayOp::Step { actions: logged, ctx });
         let target = self.history.len();
         for s in 0..self.clients.len() {
             loop {
@@ -1143,10 +1254,27 @@ impl ShardedEnvPool {
                     break; // a failover replay already sent it
                 }
                 let (first, lanes) = self.slice_of(s);
-                match self.clients[s].send_step(&actions[first..first + lanes]) {
+                let t_encode = if tracing { trace::now_ns() } else { 0 };
+                match self.clients[s].send_step(&actions[first..first + lanes], ctx) {
                     Ok(()) => {
                         self.ops_sent[s] += 1;
                         self.sent_at[s].push_back(Instant::now());
+                        if tracing {
+                            // Encode covers serialization + the write;
+                            // the wire window opens where it closes.
+                            let t_sent = trace::now_ns();
+                            trace::record(SpanRecord {
+                                span_id: trace::next_span_id(),
+                                parent: batch_span,
+                                trace_id: self.trace_id,
+                                t_start_ns: t_encode,
+                                t_end_ns: t_sent,
+                                lane_group: lanes as u32,
+                                shard: s as u32,
+                                kind: SpanKind::Encode,
+                            });
+                            self.wire_start[s].push_back(t_sent);
+                        }
                         self.m_inflight[s].set(self.clients[s].in_flight() as i64);
                         break;
                     }
@@ -1157,6 +1285,7 @@ impl ShardedEnvPool {
                 }
             }
         }
+        self.batch_spans.push_back((batch_span, t_batch));
     }
 
     /// Receive the oldest in-flight batch into `obs`/`transitions`
@@ -1172,16 +1301,21 @@ impl ShardedEnvPool {
         assert_eq!(transitions.len(), self.n);
         let idx = self.ops_consumed;
         debug_assert!(
-            matches!(self.history[idx], ReplayOp::Step(_)),
+            matches!(self.history[idx], ReplayOp::Step { .. }),
             "oldest unconsumed op is not a Step"
         );
+        // Span id 0 = this batch was submitted untraced; the per-shard
+        // wire_start queues then hold no entry for it either, so the
+        // traced and untraced bookkeeping can never drift apart even if
+        // the gate flips while batches are in flight.
+        let (batch_span, t_batch) = self.batch_spans.pop_front().unwrap_or((0, 0));
         for s in 0..self.clients.len() {
             if self.ops_acked[s] > idx {
                 continue;
             }
             loop {
                 match recv_step_fault(&mut self.clients[s]) {
-                    Ok((shard_obs, shard_tr)) => {
+                    Ok((shard_obs, shard_tr, timing)) => {
                         let (first, lanes) = self.slice_of(s);
                         assert_eq!(
                             shard_tr.len(),
@@ -1189,8 +1323,35 @@ impl ShardedEnvPool {
                             "{}: short transition block",
                             self.clients[s].addr()
                         );
-                        self.scatter_obs(s, &shard_obs, obs);
-                        transitions[first..first + lanes].copy_from_slice(&shard_tr);
+                        if batch_span != 0 {
+                            let t_recv = trace::now_ns();
+                            if let Some(w0) = self.wire_start[s].pop_front() {
+                                record_remote_spans(
+                                    self.trace_id,
+                                    batch_span,
+                                    s as u32,
+                                    lanes as u32,
+                                    w0,
+                                    t_recv,
+                                    timing,
+                                );
+                            }
+                            self.scatter_obs(s, &shard_obs, obs);
+                            transitions[first..first + lanes].copy_from_slice(&shard_tr);
+                            trace::record(SpanRecord {
+                                span_id: trace::next_span_id(),
+                                parent: batch_span,
+                                trace_id: self.trace_id,
+                                t_start_ns: t_recv,
+                                t_end_ns: trace::now_ns(),
+                                lane_group: lanes as u32,
+                                shard: s as u32,
+                                kind: SpanKind::Reassemble,
+                            });
+                        } else {
+                            self.scatter_obs(s, &shard_obs, obs);
+                            transitions[first..first + lanes].copy_from_slice(&shard_tr);
+                        }
                         self.ops_acked[s] = idx + 1;
                         // A failover replay cleared the timestamp queue;
                         // only samples from this connection count.
@@ -1207,7 +1368,27 @@ impl ShardedEnvPool {
         }
         self.ops_consumed += 1;
         let ends = transitions.iter().filter(|t| t.done || t.truncated).count();
-        self.metrics.record_batch(self.n, ends);
+        if t_batch != 0 {
+            let t_end = trace::now_ns();
+            if batch_span != 0 {
+                trace::record(SpanRecord {
+                    span_id: batch_span,
+                    parent: 0,
+                    trace_id: self.trace_id,
+                    t_start_ns: t_batch,
+                    t_end_ns: t_end,
+                    lane_group: self.n as u32,
+                    shard: trace::SHARD_LOCAL,
+                    kind: SpanKind::Batch,
+                });
+            }
+            // Satellite rule: the latency histogram derives from the
+            // same timestamps as the batch span, so the two can't
+            // disagree.
+            self.metrics.record_batch_timed(self.n, ends, t_batch, t_end);
+        } else {
+            self.metrics.record_batch(self.n, ends);
+        }
     }
 
     /// Run `steps_per_lane` random-action batches keeping up to the
@@ -1281,7 +1462,18 @@ impl BatchedExecutor for ShardedEnvPool {
             0,
             "reset_into while batches are in flight — drain the pipeline first"
         );
-        self.history.push(ReplayOp::Reset);
+        let tracing = trace::enabled();
+        if tracing && self.trace_id == 0 {
+            self.trace_id = trace::new_trace_id();
+        }
+        let reset_span = if tracing { trace::next_span_id() } else { 0 };
+        let ctx = if tracing {
+            TraceCtx { trace_id: self.trace_id, span_id: reset_span }
+        } else {
+            TraceCtx::NONE
+        };
+        let t_reset = if tracing { trace::now_ns() } else { 0 };
+        self.history.push(ReplayOp::Reset { ctx });
         let target = self.history.len();
         // Write every shard's request before reading any reply: the
         // shards reset in parallel.
@@ -1290,7 +1482,7 @@ impl BatchedExecutor for ShardedEnvPool {
                 if self.ops_sent[s] >= target {
                     break;
                 }
-                match self.clients[s].send_reset() {
+                match self.clients[s].send_reset(ctx) {
                     Ok(()) => {
                         self.ops_sent[s] += 1;
                         break;
@@ -1319,6 +1511,18 @@ impl BatchedExecutor for ShardedEnvPool {
             }
         }
         self.ops_consumed = target;
+        if reset_span != 0 {
+            trace::record(SpanRecord {
+                span_id: reset_span,
+                parent: 0,
+                trace_id: self.trace_id,
+                t_start_ns: t_reset,
+                t_end_ns: trace::now_ns(),
+                lane_group: self.n as u32,
+                shard: trace::SHARD_LOCAL,
+                kind: SpanKind::Reset,
+            });
+        }
     }
 
     fn step_into(
@@ -1352,14 +1556,22 @@ impl RandomRollout for ShardedEnvPool {
             0,
             "random_rollout while batches are in flight — drain the pipeline first"
         );
-        self.history.push(ReplayOp::Rollout(steps_per_lane));
+        // A rollout runs entirely shard-side; it forwards the trace id
+        // (span id 0 — no client-side parent batch) and records no
+        // client spans of its own.
+        let ctx = if trace::enabled() && self.trace_id != 0 {
+            TraceCtx { trace_id: self.trace_id, span_id: 0 }
+        } else {
+            TraceCtx::NONE
+        };
+        self.history.push(ReplayOp::Rollout { steps: steps_per_lane, ctx });
         let target = self.history.len();
         for s in 0..self.clients.len() {
             loop {
                 if self.ops_sent[s] >= target {
                     break;
                 }
-                match self.clients[s].send_rollout(steps_per_lane) {
+                match self.clients[s].send_rollout(steps_per_lane, ctx) {
                     Ok(()) => {
                         self.ops_sent[s] += 1;
                         break;

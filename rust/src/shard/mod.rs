@@ -39,6 +39,15 @@
 //! ([`crate::faults`], `--chaos PROFILE`).  Operational guidance lives
 //! in `docs/OPERATIONS.md`.
 //!
+//! Protocol v6 adds distributed tracing: every request frame carries a
+//! 16-byte trace context ([`crate::telemetry::trace::TraceCtx`]) and
+//! every reply returns the server's measured decode/step durations, so
+//! `cairl run --trace` stitches client and server spans into one
+//! Chrome-trace timeline per batch (`docs/shard-protocol.md` §3.3).
+//! Tracing never perturbs the wire semantics: an untraced context is
+//! all zeroes, and failover replay re-sends each operation's original
+//! context so span identities survive a reconnect.
+//!
 //! The layer map and the determinism contract shared by every executor
 //! (local, fused, sharded, pipelined, post-failover) are documented
 //! once in `docs/ARCHITECTURE.md`.

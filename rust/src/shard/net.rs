@@ -306,6 +306,16 @@ impl FramedStream {
     pub(crate) fn recv(&mut self) -> Result<Frame> {
         map_deadline(proto::read_msg(&mut self.r), "recv")
     }
+
+    /// Block for the next frame and also report the nanoseconds spent
+    /// decoding its payload (checksum verify + parse, once the bytes
+    /// are in memory).  The server's `decode` span source: wire wait is
+    /// excluded, so the duration travels back in
+    /// [`ServerTiming`](crate::shard::proto::ServerTiming) without
+    /// needing a cross-host clock.
+    pub(crate) fn recv_timed(&mut self) -> Result<(Frame, u64)> {
+        map_deadline(proto::read_msg_timed(&mut self.r), "recv")
+    }
 }
 
 /// A bound shard listener; nonblocking so the accept loop can poll a

@@ -49,6 +49,7 @@ use crate::coordinator::pool::LaneSpec;
 use crate::core::env::Transition;
 use crate::core::error::{CairlError, Result};
 use crate::core::spaces::{Action, Space};
+use crate::telemetry::trace::TraceCtx;
 
 /// Protocol revision; bumped on any wire-format change.  A frame whose
 /// version byte differs is rejected at decode — there is no negotiation
@@ -58,8 +59,14 @@ use crate::core::spaces::{Action, Space};
 /// client re-pads, so padding zeros never cross the wire.  v5:
 /// `Ping`/`Pong` liveness frames, per-frame read/write deadline
 /// semantics, and the drain handshake (`Hello` during drain answered
-/// with `Busy`).
-pub const PROTO_VERSION: u8 = 5;
+/// with `Busy`).  v6: `Hello` and every per-batch request
+/// (`Reset`/`Step`/`RandomRollout`) carry a fixed 16-byte trace
+/// context (trace id + parent span id, zeros when untraced) directly
+/// after the sequence number, and their replies
+/// (`Obs`/`StepResult`/`RolloutDone`) carry a 16-byte [`ServerTiming`]
+/// block so server-side decode/step spans stitch under the client's
+/// batch span.
+pub const PROTO_VERSION: u8 = 6;
 
 /// Hard ceiling on payload length (64 MiB) — refuse corrupt length
 /// prefixes before allocating.
@@ -84,6 +91,23 @@ const TAG_STATUS_REPORT: u8 = 12;
 const TAG_BUSY: u8 = 13;
 const TAG_PING: u8 = 14;
 const TAG_PONG: u8 = 15;
+
+/// Server-measured durations carried on v6 reply frames
+/// (`Obs`/`StepResult`/`RolloutDone`): how long the daemon spent
+/// decoding the request payload and stepping its executor.  Durations,
+/// not timestamps — the two processes share no clock; the client
+/// centres the stitched spans inside its own wire window
+/// (`shard/client.rs`).  All-zero when the request carried no trace
+/// context.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServerTiming {
+    /// Nanoseconds spent decoding the request payload (checksum +
+    /// parse, excluding blocking reads).
+    pub decode_ns: u64,
+    /// Nanoseconds spent in the executor (`reset_into` / `step_into` /
+    /// the rollout loop).
+    pub step_ns: u64,
+}
 
 /// The successor of `seq` in the 1-based sequence space (wraps around
 /// [`SEQ_NONE`], which is reserved).
@@ -177,6 +201,9 @@ pub enum MsgRef<'a> {
         /// rendered in the `--wrap` grammar (`""` = the daemon's
         /// configured default, which itself defaults to no wrappers).
         wrap: &'a str,
+        /// Connection-level trace context (v6): the client pool's trace
+        /// id, parent span 0.  [`TraceCtx::NONE`] when untraced.
+        ctx: TraceCtx,
     },
     /// Server handshake reply: the hosted executor's padded width and
     /// per-lane metadata (shard-local offsets).
@@ -187,17 +214,28 @@ pub enum MsgRef<'a> {
         lane_specs: &'a [LaneSpec],
     },
     /// Reset every lane; answered by [`MsgRef::Obs`].
-    Reset,
+    Reset {
+        /// Trace context of the client-side reset span (v6);
+        /// [`TraceCtx::NONE`] when untraced.  A failover replay re-sends
+        /// the *original* context (`docs/shard-protocol.md` §7).
+        ctx: TraceCtx,
+    },
     /// A `[lanes * obs_dim]` observation block (shard-local padding).
     Obs {
         /// The observation block.
         obs: &'a [f32],
+        /// Server-measured decode/step durations (v6).
+        timing: ServerTiming,
     },
     /// One lockstep batch of actions, lane order; answered by
     /// [`MsgRef::StepResult`].
     Step {
         /// One action per hosted lane, lane order.
         actions: &'a [Action],
+        /// Trace context of the client-side batch span (v6);
+        /// [`TraceCtx::NONE`] when untraced.  A failover replay re-sends
+        /// the *original* context (`docs/shard-protocol.md` §7).
+        ctx: TraceCtx,
     },
     /// Batch step reply: the observation block plus per-lane transitions.
     StepResult {
@@ -205,12 +243,16 @@ pub enum MsgRef<'a> {
         obs: &'a [f32],
         /// One transition per hosted lane, lane order.
         transitions: &'a [Transition],
+        /// Server-measured decode/step durations (v6).
+        timing: ServerTiming,
     },
     /// Run a whole free-running random rollout shard-side; answered by
     /// [`MsgRef::RolloutDone`].
     RandomRollout {
         /// Steps each lane advances before the rollout stops.
         steps_per_lane: u64,
+        /// Trace context (v6); [`TraceCtx::NONE`] when untraced.
+        ctx: TraceCtx,
     },
     /// Aggregate counts of a completed shard-side rollout.
     RolloutDone {
@@ -218,6 +260,8 @@ pub enum MsgRef<'a> {
         steps: u64,
         /// Episodes completed across the shard's lanes.
         episodes: u64,
+        /// Server-measured decode/rollout durations (v6).
+        timing: ServerTiming,
     },
     /// Ask the daemon for its status report; answered by
     /// [`MsgRef::StatusReport`].  Valid before any `Hello`.
@@ -284,6 +328,8 @@ pub enum Msg {
         /// Pool-level wrapper chain (`--wrap` grammar; `""` = the
         /// daemon's configured default).
         wrap: String,
+        /// Connection-level trace context (v6).
+        ctx: TraceCtx,
     },
     /// See [`MsgRef::Spec`].
     Spec {
@@ -293,16 +339,23 @@ pub enum Msg {
         lane_specs: Vec<LaneSpec>,
     },
     /// See [`MsgRef::Reset`].
-    Reset,
+    Reset {
+        /// Trace context of the client-side reset span (v6).
+        ctx: TraceCtx,
+    },
     /// See [`MsgRef::Obs`].
     Obs {
         /// The observation block.
         obs: Vec<f32>,
+        /// Server-measured decode/step durations (v6).
+        timing: ServerTiming,
     },
     /// See [`MsgRef::Step`].
     Step {
         /// One action per hosted lane, lane order.
         actions: Vec<Action>,
+        /// Trace context of the client-side batch span (v6).
+        ctx: TraceCtx,
     },
     /// See [`MsgRef::StepResult`].
     StepResult {
@@ -310,11 +363,15 @@ pub enum Msg {
         obs: Vec<f32>,
         /// One transition per hosted lane, lane order.
         transitions: Vec<Transition>,
+        /// Server-measured decode/step durations (v6).
+        timing: ServerTiming,
     },
     /// See [`MsgRef::RandomRollout`].
     RandomRollout {
         /// Steps each lane advances before the rollout stops.
         steps_per_lane: u64,
+        /// Trace context (v6).
+        ctx: TraceCtx,
     },
     /// See [`MsgRef::RolloutDone`].
     RolloutDone {
@@ -322,6 +379,8 @@ pub enum Msg {
         steps: u64,
         /// Episodes completed across the shard's lanes.
         episodes: u64,
+        /// Server-measured decode/rollout durations (v6).
+        timing: ServerTiming,
     },
     /// See [`MsgRef::Status`].
     Status {
@@ -441,6 +500,20 @@ fn put_lane_spec(out: &mut Vec<u8>, spec: &LaneSpec) {
     put_space(out, &spec.action_space);
 }
 
+/// The fixed 16-byte v6 trace context: trace id then parent span id,
+/// both u64 LE, zeros when untraced.
+fn put_ctx(out: &mut Vec<u8>, ctx: TraceCtx) {
+    put_u64(out, ctx.trace_id);
+    put_u64(out, ctx.span_id);
+}
+
+/// The fixed 16-byte v6 server-timing block: decode then step
+/// nanoseconds, both u64 LE.
+fn put_timing(out: &mut Vec<u8>, t: ServerTiming) {
+    put_u64(out, t.decode_ns);
+    put_u64(out, t.step_ns);
+}
+
 /// Encode a message into a complete frame (length prefix included),
 /// stamped with `seq`.
 pub fn encode(seq: u32, msg: MsgRef<'_>) -> Vec<u8> {
@@ -454,9 +527,11 @@ pub fn encode(seq: u32, msg: MsgRef<'_>) -> Vec<u8> {
             pipeline,
             token,
             wrap,
+            ctx,
         } => {
             payload.push(TAG_HELLO);
             put_u32(&mut payload, seq);
+            put_ctx(&mut payload, ctx);
             put_str(&mut payload, spec);
             put_u64(&mut payload, base_seed);
             put_u64(&mut payload, first_lane);
@@ -476,26 +551,34 @@ pub fn encode(seq: u32, msg: MsgRef<'_>) -> Vec<u8> {
                 put_lane_spec(&mut payload, spec);
             }
         }
-        MsgRef::Reset => {
+        MsgRef::Reset { ctx } => {
             payload.push(TAG_RESET);
             put_u32(&mut payload, seq);
+            put_ctx(&mut payload, ctx);
         }
-        MsgRef::Obs { obs } => {
+        MsgRef::Obs { obs, timing } => {
             payload.push(TAG_OBS);
             put_u32(&mut payload, seq);
+            put_timing(&mut payload, timing);
             put_f32s(&mut payload, obs);
         }
-        MsgRef::Step { actions } => {
+        MsgRef::Step { actions, ctx } => {
             payload.push(TAG_STEP);
             put_u32(&mut payload, seq);
+            put_ctx(&mut payload, ctx);
             put_u32(&mut payload, actions.len() as u32);
             for action in actions {
                 put_action(&mut payload, action);
             }
         }
-        MsgRef::StepResult { obs, transitions } => {
+        MsgRef::StepResult {
+            obs,
+            transitions,
+            timing,
+        } => {
             payload.push(TAG_STEP_RESULT);
             put_u32(&mut payload, seq);
+            put_timing(&mut payload, timing);
             put_f32s(&mut payload, obs);
             put_u32(&mut payload, transitions.len() as u32);
             for t in transitions {
@@ -504,14 +587,23 @@ pub fn encode(seq: u32, msg: MsgRef<'_>) -> Vec<u8> {
                 payload.push(t.truncated as u8);
             }
         }
-        MsgRef::RandomRollout { steps_per_lane } => {
+        MsgRef::RandomRollout {
+            steps_per_lane,
+            ctx,
+        } => {
             payload.push(TAG_RANDOM_ROLLOUT);
             put_u32(&mut payload, seq);
+            put_ctx(&mut payload, ctx);
             put_u64(&mut payload, steps_per_lane);
         }
-        MsgRef::RolloutDone { steps, episodes } => {
+        MsgRef::RolloutDone {
+            steps,
+            episodes,
+            timing,
+        } => {
             payload.push(TAG_ROLLOUT_DONE);
             put_u32(&mut payload, seq);
+            put_timing(&mut payload, timing);
             put_u64(&mut payload, steps);
             put_u64(&mut payload, episodes);
         }
@@ -698,6 +790,24 @@ impl<'a> Reader<'a> {
             action_space: self.space()?,
         })
     }
+
+    /// The fixed 16-byte v6 trace context.  A short read here reports
+    /// "truncated frame" like any other field — a partial context can
+    /// never decode.
+    fn ctx(&mut self) -> Result<TraceCtx> {
+        Ok(TraceCtx {
+            trace_id: self.u64()?,
+            span_id: self.u64()?,
+        })
+    }
+
+    /// The fixed 16-byte v6 server-timing block.
+    fn timing(&mut self) -> Result<ServerTiming> {
+        Ok(ServerTiming {
+            decode_ns: self.u64()?,
+            step_ns: self.u64()?,
+        })
+    }
 }
 
 /// Decode one payload (a frame minus its length prefix): verify the
@@ -727,14 +837,18 @@ pub fn decode_payload(payload: &[u8]) -> Result<Frame> {
     let tag = r.u8()?;
     let seq = r.u32()?;
     let msg = match tag {
-        TAG_HELLO => Msg::Hello {
-            spec: r.str()?,
-            base_seed: r.u64()?,
-            first_lane: r.u64()?,
-            pipeline: r.u32()?,
-            token: r.str()?,
-            wrap: r.str()?,
-        },
+        TAG_HELLO => {
+            let ctx = r.ctx()?;
+            Msg::Hello {
+                spec: r.str()?,
+                base_seed: r.u64()?,
+                first_lane: r.u64()?,
+                pipeline: r.u32()?,
+                token: r.str()?,
+                wrap: r.str()?,
+                ctx,
+            }
+        }
         TAG_SPEC => {
             let obs_dim = r.u64()?;
             let n = r.count(1)?;
@@ -744,17 +858,25 @@ pub fn decode_payload(payload: &[u8]) -> Result<Frame> {
             }
             Msg::Spec { obs_dim, lane_specs }
         }
-        TAG_RESET => Msg::Reset,
-        TAG_OBS => Msg::Obs { obs: r.f32s()? },
+        TAG_RESET => Msg::Reset { ctx: r.ctx()? },
+        TAG_OBS => {
+            let timing = r.timing()?;
+            Msg::Obs {
+                obs: r.f32s()?,
+                timing,
+            }
+        }
         TAG_STEP => {
+            let ctx = r.ctx()?;
             let n = r.count(1)?;
             let mut actions = Vec::with_capacity(n);
             for _ in 0..n {
                 actions.push(r.action()?);
             }
-            Msg::Step { actions }
+            Msg::Step { actions, ctx }
         }
         TAG_STEP_RESULT => {
+            let timing = r.timing()?;
             let obs = r.f32s()?;
             let n = r.count(6)?;
             let mut transitions = Vec::with_capacity(n);
@@ -765,15 +887,27 @@ pub fn decode_payload(payload: &[u8]) -> Result<Frame> {
                     truncated: r.bool()?,
                 });
             }
-            Msg::StepResult { obs, transitions }
+            Msg::StepResult {
+                obs,
+                transitions,
+                timing,
+            }
         }
-        TAG_RANDOM_ROLLOUT => Msg::RandomRollout {
-            steps_per_lane: r.u64()?,
-        },
-        TAG_ROLLOUT_DONE => Msg::RolloutDone {
-            steps: r.u64()?,
-            episodes: r.u64()?,
-        },
+        TAG_RANDOM_ROLLOUT => {
+            let ctx = r.ctx()?;
+            Msg::RandomRollout {
+                steps_per_lane: r.u64()?,
+                ctx,
+            }
+        }
+        TAG_ROLLOUT_DONE => {
+            let timing = r.timing()?;
+            Msg::RolloutDone {
+                steps: r.u64()?,
+                episodes: r.u64()?,
+                timing,
+            }
+        }
         TAG_STATUS => Msg::Status { token: r.str()? },
         TAG_STATUS_REPORT => Msg::StatusReport { report: r.str()? },
         TAG_BUSY => Msg::Busy {
@@ -823,6 +957,29 @@ pub fn read_msg(r: &mut impl Read) -> Result<Frame> {
     decode_payload(&payload)
 }
 
+/// [`read_msg`], also reporting the nanoseconds spent in
+/// [`decode_payload`] — the pure CPU cost of checksum + parse,
+/// excluding any blocking socket reads.  The serve daemon feeds this
+/// into the v6 [`ServerTiming`] reply block (`decode_ns`).
+pub fn read_msg_timed(r: &mut impl Read) -> Result<(Frame, u64)> {
+    let mut len_bytes = [0u8; 4];
+    r.read_exact(&mut len_bytes)?;
+    let len = u32::from_le_bytes(len_bytes) as usize;
+    if len < 10 {
+        return Err(err(format!("frame length {len} below the minimum of 10")));
+    }
+    if len > MAX_FRAME {
+        return Err(err(format!(
+            "frame length {len} exceeds the {MAX_FRAME}-byte ceiling"
+        )));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    let t0 = std::time::Instant::now();
+    let frame = decode_payload(&payload)?;
+    Ok((frame, t0.elapsed().as_nanos() as u64))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -837,6 +994,20 @@ mod tests {
         Frame { seq, msg }
     }
 
+    fn ctx() -> TraceCtx {
+        TraceCtx {
+            trace_id: 0x1122_3344_5566_7788,
+            span_id: 42,
+        }
+    }
+
+    fn timing() -> ServerTiming {
+        ServerTiming {
+            decode_ns: 1_500,
+            step_ns: 88_000,
+        }
+    }
+
     #[test]
     fn every_message_round_trips() {
         assert_eq!(
@@ -849,6 +1020,7 @@ mod tests {
                     pipeline: 4,
                     token: "hunter2",
                     wrap: "TimeLimit(200),NormalizeObs",
+                    ctx: ctx(),
                 }
             ),
             framed(
@@ -860,6 +1032,7 @@ mod tests {
                     pipeline: 4,
                     token: "hunter2".into(),
                     wrap: "TimeLimit(200),NormalizeObs".into(),
+                    ctx: ctx(),
                 }
             )
         );
@@ -893,19 +1066,46 @@ mod tests {
                 }
             )
         );
-        assert_eq!(round_trip(7, MsgRef::Reset), framed(7, Msg::Reset));
+        assert_eq!(
+            round_trip(7, MsgRef::Reset { ctx: ctx() }),
+            framed(7, Msg::Reset { ctx: ctx() })
+        );
+        // An untraced request carries the all-zero context.
+        assert_eq!(
+            round_trip(7, MsgRef::Reset { ctx: TraceCtx::NONE }),
+            framed(7, Msg::Reset { ctx: TraceCtx::NONE })
+        );
         let obs = vec![0.5f32, -1.25, 3.0];
         assert_eq!(
-            round_trip(8, MsgRef::Obs { obs: &obs }),
-            framed(8, Msg::Obs { obs: obs.clone() })
+            round_trip(
+                8,
+                MsgRef::Obs {
+                    obs: &obs,
+                    timing: timing(),
+                }
+            ),
+            framed(
+                8,
+                Msg::Obs {
+                    obs: obs.clone(),
+                    timing: timing(),
+                }
+            )
         );
         let actions = vec![Action::Discrete(1), Action::Continuous(vec![0.5, -0.5])];
         assert_eq!(
-            round_trip(9, MsgRef::Step { actions: &actions }),
+            round_trip(
+                9,
+                MsgRef::Step {
+                    actions: &actions,
+                    ctx: ctx(),
+                }
+            ),
             framed(
                 9,
                 Msg::Step {
                     actions: actions.clone(),
+                    ctx: ctx(),
                 }
             )
         );
@@ -923,6 +1123,7 @@ mod tests {
                 MsgRef::StepResult {
                     obs: &obs,
                     transitions: &transitions,
+                    timing: timing(),
                 }
             ),
             framed(
@@ -930,12 +1131,25 @@ mod tests {
                 Msg::StepResult {
                     obs: obs.clone(),
                     transitions: transitions.clone(),
+                    timing: timing(),
                 }
             )
         );
         assert_eq!(
-            round_trip(10, MsgRef::RandomRollout { steps_per_lane: 7 }),
-            framed(10, Msg::RandomRollout { steps_per_lane: 7 })
+            round_trip(
+                10,
+                MsgRef::RandomRollout {
+                    steps_per_lane: 7,
+                    ctx: ctx(),
+                }
+            ),
+            framed(
+                10,
+                Msg::RandomRollout {
+                    steps_per_lane: 7,
+                    ctx: ctx(),
+                }
+            )
         );
         assert_eq!(
             round_trip(
@@ -943,6 +1157,7 @@ mod tests {
                 MsgRef::RolloutDone {
                     steps: 700,
                     episodes: 31,
+                    timing: timing(),
                 }
             ),
             framed(
@@ -950,6 +1165,7 @@ mod tests {
                 Msg::RolloutDone {
                     steps: 700,
                     episodes: 31,
+                    timing: timing(),
                 }
             )
         );
@@ -1015,6 +1231,7 @@ mod tests {
                 pipeline: 1,
                 token: "",
                 wrap: "",
+                ctx: ctx(),
             },
         );
         // Flip every single byte in turn: each corruption must be an
@@ -1045,6 +1262,7 @@ mod tests {
             5,
             MsgRef::Step {
                 actions: &[Action::Discrete(0), Action::Continuous(vec![1.0])],
+                ctx: ctx(),
             },
         );
         for keep in 0..frame.len() {
@@ -1054,6 +1272,39 @@ mod tests {
                 "truncation to {keep} bytes must not decode"
             );
         }
+    }
+
+    #[test]
+    fn corrupt_or_short_trace_context_is_a_protocol_error() {
+        // The ctx sits at a fixed offset: len(4) + version(1) + tag(1)
+        // + seq(4) = 10.  Flip each of its 16 bytes in turn — the
+        // checksum must reject every one — then truncate the frame so
+        // it ends mid-context and assert a clean "truncated" error.
+        let frame = encode(
+            2,
+            MsgRef::Step {
+                actions: &[Action::Discrete(1)],
+                ctx: ctx(),
+            },
+        );
+        for i in 10..26 {
+            let mut bad = frame.clone();
+            bad[i] ^= 0xff;
+            let mut cursor = &bad[..];
+            assert!(
+                read_msg(&mut cursor).is_err(),
+                "ctx byte {i} corruption must not decode"
+            );
+        }
+        // Rebuild a payload that legitimately ends inside the ctx (the
+        // checksum is valid, so only the truncated-field error can fire).
+        let mut payload = vec![PROTO_VERSION, TAG_STEP];
+        payload.extend_from_slice(&2u32.to_le_bytes()); // seq
+        payload.extend_from_slice(&[0u8; 7]); // 7 of the 16 ctx bytes
+        let sum = checksum(&payload);
+        payload.extend_from_slice(&sum.to_le_bytes());
+        let e = decode_payload(&payload).unwrap_err();
+        assert!(e.to_string().contains("truncated"), "{e}");
     }
 
     #[test]

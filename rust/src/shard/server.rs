@@ -49,6 +49,15 @@
 //! has wound down or the grace window lapses.  The runbook view of all
 //! of this lives in `docs/OPERATIONS.md`.
 //!
+//! **Tracing (protocol v6).**  Every request carries a 16-byte trace
+//! context; for a traced request (context nonzero) the daemon measures
+//! its payload decode and the executor call and ships both durations
+//! back in the reply's [`ServerTiming`] block.  The client synthesizes
+//! the matching `decode`/`server_step` spans centered inside its
+//! observed wire window — durations cross the wire, clocks never do —
+//! so the server-side work stitches under the client's batch span
+//! without the daemon exporting anything itself.
+//!
 //! Inside a connection the protocol is sequenced request/reply
 //! (`Reset`→`Obs`, `Step`→`StepResult`, `RandomRollout`→`RolloutDone`):
 //! the daemon enforces the strict-successor rule on request sequence
@@ -78,7 +87,8 @@ use crate::faults::{ChaosProfile, FaultPlan};
 use crate::telemetry::{self, counter, gauge, Counter, Gauge};
 use crate::wrappers::WrapperSpec;
 use crate::shard::net::{FramedStream, RawStream, ShardAddr, ShardListener};
-use crate::shard::proto::{Msg, MsgRef, SeqTracker, PROTO_VERSION, SEQ_NONE};
+use crate::shard::proto::{Msg, MsgRef, SeqTracker, ServerTiming, PROTO_VERSION, SEQ_NONE};
+use crate::telemetry::trace::{self, TraceCtx};
 
 /// Back-off the daemon suggests in a `Busy` frame.
 const BUSY_RETRY_MS: u64 = 50;
@@ -912,8 +922,8 @@ fn serve_conn(
     let mut packed: Vec<f32> = Vec::new();
 
     loop {
-        let frame = match stream.recv() {
-            Ok(frame) => frame,
+        let (frame, decode_ns) = match stream.recv_timed() {
+            Ok(pair) => pair,
             Err(CairlError::Io(_)) => return, // peer hung up
             // The read deadline fired: the peer sent nothing — not
             // even a Ping — for a whole window.  A timeout can strike
@@ -940,6 +950,7 @@ fn serve_conn(
                 pipeline,
                 token,
                 wrap,
+                ctx: _,
             } => {
                 stats.note_request(id, 0);
                 if !authorized(config, &token) {
@@ -1110,23 +1121,28 @@ fn serve_conn(
                     return;
                 }
             }
-            Msg::Reset => {
+            Msg::Reset { ctx } => {
                 stats.note_request(id, 0);
                 let Some(host) = host.as_mut() else {
                     bail(&mut stream, seq, "Reset before Hello");
                     return;
                 };
+                let t0 = if ctx.is_none() { 0 } else { trace::now_ns() };
                 let ok = catch_exec(|| host.exec().reset_into(&mut obs));
                 if !ok {
                     bail(&mut stream, seq, "executor panicked during Reset");
                     return;
                 }
+                let timing = server_timing(ctx, decode_ns, t0);
                 pack_obs(&obs, padded, &widths, &mut packed);
-                if stream.send(seq, MsgRef::Obs { obs: &packed }).is_err() {
+                if stream
+                    .send(seq, MsgRef::Obs { obs: &packed, timing })
+                    .is_err()
+                {
                     return;
                 }
             }
-            Msg::Step { actions } => {
+            Msg::Step { actions, ctx } => {
                 stats.note_request(id, actions.len() as u64);
                 let Some(host) = host.as_mut() else {
                     bail(&mut stream, seq, "Step before Hello");
@@ -1144,12 +1160,14 @@ fn serve_conn(
                     );
                     return;
                 }
+                let t0 = if ctx.is_none() { 0 } else { trace::now_ns() };
                 let ok =
                     catch_exec(|| host.exec().step_into(&actions, &mut obs, &mut transitions));
                 if !ok {
                     bail(&mut stream, seq, "executor panicked during Step");
                     return;
                 }
+                let timing = server_timing(ctx, decode_ns, t0);
                 pack_obs(&obs, padded, &widths, &mut packed);
                 if stream
                     .send(
@@ -1157,6 +1175,7 @@ fn serve_conn(
                         MsgRef::StepResult {
                             obs: &packed,
                             transitions: &transitions,
+                            timing,
                         },
                     )
                     .is_err()
@@ -1164,12 +1183,13 @@ fn serve_conn(
                     return;
                 }
             }
-            Msg::RandomRollout { steps_per_lane } => {
+            Msg::RandomRollout { steps_per_lane, ctx } => {
                 let Some(host) = host.as_mut() else {
                     stats.note_request(id, 0);
                     bail(&mut stream, seq, "RandomRollout before Hello");
                     return;
                 };
+                let t0 = if ctx.is_none() { 0 } else { trace::now_ns() };
                 let mut counts = None;
                 let ok = catch_exec(|| counts = host.random_rollout(steps_per_lane));
                 if !ok {
@@ -1180,12 +1200,14 @@ fn serve_conn(
                 match counts {
                     Some(c) => {
                         stats.note_request(id, c.steps);
+                        let timing = server_timing(ctx, decode_ns, t0);
                         if stream
                             .send(
                                 seq,
                                 MsgRef::RolloutDone {
                                     steps: c.steps,
                                     episodes: c.episodes,
+                                    timing,
                                 },
                             )
                             .is_err()
@@ -1221,6 +1243,23 @@ fn serve_conn(
 /// clean `false` so the client gets an `Error` frame instead of EOF.
 fn catch_exec(f: impl FnOnce()) -> bool {
     std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)).is_ok()
+}
+
+/// Close out a traced request: measure the executor window that opened
+/// at `t0` (a [`trace::now_ns`] stamp taken just before the call) and
+/// return the timing block the reply carries.  The client turns the
+/// two durations into `decode`/`server_step` spans centered inside its
+/// observed wire window — durations cross the wire, clocks never do.
+/// An untraced request (context all zeros) reports zeros, and the hot
+/// path pays nothing beyond the `is_none` branch.
+fn server_timing(ctx: TraceCtx, decode_ns: u64, t0: u64) -> ServerTiming {
+    if ctx.is_none() {
+        return ServerTiming::default();
+    }
+    ServerTiming {
+        decode_ns,
+        step_ns: trace::now_ns().saturating_sub(t0),
+    }
 }
 
 #[cfg(test)]

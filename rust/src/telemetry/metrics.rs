@@ -220,6 +220,10 @@ pub struct ExecMetrics {
     /// Episode ends observed, i.e. auto-resets
     /// (`cairl_exec_auto_resets_total`).
     pub auto_resets: Counter,
+    /// Wall-clock per stepped batch in microseconds
+    /// (`cairl_batch_latency_us`), derived from the same timestamps as
+    /// the trace spans so metrics and traces can't disagree.
+    pub latency: Histogram,
 }
 
 impl ExecMetrics {
@@ -232,6 +236,10 @@ impl ExecMetrics {
             auto_resets: counter(&format!(
                 "cairl_exec_auto_resets_total{{exec=\"{kind}\"}}"
             )),
+            latency: histogram(
+                &format!("cairl_batch_latency_us{{exec=\"{kind}\"}}"),
+                &LATENCY_BOUNDS_US,
+            ),
         }
     }
 
@@ -244,6 +252,15 @@ impl ExecMetrics {
         if ends > 0 {
             self.auto_resets.add(ends as u64);
         }
+    }
+
+    /// [`ExecMetrics::record_batch`] plus the batch's wall-clock
+    /// latency.  Executors pass the same start/end nanoseconds their
+    /// trace spans carry.  Zero-allocation.
+    #[inline]
+    pub fn record_batch_timed(&self, lanes: usize, ends: usize, t_start_ns: u64, t_end_ns: u64) {
+        self.record_batch(lanes, ends);
+        self.latency.record(t_end_ns.saturating_sub(t_start_ns) / 1_000);
     }
 }
 
@@ -320,6 +337,75 @@ fn split_labels(name: &str) -> (&str, &str) {
     }
 }
 
+/// Escape one label *value* for the Prometheus text format: `\` and
+/// `"` get a backslash (values are stored raw in the registry; the
+/// renderer escapes at exposition time).
+pub fn escape_label_value(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Escape every value in a `k="v",k2="v2"` label block.  Values are
+/// stored raw (env ids may contain `"` or `\`), so a value ends at a
+/// quote followed by end-of-block or by `,key="` — the only shape the
+/// registry produces.  A block that doesn't parse is passed through
+/// unchanged rather than dropped.
+fn escape_label_block(block: &str) -> String {
+    fn value_end(bytes: &[u8], mut i: usize) -> Option<usize> {
+        while i < bytes.len() {
+            if bytes[i] == b'"' {
+                let rest = &bytes[i + 1..];
+                if rest.is_empty() {
+                    return Some(i);
+                }
+                if rest[0] == b',' {
+                    // `,key="` starts the next pair?
+                    let mut j = 1;
+                    while j < rest.len() && (rest[j].is_ascii_alphanumeric() || rest[j] == b'_') {
+                        j += 1;
+                    }
+                    if j > 1 && rest.get(j) == Some(&b'=') && rest.get(j + 1) == Some(&b'"') {
+                        return Some(i);
+                    }
+                }
+            }
+            i += 1;
+        }
+        None
+    }
+    let bytes = block.as_bytes();
+    let mut out = String::with_capacity(block.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        // key="
+        let Some(eq) = block[i..].find("=\"").map(|p| i + p) else {
+            return block.to_string();
+        };
+        out.push_str(&block[i..eq]);
+        out.push_str("=\"");
+        let vstart = eq + 2;
+        let Some(vend) = value_end(bytes, vstart) else {
+            return block.to_string();
+        };
+        out.push_str(&escape_label_value(&block[vstart..vend]));
+        out.push('"');
+        i = vend + 1;
+        if i < bytes.len() {
+            // the `,` separator before the next pair
+            out.push(',');
+            i += 1;
+        }
+    }
+    out
+}
+
 fn fmt_num(v: f64) -> String {
     if v.fract() == 0.0 && v.abs() < 1e15 {
         format!("{}", v as i64)
@@ -344,6 +430,7 @@ pub fn prometheus_from_snapshot(snap: &Value) -> String {
         if let Some(map) = snap.get(section).and_then(|v| v.as_object()) {
             for (name, v) in map {
                 let (base, labels) = split_labels(name);
+                let labels = escape_label_block(labels);
                 type_line(&mut out, base, kind);
                 let value = fmt_num(v.as_f64().unwrap_or(0.0));
                 if labels.is_empty() {
@@ -357,6 +444,7 @@ pub fn prometheus_from_snapshot(snap: &Value) -> String {
     if let Some(map) = snap.get("histograms").and_then(|v| v.as_object()) {
         for (name, h) in map {
             let (base, labels) = split_labels(name);
+            let labels = escape_label_block(labels);
             type_line(&mut out, base, "histogram");
             let bounds: Vec<f64> = h
                 .get("bounds")
@@ -489,5 +577,39 @@ mod tests {
         assert_eq!(m.steps.get(), s0 + 16);
         assert!(m.batches.get() >= 2);
         assert!(m.auto_resets.get() >= 2);
+    }
+
+    #[test]
+    fn exec_metrics_record_latency_from_span_timestamps() {
+        let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+        let m = ExecMetrics::for_executor("test-latency");
+        let c0 = m.latency.count();
+        m.record_batch_timed(8, 0, 1_000_000, 4_500_000); // 3.5 ms
+        assert_eq!(m.latency.count(), c0 + 1);
+        assert!(m.latency.sum() >= 3_500);
+        let text = render_prometheus();
+        assert!(
+            text.contains("cairl_batch_latency_us_bucket{exec=\"test-latency\",le=\"5000\"}"),
+            "{text}"
+        );
+    }
+
+    #[test]
+    fn prometheus_escapes_hostile_label_values() {
+        let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+        counter("test_escape_total{env=\"My\\\"Env\\chaos\",lane=\"0\"}").add(1);
+        histogram("test_escape_hist{env=\"a\\\"b\"}", &[1]).record(1);
+        let text = render_prometheus();
+        assert!(
+            text.contains("test_escape_total{env=\"My\\\\\\\"Env\\\\chaos\",lane=\"0\"} "),
+            "{text}"
+        );
+        assert!(
+            text.contains("test_escape_hist_bucket{env=\"a\\\\\\\"b\",le=\"1\"}"),
+            "{text}"
+        );
+        // Benign labels render byte-identically to before.
+        assert_eq!(escape_label_block("exec=\"pool\""), "exec=\"pool\"");
+        assert_eq!(escape_label_block("a=\"x\",b=\"y\""), "a=\"x\",b=\"y\"");
     }
 }

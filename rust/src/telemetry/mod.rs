@@ -1,7 +1,7 @@
-//! Fleet observability: the zero-allocation metrics core and the
-//! deterministic trajectory tape.
+//! Fleet observability: the zero-allocation metrics core, distributed
+//! batch tracing, and the deterministic trajectory tape.
 //!
-//! Two halves, both opt-in at the edges and free on the hot path:
+//! Three parts, all opt-in at the edges and free on the hot path:
 //!
 //! * [`metrics`] — a process-wide registry of counters, gauges and
 //!   fixed-bucket histograms.  Handles are grabbed once at construction
@@ -17,6 +17,15 @@
 //!   (`cairl metrics`, `cairl run --metrics FILE`).  A process-wide
 //!   enable gate ([`metrics::set_enabled`]) exists for A/B overhead
 //!   measurement (`benches/ablation_dispatch.rs` asserts the cost).
+//! * [`trace`] — per-thread ring buffers of POD span records covering
+//!   every layer a batch crosses (dispatch, barrier/slot handoff,
+//!   kernel, affine epilogue, shard encode → wire → server decode →
+//!   server step → reassembly).  Disabled (the default) it costs one
+//!   load + branch per site; `cairl run --trace FILE` exports Chrome
+//!   `trace_event` JSON and `cairl trace --summarize FILE` prints the
+//!   critical-path attribution table.  Shard protocol v6 carries a
+//!   16-byte trace context so server-side spans stitch under the
+//!   client's batch spans — one causally-ordered timeline per run.
 //! * [`tape`] — byte-stable, length-prefixed, checksummed binary
 //!   trajectory tapes.  `cairl run --record FILE` captures the header
 //!   (registry spec, seed, lane layout) plus every batch's actions and
@@ -34,6 +43,7 @@
 
 pub mod metrics;
 pub mod tape;
+pub mod trace;
 
 pub use metrics::{
     counter, enabled, gauge, histogram, prometheus_from_snapshot, render_prometheus,

@@ -1,0 +1,789 @@
+//! Distributed batch tracing: zero-allocation span recording, Chrome
+//! `trace_event` export, and critical-path attribution.
+//!
+//! The metrics registry (PR 8) counts *how many* events happened; this
+//! module answers **where a batch's microseconds went**.  Every layer a
+//! batch crosses — executor dispatch, the sync barrier / async slot
+//! handoff, each group's `step_batch`, the affine epilogue, shard frame
+//! encode, the wire, the server's decode and step, reply reassembly —
+//! records one POD [`SpanRecord`] into a per-thread fixed-capacity ring
+//! buffer.  Design constraints mirror `metrics.rs`:
+//!
+//! 1. **Disabled = one relaxed load + branch.**  Tracing is opt-in
+//!    (`cairl run --trace FILE`, or [`set_enabled`]); every record site
+//!    checks [`enabled`] first and touches no clock otherwise.
+//! 2. **Zero steady-state allocation.**  Rings are pre-sized at first
+//!    use per thread; recording writes a 48-byte POD into a slot behind
+//!    an uncontended mutex.  Overflow overwrites the oldest record and
+//!    increments `cairl_trace_spans_dropped_total`.
+//! 3. **Never perturbs determinism.**  Instrumentation only reads
+//!    clocks and writes rings; episode-return logs are byte-identical
+//!    with tracing on or off (pinned in `rust/tests/trace.rs`).
+//!
+//! Cross-shard stitching: shard protocol v6 carries a 16-byte
+//! [`TraceCtx`] on every request frame, so a server can parent its
+//! `decode`/`server_step` spans under the client's batch span, and
+//! replies carry the measured server durations back so the client can
+//! synthesize those spans into its own timeline even when the server is
+//! a separate process (see `docs/shard-protocol.md` §3.3).
+//!
+//! Export: [`write_chrome_trace`] drains all rings into Chrome
+//! `trace_event` JSON (loads in Perfetto / `chrome://tracing`, one
+//! track per recording thread and per shard); [`read_chrome_trace`] +
+//! [`summarize`] turn a trace file back into the attribution table
+//! behind `cairl trace --summarize`.
+
+use std::cell::{Cell, RefCell};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::core::error::{CairlError, Result};
+use crate::core::json::{self, Value};
+use crate::telemetry::metrics::{counter, Counter};
+
+/// Process-wide trace gate.  **Disabled by default** — unlike metrics,
+/// tracing is a diagnostic you switch on for a run.
+static TRACE_ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Turn span recording on or off process-wide.  While disabled every
+/// record site is a single relaxed load plus an untaken branch.
+pub fn set_enabled(on: bool) {
+    TRACE_ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Whether span recording is currently enabled.
+#[inline]
+pub fn enabled() -> bool {
+    TRACE_ENABLED.load(Ordering::Relaxed)
+}
+
+/// `shard` value for spans recorded by the local process rather than on
+/// behalf of a numbered shard connection.
+pub const SHARD_LOCAL: u32 = u32::MAX;
+
+/// Monotonic nanoseconds since the first trace clock read in this
+/// process.  All spans in one process share this epoch, which is what
+/// makes their intervals comparable.
+pub fn now_ns() -> u64 {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    let epoch = *EPOCH.get_or_init(Instant::now);
+    epoch.elapsed().as_nanos() as u64
+}
+
+static NEXT_SPAN: AtomicU64 = AtomicU64::new(1);
+static NEXT_TRACE: AtomicU64 = AtomicU64::new(1);
+
+/// Allocate a fresh nonzero span id (process-unique, monotone).
+pub fn next_span_id() -> u64 {
+    NEXT_SPAN.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Allocate a fresh nonzero trace id.  One executor = one trace: every
+/// batch it steps shares the id, which is what lets a whole run load as
+/// a single causally-ordered timeline.
+pub fn new_trace_id() -> u64 {
+    NEXT_TRACE.fetch_add(1, Ordering::Relaxed)
+}
+
+/// The 16-byte trace context carried on shard protocol v6 request
+/// frames: which trace, and which client-side span to parent under.
+/// All-zero (`TraceCtx::NONE`) means "untraced".
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceCtx {
+    /// Trace the batch belongs to (0 = untraced).
+    pub trace_id: u64,
+    /// Client-side parent span id (0 = root).
+    pub span_id: u64,
+}
+
+impl TraceCtx {
+    /// The untraced context (all zeroes on the wire).
+    pub const NONE: TraceCtx = TraceCtx { trace_id: 0, span_id: 0 };
+
+    /// Whether this context names no trace.
+    pub fn is_none(&self) -> bool {
+        self.trace_id == 0
+    }
+}
+
+/// Span kinds, one per pipeline layer a batch crosses.  The `u8` repr
+/// keeps [`SpanRecord`] POD.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum SpanKind {
+    /// Root span of one executor batch (`step_into` / pipelined
+    /// submit→reply lifetime).
+    Batch = 0,
+    /// Executor plan/dispatch: command broadcast or mailbox sends.
+    Dispatch = 1,
+    /// Sync-pool barrier wait (`await_acks`).
+    Queue = 2,
+    /// One lane group's `step_batch` kernel call.
+    Kernel = 3,
+    /// The fused affine epilogue pass over a group's observations.
+    Epilogue = 4,
+    /// Async-pool slot handoff: ready-queue collect + slot copy-out.
+    Slot = 5,
+    /// Shard client frame encode + socket send.
+    Encode = 6,
+    /// Send-complete to reply-received on one shard connection.
+    Wire = 7,
+    /// Server-side frame decode (measured remotely, stitched locally).
+    Decode = 8,
+    /// Server-side executor step (measured remotely, stitched locally).
+    ServerStep = 9,
+    /// Reply scatter: tail-padded obs + transition copy-out.
+    Reassemble = 10,
+    /// Root span of one reset broadcast.
+    Reset = 11,
+}
+
+/// Every kind, in attribution-table display order.
+pub const SPAN_KINDS: [SpanKind; 12] = [
+    SpanKind::Batch,
+    SpanKind::Dispatch,
+    SpanKind::Queue,
+    SpanKind::Slot,
+    SpanKind::Kernel,
+    SpanKind::Epilogue,
+    SpanKind::Encode,
+    SpanKind::Wire,
+    SpanKind::Decode,
+    SpanKind::ServerStep,
+    SpanKind::Reassemble,
+    SpanKind::Reset,
+];
+
+impl SpanKind {
+    /// Stable lowercase name (the Chrome event `name` and the
+    /// attribution-table row label).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SpanKind::Batch => "batch",
+            SpanKind::Dispatch => "dispatch",
+            SpanKind::Queue => "queue",
+            SpanKind::Kernel => "kernel",
+            SpanKind::Epilogue => "epilogue",
+            SpanKind::Slot => "slot",
+            SpanKind::Encode => "encode",
+            SpanKind::Wire => "wire",
+            SpanKind::Decode => "decode",
+            SpanKind::ServerStep => "server_step",
+            SpanKind::Reassemble => "reassemble",
+            SpanKind::Reset => "reset",
+        }
+    }
+
+    /// Inverse of [`SpanKind::as_str`].
+    pub fn from_str(s: &str) -> Option<SpanKind> {
+        SPAN_KINDS.iter().copied().find(|k| k.as_str() == s)
+    }
+}
+
+/// One recorded span: plain old data, 48 bytes, no heap.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SpanRecord {
+    /// This span's id (nonzero).
+    pub span_id: u64,
+    /// Parent span id (0 = root).
+    pub parent: u64,
+    /// Trace the span belongs to (nonzero for recorded spans).
+    pub trace_id: u64,
+    /// Start, nanoseconds on the [`now_ns`] clock.
+    pub t_start_ns: u64,
+    /// End, nanoseconds on the [`now_ns`] clock.
+    pub t_end_ns: u64,
+    /// Lane-group (or shard-plan) index the span covers.
+    pub lane_group: u32,
+    /// Shard connection index, or [`SHARD_LOCAL`].
+    pub shard: u32,
+    /// Which pipeline layer this span measures.
+    pub kind: SpanKind,
+}
+
+/// Default per-thread ring capacity (spans).  48 bytes each, so the
+/// default is ~768 KiB per recording thread.
+pub const DEFAULT_RING_CAPACITY: usize = 16_384;
+
+static RING_CAPACITY: AtomicUsize = AtomicUsize::new(DEFAULT_RING_CAPACITY);
+
+/// Set the capacity used by rings created *after* this call (existing
+/// rings keep their size).  Exists for overflow tests and
+/// memory-constrained deployments; clamped to ≥ 2.
+pub fn set_ring_capacity(cap: usize) {
+    RING_CAPACITY.store(cap.max(2), Ordering::Relaxed);
+}
+
+/// Total spans overwritten by ring overflow, process-wide.  Mirrored
+/// into the `cairl_trace_spans_dropped_total` metrics counter.
+pub fn spans_dropped() -> u64 {
+    DROPPED.load(Ordering::Relaxed)
+}
+
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+
+struct Ring {
+    cap: usize,
+    buf: Vec<SpanRecord>,
+    head: usize, // index of the oldest record once the ring is full
+}
+
+impl Ring {
+    fn push(&mut self, rec: SpanRecord) -> bool {
+        if self.buf.len() < self.cap {
+            self.buf.push(rec);
+            false
+        } else {
+            self.buf[self.head] = rec;
+            self.head = (self.head + 1) % self.cap;
+            true
+        }
+    }
+
+    fn drain_ordered(&mut self) -> Vec<SpanRecord> {
+        let mut out = Vec::with_capacity(self.buf.len());
+        out.extend_from_slice(&self.buf[self.head..]);
+        out.extend_from_slice(&self.buf[..self.head]);
+        self.buf.clear();
+        self.head = 0;
+        out
+    }
+}
+
+fn ring_registry() -> &'static Mutex<Vec<Arc<Mutex<Ring>>>> {
+    static REGISTRY: OnceLock<Mutex<Vec<Arc<Mutex<Ring>>>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+struct RingSlot {
+    tid: u32,
+    ring: Arc<Mutex<Ring>>,
+    dropped: Counter,
+}
+
+thread_local! {
+    static RING: RefCell<Option<RingSlot>> = const { RefCell::new(None) };
+    static CURRENT: Cell<(u64, u64)> = const { Cell::new((0, 0)) };
+}
+
+/// Set this thread's implicit `(trace_id, parent span)` context.  Deep
+/// layers with no ctx parameter of their own (the fused epilogue, a
+/// worker's kernel call) parent their spans under [`current`].
+pub fn set_current(trace_id: u64, span_id: u64) {
+    CURRENT.with(|c| c.set((trace_id, span_id)));
+}
+
+/// This thread's implicit `(trace_id, parent span)` context; `(0, 0)`
+/// when none is set.
+pub fn current() -> (u64, u64) {
+    CURRENT.with(|c| c.get())
+}
+
+/// Record one finished span into this thread's ring.  No-op while
+/// tracing is disabled (one load + branch).  First call on a thread
+/// allocates and registers its ring (the only allocating step).
+#[inline]
+pub fn record(rec: SpanRecord) {
+    if !enabled() {
+        return;
+    }
+    record_always(rec);
+}
+
+fn record_always(rec: SpanRecord) {
+    RING.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        let s = slot.get_or_insert_with(|| {
+            let cap = RING_CAPACITY.load(Ordering::Relaxed);
+            let ring = Arc::new(Mutex::new(Ring {
+                cap,
+                buf: Vec::with_capacity(cap),
+                head: 0,
+            }));
+            let mut reg = ring_registry().lock().unwrap_or_else(|e| e.into_inner());
+            let tid = reg.len() as u32;
+            reg.push(Arc::clone(&ring));
+            RingSlot {
+                tid,
+                ring,
+                dropped: counter("cairl_trace_spans_dropped_total"),
+            }
+        });
+        let overwrote = {
+            let mut ring = s.ring.lock().unwrap_or_else(|e| e.into_inner());
+            ring.push(rec)
+        };
+        if overwrote {
+            DROPPED.fetch_add(1, Ordering::Relaxed);
+            s.dropped.inc();
+        }
+    });
+}
+
+/// Run `f` inside a freshly-allocated child span of `(trace_id,
+/// parent)`; the new span is this thread's [`current`] context for the
+/// duration.  When tracing is disabled or `trace_id` is zero this is
+/// just `f()` after one load + branch.
+pub fn with_span<R>(
+    kind: SpanKind,
+    trace_id: u64,
+    parent: u64,
+    lane_group: u32,
+    shard: u32,
+    f: impl FnOnce() -> R,
+) -> R {
+    if !enabled() || trace_id == 0 {
+        return f();
+    }
+    let span_id = next_span_id();
+    let prev = current();
+    set_current(trace_id, span_id);
+    let t_start_ns = now_ns();
+    let out = f();
+    let t_end_ns = now_ns();
+    set_current(prev.0, prev.1);
+    record(SpanRecord {
+        span_id,
+        parent,
+        trace_id,
+        t_start_ns,
+        t_end_ns,
+        lane_group,
+        shard,
+        kind,
+    });
+    out
+}
+
+/// Drain every thread's ring, oldest-first per thread, returning
+/// `(recording thread index, span)` pairs.  Rings stay registered and
+/// reusable; only their contents move out.
+pub fn drain() -> Vec<(u32, SpanRecord)> {
+    let rings: Vec<Arc<Mutex<Ring>>> = {
+        let reg = ring_registry().lock().unwrap_or_else(|e| e.into_inner());
+        reg.iter().map(Arc::clone).collect()
+    };
+    let mut out = Vec::new();
+    for (tid, ring) in rings.iter().enumerate() {
+        let spans = ring.lock().unwrap_or_else(|e| e.into_inner()).drain_ordered();
+        out.extend(spans.into_iter().map(|s| (tid as u32, s)));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Chrome trace_event export
+// ---------------------------------------------------------------------------
+
+/// Render spans as Chrome `trace_event` JSON (complete `"X"` events,
+/// microsecond timestamps).  Local spans land on `pid 0`, one `tid`
+/// per recording thread; spans attributed to shard `s` (synthesized or
+/// server-recorded) land on `pid s + 1` — one track per thread/shard.
+/// `args` carries the raw record fields, including exact nanosecond
+/// timestamps, so [`read_chrome_trace`] round-trips losslessly.
+pub fn chrome_trace_json(spans: &[(u32, SpanRecord)]) -> String {
+    let mut out = String::with_capacity(64 + spans.len() * 220);
+    out.push_str("{\"displayTimeUnit\":\"ns\",\"traceEvents\":[");
+    let mut first = true;
+    let mut pids: Vec<u32> = Vec::new();
+    for (tid, s) in spans {
+        let (pid, tid) = if s.shard == SHARD_LOCAL {
+            (0u32, *tid + 1)
+        } else {
+            (s.shard + 1, 0u32)
+        };
+        if !pids.contains(&pid) {
+            pids.push(pid);
+        }
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        let ts = s.t_start_ns as f64 / 1000.0;
+        let dur = s.t_end_ns.saturating_sub(s.t_start_ns) as f64 / 1000.0;
+        out.push_str(&format!(
+            "{{\"name\":\"{}\",\"cat\":\"cairl\",\"ph\":\"X\",\"ts\":{ts:.3},\
+             \"dur\":{dur:.3},\"pid\":{pid},\"tid\":{tid},\"args\":{{\
+             \"span_id\":{},\"parent\":{},\"trace_id\":{},\"kind\":\"{}\",\
+             \"lane_group\":{},\"shard\":{},\"t_start_ns\":{},\"t_end_ns\":{}}}}}",
+            s.kind.as_str(),
+            s.span_id,
+            s.parent,
+            s.trace_id,
+            s.kind.as_str(),
+            s.lane_group,
+            s.shard,
+            s.t_start_ns,
+            s.t_end_ns,
+        ));
+    }
+    pids.sort_unstable();
+    for pid in pids {
+        let name = if pid == 0 {
+            "client".to_string()
+        } else {
+            format!("shard {}", pid - 1)
+        };
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        out.push_str(&format!(
+            "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{pid},\"tid\":0,\
+             \"args\":{{\"name\":\"{name}\"}}}}"
+        ));
+    }
+    out.push_str("]}\n");
+    out
+}
+
+/// Write `bytes` to `path` atomically: a sibling temp file is written
+/// first, then renamed over the target, so readers (and a SIGTERM
+/// drain) never observe a torn file.
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> std::io::Result<()> {
+    let mut tmp = path.as_os_str().to_owned();
+    tmp.push(".tmp");
+    let tmp = std::path::PathBuf::from(tmp);
+    std::fs::write(&tmp, bytes)?;
+    std::fs::rename(&tmp, path)
+}
+
+/// Drain every ring and write the Chrome trace JSON to `path`
+/// atomically.  Returns the number of spans written.
+pub fn write_chrome_trace(path: &Path) -> std::io::Result<usize> {
+    let spans = drain();
+    write_atomic(path, chrome_trace_json(&spans).as_bytes())?;
+    Ok(spans.len())
+}
+
+/// Parse a Chrome trace file written by [`write_chrome_trace`] back
+/// into span records (metadata events are skipped; `args` carries the
+/// exact nanosecond fields).
+pub fn read_chrome_trace(path: &Path) -> Result<Vec<SpanRecord>> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| CairlError::Config(format!("trace file {}: {e}", path.display())))?;
+    let doc = json::parse(&text)?;
+    let events = doc
+        .get("traceEvents")
+        .and_then(|v| v.as_array())
+        .ok_or_else(|| CairlError::Config("trace file has no traceEvents array".into()))?;
+    let mut out = Vec::new();
+    for ev in events {
+        let Some(args) = ev.get("args") else { continue };
+        let Some(t_start) = args.get("t_start_ns").and_then(Value::as_f64) else {
+            continue; // metadata event
+        };
+        let kind_name = args.get("kind").and_then(Value::as_str).unwrap_or("");
+        let Some(kind) = SpanKind::from_str(kind_name) else {
+            return Err(CairlError::Config(format!("unknown span kind {kind_name:?}")));
+        };
+        let num = |k: &str| args.get(k).and_then(Value::as_f64).unwrap_or(0.0);
+        out.push(SpanRecord {
+            span_id: num("span_id") as u64,
+            parent: num("parent") as u64,
+            trace_id: num("trace_id") as u64,
+            t_start_ns: t_start as u64,
+            t_end_ns: num("t_end_ns") as u64,
+            lane_group: num("lane_group") as u32,
+            shard: num("shard") as u32,
+            kind,
+        });
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Critical-path attribution
+// ---------------------------------------------------------------------------
+
+fn percentile_us(sorted_ns: &[u64], q: f64) -> f64 {
+    if sorted_ns.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted_ns.len() as f64 - 1.0) * q).round() as usize;
+    sorted_ns[idx.min(sorted_ns.len() - 1)] as f64 / 1000.0
+}
+
+/// Render the critical-path attribution table for a set of spans: per
+/// span kind, count, total time, share of total batch latency, and
+/// p50/p95/p99 durations.  The `wire` row is net of the stitched
+/// server-side `decode`/`server_step` time (those are sub-intervals of
+/// the client's wire window), so the kinds tile without double
+/// counting.  The closing coverage line reports how much of total
+/// batch latency the direct child spans account for — the ≥95%
+/// acceptance bar.
+pub fn summarize(spans: &[SpanRecord]) -> String {
+    let mut out = String::new();
+    let batches: Vec<&SpanRecord> = spans.iter().filter(|s| s.kind == SpanKind::Batch).collect();
+    if batches.is_empty() {
+        out.push_str("no batch spans in trace\n");
+        return out;
+    }
+    let total_batch_ns: u64 = batches
+        .iter()
+        .map(|s| s.t_end_ns.saturating_sub(s.t_start_ns))
+        .sum();
+    let total_by_kind = |kind: SpanKind| -> u64 {
+        spans
+            .iter()
+            .filter(|s| s.kind == kind)
+            .map(|s| s.t_end_ns.saturating_sub(s.t_start_ns))
+            .sum()
+    };
+    out.push_str(&format!(
+        "critical-path attribution ({} batches, {:.3} ms total batch latency)\n\n",
+        batches.len(),
+        total_batch_ns as f64 / 1e6
+    ));
+    out.push_str(&format!(
+        "{:<12} {:>8} {:>12} {:>9} {:>10} {:>10} {:>10}\n",
+        "kind", "count", "total ms", "% batch", "p50 us", "p95 us", "p99 us"
+    ));
+    for kind in SPAN_KINDS {
+        let mut durs: Vec<u64> = spans
+            .iter()
+            .filter(|s| s.kind == kind)
+            .map(|s| s.t_end_ns.saturating_sub(s.t_start_ns))
+            .collect();
+        if durs.is_empty() {
+            continue;
+        }
+        durs.sort_unstable();
+        let raw_total: u64 = durs.iter().sum();
+        // Server-side time is a sub-interval of the client wire window:
+        // report wire net of it so the rows tile.
+        let attributed = if kind == SpanKind::Wire {
+            raw_total.saturating_sub(
+                total_by_kind(SpanKind::Decode) + total_by_kind(SpanKind::ServerStep),
+            )
+        } else {
+            raw_total
+        };
+        let pct = if kind == SpanKind::Batch {
+            100.0
+        } else {
+            100.0 * attributed as f64 / total_batch_ns.max(1) as f64
+        };
+        out.push_str(&format!(
+            "{:<12} {:>8} {:>12.3} {:>9.1} {:>10.1} {:>10.1} {:>10.1}\n",
+            kind.as_str(),
+            durs.len(),
+            attributed as f64 / 1e6,
+            pct,
+            percentile_us(&durs, 0.50),
+            percentile_us(&durs, 0.95),
+            percentile_us(&durs, 0.99),
+        ));
+    }
+    let cov = coverage(spans);
+    out.push_str(&format!(
+        "\ncritical-path coverage: {:.1}% of batch latency attributed to child spans\n",
+        cov * 100.0
+    ));
+    out
+}
+
+/// Fraction (0..=1) of total batch-span latency covered by the union of
+/// each batch's direct child intervals, clipped to the batch window.
+/// Interval union — not a sum — so overlapping children (worker kernels
+/// inside the barrier wait, server spans inside the wire window) never
+/// double count.
+pub fn coverage(spans: &[SpanRecord]) -> f64 {
+    let mut total: u64 = 0;
+    let mut covered: u64 = 0;
+    for b in spans.iter().filter(|s| s.kind == SpanKind::Batch) {
+        let dur = b.t_end_ns.saturating_sub(b.t_start_ns);
+        total += dur;
+        let mut ivals: Vec<(u64, u64)> = spans
+            .iter()
+            .filter(|s| s.parent == b.span_id && s.trace_id == b.trace_id)
+            .map(|s| (s.t_start_ns.max(b.t_start_ns), s.t_end_ns.min(b.t_end_ns)))
+            .filter(|(a, z)| z > a)
+            .collect();
+        ivals.sort_unstable();
+        let mut cur: Option<(u64, u64)> = None;
+        for (a, z) in ivals {
+            match cur {
+                None => cur = Some((a, z)),
+                Some((ca, cz)) if a <= cz => cur = Some((ca, cz.max(z))),
+                Some((ca, cz)) => {
+                    covered += cz - ca;
+                    cur = Some((a, z));
+                }
+            }
+        }
+        if let Some((ca, cz)) = cur {
+            covered += cz - ca;
+        }
+    }
+    if total == 0 {
+        0.0
+    } else {
+        covered as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The trace gate and rings are process-global; unit tests that
+    /// enable tracing serialise and filter drained spans by their own
+    /// trace id (concurrent sibling tests may record too).
+    static GATE: Mutex<()> = Mutex::new(());
+
+    fn rec(kind: SpanKind, tr: u64, span_id: u64, parent: u64, t0: u64, t1: u64) -> SpanRecord {
+        SpanRecord {
+            span_id,
+            parent,
+            trace_id: tr,
+            t_start_ns: t0,
+            t_end_ns: t1,
+            lane_group: 0,
+            shard: SHARD_LOCAL,
+            kind,
+        }
+    }
+
+    #[test]
+    fn disabled_record_is_a_noop_and_with_span_still_runs() {
+        let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+        set_enabled(false);
+        let tid = new_trace_id();
+        record(rec(SpanKind::Batch, tid, next_span_id(), 0, 0, 10));
+        let mut ran = false;
+        with_span(SpanKind::Kernel, tid, 0, 0, SHARD_LOCAL, || ran = true);
+        assert!(ran);
+        let spans: Vec<_> = drain().into_iter().filter(|(_, s)| s.trace_id == tid).collect();
+        assert!(spans.is_empty(), "disabled tracing must record nothing");
+    }
+
+    #[test]
+    fn with_span_nests_and_restores_current() {
+        let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+        set_enabled(true);
+        let tid = new_trace_id();
+        let root = next_span_id();
+        with_span(SpanKind::Kernel, tid, root, 3, SHARD_LOCAL, || {
+            let (ct, cp) = current();
+            assert_eq!(ct, tid);
+            assert_ne!(cp, root, "current() should be the new child span");
+            with_span(SpanKind::Epilogue, ct, cp, 3, SHARD_LOCAL, || {});
+        });
+        assert_eq!(current(), (0, 0), "context restored after the span");
+        set_enabled(false);
+        let spans: Vec<SpanRecord> = drain()
+            .into_iter()
+            .map(|(_, s)| s)
+            .filter(|s| s.trace_id == tid)
+            .collect();
+        assert_eq!(spans.len(), 2);
+        let kernel = spans.iter().find(|s| s.kind == SpanKind::Kernel).unwrap();
+        let epi = spans.iter().find(|s| s.kind == SpanKind::Epilogue).unwrap();
+        assert_eq!(kernel.parent, root);
+        assert_eq!(epi.parent, kernel.span_id);
+        assert!(kernel.t_start_ns <= epi.t_start_ns && epi.t_end_ns <= kernel.t_end_ns);
+    }
+
+    #[test]
+    fn ring_overflow_drops_oldest_and_counts() {
+        let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+        // A fresh thread gets a fresh ring at the reduced capacity.
+        set_ring_capacity(4);
+        let tid = new_trace_id();
+        let handle = std::thread::spawn(move || {
+            set_enabled(true);
+            for i in 0..6u64 {
+                record(rec(SpanKind::Kernel, tid, 100 + i, 0, i, i + 1));
+            }
+            set_enabled(false);
+        });
+        handle.join().unwrap();
+        set_ring_capacity(DEFAULT_RING_CAPACITY);
+        let spans: Vec<SpanRecord> = drain()
+            .into_iter()
+            .map(|(_, s)| s)
+            .filter(|s| s.trace_id == tid)
+            .collect();
+        let ids: Vec<u64> = spans.iter().map(|s| s.span_id).collect();
+        assert_eq!(ids, vec![102, 103, 104, 105], "oldest two dropped, order kept");
+        assert!(spans_dropped() >= 2);
+    }
+
+    #[test]
+    fn chrome_json_round_trips_and_is_valid_json() {
+        let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+        let tid = new_trace_id();
+        let mut server = rec(SpanKind::ServerStep, tid, 3, 1, 2_000, 3_000);
+        server.shard = 2;
+        let spans = vec![
+            (0u32, rec(SpanKind::Batch, tid, 1, 0, 1_000, 9_000)),
+            (0u32, rec(SpanKind::Kernel, tid, 2, 1, 1_500, 7_000)),
+            (1u32, server),
+        ];
+        let text = chrome_trace_json(&spans);
+        let doc = json::parse(&text).expect("valid JSON");
+        let events = doc.get("traceEvents").and_then(Value::as_array).unwrap();
+        // 3 spans + 2 process_name metadata records (pid 0 and pid 3).
+        assert_eq!(events.len(), 5);
+
+        let dir = std::env::temp_dir().join(format!("cairl_trace_rt_{tid}"));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.json");
+        write_atomic(&path, text.as_bytes()).unwrap();
+        let parsed = read_chrome_trace(&path).unwrap();
+        assert_eq!(parsed.len(), 3);
+        assert_eq!(parsed[0], spans[0].1);
+        assert_eq!(parsed[2].shard, 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn summarize_attributes_and_covers() {
+        let tid = 7;
+        // batch [0,100]; dispatch [0,10]; queue [10,95]; kernel [20,90]
+        // inside queue; reassemble [95,100].
+        let spans = vec![
+            rec(SpanKind::Batch, tid, 1, 0, 0, 100_000),
+            rec(SpanKind::Dispatch, tid, 2, 1, 0, 10_000),
+            rec(SpanKind::Queue, tid, 3, 1, 10_000, 95_000),
+            rec(SpanKind::Kernel, tid, 4, 3, 20_000, 90_000),
+            rec(SpanKind::Reassemble, tid, 5, 1, 95_000, 100_000),
+        ];
+        let table = summarize(&spans);
+        assert!(table.contains("batch"), "{table}");
+        assert!(table.contains("kernel"), "{table}");
+        let cov = coverage(&spans);
+        assert!((cov - 1.0).abs() < 1e-9, "children tile the batch: {cov}");
+    }
+
+    #[test]
+    fn wire_row_is_net_of_server_time() {
+        let tid = 9;
+        let spans = vec![
+            rec(SpanKind::Batch, tid, 1, 0, 0, 100_000),
+            rec(SpanKind::Wire, tid, 2, 1, 0, 80_000),
+            rec(SpanKind::Decode, tid, 3, 1, 10_000, 20_000),
+            rec(SpanKind::ServerStep, tid, 4, 1, 20_000, 60_000),
+        ];
+        let table = summarize(&spans);
+        // wire total 80us minus 10us decode minus 40us server_step = 30us
+        // = 30% of the 100us batch.
+        let wire_line = table.lines().find(|l| l.starts_with("wire")).unwrap();
+        assert!(wire_line.contains("30.0"), "{wire_line}");
+    }
+
+    #[test]
+    fn coverage_ignores_out_of_window_children() {
+        let tid = 11;
+        let spans = vec![
+            rec(SpanKind::Batch, tid, 1, 0, 50_000, 100_000),
+            rec(SpanKind::Kernel, tid, 2, 1, 0, 10_000), // entirely before
+            rec(SpanKind::Kernel, tid, 3, 1, 50_000, 75_000),
+        ];
+        let cov = coverage(&spans);
+        assert!((cov - 0.5).abs() < 1e-9, "{cov}");
+    }
+}

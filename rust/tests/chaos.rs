@@ -141,7 +141,7 @@ fn ping_round_trips_and_counts_heartbeats() {
         "each probe must count into cairl_heartbeats_sent_total"
     );
     // The probed connection still serves batches afterwards.
-    client.send_reset().unwrap();
+    client.send_reset(cairl::telemetry::trace::TraceCtx::NONE).unwrap();
     let obs = client.recv_obs().unwrap();
     assert_eq!(obs.len(), client.obs_dim() * client.num_lanes());
     drop(client);

@@ -1,0 +1,404 @@
+//! Integration: distributed batch tracing (ISSUE 10).
+//!
+//! The tracing contract: spans recorded across every layer a batch
+//! crosses form a well-formed tree under one trace id per executor —
+//! including across the shard transport, where the client stitches
+//! server-measured `decode`/`server_step` spans into its own timeline —
+//! and tracing **never perturbs execution**: episode-return logs are
+//! bit-identical with the recorder on and off, on every executor kind
+//! and thread count.  Ring overflow drops the oldest spans and counts
+//! them; corrupt or truncated wire trace contexts are protocol errors,
+//! never panics.
+//!
+//! Every test that toggles the process-wide gate serialises on one
+//! mutex and filters drained spans by its own trace ids, so the suite
+//! stays parallel-safe.
+
+mod common;
+
+use std::collections::{HashMap, HashSet};
+use std::io::Write;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::{Mutex, MutexGuard};
+use std::time::Duration;
+
+use cairl::coordinator::experiment::{
+    build_executor_with_kernel, run_batched_workload, ExecutorKind, KernelMode,
+};
+use cairl::coordinator::pool::BatchedExecutor;
+use cairl::shard::proto::{self, Msg, MsgRef};
+use cairl::shard::{ServeConfig, ShardPoolOptions, ShardServer, ShardedEnvPool};
+use cairl::telemetry::counter;
+use cairl::telemetry::trace::{self, SpanKind, SpanRecord, TraceCtx};
+use common::test_threads;
+
+const MIX: &str = "CartPole-v1?max_steps=25:4,MountainCar-v0?max_steps=30:4";
+const LANES: usize = 8;
+const SEED: u64 = 57;
+const STEPS_PER_LANE: u64 = 60;
+
+/// Tests that flip the process-wide tracing gate run one at a time.
+fn gate() -> MutexGuard<'static, ()> {
+    static GATE: Mutex<()> = Mutex::new(());
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Run `f` with tracing enabled and return its result plus every span
+/// recorded while it ran (rings are cleared first).
+fn traced<R>(f: impl FnOnce() -> R) -> (R, Vec<SpanRecord>) {
+    let _g = gate();
+    let _ = trace::drain();
+    trace::set_enabled(true);
+    let out = f();
+    trace::set_enabled(false);
+    let spans = trace::drain().into_iter().map(|(_, s)| s).collect();
+    (out, spans)
+}
+
+fn build(kind: &str, threads: usize, kernel: &str) -> Box<dyn BatchedExecutor> {
+    build_executor_with_kernel(
+        MIX,
+        ExecutorKind::parse(kind).unwrap(),
+        1, // lane counts come from the mixture spec
+        threads,
+        SEED,
+        &[],
+        KernelMode::parse(kernel).unwrap(),
+    )
+    .unwrap()
+}
+
+/// Unique listen address per in-process shard daemon.
+fn fresh_addr() -> String {
+    static NEXT: AtomicU32 = AtomicU32::new(0);
+    let k = NEXT.fetch_add(1, Ordering::Relaxed);
+    #[cfg(unix)]
+    {
+        let path = std::env::temp_dir().join(format!(
+            "cairl-trace-shard-{}-{k}.sock",
+            std::process::id()
+        ));
+        format!("unix://{}", path.display())
+    }
+    #[cfg(not(unix))]
+    {
+        let _ = k;
+        "tcp://127.0.0.1:0".to_string()
+    }
+}
+
+/// Assert every non-root parent in `spans` resolves to a span recorded
+/// under the same trace id.
+fn assert_parents_resolve(spans: &[SpanRecord]) {
+    let mut ids: HashMap<u64, HashSet<u64>> = HashMap::new();
+    for s in spans {
+        ids.entry(s.trace_id).or_default().insert(s.span_id);
+    }
+    for s in spans {
+        if s.parent != 0 {
+            assert!(
+                ids.get(&s.trace_id).is_some_and(|set| set.contains(&s.parent)),
+                "{:?} span {} parents under {}, absent from trace {}",
+                s.kind,
+                s.span_id,
+                s.parent,
+                s.trace_id
+            );
+        }
+    }
+}
+
+#[test]
+fn traced_pool_run_produces_a_well_formed_span_tree() {
+    let (_, spans) = traced(|| {
+        let mut exec = build("pool", 2, "fused");
+        run_batched_workload(exec.as_mut(), STEPS_PER_LANE, SEED);
+    });
+
+    let batches: Vec<&SpanRecord> =
+        spans.iter().filter(|s| s.kind == SpanKind::Batch).collect();
+    assert_eq!(batches.len() as u64, STEPS_PER_LANE, "one batch span per step_into");
+    let tid = batches[0].trace_id;
+    assert_ne!(tid, 0);
+    assert!(
+        batches.iter().all(|s| s.trace_id == tid && s.parent == 0),
+        "every batch span is a root of the executor's single trace"
+    );
+    assert!(
+        spans.iter().any(|s| s.kind == SpanKind::Reset && s.trace_id == tid && s.parent == 0),
+        "the reset broadcast records its own root span"
+    );
+    for kind in [SpanKind::Dispatch, SpanKind::Queue, SpanKind::Kernel] {
+        assert!(
+            spans.iter().any(|s| s.kind == kind && s.trace_id == tid),
+            "{kind:?} spans missing from the pool trace"
+        );
+    }
+    assert_parents_resolve(&spans);
+
+    // Worker kernel spans nest inside the batch window that dispatched
+    // them (same clock, so strict containment must hold).
+    let window: HashMap<u64, (u64, u64)> = batches
+        .iter()
+        .map(|b| (b.span_id, (b.t_start_ns, b.t_end_ns)))
+        .collect();
+    for s in spans.iter().filter(|s| s.kind == SpanKind::Kernel && s.trace_id == tid) {
+        let (t0, t1) = window[&s.parent];
+        assert!(
+            s.t_start_ns >= t0 && s.t_end_ns <= t1,
+            "kernel span [{}, {}] escapes its batch window [{t0}, {t1}]",
+            s.t_start_ns,
+            s.t_end_ns
+        );
+    }
+
+    // Satellite: the batch-latency histogram derives from the same
+    // timestamps as the batch spans.
+    let text = cairl::telemetry::render_prometheus();
+    assert!(
+        text.contains("cairl_batch_latency_us_bucket{exec=\"pool\""),
+        "traced batches must feed the per-executor latency histogram"
+    );
+}
+
+#[test]
+fn sharded_run_stitches_server_spans_under_one_trace_id() {
+    let (_, spans) = traced(|| {
+        let mut addrs = Vec::new();
+        let mut handles = Vec::new();
+        for _ in 0..2 {
+            let config = ServeConfig {
+                threads: 2,
+                ..ServeConfig::new("CartPole-v1")
+            };
+            let server = ShardServer::bind(&fresh_addr(), config).expect("bind shard");
+            addrs.push(server.local_addr());
+            handles.push(server.spawn());
+        }
+        let opts = ShardPoolOptions {
+            lanes: LANES,
+            base_seed: SEED,
+            ..Default::default()
+        };
+        let mut pool = ShardedEnvPool::connect_opts(&addrs, MIX, opts).unwrap();
+        run_batched_workload(&mut pool, STEPS_PER_LANE, SEED);
+        drop(pool);
+        handles.into_iter().for_each(|h| h.shutdown());
+    });
+
+    // The in-process daemons host executors of their own whose spans
+    // land in the same process registry under their own trace ids; the
+    // client pool's trace is the one whose wire spans cover the full
+    // workload.
+    let wire_tids: HashSet<u64> = spans
+        .iter()
+        .filter(|s| s.kind == SpanKind::Wire)
+        .map(|s| s.trace_id)
+        .collect();
+    let ours: Vec<u64> = wire_tids
+        .into_iter()
+        .filter(|tid| {
+            let batches = spans
+                .iter()
+                .filter(|s| s.kind == SpanKind::Batch && s.trace_id == *tid)
+                .count();
+            batches as u64 == STEPS_PER_LANE
+        })
+        .collect();
+    assert_eq!(ours.len(), 1, "exactly one trace owns the sharded workload");
+    let tid = ours[0];
+    let trace_spans: Vec<SpanRecord> =
+        spans.iter().filter(|s| s.trace_id == tid).copied().collect();
+
+    // Client and server sides of the same trace: the batch roots are
+    // local, the decode/server_step spans are attributed to both
+    // shards, and every parent resolves locally.
+    let batch_local = trace_spans
+        .iter()
+        .filter(|s| s.kind == SpanKind::Batch)
+        .all(|s| s.shard == trace::SHARD_LOCAL);
+    assert!(batch_local, "client batch roots must be local spans");
+    for shard in [0u32, 1] {
+        for kind in [SpanKind::Decode, SpanKind::ServerStep] {
+            assert!(
+                trace_spans.iter().any(|s| s.kind == kind && s.shard == shard),
+                "{kind:?} span missing for shard {shard}"
+            );
+        }
+    }
+    for kind in [SpanKind::Encode, SpanKind::Wire, SpanKind::Reassemble] {
+        assert!(
+            trace_spans.iter().any(|s| s.kind == kind),
+            "{kind:?} spans missing from the sharded trace"
+        );
+    }
+    assert_parents_resolve(&trace_spans);
+
+    // Stitched server spans stay inside their parent batch window.
+    let window: HashMap<u64, (u64, u64)> = trace_spans
+        .iter()
+        .filter(|s| s.kind == SpanKind::Batch)
+        .map(|b| (b.span_id, (b.t_start_ns, b.t_end_ns)))
+        .collect();
+    for s in trace_spans
+        .iter()
+        .filter(|s| matches!(s.kind, SpanKind::Decode | SpanKind::ServerStep))
+    {
+        let (t0, t1) = window[&s.parent];
+        assert!(
+            s.t_start_ns >= t0 && s.t_end_ns <= t1,
+            "{:?} span [{}, {}] escapes its batch window [{t0}, {t1}]",
+            s.kind,
+            s.t_start_ns,
+            s.t_end_ns
+        );
+    }
+
+    // Chrome-trace round trip is lossless, and the attribution summary
+    // names the stitched kinds with high critical-path coverage.
+    let path = std::env::temp_dir().join(format!("cairl-trace-{}.json", std::process::id()));
+    let pairs: Vec<(u32, SpanRecord)> = trace_spans.iter().map(|s| (0u32, *s)).collect();
+    trace::write_atomic(&path, trace::chrome_trace_json(&pairs).as_bytes()).unwrap();
+    let parsed = trace::read_chrome_trace(&path).unwrap();
+    assert_eq!(parsed, trace_spans, "Chrome JSON round-trip must be lossless");
+    let summary = trace::summarize(&parsed);
+    for label in ["batch", "wire", "decode", "server_step", "critical-path coverage:"] {
+        assert!(summary.contains(label), "summary missing {label:?}:\n{summary}");
+    }
+    let cov = trace::coverage(&parsed);
+    assert!(cov >= 0.90, "critical-path coverage {:.1}% below 90%", cov * 100.0);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn tracing_on_off_keeps_episode_returns_bit_identical() {
+    let _g = gate();
+    trace::set_enabled(false);
+    for kind in ["vec", "pool", "pool-async"] {
+        for &threads in &test_threads() {
+            for kernel in ["scalar", "fused"] {
+                let mut off_exec = build(kind, threads, kernel);
+                let off = run_batched_workload(off_exec.as_mut(), STEPS_PER_LANE, SEED)
+                    .episode_returns;
+                trace::set_enabled(true);
+                let mut on_exec = build(kind, threads, kernel);
+                let on = run_batched_workload(on_exec.as_mut(), STEPS_PER_LANE, SEED)
+                    .episode_returns;
+                trace::set_enabled(false);
+                let _ = trace::drain();
+                assert!(!off.is_empty(), "workload must complete episodes");
+                let off_bits: Vec<u32> = off.iter().map(|r| r.to_bits()).collect();
+                let on_bits: Vec<u32> = on.iter().map(|r| r.to_bits()).collect();
+                assert_eq!(
+                    on_bits, off_bits,
+                    "{kind}/{threads} threads/{kernel}: tracing perturbed the returns"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn ring_overflow_drops_oldest_and_counts() {
+    let _g = gate();
+    let _ = trace::drain();
+    trace::set_enabled(true);
+    let dropped_before = trace::spans_dropped();
+    let ctr = counter("cairl_trace_spans_dropped_total");
+    let ctr_before = ctr.get();
+
+    // A fresh thread gets a fresh ring, created at the test capacity.
+    let tid = trace::new_trace_id();
+    std::thread::spawn(move || {
+        trace::set_ring_capacity(8);
+        for i in 0..20u64 {
+            trace::record(SpanRecord {
+                span_id: 1000 + i,
+                parent: 0,
+                trace_id: tid,
+                t_start_ns: i,
+                t_end_ns: i + 1,
+                lane_group: 0,
+                shard: trace::SHARD_LOCAL,
+                kind: SpanKind::Kernel,
+            });
+        }
+        trace::set_ring_capacity(trace::DEFAULT_RING_CAPACITY);
+    })
+    .join()
+    .unwrap();
+    trace::set_enabled(false);
+
+    let kept: Vec<u64> = trace::drain()
+        .into_iter()
+        .map(|(_, s)| s)
+        .filter(|s| s.trace_id == tid)
+        .map(|s| s.span_id)
+        .collect();
+    let newest: Vec<u64> = (1012..1020).collect();
+    assert_eq!(kept, newest, "ring keeps the newest spans, drained oldest-first");
+    assert_eq!(trace::spans_dropped() - dropped_before, 12, "count every overwritten span");
+    assert!(ctr.get() - ctr_before >= 12, "dropped-span counter must advance");
+}
+
+#[test]
+fn corrupt_or_short_trace_ctx_is_a_protocol_error_not_a_panic() {
+    let ctx = TraceCtx {
+        trace_id: 0xdead,
+        span_id: 0xbeef,
+    };
+    // Frame layout: len(4) | version tag seq(4) ctx(16) ... | checksum.
+    // Flip each ctx byte of a Reset frame; every one must fail decode.
+    let frame = proto::encode(1, MsgRef::Reset { ctx });
+    for i in 10..26 {
+        let mut bad = frame.clone();
+        bad[i] ^= 0xff;
+        let mut cursor = &bad[..];
+        assert!(
+            proto::read_msg(&mut cursor).is_err(),
+            "ctx byte {i} corruption must not decode"
+        );
+    }
+    // A frame that ends mid-ctx is an error, not an out-of-range slice.
+    let mut cursor = &frame[..frame.len() - 10];
+    assert!(proto::read_msg(&mut cursor).is_err());
+
+    // End to end: a daemon fed a Hello whose ctx bytes are corrupted
+    // answers with a protocol Error (or hangs up) — and stays alive
+    // for well-formed clients afterwards.
+    let server = ShardServer::bind("tcp://127.0.0.1:0", ServeConfig::new("CartPole-v1")).unwrap();
+    let addr = server.local_addr();
+    let handle = server.spawn();
+    let hello = proto::encode(
+        1,
+        MsgRef::Hello {
+            spec: "",
+            base_seed: 1,
+            first_lane: 0,
+            pipeline: 1,
+            token: "",
+            wrap: "",
+            ctx,
+        },
+    );
+    let mut bad = hello.clone();
+    bad[12] ^= 0xff; // inside the 16-byte ctx
+    let sock = addr.strip_prefix("tcp://").unwrap();
+    let mut stream = std::net::TcpStream::connect(sock).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    stream.write_all(&bad).unwrap();
+    // A clean hang-up (Err) is equally acceptable — never a panic.
+    if let Ok(frame) = proto::read_msg(&mut stream) {
+        assert!(
+            matches!(frame.msg, Msg::Error { .. }),
+            "expected a protocol Error reply, got {:?}",
+            frame.msg
+        );
+    }
+    drop(stream);
+
+    let pool = ShardedEnvPool::connect(&[addr], "CartPole-v1", 4, 7).unwrap();
+    assert_eq!(pool.num_lanes(), 4);
+    drop(pool);
+    handle.shutdown();
+}
